@@ -1,0 +1,55 @@
+//! The Section IV cautionary tale: Algorithm 4 (master-owned duals) vs
+//! Algorithm 2 under asynchrony. A "slight modification" of where the dual
+//! update lives completely changes the convergence conditions — Algorithm 4
+//! diverges at the ρ that Algorithm 2 cruises with, and needs a tiny ρ
+//! (Theorem 2) that then crawls.
+//!
+//!     cargo run --release --example alg4_divergence
+
+use ad_admm::prelude::*;
+
+fn main() {
+    let (n_workers, m, n) = (16, 50, 25);
+    let mut rng = Pcg64::seed_from_u64(11);
+    let inst = LassoInstance::synthetic(&mut rng, n_workers, m, n, 0.1, 0.1);
+    let problem = inst.problem();
+    let (_, f_star) = fista_lasso(&inst, 50_000);
+    println!("LASSO N={n_workers}, m={m}, n={n}; F* = {f_star:.6e}\n");
+
+    let arrivals = |seed| ArrivalModel::fig4_profile(n_workers, seed);
+    let iters = 3000;
+
+    println!("{:<34} {:>8} {:>12} {:>10}", "configuration", "tau", "final acc", "stop");
+    for (label, tau, rho, alg2) in [
+        ("Algorithm 2, rho=500", 1usize, 500.0, true),
+        ("Algorithm 2, rho=500", 3, 500.0, true),
+        ("Algorithm 2, rho=500", 10, 500.0, true),
+        ("Algorithm 4, rho=500", 1, 500.0, false),
+        ("Algorithm 4, rho=500", 3, 500.0, false),
+        ("Algorithm 4, rho=10 ", 3, 10.0, false),
+        ("Algorithm 4, rho=10 ", 10, 10.0, false),
+        ("Algorithm 4, rho=1  ", 10, 1.0, false),
+    ] {
+        let cfg = AdmmConfig { rho, tau, max_iters: iters, ..Default::default() };
+        let (acc, stop) = if alg2 {
+            let out = run_master_pov(&problem, &cfg, &arrivals(tau as u64));
+            (
+                ad_admm::metrics::accuracy_series(&out.history, f_star).last().copied().unwrap(),
+                format!("{:?}", out.stop),
+            )
+        } else {
+            let out = run_alt_scheme(&problem, &cfg, &arrivals(tau as u64));
+            (
+                ad_admm::metrics::accuracy_series(&out.history, f_star).last().copied().unwrap(),
+                format!("{:?}", out.stop),
+            )
+        };
+        println!("{label:<34} {tau:>8} {acc:>12.3e} {stop:>10}");
+    }
+
+    println!(
+        "\nTakeaway (paper Fig. 4): Algorithm 2 converges at rho=500 for every tau;\n\
+         Algorithm 4 diverges at rho=500 once tau>1 and must shrink rho per\n\
+         Theorem 2 (eq. 48) — paying a much slower rate."
+    );
+}

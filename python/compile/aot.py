@@ -1,0 +1,144 @@
+"""AOT lowering: JAX/Pallas → HLO text artifacts + manifest.
+
+Usage (from ``python/``):  python -m compile.aot --out-dir ../artifacts
+
+Emits one ``<name>.hlo.txt`` per (kind, shape) plus ``manifest.txt`` — the
+interchange the Rust runtime (rust/src/runtime/) loads through PJRT.
+
+HLO **text**, not ``lowered.compile()``/serialized protos: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published ``xla`` crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Everything is lowered in f64 (x64 mode) to match the Rust side exactly.
+"""
+
+import argparse
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+from .kernels.gram import gram_matvec  # noqa: E402
+from .kernels.prox import soft_threshold  # noqa: E402
+
+F64 = jnp.float64
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F64)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------- artifacts
+
+def lower_lasso_worker(m, n, cg_iters):
+    return model.lasso_worker_update.lower(
+        spec(m, n), spec(m), spec(n), spec(n), spec(), cg_iters=cg_iters
+    )
+
+
+def lower_spca_worker(m, n, cg_iters):
+    return model.spca_worker_update.lower(
+        spec(m, n), spec(n), spec(n), spec(), cg_iters=cg_iters
+    )
+
+
+def lower_master_prox(n):
+    return model.master_prox.lower(
+        spec(n), spec(n), spec(n), spec(), spec(), spec(), spec()
+    )
+
+
+def lower_gram_matvec(m, n):
+    return jax.jit(lambda a, x: gram_matvec(a, x)).lower(spec(m, n), spec(n))
+
+
+def lower_soft_threshold(n):
+    return jax.jit(lambda v, t: soft_threshold(v, t)).lower(spec(n), spec())
+
+
+def default_manifest(cg_iters):
+    """The artifact set the repo's examples/tests/benches expect.
+
+    Small shapes serve the parity tests; the m200 and 1000×500 shapes are
+    the paper's Fig. 4 / Fig. 3 workloads.
+    """
+    arts = []
+    for (m, n) in [(20, 10), (200, 100), (200, 1000)]:
+        arts.append(dict(
+            name=f"lasso_worker_m{m}_n{n}", kind="lasso_worker", m=m, n=n,
+            cg_iters=cg_iters, lower=lambda m=m, n=n: lower_lasso_worker(m, n, cg_iters),
+        ))
+    for (m, n) in [(40, 16), (1000, 500)]:
+        arts.append(dict(
+            name=f"spca_worker_m{m}_n{n}", kind="spca_worker", m=m, n=n,
+            cg_iters=cg_iters, lower=lambda m=m, n=n: lower_spca_worker(m, n, cg_iters),
+        ))
+    for n in [10, 16, 100, 500, 1000]:
+        arts.append(dict(
+            name=f"master_prox_n{n}", kind="master_prox", n=n,
+            lower=lambda n=n: lower_master_prox(n),
+        ))
+    for (m, n) in [(20, 10), (200, 100)]:
+        arts.append(dict(
+            name=f"gram_matvec_m{m}_n{n}", kind="gram_matvec", m=m, n=n,
+            lower=lambda m=m, n=n: lower_gram_matvec(m, n),
+        ))
+    arts.append(dict(
+        name="soft_threshold_n100", kind="soft_threshold", n=100,
+        lower=lambda: lower_soft_threshold(100),
+    ))
+    return arts
+
+
+def build(out_dir: str, cg_iters: int, only: str | None = None) -> list[str]:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_lines = []
+    built = []
+    for art in default_manifest(cg_iters):
+        name = art["name"]
+        if only and only not in name:
+            continue
+        fname = f"{name}.hlo.txt"
+        text = to_hlo_text(art["lower"]())
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        attrs = " ".join(
+            f"{k}={v}" for k, v in art.items() if k not in ("name", "lower")
+        )
+        manifest_lines.append(f"name={name} file={fname} {attrs} dtype=f64")
+        built.append(name)
+        print(f"  wrote {fname} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("# AOT artifacts — built by python/compile/aot.py\n")
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"manifest: {len(built)} artifacts → {out_dir}/manifest.txt")
+    return built
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--cg-iters", type=int, default=40,
+                    help="fixed CG iterations baked into worker artifacts")
+    ap.add_argument("--only", default=None, help="substring filter on names")
+    args = ap.parse_args()
+    build(args.out_dir, args.cg_iters, args.only)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""L1 Pallas kernel: fused Gram mat-vec  y = Aᵀ(A x).
+
+This is the compute hot-spot of the whole system: every CG step of every
+worker subproblem solve is one Gram product over the worker's (m × n) data
+block. The kernel tiles A along rows with `BlockSpec((bm, n))`:
+
+  grid step i:   stream row-tile A[i·bm : (i+1)·bm, :]  HBM→VMEM
+                 t = A_blk @ x          (bm,)   MXU matmul
+                 partial = A_blkᵀ @ t   (n,)    MXU matmul
+                 o += partial                   accumulate, o resident in VMEM
+
+The output block index is constant across the grid, so `o` is *revisited*
+and stays in VMEM for the whole sweep (the classic accumulation pattern);
+only the A tiles move. VMEM footprint ≈ bm·n + 2n + bm floats — the block
+size is chosen by `pick_block_m` to fit a 16 MiB VMEM budget with double
+buffering headroom. On this image Pallas runs `interpret=True` (CPU PJRT
+cannot execute Mosaic custom-calls), so the structure is what we optimize;
+see DESIGN.md §Hardware-Adaptation.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VMEM budget for picking the row-block size (bytes). Half of a 16 MiB TPU
+# VMEM, leaving room for double buffering of the streamed A tiles.
+_VMEM_BUDGET = 8 * 1024 * 1024
+
+
+def pick_block_m(m: int, n: int, itemsize: int = 8) -> int:
+    """Largest power-of-two row block ≤ m whose tile fits the VMEM budget."""
+    bm = 1
+    while bm < m:
+        nxt = bm * 2
+        if nxt * n * itemsize > _VMEM_BUDGET:
+            break
+        bm = nxt
+    return min(bm, m)
+
+
+def _gram_kernel(a_ref, x_ref, o_ref):
+    i = pl.program_id(0)
+    a_blk = a_ref[...]          # (bm, n) tile in VMEM
+    x = x_ref[...]              # (n,)    resident
+    t = a_blk @ x               # (bm,)
+    partial = a_blk.T @ t       # (n,)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = partial
+
+    @pl.when(i > 0)
+    def _acc():
+        o_ref[...] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def gram_matvec(a, x, block_m: int | None = None):
+    """y = Aᵀ(A x) via the row-blocked Pallas kernel (interpret mode)."""
+    m, n = a.shape
+    bm = block_m or pick_block_m(m, n, a.dtype.itemsize)
+    pad = (-m) % bm
+    if pad:
+        # zero rows contribute nothing to AᵀA x — padding is exact
+        a = jnp.concatenate([a, jnp.zeros((pad, n), a.dtype)], axis=0)
+    grid = (a.shape[0] // bm,)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((n,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n,), a.dtype),
+        interpret=True,
+    )(a, x)

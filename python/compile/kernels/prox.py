@@ -1,0 +1,50 @@
+"""L1 Pallas kernel: blocked soft-threshold  S_t(v) = sign(v)·max(|v|−t, 0).
+
+The master's x₀ update (12) with h = θ‖·‖₁ is one soft-threshold over the
+n-vector; this kernel tiles v into VMEM-sized chunks. The threshold t is a
+runtime scalar, passed as a (1,)-shaped operand broadcast to every grid step.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def pick_block_n(n: int) -> int:
+    """Row-block for an elementwise kernel: one 128-lane-aligned chunk."""
+    bn = 1
+    while bn < n and bn < 65536:
+        bn *= 2
+    return min(bn, n)
+
+
+def _soft_threshold_kernel(v_ref, t_ref, o_ref):
+    v = v_ref[...]
+    t = t_ref[0]
+    o_ref[...] = jnp.sign(v) * jnp.maximum(jnp.abs(v) - t, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def soft_threshold(v, t, block_n: int | None = None):
+    """Elementwise S_t(v) via the blocked Pallas kernel (interpret mode)."""
+    (n,) = v.shape
+    bn = block_n or pick_block_n(n)
+    pad = (-n) % bn
+    if pad:
+        v = jnp.concatenate([v, jnp.zeros((pad,), v.dtype)])
+    t_arr = jnp.asarray(t, v.dtype).reshape((1,))
+    grid = (v.shape[0] // bn,)
+    out = pl.pallas_call(
+        _soft_threshold_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((v.shape[0],), v.dtype),
+        interpret=True,
+    )(v, t_arr)
+    return out[:n]

@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+Every Pallas kernel in this package has a reference implementation here;
+pytest (with hypothesis shape/dtype sweeps) asserts allclose between the two.
+"""
+
+import jax.numpy as jnp
+
+
+def gram_matvec_ref(a, x):
+    """y = Aᵀ(A x) — the Gram mat-vec at the heart of every CG step."""
+    return a.T @ (a @ x)
+
+
+def soft_threshold_ref(v, t):
+    """S_t(v) = sign(v)·max(|v|−t, 0) elementwise (prox of t‖·‖₁)."""
+    return jnp.sign(v) * jnp.maximum(jnp.abs(v) - t, 0.0)
+
+
+def lasso_worker_ref(a, b, lam, x0, rho):
+    """Exact solve of (2AᵀA + ρI)x = 2Aᵀb − λ + ρx₀ (eq. (13) for LASSO)."""
+    n = a.shape[1]
+    mat = 2.0 * (a.T @ a) + rho * jnp.eye(n, dtype=a.dtype)
+    rhs = 2.0 * (a.T @ b) - lam + rho * x0
+    return jnp.linalg.solve(mat, rhs)
+
+
+def spca_worker_ref(bmat, lam, x0, rho):
+    """Exact solve of (ρI − 2BᵀB)x = ρx₀ − λ (eq. (13) for sparse PCA)."""
+    n = bmat.shape[1]
+    mat = rho * jnp.eye(n, dtype=bmat.dtype) - 2.0 * (bmat.T @ bmat)
+    rhs = rho * x0 - lam
+    return jnp.linalg.solve(mat, rhs)
+
+
+def master_prox_ref(sum_x, sum_lam, x0_prev, rho, gamma, theta, n_workers):
+    """The master update (12) for h = θ‖·‖₁:
+    x₀⁺ = S_{θ/(Nρ+γ)}((ρΣx + Σλ + γx₀ᵏ)/(Nρ+γ))."""
+    denom = n_workers * rho + gamma
+    v = (rho * sum_x + sum_lam + gamma * x0_prev) / denom
+    return soft_threshold_ref(v, theta / denom)

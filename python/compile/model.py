@@ -1,0 +1,85 @@
+"""L2: the AD-ADMM compute graphs, calling the L1 Pallas kernels.
+
+Three jitted functions, one per artifact kind:
+
+- ``lasso_worker_update``  — eq. (13) for LASSO blocks: fixed-iteration CG
+  on ``(2AᵀA + ρI)x = 2Aᵀb − λ + ρx₀``, every Gram product through the
+  Pallas kernel. ``lax.scan`` keeps the lowered HLO size independent of the
+  iteration count and mirrors ``linalg::cg::cg_fixed`` on the Rust side
+  iterate-for-iterate (the parity tests rely on this).
+- ``spca_worker_update``   — eq. (13) for sparse-PCA blocks:
+  ``(ρI − 2BᵀB)x = ρx₀ − λ`` (SPD in the paper's β=3 regime).
+- ``master_prox``          — the master update (12) for h = θ‖·‖₁ via the
+  Pallas soft-threshold kernel.
+
+These run ONLY at build time: ``aot.py`` lowers them to HLO text that the
+Rust runtime loads through PJRT.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.gram import gram_matvec
+from .kernels.prox import soft_threshold
+
+_EPS = 1e-300
+
+
+def cg_fixed(matvec, rhs, x_init, iters: int):
+    """Fixed-iteration CG (no early exit — a `lax.scan` cannot break).
+
+    Mirrors ``cg_fixed`` in ``rust/src/linalg/cg.rs``: same update order,
+    same division guards, so the two produce identical iterates in exact
+    arithmetic.
+    """
+    r0 = rhs - matvec(x_init)
+
+    def step(carry, _):
+        x, r, p, rs_old = carry
+        ap = matvec(p)
+        pap = jnp.vdot(p, ap)
+        alpha = jnp.where(jnp.abs(pap) > _EPS, rs_old / pap, 0.0)
+        x = x + alpha * p
+        r = r - alpha * ap
+        rs_new = jnp.vdot(r, r)
+        beta = jnp.where(jnp.abs(rs_old) > _EPS, rs_new / rs_old, 0.0)
+        p = r + beta * p
+        return (x, r, p, rs_new), None
+
+    init = (x_init, r0, r0, jnp.vdot(r0, r0))
+    (x, _, _, _), _ = jax.lax.scan(step, init, None, length=iters)
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("cg_iters",))
+def lasso_worker_update(a, b, lam, x0, rho, cg_iters: int = 60):
+    """Worker subproblem (13) for f_i(w) = ‖Aw − b‖²."""
+    rhs = 2.0 * (a.T @ b) - lam + rho * x0
+
+    def matvec(v):
+        return 2.0 * gram_matvec(a, v) + rho * v
+
+    # Warm start at the consensus point: CG then only corrects the local
+    # deviation, which shrinks as the algorithm converges.
+    return cg_fixed(matvec, rhs, x0, cg_iters)
+
+
+@functools.partial(jax.jit, static_argnames=("cg_iters",))
+def spca_worker_update(bmat, lam, x0, rho, cg_iters: int = 60):
+    """Worker subproblem (13) for f_j(w) = −‖Bw‖² (non-convex)."""
+    rhs = rho * x0 - lam
+
+    def matvec(v):
+        return rho * v - 2.0 * gram_matvec(bmat, v)
+
+    return cg_fixed(matvec, rhs, x0, cg_iters)
+
+
+@jax.jit
+def master_prox(sum_x, sum_lam, x0_prev, rho, gamma, theta, n_workers):
+    """Master update (12): prox of h = θ‖·‖₁ at the aggregated point."""
+    denom = n_workers * rho + gamma
+    v = (rho * sum_x + sum_lam + gamma * x0_prev) / denom
+    return soft_threshold(v, theta / denom)

@@ -1,0 +1,48 @@
+"""AOT emission: HLO text artifacts + manifest round-trip."""
+
+import os
+
+from compile import aot
+
+
+def test_to_hlo_text_emits_parseable_module(tmp_path):
+    lowered = aot.lower_master_prox(4)
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # f64 lowering, not f32 (x64 mode must be on)
+    assert "f64" in text
+
+
+def test_build_small_subset(tmp_path):
+    out = str(tmp_path / "arts")
+    # substring filter: n10 also matches n100/n1000
+    built = aot.build(out, cg_iters=8, only="master_prox_n10")
+    assert built == ["master_prox_n10", "master_prox_n100", "master_prox_n1000"]
+    assert os.path.exists(os.path.join(out, "master_prox_n10.hlo.txt"))
+    manifest = open(os.path.join(out, "manifest.txt")).read()
+    assert "name=master_prox_n10" in manifest
+    assert "kind=master_prox" in manifest
+    assert "dtype=f64" in manifest
+
+
+def test_worker_artifact_records_cg_iters(tmp_path):
+    out = str(tmp_path / "arts")
+    built = aot.build(out, cg_iters=12, only="lasso_worker_m20_n10")
+    assert built == ["lasso_worker_m20_n10"]
+    manifest = open(os.path.join(out, "manifest.txt")).read()
+    assert "cg_iters=12" in manifest
+    text = open(os.path.join(out, "lasso_worker_m20_n10.hlo.txt")).read()
+    assert "HloModule" in text
+
+
+def test_default_manifest_covers_paper_shapes():
+    names = [a["name"] for a in aot.default_manifest(60)]
+    # Fig. 4 shapes
+    assert "lasso_worker_m200_n100" in names
+    assert "lasso_worker_m200_n1000" in names
+    # Fig. 3 shape
+    assert "spca_worker_m1000_n500" in names
+    # master prox for each dim
+    for n in (100, 500, 1000):
+        assert f"master_prox_n{n}" in names

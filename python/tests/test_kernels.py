@@ -1,0 +1,107 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+Hypothesis sweeps shapes and dtypes; explicit cases pin the paper's shapes.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.gram import gram_matvec, pick_block_m
+from compile.kernels.prox import pick_block_n, soft_threshold
+from compile.kernels.ref import gram_matvec_ref, soft_threshold_ref
+
+DTYPES = [np.float32, np.float64]
+
+
+def tol(dtype):
+    return dict(rtol=2e-4, atol=2e-4) if dtype == np.float32 else dict(rtol=1e-9, atol=1e-9)
+
+
+# ------------------------------------------------------------- gram_matvec
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(1, 67),
+    n=st.integers(1, 33),
+    dtype=st.sampled_from(DTYPES),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gram_matvec_matches_ref(m, n, dtype, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.standard_normal((m, n)), dtype)
+    x = jnp.asarray(rng.standard_normal(n), dtype)
+    got = gram_matvec(a, x)
+    want = gram_matvec_ref(a, x)
+    assert got.dtype == a.dtype
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **tol(dtype))
+
+
+@pytest.mark.parametrize("block_m", [1, 2, 8, 16, 128])
+def test_gram_matvec_block_size_invariant(block_m):
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((37, 11)))
+    x = jnp.asarray(rng.standard_normal(11))
+    got = gram_matvec(a, x, block_m=block_m)
+    want = gram_matvec_ref(a, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-10)
+
+
+def test_gram_matvec_paper_shape():
+    # Fig. 4 worker block
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.standard_normal((200, 100)))
+    x = jnp.asarray(rng.standard_normal(100))
+    np.testing.assert_allclose(
+        np.asarray(gram_matvec(a, x)),
+        np.asarray(gram_matvec_ref(a, x)),
+        rtol=1e-9,
+        atol=1e-9,
+    )
+
+
+def test_pick_block_m_fits_budget_and_divides_work():
+    for (m, n) in [(200, 100), (200, 1000), (1000, 500), (7, 3)]:
+        bm = pick_block_m(m, n)
+        assert 1 <= bm <= m
+        assert bm * n * 8 <= 8 * 1024 * 1024 or bm == 1
+
+
+# ---------------------------------------------------------- soft_threshold
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(1, 257),
+    t=st.floats(0.0, 5.0),
+    dtype=st.sampled_from(DTYPES),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_soft_threshold_matches_ref(n, t, dtype, seed):
+    rng = np.random.default_rng(seed)
+    v = jnp.asarray(rng.standard_normal(n) * 3, dtype)
+    got = soft_threshold(v, t)
+    want = soft_threshold_ref(v, jnp.asarray(t, dtype))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **tol(dtype))
+
+
+def test_soft_threshold_known_values():
+    v = jnp.asarray([3.0, -2.0, 0.5, 0.0])
+    got = soft_threshold(v, 1.0)
+    np.testing.assert_allclose(np.asarray(got), [2.0, -1.0, 0.0, 0.0])
+
+
+def test_soft_threshold_zero_threshold_is_identity():
+    rng = np.random.default_rng(3)
+    v = jnp.asarray(rng.standard_normal(50))
+    np.testing.assert_allclose(np.asarray(soft_threshold(v, 0.0)), np.asarray(v))
+
+
+def test_pick_block_n():
+    assert pick_block_n(1) == 1
+    assert pick_block_n(100) == 100 or pick_block_n(100) >= 64
+    assert pick_block_n(1 << 20) <= 65536

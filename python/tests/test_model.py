@@ -1,0 +1,133 @@
+"""L2 correctness: the worker/master compute graphs vs exact solves."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.ref import (
+    lasso_worker_ref,
+    master_prox_ref,
+    spca_worker_ref,
+)
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape))
+
+
+# --------------------------------------------------------- lasso worker
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(3, 40), n=st.integers(1, 12), seed=st.integers(0, 10_000))
+def test_lasso_worker_cg_matches_exact_solve(m, n, seed):
+    rng = np.random.default_rng(seed)
+    a = _rand(rng, m, n)
+    b = _rand(rng, m)
+    lam = _rand(rng, n)
+    x0 = _rand(rng, n)
+    rho = 5.0
+    got = model.lasso_worker_update(a, b, lam, x0, jnp.float64(rho), cg_iters=4 * n + 8)
+    want = lasso_worker_ref(a, b, lam, x0, rho)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-7, atol=1e-7)
+
+
+def test_lasso_worker_paper_shape_converges_quickly():
+    # ρ = 500 dominates the spectrum → CG converges in far fewer than n steps.
+    rng = np.random.default_rng(42)
+    a = _rand(rng, 200, 100)
+    b = _rand(rng, 200)
+    lam = _rand(rng, 100)
+    x0 = _rand(rng, 100)
+    got = model.lasso_worker_update(a, b, lam, x0, jnp.float64(500.0), cg_iters=60)
+    want = lasso_worker_ref(a, b, lam, x0, 500.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-8, atol=1e-8)
+
+
+def test_lasso_worker_underdetermined_block():
+    # Fig. 4(c,d) regime: n > m (f_i not strongly convex) — still SPD with +ρI.
+    rng = np.random.default_rng(7)
+    a = _rand(rng, 20, 100)
+    b = _rand(rng, 20)
+    lam = _rand(rng, 100)
+    x0 = _rand(rng, 100)
+    got = model.lasso_worker_update(a, b, lam, x0, jnp.float64(500.0), cg_iters=80)
+    want = lasso_worker_ref(a, b, lam, x0, 500.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-7, atol=1e-7)
+
+
+# ---------------------------------------------------------- spca worker
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(4, 40), n=st.integers(1, 10), seed=st.integers(0, 10_000))
+def test_spca_worker_cg_matches_exact_solve(m, n, seed):
+    rng = np.random.default_rng(seed)
+    bmat = _rand(rng, m, n)
+    lam = _rand(rng, n)
+    x0 = _rand(rng, n)
+    # SPD regime: ρ = 3·λmax(BᵀB) (the paper's convergent β = 3 setting).
+    lam_max = float(np.linalg.eigvalsh(np.asarray(bmat.T @ bmat)).max())
+    rho = 3.0 * max(lam_max, 1e-3)
+    got = model.spca_worker_update(bmat, lam, x0, jnp.float64(rho), cg_iters=4 * n + 8)
+    want = spca_worker_ref(bmat, lam, x0, rho)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-7, atol=1e-7)
+
+
+# ---------------------------------------------------------- master prox
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 64),
+    rho=st.floats(0.1, 1000.0),
+    gamma=st.floats(0.0, 100.0),
+    theta=st.floats(0.0, 2.0),
+    nw=st.integers(1, 64),
+    seed=st.integers(0, 10_000),
+)
+def test_master_prox_matches_ref(n, rho, gamma, theta, nw, seed):
+    rng = np.random.default_rng(seed)
+    sum_x = _rand(rng, n)
+    sum_lam = _rand(rng, n)
+    x0_prev = _rand(rng, n)
+    got = model.master_prox(
+        sum_x, sum_lam, x0_prev,
+        jnp.float64(rho), jnp.float64(gamma), jnp.float64(theta), jnp.float64(nw),
+    )
+    want = master_prox_ref(sum_x, sum_lam, x0_prev, rho, gamma, theta, float(nw))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-9, atol=1e-9)
+
+
+def test_master_prox_is_weighted_average_when_unregularized():
+    # θ = 0, γ = 0: x₀ = (ρΣx + Σλ)/(Nρ) exactly.
+    n, nw, rho = 8, 4, 10.0
+    rng = np.random.default_rng(1)
+    sum_x = _rand(rng, n)
+    sum_lam = _rand(rng, n)
+    got = model.master_prox(
+        sum_x, sum_lam, jnp.zeros(n),
+        jnp.float64(rho), jnp.float64(0.0), jnp.float64(0.0), jnp.float64(nw),
+    )
+    want = (rho * sum_x + sum_lam) / (nw * rho)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-12)
+
+
+# ------------------------------------------------------------- cg_fixed
+
+def test_cg_fixed_solves_identity_in_one_step():
+    rhs = jnp.asarray([1.0, 2.0, 3.0])
+    x = model.cg_fixed(lambda v: v, rhs, jnp.zeros(3), 1)
+    np.testing.assert_allclose(np.asarray(x), np.asarray(rhs), rtol=1e-12)
+
+
+def test_cg_fixed_warm_start_stays_at_solution():
+    rng = np.random.default_rng(5)
+    a = _rand(rng, 12, 6)
+    g = a.T @ a + 2.0 * jnp.eye(6)
+    x_star = _rand(rng, 6)
+    rhs = g @ x_star
+    x = model.cg_fixed(lambda v: g @ v, rhs, x_star, 5)
+    np.testing.assert_allclose(np.asarray(x), np.asarray(x_star), rtol=1e-9, atol=1e-9)

@@ -1,0 +1,104 @@
+//! Figure 3 reproduction: AD-ADMM on the non-convex sparse-PCA problem
+//! (50), accuracy (51) vs master iteration, for τ ∈ {1, 5, 10, 20} at
+//! β = 3 and the divergent β = 1.5.
+//!
+//! Paper setup: N = 32 workers, B_j ∈ R^{1000×500} sparse with ≈5000
+//! non-zeros, θ = 0.1, ρ = β·max_j λmax(B_jᵀB_j), γ = 0, arrivals half
+//! p=0.1 / half p=0.8, A = 1; F̂ from 10 000 synchronous iterations (β=3).
+//!
+//! Expected shape (paper): convergent curves for every τ at β = 3 (larger τ
+//! slightly slower in iterations), divergence at β = 1.5.
+//!
+//! Run: `cargo bench --bench fig3_spca` (use `--quick` positional env
+//! FIG3_QUICK=1 for a reduced-size run).
+
+use ad_admm::metrics::rate::fit_linear_rate;
+use ad_admm::metrics::{accuracy_series, write_curves, RunLog};
+use ad_admm::util::plot::{render_log_curves, Series};
+use ad_admm::prelude::*;
+use ad_admm::util::Stopwatch;
+
+fn main() {
+    let quick = std::env::var("FIG3_QUICK").is_ok();
+    // Paper scale by default; quick mode for smoke runs.
+    let (n_workers, m, n, nnz, iters, ref_iters) = if quick {
+        (8, 100, 50, 500, 300, 2000)
+    } else {
+        (32, 1000, 500, 5000, 1500, 10_000)
+    };
+    let theta = 0.1;
+
+    println!("=== Fig. 3: sparse PCA, N={n_workers}, B_j {m}x{n} ({nnz} nnz), theta={theta} ===");
+    let sw = Stopwatch::start();
+    let mut rng = Pcg64::seed_from_u64(33);
+    let inst = SparsePcaInstance::synthetic(&mut rng, n_workers, m, n, nnz, theta);
+    let problem = inst.problem();
+    let lam_max = inst.max_lambda_max();
+    println!("max λmax(BᵀB) = {lam_max:.4}  (setup {:.1}s)", sw.elapsed_s());
+
+    // Non-convex: start from a random unit vector (x = 0 is a fixed point).
+    let mut init = vec![0.0; n];
+    rng.fill_normal(&mut init);
+    let nrm = init.iter().map(|v| v * v).sum::<f64>().sqrt();
+    for v in init.iter_mut() {
+        *v /= nrm;
+    }
+
+    // F̂: 10k synchronous iterations at β = 3 (paper protocol).
+    let lip = 2.0 * lam_max; // Lipschitz constant of grad f_j
+    let rho3 = 3.0 * lip;
+    let ref_cfg = AdmmConfig { rho: rho3, tau: 1, max_iters: ref_iters, init_x0: Some(init.clone()), ..Default::default() };
+    let f_hat = run_sync_admm(&problem, &ref_cfg).history.last().unwrap().aug_lagrangian;
+    println!("F̂ = {f_hat:.8e}");
+
+    let mut curves = Vec::new();
+    println!("\nβ = 3 (Theorem-1 regime — paper: converges for all tau):");
+    println!("{:>6} {:>12} {:>12} {:>10}", "tau", "acc@250", "acc@final", "iters");
+    for tau in [1usize, 5, 10, 20] {
+        let cfg = AdmmConfig { rho: rho3, tau, max_iters: iters, init_x0: Some(init.clone()), ..Default::default() };
+        let arrivals = ArrivalModel::fig3_profile(n_workers, 100 + tau as u64);
+        let out = run_master_pov(&problem, &cfg, &arrivals);
+        let acc = accuracy_series(&out.history, f_hat);
+        let at250 = acc.get(249.min(acc.len() - 1)).copied().unwrap_or(f64::INFINITY);
+        println!("{:>6} {:>12.3e} {:>12.3e} {:>10}", tau, at250, acc.last().unwrap(), out.history.len());
+        curves.push(RunLog::new(format!("beta3_tau{tau}"), out.history));
+    }
+
+    println!("\nβ = 1.5 (rho below the non-convex requirement — paper: diverges):");
+    let rho15 = 1.5 * lip;
+    for tau in [1usize, 10] {
+        let cfg = AdmmConfig { rho: rho15, tau, max_iters: iters, init_x0: Some(init.clone()), ..Default::default() };
+        let arrivals = ArrivalModel::fig3_profile(n_workers, 200 + tau as u64);
+        let out = run_master_pov(&problem, &cfg, &arrivals);
+        let acc = accuracy_series(&out.history, f_hat);
+        println!(
+            "  tau={tau}: stop={:?}, final accuracy {:.3e}",
+            out.stop,
+            acc.last().unwrap()
+        );
+        curves.push(RunLog::new(format!("beta1.5_tau{tau}"), out.history));
+    }
+
+    // terminal rendition of the figure + Part-II-style rate fits
+    let acc_series: Vec<Vec<f64>> = curves
+        .iter()
+        .map(|c| accuracy_series(&c.history, f_hat))
+        .collect();
+    let plot_series: Vec<Series> = curves
+        .iter()
+        .zip(&acc_series)
+        .map(|(c, ys)| Series { label: &c.label, ys })
+        .collect();
+    println!("\naccuracy (51) vs iteration (log scale):\n{}", render_log_curves(&plot_series, 72, 18));
+    for (c, ys) in curves.iter().zip(&acc_series) {
+        if let Some(fit) = fit_linear_rate(ys, 0.8) {
+            if fit.is_linear() {
+                println!("  {}: empirically linear, rate {:.4} ({:.1} iters/digit)", c.label, fit.rate, fit.iters_per_digit());
+            }
+        }
+    }
+
+    let path = std::path::Path::new("bench_results/fig3_spca.csv");
+    write_curves(path, &curves, f_hat).expect("write csv");
+    println!("\nseries written to {} ({:.1}s total)", path.display(), sw.elapsed_s());
+}

@@ -1,0 +1,146 @@
+//! Hot-path microbenchmarks: the per-iteration costs of every layer.
+//!
+//! - native worker subproblem solve (cached-Cholesky backsolve)
+//! - uncached factorization (what the cache saves per iteration)
+//! - native Gram mat-vec (the L1 kernel's native mirror)
+//! - master x₀ update (prox assembly)
+//! - PJRT worker solve + PJRT gram/prox artifacts (when built)
+//! - master-PoV end-to-end iteration
+//!
+//! Run: `cargo bench --bench hot_path`
+
+use std::sync::Arc;
+
+use ad_admm::admm::{master_x0_update, AdmmConfig, AdmmState};
+use ad_admm::bench::{bench_fn, black_box, banner, report};
+use ad_admm::prelude::*;
+use ad_admm::problems::LassoLocal;
+use ad_admm::runtime::{artifacts_available, artifacts_dir, PjrtLassoSolver, PjrtMasterProx};
+
+fn main() {
+    for &(m, n) in &[(200usize, 100usize), (200, 1000)] {
+        banner(&format!("worker hot path, block {m}x{n}"));
+        let mut rng = Pcg64::seed_from_u64(5);
+        let a = DenseMatrix::randn(&mut rng, m, n);
+        let b: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let local = LassoLocal::new(a.clone(), b.clone());
+        let lam: Vec<f64> = (0..n).map(|i| (i as f64 * 0.1).sin()).collect();
+        let x0: Vec<f64> = (0..n).map(|i| (i as f64 * 0.2).cos()).collect();
+        let mut out = vec![0.0; n];
+
+        // warm the rho cache, then measure the cached path
+        local.solve_subproblem(&lam, &x0, 500.0, &mut out);
+        let stats = bench_fn(3, 50, || {
+            local.solve_subproblem(black_box(&lam), black_box(&x0), 500.0, &mut out);
+            black_box(&out);
+        });
+        report(&format!("native worker solve (cached chol) {m}x{n}"), &stats);
+
+        let stats = bench_fn(1, 5, || {
+            // fresh local cost → full gram + factorization every time
+            let fresh = LassoLocal::new(a.clone(), b.clone());
+            fresh.solve_subproblem(black_box(&lam), black_box(&x0), 500.0, &mut out);
+            black_box(&out);
+        });
+        report(&format!("native worker solve (uncached)    {m}x{n}"), &stats);
+
+        let x: Vec<f64> = (0..n).map(|i| (i as f64).sin()).collect();
+        let mut scratch = vec![0.0; m];
+        let mut y = vec![0.0; n];
+        let stats = bench_fn(5, 200, || {
+            a.gram_matvec_into(black_box(&x), &mut scratch, &mut y);
+            black_box(&y);
+        });
+        report(&format!("native gram matvec                {m}x{n}"), &stats);
+    }
+
+    banner("master hot path (N=16, n=1000)");
+    {
+        let mut rng = Pcg64::seed_from_u64(6);
+        let inst = LassoInstance::synthetic(&mut rng, 4, 20, 1000, 0.05, 0.1);
+        let problem = inst.problem();
+        let mut state = AdmmState::zeros(4, 1000);
+        for i in 0..4 {
+            rng.fill_normal(&mut state.xs[i]);
+            rng.fill_normal(&mut state.lams[i]);
+        }
+        let stats = bench_fn(5, 200, || {
+            master_x0_update(&problem, &mut state, 500.0, 0.0);
+            black_box(&state.x0);
+        });
+        report("master x0 update (prox assembly)", &stats);
+    }
+
+    banner("end-to-end master iteration (serial Algorithm 3, N=16, n=100)");
+    {
+        let mut rng = Pcg64::seed_from_u64(7);
+        let inst = LassoInstance::synthetic(&mut rng, 16, 200, 100, 0.05, 0.1);
+        let problem = inst.problem();
+        let arrivals = ArrivalModel::fig4_profile(16, 3);
+        // measure per-iteration cost via a fixed-length run
+        let stats = bench_fn(1, 5, || {
+            let cfg = AdmmConfig { rho: 500.0, tau: 10, max_iters: 50, ..Default::default() };
+            let out = run_master_pov(&problem, &cfg, &arrivals);
+            black_box(out.history.len());
+        });
+        println!("  (each sample = 50 master iterations)");
+        report("50 iterations, full diagnostics", &stats);
+        // diagnostics off the hot loop: objective every 50th iteration
+        // (accuracy curves only need the cached augmented Lagrangian)
+        let stats = bench_fn(1, 5, || {
+            let cfg = AdmmConfig {
+                rho: 500.0,
+                tau: 10,
+                max_iters: 50,
+                objective_every: 50,
+                ..Default::default()
+            };
+            let out = run_master_pov(&problem, &cfg, &arrivals);
+            black_box(out.history.len());
+        });
+        report("50 iterations, objective_every=50", &stats);
+    }
+
+    if artifacts_available() {
+        banner("PJRT hot path (AOT JAX/Pallas artifacts)");
+        let engine = Arc::new(PjrtEngine::load(&artifacts_dir()).expect("engine"));
+        let mut rng = Pcg64::seed_from_u64(8);
+        let inst = LassoInstance::synthetic(&mut rng, 1, 200, 100, 0.05, 0.1);
+        if let Ok(solver) = PjrtLassoSolver::new(engine.clone(), &inst) {
+            let cg = engine
+                .registry()
+                .get("lasso_worker_m200_n100")
+                .and_then(|e| e.attr_usize("cg_iters"))
+                .unwrap_or(0);
+            let lam: Vec<f64> = (0..100).map(|i| (i as f64 * 0.1).sin()).collect();
+            let x0: Vec<f64> = (0..100).map(|i| (i as f64 * 0.2).cos()).collect();
+            let stats = bench_fn(3, 30, || {
+                let x = solver.solve_for(0, black_box(&lam), black_box(&x0), 500.0).unwrap();
+                black_box(x);
+            });
+            report(&format!("PJRT worker solve (CG{cg} + pallas) 200x100"), &stats);
+        }
+        if let Ok(prox) = PjrtMasterProx::new(engine.clone(), 100) {
+            let v: Vec<f64> = (0..100).map(|i| (i as f64 * 0.3).sin()).collect();
+            let stats = bench_fn(3, 50, || {
+                let x = prox.run(black_box(&v), &v, &v, 500.0, 0.0, 0.1, 16).unwrap();
+                black_box(x);
+            });
+            report("PJRT master prox n=100", &stats);
+        }
+        // raw gram artifact
+        if engine.has("gram_matvec_m200_n100") {
+            let a = DenseMatrix::randn(&mut rng, 200, 100);
+            let x: Vec<f64> = (0..100).map(|i| (i as f64).cos()).collect();
+            let a_buf = engine.upload(a.data(), &[200, 100]).unwrap();
+            let x_buf = engine.upload(&x, &[100]).unwrap();
+            let stats = bench_fn(3, 50, || {
+                let y = engine.execute_f64("gram_matvec_m200_n100", &[&a_buf, &x_buf]).unwrap();
+                black_box(y);
+            });
+            report("PJRT gram matvec (pallas) 200x100", &stats);
+        }
+    } else {
+        println!("\n(PJRT section skipped — run `make artifacts` first)");
+    }
+}

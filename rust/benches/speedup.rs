@@ -1,0 +1,77 @@
+//! Part-II teaser: wall-clock speedup of the asynchronous protocol over the
+//! synchronous baseline as the cluster grows, on the threaded star cluster
+//! with heterogeneous (log-normal) worker delays.
+//!
+//! Expected shape (per the paper family's claims): the async/sync
+//! iteration-rate ratio grows with N and with delay heterogeneity, because
+//! the sync master is rate-limited by the slowest worker while the async
+//! master proceeds at the A-th fastest.
+//!
+//! Run: `cargo bench --bench speedup`
+
+use ad_admm::cluster::{ClusterConfig, Protocol};
+use ad_admm::metrics::accuracy_series;
+use ad_admm::prelude::*;
+use ad_admm::util::CsvWriter;
+
+fn main() {
+    let iters = 150;
+    println!("=== wall-clock speedup: async (tau=8, A=1) vs sync, lognormal delays 0.5-6 ms ===");
+    println!(
+        "{:>4} {:>12} {:>12} {:>9} {:>12} {:>12}",
+        "N", "sync it/s", "async it/s", "speedup", "sync acc", "async acc"
+    );
+
+    let path = std::path::Path::new("bench_results/speedup.csv");
+    let mut csv = CsvWriter::create(
+        path,
+        &["n_workers", "sync_iters_per_s", "async_iters_per_s", "speedup", "sync_acc", "async_acc"],
+    )
+    .expect("csv");
+
+    for n_workers in [2usize, 4, 8, 16] {
+        let mut rng = Pcg64::seed_from_u64(900 + n_workers as u64);
+        let inst = LassoInstance::synthetic(&mut rng, n_workers, 60, 30, 0.1, 0.1);
+        let problem = inst.problem();
+        let (_, f_star) = fista_lasso(&inst, 30_000);
+        let delays = DelayModel::linear_spread(n_workers, 0.5, 6.0, 0.4, 17);
+
+        let run = |tau: usize, min_arrivals: usize| {
+            let cfg = ClusterConfig {
+                admm: AdmmConfig { rho: 100.0, tau, min_arrivals, max_iters: iters, ..Default::default() },
+                protocol: Protocol::AdAdmm,
+                delays: delays.clone(),
+                faults: None,
+            };
+            StarCluster::new(problem.clone()).run(&cfg)
+        };
+
+        let sync = run(1, n_workers);
+        let asyn = run(8, 1);
+        let speedup = asyn.iters_per_sec() / sync.iters_per_sec().max(1e-12);
+        let sync_acc = *accuracy_series(&sync.history, f_star).last().unwrap();
+        let async_acc = *accuracy_series(&asyn.history, f_star).last().unwrap();
+        println!(
+            "{:>4} {:>12.1} {:>12.1} {:>8.2}x {:>12.3e} {:>12.3e}",
+            n_workers,
+            sync.iters_per_sec(),
+            asyn.iters_per_sec(),
+            speedup,
+            sync_acc,
+            async_acc,
+        );
+        csv.row(&[
+            n_workers as f64,
+            sync.iters_per_sec(),
+            asyn.iters_per_sec(),
+            speedup,
+            sync_acc,
+            async_acc,
+        ])
+        .unwrap();
+    }
+    csv.flush().unwrap();
+    println!("\nseries → {}", path.display());
+    println!("note: same iteration budget — async trades per-iteration progress for rate;");
+    println!("the paper's claim is wall-clock time-to-accuracy, dominated by the rate win.");
+}

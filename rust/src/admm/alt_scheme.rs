@@ -1,0 +1,197 @@
+//! Algorithm 4: the alternative asynchronous implementation in which the
+//! **master** owns the dual updates (46) and the workers only compute
+//! `x_i` (47).
+//!
+//! Section IV's cautionary tale: synchronously this is just Algorithm 1
+//! with the update order interchanged, but asynchronously it needs strong
+//! convexity and a *small* ρ (Theorem 2, eq. (48)) — and Fig. 4(b)/(d) show
+//! it diverging where Algorithm 2 sails through. This module exists to
+//! reproduce exactly that behaviour.
+
+use crate::problems::ConsensusProblem;
+
+use super::arrivals::{ArrivalModel, ArrivalTrace};
+use super::master_pov::{NativeSolver, SubproblemSolver};
+use super::{
+    augmented_lagrangian_cached, master_x0_update, AdmmConfig, AdmmState, IterRecord, StopReason,
+};
+
+/// Result of an Algorithm-4 run.
+pub struct AltSchemeOutput {
+    pub state: AdmmState,
+    pub history: Vec<IterRecord>,
+    pub trace: ArrivalTrace,
+    pub stop: StopReason,
+}
+
+impl AltSchemeOutput {
+    pub fn diverged(&self) -> bool {
+        self.stop == StopReason::Diverged
+    }
+}
+
+/// Run Algorithm 4 (master's point of view) under the same partially
+/// asynchronous protocol as Algorithm 2.
+pub fn run_alt_scheme(
+    problem: &ConsensusProblem,
+    cfg: &AdmmConfig,
+    arrivals: &ArrivalModel,
+) -> AltSchemeOutput {
+    let mut solver = NativeSolver::new(problem);
+    run_alt_scheme_with_solver(problem, cfg, arrivals, &mut solver)
+}
+
+pub fn run_alt_scheme_with_solver(
+    problem: &ConsensusProblem,
+    cfg: &AdmmConfig,
+    arrivals: &ArrivalModel,
+    solver: &mut dyn SubproblemSolver,
+) -> AltSchemeOutput {
+    cfg.validate(problem.num_workers()).expect("invalid AdmmConfig");
+    let n_workers = problem.num_workers();
+    let n = problem.dim();
+
+    let mut state = cfg.initial_state(n_workers, n);
+    // What each worker last *received*: (x̂₀, λ̂_i) — Algorithm 4 broadcasts
+    // both (Step 6), unlike Algorithm 2 where workers own their duals.
+    let mut x0_snap: Vec<Vec<f64>> = vec![state.x0.clone(); n_workers];
+    let mut lam_snap: Vec<Vec<f64>> = state.lams.clone();
+    let mut d = vec![0usize; n_workers];
+    let mut sampler = arrivals.sampler(n_workers);
+
+    let mut history = Vec::with_capacity(cfg.max_iters);
+    let mut trace = ArrivalTrace::default();
+    let mut prev_x0 = state.x0.clone();
+    let mut stop = StopReason::MaxIters;
+    let mut f_cache: Vec<f64> = (0..n_workers)
+        .map(|i| problem.local(i).eval(&state.xs[i]))
+        .collect();
+    let mut al_scratch: Vec<f64> = Vec::with_capacity(n);
+
+    for k in 0..cfg.max_iters {
+        let set = sampler.next_set(&d, cfg.tau, cfg.min_arrivals);
+
+        // (44)+(47): arrived workers report x_i computed against their
+        // *stale* (x̂₀, λ̂_i) snapshots.
+        let mut arrived = vec![false; n_workers];
+        for &i in &set {
+            arrived[i] = true;
+            solver.solve(i, &lam_snap[i], &x0_snap[i], cfg.rho, &mut state.xs[i]);
+            f_cache[i] = problem.local(i).eval(&state.xs[i]);
+            d[i] = 0;
+        }
+        for i in 0..n_workers {
+            if !arrived[i] {
+                d[i] += 1;
+            }
+        }
+
+        // (45): x₀ update uses λᵏ (pre-update duals).
+        prev_x0.copy_from_slice(&state.x0);
+        master_x0_update(problem, &mut state, cfg.rho, cfg.gamma);
+
+        // (46): master updates the duals of **all** workers against the
+        // fresh x₀ — the step that injects stale-x into every λ_i and
+        // breaks the eq.-(29) identity Algorithm 2 enjoys.
+        for i in 0..n_workers {
+            for j in 0..n {
+                state.lams[i][j] += cfg.rho * (state.xs[i][j] - state.x0[j]);
+            }
+        }
+
+        // Step 6: broadcast (x₀, λ_i) to the arrived workers only.
+        for &i in &set {
+            x0_snap[i].copy_from_slice(&state.x0);
+            lam_snap[i].copy_from_slice(&state.lams[i]);
+        }
+
+        let aug = augmented_lagrangian_cached(problem, &state, cfg.rho, &f_cache, &mut al_scratch);
+        let x0_change = crate::linalg::vecops::dist2(&state.x0, &prev_x0);
+        let objective = if cfg.objective_every > 0 && k % cfg.objective_every == 0 {
+            problem.objective(&state.x0)
+        } else {
+            f64::NAN
+        };
+        history.push(IterRecord {
+            k,
+            objective,
+            aug_lagrangian: aug,
+            consensus: state.consensus_residual(),
+            x0_change,
+            arrivals: set.len(),
+        });
+        trace.sets.push(set);
+
+        if !state.is_finite() || aug.abs() > cfg.divergence_threshold {
+            stop = StopReason::Diverged;
+            break;
+        }
+        if cfg.x0_tol > 0.0 && x0_change <= cfg.x0_tol && k > 0 {
+            stop = StopReason::X0Tolerance;
+            break;
+        }
+    }
+
+    AltSchemeOutput { state, history, trace, stop }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::admm::kkt::kkt_residual;
+    use crate::data::LassoInstance;
+    use crate::rng::Pcg64;
+
+    fn lasso(seed: u64, n_workers: usize, m: usize, n: usize) -> ConsensusProblem {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        LassoInstance::synthetic(&mut rng, n_workers, m, n, 0.1, 0.1).problem()
+    }
+
+    #[test]
+    fn synchronous_alt_scheme_converges() {
+        // τ = 1: Algorithm 4 ≡ Algorithm 1 with interchanged order.
+        let p = lasso(91, 4, 30, 10);
+        let cfg = AdmmConfig { rho: 50.0, tau: 1, max_iters: 800, ..Default::default() };
+        let out = run_alt_scheme(&p, &cfg, &ArrivalModel::Full);
+        assert!(!out.diverged());
+        let r = kkt_residual(&p, &out.state);
+        assert!(r.max() < 1e-6, "{r:?}");
+    }
+
+    #[test]
+    fn async_large_rho_diverges() {
+        // The Fig. 4(b) phenomenon: strongly-convex-ish blocks (m > n) but
+        // ρ far above the Theorem-2 bound + delays ⇒ divergence.
+        let p = lasso(92, 8, 30, 10);
+        let cfg = AdmmConfig { rho: 500.0, tau: 5, max_iters: 3000, ..Default::default() };
+        let arr = ArrivalModel::probabilistic(vec![0.1, 0.1, 0.1, 0.1, 0.8, 0.8, 0.8, 0.8], 17);
+        let out = run_alt_scheme(&p, &cfg, &arr);
+        assert!(
+            out.diverged() || out.history.last().unwrap().consensus > 1.0,
+            "expected divergence; consensus={}",
+            out.history.last().unwrap().consensus
+        );
+    }
+
+    #[test]
+    fn async_small_rho_converges_strongly_convex() {
+        // Theorem 2 regime: strongly convex blocks (m >> n), tiny ρ.
+        let p = lasso(93, 4, 60, 8);
+        let cfg = AdmmConfig { rho: 1.0, tau: 3, max_iters: 6000, ..Default::default() };
+        let arr = ArrivalModel::probabilistic(vec![0.3, 0.9, 0.3, 0.9], 19);
+        let out = run_alt_scheme(&p, &cfg, &arr);
+        assert!(!out.diverged());
+        let r = kkt_residual(&p, &out.state);
+        assert!(r.max() < 1e-2, "{r:?}");
+    }
+
+    #[test]
+    fn trace_replay_is_deterministic() {
+        let p = lasso(94, 4, 20, 8);
+        let cfg = AdmmConfig { rho: 10.0, tau: 3, max_iters: 60, ..Default::default() };
+        let arr = ArrivalModel::probabilistic(vec![0.4; 4], 23);
+        let a = run_alt_scheme(&p, &cfg, &arr);
+        let b = run_alt_scheme(&p, &cfg, &ArrivalModel::Trace(a.trace.clone()));
+        assert_eq!(a.state.x0, b.state.x0);
+    }
+}

@@ -1,0 +1,272 @@
+//! Arrival-set models: who reports to the master at iteration k.
+//!
+//! The partially asynchronous protocol (Assumption 1 + the `|A_k| ≥ A`
+//! gate) is enforced *on top of* a stochastic arrival process, exactly as in
+//! the paper's Section V simulations: each worker independently "arrives"
+//! with its own probability, the master keeps waiting (re-drawing) until at
+//! least `A` workers arrived, and any worker whose delay counter has hit
+//! `τ − 1` is waited for unconditionally (it joins the arrival set).
+
+use crate::rng::Pcg64;
+
+/// A recorded sequence of arrival sets (sorted worker indices per
+/// iteration). Produced by every run for replay + invariant checking.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ArrivalTrace {
+    pub sets: Vec<Vec<usize>>,
+}
+
+impl ArrivalTrace {
+    /// Check Assumption 1 against a delay bound τ: every worker appears at
+    /// least once in every window of τ consecutive iterations (after its
+    /// first possible window).
+    pub fn satisfies_bounded_delay(&self, n_workers: usize, tau: usize) -> bool {
+        let mut last_seen = vec![-1isize; n_workers]; // A_{-1} = V (paper's convention)
+        for (k, set) in self.sets.iter().enumerate() {
+            for &i in set {
+                last_seen[i] = k as isize;
+            }
+            for i in 0..n_workers {
+                if (k as isize) - last_seen[i] >= tau as isize {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Max observed arrival-set size (the `S` of Theorem 1, as `|A_k| < S`
+    /// wants a strict bound: returns `max|A_k| + 1` capped at `N`).
+    pub fn observed_s(&self, n_workers: usize) -> f64 {
+        let m = self.sets.iter().map(Vec::len).max().unwrap_or(0);
+        ((m + 1) as f64).min(n_workers as f64).max(1.0)
+    }
+}
+
+/// How arrival sets are produced.
+#[derive(Clone, Debug)]
+pub enum ArrivalModel {
+    /// Every worker arrives every iteration (synchronous; τ must be 1-compatible).
+    Full,
+    /// Independent per-worker Bernoulli arrivals, re-drawn while `|A_k| < A`
+    /// (the paper's Section V process).
+    Probabilistic { probs: Vec<f64>, seed: u64 },
+    /// Replay an explicit trace (deterministic tests, cluster equivalence).
+    Trace(ArrivalTrace),
+}
+
+impl ArrivalModel {
+    pub fn probabilistic(probs: Vec<f64>, seed: u64) -> Self {
+        ArrivalModel::Probabilistic { probs, seed }
+    }
+
+    /// The Fig. 3 worker profile: half the workers arrive w.p. 0.1, half
+    /// w.p. 0.8.
+    pub fn fig3_profile(n_workers: usize, seed: u64) -> Self {
+        let mut probs = vec![0.1; n_workers];
+        for p in probs.iter_mut().skip(n_workers / 2) {
+            *p = 0.8;
+        }
+        ArrivalModel::Probabilistic { probs, seed }
+    }
+
+    /// The Fig. 4 worker profile for N = 16: 8 workers w.p. 0.1, 4 w.p.
+    /// 0.5, 4 w.p. 0.8 (generalized proportionally for other N).
+    pub fn fig4_profile(n_workers: usize, seed: u64) -> Self {
+        let mut probs = Vec::with_capacity(n_workers);
+        for i in 0..n_workers {
+            let frac = i as f64 / n_workers as f64;
+            probs.push(if frac < 0.5 {
+                0.1
+            } else if frac < 0.75 {
+                0.5
+            } else {
+                0.8
+            });
+        }
+        ArrivalModel::Probabilistic { probs, seed }
+    }
+
+    /// Create the per-run sampler.
+    pub fn sampler(&self, n_workers: usize) -> ArrivalSampler {
+        match self {
+            ArrivalModel::Full => ArrivalSampler {
+                n_workers,
+                kind: SamplerKind::Full,
+            },
+            ArrivalModel::Probabilistic { probs, seed } => {
+                assert_eq!(probs.len(), n_workers, "one probability per worker");
+                ArrivalSampler {
+                    n_workers,
+                    kind: SamplerKind::Probabilistic {
+                        probs: probs.clone(),
+                        rng: Pcg64::seed_from_u64(*seed),
+                    },
+                }
+            }
+            ArrivalModel::Trace(trace) => ArrivalSampler {
+                n_workers,
+                kind: SamplerKind::Trace { sets: trace.sets.clone(), pos: 0 },
+            },
+        }
+    }
+}
+
+enum SamplerKind {
+    Full,
+    Probabilistic { probs: Vec<f64>, rng: Pcg64 },
+    Trace { sets: Vec<Vec<usize>>, pos: usize },
+}
+
+/// Stateful arrival-set source for one run.
+pub struct ArrivalSampler {
+    n_workers: usize,
+    kind: SamplerKind,
+}
+
+impl ArrivalSampler {
+    /// Draw the next arrival set given current pre-update delay counters
+    /// `d`, the delay bound τ and the batching gate `A = min_arrivals`.
+    ///
+    /// Guarantees on return: every `i` with `d[i] ≥ τ − 1` is included
+    /// (the master waited for it) and `|set| ≥ min(A, N)`.
+    pub fn next_set(&mut self, d: &[usize], tau: usize, min_arrivals: usize) -> Vec<usize> {
+        let n = self.n_workers;
+        debug_assert_eq!(d.len(), n);
+        let forced: Vec<usize> = (0..n).filter(|&i| d[i] + 1 >= tau).collect();
+        let mut arrived = vec![false; n];
+        for &i in &forced {
+            arrived[i] = true;
+        }
+        match &mut self.kind {
+            SamplerKind::Full => {
+                return (0..n).collect();
+            }
+            SamplerKind::Trace { sets, pos } => {
+                let set = sets
+                    .get(*pos)
+                    .unwrap_or_else(|| panic!("arrival trace exhausted at iteration {pos}", pos = *pos))
+                    .clone();
+                *pos += 1;
+                for &i in &set {
+                    assert!(i < n, "trace worker index out of range");
+                    arrived[i] = true;
+                }
+            }
+            SamplerKind::Probabilistic { probs, rng } => {
+                // The master keeps waiting (we keep drawing rounds) until the
+                // gate is met; arrivals accumulate across rounds, modelling
+                // messages that keep coming in while it waits.
+                let target = min_arrivals.min(n).max(1);
+                let mut rounds = 0usize;
+                loop {
+                    for i in 0..n {
+                        if !arrived[i] && rng.bernoulli(probs[i]) {
+                            arrived[i] = true;
+                        }
+                    }
+                    if arrived.iter().filter(|&&a| a).count() >= target {
+                        break;
+                    }
+                    rounds += 1;
+                    if rounds > 100_000 {
+                        // all-zero probabilities: degenerate configuration;
+                        // wait for everyone rather than spin forever.
+                        for a in arrived.iter_mut() {
+                            *a = true;
+                        }
+                        break;
+                    }
+                }
+            }
+        }
+        (0..n).filter(|&i| arrived[i]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_model_returns_everyone() {
+        let m = ArrivalModel::Full;
+        let mut s = m.sampler(4);
+        assert_eq!(s.next_set(&[0; 4], 1, 4), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn forced_workers_always_included() {
+        let m = ArrivalModel::probabilistic(vec![0.0, 1.0, 0.0], 1);
+        let mut s = m.sampler(3);
+        // worker 0 has d = 2 with τ = 3 → d+1 >= τ → forced
+        let set = s.next_set(&[2, 0, 0], 3, 1);
+        assert!(set.contains(&0));
+    }
+
+    #[test]
+    fn gate_met_even_with_low_probs() {
+        let m = ArrivalModel::probabilistic(vec![0.05; 8], 2);
+        let mut s = m.sampler(8);
+        for _ in 0..50 {
+            let set = s.next_set(&[0; 8], 100, 3);
+            assert!(set.len() >= 3);
+        }
+    }
+
+    #[test]
+    fn tau_one_forces_everyone() {
+        let m = ArrivalModel::probabilistic(vec![0.01; 5], 3);
+        let mut s = m.sampler(5);
+        // τ = 1 → every d[i] + 1 >= 1 → all forced → synchronous
+        assert_eq!(s.next_set(&[0; 5], 1, 1), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn trace_replays_exactly() {
+        let trace = ArrivalTrace { sets: vec![vec![0, 2], vec![1]] };
+        let m = ArrivalModel::Trace(trace.clone());
+        let mut s = m.sampler(3);
+        assert_eq!(s.next_set(&[0; 3], 10, 1), vec![0, 2]);
+        assert_eq!(s.next_set(&[0; 3], 10, 1), vec![1]);
+    }
+
+    #[test]
+    fn bounded_delay_checker() {
+        let good = ArrivalTrace { sets: vec![vec![0], vec![1], vec![0], vec![1]] };
+        assert!(good.satisfies_bounded_delay(2, 2));
+        let bad = ArrivalTrace { sets: vec![vec![0], vec![0], vec![0]] };
+        assert!(!bad.satisfies_bounded_delay(2, 2));
+        // worker 1 is absent for the whole 3-iteration trace: still a
+        // violation at τ = 3 (window [0,2] excludes A_{-1} = V)...
+        assert!(!bad.satisfies_bounded_delay(2, 3));
+        // ...but fine at τ = 4 where every window still reaches A_{-1}.
+        assert!(bad.satisfies_bounded_delay(2, 4));
+        let recovers = ArrivalTrace { sets: vec![vec![0], vec![0], vec![0, 1]] };
+        assert!(recovers.satisfies_bounded_delay(2, 3));
+    }
+
+    #[test]
+    fn fig_profiles_have_expected_shape() {
+        if let ArrivalModel::Probabilistic { probs, .. } = ArrivalModel::fig3_profile(32, 0) {
+            assert_eq!(probs.iter().filter(|&&p| p == 0.1).count(), 16);
+            assert_eq!(probs.iter().filter(|&&p| p == 0.8).count(), 16);
+        } else {
+            panic!("wrong variant");
+        }
+        if let ArrivalModel::Probabilistic { probs, .. } = ArrivalModel::fig4_profile(16, 0) {
+            assert_eq!(probs.iter().filter(|&&p| p == 0.1).count(), 8);
+            assert_eq!(probs.iter().filter(|&&p| p == 0.5).count(), 4);
+            assert_eq!(probs.iter().filter(|&&p| p == 0.8).count(), 4);
+        } else {
+            panic!("wrong variant");
+        }
+    }
+
+    #[test]
+    fn observed_s_bounds() {
+        let t = ArrivalTrace { sets: vec![vec![0, 1], vec![2]] };
+        assert_eq!(t.observed_s(4), 3.0);
+        assert_eq!(t.observed_s(2), 2.0); // capped at N
+    }
+}

@@ -1,0 +1,285 @@
+//! Algorithm 3: the AD-ADMM (Algorithm 2) from the master's point of view.
+//!
+//! This serial simulator is what the paper's own Section V figures were
+//! produced with ("implemented on a desktop computer"): it replays the exact
+//! update sequence the distributed protocol induces — per-worker `x₀`
+//! snapshots (`x₀^{k̄_i+1}`), delayed dual updates, delay counters, the
+//! `|A_k| ≥ A` gate — without threads, so figure runs are deterministic and
+//! fast. The threaded implementation lives in [`crate::cluster`] and is
+//! trace-equivalent (tested).
+
+use crate::problems::ConsensusProblem;
+
+use super::arrivals::{ArrivalModel, ArrivalTrace};
+use super::{
+    augmented_lagrangian_cached, master_x0_update, AdmmConfig, AdmmState, IterRecord, StopReason,
+};
+
+/// Pluggable worker-subproblem solver: the native path delegates to
+/// [`crate::problems::LocalCost::solve_subproblem`]; the PJRT path
+/// ([`crate::runtime`]) executes the AOT-compiled JAX/Pallas artifact.
+pub trait SubproblemSolver {
+    fn solve(&mut self, worker: usize, lam: &[f64], x0: &[f64], rho: f64, out: &mut [f64]);
+}
+
+/// Closed-form/native solver backed by the problem's own local costs.
+pub struct NativeSolver<'a> {
+    problem: &'a ConsensusProblem,
+}
+
+impl<'a> NativeSolver<'a> {
+    pub fn new(problem: &'a ConsensusProblem) -> Self {
+        NativeSolver { problem }
+    }
+}
+
+impl<'a> SubproblemSolver for NativeSolver<'a> {
+    fn solve(&mut self, worker: usize, lam: &[f64], x0: &[f64], rho: f64, out: &mut [f64]) {
+        self.problem.local(worker).solve_subproblem(lam, x0, rho, out);
+    }
+}
+
+/// Result of a master-PoV run.
+pub struct MasterPovOutput {
+    pub state: AdmmState,
+    pub history: Vec<IterRecord>,
+    /// The realized arrival sets (replayable via `ArrivalModel::Trace`).
+    pub trace: ArrivalTrace,
+    pub stop: StopReason,
+    /// Final delay counters (invariant: all ≤ τ − 1).
+    pub final_delays: Vec<usize>,
+}
+
+impl MasterPovOutput {
+    pub fn diverged(&self) -> bool {
+        self.stop == StopReason::Diverged
+    }
+}
+
+/// Run Algorithm 3 with the native subproblem solver.
+pub fn run_master_pov(
+    problem: &ConsensusProblem,
+    cfg: &AdmmConfig,
+    arrivals: &ArrivalModel,
+) -> MasterPovOutput {
+    let mut solver = NativeSolver::new(problem);
+    run_master_pov_with_solver(problem, cfg, arrivals, &mut solver)
+}
+
+/// Run Algorithm 3 with a caller-supplied subproblem solver (e.g. the PJRT
+/// engine executing the AOT JAX/Pallas artifacts).
+pub fn run_master_pov_with_solver(
+    problem: &ConsensusProblem,
+    cfg: &AdmmConfig,
+    arrivals: &ArrivalModel,
+    solver: &mut dyn SubproblemSolver,
+) -> MasterPovOutput {
+    cfg.validate(problem.num_workers()).expect("invalid AdmmConfig");
+    let n_workers = problem.num_workers();
+    let n = problem.dim();
+
+    let mut state = cfg.initial_state(n_workers, n);
+    // x₀^{k̄_i+1} as seen by worker i — everyone starts with the broadcast x⁰.
+    let mut x0_snap: Vec<Vec<f64>> = vec![state.x0.clone(); n_workers];
+    let mut d = vec![0usize; n_workers];
+    let mut sampler = arrivals.sampler(n_workers);
+
+    let mut history = Vec::with_capacity(cfg.max_iters);
+    let mut trace = ArrivalTrace::default();
+    let mut prev_x0 = state.x0.clone();
+    let mut stop = StopReason::MaxIters;
+    // f_i(x_i) cache: only arrived workers' x_i move, so only they are
+    // re-evaluated (perf: N → |A_k| data passes per iteration).
+    let mut f_cache: Vec<f64> = (0..n_workers)
+        .map(|i| problem.local(i).eval(&state.xs[i]))
+        .collect();
+    let mut al_scratch: Vec<f64> = Vec::with_capacity(n);
+
+    for k in 0..cfg.max_iters {
+        let set = sampler.next_set(&d, cfg.tau, cfg.min_arrivals);
+
+        // Worker-side updates (19)/(23) + (20)/(24), using each arrived
+        // worker's *snapshot* of x₀ and its own dual (identical to the
+        // master's copy by eq. (22)).
+        let mut arrived = vec![false; n_workers];
+        for &i in &set {
+            arrived[i] = true;
+            let snap = &x0_snap[i];
+            solver.solve(i, &state.lams[i], snap, cfg.rho, &mut state.xs[i]);
+            for j in 0..n {
+                state.lams[i][j] += cfg.rho * (state.xs[i][j] - snap[j]);
+            }
+            f_cache[i] = problem.local(i).eval(&state.xs[i]);
+            d[i] = 0;
+        }
+        for i in 0..n_workers {
+            if !arrived[i] {
+                d[i] += 1;
+            }
+        }
+
+        // Master update (12)/(25) with the proximal term γ.
+        prev_x0.copy_from_slice(&state.x0);
+        master_x0_update(problem, &mut state, cfg.rho, cfg.gamma);
+
+        // Broadcast the fresh x₀ to the arrived workers only (Step 6).
+        for &i in &set {
+            x0_snap[i].copy_from_slice(&state.x0);
+        }
+
+        let aug = augmented_lagrangian_cached(problem, &state, cfg.rho, &f_cache, &mut al_scratch);
+        let x0_change = crate::linalg::vecops::dist2(&state.x0, &prev_x0);
+        let objective = if cfg.objective_every > 0 && k % cfg.objective_every == 0 {
+            problem.objective(&state.x0)
+        } else {
+            f64::NAN
+        };
+        history.push(IterRecord {
+            k,
+            objective,
+            aug_lagrangian: aug,
+            consensus: state.consensus_residual(),
+            x0_change,
+            arrivals: set.len(),
+        });
+        trace.sets.push(set);
+
+        if !state.is_finite() || aug.abs() > cfg.divergence_threshold {
+            stop = StopReason::Diverged;
+            break;
+        }
+        if cfg.x0_tol > 0.0 && x0_change <= cfg.x0_tol && k > 0 {
+            stop = StopReason::X0Tolerance;
+            break;
+        }
+        if let Some(rule) = &cfg.stopping {
+            let r = super::stopping::residuals(&state, &prev_x0, cfg.rho);
+            if k > 0 && rule.satisfied(&r, n, n_workers) {
+                stop = StopReason::Residuals;
+                break;
+            }
+        }
+    }
+
+    MasterPovOutput { state, history, trace, stop, final_delays: d }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::admm::kkt::{dual_identity_residual, kkt_residual};
+    use crate::data::LassoInstance;
+    use crate::rng::Pcg64;
+
+    fn small_lasso(seed: u64) -> ConsensusProblem {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        LassoInstance::synthetic(&mut rng, 4, 20, 10, 0.2, 0.1).problem()
+    }
+
+    #[test]
+    fn synchronous_run_converges_to_kkt() {
+        let p = small_lasso(71);
+        let cfg = AdmmConfig { rho: 50.0, tau: 1, max_iters: 600, ..Default::default() };
+        let out = run_master_pov(&p, &cfg, &ArrivalModel::Full);
+        assert_eq!(out.stop, StopReason::MaxIters);
+        let r = kkt_residual(&p, &out.state);
+        assert!(r.max() < 1e-6, "KKT residual {:?}", r);
+    }
+
+    #[test]
+    fn async_run_converges_to_kkt() {
+        let p = small_lasso(72);
+        let cfg = AdmmConfig { rho: 50.0, tau: 5, max_iters: 2000, ..Default::default() };
+        let arr = ArrivalModel::probabilistic(vec![0.3, 0.9, 0.3, 0.9], 7);
+        let out = run_master_pov(&p, &cfg, &arr);
+        let r = kkt_residual(&p, &out.state);
+        assert!(r.max() < 1e-5, "KKT residual {:?}", r);
+        // the realized trace must satisfy Assumption 1
+        assert!(out.trace.satisfies_bounded_delay(4, cfg.tau));
+    }
+
+    #[test]
+    fn dual_identity_holds_every_iteration() {
+        // eq. (29): ∇f_i(x_i^{k+1}) + λ_i^{k+1} = 0 for all i and k.
+        // Check at the end (it holds inductively if it holds once).
+        let p = small_lasso(73);
+        let cfg = AdmmConfig { rho: 30.0, tau: 4, max_iters: 50, ..Default::default() };
+        let arr = ArrivalModel::probabilistic(vec![0.4; 4], 3);
+        let out = run_master_pov(&p, &cfg, &arr);
+        assert!(dual_identity_residual(&p, &out.state) < 1e-8);
+    }
+
+    #[test]
+    fn delays_never_exceed_tau_minus_one() {
+        let p = small_lasso(74);
+        let tau = 3;
+        let cfg = AdmmConfig { rho: 30.0, tau, max_iters: 200, ..Default::default() };
+        let arr = ArrivalModel::probabilistic(vec![0.15; 4], 11);
+        let out = run_master_pov(&p, &cfg, &arr);
+        assert!(out.final_delays.iter().all(|&di| di <= tau - 1));
+        assert!(out.trace.satisfies_bounded_delay(4, tau));
+    }
+
+    #[test]
+    fn trace_replay_reproduces_run_exactly() {
+        let p = small_lasso(75);
+        let cfg = AdmmConfig { rho: 40.0, tau: 4, max_iters: 120, ..Default::default() };
+        let arr = ArrivalModel::probabilistic(vec![0.3, 0.8, 0.5, 0.2], 5);
+        let out1 = run_master_pov(&p, &cfg, &arr);
+        let out2 = run_master_pov(&p, &cfg, &ArrivalModel::Trace(out1.trace.clone()));
+        assert_eq!(out1.state.x0, out2.state.x0);
+        assert_eq!(out1.history.len(), out2.history.len());
+        for (a, b) in out1.history.iter().zip(&out2.history) {
+            assert_eq!(a.aug_lagrangian, b.aug_lagrangian);
+        }
+    }
+
+    #[test]
+    fn gamma_proximal_slows_x0() {
+        let p = small_lasso(76);
+        let arr = ArrivalModel::Full;
+        let run = |gamma| {
+            let cfg = AdmmConfig { rho: 20.0, gamma, tau: 1, max_iters: 1, ..Default::default() };
+            run_master_pov(&p, &cfg, &arr).history[0].x0_change
+        };
+        assert!(run(1e6) < run(0.0));
+    }
+
+    #[test]
+    fn nonconvex_spca_converges_with_large_rho() {
+        use crate::data::SparsePcaInstance;
+        let mut rng = Pcg64::seed_from_u64(77);
+        let inst = SparsePcaInstance::synthetic(&mut rng, 4, 40, 16, 80, 0.1);
+        let p = inst.problem();
+        // ρ = 3L (β = 3 under the paper's ρ = β·L rule); random nonzero
+        // start — x = 0 is an exact fixed point of the iteration.
+        let rho = 3.0 * p.lipschitz();
+        let mut init = vec![0.0; 16];
+        rng.fill_normal(&mut init);
+        let cfg = AdmmConfig {
+            rho,
+            tau: 4,
+            max_iters: 2000,
+            init_x0: Some(init),
+            ..Default::default()
+        };
+        let arr = ArrivalModel::fig3_profile(4, 9);
+        let out = run_master_pov(&p, &cfg, &arr);
+        assert_eq!(out.stop, StopReason::MaxIters);
+        let r = kkt_residual(&p, &out.state);
+        assert!(r.max() < 1e-4, "KKT residual {:?}", r);
+        // the solution is non-trivial (escaped the x = 0 fixed point)
+        assert!(out.state.x0.iter().any(|v| v.abs() > 1e-3));
+    }
+
+    #[test]
+    fn l1_regularizer_induces_sparsity() {
+        let mut rng = Pcg64::seed_from_u64(78);
+        let inst = LassoInstance::synthetic(&mut rng, 4, 30, 20, 0.1, 5.0);
+        let p = inst.problem();
+        let cfg = AdmmConfig { rho: 50.0, tau: 1, max_iters: 500, ..Default::default() };
+        let out = run_master_pov(&p, &cfg, &ArrivalModel::Full);
+        let zeros = out.state.x0.iter().filter(|v| v.abs() < 1e-9).count();
+        assert!(zeros > 0, "strong θ should zero some coordinates");
+    }
+}

@@ -1,0 +1,321 @@
+//! The ADMM core: shared state, the augmented Lagrangian (5)/(26), KKT
+//! residuals (34), and the four algorithm variants of the paper:
+//!
+//! - [`sync`]        — Algorithm 1, the synchronous baseline.
+//! - [`master_pov`]  — Algorithm 3 = Algorithm 2 from the master's point of
+//!   view; the serial simulator the paper's own figures were produced with.
+//! - [`alt_scheme`]  — Algorithm 4, the cautionary alternative (master owns
+//!   the duals) that needs strong convexity + small ρ (Theorem 2).
+//! - [`arrivals`]    — arrival-set models implementing the partially
+//!   asynchronous protocol (Assumption 1 + the `|A_k| ≥ A` gate).
+//! - [`params`]      — the Theorem-1 parameter rules (16)–(18).
+
+pub mod alt_scheme;
+pub mod arrivals;
+pub mod kkt;
+pub mod master_pov;
+pub mod params;
+pub mod stopping;
+pub mod sync;
+
+use crate::linalg::vecops;
+use crate::problems::ConsensusProblem;
+
+/// Algorithm parameters shared by all variants.
+#[derive(Clone, Debug)]
+pub struct AdmmConfig {
+    /// Penalty parameter ρ of the augmented Lagrangian (5).
+    pub rho: f64,
+    /// Proximal weight γ of the master update (12). The paper's experiments
+    /// use γ = 0; Theorem 1 gives the worst-case safe value
+    /// ([`params::gamma_lower_bound`]).
+    pub gamma: f64,
+    /// Maximum tolerable delay τ ≥ 1 (Assumption 1). τ = 1 ⇒ synchronous.
+    pub tau: usize,
+    /// Minimum number of arrived workers `A ≥ 1` per master iteration.
+    pub min_arrivals: usize,
+    /// Master iteration budget.
+    pub max_iters: usize,
+    /// Optional early stop on `‖x₀^{k+1} − x₀^k‖ ≤ tol` (0 disables).
+    pub x0_tol: f64,
+    /// Abort when the augmented Lagrangian magnitude exceeds this
+    /// (divergence guard; Algorithm 4 needs it).
+    pub divergence_threshold: f64,
+    /// Initial `x⁰` broadcast to the workers (None ⇒ zeros). Non-convex
+    /// problems (sparse PCA) need a nonzero start: `x = 0` is an exact
+    /// fixed point of the iteration.
+    pub init_x0: Option<Vec<f64>>,
+    /// Optional residual-based stopping rule ([`stopping`]): terminate
+    /// when primal and dual residuals meet the tolerances.
+    pub stopping: Option<stopping::StoppingRule>,
+    /// Evaluate the (purely diagnostic) objective `F(x₀)` every k-th
+    /// iteration (1 = always, 0 = never; skipped records hold NaN).
+    /// `F(x₀)` costs one full data pass per worker, which dominates the
+    /// coordinator loop on small problems — see EXPERIMENTS.md §Perf.
+    pub objective_every: usize,
+}
+
+impl Default for AdmmConfig {
+    fn default() -> Self {
+        AdmmConfig {
+            rho: 1.0,
+            gamma: 0.0,
+            tau: 1,
+            min_arrivals: 1,
+            max_iters: 500,
+            x0_tol: 0.0,
+            divergence_threshold: 1e12,
+            init_x0: None,
+            stopping: None,
+            objective_every: 1,
+        }
+    }
+}
+
+impl AdmmConfig {
+    /// Validate against the problem size.
+    pub fn validate(&self, n_workers: usize) -> Result<(), String> {
+        if self.rho <= 0.0 {
+            return Err("rho must be positive".into());
+        }
+        if self.tau < 1 {
+            return Err("tau must be >= 1".into());
+        }
+        if self.min_arrivals < 1 || self.min_arrivals > n_workers {
+            return Err(format!(
+                "min_arrivals must be in [1, {n_workers}], got {}",
+                self.min_arrivals
+            ));
+        }
+        Ok(())
+    }
+
+    /// The initial state per this config (paper init: `x_i⁰ = x₀⁰ = x⁰`,
+    /// `λ⁰ = 0`).
+    pub fn initial_state(&self, n_workers: usize, dim: usize) -> AdmmState {
+        match &self.init_x0 {
+            Some(x0) => {
+                assert_eq!(x0.len(), dim, "init_x0 dimension mismatch");
+                AdmmState::init(n_workers, x0.clone())
+            }
+            None => AdmmState::zeros(n_workers, dim),
+        }
+    }
+}
+
+/// Full primal/dual state `({x_i}, x₀, {λ_i})`.
+#[derive(Clone, Debug)]
+pub struct AdmmState {
+    pub xs: Vec<Vec<f64>>,
+    pub x0: Vec<f64>,
+    pub lams: Vec<Vec<f64>>,
+}
+
+impl AdmmState {
+    /// Paper init: `x_i⁰ = x₀⁰ = x⁰`, `λ⁰` given (zeros by default).
+    pub fn init(n_workers: usize, x0: Vec<f64>) -> Self {
+        let n = x0.len();
+        AdmmState {
+            xs: vec![x0.clone(); n_workers],
+            x0,
+            lams: vec![vec![0.0; n]; n_workers],
+        }
+    }
+
+    pub fn zeros(n_workers: usize, dim: usize) -> Self {
+        Self::init(n_workers, vec![0.0; dim])
+    }
+
+    /// Max consensus violation `max_i ‖x_i − x₀‖`.
+    pub fn consensus_residual(&self) -> f64 {
+        self.xs
+            .iter()
+            .map(|x| vecops::dist2(x, &self.x0))
+            .fold(0.0, f64::max)
+    }
+
+    pub fn is_finite(&self) -> bool {
+        vecops::all_finite(&self.x0)
+            && self.xs.iter().all(|x| vecops::all_finite(x))
+            && self.lams.iter().all(|l| vecops::all_finite(l))
+    }
+}
+
+/// The augmented Lagrangian (26):
+/// `L_ρ = Σ f_i(x_i) + h(x₀) + Σ λ_iᵀ(x_i − x₀) + ρ/2 Σ ‖x_i − x₀‖²`.
+pub fn augmented_lagrangian(problem: &ConsensusProblem, state: &AdmmState, rho: f64) -> f64 {
+    let mut total = problem.regularizer().eval(&state.x0);
+    let n = state.x0.len();
+    let mut diff = vec![0.0; n];
+    for (i, local) in problem.locals().iter().enumerate() {
+        total += local.eval(&state.xs[i]);
+        vecops::sub(&state.xs[i], &state.x0, &mut diff);
+        total += vecops::dot(&state.lams[i], &diff) + 0.5 * rho * vecops::nrm2_sq(&diff);
+    }
+    total
+}
+
+/// Incremental evaluation of (26): `f_cache[i]` holds `f_i(x_i)` which the
+/// coordinators refresh only for *arrived* workers (the others' `x_i` did
+/// not move). Cuts the per-iteration metric cost from `N` full data passes
+/// to `|A_k|` — the main L3 hot-loop win (EXPERIMENTS.md §Perf).
+pub fn augmented_lagrangian_cached(
+    problem: &ConsensusProblem,
+    state: &AdmmState,
+    rho: f64,
+    f_cache: &[f64],
+    scratch: &mut Vec<f64>,
+) -> f64 {
+    debug_assert_eq!(f_cache.len(), state.xs.len());
+    let n = state.x0.len();
+    scratch.resize(n, 0.0);
+    let mut total = problem.regularizer().eval(&state.x0);
+    for i in 0..state.xs.len() {
+        total += f_cache[i];
+        vecops::sub(&state.xs[i], &state.x0, scratch);
+        total += vecops::dot(&state.lams[i], scratch) + 0.5 * rho * vecops::nrm2_sq(scratch);
+    }
+    total
+}
+
+/// The master update (12)/(25): with every `x_i^{k+1}`, `λ_i^{k+1}` in hand,
+/// `x₀⁺ = prox_{h/(Nρ+γ)}((ρ Σ x_i + Σ λ_i + γ x₀ᵏ) / (Nρ + γ))`.
+///
+/// Shared by all coordinator variants (and mirrored by the L2 `master_prox`
+/// artifact). Writes into `state.x0`.
+pub fn master_x0_update(problem: &ConsensusProblem, state: &mut AdmmState, rho: f64, gamma: f64) {
+    let n = state.x0.len();
+    let n_workers = state.xs.len() as f64;
+    let denom = n_workers * rho + gamma;
+    debug_assert!(denom > 0.0, "Nρ + γ must be positive");
+    let mut v = vec![0.0; n];
+    for i in 0..state.xs.len() {
+        let xi = &state.xs[i];
+        let li = &state.lams[i];
+        for j in 0..n {
+            v[j] += rho * xi[j] + li[j];
+        }
+    }
+    for j in 0..n {
+        v[j] = (v[j] + gamma * state.x0[j]) / denom;
+    }
+    problem.regularizer().prox_in_place(&mut v, 1.0 / denom);
+    state.x0 = v;
+}
+
+/// Per-iteration record used by figures, tests and logs.
+#[derive(Clone, Debug)]
+pub struct IterRecord {
+    /// Master iteration number k.
+    pub k: usize,
+    /// Original objective (1) evaluated at the consensus point x₀.
+    pub objective: f64,
+    /// Augmented Lagrangian (26) — the quantity the paper's accuracy
+    /// definitions (51)/(53) are based on.
+    pub aug_lagrangian: f64,
+    /// `max_i ‖x_i − x₀‖`.
+    pub consensus: f64,
+    /// `‖x₀^{k+1} − x₀^k‖`.
+    pub x0_change: f64,
+    /// Number of arrived workers this iteration.
+    pub arrivals: usize,
+}
+
+/// Why a run stopped.
+#[derive(Clone, Debug, PartialEq)]
+pub enum StopReason {
+    MaxIters,
+    X0Tolerance,
+    /// The residual-based rule ([`stopping::StoppingRule`]) fired.
+    Residuals,
+    Diverged,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::QuadraticLocal;
+    use crate::prox::Regularizer;
+    use std::sync::Arc;
+
+    fn toy_problem() -> ConsensusProblem {
+        // f1 = ½(x−1)² → Q=1, q=−1 ; f2 = ½(x+1)²
+        let l1 = Arc::new(QuadraticLocal::diagonal(&[1.0], vec![-1.0]));
+        let l2 = Arc::new(QuadraticLocal::diagonal(&[1.0], vec![1.0]));
+        ConsensusProblem::new(vec![l1, l2], Regularizer::Zero)
+    }
+
+    #[test]
+    fn aug_lagrangian_at_consensus_equals_objective_plus_const() {
+        let p = toy_problem();
+        let state = AdmmState::init(2, vec![0.5]);
+        let al = augmented_lagrangian(&p, &state, 10.0);
+        // at consensus the penalty and dual terms vanish
+        let f = p.locals()[0].eval(&[0.5]) + p.locals()[1].eval(&[0.5]);
+        assert!((al - f).abs() < 1e-12);
+    }
+
+    #[test]
+    fn master_update_unregularized_is_weighted_average() {
+        let p = toy_problem();
+        let mut state = AdmmState::zeros(2, 1);
+        state.xs[0] = vec![2.0];
+        state.xs[1] = vec![4.0];
+        state.lams[0] = vec![1.0];
+        state.lams[1] = vec![-1.0];
+        master_x0_update(&p, &mut state, 1.0, 0.0);
+        // (ρ(2+4) + (1−1)) / (2ρ) = 3
+        assert!((state.x0[0] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn master_update_gamma_pulls_towards_previous() {
+        let p = toy_problem();
+        let mut state = AdmmState::init(2, vec![10.0]);
+        state.xs[0] = vec![0.0];
+        state.xs[1] = vec![0.0];
+        // γ → ∞ keeps x0 at 10; γ = 0 moves it to 0.
+        master_x0_update(&p, &mut state, 1.0, 1e9);
+        assert!((state.x0[0] - 10.0).abs() < 1e-6);
+        let mut state2 = AdmmState::init(2, vec![10.0]);
+        state2.xs[0] = vec![0.0];
+        state2.xs[1] = vec![0.0];
+        master_x0_update(&p, &mut state2, 1.0, 0.0);
+        assert!(state2.x0[0].abs() < 1e-12);
+    }
+
+    #[test]
+    fn master_update_l1_soft_thresholds() {
+        let l1 = Arc::new(QuadraticLocal::diagonal(&[1.0], vec![0.0]));
+        let p = ConsensusProblem::new(vec![l1], Regularizer::L1 { theta: 1.0 });
+        let mut state = AdmmState::zeros(1, 1);
+        state.xs[0] = vec![0.5]; // v = 0.5, threshold 1/ρ = 1 → 0
+        master_x0_update(&p, &mut state, 1.0, 0.0);
+        assert_eq!(state.x0[0], 0.0);
+        state.xs[0] = vec![3.0]; // v = 3, threshold 1 → 2
+        master_x0_update(&p, &mut state, 1.0, 0.0);
+        assert!((state.x0[0] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn consensus_residual_and_finiteness() {
+        let mut s = AdmmState::zeros(2, 2);
+        s.xs[1] = vec![3.0, 4.0];
+        assert!((s.consensus_residual() - 5.0).abs() < 1e-12);
+        assert!(s.is_finite());
+        s.lams[0][0] = f64::NAN;
+        assert!(!s.is_finite());
+    }
+
+    #[test]
+    fn config_validation() {
+        let cfg = AdmmConfig::default();
+        assert!(cfg.validate(4).is_ok());
+        let bad = AdmmConfig { rho: -1.0, ..Default::default() };
+        assert!(bad.validate(4).is_err());
+        let bad2 = AdmmConfig { min_arrivals: 5, ..Default::default() };
+        assert!(bad2.validate(4).is_err());
+        let bad3 = AdmmConfig { tau: 0, ..Default::default() };
+        assert!(bad3.validate(4).is_err());
+    }
+}

@@ -1,0 +1,127 @@
+//! The Theorem-1/Corollary-1 parameter rules.
+//!
+//! - (16): non-convex ρ rule:
+//!   `ρ > [(1+L+L²) + √((1+L+L²)² + 8L²)] / 2`
+//! - (18): convex ρ rule:
+//!   `ρ ≥ [(1+L²) + √((1+L²)² + 8L²)] / 2`
+//! - (17): γ rule: `γ > [S(1+ρ²)(τ−1)² − Nρ] / 2`
+//!   where `S` bounds `|A_k|` and `τ` is the maximum delay.
+//!
+//! These are *worst-case* sufficient conditions; the paper's own experiments
+//! run γ = 0 and problem-scaled ρ. The ablation bench contrasts both.
+
+/// RHS of (16): minimal ρ for non-convex `f_i` with Lipschitz constant `L`.
+pub fn rho_lower_bound_nonconvex(l: f64) -> f64 {
+    assert!(l >= 0.0);
+    let a = 1.0 + l + l * l;
+    (a + (a * a + 8.0 * l * l).sqrt()) / 2.0
+}
+
+/// RHS of (18): minimal ρ when all `f_i` are convex.
+pub fn rho_lower_bound_convex(l: f64) -> f64 {
+    assert!(l >= 0.0);
+    let a = 1.0 + l * l;
+    (a + (a * a + 8.0 * l * l).sqrt()) / 2.0
+}
+
+/// RHS of (17): minimal γ given the arrival bound `S ∈ [1, N]`, penalty ρ,
+/// max delay τ and worker count `N`. Negative values mean the proximal term
+/// can be dropped (e.g. τ = 1 gives `−Nρ/2`).
+pub fn gamma_lower_bound(s: f64, rho: f64, tau: usize, n_workers: usize) -> f64 {
+    assert!(tau >= 1);
+    assert!((1.0..=n_workers as f64).contains(&s), "S must be in [1, N]");
+    let t = (tau - 1) as f64;
+    (s * (1.0 + rho * rho) * t * t - n_workers as f64 * rho) / 2.0
+}
+
+/// Theorem-2 ρ *upper* bound for Algorithm 4 (eq. (48)):
+/// `ρ ≤ σ² / [(5τ−3)·max(2τ, 3(τ−1))]` — note it shrinks with τ, the
+/// opposite direction of Theorem 1. `sigma_sq` is the strong-convexity
+/// modulus of the `f_i`.
+pub fn alt_scheme_rho_upper_bound(sigma_sq: f64, tau: usize) -> f64 {
+    assert!(tau >= 1);
+    assert!(sigma_sq > 0.0);
+    let t = tau as f64;
+    sigma_sq / ((5.0 * t - 3.0) * (2.0 * t).max(3.0 * (t - 1.0)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nonconvex_rule_exceeds_convex_rule() {
+        for l in [0.1, 1.0, 10.0, 100.0] {
+            assert!(rho_lower_bound_nonconvex(l) > rho_lower_bound_convex(l));
+        }
+    }
+
+    #[test]
+    fn rho_rules_exceed_l() {
+        // The analysis needs ρ ≥ L; the closed forms must imply it.
+        for l in [0.0, 0.5, 2.0, 50.0] {
+            assert!(rho_lower_bound_nonconvex(l) >= l);
+            assert!(rho_lower_bound_convex(l) >= l);
+        }
+    }
+
+    #[test]
+    fn rho_rule_l_zero() {
+        // L = 0: (16) gives (1 + 1)/2 = 1.
+        assert!((rho_lower_bound_nonconvex(0.0) - 1.0).abs() < 1e-12);
+        assert!((rho_lower_bound_convex(0.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rho_satisfies_its_own_quadratic() {
+        // (16) is the positive root of ρ² − (1+L+L²)ρ − 2L² = 0.
+        for l in [0.3, 1.0, 7.0] {
+            let rho = rho_lower_bound_nonconvex(l);
+            let q = rho * rho - (1.0 + l + l * l) * rho - 2.0 * l * l;
+            assert!(q.abs() < 1e-8 * rho * rho, "q={q}");
+        }
+    }
+
+    #[test]
+    fn gamma_synchronous_is_negative() {
+        // τ = 1 → γ_min = −Nρ/2 < 0: the proximal term can be removed.
+        let g = gamma_lower_bound(4.0, 2.0, 1, 8);
+        assert!((g - (-8.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gamma_grows_quadratically_with_tau() {
+        let n = 16;
+        let g2 = gamma_lower_bound(8.0, 10.0, 2, n);
+        let g3 = gamma_lower_bound(8.0, 10.0, 3, n);
+        let g5 = gamma_lower_bound(8.0, 10.0, 5, n);
+        assert!(g3 > g2);
+        // leading term ∝ (τ−1)²: (g5+Nρ/2)/(g3+Nρ/2) = 16/4 = 4
+        let shift = 16.0 * 10.0 / 2.0;
+        let ratio = (g5 + shift) / (g3 + shift);
+        assert!((ratio - 4.0).abs() < 1e-9, "ratio={ratio}");
+    }
+
+    #[test]
+    fn gamma_increases_with_s() {
+        let a = gamma_lower_bound(1.0, 5.0, 4, 8);
+        let b = gamma_lower_bound(8.0, 5.0, 4, 8);
+        assert!(b > a);
+    }
+
+    #[test]
+    fn alt_scheme_bound_shrinks_with_tau() {
+        let r1 = alt_scheme_rho_upper_bound(1.0, 1);
+        let r3 = alt_scheme_rho_upper_bound(1.0, 3);
+        let r10 = alt_scheme_rho_upper_bound(1.0, 10);
+        assert!(r1 > r3 && r3 > r10);
+        // τ=1: σ²/(2·2) = 0.25
+        assert!((r1 - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "S must be in")]
+    fn gamma_rejects_bad_s() {
+        gamma_lower_bound(0.5, 1.0, 2, 4);
+    }
+}

@@ -1,0 +1,124 @@
+//! Residual-based stopping criteria (Boyd et al. §3.3, adapted to the
+//! consensus form) — the "predefined stopping criterion" the paper's
+//! algorithm boxes leave open.
+//!
+//! Primal residual: `rᵏ = (x₁−x₀, …, x_N−x₀)`; dual residual for the
+//! consensus problem: `sᵏ = ρ·N·(x₀ᵏ − x₀ᵏ⁻¹)` (the change of the shared
+//! variable scaled by the coupling). Termination when both fall below
+//! absolute + relative tolerances.
+
+use crate::linalg::vecops;
+
+use super::AdmmState;
+
+/// Combined absolute/relative tolerance rule.
+#[derive(Clone, Debug)]
+pub struct StoppingRule {
+    pub abs_tol: f64,
+    pub rel_tol: f64,
+}
+
+impl Default for StoppingRule {
+    fn default() -> Self {
+        StoppingRule { abs_tol: 1e-6, rel_tol: 1e-4 }
+    }
+}
+
+/// The two residual norms at one iterate.
+#[derive(Clone, Debug)]
+pub struct Residuals {
+    /// `‖rᵏ‖ = √(Σ‖x_i − x₀‖²)`.
+    pub primal: f64,
+    /// `‖sᵏ‖ = ρ·√N·‖x₀ᵏ − x₀ᵏ⁻¹‖`.
+    pub dual: f64,
+    /// Scale for the relative primal test: `max(√Σ‖x_i‖², √N‖x₀‖)`.
+    pub primal_scale: f64,
+    /// Scale for the relative dual test: `√(Σ‖λ_i‖²)`.
+    pub dual_scale: f64,
+}
+
+/// Evaluate the residuals given the current state and previous `x₀`.
+pub fn residuals(state: &AdmmState, prev_x0: &[f64], rho: f64) -> Residuals {
+    let n_workers = state.xs.len() as f64;
+    let mut primal_sq = 0.0;
+    let mut xs_sq = 0.0;
+    let mut lam_sq = 0.0;
+    for i in 0..state.xs.len() {
+        primal_sq += vecops::dist2_sq(&state.xs[i], &state.x0);
+        xs_sq += vecops::nrm2_sq(&state.xs[i]);
+        lam_sq += vecops::nrm2_sq(&state.lams[i]);
+    }
+    let x0_norm = vecops::nrm2(&state.x0);
+    Residuals {
+        primal: primal_sq.sqrt(),
+        dual: rho * n_workers.sqrt() * vecops::dist2(&state.x0, prev_x0),
+        primal_scale: xs_sq.sqrt().max(n_workers.sqrt() * x0_norm),
+        dual_scale: lam_sq.sqrt(),
+    }
+}
+
+impl StoppingRule {
+    /// True when both residuals satisfy `‖·‖ ≤ abs·√dim + rel·scale`.
+    pub fn satisfied(&self, r: &Residuals, dim: usize, n_workers: usize) -> bool {
+        let sqrt_p = ((dim * n_workers) as f64).sqrt();
+        let eps_pri = self.abs_tol * sqrt_p + self.rel_tol * r.primal_scale;
+        let eps_dual = self.abs_tol * sqrt_p + self.rel_tol * r.dual_scale;
+        r.primal <= eps_pri && r.dual <= eps_dual
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn residuals_zero_at_consensus_fixed_point() {
+        let state = AdmmState::init(3, vec![1.0, -2.0]);
+        let r = residuals(&state, &[1.0, -2.0], 10.0);
+        assert_eq!(r.primal, 0.0);
+        assert_eq!(r.dual, 0.0);
+        assert!(StoppingRule::default().satisfied(&r, 2, 3));
+    }
+
+    #[test]
+    fn violated_consensus_reports_primal() {
+        let mut state = AdmmState::zeros(2, 2);
+        state.xs[0] = vec![3.0, 4.0];
+        let r = residuals(&state, &[0.0, 0.0], 1.0);
+        assert!((r.primal - 5.0).abs() < 1e-12);
+        assert!(!StoppingRule::default().satisfied(&r, 2, 2));
+    }
+
+    #[test]
+    fn x0_movement_reports_dual() {
+        let state = AdmmState::zeros(4, 1);
+        let r = residuals(&state, &[1.0], 2.0);
+        // ρ·√N·|0 − 1| = 2·2·1 = 4
+        assert!((r.dual - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stopping_rule_triggers_on_converged_run() {
+        use crate::admm::sync::run_sync_admm;
+        use crate::admm::AdmmConfig;
+        use crate::data::LassoInstance;
+        use crate::rng::Pcg64;
+
+        let mut rng = Pcg64::seed_from_u64(600);
+        let inst = LassoInstance::synthetic(&mut rng, 3, 20, 8, 0.2, 0.1);
+        let p = inst.problem();
+        let cfg = AdmmConfig { rho: 40.0, max_iters: 2000, ..Default::default() };
+        let out = run_sync_admm(&p, &cfg);
+        // Reconstruct residuals at the limit: x0 changed ~0 on the last step.
+        let last = out.history.last().unwrap();
+        let mut prev = out.state.x0.clone();
+        // emulate the previous x0 from the recorded change (direction unknown
+        // — use the recorded magnitude conservatively)
+        prev[0] += last.x0_change;
+        let r = residuals(&out.state, &prev, cfg.rho);
+        assert!(
+            StoppingRule { abs_tol: 1e-5, rel_tol: 1e-3 }.satisfied(&r, 8, 3),
+            "{r:?}"
+        );
+    }
+}

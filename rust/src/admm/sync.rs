@@ -1,0 +1,148 @@
+//! Algorithm 1: the synchronous distributed ADMM baseline (Boyd et al.),
+//! implemented exactly in the paper's order — master `x₀` update (6) first,
+//! then all worker `x_i` (7) and dual (8) updates.
+//!
+//! Used as (i) the baseline every asynchronous run is compared against and
+//! (ii) the generator of the reference value `F̂` for the Fig. 3 accuracy
+//! definition (51) (10 000 synchronous iterations).
+
+use crate::problems::ConsensusProblem;
+
+use super::master_pov::{NativeSolver, SubproblemSolver};
+use super::{augmented_lagrangian, master_x0_update, AdmmConfig, AdmmState, IterRecord, StopReason};
+
+/// Result of a synchronous run.
+pub struct SyncOutput {
+    pub state: AdmmState,
+    pub history: Vec<IterRecord>,
+    pub stop: StopReason,
+}
+
+/// Run Algorithm 1 for `cfg.max_iters` iterations (τ/min_arrivals ignored;
+/// γ enters the x₀ step only if nonzero, matching (12) with τ = 1 where the
+/// proximal term is unnecessary but harmless).
+pub fn run_sync_admm(problem: &ConsensusProblem, cfg: &AdmmConfig) -> SyncOutput {
+    let mut solver = NativeSolver::new(problem);
+    run_sync_admm_with_solver(problem, cfg, &mut solver)
+}
+
+pub fn run_sync_admm_with_solver(
+    problem: &ConsensusProblem,
+    cfg: &AdmmConfig,
+    solver: &mut dyn SubproblemSolver,
+) -> SyncOutput {
+    let n_workers = problem.num_workers();
+    let n = problem.dim();
+    let mut state = cfg.initial_state(n_workers, n);
+    let mut history = Vec::with_capacity(cfg.max_iters);
+    let mut prev_x0 = state.x0.clone();
+    let mut stop = StopReason::MaxIters;
+
+    for k in 0..cfg.max_iters {
+        // (6): master x₀ update from current (xᵏ, λᵏ).
+        prev_x0.copy_from_slice(&state.x0);
+        master_x0_update(problem, &mut state, cfg.rho, cfg.gamma);
+
+        // (7)+(8): every worker, against the fresh x₀^{k+1}.
+        let x0 = state.x0.clone();
+        for i in 0..n_workers {
+            solver.solve(i, &state.lams[i], &x0, cfg.rho, &mut state.xs[i]);
+            for j in 0..n {
+                state.lams[i][j] += cfg.rho * (state.xs[i][j] - x0[j]);
+            }
+        }
+
+        let aug = augmented_lagrangian(problem, &state, cfg.rho);
+        let x0_change = crate::linalg::vecops::dist2(&state.x0, &prev_x0);
+        history.push(IterRecord {
+            k,
+            objective: problem.objective(&state.x0),
+            aug_lagrangian: aug,
+            consensus: state.consensus_residual(),
+            x0_change,
+            arrivals: n_workers,
+        });
+
+        if !state.is_finite() || aug.abs() > cfg.divergence_threshold {
+            stop = StopReason::Diverged;
+            break;
+        }
+        if cfg.x0_tol > 0.0 && x0_change <= cfg.x0_tol && k > 0 {
+            stop = StopReason::X0Tolerance;
+            break;
+        }
+        if let Some(rule) = &cfg.stopping {
+            let r = super::stopping::residuals(&state, &prev_x0, cfg.rho);
+            if k > 0 && rule.satisfied(&r, n, n_workers) {
+                stop = StopReason::Residuals;
+                break;
+            }
+        }
+    }
+    SyncOutput { state, history, stop }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::admm::arrivals::ArrivalModel;
+    use crate::admm::kkt::kkt_residual;
+    use crate::admm::master_pov::run_master_pov;
+    use crate::data::LassoInstance;
+    use crate::linalg::vecops;
+    use crate::rng::Pcg64;
+
+    fn small_lasso(seed: u64) -> ConsensusProblem {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        LassoInstance::synthetic(&mut rng, 3, 25, 12, 0.2, 0.1).problem()
+    }
+
+    #[test]
+    fn converges_to_kkt() {
+        let p = small_lasso(81);
+        let cfg = AdmmConfig { rho: 40.0, max_iters: 800, ..Default::default() };
+        let out = run_sync_admm(&p, &cfg);
+        let r = kkt_residual(&p, &out.state);
+        assert!(r.max() < 1e-6, "{r:?}");
+    }
+
+    #[test]
+    fn matches_async_with_tau_one_at_the_limit() {
+        // Algorithm 1 and Algorithm 2 (τ=1) differ only in update order
+        // (footnote 8), so their limits coincide.
+        let p = small_lasso(82);
+        let cfg = AdmmConfig { rho: 40.0, tau: 1, max_iters: 1500, ..Default::default() };
+        let sync = run_sync_admm(&p, &cfg);
+        let asyn = run_master_pov(&p, &cfg, &ArrivalModel::Full);
+        assert!(
+            vecops::dist2(&sync.state.x0, &asyn.state.x0) < 1e-6,
+            "limits differ: {}",
+            vecops::dist2(&sync.state.x0, &asyn.state.x0)
+        );
+    }
+
+    #[test]
+    fn objective_decreases_overall() {
+        let p = small_lasso(83);
+        let cfg = AdmmConfig { rho: 40.0, max_iters: 300, ..Default::default() };
+        let out = run_sync_admm(&p, &cfg);
+        let first = out.history.first().unwrap().objective;
+        let last = out.history.last().unwrap().objective;
+        assert!(last < first, "first={first} last={last}");
+    }
+
+    #[test]
+    fn aug_lagrangian_monotone_after_warmup_for_large_rho() {
+        // Lemma 1 with τ=1 (no async error terms) + ρ large ⇒ descent.
+        let p = small_lasso(84);
+        let cfg = AdmmConfig { rho: 200.0, max_iters: 100, ..Default::default() };
+        let out = run_sync_admm(&p, &cfg);
+        for w in out.history.windows(2).skip(2) {
+            assert!(
+                w[1].aug_lagrangian <= w[0].aug_lagrangian + 1e-7,
+                "ascent at k={}",
+                w[1].k
+            );
+        }
+    }
+}

@@ -1,0 +1,120 @@
+//! Benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warmed-up, repeated timing with robust statistics, and a tiny
+//! text reporter the `rust/benches/*.rs` binaries (all `harness = false`)
+//! share. Times are wall-clock via `Instant`; a `black_box` defeats
+//! dead-code elimination.
+
+use std::hint::black_box as std_black_box;
+use std::time::Instant;
+
+/// Re-export under the criterion-familiar name.
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// Summary statistics over a set of per-iteration timings (seconds).
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub samples: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub stddev_s: f64,
+}
+
+impl BenchStats {
+    pub fn from_samples(mut xs: Vec<f64>) -> Self {
+        assert!(!xs.is_empty());
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        BenchStats {
+            samples: n,
+            mean_s: mean,
+            median_s: xs[n / 2],
+            p95_s: xs[((n as f64) * 0.95) as usize % n.max(1)],
+            min_s: xs[0],
+            max_s: xs[n - 1],
+            stddev_s: var.sqrt(),
+        }
+    }
+
+    /// Pretty time with unit scaling.
+    pub fn human(seconds: f64) -> String {
+        if seconds >= 1.0 {
+            format!("{seconds:.3} s")
+        } else if seconds >= 1e-3 {
+            format!("{:.3} ms", seconds * 1e3)
+        } else if seconds >= 1e-6 {
+            format!("{:.3} µs", seconds * 1e6)
+        } else {
+            format!("{:.1} ns", seconds * 1e9)
+        }
+    }
+}
+
+/// Time `f` with `warmup` unmeasured runs then `samples` measured runs.
+pub fn bench_fn<F: FnMut()>(warmup: usize, samples: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut xs = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        f();
+        xs.push(t.elapsed().as_secs_f64());
+    }
+    BenchStats::from_samples(xs)
+}
+
+/// Print a single result row in the shared bench format.
+pub fn report(name: &str, stats: &BenchStats) {
+    println!(
+        "bench {name:<44} median {:>12}  mean {:>12}  p95 {:>12}  (n={})",
+        BenchStats::human(stats.median_s),
+        BenchStats::human(stats.mean_s),
+        BenchStats::human(stats.p95_s),
+        stats.samples,
+    );
+}
+
+/// Print a section banner (keeps `cargo bench` output scannable).
+pub fn banner(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_on_known_data() {
+        let s = BenchStats::from_samples(vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.samples, 5);
+        assert!((s.mean_s - 3.0).abs() < 1e-12);
+        assert_eq!(s.median_s, 3.0);
+        assert_eq!(s.min_s, 1.0);
+        assert_eq!(s.max_s, 5.0);
+    }
+
+    #[test]
+    fn bench_fn_runs_expected_counts() {
+        let mut calls = 0;
+        let s = bench_fn(3, 10, || calls += 1);
+        assert_eq!(calls, 13);
+        assert_eq!(s.samples, 10);
+        assert!(s.min_s >= 0.0);
+    }
+
+    #[test]
+    fn human_units() {
+        assert!(BenchStats::human(2.0).ends_with(" s"));
+        assert!(BenchStats::human(2e-3).ends_with(" ms"));
+        assert!(BenchStats::human(2e-6).ends_with(" µs"));
+        assert!(BenchStats::human(2e-9).ends_with(" ns"));
+    }
+}

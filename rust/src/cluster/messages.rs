@@ -1,0 +1,19 @@
+//! Wire messages of the star links.
+
+/// Master → worker.
+pub enum MasterMsg {
+    /// Compute one subproblem round against this x₀ (and, for Algorithm 4,
+    /// this master-updated dual).
+    Go { x0: Vec<f64>, lam: Option<Vec<f64>> },
+    /// Stop the worker loop.
+    Shutdown,
+}
+
+/// Worker → master: the arrived variables `(x̂_i, λ̂_i)` of Step 4.
+pub struct WorkerMsg {
+    pub id: usize,
+    pub x: Vec<f64>,
+    /// Algorithm 2 carries the worker-updated dual; Algorithm 4 sends none
+    /// (the master owns the duals).
+    pub lam: Option<Vec<f64>>,
+}

@@ -1,0 +1,427 @@
+//! The threaded star cluster: a real (in-process) implementation of the
+//! master/worker protocol of Algorithm 2 and Algorithm 4.
+//!
+//! One OS thread per worker, unbounded mpsc channels for the star links,
+//! the master running on the calling thread. Heterogeneous computation and
+//! communication delays are injected per worker through [`DelayModel`],
+//! reproducing the paper's motivating Fig. 2 scenario (fast workers idle
+//! under the synchronous protocol; the asynchronous master updates as soon
+//! as `A` workers arrived while honouring the τ gate).
+//!
+//! The protocol semantics are *identical* to the serial
+//! [`crate::admm::master_pov`] simulator — given the same realized arrival
+//! trace the two produce bit-equal iterates (enforced by the
+//! `cluster_e2e` integration test).
+
+pub mod messages;
+pub mod timeline;
+pub mod worker;
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::admm::arrivals::ArrivalTrace;
+use crate::admm::{
+    augmented_lagrangian_cached, master_x0_update, AdmmConfig, AdmmState, IterRecord, StopReason,
+};
+use crate::problems::ConsensusProblem;
+use crate::rng::Pcg64;
+
+pub use messages::{MasterMsg, WorkerMsg};
+pub use timeline::{Timeline, WorkerStats};
+use worker::WorkerSolveFn;
+
+/// Which coordinator protocol the cluster runs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Protocol {
+    /// Algorithm 2: workers own their dual updates.
+    AdAdmm,
+    /// Algorithm 4: the master owns all dual updates.
+    AltScheme,
+}
+
+/// Per-worker delay injection (simulated heterogeneous network/compute).
+#[derive(Clone, Debug)]
+pub enum DelayModel {
+    /// No injected delay (protocol still fully asynchronous — OS scheduling
+    /// provides the nondeterminism).
+    None,
+    /// Deterministic per-worker delay in milliseconds per round
+    /// (compute + communicate combined).
+    Fixed { per_worker_ms: Vec<f64> },
+    /// Log-normal around a per-worker mean: `exp(N(ln(mean_i), sigma))` ms.
+    LogNormal { mean_ms: Vec<f64>, sigma: f64, seed: u64 },
+}
+
+impl DelayModel {
+    /// A heterogeneous profile: worker i's mean delay grows linearly from
+    /// `fast_ms` to `slow_ms` — the paper's "slowest worker" scenario.
+    pub fn linear_spread(n_workers: usize, fast_ms: f64, slow_ms: f64, sigma: f64, seed: u64) -> Self {
+        let mean_ms = (0..n_workers)
+            .map(|i| {
+                if n_workers == 1 {
+                    fast_ms
+                } else {
+                    fast_ms + (slow_ms - fast_ms) * i as f64 / (n_workers - 1) as f64
+                }
+            })
+            .collect();
+        DelayModel::LogNormal { mean_ms, sigma, seed }
+    }
+
+    /// Build the per-worker sampler.
+    fn sampler(&self, worker: usize) -> DelaySampler {
+        match self {
+            DelayModel::None => DelaySampler::None,
+            DelayModel::Fixed { per_worker_ms } => DelaySampler::Fixed(per_worker_ms[worker]),
+            DelayModel::LogNormal { mean_ms, sigma, seed } => DelaySampler::LogNormal {
+                mu: mean_ms[worker].max(1e-6).ln(),
+                sigma: *sigma,
+                rng: Pcg64::seed_from_u64(seed.wrapping_add(worker as u64 * 0x9e37)),
+            },
+        }
+    }
+}
+
+pub(crate) enum DelaySampler {
+    None,
+    Fixed(f64),
+    LogNormal { mu: f64, sigma: f64, rng: Pcg64 },
+}
+
+impl DelaySampler {
+    pub(crate) fn sample_ms(&mut self) -> f64 {
+        match self {
+            DelaySampler::None => 0.0,
+            DelaySampler::Fixed(ms) => *ms,
+            DelaySampler::LogNormal { mu, sigma, rng } => rng.lognormal(*mu, *sigma),
+        }
+    }
+}
+
+/// Probabilistic communication failures with retransmission (paper,
+/// footnote 2: "the communication delays can also be different, e.g., due
+/// to probabilistic communication failures and message retransmission").
+/// A worker's result is "lost" with `drop_prob`; each retransmission costs
+/// `retrans_ms` before the master sees it.
+#[derive(Clone, Debug)]
+pub struct FaultModel {
+    pub drop_prob: f64,
+    pub retrans_ms: f64,
+    pub seed: u64,
+}
+
+/// Cluster configuration = algorithm parameters + protocol + delay model.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    pub admm: AdmmConfig,
+    pub protocol: Protocol,
+    pub delays: DelayModel,
+    /// Optional communication-failure injection.
+    pub faults: Option<FaultModel>,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            admm: AdmmConfig::default(),
+            protocol: Protocol::AdAdmm,
+            delays: DelayModel::None,
+            faults: None,
+        }
+    }
+}
+
+/// What a cluster run returns.
+pub struct ClusterReport {
+    pub state: AdmmState,
+    pub history: Vec<IterRecord>,
+    /// Realized arrival sets — replayable through the serial simulator.
+    pub trace: ArrivalTrace,
+    pub stop: StopReason,
+    pub wall_clock_s: f64,
+    /// Seconds the master spent blocked waiting for arrivals.
+    pub master_wait_s: f64,
+    pub workers: Vec<WorkerStats>,
+}
+
+impl ClusterReport {
+    /// Master iterations per wall-clock second.
+    pub fn iters_per_sec(&self) -> f64 {
+        self.history.len() as f64 / self.wall_clock_s.max(1e-12)
+    }
+}
+
+/// The threaded star cluster.
+pub struct StarCluster {
+    problem: ConsensusProblem,
+}
+
+impl StarCluster {
+    pub fn new(problem: ConsensusProblem) -> Self {
+        StarCluster { problem }
+    }
+
+    /// Run the configured protocol to `max_iters` master iterations.
+    ///
+    /// `solvers`: optional per-worker solve overrides (PJRT-backed workers);
+    /// `None` uses the problem's native closed-form solves.
+    pub fn run(&self, cfg: &ClusterConfig) -> ClusterReport {
+        self.run_with_solvers(cfg, None)
+    }
+
+    pub fn run_with_solvers(
+        &self,
+        cfg: &ClusterConfig,
+        solvers: Option<Vec<WorkerSolveFn>>,
+    ) -> ClusterReport {
+        cfg.admm.validate(self.problem.num_workers()).expect("invalid AdmmConfig");
+        let n_workers = self.problem.num_workers();
+        let n = self.problem.dim();
+        let rho = cfg.admm.rho;
+        let protocol = cfg.protocol;
+
+        // Star links: one channel to each worker, one shared channel back.
+        let (to_master, from_workers) = mpsc::channel::<WorkerMsg>();
+        let mut to_workers = Vec::with_capacity(n_workers);
+        let mut handles = Vec::with_capacity(n_workers);
+        let mut solver_list: Vec<Option<WorkerSolveFn>> = match solvers {
+            Some(v) => {
+                assert_eq!(v.len(), n_workers, "one solver per worker");
+                v.into_iter().map(Some).collect()
+            }
+            None => (0..n_workers).map(|_| None).collect(),
+        };
+
+        for i in 0..n_workers {
+            let (tx, rx) = mpsc::channel::<MasterMsg>();
+            to_workers.push(tx);
+            let local = Arc::clone(self.problem.local(i));
+            let back = to_master.clone();
+            let delay = cfg.delays.sampler(i);
+            let solve = solver_list[i].take();
+            let faults = cfg.faults.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("worker-{i}"))
+                .spawn(move || {
+                    worker::worker_loop(i, local, rho, protocol, rx, back, delay, solve, faults)
+                })
+                .expect("spawn worker");
+            handles.push(handle);
+        }
+        drop(to_master);
+
+        // ---- master ----
+        let started = Instant::now();
+        let mut state = cfg.admm.initial_state(n_workers, n);
+        let mut d = vec![0usize; n_workers];
+        let mut history = Vec::with_capacity(cfg.admm.max_iters);
+        let mut trace = ArrivalTrace::default();
+        let mut prev_x0 = state.x0.clone();
+        let mut master_wait_s = 0.0;
+        let mut stop = StopReason::MaxIters;
+        let mut f_cache: Vec<f64> = (0..n_workers)
+            .map(|i| self.problem.local(i).eval(&state.xs[i]))
+            .collect();
+        let mut al_scratch: Vec<f64> = Vec::with_capacity(n);
+
+        // Initial broadcast: everyone starts computing against x⁰ (and λ⁰
+        // for Algorithm 4).
+        for (i, tx) in to_workers.iter().enumerate() {
+            let lam = matches!(protocol, Protocol::AltScheme).then(|| state.lams[i].clone());
+            tx.send(MasterMsg::Go { x0: state.x0.clone(), lam }).expect("worker alive");
+        }
+
+        let mut pending: Vec<Option<WorkerMsg>> = (0..n_workers).map(|_| None).collect();
+        for k in 0..cfg.admm.max_iters {
+            // Gather until the gate is met: |A_k| ≥ A and every worker with
+            // d_i ≥ τ−1 has arrived.
+            let wait_started = Instant::now();
+            loop {
+                while let Ok(msg) = from_workers.try_recv() {
+                    let id = msg.id;
+                    pending[id] = Some(msg);
+                }
+                let arrived: Vec<usize> =
+                    (0..n_workers).filter(|&i| pending[i].is_some()).collect();
+                let forced_ok = (0..n_workers)
+                    .all(|i| d[i] + 1 < cfg.admm.tau || pending[i].is_some());
+                if arrived.len() >= cfg.admm.min_arrivals.min(n_workers) && forced_ok {
+                    break;
+                }
+                // Block for the next message.
+                match from_workers.recv() {
+                    Ok(msg) => {
+                        let id = msg.id;
+                        pending[id] = Some(msg);
+                    }
+                    Err(_) => break, // all workers gone (shutdown path)
+                }
+            }
+            master_wait_s += wait_started.elapsed().as_secs_f64();
+
+            let set: Vec<usize> = (0..n_workers).filter(|&i| pending[i].is_some()).collect();
+            // (9)/(10)/(44): absorb arrived variables.
+            for &i in &set {
+                let msg = pending[i].take().unwrap();
+                state.xs[i] = msg.x;
+                if let Some(lam) = msg.lam {
+                    state.lams[i] = lam; // Algorithm 2: worker-computed dual
+                }
+                f_cache[i] = self.problem.local(i).eval(&state.xs[i]);
+                d[i] = 0;
+            }
+            for i in 0..n_workers {
+                if !set.contains(&i) {
+                    d[i] += 1;
+                }
+            }
+
+            // (12)/(45): master x₀ update.
+            prev_x0.copy_from_slice(&state.x0);
+            master_x0_update(&self.problem, &mut state, rho, cfg.admm.gamma);
+
+            // Algorithm 4 (46): master updates ALL duals against fresh x₀.
+            if protocol == Protocol::AltScheme {
+                for i in 0..n_workers {
+                    for j in 0..n {
+                        state.lams[i][j] += rho * (state.xs[i][j] - state.x0[j]);
+                    }
+                }
+            }
+
+            // Step 6: broadcast to arrived workers only.
+            for &i in &set {
+                let lam = (protocol == Protocol::AltScheme).then(|| state.lams[i].clone());
+                // A worker may have exited only after shutdown; sends cannot
+                // fail before that.
+                to_workers[i]
+                    .send(MasterMsg::Go { x0: state.x0.clone(), lam })
+                    .expect("worker alive");
+            }
+
+            let aug =
+                augmented_lagrangian_cached(&self.problem, &state, rho, &f_cache, &mut al_scratch);
+            let x0_change = crate::linalg::vecops::dist2(&state.x0, &prev_x0);
+            let objective = if cfg.admm.objective_every > 0 && k % cfg.admm.objective_every == 0 {
+                self.problem.objective(&state.x0)
+            } else {
+                f64::NAN
+            };
+            history.push(IterRecord {
+                k,
+                objective,
+                aug_lagrangian: aug,
+                consensus: state.consensus_residual(),
+                x0_change,
+                arrivals: set.len(),
+            });
+            trace.sets.push(set);
+
+            if !state.is_finite() || aug.abs() > cfg.admm.divergence_threshold {
+                stop = StopReason::Diverged;
+                break;
+            }
+            if cfg.admm.x0_tol > 0.0 && x0_change <= cfg.admm.x0_tol && k > 0 {
+                stop = StopReason::X0Tolerance;
+                break;
+            }
+        }
+
+        // Shutdown: tell everyone, drain stragglers, join.
+        for tx in &to_workers {
+            let _ = tx.send(MasterMsg::Shutdown);
+        }
+        drop(to_workers);
+        while from_workers.try_recv().is_ok() {}
+        let mut workers = Vec::with_capacity(n_workers);
+        for h in handles {
+            workers.push(h.join().expect("worker panicked"));
+        }
+        // Any message sent between drain and join is dropped with the channel.
+
+        ClusterReport {
+            state,
+            history,
+            trace,
+            stop,
+            wall_clock_s: started.elapsed().as_secs_f64(),
+            master_wait_s,
+            workers,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::admm::kkt::kkt_residual;
+    use crate::data::LassoInstance;
+    use crate::rng::Pcg64;
+
+    fn problem(seed: u64, n_workers: usize) -> ConsensusProblem {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        LassoInstance::synthetic(&mut rng, n_workers, 20, 10, 0.2, 0.1).problem()
+    }
+
+    #[test]
+    fn sync_cluster_converges() {
+        let p = problem(111, 4);
+        let cfg = ClusterConfig {
+            admm: AdmmConfig { rho: 50.0, tau: 1, min_arrivals: 4, max_iters: 400, ..Default::default() },
+            ..Default::default()
+        };
+        let report = StarCluster::new(p.clone()).run(&cfg);
+        assert_eq!(report.stop, StopReason::MaxIters);
+        let r = kkt_residual(&p, &report.state);
+        assert!(r.max() < 1e-6, "{r:?}");
+        // every iteration synchronous: all 4 workers in every set
+        assert!(report.trace.sets.iter().all(|s| s.len() == 4));
+    }
+
+    #[test]
+    fn async_cluster_converges_and_respects_tau() {
+        let p = problem(112, 4);
+        let tau = 4;
+        let cfg = ClusterConfig {
+            admm: AdmmConfig { rho: 50.0, tau, min_arrivals: 1, max_iters: 800, ..Default::default() },
+            delays: DelayModel::Fixed { per_worker_ms: vec![0.0, 0.0, 1.0, 2.0] },
+            ..Default::default()
+        };
+        let report = StarCluster::new(p.clone()).run(&cfg);
+        let r = kkt_residual(&p, &report.state);
+        assert!(r.max() < 1e-5, "{r:?}");
+        assert!(report.trace.satisfies_bounded_delay(4, tau));
+    }
+
+    #[test]
+    fn alt_scheme_cluster_runs_synchronously() {
+        let p = problem(113, 3);
+        let cfg = ClusterConfig {
+            admm: AdmmConfig { rho: 30.0, tau: 1, min_arrivals: 3, max_iters: 400, ..Default::default() },
+            protocol: Protocol::AltScheme,
+            ..Default::default()
+        };
+        let report = StarCluster::new(p.clone()).run(&cfg);
+        assert_eq!(report.stop, StopReason::MaxIters);
+        let r = kkt_residual(&p, &report.state);
+        assert!(r.max() < 1e-5, "{r:?}");
+    }
+
+    #[test]
+    fn worker_stats_accumulate() {
+        let p = problem(114, 2);
+        let cfg = ClusterConfig {
+            admm: AdmmConfig { rho: 20.0, tau: 1, min_arrivals: 2, max_iters: 50, ..Default::default() },
+            ..Default::default()
+        };
+        let report = StarCluster::new(p).run(&cfg);
+        for w in &report.workers {
+            assert!(w.updates >= 50, "updates={}", w.updates);
+            assert!(w.busy_s >= 0.0);
+        }
+        assert!(report.wall_clock_s > 0.0);
+        assert!(report.iters_per_sec() > 0.0);
+    }
+}

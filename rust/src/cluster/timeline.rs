@@ -1,0 +1,106 @@
+//! Per-worker utilization accounting — the data behind the Fig. 2
+//! sync-vs-async timeline comparison.
+
+/// Accumulated per-worker statistics over one cluster run.
+#[derive(Clone, Debug)]
+pub struct WorkerStats {
+    pub id: usize,
+    /// Completed subproblem rounds (messages sent to the master).
+    pub updates: usize,
+    /// Seconds spent computing (incl. injected delay).
+    pub busy_s: f64,
+    /// Seconds between thread start and shutdown.
+    pub lifetime_s: f64,
+    /// Emulated message retransmissions (fault injection).
+    pub retransmissions: usize,
+}
+
+impl WorkerStats {
+    pub fn new(id: usize) -> Self {
+        WorkerStats { id, updates: 0, busy_s: 0.0, lifetime_s: 0.0, retransmissions: 0 }
+    }
+
+    /// Fraction of the run spent idle (waiting for the master).
+    pub fn idle_fraction(&self) -> f64 {
+        if self.lifetime_s <= 0.0 {
+            return 0.0;
+        }
+        (1.0 - self.busy_s / self.lifetime_s).clamp(0.0, 1.0)
+    }
+}
+
+/// A summary of a whole run's utilization, printable as the Fig. 2 table.
+#[derive(Clone, Debug)]
+pub struct Timeline {
+    pub workers: Vec<WorkerStats>,
+    pub master_iters: usize,
+    pub wall_clock_s: f64,
+}
+
+impl Timeline {
+    pub fn total_updates(&self) -> usize {
+        self.workers.iter().map(|w| w.updates).sum()
+    }
+
+    pub fn mean_idle_fraction(&self) -> f64 {
+        if self.workers.is_empty() {
+            return 0.0;
+        }
+        self.workers.iter().map(|w| w.idle_fraction()).sum::<f64>() / self.workers.len() as f64
+    }
+
+    /// Render an ASCII utilization table.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "master iterations: {}  wall-clock: {:.3}s\n",
+            self.master_iters, self.wall_clock_s
+        ));
+        s.push_str("worker  updates  busy_s   idle%\n");
+        for w in &self.workers {
+            s.push_str(&format!(
+                "{:>6}  {:>7}  {:>6.3}  {:>5.1}\n",
+                w.id,
+                w.updates,
+                w.busy_s,
+                100.0 * w.idle_fraction()
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idle_fraction_bounds() {
+        let mut w = WorkerStats::new(0);
+        w.busy_s = 1.0;
+        w.lifetime_s = 4.0;
+        assert!((w.idle_fraction() - 0.75).abs() < 1e-12);
+        w.busy_s = 10.0; // busy > lifetime (clock skew) clamps to 0
+        assert_eq!(w.idle_fraction(), 0.0);
+        let fresh = WorkerStats::new(1);
+        assert_eq!(fresh.idle_fraction(), 0.0);
+    }
+
+    #[test]
+    fn timeline_aggregates() {
+        let mut a = WorkerStats::new(0);
+        a.updates = 5;
+        a.busy_s = 1.0;
+        a.lifetime_s = 2.0;
+        let mut b = WorkerStats::new(1);
+        b.updates = 7;
+        b.busy_s = 2.0;
+        b.lifetime_s = 2.0;
+        let t = Timeline { workers: vec![a, b], master_iters: 10, wall_clock_s: 2.0 };
+        assert_eq!(t.total_updates(), 12);
+        assert!((t.mean_idle_fraction() - 0.25).abs() < 1e-12);
+        let text = t.render();
+        assert!(text.contains("master iterations: 10"));
+        assert!(text.lines().count() >= 4);
+    }
+}

@@ -1,0 +1,99 @@
+//! The worker loop: Algorithm 2 / Algorithm 4, "Algorithm of the i-th
+//! Worker" boxes.
+
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::problems::LocalCost;
+
+use super::messages::{MasterMsg, WorkerMsg};
+use super::timeline::WorkerStats;
+use super::{DelaySampler, FaultModel, Protocol};
+use crate::rng::Pcg64;
+
+/// Optional solve override: `(lam, x0, rho, out)` — lets the PJRT runtime
+/// replace the native closed-form subproblem solve per worker.
+pub type WorkerSolveFn = Box<dyn FnMut(&[f64], &[f64], f64, &mut [f64]) + Send>;
+
+/// One worker thread. Returns its accumulated stats at shutdown.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn worker_loop(
+    id: usize,
+    local: Arc<dyn LocalCost>,
+    rho: f64,
+    protocol: Protocol,
+    inbox: Receiver<MasterMsg>,
+    outbox: Sender<WorkerMsg>,
+    mut delay: DelaySampler,
+    mut solve_override: Option<WorkerSolveFn>,
+    faults: Option<FaultModel>,
+) -> WorkerStats {
+    let n = local.dim();
+    let mut lam = vec![0.0; n]; // λ⁰ = 0 (Algorithm 2 keeps it worker-side)
+    let mut x = vec![0.0; n];
+    let mut stats = WorkerStats::new(id);
+    let mut fault_rng = faults
+        .as_ref()
+        .map(|f| Pcg64::seed_from_u64(f.seed.wrapping_add(id as u64 * 0x5bd1)));
+    let loop_started = Instant::now();
+
+    // Communication-failure emulation: each drop costs one retransmission
+    // delay before the message reaches the master (the channel itself is
+    // reliable; losses manifest purely as extra latency, which is exactly
+    // the partially-asynchronous model's view of them).
+    let mut comm_faults = |stats: &mut WorkerStats| {
+        if let (Some(f), Some(rng)) = (faults.as_ref(), fault_rng.as_mut()) {
+            while rng.bernoulli(f.drop_prob) {
+                std::thread::sleep(Duration::from_secs_f64(f.retrans_ms * 1e-3));
+                stats.retransmissions += 1;
+            }
+        }
+    };
+
+    while let Ok(msg) = inbox.recv() {
+        let (x0, master_lam) = match msg {
+            MasterMsg::Shutdown => break,
+            MasterMsg::Go { x0, lam } => (x0, lam),
+        };
+        let t0 = Instant::now();
+
+        // Injected heterogeneous compute/communication delay.
+        let ms = delay.sample_ms();
+        if ms > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(ms * 1e-3));
+        }
+
+        match protocol {
+            Protocol::AdAdmm => {
+                // (13): x_i ← argmin f_i + xᵀλ_i + ρ/2‖x − x̂₀‖²
+                match solve_override.as_mut() {
+                    Some(f) => f(&lam, &x0, rho, &mut x),
+                    None => local.solve_subproblem(&lam, &x0, rho, &mut x),
+                }
+                // (14): λ_i ← λ_i + ρ(x_i − x̂₀)
+                for j in 0..n {
+                    lam[j] += rho * (x[j] - x0[j]);
+                }
+                comm_faults(&mut stats);
+                let _ = outbox.send(WorkerMsg { id, x: x.clone(), lam: Some(lam.clone()) });
+            }
+            Protocol::AltScheme => {
+                // (47): x_i ← argmin f_i + xᵀλ̂_i + ρ/2‖x − x̂₀‖²
+                let master_lam = master_lam.expect("Algorithm 4 must send λ̂_i");
+                match solve_override.as_mut() {
+                    Some(f) => f(&master_lam, &x0, rho, &mut x),
+                    None => local.solve_subproblem(&master_lam, &x0, rho, &mut x),
+                }
+                comm_faults(&mut stats);
+                let _ = outbox.send(WorkerMsg { id, x: x.clone(), lam: None });
+            }
+        }
+
+        stats.updates += 1;
+        stats.busy_s += t0.elapsed().as_secs_f64();
+    }
+
+    stats.lifetime_s = loop_started.elapsed().as_secs_f64();
+    stats
+}

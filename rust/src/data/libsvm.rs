@@ -1,0 +1,197 @@
+//! LIBSVM-format dataset loader — the standard interchange for the
+//! classification/regression workloads the paper's applications section
+//! targets (LASSO, logistic regression, SVM).
+//!
+//! Format: one sample per line, `label idx:val idx:val ...`, 1-based
+//! indices. The loader densifies (problem dims here are small) and can
+//! shard samples across `N` workers, matching the paper's "training
+//! samples uniformly distributed over the workers".
+
+use std::path::Path;
+
+use crate::linalg::dense::DenseMatrix;
+
+/// A dense-ified LIBSVM dataset.
+#[derive(Clone, Debug)]
+pub struct LibsvmDataset {
+    /// `m × n` feature matrix.
+    pub features: DenseMatrix,
+    /// `m` labels (as given; ±1 for classification).
+    pub labels: Vec<f64>,
+}
+
+impl LibsvmDataset {
+    /// Parse from text. `n_features = None` infers the max index.
+    pub fn parse(text: &str, n_features: Option<usize>) -> Result<Self, String> {
+        let mut rows: Vec<(f64, Vec<(usize, f64)>)> = Vec::new();
+        let mut max_idx = 0usize;
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut toks = line.split_whitespace();
+            let label: f64 = toks
+                .next()
+                .unwrap()
+                .parse()
+                .map_err(|_| format!("line {}: bad label", lineno + 1))?;
+            let mut feats = Vec::new();
+            for tok in toks {
+                let (i, v) = tok
+                    .split_once(':')
+                    .ok_or_else(|| format!("line {}: expected idx:val, got {tok:?}", lineno + 1))?;
+                let idx: usize = i
+                    .parse()
+                    .map_err(|_| format!("line {}: bad index {i:?}", lineno + 1))?;
+                if idx == 0 {
+                    return Err(format!("line {}: LIBSVM indices are 1-based", lineno + 1));
+                }
+                let val: f64 = v
+                    .parse()
+                    .map_err(|_| format!("line {}: bad value {v:?}", lineno + 1))?;
+                max_idx = max_idx.max(idx);
+                feats.push((idx - 1, val));
+            }
+            rows.push((label, feats));
+        }
+        let n = n_features.unwrap_or(max_idx);
+        if max_idx > n {
+            return Err(format!("feature index {max_idx} exceeds declared n_features {n}"));
+        }
+        let m = rows.len();
+        let mut features = DenseMatrix::zeros(m, n);
+        let mut labels = Vec::with_capacity(m);
+        for (r, (label, feats)) in rows.into_iter().enumerate() {
+            labels.push(label);
+            for (c, v) in feats {
+                features.set(r, c, v);
+            }
+        }
+        Ok(LibsvmDataset { features, labels })
+    }
+
+    /// Load from a file.
+    pub fn load(path: &Path, n_features: Option<usize>) -> Result<Self, String> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        Self::parse(&text, n_features)
+    }
+
+    pub fn num_samples(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn num_features(&self) -> usize {
+        self.features.cols()
+    }
+
+    /// Shard samples round-robin across `n_workers` blocks (the paper's
+    /// uniform distribution of training data).
+    pub fn shard(&self, n_workers: usize) -> Vec<(DenseMatrix, Vec<f64>)> {
+        assert!(n_workers >= 1);
+        let n = self.num_features();
+        let mut shards: Vec<(Vec<f64>, Vec<f64>)> = vec![(Vec::new(), Vec::new()); n_workers];
+        for r in 0..self.num_samples() {
+            let w = r % n_workers;
+            shards[w].0.extend_from_slice(self.features.row(r));
+            shards[w].1.push(self.labels[r]);
+        }
+        shards
+            .into_iter()
+            .map(|(data, labels)| {
+                let rows = labels.len();
+                (DenseMatrix::from_vec(rows, n, data), labels)
+            })
+            .collect()
+    }
+
+    /// Serialize back to LIBSVM text (round-trip/testing, sparse output).
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        for r in 0..self.num_samples() {
+            out.push_str(&format!("{}", self.labels[r]));
+            for (c, &v) in self.features.row(r).iter().enumerate() {
+                if v != 0.0 {
+                    out.push_str(&format!(" {}:{}", c + 1, v));
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
++1 1:0.5 3:2.0   # comment
+-1 2:1.5
++1 1:1.0 2:-0.5 3:0.25
+";
+
+    #[test]
+    fn parses_dense_shape_and_values() {
+        let d = LibsvmDataset::parse(SAMPLE, None).unwrap();
+        assert_eq!(d.num_samples(), 3);
+        assert_eq!(d.num_features(), 3);
+        assert_eq!(d.labels, vec![1.0, -1.0, 1.0]);
+        assert_eq!(d.features.get(0, 0), 0.5);
+        assert_eq!(d.features.get(0, 2), 2.0);
+        assert_eq!(d.features.get(1, 1), 1.5);
+        assert_eq!(d.features.get(1, 0), 0.0);
+    }
+
+    #[test]
+    fn explicit_feature_count() {
+        let d = LibsvmDataset::parse(SAMPLE, Some(5)).unwrap();
+        assert_eq!(d.num_features(), 5);
+        assert!(LibsvmDataset::parse(SAMPLE, Some(2)).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(LibsvmDataset::parse("+1 0:1.0\n", None).is_err()); // 0-based
+        assert!(LibsvmDataset::parse("+1 a:1.0\n", None).is_err());
+        assert!(LibsvmDataset::parse("+1 1-1.0\n", None).is_err());
+    }
+
+    #[test]
+    fn round_trip() {
+        let d = LibsvmDataset::parse(SAMPLE, None).unwrap();
+        let d2 = LibsvmDataset::parse(&d.to_text(), Some(3)).unwrap();
+        assert_eq!(d.labels, d2.labels);
+        assert!(d.features.max_abs_diff(&d2.features) < 1e-12);
+    }
+
+    #[test]
+    fn sharding_partitions_samples() {
+        let d = LibsvmDataset::parse(SAMPLE, None).unwrap();
+        let shards = d.shard(2);
+        assert_eq!(shards.len(), 2);
+        assert_eq!(shards[0].1.len() + shards[1].1.len(), 3);
+        assert_eq!(shards[0].0.cols(), 3);
+        // worker 0 gets samples 0 and 2
+        assert_eq!(shards[0].1, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn shards_feed_the_solver() {
+        use crate::problems::{ConsensusProblem, LassoLocal, LocalCost};
+        use crate::prox::Regularizer;
+        use std::sync::Arc;
+        let d = LibsvmDataset::parse(SAMPLE, None).unwrap();
+        let locals: Vec<Arc<dyn LocalCost>> = d
+            .shard(2)
+            .into_iter()
+            .map(|(a, b)| Arc::new(LassoLocal::new(a, b)) as Arc<dyn LocalCost>)
+            .collect();
+        let p = ConsensusProblem::new(locals, Regularizer::L1 { theta: 0.01 });
+        let cfg = crate::admm::AdmmConfig { rho: 5.0, max_iters: 200, ..Default::default() };
+        let out = crate::admm::sync::run_sync_admm(&p, &cfg);
+        let r = crate::admm::kkt::kkt_residual(&p, &out.state);
+        assert!(r.max() < 1e-5, "{r:?}");
+    }
+}

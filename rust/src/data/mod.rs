@@ -1,0 +1,231 @@
+//! Workload generators matching the paper's Section V setups, plus a
+//! LIBSVM-format loader for real datasets.
+
+pub mod libsvm;
+
+use std::sync::Arc;
+
+use crate::linalg::dense::DenseMatrix;
+use crate::linalg::sparse::CsrMatrix;
+use crate::problems::{ConsensusProblem, LassoLocal, LocalCost, LogisticLocal, SpcaLocal};
+use crate::prox::Regularizer;
+use crate::rng::Pcg64;
+
+/// The Fig. 4 LASSO workload (eq. (52)): `A_i ~ N(0,1)^{m×n}`,
+/// `b_i = A_i w⁰ + ν_i`, `w⁰` sparse with ≈`sparsity·n` non-zeros,
+/// `ν ~ N(0, 0.01)`.
+pub struct LassoInstance {
+    pub blocks: Vec<DenseMatrix>,
+    pub rhs: Vec<Vec<f64>>,
+    /// The planted sparse signal.
+    pub w_true: Vec<f64>,
+    pub theta: f64,
+}
+
+impl LassoInstance {
+    /// Generate with the paper's defaults (`noise_var = 0.01` → sd 0.1).
+    pub fn synthetic(
+        rng: &mut Pcg64,
+        n_workers: usize,
+        m_per_worker: usize,
+        n: usize,
+        sparsity: f64,
+        theta: f64,
+    ) -> Self {
+        // planted signal: ≈ sparsity·n non-zeros
+        let nnz = ((n as f64 * sparsity).round() as usize).clamp(1, n);
+        let mut w_true = vec![0.0; n];
+        for idx in rng.sample_indices(n, nnz) {
+            w_true[idx] = rng.normal();
+        }
+        let mut blocks = Vec::with_capacity(n_workers);
+        let mut rhs = Vec::with_capacity(n_workers);
+        for _ in 0..n_workers {
+            let a = DenseMatrix::randn(rng, m_per_worker, n);
+            let mut b = a.matvec(&w_true);
+            for v in b.iter_mut() {
+                *v += rng.normal_ms(0.0, 0.1);
+            }
+            blocks.push(a);
+            rhs.push(b);
+        }
+        LassoInstance { blocks, rhs, w_true, theta }
+    }
+
+    /// Assemble the consensus problem (4).
+    pub fn problem(&self) -> ConsensusProblem {
+        let locals: Vec<Arc<dyn LocalCost>> = self
+            .blocks
+            .iter()
+            .zip(&self.rhs)
+            .map(|(a, b)| Arc::new(LassoLocal::new(a.clone(), b.clone())) as Arc<dyn LocalCost>)
+            .collect();
+        ConsensusProblem::new(locals, Regularizer::L1 { theta: self.theta })
+    }
+
+    pub fn dim(&self) -> usize {
+        self.w_true.len()
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.blocks.len()
+    }
+}
+
+/// The Fig. 3 sparse-PCA workload (eq. (50)): each `B_j` is an `m×n` sparse
+/// matrix with `nnz` non-zeros ~ N(0,1).
+pub struct SparsePcaInstance {
+    pub blocks: Vec<CsrMatrix>,
+    pub theta: f64,
+}
+
+impl SparsePcaInstance {
+    pub fn synthetic(
+        rng: &mut Pcg64,
+        n_workers: usize,
+        m: usize,
+        n: usize,
+        nnz: usize,
+        theta: f64,
+    ) -> Self {
+        let blocks = (0..n_workers).map(|_| CsrMatrix::random(rng, m, n, nnz)).collect();
+        SparsePcaInstance { blocks, theta }
+    }
+
+    pub fn problem(&self) -> ConsensusProblem {
+        let locals: Vec<Arc<dyn LocalCost>> = self
+            .blocks
+            .iter()
+            .map(|b| Arc::new(SpcaLocal::new(b.clone())) as Arc<dyn LocalCost>)
+            .collect();
+        // h = θ‖·‖₁ restricted to the unit box: Assumption 2 requires
+        // dom(h) compact, and without it (50) is unbounded below (−‖Bw‖²
+        // beats θ‖w‖₁ at scale). The box also makes this *the* sparse-PCA
+        // problem: maximize ‖Bw‖² over the box with an L1 sparsity push.
+        ConsensusProblem::new(locals, Regularizer::L1Box { theta: self.theta, bound: 1.0 })
+    }
+
+    /// `max_j λmax(B_jᵀB_j)` — input to the paper's `ρ = β·λmax` rule.
+    /// (Recomputes the locals; callers that already built the problem can
+    /// read it off the `SpcaLocal`s instead.)
+    pub fn max_lambda_max(&self) -> f64 {
+        self.blocks
+            .iter()
+            .map(|b| SpcaLocal::new(b.clone()).lambda_max())
+            .fold(0.0, f64::max)
+    }
+
+    pub fn dim(&self) -> usize {
+        self.blocks[0].cols()
+    }
+}
+
+/// Distributed logistic regression (the Part-II companion workload):
+/// separable two-class Gaussian clouds, labels ±1.
+pub struct LogisticInstance {
+    pub blocks: Vec<DenseMatrix>,
+    pub labels: Vec<Vec<f64>>,
+    pub w_true: Vec<f64>,
+    pub theta: f64,
+}
+
+impl LogisticInstance {
+    pub fn synthetic(
+        rng: &mut Pcg64,
+        n_workers: usize,
+        m_per_worker: usize,
+        n: usize,
+        theta: f64,
+    ) -> Self {
+        let mut w_true = vec![0.0; n];
+        rng.fill_normal(&mut w_true);
+        let mut blocks = Vec::new();
+        let mut labels = Vec::new();
+        for _ in 0..n_workers {
+            let a = DenseMatrix::randn(rng, m_per_worker, n);
+            let margins = a.matvec(&w_true);
+            let y: Vec<f64> = margins
+                .iter()
+                .map(|&mj| {
+                    // logistic noise: flip with prob σ(−|m|)
+                    let p = 1.0 / (1.0 + (-mj).exp());
+                    if rng.uniform() < p {
+                        1.0
+                    } else {
+                        -1.0
+                    }
+                })
+                .collect();
+            blocks.push(a);
+            labels.push(y);
+        }
+        LogisticInstance { blocks, labels, w_true, theta }
+    }
+
+    pub fn problem(&self) -> ConsensusProblem {
+        let locals: Vec<Arc<dyn LocalCost>> = self
+            .blocks
+            .iter()
+            .zip(&self.labels)
+            .map(|(a, y)| {
+                Arc::new(LogisticLocal::new(a.clone(), y.clone())) as Arc<dyn LocalCost>
+            })
+            .collect();
+        ConsensusProblem::new(locals, Regularizer::L1 { theta: self.theta })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lasso_shapes_and_sparsity() {
+        let mut rng = Pcg64::seed_from_u64(61);
+        let inst = LassoInstance::synthetic(&mut rng, 4, 30, 50, 0.05, 0.1);
+        assert_eq!(inst.blocks.len(), 4);
+        assert_eq!(inst.rhs.len(), 4);
+        assert_eq!(inst.blocks[0].rows(), 30);
+        assert_eq!(inst.blocks[0].cols(), 50);
+        let nnz = inst.w_true.iter().filter(|v| **v != 0.0).count();
+        assert!(nnz >= 1 && nnz <= 5, "nnz={nnz}"); // ≈ 0.05·50 = 2.5
+        let p = inst.problem();
+        assert_eq!(p.num_workers(), 4);
+        assert_eq!(p.dim(), 50);
+    }
+
+    #[test]
+    fn lasso_signal_explains_rhs() {
+        // With low noise, residual at w_true should be far below ||b||.
+        let mut rng = Pcg64::seed_from_u64(62);
+        let inst = LassoInstance::synthetic(&mut rng, 2, 40, 20, 0.2, 0.1);
+        for (a, b) in inst.blocks.iter().zip(&inst.rhs) {
+            let pred = a.matvec(&inst.w_true);
+            let res: f64 = pred.iter().zip(b).map(|(p, bi)| (p - bi).powi(2)).sum();
+            let total: f64 = b.iter().map(|v| v * v).sum();
+            assert!(res < 0.3 * total.max(1.0), "res={res} total={total}");
+        }
+    }
+
+    #[test]
+    fn spca_instance_matches_paper_shape() {
+        let mut rng = Pcg64::seed_from_u64(63);
+        let inst = SparsePcaInstance::synthetic(&mut rng, 3, 100, 50, 500, 0.1);
+        assert_eq!(inst.blocks.len(), 3);
+        assert_eq!(inst.blocks[0].nnz(), 500);
+        assert!(inst.max_lambda_max() > 0.0);
+        let p = inst.problem();
+        assert_eq!(p.dim(), 50);
+    }
+
+    #[test]
+    fn logistic_labels_pm1() {
+        let mut rng = Pcg64::seed_from_u64(64);
+        let inst = LogisticInstance::synthetic(&mut rng, 2, 25, 8, 0.05);
+        for y in &inst.labels {
+            assert!(y.iter().all(|&v| v == 1.0 || v == -1.0));
+        }
+        let p = inst.problem();
+        assert_eq!(p.num_workers(), 2);
+    }
+}

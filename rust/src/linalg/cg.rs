@@ -1,0 +1,167 @@
+//! Conjugate gradient for SPD systems, matrix-free.
+//!
+//! The native mirror of the L2 JAX solver (`python/compile/model.py` runs a
+//! fixed-iteration CG inside a `lax.scan`, calling the Pallas Gram kernel for
+//! every `Aᵀ(A p)` product). Keeping the two implementations structurally
+//! identical makes the PJRT-vs-native parity tests meaningful.
+
+use super::vecops;
+
+/// Outcome of a CG solve.
+#[derive(Clone, Debug)]
+pub struct CgResult {
+    /// Iterations actually performed.
+    pub iters: usize,
+    /// Final residual norm `||b - A x||`.
+    pub residual: f64,
+    /// Whether the tolerance was met (vs. iteration cap reached).
+    pub converged: bool,
+}
+
+/// Solve `A x = b` for SPD `A` given as a mat-vec closure.
+///
+/// `x` holds the initial guess on entry and the solution on exit.
+/// Terminates at `max_iters` or when `||r|| <= tol * ||b||`.
+pub fn cg_solve<F>(mut apply_a: F, b: &[f64], x: &mut [f64], max_iters: usize, tol: f64) -> CgResult
+where
+    F: FnMut(&[f64], &mut [f64]),
+{
+    let n = b.len();
+    assert_eq!(x.len(), n);
+    let bnorm = vecops::nrm2(b).max(f64::MIN_POSITIVE);
+
+    let mut r = vec![0.0; n];
+    let mut ap = vec![0.0; n];
+    // r = b - A x
+    apply_a(x, &mut ap);
+    for i in 0..n {
+        r[i] = b[i] - ap[i];
+    }
+    let mut p = r.clone();
+    let mut rs_old = vecops::nrm2_sq(&r);
+
+    if rs_old.sqrt() <= tol * bnorm {
+        return CgResult { iters: 0, residual: rs_old.sqrt(), converged: true };
+    }
+
+    let mut iters = 0;
+    for _ in 0..max_iters {
+        apply_a(&p, &mut ap);
+        let pap = vecops::dot(&p, &ap);
+        if pap <= 0.0 || !pap.is_finite() {
+            // Not SPD along p (e.g. sparse-PCA with too-small ρ): bail with
+            // whatever iterate we have; caller decides (this mirrors the
+            // fixed-iteration JAX kernel which just keeps stepping).
+            break;
+        }
+        let alpha = rs_old / pap;
+        vecops::axpy(alpha, &p, x);
+        vecops::axpy(-alpha, &ap, &mut r);
+        let rs_new = vecops::nrm2_sq(&r);
+        iters += 1;
+        if rs_new.sqrt() <= tol * bnorm {
+            return CgResult { iters, residual: rs_new.sqrt(), converged: true };
+        }
+        let beta = rs_new / rs_old;
+        vecops::axpby(1.0, &r, beta, &mut p);
+        rs_old = rs_new;
+    }
+    CgResult { iters, residual: rs_old.sqrt(), converged: false }
+}
+
+/// Fixed-iteration CG with **no tolerance test** — exactly the schedule the
+/// AOT-compiled JAX artifact runs (a `lax.scan` cannot early-exit). Used by
+/// parity tests to compare iterate-for-iterate.
+pub fn cg_fixed<F>(mut apply_a: F, b: &[f64], x: &mut [f64], iters: usize)
+where
+    F: FnMut(&[f64], &mut [f64]),
+{
+    let n = b.len();
+    let mut r = vec![0.0; n];
+    let mut ap = vec![0.0; n];
+    apply_a(x, &mut ap);
+    for i in 0..n {
+        r[i] = b[i] - ap[i];
+    }
+    let mut p = r.clone();
+    let mut rs_old = vecops::nrm2_sq(&r);
+    for _ in 0..iters {
+        apply_a(&p, &mut ap);
+        let pap = vecops::dot(&p, &ap);
+        // Mirror the JAX kernel: guard the division but keep iterating.
+        let alpha = if pap.abs() > 1e-300 { rs_old / pap } else { 0.0 };
+        vecops::axpy(alpha, &p, x);
+        vecops::axpy(-alpha, &ap, &mut r);
+        let rs_new = vecops::nrm2_sq(&r);
+        let beta = if rs_old.abs() > 1e-300 { rs_new / rs_old } else { 0.0 };
+        vecops::axpby(1.0, &r, beta, &mut p);
+        rs_old = rs_new;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dense::DenseMatrix;
+    use crate::rng::Pcg64;
+
+    fn spd_system(n: usize, seed: u64) -> (DenseMatrix, Vec<f64>) {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let a = DenseMatrix::randn(&mut rng, n + 5, n);
+        let mut g = a.gram();
+        g.add_diag(1.0);
+        let b: Vec<f64> = (0..n).map(|i| ((i * 3) as f64).sin()).collect();
+        (g, b)
+    }
+
+    #[test]
+    fn converges_on_spd() {
+        let (g, b) = spd_system(30, 8);
+        let mut x = vec![0.0; 30];
+        let res = cg_solve(|v, out| g.matvec_into(v, out), &b, &mut x, 200, 1e-10);
+        assert!(res.converged, "residual={}", res.residual);
+        let r = g.matvec(&x);
+        let rel = vecops::dist2(&r, &b) / vecops::nrm2(&b);
+        assert!(rel < 1e-8, "rel={rel}");
+    }
+
+    #[test]
+    fn exact_in_n_iterations() {
+        // CG is exact after n steps in exact arithmetic; allow slack.
+        let (g, b) = spd_system(10, 9);
+        let mut x = vec![0.0; 10];
+        let res = cg_solve(|v, out| g.matvec_into(v, out), &b, &mut x, 15, 1e-12);
+        assert!(res.converged);
+        assert!(res.iters <= 12);
+    }
+
+    #[test]
+    fn identity_solves_in_one() {
+        let b = vec![1.0, 2.0, 3.0];
+        let mut x = vec![0.0; 3];
+        let res = cg_solve(|v, out| out.copy_from_slice(v), &b, &mut x, 10, 1e-12);
+        assert!(res.converged);
+        assert!(res.iters <= 1);
+        assert!(vecops::dist2(&x, &b) < 1e-12);
+    }
+
+    #[test]
+    fn warm_start_zero_iterations() {
+        let (g, b) = spd_system(8, 10);
+        let mut x = vec![0.0; 8];
+        cg_solve(|v, out| g.matvec_into(v, out), &b, &mut x, 100, 1e-12);
+        // resolve starting from the solution
+        let res = cg_solve(|v, out| g.matvec_into(v, out), &b, &mut x, 100, 1e-8);
+        assert_eq!(res.iters, 0);
+    }
+
+    #[test]
+    fn fixed_matches_tolerance_version_when_run_long() {
+        let (g, b) = spd_system(20, 11);
+        let mut x1 = vec![0.0; 20];
+        let mut x2 = vec![0.0; 20];
+        cg_solve(|v, out| g.matvec_into(v, out), &b, &mut x1, 60, 0.0);
+        cg_fixed(|v, out| g.matvec_into(v, out), &b, &mut x2, 60);
+        assert!(vecops::dist2(&x1, &x2) < 1e-8);
+    }
+}

@@ -1,0 +1,303 @@
+//! Row-major dense matrices with the BLAS-2/3 kernels the solvers need.
+
+use crate::rng::Pcg64;
+
+use super::vecops;
+
+/// Row-major dense `rows x cols` matrix of `f64`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DenseMatrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl DenseMatrix {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        DenseMatrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity (square).
+    pub fn eye(n: usize) -> Self {
+        let mut m = DenseMatrix::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer/shape mismatch");
+        DenseMatrix { rows, cols, data }
+    }
+
+    /// Build from nested rows (tests / small examples).
+    pub fn from_rows(rows: &[&[f64]]) -> Self {
+        let r = rows.len();
+        let c = if r == 0 { 0 } else { rows[0].len() };
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        DenseMatrix { rows: r, cols: c, data }
+    }
+
+    /// Standard-normal random matrix (the paper's LASSO `A_i ~ N(0,1)`).
+    pub fn randn(rng: &mut Pcg64, rows: usize, cols: usize) -> Self {
+        let mut m = DenseMatrix::zeros(rows, cols);
+        rng.fill_normal(&mut m.data);
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// `y = A x` (allocates).
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.rows];
+        self.matvec_into(x, &mut y);
+        y
+    }
+
+    /// `y = A x` into a caller buffer (hot path, no allocation).
+    pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        for i in 0..self.rows {
+            y[i] = vecops::dot(self.row(i), x);
+        }
+    }
+
+    /// `y = Aᵀ x` (allocates).
+    pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.cols];
+        self.matvec_t_into(x, &mut y);
+        y
+    }
+
+    /// `y = Aᵀ x` into a caller buffer. Row-major transpose product is an
+    /// axpy sweep over rows, which keeps the access pattern contiguous.
+    pub fn matvec_t_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.rows);
+        assert_eq!(y.len(), self.cols);
+        y.fill(0.0);
+        for i in 0..self.rows {
+            vecops::axpy(x[i], self.row(i), y);
+        }
+    }
+
+    /// Fused Gram mat-vec `y = Aᵀ(A x)` with a caller-supplied scratch of
+    /// length `rows`. This mirrors the L1 Pallas kernel and is the native
+    /// backend's CG hot loop.
+    pub fn gram_matvec_into(&self, x: &[f64], scratch: &mut [f64], y: &mut [f64]) {
+        assert_eq!(scratch.len(), self.rows);
+        self.matvec_into(x, scratch);
+        self.matvec_t_into(scratch, y);
+    }
+
+    /// `C = A B` (allocates).
+    pub fn matmul(&self, b: &DenseMatrix) -> DenseMatrix {
+        assert_eq!(self.cols, b.rows, "inner dims");
+        let mut c = DenseMatrix::zeros(self.rows, b.cols);
+        // ikj loop order: streams B rows, C rows stay hot.
+        for i in 0..self.rows {
+            let arow = self.row(i);
+            let crow = &mut c.data[i * b.cols..(i + 1) * b.cols];
+            for (k, &aik) in arow.iter().enumerate() {
+                if aik != 0.0 {
+                    vecops::axpy(aik, b.row(k), crow);
+                }
+            }
+        }
+        c
+    }
+
+    /// Symmetric Gram product `G = AᵀA` exploiting symmetry (half the FLOPs
+    /// of a general GEMM). Used once per worker to set up the subproblem
+    /// normal equations.
+    pub fn gram(&self) -> DenseMatrix {
+        let n = self.cols;
+        let mut g = DenseMatrix::zeros(n, n);
+        for r in 0..self.rows {
+            let row = self.row(r);
+            for i in 0..n {
+                let ai = row[i];
+                if ai == 0.0 {
+                    continue;
+                }
+                let grow = &mut g.data[i * n..i * n + n];
+                // only j >= i (upper triangle)
+                for j in i..n {
+                    grow[j] += ai * row[j];
+                }
+            }
+        }
+        // mirror
+        for i in 0..n {
+            for j in i + 1..n {
+                let v = g.data[i * n + j];
+                g.data[j * n + i] = v;
+            }
+        }
+        g
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> DenseMatrix {
+        let mut t = DenseMatrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        t
+    }
+
+    /// `A += a * I` (square only); the `+ρI` shift of the normal equations.
+    pub fn add_diag(&mut self, a: f64) {
+        assert_eq!(self.rows, self.cols);
+        for i in 0..self.rows {
+            self.data[i * self.cols + i] += a;
+        }
+    }
+
+    /// `A *= a`.
+    pub fn scale(&mut self, a: f64) {
+        vecops::scale(a, &mut self.data);
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        vecops::nrm2(&self.data)
+    }
+
+    /// Max |a_ij| difference against another matrix (test helper).
+    pub fn max_abs_diff(&self, other: &DenseMatrix) -> f64 {
+        assert_eq!(self.rows, other.rows);
+        assert_eq!(self.cols, other.cols);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0, |m, (a, b)| m.max((a - b).abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> DenseMatrix {
+        DenseMatrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0], &[5.0, 6.0]])
+    }
+
+    #[test]
+    fn matvec_and_transpose_matvec() {
+        let a = small();
+        assert_eq!(a.matvec(&[1.0, 1.0]), vec![3.0, 7.0, 11.0]);
+        assert_eq!(a.matvec_t(&[1.0, 1.0, 1.0]), vec![9.0, 12.0]);
+    }
+
+    #[test]
+    fn matmul_matches_hand_computed() {
+        let a = small(); // 3x2
+        let b = DenseMatrix::from_rows(&[&[1.0, 0.0, 2.0], &[0.0, 1.0, 2.0]]); // 2x3
+        let c = a.matmul(&b);
+        let expect = DenseMatrix::from_rows(&[
+            &[1.0, 2.0, 6.0],
+            &[3.0, 4.0, 14.0],
+            &[5.0, 6.0, 22.0],
+        ]);
+        assert!(c.max_abs_diff(&expect) < 1e-12);
+    }
+
+    #[test]
+    fn gram_matches_explicit_product() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let a = DenseMatrix::randn(&mut rng, 17, 9);
+        let g1 = a.gram();
+        let g2 = a.transpose().matmul(&a);
+        assert!(g1.max_abs_diff(&g2) < 1e-9);
+    }
+
+    #[test]
+    fn gram_matvec_fused_matches_two_step() {
+        let mut rng = Pcg64::seed_from_u64(2);
+        let a = DenseMatrix::randn(&mut rng, 13, 7);
+        let x: Vec<f64> = (0..7).map(|i| i as f64 * 0.1 - 0.3).collect();
+        let mut scratch = vec![0.0; 13];
+        let mut y = vec![0.0; 7];
+        a.gram_matvec_into(&x, &mut scratch, &mut y);
+        let expect = a.matvec_t(&a.matvec(&x));
+        for i in 0..7 {
+            assert!((y[i] - expect[i]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let a = small();
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn eye_and_add_diag() {
+        let mut m = DenseMatrix::eye(3);
+        m.add_diag(2.0);
+        for i in 0..3 {
+            for j in 0..3 {
+                let want = if i == j { 3.0 } else { 0.0 };
+                assert_eq!(m.get(i, j), want);
+            }
+        }
+    }
+
+    #[test]
+    fn randn_has_sane_scale() {
+        let mut rng = Pcg64::seed_from_u64(9);
+        let a = DenseMatrix::randn(&mut rng, 100, 100);
+        let fro = a.fro_norm();
+        // E[fro²] = 10_000 → fro ≈ 100
+        assert!((fro - 100.0).abs() < 5.0, "fro={fro}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_shape_mismatch_panics() {
+        DenseMatrix::from_vec(2, 2, vec![1.0, 2.0, 3.0]);
+    }
+}

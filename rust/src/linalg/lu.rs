@@ -1,0 +1,176 @@
+//! LU factorization with partial pivoting.
+//!
+//! Needed for *indefinite* subproblem systems — the sparse-PCA worker solve
+//! `(ρI − 2BᵀB) x = rhs` when `ρ < 2λmax(BᵀB)` (the `β = 1.5` divergence
+//! regime of Fig. 3, which we must still be able to *run*).
+
+use super::dense::DenseMatrix;
+
+/// `P A = L U` with partial pivoting; stored packed in one square buffer.
+#[derive(Clone, Debug)]
+pub struct Lu {
+    n: usize,
+    lu: Vec<f64>,
+    piv: Vec<usize>,
+    /// Number of row swaps (determinant sign).
+    swaps: usize,
+}
+
+/// The matrix is numerically singular.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Singular {
+    pub pivot: usize,
+}
+
+impl std::fmt::Display for Singular {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "matrix singular at pivot {}", self.pivot)
+    }
+}
+
+impl std::error::Error for Singular {}
+
+impl Lu {
+    /// Factor a general square matrix.
+    pub fn factor(a: &DenseMatrix) -> Result<Self, Singular> {
+        assert_eq!(a.rows(), a.cols());
+        let n = a.rows();
+        let mut lu = a.data().to_vec();
+        let mut piv: Vec<usize> = (0..n).collect();
+        let mut swaps = 0;
+        for k in 0..n {
+            // pivot search
+            let mut p = k;
+            let mut best = lu[k * n + k].abs();
+            for i in k + 1..n {
+                let v = lu[i * n + k].abs();
+                if v > best {
+                    best = v;
+                    p = i;
+                }
+            }
+            if best == 0.0 || !best.is_finite() {
+                return Err(Singular { pivot: k });
+            }
+            if p != k {
+                for j in 0..n {
+                    lu.swap(k * n + j, p * n + j);
+                }
+                piv.swap(k, p);
+                swaps += 1;
+            }
+            let pivval = lu[k * n + k];
+            for i in k + 1..n {
+                let m = lu[i * n + k] / pivval;
+                lu[i * n + k] = m;
+                if m != 0.0 {
+                    for j in k + 1..n {
+                        lu[i * n + j] -= m * lu[k * n + j];
+                    }
+                }
+            }
+        }
+        Ok(Lu { n, lu, piv, swaps })
+    }
+
+    pub fn dim(&self) -> usize {
+        self.n
+    }
+
+    /// Solve `A x = b` (allocates).
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.n;
+        assert_eq!(b.len(), n);
+        // apply permutation
+        let mut x: Vec<f64> = (0..n).map(|i| b[self.piv[i]]).collect();
+        // forward: L y = Pb (unit diagonal)
+        for i in 1..n {
+            let mut s = x[i];
+            for k in 0..i {
+                s -= self.lu[i * n + k] * x[k];
+            }
+            x[i] = s;
+        }
+        // backward: U x = y
+        for i in (0..n).rev() {
+            let mut s = x[i];
+            for k in i + 1..n {
+                s -= self.lu[i * n + k] * x[k];
+            }
+            x[i] = s / self.lu[i * n + i];
+        }
+        x
+    }
+
+    /// Determinant (product of U diagonal, sign from swap parity).
+    pub fn det(&self) -> f64 {
+        let mut d: f64 = if self.swaps % 2 == 0 { 1.0 } else { -1.0 };
+        for i in 0..self.n {
+            d *= self.lu[i * self.n + i];
+        }
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::vecops;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn solve_small_known() {
+        let a = DenseMatrix::from_rows(&[&[2.0, 1.0], &[1.0, 3.0]]);
+        let lu = Lu::factor(&a).unwrap();
+        let x = lu.solve(&[3.0, 5.0]);
+        // x = [4/5, 7/5]
+        assert!((x[0] - 0.8).abs() < 1e-12);
+        assert!((x[1] - 1.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn requires_pivoting() {
+        // zero leading pivot: unpivoted Gaussian elimination would fail.
+        let a = DenseMatrix::from_rows(&[&[0.0, 1.0], &[1.0, 0.0]]);
+        let lu = Lu::factor(&a).unwrap();
+        let x = lu.solve(&[2.0, 3.0]);
+        assert!((x[0] - 3.0).abs() < 1e-12);
+        assert!((x[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn indefinite_system_solves() {
+        // Cholesky would reject this; LU must handle it (sparse-PCA regime).
+        let a = DenseMatrix::from_rows(&[&[1.0, 0.0], &[0.0, -2.0]]);
+        let lu = Lu::factor(&a).unwrap();
+        let x = lu.solve(&[1.0, 4.0]);
+        assert_eq!(x, vec![1.0, -2.0]);
+    }
+
+    #[test]
+    fn random_residuals() {
+        let mut rng = Pcg64::seed_from_u64(6);
+        for n in [1usize, 3, 10, 50] {
+            let a = DenseMatrix::randn(&mut rng, n, n);
+            let b: Vec<f64> = (0..n).map(|i| (i as f64 * 0.7).cos()).collect();
+            let lu = Lu::factor(&a).unwrap();
+            let x = lu.solve(&b);
+            let r = a.matvec(&x);
+            let rel = vecops::dist2(&r, &b) / vecops::nrm2(&b).max(1.0);
+            assert!(rel < 1e-8, "n={n} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn singular_rejected() {
+        let a = DenseMatrix::from_rows(&[&[1.0, 2.0], &[2.0, 4.0]]);
+        assert!(Lu::factor(&a).is_err());
+    }
+
+    #[test]
+    fn det_matches_2x2_formula() {
+        let a = DenseMatrix::from_rows(&[&[3.0, 1.0], &[2.0, 5.0]]);
+        let lu = Lu::factor(&a).unwrap();
+        assert!((lu.det() - 13.0).abs() < 1e-10);
+    }
+}

@@ -1,0 +1,26 @@
+//! Dense + sparse linear algebra substrate.
+//!
+//! The paper's subproblems are quadratic solves and mat-vecs over blocks of
+//! at most a few thousand columns; this module supplies exactly what the
+//! coordinator, the native solver backend and the baselines need, written on
+//! `std` only (no BLAS/LAPACK on the image):
+//!
+//! - [`vecops`]   — BLAS-1: dot, axpy, norms, scaling (unrolled).
+//! - [`dense`]    — row-major [`dense::DenseMatrix`], GEMV/GEMM, Gram (`AᵀA`).
+//! - [`cholesky`] — SPD factorization + solves (worker subproblem hot path).
+//! - [`lu`]       — partial-pivoted LU for indefinite systems (sparse-PCA
+//!                  with `ρ < 2λmax`, i.e. the paper's divergence regime).
+//! - [`cg`]       — conjugate gradient (mirrors the L2 JAX solver).
+//! - [`power`]    — power iteration for `λmax` (the paper's `ρ = β·λmax` rule).
+//! - [`sparse`]   — CSR matrices for the sparse-PCA data blocks.
+
+pub mod cg;
+pub mod cholesky;
+pub mod dense;
+pub mod lu;
+pub mod power;
+pub mod sparse;
+pub mod vecops;
+
+pub use dense::DenseMatrix;
+pub use sparse::CsrMatrix;

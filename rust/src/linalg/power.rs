@@ -1,0 +1,87 @@
+//! Power iteration for the largest eigenvalue of a symmetric PSD operator.
+//!
+//! The paper sets the sparse-PCA penalty as `ρ = β · max_j λmax(B_jᵀB_j)`
+//! (Fig. 3 caption) and the Lipschitz constants of the quadratic losses are
+//! `2 λmax` as well, so this is the parameter-rule substrate.
+
+use super::vecops;
+use crate::rng::Pcg64;
+
+/// Estimate `λmax` of the symmetric operator `apply` on `R^n`.
+///
+/// Returns `(lambda_max, iterations_used)`. Deterministic given `seed`.
+pub fn power_iteration<F>(mut apply: F, n: usize, max_iters: usize, tol: f64, seed: u64) -> (f64, usize)
+where
+    F: FnMut(&[f64], &mut [f64]),
+{
+    assert!(n > 0);
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let mut v = vec![0.0; n];
+    rng.fill_normal(&mut v);
+    let nrm = vecops::nrm2(&v).max(f64::MIN_POSITIVE);
+    vecops::scale(1.0 / nrm, &mut v);
+
+    let mut av = vec![0.0; n];
+    let mut lambda = 0.0;
+    for it in 1..=max_iters {
+        apply(&v, &mut av);
+        let new_lambda = vecops::dot(&v, &av); // Rayleigh quotient
+        let nrm = vecops::nrm2(&av);
+        if nrm <= f64::MIN_POSITIVE {
+            return (0.0, it); // operator annihilated v: λmax ≈ 0
+        }
+        for i in 0..n {
+            v[i] = av[i] / nrm;
+        }
+        if (new_lambda - lambda).abs() <= tol * new_lambda.abs().max(1.0) && it > 3 {
+            return (new_lambda, it);
+        }
+        lambda = new_lambda;
+    }
+    (lambda, max_iters)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dense::DenseMatrix;
+
+    #[test]
+    fn diagonal_matrix_lambda_max() {
+        let d = DenseMatrix::from_rows(&[&[3.0, 0.0, 0.0], &[0.0, 7.0, 0.0], &[0.0, 0.0, 1.0]]);
+        let (lam, _) = power_iteration(|v, out| d.matvec_into(v, out), 3, 500, 1e-12, 1);
+        assert!((lam - 7.0).abs() < 1e-6, "lam={lam}");
+    }
+
+    #[test]
+    fn gram_lambda_max_matches_square_of_norm_for_rank_one() {
+        // A = u vᵀ → AᵀA has λmax = ||u||² ||v||².
+        let u = [1.0, 2.0];
+        let v = [3.0, 0.0, 4.0];
+        let mut a = DenseMatrix::zeros(2, 3);
+        for i in 0..2 {
+            for j in 0..3 {
+                a.set(i, j, u[i] * v[j]);
+            }
+        }
+        let mut scratch = vec![0.0; 2];
+        let (lam, _) = power_iteration(
+            |x, out| a.gram_matvec_into(x, &mut scratch, out),
+            3,
+            1000,
+            1e-12,
+            2,
+        );
+        let expect = (1.0 + 4.0) * (9.0 + 16.0); // 125
+        assert!((lam - expect).abs() / expect < 1e-6, "lam={lam}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let d = DenseMatrix::eye(4);
+        let (a, _) = power_iteration(|v, out| d.matvec_into(v, out), 4, 50, 1e-10, 3);
+        let (b, _) = power_iteration(|v, out| d.matvec_into(v, out), 4, 50, 1e-10, 3);
+        assert_eq!(a, b);
+        assert!((a - 1.0).abs() < 1e-9);
+    }
+}

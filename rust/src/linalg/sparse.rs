@@ -1,0 +1,256 @@
+//! CSR sparse matrices.
+//!
+//! The Fig. 3 workload is sparse: each worker holds a `1000 × 500` block
+//! `B_j` with ≈ 5000 non-zeros (1% density). Forming `B_jᵀB_j` densely is
+//! still cheap at 500², but the mat-vecs used by power iteration and CG stay
+//! sparse here.
+
+use crate::rng::Pcg64;
+
+use super::dense::DenseMatrix;
+use super::vecops;
+
+/// Compressed-sparse-row matrix.
+#[derive(Clone, Debug)]
+pub struct CsrMatrix {
+    rows: usize,
+    cols: usize,
+    /// Row start offsets, length `rows + 1`.
+    indptr: Vec<usize>,
+    /// Column indices per non-zero.
+    indices: Vec<usize>,
+    /// Non-zero values.
+    values: Vec<f64>,
+}
+
+impl CsrMatrix {
+    /// Build from COO triplets (duplicates summed).
+    pub fn from_triplets(rows: usize, cols: usize, triplets: &[(usize, usize, f64)]) -> Self {
+        let mut sorted: Vec<(usize, usize, f64)> = triplets.to_vec();
+        sorted.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+        let mut indptr = vec![0usize; rows + 1];
+        let mut indices: Vec<usize> = Vec::with_capacity(sorted.len());
+        let mut values: Vec<f64> = Vec::with_capacity(sorted.len());
+        let mut cur_row = 0usize;
+        for &(r, c, v) in &sorted {
+            assert!(r < rows && c < cols, "triplet out of bounds");
+            // close out rows up to r
+            while cur_row < r {
+                indptr[cur_row + 1] = indices.len();
+                cur_row += 1;
+            }
+            // duplicate within this row?
+            if indices.len() > indptr[r] && *indices.last().unwrap() == c {
+                *values.last_mut().unwrap() += v;
+            } else {
+                indices.push(c);
+                values.push(v);
+            }
+        }
+        while cur_row < rows {
+            indptr[cur_row + 1] = indices.len();
+            cur_row += 1;
+        }
+        CsrMatrix { rows, cols, indptr, indices, values }
+    }
+
+    /// Random sparse matrix with exactly `nnz` entries at distinct positions,
+    /// values ~ N(0,1) — the paper's `B_j` generator.
+    pub fn random(rng: &mut Pcg64, rows: usize, cols: usize, nnz: usize) -> Self {
+        assert!(nnz <= rows * cols);
+        // sample distinct flat indices
+        let mut seen = std::collections::HashSet::with_capacity(nnz * 2);
+        let mut triplets = Vec::with_capacity(nnz);
+        while triplets.len() < nnz {
+            let flat = rng.below((rows * cols) as u64) as usize;
+            if seen.insert(flat) {
+                triplets.push((flat / cols, flat % cols, rng.normal()));
+            }
+        }
+        CsrMatrix::from_triplets(rows, cols, &triplets)
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Number of stored non-zeros.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// `y = B x`.
+    pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        for r in 0..self.rows {
+            let mut s = 0.0;
+            for k in self.indptr[r]..self.indptr[r + 1] {
+                s += self.values[k] * x[self.indices[k]];
+            }
+            y[r] = s;
+        }
+    }
+
+    /// `y = Bᵀ x`.
+    pub fn matvec_t_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.rows);
+        assert_eq!(y.len(), self.cols);
+        y.fill(0.0);
+        for r in 0..self.rows {
+            let xr = x[r];
+            if xr == 0.0 {
+                continue;
+            }
+            for k in self.indptr[r]..self.indptr[r + 1] {
+                y[self.indices[k]] += self.values[k] * xr;
+            }
+        }
+    }
+
+    /// Fused `y = Bᵀ(B x)` with caller scratch of length `rows`.
+    pub fn gram_matvec_into(&self, x: &[f64], scratch: &mut [f64], y: &mut [f64]) {
+        self.matvec_into(x, scratch);
+        self.matvec_t_into(scratch, y);
+    }
+
+    /// Dense `BᵀB` (cols × cols) — formed once per worker for the direct
+    /// subproblem factorization.
+    pub fn gram_dense(&self) -> DenseMatrix {
+        let n = self.cols;
+        let mut g = DenseMatrix::zeros(n, n);
+        for r in 0..self.rows {
+            let lo = self.indptr[r];
+            let hi = self.indptr[r + 1];
+            for a in lo..hi {
+                let (ia, va) = (self.indices[a], self.values[a]);
+                for b in lo..hi {
+                    let (ib, vb) = (self.indices[b], self.values[b]);
+                    let cur = g.get(ia, ib);
+                    g.set(ia, ib, cur + va * vb);
+                }
+            }
+        }
+        g
+    }
+
+    /// Densify (tests + PJRT marshalling, where artifacts take dense blocks).
+    pub fn to_dense(&self) -> DenseMatrix {
+        let mut d = DenseMatrix::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            for k in self.indptr[r]..self.indptr[r + 1] {
+                d.set(r, self.indices[k], self.values[k]);
+            }
+        }
+        d
+    }
+
+    /// Quadratic form `xᵀ BᵀB x = ||Bx||²` (sparse-PCA objective term).
+    pub fn quad_form(&self, x: &[f64], scratch: &mut [f64]) -> f64 {
+        self.matvec_into(x, scratch);
+        vecops::nrm2_sq(scratch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn example() -> CsrMatrix {
+        // [[1, 0, 2],
+        //  [0, 0, 0],
+        //  [3, 4, 0]]
+        CsrMatrix::from_triplets(3, 3, &[(0, 0, 1.0), (0, 2, 2.0), (2, 0, 3.0), (2, 1, 4.0)])
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let m = example();
+        let x = vec![1.0, 2.0, 3.0];
+        let mut y = vec![0.0; 3];
+        m.matvec_into(&x, &mut y);
+        assert_eq!(y, vec![7.0, 0.0, 11.0]);
+    }
+
+    #[test]
+    fn matvec_t_matches_dense() {
+        let m = example();
+        let x = vec![1.0, 2.0, 3.0];
+        let mut y = vec![0.0; 3];
+        m.matvec_t_into(&x, &mut y);
+        assert_eq!(y, vec![10.0, 12.0, 2.0]);
+    }
+
+    #[test]
+    fn duplicates_are_summed() {
+        let m = CsrMatrix::from_triplets(1, 1, &[(0, 0, 1.0), (0, 0, 2.5)]);
+        assert_eq!(m.nnz(), 1);
+        let mut y = vec![0.0; 1];
+        m.matvec_into(&[2.0], &mut y);
+        assert_eq!(y, vec![7.0]);
+    }
+
+    #[test]
+    fn random_has_requested_nnz_and_matches_dense_ops() {
+        let mut rng = Pcg64::seed_from_u64(12);
+        let m = CsrMatrix::random(&mut rng, 40, 25, 100);
+        assert_eq!(m.nnz(), 100);
+        let d = m.to_dense();
+        let x: Vec<f64> = (0..25).map(|i| (i as f64).cos()).collect();
+        let mut ys = vec![0.0; 40];
+        m.matvec_into(&x, &mut ys);
+        let yd = d.matvec(&x);
+        for i in 0..40 {
+            assert!((ys[i] - yd[i]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn gram_dense_matches_dense_gram() {
+        let mut rng = Pcg64::seed_from_u64(13);
+        let m = CsrMatrix::random(&mut rng, 30, 12, 60);
+        let g1 = m.gram_dense();
+        let g2 = m.to_dense().gram();
+        assert!(g1.max_abs_diff(&g2) < 1e-10);
+    }
+
+    #[test]
+    fn gram_matvec_consistency() {
+        let mut rng = Pcg64::seed_from_u64(14);
+        let m = CsrMatrix::random(&mut rng, 20, 10, 50);
+        let x: Vec<f64> = (0..10).map(|i| i as f64 * 0.3 - 1.0).collect();
+        let mut scratch = vec![0.0; 20];
+        let mut y = vec![0.0; 10];
+        m.gram_matvec_into(&x, &mut scratch, &mut y);
+        let g = m.gram_dense();
+        let yd = g.matvec(&x);
+        for i in 0..10 {
+            assert!((y[i] - yd[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn quad_form_is_norm_of_bx() {
+        let m = example();
+        let x = vec![1.0, 1.0, 1.0];
+        let mut scratch = vec![0.0; 3];
+        let q = m.quad_form(&x, &mut scratch);
+        // Bx = [3, 0, 7] → 9 + 49 = 58
+        assert!((q - 58.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_rows_are_fine() {
+        let m = CsrMatrix::from_triplets(4, 2, &[(3, 1, 5.0)]);
+        let mut y = vec![0.0; 4];
+        m.matvec_into(&[1.0, 2.0], &mut y);
+        assert_eq!(y, vec![0.0, 0.0, 0.0, 10.0]);
+    }
+}

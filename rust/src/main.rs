@@ -1,0 +1,190 @@
+//! `ad-admm` — CLI launcher for the AD-ADMM system.
+//!
+//! Subcommands:
+//!   solve    run a solver on a synthetic workload (problem/algorithm/params via flags)
+//!   cluster  run the threaded star cluster (async vs sync wall-clock comparison)
+//!   params   print the Theorem-1 parameter rules for given L, τ, N, S
+//!   artifacts  list the AOT artifacts visible to the runtime
+//!
+//! Examples:
+//!   ad-admm solve --problem lasso --workers 16 --m 200 --n 100 --rho 500 --tau 10 --iters 500
+//!   ad-admm cluster --workers 8 --tau 8 --slow-ms 4 --iters 200
+//!   ad-admm params --lipschitz 10 --tau 5 --workers 16
+
+use ad_admm::admm::arrivals::ArrivalModel;
+use ad_admm::admm::kkt::kkt_residual;
+use ad_admm::admm::master_pov::run_master_pov;
+use ad_admm::admm::params::{gamma_lower_bound, rho_lower_bound_convex, rho_lower_bound_nonconvex};
+use ad_admm::admm::sync::run_sync_admm;
+use ad_admm::admm::AdmmConfig;
+use ad_admm::cluster::{ClusterConfig, DelayModel, Protocol, StarCluster};
+use ad_admm::data::{LassoInstance, LogisticInstance, SparsePcaInstance};
+use ad_admm::rng::Pcg64;
+use ad_admm::util::cli::ArgParser;
+
+fn main() {
+    let args = ArgParser::from_env(&["help", "sync", "alt"]);
+    let cmd = args.positional().first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "solve" => cmd_solve(&args),
+        "cluster" => cmd_cluster(&args),
+        "params" => cmd_params(&args),
+        "artifacts" => cmd_artifacts(),
+        _ => print_help(),
+    }
+}
+
+fn print_help() {
+    println!(
+        "ad-admm — Asynchronous Distributed ADMM (Chang et al., Part I)\n\n\
+         USAGE: ad-admm <solve|cluster|params|artifacts> [--flags]\n\n\
+         solve   --problem lasso|spca|logistic --workers N --m M --n N --rho R --tau T\n\
+                 --gamma G --min-arrivals A --iters K --theta TH --seed S [--sync] [--alt]\n\
+         cluster --workers N --m M --n N --rho R --tau T --iters K --fast-ms F --slow-ms S\n\
+         params  --lipschitz L --tau T --workers N --s S --rho R\n\
+         artifacts"
+    );
+}
+
+fn admm_config(args: &ArgParser) -> AdmmConfig {
+    AdmmConfig {
+        rho: args.get_parse_or("rho", 500.0),
+        gamma: args.get_parse_or("gamma", 0.0),
+        tau: args.get_parse_or("tau", 10),
+        min_arrivals: args.get_parse_or("min-arrivals", 1),
+        max_iters: args.get_parse_or("iters", 500),
+        x0_tol: args.get_parse_or("tol", 0.0),
+        ..Default::default()
+    }
+}
+
+fn cmd_solve(args: &ArgParser) {
+    let problem_kind = args.get_or("problem", "lasso");
+    let n_workers: usize = args.get_parse_or("workers", 16);
+    let m: usize = args.get_parse_or("m", 200);
+    let n: usize = args.get_parse_or("n", 100);
+    let theta: f64 = args.get_parse_or("theta", 0.1);
+    let seed: u64 = args.get_parse_or("seed", 1);
+    let cfg = admm_config(args);
+    let mut rng = Pcg64::seed_from_u64(seed);
+
+    let problem = match problem_kind.as_str() {
+        "lasso" => LassoInstance::synthetic(&mut rng, n_workers, m, n, 0.05, theta).problem(),
+        "spca" => {
+            let inst = SparsePcaInstance::synthetic(&mut rng, n_workers, m, n, (m * n / 100).max(1), theta);
+            inst.problem()
+        }
+        "logistic" => LogisticInstance::synthetic(&mut rng, n_workers, m, n, theta).problem(),
+        other => {
+            eprintln!("unknown problem {other:?}");
+            std::process::exit(2);
+        }
+    };
+
+    println!(
+        "problem={problem_kind} N={n_workers} m={m} n={n} rho={} gamma={} tau={} A={} iters={}",
+        cfg.rho, cfg.gamma, cfg.tau, cfg.min_arrivals, cfg.max_iters
+    );
+
+    if args.has_flag("sync") {
+        let out = run_sync_admm(&problem, &cfg);
+        report("sync (Algorithm 1)", &problem, &out.state, &out.history);
+    } else if args.has_flag("alt") {
+        let arr = ArrivalModel::fig4_profile(n_workers, seed);
+        let out = ad_admm::admm::alt_scheme::run_alt_scheme(&problem, &cfg, &arr);
+        report("alt scheme (Algorithm 4)", &problem, &out.state, &out.history);
+        if out.diverged() {
+            println!("NOTE: diverged — exactly the Section IV caution for large rho + delay");
+        }
+    } else {
+        let arr = ArrivalModel::fig4_profile(n_workers, seed);
+        let out = run_master_pov(&problem, &cfg, &arr);
+        report("AD-ADMM (Algorithm 2)", &problem, &out.state, &out.history);
+    }
+}
+
+fn report(
+    label: &str,
+    problem: &ad_admm::problems::ConsensusProblem,
+    state: &ad_admm::admm::AdmmState,
+    history: &[ad_admm::admm::IterRecord],
+) {
+    let last = history.last().expect("no iterations");
+    let kkt = kkt_residual(problem, state);
+    println!("--- {label} ---");
+    println!("iterations         {}", history.len());
+    println!("objective          {:.8e}", last.objective);
+    println!("aug. Lagrangian    {:.8e}", last.aug_lagrangian);
+    println!("consensus residual {:.3e}", last.consensus);
+    println!("KKT residual       dual={:.3e} stat={:.3e} cons={:.3e}", kkt.dual, kkt.stationarity, kkt.consensus);
+}
+
+fn cmd_cluster(args: &ArgParser) {
+    let n_workers: usize = args.get_parse_or("workers", 8);
+    let m: usize = args.get_parse_or("m", 100);
+    let n: usize = args.get_parse_or("n", 50);
+    let seed: u64 = args.get_parse_or("seed", 1);
+    let fast_ms: f64 = args.get_parse_or("fast-ms", 0.5);
+    let slow_ms: f64 = args.get_parse_or("slow-ms", 4.0);
+    let cfg = admm_config(args);
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let inst = LassoInstance::synthetic(&mut rng, n_workers, m, n, 0.05, 0.1);
+    let problem = inst.problem();
+    let delays = DelayModel::linear_spread(n_workers, fast_ms, slow_ms, 0.3, seed);
+
+    // Sync baseline: τ=1, A=N.
+    let sync_cfg = ClusterConfig {
+        admm: AdmmConfig { tau: 1, min_arrivals: n_workers, ..cfg.clone() },
+        protocol: Protocol::AdAdmm,
+        delays: delays.clone(),
+        faults: None,
+    };
+    let sync = StarCluster::new(problem.clone()).run(&sync_cfg);
+    // Async per the flags.
+    let async_cfg = ClusterConfig { admm: cfg, protocol: Protocol::AdAdmm, delays, faults: None };
+    let asyn = StarCluster::new(problem.clone()).run(&async_cfg);
+
+    println!("--- threaded star cluster (N={n_workers}, delays {fast_ms}–{slow_ms} ms) ---");
+    for (label, r) in [("sync  (tau=1, A=N)", &sync), ("async (per flags) ", &asyn)] {
+        println!(
+            "{label}: {:4} iters in {:.3}s  ({:.1} iters/s)  obj={:.6e}  master-wait={:.3}s",
+            r.history.len(),
+            r.wall_clock_s,
+            r.iters_per_sec(),
+            r.history.last().unwrap().objective,
+            r.master_wait_s,
+        );
+    }
+    println!(
+        "async speedup (iters/s): {:.2}x",
+        asyn.iters_per_sec() / sync.iters_per_sec().max(1e-12)
+    );
+}
+
+fn cmd_params(args: &ArgParser) {
+    let l: f64 = args.get_parse_or("lipschitz", 1.0);
+    let tau: usize = args.get_parse_or("tau", 10);
+    let n_workers: usize = args.get_parse_or("workers", 16);
+    let s: f64 = args.get_parse_or("s", n_workers as f64);
+    let rho_nc = rho_lower_bound_nonconvex(l);
+    let rho_c = rho_lower_bound_convex(l);
+    let rho: f64 = args.get_parse_or("rho", rho_nc);
+    println!("Theorem-1 parameter rules (L={l}, tau={tau}, N={n_workers}, S={s})");
+    println!("  rho  > {rho_nc:.6} (non-convex, eq. 16)");
+    println!("  rho >= {rho_c:.6} (convex, eq. 18)");
+    println!("  gamma > {:.6} (eq. 17 at rho={rho})", gamma_lower_bound(s, rho, tau, n_workers));
+}
+
+fn cmd_artifacts() {
+    let dir = ad_admm::runtime::artifacts_dir();
+    match ad_admm::runtime::ArtifactRegistry::load(&dir) {
+        Ok(reg) => {
+            println!("artifacts dir: {}", dir.display());
+            for name in reg.names() {
+                let e = reg.get(name).unwrap();
+                println!("  {name}  kind={} file={}", e.kind, e.file);
+            }
+        }
+        Err(e) => println!("no artifacts: {e}"),
+    }
+}

@@ -1,0 +1,136 @@
+//! Run-level metrics: the paper's accuracy definitions, convergence-rate
+//! estimation and CSV logging.
+
+pub mod rate;
+
+use std::path::Path;
+
+use crate::admm::IterRecord;
+use crate::util::csv::CsvWriter;
+
+/// The paper's accuracy metric ((51)/(53)):
+/// `accuracy(k) = |L_ρ(xᵏ, x₀ᵏ, λᵏ) − F_ref| / |F_ref|`,
+/// where `F_ref` is `F̂` (long synchronous run, Fig. 3) or `F*` (optimal
+/// objective, Fig. 4).
+pub fn accuracy_series(history: &[IterRecord], f_ref: f64) -> Vec<f64> {
+    let denom = f_ref.abs().max(f64::MIN_POSITIVE);
+    history
+        .iter()
+        .map(|r| {
+            if r.aug_lagrangian.is_finite() {
+                (r.aug_lagrangian - f_ref).abs() / denom
+            } else {
+                f64::INFINITY
+            }
+        })
+        .collect()
+}
+
+/// A named convergence curve (one line of a paper figure).
+pub struct RunLog {
+    pub label: String,
+    pub history: Vec<IterRecord>,
+}
+
+impl RunLog {
+    pub fn new(label: impl Into<String>, history: Vec<IterRecord>) -> Self {
+        RunLog { label: label.into(), history }
+    }
+
+    /// First iteration index reaching the target accuracy (None = never) —
+    /// the "iterations to ε" summary used in bench output tables.
+    pub fn iters_to_accuracy(&self, f_ref: f64, eps: f64) -> Option<usize> {
+        accuracy_series(&self.history, f_ref)
+            .iter()
+            .position(|&a| a <= eps)
+    }
+
+    /// Final accuracy value.
+    pub fn final_accuracy(&self, f_ref: f64) -> f64 {
+        accuracy_series(&self.history, f_ref).last().copied().unwrap_or(f64::INFINITY)
+    }
+}
+
+/// Write several curves as one long-format CSV:
+/// `label,k,accuracy,objective,aug_lagrangian,consensus`.
+pub fn write_curves(path: &Path, curves: &[RunLog], f_ref: f64) -> std::io::Result<()> {
+    let mut w = CsvWriter::create(
+        path,
+        &["label", "k", "accuracy", "objective", "aug_lagrangian", "consensus"],
+    )?;
+    for c in curves {
+        let acc = accuracy_series(&c.history, f_ref);
+        for (r, a) in c.history.iter().zip(acc) {
+            w.row_str(&[
+                c.label.clone(),
+                r.k.to_string(),
+                fmt(a),
+                fmt(r.objective),
+                fmt(r.aug_lagrangian),
+                fmt(r.consensus),
+            ])?;
+        }
+    }
+    w.flush()
+}
+
+fn fmt(v: f64) -> String {
+    if v.is_nan() {
+        "nan".into()
+    } else if v.is_infinite() {
+        "inf".into()
+    } else {
+        format!("{v:.8e}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(k: usize, aug: f64) -> IterRecord {
+        IterRecord {
+            k,
+            objective: aug,
+            aug_lagrangian: aug,
+            consensus: 0.0,
+            x0_change: 0.0,
+            arrivals: 1,
+        }
+    }
+
+    #[test]
+    fn accuracy_matches_definition() {
+        let h = vec![rec(0, 20.0), rec(1, 11.0), rec(2, 10.0)];
+        let acc = accuracy_series(&h, 10.0);
+        assert!((acc[0] - 1.0).abs() < 1e-12);
+        assert!((acc[1] - 0.1).abs() < 1e-12);
+        assert!(acc[2] < 1e-12);
+    }
+
+    #[test]
+    fn infinite_aug_maps_to_infinite_accuracy() {
+        let h = vec![rec(0, f64::INFINITY)];
+        assert!(accuracy_series(&h, 5.0)[0].is_infinite());
+    }
+
+    #[test]
+    fn iters_to_accuracy() {
+        let log = RunLog::new("x", vec![rec(0, 20.0), rec(1, 10.5), rec(2, 10.01)]);
+        assert_eq!(log.iters_to_accuracy(10.0, 0.1), Some(1));
+        assert_eq!(log.iters_to_accuracy(10.0, 1e-4), None);
+        assert!((log.final_accuracy(10.0) - 0.001).abs() < 1e-9);
+    }
+
+    #[test]
+    fn csv_round_trip() {
+        let dir = std::env::temp_dir().join("ad_admm_metrics_test");
+        let path = dir.join("curves.csv");
+        let logs = vec![RunLog::new("tau=1", vec![rec(0, 12.0), rec(1, 10.0)])];
+        write_curves(&path, &logs, 10.0).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.lines().count() == 3);
+        assert!(text.contains("tau=1,0,"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,141 @@
+//! Convergence-rate estimation — the Part-II preview.
+//!
+//! The companion paper (Part II) analyzes *linear* convergence of the
+//! AD-ADMM under error-bound conditions. This module fits the observed
+//! accuracy sequence to `acc(k) ≈ C·rᵏ` (log-linear least squares) and
+//! classifies the empirical regime, so the benches can report "linear with
+//! rate r" next to each curve.
+
+/// Result of fitting `log acc(k) = log C + k·log r` on the tail.
+#[derive(Clone, Debug)]
+pub struct RateFit {
+    /// Per-iteration contraction factor `r` (1.0 ⇒ no progress).
+    pub rate: f64,
+    /// `C` in `acc(k) ≈ C·rᵏ`.
+    pub constant: f64,
+    /// R² of the log-linear fit (≥ ~0.95 ⇒ convincingly linear).
+    pub r_squared: f64,
+    /// Points used.
+    pub points: usize,
+}
+
+impl RateFit {
+    /// Convincing linear convergence?
+    pub fn is_linear(&self) -> bool {
+        self.points >= 8 && self.rate < 0.9999 && self.r_squared > 0.9
+    }
+
+    /// Iterations needed to gain one decimal digit at this rate.
+    pub fn iters_per_digit(&self) -> f64 {
+        if self.rate <= 0.0 || self.rate >= 1.0 {
+            return f64::INFINITY;
+        }
+        -1.0 / self.rate.log10()
+    }
+}
+
+/// Fit the last `tail_frac` of the positive, finite accuracy values.
+/// Returns `None` when fewer than 4 usable points exist.
+pub fn fit_linear_rate(acc: &[f64], tail_frac: f64) -> Option<RateFit> {
+    assert!((0.0..=1.0).contains(&tail_frac));
+    let start = ((acc.len() as f64) * (1.0 - tail_frac)) as usize;
+    // Stop at machine-precision floor: below ~1e-15 the series is noise.
+    let pts: Vec<(f64, f64)> = acc
+        .iter()
+        .enumerate()
+        .skip(start)
+        .filter(|(_, &a)| a.is_finite() && a > 1e-15)
+        .map(|(k, &a)| (k as f64, a.ln()))
+        .collect();
+    if pts.len() < 4 {
+        return None;
+    }
+    let n = pts.len() as f64;
+    let sx: f64 = pts.iter().map(|p| p.0).sum();
+    let sy: f64 = pts.iter().map(|p| p.1).sum();
+    let sxx: f64 = pts.iter().map(|p| p.0 * p.0).sum();
+    let sxy: f64 = pts.iter().map(|p| p.0 * p.1).sum();
+    let denom = n * sxx - sx * sx;
+    if denom.abs() < 1e-12 {
+        return None;
+    }
+    let slope = (n * sxy - sx * sy) / denom;
+    let intercept = (sy - slope * sx) / n;
+    // R²
+    let mean_y = sy / n;
+    let ss_tot: f64 = pts.iter().map(|p| (p.1 - mean_y).powi(2)).sum();
+    let ss_res: f64 = pts
+        .iter()
+        .map(|p| (p.1 - (intercept + slope * p.0)).powi(2))
+        .sum();
+    let r_squared = if ss_tot > 1e-12 { 1.0 - ss_res / ss_tot } else { 1.0 };
+    Some(RateFit {
+        rate: slope.exp(),
+        constant: intercept.exp(),
+        r_squared,
+        points: pts.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recovers_exact_geometric_decay() {
+        let r: f64 = 0.93;
+        let acc: Vec<f64> = (0..200).map(|k| 5.0 * r.powi(k)).collect();
+        let fit = fit_linear_rate(&acc, 0.8).unwrap();
+        assert!((fit.rate - r).abs() < 1e-6, "rate={}", fit.rate);
+        assert!((fit.constant - 5.0).abs() < 1e-3);
+        assert!(fit.r_squared > 0.999999);
+        assert!(fit.is_linear());
+    }
+
+    #[test]
+    fn sublinear_decay_is_not_classified_linear() {
+        // 1/k decay: log acc vs k is strongly curved → low R² on a long tail
+        let acc: Vec<f64> = (1..400).map(|k| 1.0 / k as f64).collect();
+        let fit = fit_linear_rate(&acc, 1.0).unwrap();
+        assert!(fit.r_squared < 0.95, "r2={}", fit.r_squared);
+    }
+
+    #[test]
+    fn too_few_points_is_none() {
+        assert!(fit_linear_rate(&[1.0, 0.5], 1.0).is_none());
+        let diverged = vec![f64::INFINITY; 50];
+        assert!(fit_linear_rate(&diverged, 1.0).is_none());
+    }
+
+    #[test]
+    fn iters_per_digit() {
+        let fit = RateFit { rate: 0.1, constant: 1.0, r_squared: 1.0, points: 10 };
+        assert!((fit.iters_per_digit() - 1.0).abs() < 1e-12);
+        let stalled = RateFit { rate: 1.0, constant: 1.0, r_squared: 1.0, points: 10 };
+        assert!(stalled.iters_per_digit().is_infinite());
+    }
+
+    #[test]
+    fn admm_on_lasso_shows_linear_rate() {
+        // End-to-end: the paper's observation that AD-ADMM "may exhibit
+        // linear convergence for some structured instances".
+        use crate::admm::sync::run_sync_admm;
+        use crate::admm::AdmmConfig;
+        use crate::data::LassoInstance;
+        use crate::metrics::accuracy_series;
+        use crate::rng::Pcg64;
+        use crate::solvers::fista::fista_lasso;
+
+        let mut rng = Pcg64::seed_from_u64(500);
+        let inst = LassoInstance::synthetic(&mut rng, 4, 30, 10, 0.2, 0.1);
+        let (_, f_star) = fista_lasso(&inst, 40_000);
+        let p = inst.problem();
+        let cfg = AdmmConfig { rho: 50.0, max_iters: 80, ..Default::default() };
+        let out = run_sync_admm(&p, &cfg);
+        let acc = accuracy_series(&out.history, f_star);
+        // fit the whole run; the floor filter drops machine-precision tail
+        let fit = fit_linear_rate(&acc, 1.0).expect("fit");
+        assert!(fit.is_linear(), "{fit:?}");
+        assert!(fit.rate < 0.99);
+    }
+}

@@ -1,0 +1,110 @@
+//! ρ-keyed factorization cache shared by the local costs.
+//!
+//! A worker's subproblem matrix depends only on its (fixed) data block and
+//! `ρ`, so each local cost factors once per `ρ` and backsolves thereafter.
+//! The cache is a single slot (runs use one `ρ`); changing `ρ` mid-run
+//! simply refactors.
+
+use std::sync::{Arc, RwLock};
+
+use crate::linalg::cholesky::Cholesky;
+use crate::linalg::dense::DenseMatrix;
+use crate::linalg::lu::Lu;
+
+/// A direct factorization of the subproblem system matrix.
+pub enum Factor {
+    /// SPD path (LASSO/ridge always; sparse-PCA when `ρ > 2λmax`).
+    Chol(Cholesky),
+    /// Indefinite fallback (sparse-PCA divergence regime still has to run).
+    Lu(Lu),
+}
+
+impl Factor {
+    /// Factor `m`, preferring Cholesky, falling back to LU.
+    pub fn of(m: &DenseMatrix) -> Factor {
+        match Cholesky::factor(m) {
+            Ok(c) => Factor::Chol(c),
+            Err(_) => Factor::Lu(Lu::factor(m).expect("subproblem matrix singular")),
+        }
+    }
+
+    pub fn solve_in_place(&self, x: &mut [f64]) {
+        match self {
+            Factor::Chol(c) => c.solve_in_place(x),
+            Factor::Lu(lu) => {
+                let sol = lu.solve(x);
+                x.copy_from_slice(&sol);
+            }
+        }
+    }
+}
+
+/// Single-slot `ρ → Factor` cache, thread-safe (workers run on threads).
+pub struct RhoCache {
+    slot: RwLock<Option<(u64, Arc<Factor>)>>,
+}
+
+impl RhoCache {
+    pub fn new() -> Self {
+        RhoCache { slot: RwLock::new(None) }
+    }
+
+    /// Get the factor for `rho`, building it with `build` on miss.
+    pub fn get_or_build<F: FnOnce() -> Factor>(&self, rho: f64, build: F) -> Arc<Factor> {
+        let key = rho.to_bits();
+        if let Some((k, f)) = self.slot.read().unwrap().as_ref() {
+            if *k == key {
+                return f.clone();
+            }
+        }
+        let f = Arc::new(build());
+        *self.slot.write().unwrap() = Some((key, f.clone()));
+        f
+    }
+}
+
+impl Default for RhoCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn caches_per_rho_and_invalidates() {
+        let cache = RhoCache::new();
+        let mut builds = 0;
+        let m = {
+            let mut m = DenseMatrix::eye(3);
+            m.add_diag(1.0);
+            m
+        };
+        for _ in 0..3 {
+            let _ = cache.get_or_build(2.0, || {
+                builds += 1;
+                Factor::of(&m)
+            });
+        }
+        assert_eq!(builds, 1);
+        let _ = cache.get_or_build(3.0, || {
+            builds += 1;
+            Factor::of(&m)
+        });
+        assert_eq!(builds, 2);
+    }
+
+    #[test]
+    fn factor_prefers_cholesky_falls_back_to_lu() {
+        let spd = DenseMatrix::from_rows(&[&[2.0, 0.0], &[0.0, 2.0]]);
+        assert!(matches!(Factor::of(&spd), Factor::Chol(_)));
+        let indef = DenseMatrix::from_rows(&[&[1.0, 0.0], &[0.0, -1.0]]);
+        let f = Factor::of(&indef);
+        assert!(matches!(f, Factor::Lu(_)));
+        let mut x = vec![1.0, 2.0];
+        f.solve_in_place(&mut x);
+        assert_eq!(x, vec![1.0, -2.0]);
+    }
+}

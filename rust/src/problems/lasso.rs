@@ -1,0 +1,172 @@
+//! LASSO local cost: `f_i(w) = ‖A_i w − b_i‖²` (paper eq. (52), no ½).
+//!
+//! Subproblem (13): `argmin ‖Aw−b‖² + wᵀλ + ρ/2‖w−x₀‖²`
+//! ⇔ `(2AᵀA + ρI) w = 2Aᵀb − λ + ρ x₀` — SPD for any ρ > 0, solved by a
+//! cached Cholesky backsolve.
+
+use super::cache::{Factor, RhoCache};
+use super::LocalCost;
+use crate::linalg::dense::DenseMatrix;
+use crate::linalg::power::power_iteration;
+use crate::linalg::vecops;
+
+pub struct LassoLocal {
+    a: DenseMatrix,
+    b: Vec<f64>,
+    /// Gram `AᵀA`, formed once.
+    gram: DenseMatrix,
+    /// `2 Aᵀ b`, formed once.
+    two_atb: Vec<f64>,
+    /// `2 λmax(AᵀA)` (Lipschitz constant of ∇f).
+    lip: f64,
+    cache: RhoCache,
+}
+
+impl LassoLocal {
+    pub fn new(a: DenseMatrix, b: Vec<f64>) -> Self {
+        assert_eq!(a.rows(), b.len(), "rows(A) != len(b)");
+        let gram = a.gram();
+        let mut two_atb = a.matvec_t(&b);
+        vecops::scale(2.0, &mut two_atb);
+        let n = a.cols();
+        let (lam_max, _) =
+            power_iteration(|v, out| gram.matvec_into(v, out), n, 300, 1e-9, 0x1a550);
+        LassoLocal { a, b, gram, two_atb, lip: 2.0 * lam_max.max(0.0), cache: RhoCache::new() }
+    }
+
+    pub fn matrix(&self) -> &DenseMatrix {
+        &self.a
+    }
+
+    pub fn rhs(&self) -> &[f64] {
+        &self.b
+    }
+
+    /// Samples held by this worker.
+    pub fn num_samples(&self) -> usize {
+        self.a.rows()
+    }
+}
+
+impl LocalCost for LassoLocal {
+    fn dim(&self) -> usize {
+        self.a.cols()
+    }
+
+    fn eval(&self, x: &[f64]) -> f64 {
+        let mut r = self.a.matvec(x);
+        for (ri, bi) in r.iter_mut().zip(&self.b) {
+            *ri -= bi;
+        }
+        vecops::nrm2_sq(&r)
+    }
+
+    fn grad_into(&self, x: &[f64], out: &mut [f64]) {
+        // ∇f = 2AᵀA x − 2Aᵀb
+        self.gram.matvec_into(x, out);
+        for (o, t) in out.iter_mut().zip(&self.two_atb) {
+            *o = 2.0 * *o - t;
+        }
+    }
+
+    fn lipschitz(&self) -> f64 {
+        self.lip
+    }
+
+    fn solve_subproblem(&self, lam: &[f64], x0: &[f64], rho: f64, out: &mut [f64]) {
+        let n = self.dim();
+        debug_assert_eq!(lam.len(), n);
+        debug_assert_eq!(x0.len(), n);
+        debug_assert_eq!(out.len(), n);
+        let factor = self.cache.get_or_build(rho, || {
+            let mut m = self.gram.clone();
+            m.scale(2.0);
+            m.add_diag(rho);
+            Factor::of(&m)
+        });
+        // rhs = 2Aᵀb − λ + ρ x₀
+        for i in 0..n {
+            out[i] = self.two_atb[i] - lam[i] + rho * x0[i];
+        }
+        factor.solve_in_place(out);
+    }
+
+    fn kind(&self) -> &'static str {
+        "lasso"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::tests::{check_grad, check_subproblem};
+    use crate::rng::Pcg64;
+
+    fn inst(seed: u64, m: usize, n: usize) -> LassoLocal {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let a = DenseMatrix::randn(&mut rng, m, n);
+        let b: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        LassoLocal::new(a, b)
+    }
+
+    #[test]
+    fn eval_known() {
+        let a = DenseMatrix::from_rows(&[&[1.0, 0.0], &[0.0, 2.0]]);
+        let l = LassoLocal::new(a, vec![1.0, 0.0]);
+        // f([1, 1]) = 0 + 4 = 4
+        assert!((l.eval(&[1.0, 1.0]) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let l = inst(21, 15, 8);
+        let x: Vec<f64> = (0..8).map(|i| 0.3 * (i as f64).sin()).collect();
+        check_grad(&l, &x, 1e-5);
+    }
+
+    #[test]
+    fn subproblem_stationarity() {
+        let l = inst(22, 20, 10);
+        check_subproblem(&l, 5.0, 1e-8);
+        check_subproblem(&l, 500.0, 1e-8);
+    }
+
+    #[test]
+    fn lipschitz_bounds_gradient_difference() {
+        let l = inst(23, 12, 6);
+        let mut rng = Pcg64::seed_from_u64(99);
+        for _ in 0..20 {
+            let x: Vec<f64> = (0..6).map(|_| rng.normal()).collect();
+            let y: Vec<f64> = (0..6).map(|_| rng.normal()).collect();
+            let mut gx = vec![0.0; 6];
+            let mut gy = vec![0.0; 6];
+            l.grad_into(&x, &mut gx);
+            l.grad_into(&y, &mut gy);
+            let lhs = vecops::dist2(&gx, &gy);
+            let rhs = l.lipschitz() * vecops::dist2(&x, &y);
+            assert!(lhs <= rhs * (1.0 + 1e-6), "lhs={lhs} rhs={rhs}");
+        }
+    }
+
+    #[test]
+    fn underdetermined_block_works() {
+        // The Fig. 4(c,d) regime: n >> m, f_i not strongly convex.
+        let l = inst(24, 20, 100);
+        check_subproblem(&l, 500.0, 1e-7);
+    }
+
+    #[test]
+    fn fixed_point_when_lam_matches_gradient() {
+        // If λ = −∇f(x0), the subproblem solution is x0 itself.
+        let l = inst(25, 10, 5);
+        let x0: Vec<f64> = (0..5).map(|i| 0.1 * i as f64).collect();
+        let mut lam = vec![0.0; 5];
+        l.grad_into(&x0, &mut lam);
+        for v in lam.iter_mut() {
+            *v = -*v;
+        }
+        let mut out = vec![0.0; 5];
+        l.solve_subproblem(&lam, &x0, 10.0, &mut out);
+        assert!(vecops::dist2(&out, &x0) < 1e-9);
+    }
+}

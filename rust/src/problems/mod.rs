@@ -1,0 +1,170 @@
+//! Problem definitions: the consensus form (4) and its local costs `f_i`.
+//!
+//! A [`ConsensusProblem`] is `min Σ f_i(x_i) + h(x₀)  s.t. x_i = x₀`; each
+//! `f_i` is a [`LocalCost`] living on one worker. Every local cost knows how
+//! to solve its own ADMM subproblem (13)/(19)
+//! `argmin f_i(x) + xᵀλ + ρ/2‖x − x₀‖²` — in closed form through a cached
+//! factorization where possible — because that solve *is* the worker's whole
+//! job in Algorithm 2.
+
+pub mod cache;
+pub mod lasso;
+pub mod logistic;
+pub mod quadratic;
+pub mod ridge;
+pub mod spca;
+pub mod svm;
+
+pub use lasso::LassoLocal;
+pub use logistic::LogisticLocal;
+pub use quadratic::QuadraticLocal;
+pub use ridge::RidgeLocal;
+pub use spca::SpcaLocal;
+pub use svm::SvmLocal;
+
+use crate::prox::Regularizer;
+use std::sync::Arc;
+
+/// One worker's smooth cost `f_i` (Assumption 2: twice differentiable with
+/// `L`-Lipschitz gradient; convexity **not** required).
+pub trait LocalCost: Send + Sync {
+    /// Dimension `n` of the shared variable.
+    fn dim(&self) -> usize;
+
+    /// `f_i(x)`.
+    fn eval(&self, x: &[f64]) -> f64;
+
+    /// `∇f_i(x)` into `out`.
+    fn grad_into(&self, x: &[f64], out: &mut [f64]);
+
+    /// A Lipschitz constant of `∇f_i` (used by the Theorem-1 rules).
+    fn lipschitz(&self) -> f64;
+
+    /// Solve the worker subproblem
+    /// `out = argmin_x f_i(x) + xᵀλ + ρ/2‖x − x₀‖²` (eq. (13)).
+    ///
+    /// Implementations cache any `ρ`-dependent factorization internally, so
+    /// repeated calls at the same `ρ` are cheap (the per-iteration path).
+    fn solve_subproblem(&self, lam: &[f64], x0: &[f64], rho: f64, out: &mut [f64]);
+
+    /// Human-readable kind tag (artifact lookup + logs).
+    fn kind(&self) -> &'static str;
+}
+
+/// The consensus problem (4): `N` local costs plus the shared regularizer.
+#[derive(Clone)]
+pub struct ConsensusProblem {
+    locals: Vec<Arc<dyn LocalCost>>,
+    reg: Regularizer,
+}
+
+impl ConsensusProblem {
+    pub fn new(locals: Vec<Arc<dyn LocalCost>>, reg: Regularizer) -> Self {
+        assert!(!locals.is_empty(), "need at least one worker");
+        let n = locals[0].dim();
+        assert!(locals.iter().all(|l| l.dim() == n), "all locals must share dim");
+        ConsensusProblem { locals, reg }
+    }
+
+    /// Number of workers `N`.
+    pub fn num_workers(&self) -> usize {
+        self.locals.len()
+    }
+
+    /// Shared dimension `n`.
+    pub fn dim(&self) -> usize {
+        self.locals[0].dim()
+    }
+
+    pub fn local(&self, i: usize) -> &Arc<dyn LocalCost> {
+        &self.locals[i]
+    }
+
+    pub fn locals(&self) -> &[Arc<dyn LocalCost>] {
+        &self.locals
+    }
+
+    pub fn regularizer(&self) -> &Regularizer {
+        &self.reg
+    }
+
+    /// The original objective (1) at a consensus point: `Σ f_i(x) + h(x)`.
+    pub fn objective(&self, x: &[f64]) -> f64 {
+        self.locals.iter().map(|l| l.eval(x)).sum::<f64>() + self.reg.eval(x)
+    }
+
+    /// Max Lipschitz constant over workers (the `L` of Assumption 2).
+    pub fn lipschitz(&self) -> f64 {
+        self.locals.iter().map(|l| l.lipschitz()).fold(0.0, f64::max)
+    }
+
+    /// Full gradient `Σ ∇f_i(x)` (for centralized baselines).
+    pub fn full_grad_into(&self, x: &[f64], out: &mut [f64]) {
+        out.fill(0.0);
+        let mut tmp = vec![0.0; x.len()];
+        for l in &self.locals {
+            l.grad_into(x, &mut tmp);
+            for (o, t) in out.iter_mut().zip(&tmp) {
+                *o += t;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::vecops;
+
+    /// Finite-difference check utility shared by the per-problem test files.
+    pub(crate) fn check_grad(cost: &dyn LocalCost, x: &[f64], tol: f64) {
+        let n = x.len();
+        let mut g = vec![0.0; n];
+        cost.grad_into(x, &mut g);
+        let h = 1e-6;
+        for j in 0..n {
+            let mut xp = x.to_vec();
+            let mut xm = x.to_vec();
+            xp[j] += h;
+            xm[j] -= h;
+            let fd = (cost.eval(&xp) - cost.eval(&xm)) / (2.0 * h);
+            assert!(
+                (fd - g[j]).abs() <= tol * (1.0 + fd.abs()),
+                "grad[{j}]={} fd={fd}",
+                g[j]
+            );
+        }
+    }
+
+    /// Subproblem optimality check: ∇f(x*) + λ + ρ(x* − x0) ≈ 0  (eq. (28)).
+    pub(crate) fn check_subproblem(cost: &dyn LocalCost, rho: f64, tol: f64) {
+        let n = cost.dim();
+        let lam: Vec<f64> = (0..n).map(|i| (i as f64 * 0.37).sin()).collect();
+        let x0: Vec<f64> = (0..n).map(|i| (i as f64 * 0.11).cos()).collect();
+        let mut x = vec![0.0; n];
+        cost.solve_subproblem(&lam, &x0, rho, &mut x);
+        let mut g = vec![0.0; n];
+        cost.grad_into(&x, &mut g);
+        for i in 0..n {
+            g[i] += lam[i] + rho * (x[i] - x0[i]);
+        }
+        let r = vecops::nrm2(&g);
+        assert!(r < tol, "stationarity residual {r}");
+    }
+
+    #[test]
+    fn consensus_objective_sums() {
+        use crate::linalg::DenseMatrix;
+        let a = DenseMatrix::from_rows(&[&[1.0, 0.0], &[0.0, 1.0]]);
+        let l1 = Arc::new(LassoLocal::new(a.clone(), vec![1.0, 2.0]));
+        let l2 = Arc::new(LassoLocal::new(a, vec![0.0, 0.0]));
+        let p = ConsensusProblem::new(
+            vec![l1, l2],
+            Regularizer::L1 { theta: 1.0 },
+        );
+        // f1([0,0]) = 1+4 = 5, f2 = 0, h = 0 → 5
+        assert!((p.objective(&[0.0, 0.0]) - 5.0).abs() < 1e-12);
+        assert_eq!(p.num_workers(), 2);
+        assert_eq!(p.dim(), 2);
+    }
+}

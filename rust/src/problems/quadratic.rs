@@ -1,0 +1,141 @@
+//! Generic quadratic local cost `f(x) = ½ xᵀQx + qᵀx` (Q symmetric, not
+//! necessarily PSD). The workhorse of unit/property tests: every identity in
+//! the convergence analysis can be checked exactly against it.
+
+use super::cache::{Factor, RhoCache};
+use super::LocalCost;
+use crate::linalg::dense::DenseMatrix;
+use crate::linalg::power::power_iteration;
+use crate::linalg::vecops;
+
+pub struct QuadraticLocal {
+    q_mat: DenseMatrix,
+    q_vec: Vec<f64>,
+    lip: f64,
+    cache: RhoCache,
+}
+
+impl QuadraticLocal {
+    pub fn new(q_mat: DenseMatrix, q_vec: Vec<f64>) -> Self {
+        assert_eq!(q_mat.rows(), q_mat.cols());
+        assert_eq!(q_mat.rows(), q_vec.len());
+        // symmetry check (cheap, catches test bugs early)
+        for i in 0..q_mat.rows() {
+            for j in i + 1..q_mat.cols() {
+                assert!(
+                    (q_mat.get(i, j) - q_mat.get(j, i)).abs() < 1e-9,
+                    "Q must be symmetric"
+                );
+            }
+        }
+        let n = q_mat.rows();
+        // L = spectral norm of Q; power iteration on Q² keeps it sign-safe.
+        let mut scratch = vec![0.0; n];
+        let (lam2, _) = power_iteration(
+            |v, out| {
+                q_mat.matvec_into(v, &mut scratch);
+                q_mat.matvec_into(&scratch, out);
+            },
+            n,
+            400,
+            1e-10,
+            0x9d,
+        );
+        QuadraticLocal { q_mat, q_vec, lip: lam2.max(0.0).sqrt(), cache: RhoCache::new() }
+    }
+
+    /// Convenience: diagonal quadratic.
+    pub fn diagonal(diag: &[f64], q_vec: Vec<f64>) -> Self {
+        let n = diag.len();
+        let mut m = DenseMatrix::zeros(n, n);
+        for i in 0..n {
+            m.set(i, i, diag[i]);
+        }
+        QuadraticLocal::new(m, q_vec)
+    }
+}
+
+impl LocalCost for QuadraticLocal {
+    fn dim(&self) -> usize {
+        self.q_vec.len()
+    }
+
+    fn eval(&self, x: &[f64]) -> f64 {
+        let qx = self.q_mat.matvec(x);
+        0.5 * vecops::dot(x, &qx) + vecops::dot(&self.q_vec, x)
+    }
+
+    fn grad_into(&self, x: &[f64], out: &mut [f64]) {
+        self.q_mat.matvec_into(x, out);
+        for (o, q) in out.iter_mut().zip(&self.q_vec) {
+            *o += q;
+        }
+    }
+
+    fn lipschitz(&self) -> f64 {
+        self.lip
+    }
+
+    fn solve_subproblem(&self, lam: &[f64], x0: &[f64], rho: f64, out: &mut [f64]) {
+        // (Q + ρI) x = −q − λ + ρ x₀
+        let n = self.dim();
+        let factor = self.cache.get_or_build(rho, || {
+            let mut m = self.q_mat.clone();
+            m.add_diag(rho);
+            Factor::of(&m)
+        });
+        for i in 0..n {
+            out[i] = -self.q_vec[i] - lam[i] + rho * x0[i];
+        }
+        factor.solve_in_place(out);
+    }
+
+    fn kind(&self) -> &'static str {
+        "quadratic"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::tests::{check_grad, check_subproblem};
+
+    #[test]
+    fn eval_and_grad_known() {
+        let q = QuadraticLocal::diagonal(&[2.0, 4.0], vec![1.0, -1.0]);
+        // f([1,1]) = ½(2+4) + (1−1) = 3
+        assert!((q.eval(&[1.0, 1.0]) - 3.0).abs() < 1e-12);
+        let mut g = vec![0.0; 2];
+        q.grad_into(&[1.0, 1.0], &mut g);
+        assert_eq!(g, vec![3.0, 3.0]);
+    }
+
+    #[test]
+    fn gradient_fd() {
+        let m = DenseMatrix::from_rows(&[&[3.0, 1.0], &[1.0, 2.0]]);
+        let q = QuadraticLocal::new(m, vec![0.5, -0.5]);
+        check_grad(&q, &[0.3, -0.7], 1e-6);
+    }
+
+    #[test]
+    fn subproblem_convex_and_nonconvex() {
+        let convex = QuadraticLocal::diagonal(&[1.0, 2.0, 3.0], vec![0.1, 0.2, 0.3]);
+        check_subproblem(&convex, 1.0, 1e-9);
+        // non-convex but ρ > |λmin| keeps the shifted system SPD
+        let noncvx = QuadraticLocal::diagonal(&[-1.0, 2.0], vec![0.0, 0.0]);
+        check_subproblem(&noncvx, 3.0, 1e-9);
+    }
+
+    #[test]
+    fn lipschitz_is_spectral_norm() {
+        let q = QuadraticLocal::diagonal(&[-5.0, 3.0], vec![0.0, 0.0]);
+        assert!((q.lipschitz() - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "symmetric")]
+    fn asymmetric_rejected() {
+        let m = DenseMatrix::from_rows(&[&[1.0, 2.0], &[0.0, 1.0]]);
+        QuadraticLocal::new(m, vec![0.0, 0.0]);
+    }
+}

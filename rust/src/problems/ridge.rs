@@ -1,0 +1,121 @@
+//! Ridge local cost: `f_i(w) = ‖A_i w − b_i‖² + μ/2 ‖w‖²` — a strongly
+//! convex variant used by the Algorithm-4 experiments (Theorem 2 *requires*
+//! strong convexity) and by tests that need a known modulus σ² = μ.
+
+use super::cache::{Factor, RhoCache};
+use super::LocalCost;
+use crate::linalg::dense::DenseMatrix;
+use crate::linalg::power::power_iteration;
+use crate::linalg::vecops;
+
+pub struct RidgeLocal {
+    a: DenseMatrix,
+    b: Vec<f64>,
+    mu: f64,
+    gram: DenseMatrix,
+    two_atb: Vec<f64>,
+    lip: f64,
+    cache: RhoCache,
+}
+
+impl RidgeLocal {
+    pub fn new(a: DenseMatrix, b: Vec<f64>, mu: f64) -> Self {
+        assert_eq!(a.rows(), b.len());
+        assert!(mu >= 0.0);
+        let gram = a.gram();
+        let mut two_atb = a.matvec_t(&b);
+        vecops::scale(2.0, &mut two_atb);
+        let n = a.cols();
+        let (lam_max, _) =
+            power_iteration(|v, out| gram.matvec_into(v, out), n, 300, 1e-9, 0x41d6e);
+        RidgeLocal { a, b, mu, gram, two_atb, lip: 2.0 * lam_max.max(0.0) + mu, cache: RhoCache::new() }
+    }
+
+    /// Strong-convexity modulus σ² (= μ here; larger if AᵀA ≻ 0).
+    pub fn strong_convexity(&self) -> f64 {
+        self.mu
+    }
+}
+
+impl LocalCost for RidgeLocal {
+    fn dim(&self) -> usize {
+        self.a.cols()
+    }
+
+    fn eval(&self, x: &[f64]) -> f64 {
+        let mut r = self.a.matvec(x);
+        for (ri, bi) in r.iter_mut().zip(&self.b) {
+            *ri -= bi;
+        }
+        vecops::nrm2_sq(&r) + 0.5 * self.mu * vecops::nrm2_sq(x)
+    }
+
+    fn grad_into(&self, x: &[f64], out: &mut [f64]) {
+        self.gram.matvec_into(x, out);
+        for i in 0..out.len() {
+            out[i] = 2.0 * out[i] - self.two_atb[i] + self.mu * x[i];
+        }
+    }
+
+    fn lipschitz(&self) -> f64 {
+        self.lip
+    }
+
+    fn solve_subproblem(&self, lam: &[f64], x0: &[f64], rho: f64, out: &mut [f64]) {
+        // (2AᵀA + (μ+ρ) I) w = 2Aᵀb − λ + ρ x₀
+        let n = self.dim();
+        let factor = self.cache.get_or_build(rho, || {
+            let mut m = self.gram.clone();
+            m.scale(2.0);
+            m.add_diag(self.mu + rho);
+            Factor::of(&m)
+        });
+        for i in 0..n {
+            out[i] = self.two_atb[i] - lam[i] + rho * x0[i];
+        }
+        factor.solve_in_place(out);
+    }
+
+    fn kind(&self) -> &'static str {
+        "ridge"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::tests::{check_grad, check_subproblem};
+    use crate::rng::Pcg64;
+
+    fn inst(seed: u64, m: usize, n: usize, mu: f64) -> RidgeLocal {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let a = DenseMatrix::randn(&mut rng, m, n);
+        let b: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        RidgeLocal::new(a, b, mu)
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let l = inst(41, 12, 7, 0.5);
+        let x: Vec<f64> = (0..7).map(|i| 0.1 * i as f64 - 0.3).collect();
+        check_grad(&l, &x, 1e-5);
+    }
+
+    #[test]
+    fn subproblem_stationarity() {
+        let l = inst(42, 15, 6, 1.0);
+        check_subproblem(&l, 2.0, 1e-8);
+    }
+
+    #[test]
+    fn mu_zero_reduces_to_lasso_cost() {
+        use crate::problems::LassoLocal;
+        let mut rng = Pcg64::seed_from_u64(43);
+        let a = DenseMatrix::randn(&mut rng, 10, 5);
+        let b: Vec<f64> = (0..10).map(|_| rng.normal()).collect();
+        let ridge = RidgeLocal::new(a.clone(), b.clone(), 0.0);
+        let lasso = LassoLocal::new(a, b);
+        let x: Vec<f64> = (0..5).map(|i| (i as f64).sin()).collect();
+        assert!((ridge.eval(&x) - lasso.eval(&x)).abs() < 1e-10);
+    }
+}

@@ -1,0 +1,136 @@
+//! Sparse-PCA local cost: `f_j(w) = −wᵀB_jᵀB_j w` (paper eq. (50)) — the
+//! paper's **non-convex** showcase for Theorem 1.
+//!
+//! Subproblem (13): `argmin −‖Bw‖² + wᵀλ + ρ/2‖w−x₀‖²`
+//! ⇔ `(ρI − 2BᵀB) w = ρ x₀ − λ`. SPD iff `ρ > 2λmax(BᵀB)`; the Fig. 3
+//! parameterization `ρ = β·λmax` gives SPD for β = 3 and an **indefinite**
+//! system for β = 1.5 (the divergence regime), handled by the LU fallback.
+
+use super::cache::{Factor, RhoCache};
+use super::LocalCost;
+use crate::linalg::power::power_iteration;
+use crate::linalg::sparse::CsrMatrix;
+use crate::linalg::vecops;
+use crate::linalg::DenseMatrix;
+
+pub struct SpcaLocal {
+    b: CsrMatrix,
+    /// Dense `BᵀB` (n×n), formed once.
+    gram: DenseMatrix,
+    /// `λmax(BᵀB)`.
+    lam_max: f64,
+    cache: RhoCache,
+}
+
+impl SpcaLocal {
+    pub fn new(b: CsrMatrix) -> Self {
+        let n = b.cols();
+        let gram = b.gram_dense();
+        let (lam_max, _) =
+            power_iteration(|v, out| gram.matvec_into(v, out), n, 500, 1e-10, 0x59ca);
+        SpcaLocal { b, gram, lam_max: lam_max.max(0.0), cache: RhoCache::new() }
+    }
+
+    /// `λmax(BᵀB)` — the paper's ρ-rule input (`ρ = β·max_j λmax`).
+    pub fn lambda_max(&self) -> f64 {
+        self.lam_max
+    }
+
+    pub fn data(&self) -> &CsrMatrix {
+        &self.b
+    }
+}
+
+impl LocalCost for SpcaLocal {
+    fn dim(&self) -> usize {
+        self.b.cols()
+    }
+
+    fn eval(&self, x: &[f64]) -> f64 {
+        let mut scratch = vec![0.0; self.b.rows()];
+        -self.b.quad_form(x, &mut scratch)
+    }
+
+    fn grad_into(&self, x: &[f64], out: &mut [f64]) {
+        // ∇f = −2 BᵀB x
+        self.gram.matvec_into(x, out);
+        vecops::scale(-2.0, out);
+    }
+
+    fn lipschitz(&self) -> f64 {
+        2.0 * self.lam_max
+    }
+
+    fn solve_subproblem(&self, lam: &[f64], x0: &[f64], rho: f64, out: &mut [f64]) {
+        let n = self.dim();
+        let factor = self.cache.get_or_build(rho, || {
+            let mut m = self.gram.clone();
+            m.scale(-2.0);
+            m.add_diag(rho);
+            Factor::of(&m)
+        });
+        for i in 0..n {
+            out[i] = rho * x0[i] - lam[i];
+        }
+        factor.solve_in_place(out);
+    }
+
+    fn kind(&self) -> &'static str {
+        "spca"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::tests::{check_grad, check_subproblem};
+    use crate::rng::Pcg64;
+
+    fn inst(seed: u64, m: usize, n: usize, nnz: usize) -> SpcaLocal {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        SpcaLocal::new(CsrMatrix::random(&mut rng, m, n, nnz))
+    }
+
+    #[test]
+    fn objective_is_negative_quadratic() {
+        let b = CsrMatrix::from_triplets(2, 2, &[(0, 0, 1.0), (1, 1, 2.0)]);
+        let s = SpcaLocal::new(b);
+        // f([1,1]) = −(1 + 4) = −5
+        assert!((s.eval(&[1.0, 1.0]) + 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let s = inst(31, 20, 8, 40);
+        let x: Vec<f64> = (0..8).map(|i| 0.2 * (i as f64).cos()).collect();
+        check_grad(&s, &x, 1e-5);
+    }
+
+    #[test]
+    fn subproblem_spd_regime() {
+        let s = inst(32, 25, 10, 60);
+        let rho = 3.0 * s.lambda_max(); // β = 3 → SPD
+        check_subproblem(&s, rho, 1e-8);
+    }
+
+    #[test]
+    fn subproblem_indefinite_regime_still_stationary() {
+        // β = 1.5 → ρ < 2λmax → indefinite, LU path. The solve still
+        // satisfies the stationarity system (it's just not a minimizer).
+        let s = inst(33, 25, 10, 60);
+        let rho = 1.5 * s.lambda_max();
+        check_subproblem(&s, rho, 1e-6);
+    }
+
+    #[test]
+    fn lipschitz_is_twice_lambda_max() {
+        let s = inst(34, 30, 12, 80);
+        assert!((s.lipschitz() - 2.0 * s.lambda_max()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lambda_max_positive_for_nonempty() {
+        let s = inst(35, 15, 6, 20);
+        assert!(s.lambda_max() > 0.0);
+    }
+}

@@ -1,0 +1,323 @@
+//! Regularizers `h(x₀)` and their proximal operators.
+//!
+//! The master update (12)/(25) is
+//! `x₀⁺ = argmin h(x₀) − x₀ᵀΣλᵢ + ρ/2 Σ‖xᵢ−x₀‖² + γ/2 ‖x₀−x₀ᵏ‖²`,
+//! which for any `h` reduces to a prox evaluation at the point
+//! `v = (ρ Σxᵢ + Σλᵢ + γ x₀ᵏ) / (Nρ + γ)` with weight `1/(Nρ + γ)`:
+//! `x₀⁺ = prox_{h/(Nρ+γ)}(v)`. See [`crate::admm`] for the assembly; this
+//! module owns the prox operators themselves.
+
+/// A convex regularizer `h` with a closed-form prox.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Regularizer {
+    /// `h = 0` (smooth consensus only).
+    Zero,
+    /// `h(x) = theta * ||x||₁` — LASSO / sparse-PCA sparsity term.
+    L1 { theta: f64 },
+    /// `h(x) = theta/2 * ||x||²` — ridge.
+    L2Sq { theta: f64 },
+    /// Indicator of the box `[lo, hi]ⁿ` (constraint enforcement).
+    Box { lo: f64, hi: f64 },
+    /// Elastic net `theta1*||x||₁ + theta2/2*||x||²`.
+    ElasticNet { theta1: f64, theta2: f64 },
+    /// `theta*||x||₁` restricted to the box `[-bound, bound]ⁿ` — the
+    /// compact-domain regularizer Assumption 2 requires (`dom(h)` compact).
+    /// This is the `h` of the sparse-PCA experiment (50): without the box
+    /// the objective `−‖Bw‖² + θ‖w‖₁` is unbounded below.
+    L1Box { theta: f64, bound: f64 },
+}
+
+impl Regularizer {
+    /// Evaluate `h(x)` (the indicator returns 0 inside, +inf outside).
+    pub fn eval(&self, x: &[f64]) -> f64 {
+        match *self {
+            Regularizer::Zero => 0.0,
+            Regularizer::L1 { theta } => theta * x.iter().map(|v| v.abs()).sum::<f64>(),
+            Regularizer::L2Sq { theta } => 0.5 * theta * x.iter().map(|v| v * v).sum::<f64>(),
+            Regularizer::Box { lo, hi } => {
+                if x.iter().all(|&v| v >= lo - 1e-12 && v <= hi + 1e-12) {
+                    0.0
+                } else {
+                    f64::INFINITY
+                }
+            }
+            Regularizer::ElasticNet { theta1, theta2 } => {
+                theta1 * x.iter().map(|v| v.abs()).sum::<f64>()
+                    + 0.5 * theta2 * x.iter().map(|v| v * v).sum::<f64>()
+            }
+            Regularizer::L1Box { theta, bound } => {
+                if x.iter().all(|&v| v.abs() <= bound + 1e-12) {
+                    theta * x.iter().map(|v| v.abs()).sum::<f64>()
+                } else {
+                    f64::INFINITY
+                }
+            }
+        }
+    }
+
+    /// In-place prox: `x <- argmin_z h(z) + 1/(2t) ||z - x||²` with `t > 0`.
+    pub fn prox_in_place(&self, x: &mut [f64], t: f64) {
+        assert!(t > 0.0, "prox weight must be positive");
+        match *self {
+            Regularizer::Zero => {}
+            Regularizer::L1 { theta } => soft_threshold_in_place(x, theta * t),
+            Regularizer::L2Sq { theta } => {
+                let s = 1.0 / (1.0 + theta * t);
+                for v in x.iter_mut() {
+                    *v *= s;
+                }
+            }
+            Regularizer::Box { lo, hi } => {
+                for v in x.iter_mut() {
+                    *v = v.clamp(lo, hi);
+                }
+            }
+            Regularizer::ElasticNet { theta1, theta2 } => {
+                soft_threshold_in_place(x, theta1 * t);
+                let s = 1.0 / (1.0 + theta2 * t);
+                for v in x.iter_mut() {
+                    *v *= s;
+                }
+            }
+            Regularizer::L1Box { theta, bound } => {
+                // Separable: soft-threshold, then project (both 1-D convex).
+                soft_threshold_in_place(x, theta * t);
+                for v in x.iter_mut() {
+                    *v = v.clamp(-bound, bound);
+                }
+            }
+        }
+    }
+
+    /// Out-of-place prox convenience.
+    pub fn prox(&self, x: &[f64], t: f64) -> Vec<f64> {
+        let mut out = x.to_vec();
+        self.prox_in_place(&mut out, t);
+        out
+    }
+
+    /// Coordinate-wise distance from `s` to the subdifferential `∂h(x)`
+    /// (∞-norm over coordinates). Zero iff `s ∈ ∂h(x)` — the stationarity
+    /// test of KKT condition (34b).
+    pub fn subdiff_dist(&self, x: &[f64], s: &[f64]) -> f64 {
+        assert_eq!(x.len(), s.len());
+        let mut worst: f64 = 0.0;
+        match *self {
+            Regularizer::Zero => {
+                for &si in s {
+                    worst = worst.max(si.abs());
+                }
+            }
+            Regularizer::L1 { theta } => {
+                for (&xi, &si) in x.iter().zip(s) {
+                    let d = if xi != 0.0 {
+                        (si - theta * sgn0(xi)).abs()
+                    } else {
+                        (si.abs() - theta).max(0.0)
+                    };
+                    worst = worst.max(d);
+                }
+            }
+            Regularizer::L2Sq { theta } => {
+                for (&xi, &si) in x.iter().zip(s) {
+                    worst = worst.max((si - theta * xi).abs());
+                }
+            }
+            Regularizer::Box { lo, hi } => {
+                // ∂h is the normal cone: (-∞,0] at lo, [0,∞) at hi, {0} inside.
+                for (&xi, &si) in x.iter().zip(s) {
+                    let d = if (xi - lo).abs() < 1e-12 {
+                        si.max(0.0)
+                    } else if (xi - hi).abs() < 1e-12 {
+                        (-si).max(0.0)
+                    } else {
+                        si.abs()
+                    };
+                    worst = worst.max(d);
+                }
+            }
+            Regularizer::ElasticNet { theta1, theta2 } => {
+                for (&xi, &si) in x.iter().zip(s) {
+                    let s_adj = si - theta2 * xi;
+                    let d = if xi != 0.0 {
+                        (s_adj - theta1 * sgn0(xi)).abs()
+                    } else {
+                        (s_adj.abs() - theta1).max(0.0)
+                    };
+                    worst = worst.max(d);
+                }
+            }
+            Regularizer::L1Box { theta, bound } => {
+                // ∂h = θ∂|x| + N_box: at +bound the set is [θ, ∞); at
+                // −bound it is (−∞, −θ]; inside it is the L1 subdiff.
+                for (&xi, &si) in x.iter().zip(s) {
+                    let d = if (xi - bound).abs() < 1e-12 {
+                        (theta - si).max(0.0)
+                    } else if (xi + bound).abs() < 1e-12 {
+                        (si + theta).max(0.0)
+                    } else if xi != 0.0 {
+                        (si - theta * sgn0(xi)).abs()
+                    } else {
+                        (si.abs() - theta).max(0.0)
+                    };
+                    worst = worst.max(d);
+                }
+            }
+        }
+        worst
+    }
+
+    /// A subgradient of `h` at `x` (used for KKT residuals). For `L1` the
+    /// sign convention picks the minimum-norm element at kinks; `Box`
+    /// returns zeros (interior assumption checked by callers).
+    pub fn subgradient(&self, x: &[f64]) -> Vec<f64> {
+        match *self {
+            Regularizer::Zero | Regularizer::Box { .. } => vec![0.0; x.len()],
+            Regularizer::L1 { theta } => x.iter().map(|&v| theta * sgn0(v)).collect(),
+            Regularizer::L2Sq { theta } => x.iter().map(|&v| theta * v).collect(),
+            Regularizer::ElasticNet { theta1, theta2 } => {
+                x.iter().map(|&v| theta1 * sgn0(v) + theta2 * v).collect()
+            }
+            Regularizer::L1Box { theta, .. } => x.iter().map(|&v| theta * sgn0(v)).collect(),
+        }
+    }
+}
+
+#[inline]
+fn sgn0(v: f64) -> f64 {
+    if v > 0.0 {
+        1.0
+    } else if v < 0.0 {
+        -1.0
+    } else {
+        0.0
+    }
+}
+
+/// The scalar soft-threshold `S_t(v) = sign(v) · max(|v| − t, 0)` applied
+/// elementwise — the prox of `t‖·‖₁` and the L1 master update's hot loop
+/// (mirrored by the Pallas `soft_threshold` kernel).
+#[inline]
+pub fn soft_threshold_in_place(x: &mut [f64], t: f64) {
+    for v in x.iter_mut() {
+        let a = v.abs() - t;
+        *v = if a > 0.0 { a * sgn0(*v) } else { 0.0 };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::vecops;
+
+    #[test]
+    fn soft_threshold_known_values() {
+        let mut x = vec![3.0, -2.0, 0.5, 0.0];
+        soft_threshold_in_place(&mut x, 1.0);
+        assert_eq!(x, vec![2.0, -1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn l1_prox_matches_soft_threshold() {
+        let h = Regularizer::L1 { theta: 2.0 };
+        let x = vec![5.0, -5.0, 0.1];
+        let p = h.prox(&x, 0.5); // t*theta = 1.0
+        assert_eq!(p, vec![4.0, -4.0, 0.0]);
+    }
+
+    #[test]
+    fn zero_prox_is_identity() {
+        let h = Regularizer::Zero;
+        let x = vec![1.0, -2.0];
+        assert_eq!(h.prox(&x, 3.0), x);
+        assert_eq!(h.eval(&x), 0.0);
+    }
+
+    #[test]
+    fn l2_prox_shrinks() {
+        let h = Regularizer::L2Sq { theta: 1.0 };
+        let p = h.prox(&[2.0], 1.0);
+        assert!((p[0] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn box_prox_clamps_and_indicator() {
+        let h = Regularizer::Box { lo: -1.0, hi: 1.0 };
+        assert_eq!(h.prox(&[2.0, -3.0, 0.5], 1.0), vec![1.0, -1.0, 0.5]);
+        assert_eq!(h.eval(&[0.0, 1.0]), 0.0);
+        assert!(h.eval(&[2.0]).is_infinite());
+    }
+
+    #[test]
+    fn elastic_net_composes() {
+        let h = Regularizer::ElasticNet { theta1: 1.0, theta2: 1.0 };
+        // x=3, t=1: soft-threshold → 2, then scale 1/2 → 1
+        let p = h.prox(&[3.0], 1.0);
+        assert!((p[0] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prox_is_firmly_nonexpansive_l1() {
+        // ||prox(x) - prox(y)|| <= ||x - y|| for any prox.
+        let h = Regularizer::L1 { theta: 0.7 };
+        let xs = [vec![1.0, -2.0, 3.0], vec![0.1, 0.0, -0.1]];
+        let ys = [vec![-1.0, 2.0, 0.5], vec![5.0, -5.0, 5.0]];
+        for (x, y) in xs.iter().zip(&ys) {
+            let px = h.prox(x, 1.3);
+            let py = h.prox(y, 1.3);
+            assert!(vecops::dist2(&px, &py) <= vecops::dist2(x, y) + 1e-12);
+        }
+    }
+
+    #[test]
+    fn prox_optimality_l1() {
+        // v - prox(v) must lie in t * ∂h(prox(v)).
+        let h = Regularizer::L1 { theta: 2.0 };
+        let v = vec![4.0, -0.5, 1.5];
+        let t = 0.5;
+        let p = h.prox(&v, t);
+        for i in 0..v.len() {
+            let g = v[i] - p[i];
+            if p[i] != 0.0 {
+                assert!((g - t * 2.0 * sgn0(p[i])).abs() < 1e-12);
+            } else {
+                assert!(g.abs() <= t * 2.0 + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn l1_eval() {
+        let h = Regularizer::L1 { theta: 0.1 };
+        assert!((h.eval(&[1.0, -2.0, 3.0]) - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn subdiff_dist_l1() {
+        let h = Regularizer::L1 { theta: 1.0 };
+        // at x=2 (nonzero): ∂h = {1}; s=1 → 0; s=0.5 → 0.5
+        assert!(h.subdiff_dist(&[2.0], &[1.0]) < 1e-12);
+        assert!((h.subdiff_dist(&[2.0], &[0.5]) - 0.5).abs() < 1e-12);
+        // at x=0: ∂h = [-1,1]; s=0.9 → 0; s=1.5 → 0.5
+        assert!(h.subdiff_dist(&[0.0], &[0.9]) < 1e-12);
+        assert!((h.subdiff_dist(&[0.0], &[1.5]) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn subdiff_dist_zero_and_box() {
+        let z = Regularizer::Zero;
+        assert!((z.subdiff_dist(&[1.0, 2.0], &[0.3, -0.4]) - 0.4).abs() < 1e-12);
+        let b = Regularizer::Box { lo: 0.0, hi: 1.0 };
+        // interior point: s must be 0
+        assert!((b.subdiff_dist(&[0.5], &[0.2]) - 0.2).abs() < 1e-12);
+        // at upper bound: any s ≥ 0 allowed
+        assert!(b.subdiff_dist(&[1.0], &[5.0]) < 1e-12);
+        assert!((b.subdiff_dist(&[1.0], &[-2.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn subgradient_l1_signs() {
+        let h = Regularizer::L1 { theta: 2.0 };
+        assert_eq!(h.subgradient(&[3.0, -1.0, 0.0]), vec![2.0, -2.0, 0.0]);
+    }
+}

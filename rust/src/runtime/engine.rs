@@ -1,0 +1,82 @@
+//! The PJRT engine: one CPU client, one compiled executable per artifact.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::ArtifactRegistry;
+
+/// Compiled artifacts ready to execute.
+///
+/// # Thread safety
+///
+/// `xla::PjRtClient` / `PjRtLoadedExecutable` / `PjRtBuffer` hold raw
+/// pointers and therefore don't derive `Send`/`Sync`, but the PJRT CPU C
+/// API is thread-safe (clients, executables and immutable buffers may be
+/// used concurrently from multiple threads — this is how every PJRT-based
+/// serving stack drives it). We assert that here so the threaded star
+/// cluster can run PJRT-backed workers.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    registry: ArtifactRegistry,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+unsafe impl Send for PjrtEngine {}
+unsafe impl Sync for PjrtEngine {}
+
+impl PjrtEngine {
+    /// Load + compile every artifact listed in `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let registry = ArtifactRegistry::load(dir).map_err(|e| anyhow!(e))?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let mut exes = HashMap::new();
+        for name in registry.names() {
+            let path = registry.path_of(name).unwrap();
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parse HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compile artifact {name}"))?;
+            exes.insert(name.to_string(), exe);
+        }
+        Ok(PjrtEngine { client, registry, exes })
+    }
+
+    pub fn registry(&self) -> &ArtifactRegistry {
+        &self.registry
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.exes.contains_key(name)
+    }
+
+    /// Upload an f64 buffer to the device (kept resident; reusable across
+    /// executions — this is how worker data blocks avoid re-upload).
+    pub fn upload(&self, data: &[f64], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .context("upload host buffer")
+    }
+
+    /// Upload an f64 scalar.
+    pub fn upload_scalar(&self, v: f64) -> Result<xla::PjRtBuffer> {
+        self.upload(&[v], &[])
+    }
+
+    /// Execute artifact `name` on device buffers; returns the first output
+    /// (jax lowers with `return_tuple=True`, so outputs arrive as a 1-tuple
+    /// which we unwrap) as a host `Vec<f64>`.
+    pub fn execute_f64(&self, name: &str, args: &[&xla::PjRtBuffer]) -> Result<Vec<f64>> {
+        let exe = self
+            .exes
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name:?} (have: {:?})", self.registry.names()))?;
+        let outs = exe.execute_b(args).with_context(|| format!("execute {name}"))?;
+        let lit = outs[0][0].to_literal_sync().context("fetch output")?;
+        let out = lit.to_tuple1().context("unwrap 1-tuple output")?;
+        out.to_vec::<f64>().context("output to f64 vec")
+    }
+}

@@ -1,0 +1,140 @@
+//! The artifacts manifest: `artifacts/manifest.txt`, one line per artifact,
+//! space-separated `key=value` pairs. Written by `python/compile/aot.py`,
+//! parsed here. Example line:
+//!
+//! ```text
+//! name=lasso_worker_m200_n100 file=lasso_worker_m200_n100.hlo.txt kind=lasso_worker m=200 n=100 dtype=f64 cg_iters=80
+//! ```
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One artifact's metadata.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub attrs: HashMap<String, String>,
+}
+
+impl ArtifactEntry {
+    pub fn attr_usize(&self, key: &str) -> Option<usize> {
+        self.attrs.get(key).and_then(|v| v.parse().ok())
+    }
+
+    fn parse_line(line: &str) -> Result<Self, String> {
+        let mut attrs = HashMap::new();
+        for tok in line.split_whitespace() {
+            let (k, v) = tok
+                .split_once('=')
+                .ok_or_else(|| format!("bad manifest token {tok:?}"))?;
+            attrs.insert(k.to_string(), v.to_string());
+        }
+        let name = attrs.remove("name").ok_or("manifest line missing name=")?;
+        let file = attrs.remove("file").ok_or("manifest line missing file=")?;
+        let kind = attrs.remove("kind").unwrap_or_default();
+        Ok(ArtifactEntry { name, file, kind, attrs })
+    }
+}
+
+/// All artifacts in a directory.
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactRegistry {
+    pub dir: PathBuf,
+    entries: HashMap<String, ArtifactEntry>,
+}
+
+impl ArtifactRegistry {
+    /// Parse `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Self, String> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("{}: {e} (run `make artifacts`)", path.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Self, String> {
+        let mut entries = HashMap::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let e = ArtifactEntry::parse_line(line)
+                .map_err(|msg| format!("manifest line {}: {msg}", lineno + 1))?;
+            entries.insert(e.name.clone(), e);
+        }
+        Ok(ArtifactRegistry { dir: dir.to_path_buf(), entries })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.get(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.entries.keys().map(String::as_str).collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn path_of(&self, name: &str) -> Option<PathBuf> {
+        self.get(name).map(|e| self.dir.join(&e.file))
+    }
+
+    /// Look up the worker-update artifact for a problem kind and shape.
+    pub fn worker_artifact(&self, kind: &str, m: usize, n: usize) -> Option<&ArtifactEntry> {
+        self.get(&format!("{kind}_worker_m{m}_n{n}"))
+    }
+
+    /// Look up the master prox artifact for dimension n.
+    pub fn master_prox(&self, n: usize) -> Option<&ArtifactEntry> {
+        self.get(&format!("master_prox_n{n}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment line
+name=lasso_worker_m20_n10 file=lw.hlo.txt kind=lasso_worker m=20 n=10 dtype=f64 cg_iters=40
+
+name=master_prox_n10 file=mp.hlo.txt kind=master_prox n=10 dtype=f64
+";
+
+    #[test]
+    fn parses_entries_and_attrs() {
+        let reg = ArtifactRegistry::parse(Path::new("/tmp/x"), SAMPLE).unwrap();
+        assert_eq!(reg.len(), 2);
+        let e = reg.get("lasso_worker_m20_n10").unwrap();
+        assert_eq!(e.kind, "lasso_worker");
+        assert_eq!(e.attr_usize("cg_iters"), Some(40));
+        assert_eq!(reg.path_of("master_prox_n10").unwrap(), Path::new("/tmp/x/mp.hlo.txt"));
+    }
+
+    #[test]
+    fn shape_lookups() {
+        let reg = ArtifactRegistry::parse(Path::new("."), SAMPLE).unwrap();
+        assert!(reg.worker_artifact("lasso", 20, 10).is_some());
+        assert!(reg.worker_artifact("lasso", 21, 10).is_none());
+        assert!(reg.master_prox(10).is_some());
+        assert!(reg.master_prox(11).is_none());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(ArtifactRegistry::parse(Path::new("."), "name_only_no_eq\n").is_err());
+        assert!(ArtifactRegistry::parse(Path::new("."), "file=x.hlo\n").is_err());
+    }
+}

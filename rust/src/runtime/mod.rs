@@ -1,0 +1,42 @@
+//! PJRT runtime: load the AOT-compiled JAX/Pallas artifacts (HLO text under
+//! `artifacts/`) and execute them from the Rust hot path.
+//!
+//! Python runs only at build time (`make artifacts`); at run time the
+//! [`PjrtEngine`] compiles each `*.hlo.txt` once on the PJRT CPU client and
+//! the per-worker [`solvers`] keep their data blocks resident as device
+//! buffers, so a subproblem solve is: upload `(λ, x₀, ρ)` (three small
+//! buffers) → `execute_b` → download `x`.
+//!
+//! Interchange is HLO **text**, not serialized protos: jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects, while the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod engine;
+pub mod manifest;
+pub mod solvers;
+
+pub use engine::PjrtEngine;
+pub use manifest::{ArtifactEntry, ArtifactRegistry};
+pub use solvers::{PjrtLassoSolver, PjrtMasterProx, PjrtSpcaSolver};
+
+/// Default artifacts directory (relative to the repo root).
+pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";
+
+/// Resolve the artifacts directory: `$AD_ADMM_ARTIFACTS` override, else
+/// `artifacts/` relative to the current directory, else relative to the
+/// crate root (so `cargo test` from anywhere finds it).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("AD_ADMM_ARTIFACTS") {
+        return p.into();
+    }
+    let cwd = std::path::PathBuf::from(DEFAULT_ARTIFACTS_DIR);
+    if cwd.join("manifest.txt").exists() {
+        return cwd;
+    }
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(DEFAULT_ARTIFACTS_DIR)
+}
+
+/// True when AOT artifacts have been built (`make artifacts`).
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("manifest.txt").exists()
+}

@@ -1,0 +1,172 @@
+//! PJRT-backed implementations of the ADMM update contracts.
+//!
+//! Each solver keeps its worker's data block (`A_i` / dense `B_j`) resident
+//! on the device and uploads only the small per-iteration vectors.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::admm::master_pov::SubproblemSolver;
+use crate::data::{LassoInstance, SparsePcaInstance};
+
+use super::engine::PjrtEngine;
+
+/// Worker subproblem solver for LASSO blocks, executing the
+/// `lasso_worker_m{M}_n{N}` artifact (L2 CG + L1 Pallas Gram kernel).
+pub struct PjrtLassoSolver {
+    engine: Arc<PjrtEngine>,
+    exe_name: String,
+    /// Per-worker `(A, b)` device buffers, uploaded once.
+    blocks: Vec<(xla::PjRtBuffer, xla::PjRtBuffer)>,
+    n: usize,
+}
+
+impl PjrtLassoSolver {
+    pub fn new(engine: Arc<PjrtEngine>, inst: &LassoInstance) -> Result<Self> {
+        let m = inst.blocks[0].rows();
+        let n = inst.dim();
+        let exe_name = format!("lasso_worker_m{m}_n{n}");
+        if !engine.has(&exe_name) {
+            return Err(anyhow!(
+                "artifact {exe_name} not built; re-run `make artifacts` with matching shapes"
+            ));
+        }
+        let mut blocks = Vec::with_capacity(inst.blocks.len());
+        for (a, b) in inst.blocks.iter().zip(&inst.rhs) {
+            assert_eq!(a.rows(), m, "all blocks must share m (one artifact per shape)");
+            let a_buf = engine.upload(a.data(), &[m, n])?;
+            let b_buf = engine.upload(b, &[m])?;
+            blocks.push((a_buf, b_buf));
+        }
+        Ok(PjrtLassoSolver { engine, exe_name, blocks, n })
+    }
+
+    /// A solver holding only one worker's block (index 0) — what each
+    /// thread of the star cluster owns, avoiding N× data duplication.
+    pub fn for_worker(
+        engine: Arc<PjrtEngine>,
+        a: &crate::linalg::DenseMatrix,
+        b: &[f64],
+    ) -> Result<Self> {
+        let (m, n) = (a.rows(), a.cols());
+        let exe_name = format!("lasso_worker_m{m}_n{n}");
+        if !engine.has(&exe_name) {
+            return Err(anyhow!("artifact {exe_name} not built"));
+        }
+        let a_buf = engine.upload(a.data(), &[m, n])?;
+        let b_buf = engine.upload(b, &[m])?;
+        Ok(PjrtLassoSolver { engine, exe_name, blocks: vec![(a_buf, b_buf)], n })
+    }
+
+    /// Single solve against worker `i`'s resident block.
+    pub fn solve_for(&self, i: usize, lam: &[f64], x0: &[f64], rho: f64) -> Result<Vec<f64>> {
+        let (a_buf, b_buf) = &self.blocks[i];
+        let lam_buf = self.engine.upload(lam, &[self.n])?;
+        let x0_buf = self.engine.upload(x0, &[self.n])?;
+        let rho_buf = self.engine.upload_scalar(rho)?;
+        self.engine
+            .execute_f64(&self.exe_name, &[a_buf, b_buf, &lam_buf, &x0_buf, &rho_buf])
+    }
+}
+
+// SAFETY: same argument as `PjrtEngine` — the PJRT CPU C API is
+// thread-safe and device buffers are immutable after creation; the raw
+// pointers inside `PjRtBuffer`/`PjRtClient` are what blocks the derive.
+unsafe impl Send for PjrtLassoSolver {}
+
+impl SubproblemSolver for PjrtLassoSolver {
+    fn solve(&mut self, worker: usize, lam: &[f64], x0: &[f64], rho: f64, out: &mut [f64]) {
+        let x = self
+            .solve_for(worker, lam, x0, rho)
+            .expect("PJRT lasso worker solve failed");
+        out.copy_from_slice(&x);
+    }
+}
+
+/// Worker subproblem solver for sparse-PCA blocks (densified for the
+/// artifact path), executing `spca_worker_m{M}_n{N}`.
+pub struct PjrtSpcaSolver {
+    engine: Arc<PjrtEngine>,
+    exe_name: String,
+    blocks: Vec<xla::PjRtBuffer>,
+    n: usize,
+}
+
+impl PjrtSpcaSolver {
+    pub fn new(engine: Arc<PjrtEngine>, inst: &SparsePcaInstance) -> Result<Self> {
+        let m = inst.blocks[0].rows();
+        let n = inst.dim();
+        let exe_name = format!("spca_worker_m{m}_n{n}");
+        if !engine.has(&exe_name) {
+            return Err(anyhow!("artifact {exe_name} not built"));
+        }
+        let mut blocks = Vec::with_capacity(inst.blocks.len());
+        for b in &inst.blocks {
+            let dense = b.to_dense();
+            blocks.push(engine.upload(dense.data(), &[m, n])?);
+        }
+        Ok(PjrtSpcaSolver { engine, exe_name, blocks, n })
+    }
+
+    pub fn solve_for(&self, i: usize, lam: &[f64], x0: &[f64], rho: f64) -> Result<Vec<f64>> {
+        let b_buf = &self.blocks[i];
+        let lam_buf = self.engine.upload(lam, &[self.n])?;
+        let x0_buf = self.engine.upload(x0, &[self.n])?;
+        let rho_buf = self.engine.upload_scalar(rho)?;
+        self.engine.execute_f64(&self.exe_name, &[b_buf, &lam_buf, &x0_buf, &rho_buf])
+    }
+}
+
+// SAFETY: see `PjrtLassoSolver`.
+unsafe impl Send for PjrtSpcaSolver {}
+
+impl SubproblemSolver for PjrtSpcaSolver {
+    fn solve(&mut self, worker: usize, lam: &[f64], x0: &[f64], rho: f64, out: &mut [f64]) {
+        let x = self
+            .solve_for(worker, lam, x0, rho)
+            .expect("PJRT spca worker solve failed");
+        out.copy_from_slice(&x);
+    }
+}
+
+/// The master prox step as an artifact (`master_prox_n{N}`):
+/// `x₀⁺ = S_{θ/(Nρ+γ)}((ρ·Σx + Σλ + γ·x₀ᵏ)/(Nρ+γ))` — used by the
+/// hot-path bench and the kernel parity tests.
+pub struct PjrtMasterProx {
+    engine: Arc<PjrtEngine>,
+    exe_name: String,
+    n: usize,
+}
+
+impl PjrtMasterProx {
+    pub fn new(engine: Arc<PjrtEngine>, n: usize) -> Result<Self> {
+        let exe_name = format!("master_prox_n{n}");
+        if !engine.has(&exe_name) {
+            return Err(anyhow!("artifact {exe_name} not built"));
+        }
+        Ok(PjrtMasterProx { engine, exe_name, n })
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn run(
+        &self,
+        sum_x: &[f64],
+        sum_lam: &[f64],
+        x0_prev: &[f64],
+        rho: f64,
+        gamma: f64,
+        theta: f64,
+        n_workers: usize,
+    ) -> Result<Vec<f64>> {
+        let sx = self.engine.upload(sum_x, &[self.n])?;
+        let sl = self.engine.upload(sum_lam, &[self.n])?;
+        let xp = self.engine.upload(x0_prev, &[self.n])?;
+        let r = self.engine.upload_scalar(rho)?;
+        let g = self.engine.upload_scalar(gamma)?;
+        let t = self.engine.upload_scalar(theta)?;
+        let nw = self.engine.upload_scalar(n_workers as f64)?;
+        self.engine
+            .execute_f64(&self.exe_name, &[&sx, &sl, &xp, &r, &g, &t, &nw])
+    }
+}

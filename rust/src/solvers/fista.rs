@@ -1,0 +1,114 @@
+//! FISTA (accelerated proximal gradient) for the centralized composite
+//! problem `min_x Σ f_i(x) + h(x)` — the high-accuracy reference solver that
+//! produces `F*` for the Fig. 4 accuracy curves.
+
+use crate::data::LassoInstance;
+use crate::linalg::vecops;
+use crate::problems::ConsensusProblem;
+
+/// FISTA output.
+pub struct FistaOutput {
+    pub x: Vec<f64>,
+    pub objective: f64,
+    pub iters: usize,
+}
+
+/// Generic FISTA on a [`ConsensusProblem`] using its full gradient and
+/// regularizer prox. Step size `1/L` with `L = Σ_i L_i` (a safe global
+/// Lipschitz bound for the sum).
+pub fn fista(problem: &ConsensusProblem, max_iters: usize, tol: f64) -> FistaOutput {
+    let n = problem.dim();
+    let l_total: f64 = problem.locals().iter().map(|l| l.lipschitz()).sum::<f64>().max(1e-12);
+    let step = 1.0 / l_total;
+    let reg = problem.regularizer();
+
+    let mut x = vec![0.0; n];
+    let mut y = x.clone();
+    let mut grad = vec![0.0; n];
+    let mut t: f64 = 1.0;
+    let mut iters = 0;
+
+    for k in 0..max_iters {
+        iters = k + 1;
+        problem.full_grad_into(&y, &mut grad);
+        let mut x_new = y.clone();
+        vecops::axpy(-step, &grad, &mut x_new);
+        reg.prox_in_place(&mut x_new, step);
+
+        let t_new = (1.0 + (1.0 + 4.0 * t * t).sqrt()) / 2.0;
+        let beta = (t - 1.0) / t_new;
+        // y = x_new + beta (x_new − x)
+        for j in 0..n {
+            y[j] = x_new[j] + beta * (x_new[j] - x[j]);
+        }
+        let change = vecops::dist2(&x_new, &x);
+        x = x_new;
+        t = t_new;
+        if change <= tol * (1.0 + vecops::nrm2(&x)) && k > 2 {
+            break;
+        }
+    }
+    let objective = problem.objective(&x);
+    FistaOutput { x, objective, iters }
+}
+
+/// Convenience wrapper: solve a [`LassoInstance`] to high accuracy and
+/// return `(x*, F*)`.
+pub fn fista_lasso(inst: &LassoInstance, max_iters: usize) -> (Vec<f64>, f64) {
+    let problem = inst.problem();
+    let out = fista(&problem, max_iters, 1e-12);
+    (out.x, out.objective)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::QuadraticLocal;
+    use crate::prox::Regularizer;
+    use crate::rng::Pcg64;
+    use std::sync::Arc;
+
+    #[test]
+    fn solves_smooth_quadratic_exactly() {
+        // min ½(x−3)² → x* = 3
+        let l = Arc::new(QuadraticLocal::diagonal(&[1.0], vec![-3.0]));
+        let p = ConsensusProblem::new(vec![l], Regularizer::Zero);
+        let out = fista(&p, 2000, 1e-14);
+        assert!((out.x[0] - 3.0).abs() < 1e-6, "x={}", out.x[0]);
+    }
+
+    #[test]
+    fn l1_shrinks_small_coefficients_to_zero() {
+        // min ½x² + θ|x| with θ=1 → x* = 0 regardless of small linear term
+        let l = Arc::new(QuadraticLocal::diagonal(&[1.0], vec![-0.5]));
+        let p = ConsensusProblem::new(vec![l], Regularizer::L1 { theta: 1.0 });
+        let out = fista(&p, 2000, 1e-14);
+        assert!(out.x[0].abs() < 1e-8);
+    }
+
+    #[test]
+    fn lasso_reference_beats_admm_mid_run() {
+        // F* from FISTA must lower-bound (≈) a short ADMM run's objective.
+        let mut rng = Pcg64::seed_from_u64(101);
+        let inst = crate::data::LassoInstance::synthetic(&mut rng, 3, 20, 10, 0.2, 0.1);
+        let (_, f_star) = fista_lasso(&inst, 20_000);
+        let p = inst.problem();
+        let cfg = crate::admm::AdmmConfig { rho: 40.0, max_iters: 100, ..Default::default() };
+        let admm = crate::admm::sync::run_sync_admm(&p, &cfg);
+        let obj = admm.history.last().unwrap().objective;
+        assert!(obj >= f_star - 1e-6, "obj={obj} f_star={f_star}");
+        assert!((obj - f_star) / f_star.abs() < 0.05, "ADMM should be close after 100 iters");
+    }
+
+    #[test]
+    fn agrees_with_long_sync_admm() {
+        let mut rng = Pcg64::seed_from_u64(102);
+        let inst = crate::data::LassoInstance::synthetic(&mut rng, 2, 30, 8, 0.3, 0.2);
+        let (_, f_star) = fista_lasso(&inst, 50_000);
+        let p = inst.problem();
+        let cfg = crate::admm::AdmmConfig { rho: 20.0, max_iters: 4000, ..Default::default() };
+        let admm = crate::admm::sync::run_sync_admm(&p, &cfg);
+        let f_admm = admm.history.last().unwrap().objective;
+        assert!(((f_admm - f_star) / f_star.abs()).abs() < 1e-4, "f_admm={f_admm} f*={f_star}");
+    }
+}

@@ -1,0 +1,5 @@
+//! Centralized baseline solvers — used to obtain the reference optimum `F*`
+//! of the accuracy definition (53) and as sanity cross-checks.
+
+pub mod fista;
+pub mod prox_grad;

@@ -1,0 +1,72 @@
+//! Plain proximal gradient (ISTA) — the unaccelerated baseline, useful for
+//! cross-checking FISTA and as a slow-but-simple reference.
+
+use crate::linalg::vecops;
+use crate::problems::ConsensusProblem;
+
+pub struct ProxGradOutput {
+    pub x: Vec<f64>,
+    pub objective: f64,
+    pub iters: usize,
+}
+
+/// ISTA with step `1/ΣL_i`.
+pub fn prox_grad(problem: &ConsensusProblem, max_iters: usize, tol: f64) -> ProxGradOutput {
+    let n = problem.dim();
+    let l_total: f64 = problem.locals().iter().map(|l| l.lipschitz()).sum::<f64>().max(1e-12);
+    let step = 1.0 / l_total;
+    let reg = problem.regularizer();
+
+    let mut x = vec![0.0; n];
+    let mut grad = vec![0.0; n];
+    let mut iters = 0;
+    for k in 0..max_iters {
+        iters = k + 1;
+        problem.full_grad_into(&x, &mut grad);
+        let mut x_new = x.clone();
+        vecops::axpy(-step, &grad, &mut x_new);
+        reg.prox_in_place(&mut x_new, step);
+        let change = vecops::dist2(&x_new, &x);
+        x = x_new;
+        if change <= tol * (1.0 + vecops::nrm2(&x)) && k > 2 {
+            break;
+        }
+    }
+    let objective = problem.objective(&x);
+    ProxGradOutput { x, objective, iters }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::QuadraticLocal;
+    use crate::prox::Regularizer;
+    use std::sync::Arc;
+
+    #[test]
+    fn matches_fista_limit() {
+        use crate::solvers::fista::fista;
+        let l = Arc::new(QuadraticLocal::diagonal(&[2.0, 1.0], vec![-2.0, 1.0]));
+        let p = ConsensusProblem::new(vec![l], Regularizer::L1 { theta: 0.3 });
+        let a = prox_grad(&p, 50_000, 1e-14);
+        let b = fista(&p, 50_000, 1e-14);
+        assert!(vecops::dist2(&a.x, &b.x) < 1e-5, "ista={:?} fista={:?}", a.x, b.x);
+    }
+
+    #[test]
+    fn monotone_descent() {
+        let l = Arc::new(QuadraticLocal::diagonal(&[1.0, 3.0], vec![1.0, -2.0]));
+        let p = ConsensusProblem::new(vec![l], Regularizer::Zero);
+        let mut prev = p.objective(&[0.0, 0.0]);
+        let mut x = vec![0.0, 0.0];
+        let mut grad = vec![0.0; 2];
+        let step = 1.0 / 3.0;
+        for _ in 0..50 {
+            p.full_grad_into(&x, &mut grad);
+            vecops::axpy(-step, &grad, &mut x);
+            let obj = p.objective(&x);
+            assert!(obj <= prev + 1e-12);
+            prev = obj;
+        }
+    }
+}

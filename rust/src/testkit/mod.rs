@@ -1,0 +1,160 @@
+//! Property-based testing mini-framework ("proptest-lite").
+//!
+//! The image has no `proptest`/`quickcheck`, so this module supplies the
+//! pieces the repo's invariant tests need: seeded case generation, a runner
+//! that reports the failing seed + case index, and a small combinator set.
+//! No shrinking — failures print the full generated case instead, which for
+//! our numeric cases is actionable enough.
+//!
+//! ```no_run
+//! // (no_run: rustdoc test binaries miss the image's rpath to libstdc++)
+//! use ad_admm::testkit::{Runner, Gen};
+//! let mut r = Runner::new(0xad_a11, 64);
+//! r.run("abs is nonnegative", |g| {
+//!     let x = g.f64_range(-1e6, 1e6);
+//!     assert!(x.abs() >= 0.0);
+//! });
+//! ```
+
+use crate::rng::Pcg64;
+
+/// Per-case generator handle: draws primitives from the case's RNG stream.
+pub struct Gen {
+    rng: Pcg64,
+}
+
+impl Gen {
+    pub fn rng(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+
+    pub fn usize_range(&mut self, lo: usize, hi_incl: usize) -> usize {
+        assert!(hi_incl >= lo);
+        lo + self.rng.below((hi_incl - lo + 1) as u64) as usize
+    }
+
+    pub fn f64_range(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform_range(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bernoulli(0.5)
+    }
+
+    pub fn prob(&mut self) -> f64 {
+        self.rng.uniform()
+    }
+
+    /// Vector of standard normals.
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f64> {
+        let mut v = vec![0.0; n];
+        self.rng.fill_normal(&mut v);
+        v
+    }
+
+    /// Vector uniform in [lo, hi).
+    pub fn vec_in(&mut self, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..n).map(|_| self.f64_range(lo, hi)).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len() as u64) as usize]
+    }
+}
+
+/// Drives `cases` generated executions of each property.
+pub struct Runner {
+    seed: u64,
+    cases: usize,
+}
+
+impl Runner {
+    pub fn new(seed: u64, cases: usize) -> Self {
+        Runner { seed, cases }
+    }
+
+    /// Run `prop` over `self.cases` generated cases. Panics (bubbling the
+    /// property's own assert) with seed/case context on failure.
+    pub fn run<F: FnMut(&mut Gen)>(&mut self, name: &str, mut prop: F) {
+        for case in 0..self.cases {
+            let case_seed = self
+                .seed
+                .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+                .wrapping_add(case as u64);
+            let mut g = Gen { rng: Pcg64::seed_from_u64(case_seed) };
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+            if let Err(payload) = result {
+                let msg = payload
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "<non-string panic>".into());
+                panic!(
+                    "property {name:?} failed at case {case}/{} (case_seed={case_seed:#x}): {msg}",
+                    self.cases
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut r = Runner::new(1, 32);
+        let mut count = 0;
+        r.run("counts", |_g| {
+            count += 1;
+        });
+        assert_eq!(count, 32);
+    }
+
+    #[test]
+    fn failing_property_reports_context() {
+        let mut r = Runner::new(2, 16);
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            r.run("always fails", |g| {
+                let x = g.f64_range(0.0, 1.0);
+                assert!(x < 0.0, "x={x} is not negative");
+            });
+        }));
+        let err = res.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("always fails"));
+        assert!(msg.contains("case_seed"));
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        let mut r = Runner::new(3, 64);
+        r.run("bounds", |g| {
+            let u = g.usize_range(3, 9);
+            assert!((3..=9).contains(&u));
+            let f = g.f64_range(-2.0, 2.0);
+            assert!((-2.0..2.0).contains(&f));
+            let p = g.prob();
+            assert!((0.0..1.0).contains(&p));
+            let v = g.vec_in(5, 1.0, 2.0);
+            assert_eq!(v.len(), 5);
+            assert!(v.iter().all(|x| (1.0..2.0).contains(x)));
+            let c = *g.choose(&[1, 2, 3]);
+            assert!([1, 2, 3].contains(&c));
+        });
+    }
+
+    #[test]
+    fn deterministic_for_fixed_seed() {
+        let collect = |seed| {
+            let mut r = Runner::new(seed, 8);
+            let mut vals = Vec::new();
+            r.run("collect", |g| vals.push(g.f64_range(0.0, 1.0)));
+            vals
+        };
+        assert_eq!(collect(7), collect(7));
+        assert_ne!(collect(7), collect(8));
+    }
+}

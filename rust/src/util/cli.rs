@@ -1,0 +1,118 @@
+//! Minimal GNU-style argument parser (`--key value`, `--key=value`,
+//! `--flag`, positionals). Replaces `clap` on this offline image.
+
+use std::collections::HashMap;
+
+/// Parsed command line: options, flags and positionals.
+#[derive(Clone, Debug, Default)]
+pub struct ArgParser {
+    opts: HashMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl ArgParser {
+    /// Parse from an explicit token list (testable); `known_flags` names the
+    /// options that take **no** value.
+    pub fn parse_from<I: IntoIterator<Item = String>>(args: I, known_flags: &[&str]) -> Self {
+        let mut out = ArgParser::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else if let Some(next) = it.peek() {
+                    if next.starts_with("--") {
+                        out.flags.push(body.to_string());
+                    } else {
+                        out.opts.insert(body.to_string(), it.next().unwrap());
+                    }
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    /// Parse `std::env::args()` (skipping argv[0]).
+    pub fn from_env(known_flags: &[&str]) -> Self {
+        Self::parse_from(std::env::args().skip(1), known_flags)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Typed access with a default; panics with a clear message on a
+    /// malformed value (CLI misuse should fail loudly).
+    pub fn get_parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        match self.get(key) {
+            None => default,
+            Some(s) => s
+                .parse()
+                .unwrap_or_else(|_| panic!("--{key}: cannot parse {s:?}")),
+        }
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(str::to_string).collect()
+    }
+
+    #[test]
+    fn key_value_pairs() {
+        let a = ArgParser::parse_from(toks("--rho 500 --tau=10 run"), &[]);
+        assert_eq!(a.get("rho"), Some("500"));
+        assert_eq!(a.get("tau"), Some("10"));
+        assert_eq!(a.positional(), &["run".to_string()]);
+    }
+
+    #[test]
+    fn flags_and_typed() {
+        let a = ArgParser::parse_from(toks("--verbose --n 32"), &["verbose"]);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.get_parse_or::<usize>("n", 0), 32);
+        assert_eq!(a.get_parse_or::<f64>("rho", 1.5), 1.5);
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = ArgParser::parse_from(toks("--n 4 --dry-run"), &[]);
+        assert!(a.has_flag("dry-run"));
+    }
+
+    #[test]
+    fn flag_followed_by_option() {
+        let a = ArgParser::parse_from(toks("--fast --rho 2.0"), &[]);
+        assert!(a.has_flag("fast"));
+        assert_eq!(a.get("rho"), Some("2.0"));
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot parse")]
+    fn malformed_typed_value_panics() {
+        let a = ArgParser::parse_from(toks("--n abc"), &[]);
+        a.get_parse_or::<usize>("n", 0);
+    }
+}

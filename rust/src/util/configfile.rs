@@ -1,0 +1,107 @@
+//! INI/TOML-lite config files: `[section]` headers, `key = value` lines,
+//! `#` comments. Enough to configure experiments reproducibly without
+//! `serde` on the image.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Parsed config: `section.key -> value` (top-level keys have no prefix).
+#[derive(Clone, Debug, Default)]
+pub struct ConfigFile {
+    values: HashMap<String, String>,
+}
+
+impl ConfigFile {
+    /// Parse from a string.
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut values = HashMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(inner) = line.strip_prefix('[') {
+                let name = inner
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated section header", lineno + 1))?;
+                section = name.trim().to_string();
+            } else if let Some((k, v)) = line.split_once('=') {
+                let key = if section.is_empty() {
+                    k.trim().to_string()
+                } else {
+                    format!("{section}.{}", k.trim())
+                };
+                values.insert(key, v.trim().trim_matches('"').to_string());
+            } else {
+                return Err(format!("line {}: expected key = value, got {raw:?}", lineno + 1));
+            }
+        }
+        Ok(ConfigFile { values })
+    }
+
+    /// Load and parse a file.
+    pub fn load(path: &Path) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        match self.get(key) {
+            None => default,
+            Some(s) => s.parse().unwrap_or(default),
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.values.keys()
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_keys_comments() {
+        let cfg = ConfigFile::parse(
+            "# experiment\nrho = 500\n[network]\ntau = 10   # delay\nworkers = 16\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.get("rho"), Some("500"));
+        assert_eq!(cfg.get("network.tau"), Some("10"));
+        assert_eq!(cfg.get_parse_or::<usize>("network.workers", 0), 16);
+        assert_eq!(cfg.len(), 3);
+    }
+
+    #[test]
+    fn quoted_values_unquoted() {
+        let cfg = ConfigFile::parse("name = \"fig3\"\n").unwrap();
+        assert_eq!(cfg.get("name"), Some("fig3"));
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(ConfigFile::parse("this is not a kv line\n").is_err());
+        assert!(ConfigFile::parse("[unterminated\n").is_err());
+    }
+
+    #[test]
+    fn missing_key_falls_back() {
+        let cfg = ConfigFile::parse("").unwrap();
+        assert!(cfg.is_empty());
+        assert_eq!(cfg.get_parse_or::<f64>("rho", 1.25), 1.25);
+    }
+}

@@ -1,0 +1,91 @@
+//! CSV emission for figure/bench series (read back by any plotting tool).
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// Buffered CSV writer with a fixed header.
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    columns: usize,
+}
+
+impl CsvWriter {
+    /// Create (truncating) a CSV with the given header row.
+    pub fn create(path: &Path, header: &[&str]) -> std::io::Result<Self> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut out = BufWriter::new(File::create(path)?);
+        writeln!(out, "{}", header.join(","))?;
+        Ok(CsvWriter { out, columns: header.len() })
+    }
+
+    /// Write one row of f64 cells (NaN/inf serialized literally; figure
+    /// series use them to mark divergence).
+    pub fn row(&mut self, cells: &[f64]) -> std::io::Result<()> {
+        assert_eq!(cells.len(), self.columns, "row width != header width");
+        let mut line = String::with_capacity(cells.len() * 12);
+        for (i, c) in cells.iter().enumerate() {
+            if i > 0 {
+                line.push(',');
+            }
+            line.push_str(&format_cell(*c));
+        }
+        writeln!(self.out, "{line}")
+    }
+
+    /// Write a row of preformatted string cells.
+    pub fn row_str(&mut self, cells: &[String]) -> std::io::Result<()> {
+        assert_eq!(cells.len(), self.columns);
+        writeln!(self.out, "{}", cells.join(","))
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.out.flush()
+    }
+}
+
+fn format_cell(v: f64) -> String {
+    if v.is_nan() {
+        "nan".into()
+    } else if v.is_infinite() {
+        if v > 0.0 { "inf".into() } else { "-inf".into() }
+    } else if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v:.10e}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let dir = std::env::temp_dir().join("ad_admm_csv_test");
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["k", "acc"]).unwrap();
+            w.row(&[0.0, 1.5]).unwrap();
+            w.row(&[1.0, f64::INFINITY]).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "k,acc");
+        assert!(lines[1].starts_with("0,1.5"));
+        assert_eq!(lines[2], "1,inf");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn row_width_checked() {
+        let dir = std::env::temp_dir().join("ad_admm_csv_test2");
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        let _ = w.row(&[1.0]);
+    }
+}

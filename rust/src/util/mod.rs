@@ -1,0 +1,14 @@
+//! Small infrastructure substrates: CLI parsing, config files, CSV output,
+//! timing. The offline image carries no `clap`/`serde`/`csv`, so these are
+//! in-repo.
+
+pub mod cli;
+pub mod configfile;
+pub mod csv;
+pub mod plot;
+pub mod timer;
+
+pub use cli::ArgParser;
+pub use configfile::ConfigFile;
+pub use csv::CsvWriter;
+pub use timer::Stopwatch;

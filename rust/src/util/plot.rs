@@ -1,0 +1,108 @@
+//! Terminal plotting: log-scale convergence curves as ASCII, so the figure
+//! benches show the paper's plots directly in `cargo bench` output.
+
+/// One named series of (x, y) points.
+pub struct Series<'a> {
+    pub label: &'a str,
+    pub ys: &'a [f64],
+}
+
+/// Render several series (shared x = index) on a log10-y ASCII canvas.
+///
+/// Non-finite / non-positive values are clipped to the canvas edge (they
+/// mark divergence). Each series uses its own glyph; a legend is appended.
+pub fn render_log_curves(series: &[Series<'_>], width: usize, height: usize) -> String {
+    const GLYPHS: &[char] = &['*', 'o', '+', 'x', '#', '@', '%', '&'];
+    assert!(width >= 16 && height >= 4);
+    let max_len = series.iter().map(|s| s.ys.len()).max().unwrap_or(0);
+    if max_len == 0 {
+        return String::from("(no data)\n");
+    }
+    // y range over finite positive values (log10)
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for s in series {
+        for &y in s.ys {
+            if y.is_finite() && y > 0.0 {
+                let l = y.log10();
+                lo = lo.min(l);
+                hi = hi.max(l);
+            }
+        }
+    }
+    if !lo.is_finite() || !hi.is_finite() {
+        return String::from("(no positive finite data — all series diverged)\n");
+    }
+    if (hi - lo).abs() < 1e-12 {
+        hi = lo + 1.0;
+    }
+
+    let mut canvas = vec![vec![' '; width]; height];
+    for (si, s) in series.iter().enumerate() {
+        let glyph = GLYPHS[si % GLYPHS.len()];
+        for (i, &y) in s.ys.iter().enumerate() {
+            let col = if max_len <= 1 { 0 } else { i * (width - 1) / (max_len - 1) };
+            let l = if y.is_finite() && y > 0.0 { y.log10() } else { hi };
+            let frac = ((l - lo) / (hi - lo)).clamp(0.0, 1.0);
+            let row = ((1.0 - frac) * (height - 1) as f64).round() as usize;
+            canvas[row][col] = glyph;
+        }
+    }
+
+    let mut out = String::new();
+    for (r, row) in canvas.iter().enumerate() {
+        let l = hi - (hi - lo) * r as f64 / (height - 1) as f64;
+        out.push_str(&format!("1e{l:>6.1} |"));
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!("{:>9} +{}\n", "", "-".repeat(width)));
+    out.push_str(&format!("{:>10}0{:>width$}\n", "", max_len - 1, width = width - 1));
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!("  {} {}\n", GLYPHS[si % GLYPHS.len()], s.label));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_monotone_decay() {
+        let ys: Vec<f64> = (0..50).map(|k| 10f64.powi(-(k as i32) / 10)).collect();
+        let text = render_log_curves(&[Series { label: "decay", ys: &ys }], 40, 10);
+        assert!(text.contains("decay"));
+        // top-left should hold the first (largest) point, bottom-right the tail
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(lines[0].contains('*'));
+        assert!(lines.len() > 10);
+    }
+
+    #[test]
+    fn diverged_series_clip_to_top() {
+        let ys = vec![1.0, f64::INFINITY, f64::NAN];
+        let text = render_log_curves(&[Series { label: "div", ys: &ys }], 30, 6);
+        assert!(text.contains("div"));
+    }
+
+    #[test]
+    fn all_nonpositive_is_graceful() {
+        let ys = vec![0.0, -1.0];
+        let text = render_log_curves(&[Series { label: "z", ys: &ys }], 30, 6);
+        assert!(text.contains("diverged"));
+    }
+
+    #[test]
+    fn multiple_series_get_distinct_glyphs() {
+        let a = vec![1.0, 0.1, 0.01];
+        let b = vec![1.0, 0.5, 0.25];
+        let text = render_log_curves(
+            &[Series { label: "a", ys: &a }, Series { label: "b", ys: &b }],
+            30,
+            8,
+        );
+        assert!(text.contains("* a"));
+        assert!(text.contains("o b"));
+    }
+}

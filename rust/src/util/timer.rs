@@ -1,0 +1,65 @@
+//! Wall-clock timing helpers.
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch with lap support.
+#[derive(Clone, Debug)]
+pub struct Stopwatch {
+    start: Instant,
+    last_lap: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        let now = Instant::now();
+        Stopwatch { start: now, last_lap: now }
+    }
+
+    /// Seconds since start.
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Seconds since the previous `lap()` (or start), and reset the lap.
+    pub fn lap_s(&mut self) -> f64 {
+        let now = Instant::now();
+        let dt = now.duration_since(self.last_lap).as_secs_f64();
+        self.last_lap = now;
+        dt
+    }
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elapsed_monotone() {
+        let sw = Stopwatch::start();
+        let a = sw.elapsed_s();
+        let b = sw.elapsed_s();
+        assert!(b >= a);
+        assert!(a >= 0.0);
+    }
+
+    #[test]
+    fn laps_accumulate_to_elapsed() {
+        let mut sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(2));
+        let l1 = sw.lap_s();
+        std::thread::sleep(Duration::from_millis(2));
+        let l2 = sw.lap_s();
+        assert!(l1 > 0.0 && l2 > 0.0);
+        assert!(sw.elapsed_s() >= l1 + l2 - 1e-3);
+    }
+}

@@ -1,0 +1,209 @@
+//! Cross-module integration tests: the paper's headline claims end to end
+//! on the serial (master-PoV) coordinator.
+
+use ad_admm::admm::alt_scheme::run_alt_scheme;
+use ad_admm::admm::arrivals::ArrivalModel;
+use ad_admm::admm::kkt::kkt_residual;
+use ad_admm::admm::master_pov::run_master_pov;
+use ad_admm::admm::params::alt_scheme_rho_upper_bound;
+use ad_admm::admm::sync::run_sync_admm;
+use ad_admm::admm::{AdmmConfig, StopReason};
+use ad_admm::data::{LassoInstance, SparsePcaInstance};
+use ad_admm::linalg::vecops;
+use ad_admm::metrics::accuracy_series;
+use ad_admm::prelude::fista_lasso;
+use ad_admm::rng::Pcg64;
+
+/// Theorem 1 on a convex instance: AD-ADMM reaches the KKT set for a range
+/// of delays, and the limits agree with the centralized FISTA optimum.
+#[test]
+fn theorem1_convex_lasso_all_taus_reach_fista_optimum() {
+    let mut rng = Pcg64::seed_from_u64(301);
+    let inst = LassoInstance::synthetic(&mut rng, 8, 40, 20, 0.1, 0.2);
+    let problem = inst.problem();
+    let (x_star, f_star) = fista_lasso(&inst, 60_000);
+
+    for tau in [1usize, 4, 8] {
+        let cfg = AdmmConfig { rho: 200.0, tau, max_iters: 3000, ..Default::default() };
+        let arr = ArrivalModel::fig3_profile(8, 301 + tau as u64);
+        let out = run_master_pov(&problem, &cfg, &arr);
+        let r = kkt_residual(&problem, &out.state);
+        assert!(r.max() < 1e-5, "tau={tau}: {r:?}");
+        let d = vecops::dist2(&out.state.x0, &x_star);
+        assert!(d < 1e-3, "tau={tau}: dist to FISTA optimum {d}");
+        let acc = accuracy_series(&out.history, f_star);
+        assert!(*acc.last().unwrap() < 1e-6, "tau={tau}: acc {}", acc.last().unwrap());
+    }
+}
+
+/// Theorem 1 on the non-convex sparse-PCA instance: convergence to a KKT
+/// point for every delay at ρ = 3L, and the same stationary value across
+/// τ (the paper: "converges to the same KKT point for different τ").
+#[test]
+fn theorem1_nonconvex_spca_converges_for_all_taus() {
+    let mut rng = Pcg64::seed_from_u64(302);
+    let inst = SparsePcaInstance::synthetic(&mut rng, 6, 60, 24, 200, 0.1);
+    let problem = inst.problem();
+    let rho = 3.0 * problem.lipschitz();
+    let mut init = vec![0.0; 24];
+    rng.fill_normal(&mut init);
+
+    let mut finals = Vec::new();
+    for tau in [1usize, 5, 10] {
+        let cfg = AdmmConfig {
+            rho,
+            tau,
+            max_iters: 4000,
+            init_x0: Some(init.clone()),
+            ..Default::default()
+        };
+        let arr = ArrivalModel::fig3_profile(6, 302 + tau as u64);
+        let out = run_master_pov(&problem, &cfg, &arr);
+        assert_eq!(out.stop, StopReason::MaxIters, "tau={tau} diverged");
+        let r = kkt_residual(&problem, &out.state);
+        assert!(r.max() < 1e-3, "tau={tau}: {r:?}");
+        finals.push(out.history.last().unwrap().objective);
+    }
+    // all τ land on the same stationary value
+    for f in &finals[1..] {
+        assert!(
+            (f - finals[0]).abs() <= 1e-2 * finals[0].abs().max(1.0),
+            "stationary values differ: {finals:?}"
+        );
+    }
+}
+
+/// The Fig. 3 ρ claim: a too-small ρ (β = 1.5 on ρ = β·L) destroys
+/// convergence on the non-convex problem even synchronously.
+#[test]
+fn small_rho_diverges_on_nonconvex() {
+    let mut rng = Pcg64::seed_from_u64(303);
+    let inst = SparsePcaInstance::synthetic(&mut rng, 4, 60, 24, 200, 0.1);
+    let problem = inst.problem();
+    let mut init = vec![0.0; 24];
+    rng.fill_normal(&mut init);
+    let cfg = AdmmConfig {
+        rho: 1.5 * problem.lipschitz() / 2.0, // β=1.5 on λmax ⇒ well below 2L
+        tau: 1,
+        max_iters: 4000,
+        init_x0: Some(init),
+        ..Default::default()
+    };
+    let out = run_sync_admm(&problem, &cfg);
+    assert_eq!(out.stop, StopReason::Diverged, "expected divergence at small rho");
+}
+
+/// The Fig. 4(b) claim: Algorithm 4 with the Algorithm-2 ρ diverges under
+/// delay, converges with the Theorem-2-scale ρ, and the Theorem-2 bound is
+/// in the right ballpark.
+#[test]
+fn alt_scheme_fig4b_phenomenology() {
+    let mut rng = Pcg64::seed_from_u64(304);
+    // strongly convex blocks: m > n
+    let inst = LassoInstance::synthetic(&mut rng, 8, 40, 12, 0.1, 0.1);
+    let problem = inst.problem();
+    let arr = |seed| ArrivalModel::fig4_profile(8, seed);
+
+    // big rho + delay ⇒ divergence
+    let big = AdmmConfig { rho: 500.0, tau: 4, max_iters: 4000, ..Default::default() };
+    let out_big = run_alt_scheme(&problem, &big, &arr(1));
+    assert_eq!(out_big.stop, StopReason::Diverged, "Algorithm 4 should diverge at rho=500, tau=4");
+
+    // small rho ⇒ convergence (slowly)
+    let small = AdmmConfig { rho: 2.0, tau: 4, max_iters: 8000, ..Default::default() };
+    let out_small = run_alt_scheme(&problem, &small, &arr(2));
+    assert!(!out_small.diverged());
+    let r = kkt_residual(&problem, &out_small.state);
+    assert!(r.max() < 5e-2, "{r:?}");
+
+    // Theorem-2 bound direction: larger tau ⇒ smaller admissible rho
+    assert!(alt_scheme_rho_upper_bound(1.0, 8) < alt_scheme_rho_upper_bound(1.0, 2));
+}
+
+/// Algorithm 2 and Algorithm 4 coincide in the synchronous limit
+/// (footnote 8: same algorithm up to update order).
+#[test]
+fn alg2_and_alg4_agree_synchronously() {
+    let mut rng = Pcg64::seed_from_u64(305);
+    let inst = LassoInstance::synthetic(&mut rng, 4, 30, 10, 0.2, 0.1);
+    let problem = inst.problem();
+    let cfg = AdmmConfig { rho: 50.0, tau: 1, max_iters: 2000, ..Default::default() };
+    let a2 = run_master_pov(&problem, &cfg, &ArrivalModel::Full);
+    let a4 = run_alt_scheme(&problem, &cfg, &ArrivalModel::Full);
+    let d = vecops::dist2(&a2.state.x0, &a4.state.x0);
+    assert!(d < 1e-7, "synchronous limits differ: {d}");
+}
+
+/// Asynchrony costs iterations: for the same iteration budget, larger τ
+/// gives (weakly) worse accuracy — the "flip side" the paper describes.
+#[test]
+fn accuracy_degrades_gracefully_with_tau() {
+    let mut rng = Pcg64::seed_from_u64(306);
+    let inst = LassoInstance::synthetic(&mut rng, 8, 40, 20, 0.1, 0.1);
+    let problem = inst.problem();
+    let (_, f_star) = fista_lasso(&inst, 40_000);
+    let budget = 400;
+    let acc_at = |tau: usize| {
+        let cfg = AdmmConfig { rho: 200.0, tau, max_iters: budget, ..Default::default() };
+        let arr = ArrivalModel::fig3_profile(8, 99);
+        let out = run_master_pov(&problem, &cfg, &arr);
+        *accuracy_series(&out.history, f_star).last().unwrap()
+    };
+    let a1 = acc_at(1);
+    let a10 = acc_at(10);
+    assert!(
+        a1 <= a10 * 10.0 + 1e-12,
+        "sync should not be drastically worse: a1={a1} a10={a10}"
+    );
+    assert!(a10 < 1.0, "async must still be converging: a10={a10}");
+}
+
+/// Logistic regression (inexact Newton subproblems) through the same
+/// coordinator: KKT residual drops under asynchrony.
+#[test]
+fn logistic_regression_async_converges() {
+    use ad_admm::data::LogisticInstance;
+    let mut rng = Pcg64::seed_from_u64(307);
+    let inst = LogisticInstance::synthetic(&mut rng, 4, 40, 8, 0.02);
+    let problem = inst.problem();
+    let rho = problem.lipschitz().max(1.0);
+    let cfg = AdmmConfig { rho, tau: 4, max_iters: 600, ..Default::default() };
+    let arr = ArrivalModel::fig3_profile(4, 7);
+    let out = run_master_pov(&problem, &cfg, &arr);
+    let r = kkt_residual(&problem, &out.state);
+    assert!(r.max() < 1e-4, "{r:?}");
+}
+
+/// CLI smoke: parameter-rule subcommand math is exposed coherently.
+#[test]
+fn params_rules_expose_paper_values() {
+    use ad_admm::admm::params::*;
+    // L = 1: (16) → (3 + √17)/2 ≈ 3.5616
+    let rho = rho_lower_bound_nonconvex(1.0);
+    assert!((rho - (3.0 + 17f64.sqrt()) / 2.0).abs() < 1e-12);
+    // γ rule at τ=1 is negative for any rho
+    assert!(gamma_lower_bound(4.0, rho, 1, 8) < 0.0);
+}
+
+/// The residual-based stopping rule terminates a convergent run early and
+/// the returned point is KKT-quality.
+#[test]
+fn residual_stopping_rule_fires_and_point_is_good() {
+    use ad_admm::admm::stopping::StoppingRule;
+    let mut rng = Pcg64::seed_from_u64(308);
+    let inst = LassoInstance::synthetic(&mut rng, 4, 30, 12, 0.2, 0.1);
+    let problem = inst.problem();
+    let cfg = AdmmConfig {
+        rho: 50.0,
+        tau: 3,
+        max_iters: 5000,
+        stopping: Some(StoppingRule { abs_tol: 1e-8, rel_tol: 1e-7 }),
+        ..Default::default()
+    };
+    let arr = ArrivalModel::fig3_profile(4, 11);
+    let out = run_master_pov(&problem, &cfg, &arr);
+    assert_eq!(out.stop, StopReason::Residuals, "rule should fire before 5000 iters");
+    assert!(out.history.len() < 5000);
+    let r = kkt_residual(&problem, &out.state);
+    assert!(r.max() < 1e-4, "{r:?}");
+}

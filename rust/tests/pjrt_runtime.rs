@@ -1,0 +1,163 @@
+//! PJRT runtime integration: load the AOT artifacts, execute them, and
+//! check parity against the native closed-form solvers.
+//!
+//! These tests skip (cleanly pass with a notice) when `make artifacts` has
+//! not been run, so the rest of the suite works without python.
+
+use std::sync::Arc;
+
+use ad_admm::admm::arrivals::ArrivalModel;
+use ad_admm::admm::kkt::kkt_residual;
+use ad_admm::admm::master_pov::{run_master_pov, run_master_pov_with_solver};
+use ad_admm::admm::AdmmConfig;
+use ad_admm::data::{LassoInstance, SparsePcaInstance};
+use ad_admm::linalg::vecops;
+use ad_admm::rng::Pcg64;
+use ad_admm::runtime::{
+    artifacts_available, artifacts_dir, PjrtEngine, PjrtLassoSolver, PjrtMasterProx,
+    PjrtSpcaSolver,
+};
+
+fn engine() -> Option<Arc<PjrtEngine>> {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Arc::new(PjrtEngine::load(&artifacts_dir()).expect("load artifacts")))
+}
+
+#[test]
+fn engine_loads_all_manifest_entries() {
+    let Some(engine) = engine() else { return };
+    let names = engine.registry().names();
+    assert!(names.len() >= 10, "expected full default manifest, got {names:?}");
+    for required in [
+        "lasso_worker_m20_n10",
+        "lasso_worker_m200_n100",
+        "spca_worker_m40_n16",
+        "master_prox_n100",
+        "gram_matvec_m20_n10",
+    ] {
+        assert!(engine.has(required), "missing {required}");
+    }
+}
+
+#[test]
+fn gram_matvec_artifact_matches_native() {
+    let Some(engine) = engine() else { return };
+    let mut rng = Pcg64::seed_from_u64(201);
+    let a = ad_admm::linalg::DenseMatrix::randn(&mut rng, 20, 10);
+    let x: Vec<f64> = (0..10).map(|i| (i as f64).sin()).collect();
+
+    let a_buf = engine.upload(a.data(), &[20, 10]).unwrap();
+    let x_buf = engine.upload(&x, &[10]).unwrap();
+    let got = engine.execute_f64("gram_matvec_m20_n10", &[&a_buf, &x_buf]).unwrap();
+
+    let mut scratch = vec![0.0; 20];
+    let mut want = vec![0.0; 10];
+    a.gram_matvec_into(&x, &mut scratch, &mut want);
+    assert!(vecops::dist2(&got, &want) < 1e-9, "PJRT vs native gram mismatch");
+}
+
+#[test]
+fn soft_threshold_artifact_matches_native() {
+    let Some(engine) = engine() else { return };
+    let mut rng = Pcg64::seed_from_u64(202);
+    let mut v = vec![0.0; 100];
+    rng.fill_normal(&mut v);
+    let v_buf = engine.upload(&v, &[100]).unwrap();
+    let t_buf = engine.upload_scalar(0.7).unwrap();
+    let got = engine.execute_f64("soft_threshold_n100", &[&v_buf, &t_buf]).unwrap();
+    let mut want = v.clone();
+    ad_admm::prox::soft_threshold_in_place(&mut want, 0.7);
+    assert!(vecops::dist2(&got, &want) < 1e-12);
+}
+
+#[test]
+fn lasso_worker_artifact_matches_cholesky_solve() {
+    let Some(engine) = engine() else { return };
+    let mut rng = Pcg64::seed_from_u64(203);
+    let inst = LassoInstance::synthetic(&mut rng, 3, 20, 10, 0.2, 0.1);
+    let solver = PjrtLassoSolver::new(engine, &inst).unwrap();
+    let problem = inst.problem();
+
+    let lam: Vec<f64> = (0..10).map(|i| (i as f64 * 0.3).cos()).collect();
+    let x0: Vec<f64> = (0..10).map(|i| (i as f64 * 0.2).sin()).collect();
+    for worker in 0..3 {
+        let got = solver.solve_for(worker, &lam, &x0, 50.0).unwrap();
+        let mut want = vec![0.0; 10];
+        problem.local(worker).solve_subproblem(&lam, &x0, 50.0, &mut want);
+        let d = vecops::dist2(&got, &want);
+        assert!(d < 1e-6, "worker {worker}: PJRT vs native dist {d}");
+    }
+}
+
+#[test]
+fn spca_worker_artifact_matches_native_in_spd_regime() {
+    let Some(engine) = engine() else { return };
+    let mut rng = Pcg64::seed_from_u64(204);
+    let inst = SparsePcaInstance::synthetic(&mut rng, 2, 40, 16, 80, 0.1);
+    let rho = 3.0 * inst.max_lambda_max(); // β = 3 → SPD → CG valid
+    let solver = PjrtSpcaSolver::new(engine, &inst).unwrap();
+    let problem = inst.problem();
+
+    let lam: Vec<f64> = (0..16).map(|i| (i as f64 * 0.21).sin()).collect();
+    let x0: Vec<f64> = (0..16).map(|i| (i as f64 * 0.17).cos()).collect();
+    for worker in 0..2 {
+        let got = solver.solve_for(worker, &lam, &x0, rho).unwrap();
+        let mut want = vec![0.0; 16];
+        problem.local(worker).solve_subproblem(&lam, &x0, rho, &mut want);
+        let d = vecops::dist2(&got, &want);
+        assert!(d < 1e-6, "worker {worker}: PJRT vs native dist {d}");
+    }
+}
+
+#[test]
+fn master_prox_artifact_matches_native_update() {
+    let Some(engine) = engine() else { return };
+    let n = 100;
+    let mut rng = Pcg64::seed_from_u64(205);
+    let mut sum_x = vec![0.0; n];
+    let mut sum_lam = vec![0.0; n];
+    let mut x0_prev = vec![0.0; n];
+    rng.fill_normal(&mut sum_x);
+    rng.fill_normal(&mut sum_lam);
+    rng.fill_normal(&mut x0_prev);
+    let (rho, gamma, theta, nw) = (500.0, 3.0, 0.1, 16usize);
+
+    let prox = PjrtMasterProx::new(engine, n).unwrap();
+    let got = prox.run(&sum_x, &sum_lam, &x0_prev, rho, gamma, theta, nw).unwrap();
+
+    let denom = nw as f64 * rho + gamma;
+    let mut want: Vec<f64> = (0..n)
+        .map(|j| (rho * sum_x[j] + sum_lam[j] + gamma * x0_prev[j]) / denom)
+        .collect();
+    ad_admm::prox::soft_threshold_in_place(&mut want, theta / denom);
+    assert!(vecops::dist2(&got, &want) < 1e-10);
+}
+
+#[test]
+fn full_admm_run_pjrt_vs_native_same_trajectory() {
+    // End-to-end: Algorithm 3 driven by the PJRT worker solver must follow
+    // the native run (same arrival trace) and reach the same KKT point.
+    let Some(engine) = engine() else { return };
+    let mut rng = Pcg64::seed_from_u64(206);
+    let inst = LassoInstance::synthetic(&mut rng, 3, 20, 10, 0.2, 0.1);
+    let problem = inst.problem();
+    let cfg = AdmmConfig { rho: 50.0, tau: 3, max_iters: 150, ..Default::default() };
+    let arr = ArrivalModel::probabilistic(vec![0.4, 0.9, 0.6], 31);
+
+    let native = run_master_pov(&problem, &cfg, &arr);
+    let mut pjrt_solver = PjrtLassoSolver::new(engine, &inst).unwrap();
+    let pjrt = run_master_pov_with_solver(
+        &problem,
+        &cfg,
+        &ArrivalModel::Trace(native.trace.clone()),
+        &mut pjrt_solver,
+    );
+
+    let d = vecops::dist2(&native.state.x0, &pjrt.state.x0);
+    assert!(d < 1e-5, "PJRT trajectory diverged from native: {d}");
+    let r = kkt_residual(&problem, &pjrt.state);
+    assert!(r.max() < 1e-4, "{r:?}");
+}

@@ -1,0 +1,260 @@
+//! Property-based tests over the coordinator invariants and the numeric
+//! substrates, driven by the in-repo `testkit` runner.
+
+use std::sync::Arc;
+
+use ad_admm::admm::arrivals::{ArrivalModel, ArrivalTrace};
+use ad_admm::admm::kkt::dual_identity_residual;
+use ad_admm::admm::master_pov::run_master_pov;
+use ad_admm::admm::params::{gamma_lower_bound, rho_lower_bound_convex, rho_lower_bound_nonconvex};
+use ad_admm::admm::sync::run_sync_admm;
+use ad_admm::admm::AdmmConfig;
+use ad_admm::linalg::cg::cg_solve;
+use ad_admm::linalg::cholesky::Cholesky;
+use ad_admm::linalg::lu::Lu;
+use ad_admm::linalg::sparse::CsrMatrix;
+use ad_admm::linalg::vecops;
+use ad_admm::linalg::DenseMatrix;
+use ad_admm::problems::{ConsensusProblem, LassoLocal, QuadraticLocal};
+use ad_admm::prox::Regularizer;
+use ad_admm::rng::Pcg64;
+use ad_admm::testkit::{Gen, Runner};
+
+const CASES: usize = 24;
+
+fn random_lasso(g: &mut Gen, n_workers: usize, m: usize, n: usize) -> ConsensusProblem {
+    let mut locals: Vec<Arc<dyn ad_admm::problems::LocalCost>> = Vec::new();
+    for _ in 0..n_workers {
+        let a = DenseMatrix::from_vec(m, n, g.normal_vec(m * n));
+        let b = g.normal_vec(m);
+        locals.push(Arc::new(LassoLocal::new(a, b)));
+    }
+    ConsensusProblem::new(locals, Regularizer::L1 { theta: g.f64_range(0.0, 0.5) })
+}
+
+// ---------------------------------------------------------------- protocol
+
+#[test]
+fn prop_bounded_delay_always_satisfied() {
+    // Assumption 1 holds for every realized trace, for any probabilities,
+    // τ and gate A.
+    Runner::new(0xA11CE, CASES).run("bounded delay", |g| {
+        let n_workers = g.usize_range(2, 8);
+        let tau = g.usize_range(1, 6);
+        let min_arrivals = g.usize_range(1, n_workers);
+        let probs: Vec<f64> = (0..n_workers).map(|_| g.f64_range(0.05, 0.95)).collect();
+        let p = random_lasso(g, n_workers, 6, 4);
+        let cfg = AdmmConfig {
+            rho: g.f64_range(5.0, 100.0),
+            tau,
+            min_arrivals,
+            max_iters: 60,
+            ..Default::default()
+        };
+        let arr = ArrivalModel::probabilistic(probs, g.rng().next_u64());
+        let out = run_master_pov(&p, &cfg, &arr);
+        assert!(
+            out.trace.satisfies_bounded_delay(n_workers, tau),
+            "trace violates Assumption 1 (tau={tau})"
+        );
+        // gate: |A_k| >= min(A, N)
+        for set in &out.trace.sets {
+            assert!(set.len() >= min_arrivals.min(n_workers));
+        }
+        // delay counters bounded
+        assert!(out.final_delays.iter().all(|&d| d <= tau.saturating_sub(1)));
+    });
+}
+
+#[test]
+fn prop_dual_identity_eq29() {
+    // ∇f_i(x_i) + λ_i = 0 after every Algorithm-3 run, for all workers —
+    // including those that never arrived after iteration 0.
+    Runner::new(0xD0A1, CASES).run("dual identity", |g| {
+        let n_workers = g.usize_range(2, 6);
+        let p = random_lasso(g, n_workers, 8, 5);
+        let cfg = AdmmConfig {
+            rho: g.f64_range(10.0, 200.0),
+            tau: g.usize_range(1, 5),
+            max_iters: g.usize_range(1, 40),
+            ..Default::default()
+        };
+        let probs: Vec<f64> = (0..n_workers).map(|_| g.f64_range(0.1, 0.9)).collect();
+        let arr = ArrivalModel::probabilistic(probs, g.rng().next_u64());
+        let out = run_master_pov(&p, &cfg, &arr);
+        let res = dual_identity_residual(&p, &out.state);
+        assert!(res < 1e-7, "eq. (29) violated: {res}");
+    });
+}
+
+#[test]
+fn prop_sync_equals_full_arrival_async() {
+    // Algorithm 3 with the Full model must be *identical* to itself via a
+    // replayed all-arrive trace, and at τ=1 the trace is all-N every step.
+    Runner::new(0x5EEC, CASES).run("sync equivalence", |g| {
+        let n_workers = g.usize_range(2, 5);
+        let p = random_lasso(g, n_workers, 6, 4);
+        let iters = g.usize_range(2, 30);
+        let cfg = AdmmConfig { rho: 50.0, tau: 1, max_iters: iters, ..Default::default() };
+        let out = run_master_pov(&p, &cfg, &ArrivalModel::Full);
+        assert!(out.trace.sets.iter().all(|s| s.len() == n_workers));
+        let full_trace = ArrivalTrace { sets: vec![(0..n_workers).collect(); iters] };
+        let replay = run_master_pov(&p, &cfg, &ArrivalModel::Trace(full_trace));
+        assert_eq!(out.state.x0, replay.state.x0, "bit-exact replay expected");
+    });
+}
+
+#[test]
+fn prop_aug_lagrangian_descends_synchronously_for_large_rho() {
+    // Lemma 1 with τ=1: no asynchrony error terms; ρ well above L ⇒ the
+    // augmented Lagrangian is non-increasing.
+    Runner::new(0xDE5C, 12).run("descent", |g| {
+        let n_workers = g.usize_range(1, 4);
+        let p = random_lasso(g, n_workers, 8, 4);
+        let rho = 4.0 * p.lipschitz().max(1.0);
+        let cfg = AdmmConfig { rho, max_iters: 40, ..Default::default() };
+        let out = run_sync_admm(&p, &cfg);
+        for w in out.history.windows(2).skip(1) {
+            assert!(
+                w[1].aug_lagrangian
+                    <= w[0].aug_lagrangian + 1e-7 * w[0].aug_lagrangian.abs().max(1.0),
+                "ascent at k={}",
+                w[1].k
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_parameter_rules_internal_consistency() {
+    Runner::new(0xF00D, 64).run("theorem-1 rules", |g| {
+        let l = g.f64_range(0.0, 50.0);
+        let rho_nc = rho_lower_bound_nonconvex(l);
+        let rho_c = rho_lower_bound_convex(l);
+        assert!(rho_nc >= rho_c);
+        assert!(rho_nc >= l); // analysis requires ρ ≥ L
+        let n = g.usize_range(1, 64);
+        let s = g.f64_range(1.0, n as f64);
+        let tau = g.usize_range(1, 20);
+        let gamma = gamma_lower_bound(s, rho_nc, tau, n);
+        if tau == 1 {
+            assert!(gamma < 0.0, "τ=1 must allow dropping the prox term");
+        }
+        // monotone in τ
+        let gamma2 = gamma_lower_bound(s, rho_nc, tau + 1, n);
+        assert!(gamma2 >= gamma);
+    });
+}
+
+// ------------------------------------------------------------- numerics
+
+#[test]
+fn prop_cholesky_lu_cg_agree() {
+    Runner::new(0x11A6, CASES).run("solver agreement", |g| {
+        let n = g.usize_range(1, 24);
+        let m = n + g.usize_range(1, 10);
+        let a = DenseMatrix::from_vec(m, n, g.normal_vec(m * n));
+        let mut spd = a.gram();
+        spd.add_diag(g.f64_range(0.5, 5.0));
+        let b = g.normal_vec(n);
+
+        let x_chol = Cholesky::factor(&spd).expect("SPD").solve(&b);
+        let x_lu = Lu::factor(&spd).expect("nonsingular").solve(&b);
+        let mut x_cg = vec![0.0; n];
+        cg_solve(|v, out| spd.matvec_into(v, out), &b, &mut x_cg, 8 * n + 20, 1e-13);
+
+        assert!(vecops::dist2(&x_chol, &x_lu) < 1e-6 * (1.0 + vecops::nrm2(&x_chol)));
+        assert!(vecops::dist2(&x_chol, &x_cg) < 1e-5 * (1.0 + vecops::nrm2(&x_chol)));
+    });
+}
+
+#[test]
+fn prop_csr_matches_dense() {
+    Runner::new(0xC5A, CASES).run("csr/dense equivalence", |g| {
+        let rows = g.usize_range(1, 30);
+        let cols = g.usize_range(1, 20);
+        let nnz = g.usize_range(0, rows * cols);
+        let m = CsrMatrix::random(g.rng(), rows, cols, nnz);
+        let d = m.to_dense();
+        let x = g.normal_vec(cols);
+        let y = g.normal_vec(rows);
+        let mut s1 = vec![0.0; rows];
+        m.matvec_into(&x, &mut s1);
+        assert!(vecops::dist2(&s1, &d.matvec(&x)) < 1e-9);
+        let mut s2 = vec![0.0; cols];
+        m.matvec_t_into(&y, &mut s2);
+        assert!(vecops::dist2(&s2, &d.matvec_t(&y)) < 1e-9);
+        assert!(m.gram_dense().max_abs_diff(&d.gram()) < 1e-9);
+    });
+}
+
+#[test]
+fn prop_prox_firmly_nonexpansive_and_consistent() {
+    Runner::new(0x960C, 48).run("prox properties", |g| {
+        let n = g.usize_range(1, 16);
+        let theta = g.f64_range(0.0, 2.0);
+        let t = g.f64_range(0.01, 5.0);
+        let regs = [
+            Regularizer::Zero,
+            Regularizer::L1 { theta },
+            Regularizer::L2Sq { theta },
+            Regularizer::ElasticNet { theta1: theta, theta2: 0.5 },
+            Regularizer::L1Box { theta, bound: 1.0 },
+            Regularizer::Box { lo: -1.0, hi: 1.0 },
+        ];
+        let reg = g.choose(&regs).clone();
+        let x = g.normal_vec(n);
+        let y = g.normal_vec(n);
+        let px = reg.prox(&x, t);
+        let py = reg.prox(&y, t);
+        // nonexpansive
+        assert!(vecops::dist2(&px, &py) <= vecops::dist2(&x, &y) + 1e-10);
+        // prox output has finite h (in-domain)
+        assert!(reg.eval(&px).is_finite());
+        // prox optimality: h(p) + ||p−x||²/(2t) ≤ h(z) + ||z−x||²/(2t) for
+        // sampled z in the domain
+        let base = reg.eval(&px) + vecops::dist2_sq(&px, &x) / (2.0 * t);
+        for _ in 0..5 {
+            let z = reg.prox(&g.normal_vec(n), t); // in-domain point
+            let val = reg.eval(&z) + vecops::dist2_sq(&z, &x) / (2.0 * t);
+            assert!(base <= val + 1e-8, "prox not a minimizer: {base} > {val}");
+        }
+    });
+}
+
+#[test]
+fn prop_quadratic_subproblem_exact() {
+    // The generic quadratic local solves its subproblem to stationarity for
+    // any SPD-shifted ρ.
+    Runner::new(0x9AD, CASES).run("quadratic subproblem", |g| {
+        let n = g.usize_range(1, 10);
+        let diag: Vec<f64> = (0..n).map(|_| g.f64_range(-2.0, 4.0)).collect();
+        let q = QuadraticLocal::diagonal(&diag, g.normal_vec(n));
+        let rho = q.lipschitz() + g.f64_range(0.5, 5.0);
+        let lam = g.normal_vec(n);
+        let x0 = g.normal_vec(n);
+        let mut x = vec![0.0; n];
+        use ad_admm::problems::LocalCost;
+        q.solve_subproblem(&lam, &x0, rho, &mut x);
+        let mut grad = vec![0.0; n];
+        q.grad_into(&x, &mut grad);
+        for j in 0..n {
+            grad[j] += lam[j] + rho * (x[j] - x0[j]);
+        }
+        assert!(vecops::nrm2(&grad) < 1e-8);
+    });
+}
+
+#[test]
+fn prop_rng_uniform_bounds_and_determinism() {
+    Runner::new(0x57A7, 32).run("rng", |g| {
+        let seed = g.rng().next_u64();
+        let mut a = Pcg64::seed_from_u64(seed);
+        let mut b = Pcg64::seed_from_u64(seed);
+        for _ in 0..50 {
+            let x = a.uniform();
+            assert!((0.0..1.0).contains(&x));
+            assert_eq!(x, b.uniform());
+        }
+    });
+}
