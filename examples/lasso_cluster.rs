@@ -82,25 +82,41 @@ fn main() {
 
     // --- synchronous baseline: τ = 1, A = N ---
     let sync_cfg = ClusterConfig {
-        admm: AdmmConfig { rho: 500.0, tau: 1, min_arrivals: n_workers, max_iters: iters, ..Default::default() },
+        admm: AdmmConfig {
+            rho: 500.0,
+            tau: 1,
+            min_arrivals: n_workers,
+            max_iters: iters,
+            ..Default::default()
+        },
         protocol: Protocol::AdAdmm,
         delays: delays.clone(),
-        faults: None,
+        ..Default::default()
     };
     let cluster = StarCluster::new(problem.clone());
     let sync = cluster.run_with_solvers(&sync_cfg, make_solvers());
 
     // --- asynchronous: τ per flag, A = 1 ---
     let async_cfg = ClusterConfig {
-        admm: AdmmConfig { rho: 500.0, tau, min_arrivals: 1, max_iters: iters, ..Default::default() },
+        admm: AdmmConfig {
+            rho: 500.0,
+            tau,
+            min_arrivals: 1,
+            max_iters: iters,
+            ..Default::default()
+        },
         protocol: Protocol::AdAdmm,
         delays,
-        faults: None,
+        ..Default::default()
     };
     let asyn = cluster.run_with_solvers(&async_cfg, make_solvers());
 
-    println!("\n{:<22} {:>8} {:>10} {:>10} {:>12} {:>12}", "run", "iters", "wall[s]", "iters/s", "objective", "accuracy");
-    for (label, r) in [("sync  (tau=1, A=N)", &sync), (&*format!("async (tau={tau}, A=1)"), &asyn)] {
+    println!(
+        "\n{:<22} {:>8} {:>10} {:>10} {:>12} {:>12}",
+        "run", "iters", "wall[s]", "iters/s", "objective", "accuracy"
+    );
+    let async_label = format!("async (tau={tau}, A=1)");
+    for (label, r) in [("sync  (tau=1, A=N)", &sync), (&*async_label, &asyn)] {
         let acc = ad_admm::metrics::accuracy_series(&r.history, f_star);
         println!(
             "{:<22} {:>8} {:>10.3} {:>10.1} {:>12.5e} {:>12.3e}",
@@ -115,14 +131,26 @@ fn main() {
 
     let speedup = asyn.iters_per_sec() / sync.iters_per_sec().max(1e-12);
     println!("\nasync speedup (master iterations/second): {speedup:.2}x");
-    println!("bounded-delay check (Assumption 1, tau={tau}): {}", asyn.trace.satisfies_bounded_delay(n_workers, tau));
+    println!(
+        "bounded-delay check (Assumption 1, tau={tau}): {}",
+        asyn.trace.satisfies_bounded_delay(n_workers, tau)
+    );
 
     println!("\nper-worker utilization (async run):");
     println!("worker  updates  busy[s]  idle%");
     for w in &asyn.workers {
-        println!("{:>6}  {:>7}  {:>7.3}  {:>5.1}", w.id, w.updates, w.busy_s, 100.0 * w.idle_fraction());
+        println!(
+            "{:>6}  {:>7}  {:>7.3}  {:>5.1}",
+            w.id,
+            w.updates,
+            w.busy_s,
+            100.0 * w.idle_fraction()
+        );
     }
 
     let kkt = kkt_residual(&problem, &asyn.state);
-    println!("\nfinal KKT residual (async): dual={:.2e} stat={:.2e} cons={:.2e}", kkt.dual, kkt.stationarity, kkt.consensus);
+    println!(
+        "\nfinal KKT residual (async): dual={:.2e} stat={:.2e} cons={:.2e}",
+        kkt.dual, kkt.stationarity, kkt.consensus
+    );
 }

@@ -18,7 +18,13 @@ fn main() {
 
     // 3. Asynchronous run: τ = 5, master proceeds with A = 1 arrival,
     //    heterogeneous workers (half slow p=0.1, half fast p=0.8).
-    let cfg = AdmmConfig { rho: 100.0, tau: 5, min_arrivals: 1, max_iters: 600, ..Default::default() };
+    let cfg = AdmmConfig {
+        rho: 100.0,
+        tau: 5,
+        min_arrivals: 1,
+        max_iters: 600,
+        ..Default::default()
+    };
     let arrivals = ArrivalModel::fig3_profile(8, 1);
     let out = run_master_pov(&problem, &cfg, &arrivals);
     let kkt = kkt_residual(&problem, &out.state);

@@ -27,7 +27,9 @@ fn main() {
         let mut irng = Pcg64::seed_from_u64(1234);
         irng.fill_normal(&mut init);
         let nrm = init.iter().map(|v| v * v).sum::<f64>().sqrt();
-        for v in init.iter_mut() { *v /= nrm; }
+        for v in init.iter_mut() {
+            *v /= nrm;
+        }
     }
 
     println!("sparse PCA: N={n_workers}, B_j {m}x{n} ({nnz} nnz), max λmax(BᵀB) = {lam_max:.3}");
@@ -35,13 +37,25 @@ fn main() {
     // Reference F̂: long synchronous run at β = 3 (the paper's protocol).
     let lip = 2.0 * lam_max; // L = Lipschitz constant of grad f_j
     let rho = 3.0 * lip; // beta = 3 in the paper's rule rho = beta*L
-    let ref_cfg = AdmmConfig { rho, tau: 1, max_iters: 10_000, init_x0: Some(init.clone()), ..Default::default() };
+    let ref_cfg = AdmmConfig {
+        rho,
+        tau: 1,
+        max_iters: 10_000,
+        init_x0: Some(init.clone()),
+        ..Default::default()
+    };
     let f_hat = run_sync_admm(&problem, &ref_cfg).history.last().unwrap().aug_lagrangian;
     println!("reference F̂ = {f_hat:.8e} (10k synchronous iterations, β=3)\n");
 
     println!("{:>6} {:>10} {:>14} {:>12} {:>10}", "tau", "iters", "objective", "accuracy", "KKT");
     for tau in [1usize, 5, 10, 20] {
-        let cfg = AdmmConfig { rho, tau, max_iters: iters, init_x0: Some(init.clone()), ..Default::default() };
+        let cfg = AdmmConfig {
+            rho,
+            tau,
+            max_iters: iters,
+            init_x0: Some(init.clone()),
+            ..Default::default()
+        };
         let arrivals = ArrivalModel::fig3_profile(n_workers, seed + tau as u64);
         let out = run_master_pov(&problem, &cfg, &arrivals);
         let acc = ad_admm::metrics::accuracy_series(&out.history, f_hat);

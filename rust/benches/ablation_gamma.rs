@@ -13,13 +13,15 @@ use ad_admm::metrics::accuracy_series;
 use ad_admm::prelude::*;
 
 fn main() {
+    let quick = ad_admm::bench::quick_mode();
     // ---------------------------------------------------------- γ ablation
     let n_workers = 8;
     let tau = 8usize;
+    let gamma_iters = if quick { 150 } else { 1500 };
     let mut rng = Pcg64::seed_from_u64(77);
     let inst = LassoInstance::synthetic(&mut rng, n_workers, 60, 40, 0.1, 0.1);
     let problem = inst.problem();
-    let (_, f_star) = fista_lasso(&inst, 40_000);
+    let (_, f_star) = fista_lasso(&inst, if quick { 5_000 } else { 40_000 });
     let rho = 100.0;
 
     // Theorem-1 worst case with S = N (no arrival bound exploited).
@@ -28,7 +30,7 @@ fn main() {
     println!("Theorem-1 worst-case gamma = {gamma_thm:.3e} (paper's experiments use 0)\n");
     println!("{:>14} {:>10} {:>12} {:>12}", "gamma", "iters", "acc@500", "acc@final");
     for gamma in [0.0, 0.1 * gamma_thm, gamma_thm] {
-        let cfg = AdmmConfig { rho, gamma, tau, max_iters: 1500, ..Default::default() };
+        let cfg = AdmmConfig { rho, gamma, tau, max_iters: gamma_iters, ..Default::default() };
         let arrivals = ArrivalModel::fig3_profile(n_workers, 5);
         let out = run_master_pov(&problem, &cfg, &arrivals);
         let acc = accuracy_series(&out.history, f_star);
@@ -45,12 +47,14 @@ fn main() {
 
     // ---------------------------------------------------------- ρ ablation
     println!("\n=== rho ablation (non-convex sparse PCA, N=8, sync) ===");
+    let (spca_m, spca_n, spca_nnz) = if quick { (40, 20, 80) } else { (120, 60, 600) };
+    let (rho_ref_iters, rho_iters) = if quick { (600, 300) } else { (6000, 3000) };
     let mut rng = Pcg64::seed_from_u64(78);
-    let sinst = SparsePcaInstance::synthetic(&mut rng, 8, 120, 60, 600, 0.1);
+    let sinst = SparsePcaInstance::synthetic(&mut rng, 8, spca_m, spca_n, spca_nnz, 0.1);
     let sproblem = sinst.problem();
     let lam_max = sinst.max_lambda_max();
     let l = 2.0 * lam_max; // Lipschitz constant of ∇f_j
-    let mut init = vec![0.0; 60];
+    let mut init = vec![0.0; spca_n];
     rng.fill_normal(&mut init);
     let nrm = init.iter().map(|v| v * v).sum::<f64>().sqrt();
     for v in init.iter_mut() {
@@ -60,13 +64,25 @@ fn main() {
     println!("L = {l:.2}, Theorem-1 rho threshold (16) = {rho_rule:.2}");
 
     // reference from a clearly-convergent run
-    let ref_cfg = AdmmConfig { rho: 3.0 * l, tau: 1, max_iters: 6000, init_x0: Some(init.clone()), ..Default::default() };
+    let ref_cfg = AdmmConfig {
+        rho: 3.0 * l,
+        tau: 1,
+        max_iters: rho_ref_iters,
+        init_x0: Some(init.clone()),
+        ..Default::default()
+    };
     let f_hat = run_sync_admm(&sproblem, &ref_cfg).history.last().unwrap().aug_lagrangian;
 
     println!("{:>12} {:>10} {:>12} {:>10}", "rho/L", "rho", "acc@final", "stop");
     for beta in [1.0, 1.5, 1.9, 2.05, 3.0, 4.0] {
         let rho = beta * l;
-        let cfg = AdmmConfig { rho, tau: 1, max_iters: 3000, init_x0: Some(init.clone()), ..Default::default() };
+        let cfg = AdmmConfig {
+            rho,
+            tau: 1,
+            max_iters: rho_iters,
+            init_x0: Some(init.clone()),
+            ..Default::default()
+        };
         let out = run_sync_admm(&sproblem, &cfg);
         let acc = accuracy_series(&out.history, f_hat);
         println!(

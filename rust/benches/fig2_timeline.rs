@@ -16,16 +16,23 @@ use ad_admm::prelude::*;
 use ad_admm::util::CsvWriter;
 
 fn main() {
+    let quick = ad_admm::bench::quick_mode();
     let n_workers = 4;
     let mut rng = Pcg64::seed_from_u64(2);
     let inst = LassoInstance::synthetic(&mut rng, n_workers, 40, 20, 0.1, 0.1);
     let problem = inst.problem();
 
     // Fig. 2's heterogeneity: workers 1/3 fast, 2/4 slow.
-    let delays = DelayModel::Fixed { per_worker_ms: vec![1.0, 6.0, 1.5, 8.0] };
-    let iters = 120;
-
-    println!("=== Fig. 2: sync vs async timeline (N=4, worker delays 1/6/1.5/8 ms) ===");
+    let per_worker_ms = if quick {
+        vec![0.1, 0.6, 0.15, 0.8]
+    } else {
+        vec![1.0, 6.0, 1.5, 8.0]
+    };
+    let iters = if quick { 20 } else { 120 };
+    println!(
+        "=== Fig. 2: sync vs async timeline (N=4, worker delays {per_worker_ms:?} ms) ==="
+    );
+    let delays = DelayModel::Fixed { per_worker_ms };
     let mut rows = Vec::new();
     for (label, tau, min_arrivals) in [("sync", 1usize, n_workers), ("async", 8, 2)] {
         let cfg = ClusterConfig {
@@ -38,7 +45,7 @@ fn main() {
             },
             protocol: Protocol::AdAdmm,
             delays: delays.clone(),
-            faults: None,
+            ..Default::default()
         };
         let r = StarCluster::new(problem.clone()).run(&cfg);
         println!("\n--- {label} (tau={tau}, A={min_arrivals}) ---");

@@ -19,7 +19,7 @@ use ad_admm::prelude::*;
 use ad_admm::util::Stopwatch;
 
 fn main() {
-    let quick = std::env::var("FIG3_QUICK").is_ok();
+    let quick = ad_admm::bench::quick_mode() || std::env::var("FIG3_QUICK").is_ok();
     // Paper scale by default; quick mode for smoke runs.
     let (n_workers, m, n, nnz, iters, ref_iters) = if quick {
         (8, 100, 50, 500, 300, 2000)
@@ -47,7 +47,13 @@ fn main() {
     // F̂: 10k synchronous iterations at β = 3 (paper protocol).
     let lip = 2.0 * lam_max; // Lipschitz constant of grad f_j
     let rho3 = 3.0 * lip;
-    let ref_cfg = AdmmConfig { rho: rho3, tau: 1, max_iters: ref_iters, init_x0: Some(init.clone()), ..Default::default() };
+    let ref_cfg = AdmmConfig {
+        rho: rho3,
+        tau: 1,
+        max_iters: ref_iters,
+        init_x0: Some(init.clone()),
+        ..Default::default()
+    };
     let f_hat = run_sync_admm(&problem, &ref_cfg).history.last().unwrap().aug_lagrangian;
     println!("F̂ = {f_hat:.8e}");
 
@@ -55,19 +61,37 @@ fn main() {
     println!("\nβ = 3 (Theorem-1 regime — paper: converges for all tau):");
     println!("{:>6} {:>12} {:>12} {:>10}", "tau", "acc@250", "acc@final", "iters");
     for tau in [1usize, 5, 10, 20] {
-        let cfg = AdmmConfig { rho: rho3, tau, max_iters: iters, init_x0: Some(init.clone()), ..Default::default() };
+        let cfg = AdmmConfig {
+            rho: rho3,
+            tau,
+            max_iters: iters,
+            init_x0: Some(init.clone()),
+            ..Default::default()
+        };
         let arrivals = ArrivalModel::fig3_profile(n_workers, 100 + tau as u64);
         let out = run_master_pov(&problem, &cfg, &arrivals);
         let acc = accuracy_series(&out.history, f_hat);
         let at250 = acc.get(249.min(acc.len() - 1)).copied().unwrap_or(f64::INFINITY);
-        println!("{:>6} {:>12.3e} {:>12.3e} {:>10}", tau, at250, acc.last().unwrap(), out.history.len());
+        println!(
+            "{:>6} {:>12.3e} {:>12.3e} {:>10}",
+            tau,
+            at250,
+            acc.last().unwrap(),
+            out.history.len()
+        );
         curves.push(RunLog::new(format!("beta3_tau{tau}"), out.history));
     }
 
     println!("\nβ = 1.5 (rho below the non-convex requirement — paper: diverges):");
     let rho15 = 1.5 * lip;
     for tau in [1usize, 10] {
-        let cfg = AdmmConfig { rho: rho15, tau, max_iters: iters, init_x0: Some(init.clone()), ..Default::default() };
+        let cfg = AdmmConfig {
+            rho: rho15,
+            tau,
+            max_iters: iters,
+            init_x0: Some(init.clone()),
+            ..Default::default()
+        };
         let arrivals = ArrivalModel::fig3_profile(n_workers, 200 + tau as u64);
         let out = run_master_pov(&problem, &cfg, &arrivals);
         let acc = accuracy_series(&out.history, f_hat);
@@ -89,11 +113,19 @@ fn main() {
         .zip(&acc_series)
         .map(|(c, ys)| Series { label: &c.label, ys })
         .collect();
-    println!("\naccuracy (51) vs iteration (log scale):\n{}", render_log_curves(&plot_series, 72, 18));
+    println!(
+        "\naccuracy (51) vs iteration (log scale):\n{}",
+        render_log_curves(&plot_series, 72, 18)
+    );
     for (c, ys) in curves.iter().zip(&acc_series) {
         if let Some(fit) = fit_linear_rate(ys, 0.8) {
             if fit.is_linear() {
-                println!("  {}: empirically linear, rate {:.4} ({:.1} iters/digit)", c.label, fit.rate, fit.iters_per_digit());
+                println!(
+                    "  {}: empirically linear, rate {:.4} ({:.1} iters/digit)",
+                    c.label,
+                    fit.rate,
+                    fit.iters_per_digit()
+                );
             }
         }
     }

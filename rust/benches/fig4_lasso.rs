@@ -30,7 +30,7 @@ struct Panel {
 }
 
 fn main() {
-    let quick = std::env::var("FIG4_QUICK").is_ok();
+    let quick = ad_admm::bench::quick_mode() || std::env::var("FIG4_QUICK").is_ok();
     let (n_workers, m, iters) = if quick { (8, 60, 400) } else { (16, 200, 2000) };
     let (n_small, n_large) = if quick { (30, 120) } else { (100, 1000) };
     let theta = 0.1;
@@ -48,7 +48,13 @@ fn main() {
             name: "4b_alg4_small",
             n: n_small,
             alg2: false,
-            settings: vec![(500.0, 1), (500.0, 3), (10.0, 3), (10.0, 10), (1.0, 10)],
+            settings: vec![
+                (500.0, 1),
+                (500.0, 3),
+                (10.0, 3),
+                (10.0, 10),
+                (1.0, 10),
+            ],
             expected: "Algorithm 4: rho=500 ok at tau=1 but diverges at tau=3; smaller rho converges slowly",
         },
         Panel {
@@ -109,7 +115,10 @@ fn main() {
             .zip(&acc_series)
             .map(|(c, ys)| Series { label: &c.label, ys })
             .collect();
-        println!("\naccuracy (53) vs iteration (log scale):\n{}", render_log_curves(&plot_series, 72, 16));
+        println!(
+            "\naccuracy (53) vs iteration (log scale):\n{}",
+            render_log_curves(&plot_series, 72, 16)
+        );
         for (c, ys) in curves.iter().zip(&acc_series) {
             if let Some(fit) = fit_linear_rate(ys, 0.8) {
                 if fit.is_linear() {

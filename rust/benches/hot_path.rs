@@ -18,7 +18,10 @@ use ad_admm::problems::LassoLocal;
 use ad_admm::runtime::{artifacts_available, artifacts_dir, PjrtLassoSolver, PjrtMasterProx};
 
 fn main() {
-    for &(m, n) in &[(200usize, 100usize), (200, 1000)] {
+    let quick = ad_admm::bench::quick_mode();
+    let shapes: &[(usize, usize)] = if quick { &[(60, 30)] } else { &[(200, 100), (200, 1000)] };
+    let (warm, samples) = if quick { (1, 5) } else { (3, 50) };
+    for &(m, n) in shapes {
         banner(&format!("worker hot path, block {m}x{n}"));
         let mut rng = Pcg64::seed_from_u64(5);
         let a = DenseMatrix::randn(&mut rng, m, n);
@@ -30,13 +33,13 @@ fn main() {
 
         // warm the rho cache, then measure the cached path
         local.solve_subproblem(&lam, &x0, 500.0, &mut out);
-        let stats = bench_fn(3, 50, || {
+        let stats = bench_fn(warm, samples, || {
             local.solve_subproblem(black_box(&lam), black_box(&x0), 500.0, &mut out);
             black_box(&out);
         });
         report(&format!("native worker solve (cached chol) {m}x{n}"), &stats);
 
-        let stats = bench_fn(1, 5, || {
+        let stats = bench_fn(1, if quick { 2 } else { 5 }, || {
             // fresh local cost → full gram + factorization every time
             let fresh = LassoLocal::new(a.clone(), b.clone());
             fresh.solve_subproblem(black_box(&lam), black_box(&x0), 500.0, &mut out);
@@ -47,24 +50,25 @@ fn main() {
         let x: Vec<f64> = (0..n).map(|i| (i as f64).sin()).collect();
         let mut scratch = vec![0.0; m];
         let mut y = vec![0.0; n];
-        let stats = bench_fn(5, 200, || {
+        let stats = bench_fn(5, if quick { 20 } else { 200 }, || {
             a.gram_matvec_into(black_box(&x), &mut scratch, &mut y);
             black_box(&y);
         });
         report(&format!("native gram matvec                {m}x{n}"), &stats);
     }
 
-    banner("master hot path (N=16, n=1000)");
+    let master_n = if quick { 100 } else { 1000 };
+    banner(&format!("master hot path (N=16, n={master_n})"));
     {
         let mut rng = Pcg64::seed_from_u64(6);
-        let inst = LassoInstance::synthetic(&mut rng, 4, 20, 1000, 0.05, 0.1);
+        let inst = LassoInstance::synthetic(&mut rng, 4, 20, master_n, 0.05, 0.1);
         let problem = inst.problem();
-        let mut state = AdmmState::zeros(4, 1000);
+        let mut state = AdmmState::zeros(4, master_n);
         for i in 0..4 {
             rng.fill_normal(&mut state.xs[i]);
             rng.fill_normal(&mut state.lams[i]);
         }
-        let stats = bench_fn(5, 200, || {
+        let stats = bench_fn(5, if quick { 20 } else { 200 }, || {
             master_x0_update(&problem, &mut state, 500.0, 0.0);
             black_box(&state.x0);
         });
@@ -73,8 +77,9 @@ fn main() {
 
     banner("end-to-end master iteration (serial Algorithm 3, N=16, n=100)");
     {
+        let e2e_m = if quick { 40 } else { 200 };
         let mut rng = Pcg64::seed_from_u64(7);
-        let inst = LassoInstance::synthetic(&mut rng, 16, 200, 100, 0.05, 0.1);
+        let inst = LassoInstance::synthetic(&mut rng, 16, e2e_m, 100, 0.05, 0.1);
         let problem = inst.problem();
         let arrivals = ArrivalModel::fig4_profile(16, 3);
         // measure per-iteration cost via a fixed-length run
@@ -101,7 +106,7 @@ fn main() {
         report("50 iterations, objective_every=50", &stats);
     }
 
-    if artifacts_available() {
+    if ad_admm::runtime::pjrt_enabled() && artifacts_available() {
         banner("PJRT hot path (AOT JAX/Pallas artifacts)");
         let engine = Arc::new(PjrtEngine::load(&artifacts_dir()).expect("engine"));
         let mut rng = Pcg64::seed_from_u64(8);
@@ -141,6 +146,6 @@ fn main() {
             report("PJRT gram matvec (pallas) 200x100", &stats);
         }
     } else {
-        println!("\n(PJRT section skipped — run `make artifacts` first)");
+        println!("\n(PJRT section skipped — needs the `pjrt` feature and `make artifacts`)");
     }
 }

@@ -15,7 +15,10 @@ use ad_admm::prelude::*;
 use ad_admm::util::CsvWriter;
 
 fn main() {
-    let iters = 150;
+    let quick = ad_admm::bench::quick_mode();
+    let iters = if quick { 25 } else { 150 };
+    let fista_iters = if quick { 5_000 } else { 30_000 };
+    let worker_counts: &[usize] = if quick { &[2, 4] } else { &[2, 4, 8, 16] };
     println!("=== wall-clock speedup: async (tau=8, A=1) vs sync, lognormal delays 0.5-6 ms ===");
     println!(
         "{:>4} {:>12} {:>12} {:>9} {:>12} {:>12}",
@@ -29,19 +32,25 @@ fn main() {
     )
     .expect("csv");
 
-    for n_workers in [2usize, 4, 8, 16] {
+    for &n_workers in worker_counts {
         let mut rng = Pcg64::seed_from_u64(900 + n_workers as u64);
         let inst = LassoInstance::synthetic(&mut rng, n_workers, 60, 30, 0.1, 0.1);
         let problem = inst.problem();
-        let (_, f_star) = fista_lasso(&inst, 30_000);
+        let (_, f_star) = fista_lasso(&inst, fista_iters);
         let delays = DelayModel::linear_spread(n_workers, 0.5, 6.0, 0.4, 17);
 
         let run = |tau: usize, min_arrivals: usize| {
             let cfg = ClusterConfig {
-                admm: AdmmConfig { rho: 100.0, tau, min_arrivals, max_iters: iters, ..Default::default() },
+                admm: AdmmConfig {
+                    rho: 100.0,
+                    tau,
+                    min_arrivals,
+                    max_iters: iters,
+                    ..Default::default()
+                },
                 protocol: Protocol::AdAdmm,
                 delays: delays.clone(),
-                faults: None,
+                ..Default::default()
             };
             StarCluster::new(problem.clone()).run(&cfg)
         };

@@ -17,6 +17,15 @@ pub struct ArrivalTrace {
 }
 
 impl ArrivalTrace {
+    /// Number of recorded master iterations.
+    pub fn len(&self) -> usize {
+        self.sets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sets.is_empty()
+    }
+
     /// Check Assumption 1 against a delay bound τ: every worker appears at
     /// least once in every window of τ consecutive iterations (after its
     /// first possible window).
@@ -145,7 +154,9 @@ impl ArrivalSampler {
             SamplerKind::Trace { sets, pos } => {
                 let set = sets
                     .get(*pos)
-                    .unwrap_or_else(|| panic!("arrival trace exhausted at iteration {pos}", pos = *pos))
+                    .unwrap_or_else(|| {
+                        panic!("arrival trace exhausted at iteration {pos}", pos = *pos)
+                    })
                     .clone();
                 *pos += 1;
                 for &i in &set {
@@ -268,5 +279,56 @@ mod tests {
         let t = ArrivalTrace { sets: vec![vec![0, 1], vec![2]] };
         assert_eq!(t.observed_s(4), 3.0);
         assert_eq!(t.observed_s(2), 2.0); // capped at N
+    }
+
+    #[test]
+    fn empty_trace_edge_cases() {
+        let t = ArrivalTrace::default();
+        assert!(t.is_empty());
+        assert_eq!(t.len(), 0);
+        // vacuously satisfies Assumption 1 for every τ (no iterations)
+        for tau in 1..5 {
+            assert!(t.satisfies_bounded_delay(3, tau));
+        }
+        // S is clamped to ≥ 1 even with no arrivals observed
+        assert_eq!(t.observed_s(4), 1.0);
+        assert_eq!(t.observed_s(0), 1.0);
+    }
+
+    #[test]
+    fn tau_one_requires_everyone_every_iteration() {
+        // τ = 1 means synchronous: any missing worker is an immediate
+        // violation at that iteration.
+        let full = ArrivalTrace { sets: vec![vec![0, 1, 2]; 4] };
+        assert!(full.satisfies_bounded_delay(3, 1));
+        let miss = ArrivalTrace { sets: vec![vec![0, 1, 2], vec![0, 2], vec![0, 1, 2]] };
+        assert!(!miss.satisfies_bounded_delay(3, 1));
+    }
+
+    #[test]
+    fn worker_never_arriving() {
+        // Worker 1 is absent for the whole L-iteration trace. Counting from
+        // the A_{-1} = V convention, the violation appears exactly when the
+        // trace is at least τ iterations long.
+        for len in 1..6 {
+            let t = ArrivalTrace { sets: vec![vec![0]; len] };
+            for tau in 1..8 {
+                let ok = t.satisfies_bounded_delay(2, tau);
+                assert_eq!(ok, len < tau, "len={len} tau={tau} → {ok}");
+            }
+        }
+        // observed_s only counts arrivals; the absentee does not inflate S
+        let t = ArrivalTrace { sets: vec![vec![0]; 3] };
+        assert_eq!(t.observed_s(2), 2.0);
+    }
+
+    #[test]
+    fn observed_s_strictness() {
+        // |A_k| = 1 everywhere: the strict bound S must exceed it.
+        let t = ArrivalTrace { sets: vec![vec![0], vec![1], vec![0]] };
+        assert_eq!(t.observed_s(8), 2.0);
+        // all-N sets: the cap keeps S ≤ N
+        let full = ArrivalTrace { sets: vec![vec![0, 1, 2]] };
+        assert_eq!(full.observed_s(3), 3.0);
     }
 }

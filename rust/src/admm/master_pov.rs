@@ -12,7 +12,8 @@ use crate::problems::ConsensusProblem;
 
 use super::arrivals::{ArrivalModel, ArrivalTrace};
 use super::{
-    augmented_lagrangian_cached, master_x0_update, AdmmConfig, AdmmState, IterRecord, StopReason,
+    divergence_or_tol_stop, iter_record, master_x0_update, AdmmConfig, AdmmState, IterRecord,
+    StopReason,
 };
 
 /// Pluggable worker-subproblem solver: the native path delegates to
@@ -127,29 +128,14 @@ pub fn run_master_pov_with_solver(
             x0_snap[i].copy_from_slice(&state.x0);
         }
 
-        let aug = augmented_lagrangian_cached(problem, &state, cfg.rho, &f_cache, &mut al_scratch);
-        let x0_change = crate::linalg::vecops::dist2(&state.x0, &prev_x0);
-        let objective = if cfg.objective_every > 0 && k % cfg.objective_every == 0 {
-            problem.objective(&state.x0)
-        } else {
-            f64::NAN
-        };
-        history.push(IterRecord {
-            k,
-            objective,
-            aug_lagrangian: aug,
-            consensus: state.consensus_residual(),
-            x0_change,
-            arrivals: set.len(),
-        });
+        let rec =
+            iter_record(problem, &state, cfg, k, set.len(), &f_cache, &mut al_scratch, &prev_x0);
+        let early = divergence_or_tol_stop(cfg, &state, &rec, k);
+        history.push(rec);
         trace.sets.push(set);
 
-        if !state.is_finite() || aug.abs() > cfg.divergence_threshold {
-            stop = StopReason::Diverged;
-            break;
-        }
-        if cfg.x0_tol > 0.0 && x0_change <= cfg.x0_tol && k > 0 {
-            stop = StopReason::X0Tolerance;
+        if let Some(reason) = early {
+            stop = reason;
             break;
         }
         if let Some(rule) = &cfg.stopping {

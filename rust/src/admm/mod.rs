@@ -203,6 +203,56 @@ pub fn master_x0_update(problem: &ConsensusProblem, state: &mut AdmmState, rho: 
     state.x0 = v;
 }
 
+/// Assemble the [`IterRecord`] for iteration `k` from the post-update
+/// state. Shared by every coordinator (serial Algorithm 3, Algorithm 4,
+/// the threaded star cluster and the virtual-time simulator) so that two
+/// runs realizing the same arrival trace produce **bit-identical**
+/// histories — the equivalence the `cluster_e2e`/`virtual_time` tests pin.
+pub(crate) fn iter_record(
+    problem: &ConsensusProblem,
+    state: &AdmmState,
+    cfg: &AdmmConfig,
+    k: usize,
+    arrivals: usize,
+    f_cache: &[f64],
+    al_scratch: &mut Vec<f64>,
+    prev_x0: &[f64],
+) -> IterRecord {
+    let aug = augmented_lagrangian_cached(problem, state, cfg.rho, f_cache, al_scratch);
+    let x0_change = vecops::dist2(&state.x0, prev_x0);
+    let objective = if cfg.objective_every > 0 && k % cfg.objective_every == 0 {
+        problem.objective(&state.x0)
+    } else {
+        f64::NAN
+    };
+    IterRecord {
+        k,
+        objective,
+        aug_lagrangian: aug,
+        consensus: state.consensus_residual(),
+        x0_change,
+        arrivals,
+    }
+}
+
+/// The divergence / `x₀`-tolerance stop checks shared by all coordinators.
+/// (The residual-based [`stopping::StoppingRule`] stays with the callers
+/// that support it.)
+pub(crate) fn divergence_or_tol_stop(
+    cfg: &AdmmConfig,
+    state: &AdmmState,
+    rec: &IterRecord,
+    k: usize,
+) -> Option<StopReason> {
+    if !state.is_finite() || rec.aug_lagrangian.abs() > cfg.divergence_threshold {
+        return Some(StopReason::Diverged);
+    }
+    if cfg.x0_tol > 0.0 && rec.x0_change <= cfg.x0_tol && k > 0 {
+        return Some(StopReason::X0Tolerance);
+    }
+    None
+}
+
 /// Per-iteration record used by figures, tests and logs.
 #[derive(Clone, Debug)]
 pub struct IterRecord {

@@ -9,7 +9,10 @@
 use crate::problems::ConsensusProblem;
 
 use super::master_pov::{NativeSolver, SubproblemSolver};
-use super::{augmented_lagrangian, master_x0_update, AdmmConfig, AdmmState, IterRecord, StopReason};
+use super::{
+    augmented_lagrangian, divergence_or_tol_stop, master_x0_update, AdmmConfig, AdmmState,
+    IterRecord, StopReason,
+};
 
 /// Result of a synchronous run.
 pub struct SyncOutput {
@@ -52,23 +55,18 @@ pub fn run_sync_admm_with_solver(
             }
         }
 
-        let aug = augmented_lagrangian(problem, &state, cfg.rho);
-        let x0_change = crate::linalg::vecops::dist2(&state.x0, &prev_x0);
-        history.push(IterRecord {
+        let rec = IterRecord {
             k,
             objective: problem.objective(&state.x0),
-            aug_lagrangian: aug,
+            aug_lagrangian: augmented_lagrangian(problem, &state, cfg.rho),
             consensus: state.consensus_residual(),
-            x0_change,
+            x0_change: crate::linalg::vecops::dist2(&state.x0, &prev_x0),
             arrivals: n_workers,
-        });
-
-        if !state.is_finite() || aug.abs() > cfg.divergence_threshold {
-            stop = StopReason::Diverged;
-            break;
-        }
-        if cfg.x0_tol > 0.0 && x0_change <= cfg.x0_tol && k > 0 {
-            stop = StopReason::X0Tolerance;
+        };
+        let early = divergence_or_tol_stop(cfg, &state, &rec, k);
+        history.push(rec);
+        if let Some(reason) = early {
+            stop = reason;
             break;
         }
         if let Some(rule) = &cfg.stopping {

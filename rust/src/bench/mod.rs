@@ -13,6 +13,17 @@ pub fn black_box<T>(x: T) -> T {
     std_black_box(x)
 }
 
+/// True when the shared quick-mode switch `AD_ADMM_BENCH_QUICK` is set in
+/// the environment (to *any* value — presence is what counts; unset it to
+/// run full scale). The CI bench-smoke job sets it so every bench in
+/// `rust/benches/` runs one reduced-size iteration and can never bit-rot
+/// silently; full paper-scale runs remain the default. The fig3/fig4
+/// benches additionally honour their older `FIG3_QUICK`/`FIG4_QUICK`
+/// variables on their own.
+pub fn quick_mode() -> bool {
+    std::env::var_os("AD_ADMM_BENCH_QUICK").is_some()
+}
+
 /// Summary statistics over a set of per-iteration timings (seconds).
 #[derive(Clone, Debug)]
 pub struct BenchStats {

@@ -1,0 +1,171 @@
+//! Virtual time for the star cluster: a simulated [`Clock`] plus the
+//! deterministic discrete-event queue that drives it.
+//!
+//! The real-thread mode injects delays by sleeping on the OS clock; the
+//! virtual-time mode replaces every sleep with an *event* — "worker `i`
+//! finishes computing at `t`", "worker `i`'s result reaches the master at
+//! `t`" — ordered by `(time, sequence)` so ties resolve by enqueue order
+//! and the whole simulation is bit-reproducible. This is what lets the
+//! Section-V τ / `|A_k| ≥ A` sweeps run with thousands of workers in
+//! milliseconds instead of wall-clock hours.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::util::timer::Clock;
+
+/// A simulated clock: reads in seconds, advanced only by the event loop.
+#[derive(Clone, Debug, Default)]
+pub struct VirtualClock {
+    now_s: f64,
+}
+
+impl VirtualClock {
+    pub fn new() -> Self {
+        VirtualClock { now_s: 0.0 }
+    }
+
+    /// Advance to an event timestamp. Time never runs backwards; an event
+    /// stamped in the past (numerically possible with f64 ties) leaves the
+    /// clock unchanged.
+    pub fn advance_to(&mut self, t_s: f64) {
+        if t_s > self.now_s {
+            self.now_s = t_s;
+        }
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now_s(&self) -> f64 {
+        self.now_s
+    }
+}
+
+/// What happens at an event timestamp.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// Worker finished its subproblem compute; the result now enters the
+    /// communication link.
+    ComputeDone,
+    /// The worker's message reached the master (arrival of Step 4).
+    Arrive,
+}
+
+/// One scheduled event. Ordered by `(time, seq)`: earlier time first, FIFO
+/// among equal timestamps — the determinism contract of the simulator.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    pub time_s: f64,
+    pub seq: u64,
+    pub worker: usize,
+    pub kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.time_s
+            .total_cmp(&other.time_s)
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// Deterministic min-heap of events.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<std::cmp::Reverse<Event>>,
+    next_seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), next_seq: 0 }
+    }
+
+    /// Schedule `kind` for `worker` at absolute time `time_s`.
+    pub fn push(&mut self, time_s: f64, worker: usize, kind: EventKind) {
+        debug_assert!(time_s.is_finite(), "event time must be finite");
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(std::cmp::Reverse(Event { time_s, seq, worker, kind }));
+    }
+
+    /// Pop the earliest event (ties: FIFO).
+    pub fn pop(&mut self) -> Option<Event> {
+        self.heap.pop().map(|r| r.0)
+    }
+
+    /// Timestamp of the earliest pending event.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|r| r.0.time_s)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_clock_monotone() {
+        let mut c = VirtualClock::new();
+        assert_eq!(c.now_s(), 0.0);
+        c.advance_to(2.5);
+        assert_eq!(c.now_s(), 2.5);
+        c.advance_to(1.0); // never backwards
+        assert_eq!(c.now_s(), 2.5);
+    }
+
+    #[test]
+    fn events_pop_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, 0, EventKind::Arrive);
+        q.push(1.0, 1, EventKind::Arrive);
+        q.push(2.0, 2, EventKind::ComputeDone);
+        let order: Vec<usize> = std::iter::from_fn(|| q.pop()).map(|e| e.worker).collect();
+        assert_eq!(order, vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn equal_times_resolve_fifo() {
+        let mut q = EventQueue::new();
+        for w in [5usize, 3, 9, 1] {
+            q.push(1.0, w, EventKind::Arrive);
+        }
+        let order: Vec<usize> = std::iter::from_fn(|| q.pop()).map(|e| e.worker).collect();
+        assert_eq!(order, vec![5, 3, 9, 1], "FIFO among ties");
+    }
+
+    #[test]
+    fn peek_matches_pop() {
+        let mut q = EventQueue::new();
+        assert!(q.is_empty());
+        assert_eq!(q.peek_time(), None);
+        q.push(0.5, 0, EventKind::Arrive);
+        q.push(0.25, 1, EventKind::Arrive);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.peek_time(), Some(0.25));
+        assert_eq!(q.pop().unwrap().worker, 1);
+        assert_eq!(q.peek_time(), Some(0.5));
+    }
+}

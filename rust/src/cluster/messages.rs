@@ -1,6 +1,9 @@
-//! Wire messages of the star links.
+//! Wire messages of the star links — shared verbatim by the real-thread
+//! mode (sent over mpsc channels) and the virtual-time mode (whose events
+//! stand in for their transit).
 
 /// Master → worker.
+#[derive(Clone, Debug)]
 pub enum MasterMsg {
     /// Compute one subproblem round against this x₀ (and, for Algorithm 4,
     /// this master-updated dual).
@@ -10,6 +13,7 @@ pub enum MasterMsg {
 }
 
 /// Worker → master: the arrived variables `(x̂_i, λ̂_i)` of Step 4.
+#[derive(Clone, Debug)]
 pub struct WorkerMsg {
     pub id: usize,
     pub x: Vec<f64>,

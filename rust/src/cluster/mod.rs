@@ -1,33 +1,44 @@
-//! The threaded star cluster: a real (in-process) implementation of the
-//! master/worker protocol of Algorithm 2 and Algorithm 4.
+//! The star cluster: master/worker implementations of Algorithm 2 and
+//! Algorithm 4 in two execution modes behind one [`ClusterConfig`]:
 //!
-//! One OS thread per worker, unbounded mpsc channels for the star links,
-//! the master running on the calling thread. Heterogeneous computation and
-//! communication delays are injected per worker through [`DelayModel`],
-//! reproducing the paper's motivating Fig. 2 scenario (fast workers idle
-//! under the synchronous protocol; the asynchronous master updates as soon
-//! as `A` workers arrived while honouring the τ gate).
+//! - **[`ExecutionMode::RealThreads`]** — one OS thread per worker,
+//!   unbounded mpsc channels for the star links, the master on the calling
+//!   thread. Heterogeneous compute/communication delays are injected as
+//!   real sleeps through [`DelayModel`], reproducing the paper's motivating
+//!   Fig. 2 wall-clock scenario (fast workers idle under the synchronous
+//!   protocol; the asynchronous master updates as soon as `A` workers
+//!   arrived while honouring the τ gate).
+//! - **[`ExecutionMode::VirtualTime`]** — the same protocol driven by a
+//!   deterministic discrete-event scheduler ([`sim`]) on a simulated
+//!   [`clock::VirtualClock`]: delays become *events*, not sleeps, so a
+//!   1000-worker × 500-iteration run finishes in well under a second and
+//!   is bit-reproducible across machines. This is the mode the Section-V
+//!   τ / `|A_k| ≥ A` sweeps use in CI.
 //!
-//! The protocol semantics are *identical* to the serial
+//! Both modes realize semantics *identical* to the serial
 //! [`crate::admm::master_pov`] simulator — given the same realized arrival
-//! trace the two produce bit-equal iterates (enforced by the
-//! `cluster_e2e` integration test).
+//! trace all three produce bit-equal iterates (enforced by the
+//! `cluster_e2e` and `virtual_time` integration tests).
 
+pub mod clock;
 pub mod messages;
+pub mod sim;
 pub mod timeline;
 pub mod worker;
 
 use std::sync::mpsc;
 use std::sync::Arc;
-use std::time::Instant;
 
 use crate::admm::arrivals::ArrivalTrace;
 use crate::admm::{
-    augmented_lagrangian_cached, master_x0_update, AdmmConfig, AdmmState, IterRecord, StopReason,
+    divergence_or_tol_stop, iter_record, master_x0_update, AdmmConfig, AdmmState, IterRecord,
+    StopReason,
 };
 use crate::problems::ConsensusProblem;
 use crate::rng::Pcg64;
+use crate::util::timer::{Clock, Stopwatch};
 
+pub use clock::VirtualClock;
 pub use messages::{MasterMsg, WorkerMsg};
 pub use timeline::{Timeline, WorkerStats};
 use worker::WorkerSolveFn;
@@ -39,6 +50,21 @@ pub enum Protocol {
     AdAdmm,
     /// Algorithm 4: the master owns all dual updates.
     AltScheme,
+}
+
+/// How the cluster executes.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ExecutionMode {
+    /// One OS thread per worker; injected delays are real sleeps and the
+    /// report's timings are wall-clock. Nondeterministic arrival order
+    /// (that is the point), bounded to a handful of workers in practice.
+    #[default]
+    RealThreads,
+    /// Deterministic discrete-event simulation on a virtual clock: no
+    /// threads, no sleeps. Timings in the report are *simulated* seconds.
+    /// Scales to thousands of workers and reproduces bit-equal iterates
+    /// with [`crate::admm::master_pov::run_master_pov`] on the same trace.
+    VirtualTime,
 }
 
 /// Per-worker delay injection (simulated heterogeneous network/compute).
@@ -57,7 +83,13 @@ pub enum DelayModel {
 impl DelayModel {
     /// A heterogeneous profile: worker i's mean delay grows linearly from
     /// `fast_ms` to `slow_ms` — the paper's "slowest worker" scenario.
-    pub fn linear_spread(n_workers: usize, fast_ms: f64, slow_ms: f64, sigma: f64, seed: u64) -> Self {
+    pub fn linear_spread(
+        n_workers: usize,
+        fast_ms: f64,
+        slow_ms: f64,
+        sigma: f64,
+        seed: u64,
+    ) -> Self {
         let mean_ms = (0..n_workers)
             .map(|i| {
                 if n_workers == 1 {
@@ -112,14 +144,23 @@ pub struct FaultModel {
     pub seed: u64,
 }
 
-/// Cluster configuration = algorithm parameters + protocol + delay model.
+/// Cluster configuration = algorithm parameters + protocol + delay model
+/// + execution mode.
 #[derive(Clone, Debug)]
 pub struct ClusterConfig {
     pub admm: AdmmConfig,
     pub protocol: Protocol,
+    /// Per-round *compute* delay (in real-thread mode: the injected sleep).
     pub delays: DelayModel,
+    /// Optional separate *communication* delay model. `None` folds
+    /// communication into [`ClusterConfig::delays`] (the historical
+    /// behaviour); `Some` gives the virtual-time scheduler distinct
+    /// compute-done / arrive events per round.
+    pub comm_delays: Option<DelayModel>,
     /// Optional communication-failure injection.
     pub faults: Option<FaultModel>,
+    /// Real threads (wall clock) or discrete-event virtual time.
+    pub mode: ExecutionMode,
 }
 
 impl Default for ClusterConfig {
@@ -128,7 +169,9 @@ impl Default for ClusterConfig {
             admm: AdmmConfig::default(),
             protocol: Protocol::AdAdmm,
             delays: DelayModel::None,
+            comm_delays: None,
             faults: None,
+            mode: ExecutionMode::RealThreads,
         }
     }
 }
@@ -140,8 +183,12 @@ pub struct ClusterReport {
     /// Realized arrival sets — replayable through the serial simulator.
     pub trace: ArrivalTrace,
     pub stop: StopReason,
+    /// Total run time in seconds — wall clock in
+    /// [`ExecutionMode::RealThreads`], simulated time in
+    /// [`ExecutionMode::VirtualTime`].
     pub wall_clock_s: f64,
-    /// Seconds the master spent blocked waiting for arrivals.
+    /// Seconds the master spent blocked waiting for arrivals (same clock
+    /// as `wall_clock_s`).
     pub master_wait_s: f64,
     pub workers: Vec<WorkerStats>,
 }
@@ -177,6 +224,18 @@ impl StarCluster {
         solvers: Option<Vec<WorkerSolveFn>>,
     ) -> ClusterReport {
         cfg.admm.validate(self.problem.num_workers()).expect("invalid AdmmConfig");
+        match cfg.mode {
+            ExecutionMode::RealThreads => self.run_threaded(cfg, solvers),
+            ExecutionMode::VirtualTime => sim::run_virtual(&self.problem, cfg, solvers),
+        }
+    }
+
+    /// The real-thread implementation (historical default).
+    fn run_threaded(
+        &self,
+        cfg: &ClusterConfig,
+        solvers: Option<Vec<WorkerSolveFn>>,
+    ) -> ClusterReport {
         let n_workers = self.problem.num_workers();
         let n = self.problem.dim();
         let rho = cfg.admm.rho;
@@ -200,12 +259,15 @@ impl StarCluster {
             let local = Arc::clone(self.problem.local(i));
             let back = to_master.clone();
             let delay = cfg.delays.sampler(i);
+            let comm = cfg.comm_delays.as_ref().map(|d| d.sampler(i));
             let solve = solver_list[i].take();
             let faults = cfg.faults.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("worker-{i}"))
                 .spawn(move || {
-                    worker::worker_loop(i, local, rho, protocol, rx, back, delay, solve, faults)
+                    worker::worker_loop(
+                        i, local, rho, protocol, rx, back, delay, comm, solve, faults,
+                    )
                 })
                 .expect("spawn worker");
             handles.push(handle);
@@ -213,7 +275,7 @@ impl StarCluster {
         drop(to_master);
 
         // ---- master ----
-        let started = Instant::now();
+        let wall = Stopwatch::start();
         let mut state = cfg.admm.initial_state(n_workers, n);
         let mut d = vec![0usize; n_workers];
         let mut history = Vec::with_capacity(cfg.admm.max_iters);
@@ -237,7 +299,7 @@ impl StarCluster {
         for k in 0..cfg.admm.max_iters {
             // Gather until the gate is met: |A_k| ≥ A and every worker with
             // d_i ≥ τ−1 has arrived.
-            let wait_started = Instant::now();
+            let wait_started = wall.now_s();
             loop {
                 while let Ok(msg) = from_workers.try_recv() {
                     let id = msg.id;
@@ -259,7 +321,7 @@ impl StarCluster {
                     Err(_) => break, // all workers gone (shutdown path)
                 }
             }
-            master_wait_s += wait_started.elapsed().as_secs_f64();
+            master_wait_s += wall.now_s() - wait_started;
 
             let set: Vec<usize> = (0..n_workers).filter(|&i| pending[i].is_some()).collect();
             // (9)/(10)/(44): absorb arrived variables.
@@ -301,31 +363,30 @@ impl StarCluster {
                     .expect("worker alive");
             }
 
-            let aug =
-                augmented_lagrangian_cached(&self.problem, &state, rho, &f_cache, &mut al_scratch);
-            let x0_change = crate::linalg::vecops::dist2(&state.x0, &prev_x0);
-            let objective = if cfg.admm.objective_every > 0 && k % cfg.admm.objective_every == 0 {
-                self.problem.objective(&state.x0)
-            } else {
-                f64::NAN
-            };
-            history.push(IterRecord {
+            let rec = iter_record(
+                &self.problem,
+                &state,
+                &cfg.admm,
                 k,
-                objective,
-                aug_lagrangian: aug,
-                consensus: state.consensus_residual(),
-                x0_change,
-                arrivals: set.len(),
-            });
+                set.len(),
+                &f_cache,
+                &mut al_scratch,
+                &prev_x0,
+            );
+            let early = divergence_or_tol_stop(&cfg.admm, &state, &rec, k);
+            history.push(rec);
             trace.sets.push(set);
 
-            if !state.is_finite() || aug.abs() > cfg.admm.divergence_threshold {
-                stop = StopReason::Diverged;
+            if let Some(reason) = early {
+                stop = reason;
                 break;
             }
-            if cfg.admm.x0_tol > 0.0 && x0_change <= cfg.admm.x0_tol && k > 0 {
-                stop = StopReason::X0Tolerance;
-                break;
+            if let Some(rule) = &cfg.admm.stopping {
+                let r = crate::admm::stopping::residuals(&state, &prev_x0, rho);
+                if k > 0 && rule.satisfied(&r, n, n_workers) {
+                    stop = StopReason::Residuals;
+                    break;
+                }
             }
         }
 
@@ -346,7 +407,7 @@ impl StarCluster {
             history,
             trace,
             stop,
-            wall_clock_s: started.elapsed().as_secs_f64(),
+            wall_clock_s: wall.now_s(),
             master_wait_s,
             workers,
         }
@@ -369,7 +430,13 @@ mod tests {
     fn sync_cluster_converges() {
         let p = problem(111, 4);
         let cfg = ClusterConfig {
-            admm: AdmmConfig { rho: 50.0, tau: 1, min_arrivals: 4, max_iters: 400, ..Default::default() },
+            admm: AdmmConfig {
+                rho: 50.0,
+                tau: 1,
+                min_arrivals: 4,
+                max_iters: 400,
+                ..Default::default()
+            },
             ..Default::default()
         };
         let report = StarCluster::new(p.clone()).run(&cfg);
@@ -385,7 +452,13 @@ mod tests {
         let p = problem(112, 4);
         let tau = 4;
         let cfg = ClusterConfig {
-            admm: AdmmConfig { rho: 50.0, tau, min_arrivals: 1, max_iters: 800, ..Default::default() },
+            admm: AdmmConfig {
+                rho: 50.0,
+                tau,
+                min_arrivals: 1,
+                max_iters: 800,
+                ..Default::default()
+            },
             delays: DelayModel::Fixed { per_worker_ms: vec![0.0, 0.0, 1.0, 2.0] },
             ..Default::default()
         };
@@ -399,7 +472,13 @@ mod tests {
     fn alt_scheme_cluster_runs_synchronously() {
         let p = problem(113, 3);
         let cfg = ClusterConfig {
-            admm: AdmmConfig { rho: 30.0, tau: 1, min_arrivals: 3, max_iters: 400, ..Default::default() },
+            admm: AdmmConfig {
+                rho: 30.0,
+                tau: 1,
+                min_arrivals: 3,
+                max_iters: 400,
+                ..Default::default()
+            },
             protocol: Protocol::AltScheme,
             ..Default::default()
         };
@@ -413,7 +492,13 @@ mod tests {
     fn worker_stats_accumulate() {
         let p = problem(114, 2);
         let cfg = ClusterConfig {
-            admm: AdmmConfig { rho: 20.0, tau: 1, min_arrivals: 2, max_iters: 50, ..Default::default() },
+            admm: AdmmConfig {
+                rho: 20.0,
+                tau: 1,
+                min_arrivals: 2,
+                max_iters: 50,
+                ..Default::default()
+            },
             ..Default::default()
         };
         let report = StarCluster::new(p).run(&cfg);

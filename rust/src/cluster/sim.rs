@@ -1,0 +1,422 @@
+//! Virtual-time star cluster: the Algorithm 2/4 protocol driven by a
+//! deterministic discrete-event scheduler instead of OS threads.
+//!
+//! Every worker cycles through `Go → compute (ComputeDone event) →
+//! transit (Arrive event) → absorbed by the master → Go`, with the
+//! compute/comm durations drawn from the *same* [`super::DelaySampler`]s
+//! the real-thread mode sleeps on. The master gathers arrivals until the
+//! `|A_k| ≥ A` + τ-forcing gate is met, then performs the iteration.
+//!
+//! Two properties make this the CI workhorse:
+//!
+//! 1. **Bit-equivalence.** The per-iteration arithmetic (worker solves in
+//!    ascending id order against their `x₀` snapshots, the shared
+//!    [`iter_record`] bookkeeping) is the exact sequence of
+//!    [`crate::admm::master_pov`]; replaying the realized
+//!    [`ArrivalTrace`] through `run_master_pov` reproduces the history
+//!    bit-for-bit (pinned by the `virtual_time` integration tests).
+//! 2. **Scale.** No sleeps and no threads: a 1000-worker × 500-iteration
+//!    sweep runs in fractions of a second, so the Section-V τ / `A`
+//!    parameter sweeps run on every CI push.
+
+use crate::admm::arrivals::ArrivalTrace;
+use crate::admm::{divergence_or_tol_stop, iter_record, master_x0_update, StopReason};
+use crate::problems::ConsensusProblem;
+use crate::rng::Pcg64;
+use crate::util::timer::Clock;
+
+use super::clock::{Event, EventKind, EventQueue, VirtualClock};
+use super::timeline::WorkerStats;
+use super::worker::WorkerSolveFn;
+use super::{ClusterConfig, ClusterReport, DelaySampler, FaultModel, Protocol};
+
+/// Per-worker simulation state (delay streams + optional solve override).
+struct VirtualWorker {
+    compute: DelaySampler,
+    comm: Option<DelaySampler>,
+    fault_rng: Option<Pcg64>,
+    solve: Option<WorkerSolveFn>,
+    /// Duration of the in-flight compute phase, charged to `busy_s` when
+    /// the ComputeDone event fires (a round cut off by the end of the run
+    /// is never charged — matching the threaded mode, which accounts busy
+    /// time per *completed* round).
+    inflight_compute_s: f64,
+    /// Duration of the in-flight transit phase (comm + retransmissions),
+    /// charged when the Arrive event fires.
+    inflight_transit_s: f64,
+}
+
+/// Start worker `i`'s next round at virtual instant `now_s`: sample its
+/// compute delay and schedule the ComputeDone.
+fn dispatch(w: &mut VirtualWorker, queue: &mut EventQueue, now_s: f64, worker: usize) {
+    let compute_s = w.compute.sample_ms() * 1e-3;
+    w.inflight_compute_s = compute_s;
+    queue.push(now_s + compute_s, worker, EventKind::ComputeDone);
+}
+
+/// Process one event. ComputeDone enters the link (comm latency plus any
+/// fault retransmissions, mirroring the threaded worker's `comm_faults`);
+/// Arrive lands the message at the master and updates the gate counters.
+fn absorb(
+    ev: Event,
+    workers: &mut [VirtualWorker],
+    stats: &mut [WorkerStats],
+    pending: &mut [bool],
+    queue: &mut EventQueue,
+    faults: Option<&FaultModel>,
+    d: &[usize],
+    tau: usize,
+    arrived_count: &mut usize,
+    forced_missing: &mut usize,
+) {
+    match ev.kind {
+        EventKind::ComputeDone => {
+            let w = &mut workers[ev.worker];
+            stats[ev.worker].busy_s += w.inflight_compute_s;
+            let mut transit_ms = match w.comm.as_mut() {
+                Some(c) => c.sample_ms(),
+                None => 0.0,
+            };
+            if let (Some(f), Some(rng)) = (faults, w.fault_rng.as_mut()) {
+                while rng.bernoulli(f.drop_prob) {
+                    transit_ms += f.retrans_ms;
+                    stats[ev.worker].retransmissions += 1;
+                }
+            }
+            w.inflight_transit_s = transit_ms * 1e-3;
+            queue.push(ev.time_s + transit_ms * 1e-3, ev.worker, EventKind::Arrive);
+        }
+        EventKind::Arrive => {
+            debug_assert!(!pending[ev.worker], "one outstanding message per worker");
+            // The threaded worker's busy time covers the whole round
+            // (compute sleep + comm sleep + retransmissions); charge the
+            // transit leg now that it completed.
+            stats[ev.worker].busy_s += workers[ev.worker].inflight_transit_s;
+            pending[ev.worker] = true;
+            stats[ev.worker].updates += 1;
+            *arrived_count += 1;
+            if d[ev.worker] + 1 >= tau {
+                *forced_missing -= 1;
+            }
+        }
+    }
+}
+
+/// Run the configured protocol in simulated time. Semantics of the
+/// returned [`ClusterReport`] match the threaded mode, with all seconds
+/// measured on the virtual clock.
+pub(crate) fn run_virtual(
+    problem: &ConsensusProblem,
+    cfg: &ClusterConfig,
+    solvers: Option<Vec<WorkerSolveFn>>,
+) -> ClusterReport {
+    let n_workers = problem.num_workers();
+    let n = problem.dim();
+    let rho = cfg.admm.rho;
+    let tau = cfg.admm.tau;
+    let protocol = cfg.protocol;
+
+    let mut solver_list: Vec<Option<WorkerSolveFn>> = match solvers {
+        Some(v) => {
+            assert_eq!(v.len(), n_workers, "one solver per worker");
+            v.into_iter().map(Some).collect()
+        }
+        None => (0..n_workers).map(|_| None).collect(),
+    };
+    let mut workers: Vec<VirtualWorker> = (0..n_workers)
+        .map(|i| VirtualWorker {
+            compute: cfg.delays.sampler(i),
+            comm: cfg.comm_delays.as_ref().map(|d| d.sampler(i)),
+            fault_rng: cfg
+                .faults
+                .as_ref()
+                .map(|f| Pcg64::seed_from_u64(f.seed.wrapping_add(i as u64 * 0x5bd1))),
+            solve: solver_list[i].take(),
+            inflight_compute_s: 0.0,
+            inflight_transit_s: 0.0,
+        })
+        .collect();
+    let mut stats: Vec<WorkerStats> = (0..n_workers).map(WorkerStats::new).collect();
+
+    let mut vclock = VirtualClock::new();
+    let mut queue = EventQueue::new();
+
+    let mut state = cfg.admm.initial_state(n_workers, n);
+    // x₀^{k̄_i+1} as each worker last received it — same bookkeeping as the
+    // serial simulator.
+    let mut x0_snap: Vec<Vec<f64>> = vec![state.x0.clone(); n_workers];
+    // Algorithm 4 additionally broadcasts the master-updated duals.
+    let mut lam_snap: Vec<Vec<f64>> = state.lams.clone();
+    let mut d = vec![0usize; n_workers];
+    let mut history = Vec::with_capacity(cfg.admm.max_iters);
+    let mut trace = ArrivalTrace::default();
+    let mut prev_x0 = state.x0.clone();
+    let mut stop = StopReason::MaxIters;
+    let mut f_cache: Vec<f64> = (0..n_workers)
+        .map(|i| problem.local(i).eval(&state.xs[i]))
+        .collect();
+    let mut al_scratch: Vec<f64> = Vec::with_capacity(n);
+    let mut pending = vec![false; n_workers];
+    let mut master_wait_s = 0.0;
+
+    // Initial broadcast at t = 0: every worker starts computing against x⁰.
+    for i in 0..n_workers {
+        dispatch(&mut workers[i], &mut queue, vclock.now_s(), i);
+    }
+
+    for k in 0..cfg.admm.max_iters {
+        let wait_from = vclock.now_s();
+        // Gate counters, maintained incrementally so the gather loop is
+        // O(1) per event (N can be in the thousands here).
+        let mut arrived_count = pending.iter().filter(|&&p| p).count();
+        let mut forced_missing = (0..n_workers)
+            .filter(|&i| d[i] + 1 >= tau && !pending[i])
+            .count();
+        let target = cfg.admm.min_arrivals.min(n_workers);
+        loop {
+            if arrived_count >= target && forced_missing == 0 {
+                // Absorb everything that has arrived by this instant — the
+                // threaded master's try_recv drain.
+                while queue.peek_time().is_some_and(|t| t <= vclock.now_s()) {
+                    let ev = queue.pop().expect("peeked event");
+                    absorb(
+                        ev,
+                        &mut workers,
+                        &mut stats,
+                        &mut pending,
+                        &mut queue,
+                        cfg.faults.as_ref(),
+                        &d,
+                        tau,
+                        &mut arrived_count,
+                        &mut forced_missing,
+                    );
+                }
+                break;
+            }
+            match queue.pop() {
+                Some(ev) => {
+                    vclock.advance_to(ev.time_s);
+                    absorb(
+                        ev,
+                        &mut workers,
+                        &mut stats,
+                        &mut pending,
+                        &mut queue,
+                        cfg.faults.as_ref(),
+                        &d,
+                        tau,
+                        &mut arrived_count,
+                        &mut forced_missing,
+                    );
+                }
+                // Unreachable with ≥1 worker (every worker always has an
+                // in-flight event), but mirror the threaded recv-Err path.
+                None => break,
+            }
+        }
+        master_wait_s += vclock.now_s() - wait_from;
+
+        let set: Vec<usize> = (0..n_workers).filter(|&i| pending[i]).collect();
+        // Deferred worker arithmetic, in ascending id order — the exact
+        // update sequence of the serial Algorithm-3 simulator.
+        for &i in &set {
+            match protocol {
+                Protocol::AdAdmm => {
+                    // (19)/(23): solve against the worker's own dual and its
+                    // x₀ snapshot, then (20)/(24): the dual update.
+                    let snap = &x0_snap[i];
+                    match workers[i].solve.as_mut() {
+                        Some(f) => f(&state.lams[i], snap, rho, &mut state.xs[i]),
+                        None => problem.local(i).solve_subproblem(
+                            &state.lams[i],
+                            snap,
+                            rho,
+                            &mut state.xs[i],
+                        ),
+                    }
+                    for j in 0..n {
+                        state.lams[i][j] += rho * (state.xs[i][j] - snap[j]);
+                    }
+                }
+                Protocol::AltScheme => {
+                    // (47): solve against the master-broadcast (x̂₀, λ̂_i).
+                    match workers[i].solve.as_mut() {
+                        Some(f) => f(&lam_snap[i], &x0_snap[i], rho, &mut state.xs[i]),
+                        None => problem.local(i).solve_subproblem(
+                            &lam_snap[i],
+                            &x0_snap[i],
+                            rho,
+                            &mut state.xs[i],
+                        ),
+                    }
+                }
+            }
+            f_cache[i] = problem.local(i).eval(&state.xs[i]);
+            d[i] = 0;
+        }
+        for i in 0..n_workers {
+            if !pending[i] {
+                d[i] += 1;
+            }
+        }
+
+        // (12)/(25)/(45): master x₀ update.
+        prev_x0.copy_from_slice(&state.x0);
+        master_x0_update(problem, &mut state, rho, cfg.admm.gamma);
+
+        // Algorithm 4 (46): master updates ALL duals against fresh x₀.
+        if protocol == Protocol::AltScheme {
+            for i in 0..n_workers {
+                for j in 0..n {
+                    state.lams[i][j] += rho * (state.xs[i][j] - state.x0[j]);
+                }
+            }
+        }
+
+        // Step 6: broadcast to the arrived workers only and start their
+        // next round at the current virtual instant.
+        for &i in &set {
+            pending[i] = false;
+            x0_snap[i].copy_from_slice(&state.x0);
+            if protocol == Protocol::AltScheme {
+                lam_snap[i].copy_from_slice(&state.lams[i]);
+            }
+            dispatch(&mut workers[i], &mut queue, vclock.now_s(), i);
+        }
+
+        let rec = iter_record(
+            problem,
+            &state,
+            &cfg.admm,
+            k,
+            set.len(),
+            &f_cache,
+            &mut al_scratch,
+            &prev_x0,
+        );
+        let early = divergence_or_tol_stop(&cfg.admm, &state, &rec, k);
+        history.push(rec);
+        trace.sets.push(set);
+
+        if let Some(reason) = early {
+            stop = reason;
+            break;
+        }
+        if let Some(rule) = &cfg.admm.stopping {
+            let r = crate::admm::stopping::residuals(&state, &prev_x0, rho);
+            if k > 0 && rule.satisfied(&r, n, n_workers) {
+                stop = StopReason::Residuals;
+                break;
+            }
+        }
+    }
+
+    let total_s = vclock.now_s();
+    for w in stats.iter_mut() {
+        w.lifetime_s = total_s;
+    }
+
+    ClusterReport {
+        state,
+        history,
+        trace,
+        stop,
+        wall_clock_s: total_s,
+        master_wait_s,
+        workers: stats,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::admm::AdmmConfig;
+    use crate::cluster::{ClusterConfig, DelayModel, ExecutionMode, StarCluster};
+    use crate::data::LassoInstance;
+    use crate::rng::Pcg64;
+
+    fn problem(seed: u64, n_workers: usize) -> crate::problems::ConsensusProblem {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        LassoInstance::synthetic(&mut rng, n_workers, 20, 10, 0.2, 0.1).problem()
+    }
+
+    fn virt_cfg(tau: usize, min_arrivals: usize, max_iters: usize) -> ClusterConfig {
+        ClusterConfig {
+            admm: AdmmConfig { rho: 50.0, tau, min_arrivals, max_iters, ..Default::default() },
+            delays: DelayModel::LogNormal {
+                mean_ms: vec![1.0, 2.0, 4.0, 8.0],
+                sigma: 0.3,
+                seed: 7,
+            },
+            mode: ExecutionMode::VirtualTime,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn virtual_run_is_deterministic() {
+        let p = problem(801, 4);
+        let cfg = virt_cfg(4, 1, 80);
+        let a = StarCluster::new(p.clone()).run(&cfg);
+        let b = StarCluster::new(p).run(&cfg);
+        assert_eq!(a.trace, b.trace, "same seed must realize the same arrival sets");
+        assert_eq!(a.state.x0, b.state.x0);
+        assert_eq!(a.wall_clock_s, b.wall_clock_s, "virtual time is exact");
+    }
+
+    #[test]
+    fn virtual_trace_respects_gate_and_tau() {
+        let p = problem(802, 4);
+        let tau = 3;
+        let cfg = virt_cfg(tau, 2, 150);
+        let report = StarCluster::new(p).run(&cfg);
+        assert!(report.trace.satisfies_bounded_delay(4, tau));
+        assert!(report.trace.sets.iter().all(|s| s.len() >= 2));
+    }
+
+    #[test]
+    fn virtual_time_accounts_busy_and_wait() {
+        let p = problem(803, 3);
+        let mut cfg = virt_cfg(5, 1, 60);
+        cfg.delays = DelayModel::Fixed { per_worker_ms: vec![1.0, 2.0, 3.0] };
+        let report = StarCluster::new(p).run(&cfg);
+        assert!(report.wall_clock_s > 0.0);
+        assert!(report.master_wait_s <= report.wall_clock_s + 1e-12);
+        for w in &report.workers {
+            assert!(w.updates > 0);
+            // busy time covers the compute phase of every *absorbed* round
+            let expected = w.updates as f64;
+            assert!(
+                w.busy_s * 1e3 >= expected * (w.id + 1) as f64 - 1e-6,
+                "worker {} busy {:.6}s over {} absorbed updates",
+                w.id,
+                w.busy_s,
+                w.updates
+            );
+            // ...and never counts rounds cut off by the end of the run
+            assert!(w.busy_s <= w.lifetime_s + 1e-12);
+            // lifetime is the full simulated run for every worker
+            assert_eq!(w.lifetime_s, report.wall_clock_s);
+        }
+        // the run summarizes into a Timeline like any threaded run
+        let tl = crate::cluster::Timeline::from_report(&report);
+        assert_eq!(tl.master_iters, report.history.len());
+        assert_eq!(
+            tl.total_updates(),
+            report.workers.iter().map(|w| w.updates).sum::<usize>()
+        );
+        assert!(tl.render().contains("master iterations: 60"));
+    }
+
+    #[test]
+    fn fixed_equal_delays_run_synchronously() {
+        let p = problem(804, 4);
+        let mut cfg = virt_cfg(1, 4, 50);
+        cfg.delays = DelayModel::Fixed { per_worker_ms: vec![2.0; 4] };
+        let report = StarCluster::new(p).run(&cfg);
+        // equal delays + τ=1 gate: every iteration sees all 4 workers
+        assert!(report.trace.sets.iter().all(|s| s.len() == 4));
+        // 50 synchronous rounds at 2 ms each ≈ 100 ms of simulated time
+        assert!((report.wall_clock_s - 0.1).abs() < 1e-9, "t={}", report.wall_clock_s);
+    }
+}

@@ -38,6 +38,16 @@ pub struct Timeline {
 }
 
 impl Timeline {
+    /// Build the timeline of a finished cluster run. Works for both
+    /// execution modes: in virtual time the seconds are simulated seconds.
+    pub fn from_report(report: &crate::cluster::ClusterReport) -> Self {
+        Timeline {
+            workers: report.workers.clone(),
+            master_iters: report.history.len(),
+            wall_clock_s: report.wall_clock_s,
+        }
+    }
+
     pub fn total_updates(&self) -> usize {
         self.workers.iter().map(|w| w.updates).sum()
     }

@@ -17,6 +17,10 @@ use crate::rng::Pcg64;
 pub type WorkerSolveFn = Box<dyn FnMut(&[f64], &[f64], f64, &mut [f64]) + Send>;
 
 /// One worker thread. Returns its accumulated stats at shutdown.
+///
+/// `delay` models the per-round compute time, `comm` (optional) the
+/// outbound link latency; both are realized as real sleeps in this mode
+/// (the virtual-time mode turns the same samplers into scheduler events).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn worker_loop(
     id: usize,
@@ -26,6 +30,7 @@ pub(crate) fn worker_loop(
     inbox: Receiver<MasterMsg>,
     outbox: Sender<WorkerMsg>,
     mut delay: DelaySampler,
+    mut comm: Option<DelaySampler>,
     mut solve_override: Option<WorkerSolveFn>,
     faults: Option<FaultModel>,
 ) -> WorkerStats {
@@ -58,10 +63,18 @@ pub(crate) fn worker_loop(
         };
         let t0 = Instant::now();
 
-        // Injected heterogeneous compute/communication delay.
+        // Injected heterogeneous compute delay (plus communication, when no
+        // separate comm model is configured).
         let ms = delay.sample_ms();
         if ms > 0.0 {
             std::thread::sleep(Duration::from_secs_f64(ms * 1e-3));
+        }
+        // Separate outbound-link latency, slept just like the compute part.
+        if let Some(c) = comm.as_mut() {
+            let cms = c.sample_ms();
+            if cms > 0.0 {
+                std::thread::sleep(Duration::from_secs_f64(cms * 1e-3));
+            }
         }
 
         match protocol {

@@ -10,7 +10,13 @@ use crate::rng::Pcg64;
 /// Estimate `λmax` of the symmetric operator `apply` on `R^n`.
 ///
 /// Returns `(lambda_max, iterations_used)`. Deterministic given `seed`.
-pub fn power_iteration<F>(mut apply: F, n: usize, max_iters: usize, tol: f64, seed: u64) -> (f64, usize)
+pub fn power_iteration<F>(
+    mut apply: F,
+    n: usize,
+    max_iters: usize,
+    tol: f64,
+    seed: u64,
+) -> (f64, usize)
 where
     F: FnMut(&[f64], &mut [f64]),
 {

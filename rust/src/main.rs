@@ -17,13 +17,13 @@ use ad_admm::admm::master_pov::run_master_pov;
 use ad_admm::admm::params::{gamma_lower_bound, rho_lower_bound_convex, rho_lower_bound_nonconvex};
 use ad_admm::admm::sync::run_sync_admm;
 use ad_admm::admm::AdmmConfig;
-use ad_admm::cluster::{ClusterConfig, DelayModel, Protocol, StarCluster};
+use ad_admm::cluster::{ClusterConfig, DelayModel, ExecutionMode, Protocol, StarCluster};
 use ad_admm::data::{LassoInstance, LogisticInstance, SparsePcaInstance};
 use ad_admm::rng::Pcg64;
 use ad_admm::util::cli::ArgParser;
 
 fn main() {
-    let args = ArgParser::from_env(&["help", "sync", "alt"]);
+    let args = ArgParser::from_env(&["help", "sync", "alt", "virtual"]);
     let cmd = args.positional().first().map(String::as_str).unwrap_or("help");
     match cmd {
         "solve" => cmd_solve(&args),
@@ -41,6 +41,7 @@ fn print_help() {
          solve   --problem lasso|spca|logistic --workers N --m M --n N --rho R --tau T\n\
                  --gamma G --min-arrivals A --iters K --theta TH --seed S [--sync] [--alt]\n\
          cluster --workers N --m M --n N --rho R --tau T --iters K --fast-ms F --slow-ms S\n\
+                 [--virtual]  (deterministic virtual-time simulation, scales to 1000s of workers)\n\
          params  --lipschitz L --tau T --workers N --s S --rho R\n\
          artifacts"
     );
@@ -71,7 +72,8 @@ fn cmd_solve(args: &ArgParser) {
     let problem = match problem_kind.as_str() {
         "lasso" => LassoInstance::synthetic(&mut rng, n_workers, m, n, 0.05, theta).problem(),
         "spca" => {
-            let inst = SparsePcaInstance::synthetic(&mut rng, n_workers, m, n, (m * n / 100).max(1), theta);
+            let nnz = (m * n / 100).max(1);
+            let inst = SparsePcaInstance::synthetic(&mut rng, n_workers, m, n, nnz, theta);
             inst.problem()
         }
         "logistic" => LogisticInstance::synthetic(&mut rng, n_workers, m, n, theta).problem(),
@@ -116,7 +118,10 @@ fn report(
     println!("objective          {:.8e}", last.objective);
     println!("aug. Lagrangian    {:.8e}", last.aug_lagrangian);
     println!("consensus residual {:.3e}", last.consensus);
-    println!("KKT residual       dual={:.3e} stat={:.3e} cons={:.3e}", kkt.dual, kkt.stationarity, kkt.consensus);
+    println!(
+        "KKT residual       dual={:.3e} stat={:.3e} cons={:.3e}",
+        kkt.dual, kkt.stationarity, kkt.consensus
+    );
 }
 
 fn cmd_cluster(args: &ArgParser) {
@@ -132,19 +137,30 @@ fn cmd_cluster(args: &ArgParser) {
     let problem = inst.problem();
     let delays = DelayModel::linear_spread(n_workers, fast_ms, slow_ms, 0.3, seed);
 
+    let mode = if args.has_flag("virtual") {
+        ExecutionMode::VirtualTime
+    } else {
+        ExecutionMode::RealThreads
+    };
+
     // Sync baseline: τ=1, A=N.
     let sync_cfg = ClusterConfig {
         admm: AdmmConfig { tau: 1, min_arrivals: n_workers, ..cfg.clone() },
         protocol: Protocol::AdAdmm,
         delays: delays.clone(),
-        faults: None,
+        mode,
+        ..Default::default()
     };
     let sync = StarCluster::new(problem.clone()).run(&sync_cfg);
     // Async per the flags.
-    let async_cfg = ClusterConfig { admm: cfg, protocol: Protocol::AdAdmm, delays, faults: None };
+    let async_cfg = ClusterConfig { admm: cfg, delays, mode, ..Default::default() };
     let asyn = StarCluster::new(problem.clone()).run(&async_cfg);
 
-    println!("--- threaded star cluster (N={n_workers}, delays {fast_ms}–{slow_ms} ms) ---");
+    let mode_label = match mode {
+        ExecutionMode::RealThreads => "threaded",
+        ExecutionMode::VirtualTime => "virtual-time",
+    };
+    println!("--- {mode_label} star cluster (N={n_workers}, delays {fast_ms}–{slow_ms} ms) ---");
     for (label, r) in [("sync  (tau=1, A=N)", &sync), ("async (per flags) ", &asyn)] {
         println!(
             "{label}: {:4} iters in {:.3}s  ({:.1} iters/s)  obj={:.6e}  master-wait={:.3}s",

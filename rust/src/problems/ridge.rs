@@ -28,7 +28,15 @@ impl RidgeLocal {
         let n = a.cols();
         let (lam_max, _) =
             power_iteration(|v, out| gram.matvec_into(v, out), n, 300, 1e-9, 0x41d6e);
-        RidgeLocal { a, b, mu, gram, two_atb, lip: 2.0 * lam_max.max(0.0) + mu, cache: RhoCache::new() }
+        RidgeLocal {
+            a,
+            b,
+            mu,
+            gram,
+            two_atb,
+            lip: 2.0 * lam_max.max(0.0) + mu,
+            cache: RhoCache::new(),
+        }
     }
 
     /// Strong-convexity modulus σ² (= μ here; larger if AᵀA ≻ 0).

@@ -1,11 +1,11 @@
 //! The PJRT engine: one CPU client, one compiled executable per artifact.
+//! Compiled only with the `pjrt` feature (needs the vendored `xla` crate).
 
 use std::collections::HashMap;
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
-
 use super::manifest::ArtifactRegistry;
+use super::{RuntimeError, RuntimeResult};
 
 /// Compiled artifacts ready to execute.
 ///
@@ -26,20 +26,24 @@ pub struct PjrtEngine {
 unsafe impl Send for PjrtEngine {}
 unsafe impl Sync for PjrtEngine {}
 
+fn ctx<E: std::fmt::Display>(what: &str, e: E) -> RuntimeError {
+    RuntimeError(format!("{what}: {e}"))
+}
+
 impl PjrtEngine {
     /// Load + compile every artifact listed in `<dir>/manifest.txt`.
-    pub fn load(dir: &Path) -> Result<Self> {
-        let registry = ArtifactRegistry::load(dir).map_err(|e| anyhow!(e))?;
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+    pub fn load(dir: &Path) -> RuntimeResult<Self> {
+        let registry = ArtifactRegistry::load(dir).map_err(RuntimeError)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| ctx("create PJRT CPU client", e))?;
         let mut exes = HashMap::new();
         for name in registry.names() {
             let path = registry.path_of(name).unwrap();
             let proto = xla::HloModuleProto::from_text_file(&path)
-                .with_context(|| format!("parse HLO text {}", path.display()))?;
+                .map_err(|e| ctx(&format!("parse HLO text {}", path.display()), e))?;
             let comp = xla::XlaComputation::from_proto(&proto);
             let exe = client
                 .compile(&comp)
-                .with_context(|| format!("compile artifact {name}"))?;
+                .map_err(|e| ctx(&format!("compile artifact {name}"), e))?;
             exes.insert(name.to_string(), exe);
         }
         Ok(PjrtEngine { client, registry, exes })
@@ -55,28 +59,34 @@ impl PjrtEngine {
 
     /// Upload an f64 buffer to the device (kept resident; reusable across
     /// executions — this is how worker data blocks avoid re-upload).
-    pub fn upload(&self, data: &[f64], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+    pub fn upload(&self, data: &[f64], dims: &[usize]) -> RuntimeResult<xla::PjRtBuffer> {
         self.client
             .buffer_from_host_buffer(data, dims, None)
-            .context("upload host buffer")
+            .map_err(|e| ctx("upload host buffer", e))
     }
 
     /// Upload an f64 scalar.
-    pub fn upload_scalar(&self, v: f64) -> Result<xla::PjRtBuffer> {
+    pub fn upload_scalar(&self, v: f64) -> RuntimeResult<xla::PjRtBuffer> {
         self.upload(&[v], &[])
     }
 
     /// Execute artifact `name` on device buffers; returns the first output
     /// (jax lowers with `return_tuple=True`, so outputs arrive as a 1-tuple
     /// which we unwrap) as a host `Vec<f64>`.
-    pub fn execute_f64(&self, name: &str, args: &[&xla::PjRtBuffer]) -> Result<Vec<f64>> {
-        let exe = self
-            .exes
-            .get(name)
-            .ok_or_else(|| anyhow!("unknown artifact {name:?} (have: {:?})", self.registry.names()))?;
-        let outs = exe.execute_b(args).with_context(|| format!("execute {name}"))?;
-        let lit = outs[0][0].to_literal_sync().context("fetch output")?;
-        let out = lit.to_tuple1().context("unwrap 1-tuple output")?;
-        out.to_vec::<f64>().context("output to f64 vec")
+    pub fn execute_f64(&self, name: &str, args: &[&xla::PjRtBuffer]) -> RuntimeResult<Vec<f64>> {
+        let exe = self.exes.get(name).ok_or_else(|| {
+            RuntimeError(format!(
+                "unknown artifact {name:?} (have: {:?})",
+                self.registry.names()
+            ))
+        })?;
+        let outs = exe
+            .execute_b(args)
+            .map_err(|e| ctx(&format!("execute {name}"), e))?;
+        let lit = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| ctx("fetch output", e))?;
+        let out = lit.to_tuple1().map_err(|e| ctx("unwrap 1-tuple output", e))?;
+        out.to_vec::<f64>().map_err(|e| ctx("output to f64 vec", e))
     }
 }

@@ -3,21 +3,76 @@
 //!
 //! Python runs only at build time (`make artifacts`); at run time the
 //! [`PjrtEngine`] compiles each `*.hlo.txt` once on the PJRT CPU client and
-//! the per-worker [`solvers`] keep their data blocks resident as device
-//! buffers, so a subproblem solve is: upload `(λ, x₀, ρ)` (three small
-//! buffers) → `execute_b` → download `x`.
+//! the per-worker [`PjrtLassoSolver`]/[`PjrtSpcaSolver`] keep their data
+//! blocks resident as device buffers, so a subproblem solve is: upload
+//! `(λ, x₀, ρ)` (three small buffers) → `execute_b` → download `x`.
 //!
 //! Interchange is HLO **text**, not serialized protos: jax ≥ 0.5 emits
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects, while the text
 //! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! ## Feature gating
+//!
+//! Real execution needs the `xla` PJRT binding crate, which the offline CI
+//! image does not carry. The `pjrt` cargo feature selects the real
+//! implementation; without it (the default) this module exposes
+//! API-compatible stubs whose constructors return [`RuntimeError`], so
+//! every caller — the cluster example, the hot-path bench, the parity
+//! tests — compiles unchanged and falls back to the native closed-form
+//! solvers. Check [`pjrt_enabled`] before attempting to load an engine.
 
+#[cfg(feature = "pjrt")]
 pub mod engine;
-pub mod manifest;
+#[cfg(feature = "pjrt")]
 pub mod solvers;
 
+#[cfg(not(feature = "pjrt"))]
+mod stub;
+
+pub mod manifest;
+
+#[cfg(feature = "pjrt")]
 pub use engine::PjrtEngine;
-pub use manifest::{ArtifactEntry, ArtifactRegistry};
+#[cfg(feature = "pjrt")]
 pub use solvers::{PjrtLassoSolver, PjrtMasterProx, PjrtSpcaSolver};
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{PjrtBuffer, PjrtEngine, PjrtLassoSolver, PjrtMasterProx, PjrtSpcaSolver};
+
+pub use manifest::{ArtifactEntry, ArtifactRegistry};
+
+/// Error type of the runtime layer (std-only replacement for `anyhow`).
+#[derive(Debug, Clone)]
+pub struct RuntimeError(pub String);
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+impl From<String> for RuntimeError {
+    fn from(s: String) -> Self {
+        RuntimeError(s)
+    }
+}
+
+impl From<&str> for RuntimeError {
+    fn from(s: &str) -> Self {
+        RuntimeError(s.to_string())
+    }
+}
+
+/// Result alias used across the runtime layer.
+pub type RuntimeResult<T> = Result<T, RuntimeError>;
+
+/// True when this build carries the real PJRT backend (`pjrt` feature).
+/// Callers use this to skip (rather than fail) artifact-backed paths.
+pub fn pjrt_enabled() -> bool {
+    cfg!(feature = "pjrt")
+}
 
 /// Default artifacts directory (relative to the repo root).
 pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";
@@ -39,4 +94,29 @@ pub fn artifacts_dir() -> std::path::PathBuf {
 /// True when AOT artifacts have been built (`make artifacts`).
 pub fn artifacts_available() -> bool {
     artifacts_dir().join("manifest.txt").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runtime_error_displays_message() {
+        let e = RuntimeError::from("artifact missing");
+        assert_eq!(e.to_string(), "artifact missing");
+        let e2: RuntimeError = format!("bad {}", 7).into();
+        assert_eq!(e2.to_string(), "bad 7");
+    }
+
+    #[test]
+    fn pjrt_enabled_matches_feature() {
+        assert_eq!(pjrt_enabled(), cfg!(feature = "pjrt"));
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_engine_reports_unavailable() {
+        let err = PjrtEngine::load(std::path::Path::new("/nonexistent")).unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
 }

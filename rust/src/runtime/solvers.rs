@@ -1,16 +1,16 @@
 //! PJRT-backed implementations of the ADMM update contracts.
+//! Compiled only with the `pjrt` feature (needs the vendored `xla` crate).
 //!
 //! Each solver keeps its worker's data block (`A_i` / dense `B_j`) resident
 //! on the device and uploads only the small per-iteration vectors.
 
 use std::sync::Arc;
 
-use anyhow::{anyhow, Result};
-
 use crate::admm::master_pov::SubproblemSolver;
 use crate::data::{LassoInstance, SparsePcaInstance};
 
 use super::engine::PjrtEngine;
+use super::{RuntimeError, RuntimeResult};
 
 /// Worker subproblem solver for LASSO blocks, executing the
 /// `lasso_worker_m{M}_n{N}` artifact (L2 CG + L1 Pallas Gram kernel).
@@ -23,14 +23,14 @@ pub struct PjrtLassoSolver {
 }
 
 impl PjrtLassoSolver {
-    pub fn new(engine: Arc<PjrtEngine>, inst: &LassoInstance) -> Result<Self> {
+    pub fn new(engine: Arc<PjrtEngine>, inst: &LassoInstance) -> RuntimeResult<Self> {
         let m = inst.blocks[0].rows();
         let n = inst.dim();
         let exe_name = format!("lasso_worker_m{m}_n{n}");
         if !engine.has(&exe_name) {
-            return Err(anyhow!(
+            return Err(RuntimeError(format!(
                 "artifact {exe_name} not built; re-run `make artifacts` with matching shapes"
-            ));
+            )));
         }
         let mut blocks = Vec::with_capacity(inst.blocks.len());
         for (a, b) in inst.blocks.iter().zip(&inst.rhs) {
@@ -48,11 +48,11 @@ impl PjrtLassoSolver {
         engine: Arc<PjrtEngine>,
         a: &crate::linalg::DenseMatrix,
         b: &[f64],
-    ) -> Result<Self> {
+    ) -> RuntimeResult<Self> {
         let (m, n) = (a.rows(), a.cols());
         let exe_name = format!("lasso_worker_m{m}_n{n}");
         if !engine.has(&exe_name) {
-            return Err(anyhow!("artifact {exe_name} not built"));
+            return Err(RuntimeError(format!("artifact {exe_name} not built")));
         }
         let a_buf = engine.upload(a.data(), &[m, n])?;
         let b_buf = engine.upload(b, &[m])?;
@@ -60,7 +60,13 @@ impl PjrtLassoSolver {
     }
 
     /// Single solve against worker `i`'s resident block.
-    pub fn solve_for(&self, i: usize, lam: &[f64], x0: &[f64], rho: f64) -> Result<Vec<f64>> {
+    pub fn solve_for(
+        &self,
+        i: usize,
+        lam: &[f64],
+        x0: &[f64],
+        rho: f64,
+    ) -> RuntimeResult<Vec<f64>> {
         let (a_buf, b_buf) = &self.blocks[i];
         let lam_buf = self.engine.upload(lam, &[self.n])?;
         let x0_buf = self.engine.upload(x0, &[self.n])?;
@@ -94,12 +100,12 @@ pub struct PjrtSpcaSolver {
 }
 
 impl PjrtSpcaSolver {
-    pub fn new(engine: Arc<PjrtEngine>, inst: &SparsePcaInstance) -> Result<Self> {
+    pub fn new(engine: Arc<PjrtEngine>, inst: &SparsePcaInstance) -> RuntimeResult<Self> {
         let m = inst.blocks[0].rows();
         let n = inst.dim();
         let exe_name = format!("spca_worker_m{m}_n{n}");
         if !engine.has(&exe_name) {
-            return Err(anyhow!("artifact {exe_name} not built"));
+            return Err(RuntimeError(format!("artifact {exe_name} not built")));
         }
         let mut blocks = Vec::with_capacity(inst.blocks.len());
         for b in &inst.blocks {
@@ -109,12 +115,19 @@ impl PjrtSpcaSolver {
         Ok(PjrtSpcaSolver { engine, exe_name, blocks, n })
     }
 
-    pub fn solve_for(&self, i: usize, lam: &[f64], x0: &[f64], rho: f64) -> Result<Vec<f64>> {
+    pub fn solve_for(
+        &self,
+        i: usize,
+        lam: &[f64],
+        x0: &[f64],
+        rho: f64,
+    ) -> RuntimeResult<Vec<f64>> {
         let b_buf = &self.blocks[i];
         let lam_buf = self.engine.upload(lam, &[self.n])?;
         let x0_buf = self.engine.upload(x0, &[self.n])?;
         let rho_buf = self.engine.upload_scalar(rho)?;
-        self.engine.execute_f64(&self.exe_name, &[b_buf, &lam_buf, &x0_buf, &rho_buf])
+        self.engine
+            .execute_f64(&self.exe_name, &[b_buf, &lam_buf, &x0_buf, &rho_buf])
     }
 }
 
@@ -140,15 +153,14 @@ pub struct PjrtMasterProx {
 }
 
 impl PjrtMasterProx {
-    pub fn new(engine: Arc<PjrtEngine>, n: usize) -> Result<Self> {
+    pub fn new(engine: Arc<PjrtEngine>, n: usize) -> RuntimeResult<Self> {
         let exe_name = format!("master_prox_n{n}");
         if !engine.has(&exe_name) {
-            return Err(anyhow!("artifact {exe_name} not built"));
+            return Err(RuntimeError(format!("artifact {exe_name} not built")));
         }
         Ok(PjrtMasterProx { engine, exe_name, n })
     }
 
-    #[allow(clippy::too_many_arguments)]
     pub fn run(
         &self,
         sum_x: &[f64],
@@ -158,7 +170,7 @@ impl PjrtMasterProx {
         gamma: f64,
         theta: f64,
         n_workers: usize,
-    ) -> Result<Vec<f64>> {
+    ) -> RuntimeResult<Vec<f64>> {
         let sx = self.engine.upload(sum_x, &[self.n])?;
         let sl = self.engine.upload(sum_lam, &[self.n])?;
         let xp = self.engine.upload(x0_prev, &[self.n])?;

@@ -1,0 +1,140 @@
+//! API-compatible stand-ins for the PJRT runtime, compiled when the `pjrt`
+//! feature is off (the offline/CI default).
+//!
+//! Every constructor returns [`RuntimeError`], so callers that probe for
+//! the backend (`PjrtEngine::load`, `PjrtLassoSolver::new`, …) fall back
+//! to the native closed-form solvers without any `cfg` in their own code.
+//! The execution methods exist only to satisfy the type checker; they are
+//! unreachable because no value of these types can be observed outside
+//! this module.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::admm::master_pov::SubproblemSolver;
+use crate::data::{LassoInstance, SparsePcaInstance};
+use crate::linalg::DenseMatrix;
+
+use super::{ArtifactRegistry, RuntimeError, RuntimeResult};
+
+fn unavailable() -> RuntimeError {
+    RuntimeError::from(
+        "PJRT backend unavailable: built without the `pjrt` cargo feature \
+         (requires the vendored `xla` binding crate)",
+    )
+}
+
+/// Placeholder for a resident device buffer.
+#[derive(Debug)]
+pub struct PjrtBuffer;
+
+/// Stub engine: `load` always fails, so no instance ever escapes.
+pub struct PjrtEngine {
+    registry: ArtifactRegistry,
+}
+
+impl PjrtEngine {
+    pub fn load(_dir: &Path) -> RuntimeResult<Self> {
+        Err(unavailable())
+    }
+
+    pub fn registry(&self) -> &ArtifactRegistry {
+        &self.registry
+    }
+
+    pub fn has(&self, _name: &str) -> bool {
+        false
+    }
+
+    pub fn upload(&self, _data: &[f64], _dims: &[usize]) -> RuntimeResult<PjrtBuffer> {
+        Err(unavailable())
+    }
+
+    pub fn upload_scalar(&self, _v: f64) -> RuntimeResult<PjrtBuffer> {
+        Err(unavailable())
+    }
+
+    pub fn execute_f64(&self, _name: &str, _args: &[&PjrtBuffer]) -> RuntimeResult<Vec<f64>> {
+        Err(unavailable())
+    }
+}
+
+/// Stub LASSO worker solver.
+pub struct PjrtLassoSolver;
+
+impl PjrtLassoSolver {
+    pub fn new(_engine: Arc<PjrtEngine>, _inst: &LassoInstance) -> RuntimeResult<Self> {
+        Err(unavailable())
+    }
+
+    pub fn for_worker(
+        _engine: Arc<PjrtEngine>,
+        _a: &DenseMatrix,
+        _b: &[f64],
+    ) -> RuntimeResult<Self> {
+        Err(unavailable())
+    }
+
+    pub fn solve_for(
+        &self,
+        _i: usize,
+        _lam: &[f64],
+        _x0: &[f64],
+        _rho: f64,
+    ) -> RuntimeResult<Vec<f64>> {
+        Err(unavailable())
+    }
+}
+
+impl SubproblemSolver for PjrtLassoSolver {
+    fn solve(&mut self, _worker: usize, _lam: &[f64], _x0: &[f64], _rho: f64, _out: &mut [f64]) {
+        unreachable!("stub PjrtLassoSolver cannot be constructed");
+    }
+}
+
+/// Stub sparse-PCA worker solver.
+pub struct PjrtSpcaSolver;
+
+impl PjrtSpcaSolver {
+    pub fn new(_engine: Arc<PjrtEngine>, _inst: &SparsePcaInstance) -> RuntimeResult<Self> {
+        Err(unavailable())
+    }
+
+    pub fn solve_for(
+        &self,
+        _i: usize,
+        _lam: &[f64],
+        _x0: &[f64],
+        _rho: f64,
+    ) -> RuntimeResult<Vec<f64>> {
+        Err(unavailable())
+    }
+}
+
+impl SubproblemSolver for PjrtSpcaSolver {
+    fn solve(&mut self, _worker: usize, _lam: &[f64], _x0: &[f64], _rho: f64, _out: &mut [f64]) {
+        unreachable!("stub PjrtSpcaSolver cannot be constructed");
+    }
+}
+
+/// Stub master prox executor.
+pub struct PjrtMasterProx;
+
+impl PjrtMasterProx {
+    pub fn new(_engine: Arc<PjrtEngine>, _n: usize) -> RuntimeResult<Self> {
+        Err(unavailable())
+    }
+
+    pub fn run(
+        &self,
+        _sum_x: &[f64],
+        _sum_lam: &[f64],
+        _x0_prev: &[f64],
+        _rho: f64,
+        _gamma: f64,
+        _theta: f64,
+        _n_workers: usize,
+    ) -> RuntimeResult<Vec<f64>> {
+        Err(unavailable())
+    }
+}

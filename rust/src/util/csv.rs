@@ -50,7 +50,11 @@ fn format_cell(v: f64) -> String {
     if v.is_nan() {
         "nan".into()
     } else if v.is_infinite() {
-        if v > 0.0 { "inf".into() } else { "-inf".into() }
+        if v > 0.0 {
+            "inf".into()
+        } else {
+            "-inf".into()
+        }
     } else if v == v.trunc() && v.abs() < 1e15 {
         format!("{}", v as i64)
     } else {

@@ -11,4 +11,4 @@ pub mod timer;
 pub use cli::ArgParser;
 pub use configfile::ConfigFile;
 pub use csv::CsvWriter;
-pub use timer::Stopwatch;
+pub use timer::{Clock, Stopwatch};

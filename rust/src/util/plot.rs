@@ -42,7 +42,11 @@ pub fn render_log_curves(series: &[Series<'_>], width: usize, height: usize) -> 
         let glyph = GLYPHS[si % GLYPHS.len()];
         for (i, &y) in s.ys.iter().enumerate() {
             let col = if max_len <= 1 { 0 } else { i * (width - 1) / (max_len - 1) };
-            let l = if y.is_finite() && y > 0.0 { y.log10() } else { hi };
+            let l = if y.is_finite() && y > 0.0 {
+                y.log10()
+            } else {
+                hi
+            };
             let frac = ((l - lo) / (hi - lo)).clamp(0.0, 1.0);
             let row = ((1.0 - frac) * (height - 1) as f64).round() as usize;
             canvas[row][col] = glyph;

@@ -1,6 +1,19 @@
-//! Wall-clock timing helpers.
+//! Timing helpers: the [`Clock`] abstraction shared by the real-thread and
+//! virtual-time cluster modes, plus a wall-clock stopwatch.
 
 use std::time::{Duration, Instant};
+
+/// A monotone clock readable in seconds since its epoch.
+///
+/// Two implementations exist: [`Stopwatch`] (wall clock, used by the
+/// real-thread star cluster) and `cluster::clock::VirtualClock` (a
+/// discrete-event simulated clock advanced by the scheduler). Code that
+/// only *reads* time — utilization stats, timelines, reports — is written
+/// against this trait so it works identically in both modes.
+pub trait Clock {
+    /// Seconds elapsed since the clock's epoch (start of the run).
+    fn now_s(&self) -> f64;
+}
 
 /// A simple stopwatch with lap support.
 #[derive(Clone, Debug)]
@@ -39,6 +52,12 @@ impl Default for Stopwatch {
     }
 }
 
+impl Clock for Stopwatch {
+    fn now_s(&self) -> f64 {
+        self.elapsed_s()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -50,6 +69,14 @@ mod tests {
         let b = sw.elapsed_s();
         assert!(b >= a);
         assert!(a >= 0.0);
+    }
+
+    #[test]
+    fn stopwatch_is_a_clock() {
+        let sw = Stopwatch::start();
+        let c: &dyn Clock = &sw;
+        assert!(c.now_s() >= 0.0);
+        assert!(c.now_s() <= sw.elapsed_s());
     }
 
     #[test]

@@ -25,10 +25,16 @@ fn threaded_cluster_trace_equivalent_to_serial_simulator() {
     let inst = lasso(401, n_workers);
     let problem = inst.problem();
     let cfg = ClusterConfig {
-        admm: AdmmConfig { rho: 50.0, tau: 4, min_arrivals: 1, max_iters: 120, ..Default::default() },
+        admm: AdmmConfig {
+            rho: 50.0,
+            tau: 4,
+            min_arrivals: 1,
+            max_iters: 120,
+            ..Default::default()
+        },
         protocol: Protocol::AdAdmm,
         delays: DelayModel::Fixed { per_worker_ms: vec![0.0, 0.5, 1.0, 2.0] },
-        faults: None,
+        ..Default::default()
     };
     let report = StarCluster::new(problem.clone()).run(&cfg);
     assert_eq!(report.stop, StopReason::MaxIters);
@@ -55,7 +61,7 @@ fn cluster_respects_assumption1_under_extreme_skew() {
         protocol: Protocol::AdAdmm,
         // worker 3 is 100x slower than worker 0
         delays: DelayModel::Fixed { per_worker_ms: vec![0.05, 0.1, 1.0, 5.0] },
-        faults: None,
+        ..Default::default()
     };
     let report = StarCluster::new(problem).run(&cfg);
     assert!(report.trace.satisfies_bounded_delay(n_workers, tau));
@@ -77,16 +83,28 @@ fn async_beats_sync_wall_clock_with_heterogeneous_delays() {
     let iters = 80;
 
     let sync_cfg = ClusterConfig {
-        admm: AdmmConfig { rho: 50.0, tau: 1, min_arrivals: n_workers, max_iters: iters, ..Default::default() },
+        admm: AdmmConfig {
+            rho: 50.0,
+            tau: 1,
+            min_arrivals: n_workers,
+            max_iters: iters,
+            ..Default::default()
+        },
         protocol: Protocol::AdAdmm,
         delays: delays.clone(),
-        faults: None,
+        ..Default::default()
     };
     let async_cfg = ClusterConfig {
-        admm: AdmmConfig { rho: 50.0, tau: 8, min_arrivals: 1, max_iters: iters, ..Default::default() },
+        admm: AdmmConfig {
+            rho: 50.0,
+            tau: 8,
+            min_arrivals: 1,
+            max_iters: iters,
+            ..Default::default()
+        },
         protocol: Protocol::AdAdmm,
         delays,
-        faults: None,
+        ..Default::default()
     };
     let cluster = StarCluster::new(problem);
     let sync = cluster.run(&sync_cfg);
@@ -106,10 +124,16 @@ fn alt_scheme_cluster_matches_serial_replay() {
     let inst = lasso(404, n_workers);
     let problem = inst.problem();
     let cfg = ClusterConfig {
-        admm: AdmmConfig { rho: 5.0, tau: 3, min_arrivals: 1, max_iters: 100, ..Default::default() },
+        admm: AdmmConfig {
+            rho: 5.0,
+            tau: 3,
+            min_arrivals: 1,
+            max_iters: 100,
+            ..Default::default()
+        },
         protocol: Protocol::AltScheme,
         delays: DelayModel::Fixed { per_worker_ms: vec![0.1, 0.5, 1.0] },
-        faults: None,
+        ..Default::default()
     };
     let report = StarCluster::new(problem.clone()).run(&cfg);
     let replay = ad_admm::admm::alt_scheme::run_alt_scheme(
@@ -126,10 +150,16 @@ fn cluster_final_state_is_kkt_quality() {
     let inst = lasso(405, 4);
     let problem = inst.problem();
     let cfg = ClusterConfig {
-        admm: AdmmConfig { rho: 50.0, tau: 4, min_arrivals: 1, max_iters: 600, ..Default::default() },
+        admm: AdmmConfig {
+            rho: 50.0,
+            tau: 4,
+            min_arrivals: 1,
+            max_iters: 600,
+            ..Default::default()
+        },
         protocol: Protocol::AdAdmm,
         delays: DelayModel::None,
-        faults: None,
+        ..Default::default()
     };
     let report = StarCluster::new(problem.clone()).run(&cfg);
     let r = kkt_residual(&problem, &report.state);
@@ -148,10 +178,17 @@ fn fault_injection_still_converges_and_counts_retransmissions() {
     let inst = lasso(406, n_workers);
     let problem = inst.problem();
     let cfg = ClusterConfig {
-        admm: AdmmConfig { rho: 50.0, tau: 6, min_arrivals: 1, max_iters: 300, ..Default::default() },
+        admm: AdmmConfig {
+            rho: 50.0,
+            tau: 6,
+            min_arrivals: 1,
+            max_iters: 300,
+            ..Default::default()
+        },
         protocol: Protocol::AdAdmm,
         delays: DelayModel::Fixed { per_worker_ms: vec![0.1, 0.2, 0.4, 0.8] },
         faults: Some(FaultModel { drop_prob: 0.3, retrans_ms: 1.0, seed: 9 }),
+        ..Default::default()
     };
     let report = StarCluster::new(problem.clone()).run(&cfg);
     // communication failures only add latency — the protocol still
