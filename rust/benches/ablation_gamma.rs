@@ -6,14 +6,19 @@
 //! 2. ρ: sweep ρ around the (16)/(18) thresholds on the non-convex
 //!    sparse-PCA problem — the paper's "ρ must be large enough" claim.
 //!
-//! Run: `cargo bench --bench ablation_gamma`
+//! Run: `cargo bench --bench ablation_gamma` (AD_ADMM_BENCH_QUICK=1
+//! shrinks). Emits `BENCH_ablation_gamma.json` next to the text output.
 
 use ad_admm::admm::params::{gamma_lower_bound, rho_lower_bound_nonconvex};
+use ad_admm::bench::json::{BenchReport, JsonValue};
 use ad_admm::metrics::accuracy_series;
 use ad_admm::prelude::*;
+use ad_admm::util::Stopwatch;
 
 fn main() {
     let quick = ad_admm::bench::quick_mode();
+    let sw = Stopwatch::start();
+    let mut json = BenchReport::new("ablation_gamma");
     // ---------------------------------------------------------- γ ablation
     let n_workers = 8;
     let tau = 8usize;
@@ -42,6 +47,11 @@ fn main() {
             at500,
             acc.last().unwrap()
         );
+        json.series(vec![
+            ("sweep", JsonValue::from("gamma")),
+            ("gamma", JsonValue::Num(gamma)),
+            ("final_accuracy", JsonValue::Num(*acc.last().unwrap())),
+        ]);
     }
     println!("(expected: gamma=0 fastest on benign instances — the Theorem-1 value is a\n worst-case guarantee, trading speed for safety, exactly as §III-B discusses)");
 
@@ -92,8 +102,18 @@ fn main() {
             acc.last().unwrap(),
             format!("{:?}", out.stop)
         );
+        json.series(vec![
+            ("sweep", JsonValue::from("rho")),
+            ("beta", JsonValue::Num(beta)),
+            ("final_accuracy", JsonValue::Num(*acc.last().unwrap())),
+            ("stop", JsonValue::from(format!("{:?}", out.stop))),
+        ]);
     }
     println!("(expected: divergence below rho = 2L, where the worker-dual recursion's");
     println!(" amplification factor |L/(rho-L)| crosses 1; matches Fig. 3's beta=1.5-");
     println!(" diverges vs beta=3-converges contrast under rho = beta*L)");
+
+    json.metric("total_real_s", sw.elapsed_s());
+    let json_path = json.write().expect("write BENCH json");
+    println!("machine-readable report → {}", json_path.display());
 }

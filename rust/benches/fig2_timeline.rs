@@ -9,8 +9,10 @@
 //! Expected shape: async completes ~2-4x more master iterations in the same
 //! time; fast workers' idle% drops sharply.
 //!
-//! Run: `cargo bench --bench fig2_timeline`
+//! Run: `cargo bench --bench fig2_timeline` (AD_ADMM_BENCH_QUICK=1
+//! shrinks). Emits `BENCH_fig2_timeline.json` next to the text output.
 
+use ad_admm::bench::json::{BenchReport, JsonValue};
 use ad_admm::cluster::{ClusterConfig, Protocol};
 use ad_admm::prelude::*;
 use ad_admm::util::CsvWriter;
@@ -33,6 +35,8 @@ fn main() {
         "=== Fig. 2: sync vs async timeline (N=4, worker delays {per_worker_ms:?} ms) ==="
     );
     let delays = DelayModel::Fixed { per_worker_ms };
+    let mut json = BenchReport::new("fig2_timeline");
+    json.config("n_workers", n_workers).config("iters", iters);
     let mut rows = Vec::new();
     for (label, tau, min_arrivals) in [("sync", 1usize, n_workers), ("async", 8, 2)] {
         let cfg = ClusterConfig {
@@ -81,14 +85,24 @@ fn main() {
             r.wall_clock_s - r.master_wait_s,
             r.master_wait_s / r.wall_clock_s.max(1e-9),
         ]);
+        json.metric(&format!("{label}_iters_per_sec"), r.iters_per_sec());
+        json.metric(&format!("{label}_master_wait_s"), r.master_wait_s);
+        json.series(vec![
+            ("label", JsonValue::from(label)),
+            ("iters", JsonValue::Num(r.history.len() as f64)),
+            ("wall_clock_s", JsonValue::Num(r.wall_clock_s)),
+            ("iters_per_sec", JsonValue::Num(r.iters_per_sec())),
+        ]);
     }
 
-    let path = std::path::Path::new("bench_results/fig2_timeline.csv");
-    let mut w = CsvWriter::create(path, &["is_async", "worker", "updates", "busy_s", "idle_frac"])
+    let path = ad_admm::bench::results_dir().join("fig2_timeline.csv");
+    let mut w = CsvWriter::create(&path, &["is_async", "worker", "updates", "busy_s", "idle_frac"])
         .expect("csv");
     for row in &rows {
         w.row(row).unwrap();
     }
     w.flush().unwrap();
     println!("\nseries → {}", path.display());
+    let json_path = json.write().expect("write BENCH json");
+    println!("machine-readable report → {}", json_path.display());
 }

@@ -9,9 +9,11 @@
 //! Expected shape (paper): convergent curves for every τ at β = 3 (larger τ
 //! slightly slower in iterations), divergence at β = 1.5.
 //!
-//! Run: `cargo bench --bench fig3_spca` (use `--quick` positional env
-//! FIG3_QUICK=1 for a reduced-size run).
+//! Run: `cargo bench --bench fig3_spca` (AD_ADMM_BENCH_QUICK=1 for the
+//! shared reduced-size quick mode). Emits `BENCH_fig3_spca.json` next to
+//! the text output.
 
+use ad_admm::bench::json::{BenchReport, JsonValue};
 use ad_admm::metrics::rate::fit_linear_rate;
 use ad_admm::metrics::{accuracy_series, write_curves, RunLog};
 use ad_admm::util::plot::{render_log_curves, Series};
@@ -19,7 +21,7 @@ use ad_admm::prelude::*;
 use ad_admm::util::Stopwatch;
 
 fn main() {
-    let quick = ad_admm::bench::quick_mode() || std::env::var("FIG3_QUICK").is_ok();
+    let quick = ad_admm::bench::quick_mode();
     // Paper scale by default; quick mode for smoke runs.
     let (n_workers, m, n, nnz, iters, ref_iters) = if quick {
         (8, 100, 50, 500, 300, 2000)
@@ -130,7 +132,29 @@ fn main() {
         }
     }
 
-    let path = std::path::Path::new("bench_results/fig3_spca.csv");
-    write_curves(path, &curves, f_hat).expect("write csv");
+    let path = ad_admm::bench::results_dir().join("fig3_spca.csv");
+    write_curves(&path, &curves, f_hat).expect("write csv");
+
+    let mut json = BenchReport::new("fig3_spca");
+    json.config("n_workers", n_workers)
+        .config("block_rows", m)
+        .config("dim", n)
+        .config("iters", iters)
+        .metric("total_real_s", sw.elapsed_s());
+    for c in &curves {
+        json.series(vec![
+            ("label", JsonValue::from(c.label.as_str())),
+            ("final_accuracy", JsonValue::Num(c.final_accuracy(f_hat))),
+            (
+                "iters_to_1e-2",
+                match c.iters_to_accuracy(f_hat, 1e-2) {
+                    Some(k) => JsonValue::Num(k as f64),
+                    None => JsonValue::Null,
+                },
+            ),
+        ]);
+    }
+    let json_path = json.write().expect("write BENCH json");
+    println!("machine-readable report → {}", json_path.display());
     println!("\nseries written to {} ({:.1}s total)", path.display(), sw.elapsed_s());
 }

@@ -12,8 +12,11 @@
 //!   (c) n=1000, Algorithm 2, ρ=500, τ ∈ {1,3,10}   — still converges
 //!   (d) n=1000, Algorithm 4 diverges for every ρ even at τ=2
 //!
-//! Run: `cargo bench --bench fig4_lasso` (FIG4_QUICK=1 shrinks sizes).
+//! Run: `cargo bench --bench fig4_lasso` (AD_ADMM_BENCH_QUICK=1 for the
+//! shared reduced-size quick mode). Emits `BENCH_fig4_lasso.json` next to
+//! the text output.
 
+use ad_admm::bench::json::{BenchReport, JsonValue};
 use ad_admm::metrics::rate::fit_linear_rate;
 use ad_admm::metrics::{accuracy_series, write_curves, RunLog};
 use ad_admm::util::plot::{render_log_curves, Series};
@@ -30,11 +33,13 @@ struct Panel {
 }
 
 fn main() {
-    let quick = ad_admm::bench::quick_mode() || std::env::var("FIG4_QUICK").is_ok();
+    let quick = ad_admm::bench::quick_mode();
     let (n_workers, m, iters) = if quick { (8, 60, 400) } else { (16, 200, 2000) };
     let (n_small, n_large) = if quick { (30, 120) } else { (100, 1000) };
     let theta = 0.1;
     let sw = Stopwatch::start();
+    let mut json = BenchReport::new("fig4_lasso");
+    json.config("n_workers", n_workers).config("block_rows", m).config("iters", iters);
 
     let panels = vec![
         Panel {
@@ -127,11 +132,27 @@ fn main() {
             }
         }
 
-        let path_string = format!("bench_results/fig{}.csv", panel.name);
-        let path = std::path::Path::new(&path_string);
-        write_curves(path, &curves, f_star).expect("write csv");
+        let path = ad_admm::bench::results_dir().join(format!("fig{}.csv", panel.name));
+        write_curves(&path, &curves, f_star).expect("write csv");
         println!("series → {}", path.display());
+
+        for c in &curves {
+            json.series(vec![
+                ("label", JsonValue::from(c.label.as_str())),
+                ("final_accuracy", JsonValue::Num(c.final_accuracy(f_star))),
+                (
+                    "iters_to_1e-2",
+                    match c.iters_to_accuracy(f_star, 1e-2) {
+                        Some(k) => JsonValue::Num(k as f64),
+                        None => JsonValue::Null,
+                    },
+                ),
+            ]);
+        }
     }
 
+    json.metric("total_real_s", sw.elapsed_s());
+    let json_path = json.write().expect("write BENCH json");
+    println!("machine-readable report → {}", json_path.display());
     println!("\ntotal {:.1}s", sw.elapsed_s());
 }

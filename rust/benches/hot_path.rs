@@ -3,24 +3,34 @@
 //! - native worker subproblem solve (cached-Cholesky backsolve)
 //! - uncached factorization (what the cache saves per iteration)
 //! - native Gram mat-vec (the L1 kernel's native mirror)
-//! - master x₀ update (prox assembly)
+//! - scratch-based `f_i` evaluation (the zero-allocation cache refresh)
+//! - master x₀ update (prox assembly, scratch-buffered)
 //! - PJRT worker solve + PJRT gram/prox artifacts (when built)
 //! - master-PoV end-to-end iteration
 //!
-//! Run: `cargo bench --bench hot_path`
+//! Run: `cargo bench --bench hot_path` (`AD_ADMM_BENCH_QUICK=1` shrinks).
+//! Emits `BENCH_hot_path.json` next to the text output.
 
 use std::sync::Arc;
 
-use ad_admm::admm::{master_x0_update, AdmmConfig, AdmmState};
-use ad_admm::bench::{bench_fn, black_box, banner, report};
+use ad_admm::admm::{master_x0_update, AdmmConfig, AdmmState, MasterScratch};
+use ad_admm::bench::json::BenchReport;
+use ad_admm::bench::{bench_fn, black_box, banner, report, BenchStats};
 use ad_admm::prelude::*;
-use ad_admm::problems::LassoLocal;
+use ad_admm::problems::{LassoLocal, WorkerScratch};
 use ad_admm::runtime::{artifacts_available, artifacts_dir, PjrtLassoSolver, PjrtMasterProx};
+
+fn record(json: &mut BenchReport, label: &str, stats: &BenchStats) {
+    report(label, stats);
+    json.stats(label, stats);
+}
 
 fn main() {
     let quick = ad_admm::bench::quick_mode();
+    let mut json = BenchReport::new("hot_path");
     let shapes: &[(usize, usize)] = if quick { &[(60, 30)] } else { &[(200, 100), (200, 1000)] };
     let (warm, samples) = if quick { (1, 5) } else { (3, 50) };
+    json.config("quick_shapes", shapes.len());
     for &(m, n) in shapes {
         banner(&format!("worker hot path, block {m}x{n}"));
         let mut rng = Pcg64::seed_from_u64(5);
@@ -30,22 +40,23 @@ fn main() {
         let lam: Vec<f64> = (0..n).map(|i| (i as f64 * 0.1).sin()).collect();
         let x0: Vec<f64> = (0..n).map(|i| (i as f64 * 0.2).cos()).collect();
         let mut out = vec![0.0; n];
+        let mut ws = WorkerScratch::new();
 
         // warm the rho cache, then measure the cached path
-        local.solve_subproblem(&lam, &x0, 500.0, &mut out);
+        local.solve_subproblem(&lam, &x0, 500.0, &mut out, &mut ws);
         let stats = bench_fn(warm, samples, || {
-            local.solve_subproblem(black_box(&lam), black_box(&x0), 500.0, &mut out);
+            local.solve_subproblem(black_box(&lam), black_box(&x0), 500.0, &mut out, &mut ws);
             black_box(&out);
         });
-        report(&format!("native worker solve (cached chol) {m}x{n}"), &stats);
+        record(&mut json, &format!("native worker solve (cached chol) {m}x{n}"), &stats);
 
         let stats = bench_fn(1, if quick { 2 } else { 5 }, || {
             // fresh local cost → full gram + factorization every time
             let fresh = LassoLocal::new(a.clone(), b.clone());
-            fresh.solve_subproblem(black_box(&lam), black_box(&x0), 500.0, &mut out);
+            fresh.solve_subproblem(black_box(&lam), black_box(&x0), 500.0, &mut out, &mut ws);
             black_box(&out);
         });
-        report(&format!("native worker solve (uncached)    {m}x{n}"), &stats);
+        record(&mut json, &format!("native worker solve (uncached)    {m}x{n}"), &stats);
 
         let x: Vec<f64> = (0..n).map(|i| (i as f64).sin()).collect();
         let mut scratch = vec![0.0; m];
@@ -54,7 +65,13 @@ fn main() {
             a.gram_matvec_into(black_box(&x), &mut scratch, &mut y);
             black_box(&y);
         });
-        report(&format!("native gram matvec                {m}x{n}"), &stats);
+        record(&mut json, &format!("native gram matvec                {m}x{n}"), &stats);
+
+        // the f_i cache refresh: scratch-based eval, zero allocation
+        let stats = bench_fn(5, if quick { 20 } else { 200 }, || {
+            black_box(local.eval_with(black_box(&x), &mut ws));
+        });
+        record(&mut json, &format!("native eval (scratch buffers)     {m}x{n}"), &stats);
     }
 
     let master_n = if quick { 100 } else { 1000 };
@@ -68,11 +85,12 @@ fn main() {
             rng.fill_normal(&mut state.xs[i]);
             rng.fill_normal(&mut state.lams[i]);
         }
+        let mut ms = MasterScratch::new();
         let stats = bench_fn(5, if quick { 20 } else { 200 }, || {
-            master_x0_update(&problem, &mut state, 500.0, 0.0);
+            master_x0_update(&problem, &mut state, 500.0, 0.0, &mut ms);
             black_box(&state.x0);
         });
-        report("master x0 update (prox assembly)", &stats);
+        record(&mut json, "master x0 update (prox assembly)", &stats);
     }
 
     banner("end-to-end master iteration (serial Algorithm 3, N=16, n=100)");
@@ -89,7 +107,7 @@ fn main() {
             black_box(out.history.len());
         });
         println!("  (each sample = 50 master iterations)");
-        report("50 iterations, full diagnostics", &stats);
+        record(&mut json, "50 iterations, full diagnostics", &stats);
         // diagnostics off the hot loop: objective every 50th iteration
         // (accuracy curves only need the cached augmented Lagrangian)
         let stats = bench_fn(1, 5, || {
@@ -103,7 +121,7 @@ fn main() {
             let out = run_master_pov(&problem, &cfg, &arrivals);
             black_box(out.history.len());
         });
-        report("50 iterations, objective_every=50", &stats);
+        record(&mut json, "50 iterations, objective_every=50", &stats);
     }
 
     if ad_admm::runtime::pjrt_enabled() && artifacts_available() {
@@ -123,7 +141,7 @@ fn main() {
                 let x = solver.solve_for(0, black_box(&lam), black_box(&x0), 500.0).unwrap();
                 black_box(x);
             });
-            report(&format!("PJRT worker solve (CG{cg} + pallas) 200x100"), &stats);
+            record(&mut json, &format!("PJRT worker solve (CG{cg} + pallas) 200x100"), &stats);
         }
         if let Ok(prox) = PjrtMasterProx::new(engine.clone(), 100) {
             let v: Vec<f64> = (0..100).map(|i| (i as f64 * 0.3).sin()).collect();
@@ -131,7 +149,7 @@ fn main() {
                 let x = prox.run(black_box(&v), &v, &v, 500.0, 0.0, 0.1, 16).unwrap();
                 black_box(x);
             });
-            report("PJRT master prox n=100", &stats);
+            record(&mut json, "PJRT master prox n=100", &stats);
         }
         // raw gram artifact
         if engine.has("gram_matvec_m200_n100") {
@@ -143,9 +161,12 @@ fn main() {
                 let y = engine.execute_f64("gram_matvec_m200_n100", &[&a_buf, &x_buf]).unwrap();
                 black_box(y);
             });
-            report("PJRT gram matvec (pallas) 200x100", &stats);
+            record(&mut json, "PJRT gram matvec (pallas) 200x100", &stats);
         }
     } else {
         println!("\n(PJRT section skipped — needs the `pjrt` feature and `make artifacts`)");
     }
+
+    let path = json.write().expect("write BENCH json");
+    println!("\nmachine-readable report → {}", path.display());
 }

@@ -7,8 +7,10 @@
 //! the sync master is rate-limited by the slowest worker while the async
 //! master proceeds at the A-th fastest.
 //!
-//! Run: `cargo bench --bench speedup`
+//! Run: `cargo bench --bench speedup` (AD_ADMM_BENCH_QUICK=1 shrinks).
+//! Emits `BENCH_speedup.json` next to the text output.
 
+use ad_admm::bench::json::{BenchReport, JsonValue};
 use ad_admm::cluster::{ClusterConfig, Protocol};
 use ad_admm::metrics::accuracy_series;
 use ad_admm::prelude::*;
@@ -16,6 +18,7 @@ use ad_admm::util::CsvWriter;
 
 fn main() {
     let quick = ad_admm::bench::quick_mode();
+    let mut json = BenchReport::new("speedup");
     let iters = if quick { 25 } else { 150 };
     let fista_iters = if quick { 5_000 } else { 30_000 };
     let worker_counts: &[usize] = if quick { &[2, 4] } else { &[2, 4, 8, 16] };
@@ -25,9 +28,9 @@ fn main() {
         "N", "sync it/s", "async it/s", "speedup", "sync acc", "async acc"
     );
 
-    let path = std::path::Path::new("bench_results/speedup.csv");
+    let path = ad_admm::bench::results_dir().join("speedup.csv");
     let mut csv = CsvWriter::create(
-        path,
+        &path,
         &["n_workers", "sync_iters_per_s", "async_iters_per_s", "speedup", "sync_acc", "async_acc"],
     )
     .expect("csv");
@@ -78,9 +81,18 @@ fn main() {
             async_acc,
         ])
         .unwrap();
+        json.series(vec![
+            ("n_workers", JsonValue::Num(n_workers as f64)),
+            ("sync_iters_per_sec", JsonValue::Num(sync.iters_per_sec())),
+            ("async_iters_per_sec", JsonValue::Num(asyn.iters_per_sec())),
+            ("async_over_sync", JsonValue::Num(speedup)),
+        ]);
+        json.metric(&format!("async_speedup_n{n_workers}"), speedup);
     }
     csv.flush().unwrap();
-    println!("\nseries → {}", path.display());
+    let json_path = json.write().expect("write BENCH json");
+    println!("\nmachine-readable report → {}", json_path.display());
+    println!("series → {}", path.display());
     println!("note: same iteration budget — async trades per-iteration progress for rate;");
     println!("the paper's claim is wall-clock time-to-accuracy, dominated by the rate win.");
 }

@@ -1,18 +1,22 @@
 //! Virtual-time scale sweeps: the Section-V protocol-parameter studies
 //! (τ gate, `|A_k| ≥ A` batching gate) at worker counts the wall-clock
 //! threaded cluster cannot reach — 1000+ workers, hundreds of master
-//! iterations, all in deterministic simulated time.
+//! iterations, all in deterministic simulated time — plus the pooled
+//! multicore execution study (serial vs `pool_threads = 0` on a
+//! CPU-heavy worker fleet, asserted bit-identical).
 //!
 //! Reported per setting: simulated wall-clock, simulated master wait,
 //! simulated iterations/second, realized max |A_k|, final objective, and
 //! the real time the *simulation itself* took (the number that makes this
 //! CI-viable).
 //!
-//! Run: `cargo bench --bench virtual_scale` (AD_ADMM_BENCH_QUICK=1 shrinks).
+//! Run: `cargo bench --bench virtual_scale` (AD_ADMM_BENCH_QUICK=1
+//! shrinks). Emits `BENCH_virtual_scale.json` next to the text output.
 
 use std::sync::Arc;
 use std::time::Instant;
 
+use ad_admm::bench::json::{BenchReport, JsonValue};
 use ad_admm::bench::quick_mode;
 use ad_admm::cluster::{ClusterConfig, ExecutionMode};
 use ad_admm::prelude::*;
@@ -32,12 +36,36 @@ fn quadratic_consensus(n_workers: usize, dim: usize, seed: u64) -> ConsensusProb
     ConsensusProblem::new(locals, Regularizer::L1 { theta: 0.05 })
 }
 
+/// A CPU-heavy fleet: every worker shares one dense SPD `Q` (spectral norm
+/// computed once, reused via `with_lipschitz`) with its own linear term, so
+/// per-round work is a dense backsolve + dense eval — enough arithmetic
+/// per worker for the pool to show multicore speedup.
+fn dense_consensus(n_workers: usize, dim: usize, seed: u64) -> ConsensusProblem {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let a = DenseMatrix::randn(&mut rng, dim, dim);
+    let mut q_mat = a.gram();
+    q_mat.add_diag(1.0);
+    let lip = {
+        let probe = QuadraticLocal::new(q_mat.clone(), vec![0.0; dim]);
+        probe.lipschitz()
+    };
+    let locals: Vec<Arc<dyn LocalCost>> = (0..n_workers)
+        .map(|_| {
+            let q: Vec<f64> = (0..dim).map(|_| rng.normal()).collect();
+            Arc::new(QuadraticLocal::with_lipschitz(q_mat.clone(), q, lip)) as Arc<dyn LocalCost>
+        })
+        .collect();
+    ConsensusProblem::new(locals, Regularizer::L1 { theta: 0.05 })
+}
+
 fn main() {
     let quick = quick_mode();
+    let mut json = BenchReport::new("virtual_scale");
     let (n_workers, iters) = if quick { (200, 100) } else { (1000, 500) };
     let dim = 8;
     let problem = quadratic_consensus(n_workers, dim, 42);
     let delays = DelayModel::linear_spread(n_workers, 0.5, 50.0, 0.5, 17);
+    json.config("n_workers", n_workers).config("iters", iters).config("dim", dim);
 
     println!(
         "=== virtual-time scale sweep: N={n_workers} workers, {iters} master iterations, \
@@ -48,9 +76,9 @@ fn main() {
         "tau", "A", "sim[s]", "wait[s]", "sim it/s", "max|A_k|", "objective", "real[s]"
     );
 
-    let path = std::path::Path::new("bench_results/virtual_scale.csv");
+    let path = ad_admm::bench::results_dir().join("virtual_scale.csv");
     let mut csv = CsvWriter::create(
-        path,
+        &path,
         &[
             "tau",
             "min_arrivals",
@@ -75,6 +103,7 @@ fn main() {
         settings.push((if quick { 200 } else { 500 }, a));
     }
 
+    let mut total_real_s = 0.0;
     for (tau, min_arrivals) in settings {
         let cfg = ClusterConfig {
             admm: AdmmConfig {
@@ -92,6 +121,7 @@ fn main() {
         let t = Instant::now();
         let r = StarCluster::new(problem.clone()).run(&cfg);
         let real_s = t.elapsed().as_secs_f64();
+        total_real_s += real_s;
         assert!(
             r.trace.satisfies_bounded_delay(n_workers, tau),
             "Assumption 1 violated at tau={tau}"
@@ -120,9 +150,86 @@ fn main() {
             real_s,
         ])
         .unwrap();
+        json.series(vec![
+            ("tau", JsonValue::Num(tau as f64)),
+            ("min_arrivals", JsonValue::Num(min_arrivals as f64)),
+            ("sim_s", JsonValue::Num(r.wall_clock_s)),
+            ("sim_iters_per_sec", JsonValue::Num(r.iters_per_sec())),
+            ("max_set", JsonValue::Num(max_set as f64)),
+            ("objective", JsonValue::Num(objective)),
+            ("real_s", JsonValue::Num(real_s)),
+        ]);
     }
     csv.flush().unwrap();
+    json.metric("sweep_total_real_s", total_real_s);
     println!("\nseries → {}", path.display());
+
+    // ---- pooled execution: the multicore win on CPU-heavy worker solves ----
+    // Dense per-worker blocks make each arrived worker's round real
+    // arithmetic (O(dim²) backsolve + O(dim²) eval); fanning the rounds
+    // across cores must not change a single bit of the history.
+    let (pn, pdim, piters, pa) = if quick { (200, 48, 80, 48) } else { (1000, 128, 300, 256) };
+    println!(
+        "\n=== pooled virtual-time execution: N={pn} dense {pdim}x{pdim} workers, \
+         {piters} iterations, A={pa} ==="
+    );
+    let dense = dense_consensus(pn, pdim, 43);
+    let make_cfg = |pool_threads: usize| ClusterConfig {
+        admm: AdmmConfig {
+            rho: 20.0,
+            tau: pn,
+            min_arrivals: pa,
+            max_iters: piters,
+            objective_every: 0,
+            ..Default::default()
+        },
+        delays: DelayModel::linear_spread(pn, 0.5, 5.0, 0.3, 23),
+        mode: ExecutionMode::VirtualTime,
+        pool_threads,
+        ..Default::default()
+    };
+
+    let t = Instant::now();
+    let serial = StarCluster::new(dense.clone()).run(&make_cfg(1));
+    let serial_s = t.elapsed().as_secs_f64();
+    let t = Instant::now();
+    let pooled = StarCluster::new(dense.clone()).run(&make_cfg(0));
+    let pooled_s = t.elapsed().as_secs_f64();
+
+    // bit-identity: the pool must be invisible in the results
+    assert_eq!(serial.trace, pooled.trace, "pooled run realized a different trace");
+    assert_eq!(serial.state.x0, pooled.state.x0, "pooled x0 differs");
+    assert_eq!(
+        serial.history.len(),
+        pooled.history.len(),
+        "pooled history length differs"
+    );
+    for (a, b) in serial.history.iter().zip(&pooled.history) {
+        assert_eq!(
+            a.aug_lagrangian.to_bits(),
+            b.aug_lagrangian.to_bits(),
+            "pooled aug_lagrangian differs at k={}",
+            a.k
+        );
+    }
+
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    let speedup = serial_s / pooled_s.max(1e-12);
+    println!(
+        "serial (1 thread):   {serial_s:>8.3}s real\n\
+         pooled ({cores} threads): {pooled_s:>8.3}s real\n\
+         speedup: {speedup:.2}x — histories bit-identical"
+    );
+    json.config("pooled_n_workers", pn)
+        .config("pooled_dim", pdim)
+        .config("pooled_iters", piters)
+        .config("pool_cores", cores)
+        .metric("pooled_serial_real_s", serial_s)
+        .metric("pooled_real_s", pooled_s)
+        .metric("pooled_speedup", speedup);
+
+    let json_path = json.write().expect("write BENCH json");
+    println!("machine-readable report → {}", json_path.display());
     println!(
         "note: sim[s] is *simulated* time (what a real cluster would have spent);\n\
          real[s] is what the discrete-event simulation itself cost — the gap is\n\

@@ -14,7 +14,7 @@ use super::arrivals::{ArrivalModel, ArrivalTrace};
 use super::master_pov::{NativeSolver, SubproblemSolver};
 use super::{
     divergence_or_tol_stop, iter_record, master_x0_update, AdmmConfig, AdmmState, IterRecord,
-    StopReason,
+    MasterScratch, StopReason,
 };
 
 /// Result of an Algorithm-4 run.
@@ -64,10 +64,11 @@ pub fn run_alt_scheme_with_solver(
     let mut trace = ArrivalTrace::default();
     let mut prev_x0 = state.x0.clone();
     let mut stop = StopReason::MaxIters;
-    let mut f_cache: Vec<f64> = (0..n_workers)
-        .map(|i| problem.local(i).eval(&state.xs[i]))
-        .collect();
-    let mut al_scratch: Vec<f64> = Vec::with_capacity(n);
+    let mut scratch = MasterScratch::new();
+    let mut f_cache: Vec<f64> = Vec::with_capacity(n_workers);
+    for i in 0..n_workers {
+        f_cache.push(problem.local(i).eval_with(&state.xs[i], &mut scratch.ws));
+    }
 
     for k in 0..cfg.max_iters {
         let set = sampler.next_set(&d, cfg.tau, cfg.min_arrivals);
@@ -78,7 +79,7 @@ pub fn run_alt_scheme_with_solver(
         for &i in &set {
             arrived[i] = true;
             solver.solve(i, &lam_snap[i], &x0_snap[i], cfg.rho, &mut state.xs[i]);
-            f_cache[i] = problem.local(i).eval(&state.xs[i]);
+            f_cache[i] = problem.local(i).eval_with(&state.xs[i], &mut scratch.ws);
             d[i] = 0;
         }
         for i in 0..n_workers {
@@ -89,7 +90,7 @@ pub fn run_alt_scheme_with_solver(
 
         // (45): x₀ update uses λᵏ (pre-update duals).
         prev_x0.copy_from_slice(&state.x0);
-        master_x0_update(problem, &mut state, cfg.rho, cfg.gamma);
+        master_x0_update(problem, &mut state, cfg.rho, cfg.gamma, &mut scratch);
 
         // (46): master updates the duals of **all** workers against the
         // fresh x₀ — the step that injects stale-x into every λ_i and
@@ -107,7 +108,7 @@ pub fn run_alt_scheme_with_solver(
         }
 
         let rec =
-            iter_record(problem, &state, cfg, k, set.len(), &f_cache, &mut al_scratch, &prev_x0);
+            iter_record(problem, &state, cfg, k, set.len(), &f_cache, &mut scratch, &prev_x0);
         let early = divergence_or_tol_stop(cfg, &state, &rec, k);
         history.push(rec);
         trace.sets.push(set);

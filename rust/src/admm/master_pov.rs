@@ -8,12 +8,12 @@
 //! fast. The threaded implementation lives in [`crate::cluster`] and is
 //! trace-equivalent (tested).
 
-use crate::problems::ConsensusProblem;
+use crate::problems::{ConsensusProblem, WorkerScratch};
 
 use super::arrivals::{ArrivalModel, ArrivalTrace};
 use super::{
     divergence_or_tol_stop, iter_record, master_x0_update, AdmmConfig, AdmmState, IterRecord,
-    StopReason,
+    MasterScratch, StopReason,
 };
 
 /// Pluggable worker-subproblem solver: the native path delegates to
@@ -23,20 +23,22 @@ pub trait SubproblemSolver {
     fn solve(&mut self, worker: usize, lam: &[f64], x0: &[f64], rho: f64, out: &mut [f64]);
 }
 
-/// Closed-form/native solver backed by the problem's own local costs.
+/// Closed-form/native solver backed by the problem's own local costs. Owns
+/// the [`WorkerScratch`] its solves reuse across iterations.
 pub struct NativeSolver<'a> {
     problem: &'a ConsensusProblem,
+    scratch: WorkerScratch,
 }
 
 impl<'a> NativeSolver<'a> {
     pub fn new(problem: &'a ConsensusProblem) -> Self {
-        NativeSolver { problem }
+        NativeSolver { problem, scratch: WorkerScratch::new() }
     }
 }
 
 impl<'a> SubproblemSolver for NativeSolver<'a> {
     fn solve(&mut self, worker: usize, lam: &[f64], x0: &[f64], rho: f64, out: &mut [f64]) {
-        self.problem.local(worker).solve_subproblem(lam, x0, rho, out);
+        self.problem.local(worker).solve_subproblem(lam, x0, rho, out, &mut self.scratch);
     }
 }
 
@@ -89,12 +91,13 @@ pub fn run_master_pov_with_solver(
     let mut trace = ArrivalTrace::default();
     let mut prev_x0 = state.x0.clone();
     let mut stop = StopReason::MaxIters;
+    let mut scratch = MasterScratch::new();
     // f_i(x_i) cache: only arrived workers' x_i move, so only they are
     // re-evaluated (perf: N → |A_k| data passes per iteration).
-    let mut f_cache: Vec<f64> = (0..n_workers)
-        .map(|i| problem.local(i).eval(&state.xs[i]))
-        .collect();
-    let mut al_scratch: Vec<f64> = Vec::with_capacity(n);
+    let mut f_cache: Vec<f64> = Vec::with_capacity(n_workers);
+    for i in 0..n_workers {
+        f_cache.push(problem.local(i).eval_with(&state.xs[i], &mut scratch.ws));
+    }
 
     for k in 0..cfg.max_iters {
         let set = sampler.next_set(&d, cfg.tau, cfg.min_arrivals);
@@ -110,7 +113,7 @@ pub fn run_master_pov_with_solver(
             for j in 0..n {
                 state.lams[i][j] += cfg.rho * (state.xs[i][j] - snap[j]);
             }
-            f_cache[i] = problem.local(i).eval(&state.xs[i]);
+            f_cache[i] = problem.local(i).eval_with(&state.xs[i], &mut scratch.ws);
             d[i] = 0;
         }
         for i in 0..n_workers {
@@ -121,7 +124,7 @@ pub fn run_master_pov_with_solver(
 
         // Master update (12)/(25) with the proximal term γ.
         prev_x0.copy_from_slice(&state.x0);
-        master_x0_update(problem, &mut state, cfg.rho, cfg.gamma);
+        master_x0_update(problem, &mut state, cfg.rho, cfg.gamma, &mut scratch);
 
         // Broadcast the fresh x₀ to the arrived workers only (Step 6).
         for &i in &set {
@@ -129,7 +132,7 @@ pub fn run_master_pov_with_solver(
         }
 
         let rec =
-            iter_record(problem, &state, cfg, k, set.len(), &f_cache, &mut al_scratch, &prev_x0);
+            iter_record(problem, &state, cfg, k, set.len(), &f_cache, &mut scratch, &prev_x0);
         let early = divergence_or_tol_stop(cfg, &state, &rec, k);
         history.push(rec);
         trace.sets.push(set);

@@ -19,7 +19,28 @@ pub mod stopping;
 pub mod sync;
 
 use crate::linalg::vecops;
-use crate::problems::ConsensusProblem;
+use crate::problems::{ConsensusProblem, WorkerScratch};
+
+/// Master-side reusable buffers for the per-iteration hot path — the
+/// counterpart of [`WorkerScratch`]. One instance is owned by each
+/// coordinator loop (serial, threaded, virtual-time) and threaded through
+/// [`master_x0_update`] and [`iter_record`], so the steady-state master
+/// iteration performs no heap allocation.
+#[derive(Debug, Default)]
+pub struct MasterScratch {
+    /// Prox-assembly buffer `v` of the master update (12)/(25).
+    pub v: Vec<f64>,
+    /// Difference buffer of the cached augmented Lagrangian (26).
+    pub al: Vec<f64>,
+    /// Scratch for master-side `f_i` / objective evaluations.
+    pub ws: WorkerScratch,
+}
+
+impl MasterScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
 
 /// Algorithm parameters shared by all variants.
 #[derive(Clone, Debug)]
@@ -182,25 +203,30 @@ pub fn augmented_lagrangian_cached(
 /// `x₀⁺ = prox_{h/(Nρ+γ)}((ρ Σ x_i + Σ λ_i + γ x₀ᵏ) / (Nρ + γ))`.
 ///
 /// Shared by all coordinator variants (and mirrored by the L2 `master_prox`
-/// artifact). Writes into `state.x0`.
-pub fn master_x0_update(problem: &ConsensusProblem, state: &mut AdmmState, rho: f64, gamma: f64) {
+/// artifact). Assembles `v` in `scratch.v` (zero allocation in steady
+/// state) and writes the result into `state.x0`.
+pub fn master_x0_update(
+    problem: &ConsensusProblem,
+    state: &mut AdmmState,
+    rho: f64,
+    gamma: f64,
+    scratch: &mut MasterScratch,
+) {
     let n = state.x0.len();
     let n_workers = state.xs.len() as f64;
     let denom = n_workers * rho + gamma;
     debug_assert!(denom > 0.0, "Nρ + γ must be positive");
-    let mut v = vec![0.0; n];
+    let v = &mut scratch.v;
+    v.resize(n, 0.0);
+    v.fill(0.0);
     for i in 0..state.xs.len() {
-        let xi = &state.xs[i];
-        let li = &state.lams[i];
-        for j in 0..n {
-            v[j] += rho * xi[j] + li[j];
-        }
+        vecops::acc_axpy(rho, &state.xs[i], &state.lams[i], v);
     }
     for j in 0..n {
         v[j] = (v[j] + gamma * state.x0[j]) / denom;
     }
-    problem.regularizer().prox_in_place(&mut v, 1.0 / denom);
-    state.x0 = v;
+    problem.regularizer().prox_in_place(v, 1.0 / denom);
+    state.x0.copy_from_slice(v);
 }
 
 /// Assemble the [`IterRecord`] for iteration `k` from the post-update
@@ -215,13 +241,13 @@ pub(crate) fn iter_record(
     k: usize,
     arrivals: usize,
     f_cache: &[f64],
-    al_scratch: &mut Vec<f64>,
+    scratch: &mut MasterScratch,
     prev_x0: &[f64],
 ) -> IterRecord {
-    let aug = augmented_lagrangian_cached(problem, state, cfg.rho, f_cache, al_scratch);
+    let aug = augmented_lagrangian_cached(problem, state, cfg.rho, f_cache, &mut scratch.al);
     let x0_change = vecops::dist2(&state.x0, prev_x0);
     let objective = if cfg.objective_every > 0 && k % cfg.objective_every == 0 {
-        problem.objective(&state.x0)
+        problem.objective_with(&state.x0, &mut scratch.ws)
     } else {
         f64::NAN
     };
@@ -313,7 +339,7 @@ mod tests {
         state.xs[1] = vec![4.0];
         state.lams[0] = vec![1.0];
         state.lams[1] = vec![-1.0];
-        master_x0_update(&p, &mut state, 1.0, 0.0);
+        master_x0_update(&p, &mut state, 1.0, 0.0, &mut MasterScratch::new());
         // (ρ(2+4) + (1−1)) / (2ρ) = 3
         assert!((state.x0[0] - 3.0).abs() < 1e-12);
     }
@@ -325,12 +351,12 @@ mod tests {
         state.xs[0] = vec![0.0];
         state.xs[1] = vec![0.0];
         // γ → ∞ keeps x0 at 10; γ = 0 moves it to 0.
-        master_x0_update(&p, &mut state, 1.0, 1e9);
+        master_x0_update(&p, &mut state, 1.0, 1e9, &mut MasterScratch::new());
         assert!((state.x0[0] - 10.0).abs() < 1e-6);
         let mut state2 = AdmmState::init(2, vec![10.0]);
         state2.xs[0] = vec![0.0];
         state2.xs[1] = vec![0.0];
-        master_x0_update(&p, &mut state2, 1.0, 0.0);
+        master_x0_update(&p, &mut state2, 1.0, 0.0, &mut MasterScratch::new());
         assert!(state2.x0[0].abs() < 1e-12);
     }
 
@@ -340,10 +366,10 @@ mod tests {
         let p = ConsensusProblem::new(vec![l1], Regularizer::L1 { theta: 1.0 });
         let mut state = AdmmState::zeros(1, 1);
         state.xs[0] = vec![0.5]; // v = 0.5, threshold 1/ρ = 1 → 0
-        master_x0_update(&p, &mut state, 1.0, 0.0);
+        master_x0_update(&p, &mut state, 1.0, 0.0, &mut MasterScratch::new());
         assert_eq!(state.x0[0], 0.0);
         state.xs[0] = vec![3.0]; // v = 3, threshold 1 → 2
-        master_x0_update(&p, &mut state, 1.0, 0.0);
+        master_x0_update(&p, &mut state, 1.0, 0.0, &mut MasterScratch::new());
         assert!((state.x0[0] - 2.0).abs() < 1e-12);
     }
 

@@ -10,8 +10,8 @@ use crate::problems::ConsensusProblem;
 
 use super::master_pov::{NativeSolver, SubproblemSolver};
 use super::{
-    augmented_lagrangian, divergence_or_tol_stop, master_x0_update, AdmmConfig, AdmmState,
-    IterRecord, StopReason,
+    divergence_or_tol_stop, iter_record, master_x0_update, AdmmConfig, AdmmState, IterRecord,
+    MasterScratch, StopReason,
 };
 
 /// Result of a synchronous run.
@@ -24,6 +24,12 @@ pub struct SyncOutput {
 /// Run Algorithm 1 for `cfg.max_iters` iterations (τ/min_arrivals ignored;
 /// γ enters the x₀ step only if nonzero, matching (12) with τ = 1 where the
 /// proximal term is unnecessary but harmless).
+///
+/// Like every other coordinator this honours `cfg.objective_every`
+/// (records hold NaN on skipped iterations; historically the sync baseline
+/// evaluated the objective unconditionally) — callers that read
+/// `history.last().objective` must leave `objective_every` at its default
+/// of 1.
 pub fn run_sync_admm(problem: &ConsensusProblem, cfg: &AdmmConfig) -> SyncOutput {
     let mut solver = NativeSolver::new(problem);
     run_sync_admm_with_solver(problem, cfg, &mut solver)
@@ -39,30 +45,28 @@ pub fn run_sync_admm_with_solver(
     let mut state = cfg.initial_state(n_workers, n);
     let mut history = Vec::with_capacity(cfg.max_iters);
     let mut prev_x0 = state.x0.clone();
+    let mut x0 = state.x0.clone();
     let mut stop = StopReason::MaxIters;
+    let mut scratch = MasterScratch::new();
+    let mut f_cache = vec![0.0; n_workers];
 
     for k in 0..cfg.max_iters {
         // (6): master x₀ update from current (xᵏ, λᵏ).
         prev_x0.copy_from_slice(&state.x0);
-        master_x0_update(problem, &mut state, cfg.rho, cfg.gamma);
+        master_x0_update(problem, &mut state, cfg.rho, cfg.gamma, &mut scratch);
 
         // (7)+(8): every worker, against the fresh x₀^{k+1}.
-        let x0 = state.x0.clone();
+        x0.copy_from_slice(&state.x0);
         for i in 0..n_workers {
             solver.solve(i, &state.lams[i], &x0, cfg.rho, &mut state.xs[i]);
             for j in 0..n {
                 state.lams[i][j] += cfg.rho * (state.xs[i][j] - x0[j]);
             }
+            f_cache[i] = problem.local(i).eval_with(&state.xs[i], &mut scratch.ws);
         }
 
-        let rec = IterRecord {
-            k,
-            objective: problem.objective(&state.x0),
-            aug_lagrangian: augmented_lagrangian(problem, &state, cfg.rho),
-            consensus: state.consensus_residual(),
-            x0_change: crate::linalg::vecops::dist2(&state.x0, &prev_x0),
-            arrivals: n_workers,
-        };
+        let rec =
+            iter_record(problem, &state, cfg, k, n_workers, &f_cache, &mut scratch, &prev_x0);
         let early = divergence_or_tol_stop(cfg, &state, &rec, k);
         history.push(rec);
         if let Some(reason) = early {

@@ -1,0 +1,526 @@
+//! Machine-readable benchmark reports.
+//!
+//! A dependency-free JSON value tree (writer **and** parser — the offline
+//! image has no serde) plus the [`BenchReport`] builder every binary in
+//! `rust/benches/` uses to emit `BENCH_<name>.json` alongside its text
+//! output. The CI bench-smoke job uploads those files as artifacts and
+//! diffs them against the committed baselines in `rust/bench_baselines/`
+//! via the `bench_diff` binary, so perf changes are visible per PR instead
+//! of anecdotal.
+//!
+//! Report schema (stable; bump `schema` when it changes):
+//!
+//! ```json
+//! {
+//!   "schema": 1,
+//!   "name": "virtual_scale",
+//!   "quick": true,
+//!   "config": { "n_workers": 1000, ... },
+//!   "stats": { "<label>": {"samples": 5, "median_s": ..., ...}, ... },
+//!   "metrics": { "sim_iters_per_sec": ..., "pooled_speedup": ..., ... },
+//!   "series": [ {"label": "...", ...}, ... ]
+//! }
+//! ```
+//!
+//! Comparison conventions (used by `bench_diff`): metric keys ending in
+//! `_s` are durations (lower is better); keys containing `per_sec` or
+//! `speedup` are rates (higher is better); everything else is contextual
+//! and not diffed.
+
+use std::fmt;
+use std::io::Write;
+use std::path::PathBuf;
+
+use super::{quick_mode, results_dir, BenchStats};
+
+/// A parsed/printable JSON value. Objects keep insertion order so reports
+/// serialize deterministically.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JsonValue {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<JsonValue>),
+    Obj(Vec<(String, JsonValue)>),
+}
+
+impl JsonValue {
+    /// Object field lookup (None for non-objects / missing keys).
+    pub fn get(&self, key: &str) -> Option<&JsonValue> {
+        match self {
+            JsonValue::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            JsonValue::Num(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            JsonValue::Bool(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            JsonValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Object entries (empty for non-objects).
+    pub fn entries(&self) -> &[(String, JsonValue)] {
+        match self {
+            JsonValue::Obj(fields) => fields,
+            _ => &[],
+        }
+    }
+
+    /// Array items (empty for non-arrays).
+    pub fn items(&self) -> &[JsonValue] {
+        match self {
+            JsonValue::Arr(items) => items,
+            _ => &[],
+        }
+    }
+
+    fn write_indented(&self, f: &mut fmt::Formatter<'_>, depth: usize) -> fmt::Result {
+        let pad = "  ".repeat(depth + 1);
+        let close = "  ".repeat(depth);
+        match self {
+            JsonValue::Null => write!(f, "null"),
+            JsonValue::Bool(b) => write!(f, "{b}"),
+            // JSON has no NaN/Infinity; non-finite collapses to null (the
+            // figure benches use NaN to mark skipped diagnostics).
+            JsonValue::Num(v) if !v.is_finite() => write!(f, "null"),
+            JsonValue::Num(v) => {
+                if *v == v.trunc() && v.abs() < 1e15 {
+                    write!(f, "{}", *v as i64)
+                } else {
+                    write!(f, "{v:e}")
+                }
+            }
+            JsonValue::Str(s) => write!(f, "\"{}\"", escape(s)),
+            JsonValue::Arr(items) => {
+                if items.is_empty() {
+                    return write!(f, "[]");
+                }
+                writeln!(f, "[")?;
+                for (i, item) in items.iter().enumerate() {
+                    write!(f, "{pad}")?;
+                    item.write_indented(f, depth + 1)?;
+                    writeln!(f, "{}", if i + 1 < items.len() { "," } else { "" })?;
+                }
+                write!(f, "{close}]")
+            }
+            JsonValue::Obj(fields) => {
+                if fields.is_empty() {
+                    return write!(f, "{{}}");
+                }
+                writeln!(f, "{{")?;
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    write!(f, "{pad}\"{}\": ", escape(k))?;
+                    v.write_indented(f, depth + 1)?;
+                    writeln!(f, "{}", if i + 1 < fields.len() { "," } else { "" })?;
+                }
+                write!(f, "{close}}}")
+            }
+        }
+    }
+}
+
+impl fmt::Display for JsonValue {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.write_indented(f, 0)
+    }
+}
+
+impl From<f64> for JsonValue {
+    fn from(v: f64) -> Self {
+        JsonValue::Num(v)
+    }
+}
+
+impl From<usize> for JsonValue {
+    fn from(v: usize) -> Self {
+        JsonValue::Num(v as f64)
+    }
+}
+
+impl From<bool> for JsonValue {
+    fn from(v: bool) -> Self {
+        JsonValue::Bool(v)
+    }
+}
+
+impl From<&str> for JsonValue {
+    fn from(v: &str) -> Self {
+        JsonValue::Str(v.to_string())
+    }
+}
+
+impl From<String> for JsonValue {
+    fn from(v: String) -> Self {
+        JsonValue::Str(v)
+    }
+}
+
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Parse a JSON document (strict enough for round-tripping our reports and
+/// any hand-edited baseline; rejects trailing garbage).
+pub fn parse(text: &str) -> Result<JsonValue, String> {
+    let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+    p.skip_ws();
+    let v = p.value()?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        return Err(format!("trailing input at byte {}", p.pos));
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len()
+            && matches!(self.bytes[self.pos], b' ' | b'\t' | b'\n' | b'\r')
+        {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), String> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(format!("expected '{}' at byte {}", b as char, self.pos))
+        }
+    }
+
+    fn literal(&mut self, lit: &str, v: JsonValue) -> Result<JsonValue, String> {
+        if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
+            self.pos += lit.len();
+            Ok(v)
+        } else {
+            Err(format!("invalid literal at byte {}", self.pos))
+        }
+    }
+
+    fn value(&mut self) -> Result<JsonValue, String> {
+        match self.peek() {
+            Some(b'n') => self.literal("null", JsonValue::Null),
+            Some(b't') => self.literal("true", JsonValue::Bool(true)),
+            Some(b'f') => self.literal("false", JsonValue::Bool(false)),
+            Some(b'"') => Ok(JsonValue::Str(self.string()?)),
+            Some(b'[') => self.array(),
+            Some(b'{') => self.object(),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            _ => Err(format!("unexpected input at byte {}", self.pos)),
+        }
+    }
+
+    fn number(&mut self) -> Result<JsonValue, String> {
+        let start = self.pos;
+        while let Some(c) = self.peek() {
+            if c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        text.parse::<f64>()
+            .map(JsonValue::Num)
+            .map_err(|_| format!("bad number {text:?} at byte {start}"))
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => return Err("unterminated string".into()),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    match self.peek() {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'b') => out.push('\u{8}'),
+                        Some(b'f') => out.push('\u{c}'),
+                        Some(b'u') => {
+                            if self.pos + 4 >= self.bytes.len() {
+                                return Err("truncated \\u escape".into());
+                            }
+                            let hex =
+                                std::str::from_utf8(&self.bytes[self.pos + 1..self.pos + 5])
+                                    .map_err(|_| "bad \\u escape".to_string())?;
+                            let code = u32::from_str_radix(hex, 16)
+                                .map_err(|_| "bad \\u escape".to_string())?;
+                            // surrogate pairs are not emitted by our writer;
+                            // map them to the replacement character
+                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                            self.pos += 4;
+                        }
+                        _ => return Err(format!("bad escape at byte {}", self.pos)),
+                    }
+                    self.pos += 1;
+                }
+                Some(_) => {
+                    // consume one UTF-8 character
+                    let rest = std::str::from_utf8(&self.bytes[self.pos..])
+                        .map_err(|_| "invalid utf-8".to_string())?;
+                    let c = rest.chars().next().unwrap();
+                    out.push(c);
+                    self.pos += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<JsonValue, String> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(JsonValue::Arr(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(JsonValue::Arr(items));
+                }
+                _ => return Err(format!("expected ',' or ']' at byte {}", self.pos)),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<JsonValue, String> {
+        self.expect(b'{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(JsonValue::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let value = self.value()?;
+            fields.push((key, value));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(JsonValue::Obj(fields));
+                }
+                _ => return Err(format!("expected ',' or '}}' at byte {}", self.pos)),
+            }
+        }
+    }
+}
+
+/// Builder for one bench binary's `BENCH_<name>.json` report.
+pub struct BenchReport {
+    name: String,
+    config: Vec<(String, JsonValue)>,
+    stats: Vec<(String, JsonValue)>,
+    metrics: Vec<(String, JsonValue)>,
+    series: Vec<JsonValue>,
+}
+
+impl BenchReport {
+    pub fn new(name: &str) -> Self {
+        BenchReport {
+            name: name.to_string(),
+            config: Vec::new(),
+            stats: Vec::new(),
+            metrics: Vec::new(),
+            series: Vec::new(),
+        }
+    }
+
+    /// Record a configuration knob (worker counts, sizes, sweeps…).
+    pub fn config(&mut self, key: &str, value: impl Into<JsonValue>) -> &mut Self {
+        self.config.push((key.to_string(), value.into()));
+        self
+    }
+
+    /// Record a robust-stats block from [`super::bench_fn`].
+    pub fn stats(&mut self, label: &str, s: &BenchStats) -> &mut Self {
+        self.stats.push((label.to_string(), stats_obj(s)));
+        self
+    }
+
+    /// Record a scalar headline metric (iters/sec, time-to-tolerance,
+    /// speedup…). Follow the key conventions in the module docs so
+    /// `bench_diff` knows which direction is a regression.
+    pub fn metric(&mut self, key: &str, value: f64) -> &mut Self {
+        self.metrics.push((key.to_string(), JsonValue::Num(value)));
+        self
+    }
+
+    /// Append one row of a per-setting series (a sweep point, a curve).
+    pub fn series(&mut self, fields: Vec<(&str, JsonValue)>) -> &mut Self {
+        self.series.push(JsonValue::Obj(
+            fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
+        ));
+        self
+    }
+
+    /// The assembled report document.
+    pub fn to_json(&self) -> JsonValue {
+        JsonValue::Obj(vec![
+            ("schema".into(), JsonValue::Num(1.0)),
+            ("name".into(), JsonValue::Str(self.name.clone())),
+            ("quick".into(), JsonValue::Bool(quick_mode())),
+            ("config".into(), JsonValue::Obj(self.config.clone())),
+            ("stats".into(), JsonValue::Obj(self.stats.clone())),
+            ("metrics".into(), JsonValue::Obj(self.metrics.clone())),
+            ("series".into(), JsonValue::Arr(self.series.clone())),
+        ])
+    }
+
+    /// Write `BENCH_<name>.json` into [`results_dir`] and return the path.
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        let dir = results_dir();
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(format!("BENCH_{}.json", self.name));
+        let mut file = std::io::BufWriter::new(std::fs::File::create(&path)?);
+        writeln!(file, "{}", self.to_json())?;
+        file.flush()?;
+        Ok(path)
+    }
+}
+
+fn stats_obj(s: &BenchStats) -> JsonValue {
+    JsonValue::Obj(vec![
+        ("samples".into(), JsonValue::Num(s.samples as f64)),
+        ("mean_s".into(), JsonValue::Num(s.mean_s)),
+        ("median_s".into(), JsonValue::Num(s.median_s)),
+        ("p95_s".into(), JsonValue::Num(s.p95_s)),
+        ("min_s".into(), JsonValue::Num(s.min_s)),
+        ("max_s".into(), JsonValue::Num(s.max_s)),
+        ("stddev_s".into(), JsonValue::Num(s.stddev_s)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_report() {
+        let mut r = BenchReport::new("unit");
+        r.config("n_workers", 4usize)
+            .config("label", "smoke")
+            .metric("sim_iters_per_sec", 1234.5)
+            .metric("total_real_s", 0.25)
+            .series(vec![("tau", JsonValue::Num(50.0)), ("ok", JsonValue::Bool(true))]);
+        let text = r.to_json().to_string();
+        let back = parse(&text).expect("parse own output");
+        assert_eq!(back.get("name").and_then(JsonValue::as_str), Some("unit"));
+        assert_eq!(
+            back.get("config").and_then(|c| c.get("n_workers")).and_then(JsonValue::as_f64),
+            Some(4.0)
+        );
+        assert_eq!(
+            back.get("metrics")
+                .and_then(|m| m.get("sim_iters_per_sec"))
+                .and_then(JsonValue::as_f64),
+            Some(1234.5)
+        );
+        let series = back.get("series").unwrap().items();
+        assert_eq!(series.len(), 1);
+        assert_eq!(series[0].get("ok").and_then(JsonValue::as_bool), Some(true));
+    }
+
+    #[test]
+    fn non_finite_serializes_as_null() {
+        let v = JsonValue::Obj(vec![("x".into(), JsonValue::Num(f64::NAN))]);
+        let text = v.to_string();
+        assert!(text.contains("null"), "{text}");
+        let back = parse(&text).unwrap();
+        assert_eq!(back.get("x"), Some(&JsonValue::Null));
+    }
+
+    #[test]
+    fn parses_standard_documents() {
+        let v = parse(r#"{"a": [1, -2.5e3, true, null, "s\"t\n"], "b": {}}"#).unwrap();
+        let a = v.get("a").unwrap().items();
+        assert_eq!(a[0].as_f64(), Some(1.0));
+        assert_eq!(a[1].as_f64(), Some(-2500.0));
+        assert_eq!(a[2].as_bool(), Some(true));
+        assert_eq!(a[3], JsonValue::Null);
+        assert_eq!(a[4].as_str(), Some("s\"t\n"));
+        assert_eq!(v.get("b").unwrap().entries().len(), 0);
+        assert!(parse("{").is_err());
+        assert!(parse("[1,]").is_err());
+        assert!(parse("{} garbage").is_err());
+    }
+
+    #[test]
+    fn string_escapes_roundtrip() {
+        let original = JsonValue::Str("tab\t\"quote\"\\back\nnl \u{1} end".into());
+        let back = parse(&original.to_string()).unwrap();
+        assert_eq!(back, original);
+    }
+
+    #[test]
+    fn stats_block_has_expected_keys() {
+        let s = BenchStats::from_samples(vec![1.0, 2.0, 3.0]);
+        let o = stats_obj(&s);
+        for key in ["samples", "mean_s", "median_s", "p95_s", "min_s", "max_s", "stddev_s"] {
+            assert!(o.get(key).is_some(), "missing {key}");
+        }
+        assert_eq!(o.get("median_s").and_then(JsonValue::as_f64), Some(2.0));
+    }
+}

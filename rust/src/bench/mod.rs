@@ -1,11 +1,16 @@
 //! Benchmark harness (criterion is unavailable offline).
 //!
-//! Provides warmed-up, repeated timing with robust statistics, and a tiny
-//! text reporter the `rust/benches/*.rs` binaries (all `harness = false`)
-//! share. Times are wall-clock via `Instant`; a `black_box` defeats
-//! dead-code elimination.
+//! Provides warmed-up, repeated timing with robust statistics, a tiny text
+//! reporter the `rust/benches/*.rs` binaries (all `harness = false`)
+//! share, and the machine-readable [`json::BenchReport`] every bench
+//! writes as `BENCH_<name>.json` (uploaded by CI, diffed against committed
+//! baselines by the `bench_diff` binary). Times are wall-clock via
+//! `Instant`; a `black_box` defeats dead-code elimination.
+
+pub mod json;
 
 use std::hint::black_box as std_black_box;
+use std::path::PathBuf;
 use std::time::Instant;
 
 /// Re-export under the criterion-familiar name.
@@ -15,13 +20,24 @@ pub fn black_box<T>(x: T) -> T {
 
 /// True when the shared quick-mode switch `AD_ADMM_BENCH_QUICK` is set in
 /// the environment (to *any* value — presence is what counts; unset it to
-/// run full scale). The CI bench-smoke job sets it so every bench in
-/// `rust/benches/` runs one reduced-size iteration and can never bit-rot
-/// silently; full paper-scale runs remain the default. The fig3/fig4
-/// benches additionally honour their older `FIG3_QUICK`/`FIG4_QUICK`
-/// variables on their own.
+/// run full scale). This is the **single** quick-mode knob for every bench
+/// in `rust/benches/` (the legacy per-bench `FIG3_QUICK`/`FIG4_QUICK`
+/// variables are gone). The CI bench-smoke job sets it so every bench runs
+/// one reduced-size pass and can never bit-rot silently; full paper-scale
+/// runs remain the default.
 pub fn quick_mode() -> bool {
     std::env::var_os("AD_ADMM_BENCH_QUICK").is_some()
+}
+
+/// Where bench outputs (CSV series and `BENCH_<name>.json` reports) go:
+/// `$AD_ADMM_BENCH_DIR` when set (CI pins it so artifact-upload paths are
+/// deterministic), `bench_results/` relative to the working directory
+/// otherwise.
+pub fn results_dir() -> PathBuf {
+    match std::env::var_os("AD_ADMM_BENCH_DIR") {
+        Some(dir) => PathBuf::from(dir),
+        None => PathBuf::from("bench_results"),
+    }
 }
 
 /// Summary statistics over a set of per-iteration timings (seconds).

@@ -1,0 +1,195 @@
+//! Diff machine-readable bench reports against committed baselines.
+//!
+//! Usage: `bench_diff <baseline_dir> <candidate_dir> [--threshold 0.20] [--strict]`
+//!
+//! Walks every `BENCH_*.json` in the baseline directory, loads the matching
+//! candidate report, and compares the comparable numeric leaves:
+//!
+//! - `metrics/<key>` where the key ends in `_s` (durations, lower is
+//!   better) or contains `per_sec`/`speedup` (rates, higher is better);
+//! - `stats/<label>/median_s` for every timed section (lower is better).
+//!
+//! Changes worse than the threshold (default 20%) print a GitHub
+//! `::warning::` annotation so they surface on the PR without failing the
+//! job; `--strict` exits non-zero instead (for local gating). Missing
+//! files/keys and quick-vs-full mismatches are reported and skipped, never
+//! failed — the step is advisory by design.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use ad_admm::bench::json::{parse, JsonValue};
+
+struct Comparison {
+    key: String,
+    base: f64,
+    cand: f64,
+    /// Signed "worseness": positive = regression, negative = improvement,
+    /// as a fraction of the baseline.
+    regression: f64,
+}
+
+enum Direction {
+    LowerIsBetter,
+    HigherIsBetter,
+}
+
+fn direction(key: &str) -> Option<Direction> {
+    if key.contains("per_sec") || key.contains("speedup") {
+        Some(Direction::HigherIsBetter)
+    } else if key.ends_with("_s") {
+        Some(Direction::LowerIsBetter)
+    } else {
+        None
+    }
+}
+
+fn load(path: &Path) -> Result<JsonValue, String> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    parse(&text).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+/// Collect the comparable `(key, value)` leaves of one report.
+fn comparable_leaves(doc: &JsonValue) -> Vec<(String, f64)> {
+    let mut leaves = Vec::new();
+    for (key, value) in doc.get("metrics").map(JsonValue::entries).unwrap_or(&[]) {
+        if let (Some(v), Some(_)) = (value.as_f64(), direction(key)) {
+            leaves.push((format!("metrics/{key}"), v));
+        }
+    }
+    for (label, stats) in doc.get("stats").map(JsonValue::entries).unwrap_or(&[]) {
+        if let Some(v) = stats.get("median_s").and_then(JsonValue::as_f64) {
+            leaves.push((format!("stats/{label}/median_s"), v));
+        }
+    }
+    leaves
+}
+
+fn compare(base: &JsonValue, cand: &JsonValue) -> Vec<Comparison> {
+    let cand_leaves = comparable_leaves(cand);
+    let mut out = Vec::new();
+    for (key, base_v) in comparable_leaves(base) {
+        let Some((_, cand_v)) = cand_leaves.iter().find(|(k, _)| *k == key) else {
+            continue;
+        };
+        if base_v <= 0.0 {
+            continue; // degenerate baseline; nothing meaningful to report
+        }
+        let leaf = key.rsplit('/').next().unwrap_or(&key);
+        let regression = match direction(leaf).expect("leaves are pre-filtered") {
+            Direction::LowerIsBetter => (cand_v - base_v) / base_v,
+            Direction::HigherIsBetter => (base_v - cand_v) / base_v,
+        };
+        out.push(Comparison { key, base: base_v, cand: *cand_v, regression });
+    }
+    out
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut threshold = 0.20;
+    let mut strict = false;
+    let mut dirs: Vec<PathBuf> = Vec::new();
+    let mut it = args.iter();
+    while let Some(arg) = it.next() {
+        match arg.as_str() {
+            "--threshold" => match it.next().and_then(|v| v.parse::<f64>().ok()) {
+                Some(v) if v > 0.0 => threshold = v,
+                _ => {
+                    eprintln!("--threshold needs a positive number");
+                    return ExitCode::from(2);
+                }
+            },
+            "--strict" => strict = true,
+            other => dirs.push(PathBuf::from(other)),
+        }
+    }
+    if dirs.len() != 2 {
+        eprintln!("usage: bench_diff <baseline_dir> <candidate_dir> [--threshold 0.20] [--strict]");
+        return ExitCode::from(2);
+    }
+    let (baseline_dir, candidate_dir) = (&dirs[0], &dirs[1]);
+
+    let mut baselines: Vec<PathBuf> = match std::fs::read_dir(baseline_dir) {
+        Ok(entries) => entries
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .is_some_and(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+            })
+            .collect(),
+        Err(e) => {
+            eprintln!("cannot read baseline dir {}: {e}", baseline_dir.display());
+            return ExitCode::from(2);
+        }
+    };
+    baselines.sort();
+    if baselines.is_empty() {
+        println!("no BENCH_*.json baselines in {}", baseline_dir.display());
+        return ExitCode::SUCCESS;
+    }
+
+    let mut regressions = 0usize;
+    for base_path in &baselines {
+        let file = base_path.file_name().unwrap().to_string_lossy().into_owned();
+        let cand_path = candidate_dir.join(&file);
+        let base = match load(base_path) {
+            Ok(v) => v,
+            Err(e) => {
+                println!("~ {file}: unreadable baseline ({e}), skipping");
+                continue;
+            }
+        };
+        if !cand_path.exists() {
+            println!("~ {file}: no candidate report (bench not run?), skipping");
+            continue;
+        }
+        let cand = match load(&cand_path) {
+            Ok(v) => v,
+            Err(e) => {
+                println!("~ {file}: unreadable candidate ({e}), skipping");
+                continue;
+            }
+        };
+        let quick = |d: &JsonValue| d.get("quick").and_then(JsonValue::as_bool);
+        if quick(&base) != quick(&cand) {
+            println!("~ {file}: quick/full mode mismatch, not comparable, skipping");
+            continue;
+        }
+        let provisional = base
+            .get("provisional")
+            .and_then(JsonValue::as_bool)
+            .unwrap_or(false);
+        for c in compare(&base, &cand) {
+            let pct = c.regression * 100.0;
+            if c.regression > threshold {
+                regressions += 1;
+                let note = if provisional { " [provisional baseline]" } else { "" };
+                println!(
+                    "::warning::bench regression{note}: {file} {} {:+.1}% (baseline {:.4e}, now {:.4e})",
+                    c.key, pct, c.base, c.cand
+                );
+            } else if c.regression < -threshold {
+                println!(
+                    "+ {file} {} improved {:.1}% ({:.4e} -> {:.4e})",
+                    c.key, -pct, c.base, c.cand
+                );
+            } else {
+                println!("= {file} {} within ±{:.0}% ({:+.1}%)", c.key, threshold * 100.0, pct);
+            }
+        }
+    }
+
+    println!(
+        "\nbench_diff: {} baseline file(s), {} regression(s) beyond {:.0}%",
+        baselines.len(),
+        regressions,
+        threshold * 100.0
+    );
+    if strict && regressions > 0 {
+        return ExitCode::FAILURE;
+    }
+    ExitCode::SUCCESS
+}

@@ -22,6 +22,7 @@
 
 pub mod clock;
 pub mod messages;
+pub mod pool;
 pub mod sim;
 pub mod timeline;
 pub mod worker;
@@ -32,7 +33,7 @@ use std::sync::Arc;
 use crate::admm::arrivals::ArrivalTrace;
 use crate::admm::{
     divergence_or_tol_stop, iter_record, master_x0_update, AdmmConfig, AdmmState, IterRecord,
-    StopReason,
+    MasterScratch, StopReason,
 };
 use crate::problems::ConsensusProblem;
 use crate::rng::Pcg64;
@@ -40,6 +41,7 @@ use crate::util::timer::{Clock, Stopwatch};
 
 pub use clock::VirtualClock;
 pub use messages::{MasterMsg, WorkerMsg};
+pub use pool::WorkerPool;
 pub use timeline::{Timeline, WorkerStats};
 use worker::WorkerSolveFn;
 
@@ -161,6 +163,13 @@ pub struct ClusterConfig {
     pub faults: Option<FaultModel>,
     /// Real threads (wall clock) or discrete-event virtual time.
     pub mode: ExecutionMode,
+    /// Worker-solve thread-pool size for [`ExecutionMode::VirtualTime`]:
+    /// `1` (default) solves each round serially on the calling thread,
+    /// `0` auto-sizes to the machine's available parallelism, `k > 1` uses
+    /// at most `k` threads. Results are **bit-identical** across every
+    /// setting (pinned by the `virtual_time` property tests); the
+    /// real-thread mode ignores it — it already runs one thread per worker.
+    pub pool_threads: usize,
 }
 
 impl Default for ClusterConfig {
@@ -172,6 +181,7 @@ impl Default for ClusterConfig {
             comm_delays: None,
             faults: None,
             mode: ExecutionMode::RealThreads,
+            pool_threads: 1,
         }
     }
 }
@@ -283,10 +293,11 @@ impl StarCluster {
         let mut prev_x0 = state.x0.clone();
         let mut master_wait_s = 0.0;
         let mut stop = StopReason::MaxIters;
-        let mut f_cache: Vec<f64> = (0..n_workers)
-            .map(|i| self.problem.local(i).eval(&state.xs[i]))
-            .collect();
-        let mut al_scratch: Vec<f64> = Vec::with_capacity(n);
+        let mut scratch = MasterScratch::new();
+        let mut f_cache: Vec<f64> = Vec::with_capacity(n_workers);
+        for i in 0..n_workers {
+            f_cache.push(self.problem.local(i).eval_with(&state.xs[i], &mut scratch.ws));
+        }
 
         // Initial broadcast: everyone starts computing against x⁰ (and λ⁰
         // for Algorithm 4).
@@ -331,7 +342,7 @@ impl StarCluster {
                 if let Some(lam) = msg.lam {
                     state.lams[i] = lam; // Algorithm 2: worker-computed dual
                 }
-                f_cache[i] = self.problem.local(i).eval(&state.xs[i]);
+                f_cache[i] = self.problem.local(i).eval_with(&state.xs[i], &mut scratch.ws);
                 d[i] = 0;
             }
             for i in 0..n_workers {
@@ -342,7 +353,7 @@ impl StarCluster {
 
             // (12)/(45): master x₀ update.
             prev_x0.copy_from_slice(&state.x0);
-            master_x0_update(&self.problem, &mut state, rho, cfg.admm.gamma);
+            master_x0_update(&self.problem, &mut state, rho, cfg.admm.gamma, &mut scratch);
 
             // Algorithm 4 (46): master updates ALL duals against fresh x₀.
             if protocol == Protocol::AltScheme {
@@ -370,7 +381,7 @@ impl StarCluster {
                 k,
                 set.len(),
                 &f_cache,
-                &mut al_scratch,
+                &mut scratch,
                 &prev_x0,
             );
             let early = divergence_or_tol_stop(&cfg.admm, &state, &rec, k);

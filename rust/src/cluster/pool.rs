@@ -1,0 +1,147 @@
+//! A std-only scoped thread pool for the virtual-time scheduler's worker
+//! rounds.
+//!
+//! The discrete-event simulator ([`super::sim`]) defers all worker
+//! arithmetic of a master iteration — subproblem solves, dual updates,
+//! `f_i(x_i)` cache refreshes — into a task list, one task per arrived
+//! worker. This pool fans that list across OS threads while keeping the
+//! run **bit-identical** to serial execution:
+//!
+//! - every task writes only its own per-worker slots (`x_i`, `λ_i`,
+//!   `f_cache[i]`, the worker's scratch) and reads only shared immutable
+//!   state (the `x₀`/`λ̂` snapshots, the problem data), so the results do
+//!   not depend on scheduling;
+//! - tasks are partitioned into **contiguous chunks in worker-index
+//!   order** (chunk `c` always gets the same tasks for a given task count
+//!   and thread count), so even the work assignment is deterministic, not
+//!   just the result;
+//! - all *reductions* over worker results (the master prox assembly, the
+//!   cached augmented Lagrangian) stay on the calling thread in ascending
+//!   worker-index order.
+//!
+//! `std::thread::scope` lets the tasks borrow the coordinator's state
+//! directly — no channels, no `'static` bounds, no allocation besides the
+//! per-round spawn of at most `threads` OS threads. The `virtual_time`
+//! property tests pin pooled == serial bit-equality across worker counts,
+//! seeds and pool sizes.
+
+use std::num::NonZeroUsize;
+
+/// Scoped fan-out pool. Cheap to construct; holds no threads between runs.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkerPool {
+    threads: usize,
+}
+
+impl WorkerPool {
+    /// `threads = 0` auto-sizes to the machine's available parallelism;
+    /// `threads = 1` executes serially on the calling thread (no spawns);
+    /// `threads = k` uses at most `k` OS threads per run.
+    pub fn new(threads: usize) -> Self {
+        let threads = if threads == 0 {
+            std::thread::available_parallelism().map(NonZeroUsize::get).unwrap_or(1)
+        } else {
+            threads
+        };
+        WorkerPool { threads }
+    }
+
+    /// The resolved thread count.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Apply `f` to every task. Serial in-order execution when the pool has
+    /// one thread (or one task); otherwise tasks are split into contiguous
+    /// chunks and each chunk runs on its own scoped thread, preserving
+    /// in-chunk order. `f` must make the outcome independent of scheduling
+    /// by writing only through the task it was handed.
+    pub fn run<T, F>(&self, tasks: &mut [T], f: F)
+    where
+        T: Send,
+        F: Fn(&mut T) + Sync,
+    {
+        let threads = self.threads.min(tasks.len());
+        if threads <= 1 {
+            for task in tasks.iter_mut() {
+                f(task);
+            }
+            return;
+        }
+        // ceil(len / threads): every chunk but possibly the last is full,
+        // and the chunk boundaries depend only on (len, threads).
+        let chunk = tasks.len().div_ceil(threads);
+        std::thread::scope(|scope| {
+            for chunk_tasks in tasks.chunks_mut(chunk) {
+                let f = &f;
+                scope.spawn(move || {
+                    for task in chunk_tasks.iter_mut() {
+                        f(task);
+                    }
+                });
+            }
+        });
+    }
+}
+
+impl Default for WorkerPool {
+    /// Auto-sized pool (`threads = 0`).
+    fn default() -> Self {
+        WorkerPool::new(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn squares(pool: &WorkerPool, n: usize) -> Vec<f64> {
+        let mut tasks: Vec<(usize, f64)> = (0..n).map(|i| (i, 0.0)).collect();
+        pool.run(&mut tasks, |t| {
+            t.1 = (t.0 as f64 + 1.0).sqrt();
+        });
+        tasks.into_iter().map(|t| t.1).collect()
+    }
+
+    #[test]
+    fn zero_auto_sizes_to_at_least_one() {
+        assert!(WorkerPool::new(0).threads() >= 1);
+        assert_eq!(WorkerPool::new(3).threads(), 3);
+        assert!(WorkerPool::default().threads() >= 1);
+    }
+
+    #[test]
+    fn pooled_results_bit_equal_to_serial() {
+        let serial = squares(&WorkerPool::new(1), 101);
+        for threads in [2, 3, 4, 7, 200] {
+            let pooled = squares(&WorkerPool::new(threads), 101);
+            assert_eq!(serial, pooled, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn every_task_runs_exactly_once() {
+        let mut tasks: Vec<u32> = vec![0; 57];
+        WorkerPool::new(4).run(&mut tasks, |t| *t += 1);
+        assert!(tasks.iter().all(|&t| t == 1));
+    }
+
+    #[test]
+    fn empty_and_single_task_lists() {
+        let pool = WorkerPool::new(8);
+        let mut none: Vec<u32> = Vec::new();
+        pool.run(&mut none, |_| unreachable!("no tasks to run"));
+        let mut one = vec![41u32];
+        pool.run(&mut one, |t| *t += 1);
+        assert_eq!(one, vec![42]);
+    }
+
+    #[test]
+    fn pool_larger_than_task_count() {
+        // more threads than tasks: each task still runs once, in a chunk
+        // of its own
+        let mut tasks: Vec<usize> = (0..3).collect();
+        WorkerPool::new(64).run(&mut tasks, |t| *t *= 10);
+        assert_eq!(tasks, vec![0, 10, 20]);
+    }
+}

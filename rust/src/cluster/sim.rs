@@ -20,12 +20,15 @@
 //!    parameter sweeps run on every CI push.
 
 use crate::admm::arrivals::ArrivalTrace;
-use crate::admm::{divergence_or_tol_stop, iter_record, master_x0_update, StopReason};
-use crate::problems::ConsensusProblem;
+use crate::admm::{
+    divergence_or_tol_stop, iter_record, master_x0_update, MasterScratch, StopReason,
+};
+use crate::problems::{ConsensusProblem, WorkerScratch};
 use crate::rng::Pcg64;
 use crate::util::timer::Clock;
 
 use super::clock::{Event, EventKind, EventQueue, VirtualClock};
+use super::pool::WorkerPool;
 use super::timeline::WorkerStats;
 use super::worker::WorkerSolveFn;
 use super::{ClusterConfig, ClusterReport, DelaySampler, FaultModel, Protocol};
@@ -36,6 +39,9 @@ struct VirtualWorker {
     comm: Option<DelaySampler>,
     fault_rng: Option<Pcg64>,
     solve: Option<WorkerSolveFn>,
+    /// Reusable subproblem/eval buffers, reused across this worker's rounds
+    /// (zero allocation in the compute hot path).
+    scratch: WorkerScratch,
     /// Duration of the in-flight compute phase, charged to `busy_s` when
     /// the ComputeDone event fires (a round cut off by the end of the run
     /// is never charged — matching the threaded mode, which accounts busy
@@ -44,6 +50,20 @@ struct VirtualWorker {
     /// Duration of the in-flight transit phase (comm + retransmissions),
     /// charged when the Arrive event fires.
     inflight_transit_s: f64,
+}
+
+/// One arrived worker's deferred round of arithmetic, fanned across the
+/// [`WorkerPool`]. Each task owns mutable access to exactly the slots it
+/// writes (`x_i`, `λ_i`, `f_cache[i]`, its worker's scratch) and reads only
+/// shared immutable snapshots, so pooled execution is bit-identical to
+/// serial regardless of scheduling.
+struct SolveTask<'a> {
+    worker: usize,
+    solve: Option<&'a mut WorkerSolveFn>,
+    scratch: &'a mut WorkerScratch,
+    x: &'a mut Vec<f64>,
+    lam: &'a mut Vec<f64>,
+    f: &'a mut f64,
 }
 
 /// Start worker `i`'s next round at virtual instant `now_s`: sample its
@@ -132,11 +152,13 @@ pub(crate) fn run_virtual(
                 .as_ref()
                 .map(|f| Pcg64::seed_from_u64(f.seed.wrapping_add(i as u64 * 0x5bd1))),
             solve: solver_list[i].take(),
+            scratch: WorkerScratch::new(),
             inflight_compute_s: 0.0,
             inflight_transit_s: 0.0,
         })
         .collect();
     let mut stats: Vec<WorkerStats> = (0..n_workers).map(WorkerStats::new).collect();
+    let pool = WorkerPool::new(cfg.pool_threads);
 
     let mut vclock = VirtualClock::new();
     let mut queue = EventQueue::new();
@@ -152,10 +174,11 @@ pub(crate) fn run_virtual(
     let mut trace = ArrivalTrace::default();
     let mut prev_x0 = state.x0.clone();
     let mut stop = StopReason::MaxIters;
-    let mut f_cache: Vec<f64> = (0..n_workers)
-        .map(|i| problem.local(i).eval(&state.xs[i]))
-        .collect();
-    let mut al_scratch: Vec<f64> = Vec::with_capacity(n);
+    let mut master_scratch = MasterScratch::new();
+    let mut f_cache: Vec<f64> = Vec::with_capacity(n_workers);
+    for i in 0..n_workers {
+        f_cache.push(problem.local(i).eval_with(&state.xs[i], &mut master_scratch.ws));
+    }
     let mut pending = vec![false; n_workers];
     let mut master_wait_s = 0.0;
 
@@ -218,52 +241,73 @@ pub(crate) fn run_virtual(
         master_wait_s += vclock.now_s() - wait_from;
 
         let set: Vec<usize> = (0..n_workers).filter(|&i| pending[i]).collect();
-        // Deferred worker arithmetic, in ascending id order — the exact
-        // update sequence of the serial Algorithm-3 simulator.
-        for &i in &set {
+        // Deferred worker arithmetic: one task per arrived worker, built in
+        // ascending id order and fanned across the pool. Every task writes
+        // only its own slots against the shared immutable snapshots, so the
+        // result is the exact bit sequence of the serial Algorithm-3
+        // simulator for any pool size (pinned by the property tests).
+        let mut tasks: Vec<SolveTask> = Vec::with_capacity(set.len());
+        for (i, ((w, x), (lam, f))) in workers
+            .iter_mut()
+            .zip(state.xs.iter_mut())
+            .zip(state.lams.iter_mut().zip(f_cache.iter_mut()))
+            .enumerate()
+        {
+            if pending[i] {
+                tasks.push(SolveTask {
+                    worker: i,
+                    solve: w.solve.as_mut(),
+                    scratch: &mut w.scratch,
+                    x,
+                    lam,
+                    f,
+                });
+            }
+        }
+        let x0_snaps = &x0_snap;
+        let lam_snaps = &lam_snap;
+        pool.run(&mut tasks, |t| {
+            let i = t.worker;
             match protocol {
                 Protocol::AdAdmm => {
                     // (19)/(23): solve against the worker's own dual and its
                     // x₀ snapshot, then (20)/(24): the dual update.
-                    let snap = &x0_snap[i];
-                    match workers[i].solve.as_mut() {
-                        Some(f) => f(&state.lams[i], snap, rho, &mut state.xs[i]),
-                        None => problem.local(i).solve_subproblem(
-                            &state.lams[i],
-                            snap,
-                            rho,
-                            &mut state.xs[i],
-                        ),
+                    let snap = &x0_snaps[i];
+                    match &mut t.solve {
+                        Some(f) => (**f)(t.lam, snap, rho, t.x),
+                        None => {
+                            problem.local(i).solve_subproblem(t.lam, snap, rho, t.x, t.scratch)
+                        }
                     }
                     for j in 0..n {
-                        state.lams[i][j] += rho * (state.xs[i][j] - snap[j]);
+                        t.lam[j] += rho * (t.x[j] - snap[j]);
                     }
                 }
                 Protocol::AltScheme => {
                     // (47): solve against the master-broadcast (x̂₀, λ̂_i).
-                    match workers[i].solve.as_mut() {
-                        Some(f) => f(&lam_snap[i], &x0_snap[i], rho, &mut state.xs[i]),
-                        None => problem.local(i).solve_subproblem(
-                            &lam_snap[i],
-                            &x0_snap[i],
-                            rho,
-                            &mut state.xs[i],
-                        ),
+                    let (snap, lsnap) = (&x0_snaps[i], &lam_snaps[i]);
+                    match &mut t.solve {
+                        Some(f) => (**f)(lsnap, snap, rho, t.x),
+                        None => {
+                            problem.local(i).solve_subproblem(lsnap, snap, rho, t.x, t.scratch)
+                        }
                     }
                 }
             }
-            f_cache[i] = problem.local(i).eval(&state.xs[i]);
-            d[i] = 0;
-        }
+            *t.f = problem.local(i).eval_with(t.x, t.scratch);
+        });
+        drop(tasks);
         for i in 0..n_workers {
-            if !pending[i] {
+            if pending[i] {
+                d[i] = 0;
+            } else {
                 d[i] += 1;
             }
         }
 
         // (12)/(25)/(45): master x₀ update.
         prev_x0.copy_from_slice(&state.x0);
-        master_x0_update(problem, &mut state, rho, cfg.admm.gamma);
+        master_x0_update(problem, &mut state, rho, cfg.admm.gamma, &mut master_scratch);
 
         // Algorithm 4 (46): master updates ALL duals against fresh x₀.
         if protocol == Protocol::AltScheme {
@@ -292,7 +336,7 @@ pub(crate) fn run_virtual(
             k,
             set.len(),
             &f_cache,
-            &mut al_scratch,
+            &mut master_scratch,
             &prev_x0,
         );
         let early = divergence_or_tol_stop(&cfg.admm, &state, &rec, k);
@@ -362,6 +406,20 @@ mod tests {
         assert_eq!(a.trace, b.trace, "same seed must realize the same arrival sets");
         assert_eq!(a.state.x0, b.state.x0);
         assert_eq!(a.wall_clock_s, b.wall_clock_s, "virtual time is exact");
+    }
+
+    #[test]
+    fn pooled_virtual_run_matches_serial() {
+        let p = problem(805, 4);
+        let serial = StarCluster::new(p.clone()).run(&virt_cfg(3, 1, 70));
+        let mut cfg = virt_cfg(3, 1, 70);
+        cfg.pool_threads = 3;
+        let pooled = StarCluster::new(p).run(&cfg);
+        assert_eq!(serial.trace, pooled.trace);
+        assert_eq!(serial.state.x0, pooled.state.x0);
+        assert_eq!(serial.state.xs, pooled.state.xs);
+        assert_eq!(serial.state.lams, pooled.state.lams);
+        assert_eq!(serial.wall_clock_s, pooled.wall_clock_s);
     }
 
     #[test]

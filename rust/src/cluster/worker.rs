@@ -5,7 +5,7 @@ use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::problems::LocalCost;
+use crate::problems::{LocalCost, WorkerScratch};
 
 use super::messages::{MasterMsg, WorkerMsg};
 use super::timeline::WorkerStats;
@@ -37,6 +37,7 @@ pub(crate) fn worker_loop(
     let n = local.dim();
     let mut lam = vec![0.0; n]; // λ⁰ = 0 (Algorithm 2 keeps it worker-side)
     let mut x = vec![0.0; n];
+    let mut scratch = WorkerScratch::new(); // reused across rounds
     let mut stats = WorkerStats::new(id);
     let mut fault_rng = faults
         .as_ref()
@@ -82,7 +83,7 @@ pub(crate) fn worker_loop(
                 // (13): x_i ← argmin f_i + xᵀλ_i + ρ/2‖x − x̂₀‖²
                 match solve_override.as_mut() {
                     Some(f) => f(&lam, &x0, rho, &mut x),
-                    None => local.solve_subproblem(&lam, &x0, rho, &mut x),
+                    None => local.solve_subproblem(&lam, &x0, rho, &mut x, &mut scratch),
                 }
                 // (14): λ_i ← λ_i + ρ(x_i − x̂₀)
                 for j in 0..n {
@@ -96,7 +97,7 @@ pub(crate) fn worker_loop(
                 let master_lam = master_lam.expect("Algorithm 4 must send λ̂_i");
                 match solve_override.as_mut() {
                     Some(f) => f(&master_lam, &x0, rho, &mut x),
-                    None => local.solve_subproblem(&master_lam, &x0, rho, &mut x),
+                    None => local.solve_subproblem(&master_lam, &x0, rho, &mut x, &mut scratch),
                 }
                 comm_faults(&mut stats);
                 let _ = outbox.send(WorkerMsg { id, x: x.clone(), lam: None });

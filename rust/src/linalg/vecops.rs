@@ -43,6 +43,17 @@ pub fn axpby(a: f64, x: &[f64], b: f64, y: &mut [f64]) {
     }
 }
 
+/// `out += a * x + y` — the fused accumulate of the master prox assembly
+/// (12)/(25), `v += ρ·x_i + λ_i`, one pass per worker with no temporary.
+#[inline]
+pub fn acc_axpy(a: f64, x: &[f64], y: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    debug_assert_eq!(x.len(), out.len());
+    for i in 0..x.len() {
+        out[i] += a * x[i] + y[i];
+    }
+}
+
 /// `x *= a`.
 #[inline]
 pub fn scale(a: f64, x: &mut [f64]) {
@@ -157,6 +168,16 @@ mod tests {
         let mut y = vec![3.0, 4.0];
         axpby(2.0, &x, 0.5, &mut y);
         assert_eq!(y, vec![3.5, 6.0]);
+    }
+
+    #[test]
+    fn acc_axpy_basic() {
+        let x = vec![1.0, 2.0];
+        let y = vec![10.0, 20.0];
+        let mut out = vec![0.5, 0.5];
+        acc_axpy(3.0, &x, &y, &mut out);
+        // out_i + 3*x_i + y_i
+        assert_eq!(out, vec![13.5, 26.5]);
     }
 
     #[test]

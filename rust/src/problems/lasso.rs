@@ -5,7 +5,7 @@
 //! cached Cholesky backsolve.
 
 use super::cache::{Factor, RhoCache};
-use super::LocalCost;
+use super::{LocalCost, WorkerScratch};
 use crate::linalg::dense::DenseMatrix;
 use crate::linalg::power::power_iteration;
 use crate::linalg::vecops;
@@ -61,6 +61,17 @@ impl LocalCost for LassoLocal {
         vecops::nrm2_sq(&r)
     }
 
+    fn eval_with(&self, x: &[f64], scratch: &mut WorkerScratch) -> f64 {
+        // residual ‖Ax − b‖² through the reusable row buffer (same
+        // arithmetic order as `eval`, hence bit-identical)
+        scratch.rows.resize(self.a.rows(), 0.0);
+        self.a.matvec_into(x, &mut scratch.rows);
+        for (ri, bi) in scratch.rows.iter_mut().zip(&self.b) {
+            *ri -= bi;
+        }
+        vecops::nrm2_sq(&scratch.rows)
+    }
+
     fn grad_into(&self, x: &[f64], out: &mut [f64]) {
         // ∇f = 2AᵀA x − 2Aᵀb
         self.gram.matvec_into(x, out);
@@ -73,7 +84,15 @@ impl LocalCost for LassoLocal {
         self.lip
     }
 
-    fn solve_subproblem(&self, lam: &[f64], x0: &[f64], rho: f64, out: &mut [f64]) {
+    fn solve_subproblem(
+        &self,
+        lam: &[f64],
+        x0: &[f64],
+        rho: f64,
+        out: &mut [f64],
+        _scratch: &mut WorkerScratch,
+    ) {
+        // Closed form: rhs assembled directly in `out`, no temporaries.
         let n = self.dim();
         debug_assert_eq!(lam.len(), n);
         debug_assert_eq!(x0.len(), n);
@@ -166,7 +185,7 @@ mod tests {
             *v = -*v;
         }
         let mut out = vec![0.0; 5];
-        l.solve_subproblem(&lam, &x0, 10.0, &mut out);
+        l.solve_subproblem(&lam, &x0, 10.0, &mut out, &mut WorkerScratch::new());
         assert!(vecops::dist2(&out, &x0) < 1e-9);
     }
 }

@@ -6,7 +6,7 @@
 //! Cholesky on `∇²f + ρI` — a handful of O(n³) steps, fine at these dims
 //! (and the L2/L1 PJRT path exists for the quadratic workloads instead).
 
-use super::LocalCost;
+use super::{LocalCost, WorkerScratch};
 use crate::linalg::cholesky::Cholesky;
 use crate::linalg::dense::DenseMatrix;
 use crate::linalg::power::power_iteration;
@@ -41,6 +41,24 @@ impl LogisticLocal {
         }
         m
     }
+
+    /// `margins` into a caller buffer (resized to `rows`) — the hot path.
+    fn margins_into(&self, x: &[f64], m: &mut Vec<f64>) {
+        m.resize(self.a.rows(), 0.0);
+        self.a.matvec_into(x, m);
+        for (mj, yj) in m.iter_mut().zip(&self.y) {
+            *mj *= yj;
+        }
+    }
+
+    /// `f(x)` through a caller-owned margin buffer (bit-identical to
+    /// [`LocalCost::eval`]; separate from `eval_with` so the line search in
+    /// `solve_subproblem` can evaluate while other scratch fields are
+    /// borrowed).
+    fn loss_with(&self, x: &[f64], m: &mut Vec<f64>) -> f64 {
+        self.margins_into(x, m);
+        m.iter().map(|&mj| log1p_exp_neg(mj)).sum()
+    }
 }
 
 /// Numerically-stable `log(1 + e^{-m})`.
@@ -73,6 +91,10 @@ impl LocalCost for LogisticLocal {
         self.margins(x).iter().map(|&m| log1p_exp_neg(m)).sum()
     }
 
+    fn eval_with(&self, x: &[f64], scratch: &mut WorkerScratch) -> f64 {
+        self.loss_with(x, &mut scratch.rows)
+    }
+
     fn grad_into(&self, x: &[f64], out: &mut [f64]) {
         // ∇f = −Σ_j σ(−m_j) y_j a_j
         let m = self.margins(x);
@@ -87,33 +109,49 @@ impl LocalCost for LogisticLocal {
         0.25 * self.lam_max
     }
 
-    fn solve_subproblem(&self, lam: &[f64], x0: &[f64], rho: f64, out: &mut [f64]) {
-        // Damped Newton on g(x) = f(x) + xᵀλ + ρ/2 ||x − x0||².
+    fn solve_subproblem(
+        &self,
+        lam: &[f64],
+        x0: &[f64],
+        rho: f64,
+        out: &mut [f64],
+        scratch: &mut WorkerScratch,
+    ) {
+        // Damped Newton on g(x) = f(x) + xᵀλ + ρ/2 ||x − x0||². Vector
+        // temporaries live in `scratch` (`rows` = margins, `rows2` = Newton
+        // weights / Hessian diagonal, `grad`/`step`/`trial` as named); only
+        // the n×n Hessian and its factorization still allocate per Newton
+        // step — they are factor-sized, not iteration-hot-loop-sized.
         let n = self.dim();
         let mrows = self.a.rows();
         out.copy_from_slice(x0); // warm start at the consensus point
-        let mut grad = vec![0.0; n];
-        let mut margins;
-        let mut diag = vec![0.0; mrows];
+        let WorkerScratch { rows, rows2, grad, step, trial } = scratch;
+        grad.resize(n, 0.0);
+        step.resize(n, 0.0);
+        trial.resize(n, 0.0);
+        rows2.resize(mrows, 0.0);
 
         for _ in 0..self.newton_iters {
-            // gradient of g
-            self.grad_into(out, &mut grad);
+            // gradient of g: ∇f = Aᵀw with w_j = −σ(−m_j) y_j
+            self.margins_into(out, rows);
+            for j in 0..mrows {
+                rows2[j] = -sigma_neg(rows[j]) * self.y[j];
+            }
+            self.a.matvec_t_into(rows2, grad);
             for i in 0..n {
                 grad[i] += lam[i] + rho * (out[i] - x0[i]);
             }
-            if vecops::nrm2(&grad) < self.newton_tol * (1.0 + vecops::nrm2(out)) {
+            if vecops::nrm2(grad) < self.newton_tol * (1.0 + vecops::nrm2(out)) {
                 break;
             }
-            // Hessian: Aᵀ D A + ρI, D_jj = σ(−m)σ(m)
-            margins = self.margins(out);
+            // Hessian: Aᵀ D A + ρI, D_jj = σ(−m)σ(m); margins still in `rows`
             for j in 0..mrows {
-                let s = sigma_neg(margins[j]);
-                diag[j] = s * (1.0 - s);
+                let s = sigma_neg(rows[j]);
+                rows2[j] = s * (1.0 - s);
             }
             let mut h = DenseMatrix::zeros(n, n);
             for r in 0..mrows {
-                let d = diag[r];
+                let d = rows2[r];
                 if d <= 1e-14 {
                     continue;
                 }
@@ -134,22 +172,21 @@ impl LocalCost for LogisticLocal {
                 Ok(c) => c,
                 Err(_) => break, // ρ > 0 should prevent this; bail defensively
             };
-            let mut step = grad.clone();
-            chol.solve_in_place(&mut step);
+            step.copy_from_slice(grad);
+            chol.solve_in_place(step);
             // backtracking line search on g
-            let g0 = self.eval(out)
+            let g0 = self.loss_with(out, rows)
                 + vecops::dot(out, lam)
                 + 0.5 * rho * vecops::dist2_sq(out, x0);
             let mut t = 1.0;
-            let slope = vecops::dot(&grad, &step);
-            let mut trial = vec![0.0; n];
+            let slope = vecops::dot(grad, step);
             for _ in 0..30 {
                 for i in 0..n {
                     trial[i] = out[i] - t * step[i];
                 }
-                let g1 = self.eval(&trial)
-                    + vecops::dot(&trial, lam)
-                    + 0.5 * rho * vecops::dist2_sq(&trial, x0);
+                let g1 = self.loss_with(trial, rows)
+                    + vecops::dot(trial, lam)
+                    + 0.5 * rho * vecops::dist2_sq(trial, x0);
                 if g1 <= g0 - 1e-4 * t * slope {
                     break;
                 }

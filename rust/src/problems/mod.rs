@@ -25,6 +25,39 @@ pub use svm::SvmLocal;
 use crate::prox::Regularizer;
 use std::sync::Arc;
 
+/// Reusable per-worker buffers for the per-iteration hot path.
+///
+/// One instance is owned by each worker-side execution context — a thread
+/// of the real-thread cluster, a `VirtualWorker` of the discrete-event
+/// simulator, a `NativeSolver` in the serial coordinators — and threaded
+/// into [`LocalCost::solve_subproblem`] / [`LocalCost::eval_with`], so the
+/// steady-state iteration performs no heap allocation: buffers grow to the
+/// local block's dimensions on first use and are reused thereafter.
+///
+/// The fields are generic storage named by the dimension they carry; each
+/// implementation documents what it keeps in them. Contents are undefined
+/// between calls: callers must not read them, and implementations must
+/// fully overwrite whatever they use.
+#[derive(Debug, Default)]
+pub struct WorkerScratch {
+    /// Row-dimension (`m`) buffer: residuals `A x − b`, margins, CSR rows.
+    pub rows: Vec<f64>,
+    /// Second row-dimension buffer: Newton weights / Hessian diagonals.
+    pub rows2: Vec<f64>,
+    /// Shared-dimension (`n`) buffer: subproblem gradients.
+    pub grad: Vec<f64>,
+    /// Shared-dimension buffer: Newton steps.
+    pub step: Vec<f64>,
+    /// Shared-dimension buffer: line-search trial points.
+    pub trial: Vec<f64>,
+}
+
+impl WorkerScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
 /// One worker's smooth cost `f_i` (Assumption 2: twice differentiable with
 /// `L`-Lipschitz gradient; convexity **not** required).
 pub trait LocalCost: Send + Sync {
@@ -33,6 +66,17 @@ pub trait LocalCost: Send + Sync {
 
     /// `f_i(x)`.
     fn eval(&self, x: &[f64]) -> f64;
+
+    /// `f_i(x)` through caller-owned scratch — the hot-loop variant used by
+    /// every coordinator for the `f_i(x_i)` cache refresh and the objective
+    /// diagnostics. Must be **bit-identical** to [`LocalCost::eval`] (the
+    /// cross-mode reproducibility tests rely on it); the default delegates,
+    /// and implementations with internal temporaries override it to reuse
+    /// `scratch` instead of allocating.
+    fn eval_with(&self, x: &[f64], scratch: &mut WorkerScratch) -> f64 {
+        let _ = scratch;
+        self.eval(x)
+    }
 
     /// `∇f_i(x)` into `out`.
     fn grad_into(&self, x: &[f64], out: &mut [f64]);
@@ -44,8 +88,18 @@ pub trait LocalCost: Send + Sync {
     /// `out = argmin_x f_i(x) + xᵀλ + ρ/2‖x − x₀‖²` (eq. (13)).
     ///
     /// Implementations cache any `ρ`-dependent factorization internally, so
-    /// repeated calls at the same `ρ` are cheap (the per-iteration path).
-    fn solve_subproblem(&self, lam: &[f64], x0: &[f64], rho: f64, out: &mut [f64]);
+    /// repeated calls at the same `ρ` are cheap (the per-iteration path),
+    /// and keep their vector temporaries in `scratch` so the steady state
+    /// allocates nothing (closed-form solves need no temporaries at all;
+    /// the Newton-based costs document what they stash where).
+    fn solve_subproblem(
+        &self,
+        lam: &[f64],
+        x0: &[f64],
+        rho: f64,
+        out: &mut [f64],
+        scratch: &mut WorkerScratch,
+    );
 
     /// Human-readable kind tag (artifact lookup + logs).
     fn kind(&self) -> &'static str;
@@ -91,6 +145,18 @@ impl ConsensusProblem {
     /// The original objective (1) at a consensus point: `Σ f_i(x) + h(x)`.
     pub fn objective(&self, x: &[f64]) -> f64 {
         self.locals.iter().map(|l| l.eval(x)).sum::<f64>() + self.reg.eval(x)
+    }
+
+    /// [`ConsensusProblem::objective`] through caller-owned scratch — the
+    /// per-iteration diagnostics path. Bit-identical to `objective` (every
+    /// `eval_with` is bit-identical to `eval`, and the summation order is
+    /// the same).
+    pub fn objective_with(&self, x: &[f64], scratch: &mut WorkerScratch) -> f64 {
+        let mut total = 0.0;
+        for l in &self.locals {
+            total += l.eval_with(x, scratch);
+        }
+        total + self.reg.eval(x)
     }
 
     /// Max Lipschitz constant over workers (the `L` of Assumption 2).
@@ -142,7 +208,10 @@ mod tests {
         let lam: Vec<f64> = (0..n).map(|i| (i as f64 * 0.37).sin()).collect();
         let x0: Vec<f64> = (0..n).map(|i| (i as f64 * 0.11).cos()).collect();
         let mut x = vec![0.0; n];
-        cost.solve_subproblem(&lam, &x0, rho, &mut x);
+        let mut scratch = WorkerScratch::new();
+        cost.solve_subproblem(&lam, &x0, rho, &mut x, &mut scratch);
+        // the scratch-based eval must agree bitwise with the plain one
+        assert_eq!(cost.eval_with(&x, &mut scratch).to_bits(), cost.eval(&x).to_bits());
         let mut g = vec![0.0; n];
         cost.grad_into(&x, &mut g);
         for i in 0..n {

@@ -3,7 +3,7 @@
 //! the convergence analysis can be checked exactly against it.
 
 use super::cache::{Factor, RhoCache};
-use super::LocalCost;
+use super::{LocalCost, WorkerScratch};
 use crate::linalg::dense::DenseMatrix;
 use crate::linalg::power::power_iteration;
 use crate::linalg::vecops;
@@ -53,6 +53,17 @@ impl QuadraticLocal {
         }
         QuadraticLocal::new(m, q_vec)
     }
+
+    /// Like [`QuadraticLocal::new`] with a caller-supplied Lipschitz
+    /// constant, skipping the power iteration. For fleets of workers that
+    /// share one `Q` (the `virtual_scale` pooled benchmark builds 1000 of
+    /// these), the spectral norm is computed once and reused.
+    pub fn with_lipschitz(q_mat: DenseMatrix, q_vec: Vec<f64>, lip: f64) -> Self {
+        assert_eq!(q_mat.rows(), q_mat.cols());
+        assert_eq!(q_mat.rows(), q_vec.len());
+        assert!(lip >= 0.0);
+        QuadraticLocal { q_mat, q_vec, lip, cache: RhoCache::new() }
+    }
 }
 
 impl LocalCost for QuadraticLocal {
@@ -63,6 +74,13 @@ impl LocalCost for QuadraticLocal {
     fn eval(&self, x: &[f64]) -> f64 {
         let qx = self.q_mat.matvec(x);
         0.5 * vecops::dot(x, &qx) + vecops::dot(&self.q_vec, x)
+    }
+
+    fn eval_with(&self, x: &[f64], scratch: &mut WorkerScratch) -> f64 {
+        // Qx through the reusable n-buffer (bit-identical to `eval`).
+        scratch.grad.resize(self.dim(), 0.0);
+        self.q_mat.matvec_into(x, &mut scratch.grad);
+        0.5 * vecops::dot(x, &scratch.grad) + vecops::dot(&self.q_vec, x)
     }
 
     fn grad_into(&self, x: &[f64], out: &mut [f64]) {
@@ -76,8 +94,15 @@ impl LocalCost for QuadraticLocal {
         self.lip
     }
 
-    fn solve_subproblem(&self, lam: &[f64], x0: &[f64], rho: f64, out: &mut [f64]) {
-        // (Q + ρI) x = −q − λ + ρ x₀
+    fn solve_subproblem(
+        &self,
+        lam: &[f64],
+        x0: &[f64],
+        rho: f64,
+        out: &mut [f64],
+        _scratch: &mut WorkerScratch,
+    ) {
+        // (Q + ρI) x = −q − λ + ρ x₀ — closed form, no temporaries.
         let n = self.dim();
         let factor = self.cache.get_or_build(rho, || {
             let mut m = self.q_mat.clone();

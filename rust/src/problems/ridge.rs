@@ -3,7 +3,7 @@
 //! strong convexity) and by tests that need a known modulus σ² = μ.
 
 use super::cache::{Factor, RhoCache};
-use super::LocalCost;
+use super::{LocalCost, WorkerScratch};
 use crate::linalg::dense::DenseMatrix;
 use crate::linalg::power::power_iteration;
 use crate::linalg::vecops;
@@ -58,6 +58,15 @@ impl LocalCost for RidgeLocal {
         vecops::nrm2_sq(&r) + 0.5 * self.mu * vecops::nrm2_sq(x)
     }
 
+    fn eval_with(&self, x: &[f64], scratch: &mut WorkerScratch) -> f64 {
+        scratch.rows.resize(self.a.rows(), 0.0);
+        self.a.matvec_into(x, &mut scratch.rows);
+        for (ri, bi) in scratch.rows.iter_mut().zip(&self.b) {
+            *ri -= bi;
+        }
+        vecops::nrm2_sq(&scratch.rows) + 0.5 * self.mu * vecops::nrm2_sq(x)
+    }
+
     fn grad_into(&self, x: &[f64], out: &mut [f64]) {
         self.gram.matvec_into(x, out);
         for i in 0..out.len() {
@@ -69,8 +78,15 @@ impl LocalCost for RidgeLocal {
         self.lip
     }
 
-    fn solve_subproblem(&self, lam: &[f64], x0: &[f64], rho: f64, out: &mut [f64]) {
-        // (2AᵀA + (μ+ρ) I) w = 2Aᵀb − λ + ρ x₀
+    fn solve_subproblem(
+        &self,
+        lam: &[f64],
+        x0: &[f64],
+        rho: f64,
+        out: &mut [f64],
+        _scratch: &mut WorkerScratch,
+    ) {
+        // (2AᵀA + (μ+ρ) I) w = 2Aᵀb − λ + ρ x₀ — closed form, no temporaries.
         let n = self.dim();
         let factor = self.cache.get_or_build(rho, || {
             let mut m = self.gram.clone();

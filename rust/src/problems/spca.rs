@@ -7,7 +7,7 @@
 //! system for β = 1.5 (the divergence regime), handled by the LU fallback.
 
 use super::cache::{Factor, RhoCache};
-use super::LocalCost;
+use super::{LocalCost, WorkerScratch};
 use crate::linalg::power::power_iteration;
 use crate::linalg::sparse::CsrMatrix;
 use crate::linalg::vecops;
@@ -51,6 +51,11 @@ impl LocalCost for SpcaLocal {
         -self.b.quad_form(x, &mut scratch)
     }
 
+    fn eval_with(&self, x: &[f64], scratch: &mut WorkerScratch) -> f64 {
+        scratch.rows.resize(self.b.rows(), 0.0);
+        -self.b.quad_form(x, &mut scratch.rows)
+    }
+
     fn grad_into(&self, x: &[f64], out: &mut [f64]) {
         // ∇f = −2 BᵀB x
         self.gram.matvec_into(x, out);
@@ -61,7 +66,15 @@ impl LocalCost for SpcaLocal {
         2.0 * self.lam_max
     }
 
-    fn solve_subproblem(&self, lam: &[f64], x0: &[f64], rho: f64, out: &mut [f64]) {
+    fn solve_subproblem(
+        &self,
+        lam: &[f64],
+        x0: &[f64],
+        rho: f64,
+        out: &mut [f64],
+        _scratch: &mut WorkerScratch,
+    ) {
+        // (ρI − 2BᵀB) w = ρ x₀ − λ — closed form, no temporaries.
         let n = self.dim();
         let factor = self.cache.get_or_build(rho, || {
             let mut m = self.gram.clone();

@@ -7,7 +7,7 @@
 //! `{j : y_j a_jᵀw < 1}` the objective is quadratic, so each step solves
 //! `(2 A_𝒜ᵀ A_𝒜 + ρI) Δ = −∇g` and converges in a handful of iterations.
 
-use super::LocalCost;
+use super::{LocalCost, WorkerScratch};
 use crate::linalg::cholesky::Cholesky;
 use crate::linalg::dense::DenseMatrix;
 use crate::linalg::power::power_iteration;
@@ -41,6 +41,27 @@ impl SvmLocal {
         }
         m
     }
+
+    /// `margins` into a caller buffer (resized to `rows`) — the hot path.
+    fn margins_into(&self, x: &[f64], m: &mut Vec<f64>) {
+        m.resize(self.a.rows(), 0.0);
+        self.a.matvec_into(x, m);
+        for (mj, yj) in m.iter_mut().zip(&self.y) {
+            *mj *= yj;
+        }
+    }
+
+    /// `f(x)` through a caller-owned margin buffer (bit-identical to
+    /// [`LocalCost::eval`]; usable while other scratch fields are borrowed).
+    fn loss_with(&self, x: &[f64], m: &mut Vec<f64>) -> f64 {
+        self.margins_into(x, m);
+        m.iter()
+            .map(|&mj| {
+                let v = (1.0 - mj).max(0.0);
+                v * v
+            })
+            .sum()
+    }
 }
 
 impl LocalCost for SvmLocal {
@@ -56,6 +77,10 @@ impl LocalCost for SvmLocal {
                 v * v
             })
             .sum()
+    }
+
+    fn eval_with(&self, x: &[f64], scratch: &mut WorkerScratch) -> f64 {
+        self.loss_with(x, &mut scratch.rows)
     }
 
     fn grad_into(&self, x: &[f64], out: &mut [f64]) {
@@ -75,24 +100,46 @@ impl LocalCost for SvmLocal {
         2.0 * self.lam_max
     }
 
-    fn solve_subproblem(&self, lam: &[f64], x0: &[f64], rho: f64, out: &mut [f64]) {
-        // Semismooth Newton on g(x) = f(x) + xᵀλ + ρ/2‖x − x0‖².
+    fn solve_subproblem(
+        &self,
+        lam: &[f64],
+        x0: &[f64],
+        rho: f64,
+        out: &mut [f64],
+        scratch: &mut WorkerScratch,
+    ) {
+        // Semismooth Newton on g(x) = f(x) + xᵀλ + ρ/2‖x − x0‖². Vector
+        // temporaries live in `scratch` (`rows` = margins, `rows2` = active
+        // weights, `grad`/`step`/`trial` as named); only the n×n generalized
+        // Hessian and its factorization still allocate per Newton step.
         let n = self.dim();
+        let mrows = self.a.rows();
         out.copy_from_slice(x0);
-        let mut grad = vec![0.0; n];
+        let WorkerScratch { rows, rows2, grad, step, trial } = scratch;
+        grad.resize(n, 0.0);
+        step.resize(n, 0.0);
+        trial.resize(n, 0.0);
+        rows2.resize(mrows, 0.0);
         for _ in 0..self.newton_iters {
-            self.grad_into(out, &mut grad);
+            // gradient of g: ∇f = Aᵀw with w_j = −2(1 − m_j)y_j on the
+            // active set, 0 elsewhere
+            self.margins_into(out, rows);
+            for j in 0..mrows {
+                let slack = 1.0 - rows[j];
+                rows2[j] = if slack > 0.0 { -2.0 * slack * self.y[j] } else { 0.0 };
+            }
+            self.a.matvec_t_into(rows2, grad);
             for i in 0..n {
                 grad[i] += lam[i] + rho * (out[i] - x0[i]);
             }
-            if vecops::nrm2(&grad) < self.newton_tol * (1.0 + vecops::nrm2(out)) {
+            if vecops::nrm2(grad) < self.newton_tol * (1.0 + vecops::nrm2(out)) {
                 break;
             }
-            // Generalized Hessian: 2 A_activeᵀ A_active + ρI.
-            let margins = self.margins(out);
+            // Generalized Hessian: 2 A_activeᵀ A_active + ρI (margins still
+            // in `rows`).
             let mut h = DenseMatrix::zeros(n, n);
-            for r in 0..self.a.rows() {
-                if margins[r] < 1.0 {
+            for r in 0..mrows {
+                if rows[r] < 1.0 {
                     let row = self.a.row(r);
                     for i in 0..n {
                         let ri = 2.0 * row[i];
@@ -111,20 +158,21 @@ impl LocalCost for SvmLocal {
                 Ok(c) => c,
                 Err(_) => break,
             };
-            let mut step = grad.clone();
-            chol.solve_in_place(&mut step);
+            step.copy_from_slice(grad);
+            chol.solve_in_place(step);
             // backtracking on g (the active set may change across the step)
-            let g0 = self.eval(out) + vecops::dot(out, lam) + 0.5 * rho * vecops::dist2_sq(out, x0);
-            let slope = vecops::dot(&grad, &step);
+            let g0 = self.loss_with(out, rows)
+                + vecops::dot(out, lam)
+                + 0.5 * rho * vecops::dist2_sq(out, x0);
+            let slope = vecops::dot(grad, step);
             let mut t = 1.0;
-            let mut trial = vec![0.0; n];
             for _ in 0..30 {
                 for i in 0..n {
                     trial[i] = out[i] - t * step[i];
                 }
-                let g1 = self.eval(&trial)
-                    + vecops::dot(&trial, lam)
-                    + 0.5 * rho * vecops::dist2_sq(&trial, x0);
+                let g1 = self.loss_with(trial, rows)
+                    + vecops::dot(trial, lam)
+                    + 0.5 * rho * vecops::dist2_sq(trial, x0);
                 if g1 <= g0 - 1e-4 * t * slope {
                     break;
                 }

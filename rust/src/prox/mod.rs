@@ -89,10 +89,19 @@ impl Regularizer {
         }
     }
 
-    /// Out-of-place prox convenience.
+    /// Out-of-place prox into a caller buffer (hot-path variant: resizes
+    /// `out`, copies, then applies [`Regularizer::prox_in_place`] — no
+    /// allocation once `out` has the right capacity).
+    pub fn prox_into(&self, x: &[f64], t: f64, out: &mut Vec<f64>) {
+        out.resize(x.len(), 0.0);
+        out.copy_from_slice(x);
+        self.prox_in_place(out, t);
+    }
+
+    /// Out-of-place prox convenience (allocates).
     pub fn prox(&self, x: &[f64], t: f64) -> Vec<f64> {
-        let mut out = x.to_vec();
-        self.prox_in_place(&mut out, t);
+        let mut out = Vec::new();
+        self.prox_into(x, t, &mut out);
         out
     }
 
@@ -231,6 +240,19 @@ mod tests {
         let x = vec![1.0, -2.0];
         assert_eq!(h.prox(&x, 3.0), x);
         assert_eq!(h.eval(&x), 0.0);
+    }
+
+    #[test]
+    fn prox_into_matches_prox() {
+        let h = Regularizer::ElasticNet { theta1: 0.3, theta2: 0.7 };
+        let x = vec![2.0, -0.1, 0.5];
+        let mut out = Vec::new();
+        h.prox_into(&x, 0.8, &mut out);
+        assert_eq!(out, h.prox(&x, 0.8));
+        // reuse with a differently-sized input resizes correctly
+        let y = vec![1.0];
+        h.prox_into(&y, 0.8, &mut out);
+        assert_eq!(out, h.prox(&y, 0.8));
     }
 
     #[test]

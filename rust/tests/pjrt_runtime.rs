@@ -12,6 +12,7 @@ use ad_admm::admm::master_pov::{run_master_pov, run_master_pov_with_solver};
 use ad_admm::admm::AdmmConfig;
 use ad_admm::data::{LassoInstance, SparsePcaInstance};
 use ad_admm::linalg::vecops;
+use ad_admm::problems::WorkerScratch;
 use ad_admm::rng::Pcg64;
 use ad_admm::runtime::{
     artifacts_available, artifacts_dir, PjrtEngine, PjrtLassoSolver, PjrtMasterProx,
@@ -98,10 +99,11 @@ fn lasso_worker_artifact_matches_cholesky_solve() {
 
     let lam: Vec<f64> = (0..10).map(|i| (i as f64 * 0.3).cos()).collect();
     let x0: Vec<f64> = (0..10).map(|i| (i as f64 * 0.2).sin()).collect();
+    let mut scratch = WorkerScratch::new();
     for worker in 0..3 {
         let got = solver.solve_for(worker, &lam, &x0, 50.0).unwrap();
         let mut want = vec![0.0; 10];
-        problem.local(worker).solve_subproblem(&lam, &x0, 50.0, &mut want);
+        problem.local(worker).solve_subproblem(&lam, &x0, 50.0, &mut want, &mut scratch);
         let d = vecops::dist2(&got, &want);
         assert!(d < 1e-6, "worker {worker}: PJRT vs native dist {d}");
     }
@@ -118,10 +120,11 @@ fn spca_worker_artifact_matches_native_in_spd_regime() {
 
     let lam: Vec<f64> = (0..16).map(|i| (i as f64 * 0.21).sin()).collect();
     let x0: Vec<f64> = (0..16).map(|i| (i as f64 * 0.17).cos()).collect();
+    let mut scratch = WorkerScratch::new();
     for worker in 0..2 {
         let got = solver.solve_for(worker, &lam, &x0, rho).unwrap();
         let mut want = vec![0.0; 16];
-        problem.local(worker).solve_subproblem(&lam, &x0, rho, &mut want);
+        problem.local(worker).solve_subproblem(&lam, &x0, rho, &mut want, &mut scratch);
         let d = vecops::dist2(&got, &want);
         assert!(d < 1e-6, "worker {worker}: PJRT vs native dist {d}");
     }

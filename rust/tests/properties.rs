@@ -234,8 +234,8 @@ fn prop_quadratic_subproblem_exact() {
         let lam = g.normal_vec(n);
         let x0 = g.normal_vec(n);
         let mut x = vec![0.0; n];
-        use ad_admm::problems::LocalCost;
-        q.solve_subproblem(&lam, &x0, rho, &mut x);
+        use ad_admm::problems::{LocalCost, WorkerScratch};
+        q.solve_subproblem(&lam, &x0, rho, &mut x, &mut WorkerScratch::new());
         let mut grad = vec![0.0; n];
         q.grad_into(&x, &mut grad);
         for j in 0..n {

@@ -173,8 +173,11 @@ fn virtual_cluster_converges_to_kkt() {
 }
 
 /// The scale target from the issue: ≥1000 workers × 500 master iterations
-/// in under 5 seconds (it runs in a fraction of that — no threads, no
-/// sleeps, just the event queue).
+/// in under 5 seconds (it runs in a fraction of that — no threads beyond
+/// the solve pool, no sleeps, just the event queue). The wall-clock bound
+/// is asserted in release builds only — CI runs this file a second time
+/// under `cargo test --release` so the assertion is meaningful; the debug
+/// pass still exercises the full workload and its invariants.
 #[test]
 fn thousand_workers_five_hundred_iters_under_five_seconds() {
     let n_workers = 1000;
@@ -201,6 +204,7 @@ fn thousand_workers_five_hundred_iters_under_five_seconds() {
         },
         delays: DelayModel::linear_spread(n_workers, 0.5, 50.0, 0.5, 13),
         mode: ExecutionMode::VirtualTime,
+        pool_threads: 0, // auto: exercise the pooled path at scale
         ..Default::default()
     };
 
@@ -213,7 +217,78 @@ fn thousand_workers_five_hundred_iters_under_five_seconds() {
     assert!(report.trace.sets.iter().all(|s| s.len() >= 8));
     // even the slowest worker is forced in by the τ gate
     assert!(report.workers.iter().all(|w| w.updates >= 1));
-    assert!(elapsed < 5.0, "virtual 1000x500 took {elapsed:.2}s (must be <5s)");
+    if cfg!(debug_assertions) {
+        eprintln!("debug build: skipping <5s wall-clock assertion (took {elapsed:.2}s)");
+    } else {
+        assert!(elapsed < 5.0, "virtual 1000x500 took {elapsed:.2}s (must be <5s)");
+    }
+}
+
+/// Property: for ANY random configuration — seed, worker count, protocol,
+/// τ, gate A, delay spread, comm model, faults — and ANY pool size
+/// (including 1 and more threads than workers), the pooled virtual-time
+/// run produces **bit-identical** `IterRecord` histories, state and trace
+/// to the serial run. The multicore fan-out must be invisible in the
+/// results; this is the determinism contract of `cluster::pool`.
+#[test]
+fn prop_pooled_virtual_run_bit_identical_to_serial() {
+    Runner::new(0xB001ED, 12).run("pooled == serial", |g| {
+        let n_workers = g.usize_range(2, 12);
+        let dim = g.usize_range(2, 6);
+        // 0 = auto-detect; n_workers + 3 exceeds the worker count
+        let pool = *g.choose(&[0usize, 1, 2, 3, 4, n_workers + 3]);
+        let problem = {
+            let mut rng = Pcg64::seed_from_u64(g.rng().next_u64());
+            LassoInstance::synthetic(&mut rng, n_workers, 3 * dim, dim, 0.2, 0.1).problem()
+        };
+        let mean_ms: Vec<f64> = (0..n_workers).map(|_| g.f64_range(0.1, 8.0)).collect();
+        let cfg = ClusterConfig {
+            admm: AdmmConfig {
+                rho: g.f64_range(5.0, 80.0),
+                tau: g.usize_range(1, 5),
+                min_arrivals: g.usize_range(1, n_workers),
+                max_iters: 50,
+                objective_every: g.usize_range(0, 2),
+                ..Default::default()
+            },
+            protocol: if g.bool() { Protocol::AdAdmm } else { Protocol::AltScheme },
+            delays: DelayModel::LogNormal {
+                mean_ms,
+                sigma: g.f64_range(0.0, 0.6),
+                seed: g.rng().next_u64(),
+            },
+            comm_delays: if g.bool() {
+                Some(DelayModel::Fixed { per_worker_ms: vec![0.4; n_workers] })
+            } else {
+                None
+            },
+            faults: if g.bool() {
+                Some(FaultModel {
+                    drop_prob: g.f64_range(0.0, 0.3),
+                    retrans_ms: 1.0,
+                    seed: g.rng().next_u64(),
+                })
+            } else {
+                None
+            },
+            mode: ExecutionMode::VirtualTime,
+            pool_threads: 1,
+        };
+        let serial = StarCluster::new(problem.clone()).run(&cfg);
+        let pooled_cfg = ClusterConfig { pool_threads: pool, ..cfg };
+        let pooled = StarCluster::new(problem).run(&pooled_cfg);
+
+        assert_eq!(serial.trace, pooled.trace, "trace differs (pool={pool})");
+        assert_eq!(serial.state.x0, pooled.state.x0, "x0 differs (pool={pool})");
+        assert_eq!(serial.state.xs, pooled.state.xs, "worker primals differ (pool={pool})");
+        assert_eq!(serial.state.lams, pooled.state.lams, "duals differ (pool={pool})");
+        assert_eq!(
+            serial.wall_clock_s.to_bits(),
+            pooled.wall_clock_s.to_bits(),
+            "virtual clocks differ (pool={pool})"
+        );
+        assert_history_bit_equal(&serial.history, &pooled.history);
+    });
 }
 
 /// Property: for ANY random configuration — worker count, τ, gate A,
