@@ -24,7 +24,10 @@ fn main() {
     for tau in [1usize, 4, 8] {
         let cfg = AdmmConfig { rho, tau, max_iters: 400, ..Default::default() };
         let arrivals = ArrivalModel::fig3_profile(n_workers, tau as u64);
-        let out = run_master_pov(&problem, &cfg, &arrivals);
+        // Engine API: the τ-parameterized partial barrier (Algorithms 2/3)
+        // over the in-process trace-driven worker source.
+        let policy = PartialBarrier { tau };
+        let out = run_trace_driven(&problem, &cfg, &arrivals, &policy, &EngineOptions::default());
         let acc = ad_admm::metrics::accuracy_series(&out.history, f_ref);
         let kkt = kkt_residual(&problem, &out.state);
         println!(
@@ -50,7 +53,13 @@ fn main() {
         })
         .collect();
     let cfg = AdmmConfig { rho, tau: 8, max_iters: 400, ..Default::default() };
-    let out = run_master_pov(&problem, &cfg, &ArrivalModel::fig3_profile(n_workers, 42));
+    let out = run_trace_driven(
+        &problem,
+        &cfg,
+        &ArrivalModel::fig3_profile(n_workers, 42),
+        &PartialBarrier { tau: cfg.tau },
+        &EngineOptions::default(),
+    );
     let w = &out.state.x0;
     let mut correct = 0;
     for j in 0..test_a.rows() {

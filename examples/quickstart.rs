@@ -1,5 +1,7 @@
-//! Quickstart: solve a small distributed LASSO with the AD-ADMM
-//! (Algorithm 2) and compare against the synchronous baseline.
+//! Quickstart: solve a small distributed LASSO through the unified
+//! iteration engine — one `run_trace_driven` call per `UpdatePolicy`
+//! (Algorithm 2's partial barrier vs Algorithm 1's full barrier) — then
+//! rerun the async policy under a deterministic dropout/rejoin fault.
 //!
 //!     cargo run --release --example quickstart
 
@@ -26,9 +28,11 @@ fn main() {
         ..Default::default()
     };
     let arrivals = ArrivalModel::fig3_profile(8, 1);
-    let out = run_master_pov(&problem, &cfg, &arrivals);
+    let policy = PartialBarrier { tau: cfg.tau };
+    let out = run_trace_driven(&problem, &cfg, &arrivals, &policy, &EngineOptions::default());
     let kkt = kkt_residual(&problem, &out.state);
     let acc = ad_admm::metrics::accuracy_series(&out.history, f_star);
+    println!("policy: {}", policy.name());
     println!(
         "AD-ADMM   (tau=5): {:4} iters  objective {:.8e}  accuracy {:.2e}  KKT {:.2e}",
         out.history.len(),
@@ -37,16 +41,39 @@ fn main() {
         kkt.max(),
     );
 
-    // 4. Synchronous baseline (Algorithm 1) for the same budget.
-    let sync_cfg = AdmmConfig { tau: 1, min_arrivals: 8, ..cfg };
-    let sync = run_sync_admm(&problem, &sync_cfg);
+    // 4. Synchronous baseline (Algorithm 1 = the FullBarrier policy) for
+    //    the same budget, through the same engine.
+    let sync_cfg = AdmmConfig { tau: 1, min_arrivals: 8, ..cfg.clone() };
+    let sync_policy = FullBarrier;
+    let sync = run_trace_driven(
+        &problem,
+        &sync_cfg,
+        &ArrivalModel::Full,
+        &sync_policy,
+        &EngineOptions::default(),
+    );
+    println!("policy: {}", sync_policy.name());
     println!(
         "sync ADMM (tau=1): {:4} iters  objective {:.8e}",
         sync.history.len(),
         sync.history.last().unwrap().objective,
     );
 
-    // 5. Both recover the planted sparse signal's support.
+    // 5. The new scenario axis: worker 3 drops out for 150 iterations
+    //    (30× the τ bound) and rejoins with stale iterates. Deterministic
+    //    — same plan, same trace, every run, in every worker source.
+    let plan = FaultPlan::single_outage(3, 100, 250);
+    let opts = EngineOptions { residual_stopping: true, fault_plan: Some(&plan) };
+    let faulted = run_trace_driven(&problem, &cfg, &arrivals, &policy, &opts);
+    let facc = ad_admm::metrics::accuracy_series(&faulted.history, f_star);
+    println!(
+        "with dropout+rejoin: {:4} iters  accuracy {:.2e}  Assumption 1 on trace: {}",
+        faulted.history.len(),
+        facc.last().unwrap(),
+        faulted.trace.satisfies_bounded_delay(8, cfg.tau),
+    );
+
+    // 6. Both fault-free runs recover the planted sparse signal's support.
     let support: Vec<usize> = inst
         .w_true
         .iter()

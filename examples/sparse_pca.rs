@@ -44,7 +44,17 @@ fn main() {
         init_x0: Some(init.clone()),
         ..Default::default()
     };
-    let f_hat = run_sync_admm(&problem, &ref_cfg).history.last().unwrap().aug_lagrangian;
+    let f_hat = run_trace_driven(
+        &problem,
+        &ref_cfg,
+        &ArrivalModel::Full,
+        &FullBarrier,
+        &EngineOptions::default(),
+    )
+    .history
+    .last()
+    .unwrap()
+    .aug_lagrangian;
     println!("reference F̂ = {f_hat:.8e} (10k synchronous iterations, β=3)\n");
 
     println!("{:>6} {:>10} {:>14} {:>12} {:>10}", "tau", "iters", "objective", "accuracy", "KKT");
@@ -57,7 +67,15 @@ fn main() {
             ..Default::default()
         };
         let arrivals = ArrivalModel::fig3_profile(n_workers, seed + tau as u64);
-        let out = run_master_pov(&problem, &cfg, &arrivals);
+        // Engine API: the same PartialBarrier policy at every τ — only the
+        // Assumption-1 bound changes, exactly Theorem 1's knob.
+        let out = run_trace_driven(
+            &problem,
+            &cfg,
+            &arrivals,
+            &PartialBarrier { tau },
+            &EngineOptions::default(),
+        );
         let acc = ad_admm::metrics::accuracy_series(&out.history, f_hat);
         let kkt = kkt_residual(&problem, &out.state);
         println!(
@@ -79,7 +97,13 @@ fn main() {
         init_x0: Some(init.clone()),
         ..Default::default()
     };
-    let out = run_sync_admm(&problem, &small_rho_cfg);
+    let out = run_trace_driven(
+        &problem,
+        &small_rho_cfg,
+        &ArrivalModel::Full,
+        &FullBarrier,
+        &EngineOptions::default(),
+    );
     let acc = ad_admm::metrics::accuracy_series(&out.history, f_hat);
     println!(
         "  stop={:?}  final accuracy = {:.3e}",

@@ -228,6 +228,92 @@ fn main() {
         .metric("pooled_real_s", pooled_s)
         .metric("pooled_speedup", speedup);
 
+    // ---- fault sweep: dropout/rejoin + delay spikes across the τ gate ----
+    // The engine's FaultPlan seam in action at scale: a down worker simply
+    // stops being absorbed (its result is held until rejoin, re-entering
+    // with stale iterates), outages longer than τ deliberately break
+    // Assumption 1 on the realized trace, and delay spikes starve the
+    // affected worker's cadence. All deterministic: same plan, same trace.
+    let ftau = if quick { 50 } else { 200 };
+    println!(
+        "\n=== fault sweep: dropout/rejoin + delay spikes \
+         (N={n_workers}, {iters} iters, tau={ftau}) ==="
+    );
+    println!(
+        "{:>26} {:>10} {:>10} {:>9} {:>12} {:>6} {:>10}",
+        "scenario", "sim[s]", "wait[s]", "min|A_k|", "objective", "A1", "real[s]"
+    );
+    let scenarios: Vec<(&str, FaultPlan)> = vec![
+        ("fault-free", FaultPlan::default()),
+        (
+            "dropout+rejoin (worker 0)",
+            FaultPlan::single_outage(0, iters / 4, iters / 4 + ftau + 10),
+        ),
+        (
+            "seeded outages (x8)",
+            FaultPlan::seeded_outages(n_workers, iters, 8, ftau / 2, ftau, 0xFA11),
+        ),
+        (
+            "delay spike (slowest 10x)",
+            FaultPlan {
+                outages: Vec::new(),
+                spikes: vec![DelaySpike {
+                    worker: n_workers - 1,
+                    from_s: 0.0,
+                    until_s: f64::INFINITY,
+                    factor: 10.0,
+                }],
+            },
+        ),
+    ];
+    let mut fault_total_real_s = 0.0;
+    for (label, plan) in scenarios {
+        let cfg = ClusterConfig {
+            admm: AdmmConfig {
+                rho: 20.0,
+                tau: ftau,
+                min_arrivals: 8,
+                max_iters: iters,
+                objective_every: 0,
+                ..Default::default()
+            },
+            delays: delays.clone(),
+            mode: ExecutionMode::VirtualTime,
+            fault_plan: (!plan.is_empty()).then_some(plan),
+            ..Default::default()
+        };
+        let t = Instant::now();
+        let r = StarCluster::new(problem.clone()).run(&cfg);
+        let real_s = t.elapsed().as_secs_f64();
+        fault_total_real_s += real_s;
+        // A down worker is never absorbed while down — pin the contract
+        // in the bench itself so a scale regression cannot hide one.
+        if let Some(p) = &cfg.fault_plan {
+            for (k, set) in r.trace.sets.iter().enumerate() {
+                for &i in set {
+                    assert!(!p.down_at(i, k), "worker {i} absorbed while down at k={k}");
+                }
+            }
+        }
+        let a1 = r.trace.satisfies_bounded_delay(n_workers, ftau);
+        let min_set = r.trace.sets.iter().map(Vec::len).min().unwrap_or(0);
+        let objective = problem.objective(&r.state.x0);
+        println!(
+            "{label:>26} {:>10.3} {:>10.3} {:>9} {:>12.5e} {:>6} {:>10.3}",
+            r.wall_clock_s, r.master_wait_s, min_set, objective, a1, real_s,
+        );
+        json.series(vec![
+            ("section", JsonValue::Str("fault_sweep".into())),
+            ("scenario", JsonValue::Str(label.into())),
+            ("sim_s", JsonValue::Num(r.wall_clock_s)),
+            ("min_set", JsonValue::Num(min_set as f64)),
+            ("objective", JsonValue::Num(objective)),
+            ("assumption1", JsonValue::Bool(a1)),
+            ("real_s", JsonValue::Num(real_s)),
+        ]);
+    }
+    json.metric("fault_sweep_total_real_s", fault_total_real_s);
+
     let json_path = json.write().expect("write BENCH json");
     println!("machine-readable report → {}", json_path.display());
     println!(

@@ -11,11 +11,9 @@
 use crate::problems::ConsensusProblem;
 
 use super::arrivals::{ArrivalModel, ArrivalTrace};
+use super::engine::{run_engine, AltScheme, EngineOptions, TraceSource};
 use super::master_pov::{NativeSolver, SubproblemSolver};
-use super::{
-    divergence_or_tol_stop, iter_record, master_x0_update, AdmmConfig, AdmmState, IterRecord,
-    MasterScratch, StopReason,
-};
+use super::{AdmmConfig, AdmmState, IterRecord, StopReason};
 
 /// Result of an Algorithm-4 run.
 pub struct AltSchemeOutput {
@@ -42,6 +40,11 @@ pub fn run_alt_scheme(
     run_alt_scheme_with_solver(problem, cfg, arrivals, &mut solver)
 }
 
+/// Thin wrapper over the unified engine: the [`AltScheme`] policy
+/// (master-owned duals, eq. (45)–(47)) driven by the in-process
+/// [`TraceSource`] consuming `arrivals`. The historical Algorithm-4 driver
+/// never evaluated the residual-based stopping rule, so
+/// `residual_stopping` stays off here.
 pub fn run_alt_scheme_with_solver(
     problem: &ConsensusProblem,
     cfg: &AdmmConfig,
@@ -49,77 +52,11 @@ pub fn run_alt_scheme_with_solver(
     solver: &mut dyn SubproblemSolver,
 ) -> AltSchemeOutput {
     cfg.validate(problem.num_workers()).expect("invalid AdmmConfig");
-    let n_workers = problem.num_workers();
-    let n = problem.dim();
-
-    let mut state = cfg.initial_state(n_workers, n);
-    // What each worker last *received*: (x̂₀, λ̂_i) — Algorithm 4 broadcasts
-    // both (Step 6), unlike Algorithm 2 where workers own their duals.
-    let mut x0_snap: Vec<Vec<f64>> = vec![state.x0.clone(); n_workers];
-    let mut lam_snap: Vec<Vec<f64>> = state.lams.clone();
-    let mut d = vec![0usize; n_workers];
-    let mut sampler = arrivals.sampler(n_workers);
-
-    let mut history = Vec::with_capacity(cfg.max_iters);
-    let mut trace = ArrivalTrace::default();
-    let mut prev_x0 = state.x0.clone();
-    let mut stop = StopReason::MaxIters;
-    let mut scratch = MasterScratch::new();
-    let mut f_cache: Vec<f64> = Vec::with_capacity(n_workers);
-    for i in 0..n_workers {
-        f_cache.push(problem.local(i).eval_with(&state.xs[i], &mut scratch.ws));
-    }
-
-    for k in 0..cfg.max_iters {
-        let set = sampler.next_set(&d, cfg.tau, cfg.min_arrivals);
-
-        // (44)+(47): arrived workers report x_i computed against their
-        // *stale* (x̂₀, λ̂_i) snapshots.
-        let mut arrived = vec![false; n_workers];
-        for &i in &set {
-            arrived[i] = true;
-            solver.solve(i, &lam_snap[i], &x0_snap[i], cfg.rho, &mut state.xs[i]);
-            f_cache[i] = problem.local(i).eval_with(&state.xs[i], &mut scratch.ws);
-            d[i] = 0;
-        }
-        for i in 0..n_workers {
-            if !arrived[i] {
-                d[i] += 1;
-            }
-        }
-
-        // (45): x₀ update uses λᵏ (pre-update duals).
-        prev_x0.copy_from_slice(&state.x0);
-        master_x0_update(problem, &mut state, cfg.rho, cfg.gamma, &mut scratch);
-
-        // (46): master updates the duals of **all** workers against the
-        // fresh x₀ — the step that injects stale-x into every λ_i and
-        // breaks the eq.-(29) identity Algorithm 2 enjoys.
-        for i in 0..n_workers {
-            for j in 0..n {
-                state.lams[i][j] += cfg.rho * (state.xs[i][j] - state.x0[j]);
-            }
-        }
-
-        // Step 6: broadcast (x₀, λ_i) to the arrived workers only.
-        for &i in &set {
-            x0_snap[i].copy_from_slice(&state.x0);
-            lam_snap[i].copy_from_slice(&state.lams[i]);
-        }
-
-        let rec =
-            iter_record(problem, &state, cfg, k, set.len(), &f_cache, &mut scratch, &prev_x0);
-        let early = divergence_or_tol_stop(cfg, &state, &rec, k);
-        history.push(rec);
-        trace.sets.push(set);
-
-        if let Some(reason) = early {
-            stop = reason;
-            break;
-        }
-    }
-
-    AltSchemeOutput { state, history, trace, stop }
+    let mut source = TraceSource::with_solver(problem.num_workers(), arrivals, solver);
+    let policy = AltScheme { tau: cfg.tau };
+    let opts = EngineOptions { residual_stopping: false, fault_plan: None };
+    let run = run_engine(problem, cfg, &policy, &mut source, &opts);
+    AltSchemeOutput { state: run.state, history: run.history, trace: run.trace, stop: run.stop }
 }
 
 #[cfg(test)]

@@ -137,19 +137,47 @@ impl ArrivalSampler {
     /// Draw the next arrival set given current pre-update delay counters
     /// `d`, the delay bound τ and the batching gate `A = min_arrivals`.
     ///
-    /// Guarantees on return: every `i` with `d[i] ≥ τ − 1` is included
-    /// (the master waited for it) and `|set| ≥ min(A, N)`.
+    /// Guarantees on return (stochastic kinds): every `i` with
+    /// `d[i] ≥ τ − 1` is included (the master waited for it) and
+    /// `|set| ≥ min(A, N)`. Trace replays are authoritative instead — see
+    /// [`ArrivalSampler::next_set_gated`].
     pub fn next_set(&mut self, d: &[usize], tau: usize, min_arrivals: usize) -> Vec<usize> {
+        let no_down = vec![false; self.n_workers];
+        self.next_set_gated(d, tau, min_arrivals, &no_down)
+    }
+
+    /// [`ArrivalSampler::next_set`] under a fault mask: workers with
+    /// `down[i]` set never arrive this iteration — they are excluded from
+    /// the τ-forcing (the master cannot wait for a dropped worker), from
+    /// the Bernoulli draws, and from the returned set — and the `|A_k| ≥ A`
+    /// target shrinks to the live-worker count. With an all-false mask the
+    /// draw sequence and the returned set are identical to `next_set`.
+    ///
+    /// A replayed [`ArrivalTrace`] is **authoritative**: its prescribed
+    /// sets are honoured literally (minus down workers), with no τ-forcing
+    /// on top. Traces realized under Assumption 1 already contain every
+    /// forced worker, so this changes nothing for them — but it lets
+    /// traces that *violate* the bound (fault scenarios: a dropped worker
+    /// overstays τ) replay bit-exactly instead of having absent workers
+    /// silently forced back in.
+    pub fn next_set_gated(
+        &mut self,
+        d: &[usize],
+        tau: usize,
+        min_arrivals: usize,
+        down: &[bool],
+    ) -> Vec<usize> {
         let n = self.n_workers;
         debug_assert_eq!(d.len(), n);
-        let forced: Vec<usize> = (0..n).filter(|&i| d[i] + 1 >= tau).collect();
+        debug_assert_eq!(down.len(), n);
         let mut arrived = vec![false; n];
-        for &i in &forced {
-            arrived[i] = true;
-        }
         match &mut self.kind {
             SamplerKind::Full => {
-                return (0..n).collect();
+                for (i, a) in arrived.iter_mut().enumerate() {
+                    if !down[i] {
+                        *a = true;
+                    }
+                }
             }
             SamplerKind::Trace { sets, pos } => {
                 let set = sets
@@ -165,14 +193,20 @@ impl ArrivalSampler {
                 }
             }
             SamplerKind::Probabilistic { probs, rng } => {
+                for i in 0..n {
+                    if !down[i] && d[i] + 1 >= tau {
+                        arrived[i] = true; // forced by the Assumption-1 gate
+                    }
+                }
                 // The master keeps waiting (we keep drawing rounds) until the
                 // gate is met; arrivals accumulate across rounds, modelling
                 // messages that keep coming in while it waits.
-                let target = min_arrivals.min(n).max(1);
+                let n_live = down.iter().filter(|&&dn| !dn).count();
+                let target = if n_live == 0 { 0 } else { min_arrivals.min(n_live).max(1) };
                 let mut rounds = 0usize;
                 loop {
                     for i in 0..n {
-                        if !arrived[i] && rng.bernoulli(probs[i]) {
+                        if !arrived[i] && !down[i] && rng.bernoulli(probs[i]) {
                             arrived[i] = true;
                         }
                     }
@@ -182,16 +216,18 @@ impl ArrivalSampler {
                     rounds += 1;
                     if rounds > 100_000 {
                         // all-zero probabilities: degenerate configuration;
-                        // wait for everyone rather than spin forever.
-                        for a in arrived.iter_mut() {
-                            *a = true;
+                        // wait for every live worker rather than spin forever.
+                        for (i, a) in arrived.iter_mut().enumerate() {
+                            if !down[i] {
+                                *a = true;
+                            }
                         }
                         break;
                     }
                 }
             }
         }
-        (0..n).filter(|&i| arrived[i]).collect()
+        (0..n).filter(|&i| arrived[i] && !down[i]).collect()
     }
 }
 
@@ -320,6 +356,63 @@ mod tests {
         // observed_s only counts arrivals; the absentee does not inflate S
         let t = ArrivalTrace { sets: vec![vec![0]; 3] };
         assert_eq!(t.observed_s(2), 2.0);
+    }
+
+    #[test]
+    fn trace_replay_is_authoritative_even_when_violating_assumption1() {
+        // The prescribed sets exclude worker 1 for longer than τ (a fault
+        // scenario's realized trace); replay must honour them literally
+        // instead of forcing the overdue worker back in.
+        let trace = ArrivalTrace { sets: vec![vec![0], vec![0], vec![0], vec![0, 1]] };
+        assert!(!trace.satisfies_bounded_delay(2, 2));
+        let mut s = ArrivalModel::Trace(trace.clone()).sampler(2);
+        let mut d = vec![0usize; 2];
+        for k in 0..4 {
+            let set = s.next_set(&d, 2, 1);
+            assert_eq!(set, trace.sets[k], "replay diverged at k={k}");
+            for i in 0..2 {
+                if set.contains(&i) {
+                    d[i] = 0;
+                } else {
+                    d[i] += 1;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gated_sampler_excludes_down_workers() {
+        // down workers leave the set, and the |A_k| ≥ A target shrinks to
+        // the live count so the gate stays satisfiable
+        let m = ArrivalModel::probabilistic(vec![1.0; 4], 5);
+        let mut s = m.sampler(4);
+        let down = [false, true, false, false];
+        let set = s.next_set_gated(&[0; 4], 5, 4, &down);
+        assert_eq!(set, vec![0, 2, 3]);
+        // an overdue worker is NOT forced in while down — the master
+        // cannot wait for a dropped worker
+        let m2 = ArrivalModel::probabilistic(vec![0.0, 1.0, 1.0], 6);
+        let mut s2 = m2.sampler(3);
+        let set2 = s2.next_set_gated(&[9, 0, 0], 3, 1, &[true, false, false]);
+        assert!(!set2.contains(&0));
+    }
+
+    #[test]
+    fn gated_sampler_all_false_matches_ungated() {
+        let mk = || ArrivalModel::probabilistic(vec![0.3, 0.7, 0.5], 11).sampler(3);
+        let (mut a, mut b) = (mk(), mk());
+        let down = [false; 3];
+        for _ in 0..50 {
+            assert_eq!(a.next_set(&[0; 3], 4, 2), b.next_set_gated(&[0; 3], 4, 2, &down));
+        }
+    }
+
+    #[test]
+    fn gated_sampler_all_down_returns_empty() {
+        let mut s = ArrivalModel::Full.sampler(3);
+        assert!(s.next_set_gated(&[0; 3], 1, 3, &[true; 3]).is_empty());
+        let mut p = ArrivalModel::probabilistic(vec![0.9; 3], 8).sampler(3);
+        assert!(p.next_set_gated(&[0; 3], 2, 2, &[true; 3]).is_empty());
     }
 
     #[test]

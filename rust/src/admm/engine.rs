@@ -1,0 +1,824 @@
+//! The unified iteration engine behind every ADMM driver in this crate.
+//!
+//! The paper's central observation is that Algorithms 1–4 are **one**
+//! consensus-ADMM iteration whose behaviour is decided entirely by *when*
+//! the master updates and *who owns the duals*. Historically this repo
+//! encoded each answer as its own hand-rolled loop (`admm/sync.rs`,
+//! `admm/master_pov.rs`, `admm/alt_scheme.rs`, plus two more copies inside
+//! the threaded and virtual-time clusters). This module collapses all five
+//! into a single state machine:
+//!
+//! ```text
+//! gather arrivals ─→ absorb worker results ─→ master x₀ update (12)/(25)
+//!        ─→ policy post-step (Alg. 4 dual sweep) ─→ broadcast ─→ record/stop
+//! ```
+//!
+//! parameterized along two orthogonal axes:
+//!
+//! - an [`UpdatePolicy`] — *which algorithm of the paper runs*
+//!   ([`FullBarrier`] = Algorithm 1, [`PartialBarrier`] = Algorithms 2/3,
+//!   [`AltScheme`] = Algorithm 4);
+//! - a [`WorkerSource`] — *how worker results are produced*
+//!   ([`TraceSource`] replays/draws arrival sets in-process, exactly like
+//!   the paper's own serial simulator; the threaded source in
+//!   [`crate::cluster::threaded`] uses one OS thread per worker; the
+//!   virtual-time source in [`crate::cluster::sim`] drives the same
+//!   protocol from a deterministic discrete-event queue).
+//!
+//! Every public driver (`run_sync_admm`, `run_master_pov`,
+//! `run_alt_scheme`, `StarCluster::run`) is now a thin wrapper that picks a
+//! (policy, source) pair and calls [`run_engine`]. Two runs that realize
+//! the same [`ArrivalTrace`] produce **bit-identical** [`IterRecord`]
+//! histories regardless of the source — the equivalence the
+//! `engine_equivalence`, `cluster_e2e` and `virtual_time` test suites pin.
+//!
+//! The single seam also makes fault injection uniform: a [`FaultPlan`]
+//! (deterministic, seeded worker outages + delay spikes) gates the master's
+//! arrival bookkeeping identically in all three sources, realizing the
+//! delayed-information regime of the incremental/blockwise ADMM line
+//! (Hong, arXiv:1412.6058; Zhu et al., arXiv:1802.08882).
+
+use crate::problems::ConsensusProblem;
+use crate::rng::Pcg64;
+
+use super::arrivals::{ArrivalModel, ArrivalSampler, ArrivalTrace};
+use super::master_pov::{NativeSolver, SubproblemSolver};
+use super::{
+    divergence_or_tol_stop, iter_record, master_x0_update, AdmmConfig, AdmmState, IterRecord,
+    MasterScratch, StopReason,
+};
+
+/// Where the master's `x₀` update sits relative to the worker updates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepOrder {
+    /// Algorithm 1: the master updates `x₀` first (eq. (6)), then every
+    /// worker solves against the *fresh* `x₀^{k+1}`.
+    MasterFirst,
+    /// Algorithms 2/3/4: arrived workers report solves against their last
+    /// *broadcast* snapshots, then the master updates `x₀`.
+    WorkersFirst,
+}
+
+/// One of the paper's master-update disciplines. A policy decides the
+/// update order, the delay bound τ of Assumption 1 (every worker must
+/// appear in any window of τ consecutive master iterations — exactly what
+/// [`ArrivalTrace::satisfies_bounded_delay`] checks on the realized trace),
+/// and who owns the dual variables.
+///
+/// The three implementations map onto the paper:
+///
+/// | policy            | paper            | order        | duals            |
+/// |-------------------|------------------|--------------|------------------|
+/// | [`FullBarrier`]   | Algorithm 1      | master-first | workers (8)      |
+/// | [`PartialBarrier`]| Algorithms 2/3   | workers-first| workers (14)/(20)|
+/// | [`AltScheme`]     | Algorithm 4      | workers-first| master (46)      |
+pub trait UpdatePolicy {
+    /// Human-readable name (used by the CLI/examples to self-describe).
+    fn name(&self) -> &'static str;
+
+    /// Master-first (Algorithm 1) or workers-first (Algorithms 2–4).
+    fn order(&self) -> StepOrder {
+        StepOrder::WorkersFirst
+    }
+
+    /// The Assumption-1 delay bound τ ≥ 1 this policy enforces at the
+    /// gate: any worker with delay counter `d_i + 1 ≥ τ` is waited for
+    /// unconditionally. τ = 1 forces every (live) worker every iteration —
+    /// the synchronous barrier.
+    fn tau(&self) -> usize;
+
+    /// Do arrived workers perform their own dual update
+    /// `λ_i ← λ_i + ρ(x_i − x̂₀)` (eq. (14)/(20))? True for Algorithms
+    /// 1–3; false for Algorithm 4, where workers only compute `x_i` (47).
+    fn worker_updates_dual(&self) -> bool;
+
+    /// Does the master, after its `x₀` update, refresh the duals of
+    /// **all** workers against the fresh `x₀` (Algorithm 4, eq. (46))?
+    /// This is the step that injects stale `x_i` into every `λ_i` and
+    /// breaks the eq.-(29) identity — the Section-IV cautionary tale.
+    fn master_updates_all_duals(&self) -> bool;
+
+    /// Does the broadcast to arrived workers carry the master-updated dual
+    /// `λ̂_i` alongside `x̂₀` (Algorithm 4, Step 6)?
+    fn broadcasts_dual(&self) -> bool;
+}
+
+/// Algorithm 1: the synchronous baseline. The master updates `x₀` from
+/// `(xᵏ, λᵏ)` first, then all `N` workers solve against the fresh
+/// `x₀^{k+1}` and update their own duals. τ = 1 by construction.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FullBarrier;
+
+impl UpdatePolicy for FullBarrier {
+    fn name(&self) -> &'static str {
+        "full-barrier (Algorithm 1, synchronous)"
+    }
+
+    fn order(&self) -> StepOrder {
+        StepOrder::MasterFirst
+    }
+
+    fn tau(&self) -> usize {
+        1
+    }
+
+    fn worker_updates_dual(&self) -> bool {
+        true
+    }
+
+    fn master_updates_all_duals(&self) -> bool {
+        false
+    }
+
+    fn broadcasts_dual(&self) -> bool {
+        false
+    }
+}
+
+/// Algorithms 2/3: the AD-ADMM's partially asynchronous barrier. The
+/// master proceeds as soon as `|A_k| ≥ A` workers arrived, *except* that
+/// any worker about to violate the Assumption-1 bound (`d_i + 1 ≥ τ`) is
+/// waited for — the τ gate that Theorem 1's convergence rests on. Workers
+/// own their duals (eq. (20)), so the eq.-(29) identity
+/// `∇f_i(x_i) + λ_i = 0` holds after every arrival.
+#[derive(Clone, Copy, Debug)]
+pub struct PartialBarrier {
+    /// Maximum tolerable delay τ ≥ 1 of Assumption 1.
+    pub tau: usize,
+}
+
+impl UpdatePolicy for PartialBarrier {
+    fn name(&self) -> &'static str {
+        "partial-barrier (Algorithms 2/3, AD-ADMM)"
+    }
+
+    fn tau(&self) -> usize {
+        self.tau
+    }
+
+    fn worker_updates_dual(&self) -> bool {
+        true
+    }
+
+    fn master_updates_all_duals(&self) -> bool {
+        false
+    }
+
+    fn broadcasts_dual(&self) -> bool {
+        false
+    }
+}
+
+/// Algorithm 4: the "slightly modified" alternative in which the master
+/// owns **all** dual updates (46) and broadcasts `(x̂₀, λ̂_i)` back.
+/// Synchronously this is just Algorithm 1 with the update order
+/// interchanged; under asynchrony it needs strong convexity and a *small*
+/// ρ (Theorem 2, eq. (48)) and otherwise diverges — Fig. 4(b)/(d).
+#[derive(Clone, Copy, Debug)]
+pub struct AltScheme {
+    /// Maximum tolerable delay τ ≥ 1 of Assumption 1.
+    pub tau: usize,
+}
+
+impl UpdatePolicy for AltScheme {
+    fn name(&self) -> &'static str {
+        "alt-scheme (Algorithm 4, master-owned duals)"
+    }
+
+    fn tau(&self) -> usize {
+        self.tau
+    }
+
+    fn worker_updates_dual(&self) -> bool {
+        false
+    }
+
+    fn master_updates_all_duals(&self) -> bool {
+        true
+    }
+
+    fn broadcasts_dual(&self) -> bool {
+        true
+    }
+}
+
+/// One deterministic worker outage: worker `worker` is *down* for master
+/// iterations `from_iter ≤ k < until_iter`. A down worker simply stops
+/// arriving — its in-flight result is held at the link and its delay
+/// counter keeps growing (an outage of τ or more iterations therefore
+/// makes the realized trace violate Assumption 1, which is the point of
+/// the scenario). On rejoin the held result is absorbed as-is: the worker
+/// re-enters with the *stale* iterate it computed against its pre-outage
+/// `x₀` snapshot, exactly the paper's delayed-information model.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Outage {
+    pub worker: usize,
+    pub from_iter: usize,
+    pub until_iter: usize,
+}
+
+/// One deterministic delay spike: worker `worker`'s compute/communication
+/// delays are multiplied by `factor` while the run's clock (virtual
+/// seconds in the discrete-event source, wall seconds since worker start
+/// in the threaded source) is in `[from_s, until_s)`. The trace-driven
+/// source has no clock and ignores spikes — model stragglers there through
+/// [`ArrivalModel::Probabilistic`] instead.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DelaySpike {
+    pub worker: usize,
+    pub from_s: f64,
+    pub until_s: f64,
+    pub factor: f64,
+}
+
+/// A deterministic fault schedule applied identically by every
+/// [`WorkerSource`]: iteration-indexed dropout/rejoin [`Outage`]s gate the
+/// master's arrival bookkeeping, time-indexed [`DelaySpike`]s stretch the
+/// timing-driven sources' delays. Build one explicitly or with
+/// [`FaultPlan::seeded_outages`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    pub outages: Vec<Outage>,
+    pub spikes: Vec<DelaySpike>,
+}
+
+impl FaultPlan {
+    /// A single dropout-and-rejoin event.
+    pub fn single_outage(worker: usize, from_iter: usize, until_iter: usize) -> Self {
+        FaultPlan {
+            outages: vec![Outage { worker, from_iter, until_iter }],
+            spikes: Vec::new(),
+        }
+    }
+
+    /// A deterministic, seeded schedule of `count` outages over the
+    /// iteration horizon `[0, horizon)`, each hitting a pseudo-random
+    /// worker for a pseudo-random span in `[min_len, max_len]` iterations.
+    /// The same `(n_workers, horizon, count, min_len, max_len, seed)`
+    /// always yields the same plan on every machine.
+    pub fn seeded_outages(
+        n_workers: usize,
+        horizon: usize,
+        count: usize,
+        min_len: usize,
+        max_len: usize,
+        seed: u64,
+    ) -> Self {
+        assert!(n_workers > 0 && min_len >= 1 && max_len >= min_len);
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let mut outages = Vec::with_capacity(count);
+        for _ in 0..count {
+            let worker = (rng.next_u64() % n_workers as u64) as usize;
+            let len = min_len + (rng.next_u64() % (max_len - min_len + 1) as u64) as usize;
+            let latest_start = horizon.saturating_sub(len).max(1);
+            let from_iter = (rng.next_u64() % latest_start as u64) as usize;
+            outages.push(Outage { worker, from_iter, until_iter: from_iter + len });
+        }
+        FaultPlan { outages, spikes: Vec::new() }
+    }
+
+    /// Is `worker` down at master iteration `k`?
+    pub fn down_at(&self, worker: usize, k: usize) -> bool {
+        self.outages
+            .iter()
+            .any(|o| o.worker == worker && k >= o.from_iter && k < o.until_iter)
+    }
+
+    /// Fill the per-worker down mask for iteration `k`.
+    pub fn fill_down(&self, k: usize, down: &mut [bool]) {
+        for (i, flag) in down.iter_mut().enumerate() {
+            *flag = self.down_at(i, k);
+        }
+    }
+
+    /// Combined delay multiplier for `worker` at clock instant `t_s`.
+    pub fn delay_factor(&self, worker: usize, t_s: f64) -> f64 {
+        self.spikes
+            .iter()
+            .filter(|s| s.worker == worker && t_s >= s.from_s && t_s < s.until_s)
+            .fold(1.0, |acc, s| acc * s.factor)
+    }
+
+    /// True when the plan injects nothing (gating can be skipped).
+    pub fn is_empty(&self) -> bool {
+        self.outages.is_empty() && self.spikes.is_empty()
+    }
+}
+
+/// The arrival gate of one master iteration, assembled by the engine from
+/// the policy (τ), the config (`A = min_arrivals`) and the fault plan
+/// (`down`). Sources realize the wait however they like (drawing Bernoulli
+/// rounds, pumping the event queue, blocking on a channel) but must honour
+/// the same contract: the returned set contains every live worker with
+/// `d_i + 1 ≥ τ`, at least `min(A, #live)` workers, and no down worker.
+#[derive(Debug)]
+pub struct Gate<'a> {
+    /// Assumption-1 delay bound from the policy.
+    pub tau: usize,
+    /// The `|A_k| ≥ A` batching gate.
+    pub min_arrivals: usize,
+    /// Per-worker outage mask for this iteration (all-false without
+    /// faults). Down workers are excluded from the set, from the forced-τ
+    /// wait, and from the arrival count.
+    pub down: &'a [bool],
+}
+
+/// The master-side state a source may touch while materializing one
+/// iteration's arrived results: the primal/dual state, the `f_i(x_i)`
+/// cache (refreshed only for arrived workers), and the master scratch
+/// whose `ws` buffers the `eval_with` calls reuse.
+pub struct MasterView<'a> {
+    pub problem: &'a ConsensusProblem,
+    pub state: &'a mut AdmmState,
+    pub f_cache: &'a mut [f64],
+    pub scratch: &'a mut MasterScratch,
+    pub rho: f64,
+}
+
+/// Where worker results come from. Implementations:
+///
+/// - [`TraceSource`] — in-process: arrival sets come from an
+///   [`ArrivalModel`] (stochastic, full, or an explicit replayed
+///   [`ArrivalTrace`]) and the subproblem solves run serially at
+///   absorption time against the stored snapshots. This is the paper's
+///   own serial simulator (Algorithm 3's "master point of view").
+/// - `ThreadedSource` ([`crate::cluster::threaded`]) — one OS thread per
+///   worker and mpsc star links; arrivals are real messages, delays are
+///   real sleeps. Nondeterministic by nature unless driven in lockstep.
+/// - `VirtualSource` ([`crate::cluster::sim`]) — the same protocol on a
+///   deterministic discrete-event queue; delays are events on a virtual
+///   clock, bit-reproducible at thousands of workers.
+///
+/// All three realize identical protocol semantics: replaying one source's
+/// realized trace through another produces bit-identical iterates.
+pub trait WorkerSource {
+    /// Number of workers this source drives (must equal the problem's).
+    fn n_workers(&self) -> usize;
+
+    /// Can this source run a [`StepOrder::MasterFirst`] policy? Only the
+    /// in-process [`TraceSource`] can: the timing-driven sources pipeline
+    /// worker rounds against broadcast snapshots, which is exactly what a
+    /// master-first barrier forbids.
+    fn supports_master_first(&self) -> bool {
+        false
+    }
+
+    /// One-time setup from the initial state (snapshot init, thread
+    /// spawn + initial broadcast, event-queue priming).
+    fn start(&mut self, state: &AdmmState, policy: &dyn UpdatePolicy);
+
+    /// Block/draw until the iteration-`k` gate is met and return the
+    /// realized arrival set in ascending worker order.
+    fn gather(&mut self, k: usize, d: &[usize], gate: &Gate<'_>) -> Vec<usize>;
+
+    /// Materialize the arrived workers' `(x_i, λ_i, f_i)` into the master
+    /// state, in ascending worker order.
+    fn absorb(&mut self, set: &[usize], m: &mut MasterView<'_>, policy: &dyn UpdatePolicy);
+
+    /// Deliver the post-update broadcast (`x̂₀`, plus `λ̂_i` when the
+    /// policy broadcasts duals) to exactly the arrived workers.
+    fn broadcast(&mut self, set: &[usize], state: &AdmmState, policy: &dyn UpdatePolicy);
+}
+
+/// Engine knobs that are caller choices rather than policy properties.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineOptions<'a> {
+    /// Evaluate the residual-based [`super::stopping::StoppingRule`] (when
+    /// the config carries one). The serial Algorithm-4 driver historically
+    /// never did; every other driver does.
+    pub residual_stopping: bool,
+    /// Deterministic outage/delay-spike schedule (None = fault-free).
+    pub fault_plan: Option<&'a FaultPlan>,
+}
+
+impl Default for EngineOptions<'static> {
+    fn default() -> Self {
+        EngineOptions { residual_stopping: true, fault_plan: None }
+    }
+}
+
+/// What one engine run returns; the public driver wrappers repackage this
+/// into their historical output types.
+pub struct EngineRun {
+    pub state: AdmmState,
+    pub history: Vec<IterRecord>,
+    /// Realized arrival sets — replayable through any source.
+    pub trace: ArrivalTrace,
+    pub stop: StopReason,
+    /// Final per-worker delay counters (≤ τ − 1 whenever the realized
+    /// trace satisfies Assumption 1; may exceed it under outages).
+    pub final_delays: Vec<usize>,
+}
+
+/// Run the unified iteration engine: one (policy, source) pair, one
+/// config, one problem. This is the **only** collect → update → record
+/// loop in the crate; every public driver delegates here.
+pub fn run_engine(
+    problem: &ConsensusProblem,
+    cfg: &AdmmConfig,
+    policy: &dyn UpdatePolicy,
+    source: &mut dyn WorkerSource,
+    opts: &EngineOptions<'_>,
+) -> EngineRun {
+    let n_workers = problem.num_workers();
+    let n = problem.dim();
+    assert_eq!(source.n_workers(), n_workers, "source/problem worker-count mismatch");
+    if policy.order() == StepOrder::MasterFirst {
+        assert!(
+            source.supports_master_first(),
+            "this worker source cannot drive a master-first (full-barrier) policy"
+        );
+    }
+
+    let mut state = cfg.initial_state(n_workers, n);
+    let mut d = vec![0usize; n_workers];
+    let mut down = vec![false; n_workers];
+    let mut arrived = vec![false; n_workers];
+    let mut history = Vec::with_capacity(cfg.max_iters);
+    let mut trace = ArrivalTrace::default();
+    let mut prev_x0 = state.x0.clone();
+    let mut stop = StopReason::MaxIters;
+    let mut scratch = MasterScratch::new();
+    // f_i(x_i) cache: only arrived workers' x_i move, so only they are
+    // re-evaluated (perf: N → |A_k| data passes per iteration).
+    let mut f_cache: Vec<f64> = Vec::with_capacity(n_workers);
+    for i in 0..n_workers {
+        f_cache.push(problem.local(i).eval_with(&state.xs[i], &mut scratch.ws));
+    }
+    let all: Vec<usize> = (0..n_workers).collect();
+
+    source.start(&state, policy);
+
+    for k in 0..cfg.max_iters {
+        if let Some(plan) = opts.fault_plan {
+            plan.fill_down(k, &mut down);
+        }
+        let gate = Gate { tau: policy.tau(), min_arrivals: cfg.min_arrivals, down: &down };
+
+        let set = match policy.order() {
+            StepOrder::WorkersFirst => {
+                // Steps 3–5: gather the arrival set, absorb the arrived
+                // worker updates (19)/(23)/(47), advance delay counters.
+                let set = source.gather(k, &d, &gate);
+                {
+                    let mut view = MasterView {
+                        problem,
+                        state: &mut state,
+                        f_cache: &mut f_cache,
+                        scratch: &mut scratch,
+                        rho: cfg.rho,
+                    };
+                    source.absorb(&set, &mut view, policy);
+                }
+                advance_delays(&set, &mut arrived, &mut d);
+
+                // (12)/(25)/(45): master x₀ update with the proximal γ.
+                prev_x0.copy_from_slice(&state.x0);
+                master_x0_update(problem, &mut state, cfg.rho, cfg.gamma, &mut scratch);
+
+                // Algorithm 4 (46): master refreshes ALL duals against the
+                // fresh x₀.
+                if policy.master_updates_all_duals() {
+                    for i in 0..n_workers {
+                        for j in 0..n {
+                            state.lams[i][j] += cfg.rho * (state.xs[i][j] - state.x0[j]);
+                        }
+                    }
+                }
+
+                // Step 6: broadcast to the arrived workers only.
+                source.broadcast(&set, &state, policy);
+                set
+            }
+            StepOrder::MasterFirst => {
+                // Algorithm 1: master x₀ update (6) from (xᵏ, λᵏ) first...
+                prev_x0.copy_from_slice(&state.x0);
+                master_x0_update(problem, &mut state, cfg.rho, cfg.gamma, &mut scratch);
+                // ...broadcast to every LIVE worker. A down worker keeps
+                // its last pre-outage snapshot (and its frozen x_i/λ_i):
+                // under a full barrier "dropped" means its contribution to
+                // the master update simply stops moving until rejoin.
+                if opts.fault_plan.is_some() {
+                    let live: Vec<usize> = (0..n_workers).filter(|&i| !down[i]).collect();
+                    source.broadcast(&live, &state, policy);
+                } else {
+                    source.broadcast(&all, &state, policy);
+                }
+                // ...then every worker solves (7)+(8) against the fresh
+                // x₀^{k+1} (τ = 1 forces the full barrier at the gate).
+                let set = source.gather(k, &d, &gate);
+                {
+                    let mut view = MasterView {
+                        problem,
+                        state: &mut state,
+                        f_cache: &mut f_cache,
+                        scratch: &mut scratch,
+                        rho: cfg.rho,
+                    };
+                    source.absorb(&set, &mut view, policy);
+                }
+                advance_delays(&set, &mut arrived, &mut d);
+                set
+            }
+        };
+
+        let rec = iter_record(problem, &state, cfg, k, set.len(), &f_cache, &mut scratch, &prev_x0);
+        let early = divergence_or_tol_stop(cfg, &state, &rec, k);
+        history.push(rec);
+        trace.sets.push(set);
+
+        if let Some(reason) = early {
+            stop = reason;
+            break;
+        }
+        if opts.residual_stopping {
+            if let Some(rule) = &cfg.stopping {
+                let r = super::stopping::residuals(&state, &prev_x0, cfg.rho);
+                if k > 0 && rule.satisfied(&r, n, n_workers) {
+                    stop = StopReason::Residuals;
+                    break;
+                }
+            }
+        }
+    }
+
+    EngineRun { state, history, trace, stop, final_delays: d }
+}
+
+/// Reset arrived workers' delay counters, bump everyone else's. `arrived`
+/// is a reusable scratch mask (left all-false on return).
+fn advance_delays(set: &[usize], arrived: &mut [bool], d: &mut [usize]) {
+    for &i in set {
+        arrived[i] = true;
+    }
+    for i in 0..d.len() {
+        if arrived[i] {
+            d[i] = 0;
+            arrived[i] = false;
+        } else {
+            d[i] += 1;
+        }
+    }
+}
+
+/// Convenience wrapper: run the in-process [`TraceSource`] under an
+/// arbitrary policy + options (the fault-capable serial entry point the
+/// examples and the CLI use). Panics on an invalid [`AdmmConfig`], like
+/// the legacy serial entry points it generalizes.
+pub fn run_trace_driven(
+    problem: &ConsensusProblem,
+    cfg: &AdmmConfig,
+    arrivals: &ArrivalModel,
+    policy: &dyn UpdatePolicy,
+    opts: &EngineOptions<'_>,
+) -> EngineRun {
+    cfg.validate(problem.num_workers()).expect("invalid AdmmConfig");
+    let mut source = TraceSource::new(problem, arrivals);
+    run_engine(problem, cfg, policy, &mut source, opts)
+}
+
+enum SolverSlot<'a> {
+    Native(NativeSolver<'a>),
+    Borrowed(&'a mut dyn SubproblemSolver),
+}
+
+impl<'a> SolverSlot<'a> {
+    fn solve(&mut self, worker: usize, lam: &[f64], x0: &[f64], rho: f64, out: &mut [f64]) {
+        match self {
+            SolverSlot::Native(s) => s.solve(worker, lam, x0, rho, out),
+            SolverSlot::Borrowed(s) => s.solve(worker, lam, x0, rho, out),
+        }
+    }
+}
+
+/// The in-process [`WorkerSource`]: arrival sets come from an
+/// [`ArrivalModel`] sampler (Bernoulli draws, the full set, or an explicit
+/// replayed trace) and the arrived workers' subproblems are solved
+/// serially *at absorption time* against the snapshots the master last
+/// broadcast to them — the exact bookkeeping of the paper's serial
+/// simulator (Algorithm 3), which is why a trace realized by any other
+/// source replays bit-identically through this one.
+pub struct TraceSource<'a> {
+    n_workers: usize,
+    sampler: ArrivalSampler,
+    solver: SolverSlot<'a>,
+    /// `x₀^{k̄_i+1}` as worker i last received it.
+    x0_snap: Vec<Vec<f64>>,
+    /// `λ̂_i` as worker i last received it (Algorithm 4 only).
+    lam_snap: Vec<Vec<f64>>,
+}
+
+impl<'a> TraceSource<'a> {
+    /// Native closed-form subproblem solves backed by the problem itself.
+    pub fn new(problem: &'a ConsensusProblem, arrivals: &ArrivalModel) -> Self {
+        let n_workers = problem.num_workers();
+        TraceSource {
+            n_workers,
+            sampler: arrivals.sampler(n_workers),
+            solver: SolverSlot::Native(NativeSolver::new(problem)),
+            x0_snap: Vec::new(),
+            lam_snap: Vec::new(),
+        }
+    }
+
+    /// Caller-supplied solver (e.g. the PJRT engine executing AOT
+    /// JAX/Pallas artifacts).
+    pub fn with_solver(
+        n_workers: usize,
+        arrivals: &ArrivalModel,
+        solver: &'a mut dyn SubproblemSolver,
+    ) -> Self {
+        TraceSource {
+            n_workers,
+            sampler: arrivals.sampler(n_workers),
+            solver: SolverSlot::Borrowed(solver),
+            x0_snap: Vec::new(),
+            lam_snap: Vec::new(),
+        }
+    }
+}
+
+impl<'a> WorkerSource for TraceSource<'a> {
+    fn n_workers(&self) -> usize {
+        self.n_workers
+    }
+
+    fn supports_master_first(&self) -> bool {
+        true
+    }
+
+    fn start(&mut self, state: &AdmmState, _policy: &dyn UpdatePolicy) {
+        self.x0_snap = vec![state.x0.clone(); self.n_workers];
+        self.lam_snap = state.lams.clone();
+    }
+
+    fn gather(&mut self, _k: usize, d: &[usize], gate: &Gate<'_>) -> Vec<usize> {
+        self.sampler.next_set_gated(d, gate.tau, gate.min_arrivals, gate.down)
+    }
+
+    fn absorb(&mut self, set: &[usize], m: &mut MasterView<'_>, policy: &dyn UpdatePolicy) {
+        let n = m.state.x0.len();
+        let worker_dual = policy.worker_updates_dual();
+        for &i in set {
+            if worker_dual {
+                // (19)/(23): solve against the worker's own dual and its
+                // x₀ snapshot, then (20)/(24): the dual update.
+                let snap = &self.x0_snap[i];
+                self.solver.solve(i, &m.state.lams[i], snap, m.rho, &mut m.state.xs[i]);
+                for j in 0..n {
+                    m.state.lams[i][j] += m.rho * (m.state.xs[i][j] - snap[j]);
+                }
+            } else {
+                // (47): solve against the master-broadcast (x̂₀, λ̂_i).
+                let snap = &self.x0_snap[i];
+                self.solver.solve(i, &self.lam_snap[i], snap, m.rho, &mut m.state.xs[i]);
+            }
+            m.f_cache[i] = m.problem.local(i).eval_with(&m.state.xs[i], &mut m.scratch.ws);
+        }
+    }
+
+    fn broadcast(&mut self, set: &[usize], state: &AdmmState, policy: &dyn UpdatePolicy) {
+        let with_dual = policy.broadcasts_dual();
+        for &i in set {
+            self.x0_snap[i].copy_from_slice(&state.x0);
+            if with_dual {
+                self.lam_snap[i].copy_from_slice(&state.lams[i]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::LassoInstance;
+
+    fn lasso(seed: u64, n_workers: usize) -> ConsensusProblem {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        LassoInstance::synthetic(&mut rng, n_workers, 20, 8, 0.2, 0.1).problem()
+    }
+
+    #[test]
+    fn policy_metadata_matches_the_paper() {
+        let full = FullBarrier;
+        assert_eq!(full.order(), StepOrder::MasterFirst);
+        assert_eq!(full.tau(), 1);
+        assert!(full.worker_updates_dual() && !full.master_updates_all_duals());
+
+        let partial = PartialBarrier { tau: 7 };
+        assert_eq!(partial.order(), StepOrder::WorkersFirst);
+        assert_eq!(partial.tau(), 7);
+        assert!(partial.worker_updates_dual());
+        assert!(!partial.broadcasts_dual());
+
+        let alt = AltScheme { tau: 3 };
+        assert!(!alt.worker_updates_dual());
+        assert!(alt.master_updates_all_duals() && alt.broadcasts_dual());
+    }
+
+    #[test]
+    fn fault_plan_masks_and_factors() {
+        let plan = FaultPlan {
+            outages: vec![Outage { worker: 1, from_iter: 5, until_iter: 9 }],
+            spikes: vec![DelaySpike { worker: 0, from_s: 1.0, until_s: 2.0, factor: 10.0 }],
+        };
+        assert!(!plan.down_at(1, 4) && plan.down_at(1, 5) && plan.down_at(1, 8));
+        assert!(!plan.down_at(1, 9) && !plan.down_at(0, 6));
+        let mut mask = vec![false; 3];
+        plan.fill_down(6, &mut mask);
+        assert_eq!(mask, vec![false, true, false]);
+        assert_eq!(plan.delay_factor(0, 1.5), 10.0);
+        assert_eq!(plan.delay_factor(0, 2.5), 1.0);
+        assert_eq!(plan.delay_factor(1, 1.5), 1.0);
+        assert!(!plan.is_empty());
+        assert!(FaultPlan::default().is_empty());
+    }
+
+    #[test]
+    fn seeded_outage_plans_are_reproducible() {
+        let a = FaultPlan::seeded_outages(8, 100, 4, 3, 10, 42);
+        let b = FaultPlan::seeded_outages(8, 100, 4, 3, 10, 42);
+        assert_eq!(a, b);
+        assert_eq!(a.outages.len(), 4);
+        for o in &a.outages {
+            assert!(o.worker < 8);
+            let len = o.until_iter - o.from_iter;
+            assert!((3..=10).contains(&len));
+            assert!(o.from_iter < 100);
+        }
+        let c = FaultPlan::seeded_outages(8, 100, 4, 3, 10, 43);
+        assert_ne!(a, c, "different seeds should differ");
+    }
+
+    #[test]
+    fn dropout_suppresses_arrivals_and_rejoin_is_forced() {
+        let p = lasso(901, 4);
+        let cfg = AdmmConfig { rho: 40.0, tau: 3, max_iters: 40, ..Default::default() };
+        let plan = FaultPlan::single_outage(2, 10, 20);
+        let opts = EngineOptions { residual_stopping: true, fault_plan: Some(&plan) };
+        let run = run_trace_driven(
+            &p,
+            &cfg,
+            &ArrivalModel::Full,
+            &PartialBarrier { tau: cfg.tau },
+            &opts,
+        );
+        assert_eq!(run.history.len(), 40);
+        for (k, set) in run.trace.sets.iter().enumerate() {
+            if (10..20).contains(&k) {
+                assert!(!set.contains(&2), "down worker arrived at k={k}");
+            } else {
+                assert!(set.contains(&2), "live worker missing at k={k}");
+            }
+        }
+        // The 10-iteration outage exceeds τ = 3: Assumption 1 is violated
+        // on the realized trace — exactly the stress the scenario exists
+        // to produce — while the pre-outage prefix still satisfies it.
+        assert!(!run.trace.satisfies_bounded_delay(4, 3));
+        let prefix = ArrivalTrace { sets: run.trace.sets[..10].to_vec() };
+        assert!(prefix.satisfies_bounded_delay(4, 3));
+    }
+
+    #[test]
+    fn all_workers_down_yields_empty_sets_and_still_terminates() {
+        let p = lasso(902, 2);
+        let cfg = AdmmConfig { rho: 20.0, tau: 2, max_iters: 5, ..Default::default() };
+        let plan = FaultPlan {
+            outages: vec![
+                Outage { worker: 0, from_iter: 0, until_iter: 5 },
+                Outage { worker: 1, from_iter: 0, until_iter: 5 },
+            ],
+            spikes: Vec::new(),
+        };
+        let opts = EngineOptions { residual_stopping: true, fault_plan: Some(&plan) };
+        let run = run_trace_driven(
+            &p,
+            &cfg,
+            &ArrivalModel::Full,
+            &PartialBarrier { tau: cfg.tau },
+            &opts,
+        );
+        assert_eq!(run.history.len(), 5);
+        assert!(run.trace.sets.iter().all(Vec::is_empty));
+        assert_eq!(run.stop, StopReason::MaxIters);
+    }
+
+    #[test]
+    fn full_barrier_policy_runs_via_trace_source() {
+        // Smoke: the master-first order wired through the in-process
+        // source terminates and records N arrivals every iteration. (The
+        // bit-equality with the historical sync driver is pinned by the
+        // engine_equivalence integration suite.)
+        let p = lasso(903, 3);
+        let cfg = AdmmConfig { rho: 40.0, max_iters: 30, ..Default::default() };
+        let run = run_trace_driven(
+            &p,
+            &cfg,
+            &ArrivalModel::Full,
+            &FullBarrier,
+            &EngineOptions::default(),
+        );
+        assert_eq!(run.history.len(), 30);
+        assert!(run.history.iter().all(|r| r.arrivals == 3));
+    }
+}

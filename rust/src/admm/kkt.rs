@@ -84,6 +84,79 @@ mod tests {
     }
 
     #[test]
+    fn analytic_quadratic_stationary_point_has_zero_residual() {
+        // N diagonal quadratic workers f_i(x) = ½ xᵀD_i x + q_iᵀx with
+        // h = 0: the stationary point solves (Σ D_i) x* = −Σ q_i
+        // componentwise, and λ_i* = −∇f_i(x*) = −(D_i x* + q_i) sums to
+        // zero by construction. Every KKT residual must vanish exactly
+        // (up to f64 rounding) at that analytically derived point.
+        let diags = [vec![1.0, 2.0, 0.5, 4.0], vec![3.0, 1.0, 2.0, 0.25], vec![0.5, 0.5, 1.5, 2.0]];
+        let qs = [
+            vec![1.0, -2.0, 0.5, 1.0],
+            vec![-0.5, 1.0, -1.5, 2.0],
+            vec![0.25, 0.5, 1.0, -3.0],
+        ];
+        let n = 4;
+        let locals: Vec<Arc<dyn crate::problems::LocalCost>> = diags
+            .iter()
+            .zip(&qs)
+            .map(|(d, q)| {
+                Arc::new(QuadraticLocal::diagonal(d, q.clone()))
+                    as Arc<dyn crate::problems::LocalCost>
+            })
+            .collect();
+        let p = ConsensusProblem::new(locals, Regularizer::Zero);
+
+        let mut x_star = vec![0.0; n];
+        for j in 0..n {
+            let d_sum: f64 = diags.iter().map(|d| d[j]).sum();
+            let q_sum: f64 = qs.iter().map(|q| q[j]).sum();
+            x_star[j] = -q_sum / d_sum;
+        }
+        let mut s = AdmmState::init(3, x_star.clone());
+        for (i, (d, q)) in diags.iter().zip(&qs).enumerate() {
+            for j in 0..n {
+                s.lams[i][j] = -(d[j] * x_star[j] + q[j]);
+            }
+        }
+        let r = kkt_residual(&p, &s);
+        assert!(r.max() < 1e-12, "{r:?}");
+        assert!(dual_identity_residual(&p, &s) < 1e-12);
+
+        // Perturbing x₀ off the stationary point must surface in the
+        // consensus residual and ONLY there (x_i and λ_i untouched).
+        let mut off = s.clone();
+        off.x0[0] += 1e-3;
+        let r_off = kkt_residual(&p, &off);
+        assert!(r_off.consensus >= 1e-3 - 1e-12);
+        assert!(r_off.dual < 1e-12);
+    }
+
+    #[test]
+    fn l1_stationary_point_uses_subdifferential() {
+        // h(x) = θ‖x‖₁ with x* = 0: stationarity needs Σλ_i ∈ [−θ, θ]
+        // componentwise. λ_i = −q_i keeps the dual identity exact; the
+        // residual must be 0 inside the subdifferential and the exact
+        // excess outside it.
+        let mk = |q1: f64, q2: f64, theta: f64| {
+            let l1 = Arc::new(QuadraticLocal::diagonal(&[1.0], vec![q1]));
+            let l2 = Arc::new(QuadraticLocal::diagonal(&[1.0], vec![q2]));
+            let p = ConsensusProblem::new(vec![l1, l2], Regularizer::L1 { theta });
+            let mut s = AdmmState::zeros(2, 1);
+            s.lams[0] = vec![-q1];
+            s.lams[1] = vec![-q2];
+            kkt_residual(&p, &s)
+        };
+        // Σλ = −0.7 with θ = 1: inside the subdifferential at 0 → exact KKT.
+        let r = mk(0.3, 0.4, 1.0);
+        assert!(r.max() < 1e-12, "{r:?}");
+        // Σλ = −1.5 with θ = 1: 0.5 outside → stationarity reports exactly that.
+        let r = mk(0.7, 0.8, 1.0);
+        assert!((r.stationarity - 0.5).abs() < 1e-12, "{r:?}");
+        assert!(r.dual < 1e-12 && r.consensus < 1e-12);
+    }
+
+    #[test]
     fn violations_are_reported() {
         let l1 = Arc::new(QuadraticLocal::diagonal(&[1.0], vec![0.0]));
         let p = ConsensusProblem::new(vec![l1], Regularizer::Zero);

@@ -11,10 +11,8 @@
 use crate::problems::{ConsensusProblem, WorkerScratch};
 
 use super::arrivals::{ArrivalModel, ArrivalTrace};
-use super::{
-    divergence_or_tol_stop, iter_record, master_x0_update, AdmmConfig, AdmmState, IterRecord,
-    MasterScratch, StopReason,
-};
+use super::engine::{run_engine, EngineOptions, PartialBarrier, TraceSource};
+use super::{AdmmConfig, AdmmState, IterRecord, StopReason};
 
 /// Pluggable worker-subproblem solver: the native path delegates to
 /// [`crate::problems::LocalCost::solve_subproblem`]; the PJRT path
@@ -71,6 +69,10 @@ pub fn run_master_pov(
 
 /// Run Algorithm 3 with a caller-supplied subproblem solver (e.g. the PJRT
 /// engine executing the AOT JAX/Pallas artifacts).
+///
+/// Thin wrapper over the unified engine: the [`PartialBarrier`] policy
+/// (τ-forced partially asynchronous gate, workers own their duals) driven
+/// by the in-process [`TraceSource`] consuming `arrivals`.
 pub fn run_master_pov_with_solver(
     problem: &ConsensusProblem,
     cfg: &AdmmConfig,
@@ -78,79 +80,16 @@ pub fn run_master_pov_with_solver(
     solver: &mut dyn SubproblemSolver,
 ) -> MasterPovOutput {
     cfg.validate(problem.num_workers()).expect("invalid AdmmConfig");
-    let n_workers = problem.num_workers();
-    let n = problem.dim();
-
-    let mut state = cfg.initial_state(n_workers, n);
-    // x₀^{k̄_i+1} as seen by worker i — everyone starts with the broadcast x⁰.
-    let mut x0_snap: Vec<Vec<f64>> = vec![state.x0.clone(); n_workers];
-    let mut d = vec![0usize; n_workers];
-    let mut sampler = arrivals.sampler(n_workers);
-
-    let mut history = Vec::with_capacity(cfg.max_iters);
-    let mut trace = ArrivalTrace::default();
-    let mut prev_x0 = state.x0.clone();
-    let mut stop = StopReason::MaxIters;
-    let mut scratch = MasterScratch::new();
-    // f_i(x_i) cache: only arrived workers' x_i move, so only they are
-    // re-evaluated (perf: N → |A_k| data passes per iteration).
-    let mut f_cache: Vec<f64> = Vec::with_capacity(n_workers);
-    for i in 0..n_workers {
-        f_cache.push(problem.local(i).eval_with(&state.xs[i], &mut scratch.ws));
+    let mut source = TraceSource::with_solver(problem.num_workers(), arrivals, solver);
+    let policy = PartialBarrier { tau: cfg.tau };
+    let run = run_engine(problem, cfg, &policy, &mut source, &EngineOptions::default());
+    MasterPovOutput {
+        state: run.state,
+        history: run.history,
+        trace: run.trace,
+        stop: run.stop,
+        final_delays: run.final_delays,
     }
-
-    for k in 0..cfg.max_iters {
-        let set = sampler.next_set(&d, cfg.tau, cfg.min_arrivals);
-
-        // Worker-side updates (19)/(23) + (20)/(24), using each arrived
-        // worker's *snapshot* of x₀ and its own dual (identical to the
-        // master's copy by eq. (22)).
-        let mut arrived = vec![false; n_workers];
-        for &i in &set {
-            arrived[i] = true;
-            let snap = &x0_snap[i];
-            solver.solve(i, &state.lams[i], snap, cfg.rho, &mut state.xs[i]);
-            for j in 0..n {
-                state.lams[i][j] += cfg.rho * (state.xs[i][j] - snap[j]);
-            }
-            f_cache[i] = problem.local(i).eval_with(&state.xs[i], &mut scratch.ws);
-            d[i] = 0;
-        }
-        for i in 0..n_workers {
-            if !arrived[i] {
-                d[i] += 1;
-            }
-        }
-
-        // Master update (12)/(25) with the proximal term γ.
-        prev_x0.copy_from_slice(&state.x0);
-        master_x0_update(problem, &mut state, cfg.rho, cfg.gamma, &mut scratch);
-
-        // Broadcast the fresh x₀ to the arrived workers only (Step 6).
-        for &i in &set {
-            x0_snap[i].copy_from_slice(&state.x0);
-        }
-
-        let rec =
-            iter_record(problem, &state, cfg, k, set.len(), &f_cache, &mut scratch, &prev_x0);
-        let early = divergence_or_tol_stop(cfg, &state, &rec, k);
-        history.push(rec);
-        trace.sets.push(set);
-
-        if let Some(reason) = early {
-            stop = reason;
-            break;
-        }
-        if let Some(rule) = &cfg.stopping {
-            let r = super::stopping::residuals(&state, &prev_x0, cfg.rho);
-            if k > 0 && rule.satisfied(&r, n, n_workers) {
-                stop = StopReason::Residuals;
-                break;
-            }
-        }
-    }
-
-    MasterPovOutput { state, history, trace, stop, final_delays: d }
 }
 
 #[cfg(test)]

@@ -9,9 +9,15 @@
 //! - [`arrivals`]    — arrival-set models implementing the partially
 //!   asynchronous protocol (Assumption 1 + the `|A_k| ≥ A` gate).
 //! - [`params`]      — the Theorem-1 parameter rules (16)–(18).
+//! - [`engine`]      — the unified iteration engine all of the above (and
+//!   both cluster execution modes) are thin wrappers over: one
+//!   collect/update/record loop parameterized by an
+//!   [`engine::UpdatePolicy`] and a [`engine::WorkerSource`], plus the
+//!   deterministic fault-injection seam ([`engine::FaultPlan`]).
 
 pub mod alt_scheme;
 pub mod arrivals;
+pub mod engine;
 pub mod kkt;
 pub mod master_pov;
 pub mod params;
@@ -23,9 +29,9 @@ use crate::problems::{ConsensusProblem, WorkerScratch};
 
 /// Master-side reusable buffers for the per-iteration hot path — the
 /// counterpart of [`WorkerScratch`]. One instance is owned by each
-/// coordinator loop (serial, threaded, virtual-time) and threaded through
-/// [`master_x0_update`] and [`iter_record`], so the steady-state master
-/// iteration performs no heap allocation.
+/// engine run (whatever the worker source) and threaded through
+/// [`master_x0_update`] and the per-iteration record assembly, so the
+/// steady-state master iteration performs no heap allocation.
 #[derive(Debug, Default)]
 pub struct MasterScratch {
     /// Prox-assembly buffer `v` of the master update (12)/(25).

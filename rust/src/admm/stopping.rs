@@ -98,6 +98,94 @@ mod tests {
     }
 
     #[test]
+    fn nan_iterate_never_satisfies_the_rule() {
+        // NaN anywhere in the iterate poisons the residual norms; every
+        // comparison with NaN is false, so the rule must NOT report
+        // convergence (the divergence guard upstream is what catches it).
+        let mut state = AdmmState::zeros(2, 2);
+        state.xs[0][0] = f64::NAN;
+        let r = residuals(&state, &[0.0, 0.0], 1.0);
+        assert!(r.primal.is_nan());
+        assert!(!StoppingRule::default().satisfied(&r, 2, 2));
+        let mut s2 = AdmmState::zeros(2, 2);
+        s2.x0[0] = f64::NAN;
+        let r2 = residuals(&s2, &[0.0, 0.0], 1.0);
+        assert!(!StoppingRule { abs_tol: f64::INFINITY, rel_tol: 0.0 }.satisfied(&r2, 2, 2));
+        assert!(!s2.is_finite());
+    }
+
+    /// A one-worker quadratic with `q = 0` and zero start: `x = 0` is an
+    /// exact fixed point, so `x₀` never moves — the sharpest probe for the
+    /// iteration-0 and max-iter tie edge cases.
+    fn fixed_point_problem() -> crate::problems::ConsensusProblem {
+        use crate::problems::QuadraticLocal;
+        use std::sync::Arc;
+        let l = Arc::new(QuadraticLocal::diagonal(&[1.0], vec![0.0]));
+        crate::problems::ConsensusProblem::new(vec![l], crate::prox::Regularizer::Zero)
+    }
+
+    #[test]
+    fn x0_tol_exactly_met_on_iter_zero_does_not_stop() {
+        use crate::admm::sync::run_sync_admm;
+        use crate::admm::AdmmConfig;
+        use crate::data::LassoInstance;
+        use crate::rng::Pcg64;
+
+        let mut rng = Pcg64::seed_from_u64(610);
+        let p = LassoInstance::synthetic(&mut rng, 3, 20, 8, 0.2, 0.1).problem();
+        // Probe the exact k=0 movement, then use it as the tolerance: the
+        // condition `x0_change <= x0_tol` holds with equality on iteration
+        // 0, but the rule only arms from k ≥ 1.
+        let probe_cfg = AdmmConfig { rho: 40.0, max_iters: 1, ..Default::default() };
+        let probe = run_sync_admm(&p, &probe_cfg);
+        let c0 = probe.history[0].x0_change;
+        assert!(c0 > 0.0);
+        let cfg = AdmmConfig { rho: 40.0, max_iters: 50, x0_tol: c0, ..Default::default() };
+        let out = run_sync_admm(&p, &cfg);
+        assert!(out.history.len() > 1, "stopped on iteration 0");
+        assert_eq!(out.history[0].x0_change.to_bits(), c0.to_bits());
+    }
+
+    #[test]
+    fn tolerance_on_final_iteration_wins_over_max_iters() {
+        use crate::admm::sync::run_sync_admm;
+        use crate::admm::{AdmmConfig, StopReason};
+
+        // x₀ never moves; with max_iters = 2 the tolerance fires exactly
+        // at k = 1 = max_iters − 1. The tie goes to X0Tolerance (the early
+        // check precedes the loop bound) with a full-length history.
+        let p = fixed_point_problem();
+        let cfg = AdmmConfig { rho: 1.0, max_iters: 2, x0_tol: 1e-12, ..Default::default() };
+        let out = run_sync_admm(&p, &cfg);
+        assert_eq!(out.stop, StopReason::X0Tolerance);
+        assert_eq!(out.history.len(), 2);
+    }
+
+    #[test]
+    fn residual_rule_never_fires_on_iteration_zero() {
+        use crate::admm::sync::run_sync_admm;
+        use crate::admm::{AdmmConfig, StopReason};
+
+        // At the fixed point both residuals are exactly zero from k = 0 —
+        // satisfied — yet the k > 0 guard defers the rule...
+        let p = fixed_point_problem();
+        let cfg = AdmmConfig {
+            rho: 1.0,
+            max_iters: 1,
+            stopping: Some(StoppingRule::default()),
+            ..Default::default()
+        };
+        let out = run_sync_admm(&p, &cfg);
+        assert_eq!(out.stop, StopReason::MaxIters);
+        assert_eq!(out.history.len(), 1);
+        // ...so the earliest it can fire is k = 1.
+        let cfg2 = AdmmConfig { max_iters: 10, ..cfg };
+        let out2 = run_sync_admm(&p, &cfg2);
+        assert_eq!(out2.stop, StopReason::Residuals);
+        assert_eq!(out2.history.len(), 2);
+    }
+
+    #[test]
     fn stopping_rule_triggers_on_converged_run() {
         use crate::admm::sync::run_sync_admm;
         use crate::admm::AdmmConfig;

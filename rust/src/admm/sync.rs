@@ -8,11 +8,10 @@
 
 use crate::problems::ConsensusProblem;
 
+use super::arrivals::ArrivalModel;
+use super::engine::{run_engine, EngineOptions, FullBarrier, TraceSource};
 use super::master_pov::{NativeSolver, SubproblemSolver};
-use super::{
-    divergence_or_tol_stop, iter_record, master_x0_update, AdmmConfig, AdmmState, IterRecord,
-    MasterScratch, StopReason,
-};
+use super::{AdmmConfig, AdmmState, IterRecord, StopReason};
 
 /// Result of a synchronous run.
 pub struct SyncOutput {
@@ -35,53 +34,17 @@ pub fn run_sync_admm(problem: &ConsensusProblem, cfg: &AdmmConfig) -> SyncOutput
     run_sync_admm_with_solver(problem, cfg, &mut solver)
 }
 
+/// Thin wrapper over the unified engine: the [`FullBarrier`] policy
+/// (master-first order, everyone forced every iteration) driven by the
+/// in-process [`TraceSource`] with the full arrival model.
 pub fn run_sync_admm_with_solver(
     problem: &ConsensusProblem,
     cfg: &AdmmConfig,
     solver: &mut dyn SubproblemSolver,
 ) -> SyncOutput {
-    let n_workers = problem.num_workers();
-    let n = problem.dim();
-    let mut state = cfg.initial_state(n_workers, n);
-    let mut history = Vec::with_capacity(cfg.max_iters);
-    let mut prev_x0 = state.x0.clone();
-    let mut x0 = state.x0.clone();
-    let mut stop = StopReason::MaxIters;
-    let mut scratch = MasterScratch::new();
-    let mut f_cache = vec![0.0; n_workers];
-
-    for k in 0..cfg.max_iters {
-        // (6): master x₀ update from current (xᵏ, λᵏ).
-        prev_x0.copy_from_slice(&state.x0);
-        master_x0_update(problem, &mut state, cfg.rho, cfg.gamma, &mut scratch);
-
-        // (7)+(8): every worker, against the fresh x₀^{k+1}.
-        x0.copy_from_slice(&state.x0);
-        for i in 0..n_workers {
-            solver.solve(i, &state.lams[i], &x0, cfg.rho, &mut state.xs[i]);
-            for j in 0..n {
-                state.lams[i][j] += cfg.rho * (state.xs[i][j] - x0[j]);
-            }
-            f_cache[i] = problem.local(i).eval_with(&state.xs[i], &mut scratch.ws);
-        }
-
-        let rec =
-            iter_record(problem, &state, cfg, k, n_workers, &f_cache, &mut scratch, &prev_x0);
-        let early = divergence_or_tol_stop(cfg, &state, &rec, k);
-        history.push(rec);
-        if let Some(reason) = early {
-            stop = reason;
-            break;
-        }
-        if let Some(rule) = &cfg.stopping {
-            let r = super::stopping::residuals(&state, &prev_x0, cfg.rho);
-            if k > 0 && rule.satisfied(&r, n, n_workers) {
-                stop = StopReason::Residuals;
-                break;
-            }
-        }
-    }
-    SyncOutput { state, history, stop }
+    let mut source = TraceSource::with_solver(problem.num_workers(), &ArrivalModel::Full, solver);
+    let run = run_engine(problem, cfg, &FullBarrier, &mut source, &EngineOptions::default());
+    SyncOutput { state: run.state, history: run.history, stop: run.stop }
 }
 
 #[cfg(test)]

@@ -15,30 +15,32 @@
 //!   is bit-reproducible across machines. This is the mode the Section-V
 //!   τ / `|A_k| ≥ A` sweeps use in CI.
 //!
-//! Both modes realize semantics *identical* to the serial
+//! Both modes are [`crate::admm::engine::WorkerSource`] implementations
+//! driven by the **same** unified iteration engine
+//! ([`crate::admm::engine::run_engine`]) as the serial drivers, so they
+//! realize semantics *identical* to the serial
 //! [`crate::admm::master_pov`] simulator — given the same realized arrival
 //! trace all three produce bit-equal iterates (enforced by the
-//! `cluster_e2e` and `virtual_time` integration tests).
+//! `cluster_e2e`, `virtual_time` and `engine_equivalence` integration
+//! tests). Deterministic fault scenarios ([`FaultPlan`]: worker
+//! dropout/rejoin, delay spikes) plug into every mode through the same
+//! seam via [`ClusterConfig::fault_plan`].
 
 pub mod clock;
 pub mod messages;
 pub mod pool;
 pub mod sim;
+pub mod threaded;
 pub mod timeline;
 pub mod worker;
 
-use std::sync::mpsc;
-use std::sync::Arc;
-
 use crate::admm::arrivals::ArrivalTrace;
-use crate::admm::{
-    divergence_or_tol_stop, iter_record, master_x0_update, AdmmConfig, AdmmState, IterRecord,
-    MasterScratch, StopReason,
-};
+use crate::admm::engine::{self, run_engine, EngineRun, PartialBarrier, WorkerSource};
+use crate::admm::{AdmmConfig, AdmmState, IterRecord, StopReason};
 use crate::problems::ConsensusProblem;
 use crate::rng::Pcg64;
-use crate::util::timer::{Clock, Stopwatch};
 
+pub use crate::admm::engine::{DelaySpike, FaultPlan, Outage};
 pub use clock::VirtualClock;
 pub use messages::{MasterMsg, WorkerMsg};
 pub use pool::WorkerPool;
@@ -170,6 +172,20 @@ pub struct ClusterConfig {
     /// setting (pinned by the `virtual_time` property tests); the
     /// real-thread mode ignores it — it already runs one thread per worker.
     pub pool_threads: usize,
+    /// Deterministic, seeded worker dropout/rejoin + delay-spike schedule
+    /// ([`FaultPlan`]), enforced identically at the master's gate in every
+    /// execution mode: a down worker's result is held until rejoin, so it
+    /// re-enters with stale iterates (the paper's delayed-information
+    /// model). `None` = fault-free (the historical behaviour).
+    pub fault_plan: Option<FaultPlan>,
+    /// Real-thread mode only: replay this prescribed sequence of arrival
+    /// sets in lockstep — each iteration the master waits for *exactly*
+    /// the prescribed workers — which makes the otherwise nondeterministic
+    /// threaded mode bit-comparable with the trace-driven and virtual-time
+    /// sources on the same trace. Ignored by the other modes (they are
+    /// already deterministic; replay traces there via
+    /// [`crate::admm::arrivals::ArrivalModel::Trace`]).
+    pub lockstep_trace: Option<ArrivalTrace>,
 }
 
 impl Default for ClusterConfig {
@@ -182,6 +198,8 @@ impl Default for ClusterConfig {
             faults: None,
             mode: ExecutionMode::RealThreads,
             pool_threads: 1,
+            fault_plan: None,
+            lockstep_trace: None,
         }
     }
 }
@@ -240,187 +258,51 @@ impl StarCluster {
         }
     }
 
-    /// The real-thread implementation (historical default).
+    /// The real-thread implementation (historical default): spawn the
+    /// [`threaded::ThreadedSource`], hand it to the unified engine, join.
     fn run_threaded(
         &self,
         cfg: &ClusterConfig,
         solvers: Option<Vec<WorkerSolveFn>>,
     ) -> ClusterReport {
-        let n_workers = self.problem.num_workers();
-        let n = self.problem.dim();
-        let rho = cfg.admm.rho;
-        let protocol = cfg.protocol;
-
-        // Star links: one channel to each worker, one shared channel back.
-        let (to_master, from_workers) = mpsc::channel::<WorkerMsg>();
-        let mut to_workers = Vec::with_capacity(n_workers);
-        let mut handles = Vec::with_capacity(n_workers);
-        let mut solver_list: Vec<Option<WorkerSolveFn>> = match solvers {
-            Some(v) => {
-                assert_eq!(v.len(), n_workers, "one solver per worker");
-                v.into_iter().map(Some).collect()
-            }
-            None => (0..n_workers).map(|_| None).collect(),
-        };
-
-        for i in 0..n_workers {
-            let (tx, rx) = mpsc::channel::<MasterMsg>();
-            to_workers.push(tx);
-            let local = Arc::clone(self.problem.local(i));
-            let back = to_master.clone();
-            let delay = cfg.delays.sampler(i);
-            let comm = cfg.comm_delays.as_ref().map(|d| d.sampler(i));
-            let solve = solver_list[i].take();
-            let faults = cfg.faults.clone();
-            let handle = std::thread::Builder::new()
-                .name(format!("worker-{i}"))
-                .spawn(move || {
-                    worker::worker_loop(
-                        i, local, rho, protocol, rx, back, delay, comm, solve, faults,
-                    )
-                })
-                .expect("spawn worker");
-            handles.push(handle);
-        }
-        drop(to_master);
-
-        // ---- master ----
-        let wall = Stopwatch::start();
-        let mut state = cfg.admm.initial_state(n_workers, n);
-        let mut d = vec![0usize; n_workers];
-        let mut history = Vec::with_capacity(cfg.admm.max_iters);
-        let mut trace = ArrivalTrace::default();
-        let mut prev_x0 = state.x0.clone();
-        let mut master_wait_s = 0.0;
-        let mut stop = StopReason::MaxIters;
-        let mut scratch = MasterScratch::new();
-        let mut f_cache: Vec<f64> = Vec::with_capacity(n_workers);
-        for i in 0..n_workers {
-            f_cache.push(self.problem.local(i).eval_with(&state.xs[i], &mut scratch.ws));
-        }
-
-        // Initial broadcast: everyone starts computing against x⁰ (and λ⁰
-        // for Algorithm 4).
-        for (i, tx) in to_workers.iter().enumerate() {
-            let lam = matches!(protocol, Protocol::AltScheme).then(|| state.lams[i].clone());
-            tx.send(MasterMsg::Go { x0: state.x0.clone(), lam }).expect("worker alive");
-        }
-
-        let mut pending: Vec<Option<WorkerMsg>> = (0..n_workers).map(|_| None).collect();
-        for k in 0..cfg.admm.max_iters {
-            // Gather until the gate is met: |A_k| ≥ A and every worker with
-            // d_i ≥ τ−1 has arrived.
-            let wait_started = wall.now_s();
-            loop {
-                while let Ok(msg) = from_workers.try_recv() {
-                    let id = msg.id;
-                    pending[id] = Some(msg);
-                }
-                let arrived: Vec<usize> =
-                    (0..n_workers).filter(|&i| pending[i].is_some()).collect();
-                let forced_ok = (0..n_workers)
-                    .all(|i| d[i] + 1 < cfg.admm.tau || pending[i].is_some());
-                if arrived.len() >= cfg.admm.min_arrivals.min(n_workers) && forced_ok {
-                    break;
-                }
-                // Block for the next message.
-                match from_workers.recv() {
-                    Ok(msg) => {
-                        let id = msg.id;
-                        pending[id] = Some(msg);
-                    }
-                    Err(_) => break, // all workers gone (shutdown path)
-                }
-            }
-            master_wait_s += wall.now_s() - wait_started;
-
-            let set: Vec<usize> = (0..n_workers).filter(|&i| pending[i].is_some()).collect();
-            // (9)/(10)/(44): absorb arrived variables.
-            for &i in &set {
-                let msg = pending[i].take().unwrap();
-                state.xs[i] = msg.x;
-                if let Some(lam) = msg.lam {
-                    state.lams[i] = lam; // Algorithm 2: worker-computed dual
-                }
-                f_cache[i] = self.problem.local(i).eval_with(&state.xs[i], &mut scratch.ws);
-                d[i] = 0;
-            }
-            for i in 0..n_workers {
-                if !set.contains(&i) {
-                    d[i] += 1;
-                }
-            }
-
-            // (12)/(45): master x₀ update.
-            prev_x0.copy_from_slice(&state.x0);
-            master_x0_update(&self.problem, &mut state, rho, cfg.admm.gamma, &mut scratch);
-
-            // Algorithm 4 (46): master updates ALL duals against fresh x₀.
-            if protocol == Protocol::AltScheme {
-                for i in 0..n_workers {
-                    for j in 0..n {
-                        state.lams[i][j] += rho * (state.xs[i][j] - state.x0[j]);
-                    }
-                }
-            }
-
-            // Step 6: broadcast to arrived workers only.
-            for &i in &set {
-                let lam = (protocol == Protocol::AltScheme).then(|| state.lams[i].clone());
-                // A worker may have exited only after shutdown; sends cannot
-                // fail before that.
-                to_workers[i]
-                    .send(MasterMsg::Go { x0: state.x0.clone(), lam })
-                    .expect("worker alive");
-            }
-
-            let rec = iter_record(
-                &self.problem,
-                &state,
-                &cfg.admm,
-                k,
-                set.len(),
-                &f_cache,
-                &mut scratch,
-                &prev_x0,
-            );
-            let early = divergence_or_tol_stop(&cfg.admm, &state, &rec, k);
-            history.push(rec);
-            trace.sets.push(set);
-
-            if let Some(reason) = early {
-                stop = reason;
-                break;
-            }
-            if let Some(rule) = &cfg.admm.stopping {
-                let r = crate::admm::stopping::residuals(&state, &prev_x0, rho);
-                if k > 0 && rule.satisfied(&r, n, n_workers) {
-                    stop = StopReason::Residuals;
-                    break;
-                }
-            }
-        }
-
-        // Shutdown: tell everyone, drain stragglers, join.
-        for tx in &to_workers {
-            let _ = tx.send(MasterMsg::Shutdown);
-        }
-        drop(to_workers);
-        while from_workers.try_recv().is_ok() {}
-        let mut workers = Vec::with_capacity(n_workers);
-        for h in handles {
-            workers.push(h.join().expect("worker panicked"));
-        }
-        // Any message sent between drain and join is dropped with the channel.
-
+        let mut source = threaded::ThreadedSource::spawn(&self.problem, cfg, solvers);
+        let run = run_cluster_engine(&self.problem, cfg, &mut source);
+        let (workers, wall_clock_s, master_wait_s) = source.finish();
         ClusterReport {
-            state,
-            history,
-            trace,
-            stop,
-            wall_clock_s: wall.now_s(),
+            state: run.state,
+            history: run.history,
+            trace: run.trace,
+            stop: run.stop,
+            wall_clock_s,
             master_wait_s,
             workers,
+        }
+    }
+}
+
+/// The one place a [`ClusterConfig`] is translated into an engine run:
+/// protocol → [`UpdatePolicy`](crate::admm::engine::UpdatePolicy)
+/// (`AdAdmm` → [`PartialBarrier`], `AltScheme` →
+/// [`engine::AltScheme`]), fault plan → engine options. Both execution
+/// modes (threaded and virtual-time) funnel through here, which is what
+/// guarantees they realize identical protocol semantics.
+pub(crate) fn run_cluster_engine(
+    problem: &ConsensusProblem,
+    cfg: &ClusterConfig,
+    source: &mut dyn WorkerSource,
+) -> EngineRun {
+    let opts = engine::EngineOptions {
+        residual_stopping: true,
+        fault_plan: cfg.fault_plan.as_ref(),
+    };
+    match cfg.protocol {
+        Protocol::AdAdmm => {
+            let policy = PartialBarrier { tau: cfg.admm.tau };
+            run_engine(problem, &cfg.admm, &policy, source, &opts)
+        }
+        Protocol::AltScheme => {
+            let policy = engine::AltScheme { tau: cfg.admm.tau };
+            run_engine(problem, &cfg.admm, &policy, source, &opts)
         }
     }
 }

@@ -1,28 +1,39 @@
 //! Virtual-time star cluster: the Algorithm 2/4 protocol driven by a
 //! deterministic discrete-event scheduler instead of OS threads.
 //!
-//! Every worker cycles through `Go → compute (ComputeDone event) →
-//! transit (Arrive event) → absorbed by the master → Go`, with the
-//! compute/comm durations drawn from the *same* [`super::DelaySampler`]s
-//! the real-thread mode sleeps on. The master gathers arrivals until the
-//! `|A_k| ≥ A` + τ-forcing gate is met, then performs the iteration.
+//! Since the engine refactor this module is a [`WorkerSource`]
+//! implementation plus a thin wrapper: the per-iteration ADMM state
+//! machine lives in [`crate::admm::engine::run_engine`]; what remains here
+//! is purely the *event mechanics* — every worker cycles through `Go →
+//! compute (ComputeDone event) → transit (Arrive event) → absorbed by the
+//! master → Go`, with compute/comm durations drawn from the *same*
+//! `DelaySampler`s the real-thread mode sleeps on. The master
+//! gathers arrivals until the `|A_k| ≥ A` + τ-forcing gate is met, then
+//! the engine performs the iteration.
 //!
 //! Two properties make this the CI workhorse:
 //!
 //! 1. **Bit-equivalence.** The per-iteration arithmetic (worker solves in
 //!    ascending id order against their `x₀` snapshots, the shared
-//!    [`iter_record`] bookkeeping) is the exact sequence of
+//!    `iter_record` bookkeeping) is the exact sequence of
 //!    [`crate::admm::master_pov`]; replaying the realized
-//!    [`ArrivalTrace`] through `run_master_pov` reproduces the history
-//!    bit-for-bit (pinned by the `virtual_time` integration tests).
+//!    [`ArrivalTrace`](crate::admm::arrivals::ArrivalTrace) through
+//!    `run_master_pov` reproduces the history bit-for-bit (pinned by the
+//!    `virtual_time` and `engine_equivalence` integration tests).
 //! 2. **Scale.** No sleeps and no threads: a 1000-worker × 500-iteration
 //!    sweep runs in fractions of a second, so the Section-V τ / `A`
-//!    parameter sweeps run on every CI push.
+//!    parameter sweeps — and now the fault/straggler sweeps — run on every
+//!    CI push.
+//!
+//! Fault injection: [`FaultPlan`](crate::admm::engine::FaultPlan) outages
+//! gate the master's bookkeeping inside the engine (a down worker's Arrive
+//! event still fires, but the message is *held* — `pending` — until
+//! rejoin, so the worker re-enters with the stale iterate it computed
+//! against its pre-outage snapshot); delay spikes stretch this source's
+//! compute/transit legs on the virtual clock.
 
-use crate::admm::arrivals::ArrivalTrace;
-use crate::admm::{
-    divergence_or_tol_stop, iter_record, master_x0_update, MasterScratch, StopReason,
-};
+use crate::admm::engine::{Gate, MasterView, UpdatePolicy, WorkerSource};
+use crate::admm::AdmmState;
 use crate::problems::{ConsensusProblem, WorkerScratch};
 use crate::rng::Pcg64;
 use crate::util::timer::Clock;
@@ -31,7 +42,7 @@ use super::clock::{Event, EventKind, EventQueue, VirtualClock};
 use super::pool::WorkerPool;
 use super::timeline::WorkerStats;
 use super::worker::WorkerSolveFn;
-use super::{ClusterConfig, ClusterReport, DelaySampler, FaultModel, Protocol};
+use super::{ClusterConfig, ClusterReport, DelaySampler, FaultModel};
 
 /// Per-worker simulation state (delay streams + optional solve override).
 struct VirtualWorker {
@@ -66,194 +77,222 @@ struct SolveTask<'a> {
     f: &'a mut f64,
 }
 
-/// Start worker `i`'s next round at virtual instant `now_s`: sample its
-/// compute delay and schedule the ComputeDone.
-fn dispatch(w: &mut VirtualWorker, queue: &mut EventQueue, now_s: f64, worker: usize) {
-    let compute_s = w.compute.sample_ms() * 1e-3;
-    w.inflight_compute_s = compute_s;
-    queue.push(now_s + compute_s, worker, EventKind::ComputeDone);
+/// The discrete-event [`WorkerSource`]: mirrors the threaded star cluster
+/// event-for-event on a [`VirtualClock`], deterministically.
+pub(crate) struct VirtualSource {
+    workers: Vec<VirtualWorker>,
+    stats: Vec<WorkerStats>,
+    pool: WorkerPool,
+    vclock: VirtualClock,
+    queue: EventQueue,
+    /// One outstanding message per worker, *held* here until the master
+    /// absorbs it (possibly several iterations later, under outages).
+    pending: Vec<bool>,
+    /// `x₀^{k̄_i+1}` as worker i last received it.
+    x0_snap: Vec<Vec<f64>>,
+    /// `λ̂_i` as worker i last received it (Algorithm 4 only).
+    lam_snap: Vec<Vec<f64>>,
+    faults: Option<FaultModel>,
+    fault_plan: Option<crate::admm::engine::FaultPlan>,
+    master_wait_s: f64,
 }
 
-/// Process one event. ComputeDone enters the link (comm latency plus any
-/// fault retransmissions, mirroring the threaded worker's `comm_faults`);
-/// Arrive lands the message at the master and updates the gate counters.
-fn absorb(
-    ev: Event,
-    workers: &mut [VirtualWorker],
-    stats: &mut [WorkerStats],
-    pending: &mut [bool],
-    queue: &mut EventQueue,
-    faults: Option<&FaultModel>,
-    d: &[usize],
-    tau: usize,
-    arrived_count: &mut usize,
-    forced_missing: &mut usize,
-) {
-    match ev.kind {
-        EventKind::ComputeDone => {
-            let w = &mut workers[ev.worker];
-            stats[ev.worker].busy_s += w.inflight_compute_s;
-            let mut transit_ms = match w.comm.as_mut() {
-                Some(c) => c.sample_ms(),
-                None => 0.0,
-            };
-            if let (Some(f), Some(rng)) = (faults, w.fault_rng.as_mut()) {
-                while rng.bernoulli(f.drop_prob) {
-                    transit_ms += f.retrans_ms;
-                    stats[ev.worker].retransmissions += 1;
+impl VirtualSource {
+    pub(crate) fn new(
+        n_workers: usize,
+        cfg: &ClusterConfig,
+        solvers: Option<Vec<WorkerSolveFn>>,
+    ) -> Self {
+        let mut solver_list: Vec<Option<WorkerSolveFn>> = match solvers {
+            Some(v) => {
+                assert_eq!(v.len(), n_workers, "one solver per worker");
+                v.into_iter().map(Some).collect()
+            }
+            None => (0..n_workers).map(|_| None).collect(),
+        };
+        let workers: Vec<VirtualWorker> = (0..n_workers)
+            .map(|i| VirtualWorker {
+                compute: cfg.delays.sampler(i),
+                comm: cfg.comm_delays.as_ref().map(|d| d.sampler(i)),
+                fault_rng: cfg
+                    .faults
+                    .as_ref()
+                    .map(|f| Pcg64::seed_from_u64(f.seed.wrapping_add(i as u64 * 0x5bd1))),
+                solve: solver_list[i].take(),
+                scratch: WorkerScratch::new(),
+                inflight_compute_s: 0.0,
+                inflight_transit_s: 0.0,
+            })
+            .collect();
+        VirtualSource {
+            workers,
+            stats: (0..n_workers).map(WorkerStats::new).collect(),
+            pool: WorkerPool::new(cfg.pool_threads),
+            vclock: VirtualClock::new(),
+            queue: EventQueue::new(),
+            pending: vec![false; n_workers],
+            x0_snap: Vec::new(),
+            lam_snap: Vec::new(),
+            faults: cfg.faults.clone(),
+            fault_plan: cfg.fault_plan.clone(),
+            master_wait_s: 0.0,
+        }
+    }
+
+    /// Start worker `i`'s next round at the current virtual instant:
+    /// sample its compute delay (stretched by any active delay spike) and
+    /// schedule the ComputeDone.
+    fn dispatch(&mut self, i: usize) {
+        let now_s = self.vclock.now_s();
+        let mut compute_s = self.workers[i].compute.sample_ms() * 1e-3;
+        if let Some(plan) = &self.fault_plan {
+            compute_s *= plan.delay_factor(i, now_s);
+        }
+        self.workers[i].inflight_compute_s = compute_s;
+        self.queue.push(now_s + compute_s, i, EventKind::ComputeDone);
+    }
+
+    /// Process one event. ComputeDone enters the link (comm latency plus
+    /// any fault retransmissions, mirroring the threaded worker's
+    /// `comm_faults`); Arrive lands the message at the master and updates
+    /// the gate counters — unless the worker is down, in which case the
+    /// message is held (`pending`) without counting.
+    fn absorb_event(
+        &mut self,
+        ev: Event,
+        d: &[usize],
+        gate: &Gate<'_>,
+        arrived_count: &mut usize,
+        forced_missing: &mut usize,
+    ) {
+        match ev.kind {
+            EventKind::ComputeDone => {
+                let w = &mut self.workers[ev.worker];
+                self.stats[ev.worker].busy_s += w.inflight_compute_s;
+                let mut transit_ms = match w.comm.as_mut() {
+                    Some(c) => c.sample_ms(),
+                    None => 0.0,
+                };
+                if let (Some(f), Some(rng)) = (self.faults.as_ref(), w.fault_rng.as_mut()) {
+                    while rng.bernoulli(f.drop_prob) {
+                        transit_ms += f.retrans_ms;
+                        self.stats[ev.worker].retransmissions += 1;
+                    }
+                }
+                let mut transit_s = transit_ms * 1e-3;
+                if let Some(plan) = &self.fault_plan {
+                    transit_s *= plan.delay_factor(ev.worker, ev.time_s);
+                }
+                w.inflight_transit_s = transit_s;
+                self.queue.push(ev.time_s + transit_s, ev.worker, EventKind::Arrive);
+            }
+            EventKind::Arrive => {
+                debug_assert!(!self.pending[ev.worker], "one outstanding message per worker");
+                // The threaded worker's busy time covers the whole round
+                // (compute sleep + comm sleep + retransmissions); charge the
+                // transit leg now that it completed.
+                self.stats[ev.worker].busy_s += self.workers[ev.worker].inflight_transit_s;
+                self.pending[ev.worker] = true;
+                self.stats[ev.worker].updates += 1;
+                if !gate.down[ev.worker] {
+                    *arrived_count += 1;
+                    if d[ev.worker] + 1 >= gate.tau {
+                        *forced_missing -= 1;
+                    }
                 }
             }
-            w.inflight_transit_s = transit_ms * 1e-3;
-            queue.push(ev.time_s + transit_ms * 1e-3, ev.worker, EventKind::Arrive);
         }
-        EventKind::Arrive => {
-            debug_assert!(!pending[ev.worker], "one outstanding message per worker");
-            // The threaded worker's busy time covers the whole round
-            // (compute sleep + comm sleep + retransmissions); charge the
-            // transit leg now that it completed.
-            stats[ev.worker].busy_s += workers[ev.worker].inflight_transit_s;
-            pending[ev.worker] = true;
-            stats[ev.worker].updates += 1;
-            *arrived_count += 1;
-            if d[ev.worker] + 1 >= tau {
-                *forced_missing -= 1;
-            }
+    }
+
+    /// Consume the source at end of run: per-worker stats (lifetimes
+    /// stamped with the final virtual instant), total simulated seconds,
+    /// and the master's simulated wait.
+    pub(crate) fn finish(mut self) -> (Vec<WorkerStats>, f64, f64) {
+        let total_s = self.vclock.now_s();
+        for w in self.stats.iter_mut() {
+            w.lifetime_s = total_s;
         }
+        (self.stats, total_s, self.master_wait_s)
     }
 }
 
-/// Run the configured protocol in simulated time. Semantics of the
-/// returned [`ClusterReport`] match the threaded mode, with all seconds
-/// measured on the virtual clock.
-pub(crate) fn run_virtual(
-    problem: &ConsensusProblem,
-    cfg: &ClusterConfig,
-    solvers: Option<Vec<WorkerSolveFn>>,
-) -> ClusterReport {
-    let n_workers = problem.num_workers();
-    let n = problem.dim();
-    let rho = cfg.admm.rho;
-    let tau = cfg.admm.tau;
-    let protocol = cfg.protocol;
+impl WorkerSource for VirtualSource {
+    fn n_workers(&self) -> usize {
+        self.pending.len()
+    }
 
-    let mut solver_list: Vec<Option<WorkerSolveFn>> = match solvers {
-        Some(v) => {
-            assert_eq!(v.len(), n_workers, "one solver per worker");
-            v.into_iter().map(Some).collect()
+    fn start(&mut self, state: &AdmmState, _policy: &dyn UpdatePolicy) {
+        let n_workers = self.pending.len();
+        // x₀^{k̄_i+1} as each worker last received it — same bookkeeping
+        // as the serial simulator; Algorithm 4 additionally broadcasts the
+        // master-updated duals.
+        self.x0_snap = vec![state.x0.clone(); n_workers];
+        self.lam_snap = state.lams.clone();
+        // Initial broadcast at t = 0: every worker starts computing
+        // against x⁰.
+        for i in 0..n_workers {
+            self.dispatch(i);
         }
-        None => (0..n_workers).map(|_| None).collect(),
-    };
-    let mut workers: Vec<VirtualWorker> = (0..n_workers)
-        .map(|i| VirtualWorker {
-            compute: cfg.delays.sampler(i),
-            comm: cfg.comm_delays.as_ref().map(|d| d.sampler(i)),
-            fault_rng: cfg
-                .faults
-                .as_ref()
-                .map(|f| Pcg64::seed_from_u64(f.seed.wrapping_add(i as u64 * 0x5bd1))),
-            solve: solver_list[i].take(),
-            scratch: WorkerScratch::new(),
-            inflight_compute_s: 0.0,
-            inflight_transit_s: 0.0,
-        })
-        .collect();
-    let mut stats: Vec<WorkerStats> = (0..n_workers).map(WorkerStats::new).collect();
-    let pool = WorkerPool::new(cfg.pool_threads);
-
-    let mut vclock = VirtualClock::new();
-    let mut queue = EventQueue::new();
-
-    let mut state = cfg.admm.initial_state(n_workers, n);
-    // x₀^{k̄_i+1} as each worker last received it — same bookkeeping as the
-    // serial simulator.
-    let mut x0_snap: Vec<Vec<f64>> = vec![state.x0.clone(); n_workers];
-    // Algorithm 4 additionally broadcasts the master-updated duals.
-    let mut lam_snap: Vec<Vec<f64>> = state.lams.clone();
-    let mut d = vec![0usize; n_workers];
-    let mut history = Vec::with_capacity(cfg.admm.max_iters);
-    let mut trace = ArrivalTrace::default();
-    let mut prev_x0 = state.x0.clone();
-    let mut stop = StopReason::MaxIters;
-    let mut master_scratch = MasterScratch::new();
-    let mut f_cache: Vec<f64> = Vec::with_capacity(n_workers);
-    for i in 0..n_workers {
-        f_cache.push(problem.local(i).eval_with(&state.xs[i], &mut master_scratch.ws));
-    }
-    let mut pending = vec![false; n_workers];
-    let mut master_wait_s = 0.0;
-
-    // Initial broadcast at t = 0: every worker starts computing against x⁰.
-    for i in 0..n_workers {
-        dispatch(&mut workers[i], &mut queue, vclock.now_s(), i);
     }
 
-    for k in 0..cfg.admm.max_iters {
-        let wait_from = vclock.now_s();
+    fn gather(&mut self, _k: usize, d: &[usize], gate: &Gate<'_>) -> Vec<usize> {
+        let n = self.pending.len();
+        let wait_from = self.vclock.now_s();
         // Gate counters, maintained incrementally so the gather loop is
-        // O(1) per event (N can be in the thousands here).
-        let mut arrived_count = pending.iter().filter(|&&p| p).count();
-        let mut forced_missing = (0..n_workers)
-            .filter(|&i| d[i] + 1 >= tau && !pending[i])
+        // O(1) per event (N can be in the thousands here). Down workers
+        // never count: the master can neither absorb nor wait for them.
+        let n_live = (0..n).filter(|&i| !gate.down[i]).count();
+        let target = gate.min_arrivals.min(n_live);
+        let mut arrived_count = (0..n).filter(|&i| self.pending[i] && !gate.down[i]).count();
+        let mut forced_missing = (0..n)
+            .filter(|&i| !gate.down[i] && d[i] + 1 >= gate.tau && !self.pending[i])
             .count();
-        let target = cfg.admm.min_arrivals.min(n_workers);
         loop {
             if arrived_count >= target && forced_missing == 0 {
                 // Absorb everything that has arrived by this instant — the
                 // threaded master's try_recv drain.
-                while queue.peek_time().is_some_and(|t| t <= vclock.now_s()) {
-                    let ev = queue.pop().expect("peeked event");
-                    absorb(
-                        ev,
-                        &mut workers,
-                        &mut stats,
-                        &mut pending,
-                        &mut queue,
-                        cfg.faults.as_ref(),
-                        &d,
-                        tau,
-                        &mut arrived_count,
-                        &mut forced_missing,
-                    );
+                while self.queue.peek_time().is_some_and(|t| t <= self.vclock.now_s()) {
+                    let ev = self.queue.pop().expect("peeked event");
+                    self.absorb_event(ev, d, gate, &mut arrived_count, &mut forced_missing);
                 }
                 break;
             }
-            match queue.pop() {
+            match self.queue.pop() {
                 Some(ev) => {
-                    vclock.advance_to(ev.time_s);
-                    absorb(
-                        ev,
-                        &mut workers,
-                        &mut stats,
-                        &mut pending,
-                        &mut queue,
-                        cfg.faults.as_ref(),
-                        &d,
-                        tau,
-                        &mut arrived_count,
-                        &mut forced_missing,
-                    );
+                    self.vclock.advance_to(ev.time_s);
+                    self.absorb_event(ev, d, gate, &mut arrived_count, &mut forced_missing);
                 }
-                // Unreachable with ≥1 worker (every worker always has an
-                // in-flight event), but mirror the threaded recv-Err path.
+                // Unreachable with ≥1 live worker (every worker always has
+                // an in-flight event), but mirror the threaded recv-Err
+                // path.
                 None => break,
             }
         }
-        master_wait_s += vclock.now_s() - wait_from;
+        self.master_wait_s += self.vclock.now_s() - wait_from;
+        (0..n).filter(|&i| self.pending[i] && !gate.down[i]).collect()
+    }
 
-        let set: Vec<usize> = (0..n_workers).filter(|&i| pending[i]).collect();
+    fn absorb(&mut self, set: &[usize], m: &mut MasterView<'_>, policy: &dyn UpdatePolicy) {
+        let n = m.state.x0.len();
+        let rho = m.rho;
+        let problem = m.problem;
+        let worker_dual = policy.worker_updates_dual();
         // Deferred worker arithmetic: one task per arrived worker, built in
         // ascending id order and fanned across the pool. Every task writes
         // only its own slots against the shared immutable snapshots, so the
         // result is the exact bit sequence of the serial Algorithm-3
         // simulator for any pool size (pinned by the property tests).
         let mut tasks: Vec<SolveTask> = Vec::with_capacity(set.len());
-        for (i, ((w, x), (lam, f))) in workers
+        let mut set_iter = set.iter().peekable();
+        for (i, ((w, x), (lam, f))) in self
+            .workers
             .iter_mut()
-            .zip(state.xs.iter_mut())
-            .zip(state.lams.iter_mut().zip(f_cache.iter_mut()))
+            .zip(m.state.xs.iter_mut())
+            .zip(m.state.lams.iter_mut().zip(m.f_cache.iter_mut()))
             .enumerate()
         {
-            if pending[i] {
+            if set_iter.peek() == Some(&&i) {
+                set_iter.next();
                 tasks.push(SolveTask {
                     worker: i,
                     solve: w.solve.as_mut(),
@@ -264,111 +303,68 @@ pub(crate) fn run_virtual(
                 });
             }
         }
-        let x0_snaps = &x0_snap;
-        let lam_snaps = &lam_snap;
-        pool.run(&mut tasks, |t| {
+        let x0_snaps = &self.x0_snap;
+        let lam_snaps = &self.lam_snap;
+        self.pool.run(&mut tasks, |t| {
             let i = t.worker;
-            match protocol {
-                Protocol::AdAdmm => {
-                    // (19)/(23): solve against the worker's own dual and its
-                    // x₀ snapshot, then (20)/(24): the dual update.
-                    let snap = &x0_snaps[i];
-                    match &mut t.solve {
-                        Some(f) => (**f)(t.lam, snap, rho, t.x),
-                        None => {
-                            problem.local(i).solve_subproblem(t.lam, snap, rho, t.x, t.scratch)
-                        }
-                    }
-                    for j in 0..n {
-                        t.lam[j] += rho * (t.x[j] - snap[j]);
-                    }
+            if worker_dual {
+                // (19)/(23): solve against the worker's own dual and its
+                // x₀ snapshot, then (20)/(24): the dual update.
+                let snap = &x0_snaps[i];
+                match &mut t.solve {
+                    Some(f) => (**f)(t.lam, snap, rho, t.x),
+                    None => problem.local(i).solve_subproblem(t.lam, snap, rho, t.x, t.scratch),
                 }
-                Protocol::AltScheme => {
-                    // (47): solve against the master-broadcast (x̂₀, λ̂_i).
-                    let (snap, lsnap) = (&x0_snaps[i], &lam_snaps[i]);
-                    match &mut t.solve {
-                        Some(f) => (**f)(lsnap, snap, rho, t.x),
-                        None => {
-                            problem.local(i).solve_subproblem(lsnap, snap, rho, t.x, t.scratch)
-                        }
-                    }
+                for j in 0..n {
+                    t.lam[j] += rho * (t.x[j] - snap[j]);
+                }
+            } else {
+                // (47): solve against the master-broadcast (x̂₀, λ̂_i).
+                let (snap, lsnap) = (&x0_snaps[i], &lam_snaps[i]);
+                match &mut t.solve {
+                    Some(f) => (**f)(lsnap, snap, rho, t.x),
+                    None => problem.local(i).solve_subproblem(lsnap, snap, rho, t.x, t.scratch),
                 }
             }
             *t.f = problem.local(i).eval_with(t.x, t.scratch);
         });
-        drop(tasks);
-        for i in 0..n_workers {
-            if pending[i] {
-                d[i] = 0;
-            } else {
-                d[i] += 1;
-            }
-        }
+    }
 
-        // (12)/(25)/(45): master x₀ update.
-        prev_x0.copy_from_slice(&state.x0);
-        master_x0_update(problem, &mut state, rho, cfg.admm.gamma, &mut master_scratch);
-
-        // Algorithm 4 (46): master updates ALL duals against fresh x₀.
-        if protocol == Protocol::AltScheme {
-            for i in 0..n_workers {
-                for j in 0..n {
-                    state.lams[i][j] += rho * (state.xs[i][j] - state.x0[j]);
-                }
-            }
-        }
-
+    fn broadcast(&mut self, set: &[usize], state: &AdmmState, policy: &dyn UpdatePolicy) {
         // Step 6: broadcast to the arrived workers only and start their
         // next round at the current virtual instant.
-        for &i in &set {
-            pending[i] = false;
-            x0_snap[i].copy_from_slice(&state.x0);
-            if protocol == Protocol::AltScheme {
-                lam_snap[i].copy_from_slice(&state.lams[i]);
+        let with_dual = policy.broadcasts_dual();
+        for &i in set {
+            self.pending[i] = false;
+            self.x0_snap[i].copy_from_slice(&state.x0);
+            if with_dual {
+                self.lam_snap[i].copy_from_slice(&state.lams[i]);
             }
-            dispatch(&mut workers[i], &mut queue, vclock.now_s(), i);
-        }
-
-        let rec = iter_record(
-            problem,
-            &state,
-            &cfg.admm,
-            k,
-            set.len(),
-            &f_cache,
-            &mut master_scratch,
-            &prev_x0,
-        );
-        let early = divergence_or_tol_stop(&cfg.admm, &state, &rec, k);
-        history.push(rec);
-        trace.sets.push(set);
-
-        if let Some(reason) = early {
-            stop = reason;
-            break;
-        }
-        if let Some(rule) = &cfg.admm.stopping {
-            let r = crate::admm::stopping::residuals(&state, &prev_x0, rho);
-            if k > 0 && rule.satisfied(&r, n, n_workers) {
-                stop = StopReason::Residuals;
-                break;
-            }
+            self.dispatch(i);
         }
     }
+}
 
-    let total_s = vclock.now_s();
-    for w in stats.iter_mut() {
-        w.lifetime_s = total_s;
-    }
-
+/// Run the configured protocol in simulated time: build the
+/// [`VirtualSource`], hand it to the unified engine, repackage. Semantics
+/// of the returned [`ClusterReport`] match the threaded mode, with all
+/// seconds measured on the virtual clock.
+pub(crate) fn run_virtual(
+    problem: &ConsensusProblem,
+    cfg: &ClusterConfig,
+    solvers: Option<Vec<WorkerSolveFn>>,
+) -> ClusterReport {
+    let mut source = VirtualSource::new(problem.num_workers(), cfg, solvers);
+    let run = super::run_cluster_engine(problem, cfg, &mut source);
+    let (workers, wall_clock_s, master_wait_s) = source.finish();
     ClusterReport {
-        state,
-        history,
-        trace,
-        stop,
-        wall_clock_s: total_s,
+        state: run.state,
+        history: run.history,
+        trace: run.trace,
+        stop: run.stop,
+        wall_clock_s,
         master_wait_s,
-        workers: stats,
+        workers,
     }
 }
 
@@ -476,5 +472,64 @@ mod tests {
         assert!(report.trace.sets.iter().all(|s| s.len() == 4));
         // 50 synchronous rounds at 2 ms each ≈ 100 ms of simulated time
         assert!((report.wall_clock_s - 0.1).abs() < 1e-9, "t={}", report.wall_clock_s);
+    }
+
+    #[test]
+    fn dropout_holds_messages_and_rejoins_with_stale_iterates() {
+        use crate::admm::engine::FaultPlan;
+        let p = problem(806, 4);
+        let mut cfg = virt_cfg(3, 1, 60);
+        cfg.delays = DelayModel::Fixed { per_worker_ms: vec![1.0, 1.5, 2.0, 2.5] };
+        cfg.fault_plan = Some(FaultPlan::single_outage(1, 15, 30));
+        let report = StarCluster::new(p).run(&cfg);
+        assert_eq!(report.history.len(), 60);
+        for (k, set) in report.trace.sets.iter().enumerate() {
+            if (15..30).contains(&k) {
+                assert!(!set.contains(&1), "down worker absorbed at k={k}");
+            }
+        }
+        // rejoin: worker 1 arrives again after the outage ends
+        assert!(report.trace.sets[30..].iter().any(|s| s.contains(&1)));
+        // the outage (15 iters) exceeds τ = 3 ⇒ Assumption 1 violated
+        assert!(!report.trace.satisfies_bounded_delay(4, 3));
+        // determinism: the same config realizes the same faulted trace
+        let p2 = problem(806, 4);
+        let again = StarCluster::new(p2).run(&cfg);
+        assert_eq!(report.trace, again.trace);
+        assert_eq!(report.state.x0, again.state.x0);
+    }
+
+    #[test]
+    fn delay_spike_slows_the_affected_worker() {
+        use crate::admm::engine::{DelaySpike, FaultPlan};
+        let p = problem(807, 2);
+        let mk = |spike| {
+            let mut cfg = virt_cfg(100, 1, 80);
+            cfg.delays = DelayModel::Fixed { per_worker_ms: vec![1.0, 1.0] };
+            if spike {
+                cfg.fault_plan = Some(FaultPlan {
+                    outages: Vec::new(),
+                    spikes: vec![DelaySpike {
+                        worker: 1,
+                        from_s: 0.0,
+                        until_s: f64::INFINITY,
+                        factor: 8.0,
+                    }],
+                });
+            }
+            cfg
+        };
+        let base = StarCluster::new(p.clone()).run(&mk(false));
+        let spiked = StarCluster::new(p).run(&mk(true));
+        let updates = |r: &crate::cluster::ClusterReport, i: usize| r.workers[i].updates;
+        // the spiked worker completes materially fewer rounds than it does
+        // in the fault-free run, while worker 0 keeps its cadence
+        assert!(
+            updates(&spiked, 1) * 4 <= updates(&base, 1),
+            "spike did not slow worker 1: {} vs {}",
+            updates(&spiked, 1),
+            updates(&base, 1)
+        );
+        assert!(updates(&spiked, 0) * 2 >= updates(&base, 0));
     }
 }

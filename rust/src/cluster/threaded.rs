@@ -1,0 +1,237 @@
+//! The real-thread [`WorkerSource`]: one OS thread per worker, unbounded
+//! mpsc channels for the star links, the master (the engine loop) on the
+//! calling thread.
+//!
+//! Since the engine refactor the per-iteration ADMM state machine lives in
+//! [`crate::admm::engine::run_engine`]; this module only spawns/joins the
+//! worker threads, pumps the channels at the gather gate, and moves arrived
+//! `(x̂_i, λ̂_i)` messages into the master state. Injected delays are real
+//! sleeps, so arrival order is genuinely nondeterministic — that is the
+//! point of the mode — *unless* a lockstep trace
+//! ([`super::ClusterConfig::lockstep_trace`]) prescribes each iteration's
+//! arrival set, in which case the master waits for exactly the prescribed
+//! workers and the run becomes deterministic and bit-comparable with the
+//! other two sources (the fault-scenario equivalence tests rely on this).
+//!
+//! Fault injection: [`FaultPlan`](crate::admm::engine::FaultPlan) outages
+//! are enforced at the master's gate — a down worker's message still lands
+//! in `pending` but is held, uncounted and unabsorbed, until rejoin, so the
+//! worker re-enters with the stale iterate it computed against its
+//! pre-outage broadcast. Delay spikes stretch the worker threads' sleeps
+//! (see `worker_loop` in [`super::worker`]).
+
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::admm::engine::{Gate, MasterView, UpdatePolicy, WorkerSource};
+use crate::admm::AdmmState;
+use crate::problems::ConsensusProblem;
+use crate::util::timer::{Clock, Stopwatch};
+
+use super::messages::{MasterMsg, WorkerMsg};
+use super::timeline::WorkerStats;
+use super::worker::{self, WorkerSolveFn};
+use super::ClusterConfig;
+
+pub(crate) struct ThreadedSource {
+    n_workers: usize,
+    to_workers: Vec<Sender<MasterMsg>>,
+    from_workers: Receiver<WorkerMsg>,
+    handles: Vec<JoinHandle<WorkerStats>>,
+    /// One held message per worker (arrived but not yet absorbed).
+    pending: Vec<Option<WorkerMsg>>,
+    /// Prescribed arrival sets (lockstep replay) and the replay cursor.
+    lockstep: Option<(Vec<Vec<usize>>, usize)>,
+    wall: Stopwatch,
+    master_wait_s: f64,
+}
+
+impl ThreadedSource {
+    /// Spawn one thread per worker over the star links. Workers start
+    /// computing only after the engine's initial broadcast (`start`).
+    pub(crate) fn spawn(
+        problem: &ConsensusProblem,
+        cfg: &ClusterConfig,
+        solvers: Option<Vec<WorkerSolveFn>>,
+    ) -> Self {
+        let n_workers = problem.num_workers();
+        let rho = cfg.admm.rho;
+        let protocol = cfg.protocol;
+
+        // Star links: one channel to each worker, one shared channel back.
+        let (to_master, from_workers) = std::sync::mpsc::channel::<WorkerMsg>();
+        let mut to_workers = Vec::with_capacity(n_workers);
+        let mut handles = Vec::with_capacity(n_workers);
+        let mut solver_list: Vec<Option<WorkerSolveFn>> = match solvers {
+            Some(v) => {
+                assert_eq!(v.len(), n_workers, "one solver per worker");
+                v.into_iter().map(Some).collect()
+            }
+            None => (0..n_workers).map(|_| None).collect(),
+        };
+
+        for i in 0..n_workers {
+            let (tx, rx) = std::sync::mpsc::channel::<MasterMsg>();
+            to_workers.push(tx);
+            let local = Arc::clone(problem.local(i));
+            let back = to_master.clone();
+            let delay = cfg.delays.sampler(i);
+            let comm = cfg.comm_delays.as_ref().map(|d| d.sampler(i));
+            let solve = solver_list[i].take();
+            let faults = cfg.faults.clone();
+            let spikes = cfg.fault_plan.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("worker-{i}"))
+                .spawn(move || {
+                    worker::worker_loop(
+                        i, local, rho, protocol, rx, back, delay, comm, solve, faults, spikes,
+                    )
+                })
+                .expect("spawn worker");
+            handles.push(handle);
+        }
+        drop(to_master);
+
+        ThreadedSource {
+            n_workers,
+            to_workers,
+            from_workers,
+            handles,
+            pending: (0..n_workers).map(|_| None).collect(),
+            lockstep: cfg.lockstep_trace.as_ref().map(|t| (t.sets.clone(), 0)),
+            wall: Stopwatch::start(),
+            master_wait_s: 0.0,
+        }
+    }
+
+    fn drain_inbox(&mut self) {
+        while let Ok(msg) = self.from_workers.try_recv() {
+            let id = msg.id;
+            self.pending[id] = Some(msg);
+        }
+    }
+
+    /// Shutdown: tell everyone, drain stragglers, join. Returns per-worker
+    /// stats, total wall-clock seconds and the master's blocked-wait time.
+    pub(crate) fn finish(mut self) -> (Vec<WorkerStats>, f64, f64) {
+        for tx in &self.to_workers {
+            let _ = tx.send(MasterMsg::Shutdown);
+        }
+        self.to_workers.clear();
+        while self.from_workers.try_recv().is_ok() {}
+        let mut workers = Vec::with_capacity(self.handles.len());
+        for h in self.handles.drain(..) {
+            workers.push(h.join().expect("worker panicked"));
+        }
+        // Any message sent between drain and join is dropped with the channel.
+        (workers, self.wall.now_s(), self.master_wait_s)
+    }
+}
+
+impl WorkerSource for ThreadedSource {
+    fn n_workers(&self) -> usize {
+        self.n_workers
+    }
+
+    fn start(&mut self, state: &AdmmState, policy: &dyn UpdatePolicy) {
+        // Initial broadcast: everyone starts computing against x⁰ (and λ⁰
+        // for Algorithm 4).
+        let with_dual = policy.broadcasts_dual();
+        for (i, tx) in self.to_workers.iter().enumerate() {
+            let lam = with_dual.then(|| state.lams[i].clone());
+            tx.send(MasterMsg::Go { x0: state.x0.clone(), lam }).expect("worker alive");
+        }
+    }
+
+    fn gather(&mut self, _k: usize, d: &[usize], gate: &Gate<'_>) -> Vec<usize> {
+        let n = self.n_workers;
+        let wait_started = self.wall.now_s();
+        let set = if self.lockstep.is_some() {
+            // Lockstep replay: wait until every live worker of the
+            // prescribed set has a message in, absorb exactly that set and
+            // leave everything else pending. Deterministic by design.
+            let prescribed = {
+                let (sets, pos) = self.lockstep.as_mut().expect("checked above");
+                let s = sets
+                    .get(*pos)
+                    .unwrap_or_else(|| {
+                        panic!("lockstep trace exhausted at iteration {pos}", pos = *pos)
+                    })
+                    .clone();
+                *pos += 1;
+                s
+            };
+            loop {
+                self.drain_inbox();
+                if prescribed.iter().all(|&i| gate.down[i] || self.pending[i].is_some()) {
+                    break;
+                }
+                match self.from_workers.recv() {
+                    Ok(msg) => {
+                        let id = msg.id;
+                        self.pending[id] = Some(msg);
+                    }
+                    Err(_) => break, // all workers gone (shutdown path)
+                }
+            }
+            prescribed.into_iter().filter(|&i| !gate.down[i]).collect()
+        } else {
+            // Gather until the gate is met: |A_k| ≥ min(A, #live) and every
+            // live worker with d_i ≥ τ−1 has arrived. Down workers neither
+            // count nor block — their messages are held in `pending`.
+            let n_live = (0..n).filter(|&i| !gate.down[i]).count();
+            let target = gate.min_arrivals.min(n_live);
+            loop {
+                self.drain_inbox();
+                let arrived = (0..n)
+                    .filter(|&i| self.pending[i].is_some() && !gate.down[i])
+                    .count();
+                let forced_ok = (0..n).all(|i| {
+                    gate.down[i] || d[i] + 1 < gate.tau || self.pending[i].is_some()
+                });
+                if arrived >= target && forced_ok {
+                    break;
+                }
+                // Block for the next message.
+                match self.from_workers.recv() {
+                    Ok(msg) => {
+                        let id = msg.id;
+                        self.pending[id] = Some(msg);
+                    }
+                    Err(_) => break, // all workers gone (shutdown path)
+                }
+            }
+            (0..n).filter(|&i| self.pending[i].is_some() && !gate.down[i]).collect()
+        };
+        self.master_wait_s += self.wall.now_s() - wait_started;
+        set
+    }
+
+    fn absorb(&mut self, set: &[usize], m: &mut MasterView<'_>, _policy: &dyn UpdatePolicy) {
+        // (9)/(10)/(44): absorb arrived variables. Algorithm 2 messages
+        // carry the worker-computed dual; Algorithm 4 messages carry none
+        // (the master owns the duals).
+        for &i in set {
+            let msg = self.pending[i].take().expect("arrived worker has a pending message");
+            m.state.xs[i] = msg.x;
+            if let Some(lam) = msg.lam {
+                m.state.lams[i] = lam;
+            }
+            m.f_cache[i] = m.problem.local(i).eval_with(&m.state.xs[i], &mut m.scratch.ws);
+        }
+    }
+
+    fn broadcast(&mut self, set: &[usize], state: &AdmmState, policy: &dyn UpdatePolicy) {
+        // Step 6: broadcast to arrived workers only.
+        let with_dual = policy.broadcasts_dual();
+        for &i in set {
+            let lam = with_dual.then(|| state.lams[i].clone());
+            // A worker may have exited only after shutdown; sends cannot
+            // fail before that.
+            self.to_workers[i]
+                .send(MasterMsg::Go { x0: state.x0.clone(), lam })
+                .expect("worker alive");
+        }
+    }
+}

@@ -21,6 +21,10 @@ pub type WorkerSolveFn = Box<dyn FnMut(&[f64], &[f64], f64, &mut [f64]) + Send>;
 /// `delay` models the per-round compute time, `comm` (optional) the
 /// outbound link latency; both are realized as real sleeps in this mode
 /// (the virtual-time mode turns the same samplers into scheduler events).
+/// `spikes` stretches both sleeps by the active
+/// [`FaultPlan`](crate::admm::engine::FaultPlan) delay-spike factor, keyed
+/// on wall seconds since this worker started (outages are enforced at the
+/// master's gate, not here — a down worker's message is simply held).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn worker_loop(
     id: usize,
@@ -33,6 +37,7 @@ pub(crate) fn worker_loop(
     mut comm: Option<DelaySampler>,
     mut solve_override: Option<WorkerSolveFn>,
     faults: Option<FaultModel>,
+    spikes: Option<crate::admm::engine::FaultPlan>,
 ) -> WorkerStats {
     let n = local.dim();
     let mut lam = vec![0.0; n]; // λ⁰ = 0 (Algorithm 2 keeps it worker-side)
@@ -65,14 +70,19 @@ pub(crate) fn worker_loop(
         let t0 = Instant::now();
 
         // Injected heterogeneous compute delay (plus communication, when no
-        // separate comm model is configured).
-        let ms = delay.sample_ms();
+        // separate comm model is configured), stretched by any active
+        // delay spike.
+        let spike = |t: &Instant| match &spikes {
+            Some(plan) => plan.delay_factor(id, t.elapsed().as_secs_f64()),
+            None => 1.0,
+        };
+        let ms = delay.sample_ms() * spike(&loop_started);
         if ms > 0.0 {
             std::thread::sleep(Duration::from_secs_f64(ms * 1e-3));
         }
         // Separate outbound-link latency, slept just like the compute part.
         if let Some(c) = comm.as_mut() {
-            let cms = c.sample_ms();
+            let cms = c.sample_ms() * spike(&loop_started);
             if cms > 0.0 {
                 std::thread::sleep(Duration::from_secs_f64(cms * 1e-3));
             }

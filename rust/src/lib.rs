@@ -55,6 +55,10 @@ pub mod util;
 pub mod prelude {
     pub use crate::admm::alt_scheme::{run_alt_scheme, AltSchemeOutput};
     pub use crate::admm::arrivals::{ArrivalModel, ArrivalTrace};
+    pub use crate::admm::engine::{
+        run_engine, run_trace_driven, AltScheme, DelaySpike, EngineOptions, EngineRun, FaultPlan,
+        FullBarrier, Outage, PartialBarrier, StepOrder, TraceSource, UpdatePolicy, WorkerSource,
+    };
     pub use crate::admm::master_pov::{run_master_pov, MasterPovOutput};
     pub use crate::admm::params::{
         gamma_lower_bound, rho_lower_bound_convex, rho_lower_bound_nonconvex,

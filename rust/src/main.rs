@@ -17,7 +17,7 @@ use ad_admm::admm::master_pov::run_master_pov;
 use ad_admm::admm::params::{gamma_lower_bound, rho_lower_bound_convex, rho_lower_bound_nonconvex};
 use ad_admm::admm::sync::run_sync_admm;
 use ad_admm::admm::AdmmConfig;
-use ad_admm::cluster::{ClusterConfig, DelayModel, ExecutionMode, Protocol, StarCluster};
+use ad_admm::cluster::{ClusterConfig, DelayModel, ExecutionMode, FaultPlan, Protocol, StarCluster};
 use ad_admm::data::{LassoInstance, LogisticInstance, SparsePcaInstance};
 use ad_admm::rng::Pcg64;
 use ad_admm::util::cli::ArgParser;
@@ -42,6 +42,8 @@ fn print_help() {
                  --gamma G --min-arrivals A --iters K --theta TH --seed S [--sync] [--alt]\n\
          cluster --workers N --m M --n N --rho R --tau T --iters K --fast-ms F --slow-ms S\n\
                  [--virtual]  (deterministic virtual-time simulation, scales to 1000s of workers)\n\
+                 [--fault-worker W --fault-from K --fault-until K]  (one dropout/rejoin outage)\n\
+                 [--fault-outages C --fault-seed S]  (seeded deterministic outage schedule)\n\
          params  --lipschitz L --tau T --workers N --s S --rho R\n\
          artifacts"
     );
@@ -143,7 +145,36 @@ fn cmd_cluster(args: &ArgParser) {
         ExecutionMode::RealThreads
     };
 
-    // Sync baseline: τ=1, A=N.
+    // Deterministic fault scenario (dropout/rejoin), if requested: one
+    // explicit outage and/or a seeded schedule over the whole run.
+    let mut fault_plan = FaultPlan::default();
+    let fault_worker: i64 = args.get_parse_or("fault-worker", -1);
+    if fault_worker >= 0 {
+        let from: usize = args.get_parse_or("fault-from", cfg.max_iters / 4);
+        let until: usize = args.get_parse_or("fault-until", cfg.max_iters / 2);
+        fault_plan.outages.push(ad_admm::cluster::Outage {
+            worker: fault_worker as usize,
+            from_iter: from,
+            until_iter: until,
+        });
+    }
+    let fault_outages: usize = args.get_parse_or("fault-outages", 0);
+    if fault_outages > 0 {
+        let fseed: u64 = args.get_parse_or("fault-seed", seed);
+        let max_len = (cfg.max_iters / 5).max(2);
+        let seeded = FaultPlan::seeded_outages(
+            n_workers,
+            cfg.max_iters,
+            fault_outages,
+            2,
+            max_len,
+            fseed,
+        );
+        fault_plan.outages.extend(seeded.outages);
+    }
+    let fault_plan = (!fault_plan.is_empty()).then_some(fault_plan);
+
+    // Sync baseline: τ=1, A=N (fault-free — the comparison anchor).
     let sync_cfg = ClusterConfig {
         admm: AdmmConfig { tau: 1, min_arrivals: n_workers, ..cfg.clone() },
         protocol: Protocol::AdAdmm,
@@ -152,8 +183,15 @@ fn cmd_cluster(args: &ArgParser) {
         ..Default::default()
     };
     let sync = StarCluster::new(problem.clone()).run(&sync_cfg);
-    // Async per the flags.
-    let async_cfg = ClusterConfig { admm: cfg, delays, mode, ..Default::default() };
+    // Async per the flags, with any fault plan applied.
+    let tau = cfg.tau;
+    let async_cfg = ClusterConfig {
+        admm: cfg,
+        delays,
+        mode,
+        fault_plan: fault_plan.clone(),
+        ..Default::default()
+    };
     let asyn = StarCluster::new(problem.clone()).run(&async_cfg);
 
     let mode_label = match mode {
@@ -175,6 +213,19 @@ fn cmd_cluster(args: &ArgParser) {
         "async speedup (iters/s): {:.2}x",
         asyn.iters_per_sec() / sync.iters_per_sec().max(1e-12)
     );
+    if let Some(plan) = &async_cfg.fault_plan {
+        println!("fault plan: {} outage(s)", plan.outages.len());
+        for o in &plan.outages {
+            println!(
+                "  worker {:>4} down for iters [{}, {})",
+                o.worker, o.from_iter, o.until_iter
+            );
+        }
+        println!(
+            "bounded-delay (Assumption 1, tau={tau}) on the faulted trace: {}",
+            asyn.trace.satisfies_bounded_delay(n_workers, tau)
+        );
+    }
 }
 
 fn cmd_params(args: &ArgParser) {

@@ -171,6 +171,47 @@ fn cluster_final_state_is_kkt_quality() {
     }
 }
 
+/// Lockstep replay: prescribing a virtual-time run's realized trace to the
+/// threaded cluster makes the otherwise nondeterministic real-thread mode
+/// reproduce that run bit-for-bit — same sets, same iterates.
+#[test]
+fn threaded_lockstep_replay_matches_virtual_run_bitwise() {
+    use ad_admm::cluster::ExecutionMode;
+    let n_workers = 4;
+    let inst = lasso(407, n_workers);
+    let problem = inst.problem();
+    let admm = AdmmConfig {
+        rho: 50.0,
+        tau: 3,
+        min_arrivals: 1,
+        max_iters: 60,
+        ..Default::default()
+    };
+    let vcfg = ClusterConfig {
+        admm: admm.clone(),
+        delays: DelayModel::Fixed { per_worker_ms: vec![0.5, 1.0, 2.0, 4.0] },
+        mode: ExecutionMode::VirtualTime,
+        ..Default::default()
+    };
+    let virt = StarCluster::new(problem.clone()).run(&vcfg);
+
+    let tcfg = ClusterConfig {
+        admm,
+        delays: DelayModel::None,
+        lockstep_trace: Some(virt.trace.clone()),
+        ..Default::default()
+    };
+    let thr = StarCluster::new(problem).run(&tcfg);
+    assert_eq!(thr.trace, virt.trace, "lockstep did not realize the prescribed sets");
+    assert_eq!(thr.state.x0, virt.state.x0);
+    assert_eq!(thr.state.xs, virt.state.xs);
+    assert_eq!(thr.state.lams, virt.state.lams);
+    for (a, b) in thr.history.iter().zip(&virt.history) {
+        assert_eq!(a.aug_lagrangian.to_bits(), b.aug_lagrangian.to_bits(), "k={}", a.k);
+        assert_eq!(a.arrivals, b.arrivals, "k={}", a.k);
+    }
+}
+
 #[test]
 fn fault_injection_still_converges_and_counts_retransmissions() {
     use ad_admm::cluster::FaultModel;

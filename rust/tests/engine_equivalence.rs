@@ -1,0 +1,692 @@
+//! The engine-refactor equivalence suite.
+//!
+//! PR 3 collapsed the five hand-rolled iteration loops (`admm/sync.rs`,
+//! `admm/master_pov.rs`, `admm/alt_scheme.rs`, the threaded cluster master
+//! and the virtual-time scheduler) into one policy-driven engine
+//! (`admm::engine`). The acceptance bar for that refactor is
+//! **bit-identity**: the engine-backed wrappers must reproduce the
+//! pre-refactor drivers' `IterRecord` histories exactly — same `f64` bits,
+//! same early-stop iteration, same realized arrival sets.
+//!
+//! The golden reference is the pre-refactor code itself: the [`legacy`]
+//! module below preserves the three serial loops **verbatim** as they
+//! stood before deletion (adapted only to use public crate APIs instead of
+//! `pub(crate)` helpers — the replicated helpers perform the identical
+//! operation sequence, so the floating-point streams match bit-for-bit).
+//! Unlike static fixtures this reference replays on any seed, which is
+//! what lets the property test sweep random configurations.
+//!
+//! Also here: the fault-scenario acceptance test — a dropout-and-rejoin
+//! under `PartialBarrier` running deterministically in all three worker
+//! sources (trace-driven, threaded-lockstep, virtual-time) with identical
+//! histories.
+
+use ad_admm::admm::alt_scheme::run_alt_scheme;
+use ad_admm::admm::arrivals::{ArrivalModel, ArrivalTrace};
+use ad_admm::admm::engine::{run_trace_driven, EngineOptions, FaultPlan, PartialBarrier};
+use ad_admm::admm::master_pov::{run_master_pov, NativeSolver, SubproblemSolver};
+use ad_admm::admm::stopping::StoppingRule;
+use ad_admm::admm::sync::run_sync_admm;
+use ad_admm::admm::{AdmmConfig, AdmmState, IterRecord, StopReason};
+use ad_admm::cluster::{ClusterConfig, DelayModel, ExecutionMode, Protocol, StarCluster};
+use ad_admm::data::LassoInstance;
+use ad_admm::problems::ConsensusProblem;
+use ad_admm::rng::Pcg64;
+use ad_admm::testkit::Runner;
+
+/// The pre-refactor serial drivers, preserved verbatim as golden
+/// references (captured from `admm/{sync,master_pov,alt_scheme}.rs` at
+/// commit `5d9d809`, immediately before the engine refactor deleted their
+/// loops).
+mod legacy {
+    use super::*;
+    use ad_admm::admm::{
+        augmented_lagrangian_cached, master_x0_update, stopping, MasterScratch,
+    };
+    use ad_admm::linalg::vecops;
+
+    /// Byte-for-byte the operation sequence of the crate-internal
+    /// `admm::iter_record` (which is `pub(crate)`): cached augmented
+    /// Lagrangian, `‖x₀⁺−x₀‖`, gated objective, consensus residual.
+    fn iter_record(
+        problem: &ConsensusProblem,
+        state: &AdmmState,
+        cfg: &AdmmConfig,
+        k: usize,
+        arrivals: usize,
+        f_cache: &[f64],
+        scratch: &mut MasterScratch,
+        prev_x0: &[f64],
+    ) -> IterRecord {
+        let aug = augmented_lagrangian_cached(problem, state, cfg.rho, f_cache, &mut scratch.al);
+        let x0_change = vecops::dist2(&state.x0, prev_x0);
+        let objective = if cfg.objective_every > 0 && k % cfg.objective_every == 0 {
+            problem.objective_with(&state.x0, &mut scratch.ws)
+        } else {
+            f64::NAN
+        };
+        IterRecord {
+            k,
+            objective,
+            aug_lagrangian: aug,
+            consensus: state.consensus_residual(),
+            x0_change,
+            arrivals,
+        }
+    }
+
+    /// Replica of the crate-internal `admm::divergence_or_tol_stop`.
+    fn divergence_or_tol_stop(
+        cfg: &AdmmConfig,
+        state: &AdmmState,
+        rec: &IterRecord,
+        k: usize,
+    ) -> Option<StopReason> {
+        if !state.is_finite() || rec.aug_lagrangian.abs() > cfg.divergence_threshold {
+            return Some(StopReason::Diverged);
+        }
+        if cfg.x0_tol > 0.0 && rec.x0_change <= cfg.x0_tol && k > 0 {
+            return Some(StopReason::X0Tolerance);
+        }
+        None
+    }
+
+    pub struct LegacyOutput {
+        pub state: AdmmState,
+        pub history: Vec<IterRecord>,
+        pub trace: ArrivalTrace,
+        pub stop: StopReason,
+    }
+
+    /// Pre-refactor `run_sync_admm_with_solver`, verbatim.
+    pub fn run_sync(problem: &ConsensusProblem, cfg: &AdmmConfig) -> LegacyOutput {
+        let mut solver = NativeSolver::new(problem);
+        let solver: &mut dyn SubproblemSolver = &mut solver;
+        let n_workers = problem.num_workers();
+        let n = problem.dim();
+        let mut state = cfg.initial_state(n_workers, n);
+        let mut history = Vec::with_capacity(cfg.max_iters);
+        let mut prev_x0 = state.x0.clone();
+        let mut x0 = state.x0.clone();
+        let mut stop = StopReason::MaxIters;
+        let mut scratch = MasterScratch::new();
+        let mut f_cache = vec![0.0; n_workers];
+
+        for k in 0..cfg.max_iters {
+            // (6): master x₀ update from current (xᵏ, λᵏ).
+            prev_x0.copy_from_slice(&state.x0);
+            master_x0_update(problem, &mut state, cfg.rho, cfg.gamma, &mut scratch);
+
+            // (7)+(8): every worker, against the fresh x₀^{k+1}.
+            x0.copy_from_slice(&state.x0);
+            for i in 0..n_workers {
+                solver.solve(i, &state.lams[i], &x0, cfg.rho, &mut state.xs[i]);
+                for j in 0..n {
+                    state.lams[i][j] += cfg.rho * (state.xs[i][j] - x0[j]);
+                }
+                f_cache[i] = problem.local(i).eval_with(&state.xs[i], &mut scratch.ws);
+            }
+
+            let rec =
+                iter_record(problem, &state, cfg, k, n_workers, &f_cache, &mut scratch, &prev_x0);
+            let early = divergence_or_tol_stop(cfg, &state, &rec, k);
+            history.push(rec);
+            if let Some(reason) = early {
+                stop = reason;
+                break;
+            }
+            if let Some(rule) = &cfg.stopping {
+                let r = stopping::residuals(&state, &prev_x0, cfg.rho);
+                if k > 0 && rule.satisfied(&r, n, n_workers) {
+                    stop = StopReason::Residuals;
+                    break;
+                }
+            }
+        }
+        LegacyOutput { state, history, trace: ArrivalTrace::default(), stop }
+    }
+
+    /// Pre-refactor `run_master_pov_with_solver`, verbatim.
+    pub fn run_master_pov(
+        problem: &ConsensusProblem,
+        cfg: &AdmmConfig,
+        arrivals: &ArrivalModel,
+    ) -> LegacyOutput {
+        let mut solver = NativeSolver::new(problem);
+        let solver: &mut dyn SubproblemSolver = &mut solver;
+        cfg.validate(problem.num_workers()).expect("invalid AdmmConfig");
+        let n_workers = problem.num_workers();
+        let n = problem.dim();
+
+        let mut state = cfg.initial_state(n_workers, n);
+        let mut x0_snap: Vec<Vec<f64>> = vec![state.x0.clone(); n_workers];
+        let mut d = vec![0usize; n_workers];
+        let mut sampler = arrivals.sampler(n_workers);
+
+        let mut history = Vec::with_capacity(cfg.max_iters);
+        let mut trace = ArrivalTrace::default();
+        let mut prev_x0 = state.x0.clone();
+        let mut stop = StopReason::MaxIters;
+        let mut scratch = MasterScratch::new();
+        let mut f_cache: Vec<f64> = Vec::with_capacity(n_workers);
+        for i in 0..n_workers {
+            f_cache.push(problem.local(i).eval_with(&state.xs[i], &mut scratch.ws));
+        }
+
+        for k in 0..cfg.max_iters {
+            let set = sampler.next_set(&d, cfg.tau, cfg.min_arrivals);
+
+            let mut arrived = vec![false; n_workers];
+            for &i in &set {
+                arrived[i] = true;
+                let snap = &x0_snap[i];
+                solver.solve(i, &state.lams[i], snap, cfg.rho, &mut state.xs[i]);
+                for j in 0..n {
+                    state.lams[i][j] += cfg.rho * (state.xs[i][j] - snap[j]);
+                }
+                f_cache[i] = problem.local(i).eval_with(&state.xs[i], &mut scratch.ws);
+                d[i] = 0;
+            }
+            for i in 0..n_workers {
+                if !arrived[i] {
+                    d[i] += 1;
+                }
+            }
+
+            prev_x0.copy_from_slice(&state.x0);
+            master_x0_update(problem, &mut state, cfg.rho, cfg.gamma, &mut scratch);
+
+            for &i in &set {
+                x0_snap[i].copy_from_slice(&state.x0);
+            }
+
+            let rec =
+                iter_record(problem, &state, cfg, k, set.len(), &f_cache, &mut scratch, &prev_x0);
+            let early = divergence_or_tol_stop(cfg, &state, &rec, k);
+            history.push(rec);
+            trace.sets.push(set);
+
+            if let Some(reason) = early {
+                stop = reason;
+                break;
+            }
+            if let Some(rule) = &cfg.stopping {
+                let r = stopping::residuals(&state, &prev_x0, cfg.rho);
+                if k > 0 && rule.satisfied(&r, n, n_workers) {
+                    stop = StopReason::Residuals;
+                    break;
+                }
+            }
+        }
+        LegacyOutput { state, history, trace, stop }
+    }
+
+    /// Pre-refactor `run_alt_scheme_with_solver`, verbatim.
+    pub fn run_alt_scheme(
+        problem: &ConsensusProblem,
+        cfg: &AdmmConfig,
+        arrivals: &ArrivalModel,
+    ) -> LegacyOutput {
+        let mut solver = NativeSolver::new(problem);
+        let solver: &mut dyn SubproblemSolver = &mut solver;
+        cfg.validate(problem.num_workers()).expect("invalid AdmmConfig");
+        let n_workers = problem.num_workers();
+        let n = problem.dim();
+
+        let mut state = cfg.initial_state(n_workers, n);
+        let mut x0_snap: Vec<Vec<f64>> = vec![state.x0.clone(); n_workers];
+        let mut lam_snap: Vec<Vec<f64>> = state.lams.clone();
+        let mut d = vec![0usize; n_workers];
+        let mut sampler = arrivals.sampler(n_workers);
+
+        let mut history = Vec::with_capacity(cfg.max_iters);
+        let mut trace = ArrivalTrace::default();
+        let mut prev_x0 = state.x0.clone();
+        let mut stop = StopReason::MaxIters;
+        let mut scratch = MasterScratch::new();
+        let mut f_cache: Vec<f64> = Vec::with_capacity(n_workers);
+        for i in 0..n_workers {
+            f_cache.push(problem.local(i).eval_with(&state.xs[i], &mut scratch.ws));
+        }
+
+        for k in 0..cfg.max_iters {
+            let set = sampler.next_set(&d, cfg.tau, cfg.min_arrivals);
+
+            let mut arrived = vec![false; n_workers];
+            for &i in &set {
+                arrived[i] = true;
+                solver.solve(i, &lam_snap[i], &x0_snap[i], cfg.rho, &mut state.xs[i]);
+                f_cache[i] = problem.local(i).eval_with(&state.xs[i], &mut scratch.ws);
+                d[i] = 0;
+            }
+            for i in 0..n_workers {
+                if !arrived[i] {
+                    d[i] += 1;
+                }
+            }
+
+            prev_x0.copy_from_slice(&state.x0);
+            master_x0_update(problem, &mut state, cfg.rho, cfg.gamma, &mut scratch);
+
+            for i in 0..n_workers {
+                for j in 0..n {
+                    state.lams[i][j] += cfg.rho * (state.xs[i][j] - state.x0[j]);
+                }
+            }
+
+            for &i in &set {
+                x0_snap[i].copy_from_slice(&state.x0);
+                lam_snap[i].copy_from_slice(&state.lams[i]);
+            }
+
+            let rec =
+                iter_record(problem, &state, cfg, k, set.len(), &f_cache, &mut scratch, &prev_x0);
+            let early = divergence_or_tol_stop(cfg, &state, &rec, k);
+            history.push(rec);
+            trace.sets.push(set);
+
+            if let Some(reason) = early {
+                stop = reason;
+                break;
+            }
+        }
+        LegacyOutput { state, history, trace, stop }
+    }
+}
+
+/// Field-by-field bit comparison (f64 via `to_bits`, so identical NaNs in
+/// skipped-objective records also compare equal).
+fn assert_history_bit_equal(a: &[IterRecord], b: &[IterRecord]) {
+    assert_eq!(a.len(), b.len(), "history lengths differ");
+    for (ra, rb) in a.iter().zip(b) {
+        assert_eq!(ra.k, rb.k);
+        assert_eq!(ra.arrivals, rb.arrivals, "arrival counts differ at k={}", ra.k);
+        assert_eq!(
+            ra.objective.to_bits(),
+            rb.objective.to_bits(),
+            "objective differs at k={}",
+            ra.k
+        );
+        assert_eq!(
+            ra.aug_lagrangian.to_bits(),
+            rb.aug_lagrangian.to_bits(),
+            "aug_lagrangian differs at k={}",
+            ra.k
+        );
+        assert_eq!(
+            ra.consensus.to_bits(),
+            rb.consensus.to_bits(),
+            "consensus differs at k={}",
+            ra.k
+        );
+        assert_eq!(
+            ra.x0_change.to_bits(),
+            rb.x0_change.to_bits(),
+            "x0_change differs at k={}",
+            ra.k
+        );
+    }
+}
+
+fn assert_state_bit_equal(a: &AdmmState, b: &AdmmState) {
+    assert_eq!(a.x0, b.x0, "x0 differs");
+    assert_eq!(a.xs, b.xs, "worker primals differ");
+    assert_eq!(a.lams, b.lams, "duals differ");
+}
+
+fn lasso(seed: u64, n_workers: usize, m: usize, n: usize) -> ConsensusProblem {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    LassoInstance::synthetic(&mut rng, n_workers, m, n, 0.2, 0.1).problem()
+}
+
+#[test]
+fn sync_wrapper_bit_equal_to_legacy() {
+    for (seed, cfg) in [
+        (601, AdmmConfig { rho: 40.0, max_iters: 120, ..Default::default() }),
+        (602, AdmmConfig { rho: 40.0, gamma: 5.0, max_iters: 80, ..Default::default() }),
+        (
+            603,
+            AdmmConfig {
+                rho: 60.0,
+                max_iters: 200,
+                x0_tol: 1e-8,
+                objective_every: 3,
+                ..Default::default()
+            },
+        ),
+        (
+            604,
+            AdmmConfig {
+                rho: 40.0,
+                max_iters: 400,
+                stopping: Some(StoppingRule::default()),
+                ..Default::default()
+            },
+        ),
+    ] {
+        let p = lasso(seed, 4, 25, 12);
+        let old = legacy::run_sync(&p, &cfg);
+        let new = run_sync_admm(&p, &cfg);
+        assert_eq!(old.stop, new.stop, "seed={seed}");
+        assert_state_bit_equal(&old.state, &new.state);
+        assert_history_bit_equal(&old.history, &new.history);
+    }
+}
+
+#[test]
+fn master_pov_wrapper_bit_equal_to_legacy() {
+    let cases: Vec<(u64, AdmmConfig, ArrivalModel)> = vec![
+        (
+            611,
+            AdmmConfig { rho: 50.0, tau: 1, max_iters: 150, ..Default::default() },
+            ArrivalModel::Full,
+        ),
+        (
+            612,
+            AdmmConfig { rho: 50.0, tau: 5, max_iters: 250, ..Default::default() },
+            ArrivalModel::probabilistic(vec![0.3, 0.9, 0.3, 0.9], 7),
+        ),
+        (
+            613,
+            AdmmConfig {
+                rho: 30.0,
+                gamma: 2.0,
+                tau: 4,
+                min_arrivals: 2,
+                max_iters: 180,
+                objective_every: 2,
+                ..Default::default()
+            },
+            ArrivalModel::fig3_profile(4, 9),
+        ),
+        (
+            614,
+            AdmmConfig {
+                rho: 40.0,
+                tau: 3,
+                max_iters: 500,
+                stopping: Some(StoppingRule { abs_tol: 1e-5, rel_tol: 1e-3 }),
+                ..Default::default()
+            },
+            ArrivalModel::fig4_profile(4, 11),
+        ),
+    ];
+    for (seed, cfg, arr) in cases {
+        let p = lasso(seed, 4, 25, 12);
+        let old = legacy::run_master_pov(&p, &cfg, &arr);
+        let new = run_master_pov(&p, &cfg, &arr);
+        assert_eq!(old.stop, new.stop, "seed={seed}");
+        assert_eq!(old.trace, new.trace, "realized traces differ (seed={seed})");
+        assert_state_bit_equal(&old.state, &new.state);
+        assert_history_bit_equal(&old.history, &new.history);
+    }
+}
+
+#[test]
+fn alt_scheme_wrapper_bit_equal_to_legacy_including_divergence() {
+    // Convergent Theorem-2 regime...
+    let p = lasso(621, 4, 60, 8);
+    let cfg = AdmmConfig { rho: 1.0, tau: 3, max_iters: 300, ..Default::default() };
+    let arr = ArrivalModel::probabilistic(vec![0.3, 0.9, 0.3, 0.9], 19);
+    let old = legacy::run_alt_scheme(&p, &cfg, &arr);
+    let new = run_alt_scheme(&p, &cfg, &arr);
+    assert_eq!(old.stop, new.stop);
+    assert_eq!(old.trace, new.trace);
+    assert_state_bit_equal(&old.state, &new.state);
+    assert_history_bit_equal(&old.history, &new.history);
+
+    // ...and the Fig. 4(b) divergence: both must blow up at the SAME
+    // iteration with the same Diverged stop.
+    let p = lasso(622, 8, 30, 10);
+    let cfg = AdmmConfig { rho: 500.0, tau: 5, max_iters: 3000, ..Default::default() };
+    let arr = ArrivalModel::probabilistic(vec![0.1, 0.1, 0.1, 0.1, 0.8, 0.8, 0.8, 0.8], 17);
+    let old = legacy::run_alt_scheme(&p, &cfg, &arr);
+    let new = run_alt_scheme(&p, &cfg, &arr);
+    assert_eq!(old.stop, new.stop);
+    assert_eq!(old.history.len(), new.history.len(), "diverged at different iterations");
+    assert_history_bit_equal(&old.history, &new.history);
+}
+
+/// Pooled virtual-time runs replay bit-identically through the LEGACY
+/// serial loops — the cluster side of the golden equivalence.
+#[test]
+fn virtual_time_pooled_replays_through_legacy_drivers() {
+    let n_workers = 5;
+    let p = lasso(631, n_workers, 25, 12);
+    for (protocol, rho) in [(Protocol::AdAdmm, 50.0), (Protocol::AltScheme, 4.0)] {
+        let cfg = ClusterConfig {
+            admm: AdmmConfig {
+                rho,
+                tau: 4,
+                min_arrivals: 2,
+                max_iters: 150,
+                ..Default::default()
+            },
+            protocol,
+            delays: DelayModel::linear_spread(n_workers, 0.5, 6.0, 0.4, 13),
+            mode: ExecutionMode::VirtualTime,
+            pool_threads: 3,
+            ..Default::default()
+        };
+        let report = StarCluster::new(p.clone()).run(&cfg);
+        let old = match protocol {
+            Protocol::AdAdmm => {
+                legacy::run_master_pov(&p, &cfg.admm, &ArrivalModel::Trace(report.trace.clone()))
+            }
+            Protocol::AltScheme => {
+                legacy::run_alt_scheme(&p, &cfg.admm, &ArrivalModel::Trace(report.trace.clone()))
+            }
+        };
+        assert_state_bit_equal(&old.state, &report.state);
+        assert_history_bit_equal(&old.history, &report.history);
+    }
+}
+
+/// The threaded cluster (nondeterministic schedule) still replays
+/// bit-identically through the legacy serial loop on its realized trace.
+#[test]
+fn threaded_cluster_replays_through_legacy_driver() {
+    let n_workers = 4;
+    let p = lasso(641, n_workers, 25, 12);
+    let cfg = ClusterConfig {
+        admm: AdmmConfig {
+            rho: 50.0,
+            tau: 4,
+            min_arrivals: 1,
+            max_iters: 100,
+            ..Default::default()
+        },
+        delays: DelayModel::Fixed { per_worker_ms: vec![0.0, 0.5, 1.0, 2.0] },
+        ..Default::default()
+    };
+    let report = StarCluster::new(p.clone()).run(&cfg);
+    let old = legacy::run_master_pov(&p, &cfg.admm, &ArrivalModel::Trace(report.trace.clone()));
+    assert_state_bit_equal(&old.state, &report.state);
+    assert_history_bit_equal(&old.history, &report.history);
+}
+
+/// Property: for ANY random configuration — driver, seed, worker count,
+/// τ, gate A, γ, objective gating, x₀ tolerance, stopping rule, arrival
+/// model — the engine-backed wrapper reproduces the pre-refactor loop
+/// bit-for-bit.
+#[test]
+fn prop_engine_wrappers_bit_equal_to_legacy() {
+    Runner::new(0xE9E9, 14).run("engine == legacy", |g| {
+        let n_workers = g.usize_range(2, 7);
+        let dim = g.usize_range(2, 6);
+        let problem = {
+            let mut rng = Pcg64::seed_from_u64(g.rng().next_u64());
+            LassoInstance::synthetic(&mut rng, n_workers, 3 * dim, dim, 0.2, 0.1).problem()
+        };
+        let cfg = AdmmConfig {
+            rho: g.f64_range(5.0, 80.0),
+            gamma: *g.choose(&[0.0, 0.0, 3.0]),
+            tau: g.usize_range(1, 5),
+            min_arrivals: g.usize_range(1, n_workers),
+            max_iters: 60,
+            x0_tol: *g.choose(&[0.0, 1e-9]),
+            objective_every: g.usize_range(0, 2),
+            stopping: if g.bool() { Some(StoppingRule::default()) } else { None },
+            ..Default::default()
+        };
+        let probs: Vec<f64> = (0..n_workers).map(|_| g.f64_range(0.1, 1.0)).collect();
+        let arr = if g.bool() {
+            ArrivalModel::Full
+        } else {
+            ArrivalModel::Probabilistic { probs, seed: g.rng().next_u64() }
+        };
+        match g.usize_range(0, 2) {
+            0 => {
+                let old = legacy::run_sync(&problem, &cfg);
+                let new = run_sync_admm(&problem, &cfg);
+                assert_eq!(old.stop, new.stop);
+                assert_state_bit_equal(&old.state, &new.state);
+                assert_history_bit_equal(&old.history, &new.history);
+            }
+            1 => {
+                let old = legacy::run_master_pov(&problem, &cfg, &arr);
+                let new = run_master_pov(&problem, &cfg, &arr);
+                assert_eq!(old.stop, new.stop);
+                assert_eq!(old.trace, new.trace);
+                assert_state_bit_equal(&old.state, &new.state);
+                assert_history_bit_equal(&old.history, &new.history);
+            }
+            _ => {
+                let old = legacy::run_alt_scheme(&problem, &cfg, &arr);
+                let new = run_alt_scheme(&problem, &cfg, &arr);
+                assert_eq!(old.stop, new.stop);
+                assert_eq!(old.trace, new.trace);
+                assert_state_bit_equal(&old.state, &new.state);
+                assert_history_bit_equal(&old.history, &new.history);
+            }
+        }
+    });
+}
+
+/// The fault-scenario acceptance criterion: one dropout-and-rejoin
+/// schedule under `PartialBarrier`, run in all THREE worker sources —
+/// virtual-time (deterministic event queue), trace-driven (serial
+/// in-process), and real threads (driven in lockstep on the realized
+/// trace) — produces identical realized traces and bit-identical
+/// `IterRecord` histories.
+#[test]
+fn dropout_rejoin_bit_identical_across_all_three_sources() {
+    let n_workers = 6;
+    let p = lasso(651, n_workers, 25, 12);
+    let admm = AdmmConfig {
+        rho: 40.0,
+        tau: 4,
+        min_arrivals: 2,
+        max_iters: 80,
+        ..Default::default()
+    };
+    // Worker 2 drops out for 20 iterations (5× the τ bound) and rejoins.
+    let plan = FaultPlan::single_outage(2, 20, 40);
+
+    // Source 1: virtual time — deterministic given the seeded delays.
+    let vcfg = ClusterConfig {
+        admm: admm.clone(),
+        delays: DelayModel::Fixed {
+            per_worker_ms: vec![1.0, 1.5, 2.0, 2.5, 3.0, 3.5],
+        },
+        mode: ExecutionMode::VirtualTime,
+        fault_plan: Some(plan.clone()),
+        ..Default::default()
+    };
+    let virt = StarCluster::new(p.clone()).run(&vcfg);
+    assert_eq!(virt.history.len(), 80);
+    for (k, set) in virt.trace.sets.iter().enumerate() {
+        if (20..40).contains(&k) {
+            assert!(!set.contains(&2), "down worker absorbed at k={k}");
+        }
+    }
+    // Rejoin happened, with the held (stale) round absorbed...
+    assert!(virt.trace.sets[40..].iter().any(|s| s.contains(&2)), "worker 2 never rejoined");
+    // ...and the outage deliberately breaks Assumption 1 (20 iters > τ=4)
+    // while the pre-outage prefix still satisfies it.
+    assert!(!virt.trace.satisfies_bounded_delay(n_workers, admm.tau));
+    let prefix = ArrivalTrace { sets: virt.trace.sets[..20].to_vec() };
+    assert!(prefix.satisfies_bounded_delay(n_workers, admm.tau));
+
+    // Source 2: trace-driven serial engine, same plan, replaying the
+    // realized trace.
+    let opts = EngineOptions { residual_stopping: true, fault_plan: Some(&plan) };
+    let tr = run_trace_driven(
+        &p,
+        &admm,
+        &ArrivalModel::Trace(virt.trace.clone()),
+        &PartialBarrier { tau: admm.tau },
+        &opts,
+    );
+    assert_eq!(tr.trace, virt.trace, "trace-driven realized a different trace");
+    assert_state_bit_equal(&tr.state, &virt.state);
+    assert_history_bit_equal(&tr.history, &virt.history);
+
+    // The replay contract survives faults: a replayed trace is
+    // AUTHORITATIVE (no τ-forcing on top), so plain `run_master_pov` —
+    // with no fault plan at all — reproduces the faulted run bit-for-bit
+    // from its realized trace alone.
+    let plain = run_master_pov(&p, &admm, &ArrivalModel::Trace(virt.trace.clone()));
+    assert_state_bit_equal(&plain.state, &virt.state);
+    assert_history_bit_equal(&plain.history, &virt.history);
+
+    // Source 3: real OS threads in lockstep on the same trace, same plan.
+    let tcfg = ClusterConfig {
+        admm: admm.clone(),
+        delays: DelayModel::None,
+        fault_plan: Some(plan.clone()),
+        lockstep_trace: Some(virt.trace.clone()),
+        ..Default::default()
+    };
+    let thr = StarCluster::new(p.clone()).run(&tcfg);
+    assert_eq!(thr.trace, virt.trace, "threaded lockstep realized a different trace");
+    assert_state_bit_equal(&thr.state, &virt.state);
+    assert_history_bit_equal(&thr.history, &virt.history);
+
+    // And the whole scenario is reproducible: same seed/config, same run.
+    let again = StarCluster::new(p).run(&vcfg);
+    assert_eq!(again.trace, virt.trace);
+    assert_history_bit_equal(&again.history, &virt.history);
+}
+
+/// A seeded multi-outage plan is deterministic end-to-end in virtual time
+/// and replays bit-identically through the trace-driven source — the
+/// "fault scenarios open across every mode" claim at a gnarlier setting.
+#[test]
+fn seeded_outage_schedule_replays_across_sources() {
+    let n_workers = 8;
+    let p = lasso(652, n_workers, 20, 10);
+    let admm = AdmmConfig {
+        rho: 30.0,
+        tau: 5,
+        min_arrivals: 1,
+        max_iters: 120,
+        ..Default::default()
+    };
+    let plan = FaultPlan::seeded_outages(n_workers, 120, 5, 4, 25, 0xFA);
+    let vcfg = ClusterConfig {
+        admm: admm.clone(),
+        delays: DelayModel::linear_spread(n_workers, 0.5, 5.0, 0.3, 29),
+        mode: ExecutionMode::VirtualTime,
+        fault_plan: Some(plan.clone()),
+        ..Default::default()
+    };
+    let virt = StarCluster::new(p.clone()).run(&vcfg);
+    // No down worker is ever absorbed while down.
+    for (k, set) in virt.trace.sets.iter().enumerate() {
+        for &i in set {
+            assert!(!plan.down_at(i, k), "worker {i} absorbed while down at k={k}");
+        }
+    }
+    let opts = EngineOptions { residual_stopping: true, fault_plan: Some(&plan) };
+    let tr = run_trace_driven(
+        &p,
+        &admm,
+        &ArrivalModel::Trace(virt.trace.clone()),
+        &PartialBarrier { tau: admm.tau },
+        &opts,
+    );
+    assert_eq!(tr.trace, virt.trace);
+    assert_state_bit_equal(&tr.state, &virt.state);
+    assert_history_bit_equal(&tr.history, &virt.history);
+}

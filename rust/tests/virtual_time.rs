@@ -273,6 +273,7 @@ fn prop_pooled_virtual_run_bit_identical_to_serial() {
             },
             mode: ExecutionMode::VirtualTime,
             pool_threads: 1,
+            ..Default::default()
         };
         let serial = StarCluster::new(problem.clone()).run(&cfg);
         let pooled_cfg = ClusterConfig { pool_threads: pool, ..cfg };
