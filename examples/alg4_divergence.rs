@@ -5,23 +5,26 @@
 //! (Theorem 2) that then crawls.
 //!
 //!     cargo run --release --example alg4_divergence
+//!
+//! Set `AD_ADMM_BENCH_QUICK=1` for the reduced-size smoke pass CI runs.
 
 use ad_admm::prelude::*;
 
 fn main() {
+    let quick = ad_admm::bench::quick_mode();
+    let (iters, fista_iters) = if quick { (400, 3_000) } else { (3000, 50_000) };
     let (n_workers, m, n) = (16, 50, 25);
     let mut rng = Pcg64::seed_from_u64(11);
     let inst = LassoInstance::synthetic(&mut rng, n_workers, m, n, 0.1, 0.1);
     let problem = inst.problem();
-    let (_, f_star) = fista_lasso(&inst, 50_000);
+    let (_, f_star) = fista_lasso(&inst, fista_iters);
     println!("LASSO N={n_workers}, m={m}, n={n}; F* = {f_star:.6e}\n");
 
     let arrivals = |seed| ArrivalModel::fig4_profile(n_workers, seed);
-    let iters = 3000;
 
-    // Both algorithms now run through the SAME engine — the only thing
-    // that changes per row is the UpdatePolicy (and ρ/τ), which is the
-    // paper's whole point: a one-line policy swap flips convergence.
+    // Both algorithms run through the SAME Session builder — the only
+    // thing that changes per row is the UpdatePolicy (and ρ/τ), which is
+    // the paper's whole point: a one-line policy swap flips convergence.
     println!(
         "{:<44} {:>8} {:>8} {:>12} {:>10}",
         "UpdatePolicy", "rho", "tau", "final acc", "stop"
@@ -42,13 +45,25 @@ fn main() {
         } else {
             Box::new(AltScheme { tau })
         };
+        let mut history = BufferingObserver::new();
         // The historical Algorithm-4 driver never evaluated the residual
         // stopping rule; keep that behaviour for the Alt rows.
-        let opts = EngineOptions { residual_stopping: alg2, fault_plan: None };
-        let out = run_trace_driven(&problem, &cfg, &arrivals(tau as u64), policy.as_ref(), &opts);
-        let acc =
-            ad_admm::metrics::accuracy_series(&out.history, f_star).last().copied().unwrap();
-        let stop = format!("{:?}", out.stop);
+        let mut session = Session::builder()
+            .problem(&problem)
+            .config(cfg)
+            .policy(policy.as_ref())
+            .arrivals(&arrivals(tau as u64))
+            .residual_stopping(alg2)
+            .observer(&mut history)
+            .build()
+            .expect("valid session config");
+        let stop = session.run_to_completion().expect("session run");
+        drop(session);
+        let acc = ad_admm::metrics::accuracy_series(history.records(), f_star)
+            .last()
+            .copied()
+            .unwrap();
+        let stop = format!("{stop:?}");
         println!("{:<44} {rho:>8} {tau:>8} {acc:>12.3e} {stop:>10}", policy.name());
     }
 

@@ -20,13 +20,15 @@ use ad_admm::runtime::{artifacts_available, artifacts_dir, PjrtLassoSolver};
 use ad_admm::util::cli::ArgParser;
 
 fn main() {
+    let quick = ad_admm::bench::quick_mode();
     let args = ArgParser::from_env(&[]);
-    let n_workers: usize = args.get_parse_or("workers", 16);
-    let m: usize = args.get_parse_or("m", 200);
-    let n: usize = args.get_parse_or("n", 1000);
+    let n_workers: usize = args.get_parse_or("workers", if quick { 4 } else { 16 });
+    let m: usize = args.get_parse_or("m", if quick { 40 } else { 200 });
+    let n: usize = args.get_parse_or("n", if quick { 60 } else { 1000 });
     let tau: usize = args.get_parse_or("tau", 10);
-    let iters: usize = args.get_parse_or("iters", 300);
+    let iters: usize = args.get_parse_or("iters", if quick { 40 } else { 300 });
     let seed: u64 = args.get_parse_or("seed", 1);
+    let fista_iters = if quick { 3_000 } else { 30_000 };
 
     println!("=== AD-ADMM end-to-end: threaded star cluster ===");
     println!("N={n_workers} workers, m={m} samples/worker, n={n} features, tau={tau}");
@@ -36,7 +38,7 @@ fn main() {
     let mut rng = Pcg64::seed_from_u64(seed);
     let inst = LassoInstance::synthetic(&mut rng, n_workers, m, n, 0.05, 0.1);
     let problem = inst.problem();
-    let (_, f_star) = fista_lasso(&inst, 30_000);
+    let (_, f_star) = fista_lasso(&inst, fista_iters);
     println!("reference optimum F* = {f_star:.6e} (centralized FISTA)");
 
     // PJRT backend if the artifacts for this shape exist.
@@ -77,8 +79,10 @@ fn main() {
         Some(v)
     };
 
-    // Heterogeneous delays: fastest 0.5 ms → slowest 8 ms per round.
-    let delays = DelayModel::linear_spread(n_workers, 0.5, 8.0, 0.3, seed);
+    // Heterogeneous delays: fastest 0.5 ms → slowest 8 ms per round
+    // (shrunk in quick mode so the smoke pass stays fast).
+    let slow_ms = if quick { 2.0 } else { 8.0 };
+    let delays = DelayModel::linear_spread(n_workers, 0.5, slow_ms, 0.3, seed);
 
     // --- synchronous baseline: τ = 1, A = N ---
     let sync_cfg = ClusterConfig {

@@ -1,40 +1,54 @@
 //! Distributed L1-regularized logistic regression — the Part-II companion
-//! workload, run through the same AD-ADMM coordinator with Newton-based
-//! worker subproblem solves.
+//! workload, run through the same AD-ADMM engine (now via the `Session`
+//! builder) with Newton-based worker subproblem solves.
 //!
 //!     cargo run --release --example logistic
+//!
+//! Set `AD_ADMM_BENCH_QUICK=1` for the reduced-size smoke pass CI runs.
 
 use ad_admm::admm::kkt::kkt_residual;
 use ad_admm::prelude::*;
 use ad_admm::solvers::fista::fista;
 
 fn main() {
+    let quick = ad_admm::bench::quick_mode();
+    let (iters, fista_iters, test_rows) = if quick { (80, 2_000, 120) } else { (400, 20_000, 500) };
     let (n_workers, m, n) = (8, 60, 20);
     let mut rng = Pcg64::seed_from_u64(5);
     let inst = LogisticInstance::synthetic(&mut rng, n_workers, m, n, 0.05);
     let problem = inst.problem();
 
     // Reference via centralized FISTA on the same composite objective.
-    let f_ref = fista(&problem, 20_000, 1e-12).objective;
+    let f_ref = fista(&problem, fista_iters, 1e-12).objective;
     println!("distributed logistic regression: N={n_workers}, m={m}/worker, n={n}");
     println!("reference objective = {f_ref:.8e}\n");
 
     let rho = problem.lipschitz().max(1.0);
     println!("{:>6} {:>8} {:>14} {:>12} {:>10}", "tau", "iters", "objective", "accuracy", "KKT");
     for tau in [1usize, 4, 8] {
-        let cfg = AdmmConfig { rho, tau, max_iters: 400, ..Default::default() };
+        let cfg = AdmmConfig { rho, tau, max_iters: iters, ..Default::default() };
         let arrivals = ArrivalModel::fig3_profile(n_workers, tau as u64);
-        // Engine API: the τ-parameterized partial barrier (Algorithms 2/3)
-        // over the in-process trace-driven worker source.
-        let policy = PartialBarrier { tau };
-        let out = run_trace_driven(&problem, &cfg, &arrivals, &policy, &EngineOptions::default());
-        let acc = ad_admm::metrics::accuracy_series(&out.history, f_ref);
+        // Session API: the τ-parameterized partial barrier (Algorithms 2/3)
+        // over the in-process trace-driven worker source; the history is
+        // collected by a BufferingObserver only because this table wants it.
+        let mut history = BufferingObserver::new();
+        let mut session = Session::builder()
+            .problem(&problem)
+            .config(cfg)
+            .policy(PartialBarrier { tau })
+            .arrivals(&arrivals)
+            .observer(&mut history)
+            .build()
+            .expect("valid session config");
+        session.run_to_completion().expect("session run");
+        let (out, _) = session.finish();
+        let acc = ad_admm::metrics::accuracy_series(history.records(), f_ref);
         let kkt = kkt_residual(&problem, &out.state);
         println!(
             "{:>6} {:>8} {:>14.6e} {:>12.3e} {:>10.2e}",
             tau,
-            out.history.len(),
-            out.history.last().unwrap().objective,
+            history.records().len(),
+            history.records().last().unwrap().objective,
             acc.last().unwrap(),
             kkt.max(),
         );
@@ -43,7 +57,7 @@ fn main() {
     // Held-out accuracy: fresh samples drawn from the SAME planted model
     // (inst.w_true), labelled by the same logistic mechanism.
     let mut test_rng = Pcg64::seed_from_u64(99);
-    let test_a = DenseMatrix::randn(&mut test_rng, 500, n);
+    let test_a = DenseMatrix::randn(&mut test_rng, test_rows, n);
     let test_y: Vec<f64> = test_a
         .matvec(&inst.w_true)
         .iter()
@@ -52,14 +66,16 @@ fn main() {
             if test_rng.uniform() < p { 1.0 } else { -1.0 }
         })
         .collect();
-    let cfg = AdmmConfig { rho, tau: 8, max_iters: 400, ..Default::default() };
-    let out = run_trace_driven(
-        &problem,
-        &cfg,
-        &ArrivalModel::fig3_profile(n_workers, 42),
-        &PartialBarrier { tau: cfg.tau },
-        &EngineOptions::default(),
-    );
+    let cfg = AdmmConfig { rho, tau: 8, max_iters: iters, ..Default::default() };
+    let mut session = Session::builder()
+        .problem(&problem)
+        .config(cfg.clone())
+        .policy(PartialBarrier { tau: cfg.tau })
+        .arrivals(&ArrivalModel::fig3_profile(n_workers, 42))
+        .build()
+        .expect("valid session config");
+    session.run_to_completion().expect("session run");
+    let (out, _) = session.finish();
     let w = &out.state.x0;
     let mut correct = 0;
     for j in 0..test_a.rows() {

@@ -1,79 +1,166 @@
-//! Quickstart: solve a small distributed LASSO through the unified
-//! iteration engine — one `run_trace_driven` call per `UpdatePolicy`
-//! (Algorithm 2's partial barrier vs Algorithm 1's full barrier) — then
-//! rerun the async policy under a deterministic dropout/rejoin fault.
+//! Quickstart: solve a small distributed LASSO through the `Session` API —
+//! one typed builder per `UpdatePolicy` (Algorithm 2's partial barrier vs
+//! Algorithm 1's full barrier), a streaming observer instead of buffered
+//! history, a custom stopping rule via the incremental `step()` loop, and
+//! a checkpoint/resume round trip.
 //!
 //!     cargo run --release --example quickstart
+//!
+//! Set `AD_ADMM_BENCH_QUICK=1` for the reduced-size smoke pass CI runs.
 
 use ad_admm::admm::kkt::kkt_residual;
+use ad_admm::admm::session::{EngineError, Observer, StepStatus};
 use ad_admm::prelude::*;
 
-fn main() {
+/// A streaming observer: tracks the running-best objective and the arrival
+/// total without retaining any per-iteration records — this is what keeps
+/// million-iteration monitoring memory-bounded.
+#[derive(Default)]
+struct LiveMetrics {
+    iters: usize,
+    arrivals: usize,
+    best_objective: f64,
+    last_objective: f64,
+}
+
+impl Observer for LiveMetrics {
+    fn on_start(&mut self, _state: &AdmmState) {
+        self.best_objective = f64::INFINITY;
+    }
+
+    fn on_iteration(&mut self, rec: &IterRecord, _state: &AdmmState) {
+        self.iters += 1;
+        self.arrivals += rec.arrivals;
+        self.last_objective = rec.objective;
+        if rec.objective < self.best_objective {
+            self.best_objective = rec.objective;
+        }
+    }
+}
+
+fn main() -> Result<(), EngineError> {
+    let quick = ad_admm::bench::quick_mode();
+    let (iters, fista_iters) = if quick { (120, 2_000) } else { (600, 50_000) };
+
     // 1. A synthetic sharded workload: 8 workers × 50 samples × 30 features.
     let mut rng = Pcg64::seed_from_u64(7);
     let inst = LassoInstance::synthetic(&mut rng, 8, 50, 30, 0.1, 0.1);
     let problem = inst.problem();
 
     // 2. High-accuracy reference optimum F* (centralized FISTA).
-    let (_, f_star) = fista_lasso(&inst, 50_000);
+    let (_, f_star) = fista_lasso(&inst, fista_iters);
     println!("reference optimum F* = {f_star:.8e}");
 
-    // 3. Asynchronous run: τ = 5, master proceeds with A = 1 arrival,
-    //    heterogeneous workers (half slow p=0.1, half fast p=0.8).
+    // 3. Asynchronous run through the Session builder: τ = 5, master
+    //    proceeds with A = 1 arrival, heterogeneous workers (half slow
+    //    p=0.1, half fast p=0.8), metrics streamed — nothing buffered.
     let cfg = AdmmConfig {
         rho: 100.0,
         tau: 5,
         min_arrivals: 1,
-        max_iters: 600,
+        max_iters: iters,
         ..Default::default()
     };
     let arrivals = ArrivalModel::fig3_profile(8, 1);
     let policy = PartialBarrier { tau: cfg.tau };
-    let out = run_trace_driven(&problem, &cfg, &arrivals, &policy, &EngineOptions::default());
+    let mut live = LiveMetrics::default();
+    let mut session = Session::builder()
+        .problem(&problem)
+        .config(cfg.clone())
+        .policy(policy)
+        .arrivals(&arrivals)
+        .observer(&mut live)
+        .build()?;
+    session.run_to_completion()?;
+    let (out, _) = session.finish();
     let kkt = kkt_residual(&problem, &out.state);
-    let acc = ad_admm::metrics::accuracy_series(&out.history, f_star);
     println!("policy: {}", policy.name());
     println!(
         "AD-ADMM   (tau=5): {:4} iters  objective {:.8e}  accuracy {:.2e}  KKT {:.2e}",
-        out.history.len(),
-        out.history.last().unwrap().objective,
-        acc.last().unwrap(),
+        live.iters,
+        live.last_objective,
+        (live.last_objective - f_star).abs(),
         kkt.max(),
+    );
+    println!(
+        "  mean arrivals/iter {:.2} (streamed through an Observer, zero history buffered)",
+        live.arrivals as f64 / live.iters.max(1) as f64
     );
 
     // 4. Synchronous baseline (Algorithm 1 = the FullBarrier policy) for
-    //    the same budget, through the same engine.
-    let sync_cfg = AdmmConfig { tau: 1, min_arrivals: 8, ..cfg.clone() };
+    //    the same budget, through the same builder — only the policy and
+    //    gate change.
     let sync_policy = FullBarrier;
-    let sync = run_trace_driven(
-        &problem,
-        &sync_cfg,
-        &ArrivalModel::Full,
-        &sync_policy,
-        &EngineOptions::default(),
-    );
+    let mut sync_live = LiveMetrics::default();
+    let mut sync_session = Session::builder()
+        .problem(&problem)
+        .config(AdmmConfig { tau: 1, min_arrivals: 8, ..cfg.clone() })
+        .policy(sync_policy)
+        .arrivals(&ArrivalModel::Full)
+        .observer(&mut sync_live)
+        .build()?;
+    sync_session.run_to_completion()?;
+    drop(sync_session);
     println!("policy: {}", sync_policy.name());
     println!(
         "sync ADMM (tau=1): {:4} iters  objective {:.8e}",
-        sync.history.len(),
-        sync.history.last().unwrap().objective,
+        sync_live.iters, sync_live.last_objective,
     );
 
-    // 5. The new scenario axis: worker 3 drops out for 150 iterations
-    //    (30× the τ bound) and rejoins with stale iterates. Deterministic
-    //    — same plan, same trace, every run, in every worker source.
-    let plan = FaultPlan::single_outage(3, 100, 250);
-    let opts = EngineOptions { residual_stopping: true, fault_plan: Some(&plan) };
-    let faulted = run_trace_driven(&problem, &cfg, &arrivals, &policy, &opts);
-    let facc = ad_admm::metrics::accuracy_series(&faulted.history, f_star);
+    // 5. A custom stopping rule needs no trait at all: own the loop with
+    //    step() and break when the criterion fires.
+    let mut stepped = Session::builder()
+        .problem(&problem)
+        .config(AdmmConfig { max_iters: 10 * iters, ..cfg.clone() })
+        .policy(policy)
+        .arrivals(&arrivals)
+        .build()?;
+    let target = 1e-4;
+    while let StepStatus::Iterated(rec) = stepped.step()? {
+        if rec.consensus < target {
+            break;
+        }
+    }
     println!(
-        "with dropout+rejoin: {:4} iters  accuracy {:.2e}  Assumption 1 on trace: {}",
-        faulted.history.len(),
-        facc.last().unwrap(),
-        faulted.trace.satisfies_bounded_delay(8, cfg.tau),
+        "custom stop: consensus < {target:.0e} after {} iterations",
+        stepped.iteration()
     );
 
-    // 6. Both fault-free runs recover the planted sparse signal's support.
+    // 6. Checkpoint/resume: run 1/3 of a *faulted* run (worker 3 drops out
+    //    and rejoins with stale iterates), serialize the full session
+    //    state, resume in a fresh session, and verify bit-identity against
+    //    the uninterrupted run.
+    let plan = FaultPlan::single_outage(3, iters / 6, iters / 3);
+    let faulted = || {
+        Session::builder()
+            .problem(&problem)
+            .config(cfg.clone())
+            .policy(policy)
+            .arrivals(&arrivals)
+            .faults(plan.clone())
+    };
+    let mut uninterrupted = faulted().build()?;
+    uninterrupted.run_to_completion()?;
+
+    let mut first_leg = faulted().build()?;
+    first_leg.run_for(iters / 3)?;
+    let checkpoint = first_leg.checkpoint()?;
+    let mut second_leg = faulted().resume(&checkpoint)?;
+    second_leg.run_to_completion()?;
+    // Compare exact bit patterns (f64 == would conflate 0.0/-0.0 and NaN).
+    let bit_identical = second_leg
+        .state()
+        .x0
+        .iter()
+        .map(|v| v.to_bits())
+        .eq(uninterrupted.state().x0.iter().map(|v| v.to_bits()));
+    println!(
+        "dropout+rejoin run: Assumption 1 on trace: {}  resume bit-identical: {bit_identical}",
+        uninterrupted.trace().satisfies_bounded_delay(8, cfg.tau),
+    );
+    assert!(bit_identical, "resume must reproduce the uninterrupted run");
+
+    // 7. The async run recovers the planted sparse signal's support.
     let support: Vec<usize> = inst
         .w_true
         .iter()
@@ -91,4 +178,5 @@ fn main() {
         .collect();
     println!("planted support   {support:?}");
     println!("recovered support {recovered:?}");
+    Ok(())
 }

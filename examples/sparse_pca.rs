@@ -1,19 +1,24 @@
 //! Non-convex showcase (paper §V-A): AD-ADMM on the sparse-PCA problem
-//! (50), sweeping the delay bound τ — Theorem 1 in action.
+//! (50), sweeping the delay bound τ — Theorem 1 in action, driven through
+//! the `Session` builder.
 //!
 //!     cargo run --release --example sparse_pca [--n 64] [--workers 8]
+//!
+//! Set `AD_ADMM_BENCH_QUICK=1` for the reduced-size smoke pass CI runs.
 
 use ad_admm::admm::kkt::kkt_residual;
 use ad_admm::prelude::*;
 use ad_admm::util::cli::ArgParser;
 
 fn main() {
+    let quick = ad_admm::bench::quick_mode();
     let args = ArgParser::from_env(&[]);
-    let n_workers: usize = args.get_parse_or("workers", 8);
-    let m: usize = args.get_parse_or("m", 120);
-    let n: usize = args.get_parse_or("n", 64);
+    let n_workers: usize = args.get_parse_or("workers", if quick { 4 } else { 8 });
+    let m: usize = args.get_parse_or("m", if quick { 40 } else { 120 });
+    let n: usize = args.get_parse_or("n", if quick { 24 } else { 64 });
     let nnz: usize = args.get_parse_or("nnz", (m * n / 100).max(10));
-    let iters: usize = args.get_parse_or("iters", 1500);
+    let iters: usize = args.get_parse_or("iters", if quick { 250 } else { 1500 });
+    let ref_iters: usize = if quick { 1_000 } else { 10_000 };
     let seed: u64 = args.get_parse_or("seed", 3);
 
     let mut rng = Pcg64::seed_from_u64(seed);
@@ -37,25 +42,31 @@ fn main() {
     // Reference F̂: long synchronous run at β = 3 (the paper's protocol).
     let lip = 2.0 * lam_max; // L = Lipschitz constant of grad f_j
     let rho = 3.0 * lip; // beta = 3 in the paper's rule rho = beta*L
+    let run = |cfg: AdmmConfig, policy: &dyn UpdatePolicy, arrivals: &ArrivalModel| {
+        let mut history = BufferingObserver::new();
+        let mut session = Session::builder()
+            .problem(&problem)
+            .config(cfg)
+            .policy(policy)
+            .arrivals(arrivals)
+            .observer(&mut history)
+            .build()
+            .expect("valid session config");
+        let stop = session.run_to_completion().expect("session run");
+        let (out, _) = session.finish();
+        (out, history.into_records(), stop)
+    };
+
     let ref_cfg = AdmmConfig {
         rho,
         tau: 1,
-        max_iters: 10_000,
+        max_iters: ref_iters,
         init_x0: Some(init.clone()),
         ..Default::default()
     };
-    let f_hat = run_trace_driven(
-        &problem,
-        &ref_cfg,
-        &ArrivalModel::Full,
-        &FullBarrier,
-        &EngineOptions::default(),
-    )
-    .history
-    .last()
-    .unwrap()
-    .aug_lagrangian;
-    println!("reference F̂ = {f_hat:.8e} (10k synchronous iterations, β=3)\n");
+    let (_, ref_history, _) = run(ref_cfg, &FullBarrier, &ArrivalModel::Full);
+    let f_hat = ref_history.last().unwrap().aug_lagrangian;
+    println!("reference F̂ = {f_hat:.8e} ({ref_iters} synchronous iterations, β=3)\n");
 
     println!("{:>6} {:>10} {:>14} {:>12} {:>10}", "tau", "iters", "objective", "accuracy", "KKT");
     for tau in [1usize, 5, 10, 20] {
@@ -67,22 +78,16 @@ fn main() {
             ..Default::default()
         };
         let arrivals = ArrivalModel::fig3_profile(n_workers, seed + tau as u64);
-        // Engine API: the same PartialBarrier policy at every τ — only the
+        // Session API: the same PartialBarrier policy at every τ — only the
         // Assumption-1 bound changes, exactly Theorem 1's knob.
-        let out = run_trace_driven(
-            &problem,
-            &cfg,
-            &arrivals,
-            &PartialBarrier { tau },
-            &EngineOptions::default(),
-        );
-        let acc = ad_admm::metrics::accuracy_series(&out.history, f_hat);
+        let (out, history, _) = run(cfg, &PartialBarrier { tau }, &arrivals);
+        let acc = ad_admm::metrics::accuracy_series(&history, f_hat);
         let kkt = kkt_residual(&problem, &out.state);
         println!(
             "{:>6} {:>10} {:>14.6e} {:>12.3e} {:>10.2e}",
             tau,
-            out.history.len(),
-            out.history.last().unwrap().objective,
+            history.len(),
+            history.last().unwrap().objective,
             acc.last().unwrap(),
             kkt.max(),
         );
@@ -97,17 +102,7 @@ fn main() {
         init_x0: Some(init.clone()),
         ..Default::default()
     };
-    let out = run_trace_driven(
-        &problem,
-        &small_rho_cfg,
-        &ArrivalModel::Full,
-        &FullBarrier,
-        &EngineOptions::default(),
-    );
-    let acc = ad_admm::metrics::accuracy_series(&out.history, f_hat);
-    println!(
-        "  stop={:?}  final accuracy = {:.3e}",
-        out.stop,
-        acc.last().unwrap()
-    );
+    let (_, history, stop) = run(small_rho_cfg, &FullBarrier, &ArrivalModel::Full);
+    let acc = ad_admm::metrics::accuracy_series(&history, f_hat);
+    println!("  stop={stop:?}  final accuracy = {:.3e}", acc.last().unwrap());
 }

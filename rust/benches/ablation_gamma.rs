@@ -9,6 +9,8 @@
 //! Run: `cargo bench --bench ablation_gamma` (AD_ADMM_BENCH_QUICK=1
 //! shrinks). Emits `BENCH_ablation_gamma.json` next to the text output.
 
+#![allow(deprecated)] // exercises the legacy free-function drivers on purpose
+
 use ad_admm::admm::params::{gamma_lower_bound, rho_lower_bound_nonconvex};
 use ad_admm::bench::json::{BenchReport, JsonValue};
 use ad_admm::metrics::accuracy_series;

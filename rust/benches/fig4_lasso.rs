@@ -16,6 +16,8 @@
 //! shared reduced-size quick mode). Emits `BENCH_fig4_lasso.json` next to
 //! the text output.
 
+#![allow(deprecated)] // exercises the legacy free-function drivers on purpose
+
 use ad_admm::bench::json::{BenchReport, JsonValue};
 use ad_admm::metrics::rate::fit_linear_rate;
 use ad_admm::metrics::{accuracy_series, write_curves, RunLog};

@@ -11,6 +11,8 @@
 //! Run: `cargo bench --bench hot_path` (`AD_ADMM_BENCH_QUICK=1` shrinks).
 //! Emits `BENCH_hot_path.json` next to the text output.
 
+#![allow(deprecated)] // exercises the legacy free-function drivers on purpose
+
 use std::sync::Arc;
 
 use ad_admm::admm::{master_x0_update, AdmmConfig, AdmmState, MasterScratch};

@@ -31,6 +31,11 @@ impl AltSchemeOutput {
 
 /// Run Algorithm 4 (master's point of view) under the same partially
 /// asynchronous protocol as Algorithm 2.
+///
+/// Deprecated: build a [`crate::admm::session::Session`] with the
+/// [`AltScheme`] policy (and `residual_stopping(false)` for the historical
+/// behaviour) instead.
+#[deprecated(note = "use Session::builder()")]
 pub fn run_alt_scheme(
     problem: &ConsensusProblem,
     cfg: &AdmmConfig,
@@ -45,6 +50,7 @@ pub fn run_alt_scheme(
 /// [`TraceSource`] consuming `arrivals`. The historical Algorithm-4 driver
 /// never evaluated the residual-based stopping rule, so
 /// `residual_stopping` stays off here.
+#[deprecated(note = "use Session::builder()")]
 pub fn run_alt_scheme_with_solver(
     problem: &ConsensusProblem,
     cfg: &AdmmConfig,
@@ -60,6 +66,7 @@ pub fn run_alt_scheme_with_solver(
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the deprecated wrappers stay pinned by these tests
 mod tests {
     use super::*;
     use crate::admm::kkt::kkt_residual;

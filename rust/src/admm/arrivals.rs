@@ -7,6 +7,7 @@
 //! least `A` workers arrived, and any worker whose delay counter has hit
 //! `τ − 1` is waited for unconditionally (it joins the arrival set).
 
+use crate::bench::json::{hex_u128, json_usize, u128_from_hex, JsonValue};
 use crate::rng::Pcg64;
 
 /// A recorded sequence of arrival sets (sorted worker indices per
@@ -228,6 +229,66 @@ impl ArrivalSampler {
             }
         }
         (0..n).filter(|&i| arrived[i] && !down[i]).collect()
+    }
+
+    /// Serialize the sampler's mid-run cursor for a session checkpoint:
+    /// the full model is stateless, a trace replay carries its position,
+    /// and the probabilistic model carries its exact PCG-64 stream state
+    /// (so resumed draws continue bit-identically).
+    pub fn save(&self) -> JsonValue {
+        match &self.kind {
+            SamplerKind::Full => JsonValue::Obj(vec![("kind".to_string(), "full".into())]),
+            SamplerKind::Probabilistic { rng, .. } => {
+                let (state, inc) = rng.to_raw();
+                JsonValue::Obj(vec![
+                    ("kind".to_string(), "probabilistic".into()),
+                    ("rng_state".to_string(), hex_u128(state)),
+                    ("rng_inc".to_string(), hex_u128(inc)),
+                ])
+            }
+            SamplerKind::Trace { pos, .. } => JsonValue::Obj(vec![
+                ("kind".to_string(), "trace".into()),
+                ("pos".to_string(), JsonValue::Num(*pos as f64)),
+            ]),
+        }
+    }
+
+    /// Restore a cursor produced by [`ArrivalSampler::save`] into a
+    /// freshly built sampler of the *same* model (probabilities and
+    /// replayed sets are rebuilt by the caller; only the cursor/stream
+    /// state is restored). Errors on a model-kind mismatch.
+    pub fn load(&mut self, doc: &JsonValue) -> Result<(), String> {
+        let kind = doc
+            .get("kind")
+            .and_then(JsonValue::as_str)
+            .ok_or_else(|| "sampler checkpoint missing kind".to_string())?;
+        match (&mut self.kind, kind) {
+            (SamplerKind::Full, "full") => Ok(()),
+            (SamplerKind::Probabilistic { rng, .. }, "probabilistic") => {
+                let state = u128_from_hex(
+                    doc.get("rng_state").ok_or_else(|| "missing rng_state".to_string())?,
+                )?;
+                let inc = u128_from_hex(
+                    doc.get("rng_inc").ok_or_else(|| "missing rng_inc".to_string())?,
+                )?;
+                *rng = Pcg64::from_raw(state, inc);
+                Ok(())
+            }
+            (SamplerKind::Trace { sets, pos }, "trace") => {
+                let p = json_usize(doc.get("pos").ok_or_else(|| "missing pos".to_string())?)?;
+                if p > sets.len() {
+                    return Err(format!(
+                        "trace cursor {p} beyond the replayed trace ({} sets)",
+                        sets.len()
+                    ));
+                }
+                *pos = p;
+                Ok(())
+            }
+            (_, other) => Err(format!(
+                "sampler checkpoint kind {other:?} does not match the configured arrival model"
+            )),
+        }
     }
 }
 

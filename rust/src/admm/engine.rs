@@ -32,21 +32,29 @@
 //! histories regardless of the source — the equivalence the
 //! `engine_equivalence`, `cluster_e2e` and `virtual_time` test suites pin.
 //!
+//! Since the Session redesign the loop itself lives in
+//! [`super::session::Session::step`]; [`run_engine`] constructs a session
+//! with a [`super::session::BufferingObserver`] and runs it to completion,
+//! so the one-shot and incremental paths cannot drift apart. New code
+//! should prefer [`super::session::Session::builder`], which validates its
+//! configuration into a typed [`super::session::EngineError`] instead of
+//! panicking, streams records through observers, and supports
+//! step/checkpoint/resume.
+//!
 //! The single seam also makes fault injection uniform: a [`FaultPlan`]
 //! (deterministic, seeded worker outages + delay spikes) gates the master's
 //! arrival bookkeeping identically in all three sources, realizing the
 //! delayed-information regime of the incremental/blockwise ADMM line
 //! (Hong, arXiv:1412.6058; Zhu et al., arXiv:1802.08882).
 
+use crate::bench::json::{hex_mat, mat_from_hex, JsonValue};
 use crate::problems::ConsensusProblem;
 use crate::rng::Pcg64;
 
 use super::arrivals::{ArrivalModel, ArrivalSampler, ArrivalTrace};
 use super::master_pov::{NativeSolver, SubproblemSolver};
-use super::{
-    divergence_or_tol_stop, iter_record, master_x0_update, AdmmConfig, AdmmState, IterRecord,
-    MasterScratch, StopReason,
-};
+use super::session::{BufferingObserver, EngineError, Session};
+use super::{AdmmConfig, AdmmState, IterRecord, MasterScratch, StopReason};
 
 /// Where the master's `x₀` update sits relative to the worker updates.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -101,6 +109,32 @@ pub trait UpdatePolicy {
     /// Does the broadcast to arrived workers carry the master-updated dual
     /// `λ̂_i` alongside `x̂₀` (Algorithm 4, Step 6)?
     fn broadcasts_dual(&self) -> bool;
+}
+
+impl<P: UpdatePolicy + ?Sized> UpdatePolicy for &P {
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+
+    fn order(&self) -> StepOrder {
+        (**self).order()
+    }
+
+    fn tau(&self) -> usize {
+        (**self).tau()
+    }
+
+    fn worker_updates_dual(&self) -> bool {
+        (**self).worker_updates_dual()
+    }
+
+    fn master_updates_all_duals(&self) -> bool {
+        (**self).master_updates_all_duals()
+    }
+
+    fn broadcasts_dual(&self) -> bool {
+        (**self).broadcasts_dual()
+    }
 }
 
 /// Algorithm 1: the synchronous baseline. The master updates `x₀` from
@@ -355,6 +389,12 @@ pub trait WorkerSource {
     /// Number of workers this source drives (must equal the problem's).
     fn n_workers(&self) -> usize;
 
+    /// Short stable name used in error messages and checkpoint envelopes
+    /// (`"trace"`, `"threaded"`, `"virtual"`).
+    fn kind(&self) -> &'static str {
+        "custom"
+    }
+
     /// Can this source run a [`StepOrder::MasterFirst`] policy? Only the
     /// in-process [`TraceSource`] can: the timing-driven sources pipeline
     /// worker rounds against broadcast snapshots, which is exactly what a
@@ -378,20 +418,116 @@ pub trait WorkerSource {
     /// Deliver the post-update broadcast (`x̂₀`, plus `λ̂_i` when the
     /// policy broadcasts duals) to exactly the arrived workers.
     fn broadcast(&mut self, set: &[usize], state: &AdmmState, policy: &dyn UpdatePolicy);
+
+    /// Serialize this source's mid-run state (sampler cursors, RNG
+    /// streams, per-worker snapshots, event queues) for a
+    /// [`super::session::Checkpoint`]. Sources with live OS-thread state
+    /// cannot support this and keep the default.
+    fn save_checkpoint(&self) -> Result<JsonValue, EngineError> {
+        Err(EngineError::CheckpointUnsupported { source: self.kind() })
+    }
+
+    /// Restore state produced by [`WorkerSource::save_checkpoint`] into a
+    /// freshly constructed source (called *instead of*
+    /// [`WorkerSource::start`] on resume).
+    fn load_checkpoint(&mut self, _doc: &JsonValue) -> Result<(), EngineError> {
+        Err(EngineError::CheckpointUnsupported { source: self.kind() })
+    }
+}
+
+impl<S: WorkerSource + ?Sized> WorkerSource for &mut S {
+    fn n_workers(&self) -> usize {
+        (**self).n_workers()
+    }
+
+    fn kind(&self) -> &'static str {
+        (**self).kind()
+    }
+
+    fn supports_master_first(&self) -> bool {
+        (**self).supports_master_first()
+    }
+
+    fn start(&mut self, state: &AdmmState, policy: &dyn UpdatePolicy) {
+        (**self).start(state, policy)
+    }
+
+    fn gather(&mut self, k: usize, d: &[usize], gate: &Gate<'_>) -> Vec<usize> {
+        (**self).gather(k, d, gate)
+    }
+
+    fn absorb(&mut self, set: &[usize], m: &mut MasterView<'_>, policy: &dyn UpdatePolicy) {
+        (**self).absorb(set, m, policy)
+    }
+
+    fn broadcast(&mut self, set: &[usize], state: &AdmmState, policy: &dyn UpdatePolicy) {
+        (**self).broadcast(set, state, policy)
+    }
+
+    fn save_checkpoint(&self) -> Result<JsonValue, EngineError> {
+        (**self).save_checkpoint()
+    }
+
+    fn load_checkpoint(&mut self, doc: &JsonValue) -> Result<(), EngineError> {
+        (**self).load_checkpoint(doc)
+    }
+}
+
+impl<S: WorkerSource + ?Sized> WorkerSource for Box<S> {
+    fn n_workers(&self) -> usize {
+        (**self).n_workers()
+    }
+
+    fn kind(&self) -> &'static str {
+        (**self).kind()
+    }
+
+    fn supports_master_first(&self) -> bool {
+        (**self).supports_master_first()
+    }
+
+    fn start(&mut self, state: &AdmmState, policy: &dyn UpdatePolicy) {
+        (**self).start(state, policy)
+    }
+
+    fn gather(&mut self, k: usize, d: &[usize], gate: &Gate<'_>) -> Vec<usize> {
+        (**self).gather(k, d, gate)
+    }
+
+    fn absorb(&mut self, set: &[usize], m: &mut MasterView<'_>, policy: &dyn UpdatePolicy) {
+        (**self).absorb(set, m, policy)
+    }
+
+    fn broadcast(&mut self, set: &[usize], state: &AdmmState, policy: &dyn UpdatePolicy) {
+        (**self).broadcast(set, state, policy)
+    }
+
+    fn save_checkpoint(&self) -> Result<JsonValue, EngineError> {
+        (**self).save_checkpoint()
+    }
+
+    fn load_checkpoint(&mut self, doc: &JsonValue) -> Result<(), EngineError> {
+        (**self).load_checkpoint(doc)
+    }
 }
 
 /// Engine knobs that are caller choices rather than policy properties.
-#[derive(Clone, Copy, Debug)]
-pub struct EngineOptions<'a> {
+///
+/// Owns its [`FaultPlan`] since the Session redesign (the historical
+/// borrowed variant forced the awkward `EngineOptions<'static>` `Default`
+/// impl); the same knobs live on [`super::session::SessionBuilder`] as
+/// `residual_stopping` / `faults`, which is the preferred spelling.
+#[derive(Clone, Debug)]
+pub struct EngineOptions {
     /// Evaluate the residual-based [`super::stopping::StoppingRule`] (when
     /// the config carries one). The serial Algorithm-4 driver historically
     /// never did; every other driver does.
     pub residual_stopping: bool,
     /// Deterministic outage/delay-spike schedule (None = fault-free).
-    pub fault_plan: Option<&'a FaultPlan>,
+    pub fault_plan: Option<FaultPlan>,
 }
 
-impl Default for EngineOptions<'static> {
+impl Default for EngineOptions {
     fn default() -> Self {
         EngineOptions { residual_stopping: true, fault_plan: None }
     }
@@ -411,143 +547,47 @@ pub struct EngineRun {
 }
 
 /// Run the unified iteration engine: one (policy, source) pair, one
-/// config, one problem. This is the **only** collect → update → record
-/// loop in the crate; every public driver delegates here.
+/// config, one problem. Since the Session redesign this is a thin
+/// run-to-completion shim: it builds a [`Session`] around the borrowed
+/// source with a [`BufferingObserver`] and repackages the outcome into the
+/// historical [`EngineRun`]. Panics on an invalid configuration (the
+/// pre-session contract); use [`Session::builder`] for typed errors.
 pub fn run_engine(
     problem: &ConsensusProblem,
     cfg: &AdmmConfig,
     policy: &dyn UpdatePolicy,
     source: &mut dyn WorkerSource,
-    opts: &EngineOptions<'_>,
+    opts: &EngineOptions,
 ) -> EngineRun {
-    let n_workers = problem.num_workers();
-    let n = problem.dim();
-    assert_eq!(source.n_workers(), n_workers, "source/problem worker-count mismatch");
-    if policy.order() == StepOrder::MasterFirst {
-        assert!(
-            source.supports_master_first(),
-            "this worker source cannot drive a master-first (full-barrier) policy"
-        );
+    let mut history = BufferingObserver::new();
+    let mut builder = Session::builder()
+        .problem(problem)
+        .config(cfg.clone())
+        .policy(policy)
+        .residual_stopping(opts.residual_stopping)
+        .observer(&mut history);
+    if let Some(plan) = &opts.fault_plan {
+        builder = builder.faults(plan.clone());
     }
-
-    let mut state = cfg.initial_state(n_workers, n);
-    let mut d = vec![0usize; n_workers];
-    let mut down = vec![false; n_workers];
-    let mut arrived = vec![false; n_workers];
-    let mut history = Vec::with_capacity(cfg.max_iters);
-    let mut trace = ArrivalTrace::default();
-    let mut prev_x0 = state.x0.clone();
-    let mut stop = StopReason::MaxIters;
-    let mut scratch = MasterScratch::new();
-    // f_i(x_i) cache: only arrived workers' x_i move, so only they are
-    // re-evaluated (perf: N → |A_k| data passes per iteration).
-    let mut f_cache: Vec<f64> = Vec::with_capacity(n_workers);
-    for i in 0..n_workers {
-        f_cache.push(problem.local(i).eval_with(&state.xs[i], &mut scratch.ws));
+    let mut session = builder
+        .build_typed(source)
+        .unwrap_or_else(|e| panic!("invalid engine configuration: {e}"));
+    let stop = session
+        .run_to_completion()
+        .unwrap_or_else(|e| panic!("engine run failed: {e}"));
+    let (outcome, _) = session.finish();
+    EngineRun {
+        state: outcome.state,
+        history: history.into_records(),
+        trace: outcome.trace,
+        stop,
+        final_delays: outcome.final_delays,
     }
-    let all: Vec<usize> = (0..n_workers).collect();
-
-    source.start(&state, policy);
-
-    for k in 0..cfg.max_iters {
-        if let Some(plan) = opts.fault_plan {
-            plan.fill_down(k, &mut down);
-        }
-        let gate = Gate { tau: policy.tau(), min_arrivals: cfg.min_arrivals, down: &down };
-
-        let set = match policy.order() {
-            StepOrder::WorkersFirst => {
-                // Steps 3–5: gather the arrival set, absorb the arrived
-                // worker updates (19)/(23)/(47), advance delay counters.
-                let set = source.gather(k, &d, &gate);
-                {
-                    let mut view = MasterView {
-                        problem,
-                        state: &mut state,
-                        f_cache: &mut f_cache,
-                        scratch: &mut scratch,
-                        rho: cfg.rho,
-                    };
-                    source.absorb(&set, &mut view, policy);
-                }
-                advance_delays(&set, &mut arrived, &mut d);
-
-                // (12)/(25)/(45): master x₀ update with the proximal γ.
-                prev_x0.copy_from_slice(&state.x0);
-                master_x0_update(problem, &mut state, cfg.rho, cfg.gamma, &mut scratch);
-
-                // Algorithm 4 (46): master refreshes ALL duals against the
-                // fresh x₀.
-                if policy.master_updates_all_duals() {
-                    for i in 0..n_workers {
-                        for j in 0..n {
-                            state.lams[i][j] += cfg.rho * (state.xs[i][j] - state.x0[j]);
-                        }
-                    }
-                }
-
-                // Step 6: broadcast to the arrived workers only.
-                source.broadcast(&set, &state, policy);
-                set
-            }
-            StepOrder::MasterFirst => {
-                // Algorithm 1: master x₀ update (6) from (xᵏ, λᵏ) first...
-                prev_x0.copy_from_slice(&state.x0);
-                master_x0_update(problem, &mut state, cfg.rho, cfg.gamma, &mut scratch);
-                // ...broadcast to every LIVE worker. A down worker keeps
-                // its last pre-outage snapshot (and its frozen x_i/λ_i):
-                // under a full barrier "dropped" means its contribution to
-                // the master update simply stops moving until rejoin.
-                if opts.fault_plan.is_some() {
-                    let live: Vec<usize> = (0..n_workers).filter(|&i| !down[i]).collect();
-                    source.broadcast(&live, &state, policy);
-                } else {
-                    source.broadcast(&all, &state, policy);
-                }
-                // ...then every worker solves (7)+(8) against the fresh
-                // x₀^{k+1} (τ = 1 forces the full barrier at the gate).
-                let set = source.gather(k, &d, &gate);
-                {
-                    let mut view = MasterView {
-                        problem,
-                        state: &mut state,
-                        f_cache: &mut f_cache,
-                        scratch: &mut scratch,
-                        rho: cfg.rho,
-                    };
-                    source.absorb(&set, &mut view, policy);
-                }
-                advance_delays(&set, &mut arrived, &mut d);
-                set
-            }
-        };
-
-        let rec = iter_record(problem, &state, cfg, k, set.len(), &f_cache, &mut scratch, &prev_x0);
-        let early = divergence_or_tol_stop(cfg, &state, &rec, k);
-        history.push(rec);
-        trace.sets.push(set);
-
-        if let Some(reason) = early {
-            stop = reason;
-            break;
-        }
-        if opts.residual_stopping {
-            if let Some(rule) = &cfg.stopping {
-                let r = super::stopping::residuals(&state, &prev_x0, cfg.rho);
-                if k > 0 && rule.satisfied(&r, n, n_workers) {
-                    stop = StopReason::Residuals;
-                    break;
-                }
-            }
-        }
-    }
-
-    EngineRun { state, history, trace, stop, final_delays: d }
 }
 
 /// Reset arrived workers' delay counters, bump everyone else's. `arrived`
 /// is a reusable scratch mask (left all-false on return).
-fn advance_delays(set: &[usize], arrived: &mut [bool], d: &mut [usize]) {
+pub(crate) fn advance_delays(set: &[usize], arrived: &mut [bool], d: &mut [usize]) {
     for &i in set {
         arrived[i] = true;
     }
@@ -562,15 +602,15 @@ fn advance_delays(set: &[usize], arrived: &mut [bool], d: &mut [usize]) {
 }
 
 /// Convenience wrapper: run the in-process [`TraceSource`] under an
-/// arbitrary policy + options (the fault-capable serial entry point the
-/// examples and the CLI use). Panics on an invalid [`AdmmConfig`], like
+/// arbitrary policy + options. Panics on an invalid [`AdmmConfig`], like
 /// the legacy serial entry points it generalizes.
+#[deprecated(note = "use Session::builder()")]
 pub fn run_trace_driven(
     problem: &ConsensusProblem,
     cfg: &AdmmConfig,
     arrivals: &ArrivalModel,
     policy: &dyn UpdatePolicy,
-    opts: &EngineOptions<'_>,
+    opts: &EngineOptions,
 ) -> EngineRun {
     cfg.validate(problem.num_workers()).expect("invalid AdmmConfig");
     let mut source = TraceSource::new(problem, arrivals);
@@ -643,8 +683,36 @@ impl<'a> WorkerSource for TraceSource<'a> {
         self.n_workers
     }
 
+    fn kind(&self) -> &'static str {
+        "trace"
+    }
+
     fn supports_master_first(&self) -> bool {
         true
+    }
+
+    fn save_checkpoint(&self) -> Result<JsonValue, EngineError> {
+        Ok(JsonValue::Obj(vec![
+            ("sampler".to_string(), self.sampler.save()),
+            ("x0_snap".to_string(), hex_mat(&self.x0_snap)),
+            ("lam_snap".to_string(), hex_mat(&self.lam_snap)),
+        ]))
+    }
+
+    fn load_checkpoint(&mut self, doc: &JsonValue) -> Result<(), EngineError> {
+        self.sampler
+            .load(super::session::jget(doc, "sampler")?)
+            .map_err(EngineError::Checkpoint)?;
+        self.x0_snap =
+            mat_from_hex(super::session::jget(doc, "x0_snap")?).map_err(EngineError::Checkpoint)?;
+        self.lam_snap =
+            mat_from_hex(super::session::jget(doc, "lam_snap")?).map_err(EngineError::Checkpoint)?;
+        if self.x0_snap.len() != self.n_workers || self.lam_snap.len() != self.n_workers {
+            return Err(EngineError::Checkpoint(
+                "snapshot worker count does not match the source".to_string(),
+            ));
+        }
+        Ok(())
     }
 
     fn start(&mut self, state: &AdmmState, _policy: &dyn UpdatePolicy) {
@@ -689,6 +757,7 @@ impl<'a> WorkerSource for TraceSource<'a> {
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the deprecated wrappers stay pinned by these tests
 mod tests {
     use super::*;
     use crate::data::LassoInstance;
@@ -755,7 +824,7 @@ mod tests {
         let p = lasso(901, 4);
         let cfg = AdmmConfig { rho: 40.0, tau: 3, max_iters: 40, ..Default::default() };
         let plan = FaultPlan::single_outage(2, 10, 20);
-        let opts = EngineOptions { residual_stopping: true, fault_plan: Some(&plan) };
+        let opts = EngineOptions { residual_stopping: true, fault_plan: Some(plan) };
         let run = run_trace_driven(
             &p,
             &cfg,
@@ -790,7 +859,7 @@ mod tests {
             ],
             spikes: Vec::new(),
         };
-        let opts = EngineOptions { residual_stopping: true, fault_plan: Some(&plan) };
+        let opts = EngineOptions { residual_stopping: true, fault_plan: Some(plan) };
         let run = run_trace_driven(
             &p,
             &cfg,

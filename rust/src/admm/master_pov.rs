@@ -58,6 +58,11 @@ impl MasterPovOutput {
 }
 
 /// Run Algorithm 3 with the native subproblem solver.
+///
+/// Deprecated: build a [`crate::admm::session::Session`] with the
+/// [`PartialBarrier`] policy instead (typed errors, streaming observers,
+/// step/checkpoint/resume).
+#[deprecated(note = "use Session::builder()")]
 pub fn run_master_pov(
     problem: &ConsensusProblem,
     cfg: &AdmmConfig,
@@ -73,6 +78,7 @@ pub fn run_master_pov(
 /// Thin wrapper over the unified engine: the [`PartialBarrier`] policy
 /// (τ-forced partially asynchronous gate, workers own their duals) driven
 /// by the in-process [`TraceSource`] consuming `arrivals`.
+#[deprecated(note = "use Session::builder()")]
 pub fn run_master_pov_with_solver(
     problem: &ConsensusProblem,
     cfg: &AdmmConfig,
@@ -93,6 +99,7 @@ pub fn run_master_pov_with_solver(
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the deprecated wrappers stay pinned by these tests
 mod tests {
     use super::*;
     use crate::admm::kkt::{dual_identity_residual, kkt_residual};

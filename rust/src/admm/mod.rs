@@ -14,6 +14,12 @@
 //!   collect/update/record loop parameterized by an
 //!   [`engine::UpdatePolicy`] and a [`engine::WorkerSource`], plus the
 //!   deterministic fault-injection seam ([`engine::FaultPlan`]).
+//! - [`session`]     — the public face over the engine: the typed
+//!   [`session::Session`] builder (build-time validation, no panics on
+//!   user input), incremental `step()` execution, streaming
+//!   [`session::Observer`]s, and bit-identical
+//!   [`session::Checkpoint`]/resume. The free-function drivers above are
+//!   deprecated thin wrappers kept for compatibility.
 
 pub mod alt_scheme;
 pub mod arrivals;
@@ -21,6 +27,7 @@ pub mod engine;
 pub mod kkt;
 pub mod master_pov;
 pub mod params;
+pub mod session;
 pub mod stopping;
 pub mod sync;
 

@@ -1,0 +1,1307 @@
+//! The `Session` facade: the crate's public face over the unified
+//! iteration engine.
+//!
+//! PR 3 collapsed every driver into one policy-driven state machine
+//! ([`super::engine::run_engine`]); this module redesigns the *API* around
+//! it for long-horizon production runs:
+//!
+//! - a **typed builder** ([`Session::builder`]) that moves every scattered
+//!   `assert!`/config check into build-time validation returning a typed
+//!   [`EngineError`] — no panics on user input;
+//! - an **incremental execution model**: [`Session::step`] advances
+//!   exactly one master iteration, [`Session::run_for`] /
+//!   [`Session::run_to_completion`] loop over it, so callers own the loop
+//!   (live metrics, custom stopping rules, progress UIs);
+//! - **streaming observers** ([`Observer`]): per-iteration callbacks
+//!   replace mandatory history buffering — [`BufferingObserver`]
+//!   reproduces the historical `Vec<IterRecord>` outputs bit-for-bit for
+//!   the legacy wrappers. A long-horizon run no longer retains
+//!   `O(max_iters)` float-laden records; the one per-iteration artifact
+//!   the session still accumulates is the realized [`ArrivalTrace`]
+//!   (compact integer sets), which the replay and checkpoint contracts
+//!   are built on;
+//! - **checkpoint/resume** ([`Checkpoint`], [`SessionBuilder::resume`]):
+//!   the full mid-run state — primal/dual iterates, delay counters, the
+//!   realized trace, and the worker source's own cursors and RNG streams —
+//!   serialized through the dependency-free [`crate::bench::json`] writer
+//!   with `f64`s encoded as exact bit patterns, so a resumed run is
+//!   **bit-identical** to an uninterrupted one (pinned by the
+//!   `session_api` integration suite).
+//!
+//! The paper connection: Section V's experiments (and the related
+//! incremental/asynchronous ADMM lines, arXiv:1412.6058 and
+//! arXiv:1307.8254) are long-horizon runs where online monitoring, early
+//! stopping and restart-from-state are the operations of interest — the
+//! run-to-completion free functions could not express any of them without
+//! re-running from iteration 0.
+//!
+//! ```
+//! use ad_admm::prelude::*;
+//!
+//! let mut rng = Pcg64::seed_from_u64(7);
+//! let problem = LassoInstance::synthetic(&mut rng, 4, 20, 8, 0.2, 0.1).problem();
+//! let cfg = AdmmConfig { rho: 40.0, tau: 3, max_iters: 50, ..Default::default() };
+//! let mut history = BufferingObserver::new();
+//! let mut session = Session::builder()
+//!     .problem(&problem)
+//!     .config(cfg)
+//!     .policy(PartialBarrier { tau: 3 })
+//!     .arrivals(&ArrivalModel::probabilistic(vec![0.5; 4], 1))
+//!     .observer(&mut history)
+//!     .build()
+//!     .unwrap();
+//! let stop = session.run_to_completion().unwrap();
+//! assert_eq!(stop, StopReason::MaxIters);
+//! let (outcome, _) = session.finish(); // `_` drops the source, releasing `&mut history`
+//! assert_eq!(history.records().len(), outcome.iterations);
+//! ```
+
+use std::fmt;
+use std::path::Path;
+
+use crate::bench::json::{
+    self, hex_mat, hex_vec, json_usize, mat_from_hex, vec_from_hex, JsonValue,
+};
+use crate::problems::ConsensusProblem;
+
+use super::arrivals::{ArrivalModel, ArrivalTrace};
+use super::engine::{
+    FaultPlan, Gate, MasterView, PartialBarrier, StepOrder, TraceSource, UpdatePolicy,
+    WorkerSource,
+};
+use super::{
+    divergence_or_tol_stop, iter_record, master_x0_update, AdmmConfig, AdmmState, IterRecord,
+    MasterScratch, StopReason,
+};
+
+/// Everything the builder (or a checkpoint restore) can reject. Every
+/// variant corresponds to a check that used to be a scattered `assert!`
+/// inside the free-function drivers.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EngineError {
+    /// The builder was not given a problem ([`SessionBuilder::problem`]).
+    MissingProblem,
+    /// The penalty parameter ρ must be positive and finite.
+    InvalidRho(f64),
+    /// The Assumption-1 delay bound τ must be ≥ 1 (on the config and on
+    /// the policy).
+    InvalidTau(usize),
+    /// The `|A_k| ≥ A` batching gate must satisfy `1 ≤ A ≤ N`.
+    InvalidMinArrivals { min_arrivals: usize, n_workers: usize },
+    /// `AdmmConfig::init_x0` does not match the problem dimension.
+    InitDimMismatch { got: usize, dim: usize },
+    /// The worker source drives a different worker count than the problem.
+    WorkerCountMismatch { source: usize, problem: usize },
+    /// A master-first (full-barrier) policy on a source that pipelines
+    /// worker rounds and therefore cannot realize it.
+    MasterFirstUnsupported { source: &'static str },
+    /// The worker source holds live, non-serializable execution state
+    /// (e.g. OS threads mid-sleep) and cannot be checkpointed.
+    CheckpointUnsupported { source: &'static str },
+    /// Malformed or incompatible checkpoint data.
+    Checkpoint(String),
+}
+
+impl fmt::Display for EngineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EngineError::MissingProblem => {
+                write!(f, "no problem supplied: call SessionBuilder::problem(..)")
+            }
+            EngineError::InvalidRho(rho) => {
+                write!(f, "rho must be positive and finite, got {rho}")
+            }
+            EngineError::InvalidTau(tau) => write!(f, "tau must be >= 1, got {tau}"),
+            EngineError::InvalidMinArrivals { min_arrivals, n_workers } => {
+                write!(f, "min_arrivals must be in [1, {n_workers}], got {min_arrivals}")
+            }
+            EngineError::InitDimMismatch { got, dim } => {
+                write!(f, "init_x0 has dimension {got}, the problem has {dim}")
+            }
+            EngineError::WorkerCountMismatch { source, problem } => {
+                write!(
+                    f,
+                    "source/problem worker-count mismatch: source drives {source} workers, \
+                     problem has {problem}"
+                )
+            }
+            EngineError::MasterFirstUnsupported { source } => {
+                write!(
+                    f,
+                    "the {source:?} worker source cannot drive a master-first (full-barrier) \
+                     policy"
+                )
+            }
+            EngineError::CheckpointUnsupported { source } => {
+                write!(f, "the {source:?} worker source does not support checkpointing")
+            }
+            EngineError::Checkpoint(msg) => write!(f, "checkpoint error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+/// Streaming per-iteration callbacks: the memory-bounded replacement for
+/// mandatory history buffering.
+///
+/// Observers are registered with [`SessionBuilder::observer`] and see every
+/// iteration as it completes — live metrics, progress UIs and log sinks
+/// without retaining `O(max_iters)` records. For custom *stopping* rules,
+/// own the loop instead: call [`Session::step`] and break when your
+/// criterion fires.
+///
+/// ```
+/// use ad_admm::prelude::*;
+///
+/// /// Counts iterations and remembers the best objective seen.
+/// #[derive(Default)]
+/// struct Best {
+///     iters: usize,
+///     best: f64,
+/// }
+/// impl Observer for Best {
+///     fn on_start(&mut self, _state: &AdmmState) {
+///         self.best = f64::INFINITY;
+///     }
+///     fn on_iteration(&mut self, rec: &IterRecord, _state: &AdmmState) {
+///         self.iters += 1;
+///         if rec.objective < self.best {
+///             self.best = rec.objective;
+///         }
+///     }
+/// }
+///
+/// let mut rng = Pcg64::seed_from_u64(5);
+/// let problem = LassoInstance::synthetic(&mut rng, 3, 15, 6, 0.2, 0.1).problem();
+/// let mut best = Best::default();
+/// let mut session = Session::builder()
+///     .problem(&problem)
+///     .config(AdmmConfig { rho: 30.0, max_iters: 25, ..Default::default() })
+///     .observer(&mut best)
+///     .build()
+///     .unwrap();
+/// session.run_to_completion().unwrap();
+/// drop(session);
+/// assert_eq!(best.iters, 25);
+/// assert!(best.best.is_finite());
+/// ```
+pub trait Observer {
+    /// Once, before the first iteration (or once on resume), with the
+    /// initial (or restored) state.
+    fn on_start(&mut self, _state: &AdmmState) {}
+
+    /// After every completed master iteration, with that iteration's
+    /// record and the post-update state.
+    fn on_iteration(&mut self, _rec: &IterRecord, _state: &AdmmState) {}
+
+    /// Exactly once, when the run stops (early stop or iteration budget).
+    /// Not called if the session is dropped mid-run.
+    fn on_stop(&mut self, _stop: &StopReason, _state: &AdmmState) {}
+}
+
+impl<O: Observer + ?Sized> Observer for &mut O {
+    fn on_start(&mut self, state: &AdmmState) {
+        (**self).on_start(state)
+    }
+
+    fn on_iteration(&mut self, rec: &IterRecord, state: &AdmmState) {
+        (**self).on_iteration(rec, state)
+    }
+
+    fn on_stop(&mut self, stop: &StopReason, state: &AdmmState) {
+        (**self).on_stop(stop, state)
+    }
+}
+
+/// The [`Observer`] that reproduces the historical buffered-history
+/// behaviour: clones every [`IterRecord`] into a `Vec`. The legacy
+/// free-function wrappers run through one of these, which is how their
+/// outputs stay bit-for-bit identical to the pre-session drivers (pinned
+/// by the `engine_equivalence` golden suite).
+#[derive(Debug, Default)]
+pub struct BufferingObserver {
+    records: Vec<IterRecord>,
+}
+
+impl BufferingObserver {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The records buffered so far.
+    pub fn records(&self) -> &[IterRecord] {
+        &self.records
+    }
+
+    /// Consume the observer, yielding the buffered history.
+    pub fn into_records(self) -> Vec<IterRecord> {
+        self.records
+    }
+
+    /// Drain the buffered history, leaving the observer empty.
+    pub fn take(&mut self) -> Vec<IterRecord> {
+        std::mem::take(&mut self.records)
+    }
+}
+
+impl Observer for BufferingObserver {
+    fn on_iteration(&mut self, rec: &IterRecord, _state: &AdmmState) {
+        self.records.push(rec.clone());
+    }
+}
+
+/// What one [`Session::step`] call did.
+#[derive(Clone, Debug)]
+pub enum StepStatus {
+    /// One master iteration completed; its record. The session may have
+    /// stopped *on* this iteration — check [`Session::stop_reason`].
+    Iterated(IterRecord),
+    /// The run had already stopped; no iteration was performed.
+    Done(StopReason),
+}
+
+/// The final artifacts of a session, extracted by [`Session::finish`].
+#[derive(Clone, Debug)]
+pub struct SessionOutcome {
+    /// Final primal/dual state `({x_i}, x₀, {λ_i})`.
+    pub state: AdmmState,
+    /// Realized arrival sets — replayable through any source.
+    pub trace: ArrivalTrace,
+    /// Why the run stopped ([`StopReason::MaxIters`] if finished early by
+    /// the caller, mirroring the engine's historical initialization).
+    pub stop: StopReason,
+    /// Final per-worker delay counters.
+    pub final_delays: Vec<usize>,
+    /// Number of completed master iterations.
+    pub iterations: usize,
+}
+
+/// `doc.get(key)` with a typed missing-field error (shared by every
+/// checkpointable source's `load_checkpoint`).
+pub(crate) fn jget<'j>(doc: &'j JsonValue, key: &str) -> Result<&'j JsonValue, EngineError> {
+    doc.get(key)
+        .ok_or_else(|| EngineError::Checkpoint(format!("missing field {key:?}")))
+}
+
+fn get_usize(doc: &JsonValue, key: &str) -> Result<usize, EngineError> {
+    json_usize(jget(doc, key)?)
+        .map_err(|e| EngineError::Checkpoint(format!("field {key:?}: {e}")))
+}
+
+fn stop_to_json(stop: &Option<StopReason>) -> JsonValue {
+    match stop {
+        None => JsonValue::Null,
+        Some(StopReason::MaxIters) => "max_iters".into(),
+        Some(StopReason::X0Tolerance) => "x0_tolerance".into(),
+        Some(StopReason::Residuals) => "residuals".into(),
+        Some(StopReason::Diverged) => "diverged".into(),
+    }
+}
+
+fn stop_from_json(v: &JsonValue) -> Result<Option<StopReason>, EngineError> {
+    match v {
+        JsonValue::Null => Ok(None),
+        JsonValue::Str(s) => match s.as_str() {
+            "max_iters" => Ok(Some(StopReason::MaxIters)),
+            "x0_tolerance" => Ok(Some(StopReason::X0Tolerance)),
+            "residuals" => Ok(Some(StopReason::Residuals)),
+            "diverged" => Ok(Some(StopReason::Diverged)),
+            other => Err(EngineError::Checkpoint(format!("unknown stop reason {other:?}"))),
+        },
+        other => Err(EngineError::Checkpoint(format!("bad stop field: {other}"))),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint
+// ---------------------------------------------------------------------------
+
+/// A serialized mid-run snapshot of a [`Session`]: the `AdmmState`, delay
+/// counters, realized trace, iteration cursor and the worker source's own
+/// state (arrival-sampler RNG streams, per-worker `x₀`/`λ̂` snapshots, and
+/// — for the virtual-time source — the full event queue and clock).
+///
+/// Serialized through the dependency-free [`crate::bench::json`] writer
+/// with every `f64` encoded as its exact bit pattern, so
+/// [`SessionBuilder::resume`] continues **bit-identically** to an
+/// uninterrupted run. Resume requires a builder configured identically to
+/// the one that produced the checkpoint (same problem, config, policy and
+/// source construction); the checkpoint validates worker count, dimension
+/// and source kind, the rest is the caller's contract.
+///
+/// ```
+/// use ad_admm::prelude::*;
+///
+/// let mut rng = Pcg64::seed_from_u64(3);
+/// let problem = LassoInstance::synthetic(&mut rng, 3, 15, 6, 0.2, 0.1).problem();
+/// let cfg = AdmmConfig { rho: 30.0, tau: 2, max_iters: 40, ..Default::default() };
+/// let arrivals = ArrivalModel::probabilistic(vec![0.6; 3], 9);
+/// let build = || {
+///     Session::builder()
+///         .problem(&problem)
+///         .config(cfg.clone())
+///         .policy(PartialBarrier { tau: 2 })
+///         .arrivals(&arrivals)
+/// };
+///
+/// // Uninterrupted reference run.
+/// let mut full = build().build().unwrap();
+/// full.run_to_completion().unwrap();
+///
+/// // Interrupted run: 10 iterations, checkpoint (JSON round-trip), resume.
+/// let mut first = build().build().unwrap();
+/// first.run_for(10).unwrap();
+/// let cp = Checkpoint::from_json_str(&first.checkpoint().unwrap().to_json_string()).unwrap();
+/// let mut second = build().resume(&cp).unwrap();
+/// second.run_to_completion().unwrap();
+/// assert_eq!(second.state().x0, full.state().x0); // bit-identical
+/// ```
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    doc: JsonValue,
+}
+
+impl Checkpoint {
+    /// The `schema` marker every checkpoint document carries.
+    pub const SCHEMA: &'static str = "ad-admm-checkpoint";
+    /// Current checkpoint format version.
+    pub const VERSION: usize = 1;
+
+    fn validate(doc: &JsonValue) -> Result<(), EngineError> {
+        match doc.get("schema").and_then(JsonValue::as_str) {
+            Some(s) if s == Self::SCHEMA => {}
+            other => {
+                return Err(EngineError::Checkpoint(format!(
+                    "not an ad-admm checkpoint (schema field: {other:?})"
+                )))
+            }
+        }
+        let version = get_usize(doc, "version")?;
+        if version != Self::VERSION {
+            return Err(EngineError::Checkpoint(format!(
+                "unsupported checkpoint version {version} (this build reads version {})",
+                Self::VERSION
+            )));
+        }
+        let required =
+            ["k", "n_workers", "dim", "stop", "source_kind", "state", "delays", "trace", "source"];
+        for key in required {
+            jget(doc, key)?;
+        }
+        Ok(())
+    }
+
+    /// Wrap an already-parsed document (validates the envelope).
+    pub fn from_json(doc: JsonValue) -> Result<Self, EngineError> {
+        Self::validate(&doc)?;
+        Ok(Checkpoint { doc })
+    }
+
+    /// Parse a checkpoint from its JSON text.
+    pub fn from_json_str(text: &str) -> Result<Self, EngineError> {
+        let doc = json::parse(text)
+            .map_err(|e| EngineError::Checkpoint(format!("malformed checkpoint JSON: {e}")))?;
+        Self::from_json(doc)
+    }
+
+    /// The underlying document.
+    pub fn as_json(&self) -> &JsonValue {
+        &self.doc
+    }
+
+    /// Serialize to JSON text.
+    pub fn to_json_string(&self) -> String {
+        self.doc.to_string()
+    }
+
+    /// The master iteration this checkpoint was taken at (= completed
+    /// iterations; resume continues with this iteration).
+    pub fn iteration(&self) -> usize {
+        get_usize(&self.doc, "k").unwrap_or(0)
+    }
+
+    /// Worker count recorded in the checkpoint.
+    pub fn n_workers(&self) -> usize {
+        get_usize(&self.doc, "n_workers").unwrap_or(0)
+    }
+
+    /// Which [`WorkerSource::kind`] produced this checkpoint.
+    pub fn source_kind(&self) -> &str {
+        self.doc.get("source_kind").and_then(JsonValue::as_str).unwrap_or("")
+    }
+
+    /// Write the checkpoint to a file (atomic enough for a single writer:
+    /// staged through a `<name>.tmp` sibling then renamed — the suffix is
+    /// *appended* so checkpoints sharing a file stem never collide on the
+    /// staging path; any existing destination is removed first, since
+    /// rename-over-existing fails on Windows).
+    pub fn write_to_file<P: AsRef<Path>>(&self, path: P) -> std::io::Result<()> {
+        let path = path.as_ref();
+        let mut tmp_name = path.as_os_str().to_owned();
+        tmp_name.push(".tmp");
+        let tmp = std::path::PathBuf::from(tmp_name);
+        std::fs::write(&tmp, self.to_json_string())?;
+        if path.exists() {
+            std::fs::remove_file(path)?;
+        }
+        std::fs::rename(&tmp, path)
+    }
+
+    /// Read a checkpoint back from a file.
+    pub fn read_from_file<P: AsRef<Path>>(path: P) -> Result<Self, EngineError> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            EngineError::Checkpoint(format!("cannot read {}: {e}", path.display()))
+        })?;
+        Self::from_json_str(&text)
+    }
+
+    /// Attach (or replace) a caller-defined metadata entry under the
+    /// checkpoint's `meta` object — e.g. the CLI records the flags needed
+    /// to rebuild the problem for `ad_admm resume`.
+    pub fn set_meta(&mut self, key: &str, value: JsonValue) {
+        if let JsonValue::Obj(fields) = &mut self.doc {
+            let idx = match fields.iter().position(|(k, _)| k == "meta") {
+                Some(i) => i,
+                None => {
+                    fields.push(("meta".to_string(), JsonValue::Obj(Vec::new())));
+                    fields.len() - 1
+                }
+            };
+            if let JsonValue::Obj(entries) = &mut fields[idx].1 {
+                match entries.iter().position(|(k, _)| k == key) {
+                    Some(i) => entries[i].1 = value,
+                    None => entries.push((key.to_string(), value)),
+                }
+            }
+        }
+    }
+
+    /// Read a caller-defined metadata entry.
+    pub fn meta(&self, key: &str) -> Option<&JsonValue> {
+        self.doc.get("meta").and_then(|m| m.get(key))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Builder
+// ---------------------------------------------------------------------------
+
+enum SourceSpec<'a> {
+    Boxed(Box<dyn WorkerSource + 'a>),
+    Arrivals(ArrivalModel),
+}
+
+/// Typed, validating builder for [`Session`]. Every knob that used to be a
+/// free-function parameter or an `EngineOptions` field lives here; *all*
+/// config checks happen in [`SessionBuilder::build`] and return
+/// [`EngineError`] instead of panicking.
+///
+/// Defaults: policy = [`PartialBarrier`] at the config's τ (Algorithms
+/// 2/3, the paper's headline protocol); source = the in-process
+/// trace-driven source over [`ArrivalModel::Full`]; residual stopping on;
+/// no faults; no observers.
+pub struct SessionBuilder<'a> {
+    problem: Option<&'a ConsensusProblem>,
+    cfg: AdmmConfig,
+    policy: Option<Box<dyn UpdatePolicy + 'a>>,
+    source: Option<SourceSpec<'a>>,
+    observers: Vec<Box<dyn Observer + 'a>>,
+    fault_plan: Option<FaultPlan>,
+    residual_stopping: bool,
+}
+
+impl<'a> Default for SessionBuilder<'a> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<'a> SessionBuilder<'a> {
+    pub fn new() -> Self {
+        SessionBuilder {
+            problem: None,
+            cfg: AdmmConfig::default(),
+            policy: None,
+            source: None,
+            observers: Vec::new(),
+            fault_plan: None,
+            residual_stopping: true,
+        }
+    }
+
+    /// The consensus problem to solve (required).
+    pub fn problem(mut self, problem: &'a ConsensusProblem) -> Self {
+        self.problem = Some(problem);
+        self
+    }
+
+    /// Algorithm parameters (ρ, γ, τ, `min_arrivals`, iteration budget,
+    /// tolerances…). Defaults to [`AdmmConfig::default`].
+    pub fn config(mut self, cfg: AdmmConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// The update policy — *which algorithm of the paper runs*. Defaults
+    /// to [`PartialBarrier`] at the config's τ.
+    pub fn policy<P: UpdatePolicy + 'a>(mut self, policy: P) -> Self {
+        self.policy = Some(Box::new(policy));
+        self
+    }
+
+    /// An explicit worker source. Overrides [`SessionBuilder::arrivals`].
+    pub fn source<S: WorkerSource + 'a>(mut self, source: S) -> Self {
+        self.source = Some(SourceSpec::Boxed(Box::new(source)));
+        self
+    }
+
+    /// Convenience: drive the in-process trace-driven source
+    /// ([`TraceSource`]) from this arrival model. Default:
+    /// [`ArrivalModel::Full`].
+    pub fn arrivals(mut self, arrivals: &ArrivalModel) -> Self {
+        self.source = Some(SourceSpec::Arrivals(arrivals.clone()));
+        self
+    }
+
+    /// Register a streaming [`Observer`] (repeatable; called in
+    /// registration order).
+    pub fn observer<O: Observer + 'a>(mut self, observer: O) -> Self {
+        self.observers.push(Box::new(observer));
+        self
+    }
+
+    /// Deterministic worker outage / delay-spike schedule, enforced at the
+    /// master's gate identically in every source.
+    pub fn faults(mut self, plan: FaultPlan) -> Self {
+        self.fault_plan = Some(plan);
+        self
+    }
+
+    /// Evaluate the residual-based stopping rule when the config carries
+    /// one (on by default; the historical Algorithm-4 driver ran with this
+    /// off).
+    pub fn residual_stopping(mut self, enabled: bool) -> Self {
+        self.residual_stopping = enabled;
+        self
+    }
+
+    fn take_source(&mut self) -> Result<Box<dyn WorkerSource + 'a>, EngineError> {
+        let problem = self.problem.ok_or(EngineError::MissingProblem)?;
+        Ok(match self.source.take() {
+            Some(SourceSpec::Boxed(b)) => b,
+            Some(SourceSpec::Arrivals(model)) => Box::new(TraceSource::new(problem, &model)),
+            None => Box::new(TraceSource::new(problem, &ArrivalModel::Full)),
+        })
+    }
+
+    /// Validate everything and construct the session at iteration 0.
+    pub fn build(mut self) -> Result<Session<'a>, EngineError> {
+        let source = self.take_source()?;
+        self.into_session(source, None)
+    }
+
+    /// Validate everything and restore the session from `checkpoint`
+    /// instead of iteration 0. The builder must be configured identically
+    /// to the one that produced the checkpoint.
+    pub fn resume(mut self, checkpoint: &Checkpoint) -> Result<Session<'a>, EngineError> {
+        let source = self.take_source()?;
+        self.into_session(source, Some(checkpoint))
+    }
+
+    /// [`SessionBuilder::build`] with a concretely-typed source, so the
+    /// caller keeps by-value access to it after [`Session::finish`] (the
+    /// cluster uses this to read execution stats back out of the
+    /// virtual-time source). Any source set on the builder is ignored.
+    pub fn build_typed<S: WorkerSource + 'a>(
+        self,
+        source: S,
+    ) -> Result<Session<'a, S>, EngineError> {
+        self.into_session(source, None)
+    }
+
+    /// [`SessionBuilder::resume`] with a concretely-typed source.
+    pub fn resume_typed<S: WorkerSource + 'a>(
+        self,
+        source: S,
+        checkpoint: &Checkpoint,
+    ) -> Result<Session<'a, S>, EngineError> {
+        self.into_session(source, Some(checkpoint))
+    }
+
+    fn into_session<S: WorkerSource + 'a>(
+        self,
+        source: S,
+        checkpoint: Option<&Checkpoint>,
+    ) -> Result<Session<'a, S>, EngineError> {
+        let problem = self.problem.ok_or(EngineError::MissingProblem)?;
+        let cfg = self.cfg;
+        let n_workers = problem.num_workers();
+        let dim = problem.dim();
+
+        if !(cfg.rho > 0.0 && cfg.rho.is_finite()) {
+            return Err(EngineError::InvalidRho(cfg.rho));
+        }
+        if cfg.tau < 1 {
+            return Err(EngineError::InvalidTau(cfg.tau));
+        }
+        let policy = self
+            .policy
+            .unwrap_or_else(|| Box::new(PartialBarrier { tau: cfg.tau }));
+        if policy.tau() < 1 {
+            return Err(EngineError::InvalidTau(policy.tau()));
+        }
+        if cfg.min_arrivals < 1 || cfg.min_arrivals > n_workers {
+            return Err(EngineError::InvalidMinArrivals {
+                min_arrivals: cfg.min_arrivals,
+                n_workers,
+            });
+        }
+        if let Some(x0) = &cfg.init_x0 {
+            if x0.len() != dim {
+                return Err(EngineError::InitDimMismatch { got: x0.len(), dim });
+            }
+        }
+        if source.n_workers() != n_workers {
+            return Err(EngineError::WorkerCountMismatch {
+                source: source.n_workers(),
+                problem: n_workers,
+            });
+        }
+        if policy.order() == StepOrder::MasterFirst && !source.supports_master_first() {
+            return Err(EngineError::MasterFirstUnsupported { source: source.kind() });
+        }
+
+        let state = cfg.initial_state(n_workers, dim);
+        let mut scratch = MasterScratch::new();
+        // f_i(x_i) cache: only arrived workers' x_i move, so only they are
+        // re-evaluated (perf: N → |A_k| data passes per iteration). On
+        // resume the restore pass recomputes every entry from the restored
+        // iterates, so skip the N initial data passes entirely.
+        let mut f_cache = vec![0.0; n_workers];
+        if checkpoint.is_none() {
+            for i in 0..n_workers {
+                f_cache[i] = problem.local(i).eval_with(&state.xs[i], &mut scratch.ws);
+            }
+        }
+        let prev_x0 = state.x0.clone();
+
+        let mut session = Session {
+            problem,
+            cfg,
+            policy,
+            observers: self.observers,
+            fault_plan: self.fault_plan,
+            residual_stopping: self.residual_stopping,
+            source,
+            state,
+            d: vec![0; n_workers],
+            down: vec![false; n_workers],
+            arrived: vec![false; n_workers],
+            all: (0..n_workers).collect(),
+            f_cache,
+            scratch,
+            prev_x0,
+            trace: ArrivalTrace::default(),
+            k: 0,
+            stop: None,
+            source_started: false,
+            observers_started: false,
+        };
+        if let Some(cp) = checkpoint {
+            session.restore_from(cp)?;
+        }
+        Ok(session)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Session
+// ---------------------------------------------------------------------------
+
+/// An incremental run of the unified iteration engine: one (problem,
+/// config, policy, source) tuple with its full mid-run state, advanced one
+/// master iteration at a time.
+///
+/// Construct with [`Session::builder`]. The generic source parameter `S`
+/// defaults to a boxed trait object (what [`SessionBuilder::build`]
+/// returns); [`SessionBuilder::build_typed`] keeps a concrete source type
+/// so it can be recovered by value from [`Session::finish`].
+///
+/// Two sessions realizing the same arrival trace produce bit-identical
+/// iterates — the engine-refactor equivalence, which the session preserves
+/// by construction: [`Session::step`] *is* the engine's loop body.
+pub struct Session<'a, S: WorkerSource + 'a = Box<dyn WorkerSource + 'a>> {
+    problem: &'a ConsensusProblem,
+    cfg: AdmmConfig,
+    policy: Box<dyn UpdatePolicy + 'a>,
+    observers: Vec<Box<dyn Observer + 'a>>,
+    fault_plan: Option<FaultPlan>,
+    residual_stopping: bool,
+    source: S,
+    state: AdmmState,
+    /// Per-worker delay counters `d_i`.
+    d: Vec<usize>,
+    /// Per-iteration outage mask (recomputed from the fault plan).
+    down: Vec<bool>,
+    /// Reusable scratch mask for the delay-counter update.
+    arrived: Vec<bool>,
+    /// `0..N`, the full-broadcast index list.
+    all: Vec<usize>,
+    f_cache: Vec<f64>,
+    scratch: MasterScratch,
+    prev_x0: Vec<f64>,
+    trace: ArrivalTrace,
+    /// Completed master iterations.
+    k: usize,
+    stop: Option<StopReason>,
+    source_started: bool,
+    observers_started: bool,
+}
+
+impl<'a> Session<'a> {
+    /// Start configuring a session.
+    pub fn builder() -> SessionBuilder<'a> {
+        SessionBuilder::new()
+    }
+}
+
+impl<'a, S: WorkerSource + 'a> Session<'a, S> {
+    /// The problem this session solves.
+    pub fn problem(&self) -> &'a ConsensusProblem {
+        self.problem
+    }
+
+    /// The algorithm parameters.
+    pub fn config(&self) -> &AdmmConfig {
+        &self.cfg
+    }
+
+    /// Current primal/dual state.
+    pub fn state(&self) -> &AdmmState {
+        &self.state
+    }
+
+    /// Completed master iterations.
+    pub fn iteration(&self) -> usize {
+        self.k
+    }
+
+    /// Why the run stopped (None while still running).
+    pub fn stop_reason(&self) -> Option<&StopReason> {
+        self.stop.as_ref()
+    }
+
+    /// Realized arrival sets so far.
+    pub fn trace(&self) -> &ArrivalTrace {
+        &self.trace
+    }
+
+    /// Current per-worker delay counters.
+    pub fn delays(&self) -> &[usize] {
+        &self.d
+    }
+
+    /// The worker source (e.g. to inspect virtual-time execution stats).
+    pub fn source(&self) -> &S {
+        &self.source
+    }
+
+    fn ensure_started(&mut self) {
+        if !self.source_started {
+            self.source.start(&self.state, self.policy.as_ref());
+            self.source_started = true;
+        }
+        if !self.observers_started {
+            for obs in self.observers.iter_mut() {
+                obs.on_start(&self.state);
+            }
+            self.observers_started = true;
+        }
+    }
+
+    fn set_stop(&mut self, reason: StopReason) {
+        self.stop = Some(reason);
+        let reason = self.stop.as_ref().expect("just set");
+        for obs in self.observers.iter_mut() {
+            obs.on_stop(reason, &self.state);
+        }
+    }
+
+    /// Advance exactly one master iteration. This is the engine's loop
+    /// body — gather arrivals, absorb worker results, master `x₀` update,
+    /// policy post-step, broadcast, record, stop checks — so stepping to
+    /// completion is bit-identical to the one-shot drivers.
+    pub fn step(&mut self) -> Result<StepStatus, EngineError> {
+        if let Some(stop) = &self.stop {
+            return Ok(StepStatus::Done(stop.clone()));
+        }
+        // Start (source + observers) before the budget check so a
+        // max_iters = 0 session still honours the observer contract
+        // (on_start strictly before on_stop) and the legacy engine's
+        // source.start-before-the-loop behaviour.
+        self.ensure_started();
+        if self.k >= self.cfg.max_iters {
+            self.set_stop(StopReason::MaxIters);
+            return Ok(StepStatus::Done(StopReason::MaxIters));
+        }
+
+        let k = self.k;
+        let n_workers = self.state.xs.len();
+        let n = self.state.x0.len();
+        if let Some(plan) = &self.fault_plan {
+            plan.fill_down(k, &mut self.down);
+        }
+
+        let set = match self.policy.order() {
+            StepOrder::WorkersFirst => {
+                // Steps 3–5: gather the arrival set, absorb the arrived
+                // worker updates (19)/(23)/(47), advance delay counters.
+                let gate = Gate {
+                    tau: self.policy.tau(),
+                    min_arrivals: self.cfg.min_arrivals,
+                    down: &self.down,
+                };
+                let set = self.source.gather(k, &self.d, &gate);
+                {
+                    let mut view = MasterView {
+                        problem: self.problem,
+                        state: &mut self.state,
+                        f_cache: &mut self.f_cache,
+                        scratch: &mut self.scratch,
+                        rho: self.cfg.rho,
+                    };
+                    self.source.absorb(&set, &mut view, self.policy.as_ref());
+                }
+                super::engine::advance_delays(&set, &mut self.arrived, &mut self.d);
+
+                // (12)/(25)/(45): master x₀ update with the proximal γ.
+                self.prev_x0.copy_from_slice(&self.state.x0);
+                master_x0_update(
+                    self.problem,
+                    &mut self.state,
+                    self.cfg.rho,
+                    self.cfg.gamma,
+                    &mut self.scratch,
+                );
+
+                // Algorithm 4 (46): master refreshes ALL duals against the
+                // fresh x₀.
+                if self.policy.master_updates_all_duals() {
+                    for i in 0..n_workers {
+                        for j in 0..n {
+                            self.state.lams[i][j] +=
+                                self.cfg.rho * (self.state.xs[i][j] - self.state.x0[j]);
+                        }
+                    }
+                }
+
+                // Step 6: broadcast to the arrived workers only.
+                self.source.broadcast(&set, &self.state, self.policy.as_ref());
+                set
+            }
+            StepOrder::MasterFirst => {
+                // Algorithm 1: master x₀ update (6) from (xᵏ, λᵏ) first...
+                self.prev_x0.copy_from_slice(&self.state.x0);
+                master_x0_update(
+                    self.problem,
+                    &mut self.state,
+                    self.cfg.rho,
+                    self.cfg.gamma,
+                    &mut self.scratch,
+                );
+                // ...broadcast to every LIVE worker. A down worker keeps
+                // its last pre-outage snapshot (and its frozen x_i/λ_i):
+                // under a full barrier "dropped" means its contribution to
+                // the master update simply stops moving until rejoin.
+                if self.fault_plan.is_some() {
+                    let live: Vec<usize> = (0..n_workers).filter(|&i| !self.down[i]).collect();
+                    self.source.broadcast(&live, &self.state, self.policy.as_ref());
+                } else {
+                    self.source.broadcast(&self.all, &self.state, self.policy.as_ref());
+                }
+                // ...then every worker solves (7)+(8) against the fresh
+                // x₀^{k+1} (τ = 1 forces the full barrier at the gate).
+                let gate = Gate {
+                    tau: self.policy.tau(),
+                    min_arrivals: self.cfg.min_arrivals,
+                    down: &self.down,
+                };
+                let set = self.source.gather(k, &self.d, &gate);
+                {
+                    let mut view = MasterView {
+                        problem: self.problem,
+                        state: &mut self.state,
+                        f_cache: &mut self.f_cache,
+                        scratch: &mut self.scratch,
+                        rho: self.cfg.rho,
+                    };
+                    self.source.absorb(&set, &mut view, self.policy.as_ref());
+                }
+                super::engine::advance_delays(&set, &mut self.arrived, &mut self.d);
+                set
+            }
+        };
+
+        let rec = iter_record(
+            self.problem,
+            &self.state,
+            &self.cfg,
+            k,
+            set.len(),
+            &self.f_cache,
+            &mut self.scratch,
+            &self.prev_x0,
+        );
+        let early = divergence_or_tol_stop(&self.cfg, &self.state, &rec, k);
+        self.trace.sets.push(set);
+        self.k += 1;
+        for obs in self.observers.iter_mut() {
+            obs.on_iteration(&rec, &self.state);
+        }
+
+        if let Some(reason) = early {
+            self.set_stop(reason);
+            return Ok(StepStatus::Iterated(rec));
+        }
+        if self.residual_stopping {
+            if let Some(rule) = &self.cfg.stopping {
+                let r = super::stopping::residuals(&self.state, &self.prev_x0, self.cfg.rho);
+                if k > 0 && rule.satisfied(&r, n, n_workers) {
+                    self.set_stop(StopReason::Residuals);
+                    return Ok(StepStatus::Iterated(rec));
+                }
+            }
+        }
+        Ok(StepStatus::Iterated(rec))
+    }
+
+    /// Run at most `n` further iterations. Returns the stop reason if the
+    /// run ended within the budget, `None` otherwise.
+    pub fn run_for(&mut self, n: usize) -> Result<Option<StopReason>, EngineError> {
+        for _ in 0..n {
+            if let StepStatus::Done(reason) = self.step()? {
+                return Ok(Some(reason));
+            }
+        }
+        Ok(self.stop.clone())
+    }
+
+    /// Run until the session stops (early stop or iteration budget).
+    pub fn run_to_completion(&mut self) -> Result<StopReason, EngineError> {
+        loop {
+            if let StepStatus::Done(reason) = self.step()? {
+                return Ok(reason);
+            }
+        }
+    }
+
+    /// Serialize the full mid-run state. Supported by the trace-driven and
+    /// virtual-time sources; the real-thread source has live OS-thread
+    /// state and returns [`EngineError::CheckpointUnsupported`] (replay
+    /// its realized trace through a trace-driven session instead).
+    pub fn checkpoint(&mut self) -> Result<Checkpoint, EngineError> {
+        // The source's per-worker snapshots exist only after start; taking
+        // a k = 0 checkpoint before the first step must still capture them.
+        self.ensure_started();
+        let source_doc = self.source.save_checkpoint()?;
+        let n_workers = self.state.xs.len();
+        let doc = JsonValue::Obj(vec![
+            ("schema".to_string(), Checkpoint::SCHEMA.into()),
+            ("version".to_string(), JsonValue::Num(Checkpoint::VERSION as f64)),
+            ("k".to_string(), JsonValue::Num(self.k as f64)),
+            ("n_workers".to_string(), JsonValue::Num(n_workers as f64)),
+            ("dim".to_string(), JsonValue::Num(self.state.x0.len() as f64)),
+            ("stop".to_string(), stop_to_json(&self.stop)),
+            ("source_kind".to_string(), self.source.kind().into()),
+            (
+                "state".to_string(),
+                JsonValue::Obj(vec![
+                    ("x0".to_string(), hex_vec(&self.state.x0)),
+                    ("xs".to_string(), hex_mat(&self.state.xs)),
+                    ("lams".to_string(), hex_mat(&self.state.lams)),
+                ]),
+            ),
+            (
+                "delays".to_string(),
+                JsonValue::Arr(self.d.iter().map(|&v| JsonValue::Num(v as f64)).collect()),
+            ),
+            (
+                "trace".to_string(),
+                JsonValue::Arr(
+                    self.trace
+                        .sets
+                        .iter()
+                        .map(|set| {
+                            JsonValue::Arr(
+                                set.iter().map(|&i| JsonValue::Num(i as f64)).collect(),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
+            ("source".to_string(), source_doc),
+            ("meta".to_string(), JsonValue::Obj(Vec::new())),
+        ]);
+        Ok(Checkpoint { doc })
+    }
+
+    fn restore_from(&mut self, cp: &Checkpoint) -> Result<(), EngineError> {
+        let doc = cp.as_json();
+        let n_workers = self.problem.num_workers();
+        let dim = self.problem.dim();
+
+        let cp_workers = get_usize(doc, "n_workers")?;
+        if cp_workers != n_workers {
+            return Err(EngineError::Checkpoint(format!(
+                "checkpoint has {cp_workers} workers, the problem has {n_workers}"
+            )));
+        }
+        let cp_dim = get_usize(doc, "dim")?;
+        if cp_dim != dim {
+            return Err(EngineError::Checkpoint(format!(
+                "checkpoint has dimension {cp_dim}, the problem has {dim}"
+            )));
+        }
+        let kind = jget(doc, "source_kind")?
+            .as_str()
+            .ok_or_else(|| EngineError::Checkpoint("source_kind is not a string".to_string()))?;
+        if kind != self.source.kind() {
+            return Err(EngineError::Checkpoint(format!(
+                "checkpoint was taken from a {kind:?} source, resuming into {:?}",
+                self.source.kind()
+            )));
+        }
+
+        self.k = get_usize(doc, "k")?;
+        self.stop = stop_from_json(jget(doc, "stop")?)?;
+
+        let st = jget(doc, "state")?;
+        let x0 = vec_from_hex(jget(st, "x0")?).map_err(EngineError::Checkpoint)?;
+        let xs = mat_from_hex(jget(st, "xs")?).map_err(EngineError::Checkpoint)?;
+        let lams = mat_from_hex(jget(st, "lams")?).map_err(EngineError::Checkpoint)?;
+        if x0.len() != dim
+            || xs.len() != n_workers
+            || lams.len() != n_workers
+            || xs.iter().any(|x| x.len() != dim)
+            || lams.iter().any(|l| l.len() != dim)
+        {
+            return Err(EngineError::Checkpoint(
+                "state dimensions do not match the problem".to_string(),
+            ));
+        }
+        self.state = AdmmState { xs, x0, lams };
+
+        let mut d = Vec::with_capacity(n_workers);
+        for item in jget(doc, "delays")?.items() {
+            d.push(json_usize(item).map_err(EngineError::Checkpoint)?);
+        }
+        if d.len() != n_workers {
+            return Err(EngineError::Checkpoint(format!(
+                "delay counters have length {}, expected {n_workers}",
+                d.len()
+            )));
+        }
+        self.d = d;
+
+        let mut sets = Vec::new();
+        for row in jget(doc, "trace")?.items() {
+            let mut set = Vec::with_capacity(row.items().len());
+            for v in row.items() {
+                let i = json_usize(v).map_err(EngineError::Checkpoint)?;
+                if i >= n_workers {
+                    return Err(EngineError::Checkpoint(format!(
+                        "trace worker index {i} out of range"
+                    )));
+                }
+                set.push(i);
+            }
+            sets.push(set);
+        }
+        if sets.len() != self.k {
+            return Err(EngineError::Checkpoint(format!(
+                "trace has {} sets but the checkpoint is at iteration {}",
+                sets.len(),
+                self.k
+            )));
+        }
+        self.trace = ArrivalTrace { sets };
+
+        // f_i(x_i) is a pure function of the restored iterates: recomputing
+        // reproduces the uninterrupted run's cache bit-for-bit.
+        for i in 0..n_workers {
+            self.f_cache[i] = self
+                .problem
+                .local(i)
+                .eval_with(&self.state.xs[i], &mut self.scratch.ws);
+        }
+        self.prev_x0.copy_from_slice(&self.state.x0);
+
+        self.source.load_checkpoint(jget(doc, "source")?)?;
+        // The source's snapshots were restored, not initialized: starting
+        // it again would overwrite them with the resumed state.
+        self.source_started = true;
+        Ok(())
+    }
+
+    /// Consume the session, yielding its final artifacts and the source
+    /// (by value — typed sessions can read execution stats back out).
+    pub fn finish(self) -> (SessionOutcome, S) {
+        let outcome = SessionOutcome {
+            state: self.state,
+            trace: self.trace,
+            stop: self.stop.unwrap_or(StopReason::MaxIters),
+            final_delays: self.d,
+            iterations: self.k,
+        };
+        (outcome, self.source)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::LassoInstance;
+    use crate::rng::Pcg64;
+
+    fn lasso(seed: u64, n_workers: usize) -> ConsensusProblem {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        LassoInstance::synthetic(&mut rng, n_workers, 15, 6, 0.2, 0.1).problem()
+    }
+
+    #[test]
+    fn stop_reason_serialization_roundtrips() {
+        for stop in [
+            None,
+            Some(StopReason::MaxIters),
+            Some(StopReason::X0Tolerance),
+            Some(StopReason::Residuals),
+            Some(StopReason::Diverged),
+        ] {
+            assert_eq!(stop_from_json(&stop_to_json(&stop)).unwrap(), stop);
+        }
+        assert!(stop_from_json(&JsonValue::Str("bogus".into())).is_err());
+    }
+
+    #[test]
+    fn builder_defaults_run_synchronously() {
+        let p = lasso(11, 3);
+        let mut session = Session::builder()
+            .problem(&p)
+            .config(AdmmConfig { rho: 30.0, max_iters: 10, ..Default::default() })
+            .build()
+            .unwrap();
+        let stop = session.run_to_completion().unwrap();
+        assert_eq!(stop, StopReason::MaxIters);
+        assert_eq!(session.iteration(), 10);
+        // default source = Full arrivals: everyone arrives every iteration
+        assert!(session.trace().sets.iter().all(|s| s.len() == 3));
+    }
+
+    #[test]
+    fn step_after_done_is_idempotent() {
+        let p = lasso(12, 2);
+        let mut session = Session::builder()
+            .problem(&p)
+            .config(AdmmConfig { rho: 20.0, max_iters: 3, ..Default::default() })
+            .build()
+            .unwrap();
+        assert!(matches!(session.step().unwrap(), StepStatus::Iterated(_)));
+        session.run_to_completion().unwrap();
+        assert!(matches!(session.step().unwrap(), StepStatus::Done(StopReason::MaxIters)));
+        assert!(matches!(session.step().unwrap(), StepStatus::Done(StopReason::MaxIters)));
+        assert_eq!(session.iteration(), 3);
+    }
+
+    #[test]
+    fn observers_fire_in_order_and_exactly_once() {
+        use std::cell::RefCell;
+        use std::rc::Rc;
+
+        #[derive(Default)]
+        struct Log {
+            events: Rc<RefCell<Vec<&'static str>>>,
+        }
+        impl Observer for Log {
+            fn on_start(&mut self, _s: &AdmmState) {
+                self.events.borrow_mut().push("start");
+            }
+            fn on_iteration(&mut self, _r: &IterRecord, _s: &AdmmState) {
+                self.events.borrow_mut().push("iter");
+            }
+            fn on_stop(&mut self, _stop: &StopReason, _s: &AdmmState) {
+                self.events.borrow_mut().push("stop");
+            }
+        }
+
+        let events = Rc::new(RefCell::new(Vec::new()));
+        let p = lasso(13, 2);
+        let mut session = Session::builder()
+            .problem(&p)
+            .config(AdmmConfig { rho: 20.0, max_iters: 2, ..Default::default() })
+            .observer(Log { events: Rc::clone(&events) })
+            .build()
+            .unwrap();
+        session.run_to_completion().unwrap();
+        // stepping again must not re-fire on_stop
+        session.step().unwrap();
+        assert_eq!(*events.borrow(), vec!["start", "iter", "iter", "stop"]);
+    }
+
+    #[test]
+    fn checkpoint_envelope_is_validated() {
+        assert!(Checkpoint::from_json_str("").is_err());
+        assert!(Checkpoint::from_json_str("{}").is_err());
+        assert!(Checkpoint::from_json_str(r#"{"schema": "other"}"#).is_err());
+        let wrong_version = format!(
+            r#"{{"schema": "{}", "version": 99}}"#,
+            Checkpoint::SCHEMA
+        );
+        assert!(Checkpoint::from_json_str(&wrong_version).is_err());
+    }
+
+    #[test]
+    fn checkpoint_meta_set_and_read_back() {
+        let p = lasso(14, 2);
+        let mut session = Session::builder()
+            .problem(&p)
+            .config(AdmmConfig { rho: 20.0, max_iters: 4, ..Default::default() })
+            .build()
+            .unwrap();
+        session.run_for(2).unwrap();
+        let mut cp = session.checkpoint().unwrap();
+        cp.set_meta("cli", JsonValue::Obj(vec![("workers".to_string(), JsonValue::Num(2.0))]));
+        cp.set_meta("label", "first".into());
+        cp.set_meta("label", "second".into());
+        let round = Checkpoint::from_json_str(&cp.to_json_string()).unwrap();
+        assert_eq!(round.iteration(), 2);
+        assert_eq!(round.n_workers(), 2);
+        assert_eq!(round.source_kind(), "trace");
+        assert_eq!(round.meta("label").and_then(JsonValue::as_str), Some("second"));
+        assert_eq!(
+            round.meta("cli").and_then(|c| c.get("workers")).and_then(JsonValue::as_f64),
+            Some(2.0)
+        );
+    }
+
+    #[test]
+    fn engine_error_display_is_informative() {
+        let errs = [
+            EngineError::MissingProblem,
+            EngineError::InvalidRho(-1.0),
+            EngineError::InvalidTau(0),
+            EngineError::InvalidMinArrivals { min_arrivals: 9, n_workers: 4 },
+            EngineError::InitDimMismatch { got: 3, dim: 5 },
+            EngineError::WorkerCountMismatch { source: 2, problem: 4 },
+            EngineError::MasterFirstUnsupported { source: "virtual" },
+            EngineError::CheckpointUnsupported { source: "threaded" },
+            EngineError::Checkpoint("bad".to_string()),
+        ];
+        for e in errs {
+            let text = e.to_string();
+            assert!(!text.is_empty());
+            let _: &dyn std::error::Error = &e;
+        }
+    }
+}

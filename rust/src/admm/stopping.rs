@@ -68,6 +68,7 @@ impl StoppingRule {
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // exercises the legacy free-function drivers
 mod tests {
     use super::*;
 

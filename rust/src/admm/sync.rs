@@ -29,6 +29,11 @@ pub struct SyncOutput {
 /// evaluated the objective unconditionally) — callers that read
 /// `history.last().objective` must leave `objective_every` at its default
 /// of 1.
+///
+/// Deprecated: build a [`crate::admm::session::Session`] with the
+/// [`FullBarrier`] policy instead (typed errors, streaming observers,
+/// step/checkpoint/resume).
+#[deprecated(note = "use Session::builder()")]
 pub fn run_sync_admm(problem: &ConsensusProblem, cfg: &AdmmConfig) -> SyncOutput {
     let mut solver = NativeSolver::new(problem);
     run_sync_admm_with_solver(problem, cfg, &mut solver)
@@ -37,6 +42,7 @@ pub fn run_sync_admm(problem: &ConsensusProblem, cfg: &AdmmConfig) -> SyncOutput
 /// Thin wrapper over the unified engine: the [`FullBarrier`] policy
 /// (master-first order, everyone forced every iteration) driven by the
 /// in-process [`TraceSource`] with the full arrival model.
+#[deprecated(note = "use Session::builder()")]
 pub fn run_sync_admm_with_solver(
     problem: &ConsensusProblem,
     cfg: &AdmmConfig,
@@ -48,6 +54,7 @@ pub fn run_sync_admm_with_solver(
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the deprecated wrappers stay pinned by these tests
 mod tests {
     use super::*;
     use crate::admm::arrivals::ArrivalModel;

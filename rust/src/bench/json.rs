@@ -368,6 +368,85 @@ impl<'a> Parser<'a> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Bit-exact numeric codecs (used by the session-checkpoint format)
+// ---------------------------------------------------------------------------
+
+/// Encode an `f64` as its exact 16-hex-digit bit pattern. The JSON number
+/// path round-trips finite values but collapses NaN/Inf to `null`; the bit
+/// pattern is lossless for *every* value, which bit-identical
+/// checkpoint/resume needs (a divergence checkpoint legitimately holds
+/// non-finite state).
+pub fn hex_f64(v: f64) -> JsonValue {
+    JsonValue::Str(format!("{:016x}", v.to_bits()))
+}
+
+pub fn f64_from_hex(v: &JsonValue) -> Result<f64, String> {
+    let s = v.as_str().ok_or_else(|| format!("expected hex f64 string, got {v}"))?;
+    let bits = u64::from_str_radix(s, 16).map_err(|_| format!("bad f64 hex {s:?}"))?;
+    Ok(f64::from_bits(bits))
+}
+
+/// Encode a `u128` (PCG-64 RNG state words) as a 32-hex-digit string —
+/// JSON numbers are f64 and cannot carry 128 bits.
+pub fn hex_u128(v: u128) -> JsonValue {
+    JsonValue::Str(format!("{v:032x}"))
+}
+
+pub fn u128_from_hex(v: &JsonValue) -> Result<u128, String> {
+    let s = v.as_str().ok_or_else(|| format!("expected hex u128 string, got {v}"))?;
+    u128::from_str_radix(s, 16).map_err(|_| format!("bad u128 hex {s:?}"))
+}
+
+/// A vector of bit-exact [`hex_f64`] strings.
+pub fn hex_vec(xs: &[f64]) -> JsonValue {
+    JsonValue::Arr(xs.iter().map(|&v| hex_f64(v)).collect())
+}
+
+pub fn vec_from_hex(v: &JsonValue) -> Result<Vec<f64>, String> {
+    v.items().iter().map(f64_from_hex).collect()
+}
+
+/// A matrix (vec of rows) of bit-exact [`hex_f64`] strings.
+pub fn hex_mat(m: &[Vec<f64>]) -> JsonValue {
+    JsonValue::Arr(m.iter().map(|row| hex_vec(row)).collect())
+}
+
+pub fn mat_from_hex(v: &JsonValue) -> Result<Vec<Vec<f64>>, String> {
+    v.items().iter().map(vec_from_hex).collect()
+}
+
+/// Read a non-negative integer that fits `usize` exactly (rejects
+/// fractional values and anything at/above 2^53 where f64 loses integer
+/// precision).
+pub fn json_usize(v: &JsonValue) -> Result<usize, String> {
+    match v.as_f64() {
+        Some(x) if x >= 0.0 && x.fract() == 0.0 && x < 9.0e15 => Ok(x as usize),
+        _ => Err(format!("expected a non-negative integer, got {v}")),
+    }
+}
+
+/// The bench-report schema version this build reads and writes.
+pub const REPORT_SCHEMA_VERSION: u32 = 1;
+
+/// Validate a bench-report document's schema version. Returns the version
+/// when it is one this build understands; a clear error for a missing,
+/// non-numeric or unknown `schema` field (used by `bench_diff` to reject
+/// malformed baselines instead of silently mis-comparing them).
+pub fn report_schema(doc: &JsonValue) -> Result<u32, String> {
+    match doc.get("schema") {
+        None => Err("missing \"schema\" field (not a bench report?)".to_string()),
+        Some(v) => match v.as_f64() {
+            Some(s) if s == REPORT_SCHEMA_VERSION as f64 => Ok(REPORT_SCHEMA_VERSION),
+            Some(s) => Err(format!(
+                "unsupported bench-report schema version {s} \
+                 (this build reads version {REPORT_SCHEMA_VERSION})"
+            )),
+            None => Err(format!("\"schema\" field is not a number: {v}")),
+        },
+    }
+}
+
 /// Builder for one bench binary's `BENCH_<name>.json` report.
 pub struct BenchReport {
     name: String,
@@ -505,6 +584,87 @@ mod tests {
         assert!(parse("{").is_err());
         assert!(parse("[1,]").is_err());
         assert!(parse("{} garbage").is_err());
+    }
+
+    #[test]
+    fn hex_f64_roundtrips_every_class_of_value() {
+        for v in [
+            0.0,
+            -0.0,
+            1.5,
+            -1.0 / 3.0,
+            f64::MIN_POSITIVE,
+            f64::MAX,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::NAN,
+        ] {
+            let back = f64_from_hex(&hex_f64(v)).unwrap();
+            assert_eq!(v.to_bits(), back.to_bits(), "value {v}");
+        }
+        assert!(f64_from_hex(&JsonValue::Num(1.0)).is_err());
+        assert!(f64_from_hex(&JsonValue::Str("zz".into())).is_err());
+    }
+
+    #[test]
+    fn hex_u128_roundtrips() {
+        for v in [0u128, 1, u128::MAX, 0x0123_4567_89ab_cdef_u128] {
+            assert_eq!(u128_from_hex(&hex_u128(v)).unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn hex_vectors_and_matrices_roundtrip_through_json_text() {
+        let m = vec![vec![1.0, f64::NAN], vec![-0.0, 1e-308]];
+        let text = hex_mat(&m).to_string();
+        let back = mat_from_hex(&parse(&text).unwrap()).unwrap();
+        for (a, b) in m.iter().zip(&back) {
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn json_usize_bounds() {
+        assert_eq!(json_usize(&JsonValue::Num(0.0)), Ok(0));
+        assert_eq!(json_usize(&JsonValue::Num(42.0)), Ok(42));
+        assert!(json_usize(&JsonValue::Num(-1.0)).is_err());
+        assert!(json_usize(&JsonValue::Num(1.5)).is_err());
+        assert!(json_usize(&JsonValue::Num(1e16)).is_err());
+        assert!(json_usize(&JsonValue::Str("3".into())).is_err());
+    }
+
+    #[test]
+    fn parse_edge_cases_fail_cleanly() {
+        // empty file
+        assert!(parse("").is_err());
+        assert!(parse("   \n\t").is_err());
+        // truncated object/array/string/literal
+        assert!(parse("{\"a\"").is_err());
+        assert!(parse("{\"a\": 1").is_err());
+        assert!(parse("{\"a\": ").is_err());
+        assert!(parse("[1, 2").is_err());
+        assert!(parse("\"unterminated").is_err());
+        assert!(parse("tru").is_err());
+        // bad number
+        assert!(parse("1e").is_err());
+    }
+
+    #[test]
+    fn report_schema_validation() {
+        let good = parse(r#"{"schema": 1, "name": "x"}"#).unwrap();
+        assert_eq!(report_schema(&good), Ok(REPORT_SCHEMA_VERSION));
+        // unknown schema version
+        let future = parse(r#"{"schema": 99}"#).unwrap();
+        assert!(report_schema(&future).unwrap_err().contains("unsupported"));
+        // missing / non-numeric schema field
+        let missing = parse(r#"{"name": "x"}"#).unwrap();
+        assert!(report_schema(&missing).is_err());
+        let stringy = parse(r#"{"schema": "1"}"#).unwrap();
+        assert!(report_schema(&stringy).is_err());
+        // a real BenchReport always validates
+        assert_eq!(report_schema(&BenchReport::new("unit").to_json()), Ok(1));
     }
 
     #[test]

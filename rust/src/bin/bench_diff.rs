@@ -15,13 +15,18 @@
 //! `"provisional": true`, which marks authored upper bounds that have not
 //! yet been replaced by measured numbers: those always warn without
 //! failing, so the gate can be blocking before every baseline is real.
-//! Missing files/keys and quick-vs-full mismatches are reported and
-//! skipped, never failed.
+//!
+//! Error semantics: a missing baseline *directory*, or a baseline file
+//! that is unreadable, malformed JSON, or an unknown schema version, is a
+//! clear exit-2 error (baselines are committed files — corruption must
+//! never make the gate vacuously green). A missing or unreadable
+//! *candidate* report and quick-vs-full mismatches are reported and
+//! skipped (the bench may simply not have run), never failed.
 
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
-use ad_admm::bench::json::{parse, JsonValue};
+use ad_admm::bench::json::{self, parse, JsonValue};
 
 struct Comparison {
     key: String,
@@ -139,13 +144,20 @@ fn main() -> ExitCode {
     for base_path in &baselines {
         let file = base_path.file_name().unwrap().to_string_lossy().into_owned();
         let cand_path = candidate_dir.join(&file);
+        // A baseline is a committed file: unreadable/malformed/unknown-schema
+        // is repo corruption and must be a clear, blocking error — not a
+        // silent skip that would make the gate vacuously green.
         let base = match load(base_path) {
             Ok(v) => v,
             Err(e) => {
-                println!("~ {file}: unreadable baseline ({e}), skipping");
-                continue;
+                eprintln!("error: malformed baseline {file}: {e}");
+                return ExitCode::from(2);
             }
         };
+        if let Err(e) = json::report_schema(&base) {
+            eprintln!("error: baseline {file}: {e}");
+            return ExitCode::from(2);
+        }
         if !cand_path.exists() {
             println!("~ {file}: no candidate report (bench not run?), skipping");
             continue;

@@ -120,6 +120,24 @@ impl EventQueue {
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }
+
+    /// Deterministic snapshot for checkpointing: every pending event in
+    /// ascending `(time, seq)` order plus the sequence counter.
+    pub fn snapshot(&self) -> (Vec<Event>, u64) {
+        let mut events: Vec<Event> = self.heap.iter().map(|r| r.0).collect();
+        events.sort();
+        (events, self.next_seq)
+    }
+
+    /// Rebuild a queue from a [`EventQueue::snapshot`]: the events keep
+    /// their original sequence numbers, so FIFO tie-breaking — and with it
+    /// the whole simulation — continues bit-identically.
+    pub fn restore(events: Vec<Event>, next_seq: u64) -> Self {
+        EventQueue {
+            heap: events.into_iter().map(std::cmp::Reverse).collect(),
+            next_seq,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -154,6 +172,23 @@ mod tests {
         }
         let order: Vec<usize> = std::iter::from_fn(|| q.pop()).map(|e| e.worker).collect();
         assert_eq!(order, vec![5, 3, 9, 1], "FIFO among ties");
+    }
+
+    #[test]
+    fn snapshot_restore_preserves_order_and_ties() {
+        let mut q = EventQueue::new();
+        q.push(2.0, 0, EventKind::Arrive);
+        q.push(1.0, 1, EventKind::ComputeDone);
+        q.push(1.0, 2, EventKind::Arrive); // FIFO tie with worker 1's event
+        let (events, next_seq) = q.snapshot();
+        assert_eq!(next_seq, 3);
+        assert_eq!(events.iter().map(|e| e.worker).collect::<Vec<_>>(), vec![1, 2, 0]);
+        let mut restored = EventQueue::restore(events, next_seq);
+        // a new push must sort after the restored tie at t = 1.0
+        restored.push(1.0, 9, EventKind::Arrive);
+        let order: Vec<usize> =
+            std::iter::from_fn(|| restored.pop()).map(|e| e.worker).collect();
+        assert_eq!(order, vec![1, 2, 9, 0]);
     }
 
     #[test]

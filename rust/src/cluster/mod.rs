@@ -36,11 +36,14 @@ pub mod worker;
 
 use crate::admm::arrivals::ArrivalTrace;
 use crate::admm::engine::{self, run_engine, EngineRun, PartialBarrier, WorkerSource};
+use crate::admm::session::{Checkpoint, EngineError, Session, SessionOutcome};
 use crate::admm::{AdmmConfig, AdmmState, IterRecord, StopReason};
+use crate::bench::json::{hex_u128, u128_from_hex, JsonValue};
 use crate::problems::ConsensusProblem;
 use crate::rng::Pcg64;
 
 pub use crate::admm::engine::{DelaySpike, FaultPlan, Outage};
+pub use sim::VirtualSource;
 pub use clock::VirtualClock;
 pub use messages::{MasterMsg, WorkerMsg};
 pub use pool::WorkerPool;
@@ -132,6 +135,41 @@ impl DelaySampler {
             DelaySampler::None => 0.0,
             DelaySampler::Fixed(ms) => *ms,
             DelaySampler::LogNormal { mu, sigma, rng } => rng.lognormal(*mu, *sigma),
+        }
+    }
+
+    /// Serialize this sampler's mid-run state for a session checkpoint.
+    /// `None`/`Fixed` draws are stateless (the values are rebuilt from the
+    /// config); only the log-normal stream carries RNG state.
+    pub(crate) fn save(&self) -> JsonValue {
+        match self {
+            DelaySampler::None | DelaySampler::Fixed(_) => JsonValue::Null,
+            DelaySampler::LogNormal { rng, .. } => {
+                let (state, inc) = rng.to_raw();
+                JsonValue::Obj(vec![
+                    ("rng_state".to_string(), hex_u128(state)),
+                    ("rng_inc".to_string(), hex_u128(inc)),
+                ])
+            }
+        }
+    }
+
+    /// Restore state produced by [`DelaySampler::save`] into a sampler
+    /// freshly rebuilt from the same [`DelayModel`].
+    pub(crate) fn load(&mut self, doc: &JsonValue) -> Result<(), String> {
+        match (&mut *self, doc) {
+            (DelaySampler::None | DelaySampler::Fixed(_), JsonValue::Null) => Ok(()),
+            (DelaySampler::LogNormal { rng, .. }, JsonValue::Obj(_)) => {
+                let state = u128_from_hex(
+                    doc.get("rng_state").ok_or_else(|| "missing rng_state".to_string())?,
+                )?;
+                let inc = u128_from_hex(
+                    doc.get("rng_inc").ok_or_else(|| "missing rng_inc".to_string())?,
+                )?;
+                *rng = Pcg64::from_raw(state, inc);
+                Ok(())
+            }
+            _ => Err("delay-sampler checkpoint does not match the configured model".to_string()),
         }
     }
 }
@@ -226,6 +264,28 @@ impl ClusterReport {
     pub fn iters_per_sec(&self) -> f64 {
         self.history.len() as f64 / self.wall_clock_s.max(1e-12)
     }
+
+    /// Assemble a report from a finished incremental virtual-time session
+    /// (see [`StarCluster::virtual_session`]). `history` is whatever the
+    /// caller's observer collected — pass an empty `Vec` for a
+    /// memory-bounded run that never buffered (then `iters_per_sec` is
+    /// meaningless and `outcome.iterations` is the count to use).
+    pub fn from_virtual_parts(
+        outcome: SessionOutcome,
+        history: Vec<IterRecord>,
+        source: VirtualSource,
+    ) -> ClusterReport {
+        let (workers, wall_clock_s, master_wait_s) = source.finish();
+        ClusterReport {
+            state: outcome.state,
+            history,
+            trace: outcome.trace,
+            stop: outcome.stop,
+            wall_clock_s,
+            master_wait_s,
+            workers,
+        }
+    }
 }
 
 /// The threaded star cluster.
@@ -278,6 +338,58 @@ impl StarCluster {
             workers,
         }
     }
+
+    /// The protocol/fault translation for the incremental sessions —
+    /// mirror of [`run_cluster_engine`]'s, so a session realizes the same
+    /// semantics as [`StarCluster::run`]: `AdAdmm` → [`PartialBarrier`],
+    /// `AltScheme` → [`engine::AltScheme`], fault plan → builder faults.
+    fn session_builder(&self, cfg: &ClusterConfig) -> crate::admm::session::SessionBuilder<'_> {
+        let mut builder = Session::builder()
+            .problem(&self.problem)
+            .config(cfg.admm.clone())
+            .residual_stopping(true);
+        builder = match cfg.protocol {
+            Protocol::AdAdmm => builder.policy(PartialBarrier { tau: cfg.admm.tau }),
+            Protocol::AltScheme => builder.policy(engine::AltScheme { tau: cfg.admm.tau }),
+        };
+        if let Some(plan) = &cfg.fault_plan {
+            builder = builder.faults(plan.clone());
+        }
+        builder
+    }
+
+    /// An **incremental** virtual-time cluster run: a typed
+    /// [`Session`] over the deterministic discrete-event
+    /// [`VirtualSource`], supporting `step()`, observers and — unlike the
+    /// real-thread mode — bit-identical [`Checkpoint`]/resume (the full
+    /// event queue, virtual clock and every RNG stream serialize). Returns
+    /// [`EngineError::Checkpoint`]-style typed errors instead of
+    /// panicking on bad configs.
+    ///
+    /// Finish with [`Session::finish`] and
+    /// [`ClusterReport::from_virtual_parts`] to recover the utilization
+    /// report.
+    pub fn virtual_session(
+        &self,
+        cfg: &ClusterConfig,
+    ) -> Result<Session<'_, VirtualSource>, EngineError> {
+        let source = VirtualSource::new(self.problem.num_workers(), cfg, None);
+        self.session_builder(cfg).build_typed(source)
+    }
+
+    /// Resume a virtual-time cluster session from a [`Checkpoint`] taken
+    /// by [`StarCluster::virtual_session`]. `cfg` must be the
+    /// configuration the checkpointed run was built with; the resumed run
+    /// continues **bit-identically** to the uninterrupted one (pinned by
+    /// the `session_api` suite and the CLI round-trip test).
+    pub fn resume_virtual_session(
+        &self,
+        cfg: &ClusterConfig,
+        checkpoint: &Checkpoint,
+    ) -> Result<Session<'_, VirtualSource>, EngineError> {
+        let source = VirtualSource::new(self.problem.num_workers(), cfg, None);
+        self.session_builder(cfg).resume_typed(source, checkpoint)
+    }
 }
 
 /// The one place a [`ClusterConfig`] is translated into an engine run:
@@ -293,7 +405,7 @@ pub(crate) fn run_cluster_engine(
 ) -> EngineRun {
     let opts = engine::EngineOptions {
         residual_stopping: true,
-        fault_plan: cfg.fault_plan.as_ref(),
+        fault_plan: cfg.fault_plan.clone(),
     };
     match cfg.protocol {
         Protocol::AdAdmm => {

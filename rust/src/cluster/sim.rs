@@ -33,7 +33,11 @@
 //! compute/transit legs on the virtual clock.
 
 use crate::admm::engine::{Gate, MasterView, UpdatePolicy, WorkerSource};
+use crate::admm::session::{jget, EngineError};
 use crate::admm::AdmmState;
+use crate::bench::json::{
+    f64_from_hex, hex_f64, hex_mat, hex_u128, json_usize, mat_from_hex, u128_from_hex, JsonValue,
+};
 use crate::problems::{ConsensusProblem, WorkerScratch};
 use crate::rng::Pcg64;
 use crate::util::timer::Clock;
@@ -79,7 +83,17 @@ struct SolveTask<'a> {
 
 /// The discrete-event [`WorkerSource`]: mirrors the threaded star cluster
 /// event-for-event on a [`VirtualClock`], deterministically.
-pub(crate) struct VirtualSource {
+///
+/// Public (with crate-internal construction through
+/// [`super::StarCluster::virtual_session`]) so incremental sessions can be
+/// typed as `Session<'_, VirtualSource>` and hand the source back by value
+/// at [`crate::admm::session::Session::finish`] — that is how the
+/// utilization stats survive into a [`super::ClusterReport`]. Unlike the
+/// real-thread source this one is fully checkpointable: the event queue,
+/// virtual clock, per-worker delay/fault RNG streams, held messages and
+/// execution stats all serialize, so a resumed simulation continues
+/// bit-identically.
+pub struct VirtualSource {
     workers: Vec<VirtualWorker>,
     stats: Vec<WorkerStats>,
     pool: WorkerPool,
@@ -207,7 +221,7 @@ impl VirtualSource {
     /// Consume the source at end of run: per-worker stats (lifetimes
     /// stamped with the final virtual instant), total simulated seconds,
     /// and the master's simulated wait.
-    pub(crate) fn finish(mut self) -> (Vec<WorkerStats>, f64, f64) {
+    pub fn finish(mut self) -> (Vec<WorkerStats>, f64, f64) {
         let total_s = self.vclock.now_s();
         for w in self.stats.iter_mut() {
             w.lifetime_s = total_s;
@@ -219,6 +233,172 @@ impl VirtualSource {
 impl WorkerSource for VirtualSource {
     fn n_workers(&self) -> usize {
         self.pending.len()
+    }
+
+    fn kind(&self) -> &'static str {
+        "virtual"
+    }
+
+    fn save_checkpoint(&self) -> Result<JsonValue, EngineError> {
+        let (events, next_seq) = self.queue.snapshot();
+        let events_json = JsonValue::Arr(
+            events
+                .iter()
+                .map(|e| {
+                    JsonValue::Obj(vec![
+                        ("t".to_string(), hex_f64(e.time_s)),
+                        ("seq".to_string(), JsonValue::Num(e.seq as f64)),
+                        ("worker".to_string(), JsonValue::Num(e.worker as f64)),
+                        (
+                            "kind".to_string(),
+                            match e.kind {
+                                EventKind::ComputeDone => "compute_done",
+                                EventKind::Arrive => "arrive",
+                            }
+                            .into(),
+                        ),
+                    ])
+                })
+                .collect(),
+        );
+        let workers_json = JsonValue::Arr(
+            self.workers
+                .iter()
+                .zip(&self.stats)
+                .map(|(w, s)| {
+                    let fault_rng = match &w.fault_rng {
+                        None => JsonValue::Null,
+                        Some(rng) => {
+                            let (state, inc) = rng.to_raw();
+                            JsonValue::Obj(vec![
+                                ("rng_state".to_string(), hex_u128(state)),
+                                ("rng_inc".to_string(), hex_u128(inc)),
+                            ])
+                        }
+                    };
+                    JsonValue::Obj(vec![
+                        ("compute".to_string(), w.compute.save()),
+                        (
+                            "comm".to_string(),
+                            match &w.comm {
+                                Some(c) => c.save(),
+                                None => JsonValue::Null,
+                            },
+                        ),
+                        ("fault_rng".to_string(), fault_rng),
+                        ("inflight_compute_s".to_string(), hex_f64(w.inflight_compute_s)),
+                        ("inflight_transit_s".to_string(), hex_f64(w.inflight_transit_s)),
+                        ("updates".to_string(), JsonValue::Num(s.updates as f64)),
+                        ("busy_s".to_string(), hex_f64(s.busy_s)),
+                        (
+                            "retransmissions".to_string(),
+                            JsonValue::Num(s.retransmissions as f64),
+                        ),
+                    ])
+                })
+                .collect(),
+        );
+        Ok(JsonValue::Obj(vec![
+            ("now_s".to_string(), hex_f64(self.vclock.now_s())),
+            ("master_wait_s".to_string(), hex_f64(self.master_wait_s)),
+            ("next_seq".to_string(), JsonValue::Num(next_seq as f64)),
+            ("events".to_string(), events_json),
+            (
+                "pending".to_string(),
+                JsonValue::Arr(self.pending.iter().map(|&p| JsonValue::Bool(p)).collect()),
+            ),
+            ("x0_snap".to_string(), hex_mat(&self.x0_snap)),
+            ("lam_snap".to_string(), hex_mat(&self.lam_snap)),
+            ("workers".to_string(), workers_json),
+        ]))
+    }
+
+    fn load_checkpoint(&mut self, doc: &JsonValue) -> Result<(), EngineError> {
+        let n = self.pending.len();
+        let bad = |msg: String| EngineError::Checkpoint(msg);
+
+        let now_s = f64_from_hex(jget(doc, "now_s")?).map_err(bad)?;
+        let master_wait_s = f64_from_hex(jget(doc, "master_wait_s")?).map_err(bad)?;
+        let next_seq = json_usize(jget(doc, "next_seq")?).map_err(bad)? as u64;
+
+        let mut events = Vec::new();
+        for ev in jget(doc, "events")?.items() {
+            let time_s = f64_from_hex(jget(ev, "t")?).map_err(bad)?;
+            let seq = json_usize(jget(ev, "seq")?).map_err(bad)? as u64;
+            let worker = json_usize(jget(ev, "worker")?).map_err(bad)?;
+            if worker >= n {
+                return Err(bad(format!("event worker index {worker} out of range")));
+            }
+            let kind = match jget(ev, "kind")?.as_str() {
+                Some("compute_done") => EventKind::ComputeDone,
+                Some("arrive") => EventKind::Arrive,
+                other => return Err(bad(format!("bad event kind {other:?}"))),
+            };
+            events.push(Event { time_s, seq, worker, kind });
+        }
+
+        let pending_json = jget(doc, "pending")?;
+        if pending_json.items().len() != n {
+            return Err(bad("pending mask length mismatch".to_string()));
+        }
+        let mut pending = Vec::with_capacity(n);
+        for v in pending_json.items() {
+            pending.push(
+                v.as_bool().ok_or_else(|| bad("pending mask entry is not a bool".to_string()))?,
+            );
+        }
+
+        let x0_snap = mat_from_hex(jget(doc, "x0_snap")?).map_err(bad)?;
+        let lam_snap = mat_from_hex(jget(doc, "lam_snap")?).map_err(bad)?;
+        if x0_snap.len() != n || lam_snap.len() != n {
+            return Err(bad("snapshot worker count mismatch".to_string()));
+        }
+
+        let workers_json = jget(doc, "workers")?;
+        if workers_json.items().len() != n {
+            return Err(bad("per-worker state count mismatch".to_string()));
+        }
+        for (i, wdoc) in workers_json.items().iter().enumerate() {
+            let w = &mut self.workers[i];
+            w.compute.load(jget(wdoc, "compute")?).map_err(bad)?;
+            match (&mut w.comm, jget(wdoc, "comm")?) {
+                (None, JsonValue::Null) => {}
+                (Some(c), comm_doc) => c.load(comm_doc).map_err(bad)?,
+                (None, _) => {
+                    return Err(bad(format!(
+                        "worker {i} checkpoint has comm state but the config has no comm model"
+                    )))
+                }
+            }
+            match (&mut w.fault_rng, jget(wdoc, "fault_rng")?) {
+                (None, JsonValue::Null) => {}
+                (Some(rng), frng @ JsonValue::Obj(_)) => {
+                    let state = u128_from_hex(jget(frng, "rng_state")?).map_err(bad)?;
+                    let inc = u128_from_hex(jget(frng, "rng_inc")?).map_err(bad)?;
+                    *rng = Pcg64::from_raw(state, inc);
+                }
+                _ => {
+                    return Err(bad(format!(
+                        "worker {i} fault-rng checkpoint does not match the configured faults"
+                    )))
+                }
+            }
+            w.inflight_compute_s = f64_from_hex(jget(wdoc, "inflight_compute_s")?).map_err(bad)?;
+            w.inflight_transit_s = f64_from_hex(jget(wdoc, "inflight_transit_s")?).map_err(bad)?;
+            let s = &mut self.stats[i];
+            s.updates = json_usize(jget(wdoc, "updates")?).map_err(bad)?;
+            s.busy_s = f64_from_hex(jget(wdoc, "busy_s")?).map_err(bad)?;
+            s.retransmissions = json_usize(jget(wdoc, "retransmissions")?).map_err(bad)?;
+        }
+
+        self.vclock = VirtualClock::new();
+        self.vclock.advance_to(now_s);
+        self.master_wait_s = master_wait_s;
+        self.queue = EventQueue::restore(events, next_seq);
+        self.pending = pending;
+        self.x0_snap = x0_snap;
+        self.lam_snap = lam_snap;
+        Ok(())
     }
 
     fn start(&mut self, state: &AdmmState, _policy: &dyn UpdatePolicy) {

@@ -134,6 +134,15 @@ impl WorkerSource for ThreadedSource {
         self.n_workers
     }
 
+    // No checkpoint support: worker threads hold live wall-clock state
+    // (mid-sleep rounds, in-flight channel messages, thread-local duals)
+    // that cannot be serialized. The default `save_checkpoint` returns
+    // `CheckpointUnsupported { source: "threaded" }`; replay the realized
+    // trace through a trace-driven session to checkpoint such a run.
+    fn kind(&self) -> &'static str {
+        "threaded"
+    }
+
     fn start(&mut self, state: &AdmmState, policy: &dyn UpdatePolicy) {
         // Initial broadcast: everyone starts computing against x⁰ (and λ⁰
         // for Algorithm 4).

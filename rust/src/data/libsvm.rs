@@ -123,6 +123,7 @@ impl LibsvmDataset {
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // exercises the legacy run_sync_admm wrapper
 mod tests {
     use super::*;
 

@@ -18,17 +18,35 @@
 //!
 //! ## Quickstart
 //!
+//! The public face is the [`admm::session::Session`] builder: build-time
+//! validation (typed [`admm::session::EngineError`], no panics on user
+//! input), incremental `step()` execution, streaming
+//! [`admm::session::Observer`]s instead of mandatory history buffering,
+//! and bit-identical [`admm::session::Checkpoint`]/resume.
+//!
 //! ```no_run
 //! use ad_admm::prelude::*;
 //!
 //! let mut rng = Pcg64::seed_from_u64(7);
 //! let inst = LassoInstance::synthetic(&mut rng, 4, 50, 20, 0.05, 0.1);
 //! let problem = inst.problem();
-//! let cfg = AdmmConfig { rho: 50.0, tau: 5, max_iters: 400, ..Default::default() };
-//! let arrivals = ArrivalModel::probabilistic(vec![0.5; 4], 1);
-//! let out = run_master_pov(&problem, &cfg, &arrivals);
-//! println!("final objective {}", out.history.last().unwrap().objective);
+//! let mut history = BufferingObserver::new();
+//! let mut session = Session::builder()
+//!     .problem(&problem)
+//!     .config(AdmmConfig { rho: 50.0, tau: 5, max_iters: 400, ..Default::default() })
+//!     .policy(PartialBarrier { tau: 5 })
+//!     .arrivals(&ArrivalModel::probabilistic(vec![0.5; 4], 1))
+//!     .observer(&mut history)
+//!     .build()
+//!     .expect("valid config");
+//! session.run_to_completion().expect("run");
+//! drop(session);
+//! println!("final objective {}", history.records().last().unwrap().objective);
 //! ```
+//!
+//! Long-horizon runs can `step()` one master iteration at a time,
+//! checkpoint mid-run and resume bit-identically — see
+//! [`admm::session`] and the `quickstart` example.
 
 // Numeric-kernel style: indexed loops over several slices at once are the
 // clearest way to write the BLAS-1-ish hot paths, and the coordinator entry
@@ -53,20 +71,32 @@ pub mod util;
 
 /// One-stop import for examples and downstream users.
 pub mod prelude {
-    pub use crate::admm::alt_scheme::{run_alt_scheme, AltSchemeOutput};
+    #[allow(deprecated)]
+    pub use crate::admm::alt_scheme::run_alt_scheme;
+    pub use crate::admm::alt_scheme::AltSchemeOutput;
     pub use crate::admm::arrivals::{ArrivalModel, ArrivalTrace};
+    #[allow(deprecated)]
+    pub use crate::admm::engine::run_trace_driven;
     pub use crate::admm::engine::{
-        run_engine, run_trace_driven, AltScheme, DelaySpike, EngineOptions, EngineRun, FaultPlan,
-        FullBarrier, Outage, PartialBarrier, StepOrder, TraceSource, UpdatePolicy, WorkerSource,
+        run_engine, AltScheme, DelaySpike, EngineOptions, EngineRun, FaultPlan, FullBarrier,
+        Outage, PartialBarrier, StepOrder, TraceSource, UpdatePolicy, WorkerSource,
     };
-    pub use crate::admm::master_pov::{run_master_pov, MasterPovOutput};
+    #[allow(deprecated)]
+    pub use crate::admm::master_pov::run_master_pov;
+    pub use crate::admm::master_pov::MasterPovOutput;
     pub use crate::admm::params::{
         gamma_lower_bound, rho_lower_bound_convex, rho_lower_bound_nonconvex,
     };
+    pub use crate::admm::session::{
+        BufferingObserver, Checkpoint, EngineError, Observer, Session, SessionBuilder,
+        SessionOutcome, StepStatus,
+    };
+    #[allow(deprecated)]
     pub use crate::admm::sync::run_sync_admm;
-    pub use crate::admm::{AdmmConfig, IterRecord};
+    pub use crate::admm::{AdmmConfig, AdmmState, IterRecord, StopReason};
     pub use crate::cluster::{
         ClusterConfig, ClusterReport, DelayModel, ExecutionMode, Protocol, StarCluster,
+        VirtualSource,
     };
     pub use crate::data::{LassoInstance, LogisticInstance, SparsePcaInstance};
     pub use crate::linalg::dense::DenseMatrix;

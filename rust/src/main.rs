@@ -3,22 +3,34 @@
 //! Subcommands:
 //!   solve    run a solver on a synthetic workload (problem/algorithm/params via flags)
 //!   cluster  run the threaded star cluster (async vs sync wall-clock comparison)
+//!   resume   continue a checkpointed virtual-time cluster run bit-identically
 //!   params   print the Theorem-1 parameter rules for given L, τ, N, S
 //!   artifacts  list the AOT artifacts visible to the runtime
 //!
 //! Examples:
 //!   ad-admm solve --problem lasso --workers 16 --m 200 --n 100 --rho 500 --tau 10 --iters 500
 //!   ad-admm cluster --workers 8 --tau 8 --slow-ms 4 --iters 200
+//!   ad-admm cluster --virtual --checkpoint-every 50 --checkpoint-path run.ckpt --iters 200
+//!   ad-admm resume run.ckpt
 //!   ad-admm params --lipschitz 10 --tau 5 --workers 16
+//!
+//! All solver subcommands drive the `Session` API: configs are validated
+//! up front (a bad flag combination prints the typed `EngineError` and
+//! exits 2 instead of panicking mid-run).
 
 use ad_admm::admm::arrivals::ArrivalModel;
 use ad_admm::admm::kkt::kkt_residual;
-use ad_admm::admm::master_pov::run_master_pov;
 use ad_admm::admm::params::{gamma_lower_bound, rho_lower_bound_convex, rho_lower_bound_nonconvex};
-use ad_admm::admm::sync::run_sync_admm;
-use ad_admm::admm::AdmmConfig;
-use ad_admm::cluster::{ClusterConfig, DelayModel, ExecutionMode, FaultPlan, Protocol, StarCluster};
+use ad_admm::admm::session::{
+    BufferingObserver, Checkpoint, EngineError, Session, StepStatus,
+};
+use ad_admm::admm::{AdmmConfig, IterRecord, StopReason};
+use ad_admm::bench::json::JsonValue;
+use ad_admm::cluster::{
+    ClusterConfig, ClusterReport, DelayModel, ExecutionMode, FaultPlan, Protocol, StarCluster,
+};
 use ad_admm::data::{LassoInstance, LogisticInstance, SparsePcaInstance};
+use ad_admm::prelude::{AltScheme, FullBarrier, PartialBarrier};
 use ad_admm::rng::Pcg64;
 use ad_admm::util::cli::ArgParser;
 
@@ -28,6 +40,7 @@ fn main() {
     match cmd {
         "solve" => cmd_solve(&args),
         "cluster" => cmd_cluster(&args),
+        "resume" => cmd_resume(&args),
         "params" => cmd_params(&args),
         "artifacts" => cmd_artifacts(),
         _ => print_help(),
@@ -37,16 +50,24 @@ fn main() {
 fn print_help() {
     println!(
         "ad-admm — Asynchronous Distributed ADMM (Chang et al., Part I)\n\n\
-         USAGE: ad-admm <solve|cluster|params|artifacts> [--flags]\n\n\
+         USAGE: ad-admm <solve|cluster|resume|params|artifacts> [--flags]\n\n\
          solve   --problem lasso|spca|logistic --workers N --m M --n N --rho R --tau T\n\
                  --gamma G --min-arrivals A --iters K --theta TH --seed S [--sync] [--alt]\n\
          cluster --workers N --m M --n N --rho R --tau T --iters K --fast-ms F --slow-ms S\n\
                  [--virtual]  (deterministic virtual-time simulation, scales to 1000s of workers)\n\
                  [--fault-worker W --fault-from K --fault-until K]  (one dropout/rejoin outage)\n\
                  [--fault-outages C --fault-seed S]  (seeded deterministic outage schedule)\n\
+                 [--checkpoint-every N --checkpoint-path P]  (virtual mode only: periodic\n\
+                 session checkpoints; continue bit-identically with `ad-admm resume P`)\n\
+         resume  <checkpoint-path>  (continue a checkpointed virtual cluster run)\n\
          params  --lipschitz L --tau T --workers N --s S --rho R\n\
          artifacts"
     );
+}
+
+fn exit_config_error(err: &EngineError) -> ! {
+    eprintln!("configuration error: {err}");
+    std::process::exit(2);
 }
 
 fn admm_config(args: &ArgParser) -> AdmmConfig {
@@ -90,20 +111,42 @@ fn cmd_solve(args: &ArgParser) {
         cfg.rho, cfg.gamma, cfg.tau, cfg.min_arrivals, cfg.max_iters
     );
 
-    if args.has_flag("sync") {
-        let out = run_sync_admm(&problem, &cfg);
-        report("sync (Algorithm 1)", &problem, &out.state, &out.history);
+    // One Session per algorithm choice — the policy is the only moving
+    // part, exactly the engine × policy design.
+    let mut history = BufferingObserver::new();
+    let builder = Session::builder().problem(&problem).observer(&mut history);
+    let (label, builder) = if args.has_flag("sync") {
+        let sync_cfg = AdmmConfig { tau: 1, min_arrivals: n_workers, ..cfg };
+        (
+            "sync (Algorithm 1)",
+            builder.config(sync_cfg).policy(FullBarrier).arrivals(&ArrivalModel::Full),
+        )
     } else if args.has_flag("alt") {
-        let arr = ArrivalModel::fig4_profile(n_workers, seed);
-        let out = ad_admm::admm::alt_scheme::run_alt_scheme(&problem, &cfg, &arr);
-        report("alt scheme (Algorithm 4)", &problem, &out.state, &out.history);
-        if out.diverged() {
-            println!("NOTE: diverged — exactly the Section IV caution for large rho + delay");
-        }
+        (
+            "alt scheme (Algorithm 4)",
+            builder
+                .config(cfg.clone())
+                .policy(AltScheme { tau: cfg.tau })
+                .arrivals(&ArrivalModel::fig4_profile(n_workers, seed))
+                .residual_stopping(false),
+        )
     } else {
-        let arr = ArrivalModel::fig4_profile(n_workers, seed);
-        let out = run_master_pov(&problem, &cfg, &arr);
-        report("AD-ADMM (Algorithm 2)", &problem, &out.state, &out.history);
+        (
+            "AD-ADMM (Algorithm 2)",
+            builder
+                .config(cfg.clone())
+                .policy(PartialBarrier { tau: cfg.tau })
+                .arrivals(&ArrivalModel::fig4_profile(n_workers, seed)),
+        )
+    };
+    let mut session = builder.build().unwrap_or_else(|e| exit_config_error(&e));
+    let stop = session.run_to_completion().unwrap_or_else(|e| exit_config_error(&e));
+    // Bind the source to `_` so the boxed source (whose type carries the
+    // builder lifetime) drops here and releases the `&mut history` borrow.
+    let (outcome, _) = session.finish();
+    report(label, &problem, &outcome.state, history.records());
+    if stop == StopReason::Diverged && args.has_flag("alt") {
+        println!("NOTE: diverged — exactly the Section IV caution for large rho + delay");
     }
 }
 
@@ -111,7 +154,7 @@ fn report(
     label: &str,
     problem: &ad_admm::problems::ConsensusProblem,
     state: &ad_admm::admm::AdmmState,
-    history: &[ad_admm::admm::IterRecord],
+    history: &[IterRecord],
 ) {
     let last = history.last().expect("no iterations");
     let kkt = kkt_residual(problem, state);
@@ -126,53 +169,295 @@ fn report(
     );
 }
 
+/// Everything needed to rebuild a `cluster` run from scratch — written
+/// into checkpoints as `meta.cli` so `ad-admm resume` can reconstruct the
+/// identical problem and config.
+struct ClusterParams {
+    workers: usize,
+    m: usize,
+    n: usize,
+    seed: u64,
+    fast_ms: f64,
+    slow_ms: f64,
+    rho: f64,
+    gamma: f64,
+    tau: usize,
+    min_arrivals: usize,
+    iters: usize,
+    tol: f64,
+    fault_worker: i64,
+    fault_from: usize,
+    fault_until: usize,
+    fault_outages: usize,
+    fault_seed: u64,
+}
+
+impl ClusterParams {
+    fn from_args(args: &ArgParser) -> Self {
+        let iters: usize = args.get_parse_or("iters", 500);
+        let seed: u64 = args.get_parse_or("seed", 1);
+        ClusterParams {
+            workers: args.get_parse_or("workers", 8),
+            m: args.get_parse_or("m", 100),
+            n: args.get_parse_or("n", 50),
+            seed,
+            fast_ms: args.get_parse_or("fast-ms", 0.5),
+            slow_ms: args.get_parse_or("slow-ms", 4.0),
+            rho: args.get_parse_or("rho", 500.0),
+            gamma: args.get_parse_or("gamma", 0.0),
+            tau: args.get_parse_or("tau", 10),
+            min_arrivals: args.get_parse_or("min-arrivals", 1),
+            iters,
+            tol: args.get_parse_or("tol", 0.0),
+            fault_worker: args.get_parse_or("fault-worker", -1),
+            fault_from: args.get_parse_or("fault-from", iters / 4),
+            fault_until: args.get_parse_or("fault-until", iters / 2),
+            fault_outages: args.get_parse_or("fault-outages", 0),
+            fault_seed: args.get_parse_or("fault-seed", seed),
+        }
+    }
+
+    fn to_meta(&self) -> JsonValue {
+        JsonValue::Obj(vec![
+            ("workers".to_string(), self.workers.into()),
+            ("m".to_string(), self.m.into()),
+            ("n".to_string(), self.n.into()),
+            // Seeds are full-range u64s: store as strings so values >= 2^53
+            // survive the JSON round trip exactly (an f64 would round them,
+            // rebuilding a different problem and breaking bit-identity).
+            ("seed".to_string(), JsonValue::Str(self.seed.to_string())),
+            ("fast_ms".to_string(), self.fast_ms.into()),
+            ("slow_ms".to_string(), self.slow_ms.into()),
+            ("rho".to_string(), self.rho.into()),
+            ("gamma".to_string(), self.gamma.into()),
+            ("tau".to_string(), self.tau.into()),
+            ("min_arrivals".to_string(), self.min_arrivals.into()),
+            ("iters".to_string(), self.iters.into()),
+            ("tol".to_string(), self.tol.into()),
+            ("fault_worker".to_string(), JsonValue::Num(self.fault_worker as f64)),
+            ("fault_from".to_string(), self.fault_from.into()),
+            ("fault_until".to_string(), self.fault_until.into()),
+            ("fault_outages".to_string(), self.fault_outages.into()),
+            ("fault_seed".to_string(), JsonValue::Str(self.fault_seed.to_string())),
+        ])
+    }
+
+    fn from_meta(meta: &JsonValue) -> Result<Self, String> {
+        let num = |key: &str| -> Result<f64, String> {
+            meta.get(key)
+                .and_then(JsonValue::as_f64)
+                .ok_or_else(|| format!("checkpoint meta is missing numeric field {key:?}"))
+        };
+        let seed = |key: &str| -> Result<u64, String> {
+            meta.get(key)
+                .and_then(JsonValue::as_str)
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| format!("checkpoint meta is missing u64 seed field {key:?}"))
+        };
+        Ok(ClusterParams {
+            workers: num("workers")? as usize,
+            m: num("m")? as usize,
+            n: num("n")? as usize,
+            seed: seed("seed")?,
+            fast_ms: num("fast_ms")?,
+            slow_ms: num("slow_ms")?,
+            rho: num("rho")?,
+            gamma: num("gamma")?,
+            tau: num("tau")? as usize,
+            min_arrivals: num("min_arrivals")? as usize,
+            iters: num("iters")? as usize,
+            tol: num("tol")?,
+            fault_worker: num("fault_worker")? as i64,
+            fault_from: num("fault_from")? as usize,
+            fault_until: num("fault_until")? as usize,
+            fault_outages: num("fault_outages")? as usize,
+            fault_seed: seed("fault_seed")?,
+        })
+    }
+
+    fn problem(&self) -> ad_admm::problems::ConsensusProblem {
+        let mut rng = Pcg64::seed_from_u64(self.seed);
+        LassoInstance::synthetic(&mut rng, self.workers, self.m, self.n, 0.05, 0.1).problem()
+    }
+
+    fn fault_plan(&self) -> Option<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        if self.fault_worker >= 0 {
+            plan.outages.push(ad_admm::cluster::Outage {
+                worker: self.fault_worker as usize,
+                from_iter: self.fault_from,
+                until_iter: self.fault_until,
+            });
+        }
+        if self.fault_outages > 0 {
+            let max_len = (self.iters / 5).max(2);
+            let seeded = FaultPlan::seeded_outages(
+                self.workers,
+                self.iters,
+                self.fault_outages,
+                2,
+                max_len,
+                self.fault_seed,
+            );
+            plan.outages.extend(seeded.outages);
+        }
+        (!plan.is_empty()).then_some(plan)
+    }
+
+    /// The asynchronous virtual-time config (the one checkpointed runs use).
+    fn virtual_config(&self) -> ClusterConfig {
+        ClusterConfig {
+            admm: AdmmConfig {
+                rho: self.rho,
+                gamma: self.gamma,
+                tau: self.tau,
+                min_arrivals: self.min_arrivals,
+                max_iters: self.iters,
+                x0_tol: self.tol,
+                ..Default::default()
+            },
+            protocol: Protocol::AdAdmm,
+            delays: DelayModel::linear_spread(
+                self.workers,
+                self.fast_ms,
+                self.slow_ms,
+                0.3,
+                self.seed,
+            ),
+            mode: ExecutionMode::VirtualTime,
+            fault_plan: self.fault_plan(),
+            ..Default::default()
+        }
+    }
+}
+
+/// FNV-1a over the exact bit patterns of x₀ — a stable fingerprint for
+/// the bit-identity claims of checkpoint/resume.
+fn x0_digest(x0: &[f64]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for v in x0 {
+        for byte in v.to_bits().to_le_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+fn print_virtual_summary(report: &ClusterReport, last: Option<&IterRecord>) {
+    println!(
+        "completed {} iterations  stop={:?}",
+        report.trace.sets.len(),
+        report.stop
+    );
+    println!(
+        "virtual time {:.6}s  master-wait {:.6}s",
+        report.wall_clock_s, report.master_wait_s
+    );
+    if let Some(rec) = last {
+        println!("final objective {:.10e}", rec.objective);
+    }
+    println!("final x0 digest {:016x}", x0_digest(&report.state.x0));
+}
+
+/// Drive a virtual-time session to completion, writing a checkpoint every
+/// `every` iterations (0 = never). Returns the report and the last record.
+fn drive_virtual_session(
+    session: &mut Session<'_, ad_admm::cluster::VirtualSource>,
+    every: usize,
+    path: Option<&str>,
+    meta: &JsonValue,
+    max_iters: usize,
+) -> Option<IterRecord> {
+    let mut last = None;
+    loop {
+        match session.step().unwrap_or_else(|e| exit_config_error(&e)) {
+            StepStatus::Iterated(rec) => {
+                last = Some(rec);
+                let k = session.iteration();
+                if let (Some(path), true) = (path, every > 0 && k % every == 0 && k < max_iters) {
+                    let mut cp =
+                        session.checkpoint().unwrap_or_else(|e| exit_config_error(&e));
+                    cp.set_meta("cli", meta.clone());
+                    if let Err(e) = cp.write_to_file(path) {
+                        eprintln!("cannot write checkpoint {path}: {e}");
+                        std::process::exit(2);
+                    }
+                    println!("checkpoint written at k={k} -> {path}");
+                }
+            }
+            StepStatus::Done(_) => return last,
+        }
+    }
+}
+
 fn cmd_cluster(args: &ArgParser) {
-    let n_workers: usize = args.get_parse_or("workers", 8);
-    let m: usize = args.get_parse_or("m", 100);
-    let n: usize = args.get_parse_or("n", 50);
-    let seed: u64 = args.get_parse_or("seed", 1);
-    let fast_ms: f64 = args.get_parse_or("fast-ms", 0.5);
-    let slow_ms: f64 = args.get_parse_or("slow-ms", 4.0);
-    let cfg = admm_config(args);
-    let mut rng = Pcg64::seed_from_u64(seed);
-    let inst = LassoInstance::synthetic(&mut rng, n_workers, m, n, 0.05, 0.1);
-    let problem = inst.problem();
-    let delays = DelayModel::linear_spread(n_workers, fast_ms, slow_ms, 0.3, seed);
+    let ckpt_every: usize = args.get_parse_or("checkpoint-every", 0);
+    let ckpt_path = args.get("checkpoint-path").map(str::to_string);
+    if ckpt_every > 0 || ckpt_path.is_some() {
+        if !args.has_flag("virtual") {
+            eprintln!(
+                "--checkpoint-every/--checkpoint-path require --virtual (the real-thread \
+                 mode holds live OS state and cannot be checkpointed)"
+            );
+            std::process::exit(2);
+        }
+        let Some(path) = ckpt_path else {
+            eprintln!("--checkpoint-every requires --checkpoint-path");
+            std::process::exit(2);
+        };
+        let params = ClusterParams::from_args(args);
+        let every = if ckpt_every > 0 { ckpt_every } else { (params.iters / 2).max(1) };
+        let cfg = params.virtual_config();
+        let problem = params.problem();
+        let meta = params.to_meta();
+        println!(
+            "--- checkpointed virtual-time cluster (N={}, every {} iters -> {path}) ---",
+            params.workers, every
+        );
+        let cluster = StarCluster::new(problem);
+        let mut session =
+            cluster.virtual_session(&cfg).unwrap_or_else(|e| exit_config_error(&e));
+        let last = drive_virtual_session(
+            &mut session,
+            every,
+            Some(path.as_str()),
+            &meta,
+            cfg.admm.max_iters,
+        );
+        let (outcome, source) = session.finish();
+        let report = ClusterReport::from_virtual_parts(outcome, Vec::new(), source);
+        print_virtual_summary(&report, last.as_ref());
+        return;
+    }
+
+    // The historical sync-vs-async comparison path.
+    let params = ClusterParams::from_args(args);
+    let n_workers = params.workers;
+    let cfg = AdmmConfig {
+        rho: params.rho,
+        gamma: params.gamma,
+        tau: params.tau,
+        min_arrivals: params.min_arrivals,
+        max_iters: params.iters,
+        x0_tol: params.tol,
+        ..Default::default()
+    };
+    let problem = params.problem();
+    let delays = DelayModel::linear_spread(
+        n_workers,
+        params.fast_ms,
+        params.slow_ms,
+        0.3,
+        params.seed,
+    );
 
     let mode = if args.has_flag("virtual") {
         ExecutionMode::VirtualTime
     } else {
         ExecutionMode::RealThreads
     };
-
-    // Deterministic fault scenario (dropout/rejoin), if requested: one
-    // explicit outage and/or a seeded schedule over the whole run.
-    let mut fault_plan = FaultPlan::default();
-    let fault_worker: i64 = args.get_parse_or("fault-worker", -1);
-    if fault_worker >= 0 {
-        let from: usize = args.get_parse_or("fault-from", cfg.max_iters / 4);
-        let until: usize = args.get_parse_or("fault-until", cfg.max_iters / 2);
-        fault_plan.outages.push(ad_admm::cluster::Outage {
-            worker: fault_worker as usize,
-            from_iter: from,
-            until_iter: until,
-        });
-    }
-    let fault_outages: usize = args.get_parse_or("fault-outages", 0);
-    if fault_outages > 0 {
-        let fseed: u64 = args.get_parse_or("fault-seed", seed);
-        let max_len = (cfg.max_iters / 5).max(2);
-        let seeded = FaultPlan::seeded_outages(
-            n_workers,
-            cfg.max_iters,
-            fault_outages,
-            2,
-            max_len,
-            fseed,
-        );
-        fault_plan.outages.extend(seeded.outages);
-    }
-    let fault_plan = (!fault_plan.is_empty()).then_some(fault_plan);
+    let fault_plan = params.fault_plan();
 
     // Sync baseline: τ=1, A=N (fault-free — the comparison anchor).
     let sync_cfg = ClusterConfig {
@@ -198,7 +483,10 @@ fn cmd_cluster(args: &ArgParser) {
         ExecutionMode::RealThreads => "threaded",
         ExecutionMode::VirtualTime => "virtual-time",
     };
-    println!("--- {mode_label} star cluster (N={n_workers}, delays {fast_ms}–{slow_ms} ms) ---");
+    println!(
+        "--- {mode_label} star cluster (N={n_workers}, delays {}–{} ms) ---",
+        params.fast_ms, params.slow_ms
+    );
     for (label, r) in [("sync  (tau=1, A=N)", &sync), ("async (per flags) ", &asyn)] {
         println!(
             "{label}: {:4} iters in {:.3}s  ({:.1} iters/s)  obj={:.6e}  master-wait={:.3}s",
@@ -226,6 +514,49 @@ fn cmd_cluster(args: &ArgParser) {
             asyn.trace.satisfies_bounded_delay(n_workers, tau)
         );
     }
+}
+
+fn cmd_resume(args: &ArgParser) {
+    let Some(path) = args.positional().get(1) else {
+        eprintln!("usage: ad-admm resume <checkpoint-path>");
+        std::process::exit(2);
+    };
+    let cp = match Checkpoint::read_from_file(path) {
+        Ok(cp) => cp,
+        Err(e) => {
+            eprintln!("cannot load checkpoint {path}: {e}");
+            std::process::exit(2);
+        }
+    };
+    let Some(meta) = cp.meta("cli") else {
+        eprintln!(
+            "checkpoint {path} carries no CLI metadata (written by a library caller?) — \
+             resume it through StarCluster::resume_virtual_session"
+        );
+        std::process::exit(2);
+    };
+    let params = match ClusterParams::from_meta(meta) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("cannot rebuild run from checkpoint meta: {e}");
+            std::process::exit(2);
+        }
+    };
+    let cfg = params.virtual_config();
+    let problem = params.problem();
+    let meta = params.to_meta();
+    let cluster = StarCluster::new(problem);
+    let mut session = cluster
+        .resume_virtual_session(&cfg, &cp)
+        .unwrap_or_else(|e| exit_config_error(&e));
+    println!(
+        "--- resumed virtual-time cluster from {path} at k={} ---",
+        session.iteration()
+    );
+    let last = drive_virtual_session(&mut session, 0, None, &meta, cfg.admm.max_iters);
+    let (outcome, source) = session.finish();
+    let report = ClusterReport::from_virtual_parts(outcome, Vec::new(), source);
+    print_virtual_summary(&report, last.as_ref());
 }
 
 fn cmd_params(args: &ArgParser) {

@@ -78,6 +78,7 @@ pub fn fit_linear_rate(acc: &[f64], tail_frac: f64) -> Option<RateFit> {
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // exercises the legacy run_sync_admm wrapper
 mod tests {
     use super::*;
 

@@ -190,6 +190,7 @@ impl LocalCost for SvmLocal {
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // exercises the legacy free-function drivers
 mod tests {
     use super::*;
     use crate::problems::tests::{check_grad, check_subproblem};

@@ -61,6 +61,7 @@ pub fn fista_lasso(inst: &LassoInstance, max_iters: usize) -> (Vec<f64>, f64) {
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // exercises the legacy run_sync_admm wrapper
 mod tests {
     use super::*;
     use crate::problems::QuadraticLocal;

@@ -1,6 +1,8 @@
 //! Threaded-cluster integration: protocol equivalence with the serial
 //! simulator, utilization accounting, and the async wall-clock win.
 
+#![allow(deprecated)] // exercises the legacy free-function drivers on purpose
+
 use ad_admm::admm::arrivals::ArrivalModel;
 use ad_admm::admm::kkt::kkt_residual;
 use ad_admm::admm::master_pov::run_master_pov;

@@ -21,6 +21,8 @@
 //! sources (trace-driven, threaded-lockstep, virtual-time) with identical
 //! histories.
 
+#![allow(deprecated)] // exercises the legacy free-function drivers on purpose
+
 use ad_admm::admm::alt_scheme::run_alt_scheme;
 use ad_admm::admm::arrivals::{ArrivalModel, ArrivalTrace};
 use ad_admm::admm::engine::{run_trace_driven, EngineOptions, FaultPlan, PartialBarrier};
@@ -610,7 +612,7 @@ fn dropout_rejoin_bit_identical_across_all_three_sources() {
 
     // Source 2: trace-driven serial engine, same plan, replaying the
     // realized trace.
-    let opts = EngineOptions { residual_stopping: true, fault_plan: Some(&plan) };
+    let opts = EngineOptions { residual_stopping: true, fault_plan: Some(plan.clone()) };
     let tr = run_trace_driven(
         &p,
         &admm,
@@ -678,7 +680,7 @@ fn seeded_outage_schedule_replays_across_sources() {
             assert!(!plan.down_at(i, k), "worker {i} absorbed while down at k={k}");
         }
     }
-    let opts = EngineOptions { residual_stopping: true, fault_plan: Some(&plan) };
+    let opts = EngineOptions { residual_stopping: true, fault_plan: Some(plan.clone()) };
     let tr = run_trace_driven(
         &p,
         &admm,

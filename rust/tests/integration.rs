@@ -1,6 +1,8 @@
 //! Cross-module integration tests: the paper's headline claims end to end
 //! on the serial (master-PoV) coordinator.
 
+#![allow(deprecated)] // exercises the legacy free-function drivers on purpose
+
 use ad_admm::admm::alt_scheme::run_alt_scheme;
 use ad_admm::admm::arrivals::ArrivalModel;
 use ad_admm::admm::kkt::kkt_residual;

@@ -4,6 +4,8 @@
 //! These tests skip (cleanly pass with a notice) when `make artifacts` has
 //! not been run, so the rest of the suite works without python.
 
+#![allow(deprecated)] // exercises the legacy free-function drivers on purpose
+
 use std::sync::Arc;
 
 use ad_admm::admm::arrivals::ArrivalModel;

@@ -1,6 +1,8 @@
 //! Property-based tests over the coordinator invariants and the numeric
 //! substrates, driven by the in-repo `testkit` runner.
 
+#![allow(deprecated)] // exercises the legacy free-function drivers on purpose
+
 use std::sync::Arc;
 
 use ad_admm::admm::arrivals::{ArrivalModel, ArrivalTrace};

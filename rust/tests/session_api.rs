@@ -1,0 +1,552 @@
+//! The Session-facade acceptance suite.
+//!
+//! Pins the three headline guarantees of the API redesign:
+//!
+//! 1. **Typed validation** — every config the free functions used to
+//!    `assert!` on is rejected at `build()` with the matching
+//!    [`EngineError`] variant, never a panic.
+//! 2. **Streaming == buffered** — records streamed through an
+//!    [`Observer`] (and returned by `step()`) are bit-identical to the
+//!    legacy buffered histories.
+//! 3. **Checkpoint/resume bit-identity** — a run split at k = 0, mid-run,
+//!    or after the last iteration and resumed from its serialized
+//!    [`Checkpoint`] reproduces the uninterrupted run bit-for-bit, for
+//!    all three worker sources: trace-driven (live checkpoint of the
+//!    sampler RNG), virtual-time (live checkpoint of the full event
+//!    queue, clock and delay/fault RNG streams, via
+//!    `StarCluster::virtual_session`), and the real-thread source (whose
+//!    live OS state is deliberately *not* checkpointable — its realized
+//!    trace replays through a trace-driven session, which then
+//!    checkpoints/resumes bit-identically).
+//!
+//! Plus the CLI round trip: `cluster --virtual --checkpoint-every N` →
+//! `resume P` reproduces the uninterrupted run's final-state digest.
+
+#![allow(deprecated)] // compares the session path against the legacy wrappers
+
+use ad_admm::admm::arrivals::ArrivalModel;
+use ad_admm::admm::engine::{Gate, MasterView, TraceSource, UpdatePolicy, WorkerSource};
+use ad_admm::admm::master_pov::{run_master_pov, NativeSolver};
+use ad_admm::admm::session::{
+    BufferingObserver, Checkpoint, EngineError, Session, StepStatus,
+};
+use ad_admm::admm::{AdmmConfig, AdmmState, IterRecord, StopReason};
+use ad_admm::cluster::{
+    ClusterConfig, ClusterReport, DelayModel, ExecutionMode, FaultModel, FaultPlan, StarCluster,
+};
+use ad_admm::data::LassoInstance;
+use ad_admm::prelude::{FullBarrier, PartialBarrier};
+use ad_admm::problems::ConsensusProblem;
+use ad_admm::rng::Pcg64;
+
+fn lasso(seed: u64, n_workers: usize) -> ConsensusProblem {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    LassoInstance::synthetic(&mut rng, n_workers, 20, 10, 0.2, 0.1).problem()
+}
+
+fn assert_history_bit_equal(a: &[IterRecord], b: &[IterRecord]) {
+    assert_eq!(a.len(), b.len(), "history lengths differ");
+    for (ra, rb) in a.iter().zip(b) {
+        assert_eq!(ra.k, rb.k);
+        assert_eq!(ra.arrivals, rb.arrivals, "arrivals differ at k={}", ra.k);
+        assert_eq!(ra.objective.to_bits(), rb.objective.to_bits(), "objective at k={}", ra.k);
+        assert_eq!(
+            ra.aug_lagrangian.to_bits(),
+            rb.aug_lagrangian.to_bits(),
+            "aug_lagrangian at k={}",
+            ra.k
+        );
+        assert_eq!(ra.consensus.to_bits(), rb.consensus.to_bits(), "consensus at k={}", ra.k);
+        assert_eq!(ra.x0_change.to_bits(), rb.x0_change.to_bits(), "x0_change at k={}", ra.k);
+    }
+}
+
+fn assert_state_bit_equal(a: &AdmmState, b: &AdmmState) {
+    assert_eq!(a.x0, b.x0, "x0 differs");
+    assert_eq!(a.xs, b.xs, "worker primals differ");
+    assert_eq!(a.lams, b.lams, "duals differ");
+}
+
+/// Step a session, collecting records; `upto = None` runs to completion.
+fn drive<S: WorkerSource>(session: &mut Session<'_, S>, upto: Option<usize>) -> Vec<IterRecord> {
+    let mut recs = Vec::new();
+    loop {
+        if let Some(n) = upto {
+            if recs.len() >= n {
+                return recs;
+            }
+        }
+        match session.step().expect("step") {
+            StepStatus::Iterated(rec) => recs.push(rec),
+            StepStatus::Done(_) => return recs,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 1. Typed builder validation
+// ---------------------------------------------------------------------------
+
+/// A minimal custom source: pipelines like the cluster sources (no
+/// master-first), keeps the default (unsupported) checkpoint hooks.
+struct PipelinedDummy {
+    n: usize,
+}
+
+impl WorkerSource for PipelinedDummy {
+    fn n_workers(&self) -> usize {
+        self.n
+    }
+
+    fn start(&mut self, _state: &AdmmState, _policy: &dyn UpdatePolicy) {}
+
+    fn gather(&mut self, _k: usize, _d: &[usize], _gate: &Gate<'_>) -> Vec<usize> {
+        (0..self.n).collect()
+    }
+
+    fn absorb(&mut self, _set: &[usize], _m: &mut MasterView<'_>, _policy: &dyn UpdatePolicy) {}
+
+    fn broadcast(&mut self, _set: &[usize], _state: &AdmmState, _policy: &dyn UpdatePolicy) {}
+}
+
+#[test]
+fn builder_rejects_every_invalid_config_with_a_typed_error() {
+    let p = lasso(701, 4);
+
+    // no problem at all
+    assert_eq!(Session::builder().build().err(), Some(EngineError::MissingProblem));
+
+    // rho <= 0 / non-finite
+    for rho in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+        let err = Session::builder()
+            .problem(&p)
+            .config(AdmmConfig { rho, ..Default::default() })
+            .build()
+            .err()
+            .expect("rho must be rejected");
+        assert!(matches!(err, EngineError::InvalidRho(_)), "rho={rho}: {err}");
+    }
+
+    // tau = 0 on the config
+    assert_eq!(
+        Session::builder()
+            .problem(&p)
+            .config(AdmmConfig { tau: 0, ..Default::default() })
+            .build()
+            .err(),
+        Some(EngineError::InvalidTau(0))
+    );
+    // tau = 0 on an explicit policy (config tau fine)
+    assert_eq!(
+        Session::builder()
+            .problem(&p)
+            .policy(PartialBarrier { tau: 0 })
+            .build()
+            .err(),
+        Some(EngineError::InvalidTau(0))
+    );
+
+    // min_arrivals outside [1, N]
+    for bad in [0usize, 5] {
+        assert_eq!(
+            Session::builder()
+                .problem(&p)
+                .config(AdmmConfig { min_arrivals: bad, ..Default::default() })
+                .build()
+                .err(),
+            Some(EngineError::InvalidMinArrivals { min_arrivals: bad, n_workers: 4 })
+        );
+    }
+
+    // init_x0 dimension mismatch
+    assert_eq!(
+        Session::builder()
+            .problem(&p)
+            .config(AdmmConfig { init_x0: Some(vec![0.0; 3]), ..Default::default() })
+            .build()
+            .err(),
+        Some(EngineError::InitDimMismatch { got: 3, dim: 10 })
+    );
+
+    // source/problem worker-count mismatch
+    let mut solver = NativeSolver::new(&p);
+    let wrong = TraceSource::with_solver(5, &ArrivalModel::Full, &mut solver);
+    assert_eq!(
+        Session::builder().problem(&p).source(wrong).build().err(),
+        Some(EngineError::WorkerCountMismatch { source: 5, problem: 4 })
+    );
+
+    // master-first policy on a source that cannot pipeline it
+    assert_eq!(
+        Session::builder()
+            .problem(&p)
+            .policy(FullBarrier)
+            .source(PipelinedDummy { n: 4 })
+            .build()
+            .err(),
+        Some(EngineError::MasterFirstUnsupported { source: "custom" })
+    );
+}
+
+#[test]
+fn checkpoint_unsupported_sources_error_instead_of_panicking() {
+    let p = lasso(702, 3);
+    let mut session = Session::builder()
+        .problem(&p)
+        .config(AdmmConfig { rho: 30.0, max_iters: 5, ..Default::default() })
+        .source(PipelinedDummy { n: 3 })
+        .build()
+        .unwrap();
+    session.run_for(2).unwrap();
+    assert_eq!(
+        session.checkpoint().err(),
+        Some(EngineError::CheckpointUnsupported { source: "custom" })
+    );
+}
+
+#[test]
+fn resume_rejects_mismatched_checkpoints() {
+    let p4 = lasso(703, 4);
+    let cfg = AdmmConfig { rho: 30.0, tau: 2, max_iters: 20, ..Default::default() };
+    let arr = ArrivalModel::probabilistic(vec![0.7; 4], 5);
+    let mut session = Session::builder()
+        .problem(&p4)
+        .config(cfg.clone())
+        .arrivals(&arr)
+        .build()
+        .unwrap();
+    session.run_for(7).unwrap();
+    let cp = session.checkpoint().unwrap();
+
+    // wrong worker count
+    let p5 = lasso(704, 5);
+    let err = Session::builder()
+        .problem(&p5)
+        .config(cfg.clone())
+        .arrivals(&ArrivalModel::probabilistic(vec![0.7; 5], 5))
+        .resume(&cp)
+        .err()
+        .expect("worker-count mismatch must be rejected");
+    assert!(matches!(err, EngineError::Checkpoint(_)), "{err}");
+
+    // wrong arrival-model kind for the recorded sampler state
+    let err = Session::builder()
+        .problem(&p4)
+        .config(cfg)
+        .arrivals(&ArrivalModel::Full)
+        .resume(&cp)
+        .err()
+        .expect("sampler-kind mismatch must be rejected");
+    assert!(matches!(err, EngineError::Checkpoint(_)), "{err}");
+}
+
+// ---------------------------------------------------------------------------
+// 2. Streaming observers == buffered history
+// ---------------------------------------------------------------------------
+
+#[test]
+fn observer_and_step_records_bit_equal_buffered_history() {
+    let p = lasso(711, 4);
+    let cfg =
+        AdmmConfig { rho: 40.0, tau: 3, min_arrivals: 2, max_iters: 90, ..Default::default() };
+    let arr = ArrivalModel::probabilistic(vec![0.3, 0.9, 0.5, 0.7], 13);
+
+    // Legacy buffered history (deprecated wrapper, kept bit-identical).
+    let legacy = run_master_pov(&p, &cfg, &arr);
+
+    // Streaming observer path.
+    let mut buffered = BufferingObserver::new();
+    let mut observed = Session::builder()
+        .problem(&p)
+        .config(cfg.clone())
+        .policy(PartialBarrier { tau: cfg.tau })
+        .arrivals(&arr)
+        .observer(&mut buffered)
+        .build()
+        .unwrap();
+    observed.run_to_completion().unwrap();
+    let (obs_outcome, _) = observed.finish();
+
+    // Manual step loop: the records *returned by step()*.
+    let mut stepper = Session::builder()
+        .problem(&p)
+        .config(cfg.clone())
+        .policy(PartialBarrier { tau: cfg.tau })
+        .arrivals(&arr)
+        .build()
+        .unwrap();
+    let stepped = drive(&mut stepper, None);
+
+    assert_history_bit_equal(&legacy.history, buffered.records());
+    assert_history_bit_equal(&legacy.history, &stepped);
+    assert_state_bit_equal(&legacy.state, &obs_outcome.state);
+    assert_state_bit_equal(&legacy.state, stepper.state());
+    assert_eq!(legacy.trace, obs_outcome.trace);
+    assert_eq!(legacy.final_delays, obs_outcome.final_delays);
+    assert_eq!(legacy.stop, obs_outcome.stop);
+}
+
+#[test]
+fn step_loop_implements_a_custom_stopping_rule() {
+    let p = lasso(712, 3);
+    let cfg = AdmmConfig { rho: 60.0, max_iters: 5_000, ..Default::default() };
+    let mut session = Session::builder().problem(&p).config(cfg).build().unwrap();
+    while let StepStatus::Iterated(rec) = session.step().unwrap() {
+        if rec.consensus < 1e-6 {
+            break;
+        }
+    }
+    assert!(session.stop_reason().is_none(), "stopped by the caller, not the engine");
+    assert!(
+        session.iteration() < 5_000,
+        "custom rule never fired ({} iterations)",
+        session.iteration()
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 3. Checkpoint/resume bit-identity, all three sources x three splits
+// ---------------------------------------------------------------------------
+
+/// Split points: k = 0 (before the first step), mid-run, and after the
+/// final iteration.
+fn split_points(total: usize) -> [usize; 3] {
+    [0, total / 2, total]
+}
+
+#[test]
+fn trace_source_checkpoint_resume_is_bit_identical_at_every_split() {
+    let p = lasso(721, 4);
+    let cfg =
+        AdmmConfig { rho: 40.0, tau: 3, min_arrivals: 1, max_iters: 60, ..Default::default() };
+    let arr = ArrivalModel::probabilistic(vec![0.2, 0.8, 0.4, 0.6], 29);
+    let build = || {
+        Session::builder()
+            .problem(&p)
+            .config(cfg.clone())
+            .policy(PartialBarrier { tau: cfg.tau })
+            .arrivals(&arr)
+    };
+
+    let mut full = build().build().unwrap();
+    let full_recs = drive(&mut full, None);
+    assert_eq!(full_recs.len(), 60);
+
+    for split in split_points(60) {
+        let mut first = build().build().unwrap();
+        let mut recs = drive(&mut first, Some(split));
+        // JSON text round trip, exactly like an on-disk checkpoint.
+        let cp = Checkpoint::from_json_str(
+            &first.checkpoint().unwrap().to_json_string(),
+        )
+        .unwrap();
+        assert_eq!(cp.iteration(), split);
+        assert_eq!(cp.source_kind(), "trace");
+
+        let mut second = build().resume(&cp).unwrap();
+        assert_eq!(second.iteration(), split);
+        recs.extend(drive(&mut second, None));
+
+        assert_history_bit_equal(&full_recs, &recs);
+        assert_state_bit_equal(full.state(), second.state());
+        assert_eq!(full.trace(), second.trace());
+        assert_eq!(full.delays(), second.delays());
+        assert_eq!(second.stop_reason(), Some(&StopReason::MaxIters));
+    }
+}
+
+#[test]
+fn virtual_source_checkpoint_resume_is_bit_identical_at_every_split() {
+    // A gnarly virtual-time scenario on purpose: log-normal compute AND
+    // comm delays (two RNG streams per worker), probabilistic link faults
+    // with retransmissions (a third stream), plus a dropout/rejoin outage
+    // longer than τ — every serialized cursor is exercised.
+    let n_workers = 5;
+    let p = lasso(722, n_workers);
+    let cfg = ClusterConfig {
+        admm: AdmmConfig {
+            rho: 40.0,
+            tau: 4,
+            min_arrivals: 2,
+            max_iters: 70,
+            ..Default::default()
+        },
+        delays: DelayModel::linear_spread(n_workers, 0.5, 4.0, 0.4, 17),
+        comm_delays: Some(DelayModel::linear_spread(n_workers, 0.1, 1.0, 0.3, 23)),
+        faults: Some(FaultModel { drop_prob: 0.2, retrans_ms: 0.5, seed: 31 }),
+        mode: ExecutionMode::VirtualTime,
+        fault_plan: Some(FaultPlan::single_outage(2, 15, 35)),
+        ..Default::default()
+    };
+    let cluster = StarCluster::new(p);
+
+    // Reference: the one-shot run.
+    let report = cluster.run(&cfg);
+    assert_eq!(report.history.len(), 70);
+    assert!(!report.trace.satisfies_bounded_delay(n_workers, 4), "outage must break Assumption 1");
+
+    // Uninterrupted incremental session == one-shot run (incl. stats).
+    let mut whole = cluster.virtual_session(&cfg).unwrap();
+    let whole_recs = drive(&mut whole, None);
+    let (whole_outcome, whole_source) = whole.finish();
+    assert_history_bit_equal(&report.history, &whole_recs);
+    assert_state_bit_equal(&report.state, &whole_outcome.state);
+    assert_eq!(report.trace, whole_outcome.trace);
+    let (_whole_workers, whole_wall, whole_wait) = whole_source.finish();
+    assert_eq!(whole_wall.to_bits(), report.wall_clock_s.to_bits());
+    assert_eq!(whole_wait.to_bits(), report.master_wait_s.to_bits());
+
+    for split in split_points(70) {
+        let mut first = cluster.virtual_session(&cfg).unwrap();
+        let mut recs = drive(&mut first, Some(split));
+        let cp = Checkpoint::from_json_str(
+            &first.checkpoint().unwrap().to_json_string(),
+        )
+        .unwrap();
+        assert_eq!(cp.source_kind(), "virtual");
+        drop(first);
+
+        let mut second = cluster.resume_virtual_session(&cfg, &cp).unwrap();
+        assert_eq!(second.iteration(), split);
+        recs.extend(drive(&mut second, None));
+        let (outcome, source) = second.finish();
+
+        assert_history_bit_equal(&report.history, &recs);
+        assert_state_bit_equal(&report.state, &outcome.state);
+        assert_eq!(report.trace, outcome.trace);
+
+        // The stitched run's simulated clock and per-worker stats also
+        // match the uninterrupted run exactly.
+        let stitched = ClusterReport::from_virtual_parts(outcome, recs, source);
+        assert_eq!(stitched.wall_clock_s.to_bits(), report.wall_clock_s.to_bits());
+        assert_eq!(stitched.master_wait_s.to_bits(), report.master_wait_s.to_bits());
+        for (a, b) in report.workers.iter().zip(&stitched.workers) {
+            assert_eq!(a.updates, b.updates, "worker {} updates", a.id);
+            assert_eq!(a.busy_s.to_bits(), b.busy_s.to_bits(), "worker {} busy", a.id);
+            assert_eq!(a.retransmissions, b.retransmissions, "worker {} retrans", a.id);
+        }
+    }
+}
+
+#[test]
+fn threaded_run_checkpoints_through_its_realized_trace() {
+    // The real-thread source holds live OS state and is deliberately not
+    // checkpointable; its contract is trace-replay equivalence. So: run
+    // the threaded cluster, replay the realized trace through a
+    // trace-driven session, and split/resume *that* — the stitched
+    // history must be bit-identical to the threaded run's.
+    let n_workers = 4;
+    let p = lasso(723, n_workers);
+    let admm =
+        AdmmConfig { rho: 50.0, tau: 4, min_arrivals: 1, max_iters: 50, ..Default::default() };
+    let tcfg = ClusterConfig {
+        admm: admm.clone(),
+        delays: DelayModel::Fixed { per_worker_ms: vec![0.0, 0.5, 1.0, 2.0] },
+        ..Default::default()
+    };
+    let report = StarCluster::new(p.clone()).run(&tcfg);
+    assert_eq!(report.history.len(), 50);
+
+    let model = ArrivalModel::Trace(report.trace.clone());
+    let build = || {
+        Session::builder()
+            .problem(&p)
+            .config(admm.clone())
+            .policy(PartialBarrier { tau: admm.tau })
+            .arrivals(&model)
+    };
+    for split in split_points(50) {
+        let mut first = build().build().unwrap();
+        let mut recs = drive(&mut first, Some(split));
+        let cp = first.checkpoint().unwrap();
+        let mut second = build().resume(&cp).unwrap();
+        recs.extend(drive(&mut second, None));
+        assert_history_bit_equal(&report.history, &recs);
+        assert_state_bit_equal(&report.state, second.state());
+        assert_eq!(&report.trace, second.trace());
+    }
+}
+
+#[test]
+fn checkpoint_after_early_stop_resumes_into_the_stopped_state() {
+    let p = lasso(724, 3);
+    let cfg = AdmmConfig {
+        rho: 60.0,
+        x0_tol: 1e-9,
+        max_iters: 5_000,
+        ..Default::default()
+    };
+    let build = || Session::builder().problem(&p).config(cfg.clone());
+    let mut session = build().build().unwrap();
+    let stop = session.run_to_completion().unwrap();
+    assert_eq!(stop, StopReason::X0Tolerance);
+    let stopped_at = session.iteration();
+    let cp = session.checkpoint().unwrap();
+
+    let mut resumed = build().resume(&cp).unwrap();
+    assert!(matches!(resumed.step().unwrap(), StepStatus::Done(StopReason::X0Tolerance)));
+    assert_eq!(resumed.iteration(), stopped_at);
+    assert_state_bit_equal(session.state(), resumed.state());
+}
+
+// ---------------------------------------------------------------------------
+// 4. CLI round trip
+// ---------------------------------------------------------------------------
+
+fn extract_line<'t>(text: &'t str, prefix: &str) -> &'t str {
+    text.lines()
+        .find(|l| l.starts_with(prefix))
+        .unwrap_or_else(|| panic!("no line starting with {prefix:?} in:\n{text}"))
+}
+
+#[test]
+fn cli_checkpoint_resume_round_trips_a_faulted_virtual_run() {
+    use std::process::Command;
+
+    let exe = env!("CARGO_BIN_EXE_ad_admm");
+    let dir = std::env::temp_dir().join(format!("ad_admm_session_api_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt = dir.join("run.ckpt");
+
+    // Faulted virtual-time run, checkpointing every 20 of 60 iterations
+    // (so the file left on disk is the k = 40 snapshot).
+    let out = Command::new(exe)
+        .args([
+            "cluster", "--virtual", "--workers", "4", "--m", "20", "--n", "10", "--rho", "50",
+            "--tau", "4", "--iters", "60", "--fault-worker", "1", "--fault-from", "10",
+            "--fault-until", "30", "--checkpoint-every", "20", "--checkpoint-path",
+        ])
+        .arg(&ckpt)
+        .output()
+        .expect("run ad_admm cluster");
+    let stdout = String::from_utf8_lossy(&out.stdout).into_owned();
+    assert!(
+        out.status.success(),
+        "cluster failed\nstdout:\n{stdout}\nstderr:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(ckpt.exists(), "no checkpoint written\n{stdout}");
+    assert!(stdout.contains("checkpoint written at k=40"), "{stdout}");
+    let digest = extract_line(&stdout, "final x0 digest ").to_string();
+    let vtime = extract_line(&stdout, "virtual time ").to_string();
+
+    // The checkpoint parses as a library Checkpoint too.
+    let cp = Checkpoint::read_from_file(&ckpt).unwrap();
+    assert_eq!(cp.iteration(), 40);
+    assert_eq!(cp.source_kind(), "virtual");
+
+    // Resume continues iterations 40..60 and lands on the *same* final
+    // state and simulated clock as the uninterrupted run.
+    let rout = Command::new(exe).arg("resume").arg(&ckpt).output().expect("run ad_admm resume");
+    let rstdout = String::from_utf8_lossy(&rout.stdout).into_owned();
+    assert!(
+        rout.status.success(),
+        "resume failed\nstdout:\n{rstdout}\nstderr:\n{}",
+        String::from_utf8_lossy(&rout.stderr)
+    );
+    assert!(rstdout.contains("at k=40"), "{rstdout}");
+    assert_eq!(extract_line(&rstdout, "final x0 digest "), digest, "{rstdout}");
+    assert_eq!(extract_line(&rstdout, "virtual time "), vtime, "{rstdout}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -3,6 +3,8 @@
 //! random configurations, and the scale target that motivates the mode
 //! (1000 workers × 500 iterations well inside the CI budget).
 
+#![allow(deprecated)] // exercises the legacy free-function drivers on purpose
+
 use std::sync::Arc;
 use std::time::Instant;
 
