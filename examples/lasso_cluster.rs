@@ -157,4 +157,45 @@ fn main() {
         "\nfinal KKT residual (async): dual={:.2e} stat={:.2e} cons={:.2e}",
         kkt.dual, kkt.stationarity, kkt.consensus
     );
+
+    // --- block-sharded consensus: ship owned feature slices only ---
+    // Each worker owns 2 of N feature blocks (general-form consensus,
+    // overlapping ownership); messages and the master reduction shrink to
+    // the owned slice. Run in deterministic virtual time with an explicit
+    // comm model so the message-size effect shows up on the clock.
+    let pattern = BlockPattern::round_robin(n, n_workers, n_workers, 2.min(n_workers))
+        .expect("round-robin pattern");
+    let sharded = inst.sharded_problem(&pattern).expect("pattern fits the instance");
+    println!(
+        "\n=== block-sharded consensus: {} blocks, 2 owners/block, comm volume {:.3}x dense ===",
+        n_workers,
+        pattern.comm_volume_ratio()
+    );
+    let sharded_cfg = ClusterConfig {
+        admm: AdmmConfig {
+            rho: 500.0,
+            tau,
+            min_arrivals: 1,
+            max_iters: iters,
+            ..Default::default()
+        },
+        protocol: Protocol::AdAdmm,
+        delays: DelayModel::linear_spread(n_workers, 0.5, slow_ms, 0.3, seed),
+        comm_delays: Some(DelayModel::Fixed { per_worker_ms: vec![1.0; n_workers] }),
+        mode: ExecutionMode::VirtualTime,
+        ..Default::default()
+    };
+    let shard_report = StarCluster::new(sharded.clone()).run(&sharded_cfg);
+    let shard_kkt = kkt_residual(&sharded, &shard_report.state);
+    println!(
+        "sharded async: {} iters in {:.3} simulated s  obj={:.5e}  KKT max={:.2e}",
+        shard_report.history.len(),
+        shard_report.wall_clock_s,
+        sharded.objective(&shard_report.state.x0),
+        shard_kkt.max(),
+    );
+    println!(
+        "bounded-delay per block (tau={tau}): {}",
+        shard_report.trace.satisfies_bounded_delay_blocks(&pattern, tau)
+    );
 }

@@ -9,13 +9,12 @@
 //! Run: `cargo bench --bench ablation_gamma` (AD_ADMM_BENCH_QUICK=1
 //! shrinks). Emits `BENCH_ablation_gamma.json` next to the text output.
 
-#![allow(deprecated)] // exercises the legacy free-function drivers on purpose
-
 use ad_admm::admm::params::{gamma_lower_bound, rho_lower_bound_nonconvex};
 use ad_admm::bench::json::{BenchReport, JsonValue};
 use ad_admm::metrics::accuracy_series;
 use ad_admm::prelude::*;
 use ad_admm::util::Stopwatch;
+use ad_admm::testkit::drivers::{run_full_barrier, run_partial_barrier};
 
 fn main() {
     let quick = ad_admm::bench::quick_mode();
@@ -39,7 +38,7 @@ fn main() {
     for gamma in [0.0, 0.1 * gamma_thm, gamma_thm] {
         let cfg = AdmmConfig { rho, gamma, tau, max_iters: gamma_iters, ..Default::default() };
         let arrivals = ArrivalModel::fig3_profile(n_workers, 5);
-        let out = run_master_pov(&problem, &cfg, &arrivals);
+        let out = run_partial_barrier(&problem, &cfg, &arrivals);
         let acc = accuracy_series(&out.history, f_star);
         let at500 = acc.get(499.min(acc.len() - 1)).copied().unwrap_or(f64::INFINITY);
         println!(
@@ -83,7 +82,7 @@ fn main() {
         init_x0: Some(init.clone()),
         ..Default::default()
     };
-    let f_hat = run_sync_admm(&sproblem, &ref_cfg).history.last().unwrap().aug_lagrangian;
+    let f_hat = run_full_barrier(&sproblem, &ref_cfg).history.last().unwrap().aug_lagrangian;
 
     println!("{:>12} {:>10} {:>12} {:>10}", "rho/L", "rho", "acc@final", "stop");
     for beta in [1.0, 1.5, 1.9, 2.05, 3.0, 4.0] {
@@ -95,7 +94,7 @@ fn main() {
             init_x0: Some(init.clone()),
             ..Default::default()
         };
-        let out = run_sync_admm(&sproblem, &cfg);
+        let out = run_full_barrier(&sproblem, &cfg);
         let acc = accuracy_series(&out.history, f_hat);
         println!(
             "{:>12.2} {:>10.1} {:>12.3e} {:>10}",

@@ -13,14 +13,13 @@
 //! shared reduced-size quick mode). Emits `BENCH_fig3_spca.json` next to
 //! the text output.
 
-#![allow(deprecated)] // exercises the legacy free-function drivers on purpose
-
 use ad_admm::bench::json::{BenchReport, JsonValue};
 use ad_admm::metrics::rate::fit_linear_rate;
 use ad_admm::metrics::{accuracy_series, write_curves, RunLog};
 use ad_admm::util::plot::{render_log_curves, Series};
 use ad_admm::prelude::*;
 use ad_admm::util::Stopwatch;
+use ad_admm::testkit::drivers::{run_full_barrier, run_partial_barrier};
 
 fn main() {
     let quick = ad_admm::bench::quick_mode();
@@ -58,7 +57,7 @@ fn main() {
         init_x0: Some(init.clone()),
         ..Default::default()
     };
-    let f_hat = run_sync_admm(&problem, &ref_cfg).history.last().unwrap().aug_lagrangian;
+    let f_hat = run_full_barrier(&problem, &ref_cfg).history.last().unwrap().aug_lagrangian;
     println!("F̂ = {f_hat:.8e}");
 
     let mut curves = Vec::new();
@@ -73,7 +72,7 @@ fn main() {
             ..Default::default()
         };
         let arrivals = ArrivalModel::fig3_profile(n_workers, 100 + tau as u64);
-        let out = run_master_pov(&problem, &cfg, &arrivals);
+        let out = run_partial_barrier(&problem, &cfg, &arrivals);
         let acc = accuracy_series(&out.history, f_hat);
         let at250 = acc.get(249.min(acc.len() - 1)).copied().unwrap_or(f64::INFINITY);
         println!(
@@ -97,7 +96,7 @@ fn main() {
             ..Default::default()
         };
         let arrivals = ArrivalModel::fig3_profile(n_workers, 200 + tau as u64);
-        let out = run_master_pov(&problem, &cfg, &arrivals);
+        let out = run_partial_barrier(&problem, &cfg, &arrivals);
         let acc = accuracy_series(&out.history, f_hat);
         println!(
             "  tau={tau}: stop={:?}, final accuracy {:.3e}",

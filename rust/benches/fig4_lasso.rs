@@ -16,14 +16,13 @@
 //! shared reduced-size quick mode). Emits `BENCH_fig4_lasso.json` next to
 //! the text output.
 
-#![allow(deprecated)] // exercises the legacy free-function drivers on purpose
-
 use ad_admm::bench::json::{BenchReport, JsonValue};
 use ad_admm::metrics::rate::fit_linear_rate;
 use ad_admm::metrics::{accuracy_series, write_curves, RunLog};
 use ad_admm::util::plot::{render_log_curves, Series};
 use ad_admm::prelude::*;
 use ad_admm::util::Stopwatch;
+use ad_admm::testkit::drivers::{run_alt, run_partial_barrier};
 
 struct Panel {
     name: &'static str,
@@ -94,10 +93,10 @@ fn main() {
             let cfg = AdmmConfig { rho, tau, max_iters: iters, ..Default::default() };
             let arrivals = ArrivalModel::fig4_profile(n_workers, 7 * tau as u64 + rho as u64);
             let (history, stop) = if panel.alg2 {
-                let out = run_master_pov(&problem, &cfg, &arrivals);
+                let out = run_partial_barrier(&problem, &cfg, &arrivals);
                 (out.history, format!("{:?}", out.stop))
             } else {
-                let out = run_alt_scheme(&problem, &cfg, &arrivals);
+                let out = run_alt(&problem, &cfg, &arrivals);
                 (out.history, format!("{:?}", out.stop))
             };
             let acc = accuracy_series(&history, f_star);

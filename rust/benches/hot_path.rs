@@ -11,8 +11,6 @@
 //! Run: `cargo bench --bench hot_path` (`AD_ADMM_BENCH_QUICK=1` shrinks).
 //! Emits `BENCH_hot_path.json` next to the text output.
 
-#![allow(deprecated)] // exercises the legacy free-function drivers on purpose
-
 use std::sync::Arc;
 
 use ad_admm::admm::{master_x0_update, AdmmConfig, AdmmState, MasterScratch};
@@ -21,6 +19,7 @@ use ad_admm::bench::{bench_fn, black_box, banner, report, BenchStats};
 use ad_admm::prelude::*;
 use ad_admm::problems::{LassoLocal, WorkerScratch};
 use ad_admm::runtime::{artifacts_available, artifacts_dir, PjrtLassoSolver, PjrtMasterProx};
+use ad_admm::testkit::drivers::run_partial_barrier;
 
 fn record(json: &mut BenchReport, label: &str, stats: &BenchStats) {
     report(label, stats);
@@ -105,7 +104,7 @@ fn main() {
         // measure per-iteration cost via a fixed-length run
         let stats = bench_fn(1, 5, || {
             let cfg = AdmmConfig { rho: 500.0, tau: 10, max_iters: 50, ..Default::default() };
-            let out = run_master_pov(&problem, &cfg, &arrivals);
+            let out = run_partial_barrier(&problem, &cfg, &arrivals);
             black_box(out.history.len());
         });
         println!("  (each sample = 50 master iterations)");
@@ -120,7 +119,7 @@ fn main() {
                 objective_every: 50,
                 ..Default::default()
             };
-            let out = run_master_pov(&problem, &cfg, &arrivals);
+            let out = run_partial_barrier(&problem, &cfg, &arrivals);
             black_box(out.history.len());
         });
         record(&mut json, "50 iterations, objective_every=50", &stats);

@@ -45,6 +45,35 @@ impl ArrivalTrace {
         true
     }
 
+    /// The per-block Assumption 1 of the block-wise analysis
+    /// (arXiv:1802.08882): every coordinate block receives an update from
+    /// at least one of its owners in every window of τ consecutive
+    /// iterations. Implied by [`ArrivalTrace::satisfies_bounded_delay`]
+    /// (per worker) whenever every block has an owner, but strictly
+    /// weaker: a block with several owners stays fresh as long as *any*
+    /// of them keeps arriving.
+    pub fn satisfies_bounded_delay_blocks(
+        &self,
+        pattern: &crate::problems::BlockPattern,
+        tau: usize,
+    ) -> bool {
+        let nb = pattern.num_blocks();
+        let mut last_seen = vec![-1isize; nb]; // A_{-1} = V convention
+        for (k, set) in self.sets.iter().enumerate() {
+            for &i in set {
+                for &b in pattern.owned(i) {
+                    last_seen[b] = k as isize;
+                }
+            }
+            for b in 0..nb {
+                if (k as isize) - last_seen[b] >= tau as isize {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
     /// Max observed arrival-set size (the `S` of Theorem 1, as `|A_k| < S`
     /// wants a strict bound: returns `max|A_k| + 1` capped at `N`).
     pub fn observed_s(&self, n_workers: usize) -> f64 {
@@ -352,6 +381,23 @@ mod tests {
         assert!(bad.satisfies_bounded_delay(2, 4));
         let recovers = ArrivalTrace { sets: vec![vec![0], vec![0], vec![0, 1]] };
         assert!(recovers.satisfies_bounded_delay(2, 3));
+    }
+
+    #[test]
+    fn per_block_bounded_delay_is_weaker_than_per_worker() {
+        use crate::problems::BlockPattern;
+        // 2 workers, both owning the single block: the block stays fresh
+        // as long as ANY worker arrives, even when worker 1 overstays τ.
+        let p = BlockPattern::dense(4, 2);
+        let t = ArrivalTrace { sets: vec![vec![0], vec![0], vec![0]] };
+        assert!(!t.satisfies_bounded_delay(2, 2));
+        assert!(t.satisfies_bounded_delay_blocks(&p, 2));
+
+        // Disjoint ownership: worker 1's silence starves its block.
+        let q = BlockPattern::new(4, &[(0, 2), (2, 2)], vec![vec![0], vec![1]]).unwrap();
+        assert!(!t.satisfies_bounded_delay_blocks(&q, 2));
+        let alternating = ArrivalTrace { sets: vec![vec![0], vec![1], vec![0], vec![1]] };
+        assert!(alternating.satisfies_bounded_delay_blocks(&q, 2));
     }
 
     #[test]

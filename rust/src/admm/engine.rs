@@ -47,8 +47,10 @@
 //! delayed-information regime of the incremental/blockwise ADMM line
 //! (Hong, arXiv:1412.6058; Zhu et al., arXiv:1802.08882).
 
+use std::sync::Arc;
+
 use crate::bench::json::{hex_mat, mat_from_hex, JsonValue};
-use crate::problems::ConsensusProblem;
+use crate::problems::{BlockPattern, ConsensusProblem};
 use crate::rng::Pcg64;
 
 use super::arrivals::{ArrivalModel, ArrivalSampler, ArrivalTrace};
@@ -367,6 +369,12 @@ pub struct MasterView<'a> {
     pub f_cache: &'a mut [f64],
     pub scratch: &'a mut MasterScratch,
     pub rho: f64,
+    /// Block-sharding pattern of the session (None = dense). Under a
+    /// pattern, `state.xs[i]`/`state.lams[i]` are worker i's owned slices
+    /// (length `shard.owned_len(i)`), stored per worker-block in owned
+    /// order; custom sources use this to map local coordinates back to
+    /// the global `x₀`.
+    pub shard: Option<&'a BlockPattern>,
 }
 
 /// Where worker results come from. Implementations:
@@ -400,6 +408,18 @@ pub trait WorkerSource {
     /// worker rounds against broadcast snapshots, which is exactly what a
     /// master-first barrier forbids.
     fn supports_master_first(&self) -> bool {
+        false
+    }
+
+    /// Can this source drive a *genuinely* block-sharded session (workers
+    /// exchanging owned slices of differing lengths)? The in-tree sources
+    /// return true when constructed from a sharded problem; the default
+    /// is false so shard-unaware sources (external-solver
+    /// [`TraceSource::with_solver`], custom impls) are rejected at
+    /// `build()` with a typed error instead of panicking on dimension
+    /// mismatches mid-run. Effectively-dense patterns (every worker owns
+    /// the full dimension) need no support — all messages are full-length.
+    fn supports_sharding(&self) -> bool {
         false
     }
 
@@ -448,6 +468,10 @@ impl<S: WorkerSource + ?Sized> WorkerSource for &mut S {
         (**self).supports_master_first()
     }
 
+    fn supports_sharding(&self) -> bool {
+        (**self).supports_sharding()
+    }
+
     fn start(&mut self, state: &AdmmState, policy: &dyn UpdatePolicy) {
         (**self).start(state, policy)
     }
@@ -484,6 +508,10 @@ impl<S: WorkerSource + ?Sized> WorkerSource for Box<S> {
 
     fn supports_master_first(&self) -> bool {
         (**self).supports_master_first()
+    }
+
+    fn supports_sharding(&self) -> bool {
+        (**self).supports_sharding()
     }
 
     fn start(&mut self, state: &AdmmState, policy: &dyn UpdatePolicy) {
@@ -642,6 +670,9 @@ pub struct TraceSource<'a> {
     n_workers: usize,
     sampler: ArrivalSampler,
     solver: SolverSlot<'a>,
+    /// Block-sharding pattern (from the problem; None = dense). Snapshots
+    /// below are owned slices under a pattern.
+    shard: Option<Arc<BlockPattern>>,
     /// `x₀^{k̄_i+1}` as worker i last received it.
     x0_snap: Vec<Vec<f64>>,
     /// `λ̂_i` as worker i last received it (Algorithm 4 only).
@@ -649,20 +680,23 @@ pub struct TraceSource<'a> {
 }
 
 impl<'a> TraceSource<'a> {
-    /// Native closed-form subproblem solves backed by the problem itself.
+    /// Native closed-form subproblem solves backed by the problem itself
+    /// (block-sharded when the problem is).
     pub fn new(problem: &'a ConsensusProblem, arrivals: &ArrivalModel) -> Self {
         let n_workers = problem.num_workers();
         TraceSource {
             n_workers,
             sampler: arrivals.sampler(n_workers),
             solver: SolverSlot::Native(NativeSolver::new(problem)),
+            shard: problem.pattern().cloned(),
             x0_snap: Vec::new(),
             lam_snap: Vec::new(),
         }
     }
 
     /// Caller-supplied solver (e.g. the PJRT engine executing AOT
-    /// JAX/Pallas artifacts).
+    /// JAX/Pallas artifacts). Dense-only: the external-solver protocol
+    /// exchanges full-dimension vectors.
     pub fn with_solver(
         n_workers: usize,
         arrivals: &ArrivalModel,
@@ -672,6 +706,7 @@ impl<'a> TraceSource<'a> {
             n_workers,
             sampler: arrivals.sampler(n_workers),
             solver: SolverSlot::Borrowed(solver),
+            shard: None,
             x0_snap: Vec::new(),
             lam_snap: Vec::new(),
         }
@@ -689,6 +724,10 @@ impl<'a> WorkerSource for TraceSource<'a> {
 
     fn supports_master_first(&self) -> bool {
         true
+    }
+
+    fn supports_sharding(&self) -> bool {
+        self.shard.is_some()
     }
 
     fn save_checkpoint(&self) -> Result<JsonValue, EngineError> {
@@ -716,7 +755,12 @@ impl<'a> WorkerSource for TraceSource<'a> {
     }
 
     fn start(&mut self, state: &AdmmState, _policy: &dyn UpdatePolicy) {
-        self.x0_snap = vec![state.x0.clone(); self.n_workers];
+        self.x0_snap = match &self.shard {
+            None => vec![state.x0.clone(); self.n_workers],
+            // Sharded: each worker receives (and snapshots) only its
+            // owned slice of x₀.
+            Some(p) => (0..self.n_workers).map(|i| p.gather_vec(i, &state.x0)).collect(),
+        };
         self.lam_snap = state.lams.clone();
     }
 
@@ -725,15 +769,17 @@ impl<'a> WorkerSource for TraceSource<'a> {
     }
 
     fn absorb(&mut self, set: &[usize], m: &mut MasterView<'_>, policy: &dyn UpdatePolicy) {
-        let n = m.state.x0.len();
         let worker_dual = policy.worker_updates_dual();
         for &i in set {
+            // Worker i's slice length: the global dimension when dense,
+            // its owned-slice length when sharded.
+            let ni = m.state.xs[i].len();
             if worker_dual {
                 // (19)/(23): solve against the worker's own dual and its
                 // x₀ snapshot, then (20)/(24): the dual update.
                 let snap = &self.x0_snap[i];
                 self.solver.solve(i, &m.state.lams[i], snap, m.rho, &mut m.state.xs[i]);
-                for j in 0..n {
+                for j in 0..ni {
                     m.state.lams[i][j] += m.rho * (m.state.xs[i][j] - snap[j]);
                 }
             } else {
@@ -748,7 +794,10 @@ impl<'a> WorkerSource for TraceSource<'a> {
     fn broadcast(&mut self, set: &[usize], state: &AdmmState, policy: &dyn UpdatePolicy) {
         let with_dual = policy.broadcasts_dual();
         for &i in set {
-            self.x0_snap[i].copy_from_slice(&state.x0);
+            match &self.shard {
+                None => self.x0_snap[i].copy_from_slice(&state.x0),
+                Some(p) => p.gather_into(i, &state.x0, &mut self.x0_snap[i]),
+            }
             if with_dual {
                 self.lam_snap[i].copy_from_slice(&state.lams[i]);
             }
@@ -757,7 +806,6 @@ impl<'a> WorkerSource for TraceSource<'a> {
 }
 
 #[cfg(test)]
-#[allow(deprecated)] // the deprecated wrappers stay pinned by these tests
 mod tests {
     use super::*;
     use crate::data::LassoInstance;
@@ -766,6 +814,11 @@ mod tests {
         let mut rng = Pcg64::seed_from_u64(seed);
         LassoInstance::synthetic(&mut rng, n_workers, 20, 8, 0.2, 0.1).problem()
     }
+
+    // Shared Session-based runner (these tests predate the Session facade
+    // and used the deprecated `run_trace_driven` wrapper, which stays
+    // pinned by the `engine_equivalence` suite).
+    use crate::testkit::drivers::run_policy_with_faults;
 
     #[test]
     fn policy_metadata_matches_the_paper() {
@@ -824,16 +877,17 @@ mod tests {
         let p = lasso(901, 4);
         let cfg = AdmmConfig { rho: 40.0, tau: 3, max_iters: 40, ..Default::default() };
         let plan = FaultPlan::single_outage(2, 10, 20);
-        let opts = EngineOptions { residual_stopping: true, fault_plan: Some(plan) };
-        let run = run_trace_driven(
+        let run = run_policy_with_faults(
             &p,
             &cfg,
             &ArrivalModel::Full,
-            &PartialBarrier { tau: cfg.tau },
-            &opts,
+            PartialBarrier { tau: cfg.tau },
+            true,
+            Some(plan),
         );
-        assert_eq!(run.history.len(), 40);
-        for (k, set) in run.trace.sets.iter().enumerate() {
+        let (history, trace) = (run.history, run.trace);
+        assert_eq!(history.len(), 40);
+        for (k, set) in trace.sets.iter().enumerate() {
             if (10..20).contains(&k) {
                 assert!(!set.contains(&2), "down worker arrived at k={k}");
             } else {
@@ -843,8 +897,8 @@ mod tests {
         // The 10-iteration outage exceeds τ = 3: Assumption 1 is violated
         // on the realized trace — exactly the stress the scenario exists
         // to produce — while the pre-outage prefix still satisfies it.
-        assert!(!run.trace.satisfies_bounded_delay(4, 3));
-        let prefix = ArrivalTrace { sets: run.trace.sets[..10].to_vec() };
+        assert!(!trace.satisfies_bounded_delay(4, 3));
+        let prefix = ArrivalTrace { sets: trace.sets[..10].to_vec() };
         assert!(prefix.satisfies_bounded_delay(4, 3));
     }
 
@@ -859,13 +913,13 @@ mod tests {
             ],
             spikes: Vec::new(),
         };
-        let opts = EngineOptions { residual_stopping: true, fault_plan: Some(plan) };
-        let run = run_trace_driven(
+        let run = run_policy_with_faults(
             &p,
             &cfg,
             &ArrivalModel::Full,
-            &PartialBarrier { tau: cfg.tau },
-            &opts,
+            PartialBarrier { tau: cfg.tau },
+            true,
+            Some(plan),
         );
         assert_eq!(run.history.len(), 5);
         assert!(run.trace.sets.iter().all(Vec::is_empty));
@@ -880,13 +934,7 @@ mod tests {
         // engine_equivalence integration suite.)
         let p = lasso(903, 3);
         let cfg = AdmmConfig { rho: 40.0, max_iters: 30, ..Default::default() };
-        let run = run_trace_driven(
-            &p,
-            &cfg,
-            &ArrivalModel::Full,
-            &FullBarrier,
-            &EngineOptions::default(),
-        );
+        let run = run_policy_with_faults(&p, &cfg, &ArrivalModel::Full, FullBarrier, true, None);
         assert_eq!(run.history.len(), 30);
         assert!(run.history.iter().all(|r| r.arrivals == 3));
     }

@@ -27,18 +27,46 @@ impl KktResidual {
 }
 
 /// Evaluate all KKT residuals at the given state.
+///
+/// Block-sharded problems ([`ConsensusProblem::pattern`]) use the
+/// general-form conditions: per worker-block dual feasibility
+/// `∇f_i(x_i) + λ_i = 0` over the owned slice, consensus
+/// `x_i = (x₀)_{S_i}`, and master stationarity
+/// `Σ_{i∋j} λ_{i,j} ∈ ∂h(x₀)_j` — coordinate `j` sums only its owners'
+/// duals.
 pub fn kkt_residual(problem: &ConsensusProblem, state: &AdmmState) -> KktResidual {
     let n = state.x0.len();
-    let mut grad = vec![0.0; n];
     let mut dual: f64 = 0.0;
     let mut consensus: f64 = 0.0;
     let mut lam_sum = vec![0.0; n];
-    for (i, local) in problem.locals().iter().enumerate() {
-        local.grad_into(&state.xs[i], &mut grad);
-        for j in 0..n {
-            dual = dual.max((grad[j] + state.lams[i][j]).abs());
-            consensus = consensus.max((state.xs[i][j] - state.x0[j]).abs());
-            lam_sum[j] += state.lams[i][j];
+    match problem.pattern() {
+        None => {
+            let mut grad = vec![0.0; n];
+            for (i, local) in problem.locals().iter().enumerate() {
+                local.grad_into(&state.xs[i], &mut grad);
+                for j in 0..n {
+                    dual = dual.max((grad[j] + state.lams[i][j]).abs());
+                    consensus = consensus.max((state.xs[i][j] - state.x0[j]).abs());
+                    lam_sum[j] += state.lams[i][j];
+                }
+            }
+        }
+        Some(p) => {
+            let mut grad: Vec<f64> = Vec::new();
+            for (i, local) in problem.locals().iter().enumerate() {
+                grad.resize(local.dim(), 0.0);
+                local.grad_into(&state.xs[i], &mut grad);
+                let xi = &state.xs[i];
+                let li = &state.lams[i];
+                let gref = &grad;
+                p.for_each_range(i, |lo, g, len| {
+                    for k in 0..len {
+                        dual = dual.max((gref[lo + k] + li[lo + k]).abs());
+                        consensus = consensus.max((xi[lo + k] - state.x0[g + k]).abs());
+                        lam_sum[g + k] += li[lo + k];
+                    }
+                });
+            }
         }
     }
     let stationarity = problem.regularizer().subdiff_dist(&state.x0, &lam_sum);
@@ -47,12 +75,13 @@ pub fn kkt_residual(problem: &ConsensusProblem, state: &AdmmState) -> KktResidua
 
 /// Check the per-worker dual identity (29): after every master iteration of
 /// Algorithm 2/3, `∇f_i(x_i^{k+1}) + λ_i^{k+1} = 0` for **all** workers
-/// (arrived or not). Returns the worst violation; property tests assert ≈ 0.
+/// (arrived or not) — over each worker's owned slice when sharded.
+/// Returns the worst violation; property tests assert ≈ 0.
 pub fn dual_identity_residual(problem: &ConsensusProblem, state: &AdmmState) -> f64 {
-    let n = state.x0.len();
-    let mut grad = vec![0.0; n];
+    let mut grad: Vec<f64> = Vec::new();
     let mut worst: f64 = 0.0;
     for (i, local) in problem.locals().iter().enumerate() {
+        grad.resize(local.dim(), 0.0);
         local.grad_into(&state.xs[i], &mut grad);
         vecops::axpy(1.0, &state.lams[i], &mut grad);
         worst = worst.max(vecops::nrm_inf(&grad));

@@ -32,7 +32,7 @@ pub mod stopping;
 pub mod sync;
 
 use crate::linalg::vecops;
-use crate::problems::{ConsensusProblem, WorkerScratch};
+use crate::problems::{BlockPattern, ConsensusProblem, WorkerScratch};
 
 /// Master-side reusable buffers for the per-iteration hot path — the
 /// counterpart of [`WorkerScratch`]. One instance is owned by each
@@ -45,6 +45,9 @@ pub struct MasterScratch {
     pub v: Vec<f64>,
     /// Difference buffer of the cached augmented Lagrangian (26).
     pub al: Vec<f64>,
+    /// Per-coordinate prox weights `1/(N_j ρ + γ)` of the block-sharded
+    /// master update (unused on the dense path).
+    pub wd: Vec<f64>,
     /// Scratch for master-side `f_i` / objective evaluations.
     pub ws: WorkerScratch,
 }
@@ -156,6 +159,19 @@ impl AdmmState {
         }
     }
 
+    /// Block-sharded init: worker i's primal starts at its owned slice of
+    /// `x⁰` and its dual (stored per worker-block, concatenated in owned
+    /// order) at zero. With an effectively-dense pattern this reproduces
+    /// [`AdmmState::init`] exactly.
+    pub fn init_blocks(pattern: &BlockPattern, x0: Vec<f64>) -> Self {
+        assert_eq!(x0.len(), pattern.dim(), "init x0 dimension mismatch");
+        let n_workers = pattern.num_workers();
+        let xs: Vec<Vec<f64>> = (0..n_workers).map(|i| pattern.gather_vec(i, &x0)).collect();
+        let lams: Vec<Vec<f64>> =
+            (0..n_workers).map(|i| vec![0.0; pattern.owned_len(i)]).collect();
+        AdmmState { xs, x0, lams }
+    }
+
     pub fn zeros(n_workers: usize, dim: usize) -> Self {
         Self::init(n_workers, vec![0.0; dim])
     }
@@ -166,6 +182,25 @@ impl AdmmState {
             .iter()
             .map(|x| vecops::dist2(x, &self.x0))
             .fold(0.0, f64::max)
+    }
+
+    /// Max consensus violation under a block pattern:
+    /// `max_i ‖x_i − (x₀)_{S_i}‖`. Same accumulation order as
+    /// [`AdmmState::consensus_residual`], so an effectively-dense pattern
+    /// reproduces it bit-for-bit.
+    pub fn consensus_residual_blocks(&self, pattern: &BlockPattern) -> f64 {
+        let mut worst = 0.0f64;
+        for (i, x) in self.xs.iter().enumerate() {
+            let mut s = 0.0;
+            pattern.for_each_range(i, |lo, g, len| {
+                for k in 0..len {
+                    let d = x[lo + k] - self.x0[g + k];
+                    s += d * d;
+                }
+            });
+            worst = worst.max(s.sqrt());
+        }
+        worst
     }
 
     pub fn is_finite(&self) -> bool {
@@ -212,6 +247,36 @@ pub fn augmented_lagrangian_cached(
     total
 }
 
+/// Block-sharded [`augmented_lagrangian_cached`]: the penalty/dual terms
+/// run over each worker's owned slice, `x_i − (x₀)_{S_i}`. Same per-term
+/// arithmetic and summation order as the dense version, so an
+/// effectively-dense pattern reproduces it bit-for-bit.
+pub fn augmented_lagrangian_cached_blocks(
+    problem: &ConsensusProblem,
+    state: &AdmmState,
+    rho: f64,
+    f_cache: &[f64],
+    scratch: &mut Vec<f64>,
+    pattern: &BlockPattern,
+) -> f64 {
+    debug_assert_eq!(f_cache.len(), state.xs.len());
+    let mut total = problem.regularizer().eval(&state.x0);
+    for i in 0..state.xs.len() {
+        total += f_cache[i];
+        let xi = &state.xs[i];
+        let ni = xi.len();
+        scratch.resize(ni, 0.0);
+        let diff = &mut scratch[..ni];
+        pattern.for_each_range(i, |lo, g, len| {
+            for k in 0..len {
+                diff[lo + k] = xi[lo + k] - state.x0[g + k];
+            }
+        });
+        total += vecops::dot(&state.lams[i], diff) + 0.5 * rho * vecops::nrm2_sq(diff);
+    }
+    total
+}
+
 /// The master update (12)/(25): with every `x_i^{k+1}`, `λ_i^{k+1}` in hand,
 /// `x₀⁺ = prox_{h/(Nρ+γ)}((ρ Σ x_i + Σ λ_i + γ x₀ᵏ) / (Nρ + γ))`.
 ///
@@ -242,6 +307,49 @@ pub fn master_x0_update(
     state.x0.copy_from_slice(v);
 }
 
+/// Block-sharded master update: the general-form consensus version of
+/// (12)/(25). Coordinate `j` receives contributions only from the `N_j`
+/// workers owning it, so
+/// `x₀⁺_j = prox_{h/(N_j ρ + γ)}((ρ Σ_{i∋j} x_{i,j} + Σ_{i∋j} λ_{i,j} + γ x₀ⱼ) / (N_j ρ + γ))`.
+/// The accumulation walks workers in ascending order with the same fused
+/// `v += ρ·x + λ` expression as [`vecops::acc_axpy`], the per-coordinate
+/// prox weight is applied through [`crate::prox::Regularizer::prox_weighted_in_place`],
+/// and with an effectively-dense pattern (`N_j = N` everywhere) every
+/// operation matches [`master_x0_update`] bit-for-bit.
+pub fn master_x0_update_blocks(
+    problem: &ConsensusProblem,
+    state: &mut AdmmState,
+    rho: f64,
+    gamma: f64,
+    scratch: &mut MasterScratch,
+    pattern: &BlockPattern,
+) {
+    let n = state.x0.len();
+    debug_assert_eq!(n, pattern.dim());
+    let v = &mut scratch.v;
+    v.resize(n, 0.0);
+    v.fill(0.0);
+    for i in 0..state.xs.len() {
+        let xi = &state.xs[i];
+        let li = &state.lams[i];
+        pattern.for_each_range(i, |lo, g, len| {
+            for k in 0..len {
+                v[g + k] += rho * xi[lo + k] + li[lo + k];
+            }
+        });
+    }
+    let wd = &mut scratch.wd;
+    wd.resize(n, 0.0);
+    for j in 0..n {
+        let denom = pattern.count(j) as f64 * rho + gamma;
+        debug_assert!(denom > 0.0, "N_j ρ + γ must be positive");
+        v[j] = (v[j] + gamma * state.x0[j]) / denom;
+        wd[j] = 1.0 / denom;
+    }
+    problem.regularizer().prox_weighted_in_place(v, wd);
+    state.x0.copy_from_slice(v);
+}
+
 /// Assemble the [`IterRecord`] for iteration `k` from the post-update
 /// state. Shared by every coordinator (serial Algorithm 3, Algorithm 4,
 /// the threaded star cluster and the virtual-time simulator) so that two
@@ -256,19 +364,34 @@ pub(crate) fn iter_record(
     f_cache: &[f64],
     scratch: &mut MasterScratch,
     prev_x0: &[f64],
+    shard: Option<&BlockPattern>,
 ) -> IterRecord {
-    let aug = augmented_lagrangian_cached(problem, state, cfg.rho, f_cache, &mut scratch.al);
+    let aug = match shard {
+        None => augmented_lagrangian_cached(problem, state, cfg.rho, f_cache, &mut scratch.al),
+        Some(p) => augmented_lagrangian_cached_blocks(
+            problem,
+            state,
+            cfg.rho,
+            f_cache,
+            &mut scratch.al,
+            p,
+        ),
+    };
     let x0_change = vecops::dist2(&state.x0, prev_x0);
     let objective = if cfg.objective_every > 0 && k % cfg.objective_every == 0 {
         problem.objective_with(&state.x0, &mut scratch.ws)
     } else {
         f64::NAN
     };
+    let consensus = match shard {
+        None => state.consensus_residual(),
+        Some(p) => state.consensus_residual_blocks(p),
+    };
     IterRecord {
         k,
         objective,
         aug_lagrangian: aug,
-        consensus: state.consensus_residual(),
+        consensus,
         x0_change,
         arrivals,
     }
@@ -384,6 +507,86 @@ mod tests {
         state.xs[0] = vec![3.0]; // v = 3, threshold 1 → 2
         master_x0_update(&p, &mut state, 1.0, 0.0, &mut MasterScratch::new());
         assert!((state.x0[0] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sharded_master_update_dense_pattern_is_bit_identical() {
+        let p = toy_problem();
+        let pattern = BlockPattern::dense(1, 2);
+        let mk = || {
+            let mut s = AdmmState::zeros(2, 1);
+            s.xs[0] = vec![2.0];
+            s.xs[1] = vec![4.0];
+            s.lams[0] = vec![1.0];
+            s.lams[1] = vec![-0.3];
+            s
+        };
+        let mut dense = mk();
+        master_x0_update(&p, &mut dense, 7.0, 0.5, &mut MasterScratch::new());
+        let mut sharded = mk();
+        master_x0_update_blocks(&p, &mut sharded, 7.0, 0.5, &mut MasterScratch::new(), &pattern);
+        assert_eq!(dense.x0[0].to_bits(), sharded.x0[0].to_bits());
+
+        // Same with an L1 prox in the loop (per-coordinate weights active).
+        let mk_local = || -> Arc<dyn crate::problems::LocalCost> {
+            Arc::new(QuadraticLocal::diagonal(&[1.0], vec![0.0]))
+        };
+        let pl1 =
+            ConsensusProblem::new(vec![mk_local(), mk_local()], Regularizer::L1 { theta: 0.4 });
+        let mut dense2 = mk();
+        master_x0_update(&pl1, &mut dense2, 1.0, 0.0, &mut MasterScratch::new());
+        let mut sharded2 = mk();
+        master_x0_update_blocks(&pl1, &mut sharded2, 1.0, 0.0, &mut MasterScratch::new(), &pattern);
+        assert_eq!(dense2.x0[0].to_bits(), sharded2.x0[0].to_bits());
+    }
+
+    #[test]
+    fn sharded_master_update_uses_per_coordinate_owner_counts() {
+        // n = 2 split into two singleton blocks; worker 0 owns both,
+        // worker 1 owns only block 0. Coordinate 0 averages over 2 owners,
+        // coordinate 1 over 1.
+        let pattern =
+            BlockPattern::new(2, &[(0, 1), (1, 1)], vec![vec![0, 1], vec![0]]).unwrap();
+        let l0 = Arc::new(QuadraticLocal::diagonal(&[1.0, 1.0], vec![0.0, 0.0]))
+            as Arc<dyn crate::problems::LocalCost>;
+        let l1 = Arc::new(QuadraticLocal::diagonal(&[1.0], vec![0.0]));
+        let p = ConsensusProblem::sharded(
+            vec![l0, l1],
+            Regularizer::Zero,
+            pattern.clone(),
+        )
+        .unwrap();
+        assert_eq!(p.dim(), 2);
+        let mut state = AdmmState::init_blocks(&pattern, vec![0.0, 0.0]);
+        state.xs[0] = vec![2.0, 6.0];
+        state.xs[1] = vec![4.0];
+        state.lams[0] = vec![1.0, 0.0];
+        state.lams[1] = vec![-1.0];
+        master_x0_update_blocks(&p, &mut state, 1.0, 0.0, &mut MasterScratch::new(), &pattern);
+        // x0_0 = (1·(2+4) + (1−1)) / 2 = 3 ; x0_1 = (1·6 + 0) / 1 = 6
+        assert!((state.x0[0] - 3.0).abs() < 1e-12);
+        assert!((state.x0[1] - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sharded_aug_lagrangian_and_consensus_over_owned_slices() {
+        let pattern =
+            BlockPattern::new(2, &[(0, 1), (1, 1)], vec![vec![0, 1], vec![0]]).unwrap();
+        let l0 = Arc::new(QuadraticLocal::diagonal(&[1.0, 1.0], vec![0.0, 0.0]))
+            as Arc<dyn crate::problems::LocalCost>;
+        let l1 = Arc::new(QuadraticLocal::diagonal(&[1.0], vec![0.0]));
+        let p = ConsensusProblem::sharded(vec![l0, l1], Regularizer::Zero, pattern.clone())
+            .unwrap();
+        let mut state = AdmmState::init_blocks(&pattern, vec![1.0, 2.0]);
+        assert_eq!(state.xs[1], vec![1.0]); // worker 1's owned slice of x0
+        state.xs[1] = vec![4.0]; // violates consensus on coordinate 0 by 3
+        assert!((state.consensus_residual_blocks(&pattern) - 3.0).abs() < 1e-12);
+        let f_cache = vec![0.0, 0.0];
+        let mut scratch = Vec::new();
+        let al =
+            augmented_lagrangian_cached_blocks(&p, &state, 2.0, &f_cache, &mut scratch, &pattern);
+        // only the (x_1 − x0_0) penalty term is nonzero: ½·ρ·3² = 9
+        assert!((al - 9.0).abs() < 1e-12, "al={al}");
     }
 
     #[test]

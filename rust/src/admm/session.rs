@@ -58,11 +58,12 @@
 
 use std::fmt;
 use std::path::Path;
+use std::sync::Arc;
 
 use crate::bench::json::{
     self, hex_mat, hex_vec, json_usize, mat_from_hex, vec_from_hex, JsonValue,
 };
-use crate::problems::ConsensusProblem;
+use crate::problems::{BlockError, BlockPattern, ConsensusProblem};
 
 use super::arrivals::{ArrivalModel, ArrivalTrace};
 use super::engine::{
@@ -70,8 +71,8 @@ use super::engine::{
     WorkerSource,
 };
 use super::{
-    divergence_or_tol_stop, iter_record, master_x0_update, AdmmConfig, AdmmState, IterRecord,
-    MasterScratch, StopReason,
+    divergence_or_tol_stop, iter_record, master_x0_update, master_x0_update_blocks, AdmmConfig,
+    AdmmState, IterRecord, MasterScratch, StopReason,
 };
 
 /// Everything the builder (or a checkpoint restore) can reject. Every
@@ -100,6 +101,22 @@ pub enum EngineError {
     CheckpointUnsupported { source: &'static str },
     /// Malformed or incompatible checkpoint data.
     Checkpoint(String),
+    /// An invalid block-sharding configuration ([`SessionBuilder::blocks`]
+    /// or [`ConsensusProblem::sharded`]): coverage gaps, overlapping
+    /// blocks, out-of-range ids, ownership/dimension mismatches — the
+    /// carried [`BlockError`] says which.
+    Block(BlockError),
+    /// A genuinely sharded session on a worker source that cannot
+    /// exchange owned slices (external-solver trace sources, custom
+    /// sources that keep the shard-unaware default) — rejected at build
+    /// time instead of panicking on dimension mismatches mid-run.
+    ShardingUnsupported { source: &'static str },
+}
+
+impl From<BlockError> for EngineError {
+    fn from(e: BlockError) -> Self {
+        EngineError::Block(e)
+    }
 }
 
 impl fmt::Display for EngineError {
@@ -136,6 +153,14 @@ impl fmt::Display for EngineError {
                 write!(f, "the {source:?} worker source does not support checkpointing")
             }
             EngineError::Checkpoint(msg) => write!(f, "checkpoint error: {msg}"),
+            EngineError::Block(e) => write!(f, "block pattern error: {e}"),
+            EngineError::ShardingUnsupported { source } => {
+                write!(
+                    f,
+                    "the {source:?} worker source cannot drive a block-sharded session \
+                     (owned-slice messages)"
+                )
+            }
         }
     }
 }
@@ -365,8 +390,14 @@ pub struct Checkpoint {
 impl Checkpoint {
     /// The `schema` marker every checkpoint document carries.
     pub const SCHEMA: &'static str = "ad-admm-checkpoint";
-    /// Current checkpoint format version.
-    pub const VERSION: usize = 1;
+    /// Current checkpoint format version: v2 adds the block-sharding
+    /// section (`blocks`: the [`BlockPattern`] plus per-block
+    /// arrival/staleness counters; `null` for dense runs).
+    pub const VERSION: usize = 2;
+    /// The pre-sharding format. Still readable: a v1 document is exactly
+    /// a v2 document with no `blocks` section, so v1 checkpoints resume
+    /// into dense sessions unchanged.
+    pub const V1: usize = 1;
 
     fn validate(doc: &JsonValue) -> Result<(), EngineError> {
         match doc.get("schema").and_then(JsonValue::as_str) {
@@ -378,9 +409,10 @@ impl Checkpoint {
             }
         }
         let version = get_usize(doc, "version")?;
-        if version != Self::VERSION {
+        if version != Self::VERSION && version != Self::V1 {
             return Err(EngineError::Checkpoint(format!(
-                "unsupported checkpoint version {version} (this build reads version {})",
+                "unsupported checkpoint version {version} (this build reads versions {} and {})",
+                Self::V1,
                 Self::VERSION
             )));
         }
@@ -510,6 +542,7 @@ pub struct SessionBuilder<'a> {
     observers: Vec<Box<dyn Observer + 'a>>,
     fault_plan: Option<FaultPlan>,
     residual_stopping: bool,
+    blocks: Option<BlockPattern>,
 }
 
 impl<'a> Default for SessionBuilder<'a> {
@@ -528,6 +561,7 @@ impl<'a> SessionBuilder<'a> {
             observers: Vec::new(),
             fault_plan: None,
             residual_stopping: true,
+            blocks: None,
         }
     }
 
@@ -587,6 +621,22 @@ impl<'a> SessionBuilder<'a> {
         self
     }
 
+    /// Run block-sharded general-form consensus under this
+    /// [`BlockPattern`]. Validated at `build()` (coverage, overlaps,
+    /// out-of-range ids, per-worker dimensions) into
+    /// [`EngineError::Block`].
+    ///
+    /// A problem built with [`ConsensusProblem::sharded`] carries its
+    /// pattern already and picks it up automatically — calling this too is
+    /// allowed but the patterns must agree. On a *dense* problem, only an
+    /// effectively-dense pattern (every worker owns the full dimension,
+    /// e.g. [`BlockPattern::dense`]) is accepted; the session then runs
+    /// the sharded code path, which is bit-identical to the dense engine.
+    pub fn blocks(mut self, pattern: BlockPattern) -> Self {
+        self.blocks = Some(pattern);
+        self
+    }
+
     fn take_source(&mut self) -> Result<Box<dyn WorkerSource + 'a>, EngineError> {
         let problem = self.problem.ok_or(EngineError::MissingProblem)?;
         Ok(match self.source.take() {
@@ -640,6 +690,47 @@ impl<'a> SessionBuilder<'a> {
         let n_workers = problem.num_workers();
         let dim = problem.dim();
 
+        // Resolve the block-sharding pattern: the builder's override or
+        // the problem's own ([`ConsensusProblem::sharded`]). A
+        // builder-supplied pattern is structurally valid by construction
+        // ([`BlockPattern::new`] rejects gaps/overlaps/out-of-range); what
+        // remains are the cross-checks against this problem.
+        let shard: Option<Arc<BlockPattern>> = match (self.blocks, problem.pattern()) {
+            (None, None) => None,
+            (None, Some(p)) => Some(Arc::clone(p)),
+            (Some(b), problem_pattern) => {
+                if b.num_workers() != n_workers {
+                    return Err(BlockError::WorkerCountMismatch {
+                        pattern: b.num_workers(),
+                        problem: n_workers,
+                    }
+                    .into());
+                }
+                if b.dim() != dim {
+                    return Err(
+                        BlockError::DimMismatch { pattern: b.dim(), problem: dim }.into()
+                    );
+                }
+                for i in 0..n_workers {
+                    let local_dim = problem.local(i).dim();
+                    if local_dim != b.owned_len(i) {
+                        return Err(BlockError::LocalDimMismatch {
+                            worker: i,
+                            local_dim,
+                            owned_len: b.owned_len(i),
+                        }
+                        .into());
+                    }
+                }
+                if let Some(p) = problem_pattern {
+                    if **p != b {
+                        return Err(BlockError::PatternMismatch.into());
+                    }
+                }
+                Some(Arc::new(b))
+            }
+        };
+
         if !(cfg.rho > 0.0 && cfg.rho.is_finite()) {
             return Err(EngineError::InvalidRho(cfg.rho));
         }
@@ -672,8 +763,30 @@ impl<'a> SessionBuilder<'a> {
         if policy.order() == StepOrder::MasterFirst && !source.supports_master_first() {
             return Err(EngineError::MasterFirstUnsupported { source: source.kind() });
         }
+        // A genuinely sharded session needs a source that gathers owned
+        // slices; effectively-dense patterns exchange full-length
+        // messages, so any source can drive them (that is the
+        // bit-identity acceptance case).
+        if let Some(p) = &shard {
+            if !p.is_effectively_dense() && !source.supports_sharding() {
+                return Err(EngineError::ShardingUnsupported { source: source.kind() });
+            }
+        }
 
-        let state = cfg.initial_state(n_workers, dim);
+        let state = match &shard {
+            // Sharded init: per-worker owned slices (ragged xs/lams). The
+            // InitDimMismatch check above already validated init_x0
+            // against the global dimension.
+            Some(p) => {
+                let x0 = match &cfg.init_x0 {
+                    Some(x0) => x0.clone(),
+                    None => vec![0.0; dim],
+                };
+                AdmmState::init_blocks(p, x0)
+            }
+            None => cfg.initial_state(n_workers, dim),
+        };
+        let num_blocks = shard.as_ref().map(|p| p.num_blocks()).unwrap_or(0);
         let mut scratch = MasterScratch::new();
         // f_i(x_i) cache: only arrived workers' x_i move, so only they are
         // re-evaluated (perf: N → |A_k| data passes per iteration). On
@@ -708,6 +821,10 @@ impl<'a> SessionBuilder<'a> {
             stop: None,
             source_started: false,
             observers_started: false,
+            shard,
+            block_updates: vec![0; num_blocks],
+            block_age: vec![0; num_blocks],
+            block_touched: vec![false; num_blocks],
         };
         if let Some(cp) = checkpoint {
             session.restore_from(cp)?;
@@ -758,6 +875,17 @@ pub struct Session<'a, S: WorkerSource + 'a = Box<dyn WorkerSource + 'a>> {
     stop: Option<StopReason>,
     source_started: bool,
     observers_started: bool,
+    /// Block-sharding pattern (None = the historical dense protocol).
+    shard: Option<Arc<BlockPattern>>,
+    /// Per-block arrival counters: total arrivals of owners of each block.
+    block_updates: Vec<u64>,
+    /// Per-block staleness: completed iterations since any owner of the
+    /// block last arrived. Bounded by τ − 1 whenever the realized trace
+    /// satisfies Assumption 1 — the per-block delay bound of the
+    /// block-wise analysis (arXiv:1802.08882).
+    block_age: Vec<usize>,
+    /// Reusable per-iteration scratch mask over blocks.
+    block_touched: Vec<bool>,
 }
 
 impl<'a> Session<'a> {
@@ -808,6 +936,24 @@ impl<'a, S: WorkerSource + 'a> Session<'a, S> {
         &self.source
     }
 
+    /// The block-sharding pattern this session runs under (None = dense).
+    pub fn shard(&self) -> Option<&BlockPattern> {
+        self.shard.as_deref()
+    }
+
+    /// Per-block arrival counters (empty when not sharded): how many
+    /// owner arrivals each coordinate block has absorbed so far.
+    pub fn block_updates(&self) -> &[u64] {
+        &self.block_updates
+    }
+
+    /// Per-block staleness (empty when not sharded): completed iterations
+    /// since each block last received an owner arrival. Under Assumption 1
+    /// every entry stays ≤ τ − 1 — the per-block delay bound.
+    pub fn block_ages(&self) -> &[usize] {
+        &self.block_age
+    }
+
     fn ensure_started(&mut self) {
         if !self.source_started {
             self.source.start(&self.state, self.policy.as_ref());
@@ -818,6 +964,30 @@ impl<'a, S: WorkerSource + 'a> Session<'a, S> {
                 obs.on_start(&self.state);
             }
             self.observers_started = true;
+        }
+    }
+
+    /// The master `x₀` update (12)/(25)/(45): record the previous `x₀`,
+    /// then dispatch to the dense or block-sharded (per-coordinate
+    /// owner-count) assembly. Shared by both step orders.
+    fn master_update(&mut self) {
+        self.prev_x0.copy_from_slice(&self.state.x0);
+        match self.shard.clone() {
+            None => master_x0_update(
+                self.problem,
+                &mut self.state,
+                self.cfg.rho,
+                self.cfg.gamma,
+                &mut self.scratch,
+            ),
+            Some(p) => master_x0_update_blocks(
+                self.problem,
+                &mut self.state,
+                self.cfg.rho,
+                self.cfg.gamma,
+                &mut self.scratch,
+                &p,
+            ),
         }
     }
 
@@ -871,28 +1041,41 @@ impl<'a, S: WorkerSource + 'a> Session<'a, S> {
                         f_cache: &mut self.f_cache,
                         scratch: &mut self.scratch,
                         rho: self.cfg.rho,
+                        shard: self.shard.as_deref(),
                     };
                     self.source.absorb(&set, &mut view, self.policy.as_ref());
                 }
                 super::engine::advance_delays(&set, &mut self.arrived, &mut self.d);
 
-                // (12)/(25)/(45): master x₀ update with the proximal γ.
-                self.prev_x0.copy_from_slice(&self.state.x0);
-                master_x0_update(
-                    self.problem,
-                    &mut self.state,
-                    self.cfg.rho,
-                    self.cfg.gamma,
-                    &mut self.scratch,
-                );
+                // (12)/(25)/(45): master x₀ update with the proximal γ
+                // (per-coordinate owner-count denominators when sharded).
+                self.master_update();
 
                 // Algorithm 4 (46): master refreshes ALL duals against the
-                // fresh x₀.
+                // fresh x₀ (each worker-block dual against its owned slice
+                // of x₀ when sharded).
                 if self.policy.master_updates_all_duals() {
-                    for i in 0..n_workers {
-                        for j in 0..n {
-                            self.state.lams[i][j] +=
-                                self.cfg.rho * (self.state.xs[i][j] - self.state.x0[j]);
+                    match self.shard.clone() {
+                        None => {
+                            for i in 0..n_workers {
+                                for j in 0..n {
+                                    self.state.lams[i][j] += self.cfg.rho
+                                        * (self.state.xs[i][j] - self.state.x0[j]);
+                                }
+                            }
+                        }
+                        Some(p) => {
+                            let rho = self.cfg.rho;
+                            let AdmmState { xs, x0, lams } = &mut self.state;
+                            for i in 0..n_workers {
+                                let xi = &xs[i];
+                                let li = &mut lams[i];
+                                p.for_each_range(i, |lo, g, len| {
+                                    for c in 0..len {
+                                        li[lo + c] += rho * (xi[lo + c] - x0[g + c]);
+                                    }
+                                });
+                            }
                         }
                     }
                 }
@@ -903,14 +1086,7 @@ impl<'a, S: WorkerSource + 'a> Session<'a, S> {
             }
             StepOrder::MasterFirst => {
                 // Algorithm 1: master x₀ update (6) from (xᵏ, λᵏ) first...
-                self.prev_x0.copy_from_slice(&self.state.x0);
-                master_x0_update(
-                    self.problem,
-                    &mut self.state,
-                    self.cfg.rho,
-                    self.cfg.gamma,
-                    &mut self.scratch,
-                );
+                self.master_update();
                 // ...broadcast to every LIVE worker. A down worker keeps
                 // its last pre-outage snapshot (and its frozen x_i/λ_i):
                 // under a full barrier "dropped" means its contribution to
@@ -936,6 +1112,7 @@ impl<'a, S: WorkerSource + 'a> Session<'a, S> {
                         f_cache: &mut self.f_cache,
                         scratch: &mut self.scratch,
                         rho: self.cfg.rho,
+                        shard: self.shard.as_deref(),
                     };
                     self.source.absorb(&set, &mut view, self.policy.as_ref());
                 }
@@ -944,6 +1121,29 @@ impl<'a, S: WorkerSource + 'a> Session<'a, S> {
             }
         };
 
+        // Per-block arrival bookkeeping: a block "updates" whenever any of
+        // its owners arrives; its age is the per-block staleness the
+        // block-wise Assumption 1 bounds by τ.
+        if let Some(p) = self.shard.clone() {
+            for t in self.block_touched.iter_mut() {
+                *t = false;
+            }
+            for &i in &set {
+                for &b in p.owned(i) {
+                    self.block_updates[b] += 1;
+                    self.block_touched[b] = true;
+                }
+            }
+            for b in 0..self.block_age.len() {
+                if self.block_touched[b] {
+                    self.block_age[b] = 0;
+                } else {
+                    self.block_age[b] += 1;
+                }
+            }
+        }
+
+        let shard = self.shard.clone();
         let rec = iter_record(
             self.problem,
             &self.state,
@@ -953,6 +1153,7 @@ impl<'a, S: WorkerSource + 'a> Session<'a, S> {
             &self.f_cache,
             &mut self.scratch,
             &self.prev_x0,
+            shard.as_deref(),
         );
         let early = divergence_or_tol_stop(&self.cfg, &self.state, &rec, k);
         self.trace.sets.push(set);
@@ -967,8 +1168,27 @@ impl<'a, S: WorkerSource + 'a> Session<'a, S> {
         }
         if self.residual_stopping {
             if let Some(rule) = &self.cfg.stopping {
-                let r = super::stopping::residuals(&self.state, &self.prev_x0, self.cfg.rho);
-                if k > 0 && rule.satisfied(&r, n, n_workers) {
+                // The absolute-tolerance floor scales with the stacked
+                // constraint dimension: N·n dense, Σ_i |S_i| sharded
+                // (identical for effectively-dense patterns, and the
+                // products below make the dense call bit-identical to the
+                // historical `satisfied(&r, n, n_workers)`).
+                let (r, stacked_rows) = match self.shard.as_deref() {
+                    None => (
+                        super::stopping::residuals(&self.state, &self.prev_x0, self.cfg.rho),
+                        n * n_workers,
+                    ),
+                    Some(p) => (
+                        super::stopping::residuals_blocks(
+                            &self.state,
+                            &self.prev_x0,
+                            self.cfg.rho,
+                            p,
+                        ),
+                        (0..n_workers).map(|i| p.owned_len(i)).sum(),
+                    ),
+                };
+                if k > 0 && rule.satisfied(&r, stacked_rows, 1) {
                     self.set_stop(StopReason::Residuals);
                     return Ok(StepStatus::Iterated(rec));
                 }
@@ -1007,9 +1227,31 @@ impl<'a, S: WorkerSource + 'a> Session<'a, S> {
         self.ensure_started();
         let source_doc = self.source.save_checkpoint()?;
         let n_workers = self.state.xs.len();
+        // v2: the block-sharding section (null for dense sessions — such
+        // documents differ from v1 only by the version number and the
+        // explicit null).
+        let blocks_doc = match &self.shard {
+            None => JsonValue::Null,
+            Some(p) => JsonValue::Obj(vec![
+                ("pattern".to_string(), p.to_json()),
+                (
+                    "updates".to_string(),
+                    JsonValue::Arr(
+                        self.block_updates.iter().map(|&u| JsonValue::Num(u as f64)).collect(),
+                    ),
+                ),
+                (
+                    "age".to_string(),
+                    JsonValue::Arr(
+                        self.block_age.iter().map(|&a| JsonValue::Num(a as f64)).collect(),
+                    ),
+                ),
+            ]),
+        };
         let doc = JsonValue::Obj(vec![
             ("schema".to_string(), Checkpoint::SCHEMA.into()),
             ("version".to_string(), JsonValue::Num(Checkpoint::VERSION as f64)),
+            ("blocks".to_string(), blocks_doc),
             ("k".to_string(), JsonValue::Num(self.k as f64)),
             ("n_workers".to_string(), JsonValue::Num(n_workers as f64)),
             ("dim".to_string(), JsonValue::Num(self.state.x0.len() as f64)),
@@ -1074,6 +1316,54 @@ impl<'a, S: WorkerSource + 'a> Session<'a, S> {
             )));
         }
 
+        // Block-sharding compatibility: a v2 checkpoint records the
+        // pattern it was taken under (null = dense); a v1 checkpoint
+        // predates sharding and is dense by definition. Either way the
+        // session being resumed into must match.
+        let version = get_usize(doc, "version")?;
+        let blocks_doc = if version >= Checkpoint::VERSION {
+            Some(jget(doc, "blocks")?)
+        } else {
+            None // v1: no section, dense
+        };
+        match (blocks_doc, &self.shard) {
+            (None | Some(JsonValue::Null), None) => {}
+            (None | Some(JsonValue::Null), Some(_)) => {
+                return Err(EngineError::Checkpoint(
+                    "checkpoint was taken from a dense run, resuming into a block-sharded \
+                     session"
+                        .to_string(),
+                ));
+            }
+            (Some(bd), shard) => {
+                let pattern = BlockPattern::from_json(jget(bd, "pattern")?)
+                    .map_err(EngineError::Checkpoint)?;
+                match shard {
+                    Some(p) if **p == pattern => {}
+                    _ => {
+                        return Err(EngineError::Checkpoint(
+                            "checkpoint block pattern does not match the session's".to_string(),
+                        ));
+                    }
+                }
+                let mut updates = Vec::new();
+                for v in jget(bd, "updates")?.items() {
+                    updates.push(json_usize(v).map_err(EngineError::Checkpoint)? as u64);
+                }
+                let mut age = Vec::new();
+                for v in jget(bd, "age")?.items() {
+                    age.push(json_usize(v).map_err(EngineError::Checkpoint)?);
+                }
+                if updates.len() != pattern.num_blocks() || age.len() != pattern.num_blocks() {
+                    return Err(EngineError::Checkpoint(
+                        "per-block counter length does not match the pattern".to_string(),
+                    ));
+                }
+                self.block_updates = updates;
+                self.block_age = age;
+            }
+        }
+
         self.k = get_usize(doc, "k")?;
         self.stop = stop_from_json(jget(doc, "stop")?)?;
 
@@ -1081,11 +1371,17 @@ impl<'a, S: WorkerSource + 'a> Session<'a, S> {
         let x0 = vec_from_hex(jget(st, "x0")?).map_err(EngineError::Checkpoint)?;
         let xs = mat_from_hex(jget(st, "xs")?).map_err(EngineError::Checkpoint)?;
         let lams = mat_from_hex(jget(st, "lams")?).map_err(EngineError::Checkpoint)?;
+        // Per-worker expected lengths: owned-slice lengths when sharded,
+        // the global dimension otherwise.
+        let expect = |i: usize| match &self.shard {
+            Some(p) => p.owned_len(i),
+            None => dim,
+        };
         if x0.len() != dim
             || xs.len() != n_workers
             || lams.len() != n_workers
-            || xs.iter().any(|x| x.len() != dim)
-            || lams.iter().any(|l| l.len() != dim)
+            || xs.iter().enumerate().any(|(i, x)| x.len() != expect(i))
+            || lams.iter().enumerate().any(|(i, l)| l.len() != expect(i))
         {
             return Err(EngineError::Checkpoint(
                 "state dimensions do not match the problem".to_string(),
@@ -1297,6 +1593,8 @@ mod tests {
             EngineError::MasterFirstUnsupported { source: "virtual" },
             EngineError::CheckpointUnsupported { source: "threaded" },
             EngineError::Checkpoint("bad".to_string()),
+            EngineError::Block(BlockError::Gap { at: 3 }),
+            EngineError::ShardingUnsupported { source: "custom" },
         ];
         for e in errs {
             let text = e.to_string();

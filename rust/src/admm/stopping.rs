@@ -8,6 +8,7 @@
 //! absolute + relative tolerances.
 
 use crate::linalg::vecops;
+use crate::problems::BlockPattern;
 
 use super::AdmmState;
 
@@ -57,6 +58,56 @@ pub fn residuals(state: &AdmmState, prev_x0: &[f64], rho: f64) -> Residuals {
     }
 }
 
+/// [`residuals`] under a block pattern — the general-form consensus
+/// residuals. The primal residual stacks each worker's `x_i − (x₀)_{S_i}`
+/// over its owned slice; the dual residual and the `x₀` scale weight each
+/// coordinate by its owner count `N_j` (the stacked constraint carries
+/// `N_j` copies of coordinate `j`):
+/// `‖sᵏ‖ = ρ·√(Σ_j N_j Δ_j²)` and `√(Σ_j N_j x₀ⱼ²)` — which reduce to the
+/// dense `ρ·√N·‖Δ‖` / `√N·‖x₀‖` when every `N_j = N`. Effectively-dense
+/// patterns delegate to [`residuals`] outright, so the dense arithmetic
+/// (and its bit pattern) is preserved exactly.
+pub fn residuals_blocks(
+    state: &AdmmState,
+    prev_x0: &[f64],
+    rho: f64,
+    pattern: &BlockPattern,
+) -> Residuals {
+    if pattern.is_effectively_dense() {
+        return residuals(state, prev_x0, rho);
+    }
+    let mut primal_sq = 0.0;
+    let mut xs_sq = 0.0;
+    let mut lam_sq = 0.0;
+    for i in 0..state.xs.len() {
+        let xi = &state.xs[i];
+        let mut s = 0.0;
+        pattern.for_each_range(i, |lo, g, len| {
+            for k in 0..len {
+                let d = xi[lo + k] - state.x0[g + k];
+                s += d * d;
+            }
+        });
+        primal_sq += s;
+        xs_sq += vecops::nrm2_sq(xi);
+        lam_sq += vecops::nrm2_sq(&state.lams[i]);
+    }
+    let mut dual_sq = 0.0;
+    let mut x0_w_sq = 0.0;
+    for j in 0..state.x0.len() {
+        let w = pattern.count(j) as f64;
+        let d = state.x0[j] - prev_x0[j];
+        dual_sq += w * d * d;
+        x0_w_sq += w * state.x0[j] * state.x0[j];
+    }
+    Residuals {
+        primal: primal_sq.sqrt(),
+        dual: rho * dual_sq.sqrt(),
+        primal_scale: xs_sq.sqrt().max(x0_w_sq.sqrt()),
+        dual_scale: lam_sq.sqrt(),
+    }
+}
+
 impl StoppingRule {
     /// True when both residuals satisfy `‖·‖ ≤ abs·√dim + rel·scale`.
     pub fn satisfied(&self, r: &Residuals, dim: usize, n_workers: usize) -> bool {
@@ -68,7 +119,6 @@ impl StoppingRule {
 }
 
 #[cfg(test)]
-#[allow(deprecated)] // exercises the legacy free-function drivers
 mod tests {
     use super::*;
 
@@ -88,6 +138,37 @@ mod tests {
         let r = residuals(&state, &[0.0, 0.0], 1.0);
         assert!((r.primal - 5.0).abs() < 1e-12);
         assert!(!StoppingRule::default().satisfied(&r, 2, 2));
+    }
+
+    #[test]
+    fn sharded_residuals_weight_by_owner_count() {
+        use crate::problems::BlockPattern;
+        // n = 2 as two singleton blocks; worker 0 owns both, worker 1 owns
+        // block 0 → owner counts N_0 = 2, N_1 = 1.
+        let pattern =
+            BlockPattern::new(2, &[(0, 1), (1, 1)], vec![vec![0, 1], vec![0]]).unwrap();
+        let mut state = AdmmState::init_blocks(&pattern, vec![1.0, 2.0]);
+        state.xs[1] = vec![4.0]; // primal violation of 3 on coordinate 0
+        let prev = vec![0.0, 0.0]; // Δ = (1, 2)
+        let r = residuals_blocks(&state, &prev, 2.0, &pattern);
+        assert!((r.primal - 3.0).abs() < 1e-12);
+        // ‖s‖ = ρ·√(N_0·1² + N_1·2²) = 2·√6
+        assert!((r.dual - 2.0 * 6.0f64.sqrt()).abs() < 1e-12);
+        // x₀ scale: √(N_0·1² + N_1·2²) = √6; stacked xs: (1,2) and (4)
+        let xs_norm = (1.0f64 + 4.0 + 16.0).sqrt();
+        assert!((r.primal_scale - xs_norm.max(6.0f64.sqrt())).abs() < 1e-12);
+
+        // Effectively-dense patterns delegate to the dense formulas
+        // verbatim (bit-identical).
+        let dense_pattern = BlockPattern::dense(2, 2);
+        let mut s2 = AdmmState::init(2, vec![0.5, -1.0]);
+        s2.xs[0] = vec![0.7, -0.2];
+        let a = residuals(&s2, &[0.0, 0.1], 3.0);
+        let b = residuals_blocks(&s2, &[0.0, 0.1], 3.0, &dense_pattern);
+        assert_eq!(a.primal.to_bits(), b.primal.to_bits());
+        assert_eq!(a.dual.to_bits(), b.dual.to_bits());
+        assert_eq!(a.primal_scale.to_bits(), b.primal_scale.to_bits());
+        assert_eq!(a.dual_scale.to_bits(), b.dual_scale.to_bits());
     }
 
     #[test]
@@ -127,7 +208,7 @@ mod tests {
 
     #[test]
     fn x0_tol_exactly_met_on_iter_zero_does_not_stop() {
-        use crate::admm::sync::run_sync_admm;
+        use crate::testkit::drivers::run_full_barrier;
         use crate::admm::AdmmConfig;
         use crate::data::LassoInstance;
         use crate::rng::Pcg64;
@@ -138,18 +219,18 @@ mod tests {
         // condition `x0_change <= x0_tol` holds with equality on iteration
         // 0, but the rule only arms from k ≥ 1.
         let probe_cfg = AdmmConfig { rho: 40.0, max_iters: 1, ..Default::default() };
-        let probe = run_sync_admm(&p, &probe_cfg);
+        let probe = run_full_barrier(&p, &probe_cfg);
         let c0 = probe.history[0].x0_change;
         assert!(c0 > 0.0);
         let cfg = AdmmConfig { rho: 40.0, max_iters: 50, x0_tol: c0, ..Default::default() };
-        let out = run_sync_admm(&p, &cfg);
+        let out = run_full_barrier(&p, &cfg);
         assert!(out.history.len() > 1, "stopped on iteration 0");
         assert_eq!(out.history[0].x0_change.to_bits(), c0.to_bits());
     }
 
     #[test]
     fn tolerance_on_final_iteration_wins_over_max_iters() {
-        use crate::admm::sync::run_sync_admm;
+        use crate::testkit::drivers::run_full_barrier;
         use crate::admm::{AdmmConfig, StopReason};
 
         // x₀ never moves; with max_iters = 2 the tolerance fires exactly
@@ -157,14 +238,14 @@ mod tests {
         // check precedes the loop bound) with a full-length history.
         let p = fixed_point_problem();
         let cfg = AdmmConfig { rho: 1.0, max_iters: 2, x0_tol: 1e-12, ..Default::default() };
-        let out = run_sync_admm(&p, &cfg);
+        let out = run_full_barrier(&p, &cfg);
         assert_eq!(out.stop, StopReason::X0Tolerance);
         assert_eq!(out.history.len(), 2);
     }
 
     #[test]
     fn residual_rule_never_fires_on_iteration_zero() {
-        use crate::admm::sync::run_sync_admm;
+        use crate::testkit::drivers::run_full_barrier;
         use crate::admm::{AdmmConfig, StopReason};
 
         // At the fixed point both residuals are exactly zero from k = 0 —
@@ -176,19 +257,19 @@ mod tests {
             stopping: Some(StoppingRule::default()),
             ..Default::default()
         };
-        let out = run_sync_admm(&p, &cfg);
+        let out = run_full_barrier(&p, &cfg);
         assert_eq!(out.stop, StopReason::MaxIters);
         assert_eq!(out.history.len(), 1);
         // ...so the earliest it can fire is k = 1.
         let cfg2 = AdmmConfig { max_iters: 10, ..cfg };
-        let out2 = run_sync_admm(&p, &cfg2);
+        let out2 = run_full_barrier(&p, &cfg2);
         assert_eq!(out2.stop, StopReason::Residuals);
         assert_eq!(out2.history.len(), 2);
     }
 
     #[test]
     fn stopping_rule_triggers_on_converged_run() {
-        use crate::admm::sync::run_sync_admm;
+        use crate::testkit::drivers::run_full_barrier;
         use crate::admm::AdmmConfig;
         use crate::data::LassoInstance;
         use crate::rng::Pcg64;
@@ -197,7 +278,7 @@ mod tests {
         let inst = LassoInstance::synthetic(&mut rng, 3, 20, 8, 0.2, 0.1);
         let p = inst.problem();
         let cfg = AdmmConfig { rho: 40.0, max_iters: 2000, ..Default::default() };
-        let out = run_sync_admm(&p, &cfg);
+        let out = run_full_barrier(&p, &cfg);
         // Reconstruct residuals at the limit: x0 changed ~0 on the last step.
         let last = out.history.last().unwrap();
         let mut prev = out.state.x0.clone();

@@ -373,7 +373,12 @@ impl StarCluster {
         &self,
         cfg: &ClusterConfig,
     ) -> Result<Session<'_, VirtualSource>, EngineError> {
-        let source = VirtualSource::new(self.problem.num_workers(), cfg, None);
+        let source = VirtualSource::new(
+            self.problem.num_workers(),
+            cfg,
+            None,
+            self.problem.pattern().cloned(),
+        );
         self.session_builder(cfg).build_typed(source)
     }
 
@@ -387,7 +392,12 @@ impl StarCluster {
         cfg: &ClusterConfig,
         checkpoint: &Checkpoint,
     ) -> Result<Session<'_, VirtualSource>, EngineError> {
-        let source = VirtualSource::new(self.problem.num_workers(), cfg, None);
+        let source = VirtualSource::new(
+            self.problem.num_workers(),
+            cfg,
+            None,
+            self.problem.pattern().cloned(),
+        );
         self.session_builder(cfg).resume_typed(source, checkpoint)
     }
 }

@@ -32,13 +32,15 @@
 //! against its pre-outage snapshot); delay spikes stretch this source's
 //! compute/transit legs on the virtual clock.
 
+use std::sync::Arc;
+
 use crate::admm::engine::{Gate, MasterView, UpdatePolicy, WorkerSource};
 use crate::admm::session::{jget, EngineError};
 use crate::admm::AdmmState;
 use crate::bench::json::{
     f64_from_hex, hex_f64, hex_mat, hex_u128, json_usize, mat_from_hex, u128_from_hex, JsonValue,
 };
-use crate::problems::{ConsensusProblem, WorkerScratch};
+use crate::problems::{BlockPattern, ConsensusProblem, WorkerScratch};
 use crate::rng::Pcg64;
 use crate::util::timer::Clock;
 
@@ -102,6 +104,14 @@ pub struct VirtualSource {
     /// One outstanding message per worker, *held* here until the master
     /// absorbs it (possibly several iterations later, under outages).
     pending: Vec<bool>,
+    /// Block-sharding pattern (None = dense). Snapshots are owned slices
+    /// under a pattern, and message transit times scale with the
+    /// owned-slice length (`comm_scale`).
+    shard: Option<Arc<BlockPattern>>,
+    /// Per-worker transit-time factor `|S_i| / n` — messages carry only
+    /// the owned slice, so link time shrinks proportionally. Empty (no
+    /// scaling) for dense runs, leaving their event timings untouched.
+    comm_scale: Vec<f64>,
     /// `x₀^{k̄_i+1}` as worker i last received it.
     x0_snap: Vec<Vec<f64>>,
     /// `λ̂_i` as worker i last received it (Algorithm 4 only).
@@ -116,6 +126,7 @@ impl VirtualSource {
         n_workers: usize,
         cfg: &ClusterConfig,
         solvers: Option<Vec<WorkerSolveFn>>,
+        shard: Option<Arc<BlockPattern>>,
     ) -> Self {
         let mut solver_list: Vec<Option<WorkerSolveFn>> = match solvers {
             Some(v) => {
@@ -138,6 +149,13 @@ impl VirtualSource {
                 inflight_transit_s: 0.0,
             })
             .collect();
+        let comm_scale = match &shard {
+            None => Vec::new(),
+            Some(p) => {
+                let n = p.dim() as f64;
+                (0..n_workers).map(|i| p.owned_len(i) as f64 / n).collect()
+            }
+        };
         VirtualSource {
             workers,
             stats: (0..n_workers).map(WorkerStats::new).collect(),
@@ -145,6 +163,8 @@ impl VirtualSource {
             vclock: VirtualClock::new(),
             queue: EventQueue::new(),
             pending: vec![false; n_workers],
+            shard,
+            comm_scale,
             x0_snap: Vec::new(),
             lam_snap: Vec::new(),
             faults: cfg.faults.clone(),
@@ -197,6 +217,11 @@ impl VirtualSource {
                 if let Some(plan) = &self.fault_plan {
                     transit_s *= plan.delay_factor(ev.worker, ev.time_s);
                 }
+                // Sharded messages carry only the owned slice: link time
+                // scales with |S_i| / n (empty = dense, no scaling).
+                if let Some(&scale) = self.comm_scale.get(ev.worker) {
+                    transit_s *= scale;
+                }
                 w.inflight_transit_s = transit_s;
                 self.queue.push(ev.time_s + transit_s, ev.worker, EventKind::Arrive);
             }
@@ -237,6 +262,10 @@ impl WorkerSource for VirtualSource {
 
     fn kind(&self) -> &'static str {
         "virtual"
+    }
+
+    fn supports_sharding(&self) -> bool {
+        self.shard.is_some()
     }
 
     fn save_checkpoint(&self) -> Result<JsonValue, EngineError> {
@@ -405,8 +434,11 @@ impl WorkerSource for VirtualSource {
         let n_workers = self.pending.len();
         // x₀^{k̄_i+1} as each worker last received it — same bookkeeping
         // as the serial simulator; Algorithm 4 additionally broadcasts the
-        // master-updated duals.
-        self.x0_snap = vec![state.x0.clone(); n_workers];
+        // master-updated duals. Sharded workers receive owned slices.
+        self.x0_snap = match &self.shard {
+            None => vec![state.x0.clone(); n_workers],
+            Some(p) => (0..n_workers).map(|i| p.gather_vec(i, &state.x0)).collect(),
+        };
         self.lam_snap = state.lams.clone();
         // Initial broadcast at t = 0: every worker starts computing
         // against x⁰.
@@ -453,7 +485,6 @@ impl WorkerSource for VirtualSource {
     }
 
     fn absorb(&mut self, set: &[usize], m: &mut MasterView<'_>, policy: &dyn UpdatePolicy) {
-        let n = m.state.x0.len();
         let rho = m.rho;
         let problem = m.problem;
         let worker_dual = policy.worker_updates_dual();
@@ -487,6 +518,8 @@ impl WorkerSource for VirtualSource {
         let lam_snaps = &self.lam_snap;
         self.pool.run(&mut tasks, |t| {
             let i = t.worker;
+            // Worker i's slice length (owned-slice length when sharded).
+            let ni = t.x.len();
             if worker_dual {
                 // (19)/(23): solve against the worker's own dual and its
                 // x₀ snapshot, then (20)/(24): the dual update.
@@ -495,7 +528,7 @@ impl WorkerSource for VirtualSource {
                     Some(f) => (**f)(t.lam, snap, rho, t.x),
                     None => problem.local(i).solve_subproblem(t.lam, snap, rho, t.x, t.scratch),
                 }
-                for j in 0..n {
+                for j in 0..ni {
                     t.lam[j] += rho * (t.x[j] - snap[j]);
                 }
             } else {
@@ -512,11 +545,15 @@ impl WorkerSource for VirtualSource {
 
     fn broadcast(&mut self, set: &[usize], state: &AdmmState, policy: &dyn UpdatePolicy) {
         // Step 6: broadcast to the arrived workers only and start their
-        // next round at the current virtual instant.
+        // next round at the current virtual instant (owned slices when
+        // sharded).
         let with_dual = policy.broadcasts_dual();
         for &i in set {
             self.pending[i] = false;
-            self.x0_snap[i].copy_from_slice(&state.x0);
+            match self.shard.clone() {
+                None => self.x0_snap[i].copy_from_slice(&state.x0),
+                Some(p) => p.gather_into(i, &state.x0, &mut self.x0_snap[i]),
+            }
             if with_dual {
                 self.lam_snap[i].copy_from_slice(&state.lams[i]);
             }
@@ -534,7 +571,8 @@ pub(crate) fn run_virtual(
     cfg: &ClusterConfig,
     solvers: Option<Vec<WorkerSolveFn>>,
 ) -> ClusterReport {
-    let mut source = VirtualSource::new(problem.num_workers(), cfg, solvers);
+    let mut source =
+        VirtualSource::new(problem.num_workers(), cfg, solvers, problem.pattern().cloned());
     let run = super::run_cluster_engine(problem, cfg, &mut source);
     let (workers, wall_clock_s, master_wait_s) = source.finish();
     ClusterReport {

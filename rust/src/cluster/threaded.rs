@@ -26,7 +26,7 @@ use std::thread::JoinHandle;
 
 use crate::admm::engine::{Gate, MasterView, UpdatePolicy, WorkerSource};
 use crate::admm::AdmmState;
-use crate::problems::ConsensusProblem;
+use crate::problems::{BlockPattern, ConsensusProblem};
 use crate::util::timer::{Clock, Stopwatch};
 
 use super::messages::{MasterMsg, WorkerMsg};
@@ -43,6 +43,11 @@ pub(crate) struct ThreadedSource {
     pending: Vec<Option<WorkerMsg>>,
     /// Prescribed arrival sets (lockstep replay) and the replay cursor.
     lockstep: Option<(Vec<Vec<usize>>, usize)>,
+    /// Block-sharding pattern (None = dense): broadcasts carry each
+    /// worker's owned slice of x₀ and workers reply with owned-slice
+    /// messages — the real-message counterpart of the virtual-time
+    /// source's comm-volume scaling.
+    shard: Option<Arc<BlockPattern>>,
     wall: Stopwatch,
     master_wait_s: f64,
 }
@@ -100,6 +105,7 @@ impl ThreadedSource {
             handles,
             pending: (0..n_workers).map(|_| None).collect(),
             lockstep: cfg.lockstep_trace.as_ref().map(|t| (t.sets.clone(), 0)),
+            shard: problem.pattern().cloned(),
             wall: Stopwatch::start(),
             master_wait_s: 0.0,
         }
@@ -143,13 +149,22 @@ impl WorkerSource for ThreadedSource {
         "threaded"
     }
 
+    fn supports_sharding(&self) -> bool {
+        self.shard.is_some()
+    }
+
     fn start(&mut self, state: &AdmmState, policy: &dyn UpdatePolicy) {
         // Initial broadcast: everyone starts computing against x⁰ (and λ⁰
-        // for Algorithm 4).
+        // for Algorithm 4). Sharded workers receive only their owned
+        // slice of x⁰.
         let with_dual = policy.broadcasts_dual();
         for (i, tx) in self.to_workers.iter().enumerate() {
             let lam = with_dual.then(|| state.lams[i].clone());
-            tx.send(MasterMsg::Go { x0: state.x0.clone(), lam }).expect("worker alive");
+            let x0 = match &self.shard {
+                None => state.x0.clone(),
+                Some(p) => p.gather_vec(i, &state.x0),
+            };
+            tx.send(MasterMsg::Go { x0, lam }).expect("worker alive");
         }
     }
 
@@ -232,15 +247,18 @@ impl WorkerSource for ThreadedSource {
     }
 
     fn broadcast(&mut self, set: &[usize], state: &AdmmState, policy: &dyn UpdatePolicy) {
-        // Step 6: broadcast to arrived workers only.
+        // Step 6: broadcast to arrived workers only (owned slices when
+        // sharded).
         let with_dual = policy.broadcasts_dual();
         for &i in set {
             let lam = with_dual.then(|| state.lams[i].clone());
+            let x0 = match &self.shard {
+                None => state.x0.clone(),
+                Some(p) => p.gather_vec(i, &state.x0),
+            };
             // A worker may have exited only after shutdown; sends cannot
             // fail before that.
-            self.to_workers[i]
-                .send(MasterMsg::Go { x0: state.x0.clone(), lam })
-                .expect("worker alive");
+            self.to_workers[i].send(MasterMsg::Go { x0, lam }).expect("worker alive");
         }
     }
 }

@@ -123,7 +123,6 @@ impl LibsvmDataset {
 }
 
 #[cfg(test)]
-#[allow(deprecated)] // exercises the legacy run_sync_admm wrapper
 mod tests {
     use super::*;
 
@@ -191,7 +190,7 @@ mod tests {
             .collect();
         let p = ConsensusProblem::new(locals, Regularizer::L1 { theta: 0.01 });
         let cfg = crate::admm::AdmmConfig { rho: 5.0, max_iters: 200, ..Default::default() };
-        let out = crate::admm::sync::run_sync_admm(&p, &cfg);
+        let out = crate::testkit::drivers::run_full_barrier(&p, &cfg);
         let r = crate::admm::kkt::kkt_residual(&p, &out.state);
         assert!(r.max() < 1e-5, "{r:?}");
     }

@@ -71,6 +71,10 @@ pub mod util;
 
 /// One-stop import for examples and downstream users.
 pub mod prelude {
+    // The deprecated free-function drivers stay publicly re-exported for
+    // downstream compatibility (re-exporting a deprecated item needs the
+    // allow); in-tree callers use `Session::builder()` or
+    // `testkit::drivers` instead.
     #[allow(deprecated)]
     pub use crate::admm::alt_scheme::run_alt_scheme;
     pub use crate::admm::alt_scheme::AltSchemeOutput;
@@ -102,7 +106,7 @@ pub mod prelude {
     pub use crate::linalg::dense::DenseMatrix;
     pub use crate::linalg::sparse::CsrMatrix;
     pub use crate::metrics::RunLog;
-    pub use crate::problems::{ConsensusProblem, LocalCost};
+    pub use crate::problems::{BlockError, BlockPattern, ConsensusProblem, LocalCost};
     pub use crate::prox::Regularizer;
     pub use crate::rng::Pcg64;
     pub use crate::runtime::{ArtifactRegistry, PjrtEngine};

@@ -31,6 +31,7 @@ use ad_admm::cluster::{
 };
 use ad_admm::data::{LassoInstance, LogisticInstance, SparsePcaInstance};
 use ad_admm::prelude::{AltScheme, FullBarrier, PartialBarrier};
+use ad_admm::problems::BlockPattern;
 use ad_admm::rng::Pcg64;
 use ad_admm::util::cli::ArgParser;
 
@@ -53,6 +54,9 @@ fn print_help() {
          USAGE: ad-admm <solve|cluster|resume|params|artifacts> [--flags]\n\n\
          solve   --problem lasso|spca|logistic --workers N --m M --n N --rho R --tau T\n\
                  --gamma G --min-arrivals A --iters K --theta TH --seed S [--sync] [--alt]\n\
+                 [--shard-blocks B --shard-owners C]  (lasso only: block-sharded general-form\n\
+                 consensus — split the N features into B blocks, each owned by C workers\n\
+                 round-robin; workers solve and ship only their owned slices)\n\
          cluster --workers N --m M --n N --rho R --tau T --iters K --fast-ms F --slow-ms S\n\
                  [--virtual]  (deterministic virtual-time simulation, scales to 1000s of workers)\n\
                  [--fault-worker W --fault-from K --fault-until K]  (one dropout/rejoin outage)\n\
@@ -92,8 +96,38 @@ fn cmd_solve(args: &ArgParser) {
     let cfg = admm_config(args);
     let mut rng = Pcg64::seed_from_u64(seed);
 
+    let shard_blocks: usize = args.get_parse_or("shard-blocks", 0);
+    let shard_owners: usize = args.get_parse_or("shard-owners", 2);
+    if shard_blocks > 0 && problem_kind != "lasso" {
+        eprintln!("--shard-blocks is only supported for --problem lasso");
+        std::process::exit(2);
+    }
+
     let problem = match problem_kind.as_str() {
-        "lasso" => LassoInstance::synthetic(&mut rng, n_workers, m, n, 0.05, theta).problem(),
+        "lasso" => {
+            let inst = LassoInstance::synthetic(&mut rng, n_workers, m, n, 0.05, theta);
+            if shard_blocks > 0 {
+                // No clamping: a misconfigured block count or owner count
+                // surfaces as the typed BlockError, like every other
+                // sharding misconfiguration.
+                let pattern =
+                    match BlockPattern::round_robin(n, shard_blocks, n_workers, shard_owners) {
+                        Ok(p) => p,
+                        Err(e) => exit_config_error(&EngineError::Block(e)),
+                    };
+                println!(
+                    "sharded consensus: {shard_blocks} blocks, {shard_owners} owner(s)/block, \
+                     comm volume ratio {:.3}",
+                    pattern.comm_volume_ratio()
+                );
+                match inst.sharded_problem(&pattern) {
+                    Ok(p) => p,
+                    Err(e) => exit_config_error(&EngineError::Block(e)),
+                }
+            } else {
+                inst.problem()
+            }
+        }
         "spca" => {
             let nnz = (m * n / 100).max(1);
             let inst = SparsePcaInstance::synthetic(&mut rng, n_workers, m, n, nnz, theta);

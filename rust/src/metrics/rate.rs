@@ -78,7 +78,6 @@ pub fn fit_linear_rate(acc: &[f64], tail_frac: f64) -> Option<RateFit> {
 }
 
 #[cfg(test)]
-#[allow(deprecated)] // exercises the legacy run_sync_admm wrapper
 mod tests {
     use super::*;
 
@@ -120,7 +119,7 @@ mod tests {
     fn admm_on_lasso_shows_linear_rate() {
         // End-to-end: the paper's observation that AD-ADMM "may exhibit
         // linear convergence for some structured instances".
-        use crate::admm::sync::run_sync_admm;
+        use crate::testkit::drivers::run_full_barrier;
         use crate::admm::AdmmConfig;
         use crate::data::LassoInstance;
         use crate::metrics::accuracy_series;
@@ -132,7 +131,7 @@ mod tests {
         let (_, f_star) = fista_lasso(&inst, 40_000);
         let p = inst.problem();
         let cfg = AdmmConfig { rho: 50.0, max_iters: 80, ..Default::default() };
-        let out = run_sync_admm(&p, &cfg);
+        let out = run_full_barrier(&p, &cfg);
         let acc = accuracy_series(&out.history, f_star);
         // fit the whole run; the floor filter drops machine-precision tail
         let fit = fit_linear_rate(&acc, 1.0).expect("fit");

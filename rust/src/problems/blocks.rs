@@ -1,0 +1,540 @@
+//! Block-sharded general-form consensus: coordinate-block ownership.
+//!
+//! The paper's star protocol makes every worker ship the *entire* global
+//! variable `x ∈ ℝⁿ` to the master each arrival, so master bandwidth and
+//! the `O(N·n)` reduction are the scale ceiling. Block-wise asynchronous
+//! ADMM (Zhu et al., arXiv:1802.08882; Hong, arXiv:1412.6058) removes it
+//! with the general-form consensus fix: the global dimension is split into
+//! contiguous coordinate **blocks**, each worker *owns* only the blocks its
+//! local cost actually touches, and the consensus constraint becomes
+//! `x_i = (x₀)_{S_i}` over the owned slice `S_i`. Workers then solve and
+//! communicate `|S_i|`-length vectors, the master's per-coordinate
+//! reduction shrinks from `N` terms to the owner count `N_j`, and the
+//! τ-bounded-delay analysis (Assumption 1) applies per worker-block.
+//!
+//! A [`BlockPattern`] is the static ownership map: a partition of `[0, n)`
+//! into blocks plus a sorted per-worker list of owned block ids. The
+//! [`BlockPattern::dense`] pattern (one block, everyone owns it)
+//! reproduces the historical behaviour exactly — the engine run with a
+//! dense pattern is **bit-identical** to the unsharded engine (pinned by
+//! the `sharded_consensus` integration suite).
+
+use crate::bench::json::{json_usize, JsonValue};
+use std::fmt;
+
+/// Everything [`BlockPattern::new`] (and the session builder) can reject.
+/// Wrapped into [`crate::admm::session::EngineError::Block`] so sharding
+/// misconfigurations surface as typed build-time errors, never panics.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum BlockError {
+    /// The global dimension must be ≥ 1.
+    EmptyDimension,
+    /// A pattern needs at least one block and one worker.
+    EmptyPattern,
+    /// Block `block` has zero length.
+    EmptyBlock { block: usize },
+    /// Block `block` ends at `end`, beyond the global dimension `n`.
+    OutOfRange { block: usize, end: usize, n: usize },
+    /// Block `block` starts before the previous block ended (blocks must
+    /// be disjoint and listed in ascending order).
+    Overlap { block: usize },
+    /// The partition leaves coordinate `at` uncovered.
+    Gap { at: usize },
+    /// Worker `worker` owns no blocks (its local variable would be empty).
+    WorkerOwnsNothing { worker: usize },
+    /// Worker `worker` lists block id `block`, but the pattern only has
+    /// `num_blocks` blocks.
+    OwnedOutOfRange { worker: usize, block: usize, num_blocks: usize },
+    /// Worker `worker`'s owned list is not strictly ascending at `block`
+    /// (duplicates and out-of-order ids are both rejected).
+    OwnedNotSorted { worker: usize, block: usize },
+    /// Block `block` is owned by no worker, so its coordinates of `x₀`
+    /// would never receive a contribution.
+    NoOwner { block: usize },
+    /// Worker `worker`'s local cost has dimension `local_dim`, but the
+    /// pattern assigns it an owned slice of length `owned_len`.
+    LocalDimMismatch { worker: usize, local_dim: usize, owned_len: usize },
+    /// The pattern drives a different worker count than the problem.
+    WorkerCountMismatch { pattern: usize, problem: usize },
+    /// The pattern's global dimension differs from the problem's.
+    DimMismatch { pattern: usize, problem: usize },
+    /// A pattern supplied to the builder disagrees with the one the
+    /// problem was constructed with.
+    PatternMismatch,
+}
+
+impl fmt::Display for BlockError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            BlockError::EmptyDimension => write!(f, "global dimension must be >= 1"),
+            BlockError::EmptyPattern => write!(f, "pattern needs >= 1 block and >= 1 worker"),
+            BlockError::EmptyBlock { block } => write!(f, "block {block} has zero length"),
+            BlockError::OutOfRange { block, end, n } => {
+                write!(f, "block {block} ends at {end}, beyond the global dimension {n}")
+            }
+            BlockError::Overlap { block } => {
+                write!(f, "block {block} overlaps the previous block (or is out of order)")
+            }
+            BlockError::Gap { at } => {
+                write!(f, "the block partition leaves coordinate {at} uncovered")
+            }
+            BlockError::WorkerOwnsNothing { worker } => {
+                write!(f, "worker {worker} owns no blocks")
+            }
+            BlockError::OwnedOutOfRange { worker, block, num_blocks } => {
+                write!(
+                    f,
+                    "worker {worker} owns block {block}, but the pattern has only \
+                     {num_blocks} blocks"
+                )
+            }
+            BlockError::OwnedNotSorted { worker, block } => {
+                write!(
+                    f,
+                    "worker {worker}'s owned blocks are not strictly ascending at id {block}"
+                )
+            }
+            BlockError::NoOwner { block } => write!(f, "block {block} has no owner"),
+            BlockError::LocalDimMismatch { worker, local_dim, owned_len } => {
+                write!(
+                    f,
+                    "worker {worker}'s local cost has dimension {local_dim}, but its owned \
+                     slice has length {owned_len}"
+                )
+            }
+            BlockError::WorkerCountMismatch { pattern, problem } => {
+                write!(f, "pattern drives {pattern} workers, the problem has {problem}")
+            }
+            BlockError::DimMismatch { pattern, problem } => {
+                write!(f, "pattern dimension {pattern} != problem dimension {problem}")
+            }
+            BlockError::PatternMismatch => {
+                write!(f, "builder pattern differs from the problem's own pattern")
+            }
+        }
+    }
+}
+
+impl std::error::Error for BlockError {}
+
+/// A validated block-ownership map: a partition of the global dimension
+/// `[0, n)` into contiguous blocks plus, per worker, the sorted list of
+/// block ids it owns. Immutable after construction; every derived quantity
+/// the hot loops need (per-coordinate owner counts, per-worker owned
+/// lengths) is precomputed here.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BlockPattern {
+    /// Global dimension `n`.
+    n: usize,
+    /// Block `b` covers `[starts[b], starts[b] + lens[b])`.
+    starts: Vec<usize>,
+    lens: Vec<usize>,
+    /// Per-worker strictly ascending owned block ids.
+    owned: Vec<Vec<usize>>,
+    /// Per-coordinate owner count `N_j` (derived; ≥ 1 after validation).
+    counts: Vec<usize>,
+    /// Per-worker owned-slice length `|S_i|` (derived).
+    owned_lens: Vec<usize>,
+}
+
+impl BlockPattern {
+    /// Build and validate a pattern. `blocks` is the global partition as
+    /// `(start, len)` pairs in ascending order; `owned[i]` lists worker
+    /// i's block ids, strictly ascending. Every coordinate must be covered
+    /// by exactly one block and every block owned by at least one worker.
+    pub fn new(
+        n: usize,
+        blocks: &[(usize, usize)],
+        owned: Vec<Vec<usize>>,
+    ) -> Result<Self, BlockError> {
+        if n == 0 {
+            return Err(BlockError::EmptyDimension);
+        }
+        if blocks.is_empty() || owned.is_empty() {
+            return Err(BlockError::EmptyPattern);
+        }
+        let mut cursor = 0usize;
+        for (b, &(start, len)) in blocks.iter().enumerate() {
+            if len == 0 {
+                return Err(BlockError::EmptyBlock { block: b });
+            }
+            if start < cursor {
+                return Err(BlockError::Overlap { block: b });
+            }
+            if start > cursor {
+                return Err(BlockError::Gap { at: cursor });
+            }
+            let end = start + len;
+            if end > n {
+                return Err(BlockError::OutOfRange { block: b, end, n });
+            }
+            cursor = end;
+        }
+        if cursor < n {
+            return Err(BlockError::Gap { at: cursor });
+        }
+        let num_blocks = blocks.len();
+        let mut block_owner_count = vec![0usize; num_blocks];
+        for (i, ids) in owned.iter().enumerate() {
+            if ids.is_empty() {
+                return Err(BlockError::WorkerOwnsNothing { worker: i });
+            }
+            let mut prev: Option<usize> = None;
+            for &b in ids {
+                if b >= num_blocks {
+                    return Err(BlockError::OwnedOutOfRange { worker: i, block: b, num_blocks });
+                }
+                if prev.is_some_and(|p| b <= p) {
+                    return Err(BlockError::OwnedNotSorted { worker: i, block: b });
+                }
+                prev = Some(b);
+                block_owner_count[b] += 1;
+            }
+        }
+        if let Some(b) = block_owner_count.iter().position(|&c| c == 0) {
+            return Err(BlockError::NoOwner { block: b });
+        }
+
+        let starts: Vec<usize> = blocks.iter().map(|&(s, _)| s).collect();
+        let lens: Vec<usize> = blocks.iter().map(|&(_, l)| l).collect();
+        let mut counts = vec![0usize; n];
+        for (b, &c) in block_owner_count.iter().enumerate() {
+            for j in starts[b]..starts[b] + lens[b] {
+                counts[j] = c;
+            }
+        }
+        let owned_lens: Vec<usize> =
+            owned.iter().map(|ids| ids.iter().map(|&b| lens[b]).sum()).collect();
+        Ok(BlockPattern { n, starts, lens, owned, counts, owned_lens })
+    }
+
+    /// The historical behaviour as a pattern: one block covering `[0, n)`,
+    /// owned by every worker. An engine run with this pattern is
+    /// bit-identical to the unsharded engine.
+    pub fn dense(n: usize, n_workers: usize) -> Self {
+        BlockPattern::new(n, &[(0, n)], vec![vec![0]; n_workers])
+            .expect("the dense pattern is always valid for n, n_workers >= 1")
+    }
+
+    /// An even partition of `[0, n)` into `n_blocks` contiguous blocks
+    /// (the first `n % n_blocks` blocks are one coordinate longer), as the
+    /// `(start, len)` input of [`BlockPattern::new`]. `n_blocks` must be
+    /// ≥ 1; with `n_blocks > n` the trailing blocks come out empty, which
+    /// [`BlockPattern::new`] rejects as the typed
+    /// [`BlockError::EmptyBlock`].
+    pub fn even_blocks(n: usize, n_blocks: usize) -> Vec<(usize, usize)> {
+        assert!(n_blocks >= 1, "need at least one block");
+        let base = n / n_blocks;
+        let extra = n % n_blocks;
+        let mut out = Vec::with_capacity(n_blocks);
+        let mut start = 0;
+        for b in 0..n_blocks {
+            let len = base + usize::from(b < extra);
+            out.push((start, len));
+            start += len;
+        }
+        out
+    }
+
+    /// A round-robin overlapping ownership over an even partition: block
+    /// `b` is owned by workers `(b + j) mod N` for `j = 0..copies`. With
+    /// `copies = 1` the blocks are disjoint across workers; `copies > 1`
+    /// gives the overlapping-feature-blocks scenario (several workers
+    /// share a block, general-form consensus resolves them on the master);
+    /// `copies = N` is the dense pattern over `n_blocks` blocks.
+    ///
+    /// Every worker is covered iff `n_blocks + copies - 1 >= n_workers`
+    /// (the owner slots span `(b + j) mod N`); otherwise this returns the
+    /// typed [`BlockError::WorkerOwnsNothing`]. Every misconfiguration is
+    /// a typed error, never a panic: `n_blocks = 0`, `n_workers = 0` or
+    /// `copies = 0` → [`BlockError::EmptyPattern`] /
+    /// [`BlockError::WorkerOwnsNothing`], `n_blocks > n` →
+    /// [`BlockError::EmptyBlock`], `copies > n_workers` (a worker would
+    /// own the same block twice) → [`BlockError::OwnedNotSorted`].
+    pub fn round_robin(
+        n: usize,
+        n_blocks: usize,
+        n_workers: usize,
+        copies: usize,
+    ) -> Result<Self, BlockError> {
+        if n_blocks == 0 || n_workers == 0 {
+            return Err(BlockError::EmptyPattern);
+        }
+        let blocks = Self::even_blocks(n, n_blocks);
+        let mut owned = vec![Vec::new(); n_workers];
+        for b in 0..n_blocks {
+            for j in 0..copies {
+                owned[(b + j) % n_workers].push(b);
+            }
+        }
+        // Block ids were pushed in ascending order per worker; the
+        // validation below turns any remaining misuse (empty ownership,
+        // duplicate ids from copies > n_workers, empty trailing blocks
+        // from n_blocks > n) into its typed error.
+        BlockPattern::new(n, &blocks, owned)
+    }
+
+    /// Global dimension `n`.
+    pub fn dim(&self) -> usize {
+        self.n
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.starts.len()
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.owned.len()
+    }
+
+    /// Block `b`'s global coordinate range.
+    pub fn block_range(&self, b: usize) -> (usize, usize) {
+        (self.starts[b], self.lens[b])
+    }
+
+    /// Worker i's owned block ids (strictly ascending).
+    pub fn owned(&self, worker: usize) -> &[usize] {
+        &self.owned[worker]
+    }
+
+    /// Length of worker i's owned slice `|S_i|` — the dimension of its
+    /// local variable, dual and every message it exchanges.
+    pub fn owned_len(&self, worker: usize) -> usize {
+        self.owned_lens[worker]
+    }
+
+    /// Per-coordinate owner count `N_j` (the master's per-coordinate
+    /// reduction width and prox denominator weight).
+    pub fn count(&self, j: usize) -> usize {
+        self.counts[j]
+    }
+
+    /// True when every worker owns the full dimension — the pattern where
+    /// sharding changes nothing (all messages are full-length and every
+    /// `N_j = N`). [`BlockPattern::dense`] is the canonical instance.
+    pub fn is_effectively_dense(&self) -> bool {
+        self.owned_lens.iter().all(|&l| l == self.n)
+    }
+
+    /// Walk worker i's owned slice as contiguous `(local_offset,
+    /// global_start, len)` runs, in ascending global order. This is the
+    /// one primitive every gather/scatter/reduction loop is written with,
+    /// so the local↔global coordinate convention lives in exactly one
+    /// place.
+    pub fn for_each_range<F: FnMut(usize, usize, usize)>(&self, worker: usize, mut f: F) {
+        let mut local = 0usize;
+        for &b in &self.owned[worker] {
+            f(local, self.starts[b], self.lens[b]);
+            local += self.lens[b];
+        }
+    }
+
+    /// Gather the global vector's owned slice for worker i into `out`
+    /// (resized to `owned_len`).
+    pub fn gather_into(&self, worker: usize, global: &[f64], out: &mut Vec<f64>) {
+        debug_assert_eq!(global.len(), self.n);
+        out.resize(self.owned_lens[worker], 0.0);
+        let mut local = 0usize;
+        for &b in &self.owned[worker] {
+            let (s, l) = (self.starts[b], self.lens[b]);
+            out[local..local + l].copy_from_slice(&global[s..s + l]);
+            local += l;
+        }
+    }
+
+    /// Allocating variant of [`BlockPattern::gather_into`].
+    pub fn gather_vec(&self, worker: usize, global: &[f64]) -> Vec<f64> {
+        let mut out = Vec::new();
+        self.gather_into(worker, global, &mut out);
+        out
+    }
+
+    /// Total communicated coordinates over one full round of all workers,
+    /// as a fraction of the dense protocol's `N·n`. Strictly `< 1` for any
+    /// genuinely sharded pattern — the comm-volume reduction the
+    /// `virtual_scale` bench reports as `sharded_comm_volume_ratio`.
+    pub fn comm_volume_ratio(&self) -> f64 {
+        let total: usize = self.owned_lens.iter().sum();
+        total as f64 / (self.owned.len() * self.n) as f64
+    }
+
+    /// Serialize for the v2 checkpoint format.
+    pub fn to_json(&self) -> JsonValue {
+        let blocks = JsonValue::Arr(
+            self.starts
+                .iter()
+                .zip(&self.lens)
+                .map(|(&s, &l)| {
+                    JsonValue::Arr(vec![JsonValue::Num(s as f64), JsonValue::Num(l as f64)])
+                })
+                .collect(),
+        );
+        let owned = JsonValue::Arr(
+            self.owned
+                .iter()
+                .map(|ids| {
+                    JsonValue::Arr(ids.iter().map(|&b| JsonValue::Num(b as f64)).collect())
+                })
+                .collect(),
+        );
+        JsonValue::Obj(vec![
+            ("n".to_string(), JsonValue::Num(self.n as f64)),
+            ("blocks".to_string(), blocks),
+            ("owned".to_string(), owned),
+        ])
+    }
+
+    /// Restore a pattern serialized by [`BlockPattern::to_json`]
+    /// (re-validated on load).
+    pub fn from_json(doc: &JsonValue) -> Result<Self, String> {
+        let n = json_usize(doc.get("n").ok_or("pattern missing field \"n\"")?)?;
+        let mut blocks = Vec::new();
+        for pair in doc.get("blocks").ok_or("pattern missing field \"blocks\"")?.items() {
+            let items = pair.items();
+            if items.len() != 2 {
+                return Err("pattern block entry is not a [start, len] pair".to_string());
+            }
+            blocks.push((json_usize(&items[0])?, json_usize(&items[1])?));
+        }
+        let mut owned = Vec::new();
+        for ids in doc.get("owned").ok_or("pattern missing field \"owned\"")?.items() {
+            owned.push(ids.items().iter().map(json_usize).collect::<Result<Vec<_>, _>>()?);
+        }
+        BlockPattern::new(n, &blocks, owned).map_err(|e| format!("invalid pattern: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_pattern_is_effectively_dense() {
+        let p = BlockPattern::dense(10, 4);
+        assert_eq!(p.dim(), 10);
+        assert_eq!(p.num_blocks(), 1);
+        assert_eq!(p.num_workers(), 4);
+        assert!(p.is_effectively_dense());
+        for i in 0..4 {
+            assert_eq!(p.owned_len(i), 10);
+        }
+        for j in 0..10 {
+            assert_eq!(p.count(j), 4);
+        }
+        assert_eq!(p.comm_volume_ratio(), 1.0);
+    }
+
+    #[test]
+    fn even_blocks_partition_exactly() {
+        assert_eq!(BlockPattern::even_blocks(10, 3), vec![(0, 4), (4, 3), (7, 3)]);
+        let singletons: Vec<(usize, usize)> = (0..6).map(|i| (i, 1)).collect();
+        assert_eq!(BlockPattern::even_blocks(6, 6), singletons);
+    }
+
+    #[test]
+    fn round_robin_disjoint_and_overlapping() {
+        let p = BlockPattern::round_robin(12, 4, 4, 1).unwrap();
+        assert_eq!(p.owned(0), &[0]);
+        assert_eq!(p.owned(3), &[3]);
+        assert!((p.comm_volume_ratio() - 0.25).abs() < 1e-12);
+        for j in 0..12 {
+            assert_eq!(p.count(j), 1);
+        }
+
+        let q = BlockPattern::round_robin(12, 4, 4, 2).unwrap();
+        assert_eq!(q.owned(0), &[0, 3]);
+        assert_eq!(q.owned(1), &[0, 1]);
+        for j in 0..12 {
+            assert_eq!(q.count(j), 2);
+        }
+        assert!((q.comm_volume_ratio() - 0.5).abs() < 1e-12);
+
+        let dense = BlockPattern::round_robin(12, 4, 4, 4).unwrap();
+        assert!(dense.is_effectively_dense());
+    }
+
+    #[test]
+    fn validation_rejects_gaps_overlaps_out_of_range() {
+        // gap between blocks
+        let err = BlockPattern::new(10, &[(0, 4), (6, 4)], vec![vec![0, 1]]).unwrap_err();
+        assert_eq!(err, BlockError::Gap { at: 4 });
+        // tail gap
+        let err = BlockPattern::new(10, &[(0, 4)], vec![vec![0]]).unwrap_err();
+        assert_eq!(err, BlockError::Gap { at: 4 });
+        // overlap
+        let err = BlockPattern::new(10, &[(0, 6), (4, 6)], vec![vec![0, 1]]).unwrap_err();
+        assert_eq!(err, BlockError::Overlap { block: 1 });
+        // out of range
+        let err = BlockPattern::new(10, &[(0, 11)], vec![vec![0]]).unwrap_err();
+        assert_eq!(err, BlockError::OutOfRange { block: 0, end: 11, n: 10 });
+        // empty block
+        let err = BlockPattern::new(10, &[(0, 0), (0, 10)], vec![vec![1]]).unwrap_err();
+        assert_eq!(err, BlockError::EmptyBlock { block: 0 });
+    }
+
+    #[test]
+    fn validation_rejects_bad_ownership() {
+        let blocks = [(0usize, 5usize), (5, 5)];
+        let err = BlockPattern::new(10, &blocks, vec![vec![0, 2], vec![1]]).unwrap_err();
+        assert_eq!(err, BlockError::OwnedOutOfRange { worker: 0, block: 2, num_blocks: 2 });
+        let err = BlockPattern::new(10, &blocks, vec![vec![1, 0], vec![1]]).unwrap_err();
+        assert_eq!(err, BlockError::OwnedNotSorted { worker: 0, block: 0 });
+        let err = BlockPattern::new(10, &blocks, vec![vec![0, 0], vec![1]]).unwrap_err();
+        assert_eq!(err, BlockError::OwnedNotSorted { worker: 0, block: 0 });
+        let err = BlockPattern::new(10, &blocks, vec![vec![0], Vec::new()]).unwrap_err();
+        assert_eq!(err, BlockError::WorkerOwnsNothing { worker: 1 });
+        let err = BlockPattern::new(10, &blocks, vec![vec![0], vec![0]]).unwrap_err();
+        assert_eq!(err, BlockError::NoOwner { block: 1 });
+    }
+
+    #[test]
+    fn round_robin_misuse_is_typed_never_a_panic() {
+        assert_eq!(BlockPattern::round_robin(10, 0, 4, 1), Err(BlockError::EmptyPattern));
+        assert_eq!(BlockPattern::round_robin(10, 2, 0, 1), Err(BlockError::EmptyPattern));
+        // n_blocks > n: the trailing blocks are empty.
+        assert!(matches!(
+            BlockPattern::round_robin(3, 5, 2, 2),
+            Err(BlockError::EmptyBlock { .. })
+        ));
+        // copies = 0: nobody owns anything.
+        assert!(matches!(
+            BlockPattern::round_robin(10, 2, 2, 0),
+            Err(BlockError::WorkerOwnsNothing { worker: 0 })
+        ));
+        // copies > n_workers: a worker would own the same block twice.
+        assert!(matches!(
+            BlockPattern::round_robin(10, 2, 2, 3),
+            Err(BlockError::OwnedNotSorted { .. })
+        ));
+        // too few owner slots to cover every worker
+        assert!(matches!(
+            BlockPattern::round_robin(10, 2, 5, 1),
+            Err(BlockError::WorkerOwnsNothing { worker: 2 })
+        ));
+    }
+
+    #[test]
+    fn gather_and_ranges_agree() {
+        let p = BlockPattern::new(8, &[(0, 3), (3, 2), (5, 3)], vec![vec![0, 2], vec![1]])
+            .unwrap();
+        assert_eq!(p.owned_len(0), 6);
+        assert_eq!(p.owned_len(1), 2);
+        let global: Vec<f64> = (0..8).map(|v| v as f64).collect();
+        assert_eq!(p.gather_vec(0, &global), vec![0.0, 1.0, 2.0, 5.0, 6.0, 7.0]);
+        assert_eq!(p.gather_vec(1, &global), vec![3.0, 4.0]);
+        let mut runs = Vec::new();
+        p.for_each_range(0, |lo, g, len| runs.push((lo, g, len)));
+        assert_eq!(runs, vec![(0, 0, 3), (3, 5, 3)]);
+        // counts: block 0 and 2 owned once, block 1 owned once
+        assert!((0..8).all(|j| p.count(j) == 1));
+    }
+
+    #[test]
+    fn json_roundtrip_revalidates() {
+        let p = BlockPattern::round_robin(11, 3, 4, 2).unwrap();
+        let back = BlockPattern::from_json(&p.to_json()).unwrap();
+        assert_eq!(p, back);
+        // corrupt document fails cleanly
+        assert!(BlockPattern::from_json(&JsonValue::Obj(Vec::new())).is_err());
+    }
+}

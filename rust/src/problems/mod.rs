@@ -7,6 +7,7 @@
 //! factorization where possible — because that solve *is* the worker's whole
 //! job in Algorithm 2.
 
+pub mod blocks;
 pub mod cache;
 pub mod lasso;
 pub mod logistic;
@@ -15,6 +16,7 @@ pub mod ridge;
 pub mod spca;
 pub mod svm;
 
+pub use blocks::{BlockError, BlockPattern};
 pub use lasso::LassoLocal;
 pub use logistic::LogisticLocal;
 pub use quadratic::QuadraticLocal;
@@ -50,6 +52,11 @@ pub struct WorkerScratch {
     pub step: Vec<f64>,
     /// Shared-dimension buffer: line-search trial points.
     pub trial: Vec<f64>,
+    /// Global-dimension buffer: owned-slice gathers of `x₀` under a
+    /// block-sharded pattern ([`BlockPattern`]). Kept separate from the
+    /// solver buffers above so a gather is never clobbered by the
+    /// `eval_with`/`solve_subproblem` call it feeds.
+    pub gather: Vec<f64>,
 }
 
 impl WorkerScratch {
@@ -106,10 +113,23 @@ pub trait LocalCost: Send + Sync {
 }
 
 /// The consensus problem (4): `N` local costs plus the shared regularizer.
+///
+/// Two forms:
+///
+/// - **Dense** ([`ConsensusProblem::new`], the historical form): every
+///   local cost lives on the full shared dimension and the consensus
+///   constraint is `x_i = x₀`.
+/// - **Block-sharded** ([`ConsensusProblem::sharded`]): a [`BlockPattern`]
+///   assigns each worker a subset of coordinate blocks; worker i's cost
+///   has dimension `|S_i|` and the constraint is the general-form
+///   `x_i = (x₀)_{S_i}`. [`ConsensusProblem::dim`] stays the *global*
+///   dimension.
 #[derive(Clone)]
 pub struct ConsensusProblem {
     locals: Vec<Arc<dyn LocalCost>>,
     reg: Regularizer,
+    /// Block-ownership map; `None` = the historical dense form.
+    pattern: Option<Arc<BlockPattern>>,
 }
 
 impl ConsensusProblem {
@@ -117,7 +137,34 @@ impl ConsensusProblem {
         assert!(!locals.is_empty(), "need at least one worker");
         let n = locals[0].dim();
         assert!(locals.iter().all(|l| l.dim() == n), "all locals must share dim");
-        ConsensusProblem { locals, reg }
+        ConsensusProblem { locals, reg, pattern: None }
+    }
+
+    /// Block-sharded general-form consensus: worker i's local cost must
+    /// have dimension `pattern.owned_len(i)` (it sees only its owned
+    /// slice of `x₀`). Validation is typed — the session builder surfaces
+    /// these as [`BlockError`]-carrying engine errors.
+    pub fn sharded(
+        locals: Vec<Arc<dyn LocalCost>>,
+        reg: Regularizer,
+        pattern: BlockPattern,
+    ) -> Result<Self, BlockError> {
+        if pattern.num_workers() != locals.len() {
+            return Err(BlockError::WorkerCountMismatch {
+                pattern: pattern.num_workers(),
+                problem: locals.len(),
+            });
+        }
+        for (i, l) in locals.iter().enumerate() {
+            if l.dim() != pattern.owned_len(i) {
+                return Err(BlockError::LocalDimMismatch {
+                    worker: i,
+                    local_dim: l.dim(),
+                    owned_len: pattern.owned_len(i),
+                });
+            }
+        }
+        Ok(ConsensusProblem { locals, reg, pattern: Some(Arc::new(pattern)) })
     }
 
     /// Number of workers `N`.
@@ -125,9 +172,17 @@ impl ConsensusProblem {
         self.locals.len()
     }
 
-    /// Shared dimension `n`.
+    /// Shared (global) dimension `n`.
     pub fn dim(&self) -> usize {
-        self.locals[0].dim()
+        match &self.pattern {
+            Some(p) => p.dim(),
+            None => self.locals[0].dim(),
+        }
+    }
+
+    /// The block-ownership map (None for the dense form).
+    pub fn pattern(&self) -> Option<&Arc<BlockPattern>> {
+        self.pattern.as_ref()
     }
 
     pub fn local(&self, i: usize) -> &Arc<dyn LocalCost> {
@@ -142,21 +197,50 @@ impl ConsensusProblem {
         &self.reg
     }
 
-    /// The original objective (1) at a consensus point: `Σ f_i(x) + h(x)`.
+    /// The original objective (1) at a consensus point: `Σ f_i(x) + h(x)`
+    /// (sharded: `Σ f_i(x_{S_i}) + h(x)` — each local sees its owned
+    /// slice of the global point).
     pub fn objective(&self, x: &[f64]) -> f64 {
-        self.locals.iter().map(|l| l.eval(x)).sum::<f64>() + self.reg.eval(x)
+        match &self.pattern {
+            None => self.locals.iter().map(|l| l.eval(x)).sum::<f64>() + self.reg.eval(x),
+            Some(p) => {
+                let mut slice = Vec::new();
+                let mut total = 0.0;
+                for (i, l) in self.locals.iter().enumerate() {
+                    p.gather_into(i, x, &mut slice);
+                    total += l.eval(&slice);
+                }
+                total + self.reg.eval(x)
+            }
+        }
     }
 
     /// [`ConsensusProblem::objective`] through caller-owned scratch — the
     /// per-iteration diagnostics path. Bit-identical to `objective` (every
-    /// `eval_with` is bit-identical to `eval`, and the summation order is
-    /// the same).
+    /// `eval_with` is bit-identical to `eval`, the summation order is the
+    /// same, and the sharded gather reproduces the same slices).
     pub fn objective_with(&self, x: &[f64], scratch: &mut WorkerScratch) -> f64 {
-        let mut total = 0.0;
-        for l in &self.locals {
-            total += l.eval_with(x, scratch);
+        match self.pattern.clone() {
+            None => {
+                let mut total = 0.0;
+                for l in &self.locals {
+                    total += l.eval_with(x, scratch);
+                }
+                total + self.reg.eval(x)
+            }
+            Some(p) => {
+                let mut total = 0.0;
+                for (i, l) in self.locals.iter().enumerate() {
+                    // Move the gather out of the scratch so `eval_with`
+                    // can use every scratch buffer freely.
+                    let mut slice = std::mem::take(&mut scratch.gather);
+                    p.gather_into(i, x, &mut slice);
+                    total += l.eval_with(&slice, scratch);
+                    scratch.gather = slice;
+                }
+                total + self.reg.eval(x)
+            }
         }
-        total + self.reg.eval(x)
     }
 
     /// Max Lipschitz constant over workers (the `L` of Assumption 2).
@@ -164,14 +248,34 @@ impl ConsensusProblem {
         self.locals.iter().map(|l| l.lipschitz()).fold(0.0, f64::max)
     }
 
-    /// Full gradient `Σ ∇f_i(x)` (for centralized baselines).
+    /// Full gradient `Σ ∇f_i(x)` (for centralized baselines). Sharded:
+    /// each worker's local gradient is scattered back into its owned
+    /// coordinates of `out`.
     pub fn full_grad_into(&self, x: &[f64], out: &mut [f64]) {
         out.fill(0.0);
-        let mut tmp = vec![0.0; x.len()];
-        for l in &self.locals {
-            l.grad_into(x, &mut tmp);
-            for (o, t) in out.iter_mut().zip(&tmp) {
-                *o += t;
+        match &self.pattern {
+            None => {
+                let mut tmp = vec![0.0; x.len()];
+                for l in &self.locals {
+                    l.grad_into(x, &mut tmp);
+                    for (o, t) in out.iter_mut().zip(&tmp) {
+                        *o += t;
+                    }
+                }
+            }
+            Some(p) => {
+                let mut slice = Vec::new();
+                let mut tmp = Vec::new();
+                for (i, l) in self.locals.iter().enumerate() {
+                    p.gather_into(i, x, &mut slice);
+                    tmp.resize(slice.len(), 0.0);
+                    l.grad_into(&slice, &mut tmp);
+                    p.for_each_range(i, |lo, g, len| {
+                        for k in 0..len {
+                            out[g + k] += tmp[lo + k];
+                        }
+                    });
+                }
             }
         }
     }

@@ -190,7 +190,6 @@ impl LocalCost for SvmLocal {
 }
 
 #[cfg(test)]
-#[allow(deprecated)] // exercises the legacy free-function drivers
 mod tests {
     use super::*;
     use crate::problems::tests::{check_grad, check_subproblem};
@@ -240,7 +239,7 @@ mod tests {
     fn distributed_svm_converges_through_coordinator() {
         use crate::admm::arrivals::ArrivalModel;
         use crate::admm::kkt::kkt_residual;
-        use crate::admm::master_pov::run_master_pov;
+        use crate::testkit::drivers::run_partial_barrier;
         use crate::admm::AdmmConfig;
         use crate::problems::ConsensusProblem;
         use crate::prox::Regularizer;
@@ -261,7 +260,7 @@ mod tests {
         let p = ConsensusProblem::new(locals, Regularizer::L2Sq { theta: 1.0 });
         let rho = p.lipschitz().max(1.0);
         let cfg = AdmmConfig { rho, tau: 3, max_iters: 3000, ..Default::default() };
-        let out = run_master_pov(&p, &cfg, &ArrivalModel::fig3_profile(4, 5));
+        let out = run_partial_barrier(&p, &cfg, &ArrivalModel::fig3_profile(4, 5));
         let r = kkt_residual(&p, &out.state);
         // squared-hinge + weak coupling converges slowly near the active-set
         // boundary; 3000 iterations reach ~1e-3 stationarity

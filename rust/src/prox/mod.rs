@@ -89,6 +89,40 @@ impl Regularizer {
         }
     }
 
+    /// Scalar prox of one coordinate: `argmin_z h(z) + 1/(2t) (z − v)²`
+    /// for the separable regularizers this crate ships (all of them are).
+    /// Performs exactly the arithmetic [`Regularizer::prox_in_place`]
+    /// performs per element, so applying it coordinate-wise with a uniform
+    /// `t` is **bit-identical** to the vector prox — the property the
+    /// block-sharded master update's per-coordinate weights
+    /// (`t_j = 1/(N_j ρ + γ)`) rest on.
+    pub fn prox_scalar(&self, v: f64, t: f64) -> f64 {
+        debug_assert!(t > 0.0, "prox weight must be positive");
+        match *self {
+            Regularizer::Zero => v,
+            Regularizer::L1 { theta } => soft_threshold_scalar(v, theta * t),
+            Regularizer::L2Sq { theta } => v * (1.0 / (1.0 + theta * t)),
+            Regularizer::Box { lo, hi } => v.clamp(lo, hi),
+            Regularizer::ElasticNet { theta1, theta2 } => {
+                soft_threshold_scalar(v, theta1 * t) * (1.0 / (1.0 + theta2 * t))
+            }
+            Regularizer::L1Box { theta, bound } => {
+                soft_threshold_scalar(v, theta * t).clamp(-bound, bound)
+            }
+        }
+    }
+
+    /// Coordinate-wise prox with per-coordinate weights `ts` — the
+    /// block-sharded master update, where coordinate `j`'s denominator is
+    /// `N_j ρ + γ` and `N_j` varies with the owner count. With all `ts`
+    /// equal this is bit-identical to [`Regularizer::prox_in_place`].
+    pub fn prox_weighted_in_place(&self, x: &mut [f64], ts: &[f64]) {
+        assert_eq!(x.len(), ts.len());
+        for (v, &t) in x.iter_mut().zip(ts) {
+            *v = self.prox_scalar(*v, t);
+        }
+    }
+
     /// Out-of-place prox into a caller buffer (hot-path variant: resizes
     /// `out`, copies, then applies [`Regularizer::prox_in_place`] — no
     /// allocation once `out` has the right capacity).
@@ -209,8 +243,19 @@ fn sgn0(v: f64) -> f64 {
 #[inline]
 pub fn soft_threshold_in_place(x: &mut [f64], t: f64) {
     for v in x.iter_mut() {
-        let a = v.abs() - t;
-        *v = if a > 0.0 { a * sgn0(*v) } else { 0.0 };
+        *v = soft_threshold_scalar(*v, t);
+    }
+}
+
+/// One coordinate of [`soft_threshold_in_place`] (same arithmetic, shared
+/// so the vector and per-coordinate proxes cannot drift).
+#[inline]
+pub fn soft_threshold_scalar(v: f64, t: f64) -> f64 {
+    let a = v.abs() - t;
+    if a > 0.0 {
+        a * sgn0(v)
+    } else {
+        0.0
     }
 }
 
@@ -335,6 +380,41 @@ mod tests {
         // at upper bound: any s ≥ 0 allowed
         assert!(b.subdiff_dist(&[1.0], &[5.0]) < 1e-12);
         assert!((b.subdiff_dist(&[1.0], &[-2.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prox_scalar_bit_identical_to_vector_prox() {
+        // The block-sharded master update applies the prox per coordinate
+        // with varying weights; with a uniform weight it must reproduce
+        // the vector prox bit-for-bit for every regularizer.
+        let regs = [
+            Regularizer::Zero,
+            Regularizer::L1 { theta: 0.7 },
+            Regularizer::L2Sq { theta: 1.3 },
+            Regularizer::Box { lo: -0.5, hi: 0.8 },
+            Regularizer::ElasticNet { theta1: 0.4, theta2: 0.9 },
+            Regularizer::L1Box { theta: 0.3, bound: 1.0 },
+        ];
+        let x = vec![3.0, -2.0, 0.5, 0.0, -0.1, 1.7, -5.0];
+        for reg in &regs {
+            for t in [0.1, 1.0, 3.7] {
+                let mut vec_prox = x.clone();
+                reg.prox_in_place(&mut vec_prox, t);
+                let mut weighted = x.clone();
+                reg.prox_weighted_in_place(&mut weighted, &vec![t; x.len()]);
+                for (a, b) in vec_prox.iter().zip(&weighted) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "reg {reg:?} t={t}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prox_weighted_varies_per_coordinate() {
+        let h = Regularizer::L1 { theta: 1.0 };
+        let mut x = vec![2.0, 2.0];
+        h.prox_weighted_in_place(&mut x, &[0.5, 1.5]);
+        assert_eq!(x, vec![1.5, 0.5]);
     }
 
     #[test]

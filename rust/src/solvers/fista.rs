@@ -61,7 +61,6 @@ pub fn fista_lasso(inst: &LassoInstance, max_iters: usize) -> (Vec<f64>, f64) {
 }
 
 #[cfg(test)]
-#[allow(deprecated)] // exercises the legacy run_sync_admm wrapper
 mod tests {
     use super::*;
     use crate::problems::QuadraticLocal;
@@ -95,7 +94,7 @@ mod tests {
         let (_, f_star) = fista_lasso(&inst, 20_000);
         let p = inst.problem();
         let cfg = crate::admm::AdmmConfig { rho: 40.0, max_iters: 100, ..Default::default() };
-        let admm = crate::admm::sync::run_sync_admm(&p, &cfg);
+        let admm = crate::testkit::drivers::run_full_barrier(&p, &cfg);
         let obj = admm.history.last().unwrap().objective;
         assert!(obj >= f_star - 1e-6, "obj={obj} f_star={f_star}");
         assert!((obj - f_star) / f_star.abs() < 0.05, "ADMM should be close after 100 iters");
@@ -108,7 +107,7 @@ mod tests {
         let (_, f_star) = fista_lasso(&inst, 50_000);
         let p = inst.problem();
         let cfg = crate::admm::AdmmConfig { rho: 20.0, max_iters: 4000, ..Default::default() };
-        let admm = crate::admm::sync::run_sync_admm(&p, &cfg);
+        let admm = crate::testkit::drivers::run_full_barrier(&p, &cfg);
         let f_admm = admm.history.last().unwrap().objective;
         assert!(((f_admm - f_star) / f_star.abs()).abs() < 1e-4, "f_admm={f_admm} f*={f_star}");
     }

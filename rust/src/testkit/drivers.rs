@@ -1,0 +1,143 @@
+//! Non-deprecated one-shot runners for tests, benches and examples.
+//!
+//! The historical free-function drivers (`run_sync_admm`,
+//! `run_master_pov`, `run_alt_scheme`, `run_trace_driven`) are deprecated
+//! in favour of [`Session::builder`]; everything in-tree that is *not*
+//! pinning those wrappers' exact behaviour migrates here. Each runner is a
+//! thin Session assembly — one policy, the in-process trace-driven source,
+//! a [`BufferingObserver`] — so results are bit-identical to the wrappers
+//! they replace (both paths are the same `Session::step` loop).
+
+use crate::admm::arrivals::{ArrivalModel, ArrivalTrace};
+use crate::admm::engine::{AltScheme, FaultPlan, FullBarrier, PartialBarrier, UpdatePolicy};
+use crate::admm::session::{BufferingObserver, Session};
+use crate::admm::{AdmmConfig, AdmmState, IterRecord, StopReason};
+use crate::problems::ConsensusProblem;
+
+/// What one driver run returns — the union of the historical output
+/// structs (`SyncOutput`, `MasterPovOutput`, `AltSchemeOutput`), so
+/// migrated call sites keep reading the same fields.
+pub struct DriverRun {
+    pub state: AdmmState,
+    pub history: Vec<IterRecord>,
+    /// Realized arrival sets — replayable through any source.
+    pub trace: ArrivalTrace,
+    pub stop: StopReason,
+    /// Final per-worker delay counters.
+    pub final_delays: Vec<usize>,
+}
+
+impl DriverRun {
+    pub fn diverged(&self) -> bool {
+        self.stop == StopReason::Diverged
+    }
+}
+
+/// Run any policy over the in-process trace-driven source to completion,
+/// optionally under a deterministic [`FaultPlan`]. Panics on an invalid
+/// configuration, like the legacy entry points tests relied on.
+pub fn run_policy_with_faults<P: UpdatePolicy + 'static>(
+    problem: &ConsensusProblem,
+    cfg: &AdmmConfig,
+    arrivals: &ArrivalModel,
+    policy: P,
+    residual_stopping: bool,
+    faults: Option<FaultPlan>,
+) -> DriverRun {
+    let mut history = BufferingObserver::new();
+    let mut builder = Session::builder()
+        .problem(problem)
+        .config(cfg.clone())
+        .policy(policy)
+        .arrivals(arrivals)
+        .residual_stopping(residual_stopping)
+        .observer(&mut history);
+    if let Some(plan) = faults {
+        builder = builder.faults(plan);
+    }
+    let mut session = builder.build().expect("valid driver configuration");
+    let stop = session.run_to_completion().expect("driver run");
+    // `_` drops the boxed source, releasing the `&mut history` borrow.
+    let (outcome, _) = session.finish();
+    DriverRun {
+        state: outcome.state,
+        history: history.into_records(),
+        trace: outcome.trace,
+        stop,
+        final_delays: outcome.final_delays,
+    }
+}
+
+/// [`run_policy_with_faults`] without a fault plan.
+pub fn run_policy<P: UpdatePolicy + 'static>(
+    problem: &ConsensusProblem,
+    cfg: &AdmmConfig,
+    arrivals: &ArrivalModel,
+    policy: P,
+    residual_stopping: bool,
+) -> DriverRun {
+    run_policy_with_faults(problem, cfg, arrivals, policy, residual_stopping, None)
+}
+
+/// Algorithm 1 (synchronous full barrier, master-first) — the
+/// Session-based replacement for `run_sync_admm`.
+pub fn run_full_barrier(problem: &ConsensusProblem, cfg: &AdmmConfig) -> DriverRun {
+    run_policy(problem, cfg, &ArrivalModel::Full, FullBarrier, true)
+}
+
+/// Algorithms 2/3 (partially asynchronous, τ from the config) — the
+/// Session-based replacement for `run_master_pov`.
+pub fn run_partial_barrier(
+    problem: &ConsensusProblem,
+    cfg: &AdmmConfig,
+    arrivals: &ArrivalModel,
+) -> DriverRun {
+    run_policy(problem, cfg, arrivals, PartialBarrier { tau: cfg.tau }, true)
+}
+
+/// Algorithm 4 (master-owned duals; residual stopping historically off) —
+/// the Session-based replacement for `run_alt_scheme`.
+pub fn run_alt(
+    problem: &ConsensusProblem,
+    cfg: &AdmmConfig,
+    arrivals: &ArrivalModel,
+) -> DriverRun {
+    run_policy(problem, cfg, arrivals, AltScheme { tau: cfg.tau }, false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::LassoInstance;
+    use crate::rng::Pcg64;
+
+    #[test]
+    #[allow(deprecated)] // pins the drivers against the legacy wrappers
+    fn drivers_bit_match_the_legacy_wrappers() {
+        let mut rng = Pcg64::seed_from_u64(44);
+        let p = LassoInstance::synthetic(&mut rng, 3, 15, 6, 0.2, 0.1).problem();
+        let cfg = AdmmConfig { rho: 30.0, tau: 3, max_iters: 40, ..Default::default() };
+        let arr = ArrivalModel::probabilistic(vec![0.4, 0.9, 0.6], 5);
+
+        let new = run_partial_barrier(&p, &cfg, &arr);
+        let old = crate::admm::master_pov::run_master_pov(&p, &cfg, &arr);
+        assert_eq!(new.state.x0, old.state.x0);
+        assert_eq!(new.trace, old.trace);
+        assert_eq!(new.final_delays, old.final_delays);
+        for (a, b) in new.history.iter().zip(&old.history) {
+            assert_eq!(a.aug_lagrangian.to_bits(), b.aug_lagrangian.to_bits());
+        }
+
+        let sync_cfg = AdmmConfig { tau: 1, ..cfg.clone() };
+        let new = run_full_barrier(&p, &sync_cfg);
+        let old = crate::admm::sync::run_sync_admm(&p, &sync_cfg);
+        assert_eq!(new.state.x0, old.state.x0);
+        assert_eq!(new.stop, old.stop);
+
+        let alt_cfg = AdmmConfig { rho: 5.0, ..cfg };
+        let new = run_alt(&p, &alt_cfg, &arr);
+        let old = crate::admm::alt_scheme::run_alt_scheme(&p, &alt_cfg, &arr);
+        assert_eq!(new.state.x0, old.state.x0);
+        assert!(!new.diverged());
+    }
+}

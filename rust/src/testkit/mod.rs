@@ -18,6 +18,8 @@
 
 use crate::rng::Pcg64;
 
+pub mod drivers;
+
 /// Per-case generator handle: draws primitives from the case's RNG stream.
 pub struct Gen {
     rng: Pcg64,

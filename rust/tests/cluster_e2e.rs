@@ -1,12 +1,10 @@
 //! Threaded-cluster integration: protocol equivalence with the serial
 //! simulator, utilization accounting, and the async wall-clock win.
 
-#![allow(deprecated)] // exercises the legacy free-function drivers on purpose
-
 use ad_admm::admm::arrivals::ArrivalModel;
 use ad_admm::admm::kkt::kkt_residual;
-use ad_admm::admm::master_pov::run_master_pov;
 use ad_admm::admm::{AdmmConfig, StopReason};
+use ad_admm::testkit::drivers::{run_alt, run_partial_barrier};
 use ad_admm::cluster::{ClusterConfig, DelayModel, Protocol, StarCluster};
 use ad_admm::data::LassoInstance;
 use ad_admm::linalg::vecops;
@@ -41,7 +39,7 @@ fn threaded_cluster_trace_equivalent_to_serial_simulator() {
     let report = StarCluster::new(problem.clone()).run(&cfg);
     assert_eq!(report.stop, StopReason::MaxIters);
 
-    let replay = run_master_pov(
+    let replay = run_partial_barrier(
         &problem,
         &cfg.admm,
         &ArrivalModel::Trace(report.trace.clone()),
@@ -138,7 +136,7 @@ fn alt_scheme_cluster_matches_serial_replay() {
         ..Default::default()
     };
     let report = StarCluster::new(problem.clone()).run(&cfg);
-    let replay = ad_admm::admm::alt_scheme::run_alt_scheme(
+    let replay = run_alt(
         &problem,
         &cfg.admm,
         &ArrivalModel::Trace(report.trace.clone()),

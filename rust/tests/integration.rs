@@ -1,15 +1,11 @@
 //! Cross-module integration tests: the paper's headline claims end to end
 //! on the serial (master-PoV) coordinator.
 
-#![allow(deprecated)] // exercises the legacy free-function drivers on purpose
-
-use ad_admm::admm::alt_scheme::run_alt_scheme;
 use ad_admm::admm::arrivals::ArrivalModel;
 use ad_admm::admm::kkt::kkt_residual;
-use ad_admm::admm::master_pov::run_master_pov;
 use ad_admm::admm::params::alt_scheme_rho_upper_bound;
-use ad_admm::admm::sync::run_sync_admm;
 use ad_admm::admm::{AdmmConfig, StopReason};
+use ad_admm::testkit::drivers::{run_alt, run_full_barrier, run_partial_barrier};
 use ad_admm::data::{LassoInstance, SparsePcaInstance};
 use ad_admm::linalg::vecops;
 use ad_admm::metrics::accuracy_series;
@@ -28,7 +24,7 @@ fn theorem1_convex_lasso_all_taus_reach_fista_optimum() {
     for tau in [1usize, 4, 8] {
         let cfg = AdmmConfig { rho: 200.0, tau, max_iters: 3000, ..Default::default() };
         let arr = ArrivalModel::fig3_profile(8, 301 + tau as u64);
-        let out = run_master_pov(&problem, &cfg, &arr);
+        let out = run_partial_barrier(&problem, &cfg, &arr);
         let r = kkt_residual(&problem, &out.state);
         assert!(r.max() < 1e-5, "tau={tau}: {r:?}");
         let d = vecops::dist2(&out.state.x0, &x_star);
@@ -60,7 +56,7 @@ fn theorem1_nonconvex_spca_converges_for_all_taus() {
             ..Default::default()
         };
         let arr = ArrivalModel::fig3_profile(6, 302 + tau as u64);
-        let out = run_master_pov(&problem, &cfg, &arr);
+        let out = run_partial_barrier(&problem, &cfg, &arr);
         assert_eq!(out.stop, StopReason::MaxIters, "tau={tau} diverged");
         let r = kkt_residual(&problem, &out.state);
         assert!(r.max() < 1e-3, "tau={tau}: {r:?}");
@@ -91,7 +87,7 @@ fn small_rho_diverges_on_nonconvex() {
         init_x0: Some(init),
         ..Default::default()
     };
-    let out = run_sync_admm(&problem, &cfg);
+    let out = run_full_barrier(&problem, &cfg);
     assert_eq!(out.stop, StopReason::Diverged, "expected divergence at small rho");
 }
 
@@ -108,12 +104,12 @@ fn alt_scheme_fig4b_phenomenology() {
 
     // big rho + delay ⇒ divergence
     let big = AdmmConfig { rho: 500.0, tau: 4, max_iters: 4000, ..Default::default() };
-    let out_big = run_alt_scheme(&problem, &big, &arr(1));
+    let out_big = run_alt(&problem, &big, &arr(1));
     assert_eq!(out_big.stop, StopReason::Diverged, "Algorithm 4 should diverge at rho=500, tau=4");
 
     // small rho ⇒ convergence (slowly)
     let small = AdmmConfig { rho: 2.0, tau: 4, max_iters: 8000, ..Default::default() };
-    let out_small = run_alt_scheme(&problem, &small, &arr(2));
+    let out_small = run_alt(&problem, &small, &arr(2));
     assert!(!out_small.diverged());
     let r = kkt_residual(&problem, &out_small.state);
     assert!(r.max() < 5e-2, "{r:?}");
@@ -130,8 +126,8 @@ fn alg2_and_alg4_agree_synchronously() {
     let inst = LassoInstance::synthetic(&mut rng, 4, 30, 10, 0.2, 0.1);
     let problem = inst.problem();
     let cfg = AdmmConfig { rho: 50.0, tau: 1, max_iters: 2000, ..Default::default() };
-    let a2 = run_master_pov(&problem, &cfg, &ArrivalModel::Full);
-    let a4 = run_alt_scheme(&problem, &cfg, &ArrivalModel::Full);
+    let a2 = run_partial_barrier(&problem, &cfg, &ArrivalModel::Full);
+    let a4 = run_alt(&problem, &cfg, &ArrivalModel::Full);
     let d = vecops::dist2(&a2.state.x0, &a4.state.x0);
     assert!(d < 1e-7, "synchronous limits differ: {d}");
 }
@@ -148,7 +144,7 @@ fn accuracy_degrades_gracefully_with_tau() {
     let acc_at = |tau: usize| {
         let cfg = AdmmConfig { rho: 200.0, tau, max_iters: budget, ..Default::default() };
         let arr = ArrivalModel::fig3_profile(8, 99);
-        let out = run_master_pov(&problem, &cfg, &arr);
+        let out = run_partial_barrier(&problem, &cfg, &arr);
         *accuracy_series(&out.history, f_star).last().unwrap()
     };
     let a1 = acc_at(1);
@@ -171,7 +167,7 @@ fn logistic_regression_async_converges() {
     let rho = problem.lipschitz().max(1.0);
     let cfg = AdmmConfig { rho, tau: 4, max_iters: 600, ..Default::default() };
     let arr = ArrivalModel::fig3_profile(4, 7);
-    let out = run_master_pov(&problem, &cfg, &arr);
+    let out = run_partial_barrier(&problem, &cfg, &arr);
     let r = kkt_residual(&problem, &out.state);
     assert!(r.max() < 1e-4, "{r:?}");
 }
@@ -203,7 +199,7 @@ fn residual_stopping_rule_fires_and_point_is_good() {
         ..Default::default()
     };
     let arr = ArrivalModel::fig3_profile(4, 11);
-    let out = run_master_pov(&problem, &cfg, &arr);
+    let out = run_partial_barrier(&problem, &cfg, &arr);
     assert_eq!(out.stop, StopReason::Residuals, "rule should fire before 5000 iters");
     assert!(out.history.len() < 5000);
     let r = kkt_residual(&problem, &out.state);

@@ -4,14 +4,15 @@
 //! These tests skip (cleanly pass with a notice) when `make artifacts` has
 //! not been run, so the rest of the suite works without python.
 
-#![allow(deprecated)] // exercises the legacy free-function drivers on purpose
-
 use std::sync::Arc;
 
 use ad_admm::admm::arrivals::ArrivalModel;
+use ad_admm::admm::engine::TraceSource;
 use ad_admm::admm::kkt::kkt_residual;
-use ad_admm::admm::master_pov::{run_master_pov, run_master_pov_with_solver};
+use ad_admm::admm::session::{BufferingObserver, Session};
 use ad_admm::admm::AdmmConfig;
+use ad_admm::prelude::PartialBarrier;
+use ad_admm::testkit::drivers::run_partial_barrier;
 use ad_admm::data::{LassoInstance, SparsePcaInstance};
 use ad_admm::linalg::vecops;
 use ad_admm::problems::WorkerScratch;
@@ -167,14 +168,26 @@ fn full_admm_run_pjrt_vs_native_same_trajectory() {
     let cfg = AdmmConfig { rho: 50.0, tau: 3, max_iters: 150, ..Default::default() };
     let arr = ArrivalModel::probabilistic(vec![0.4, 0.9, 0.6], 31);
 
-    let native = run_master_pov(&problem, &cfg, &arr);
+    let native = run_partial_barrier(&problem, &cfg, &arr);
     let mut pjrt_solver = PjrtLassoSolver::new(engine, &inst).unwrap();
-    let pjrt = run_master_pov_with_solver(
-        &problem,
-        &cfg,
+    // Session over a TraceSource with the caller-supplied PJRT solver:
+    // the external-solver replacement for the deprecated
+    // `run_master_pov_with_solver` wrapper.
+    let mut history = BufferingObserver::new();
+    let source = TraceSource::with_solver(
+        problem.num_workers(),
         &ArrivalModel::Trace(native.trace.clone()),
         &mut pjrt_solver,
     );
+    let mut session = Session::builder()
+        .problem(&problem)
+        .config(cfg.clone())
+        .policy(PartialBarrier { tau: cfg.tau })
+        .observer(&mut history)
+        .build_typed(source)
+        .unwrap();
+    session.run_to_completion().unwrap();
+    let (pjrt, _) = session.finish();
 
     let d = vecops::dist2(&native.state.x0, &pjrt.state.x0);
     assert!(d < 1e-5, "PJRT trajectory diverged from native: {d}");

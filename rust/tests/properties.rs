@@ -1,16 +1,15 @@
 //! Property-based tests over the coordinator invariants and the numeric
 //! substrates, driven by the in-repo `testkit` runner.
 
-#![allow(deprecated)] // exercises the legacy free-function drivers on purpose
-
 use std::sync::Arc;
 
 use ad_admm::admm::arrivals::{ArrivalModel, ArrivalTrace};
 use ad_admm::admm::kkt::dual_identity_residual;
-use ad_admm::admm::master_pov::run_master_pov;
 use ad_admm::admm::params::{gamma_lower_bound, rho_lower_bound_convex, rho_lower_bound_nonconvex};
-use ad_admm::admm::sync::run_sync_admm;
+use ad_admm::admm::session::EngineError;
 use ad_admm::admm::AdmmConfig;
+use ad_admm::problems::{BlockError, BlockPattern};
+use ad_admm::testkit::drivers::{run_full_barrier, run_partial_barrier};
 use ad_admm::linalg::cg::cg_solve;
 use ad_admm::linalg::cholesky::Cholesky;
 use ad_admm::linalg::lu::Lu;
@@ -54,7 +53,7 @@ fn prop_bounded_delay_always_satisfied() {
             ..Default::default()
         };
         let arr = ArrivalModel::probabilistic(probs, g.rng().next_u64());
-        let out = run_master_pov(&p, &cfg, &arr);
+        let out = run_partial_barrier(&p, &cfg, &arr);
         assert!(
             out.trace.satisfies_bounded_delay(n_workers, tau),
             "trace violates Assumption 1 (tau={tau})"
@@ -83,7 +82,7 @@ fn prop_dual_identity_eq29() {
         };
         let probs: Vec<f64> = (0..n_workers).map(|_| g.f64_range(0.1, 0.9)).collect();
         let arr = ArrivalModel::probabilistic(probs, g.rng().next_u64());
-        let out = run_master_pov(&p, &cfg, &arr);
+        let out = run_partial_barrier(&p, &cfg, &arr);
         let res = dual_identity_residual(&p, &out.state);
         assert!(res < 1e-7, "eq. (29) violated: {res}");
     });
@@ -98,10 +97,10 @@ fn prop_sync_equals_full_arrival_async() {
         let p = random_lasso(g, n_workers, 6, 4);
         let iters = g.usize_range(2, 30);
         let cfg = AdmmConfig { rho: 50.0, tau: 1, max_iters: iters, ..Default::default() };
-        let out = run_master_pov(&p, &cfg, &ArrivalModel::Full);
+        let out = run_partial_barrier(&p, &cfg, &ArrivalModel::Full);
         assert!(out.trace.sets.iter().all(|s| s.len() == n_workers));
         let full_trace = ArrivalTrace { sets: vec![(0..n_workers).collect(); iters] };
-        let replay = run_master_pov(&p, &cfg, &ArrivalModel::Trace(full_trace));
+        let replay = run_partial_barrier(&p, &cfg, &ArrivalModel::Trace(full_trace));
         assert_eq!(out.state.x0, replay.state.x0, "bit-exact replay expected");
     });
 }
@@ -115,7 +114,7 @@ fn prop_aug_lagrangian_descends_synchronously_for_large_rho() {
         let p = random_lasso(g, n_workers, 8, 4);
         let rho = 4.0 * p.lipschitz().max(1.0);
         let cfg = AdmmConfig { rho, max_iters: 40, ..Default::default() };
-        let out = run_sync_admm(&p, &cfg);
+        let out = run_full_barrier(&p, &cfg);
         for w in out.history.windows(2).skip(1) {
             assert!(
                 w[1].aug_lagrangian
@@ -244,6 +243,160 @@ fn prop_quadratic_subproblem_exact() {
             grad[j] += lam[j] + rho * (x[j] - x0[j]);
         }
         assert!(vecops::nrm2(&grad) < 1e-8);
+    });
+}
+
+#[test]
+fn prop_csr_from_triplets_matches_naive_dense_accumulator() {
+    // Duplicate coalescing across randomized triplet orders, with the
+    // leading/trailing-empty-row indptr close-out paths exercised, pinned
+    // against a naive dense accumulator.
+    Runner::new(0xC0DE, CASES).run("from_triplets coalescing", |g| {
+        let rows = g.usize_range(1, 12);
+        let cols = g.usize_range(1, 10);
+        // Half the cases confine triplets to interior rows so the first
+        // and last rows are empty (the indptr close-out edge cases).
+        let (row_lo, row_hi) =
+            if rows >= 3 && g.bool() { (1, rows - 2) } else { (0, rows - 1) };
+        let n_trip = g.usize_range(0, 40);
+        let mut dense = vec![vec![0.0f64; cols]; rows];
+        let mut triplets: Vec<(usize, usize, f64)> = Vec::with_capacity(n_trip + 1);
+        for _ in 0..n_trip {
+            let r = g.usize_range(row_lo, row_hi);
+            let c = g.usize_range(0, cols - 1);
+            let v = g.f64_range(-3.0, 3.0);
+            dense[r][c] += v;
+            triplets.push((r, c, v));
+        }
+        // Force at least one duplicate coordinate.
+        if n_trip > 0 {
+            let (r, c, _) = triplets[g.usize_range(0, n_trip - 1)];
+            let v = g.f64_range(-3.0, 3.0);
+            dense[r][c] += v;
+            triplets.push((r, c, v));
+        }
+        // Randomize the triplet order (Fisher–Yates on the case RNG).
+        for i in (1..triplets.len()).rev() {
+            let j = g.usize_range(0, i);
+            triplets.swap(i, j);
+        }
+
+        let m = CsrMatrix::from_triplets(rows, cols, &triplets);
+        // Coalesced: never more stored entries than distinct coordinates.
+        let distinct = dense.iter().flatten().filter(|v| **v != 0.0).count();
+        assert!(m.nnz() <= triplets.len());
+        assert!(m.nnz() >= distinct, "nnz {} < {} distinct nonzeros", m.nnz(), distinct);
+        let d = m.to_dense();
+        for r in 0..rows {
+            for c in 0..cols {
+                // Summation order differs between the accumulator and the
+                // sorted coalescing pass — compare to fp tolerance.
+                assert!(
+                    (d.get(r, c) - dense[r][c]).abs() < 1e-12,
+                    "({r},{c}): csr {} vs naive {}",
+                    d.get(r, c),
+                    dense[r][c]
+                );
+            }
+        }
+        // And the mat-vec built on the same structure agrees.
+        let x = g.normal_vec(cols);
+        let mut y = vec![0.0; rows];
+        m.matvec_into(&x, &mut y);
+        let yd: Vec<f64> = dense
+            .iter()
+            .map(|row| row.iter().zip(&x).map(|(a, b)| a * b).sum::<f64>())
+            .collect();
+        assert!(vecops::dist2(&y, &yd) < 1e-9);
+    });
+}
+
+#[test]
+fn prop_block_pattern_validation_maps_to_typed_errors() {
+    Runner::new(0xB10C, CASES).run("block pattern validation", |g| {
+        // Draw n_blocks >= n_workers so every worker is covered by the
+        // round-robin assignment for ANY copies value (coverage needs
+        // n_blocks + copies - 1 >= n_workers; an uncovered worker is the
+        // typed WorkerOwnsNothing error, exercised separately below).
+        let n_workers = g.usize_range(1, 5);
+        let n_blocks = g.usize_range(n_workers.max(2), n_workers.max(2) + 3);
+        let n = n_blocks * g.usize_range(1, 4) + g.usize_range(0, 3);
+        let copies = g.usize_range(1, n_workers);
+        let good = BlockPattern::round_robin(n, n_blocks, n_workers, copies).unwrap();
+
+        // Structural invariants of a valid pattern.
+        let ratio = good.comm_volume_ratio();
+        assert!(ratio > 0.0 && ratio <= 1.0 + 1e-12);
+        let count_total: usize = (0..n).map(|j| good.count(j)).sum();
+        let owned_total: usize = (0..n_workers).map(|i| good.owned_len(i)).sum();
+        assert_eq!(count_total, owned_total, "counts must mirror ownership");
+        let x = g.normal_vec(n);
+        for i in 0..n_workers {
+            let gathered = good.gather_vec(i, &x);
+            let mut via_ranges = vec![0.0; good.owned_len(i)];
+            good.for_each_range(i, |lo, gstart, len| {
+                for k in 0..len {
+                    via_ranges[lo + k] = x[gstart + k];
+                }
+            });
+            assert_eq!(gathered, via_ranges, "gather vs range walk (worker {i})");
+        }
+
+        // Corruptions map to the right typed error, through the
+        // EngineError::Block conversion the session builder surfaces.
+        let blocks = BlockPattern::even_blocks(n, n_blocks);
+        let all: Vec<usize> = (0..n_blocks).collect();
+        let owned = vec![all; n_workers];
+
+        let gapped: Vec<(usize, usize)> = blocks[1..].to_vec();
+        let err = EngineError::from(BlockPattern::new(n, &gapped, owned.clone()).unwrap_err());
+        assert!(
+            matches!(err, EngineError::Block(BlockError::Gap { at: 0 })),
+            "dropping block 0 must be a gap at 0, got {err:?}"
+        );
+
+        let mut overlapped = blocks.clone();
+        overlapped[0].1 += 1;
+        let err =
+            EngineError::from(BlockPattern::new(n, &overlapped, owned.clone()).unwrap_err());
+        assert!(
+            matches!(err, EngineError::Block(BlockError::Overlap { block: 1 })),
+            "stretching block 0 must overlap block 1, got {err:?}"
+        );
+
+        let mut oor = blocks.clone();
+        oor[n_blocks - 1].1 += 1;
+        let err = EngineError::from(BlockPattern::new(n, &oor, owned.clone()).unwrap_err());
+        assert!(
+            matches!(err, EngineError::Block(BlockError::OutOfRange { .. })),
+            "stretching the last block must run out of range, got {err:?}"
+        );
+
+        let mut bad_owned = owned.clone();
+        bad_owned[0] = vec![n_blocks];
+        let err = EngineError::from(BlockPattern::new(n, &blocks, bad_owned).unwrap_err());
+        assert!(
+            matches!(
+                err,
+                EngineError::Block(BlockError::OwnedOutOfRange { worker: 0, .. })
+            ),
+            "got {err:?}"
+        );
+
+        let err =
+            EngineError::from(BlockPattern::new(n, &blocks, vec![vec![0]; n_workers]).unwrap_err());
+        assert!(
+            matches!(err, EngineError::Block(BlockError::NoOwner { block: 1 })),
+            "got {err:?}"
+        );
+
+        // Round-robin with too few owner slots to cover every worker: the
+        // typed coverage error (workers 2 and 3 own nothing here).
+        let err = EngineError::from(BlockPattern::round_robin(8, 2, 4, 1).unwrap_err());
+        assert!(
+            matches!(err, EngineError::Block(BlockError::WorkerOwnsNothing { worker: 2 })),
+            "got {err:?}"
+        );
     });
 }
 

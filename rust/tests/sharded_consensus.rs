@@ -1,0 +1,599 @@
+//! Block-sharded general-form consensus: the acceptance suite.
+//!
+//! Pins the four headline guarantees of the sharding tentpole:
+//!
+//! 1. **Dense-pattern bit-identity** — a session run under
+//!    [`BlockPattern::dense`] (or any effectively-dense pattern) produces
+//!    bit-identical iterates, records and traces to the unsharded engine,
+//!    even though it exercises the per-coordinate owner-count master
+//!    update, per-block counters and sharded diagnostics.
+//! 2. **Sharded correctness** — an overlapping-feature-block LASSO
+//!    converges to the same KKT quality (and the same optimum) as its
+//!    dense embedding, across all three worker sources, which also agree
+//!    with each other bit-for-bit on the same realized trace.
+//! 3. **Comm-volume reduction** — virtual-time message legs scale with
+//!    the owned-slice length, so the sharded run's simulated time beats
+//!    the dense embedding's under identical delay models.
+//! 4. **Checkpoint v2** — sharded sessions serialize their pattern and
+//!    per-block counters and resume bit-identically; v1 (pre-sharding)
+//!    checkpoints still load into dense sessions.
+
+use ad_admm::admm::arrivals::ArrivalModel;
+use ad_admm::admm::kkt::kkt_residual;
+use ad_admm::admm::session::{BufferingObserver, Checkpoint, EngineError, Session, StepStatus};
+use ad_admm::admm::stopping::StoppingRule;
+use ad_admm::admm::{AdmmConfig, IterRecord};
+use ad_admm::cluster::{ClusterConfig, DelayModel, ExecutionMode, StarCluster};
+use ad_admm::data::LassoInstance;
+use ad_admm::linalg::vecops;
+use ad_admm::prelude::PartialBarrier;
+use ad_admm::problems::{BlockError, BlockPattern, ConsensusProblem};
+use ad_admm::rng::Pcg64;
+
+fn assert_history_bit_equal(a: &[IterRecord], b: &[IterRecord]) {
+    assert_eq!(a.len(), b.len(), "history lengths differ");
+    for (ra, rb) in a.iter().zip(b) {
+        assert_eq!(ra.k, rb.k);
+        assert_eq!(ra.arrivals, rb.arrivals, "arrivals differ at k={}", ra.k);
+        assert_eq!(ra.objective.to_bits(), rb.objective.to_bits(), "objective at k={}", ra.k);
+        assert_eq!(
+            ra.aug_lagrangian.to_bits(),
+            rb.aug_lagrangian.to_bits(),
+            "aug_lagrangian at k={}",
+            ra.k
+        );
+        assert_eq!(ra.consensus.to_bits(), rb.consensus.to_bits(), "consensus at k={}", ra.k);
+        assert_eq!(ra.x0_change.to_bits(), rb.x0_change.to_bits(), "x0_change at k={}", ra.k);
+    }
+}
+
+fn lasso_instance(seed: u64, n_workers: usize, m: usize, n: usize) -> LassoInstance {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    LassoInstance::synthetic(&mut rng, n_workers, m, n, 0.2, 0.1)
+}
+
+/// Run a trace-driven session to completion, returning (records, x0, trace).
+fn run_session(
+    problem: &ConsensusProblem,
+    cfg: &AdmmConfig,
+    arrivals: &ArrivalModel,
+    blocks: Option<BlockPattern>,
+) -> (Vec<IterRecord>, Vec<f64>, ad_admm::admm::arrivals::ArrivalTrace) {
+    let mut history = BufferingObserver::new();
+    let mut builder = Session::builder()
+        .problem(problem)
+        .config(cfg.clone())
+        .policy(PartialBarrier { tau: cfg.tau })
+        .arrivals(arrivals)
+        .observer(&mut history);
+    if let Some(p) = blocks {
+        builder = builder.blocks(p);
+    }
+    let mut session = builder.build().expect("valid config");
+    session.run_to_completion().expect("run");
+    let (outcome, _) = session.finish();
+    (history.into_records(), outcome.state.x0, outcome.trace)
+}
+
+// ---------------------------------------------------------------------------
+// 1. Dense-pattern bit-identity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn dense_pattern_session_bit_identical_to_unsharded() {
+    let inst = lasso_instance(901, 4, 20, 12);
+    let problem = inst.problem();
+    let cfg =
+        AdmmConfig { rho: 40.0, tau: 3, min_arrivals: 2, max_iters: 80, ..Default::default() };
+    let arr = ArrivalModel::probabilistic(vec![0.3, 0.9, 0.5, 0.7], 31);
+
+    let (plain_hist, plain_x0, plain_trace) = run_session(&problem, &cfg, &arr, None);
+    let (dense_hist, dense_x0, dense_trace) =
+        run_session(&problem, &cfg, &arr, Some(BlockPattern::dense(12, 4)));
+
+    assert_eq!(plain_trace, dense_trace, "realized traces differ");
+    assert_eq!(plain_x0, dense_x0, "x0 differs under the dense pattern");
+    assert_history_bit_equal(&plain_hist, &dense_hist);
+}
+
+#[test]
+fn multi_block_all_owned_pattern_still_bit_identical() {
+    // Every worker owns all 4 blocks: the sharded path runs with a
+    // non-trivial block structure (per-coordinate denominators, per-block
+    // counters, range-walking gathers) yet must reproduce the dense
+    // engine bit-for-bit — including the residual-based stopping rule
+    // through `residuals_blocks`.
+    let inst = lasso_instance(902, 3, 25, 10);
+    let problem = inst.problem();
+    let cfg = AdmmConfig {
+        rho: 50.0,
+        tau: 2,
+        min_arrivals: 1,
+        max_iters: 400,
+        stopping: Some(StoppingRule::default()),
+        ..Default::default()
+    };
+    let arr = ArrivalModel::probabilistic(vec![0.4, 0.8, 0.6], 7);
+    let pattern = BlockPattern::round_robin(10, 4, 3, 3).unwrap();
+    assert!(pattern.is_effectively_dense());
+
+    let (plain_hist, plain_x0, _) = run_session(&problem, &cfg, &arr, None);
+    let (sharded_hist, sharded_x0, _) = run_session(&problem, &cfg, &arr, Some(pattern));
+
+    assert_eq!(plain_x0, sharded_x0);
+    assert_history_bit_equal(&plain_hist, &sharded_hist);
+}
+
+// ---------------------------------------------------------------------------
+// 2. Sharded correctness + cross-source agreement
+// ---------------------------------------------------------------------------
+
+#[test]
+fn sharded_lasso_converges_to_same_kkt_as_dense_embedding() {
+    let n = 16;
+    let n_workers = 4;
+    let inst = lasso_instance(903, n_workers, 24, n);
+    // Overlapping feature blocks: 8 blocks of 2, each owned by 2 workers.
+    let pattern = BlockPattern::round_robin(n, 8, n_workers, 2).unwrap();
+    assert!(pattern.comm_volume_ratio() < 1.0);
+    let sharded = inst.sharded_problem(&pattern).unwrap();
+    let dense = inst.masked_dense_problem(&pattern).unwrap();
+
+    let cfg = AdmmConfig { rho: 50.0, tau: 1, max_iters: 4000, ..Default::default() };
+    let run = |problem: &ConsensusProblem| {
+        let mut session = Session::builder()
+            .problem(problem)
+            .config(cfg.clone())
+            .policy(PartialBarrier { tau: 1 })
+            .arrivals(&ArrivalModel::Full)
+            .build()
+            .unwrap();
+        session.run_to_completion().unwrap();
+        let (out, _) = session.finish();
+        out.state
+    };
+    let s_state = run(&sharded);
+    let d_state = run(&dense);
+    let r_sharded = kkt_residual(&sharded, &s_state);
+    let r_dense = kkt_residual(&dense, &d_state);
+
+    assert!(r_sharded.max() < 1e-4, "sharded KKT {r_sharded:?}");
+    assert!(r_dense.max() < 1e-4, "dense-embedded KKT {r_dense:?}");
+    // Identical objective ⇒ same optimum: the two protocols must land on
+    // the same consensus point.
+    let d = vecops::dist2(&s_state.x0, &d_state.x0);
+    assert!(d < 1e-3, "sharded and dense-embedded optima differ: {d}");
+}
+
+#[test]
+fn sharded_async_run_satisfies_per_block_bounded_delay_and_converges() {
+    let n = 12;
+    let n_workers = 4;
+    let inst = lasso_instance(904, n_workers, 20, n);
+    let pattern = BlockPattern::round_robin(n, 4, n_workers, 2).unwrap();
+    let sharded = inst.sharded_problem(&pattern).unwrap();
+    let tau = 4;
+    let cfg = AdmmConfig { rho: 50.0, tau, max_iters: 3000, ..Default::default() };
+    let arr = ArrivalModel::probabilistic(vec![0.3, 0.9, 0.4, 0.8], 11);
+    let (_, _, trace) = run_session(&sharded, &cfg, &arr, None);
+    assert!(trace.satisfies_bounded_delay(n_workers, tau));
+    assert!(trace.satisfies_bounded_delay_blocks(&pattern, tau));
+
+    let mut session = Session::builder()
+        .problem(&sharded)
+        .config(cfg.clone())
+        .policy(PartialBarrier { tau })
+        .arrivals(&arr)
+        .build()
+        .unwrap();
+    session.run_to_completion().unwrap();
+    let (out, _) = session.finish();
+    let r = kkt_residual(&sharded, &out.state);
+    assert!(r.max() < 1e-4, "async sharded KKT {r:?}");
+}
+
+#[test]
+fn per_block_counters_track_owner_arrivals_within_tau() {
+    let n = 12;
+    let n_workers = 4;
+    let inst = lasso_instance(905, n_workers, 16, n);
+    // Disjoint ownership: block ages mirror their single owner's delays.
+    let pattern = BlockPattern::round_robin(n, 4, n_workers, 1).unwrap();
+    let sharded = inst.sharded_problem(&pattern).unwrap();
+    let tau = 3;
+    let cfg = AdmmConfig { rho: 40.0, tau, max_iters: 120, ..Default::default() };
+    let arr = ArrivalModel::probabilistic(vec![0.2, 0.8, 0.5, 0.3], 13);
+    let mut session = Session::builder()
+        .problem(&sharded)
+        .config(cfg)
+        .policy(PartialBarrier { tau })
+        .arrivals(&arr)
+        .build()
+        .unwrap();
+    assert_eq!(session.block_ages().len(), 4);
+    loop {
+        match session.step().unwrap() {
+            StepStatus::Iterated(_) => {
+                // The per-worker τ gate implies the per-block bound: no
+                // block's staleness may reach τ.
+                for (b, &age) in session.block_ages().iter().enumerate() {
+                    assert!(age <= tau - 1, "block {b} aged to {age} (tau={tau})");
+                }
+            }
+            StepStatus::Done(_) => break,
+        }
+    }
+    // Each worker's arrival bumps exactly its owned blocks' counters.
+    let trace = session.trace().clone();
+    let mut expected = vec![0u64; 4];
+    for set in &trace.sets {
+        for &i in set {
+            for &b in pattern.owned(i) {
+                expected[b] += 1;
+            }
+        }
+    }
+    assert_eq!(session.block_updates(), &expected[..]);
+    assert!(session.block_updates().iter().all(|&u| u > 0));
+}
+
+#[test]
+fn sharded_virtual_source_bit_matches_trace_replay() {
+    let n = 12;
+    let n_workers = 4;
+    let inst = lasso_instance(906, n_workers, 18, n);
+    let pattern = BlockPattern::round_robin(n, 6, n_workers, 2).unwrap();
+    let sharded = inst.sharded_problem(&pattern).unwrap();
+    let cfg = ClusterConfig {
+        admm: AdmmConfig {
+            rho: 40.0,
+            tau: 4,
+            min_arrivals: 1,
+            max_iters: 120,
+            ..Default::default()
+        },
+        delays: DelayModel::linear_spread(n_workers, 0.5, 6.0, 0.4, 17),
+        comm_delays: Some(DelayModel::Fixed { per_worker_ms: vec![0.4; 4] }),
+        mode: ExecutionMode::VirtualTime,
+        ..Default::default()
+    };
+    let report = StarCluster::new(sharded.clone()).run(&cfg);
+    assert!(report.trace.satisfies_bounded_delay(n_workers, 4));
+
+    let (replay_hist, replay_x0, _) = run_session(
+        &sharded,
+        &cfg.admm,
+        &ArrivalModel::Trace(report.trace.clone()),
+        None,
+    );
+    assert_eq!(report.state.x0, replay_x0, "virtual vs trace replay x0");
+    assert_history_bit_equal(&report.history, &replay_hist);
+}
+
+#[test]
+fn sharded_threaded_lockstep_matches_virtual_run_bitwise() {
+    let n = 10;
+    let n_workers = 3;
+    let inst = lasso_instance(907, n_workers, 15, n);
+    let pattern = BlockPattern::round_robin(n, 5, n_workers, 2).unwrap();
+    let sharded = inst.sharded_problem(&pattern).unwrap();
+    let admm =
+        AdmmConfig { rho: 40.0, tau: 3, min_arrivals: 1, max_iters: 50, ..Default::default() };
+    let vcfg = ClusterConfig {
+        admm: admm.clone(),
+        delays: DelayModel::Fixed { per_worker_ms: vec![0.5, 1.0, 2.0] },
+        mode: ExecutionMode::VirtualTime,
+        ..Default::default()
+    };
+    let virt = StarCluster::new(sharded.clone()).run(&vcfg);
+
+    let tcfg = ClusterConfig {
+        admm,
+        delays: DelayModel::None,
+        lockstep_trace: Some(virt.trace.clone()),
+        ..Default::default()
+    };
+    let thr = StarCluster::new(sharded).run(&tcfg);
+    assert_eq!(thr.trace, virt.trace, "lockstep did not realize the prescribed sets");
+    assert_eq!(thr.state.x0, virt.state.x0);
+    assert_eq!(thr.state.xs, virt.state.xs);
+    assert_eq!(thr.state.lams, virt.state.lams);
+    assert_history_bit_equal(&thr.history, &virt.history);
+}
+
+// ---------------------------------------------------------------------------
+// 3. Comm-volume reduction in virtual time
+// ---------------------------------------------------------------------------
+
+#[test]
+fn sharded_messages_shrink_simulated_comm_time() {
+    let n = 24;
+    let n_workers = 4;
+    let inst = lasso_instance(908, n_workers, 20, n);
+    // Disjoint quarter-blocks: each message carries 1/4 of the dense one.
+    let pattern = BlockPattern::round_robin(n, 4, n_workers, 1).unwrap();
+    assert!((pattern.comm_volume_ratio() - 0.25).abs() < 1e-12);
+    let sharded = inst.sharded_problem(&pattern).unwrap();
+    let dense = inst.masked_dense_problem(&pattern).unwrap();
+
+    // Synchronous rounds (τ=1, A=N) with fixed compute + comm delays:
+    // each round lasts max_i(compute_i + comm_i·scale_i), so the sharded
+    // run's simulated clock must be strictly ahead.
+    let mk = |problem: ConsensusProblem| {
+        let cfg = ClusterConfig {
+            admm: AdmmConfig {
+                rho: 40.0,
+                tau: 1,
+                min_arrivals: n_workers,
+                max_iters: 30,
+                ..Default::default()
+            },
+            delays: DelayModel::Fixed { per_worker_ms: vec![1.0; 4] },
+            comm_delays: Some(DelayModel::Fixed { per_worker_ms: vec![2.0; 4] }),
+            mode: ExecutionMode::VirtualTime,
+            ..Default::default()
+        };
+        StarCluster::new(problem).run(&cfg)
+    };
+    let shard_report = mk(sharded);
+    let dense_report = mk(dense);
+    assert_eq!(shard_report.history.len(), dense_report.history.len());
+    assert!(
+        shard_report.wall_clock_s < dense_report.wall_clock_s,
+        "sharded sim time {} not below dense {}",
+        shard_report.wall_clock_s,
+        dense_report.wall_clock_s
+    );
+    // Quantitatively: rounds are 1 + 2 ms dense vs 1 + 0.5 ms sharded.
+    let expected_dense = 30.0 * 3.0e-3;
+    let expected_sharded = 30.0 * 1.5e-3;
+    assert!((dense_report.wall_clock_s - expected_dense).abs() < 1e-9);
+    assert!((shard_report.wall_clock_s - expected_sharded).abs() < 1e-9);
+}
+
+// ---------------------------------------------------------------------------
+// 4. Checkpoint v2 + v1 compatibility
+// ---------------------------------------------------------------------------
+
+#[test]
+fn sharded_checkpoint_v2_roundtrip_is_bit_identical() {
+    let n = 12;
+    let n_workers = 3;
+    let inst = lasso_instance(909, n_workers, 16, n);
+    let pattern = BlockPattern::round_robin(n, 6, n_workers, 2).unwrap();
+    let sharded = inst.sharded_problem(&pattern).unwrap();
+    let cfg = AdmmConfig { rho: 40.0, tau: 3, max_iters: 60, ..Default::default() };
+    let arr = ArrivalModel::probabilistic(vec![0.5, 0.8, 0.4], 23);
+    let build = || {
+        Session::builder()
+            .problem(&sharded)
+            .config(cfg.clone())
+            .policy(PartialBarrier { tau: 3 })
+            .arrivals(&arr)
+    };
+
+    let mut full = build().build().unwrap();
+    full.run_to_completion().unwrap();
+    let (full_out, _) = full.finish();
+
+    let mut first = build().build().unwrap();
+    first.run_for(20).unwrap();
+    let cp = first.checkpoint().unwrap();
+    let doc = cp.as_json();
+    assert_eq!(
+        doc.get("version").and_then(|v| v.as_f64()),
+        Some(Checkpoint::VERSION as f64)
+    );
+    let blocks = doc.get("blocks").expect("v2 carries a blocks section");
+    assert!(blocks.get("pattern").is_some(), "blocks section serializes the pattern");
+    assert_eq!(blocks.get("age").map(|a| a.items().len()), Some(6));
+
+    // JSON round trip, then resume and continue to completion.
+    let cp = Checkpoint::from_json_str(&cp.to_json_string()).unwrap();
+    let mut resumed = build().resume(&cp).unwrap();
+    assert_eq!(resumed.iteration(), 20);
+    assert_eq!(resumed.block_ages().len(), 6);
+    resumed.run_to_completion().unwrap();
+    let (res_out, _) = resumed.finish();
+    assert_eq!(res_out.state.x0, full_out.state.x0, "resume diverged");
+    assert_eq!(res_out.state.xs, full_out.state.xs);
+    assert_eq!(res_out.state.lams, full_out.state.lams);
+    assert_eq!(res_out.trace, full_out.trace);
+}
+
+#[test]
+fn sharded_virtual_checkpoint_roundtrip_is_bit_identical() {
+    let n = 12;
+    let n_workers = 3;
+    let inst = lasso_instance(910, n_workers, 14, n);
+    let pattern = BlockPattern::round_robin(n, 4, n_workers, 2).unwrap();
+    let sharded = inst.sharded_problem(&pattern).unwrap();
+    let cfg = ClusterConfig {
+        admm: AdmmConfig {
+            rho: 30.0,
+            tau: 3,
+            min_arrivals: 1,
+            max_iters: 80,
+            ..Default::default()
+        },
+        delays: DelayModel::linear_spread(n_workers, 0.5, 4.0, 0.3, 29),
+        comm_delays: Some(DelayModel::Fixed { per_worker_ms: vec![0.6; 3] }),
+        mode: ExecutionMode::VirtualTime,
+        ..Default::default()
+    };
+    let cluster = StarCluster::new(sharded);
+
+    let mut full = cluster.virtual_session(&cfg).unwrap();
+    full.run_to_completion().unwrap();
+    let (full_out, full_src) = full.finish();
+    let (_, full_clock, _) = full_src.finish();
+
+    let mut first = cluster.virtual_session(&cfg).unwrap();
+    first.run_for(30).unwrap();
+    let cp = Checkpoint::from_json_str(&first.checkpoint().unwrap().to_json_string()).unwrap();
+    let mut resumed = cluster.resume_virtual_session(&cfg, &cp).unwrap();
+    resumed.run_to_completion().unwrap();
+    let (res_out, res_src) = resumed.finish();
+    let (_, res_clock, _) = res_src.finish();
+
+    assert_eq!(res_out.state.x0, full_out.state.x0);
+    assert_eq!(res_out.trace, full_out.trace);
+    assert_eq!(res_clock.to_bits(), full_clock.to_bits(), "virtual clocks differ");
+}
+
+#[test]
+fn v1_checkpoint_fixture_loads_into_the_v2_loader() {
+    // The committed fixture is a version-1 (pre-sharding) checkpoint of a
+    // 2-worker, dim-4 trace-driven session at k = 0 (all-zero paper
+    // init). The v2 loader must accept it and resume bit-identically to a
+    // fresh run of the same configuration.
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/checkpoint_v1.json");
+    let cp = Checkpoint::read_from_file(path).expect("fixture loads");
+    assert_eq!(cp.iteration(), 0);
+    assert_eq!(cp.n_workers(), 2);
+    assert_eq!(cp.source_kind(), "trace");
+
+    let inst = lasso_instance(911, 2, 10, 4);
+    let problem = inst.problem();
+    let cfg = AdmmConfig { rho: 30.0, max_iters: 25, ..Default::default() };
+    let build = || {
+        Session::builder()
+            .problem(&problem)
+            .config(cfg.clone())
+            .policy(PartialBarrier { tau: 1 })
+            .arrivals(&ArrivalModel::Full)
+    };
+    let mut fresh = build().build().unwrap();
+    fresh.run_to_completion().unwrap();
+    let (fresh_out, _) = fresh.finish();
+
+    let mut resumed = build().resume(&cp).expect("v1 resumes into a dense session");
+    resumed.run_to_completion().unwrap();
+    let (res_out, _) = resumed.finish();
+    assert_eq!(res_out.state.x0, fresh_out.state.x0, "v1 resume diverged from fresh run");
+    assert_eq!(res_out.trace, fresh_out.trace);
+
+    // A v1 (dense) checkpoint must NOT resume into a sharded session.
+    let err = build()
+        .blocks(BlockPattern::dense(4, 2))
+        .resume(&cp)
+        .err()
+        .expect("dense checkpoint into sharded session must fail");
+    assert!(matches!(err, EngineError::Checkpoint(_)), "got {err:?}");
+}
+
+// ---------------------------------------------------------------------------
+// Builder validation
+// ---------------------------------------------------------------------------
+
+#[test]
+fn builder_rejects_inconsistent_patterns_with_typed_errors() {
+    let inst = lasso_instance(912, 4, 12, 12);
+    let problem = inst.problem(); // dense, every local dim = 12
+
+    // Genuinely sharded pattern on a dense problem: local dims disagree.
+    let err = Session::builder()
+        .problem(&problem)
+        .blocks(BlockPattern::round_robin(12, 4, 4, 1).unwrap())
+        .build()
+        .err()
+        .expect("sharded pattern on a dense problem must fail");
+    assert!(
+        matches!(err, EngineError::Block(BlockError::LocalDimMismatch { worker: 0, .. })),
+        "got {err:?}"
+    );
+
+    // Worker-count mismatch.
+    let err = Session::builder()
+        .problem(&problem)
+        .blocks(BlockPattern::dense(12, 5))
+        .build()
+        .err()
+        .expect("worker-count mismatch must fail");
+    assert!(
+        matches!(err, EngineError::Block(BlockError::WorkerCountMismatch { .. })),
+        "got {err:?}"
+    );
+
+    // Global-dimension mismatch.
+    let err = Session::builder()
+        .problem(&problem)
+        .blocks(BlockPattern::dense(10, 4))
+        .build()
+        .err()
+        .expect("dimension mismatch must fail");
+    assert!(matches!(err, EngineError::Block(BlockError::DimMismatch { .. })), "got {err:?}");
+
+    // A sharded problem with a *different* (but dimension-compatible)
+    // builder pattern: rotated ownership over the same blocks.
+    let blocks = BlockPattern::even_blocks(12, 4);
+    let owned: Vec<Vec<usize>> = (0..4)
+        .map(|i| {
+            let mut ids = vec![i % 4, (i + 1) % 4];
+            ids.sort_unstable();
+            ids
+        })
+        .collect();
+    let problem_pattern = BlockPattern::new(12, &blocks, owned).unwrap();
+    let sharded = inst.sharded_problem(&problem_pattern).unwrap();
+    let rotated_owned: Vec<Vec<usize>> = (0..4)
+        .map(|i| {
+            let mut ids = vec![(i + 2) % 4, (i + 3) % 4];
+            ids.sort_unstable();
+            ids
+        })
+        .collect();
+    let rotated = BlockPattern::new(12, &blocks, rotated_owned).unwrap();
+    let err = Session::builder()
+        .problem(&sharded)
+        .blocks(rotated)
+        .build()
+        .err()
+        .expect("mismatched pattern must fail");
+    assert!(matches!(err, EngineError::Block(BlockError::PatternMismatch)), "got {err:?}");
+
+    // And the agreeing pattern passes.
+    assert!(Session::builder()
+        .problem(&sharded)
+        .blocks(problem_pattern)
+        .build()
+        .is_ok());
+}
+
+#[test]
+fn shard_unaware_sources_are_rejected_at_build_time() {
+    use ad_admm::admm::engine::TraceSource;
+    use ad_admm::admm::master_pov::NativeSolver;
+
+    let inst = lasso_instance(913, 3, 12, 9);
+    let pattern = BlockPattern::round_robin(9, 3, 3, 2).unwrap();
+    let sharded = inst.sharded_problem(&pattern).unwrap();
+
+    // An external-solver TraceSource exchanges full-dimension vectors and
+    // cannot drive owned slices: a typed error, not a mid-run panic.
+    let mut solver = NativeSolver::new(&sharded);
+    let source = TraceSource::with_solver(3, &ArrivalModel::Full, &mut solver);
+    let err = Session::builder()
+        .problem(&sharded)
+        .config(AdmmConfig { rho: 30.0, max_iters: 5, ..Default::default() })
+        .build_typed(source)
+        .err()
+        .expect("shard-unaware source on a sharded problem must fail");
+    assert!(
+        matches!(err, EngineError::ShardingUnsupported { source: "trace" }),
+        "got {err:?}"
+    );
+
+    // The same source drives an effectively-dense pattern fine (all
+    // messages are full-length there) — the bit-identity acceptance case.
+    let dense_problem = inst.problem();
+    let mut solver2 = NativeSolver::new(&dense_problem);
+    let source2 = TraceSource::with_solver(3, &ArrivalModel::Full, &mut solver2);
+    let mut session = Session::builder()
+        .problem(&dense_problem)
+        .config(AdmmConfig { rho: 30.0, max_iters: 5, ..Default::default() })
+        .blocks(BlockPattern::dense(9, 3))
+        .build_typed(source2)
+        .expect("effectively-dense patterns need no shard-aware source");
+    session.run_to_completion().unwrap();
+}

@@ -3,16 +3,13 @@
 //! random configurations, and the scale target that motivates the mode
 //! (1000 workers × 500 iterations well inside the CI budget).
 
-#![allow(deprecated)] // exercises the legacy free-function drivers on purpose
-
 use std::sync::Arc;
 use std::time::Instant;
 
-use ad_admm::admm::alt_scheme::run_alt_scheme;
 use ad_admm::admm::arrivals::ArrivalModel;
 use ad_admm::admm::kkt::kkt_residual;
-use ad_admm::admm::master_pov::run_master_pov;
 use ad_admm::admm::{AdmmConfig, IterRecord, StopReason};
+use ad_admm::testkit::drivers::{run_alt, run_partial_barrier};
 use ad_admm::cluster::{
     ClusterConfig, DelayModel, ExecutionMode, FaultModel, Protocol, StarCluster,
 };
@@ -84,7 +81,8 @@ fn virtual_cluster_bit_equal_to_serial_simulator() {
     assert_eq!(report.stop, StopReason::MaxIters);
     assert!(report.trace.satisfies_bounded_delay(n_workers, 4));
 
-    let replay = run_master_pov(&problem, &cfg.admm, &ArrivalModel::Trace(report.trace.clone()));
+    let replay =
+        run_partial_barrier(&problem, &cfg.admm, &ArrivalModel::Trace(report.trace.clone()));
     assert_eq!(report.state.x0, replay.state.x0, "x0 differs");
     assert_eq!(report.state.xs, replay.state.xs, "worker primals differ");
     assert_eq!(report.state.lams, replay.state.lams, "duals differ");
@@ -121,7 +119,8 @@ fn virtual_comm_and_faults_still_bit_replayable() {
     let total_retrans: usize = report.workers.iter().map(|w| w.retransmissions).sum();
     assert!(total_retrans > 0, "drop_prob=0.3 must produce retransmissions");
 
-    let replay = run_master_pov(&problem, &cfg.admm, &ArrivalModel::Trace(report.trace.clone()));
+    let replay =
+        run_partial_barrier(&problem, &cfg.admm, &ArrivalModel::Trace(report.trace.clone()));
     assert_eq!(report.state.x0, replay.state.x0);
     assert_history_bit_equal(&report.history, &replay.history);
 }
@@ -146,7 +145,7 @@ fn virtual_alt_scheme_bit_equal_to_serial_replay() {
         ..Default::default()
     };
     let report = StarCluster::new(problem.clone()).run(&cfg);
-    let replay = run_alt_scheme(&problem, &cfg.admm, &ArrivalModel::Trace(report.trace.clone()));
+    let replay = run_alt(&problem, &cfg.admm, &ArrivalModel::Trace(report.trace.clone()));
     assert_eq!(report.state.x0, replay.state.x0);
     assert_history_bit_equal(&report.history, &replay.history);
 }
