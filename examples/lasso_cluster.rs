@@ -85,34 +85,34 @@ fn main() {
     let delays = DelayModel::linear_spread(n_workers, 0.5, slow_ms, 0.3, seed);
 
     // --- synchronous baseline: τ = 1, A = N ---
-    let sync_cfg = ClusterConfig {
-        admm: AdmmConfig {
+    let sync_cfg = ClusterConfig::builder()
+        .admm(AdmmConfig {
             rho: 500.0,
             tau: 1,
             min_arrivals: n_workers,
             max_iters: iters,
             ..Default::default()
-        },
-        protocol: Protocol::AdAdmm,
-        delays: delays.clone(),
-        ..Default::default()
-    };
+        })
+        .protocol(Protocol::AdAdmm)
+        .delays(delays.clone())
+        .build()
+        .expect("valid cluster config");
     let cluster = StarCluster::new(problem.clone());
     let sync = cluster.run_with_solvers(&sync_cfg, make_solvers());
 
     // --- asynchronous: τ per flag, A = 1 ---
-    let async_cfg = ClusterConfig {
-        admm: AdmmConfig {
+    let async_cfg = ClusterConfig::builder()
+        .admm(AdmmConfig {
             rho: 500.0,
             tau,
             min_arrivals: 1,
             max_iters: iters,
             ..Default::default()
-        },
-        protocol: Protocol::AdAdmm,
-        delays,
-        ..Default::default()
-    };
+        })
+        .protocol(Protocol::AdAdmm)
+        .delays(delays)
+        .build()
+        .expect("valid cluster config");
     let asyn = cluster.run_with_solvers(&async_cfg, make_solvers());
 
     println!(
@@ -171,20 +171,20 @@ fn main() {
         n_workers,
         pattern.comm_volume_ratio()
     );
-    let sharded_cfg = ClusterConfig {
-        admm: AdmmConfig {
+    let sharded_cfg = ClusterConfig::builder()
+        .admm(AdmmConfig {
             rho: 500.0,
             tau,
             min_arrivals: 1,
             max_iters: iters,
             ..Default::default()
-        },
-        protocol: Protocol::AdAdmm,
-        delays: DelayModel::linear_spread(n_workers, 0.5, slow_ms, 0.3, seed),
-        comm_delays: Some(DelayModel::Fixed { per_worker_ms: vec![1.0; n_workers] }),
-        mode: ExecutionMode::VirtualTime,
-        ..Default::default()
-    };
+        })
+        .protocol(Protocol::AdAdmm)
+        .delays(DelayModel::linear_spread(n_workers, 0.5, slow_ms, 0.3, seed))
+        .comm_delays(DelayModel::Fixed { per_worker_ms: vec![1.0; n_workers] })
+        .mode(ExecutionMode::VirtualTime)
+        .build()
+        .expect("valid cluster config");
     let shard_report = StarCluster::new(sharded.clone()).run(&sharded_cfg);
     let shard_kkt = kkt_residual(&sharded, &shard_report.state);
     println!(

@@ -39,18 +39,18 @@ fn main() {
     json.config("n_workers", n_workers).config("iters", iters);
     let mut rows = Vec::new();
     for (label, tau, min_arrivals) in [("sync", 1usize, n_workers), ("async", 8, 2)] {
-        let cfg = ClusterConfig {
-            admm: AdmmConfig {
+        let cfg = ClusterConfig::builder()
+            .admm(AdmmConfig {
                 rho: 50.0,
                 tau,
                 min_arrivals,
                 max_iters: iters,
                 ..Default::default()
-            },
-            protocol: Protocol::AdAdmm,
-            delays: delays.clone(),
-            ..Default::default()
-        };
+            })
+            .protocol(Protocol::AdAdmm)
+            .delays(delays.clone())
+            .build()
+            .expect("valid cluster config");
         let r = StarCluster::new(problem.clone()).run(&cfg);
         println!("\n--- {label} (tau={tau}, A={min_arrivals}) ---");
         println!(

@@ -43,18 +43,18 @@ fn main() {
         let delays = DelayModel::linear_spread(n_workers, 0.5, 6.0, 0.4, 17);
 
         let run = |tau: usize, min_arrivals: usize| {
-            let cfg = ClusterConfig {
-                admm: AdmmConfig {
+            let cfg = ClusterConfig::builder()
+                .admm(AdmmConfig {
                     rho: 100.0,
                     tau,
                     min_arrivals,
                     max_iters: iters,
                     ..Default::default()
-                },
-                protocol: Protocol::AdAdmm,
-                delays: delays.clone(),
-                ..Default::default()
-            };
+                })
+                .protocol(Protocol::AdAdmm)
+                .delays(delays.clone())
+                .build()
+                .expect("valid cluster config");
             StarCluster::new(problem.clone()).run(&cfg)
         };
 

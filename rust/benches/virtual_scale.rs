@@ -3,7 +3,9 @@
 //! threaded cluster cannot reach — 1000+ workers, hundreds of master
 //! iterations, all in deterministic simulated time — plus the pooled
 //! multicore execution study (serial vs `pool_threads = 0` on a
-//! CPU-heavy worker fleet, asserted bit-identical).
+//! CPU-heavy worker fleet, asserted bit-identical), a 10⁵-worker
+//! (quick) / 10⁶-worker (full) fleet sweep over the O(active) sparse
+//! master, and a sparse-vs-eager master A/B asserted bit-identical.
 //!
 //! Reported per setting: simulated wall-clock, simulated master wait,
 //! simulated iterations/second, realized max |A_k|, final objective, and
@@ -16,9 +18,11 @@
 use std::sync::Arc;
 use std::time::Instant;
 
+use ad_admm::admm::session::Session;
+use ad_admm::admm::StopReason;
 use ad_admm::bench::json::{BenchReport, JsonValue};
 use ad_admm::bench::quick_mode;
-use ad_admm::cluster::{ClusterConfig, ExecutionMode};
+use ad_admm::cluster::{ClusterConfig, ClusterReport, ExecutionMode};
 use ad_admm::prelude::*;
 use ad_admm::problems::{LocalCost, QuadraticLocal};
 use ad_admm::prox::Regularizer;
@@ -134,19 +138,19 @@ fn main() {
 
     let mut total_real_s = 0.0;
     for (tau, min_arrivals) in settings {
-        let cfg = ClusterConfig {
-            admm: AdmmConfig {
+        let cfg = ClusterConfig::builder()
+            .admm(AdmmConfig {
                 rho: 20.0,
                 tau,
                 min_arrivals,
                 max_iters: iters,
                 objective_every: 0,
                 ..Default::default()
-            },
-            delays: delays.clone(),
-            mode: ExecutionMode::VirtualTime,
-            ..Default::default()
-        };
+            })
+            .delays(delays.clone())
+            .mode(ExecutionMode::VirtualTime)
+            .build()
+            .expect("valid cluster config");
         let t = Instant::now();
         let r = StarCluster::new(problem.clone()).run(&cfg);
         let real_s = t.elapsed().as_secs_f64();
@@ -203,19 +207,21 @@ fn main() {
          {piters} iterations, A={pa} ==="
     );
     let dense = dense_consensus(pn, pdim, 43);
-    let make_cfg = |pool_threads: usize| ClusterConfig {
-        admm: AdmmConfig {
-            rho: 20.0,
-            tau: pn,
-            min_arrivals: pa,
-            max_iters: piters,
-            objective_every: 0,
-            ..Default::default()
-        },
-        delays: DelayModel::linear_spread(pn, 0.5, 5.0, 0.3, 23),
-        mode: ExecutionMode::VirtualTime,
-        pool_threads,
-        ..Default::default()
+    let make_cfg = |pool_threads: usize| {
+        ClusterConfig::builder()
+            .admm(AdmmConfig {
+                rho: 20.0,
+                tau: pn,
+                min_arrivals: pa,
+                max_iters: piters,
+                objective_every: 0,
+                ..Default::default()
+            })
+            .delays(DelayModel::linear_spread(pn, 0.5, 5.0, 0.3, 23))
+            .mode(ExecutionMode::VirtualTime)
+            .pool_threads(pool_threads)
+            .build()
+            .expect("valid cluster config")
     };
 
     let t = Instant::now();
@@ -297,20 +303,21 @@ fn main() {
     ];
     let mut fault_total_real_s = 0.0;
     for (label, plan) in scenarios {
-        let cfg = ClusterConfig {
-            admm: AdmmConfig {
+        let mut builder = ClusterConfig::builder()
+            .admm(AdmmConfig {
                 rho: 20.0,
                 tau: ftau,
                 min_arrivals: 8,
                 max_iters: iters,
                 objective_every: 0,
                 ..Default::default()
-            },
-            delays: delays.clone(),
-            mode: ExecutionMode::VirtualTime,
-            fault_plan: (!plan.is_empty()).then_some(plan),
-            ..Default::default()
-        };
+            })
+            .delays(delays.clone())
+            .mode(ExecutionMode::VirtualTime);
+        if !plan.is_empty() {
+            builder = builder.fault_plan(plan);
+        }
+        let cfg = builder.build().expect("valid cluster config");
         let t = Instant::now();
         let r = StarCluster::new(problem.clone()).run(&cfg);
         let real_s = t.elapsed().as_secs_f64();
@@ -371,20 +378,20 @@ fn main() {
                 }
             })
             .collect();
-        ClusterConfig {
-            admm: AdmmConfig {
+        ClusterConfig::builder()
+            .admm(AdmmConfig {
                 rho: 20.0,
                 tau: if quick { 50 } else { 200 },
                 min_arrivals: 8,
                 max_iters: siters,
                 objective_every: 0,
                 ..Default::default()
-            },
-            delays: DelayModel::linear_spread(sn, 0.5, 10.0, 0.4, 19),
-            comm_delays: Some(DelayModel::Fixed { per_worker_ms }),
-            mode: ExecutionMode::VirtualTime,
-            ..Default::default()
-        }
+            })
+            .delays(DelayModel::linear_spread(sn, 0.5, 10.0, 0.4, 19))
+            .comm_delays(DelayModel::Fixed { per_worker_ms })
+            .mode(ExecutionMode::VirtualTime)
+            .build()
+            .expect("valid cluster config")
     };
     let t = Instant::now();
     let sharded = StarCluster::new(sharded_problem.clone()).run(&mk_sharded_cfg(false));
@@ -433,6 +440,131 @@ fn main() {
         .metric("sharded_comm_volume_ratio", ratio)
         .metric("sharded_sim_speedup", sim_speedup)
         .metric("sharded_total_real_s", sharded_real_s + dense_real_s);
+
+    // ---- fleet sweep: 10⁵ (quick) / 10⁶ (full) virtual workers ----
+    // One coordinate per worker, single-owner blocks: the master's
+    // per-iteration cost is Σ_{i∈A_k} |S_i| = |A_k| under the lazy sparse
+    // master, independent of fleet size, and the 16-byte packed event heap
+    // plus SoA worker stats keep the scheduler cache-resident. τ is set
+    // above max_iters so the delay gate never force-marches the whole
+    // fleet through one iteration — exactly the regime where O(active)
+    // beats the O(n) eager sweep by orders of magnitude.
+    let (wn, wscale) = if quick { (100_000, "1e5") } else { (1_000_000, "1e6") };
+    let (witers, wa) = if quick { (50, 64) } else { (100, 256) };
+    println!(
+        "\n=== fleet sweep: N={wn} ({wscale}) virtual workers, {witers} iterations, \
+         A={wa}, O(active) sparse master ==="
+    );
+    let (wproblem, _) = sharded_consensus(wn, 1, 1, 0xBEE5);
+    let wcfg = ClusterConfig::builder()
+        .admm(AdmmConfig {
+            rho: 20.0,
+            tau: witers + 1,
+            min_arrivals: wa,
+            max_iters: witers,
+            objective_every: 0,
+            metrics_every: 0,
+            ..Default::default()
+        })
+        .delays(DelayModel::linear_spread(wn, 0.5, 20.0, 0.4, 29))
+        .mode(ExecutionMode::VirtualTime)
+        .build()
+        .expect("valid cluster config");
+    let wcluster = StarCluster::new(wproblem.clone());
+    let t = Instant::now();
+    let mut sweep_session = wcluster.virtual_session(&wcfg).expect("valid virtual session");
+    assert!(
+        sweep_session.sparse_active(),
+        "the fleet sweep must run the O(active) sparse master"
+    );
+    let sweep_stop = sweep_session.run_to_completion().expect("fleet sweep completes");
+    let (sweep_outcome, sweep_source) = sweep_session.finish();
+    let sweep_real_s = t.elapsed().as_secs_f64();
+    assert_eq!(sweep_stop, StopReason::MaxIters);
+    assert_eq!(sweep_outcome.trace.sets.len(), witers);
+    assert!(
+        sweep_outcome.trace.sets.iter().all(|s| s.len() >= wa),
+        "the |A_k| >= A batching gate must hold on every iteration"
+    );
+    let wreport = ClusterReport::from_virtual_parts(sweep_outcome, Vec::new(), sweep_source);
+    let arrivals: usize = wreport.trace.sets.iter().map(Vec::len).sum();
+    let wobjective = wproblem.objective(&wreport.state.x0);
+    println!(
+        "{witers} iterations / {arrivals} arrivals: sim {:.3}s, objective {:.5e}, \
+         real {sweep_real_s:.3}s",
+        wreport.wall_clock_s, wobjective,
+    );
+    println!("sweep_{wscale}_total_real_s = {sweep_real_s:.3}");
+    json.config("fleet_n_workers", wn)
+        .config("fleet_iters", witers)
+        .metric(&format!("sweep_{wscale}_total_real_s"), sweep_real_s);
+
+    // ---- sparse vs eager master A/B: the O(active) win, bit-for-bit ----
+    // Same sharded problem, same prescribed sparse arrival trace (A of N
+    // workers round-robin per iteration); the only difference is the
+    // master-update path. The lazy sparse master must reproduce the eager
+    // dense sweep bit-identically while doing |A_k|/N of its work.
+    let (abn, abblock, abiters, aba) =
+        if quick { (2048, 16, 300, 16) } else { (4096, 32, 600, 32) };
+    let (ab_problem, ab_pattern) = sharded_consensus(abn, abblock, 1, 0xAB5E);
+    let ab_trace = ArrivalTrace {
+        sets: (0..abiters)
+            .map(|k| {
+                let mut set: Vec<usize> = (0..aba).map(|j| (k * aba + j) % abn).collect();
+                set.sort_unstable();
+                set
+            })
+            .collect(),
+    };
+    println!(
+        "\n=== sparse vs eager master: N={abn} workers, n={} dims, A={aba}, \
+         {abiters} prescribed iterations ===",
+        ab_pattern.dim()
+    );
+    let ab_run = |sparse: bool| {
+        let t = Instant::now();
+        let mut session = Session::builder()
+            .problem(&ab_problem)
+            .config(AdmmConfig {
+                rho: 20.0,
+                tau: abiters + 1,
+                min_arrivals: 1,
+                max_iters: abiters,
+                objective_every: 0,
+                metrics_every: 0,
+                ..Default::default()
+            })
+            .arrivals(&ArrivalModel::Trace(ab_trace.clone()))
+            .sparse_master(sparse)
+            .build()
+            .expect("valid session");
+        assert_eq!(session.sparse_active(), sparse, "sparse-master eligibility mismatch");
+        session.run_to_completion().expect("A/B run completes");
+        let (outcome, _) = session.finish();
+        (outcome, t.elapsed().as_secs_f64())
+    };
+    let (eager_out, eager_s) = ab_run(false);
+    let (sparse_out, sparse_s) = ab_run(true);
+    assert_eq!(eager_out.trace, sparse_out.trace, "A/B runs realized different traces");
+    assert_eq!(eager_out.state.x0.len(), sparse_out.state.x0.len());
+    for (j, (a, b)) in eager_out.state.x0.iter().zip(&sparse_out.state.x0).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "sparse master diverged from the eager sweep at coordinate {j}"
+        );
+    }
+    let sparse_master_speedup = eager_s / sparse_s.max(1e-12);
+    println!(
+        "eager {eager_s:.3}s, sparse {sparse_s:.3}s → {sparse_master_speedup:.2}x \
+         — final x0 bit-identical"
+    );
+    println!("sparse_master_speedup = {sparse_master_speedup:.3}");
+    json.config("ab_n_workers", abn)
+        .config("ab_dims", ab_pattern.dim())
+        .metric("sparse_master_eager_s", eager_s)
+        .metric("sparse_master_sparse_s", sparse_s)
+        .metric("sparse_master_speedup", sparse_master_speedup);
 
     let json_path = json.write().expect("write BENCH json");
     println!("machine-readable report → {}", json_path.display());

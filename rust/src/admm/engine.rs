@@ -359,6 +359,83 @@ pub struct Gate<'a> {
     pub down: &'a [bool],
 }
 
+/// A validated arrival set: the workers the master absorbs this iteration.
+///
+/// Construction sorts, dedupes and bounds-checks the indices, so every
+/// consumer downstream — the sparse master update, per-block bookkeeping,
+/// the broadcast fan-out — can rely on *ascending unique in-range worker
+/// ids* without re-validating. The ascending order is load-bearing for
+/// bit-identity: the master accumulates owned-slice contributions in
+/// worker order, and reordering would change floating-point summation.
+///
+/// Derefs to `[usize]`, so all slice reads (`len`, `iter`, `contains`,
+/// indexing) work unchanged; use [`ActiveSet::into_vec`] to move the
+/// indices out.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ActiveSet {
+    idx: Vec<usize>,
+}
+
+impl ActiveSet {
+    /// Validate an arbitrary index list into an arrival set: sorts,
+    /// removes duplicates, and rejects any index `>= n_workers` with a
+    /// typed [`EngineError::ActiveSetOutOfRange`].
+    pub fn new(mut idx: Vec<usize>, n_workers: usize) -> Result<Self, EngineError> {
+        idx.sort_unstable();
+        idx.dedup();
+        if let Some(&bad) = idx.iter().find(|&&i| i >= n_workers) {
+            return Err(EngineError::ActiveSetOutOfRange { index: bad, n_workers });
+        }
+        Ok(ActiveSet { idx })
+    }
+
+    /// The full set `{0, …, n_workers−1}` (the synchronous barrier).
+    pub fn full(n_workers: usize) -> Self {
+        ActiveSet { idx: (0..n_workers).collect() }
+    }
+
+    /// Hot-path constructor for sets already produced in ascending unique
+    /// order (samplers and event pumps emit them that way by
+    /// construction). Checked in debug builds only.
+    pub(crate) fn from_sorted(idx: Vec<usize>) -> Self {
+        debug_assert!(idx.windows(2).all(|w| w[0] < w[1]), "set must be ascending unique");
+        ActiveSet { idx }
+    }
+
+    /// The arrived workers, ascending.
+    pub fn as_slice(&self) -> &[usize] {
+        &self.idx
+    }
+
+    /// Move the indices out (e.g. into an [`ArrivalTrace`]).
+    pub fn into_vec(self) -> Vec<usize> {
+        self.idx
+    }
+}
+
+impl std::ops::Deref for ActiveSet {
+    type Target = [usize];
+
+    fn deref(&self) -> &[usize] {
+        &self.idx
+    }
+}
+
+impl<'s> IntoIterator for &'s ActiveSet {
+    type Item = &'s usize;
+    type IntoIter = std::slice::Iter<'s, usize>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        self.idx.iter()
+    }
+}
+
+impl From<ActiveSet> for Vec<usize> {
+    fn from(set: ActiveSet) -> Vec<usize> {
+        set.idx
+    }
+}
+
 /// The master-side state a source may touch while materializing one
 /// iteration's arrived results: the primal/dual state, the `f_i(x_i)`
 /// cache (refreshed only for arrived workers), and the master scratch
@@ -375,6 +452,24 @@ pub struct MasterView<'a> {
     /// order; custom sources use this to map local coordinates back to
     /// the global `x₀`.
     pub shard: Option<&'a BlockPattern>,
+    /// The session's sparse master state when the O(active) path is live
+    /// (see [`MasterView::sparse`]).
+    pub(crate) sparse: Option<&'a super::SparseMaster>,
+}
+
+impl<'a> MasterView<'a> {
+    /// Read-only view of the O(active) sparse master state: the
+    /// per-coordinate accumulators `Σ_{i∋j}(ρ x_{i,j} + λ_{i,j})` and the
+    /// per-block staleness stamps the lazy prox catch-up runs on.
+    ///
+    /// `None` on the eager dense path (unsharded sessions, master-first
+    /// policies, Algorithm-4 master-owned duals, or an explicit
+    /// `sparse_master(false)` on the builder). Beware that during
+    /// `absorb` the stamps reflect the *previous* master update — the
+    /// catch-up for this iteration's arrivals runs after absorption.
+    pub fn sparse(&self) -> Option<super::SparseView<'_>> {
+        self.sparse.map(|s| s.view())
+    }
 }
 
 /// Where worker results come from. Implementations:
@@ -428,16 +523,19 @@ pub trait WorkerSource {
     fn start(&mut self, state: &AdmmState, policy: &dyn UpdatePolicy);
 
     /// Block/draw until the iteration-`k` gate is met and return the
-    /// realized arrival set in ascending worker order.
-    fn gather(&mut self, k: usize, d: &[usize], gate: &Gate<'_>) -> Vec<usize>;
+    /// realized arrival set as a validated [`ActiveSet`] (ascending,
+    /// unique, in range). Sources that produce ascending sets by
+    /// construction can build it with zero cost; anything else should go
+    /// through [`ActiveSet::new`].
+    fn gather(&mut self, k: usize, d: &[usize], gate: &Gate<'_>) -> ActiveSet;
 
     /// Materialize the arrived workers' `(x_i, λ_i, f_i)` into the master
     /// state, in ascending worker order.
-    fn absorb(&mut self, set: &[usize], m: &mut MasterView<'_>, policy: &dyn UpdatePolicy);
+    fn absorb(&mut self, set: &ActiveSet, m: &mut MasterView<'_>, policy: &dyn UpdatePolicy);
 
     /// Deliver the post-update broadcast (`x̂₀`, plus `λ̂_i` when the
     /// policy broadcasts duals) to exactly the arrived workers.
-    fn broadcast(&mut self, set: &[usize], state: &AdmmState, policy: &dyn UpdatePolicy);
+    fn broadcast(&mut self, set: &ActiveSet, state: &AdmmState, policy: &dyn UpdatePolicy);
 
     /// Serialize this source's mid-run state (sampler cursors, RNG
     /// streams, per-worker snapshots, event queues) for a
@@ -476,15 +574,15 @@ impl<S: WorkerSource + ?Sized> WorkerSource for &mut S {
         (**self).start(state, policy)
     }
 
-    fn gather(&mut self, k: usize, d: &[usize], gate: &Gate<'_>) -> Vec<usize> {
+    fn gather(&mut self, k: usize, d: &[usize], gate: &Gate<'_>) -> ActiveSet {
         (**self).gather(k, d, gate)
     }
 
-    fn absorb(&mut self, set: &[usize], m: &mut MasterView<'_>, policy: &dyn UpdatePolicy) {
+    fn absorb(&mut self, set: &ActiveSet, m: &mut MasterView<'_>, policy: &dyn UpdatePolicy) {
         (**self).absorb(set, m, policy)
     }
 
-    fn broadcast(&mut self, set: &[usize], state: &AdmmState, policy: &dyn UpdatePolicy) {
+    fn broadcast(&mut self, set: &ActiveSet, state: &AdmmState, policy: &dyn UpdatePolicy) {
         (**self).broadcast(set, state, policy)
     }
 
@@ -518,15 +616,15 @@ impl<S: WorkerSource + ?Sized> WorkerSource for Box<S> {
         (**self).start(state, policy)
     }
 
-    fn gather(&mut self, k: usize, d: &[usize], gate: &Gate<'_>) -> Vec<usize> {
+    fn gather(&mut self, k: usize, d: &[usize], gate: &Gate<'_>) -> ActiveSet {
         (**self).gather(k, d, gate)
     }
 
-    fn absorb(&mut self, set: &[usize], m: &mut MasterView<'_>, policy: &dyn UpdatePolicy) {
+    fn absorb(&mut self, set: &ActiveSet, m: &mut MasterView<'_>, policy: &dyn UpdatePolicy) {
         (**self).absorb(set, m, policy)
     }
 
-    fn broadcast(&mut self, set: &[usize], state: &AdmmState, policy: &dyn UpdatePolicy) {
+    fn broadcast(&mut self, set: &ActiveSet, state: &AdmmState, policy: &dyn UpdatePolicy) {
         (**self).broadcast(set, state, policy)
     }
 
@@ -536,6 +634,98 @@ impl<S: WorkerSource + ?Sized> WorkerSource for Box<S> {
 
     fn load_checkpoint(&mut self, doc: &JsonValue) -> Result<(), EngineError> {
         (**self).load_checkpoint(doc)
+    }
+}
+
+/// The pre-[`ActiveSet`] source contract: `gather` returned a raw
+/// `Vec<usize>` and `absorb`/`broadcast` took `&[usize]`, pushing the
+/// sorted/unique/in-range invariants onto every consumer. Implement
+/// [`WorkerSource`] directly instead; an existing implementation keeps
+/// working unchanged when wrapped in [`LegacySourceAdapter`].
+#[deprecated(note = "implement WorkerSource (ActiveSet signatures); wrap old impls in \
+                     LegacySourceAdapter")]
+pub trait LegacyWorkerSource {
+    fn n_workers(&self) -> usize;
+
+    fn kind(&self) -> &'static str {
+        "custom"
+    }
+
+    fn supports_master_first(&self) -> bool {
+        false
+    }
+
+    fn supports_sharding(&self) -> bool {
+        false
+    }
+
+    fn start(&mut self, state: &AdmmState, policy: &dyn UpdatePolicy);
+
+    fn gather(&mut self, k: usize, d: &[usize], gate: &Gate<'_>) -> Vec<usize>;
+
+    fn absorb(&mut self, set: &[usize], m: &mut MasterView<'_>, policy: &dyn UpdatePolicy);
+
+    fn broadcast(&mut self, set: &[usize], state: &AdmmState, policy: &dyn UpdatePolicy);
+
+    fn save_checkpoint(&self) -> Result<JsonValue, EngineError> {
+        Err(EngineError::CheckpointUnsupported { source: self.kind() })
+    }
+
+    fn load_checkpoint(&mut self, _doc: &JsonValue) -> Result<(), EngineError> {
+        Err(EngineError::CheckpointUnsupported { source: self.kind() })
+    }
+}
+
+/// Adapter running a [`LegacyWorkerSource`] under the [`ActiveSet`]
+/// contract: the wrapped source's raw `gather` output is validated (and
+/// sorted/deduped) on every iteration, so a sloppy legacy set surfaces as
+/// a panic at the seam instead of silent misaccumulation downstream.
+#[allow(deprecated)]
+pub struct LegacySourceAdapter<S: LegacyWorkerSource>(pub S);
+
+#[allow(deprecated)]
+impl<S: LegacyWorkerSource> WorkerSource for LegacySourceAdapter<S> {
+    fn n_workers(&self) -> usize {
+        self.0.n_workers()
+    }
+
+    fn kind(&self) -> &'static str {
+        self.0.kind()
+    }
+
+    fn supports_master_first(&self) -> bool {
+        self.0.supports_master_first()
+    }
+
+    fn supports_sharding(&self) -> bool {
+        self.0.supports_sharding()
+    }
+
+    fn start(&mut self, state: &AdmmState, policy: &dyn UpdatePolicy) {
+        self.0.start(state, policy)
+    }
+
+    fn gather(&mut self, k: usize, d: &[usize], gate: &Gate<'_>) -> ActiveSet {
+        let raw = self.0.gather(k, d, gate);
+        let n = self.0.n_workers();
+        ActiveSet::new(raw, n)
+            .unwrap_or_else(|e| panic!("legacy source produced an invalid arrival set: {e}"))
+    }
+
+    fn absorb(&mut self, set: &ActiveSet, m: &mut MasterView<'_>, policy: &dyn UpdatePolicy) {
+        self.0.absorb(set, m, policy)
+    }
+
+    fn broadcast(&mut self, set: &ActiveSet, state: &AdmmState, policy: &dyn UpdatePolicy) {
+        self.0.broadcast(set, state, policy)
+    }
+
+    fn save_checkpoint(&self) -> Result<JsonValue, EngineError> {
+        self.0.save_checkpoint()
+    }
+
+    fn load_checkpoint(&mut self, doc: &JsonValue) -> Result<(), EngineError> {
+        self.0.load_checkpoint(doc)
     }
 }
 
@@ -764,11 +954,12 @@ impl<'a> WorkerSource for TraceSource<'a> {
         self.lam_snap = state.lams.clone();
     }
 
-    fn gather(&mut self, _k: usize, d: &[usize], gate: &Gate<'_>) -> Vec<usize> {
-        self.sampler.next_set_gated(d, gate.tau, gate.min_arrivals, gate.down)
+    fn gather(&mut self, _k: usize, d: &[usize], gate: &Gate<'_>) -> ActiveSet {
+        // The sampler emits ascending unique in-range sets by construction.
+        ActiveSet::from_sorted(self.sampler.next_set_gated(d, gate.tau, gate.min_arrivals, gate.down))
     }
 
-    fn absorb(&mut self, set: &[usize], m: &mut MasterView<'_>, policy: &dyn UpdatePolicy) {
+    fn absorb(&mut self, set: &ActiveSet, m: &mut MasterView<'_>, policy: &dyn UpdatePolicy) {
         let worker_dual = policy.worker_updates_dual();
         for &i in set {
             // Worker i's slice length: the global dimension when dense,
@@ -791,7 +982,7 @@ impl<'a> WorkerSource for TraceSource<'a> {
         }
     }
 
-    fn broadcast(&mut self, set: &[usize], state: &AdmmState, policy: &dyn UpdatePolicy) {
+    fn broadcast(&mut self, set: &ActiveSet, state: &AdmmState, policy: &dyn UpdatePolicy) {
         let with_dual = policy.broadcasts_dual();
         for &i in set {
             match &self.shard {
@@ -836,6 +1027,48 @@ mod tests {
         let alt = AltScheme { tau: 3 };
         assert!(!alt.worker_updates_dual());
         assert!(alt.master_updates_all_duals() && alt.broadcasts_dual());
+    }
+
+    #[test]
+    fn active_set_validates_sorts_and_dedups() {
+        let set = ActiveSet::new(vec![3, 1, 3, 0], 4).unwrap();
+        assert_eq!(set.as_slice(), &[0, 1, 3]);
+        assert_eq!(set.len(), 3);
+        assert!(set.contains(&1) && !set.contains(&2));
+        let err = ActiveSet::new(vec![0, 4], 4).unwrap_err();
+        assert!(matches!(err, EngineError::ActiveSetOutOfRange { index: 4, n_workers: 4 }));
+        assert_eq!(ActiveSet::full(3).into_vec(), vec![0, 1, 2]);
+        assert_eq!(Vec::from(ActiveSet::from_sorted(vec![0, 2])), vec![0, 2]);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn legacy_source_adapter_validates_raw_sets() {
+        struct Raw;
+        impl LegacyWorkerSource for Raw {
+            fn n_workers(&self) -> usize {
+                3
+            }
+            fn start(&mut self, _state: &AdmmState, _policy: &dyn UpdatePolicy) {}
+            fn gather(&mut self, _k: usize, _d: &[usize], _gate: &Gate<'_>) -> Vec<usize> {
+                vec![2, 0, 2] // unsorted with a duplicate: the adapter cleans it
+            }
+            fn absorb(
+                &mut self,
+                set: &[usize],
+                _m: &mut MasterView<'_>,
+                _policy: &dyn UpdatePolicy,
+            ) {
+                assert_eq!(set, &[0, 2]);
+            }
+            fn broadcast(&mut self, _set: &[usize], _state: &AdmmState, _policy: &dyn UpdatePolicy) {
+            }
+        }
+        let mut adapted = LegacySourceAdapter(Raw);
+        let down = vec![false; 3];
+        let gate = Gate { tau: 1, min_arrivals: 1, down: &down };
+        let set = WorkerSource::gather(&mut adapted, 0, &[0; 3], &gate);
+        assert_eq!(set.as_slice(), &[0, 2]);
     }
 
     #[test]

@@ -34,6 +34,13 @@ impl KktResidual {
 /// `x_i = (x₀)_{S_i}`, and master stationarity
 /// `Σ_{i∋j} λ_{i,j} ∈ ∂h(x₀)_j` — coordinate `j` sums only its owners'
 /// duals.
+///
+/// Reads every coordinate of `state.x0`, so the state must be
+/// **materialized**: under the lazy sparse master
+/// ([`super::SparseMaster`]) stale blocks lag until caught up.
+/// States obtained from [`super::session::Session::finish`] or a
+/// checkpoint are always materialized; [`super::session::Session::state`]
+/// mid-run may not be when running with `metrics_every: 0`.
 pub fn kkt_residual(problem: &ConsensusProblem, state: &AdmmState) -> KktResidual {
     let n = state.x0.len();
     let mut dual: f64 = 0.0;

@@ -33,6 +33,7 @@ pub mod sync;
 
 use crate::linalg::vecops;
 use crate::problems::{BlockPattern, ConsensusProblem, WorkerScratch};
+use crate::prox::Regularizer;
 
 /// Master-side reusable buffers for the per-iteration hot path — the
 /// counterpart of [`WorkerScratch`]. One instance is owned by each
@@ -90,6 +91,16 @@ pub struct AdmmConfig {
     /// `F(x₀)` costs one full data pass per worker, which dominates the
     /// coordinator loop on small problems — see EXPERIMENTS.md §Perf.
     pub objective_every: usize,
+    /// Evaluate the per-iteration diagnostics (augmented Lagrangian,
+    /// consensus residual, `‖x₀^{k+1} − x₀^k‖`) every k-th iteration
+    /// (1 = always, 0 = never; skipped records hold NaN, mirroring
+    /// `objective_every`). These diagnostics walk every worker's owned
+    /// slice — `O(Σ_i |S_i|)` per iteration — which defeats the
+    /// O(active) sparse master path, so large-scale sweeps run with 0.
+    /// On skipped iterations the divergence guard falls back to checking
+    /// the arrived workers' cached `f_i` values, and the `x0_tol` /
+    /// residual stopping rules are not evaluated (their inputs are NaN).
+    pub metrics_every: usize,
 }
 
 impl Default for AdmmConfig {
@@ -105,6 +116,7 @@ impl Default for AdmmConfig {
             init_x0: None,
             stopping: None,
             objective_every: 1,
+            metrics_every: 1,
         }
     }
 }
@@ -350,6 +362,247 @@ pub fn master_x0_update_blocks(
     state.x0.copy_from_slice(v);
 }
 
+/// The O(active) sparse master state: per-coordinate running accumulators
+/// plus per-block lazy prox stamps.
+///
+/// [`master_x0_update_blocks`] walks every worker's owned slice each
+/// iteration — `O(Σ_i |S_i|)` — even though only the arrived set `A_k`
+/// changed. This state makes the master update
+/// `O(Σ_{i∈A_k} |S_i|)` instead:
+///
+/// - `acc_j = Σ_{i∋j} (ρ x_{i,j} + λ_{i,j})` is kept as a running
+///   per-coordinate sum; an arrival only recomputes the coordinates of the
+///   blocks its owners touch (over the owners in ascending worker order, so
+///   the sum carries the exact bit pattern of the eager dense reduction).
+/// - The per-coordinate prox map
+///   `m(x_j) = prox_{h/(N_j ρ + γ)}((acc_j + γ x_j) / (N_j ρ + γ))`
+///   is applied *lazily*: each block carries a stamp counting how many
+///   applications have been folded into `x₀`, and a stale block is caught
+///   up on read by replaying the missed applications with the cached
+///   accumulators — which is exactly what the eager path would have
+///   computed, because a block is stale only while none of its owners
+///   arrived, i.e. while its accumulators were constant.
+/// - With γ = 0 (the paper's experimental setting) the map does not read
+///   `x₀` at all beyond the first application, so catch-up collapses to at
+///   most one application per block and the whole path is genuinely
+///   O(active) per iteration.
+///
+/// Every [`Regularizer`] is coordinate-separable and the map reads only
+/// coordinate `j` before writing it, so applying blocks in any order is
+/// bit-identical to the eager whole-vector sweep. The `sharded_consensus`
+/// suite and the `lazy_sparse_master` property test pin `to_bits`
+/// equality against [`master_x0_update_blocks`] on random patterns,
+/// traces, τ values and fault plans.
+#[derive(Clone, Debug)]
+pub struct SparseMaster {
+    /// Per-coordinate accumulator `acc_j = Σ_{i∋j} (ρ x_{i,j} + λ_{i,j})`,
+    /// current w.r.t. the latest absorbed worker iterates.
+    acc: Vec<f64>,
+    /// Per-block count of prox applications already folded into `x₀`
+    /// (`stamp[b] < updates` ⇒ block `b` owes `updates − stamp[b]`
+    /// catch-up applications of the cached map).
+    stamp: Vec<u64>,
+    /// Master updates performed since the sparse state was (re)built.
+    updates: u64,
+    /// Scratch: unique block ids touched by the most recent update.
+    touched: Vec<usize>,
+    /// Scratch: per-block dedup mask for `touched` (cleared after use).
+    touched_mask: Vec<bool>,
+}
+
+impl SparseMaster {
+    /// Build the sparse state from a full primal/dual state (initial or
+    /// checkpoint-restored). The accumulators are recomputed by the same
+    /// ascending-worker reduction as the eager path, so a restore followed
+    /// by sparse iterations is bit-identical to never having stopped.
+    pub(crate) fn new(pattern: &BlockPattern, state: &AdmmState, rho: f64) -> Self {
+        let mut s = SparseMaster {
+            acc: Vec::new(),
+            stamp: Vec::new(),
+            updates: 0,
+            touched: Vec::new(),
+            touched_mask: vec![false; pattern.num_blocks()],
+        };
+        s.rebuild(pattern, state, rho);
+        s
+    }
+
+    /// Recompute the accumulators from `state` and reset all stamps
+    /// (`x₀` is taken as fully materialized).
+    pub(crate) fn rebuild(&mut self, pattern: &BlockPattern, state: &AdmmState, rho: f64) {
+        self.acc.clear();
+        self.acc.resize(pattern.dim(), 0.0);
+        let acc = &mut self.acc;
+        for i in 0..state.xs.len() {
+            let xi = &state.xs[i];
+            let li = &state.lams[i];
+            pattern.for_each_range(i, |lo, g, len| {
+                for k in 0..len {
+                    acc[g + k] += rho * xi[lo + k] + li[lo + k];
+                }
+            });
+        }
+        self.stamp.clear();
+        self.stamp.resize(pattern.num_blocks(), 0);
+        self.updates = 0;
+        self.touched.clear();
+    }
+
+    /// Read-only window for [`engine::MasterView::sparse`].
+    pub(crate) fn view(&self) -> SparseView<'_> {
+        SparseView { stamps: &self.stamp, acc: &self.acc, updates: self.updates }
+    }
+
+    /// Unique block ids touched by the most recent [`SparseMaster::update`]
+    /// (the union of the arrived workers' owned blocks) — reused by the
+    /// session's per-block bookkeeping so the touch scan runs once.
+    pub(crate) fn touched(&self) -> &[usize] {
+        &self.touched
+    }
+
+    /// Apply the cached-accumulator prox map to block `b` once, in place.
+    fn apply_once(
+        acc: &[f64],
+        reg: &Regularizer,
+        pattern: &BlockPattern,
+        x0: &mut [f64],
+        rho: f64,
+        gamma: f64,
+        b: usize,
+    ) {
+        let (start, len) = pattern.block_range(b);
+        for j in start..start + len {
+            let denom = pattern.count(j) as f64 * rho + gamma;
+            debug_assert!(denom > 0.0, "N_j ρ + γ must be positive");
+            let v = (acc[j] + gamma * x0[j]) / denom;
+            x0[j] = reg.prox_scalar(v, 1.0 / denom);
+        }
+    }
+
+    /// Replay the `target − stamp` missed applications of the *cached* map
+    /// on block `b` and return the new stamp. With γ = 0 the map is
+    /// constant in `x₀` and bit-stable after one application (`x₀` enters
+    /// only through `γ·x₀_j`), so at most one application is performed.
+    #[allow(clippy::too_many_arguments)]
+    fn catch_up(
+        acc: &[f64],
+        reg: &Regularizer,
+        pattern: &BlockPattern,
+        x0: &mut [f64],
+        rho: f64,
+        gamma: f64,
+        b: usize,
+        stamp: u64,
+        target: u64,
+    ) -> u64 {
+        if stamp >= target {
+            return stamp;
+        }
+        if gamma == 0.0 {
+            if stamp == 0 {
+                Self::apply_once(acc, reg, pattern, x0, rho, gamma, b);
+            }
+        } else {
+            for _ in stamp..target {
+                Self::apply_once(acc, reg, pattern, x0, rho, gamma, b);
+            }
+        }
+        target
+    }
+
+    /// One sparse master update for arrival set `set` (ascending worker
+    /// ids): catch the touched blocks up with the pre-arrival
+    /// accumulators, fold the arrived owners' fresh `(x_i, λ_i)` into the
+    /// accumulators, and apply the refreshed map once per touched block.
+    /// Untouched blocks only grow staler; their catch-up is deferred to
+    /// [`SparseMaster::materialize`]. Cost `O(Σ_{i∈set} |S_i|)`.
+    pub(crate) fn update(
+        &mut self,
+        problem: &ConsensusProblem,
+        state: &mut AdmmState,
+        rho: f64,
+        gamma: f64,
+        pattern: &BlockPattern,
+        set: &[usize],
+    ) {
+        let reg = problem.regularizer();
+        let AdmmState { xs, x0, lams } = state;
+        self.touched.clear();
+        for &i in set {
+            for &b in pattern.owned(i) {
+                if !self.touched_mask[b] {
+                    self.touched_mask[b] = true;
+                    self.touched.push(b);
+                }
+            }
+        }
+        let target = self.updates;
+        for &b in &self.touched {
+            self.stamp[b] =
+                Self::catch_up(&self.acc, reg, pattern, x0, rho, gamma, b, self.stamp[b], target);
+        }
+        // Fold in the arrivals: recompute each touched block's coordinates
+        // over its owners in ascending worker order — the same terms in
+        // the same order as the eager reduction, so the sums carry
+        // identical bits (the non-arrived owners' iterates are unchanged).
+        let acc = &mut self.acc;
+        for &b in &self.touched {
+            let (start, len) = pattern.block_range(b);
+            acc[start..start + len].fill(0.0);
+            pattern.for_each_owner(b, |i, lo| {
+                let xi = &xs[i];
+                let li = &lams[i];
+                for k in 0..len {
+                    acc[start + k] += rho * xi[lo + k] + li[lo + k];
+                }
+            });
+        }
+        self.updates = target + 1;
+        for &b in &self.touched {
+            Self::apply_once(&self.acc, reg, pattern, x0, rho, gamma, b);
+            self.stamp[b] = target + 1;
+        }
+        for &b in &self.touched {
+            self.touched_mask[b] = false;
+        }
+    }
+
+    /// Catch every stale block up to the current update count so `x₀` is
+    /// exactly what the eager path would hold. Called before any dense
+    /// read of `x₀` (per-iteration diagnostics, stopping rules,
+    /// checkpointing, final state). Idempotent; `O(num_blocks)` plus the
+    /// replay work actually owed.
+    pub(crate) fn materialize(
+        &mut self,
+        problem: &ConsensusProblem,
+        x0: &mut [f64],
+        rho: f64,
+        gamma: f64,
+        pattern: &BlockPattern,
+    ) {
+        let reg = problem.regularizer();
+        let target = self.updates;
+        for b in 0..pattern.num_blocks() {
+            self.stamp[b] =
+                Self::catch_up(&self.acc, reg, pattern, x0, rho, gamma, b, self.stamp[b], target);
+        }
+    }
+}
+
+/// Read-only window over the [`SparseMaster`] state, exposed through
+/// [`engine::MasterView::sparse`]. `stamps[b] < updates` means block `b`
+/// is stale: its pending catch-up applications will be replayed on the
+/// next materialization (diagnostics, checkpoint, or finish).
+#[derive(Clone, Copy, Debug)]
+pub struct SparseView<'a> {
+    /// Per-block count of prox applications folded into `x₀` so far.
+    pub stamps: &'a [u64],
+    /// Per-coordinate accumulators `Σ_{i∋j} (ρ x_{i,j} + λ_{i,j})`.
+    pub acc: &'a [f64],
+    /// Master updates performed since the sparse state was (re)built.
+    pub updates: u64,
+}
+
 /// Assemble the [`IterRecord`] for iteration `k` from the post-update
 /// state. Shared by every coordinator (serial Algorithm 3, Algorithm 4,
 /// the threaded star cluster and the virtual-time simulator) so that two
@@ -566,6 +819,91 @@ mod tests {
         // x0_0 = (1·(2+4) + (1−1)) / 2 = 3 ; x0_1 = (1·6 + 0) / 1 = 6
         assert!((state.x0[0] - 3.0).abs() < 1e-12);
         assert!((state.x0[1] - 6.0).abs() < 1e-12);
+    }
+
+    /// Drive eager [`master_x0_update_blocks`] and the lazy [`SparseMaster`]
+    /// over the same perturbation/arrival schedule and pin `to_bits`
+    /// equality of `x₀` — both with materialization only at the end
+    /// (metrics-off mode) and with materialization every iteration.
+    fn sparse_vs_eager_case(gamma: f64, reg: Regularizer, materialize_every_iter: bool) {
+        let pattern =
+            BlockPattern::new(3, &[(0, 1), (1, 1), (2, 1)], vec![vec![0, 1], vec![0, 2]])
+                .unwrap();
+        let l0 = Arc::new(QuadraticLocal::diagonal(&[1.0, 2.0], vec![0.3, -0.1]))
+            as Arc<dyn crate::problems::LocalCost>;
+        let l1 = Arc::new(QuadraticLocal::diagonal(&[1.5, 0.5], vec![0.0, 0.2]));
+        let p = ConsensusProblem::sharded(vec![l0, l1], reg, pattern.clone()).unwrap();
+        let rho = 1.3;
+        let init = vec![0.4, -0.7, 1.1];
+        let mut eager = AdmmState::init_blocks(&pattern, init.clone());
+        let mut lazy = AdmmState::init_blocks(&pattern, init);
+        let mut sparse = SparseMaster::new(&pattern, &lazy, rho);
+        let mut scratch = MasterScratch::new();
+        let sets: [&[usize]; 6] = [&[0], &[1], &[0, 1], &[1], &[0], &[0, 1]];
+        for (k, set) in sets.iter().enumerate() {
+            // Deterministic "worker step": only the arrived workers move.
+            for state in [&mut eager, &mut lazy] {
+                for &i in *set {
+                    for (m, x) in state.xs[i].iter_mut().enumerate() {
+                        *x += 0.1 * (k + 1) as f64 - 0.07 * (i + m) as f64;
+                    }
+                    for (m, l) in state.lams[i].iter_mut().enumerate() {
+                        *l += 0.03 * (m + 1) as f64 - 0.05 * k as f64;
+                    }
+                }
+            }
+            master_x0_update_blocks(&p, &mut eager, rho, gamma, &mut scratch, &pattern);
+            sparse.update(&p, &mut lazy, rho, gamma, &pattern, set);
+            if materialize_every_iter {
+                sparse.materialize(&p, &mut lazy.x0, rho, gamma, &pattern);
+                for j in 0..3 {
+                    assert_eq!(
+                        eager.x0[j].to_bits(),
+                        lazy.x0[j].to_bits(),
+                        "k={k} j={j} γ={gamma}"
+                    );
+                }
+            }
+        }
+        sparse.materialize(&p, &mut lazy.x0, rho, gamma, &pattern);
+        for j in 0..3 {
+            assert_eq!(eager.x0[j].to_bits(), lazy.x0[j].to_bits(), "final j={j} γ={gamma}");
+        }
+    }
+
+    #[test]
+    fn sparse_master_bit_identical_to_eager_blocks() {
+        for materialize_every in [false, true] {
+            sparse_vs_eager_case(0.0, Regularizer::Zero, materialize_every);
+            sparse_vs_eager_case(0.0, Regularizer::L1 { theta: 0.3 }, materialize_every);
+            sparse_vs_eager_case(0.7, Regularizer::Zero, materialize_every);
+            sparse_vs_eager_case(0.7, Regularizer::L1 { theta: 0.3 }, materialize_every);
+        }
+    }
+
+    #[test]
+    fn sparse_master_stamps_track_touched_blocks() {
+        let pattern =
+            BlockPattern::new(2, &[(0, 1), (1, 1)], vec![vec![0, 1], vec![0]]).unwrap();
+        let l0 = Arc::new(QuadraticLocal::diagonal(&[1.0, 1.0], vec![0.0, 0.0]))
+            as Arc<dyn crate::problems::LocalCost>;
+        let l1 = Arc::new(QuadraticLocal::diagonal(&[1.0], vec![0.0]));
+        let p = ConsensusProblem::sharded(vec![l0, l1], Regularizer::Zero, pattern.clone())
+            .unwrap();
+        let mut state = AdmmState::init_blocks(&pattern, vec![0.0, 0.0]);
+        let mut sparse = SparseMaster::new(&pattern, &state, 1.0);
+        assert_eq!(sparse.view().updates, 0);
+        // Worker 1 arrives: only block 0 is touched.
+        sparse.update(&p, &mut state, 1.0, 0.0, &pattern, &[1]);
+        assert_eq!(sparse.touched(), &[0]);
+        assert_eq!(sparse.view().stamps, &[1, 0]);
+        assert_eq!(sparse.view().updates, 1);
+        // Worker 0 arrives: both its blocks are touched; block 1 catches up.
+        sparse.update(&p, &mut state, 1.0, 0.0, &pattern, &[0]);
+        assert_eq!(sparse.touched(), &[0, 1]);
+        assert_eq!(sparse.view().stamps, &[2, 2]);
+        sparse.materialize(&p, &mut state.x0, 1.0, 0.0, &pattern);
+        assert_eq!(sparse.view().stamps, &[2, 2]);
     }
 
     #[test]

@@ -67,12 +67,12 @@ use crate::problems::{BlockError, BlockPattern, ConsensusProblem};
 
 use super::arrivals::{ArrivalModel, ArrivalTrace};
 use super::engine::{
-    FaultPlan, Gate, MasterView, PartialBarrier, StepOrder, TraceSource, UpdatePolicy,
+    ActiveSet, FaultPlan, Gate, MasterView, PartialBarrier, StepOrder, TraceSource, UpdatePolicy,
     WorkerSource,
 };
 use super::{
     divergence_or_tol_stop, iter_record, master_x0_update, master_x0_update_blocks, AdmmConfig,
-    AdmmState, IterRecord, MasterScratch, StopReason,
+    AdmmState, IterRecord, MasterScratch, SparseMaster, SparseView, StopReason,
 };
 
 /// Everything the builder (or a checkpoint restore) can reject. Every
@@ -111,6 +111,14 @@ pub enum EngineError {
     /// sources that keep the shard-unaware default) — rejected at build
     /// time instead of panicking on dimension mismatches mid-run.
     ShardingUnsupported { source: &'static str },
+    /// An [`ActiveSet`] was built with a worker index out of range
+    /// ([`ActiveSet::new`]).
+    ActiveSetOutOfRange { index: usize, n_workers: usize },
+    /// An invalid cluster configuration
+    /// ([`crate::cluster::ClusterConfig::builder`]): bad delay, fault or
+    /// thread-pool parameters, rejected at build time instead of
+    /// asserting mid-run. The message says which knob.
+    Cluster(String),
 }
 
 impl From<BlockError> for EngineError {
@@ -161,6 +169,14 @@ impl fmt::Display for EngineError {
                      (owned-slice messages)"
                 )
             }
+            EngineError::ActiveSetOutOfRange { index, n_workers } => {
+                write!(
+                    f,
+                    "arrival set contains worker index {index}, but there are only \
+                     {n_workers} workers"
+                )
+            }
+            EngineError::Cluster(msg) => write!(f, "cluster config error: {msg}"),
         }
     }
 }
@@ -543,6 +559,7 @@ pub struct SessionBuilder<'a> {
     fault_plan: Option<FaultPlan>,
     residual_stopping: bool,
     blocks: Option<BlockPattern>,
+    sparse_master: bool,
 }
 
 impl<'a> Default for SessionBuilder<'a> {
@@ -562,6 +579,7 @@ impl<'a> SessionBuilder<'a> {
             fault_plan: None,
             residual_stopping: true,
             blocks: None,
+            sparse_master: true,
         }
     }
 
@@ -634,6 +652,19 @@ impl<'a> SessionBuilder<'a> {
     /// the sharded code path, which is bit-identical to the dense engine.
     pub fn blocks(mut self, pattern: BlockPattern) -> Self {
         self.blocks = Some(pattern);
+        self
+    }
+
+    /// Run the master update through the O(active) lazy sparse path
+    /// ([`SparseMaster`]) when the session is eligible: block-sharded,
+    /// workers-first step order, and the policy does not rewrite all duals
+    /// (Algorithm 4). On by default — the sparse path is bit-identical to
+    /// the eager [`super::master_x0_update_blocks`], so this is purely a
+    /// performance knob; pass `false` to force the eager dense sweep
+    /// (e.g. for A/B benchmarking). Ineligible sessions always run eager,
+    /// whatever this is set to.
+    pub fn sparse_master(mut self, enabled: bool) -> Self {
+        self.sparse_master = enabled;
         self
     }
 
@@ -787,6 +818,19 @@ impl<'a> SessionBuilder<'a> {
             None => cfg.initial_state(n_workers, dim),
         };
         let num_blocks = shard.as_ref().map(|p| p.num_blocks()).unwrap_or(0);
+        // The O(active) lazy sparse master: eligible whenever the arrived
+        // set is what drives the update (workers-first) and the policy
+        // does not rewrite every dual against the fresh x₀ (Algorithm 4
+        // invalidates the cached accumulators wholesale). Bit-identical to
+        // the eager sweep, so on by default.
+        let sparse = if self.sparse_master
+            && policy.order() == StepOrder::WorkersFirst
+            && !policy.master_updates_all_duals()
+        {
+            shard.as_ref().map(|p| SparseMaster::new(p, &state, cfg.rho))
+        } else {
+            None
+        };
         let mut scratch = MasterScratch::new();
         // f_i(x_i) cache: only arrived workers' x_i move, so only they are
         // re-evaluated (perf: N → |A_k| data passes per iteration). On
@@ -812,7 +856,7 @@ impl<'a> SessionBuilder<'a> {
             d: vec![0; n_workers],
             down: vec![false; n_workers],
             arrived: vec![false; n_workers],
-            all: (0..n_workers).collect(),
+            all: ActiveSet::full(n_workers),
             f_cache,
             scratch,
             prev_x0,
@@ -822,9 +866,9 @@ impl<'a> SessionBuilder<'a> {
             source_started: false,
             observers_started: false,
             shard,
+            sparse,
             block_updates: vec![0; num_blocks],
-            block_age: vec![0; num_blocks],
-            block_touched: vec![false; num_blocks],
+            block_last_arrival: vec![-1; num_blocks],
         };
         if let Some(cp) = checkpoint {
             session.restore_from(cp)?;
@@ -864,8 +908,8 @@ pub struct Session<'a, S: WorkerSource + 'a = Box<dyn WorkerSource + 'a>> {
     down: Vec<bool>,
     /// Reusable scratch mask for the delay-counter update.
     arrived: Vec<bool>,
-    /// `0..N`, the full-broadcast index list.
-    all: Vec<usize>,
+    /// `0..N`, the full-broadcast set.
+    all: ActiveSet,
     f_cache: Vec<f64>,
     scratch: MasterScratch,
     prev_x0: Vec<f64>,
@@ -877,15 +921,19 @@ pub struct Session<'a, S: WorkerSource + 'a = Box<dyn WorkerSource + 'a>> {
     observers_started: bool,
     /// Block-sharding pattern (None = the historical dense protocol).
     shard: Option<Arc<BlockPattern>>,
+    /// The O(active) lazy sparse master (None = eager path: dense
+    /// sessions, master-first or Algorithm-4 policies, or an explicit
+    /// [`SessionBuilder::sparse_master`]`(false)`).
+    sparse: Option<SparseMaster>,
     /// Per-block arrival counters: total arrivals of owners of each block.
     block_updates: Vec<u64>,
-    /// Per-block staleness: completed iterations since any owner of the
-    /// block last arrived. Bounded by τ − 1 whenever the realized trace
-    /// satisfies Assumption 1 — the per-block delay bound of the
-    /// block-wise analysis (arXiv:1802.08882).
-    block_age: Vec<usize>,
-    /// Reusable per-iteration scratch mask over blocks.
-    block_touched: Vec<bool>,
+    /// Per-block last-arrival stamps: the iteration at which any owner of
+    /// the block last arrived (−1 = never). Kept as stamps rather than a
+    /// per-iteration age sweep so the bookkeeping stays O(active);
+    /// [`Session::block_ages`] derives the staleness — bounded by τ − 1
+    /// whenever the realized trace satisfies Assumption 1, the per-block
+    /// delay bound of the block-wise analysis (arXiv:1802.08882).
+    block_last_arrival: Vec<i64>,
 }
 
 impl<'a> Session<'a> {
@@ -949,9 +997,26 @@ impl<'a, S: WorkerSource + 'a> Session<'a, S> {
 
     /// Per-block staleness (empty when not sharded): completed iterations
     /// since each block last received an owner arrival. Under Assumption 1
-    /// every entry stays ≤ τ − 1 — the per-block delay bound.
-    pub fn block_ages(&self) -> &[usize] {
-        &self.block_age
+    /// every entry stays ≤ τ − 1 — the per-block delay bound. Derived on
+    /// demand from last-arrival stamps (the hot loop keeps no per-block
+    /// sweep), so this allocates; don't call it per iteration at scale.
+    pub fn block_ages(&self) -> Vec<usize> {
+        let done = self.k as i64;
+        self.block_last_arrival.iter().map(|&last| (done - 1 - last).max(0) as usize).collect()
+    }
+
+    /// Read-only view of the lazy sparse-master state: per-block staleness
+    /// stamps and the O(active) accumulators. `None` on the eager path —
+    /// dense sessions, master-first or Algorithm-4 policies, or an
+    /// explicit [`SessionBuilder::sparse_master`]`(false)`.
+    pub fn sparse(&self) -> Option<SparseView<'_>> {
+        self.sparse.as_ref().map(|s| s.view())
+    }
+
+    /// Whether this session's master update runs the O(active) sparse
+    /// path.
+    pub fn sparse_active(&self) -> bool {
+        self.sparse.is_some()
     }
 
     fn ensure_started(&mut self) {
@@ -1020,6 +1085,11 @@ impl<'a, S: WorkerSource + 'a> Session<'a, S> {
         let k = self.k;
         let n_workers = self.state.xs.len();
         let n = self.state.x0.len();
+        // Whether this iteration evaluates the O(Σ|S_i|) diagnostics
+        // (augmented Lagrangian, consensus, ‖Δx₀‖) and the stopping rules
+        // that read them. Off-iterations keep the sparse master genuinely
+        // O(active) and record NaN metrics.
+        let metrics_on = self.cfg.metrics_every > 0 && k % self.cfg.metrics_every == 0;
         if let Some(plan) = &self.fault_plan {
             plan.fill_down(k, &mut self.down);
         }
@@ -1042,14 +1112,52 @@ impl<'a, S: WorkerSource + 'a> Session<'a, S> {
                         scratch: &mut self.scratch,
                         rho: self.cfg.rho,
                         shard: self.shard.as_deref(),
+                        sparse: self.sparse.as_ref(),
                     };
                     self.source.absorb(&set, &mut view, self.policy.as_ref());
                 }
                 super::engine::advance_delays(&set, &mut self.arrived, &mut self.d);
 
-                // (12)/(25)/(45): master x₀ update with the proximal γ
-                // (per-coordinate owner-count denominators when sharded).
-                self.master_update();
+                // (12)/(25)/(45): master x₀ update with the proximal γ.
+                // Sparse path: touch only the arrived owners' blocks —
+                // O(Σ_{i∈A_k} |S_i|) — deferring the rest; the
+                // materialize/copy sandwich (only when this iteration's
+                // diagnostics read x₀ densely) reproduces the eager
+                // per-iteration x₀ bit-for-bit. Eager path: the historical
+                // dense or per-coordinate owner-count sweep.
+                match &mut self.sparse {
+                    Some(sp) => {
+                        let p = self.shard.clone().expect("sparse implies sharded");
+                        if metrics_on {
+                            sp.materialize(
+                                self.problem,
+                                &mut self.state.x0,
+                                self.cfg.rho,
+                                self.cfg.gamma,
+                                &p,
+                            );
+                            self.prev_x0.copy_from_slice(&self.state.x0);
+                        }
+                        sp.update(
+                            self.problem,
+                            &mut self.state,
+                            self.cfg.rho,
+                            self.cfg.gamma,
+                            &p,
+                            &set,
+                        );
+                        if metrics_on {
+                            sp.materialize(
+                                self.problem,
+                                &mut self.state.x0,
+                                self.cfg.rho,
+                                self.cfg.gamma,
+                                &p,
+                            );
+                        }
+                    }
+                    None => self.master_update(),
+                }
 
                 // Algorithm 4 (46): master refreshes ALL duals against the
                 // fresh x₀ (each worker-block dual against its owned slice
@@ -1092,7 +1200,9 @@ impl<'a, S: WorkerSource + 'a> Session<'a, S> {
                 // under a full barrier "dropped" means its contribution to
                 // the master update simply stops moving until rejoin.
                 if self.fault_plan.is_some() {
-                    let live: Vec<usize> = (0..n_workers).filter(|&i| !self.down[i]).collect();
+                    let live = ActiveSet::from_sorted(
+                        (0..n_workers).filter(|&i| !self.down[i]).collect(),
+                    );
                     self.source.broadcast(&live, &self.state, self.policy.as_ref());
                 } else {
                     self.source.broadcast(&self.all, &self.state, self.policy.as_ref());
@@ -1113,6 +1223,7 @@ impl<'a, S: WorkerSource + 'a> Session<'a, S> {
                         scratch: &mut self.scratch,
                         rho: self.cfg.rho,
                         shard: self.shard.as_deref(),
+                        sparse: self.sparse.as_ref(),
                     };
                     self.source.absorb(&set, &mut view, self.policy.as_ref());
                 }
@@ -1122,41 +1233,56 @@ impl<'a, S: WorkerSource + 'a> Session<'a, S> {
         };
 
         // Per-block arrival bookkeeping: a block "updates" whenever any of
-        // its owners arrives; its age is the per-block staleness the
-        // block-wise Assumption 1 bounds by τ.
+        // its owners arrives, and its last-arrival stamp yields the
+        // per-block staleness the block-wise Assumption 1 bounds by τ.
+        // Stamps instead of a per-block age sweep keep this
+        // O(Σ_{i∈A_k} |owned(i)|).
         if let Some(p) = self.shard.clone() {
-            for t in self.block_touched.iter_mut() {
-                *t = false;
-            }
             for &i in &set {
                 for &b in p.owned(i) {
                     self.block_updates[b] += 1;
-                    self.block_touched[b] = true;
-                }
-            }
-            for b in 0..self.block_age.len() {
-                if self.block_touched[b] {
-                    self.block_age[b] = 0;
-                } else {
-                    self.block_age[b] += 1;
+                    self.block_last_arrival[b] = k as i64;
                 }
             }
         }
 
         let shard = self.shard.clone();
-        let rec = iter_record(
-            self.problem,
-            &self.state,
-            &self.cfg,
-            k,
-            set.len(),
-            &self.f_cache,
-            &mut self.scratch,
-            &self.prev_x0,
-            shard.as_deref(),
-        );
-        let early = divergence_or_tol_stop(&self.cfg, &self.state, &rec, k);
-        self.trace.sets.push(set);
+        let rec = if metrics_on {
+            iter_record(
+                self.problem,
+                &self.state,
+                &self.cfg,
+                k,
+                set.len(),
+                &self.f_cache,
+                &mut self.scratch,
+                &self.prev_x0,
+                shard.as_deref(),
+            )
+        } else {
+            // Metrics skipped: NaN diagnostics, real arrival count —
+            // mirrors the `objective_every` convention.
+            IterRecord {
+                k,
+                objective: f64::NAN,
+                aug_lagrangian: f64::NAN,
+                consensus: f64::NAN,
+                x0_change: f64::NAN,
+                arrivals: set.len(),
+            }
+        };
+        let early = if metrics_on {
+            divergence_or_tol_stop(&self.cfg, &self.state, &rec, k)
+        } else {
+            // O(|A_k|) divergence guard: only the arrived workers' iterates
+            // moved, and a non-finite x_i surfaces in its fresh f_i value.
+            if set.iter().any(|&i| !self.f_cache[i].is_finite()) {
+                Some(StopReason::Diverged)
+            } else {
+                None
+            }
+        };
+        self.trace.sets.push(set.into_vec());
         self.k += 1;
         for obs in self.observers.iter_mut() {
             obs.on_iteration(&rec, &self.state);
@@ -1166,7 +1292,7 @@ impl<'a, S: WorkerSource + 'a> Session<'a, S> {
             self.set_stop(reason);
             return Ok(StepStatus::Iterated(rec));
         }
-        if self.residual_stopping {
+        if metrics_on && self.residual_stopping {
             if let Some(rule) = &self.cfg.stopping {
                 // The absolute-tolerance floor scales with the stacked
                 // constraint dimension: N·n dense, Σ_i |S_i| sharded
@@ -1225,6 +1351,12 @@ impl<'a, S: WorkerSource + 'a> Session<'a, S> {
         // The source's per-worker snapshots exist only after start; taking
         // a k = 0 checkpoint before the first step must still capture them.
         self.ensure_started();
+        // Lazy sparse master: fold every deferred prox application into x₀
+        // first, so the serialized state is exactly the eager path's and a
+        // dense-path resume (or vice versa) is bit-identical. The sparse
+        // accumulators/stamps are derived state and are not serialized —
+        // resume rebuilds them from the restored iterates.
+        self.materialize_x0();
         let source_doc = self.source.save_checkpoint()?;
         let n_workers = self.state.xs.len();
         // v2: the block-sharding section (null for dense sessions — such
@@ -1241,9 +1373,11 @@ impl<'a, S: WorkerSource + 'a> Session<'a, S> {
                     ),
                 ),
                 (
+                    // Serialized as ages (not stamps) so the v2 document
+                    // layout predating the stamp compaction is unchanged.
                     "age".to_string(),
                     JsonValue::Arr(
-                        self.block_age.iter().map(|&a| JsonValue::Num(a as f64)).collect(),
+                        self.block_ages().iter().map(|&a| JsonValue::Num(a as f64)).collect(),
                     ),
                 ),
             ]),
@@ -1360,7 +1494,11 @@ impl<'a, S: WorkerSource + 'a> Session<'a, S> {
                     ));
                 }
                 self.block_updates = updates;
-                self.block_age = age;
+                // The document carries ages (historical v2 layout); the
+                // session keeps last-arrival stamps: age = k − 1 − last,
+                // with "never arrived" (age = k) mapping to −1.
+                let k = get_usize(doc, "k")? as i64;
+                self.block_last_arrival = age.iter().map(|&a| k - 1 - a as i64).collect();
             }
         }
 
@@ -1438,12 +1576,35 @@ impl<'a, S: WorkerSource + 'a> Session<'a, S> {
         // The source's snapshots were restored, not initialized: starting
         // it again would overwrite them with the resumed state.
         self.source_started = true;
+        // Rebuild the sparse accumulators from the restored iterates — the
+        // same ascending-worker reduction as the eager path, so resuming a
+        // dense-path checkpoint onto the sparse path (and vice versa) is
+        // bit-identical.
+        if let Some(sp) = &mut self.sparse {
+            let p = self.shard.clone().expect("sparse implies sharded");
+            sp.rebuild(&p, &self.state, self.cfg.rho);
+        }
         Ok(())
+    }
+
+    /// Fold every deferred sparse-master prox application into `x₀`
+    /// (no-op on the eager path). [`Session::checkpoint`] and
+    /// [`Session::finish`] call this; mid-run, [`Session::state`] may lag
+    /// on blocks whose owners have not arrived recently when running with
+    /// `metrics_every: 0`.
+    fn materialize_x0(&mut self) {
+        if let Some(sp) = &mut self.sparse {
+            let p = self.shard.clone().expect("sparse implies sharded");
+            sp.materialize(self.problem, &mut self.state.x0, self.cfg.rho, self.cfg.gamma, &p);
+        }
     }
 
     /// Consume the session, yielding its final artifacts and the source
     /// (by value — typed sessions can read execution stats back out).
-    pub fn finish(self) -> (SessionOutcome, S) {
+    /// Materializes any deferred lazy-prox work first, so the returned
+    /// `x₀` is always the fully-caught-up iterate.
+    pub fn finish(mut self) -> (SessionOutcome, S) {
+        self.materialize_x0();
         let outcome = SessionOutcome {
             state: self.state,
             trace: self.trace,
@@ -1595,6 +1756,8 @@ mod tests {
             EngineError::Checkpoint("bad".to_string()),
             EngineError::Block(BlockError::Gap { at: 3 }),
             EngineError::ShardingUnsupported { source: "custom" },
+            EngineError::ActiveSetOutOfRange { index: 7, n_workers: 4 },
+            EngineError::Cluster("drop_prob must be in [0, 1)".to_string()),
         ];
         for e in errs {
             let text = e.to_string();

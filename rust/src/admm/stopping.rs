@@ -39,6 +39,13 @@ pub struct Residuals {
 }
 
 /// Evaluate the residuals given the current state and previous `x₀`.
+///
+/// Reads every coordinate of `state.x0`, so the caller must hand it a
+/// **materialized** iterate: under the lazy sparse master
+/// ([`super::SparseMaster`]) blocks whose owners have not arrived
+/// recently lag behind until caught up. [`super::session::Session`] does
+/// this automatically — it only evaluates stopping on metric iterations,
+/// after folding all deferred per-block prox work into `x₀`.
 pub fn residuals(state: &AdmmState, prev_x0: &[f64], rho: f64) -> Residuals {
     let n_workers = state.xs.len() as f64;
     let mut primal_sq = 0.0;

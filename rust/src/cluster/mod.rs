@@ -188,6 +188,15 @@ pub struct FaultModel {
 
 /// Cluster configuration = algorithm parameters + protocol + delay model
 /// + execution mode.
+///
+/// Prefer [`ClusterConfig::builder`] over filling the fields by hand: the
+/// builder validates the cross-field invariants (delay-model shapes, fault
+/// probabilities, spike factors, outage windows) at build time and returns
+/// a typed [`EngineError`] instead of letting a malformed config panic —
+/// or silently misbehave — deep inside a run. Direct struct literals keep
+/// working (the fields stay public so functional updates like
+/// `ClusterConfig { pool_threads: 4, ..base }` compose), but new code and
+/// examples should go through the builder.
 #[derive(Clone, Debug)]
 pub struct ClusterConfig {
     pub admm: AdmmConfig,
@@ -239,6 +248,156 @@ impl Default for ClusterConfig {
             fault_plan: None,
             lockstep_trace: None,
         }
+    }
+}
+
+impl ClusterConfig {
+    /// Start a validated [`ClusterConfigBuilder`] from the defaults.
+    pub fn builder() -> ClusterConfigBuilder {
+        ClusterConfigBuilder { cfg: ClusterConfig::default() }
+    }
+}
+
+/// Typed builder for [`ClusterConfig`]. Every setter mirrors the field of
+/// the same name; [`ClusterConfigBuilder::build`] validates the whole
+/// configuration and returns [`EngineError::Cluster`] describing the first
+/// problem it finds — the same fail-at-the-seam philosophy as the
+/// [`Session`] builder.
+#[derive(Clone, Debug)]
+pub struct ClusterConfigBuilder {
+    cfg: ClusterConfig,
+}
+
+impl ClusterConfigBuilder {
+    /// Algorithm parameters (ρ, τ, `min_arrivals`, iteration budget…).
+    pub fn admm(mut self, admm: AdmmConfig) -> Self {
+        self.cfg.admm = admm;
+        self
+    }
+
+    /// Coordinator protocol (Algorithm 2 vs Algorithm 4).
+    pub fn protocol(mut self, protocol: Protocol) -> Self {
+        self.cfg.protocol = protocol;
+        self
+    }
+
+    /// Per-round compute delay model.
+    pub fn delays(mut self, delays: DelayModel) -> Self {
+        self.cfg.delays = delays;
+        self
+    }
+
+    /// Separate communication delay model (`None` folds comm into
+    /// [`ClusterConfigBuilder::delays`]).
+    pub fn comm_delays(mut self, comm: DelayModel) -> Self {
+        self.cfg.comm_delays = Some(comm);
+        self
+    }
+
+    /// Probabilistic message-drop/retransmission injection.
+    pub fn faults(mut self, faults: FaultModel) -> Self {
+        self.cfg.faults = Some(faults);
+        self
+    }
+
+    /// Real threads or discrete-event virtual time.
+    pub fn mode(mut self, mode: ExecutionMode) -> Self {
+        self.cfg.mode = mode;
+        self
+    }
+
+    /// Worker-solve pool size for virtual-time runs (see
+    /// [`ClusterConfig::pool_threads`]).
+    pub fn pool_threads(mut self, threads: usize) -> Self {
+        self.cfg.pool_threads = threads;
+        self
+    }
+
+    /// Deterministic dropout/rejoin + delay-spike schedule.
+    pub fn fault_plan(mut self, plan: FaultPlan) -> Self {
+        self.cfg.fault_plan = Some(plan);
+        self
+    }
+
+    /// Real-thread lockstep replay of a prescribed arrival trace.
+    pub fn lockstep_trace(mut self, trace: ArrivalTrace) -> Self {
+        self.cfg.lockstep_trace = Some(trace);
+        self
+    }
+
+    /// Validate and produce the [`ClusterConfig`].
+    pub fn build(self) -> Result<ClusterConfig, EngineError> {
+        let bad = |msg: String| Err(EngineError::Cluster(msg));
+        let cfg = self.cfg;
+        if !(cfg.admm.rho.is_finite() && cfg.admm.rho > 0.0) {
+            return bad(format!("rho must be positive and finite, got {}", cfg.admm.rho));
+        }
+        if cfg.admm.tau == 0 {
+            return bad("tau must be at least 1".to_string());
+        }
+        if cfg.admm.min_arrivals == 0 {
+            return bad("min_arrivals must be at least 1".to_string());
+        }
+        for (name, model) in [("delays", Some(&cfg.delays)), ("comm_delays", cfg.comm_delays.as_ref())]
+        {
+            let Some(model) = model else { continue };
+            match model {
+                DelayModel::None => {}
+                DelayModel::Fixed { per_worker_ms } => {
+                    if per_worker_ms.is_empty() {
+                        return bad(format!("{name}: Fixed delay model has no workers"));
+                    }
+                    if let Some(ms) = per_worker_ms.iter().find(|ms| !(ms.is_finite() && **ms >= 0.0))
+                    {
+                        return bad(format!("{name}: fixed delay {ms} ms is not finite and >= 0"));
+                    }
+                }
+                DelayModel::LogNormal { mean_ms, sigma, .. } => {
+                    if mean_ms.is_empty() {
+                        return bad(format!("{name}: LogNormal delay model has no workers"));
+                    }
+                    if let Some(ms) = mean_ms.iter().find(|ms| !(ms.is_finite() && **ms >= 0.0)) {
+                        return bad(format!("{name}: mean delay {ms} ms is not finite and >= 0"));
+                    }
+                    if !(sigma.is_finite() && *sigma >= 0.0) {
+                        return bad(format!("{name}: log-normal sigma {sigma} is not finite and >= 0"));
+                    }
+                }
+            }
+        }
+        if let Some(f) = &cfg.faults {
+            if !(f.drop_prob >= 0.0 && f.drop_prob < 1.0) {
+                return bad(format!("fault drop_prob {} is outside [0, 1)", f.drop_prob));
+            }
+            if !(f.retrans_ms.is_finite() && f.retrans_ms >= 0.0) {
+                return bad(format!("fault retrans_ms {} is not finite and >= 0", f.retrans_ms));
+            }
+        }
+        if let Some(plan) = &cfg.fault_plan {
+            for o in &plan.outages {
+                if o.from_iter >= o.until_iter {
+                    return bad(format!(
+                        "outage for worker {} has empty window [{}, {})",
+                        o.worker, o.from_iter, o.until_iter
+                    ));
+                }
+            }
+            for s in &plan.spikes {
+                if !(s.factor.is_finite() && s.factor > 0.0) {
+                    return bad(format!(
+                        "delay spike for worker {} has non-positive factor {}",
+                        s.worker, s.factor
+                    ));
+                }
+                if !(s.from_s < s.until_s) {
+                    return bad(format!(
+                        "delay spike for worker {} has empty window [{}, {})",
+                        s.worker, s.from_s, s.until_s
+                    ));
+                }
+            }
+        }
+        Ok(cfg)
     }
 }
 
@@ -444,16 +603,16 @@ mod tests {
     #[test]
     fn sync_cluster_converges() {
         let p = problem(111, 4);
-        let cfg = ClusterConfig {
-            admm: AdmmConfig {
+        let cfg = ClusterConfig::builder()
+            .admm(AdmmConfig {
                 rho: 50.0,
                 tau: 1,
                 min_arrivals: 4,
                 max_iters: 400,
                 ..Default::default()
-            },
-            ..Default::default()
-        };
+            })
+            .build()
+            .expect("valid config");
         let report = StarCluster::new(p.clone()).run(&cfg);
         assert_eq!(report.stop, StopReason::MaxIters);
         let r = kkt_residual(&p, &report.state);
@@ -466,17 +625,17 @@ mod tests {
     fn async_cluster_converges_and_respects_tau() {
         let p = problem(112, 4);
         let tau = 4;
-        let cfg = ClusterConfig {
-            admm: AdmmConfig {
+        let cfg = ClusterConfig::builder()
+            .admm(AdmmConfig {
                 rho: 50.0,
                 tau,
                 min_arrivals: 1,
                 max_iters: 800,
                 ..Default::default()
-            },
-            delays: DelayModel::Fixed { per_worker_ms: vec![0.0, 0.0, 1.0, 2.0] },
-            ..Default::default()
-        };
+            })
+            .delays(DelayModel::Fixed { per_worker_ms: vec![0.0, 0.0, 1.0, 2.0] })
+            .build()
+            .expect("valid config");
         let report = StarCluster::new(p.clone()).run(&cfg);
         let r = kkt_residual(&p, &report.state);
         assert!(r.max() < 1e-5, "{r:?}");
@@ -486,17 +645,17 @@ mod tests {
     #[test]
     fn alt_scheme_cluster_runs_synchronously() {
         let p = problem(113, 3);
-        let cfg = ClusterConfig {
-            admm: AdmmConfig {
+        let cfg = ClusterConfig::builder()
+            .admm(AdmmConfig {
                 rho: 30.0,
                 tau: 1,
                 min_arrivals: 3,
                 max_iters: 400,
                 ..Default::default()
-            },
-            protocol: Protocol::AltScheme,
-            ..Default::default()
-        };
+            })
+            .protocol(Protocol::AltScheme)
+            .build()
+            .expect("valid config");
         let report = StarCluster::new(p.clone()).run(&cfg);
         assert_eq!(report.stop, StopReason::MaxIters);
         let r = kkt_residual(&p, &report.state);
@@ -504,18 +663,75 @@ mod tests {
     }
 
     #[test]
+    fn builder_rejects_malformed_configs() {
+        use crate::admm::engine::{DelaySpike, FaultPlan, Outage};
+        let msg = |b: ClusterConfigBuilder| match b.build() {
+            Err(EngineError::Cluster(m)) => m,
+            other => panic!("expected EngineError::Cluster, got {other:?}"),
+        };
+        assert!(msg(ClusterConfig::builder()
+            .admm(AdmmConfig { rho: -1.0, ..Default::default() }))
+        .contains("rho"));
+        assert!(msg(ClusterConfig::builder()
+            .admm(AdmmConfig { tau: 0, ..Default::default() }))
+        .contains("tau"));
+        assert!(msg(ClusterConfig::builder()
+            .admm(AdmmConfig { min_arrivals: 0, ..Default::default() }))
+        .contains("min_arrivals"));
+        assert!(msg(ClusterConfig::builder()
+            .delays(DelayModel::Fixed { per_worker_ms: vec![1.0, f64::NAN] }))
+        .contains("delays"));
+        assert!(msg(ClusterConfig::builder().comm_delays(DelayModel::LogNormal {
+            mean_ms: Vec::new(),
+            sigma: 0.3,
+            seed: 1,
+        }))
+        .contains("comm_delays"));
+        assert!(msg(ClusterConfig::builder().faults(FaultModel {
+            drop_prob: 1.0,
+            retrans_ms: 1.0,
+            seed: 0,
+        }))
+        .contains("drop_prob"));
+        assert!(msg(ClusterConfig::builder().fault_plan(FaultPlan {
+            outages: vec![Outage { worker: 2, from_iter: 9, until_iter: 9 }],
+            spikes: Vec::new(),
+        }))
+        .contains("outage"));
+        assert!(msg(ClusterConfig::builder().fault_plan(FaultPlan {
+            outages: Vec::new(),
+            spikes: vec![DelaySpike { worker: 0, from_s: 0.0, until_s: 1.0, factor: 0.0 }],
+        }))
+        .contains("spike"));
+        // a well-formed config with every knob set builds
+        let cfg = ClusterConfig::builder()
+            .admm(AdmmConfig { rho: 10.0, tau: 3, min_arrivals: 2, ..Default::default() })
+            .protocol(Protocol::AltScheme)
+            .delays(DelayModel::linear_spread(4, 1.0, 8.0, 0.2, 7))
+            .comm_delays(DelayModel::Fixed { per_worker_ms: vec![0.5; 4] })
+            .faults(FaultModel { drop_prob: 0.1, retrans_ms: 2.0, seed: 3 })
+            .mode(ExecutionMode::VirtualTime)
+            .pool_threads(2)
+            .fault_plan(FaultPlan::single_outage(1, 5, 10))
+            .build()
+            .expect("valid config");
+        assert_eq!(cfg.pool_threads, 2);
+        assert!(matches!(cfg.mode, ExecutionMode::VirtualTime));
+    }
+
+    #[test]
     fn worker_stats_accumulate() {
         let p = problem(114, 2);
-        let cfg = ClusterConfig {
-            admm: AdmmConfig {
+        let cfg = ClusterConfig::builder()
+            .admm(AdmmConfig {
                 rho: 20.0,
                 tau: 1,
                 min_arrivals: 2,
                 max_iters: 50,
                 ..Default::default()
-            },
-            ..Default::default()
-        };
+            })
+            .build()
+            .expect("valid config");
         let report = StarCluster::new(p).run(&cfg);
         for w in &report.workers {
             assert!(w.updates >= 50, "updates={}", w.updates);

@@ -34,7 +34,7 @@
 
 use std::sync::Arc;
 
-use crate::admm::engine::{Gate, MasterView, UpdatePolicy, WorkerSource};
+use crate::admm::engine::{ActiveSet, Gate, MasterView, UpdatePolicy, WorkerSource};
 use crate::admm::session::{jget, EngineError};
 use crate::admm::AdmmState;
 use crate::bench::json::{
@@ -59,14 +59,6 @@ struct VirtualWorker {
     /// Reusable subproblem/eval buffers, reused across this worker's rounds
     /// (zero allocation in the compute hot path).
     scratch: WorkerScratch,
-    /// Duration of the in-flight compute phase, charged to `busy_s` when
-    /// the ComputeDone event fires (a round cut off by the end of the run
-    /// is never charged — matching the threaded mode, which accounts busy
-    /// time per *completed* round).
-    inflight_compute_s: f64,
-    /// Duration of the in-flight transit phase (comm + retransmissions),
-    /// charged when the Arrive event fires.
-    inflight_transit_s: f64,
 }
 
 /// One arrived worker's deferred round of arithmetic, fanned across the
@@ -97,7 +89,23 @@ struct SolveTask<'a> {
 /// bit-identically.
 pub struct VirtualSource {
     workers: Vec<VirtualWorker>,
-    stats: Vec<WorkerStats>,
+    /// Duration of each worker's in-flight compute phase, charged to
+    /// `busy_s` when the ComputeDone event fires (a round cut off by the
+    /// end of the run is never charged — matching the threaded mode, which
+    /// accounts busy time per *completed* round). Structure-of-arrays: the
+    /// event loop touches only these scalars per event, so a 10⁶-worker
+    /// sweep stays cache-friendly instead of striding over the fat
+    /// `VirtualWorker` records (sampler state, scratch buffers).
+    inflight_compute_s: Vec<f64>,
+    /// Duration of each worker's in-flight transit phase (comm +
+    /// retransmissions), charged when the Arrive event fires.
+    inflight_transit_s: Vec<f64>,
+    /// Per-worker execution stats, kept as parallel arrays for the same
+    /// cache-locality reason; materialized into [`WorkerStats`] rows at
+    /// [`VirtualSource::finish`].
+    stat_updates: Vec<usize>,
+    stat_busy_s: Vec<f64>,
+    stat_retransmissions: Vec<usize>,
     pool: WorkerPool,
     vclock: VirtualClock,
     queue: EventQueue,
@@ -145,8 +153,6 @@ impl VirtualSource {
                     .map(|f| Pcg64::seed_from_u64(f.seed.wrapping_add(i as u64 * 0x5bd1))),
                 solve: solver_list[i].take(),
                 scratch: WorkerScratch::new(),
-                inflight_compute_s: 0.0,
-                inflight_transit_s: 0.0,
             })
             .collect();
         let comm_scale = match &shard {
@@ -158,7 +164,11 @@ impl VirtualSource {
         };
         VirtualSource {
             workers,
-            stats: (0..n_workers).map(WorkerStats::new).collect(),
+            inflight_compute_s: vec![0.0; n_workers],
+            inflight_transit_s: vec![0.0; n_workers],
+            stat_updates: vec![0; n_workers],
+            stat_busy_s: vec![0.0; n_workers],
+            stat_retransmissions: vec![0; n_workers],
             pool: WorkerPool::new(cfg.pool_threads),
             vclock: VirtualClock::new(),
             queue: EventQueue::new(),
@@ -182,7 +192,7 @@ impl VirtualSource {
         if let Some(plan) = &self.fault_plan {
             compute_s *= plan.delay_factor(i, now_s);
         }
-        self.workers[i].inflight_compute_s = compute_s;
+        self.inflight_compute_s[i] = compute_s;
         self.queue.push(now_s + compute_s, i, EventKind::ComputeDone);
     }
 
@@ -202,7 +212,7 @@ impl VirtualSource {
         match ev.kind {
             EventKind::ComputeDone => {
                 let w = &mut self.workers[ev.worker];
-                self.stats[ev.worker].busy_s += w.inflight_compute_s;
+                self.stat_busy_s[ev.worker] += self.inflight_compute_s[ev.worker];
                 let mut transit_ms = match w.comm.as_mut() {
                     Some(c) => c.sample_ms(),
                     None => 0.0,
@@ -210,7 +220,7 @@ impl VirtualSource {
                 if let (Some(f), Some(rng)) = (self.faults.as_ref(), w.fault_rng.as_mut()) {
                     while rng.bernoulli(f.drop_prob) {
                         transit_ms += f.retrans_ms;
-                        self.stats[ev.worker].retransmissions += 1;
+                        self.stat_retransmissions[ev.worker] += 1;
                     }
                 }
                 let mut transit_s = transit_ms * 1e-3;
@@ -222,7 +232,7 @@ impl VirtualSource {
                 if let Some(&scale) = self.comm_scale.get(ev.worker) {
                     transit_s *= scale;
                 }
-                w.inflight_transit_s = transit_s;
+                self.inflight_transit_s[ev.worker] = transit_s;
                 self.queue.push(ev.time_s + transit_s, ev.worker, EventKind::Arrive);
             }
             EventKind::Arrive => {
@@ -230,9 +240,9 @@ impl VirtualSource {
                 // The threaded worker's busy time covers the whole round
                 // (compute sleep + comm sleep + retransmissions); charge the
                 // transit leg now that it completed.
-                self.stats[ev.worker].busy_s += self.workers[ev.worker].inflight_transit_s;
+                self.stat_busy_s[ev.worker] += self.inflight_transit_s[ev.worker];
                 self.pending[ev.worker] = true;
-                self.stats[ev.worker].updates += 1;
+                self.stat_updates[ev.worker] += 1;
                 if !gate.down[ev.worker] {
                     *arrived_count += 1;
                     if d[ev.worker] + 1 >= gate.tau {
@@ -246,12 +256,18 @@ impl VirtualSource {
     /// Consume the source at end of run: per-worker stats (lifetimes
     /// stamped with the final virtual instant), total simulated seconds,
     /// and the master's simulated wait.
-    pub fn finish(mut self) -> (Vec<WorkerStats>, f64, f64) {
+    pub fn finish(self) -> (Vec<WorkerStats>, f64, f64) {
         let total_s = self.vclock.now_s();
-        for w in self.stats.iter_mut() {
-            w.lifetime_s = total_s;
-        }
-        (self.stats, total_s, self.master_wait_s)
+        let stats = (0..self.pending.len())
+            .map(|i| WorkerStats {
+                id: i,
+                updates: self.stat_updates[i],
+                busy_s: self.stat_busy_s[i],
+                lifetime_s: total_s,
+                retransmissions: self.stat_retransmissions[i],
+            })
+            .collect();
+        (stats, total_s, self.master_wait_s)
     }
 }
 
@@ -293,8 +309,8 @@ impl WorkerSource for VirtualSource {
         let workers_json = JsonValue::Arr(
             self.workers
                 .iter()
-                .zip(&self.stats)
-                .map(|(w, s)| {
+                .enumerate()
+                .map(|(i, w)| {
                     let fault_rng = match &w.fault_rng {
                         None => JsonValue::Null,
                         Some(rng) => {
@@ -315,13 +331,19 @@ impl WorkerSource for VirtualSource {
                             },
                         ),
                         ("fault_rng".to_string(), fault_rng),
-                        ("inflight_compute_s".to_string(), hex_f64(w.inflight_compute_s)),
-                        ("inflight_transit_s".to_string(), hex_f64(w.inflight_transit_s)),
-                        ("updates".to_string(), JsonValue::Num(s.updates as f64)),
-                        ("busy_s".to_string(), hex_f64(s.busy_s)),
+                        (
+                            "inflight_compute_s".to_string(),
+                            hex_f64(self.inflight_compute_s[i]),
+                        ),
+                        (
+                            "inflight_transit_s".to_string(),
+                            hex_f64(self.inflight_transit_s[i]),
+                        ),
+                        ("updates".to_string(), JsonValue::Num(self.stat_updates[i] as f64)),
+                        ("busy_s".to_string(), hex_f64(self.stat_busy_s[i])),
                         (
                             "retransmissions".to_string(),
-                            JsonValue::Num(s.retransmissions as f64),
+                            JsonValue::Num(self.stat_retransmissions[i] as f64),
                         ),
                     ])
                 })
@@ -412,12 +434,14 @@ impl WorkerSource for VirtualSource {
                     )))
                 }
             }
-            w.inflight_compute_s = f64_from_hex(jget(wdoc, "inflight_compute_s")?).map_err(bad)?;
-            w.inflight_transit_s = f64_from_hex(jget(wdoc, "inflight_transit_s")?).map_err(bad)?;
-            let s = &mut self.stats[i];
-            s.updates = json_usize(jget(wdoc, "updates")?).map_err(bad)?;
-            s.busy_s = f64_from_hex(jget(wdoc, "busy_s")?).map_err(bad)?;
-            s.retransmissions = json_usize(jget(wdoc, "retransmissions")?).map_err(bad)?;
+            self.inflight_compute_s[i] =
+                f64_from_hex(jget(wdoc, "inflight_compute_s")?).map_err(bad)?;
+            self.inflight_transit_s[i] =
+                f64_from_hex(jget(wdoc, "inflight_transit_s")?).map_err(bad)?;
+            self.stat_updates[i] = json_usize(jget(wdoc, "updates")?).map_err(bad)?;
+            self.stat_busy_s[i] = f64_from_hex(jget(wdoc, "busy_s")?).map_err(bad)?;
+            self.stat_retransmissions[i] =
+                json_usize(jget(wdoc, "retransmissions")?).map_err(bad)?;
         }
 
         self.vclock = VirtualClock::new();
@@ -447,7 +471,7 @@ impl WorkerSource for VirtualSource {
         }
     }
 
-    fn gather(&mut self, _k: usize, d: &[usize], gate: &Gate<'_>) -> Vec<usize> {
+    fn gather(&mut self, _k: usize, d: &[usize], gate: &Gate<'_>) -> ActiveSet {
         let n = self.pending.len();
         let wait_from = self.vclock.now_s();
         // Gate counters, maintained incrementally so the gather loop is
@@ -481,10 +505,12 @@ impl WorkerSource for VirtualSource {
             }
         }
         self.master_wait_s += self.vclock.now_s() - wait_from;
-        (0..n).filter(|&i| self.pending[i] && !gate.down[i]).collect()
+        // Built by an ascending scan over worker ids: sorted and unique by
+        // construction.
+        ActiveSet::from_sorted((0..n).filter(|&i| self.pending[i] && !gate.down[i]).collect())
     }
 
-    fn absorb(&mut self, set: &[usize], m: &mut MasterView<'_>, policy: &dyn UpdatePolicy) {
+    fn absorb(&mut self, set: &ActiveSet, m: &mut MasterView<'_>, policy: &dyn UpdatePolicy) {
         let rho = m.rho;
         let problem = m.problem;
         let worker_dual = policy.worker_updates_dual();
@@ -543,7 +569,7 @@ impl WorkerSource for VirtualSource {
         });
     }
 
-    fn broadcast(&mut self, set: &[usize], state: &AdmmState, policy: &dyn UpdatePolicy) {
+    fn broadcast(&mut self, set: &ActiveSet, state: &AdmmState, policy: &dyn UpdatePolicy) {
         // Step 6: broadcast to the arrived workers only and start their
         // next round at the current virtual instant (owned slices when
         // sharded).
@@ -599,16 +625,16 @@ mod tests {
     }
 
     fn virt_cfg(tau: usize, min_arrivals: usize, max_iters: usize) -> ClusterConfig {
-        ClusterConfig {
-            admm: AdmmConfig { rho: 50.0, tau, min_arrivals, max_iters, ..Default::default() },
-            delays: DelayModel::LogNormal {
+        ClusterConfig::builder()
+            .admm(AdmmConfig { rho: 50.0, tau, min_arrivals, max_iters, ..Default::default() })
+            .delays(DelayModel::LogNormal {
                 mean_ms: vec![1.0, 2.0, 4.0, 8.0],
                 sigma: 0.3,
                 seed: 7,
-            },
-            mode: ExecutionMode::VirtualTime,
-            ..Default::default()
-        }
+            })
+            .mode(ExecutionMode::VirtualTime)
+            .build()
+            .expect("valid config")
     }
 
     #[test]

@@ -24,7 +24,7 @@ use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
-use crate::admm::engine::{Gate, MasterView, UpdatePolicy, WorkerSource};
+use crate::admm::engine::{ActiveSet, Gate, MasterView, UpdatePolicy, WorkerSource};
 use crate::admm::AdmmState;
 use crate::problems::{BlockPattern, ConsensusProblem};
 use crate::util::timer::{Clock, Stopwatch};
@@ -168,7 +168,7 @@ impl WorkerSource for ThreadedSource {
         }
     }
 
-    fn gather(&mut self, _k: usize, d: &[usize], gate: &Gate<'_>) -> Vec<usize> {
+    fn gather(&mut self, _k: usize, d: &[usize], gate: &Gate<'_>) -> ActiveSet {
         let n = self.n_workers;
         let wait_started = self.wall.now_s();
         let set = if self.lockstep.is_some() {
@@ -199,7 +199,10 @@ impl WorkerSource for ThreadedSource {
                     Err(_) => break, // all workers gone (shutdown path)
                 }
             }
-            prescribed.into_iter().filter(|&i| !gate.down[i]).collect()
+            // Lockstep traces are caller-supplied: validate (sort, dedup,
+            // bounds-check) rather than trust ascending order.
+            let live: Vec<usize> = prescribed.into_iter().filter(|&i| !gate.down[i]).collect();
+            ActiveSet::new(live, n).expect("lockstep trace worker index out of range")
         } else {
             // Gather until the gate is met: |A_k| ≥ min(A, #live) and every
             // live worker with d_i ≥ τ−1 has arrived. Down workers neither
@@ -226,13 +229,15 @@ impl WorkerSource for ThreadedSource {
                     Err(_) => break, // all workers gone (shutdown path)
                 }
             }
-            (0..n).filter(|&i| self.pending[i].is_some() && !gate.down[i]).collect()
+            ActiveSet::from_sorted(
+                (0..n).filter(|&i| self.pending[i].is_some() && !gate.down[i]).collect(),
+            )
         };
         self.master_wait_s += self.wall.now_s() - wait_started;
         set
     }
 
-    fn absorb(&mut self, set: &[usize], m: &mut MasterView<'_>, _policy: &dyn UpdatePolicy) {
+    fn absorb(&mut self, set: &ActiveSet, m: &mut MasterView<'_>, _policy: &dyn UpdatePolicy) {
         // (9)/(10)/(44): absorb arrived variables. Algorithm 2 messages
         // carry the worker-computed dual; Algorithm 4 messages carry none
         // (the master owns the duals).
@@ -246,7 +251,7 @@ impl WorkerSource for ThreadedSource {
         }
     }
 
-    fn broadcast(&mut self, set: &[usize], state: &AdmmState, policy: &dyn UpdatePolicy) {
+    fn broadcast(&mut self, set: &ActiveSet, state: &AdmmState, policy: &dyn UpdatePolicy) {
         // Step 6: broadcast to arrived workers only (owned slices when
         // sharded).
         let with_dual = policy.broadcasts_dual();

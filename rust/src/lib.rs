@@ -81,9 +81,11 @@ pub mod prelude {
     pub use crate::admm::arrivals::{ArrivalModel, ArrivalTrace};
     #[allow(deprecated)]
     pub use crate::admm::engine::run_trace_driven;
+    #[allow(deprecated)]
+    pub use crate::admm::engine::{LegacySourceAdapter, LegacyWorkerSource};
     pub use crate::admm::engine::{
-        run_engine, AltScheme, DelaySpike, EngineOptions, EngineRun, FaultPlan, FullBarrier,
-        Outage, PartialBarrier, StepOrder, TraceSource, UpdatePolicy, WorkerSource,
+        run_engine, ActiveSet, AltScheme, DelaySpike, EngineOptions, EngineRun, FaultPlan,
+        FullBarrier, Outage, PartialBarrier, StepOrder, TraceSource, UpdatePolicy, WorkerSource,
     };
     #[allow(deprecated)]
     pub use crate::admm::master_pov::run_master_pov;
@@ -97,10 +99,10 @@ pub mod prelude {
     };
     #[allow(deprecated)]
     pub use crate::admm::sync::run_sync_admm;
-    pub use crate::admm::{AdmmConfig, AdmmState, IterRecord, StopReason};
+    pub use crate::admm::{AdmmConfig, AdmmState, IterRecord, SparseView, StopReason};
     pub use crate::cluster::{
-        ClusterConfig, ClusterReport, DelayModel, ExecutionMode, Protocol, StarCluster,
-        VirtualSource,
+        ClusterConfig, ClusterConfigBuilder, ClusterReport, DelayModel, ExecutionMode, Protocol,
+        StarCluster, VirtualSource,
     };
     pub use crate::data::{LassoInstance, LogisticInstance, SparsePcaInstance};
     pub use crate::linalg::dense::DenseMatrix;

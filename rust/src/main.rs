@@ -340,8 +340,8 @@ impl ClusterParams {
 
     /// The asynchronous virtual-time config (the one checkpointed runs use).
     fn virtual_config(&self) -> ClusterConfig {
-        ClusterConfig {
-            admm: AdmmConfig {
+        let mut builder = ClusterConfig::builder()
+            .admm(AdmmConfig {
                 rho: self.rho,
                 gamma: self.gamma,
                 tau: self.tau,
@@ -349,19 +349,20 @@ impl ClusterParams {
                 max_iters: self.iters,
                 x0_tol: self.tol,
                 ..Default::default()
-            },
-            protocol: Protocol::AdAdmm,
-            delays: DelayModel::linear_spread(
+            })
+            .protocol(Protocol::AdAdmm)
+            .delays(DelayModel::linear_spread(
                 self.workers,
                 self.fast_ms,
                 self.slow_ms,
                 0.3,
                 self.seed,
-            ),
-            mode: ExecutionMode::VirtualTime,
-            fault_plan: self.fault_plan(),
-            ..Default::default()
+            ))
+            .mode(ExecutionMode::VirtualTime);
+        if let Some(plan) = self.fault_plan() {
+            builder = builder.fault_plan(plan);
         }
+        builder.build().expect("valid cluster config")
     }
 }
 
@@ -494,23 +495,22 @@ fn cmd_cluster(args: &ArgParser) {
     let fault_plan = params.fault_plan();
 
     // Sync baseline: τ=1, A=N (fault-free — the comparison anchor).
-    let sync_cfg = ClusterConfig {
-        admm: AdmmConfig { tau: 1, min_arrivals: n_workers, ..cfg.clone() },
-        protocol: Protocol::AdAdmm,
-        delays: delays.clone(),
-        mode,
-        ..Default::default()
-    };
+    let sync_cfg = ClusterConfig::builder()
+        .admm(AdmmConfig { tau: 1, min_arrivals: n_workers, ..cfg.clone() })
+        .protocol(Protocol::AdAdmm)
+        .delays(delays.clone())
+        .mode(mode)
+        .build()
+        .expect("valid cluster config");
     let sync = StarCluster::new(problem.clone()).run(&sync_cfg);
     // Async per the flags, with any fault plan applied.
     let tau = cfg.tau;
-    let async_cfg = ClusterConfig {
-        admm: cfg,
-        delays,
-        mode,
-        fault_plan: fault_plan.clone(),
-        ..Default::default()
-    };
+    let mut async_builder =
+        ClusterConfig::builder().admm(cfg).delays(delays).mode(mode);
+    if let Some(plan) = fault_plan.clone() {
+        async_builder = async_builder.fault_plan(plan);
+    }
+    let async_cfg = async_builder.build().expect("valid cluster config");
     let asyn = StarCluster::new(problem.clone()).run(&async_cfg);
 
     let mode_label = match mode {

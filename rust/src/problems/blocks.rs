@@ -135,6 +135,14 @@ pub struct BlockPattern {
     counts: Vec<usize>,
     /// Per-worker owned-slice length `|S_i|` (derived).
     owned_lens: Vec<usize>,
+    /// CSR transpose of `owned`: block `b`'s owner entries are
+    /// `owner_entries[owner_idx[b]..owner_idx[b + 1]]`, ascending by
+    /// worker (derived). Stored compactly — one flat allocation, 8 bytes
+    /// per (block, owner) incidence — so million-worker patterns carry no
+    /// per-block heap overhead.
+    owner_idx: Vec<usize>,
+    /// `(worker, local_offset)` of each (block, owner) incidence.
+    owner_entries: Vec<(u32, u32)>,
 }
 
 impl BlockPattern {
@@ -205,7 +213,30 @@ impl BlockPattern {
         }
         let owned_lens: Vec<usize> =
             owned.iter().map(|ids| ids.iter().map(|&b| lens[b]).sum()).collect();
-        Ok(BlockPattern { n, starts, lens, owned, counts, owned_lens })
+        // The compact owner transpose stores worker ids and local offsets
+        // as u32 — ample for the 10⁶-worker sweeps this layout exists for.
+        assert!(
+            owned.len() <= u32::MAX as usize && n <= u32::MAX as usize,
+            "pattern exceeds the u32 owner-transpose capacity"
+        );
+        let mut owner_idx = vec![0usize; num_blocks + 1];
+        for (b, &c) in block_owner_count.iter().enumerate() {
+            owner_idx[b + 1] = owner_idx[b] + c;
+        }
+        let mut fill = owner_idx.clone();
+        let mut owner_entries = vec![(0u32, 0u32); owner_idx[num_blocks]];
+        // Outer loop ascends over workers, so each block's entries land in
+        // ascending worker order — the reduction order the sparse master's
+        // bit-identity argument relies on.
+        for (i, ids) in owned.iter().enumerate() {
+            let mut local = 0usize;
+            for &b in ids {
+                owner_entries[fill[b]] = (i as u32, local as u32);
+                fill[b] += 1;
+                local += lens[b];
+            }
+        }
+        Ok(BlockPattern { n, starts, lens, owned, counts, owned_lens, owner_idx, owner_entries })
     }
 
     /// The historical behaviour as a pattern: one block covering `[0, n)`,
@@ -326,6 +357,18 @@ impl BlockPattern {
         for &b in &self.owned[worker] {
             f(local, self.starts[b], self.lens[b]);
             local += self.lens[b];
+        }
+    }
+
+    /// Walk block `b`'s owners as `(worker, local_offset)` pairs in
+    /// ascending worker order, where `local_offset` is where block `b`
+    /// starts inside that worker's owned slice — the transpose of
+    /// [`BlockPattern::for_each_range`], and the primitive the O(active)
+    /// sparse master reduction ([`crate::admm::SparseMaster`]) is written
+    /// with. Cost is `O(N_b)` with no allocation.
+    pub fn for_each_owner<F: FnMut(usize, usize)>(&self, b: usize, mut f: F) {
+        for &(w, lo) in &self.owner_entries[self.owner_idx[b]..self.owner_idx[b + 1]] {
+            f(w as usize, lo as usize);
         }
     }
 
@@ -527,6 +570,29 @@ mod tests {
         assert_eq!(runs, vec![(0, 0, 3), (3, 5, 3)]);
         // counts: block 0 and 2 owned once, block 1 owned once
         assert!((0..8).all(|j| p.count(j) == 1));
+    }
+
+    #[test]
+    fn owner_transpose_is_consistent_with_ranges() {
+        let p = BlockPattern::new(8, &[(0, 3), (3, 2), (5, 3)], vec![vec![0, 2], vec![1, 2]])
+            .unwrap();
+        // Reconstruct (worker → block, local) incidences from for_each_range
+        // and check for_each_owner yields the transpose, ascending by worker.
+        let mut expected: Vec<Vec<(usize, usize)>> = vec![Vec::new(); p.num_blocks()];
+        for i in 0..p.num_workers() {
+            let mut local = 0usize;
+            for &b in p.owned(i) {
+                expected[b].push((i, local));
+                local += p.block_range(b).1;
+            }
+        }
+        for b in 0..p.num_blocks() {
+            let mut got = Vec::new();
+            p.for_each_owner(b, |w, lo| got.push((w, lo)));
+            assert_eq!(got, expected[b], "block {b}");
+            assert!(got.windows(2).all(|w| w[0].0 < w[1].0), "ascending workers");
+        }
+        assert_eq!(p.count(5), 2); // block 2 owned by both workers
     }
 
     #[test]

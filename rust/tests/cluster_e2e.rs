@@ -24,18 +24,18 @@ fn threaded_cluster_trace_equivalent_to_serial_simulator() {
     let n_workers = 4;
     let inst = lasso(401, n_workers);
     let problem = inst.problem();
-    let cfg = ClusterConfig {
-        admm: AdmmConfig {
+    let cfg = ClusterConfig::builder()
+        .admm(AdmmConfig {
             rho: 50.0,
             tau: 4,
             min_arrivals: 1,
             max_iters: 120,
             ..Default::default()
-        },
-        protocol: Protocol::AdAdmm,
-        delays: DelayModel::Fixed { per_worker_ms: vec![0.0, 0.5, 1.0, 2.0] },
-        ..Default::default()
-    };
+        })
+        .protocol(Protocol::AdAdmm)
+        .delays(DelayModel::Fixed { per_worker_ms: vec![0.0, 0.5, 1.0, 2.0] })
+        .build()
+        .expect("valid cluster config");
     let report = StarCluster::new(problem.clone()).run(&cfg);
     assert_eq!(report.stop, StopReason::MaxIters);
 
@@ -56,13 +56,13 @@ fn cluster_respects_assumption1_under_extreme_skew() {
     let inst = lasso(402, n_workers);
     let problem = inst.problem();
     let tau = 3;
-    let cfg = ClusterConfig {
-        admm: AdmmConfig { rho: 50.0, tau, min_arrivals: 1, max_iters: 150, ..Default::default() },
-        protocol: Protocol::AdAdmm,
+    let cfg = ClusterConfig::builder()
+        .admm(AdmmConfig { rho: 50.0, tau, min_arrivals: 1, max_iters: 150, ..Default::default() })
+        .protocol(Protocol::AdAdmm)
         // worker 3 is 100x slower than worker 0
-        delays: DelayModel::Fixed { per_worker_ms: vec![0.05, 0.1, 1.0, 5.0] },
-        ..Default::default()
-    };
+        .delays(DelayModel::Fixed { per_worker_ms: vec![0.05, 0.1, 1.0, 5.0] })
+        .build()
+        .expect("valid cluster config");
     let report = StarCluster::new(problem).run(&cfg);
     assert!(report.trace.satisfies_bounded_delay(n_workers, tau));
     // the slow worker still arrived regularly (forced by the τ gate)
@@ -82,30 +82,30 @@ fn async_beats_sync_wall_clock_with_heterogeneous_delays() {
     let delays = DelayModel::Fixed { per_worker_ms: vec![0.2, 0.4, 2.0, 4.0] };
     let iters = 80;
 
-    let sync_cfg = ClusterConfig {
-        admm: AdmmConfig {
+    let sync_cfg = ClusterConfig::builder()
+        .admm(AdmmConfig {
             rho: 50.0,
             tau: 1,
             min_arrivals: n_workers,
             max_iters: iters,
             ..Default::default()
-        },
-        protocol: Protocol::AdAdmm,
-        delays: delays.clone(),
-        ..Default::default()
-    };
-    let async_cfg = ClusterConfig {
-        admm: AdmmConfig {
+        })
+        .protocol(Protocol::AdAdmm)
+        .delays(delays.clone())
+        .build()
+        .expect("valid cluster config");
+    let async_cfg = ClusterConfig::builder()
+        .admm(AdmmConfig {
             rho: 50.0,
             tau: 8,
             min_arrivals: 1,
             max_iters: iters,
             ..Default::default()
-        },
-        protocol: Protocol::AdAdmm,
-        delays,
-        ..Default::default()
-    };
+        })
+        .protocol(Protocol::AdAdmm)
+        .delays(delays)
+        .build()
+        .expect("valid cluster config");
     let cluster = StarCluster::new(problem);
     let sync = cluster.run(&sync_cfg);
     let asyn = cluster.run(&async_cfg);
@@ -123,18 +123,18 @@ fn alt_scheme_cluster_matches_serial_replay() {
     let n_workers = 3;
     let inst = lasso(404, n_workers);
     let problem = inst.problem();
-    let cfg = ClusterConfig {
-        admm: AdmmConfig {
+    let cfg = ClusterConfig::builder()
+        .admm(AdmmConfig {
             rho: 5.0,
             tau: 3,
             min_arrivals: 1,
             max_iters: 100,
             ..Default::default()
-        },
-        protocol: Protocol::AltScheme,
-        delays: DelayModel::Fixed { per_worker_ms: vec![0.1, 0.5, 1.0] },
-        ..Default::default()
-    };
+        })
+        .protocol(Protocol::AltScheme)
+        .delays(DelayModel::Fixed { per_worker_ms: vec![0.1, 0.5, 1.0] })
+        .build()
+        .expect("valid cluster config");
     let report = StarCluster::new(problem.clone()).run(&cfg);
     let replay = run_alt(
         &problem,
@@ -149,18 +149,18 @@ fn alt_scheme_cluster_matches_serial_replay() {
 fn cluster_final_state_is_kkt_quality() {
     let inst = lasso(405, 4);
     let problem = inst.problem();
-    let cfg = ClusterConfig {
-        admm: AdmmConfig {
+    let cfg = ClusterConfig::builder()
+        .admm(AdmmConfig {
             rho: 50.0,
             tau: 4,
             min_arrivals: 1,
             max_iters: 600,
             ..Default::default()
-        },
-        protocol: Protocol::AdAdmm,
-        delays: DelayModel::None,
-        ..Default::default()
-    };
+        })
+        .protocol(Protocol::AdAdmm)
+        .delays(DelayModel::None)
+        .build()
+        .expect("valid cluster config");
     let report = StarCluster::new(problem.clone()).run(&cfg);
     let r = kkt_residual(&problem, &report.state);
     assert!(r.max() < 1e-5, "{r:?}");
@@ -187,20 +187,20 @@ fn threaded_lockstep_replay_matches_virtual_run_bitwise() {
         max_iters: 60,
         ..Default::default()
     };
-    let vcfg = ClusterConfig {
-        admm: admm.clone(),
-        delays: DelayModel::Fixed { per_worker_ms: vec![0.5, 1.0, 2.0, 4.0] },
-        mode: ExecutionMode::VirtualTime,
-        ..Default::default()
-    };
+    let vcfg = ClusterConfig::builder()
+        .admm(admm.clone())
+        .delays(DelayModel::Fixed { per_worker_ms: vec![0.5, 1.0, 2.0, 4.0] })
+        .mode(ExecutionMode::VirtualTime)
+        .build()
+        .expect("valid cluster config");
     let virt = StarCluster::new(problem.clone()).run(&vcfg);
 
-    let tcfg = ClusterConfig {
-        admm,
-        delays: DelayModel::None,
-        lockstep_trace: Some(virt.trace.clone()),
-        ..Default::default()
-    };
+    let tcfg = ClusterConfig::builder()
+        .admm(admm)
+        .delays(DelayModel::None)
+        .lockstep_trace(virt.trace.clone())
+        .build()
+        .expect("valid cluster config");
     let thr = StarCluster::new(problem).run(&tcfg);
     assert_eq!(thr.trace, virt.trace, "lockstep did not realize the prescribed sets");
     assert_eq!(thr.state.x0, virt.state.x0);
@@ -218,19 +218,19 @@ fn fault_injection_still_converges_and_counts_retransmissions() {
     let n_workers = 4;
     let inst = lasso(406, n_workers);
     let problem = inst.problem();
-    let cfg = ClusterConfig {
-        admm: AdmmConfig {
+    let cfg = ClusterConfig::builder()
+        .admm(AdmmConfig {
             rho: 50.0,
             tau: 6,
             min_arrivals: 1,
             max_iters: 300,
             ..Default::default()
-        },
-        protocol: Protocol::AdAdmm,
-        delays: DelayModel::Fixed { per_worker_ms: vec![0.1, 0.2, 0.4, 0.8] },
-        faults: Some(FaultModel { drop_prob: 0.3, retrans_ms: 1.0, seed: 9 }),
-        ..Default::default()
-    };
+        })
+        .protocol(Protocol::AdAdmm)
+        .delays(DelayModel::Fixed { per_worker_ms: vec![0.1, 0.2, 0.4, 0.8] })
+        .faults(FaultModel { drop_prob: 0.3, retrans_ms: 1.0, seed: 9 })
+        .build()
+        .expect("valid cluster config");
     let report = StarCluster::new(problem.clone()).run(&cfg);
     // communication failures only add latency — the protocol still
     // satisfies Assumption 1 and converges (the paper's footnote-2 model)

@@ -456,20 +456,20 @@ fn virtual_time_pooled_replays_through_legacy_drivers() {
     let n_workers = 5;
     let p = lasso(631, n_workers, 25, 12);
     for (protocol, rho) in [(Protocol::AdAdmm, 50.0), (Protocol::AltScheme, 4.0)] {
-        let cfg = ClusterConfig {
-            admm: AdmmConfig {
+        let cfg = ClusterConfig::builder()
+            .admm(AdmmConfig {
                 rho,
                 tau: 4,
                 min_arrivals: 2,
                 max_iters: 150,
                 ..Default::default()
-            },
-            protocol,
-            delays: DelayModel::linear_spread(n_workers, 0.5, 6.0, 0.4, 13),
-            mode: ExecutionMode::VirtualTime,
-            pool_threads: 3,
-            ..Default::default()
-        };
+            })
+            .protocol(protocol)
+            .delays(DelayModel::linear_spread(n_workers, 0.5, 6.0, 0.4, 13))
+            .mode(ExecutionMode::VirtualTime)
+            .pool_threads(3)
+            .build()
+            .expect("valid cluster config");
         let report = StarCluster::new(p.clone()).run(&cfg);
         let old = match protocol {
             Protocol::AdAdmm => {
@@ -490,17 +490,17 @@ fn virtual_time_pooled_replays_through_legacy_drivers() {
 fn threaded_cluster_replays_through_legacy_driver() {
     let n_workers = 4;
     let p = lasso(641, n_workers, 25, 12);
-    let cfg = ClusterConfig {
-        admm: AdmmConfig {
+    let cfg = ClusterConfig::builder()
+        .admm(AdmmConfig {
             rho: 50.0,
             tau: 4,
             min_arrivals: 1,
             max_iters: 100,
             ..Default::default()
-        },
-        delays: DelayModel::Fixed { per_worker_ms: vec![0.0, 0.5, 1.0, 2.0] },
-        ..Default::default()
-    };
+        })
+        .delays(DelayModel::Fixed { per_worker_ms: vec![0.0, 0.5, 1.0, 2.0] })
+        .build()
+        .expect("valid cluster config");
     let report = StarCluster::new(p.clone()).run(&cfg);
     let old = legacy::run_master_pov(&p, &cfg.admm, &ArrivalModel::Trace(report.trace.clone()));
     assert_state_bit_equal(&old.state, &report.state);
@@ -586,15 +586,13 @@ fn dropout_rejoin_bit_identical_across_all_three_sources() {
     let plan = FaultPlan::single_outage(2, 20, 40);
 
     // Source 1: virtual time — deterministic given the seeded delays.
-    let vcfg = ClusterConfig {
-        admm: admm.clone(),
-        delays: DelayModel::Fixed {
-            per_worker_ms: vec![1.0, 1.5, 2.0, 2.5, 3.0, 3.5],
-        },
-        mode: ExecutionMode::VirtualTime,
-        fault_plan: Some(plan.clone()),
-        ..Default::default()
-    };
+    let vcfg = ClusterConfig::builder()
+        .admm(admm.clone())
+        .delays(DelayModel::Fixed { per_worker_ms: vec![1.0, 1.5, 2.0, 2.5, 3.0, 3.5] })
+        .mode(ExecutionMode::VirtualTime)
+        .fault_plan(plan.clone())
+        .build()
+        .expect("valid cluster config");
     let virt = StarCluster::new(p.clone()).run(&vcfg);
     assert_eq!(virt.history.len(), 80);
     for (k, set) in virt.trace.sets.iter().enumerate() {
@@ -633,13 +631,13 @@ fn dropout_rejoin_bit_identical_across_all_three_sources() {
     assert_history_bit_equal(&plain.history, &virt.history);
 
     // Source 3: real OS threads in lockstep on the same trace, same plan.
-    let tcfg = ClusterConfig {
-        admm: admm.clone(),
-        delays: DelayModel::None,
-        fault_plan: Some(plan.clone()),
-        lockstep_trace: Some(virt.trace.clone()),
-        ..Default::default()
-    };
+    let tcfg = ClusterConfig::builder()
+        .admm(admm.clone())
+        .delays(DelayModel::None)
+        .fault_plan(plan.clone())
+        .lockstep_trace(virt.trace.clone())
+        .build()
+        .expect("valid cluster config");
     let thr = StarCluster::new(p.clone()).run(&tcfg);
     assert_eq!(thr.trace, virt.trace, "threaded lockstep realized a different trace");
     assert_state_bit_equal(&thr.state, &virt.state);
@@ -666,13 +664,13 @@ fn seeded_outage_schedule_replays_across_sources() {
         ..Default::default()
     };
     let plan = FaultPlan::seeded_outages(n_workers, 120, 5, 4, 25, 0xFA);
-    let vcfg = ClusterConfig {
-        admm: admm.clone(),
-        delays: DelayModel::linear_spread(n_workers, 0.5, 5.0, 0.3, 29),
-        mode: ExecutionMode::VirtualTime,
-        fault_plan: Some(plan.clone()),
-        ..Default::default()
-    };
+    let vcfg = ClusterConfig::builder()
+        .admm(admm.clone())
+        .delays(DelayModel::linear_spread(n_workers, 0.5, 5.0, 0.3, 29))
+        .mode(ExecutionMode::VirtualTime)
+        .fault_plan(plan.clone())
+        .build()
+        .expect("valid cluster config");
     let virt = StarCluster::new(p.clone()).run(&vcfg);
     // No down worker is ever absorbed while down.
     for (k, set) in virt.trace.sets.iter().enumerate() {

@@ -400,6 +400,109 @@ fn prop_block_pattern_validation_maps_to_typed_errors() {
     });
 }
 
+// ------------------------------------------------------ sparse master
+
+#[test]
+fn prop_lazy_sparse_master_bit_identical_to_eager() {
+    use ad_admm::admm::engine::FaultPlan;
+    use ad_admm::admm::session::Session;
+
+    // The O(active) lazy sparse master defers each block's prox until the
+    // block is next touched (or the session is read), replaying the
+    // skipped master updates from its staleness stamp. Pin it bit-for-bit
+    // against the eager dense sweep across random block patterns
+    // (including effectively-dense ones), arrival processes, τ, γ = 0 and
+    // γ > 0, regularizers, fault plans, metrics cadences, and the
+    // stopping-rule paths.
+    Runner::new(0x5BA51C, CASES).run("lazy sparse ≡ eager", |g| {
+        let n_workers = g.usize_range(2, 6);
+        let effectively_dense = g.bool() && g.bool(); // ~1 in 4 cases
+        let pattern = if effectively_dense {
+            BlockPattern::dense(g.usize_range(2, 8), n_workers)
+        } else {
+            let n_blocks = g.usize_range(n_workers, n_workers + 2);
+            let n = n_blocks * g.usize_range(1, 3) + g.usize_range(0, 2);
+            let copies = g.usize_range(1, n_workers);
+            BlockPattern::round_robin(n, n_blocks, n_workers, copies).unwrap()
+        };
+        let mut locals: Vec<Arc<dyn ad_admm::problems::LocalCost>> = Vec::new();
+        for i in 0..n_workers {
+            let ni = pattern.owned_len(i);
+            let diag: Vec<f64> = (0..ni).map(|_| g.f64_range(0.5, 3.0)).collect();
+            locals.push(Arc::new(QuadraticLocal::diagonal(&diag, g.normal_vec(ni))));
+        }
+        let theta = g.f64_range(0.0, 0.6);
+        let regs = [
+            Regularizer::Zero,
+            Regularizer::L1 { theta },
+            Regularizer::L2Sq { theta },
+            Regularizer::ElasticNet { theta1: theta, theta2: 0.3 },
+            Regularizer::Box { lo: -1.0, hi: 1.0 },
+        ];
+        let problem =
+            ConsensusProblem::sharded(locals, g.choose(&regs).clone(), pattern).unwrap();
+
+        let cfg = AdmmConfig {
+            rho: g.f64_range(5.0, 80.0),
+            // γ = 0 is the paper's experimental setting and the lazy
+            // path's fixed-point corner (one deferred prox application,
+            // not a replay per skipped iteration) — keep it common.
+            gamma: if g.bool() { 0.0 } else { g.f64_range(0.1, 2.0) },
+            tau: g.usize_range(1, 5),
+            min_arrivals: g.usize_range(1, n_workers),
+            max_iters: g.usize_range(5, 40),
+            x0_tol: if g.bool() { 1e-6 } else { 0.0 },
+            metrics_every: *g.choose(&[0usize, 1, 3]),
+            ..Default::default()
+        };
+        let probs: Vec<f64> = (0..n_workers).map(|_| g.f64_range(0.2, 0.95)).collect();
+        let arrivals = ArrivalModel::probabilistic(probs, g.rng().next_u64());
+        let residual_stopping = g.bool();
+        let fault_plan = if g.bool() {
+            let from = g.usize_range(1, cfg.max_iters);
+            Some(FaultPlan::single_outage(
+                g.usize_range(0, n_workers - 1),
+                from,
+                from + g.usize_range(1, cfg.tau),
+            ))
+        } else {
+            None
+        };
+
+        let run = |sparse: bool| {
+            let mut builder = Session::builder()
+                .problem(&problem)
+                .config(cfg.clone())
+                .arrivals(&arrivals)
+                .residual_stopping(residual_stopping)
+                .sparse_master(sparse);
+            if let Some(plan) = &fault_plan {
+                builder = builder.faults(plan.clone());
+            }
+            let mut session = builder.build().expect("valid session");
+            assert_eq!(session.sparse_active(), sparse, "sparse eligibility mismatch");
+            let stop = session.run_to_completion().expect("run completes");
+            let (outcome, _) = session.finish();
+            (outcome, stop)
+        };
+        let (eager, eager_stop) = run(false);
+        let (lazy, lazy_stop) = run(true);
+
+        assert_eq!(eager_stop, lazy_stop, "stop reasons diverged");
+        assert_eq!(eager.iterations, lazy.iterations);
+        assert_eq!(eager.trace, lazy.trace, "arrival traces diverged");
+        for (j, (a, b)) in eager.state.x0.iter().zip(&lazy.state.x0).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "x0[{j}] diverged: eager {a:e} vs lazy {b:e}"
+            );
+        }
+        assert_eq!(eager.state.xs, lazy.state.xs, "worker iterates diverged");
+        assert_eq!(eager.state.lams, lazy.state.lams, "duals diverged");
+    });
+}
+
 #[test]
 fn prop_rng_uniform_bounds_and_determinism() {
     Runner::new(0x57A7, 32).run("rng", |g| {

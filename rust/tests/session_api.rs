@@ -25,7 +25,7 @@
 #![allow(deprecated)] // compares the session path against the legacy wrappers
 
 use ad_admm::admm::arrivals::ArrivalModel;
-use ad_admm::admm::engine::{Gate, MasterView, TraceSource, UpdatePolicy, WorkerSource};
+use ad_admm::admm::engine::{ActiveSet, Gate, MasterView, TraceSource, UpdatePolicy, WorkerSource};
 use ad_admm::admm::master_pov::{run_master_pov, NativeSolver};
 use ad_admm::admm::session::{
     BufferingObserver, Checkpoint, EngineError, Session, StepStatus,
@@ -100,13 +100,13 @@ impl WorkerSource for PipelinedDummy {
 
     fn start(&mut self, _state: &AdmmState, _policy: &dyn UpdatePolicy) {}
 
-    fn gather(&mut self, _k: usize, _d: &[usize], _gate: &Gate<'_>) -> Vec<usize> {
-        (0..self.n).collect()
+    fn gather(&mut self, _k: usize, _d: &[usize], _gate: &Gate<'_>) -> ActiveSet {
+        ActiveSet::full(self.n)
     }
 
-    fn absorb(&mut self, _set: &[usize], _m: &mut MasterView<'_>, _policy: &dyn UpdatePolicy) {}
+    fn absorb(&mut self, _set: &ActiveSet, _m: &mut MasterView<'_>, _policy: &dyn UpdatePolicy) {}
 
-    fn broadcast(&mut self, _set: &[usize], _state: &AdmmState, _policy: &dyn UpdatePolicy) {}
+    fn broadcast(&mut self, _set: &ActiveSet, _state: &AdmmState, _policy: &dyn UpdatePolicy) {}
 }
 
 #[test]
@@ -363,21 +363,21 @@ fn virtual_source_checkpoint_resume_is_bit_identical_at_every_split() {
     // longer than τ — every serialized cursor is exercised.
     let n_workers = 5;
     let p = lasso(722, n_workers);
-    let cfg = ClusterConfig {
-        admm: AdmmConfig {
+    let cfg = ClusterConfig::builder()
+        .admm(AdmmConfig {
             rho: 40.0,
             tau: 4,
             min_arrivals: 2,
             max_iters: 70,
             ..Default::default()
-        },
-        delays: DelayModel::linear_spread(n_workers, 0.5, 4.0, 0.4, 17),
-        comm_delays: Some(DelayModel::linear_spread(n_workers, 0.1, 1.0, 0.3, 23)),
-        faults: Some(FaultModel { drop_prob: 0.2, retrans_ms: 0.5, seed: 31 }),
-        mode: ExecutionMode::VirtualTime,
-        fault_plan: Some(FaultPlan::single_outage(2, 15, 35)),
-        ..Default::default()
-    };
+        })
+        .delays(DelayModel::linear_spread(n_workers, 0.5, 4.0, 0.4, 17))
+        .comm_delays(DelayModel::linear_spread(n_workers, 0.1, 1.0, 0.3, 23))
+        .faults(FaultModel { drop_prob: 0.2, retrans_ms: 0.5, seed: 31 })
+        .mode(ExecutionMode::VirtualTime)
+        .fault_plan(FaultPlan::single_outage(2, 15, 35))
+        .build()
+        .expect("valid cluster config");
     let cluster = StarCluster::new(p);
 
     // Reference: the one-shot run.
@@ -439,11 +439,11 @@ fn threaded_run_checkpoints_through_its_realized_trace() {
     let p = lasso(723, n_workers);
     let admm =
         AdmmConfig { rho: 50.0, tau: 4, min_arrivals: 1, max_iters: 50, ..Default::default() };
-    let tcfg = ClusterConfig {
-        admm: admm.clone(),
-        delays: DelayModel::Fixed { per_worker_ms: vec![0.0, 0.5, 1.0, 2.0] },
-        ..Default::default()
-    };
+    let tcfg = ClusterConfig::builder()
+        .admm(admm.clone())
+        .delays(DelayModel::Fixed { per_worker_ms: vec![0.0, 0.5, 1.0, 2.0] })
+        .build()
+        .expect("valid cluster config");
     let report = StarCluster::new(p.clone()).run(&tcfg);
     assert_eq!(report.history.len(), 50);
 

@@ -244,19 +244,19 @@ fn sharded_virtual_source_bit_matches_trace_replay() {
     let inst = lasso_instance(906, n_workers, 18, n);
     let pattern = BlockPattern::round_robin(n, 6, n_workers, 2).unwrap();
     let sharded = inst.sharded_problem(&pattern).unwrap();
-    let cfg = ClusterConfig {
-        admm: AdmmConfig {
+    let cfg = ClusterConfig::builder()
+        .admm(AdmmConfig {
             rho: 40.0,
             tau: 4,
             min_arrivals: 1,
             max_iters: 120,
             ..Default::default()
-        },
-        delays: DelayModel::linear_spread(n_workers, 0.5, 6.0, 0.4, 17),
-        comm_delays: Some(DelayModel::Fixed { per_worker_ms: vec![0.4; 4] }),
-        mode: ExecutionMode::VirtualTime,
-        ..Default::default()
-    };
+        })
+        .delays(DelayModel::linear_spread(n_workers, 0.5, 6.0, 0.4, 17))
+        .comm_delays(DelayModel::Fixed { per_worker_ms: vec![0.4; 4] })
+        .mode(ExecutionMode::VirtualTime)
+        .build()
+        .expect("valid cluster config");
     let report = StarCluster::new(sharded.clone()).run(&cfg);
     assert!(report.trace.satisfies_bounded_delay(n_workers, 4));
 
@@ -279,20 +279,20 @@ fn sharded_threaded_lockstep_matches_virtual_run_bitwise() {
     let sharded = inst.sharded_problem(&pattern).unwrap();
     let admm =
         AdmmConfig { rho: 40.0, tau: 3, min_arrivals: 1, max_iters: 50, ..Default::default() };
-    let vcfg = ClusterConfig {
-        admm: admm.clone(),
-        delays: DelayModel::Fixed { per_worker_ms: vec![0.5, 1.0, 2.0] },
-        mode: ExecutionMode::VirtualTime,
-        ..Default::default()
-    };
+    let vcfg = ClusterConfig::builder()
+        .admm(admm.clone())
+        .delays(DelayModel::Fixed { per_worker_ms: vec![0.5, 1.0, 2.0] })
+        .mode(ExecutionMode::VirtualTime)
+        .build()
+        .expect("valid cluster config");
     let virt = StarCluster::new(sharded.clone()).run(&vcfg);
 
-    let tcfg = ClusterConfig {
-        admm,
-        delays: DelayModel::None,
-        lockstep_trace: Some(virt.trace.clone()),
-        ..Default::default()
-    };
+    let tcfg = ClusterConfig::builder()
+        .admm(admm)
+        .delays(DelayModel::None)
+        .lockstep_trace(virt.trace.clone())
+        .build()
+        .expect("valid cluster config");
     let thr = StarCluster::new(sharded).run(&tcfg);
     assert_eq!(thr.trace, virt.trace, "lockstep did not realize the prescribed sets");
     assert_eq!(thr.state.x0, virt.state.x0);
@@ -320,19 +320,19 @@ fn sharded_messages_shrink_simulated_comm_time() {
     // each round lasts max_i(compute_i + comm_i·scale_i), so the sharded
     // run's simulated clock must be strictly ahead.
     let mk = |problem: ConsensusProblem| {
-        let cfg = ClusterConfig {
-            admm: AdmmConfig {
+        let cfg = ClusterConfig::builder()
+            .admm(AdmmConfig {
                 rho: 40.0,
                 tau: 1,
                 min_arrivals: n_workers,
                 max_iters: 30,
                 ..Default::default()
-            },
-            delays: DelayModel::Fixed { per_worker_ms: vec![1.0; 4] },
-            comm_delays: Some(DelayModel::Fixed { per_worker_ms: vec![2.0; 4] }),
-            mode: ExecutionMode::VirtualTime,
-            ..Default::default()
-        };
+            })
+            .delays(DelayModel::Fixed { per_worker_ms: vec![1.0; 4] })
+            .comm_delays(DelayModel::Fixed { per_worker_ms: vec![2.0; 4] })
+            .mode(ExecutionMode::VirtualTime)
+            .build()
+            .expect("valid cluster config");
         StarCluster::new(problem).run(&cfg)
     };
     let shard_report = mk(sharded);
@@ -402,25 +402,124 @@ fn sharded_checkpoint_v2_roundtrip_is_bit_identical() {
 }
 
 #[test]
+fn checkpoint_crosses_between_eager_and_sparse_master_paths_bit_identically() {
+    // Forward/backward compatibility of checkpoint v2 across the O(active)
+    // master rework: the sparse accumulators are derived state (never
+    // serialized; x₀ is materialized before the snapshot), so a checkpoint
+    // taken on the eager dense path must resume bit-identically on the
+    // sparse path — and the other way round.
+    let n = 12;
+    let n_workers = 3;
+    let inst = lasso_instance(914, n_workers, 16, n);
+    let pattern = BlockPattern::round_robin(n, 6, n_workers, 2).unwrap();
+    let sharded = inst.sharded_problem(&pattern).unwrap();
+    let cfg = AdmmConfig { rho: 40.0, tau: 3, max_iters: 60, ..Default::default() };
+    let arr = ArrivalModel::probabilistic(vec![0.5, 0.8, 0.4], 23);
+    let build = |sparse: bool| {
+        Session::builder()
+            .problem(&sharded)
+            .config(cfg.clone())
+            .policy(PartialBarrier { tau: 3 })
+            .arrivals(&arr)
+            .sparse_master(sparse)
+    };
+
+    // Reference: an uninterrupted run (sparse by default).
+    let mut full = build(true).build().unwrap();
+    assert!(full.sparse_active(), "sharded WorkersFirst session should run sparse");
+    full.run_to_completion().unwrap();
+    let (full_out, _) = full.finish();
+
+    for (first_sparse, second_sparse) in [(false, true), (true, false)] {
+        let mut first = build(first_sparse).build().unwrap();
+        assert_eq!(first.sparse_active(), first_sparse);
+        first.run_for(20).unwrap();
+        let cp = Checkpoint::from_json_str(&first.checkpoint().unwrap().to_json_string()).unwrap();
+        let mut resumed = build(second_sparse).resume(&cp).unwrap();
+        assert_eq!(resumed.iteration(), 20);
+        assert_eq!(resumed.sparse_active(), second_sparse);
+        resumed.run_to_completion().unwrap();
+        let (out, _) = resumed.finish();
+        assert_eq!(
+            out.state.x0, full_out.state.x0,
+            "x0 diverged crossing sparse={first_sparse} -> sparse={second_sparse}"
+        );
+        assert_eq!(out.state.xs, full_out.state.xs);
+        assert_eq!(out.state.lams, full_out.state.lams);
+        assert_eq!(out.trace, full_out.trace);
+    }
+}
+
+#[test]
+fn sparse_master_view_exposes_stamps_and_accumulators() {
+    // MasterView::sparse()/Session::sparse(): the staleness stamps cover
+    // every block, stamps never exceed the update counter, and turning the
+    // knob off removes the view without changing the iterates.
+    let n = 12;
+    let n_workers = 4;
+    let inst = lasso_instance(915, n_workers, 16, n);
+    let pattern = BlockPattern::round_robin(n, 4, n_workers, 1).unwrap();
+    let sharded = inst.sharded_problem(&pattern).unwrap();
+    let cfg = AdmmConfig { rho: 40.0, tau: 3, max_iters: 40, ..Default::default() };
+    let arr = ArrivalModel::probabilistic(vec![0.2, 0.8, 0.5, 0.3], 13);
+    let build = |sparse: bool| {
+        Session::builder()
+            .problem(&sharded)
+            .config(cfg.clone())
+            .policy(PartialBarrier { tau: 3 })
+            .arrivals(&arr)
+            .sparse_master(sparse)
+            .build()
+            .unwrap()
+    };
+
+    let mut on = build(true);
+    let mut iters = 0u64;
+    loop {
+        match on.step().unwrap() {
+            StepStatus::Iterated(_) => {
+                iters += 1;
+                let view = on.sparse().expect("sparse view available while active");
+                assert_eq!(view.stamps.len(), 4);
+                assert_eq!(view.acc.len(), n);
+                assert_eq!(view.updates, iters);
+                assert!(view.stamps.iter().all(|&s| s <= view.updates));
+                // τ-forcing bounds how far any block can lag.
+                assert!(view.stamps.iter().all(|&s| view.updates - s <= 3));
+            }
+            StepStatus::Done(_) => break,
+        }
+    }
+    let (on_out, _) = on.finish();
+
+    let mut off = build(false);
+    assert!(off.sparse().is_none(), "knob off must remove the sparse view");
+    off.run_to_completion().unwrap();
+    let (off_out, _) = off.finish();
+    assert_eq!(on_out.state.x0, off_out.state.x0, "sparse knob changed the iterates");
+    assert_eq!(on_out.trace, off_out.trace);
+}
+
+#[test]
 fn sharded_virtual_checkpoint_roundtrip_is_bit_identical() {
     let n = 12;
     let n_workers = 3;
     let inst = lasso_instance(910, n_workers, 14, n);
     let pattern = BlockPattern::round_robin(n, 4, n_workers, 2).unwrap();
     let sharded = inst.sharded_problem(&pattern).unwrap();
-    let cfg = ClusterConfig {
-        admm: AdmmConfig {
+    let cfg = ClusterConfig::builder()
+        .admm(AdmmConfig {
             rho: 30.0,
             tau: 3,
             min_arrivals: 1,
             max_iters: 80,
             ..Default::default()
-        },
-        delays: DelayModel::linear_spread(n_workers, 0.5, 4.0, 0.3, 29),
-        comm_delays: Some(DelayModel::Fixed { per_worker_ms: vec![0.6; 3] }),
-        mode: ExecutionMode::VirtualTime,
-        ..Default::default()
-    };
+        })
+        .delays(DelayModel::linear_spread(n_workers, 0.5, 4.0, 0.3, 29))
+        .comm_delays(DelayModel::Fixed { per_worker_ms: vec![0.6; 3] })
+        .mode(ExecutionMode::VirtualTime)
+        .build()
+        .expect("valid cluster config");
     let cluster = StarCluster::new(sharded);
 
     let mut full = cluster.virtual_session(&cfg).unwrap();

@@ -65,18 +65,18 @@ fn lasso(seed: u64, n_workers: usize) -> ConsensusProblem {
 fn virtual_cluster_bit_equal_to_serial_simulator() {
     let n_workers = 6;
     let problem = lasso(501, n_workers);
-    let cfg = ClusterConfig {
-        admm: AdmmConfig {
+    let cfg = ClusterConfig::builder()
+        .admm(AdmmConfig {
             rho: 50.0,
             tau: 4,
             min_arrivals: 2,
             max_iters: 200,
             ..Default::default()
-        },
-        delays: DelayModel::linear_spread(n_workers, 0.5, 6.0, 0.4, 11),
-        mode: ExecutionMode::VirtualTime,
-        ..Default::default()
-    };
+        })
+        .delays(DelayModel::linear_spread(n_workers, 0.5, 6.0, 0.4, 11))
+        .mode(ExecutionMode::VirtualTime)
+        .build()
+        .expect("valid cluster config");
     let report = StarCluster::new(problem.clone()).run(&cfg);
     assert_eq!(report.stop, StopReason::MaxIters);
     assert!(report.trace.satisfies_bounded_delay(n_workers, 4));
@@ -96,24 +96,20 @@ fn virtual_cluster_bit_equal_to_serial_simulator() {
 fn virtual_comm_and_faults_still_bit_replayable() {
     let n_workers = 4;
     let problem = lasso(502, n_workers);
-    let cfg = ClusterConfig {
-        admm: AdmmConfig {
+    let cfg = ClusterConfig::builder()
+        .admm(AdmmConfig {
             rho: 40.0,
             tau: 5,
             min_arrivals: 1,
             max_iters: 150,
             ..Default::default()
-        },
-        delays: DelayModel::Fixed { per_worker_ms: vec![0.5, 1.0, 2.0, 4.0] },
-        comm_delays: Some(DelayModel::LogNormal {
-            mean_ms: vec![0.3; 4],
-            sigma: 0.5,
-            seed: 21,
-        }),
-        faults: Some(FaultModel { drop_prob: 0.3, retrans_ms: 1.5, seed: 9 }),
-        mode: ExecutionMode::VirtualTime,
-        ..Default::default()
-    };
+        })
+        .delays(DelayModel::Fixed { per_worker_ms: vec![0.5, 1.0, 2.0, 4.0] })
+        .comm_delays(DelayModel::LogNormal { mean_ms: vec![0.3; 4], sigma: 0.5, seed: 21 })
+        .faults(FaultModel { drop_prob: 0.3, retrans_ms: 1.5, seed: 9 })
+        .mode(ExecutionMode::VirtualTime)
+        .build()
+        .expect("valid cluster config");
     let report = StarCluster::new(problem.clone()).run(&cfg);
     assert!(report.trace.satisfies_bounded_delay(n_workers, 5));
     let total_retrans: usize = report.workers.iter().map(|w| w.retransmissions).sum();
@@ -131,19 +127,19 @@ fn virtual_comm_and_faults_still_bit_replayable() {
 fn virtual_alt_scheme_bit_equal_to_serial_replay() {
     let n_workers = 3;
     let problem = lasso(503, n_workers);
-    let cfg = ClusterConfig {
-        admm: AdmmConfig {
+    let cfg = ClusterConfig::builder()
+        .admm(AdmmConfig {
             rho: 5.0,
             tau: 3,
             min_arrivals: 1,
             max_iters: 100,
             ..Default::default()
-        },
-        protocol: Protocol::AltScheme,
-        delays: DelayModel::Fixed { per_worker_ms: vec![0.1, 0.5, 1.0] },
-        mode: ExecutionMode::VirtualTime,
-        ..Default::default()
-    };
+        })
+        .protocol(Protocol::AltScheme)
+        .delays(DelayModel::Fixed { per_worker_ms: vec![0.1, 0.5, 1.0] })
+        .mode(ExecutionMode::VirtualTime)
+        .build()
+        .expect("valid cluster config");
     let report = StarCluster::new(problem.clone()).run(&cfg);
     let replay = run_alt(&problem, &cfg.admm, &ArrivalModel::Trace(report.trace.clone()));
     assert_eq!(report.state.x0, replay.state.x0);
@@ -156,18 +152,18 @@ fn virtual_alt_scheme_bit_equal_to_serial_replay() {
 fn virtual_cluster_converges_to_kkt() {
     let n_workers = 4;
     let problem = lasso(504, n_workers);
-    let cfg = ClusterConfig {
-        admm: AdmmConfig {
+    let cfg = ClusterConfig::builder()
+        .admm(AdmmConfig {
             rho: 50.0,
             tau: 4,
             min_arrivals: 1,
             max_iters: 600,
             ..Default::default()
-        },
-        delays: DelayModel::linear_spread(n_workers, 0.2, 3.0, 0.3, 7),
-        mode: ExecutionMode::VirtualTime,
-        ..Default::default()
-    };
+        })
+        .delays(DelayModel::linear_spread(n_workers, 0.2, 3.0, 0.3, 7))
+        .mode(ExecutionMode::VirtualTime)
+        .build()
+        .expect("valid cluster config");
     let report = StarCluster::new(problem.clone()).run(&cfg);
     let r = kkt_residual(&problem, &report.state);
     assert!(r.max() < 1e-5, "{r:?}");
@@ -194,20 +190,20 @@ fn thousand_workers_five_hundred_iters_under_five_seconds() {
     let problem = ConsensusProblem::new(locals, Regularizer::L1 { theta: 0.05 });
 
     let tau = 200;
-    let cfg = ClusterConfig {
-        admm: AdmmConfig {
+    let cfg = ClusterConfig::builder()
+        .admm(AdmmConfig {
             rho: 20.0,
             tau,
             min_arrivals: 8,
             max_iters: 500,
             objective_every: 10,
             ..Default::default()
-        },
-        delays: DelayModel::linear_spread(n_workers, 0.5, 50.0, 0.5, 13),
-        mode: ExecutionMode::VirtualTime,
-        pool_threads: 0, // auto: exercise the pooled path at scale
-        ..Default::default()
-    };
+        })
+        .delays(DelayModel::linear_spread(n_workers, 0.5, 50.0, 0.5, 13))
+        .mode(ExecutionMode::VirtualTime)
+        .pool_threads(0) // auto: exercise the pooled path at scale
+        .build()
+        .expect("valid cluster config");
 
     let t = Instant::now();
     let report = StarCluster::new(problem).run(&cfg);
@@ -243,39 +239,35 @@ fn prop_pooled_virtual_run_bit_identical_to_serial() {
             LassoInstance::synthetic(&mut rng, n_workers, 3 * dim, dim, 0.2, 0.1).problem()
         };
         let mean_ms: Vec<f64> = (0..n_workers).map(|_| g.f64_range(0.1, 8.0)).collect();
-        let cfg = ClusterConfig {
-            admm: AdmmConfig {
+        let mut builder = ClusterConfig::builder()
+            .admm(AdmmConfig {
                 rho: g.f64_range(5.0, 80.0),
                 tau: g.usize_range(1, 5),
                 min_arrivals: g.usize_range(1, n_workers),
                 max_iters: 50,
                 objective_every: g.usize_range(0, 2),
                 ..Default::default()
-            },
-            protocol: if g.bool() { Protocol::AdAdmm } else { Protocol::AltScheme },
-            delays: DelayModel::LogNormal {
+            })
+            .protocol(if g.bool() { Protocol::AdAdmm } else { Protocol::AltScheme })
+            .delays(DelayModel::LogNormal {
                 mean_ms,
                 sigma: g.f64_range(0.0, 0.6),
                 seed: g.rng().next_u64(),
-            },
-            comm_delays: if g.bool() {
-                Some(DelayModel::Fixed { per_worker_ms: vec![0.4; n_workers] })
-            } else {
-                None
-            },
-            faults: if g.bool() {
-                Some(FaultModel {
-                    drop_prob: g.f64_range(0.0, 0.3),
-                    retrans_ms: 1.0,
-                    seed: g.rng().next_u64(),
-                })
-            } else {
-                None
-            },
-            mode: ExecutionMode::VirtualTime,
-            pool_threads: 1,
-            ..Default::default()
-        };
+            })
+            .mode(ExecutionMode::VirtualTime)
+            .pool_threads(1);
+        if g.bool() {
+            builder =
+                builder.comm_delays(DelayModel::Fixed { per_worker_ms: vec![0.4; n_workers] });
+        }
+        if g.bool() {
+            builder = builder.faults(FaultModel {
+                drop_prob: g.f64_range(0.0, 0.3),
+                retrans_ms: 1.0,
+                seed: g.rng().next_u64(),
+            });
+        }
+        let cfg = builder.build().expect("valid cluster config");
         let serial = StarCluster::new(problem.clone()).run(&cfg);
         let pooled_cfg = ClusterConfig { pool_threads: pool, ..cfg };
         let pooled = StarCluster::new(problem).run(&pooled_cfg);
@@ -314,36 +306,32 @@ fn prop_virtual_trace_always_satisfies_assumption1() {
         let problem = ConsensusProblem::new(locals, Regularizer::Zero);
 
         let mean_ms: Vec<f64> = (0..n_workers).map(|_| g.f64_range(0.1, 10.0)).collect();
-        let cfg = ClusterConfig {
-            admm: AdmmConfig {
+        let mut builder = ClusterConfig::builder()
+            .admm(AdmmConfig {
                 rho: g.f64_range(5.0, 80.0),
                 tau,
                 min_arrivals,
                 max_iters: 60,
                 ..Default::default()
-            },
-            delays: DelayModel::LogNormal {
+            })
+            .delays(DelayModel::LogNormal {
                 mean_ms,
                 sigma: g.f64_range(0.0, 0.8),
                 seed: g.rng().next_u64(),
-            },
-            comm_delays: if g.bool() {
-                Some(DelayModel::Fixed { per_worker_ms: vec![0.5; n_workers] })
-            } else {
-                None
-            },
-            faults: if g.bool() {
-                Some(FaultModel {
-                    drop_prob: g.f64_range(0.0, 0.4),
-                    retrans_ms: 1.0,
-                    seed: g.rng().next_u64(),
-                })
-            } else {
-                None
-            },
-            mode: ExecutionMode::VirtualTime,
-            ..Default::default()
-        };
+            })
+            .mode(ExecutionMode::VirtualTime);
+        if g.bool() {
+            builder =
+                builder.comm_delays(DelayModel::Fixed { per_worker_ms: vec![0.5; n_workers] });
+        }
+        if g.bool() {
+            builder = builder.faults(FaultModel {
+                drop_prob: g.f64_range(0.0, 0.4),
+                retrans_ms: 1.0,
+                seed: g.rng().next_u64(),
+            });
+        }
+        let cfg = builder.build().expect("valid cluster config");
         let report = StarCluster::new(problem).run(&cfg);
         assert!(
             report.trace.satisfies_bounded_delay(n_workers, tau),
