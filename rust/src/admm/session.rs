@@ -119,6 +119,11 @@ pub enum EngineError {
     /// thread-pool parameters, rejected at build time instead of
     /// asserting mid-run. The message says which knob.
     Cluster(String),
+    /// A network-transport failure in the socket source or solver service
+    /// ([`crate::cluster::transport`]): bind/connect/handshake errors,
+    /// protocol violations, malformed wire payloads. Mid-run worker
+    /// disconnects are *not* errors — they surface as realized outages.
+    Transport(String),
 }
 
 impl From<BlockError> for EngineError {
@@ -177,6 +182,7 @@ impl fmt::Display for EngineError {
                 )
             }
             EngineError::Cluster(msg) => write!(f, "cluster config error: {msg}"),
+            EngineError::Transport(msg) => write!(f, "transport error: {msg}"),
         }
     }
 }

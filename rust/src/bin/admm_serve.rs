@@ -1,0 +1,62 @@
+//! `admm_serve` — the long-lived AD-ADMM solver service.
+//!
+//! Serve mode (default): accept solve jobs over the framed control plane,
+//! run each as the master side of a socket cluster on its own rendezvous
+//! port (concurrent jobs multiplex by job id), print and send back a
+//! per-job report.
+//!
+//!   admm_serve --listen 127.0.0.1:7401 [--oneshot]
+//!
+//! Submit mode: send one job to a running service, print the rendezvous
+//! port for workers, block for the report (and the `final x0 digest`
+//! line the CI loopback e2e greps):
+//!
+//!   admm_serve submit --connect 127.0.0.1:7401 --job ci-e2e \
+//!       --workers 4 --m 60 --n 40 --tau 3 --iters 60 [--alt] \
+//!       [--shard-blocks B --shard-owners C] [--free-running]
+//!
+//! Workers are separate `admm_worker` processes pointed at the printed
+//! port. Job flags are shared with `ad-admm transport-digest`, which
+//! replays the identical spec through the in-process trace source — under
+//! the default lockstep schedule both print the same digest, bit-exact.
+
+use ad_admm::cluster::transport::{serve, submit, JobSpec};
+use ad_admm::util::cli::ArgParser;
+
+fn main() {
+    let args = ArgParser::from_env(&["help", "oneshot", "alt", "free-running"]);
+    if args.has_flag("help") {
+        print_help();
+        return;
+    }
+    let cmd = args.positional().first().map(String::as_str).unwrap_or("serve");
+    let result = match cmd {
+        "serve" => serve(&args.get_or("listen", "127.0.0.1:7401"), args.has_flag("oneshot")),
+        "submit" => {
+            let spec = JobSpec::from_args(&args);
+            submit(&args.get_or("connect", "127.0.0.1:7401"), &spec).map(|_| ())
+        }
+        _ => {
+            print_help();
+            return;
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("admm_serve: {e}");
+        std::process::exit(2);
+    }
+}
+
+fn print_help() {
+    println!(
+        "admm_serve — long-lived AD-ADMM solver service over TCP\n\n\
+         USAGE:\n\
+         \x20 admm_serve [serve] --listen HOST:PORT [--oneshot]\n\
+         \x20 admm_serve submit --connect HOST:PORT --job ID --workers N --m M --n N\n\
+         \x20            --rho R --gamma G --tau T --min-arrivals A --iters K --tol E\n\
+         \x20            [--alt] [--shard-blocks B --shard-owners C] [--free-running]\n\
+         \x20            [--fast-ms F --slow-ms S] [--checkpoint-every N] [--seed S]\n\n\
+         serve accepts jobs until killed (--oneshot: exit after the first job);\n\
+         submit prints the per-job worker rendezvous port, then blocks for the report."
+    );
+}

@@ -1,0 +1,57 @@
+//! `admm_worker` — one AD-ADMM worker process.
+//!
+//! Connects to a master's rendezvous port (a `SocketSource` bound by
+//! `admm_serve` or an embedding test), handshakes, rebuilds its local
+//! problem from the assigned job spec, and answers `go` frames until
+//! `shutdown`. The round arithmetic is the same code the in-process
+//! threaded workers run, so a process fleet computes bit-identical
+//! messages.
+//!
+//!   admm_worker --connect 127.0.0.1:PORT --job ID [--worker I]
+//!               [--retries N --retry-ms MS] [--max-rounds R]
+//!
+//! `--worker` pins a slot — a restarted worker names its old slot so the
+//! master re-delivers the in-flight broadcast (with its dual reseed) and
+//! the run continues bit-identically. `--max-rounds` makes the process
+//! exit by dropping its connection cold after R rounds: the emulated
+//! crash the disconnect/reconnect e2e uses.
+
+use std::time::Duration;
+
+use ad_admm::cluster::transport::{run_worker, WorkerClientConfig};
+use ad_admm::util::cli::ArgParser;
+
+fn main() {
+    let args = ArgParser::from_env(&["help"]);
+    if args.has_flag("help") {
+        println!(
+            "admm_worker — one AD-ADMM worker process\n\n\
+             USAGE: admm_worker --connect HOST:PORT --job ID [--worker I]\n\
+             \x20      [--retries N --retry-ms MS] [--max-rounds R]"
+        );
+        return;
+    }
+    let defaults = WorkerClientConfig::default();
+    let worker: i64 = args.get_parse_or("worker", -1);
+    let max_rounds: usize = args.get_parse_or("max-rounds", 0);
+    let cfg = WorkerClientConfig {
+        addr: args.get_or("connect", &defaults.addr),
+        job_id: args.get_or("job", &defaults.job_id),
+        worker: (worker >= 0).then_some(worker as usize),
+        retries: args.get_parse_or("retries", defaults.retries),
+        retry_delay: Duration::from_millis(args.get_parse_or("retry-ms", 100)),
+        max_rounds: (max_rounds > 0).then_some(max_rounds),
+    };
+    match run_worker(&cfg) {
+        Ok(stats) => {
+            println!(
+                "worker {} done: {} updates, busy {:.3}s, lifetime {:.3}s",
+                stats.id, stats.updates, stats.busy_s, stats.lifetime_s
+            );
+        }
+        Err(e) => {
+            eprintln!("admm_worker: {e}");
+            std::process::exit(2);
+        }
+    }
+}

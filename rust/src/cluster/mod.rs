@@ -32,6 +32,7 @@ pub mod pool;
 pub mod sim;
 pub mod threaded;
 pub mod timeline;
+pub mod transport;
 pub mod worker;
 
 use crate::admm::arrivals::ArrivalTrace;
@@ -48,6 +49,7 @@ pub use clock::VirtualClock;
 pub use messages::{MasterMsg, WorkerMsg};
 pub use pool::WorkerPool;
 pub use timeline::{Timeline, WorkerStats};
+pub use transport::{JobReport, JobSpec, SocketSource, TransportConfig, TransportStats};
 use worker::WorkerSolveFn;
 
 /// Which coordinator protocol the cluster runs.

@@ -17,8 +17,10 @@
 //! are enforced at the master's gate — a down worker's message still lands
 //! in `pending` but is held, uncounted and unabsorbed, until rejoin, so the
 //! worker re-enters with the stale iterate it computed against its
-//! pre-outage broadcast. Delay spikes stretch the worker threads' sleeps
-//! (see `worker_loop` in [`super::worker`]).
+//! pre-outage broadcast. Delay spikes stretch the worker threads' compute
+//! sleeps and their whole communication leg — model draw plus
+//! retransmissions, matching the virtual-time transit rule (see
+//! `worker_loop` and `comm_leg_ms` in [`super::worker`]).
 
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;

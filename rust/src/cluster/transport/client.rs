@@ -1,0 +1,205 @@
+//! The worker-side TCP client: connect, handshake, then run the
+//! per-round protocol of [`super::super::worker`] over frames instead of
+//! channels.
+//!
+//! The round arithmetic is [`worker_round`] — the *same function* the
+//! threaded worker loop calls — and the injected communication latency is
+//! [`comm_leg_ms`], so a socket worker computes bit-identical messages to
+//! an in-process worker fed the same `(λ_i, x̂₀)` sequence. A `go` frame
+//! carrying `reseed` restores the worker-held dual first (reconnect
+//! recovery; see [`super::socket`]).
+
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use crate::admm::session::EngineError;
+use crate::problems::WorkerScratch;
+use crate::rng::Pcg64;
+use crate::util::timer::{Clock, Stopwatch};
+
+use super::super::timeline::WorkerStats;
+use super::super::worker::{comm_leg_ms, worker_round};
+use super::super::{DelayModel, FaultModel, Protocol};
+use super::frame::{write_frame, FrameReader};
+use super::service::JobSpec;
+use super::wire::WireMsg;
+
+/// How a worker process finds and identifies itself to a master.
+#[derive(Clone, Debug)]
+pub struct WorkerClientConfig {
+    /// Master address, e.g. `"127.0.0.1:7401"`.
+    pub addr: String,
+    /// Job id to present in `hello` (must match the master's).
+    pub job_id: String,
+    /// Worker-slot hint: a reconnecting worker names its old slot so the
+    /// master re-delivers the in-flight broadcast; `None` takes any free
+    /// slot.
+    pub worker: Option<usize>,
+    /// Connect retries before giving up (the master may not be listening
+    /// yet when a fleet launches).
+    pub retries: u32,
+    /// Delay between connect attempts.
+    pub retry_delay: Duration,
+    /// Exit after this many completed rounds by dropping the connection
+    /// without a goodbye — the fault-injection hook the disconnect tests
+    /// use to emulate a crashing worker process.
+    pub max_rounds: Option<usize>,
+}
+
+impl Default for WorkerClientConfig {
+    fn default() -> Self {
+        WorkerClientConfig {
+            addr: "127.0.0.1:7401".to_string(),
+            job_id: "default".to_string(),
+            worker: None,
+            retries: 50,
+            retry_delay: Duration::from_millis(100),
+            max_rounds: None,
+        }
+    }
+}
+
+fn transport_err(msg: String) -> EngineError {
+    EngineError::Transport(msg)
+}
+
+fn connect(cfg: &WorkerClientConfig) -> Result<TcpStream, EngineError> {
+    let mut attempt = 0;
+    loop {
+        match TcpStream::connect(&cfg.addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                attempt += 1;
+                if attempt > cfg.retries {
+                    return Err(transport_err(format!(
+                        "cannot connect to {} after {} attempts: {e}",
+                        cfg.addr, attempt
+                    )));
+                }
+                std::thread::sleep(cfg.retry_delay);
+            }
+        }
+    }
+}
+
+/// Run one worker process to completion: connect (with retries),
+/// handshake, rebuild the local problem from the assigned [`JobSpec`],
+/// then answer `go` frames until `shutdown` (or `max_rounds`). Returns the
+/// worker's accumulated stats, exactly like the threaded loop does.
+pub fn run_worker(cfg: &WorkerClientConfig) -> Result<WorkerStats, EngineError> {
+    let stream = connect(cfg)?;
+    let _ = stream.set_nodelay(true);
+    let mut sink = &stream;
+    let mut src = &stream;
+    let mut reader = FrameReader::new();
+
+    let hello = WireMsg::Hello { job: cfg.job_id.clone(), worker: cfg.worker };
+    write_frame(&mut sink, &hello.encode())
+        .map_err(|e| transport_err(format!("hello write failed: {e}")))?;
+
+    let payload = reader
+        .next_frame(&mut src)
+        .map_err(|e| transport_err(format!("handshake read failed: {e}")))?
+        .ok_or_else(|| transport_err("master closed during handshake".to_string()))?;
+    let (worker, spec) = match WireMsg::decode(&payload).map_err(transport_err)? {
+        WireMsg::Assign { worker, spec } => {
+            (worker, JobSpec::from_json(&spec).map_err(transport_err)?)
+        }
+        WireMsg::Error { message } => {
+            return Err(transport_err(format!("master rejected hello: {message}")))
+        }
+        other => return Err(transport_err(format!("expected assign, got {other:?}"))),
+    };
+
+    // Rebuild the local problem deterministically from the spec — every
+    // process derives the identical instance from the shared seed.
+    let problem = spec.build_problem()?;
+    if worker >= problem.num_workers() {
+        return Err(transport_err(format!("assigned slot {worker} out of range")));
+    }
+    let local = std::sync::Arc::clone(problem.local(worker));
+    let protocol = if spec.alt { Protocol::AltScheme } else { Protocol::AdAdmm };
+    let rho = spec.rho;
+
+    // Same injected-latency models as the threaded mode, same seeds.
+    let mut delay = DelayModel::linear_spread(
+        spec.workers,
+        spec.fast_ms,
+        spec.slow_ms,
+        0.3,
+        spec.seed,
+    )
+    .sampler(worker);
+    let faults: Option<FaultModel> = None;
+    let mut fault_rng: Option<Pcg64> = None;
+
+    let n = local.dim();
+    let mut lam = vec![0.0; n]; // λ⁰ = 0 (reseed frames overwrite on reconnect)
+    let mut x = vec![0.0; n];
+    let mut scratch = WorkerScratch::new();
+    let mut stats = WorkerStats::new(worker);
+    let mut rounds = 0usize;
+    let wall = Stopwatch::start();
+
+    loop {
+        let payload = match reader
+            .next_frame(&mut src)
+            .map_err(|e| transport_err(format!("read failed: {e}")))?
+        {
+            Some(p) => p,
+            None => break, // master closed: treat as shutdown
+        };
+        let (x0, master_lam, reseed) = match WireMsg::decode(&payload).map_err(transport_err)? {
+            WireMsg::Go { x0, lam, reseed } => (x0, lam, reseed),
+            WireMsg::Shutdown => break,
+            other => return Err(transport_err(format!("expected go/shutdown, got {other:?}"))),
+        };
+        if let Some(r) = reseed {
+            if r.len() != lam.len() {
+                return Err(transport_err(format!(
+                    "reseed dual has {} coordinates, expected {}",
+                    r.len(),
+                    lam.len()
+                )));
+            }
+            lam.copy_from_slice(&r);
+        }
+        let t0 = Instant::now();
+
+        let ms = delay.sample_ms();
+        if ms > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(ms * 1e-3));
+        }
+
+        let lam_out = worker_round(
+            protocol,
+            &*local,
+            rho,
+            &mut lam,
+            &mut x,
+            &x0,
+            master_lam.as_deref(),
+            None,
+            &mut scratch,
+        );
+
+        let cms = comm_leg_ms(None, faults.as_ref(), fault_rng.as_mut(), &mut stats, 1.0);
+        if cms > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(cms * 1e-3));
+        }
+
+        let up = WireMsg::Up { worker, x: x.clone(), lam: lam_out };
+        write_frame(&mut sink, &up.encode())
+            .map_err(|e| transport_err(format!("up write failed: {e}")))?;
+
+        stats.updates += 1;
+        stats.busy_s += t0.elapsed().as_secs_f64();
+        rounds += 1;
+        if cfg.max_rounds == Some(rounds) {
+            break; // drop the connection cold — emulated process crash
+        }
+    }
+
+    stats.lifetime_s = wall.now_s();
+    Ok(stats)
+}

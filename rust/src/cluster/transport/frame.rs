@@ -1,0 +1,323 @@
+//! Length-prefixed frame codec — the lowest layer of the wire protocol.
+//!
+//! A frame is a little-endian `u32` payload length followed by exactly
+//! that many payload bytes. No magic, no checksum (TCP provides
+//! integrity), no escaping: the payload is opaque to this layer. The
+//! length is bounded by a caller-supplied maximum so a corrupt or hostile
+//! header cannot make the receiver allocate gigabytes.
+//!
+//! Reading is driven by [`FrameReader`], an incremental state machine that
+//! tolerates arbitrarily fragmented `read` returns (TCP segmentation,
+//! read timeouts used as keep-alive polls): partial headers and partial
+//! payloads are buffered across calls, and a timeout surfacing as
+//! [`std::io::ErrorKind::WouldBlock`]/`TimedOut` yields
+//! [`FrameEvent::WouldBlock`] without losing the bytes already consumed.
+
+use std::io::{ErrorKind, Read, Write};
+
+/// Default bound on a single frame's payload (64 MiB) — far above any
+/// owned-slice broadcast this crate produces, far below an allocation DoS.
+pub const MAX_FRAME_LEN: usize = 64 << 20;
+
+/// Why a frame could not be read.
+#[derive(Debug)]
+pub enum FrameError {
+    /// The underlying stream failed (not a timeout — timeouts surface as
+    /// [`FrameEvent::WouldBlock`]).
+    Io(std::io::Error),
+    /// The header announced a payload larger than the configured bound.
+    TooLarge { len: usize, max: usize },
+    /// The stream ended mid-frame: `got` of `want` bytes had arrived
+    /// (counting the 4 header bytes). A clean close *between* frames is
+    /// [`FrameEvent::Closed`], not an error.
+    Truncated { got: usize, want: usize },
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Io(e) => write!(f, "frame i/o error: {e}"),
+            FrameError::TooLarge { len, max } => {
+                write!(f, "frame length {len} exceeds the {max}-byte bound")
+            }
+            FrameError::Truncated { got, want } => {
+                write!(f, "stream closed mid-frame ({got} of {want} bytes)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+impl From<std::io::Error> for FrameError {
+    fn from(e: std::io::Error) -> Self {
+        FrameError::Io(e)
+    }
+}
+
+/// One step of [`FrameReader::poll`].
+#[derive(Debug)]
+pub enum FrameEvent {
+    /// A complete payload (possibly empty — zero-length frames are legal).
+    Frame(Vec<u8>),
+    /// The read timed out ([`ErrorKind::WouldBlock`]/`TimedOut`); call
+    /// again — any partial frame stays buffered.
+    WouldBlock,
+    /// The peer closed the stream cleanly on a frame boundary.
+    Closed,
+}
+
+/// Incremental frame reassembly over any [`Read`].
+///
+/// One `FrameReader` per connection: it owns the partial-frame buffer, so
+/// interleaving streams through one reader would corrupt both.
+pub struct FrameReader {
+    max_len: usize,
+    /// Bytes of the 4-byte header received so far.
+    header: [u8; 4],
+    header_filled: usize,
+    /// Payload buffer, allocated once the header is complete.
+    payload: Vec<u8>,
+    payload_filled: usize,
+    /// Whether the header is complete and `payload` is live.
+    in_payload: bool,
+}
+
+impl FrameReader {
+    /// A reader enforcing the default [`MAX_FRAME_LEN`] bound.
+    pub fn new() -> Self {
+        Self::with_max_len(MAX_FRAME_LEN)
+    }
+
+    /// A reader enforcing a custom payload bound (tests use tiny ones).
+    pub fn with_max_len(max_len: usize) -> Self {
+        FrameReader {
+            max_len,
+            header: [0; 4],
+            header_filled: 0,
+            payload: Vec::new(),
+            payload_filled: 0,
+            in_payload: false,
+        }
+    }
+
+    /// Pull from `r` until one frame completes, the stream closes, or a
+    /// timeout fires. Short reads are fine: state persists across calls.
+    pub fn poll(&mut self, r: &mut impl Read) -> Result<FrameEvent, FrameError> {
+        loop {
+            if !self.in_payload {
+                // Header phase.
+                match r.read(&mut self.header[self.header_filled..]) {
+                    Ok(0) => {
+                        if self.header_filled == 0 {
+                            return Ok(FrameEvent::Closed);
+                        }
+                        return Err(FrameError::Truncated {
+                            got: self.header_filled,
+                            want: 4 + u32::from_le_bytes(self.header) as usize,
+                        });
+                    }
+                    Ok(n) => self.header_filled += n,
+                    Err(e) => return Self::map_err(e),
+                }
+                if self.header_filled < 4 {
+                    continue;
+                }
+                let len = u32::from_le_bytes(self.header) as usize;
+                if len > self.max_len {
+                    return Err(FrameError::TooLarge { len, max: self.max_len });
+                }
+                self.in_payload = true;
+                self.payload = vec![0; len];
+                self.payload_filled = 0;
+            }
+            // Payload phase (zero-length frames complete immediately).
+            if self.payload_filled == self.payload.len() {
+                let frame = std::mem::take(&mut self.payload);
+                self.in_payload = false;
+                self.header_filled = 0;
+                self.payload_filled = 0;
+                return Ok(FrameEvent::Frame(frame));
+            }
+            match r.read(&mut self.payload[self.payload_filled..]) {
+                Ok(0) => {
+                    return Err(FrameError::Truncated {
+                        got: 4 + self.payload_filled,
+                        want: 4 + self.payload.len(),
+                    })
+                }
+                Ok(n) => self.payload_filled += n,
+                Err(e) => return Self::map_err(e),
+            }
+        }
+    }
+
+    /// Block until a full frame arrives (treats timeouts as fatal — for
+    /// callers that did not set a read timeout).
+    pub fn next_frame(&mut self, r: &mut impl Read) -> Result<Option<Vec<u8>>, FrameError> {
+        loop {
+            match self.poll(r)? {
+                FrameEvent::Frame(p) => return Ok(Some(p)),
+                FrameEvent::Closed => return Ok(None),
+                FrameEvent::WouldBlock => continue,
+            }
+        }
+    }
+
+    fn map_err(e: std::io::Error) -> Result<FrameEvent, FrameError> {
+        match e.kind() {
+            ErrorKind::WouldBlock | ErrorKind::TimedOut => Ok(FrameEvent::WouldBlock),
+            ErrorKind::Interrupted => Ok(FrameEvent::WouldBlock),
+            _ => Err(FrameError::Io(e)),
+        }
+    }
+}
+
+impl Default for FrameReader {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Write one frame: 4-byte little-endian length, then the payload.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> std::io::Result<()> {
+    let len = u32::try_from(payload.len()).map_err(|_| {
+        std::io::Error::new(ErrorKind::InvalidInput, "frame payload exceeds u32::MAX")
+    })?;
+    w.write_all(&len.to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn framed(payload: &[u8]) -> Vec<u8> {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, payload).unwrap();
+        buf
+    }
+
+    fn read_all(bytes: &[u8], max: usize) -> Result<Vec<Vec<u8>>, FrameError> {
+        let mut cursor = std::io::Cursor::new(bytes);
+        let mut reader = FrameReader::with_max_len(max);
+        let mut out = Vec::new();
+        while let Some(p) = reader.next_frame(&mut cursor)? {
+            out.push(p);
+        }
+        Ok(out)
+    }
+
+    #[test]
+    fn round_trips_frames_back_to_back() {
+        let mut bytes = framed(b"hello");
+        bytes.extend(framed(b""));
+        bytes.extend(framed(&[0xff; 300]));
+        let frames = read_all(&bytes, MAX_FRAME_LEN).unwrap();
+        assert_eq!(frames.len(), 3);
+        assert_eq!(frames[0], b"hello");
+        assert_eq!(frames[1], b"");
+        assert_eq!(frames[2], vec![0xff; 300]);
+    }
+
+    #[test]
+    fn zero_length_frame_is_legal() {
+        let frames = read_all(&framed(b""), 16).unwrap();
+        assert_eq!(frames, vec![Vec::<u8>::new()]);
+    }
+
+    #[test]
+    fn truncated_header_is_an_error() {
+        // 2 of the 4 header bytes, then EOF.
+        let err = read_all(&framed(b"abcd")[..2], 16).unwrap_err();
+        match err {
+            FrameError::Truncated { got, .. } => assert_eq!(got, 2),
+            other => panic!("expected Truncated, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_payload_is_an_error() {
+        // Header promises 4 payload bytes; only 1 arrives.
+        let err = read_all(&framed(b"abcd")[..5], 16).unwrap_err();
+        match err {
+            FrameError::Truncated { got, want } => {
+                assert_eq!(got, 5);
+                assert_eq!(want, 8);
+            }
+            other => panic!("expected Truncated, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversize_frame_is_rejected_before_allocation() {
+        let bytes = framed(&[7u8; 100]);
+        let err = read_all(&bytes, 99).unwrap_err();
+        match err {
+            FrameError::TooLarge { len, max } => {
+                assert_eq!(len, 100);
+                assert_eq!(max, 99);
+            }
+            other => panic!("expected TooLarge, got {other:?}"),
+        }
+    }
+
+    /// A `Read` that returns the stream in adversarially small pieces and
+    /// interleaves spurious timeouts — the shapes a real socket produces.
+    struct ChunkedReader {
+        bytes: Vec<u8>,
+        pos: usize,
+        rng: Pcg64,
+    }
+
+    impl Read for ChunkedReader {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            if self.pos == self.bytes.len() {
+                return Ok(0);
+            }
+            // One in four reads "times out" instead of delivering bytes.
+            if self.rng.bernoulli(0.25) {
+                return Err(std::io::Error::new(ErrorKind::WouldBlock, "poll"));
+            }
+            let n = 1 + (self.rng.next_u64() as usize) % 3.min(buf.len()).max(1);
+            let n = n.min(self.bytes.len() - self.pos).min(buf.len());
+            buf[..n].copy_from_slice(&self.bytes[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+
+    /// Property test (seed-swept): any interleaving of partial reads and
+    /// timeouts reassembles the exact frame sequence.
+    #[test]
+    fn partial_reads_and_timeouts_reassemble_exactly() {
+        for seed in 0..25u64 {
+            let mut rng = Pcg64::seed_from_u64(seed);
+            let n_frames = 1 + (rng.next_u64() % 5) as usize;
+            let payloads: Vec<Vec<u8>> = (0..n_frames)
+                .map(|_| {
+                    let len = (rng.next_u64() % 64) as usize;
+                    (0..len).map(|_| rng.next_u64() as u8).collect()
+                })
+                .collect();
+            let mut bytes = Vec::new();
+            for p in &payloads {
+                bytes.extend(framed(p));
+            }
+            let mut reader = FrameReader::new();
+            let mut src = ChunkedReader { bytes, pos: 0, rng };
+            let mut got = Vec::new();
+            loop {
+                match reader.poll(&mut src) {
+                    Ok(FrameEvent::Frame(p)) => got.push(p),
+                    Ok(FrameEvent::WouldBlock) => continue,
+                    Ok(FrameEvent::Closed) => break,
+                    Err(e) => panic!("seed {seed}: {e}"),
+                }
+            }
+            assert_eq!(got, payloads, "seed {seed}");
+        }
+    }
+}

@@ -1,0 +1,36 @@
+//! Real-network transport: the star protocol of [`super`] spoken over
+//! TCP, plus the long-lived solver service built on it.
+//!
+//! Layering, bottom up:
+//!
+//! - [`frame`] — length-prefixed frame codec (u32 LE length + payload,
+//!   bounded, incremental reassembly over fragmented reads);
+//! - [`wire`] — the typed messages inside frames, serialized with the
+//!   in-repo JSON codec's bit-exact hex-f64 encoding;
+//! - [`socket`] — [`SocketSource`], the TCP-backed
+//!   [`WorkerSource`](crate::admm::engine::WorkerSource): disconnects are
+//!   Assumption-1 outages, reconnects re-deliver the in-flight broadcast
+//!   with the worker-held dual, lockstep runs are bit-comparable to trace
+//!   replay;
+//! - [`client`] — the worker-side process loop, sharing the round
+//!   arithmetic with the threaded worker so both transports compute
+//!   bit-identical messages;
+//! - [`service`] — job specs, the per-job master runner, and the
+//!   `admm-serve`/`submit` control plane.
+//!
+//! Everything here is dependency-free `std::net`; the engine above sees
+//! only the [`WorkerSource`](crate::admm::engine::WorkerSource) trait.
+
+pub mod frame;
+pub mod wire;
+pub mod socket;
+pub mod client;
+pub mod service;
+
+pub use frame::{write_frame, FrameError, FrameEvent, FrameReader, MAX_FRAME_LEN};
+pub use wire::WireMsg;
+pub use socket::{SocketSource, TransportConfig, TransportStats};
+pub use client::{run_worker, WorkerClientConfig};
+pub use service::{
+    roundrobin_trace, run_job, run_reference, serve, submit, JobReport, JobSpec,
+};

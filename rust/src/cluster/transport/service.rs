@@ -1,0 +1,582 @@
+//! The long-lived solver service: job specs, the per-job runner, and the
+//! `admm-serve` control plane.
+//!
+//! A *job* is a fully deterministic description of a solve — synthetic
+//! LASSO instance (seeded), algorithm, gate parameters, optional block
+//! sharding, optional lockstep trace. Master and every worker process
+//! rebuild the identical problem from the shared [`JobSpec`], so the only
+//! bytes on the wire are protocol state, never data matrices.
+//!
+//! Control plane (`admm-serve`): a client connects, sends `submit` with a
+//! spec; the service binds a fresh per-job rendezvous port, replies
+//! `accepted {job, port}`, runs the job as a [`SocketSource`] session
+//! (concurrent jobs each get their own port and thread, keyed by job id),
+//! and finally sends `report` with iterations, stop reason, wall time,
+//! wire-byte counters, realized outages and the FNV x₀ digest.
+//!
+//! [`run_reference`] replays the *same* spec through the in-process
+//! [`TraceSource`](crate::admm::engine::TraceSource) — the loopback e2e CI
+//! job asserts its digest is bit-identical to the socket run's.
+
+use std::net::{TcpListener, TcpStream};
+
+use crate::admm::arrivals::{ArrivalModel, ArrivalTrace};
+use crate::admm::engine::{AltScheme, PartialBarrier};
+use crate::admm::session::{EngineError, Session, SessionOutcome, StepStatus};
+use crate::admm::AdmmConfig;
+use crate::bench::json::{json_usize, JsonValue};
+use crate::data::LassoInstance;
+use crate::problems::{BlockPattern, ConsensusProblem};
+use crate::rng::Pcg64;
+use crate::util::cli::ArgParser;
+use crate::util::digest::x0_digest;
+
+use super::frame::{write_frame, FrameReader};
+use super::socket::{SocketSource, TransportConfig, TransportStats};
+use super::wire::WireMsg;
+
+/// Everything needed to rebuild one solve job deterministically in any
+/// process — the `assign.spec`/`submit.spec` payload.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobSpec {
+    pub job_id: String,
+    pub workers: usize,
+    pub m: usize,
+    pub n: usize,
+    pub seed: u64,
+    pub rho: f64,
+    pub gamma: f64,
+    pub tau: usize,
+    pub min_arrivals: usize,
+    pub iters: usize,
+    pub tol: f64,
+    /// Block-sharded general-form consensus when > 0 (LASSO only).
+    pub shard_blocks: usize,
+    pub shard_owners: usize,
+    /// Algorithm 4 (master-owned duals) instead of Algorithm 2.
+    pub alt: bool,
+    /// Prescribe the round-robin lockstep trace — deterministic runs,
+    /// bit-comparable to trace replay.
+    pub lockstep: bool,
+    /// Injected per-worker compute delay spread (milliseconds).
+    pub fast_ms: f64,
+    pub slow_ms: f64,
+    /// Master-side checkpoint cadence in iterations (0 = never).
+    pub ckpt_every: usize,
+}
+
+impl Default for JobSpec {
+    fn default() -> Self {
+        JobSpec {
+            job_id: "job-0".to_string(),
+            workers: 4,
+            m: 60,
+            n: 40,
+            seed: 1,
+            rho: 500.0,
+            gamma: 0.0,
+            tau: 3,
+            min_arrivals: 1,
+            iters: 60,
+            tol: 0.0,
+            shard_blocks: 0,
+            shard_owners: 2,
+            alt: false,
+            lockstep: true,
+            fast_ms: 0.0,
+            slow_ms: 0.0,
+            ckpt_every: 0,
+        }
+    }
+}
+
+impl JobSpec {
+    /// Build a spec from CLI flags (shared by `admm-serve submit` and the
+    /// `ad-admm transport-digest` reference subcommand, so both sides of
+    /// the CI digest comparison parse identically).
+    pub fn from_args(args: &ArgParser) -> Self {
+        let d = JobSpec::default();
+        JobSpec {
+            job_id: args.get_or("job", &d.job_id),
+            workers: args.get_parse_or("workers", d.workers),
+            m: args.get_parse_or("m", d.m),
+            n: args.get_parse_or("n", d.n),
+            seed: args.get_parse_or("seed", d.seed),
+            rho: args.get_parse_or("rho", d.rho),
+            gamma: args.get_parse_or("gamma", d.gamma),
+            tau: args.get_parse_or("tau", d.tau),
+            min_arrivals: args.get_parse_or("min-arrivals", d.min_arrivals),
+            iters: args.get_parse_or("iters", d.iters),
+            tol: args.get_parse_or("tol", d.tol),
+            shard_blocks: args.get_parse_or("shard-blocks", d.shard_blocks),
+            shard_owners: args.get_parse_or("shard-owners", d.shard_owners),
+            alt: args.has_flag("alt"),
+            lockstep: !args.has_flag("free-running"),
+            fast_ms: args.get_parse_or("fast-ms", d.fast_ms),
+            slow_ms: args.get_parse_or("slow-ms", d.slow_ms),
+            ckpt_every: args.get_parse_or("checkpoint-every", d.ckpt_every),
+        }
+    }
+
+    pub fn to_json(&self) -> JsonValue {
+        JsonValue::Obj(vec![
+            ("job_id".to_string(), JsonValue::Str(self.job_id.clone())),
+            ("workers".to_string(), self.workers.into()),
+            ("m".to_string(), self.m.into()),
+            ("n".to_string(), self.n.into()),
+            // Full-range u64: as a string, like checkpoint meta seeds.
+            ("seed".to_string(), JsonValue::Str(self.seed.to_string())),
+            ("rho".to_string(), self.rho.into()),
+            ("gamma".to_string(), self.gamma.into()),
+            ("tau".to_string(), self.tau.into()),
+            ("min_arrivals".to_string(), self.min_arrivals.into()),
+            ("iters".to_string(), self.iters.into()),
+            ("tol".to_string(), self.tol.into()),
+            ("shard_blocks".to_string(), self.shard_blocks.into()),
+            ("shard_owners".to_string(), self.shard_owners.into()),
+            ("alt".to_string(), self.alt.into()),
+            ("lockstep".to_string(), self.lockstep.into()),
+            ("fast_ms".to_string(), self.fast_ms.into()),
+            ("slow_ms".to_string(), self.slow_ms.into()),
+            ("ckpt_every".to_string(), self.ckpt_every.into()),
+        ])
+    }
+
+    pub fn from_json(doc: &JsonValue) -> Result<Self, String> {
+        let get = |key: &str| doc.get(key).ok_or_else(|| format!("job spec missing {key:?}"));
+        let usize_of = |key: &str| get(key).and_then(json_usize);
+        let f64_of = |key: &str| {
+            get(key)?.as_f64().ok_or_else(|| format!("job spec field {key:?} is not a number"))
+        };
+        let bool_of = |key: &str| {
+            get(key)?.as_bool().ok_or_else(|| format!("job spec field {key:?} is not a bool"))
+        };
+        let str_of = |key: &str| {
+            get(key)?
+                .as_str()
+                .map(str::to_string)
+                .ok_or_else(|| format!("job spec field {key:?} is not a string"))
+        };
+        Ok(JobSpec {
+            job_id: str_of("job_id")?,
+            workers: usize_of("workers")?,
+            m: usize_of("m")?,
+            n: usize_of("n")?,
+            seed: str_of("seed")?
+                .parse()
+                .map_err(|e| format!("job spec seed is not a u64: {e}"))?,
+            rho: f64_of("rho")?,
+            gamma: f64_of("gamma")?,
+            tau: usize_of("tau")?,
+            min_arrivals: usize_of("min_arrivals")?,
+            iters: usize_of("iters")?,
+            tol: f64_of("tol")?,
+            shard_blocks: usize_of("shard_blocks")?,
+            shard_owners: usize_of("shard_owners")?,
+            alt: bool_of("alt")?,
+            lockstep: bool_of("lockstep")?,
+            fast_ms: f64_of("fast_ms")?,
+            slow_ms: f64_of("slow_ms")?,
+            ckpt_every: usize_of("ckpt_every")?,
+        })
+    }
+
+    /// Rebuild the job's consensus problem — identical in every process
+    /// that holds the same spec (seeded synthetic LASSO, optional
+    /// round-robin block sharding).
+    pub fn build_problem(&self) -> Result<ConsensusProblem, EngineError> {
+        let mut rng = Pcg64::seed_from_u64(self.seed);
+        let inst = LassoInstance::synthetic(&mut rng, self.workers, self.m, self.n, 0.05, 0.1);
+        if self.shard_blocks > 0 {
+            let pattern =
+                BlockPattern::round_robin(self.n, self.shard_blocks, self.workers, self.shard_owners)
+                    .map_err(EngineError::Block)?;
+            inst.sharded_problem(&pattern).map_err(EngineError::Block)
+        } else {
+            Ok(inst.problem())
+        }
+    }
+
+    fn admm_config(&self) -> AdmmConfig {
+        AdmmConfig {
+            rho: self.rho,
+            gamma: self.gamma,
+            tau: self.tau,
+            min_arrivals: self.min_arrivals,
+            max_iters: self.iters,
+            x0_tol: self.tol,
+            ..Default::default()
+        }
+    }
+
+    /// The job's lockstep trace (when enabled): the round-robin
+    /// alternation below, long enough for `iters` iterations.
+    pub fn trace(&self) -> Option<ArrivalTrace> {
+        self.lockstep.then(|| roundrobin_trace(self.workers, self.iters))
+    }
+}
+
+/// A deterministic partially-asynchronous arrival schedule: at iteration
+/// `k`, workers with `(i + k) % 2 == 0` arrive (every worker arrives every
+/// other iteration, so staleness stays ≤ 2 and any τ ≥ 3 gate is
+/// satisfied). Empty sets — possible only for N = 1 — fall back to
+/// `{k % N}`.
+pub fn roundrobin_trace(n_workers: usize, iters: usize) -> ArrivalTrace {
+    let sets = (0..iters)
+        .map(|k| {
+            let set: Vec<usize> = (0..n_workers).filter(|i| (i + k) % 2 == 0).collect();
+            if set.is_empty() {
+                vec![k % n_workers]
+            } else {
+                set
+            }
+        })
+        .collect();
+    ArrivalTrace { sets }
+}
+
+fn run_session_to_done<S: crate::admm::engine::WorkerSource>(
+    session: &mut Session<'_, S>,
+    ckpt_every: usize,
+) -> Result<(), EngineError> {
+    loop {
+        match session.step()? {
+            StepStatus::Iterated(_) => {
+                let k = session.iteration();
+                if ckpt_every > 0 && k % ckpt_every == 0 {
+                    // Periodic master-side checkpoint: held messages and
+                    // per-worker broadcast snapshots serialize; the
+                    // document is kept by the caller of the service binary
+                    // via --checkpoint-path (here we only exercise and
+                    // validate the path).
+                    session.checkpoint()?;
+                }
+            }
+            StepStatus::Done(_) => return Ok(()),
+        }
+    }
+}
+
+/// Replay `spec` through the in-process trace-driven source. This is the
+/// digest oracle for the loopback e2e: a socket run of the same lockstep
+/// spec must produce a bit-identical x₀.
+pub fn run_reference(spec: &JobSpec) -> Result<(SessionOutcome, u64), EngineError> {
+    let problem = spec.build_problem()?;
+    let arrivals = match spec.trace() {
+        Some(t) => ArrivalModel::Trace(t),
+        None => ArrivalModel::Full,
+    };
+    let builder = Session::builder()
+        .problem(&problem)
+        .config(spec.admm_config())
+        .arrivals(&arrivals)
+        .residual_stopping(true);
+    let mut session = if spec.alt {
+        builder.policy(AltScheme { tau: spec.tau }).build()?
+    } else {
+        builder.policy(PartialBarrier { tau: spec.tau }).build()?
+    };
+    session.run_to_completion()?;
+    let (outcome, _) = session.finish();
+    let digest = x0_digest(&outcome.state.x0);
+    Ok((outcome, digest))
+}
+
+/// One finished job's result — the `report.report` payload.
+#[derive(Clone, Debug)]
+pub struct JobReport {
+    pub job_id: String,
+    pub iterations: usize,
+    pub stop: String,
+    /// FNV-1a digest of the final x₀ bit patterns, 16 hex digits.
+    pub digest: String,
+    pub wall_clock_s: f64,
+    pub master_wait_s: f64,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+    /// Realized worker-disconnect windows `(worker, from, until)`.
+    pub outages: Vec<(usize, usize, usize)>,
+}
+
+impl JobReport {
+    pub fn to_json(&self) -> JsonValue {
+        JsonValue::Obj(vec![
+            ("job_id".to_string(), JsonValue::Str(self.job_id.clone())),
+            ("iterations".to_string(), self.iterations.into()),
+            ("stop".to_string(), JsonValue::Str(self.stop.clone())),
+            ("digest".to_string(), JsonValue::Str(self.digest.clone())),
+            ("wall_clock_s".to_string(), self.wall_clock_s.into()),
+            ("master_wait_s".to_string(), self.master_wait_s.into()),
+            ("bytes_in".to_string(), (self.bytes_in as usize).into()),
+            ("bytes_out".to_string(), (self.bytes_out as usize).into()),
+            (
+                "outages".to_string(),
+                JsonValue::Arr(
+                    self.outages
+                        .iter()
+                        .map(|&(w, f, u)| {
+                            JsonValue::Obj(vec![
+                                ("worker".to_string(), w.into()),
+                                ("from".to_string(), f.into()),
+                                ("until".to_string(), u.into()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Run one job as the master side of a [`SocketSource`] session on an
+/// already-bound rendezvous listener. Blocks until the run stops.
+pub fn run_job(listener: TcpListener, spec: &JobSpec) -> Result<JobReport, EngineError> {
+    let problem = spec.build_problem()?;
+    let transport = TransportConfig {
+        job_id: spec.job_id.clone(),
+        assign_spec: spec.to_json(),
+        lockstep: spec.trace(),
+        shard: problem.pattern().cloned(),
+        ..TransportConfig::default()
+    };
+    let source = SocketSource::from_listener(listener, spec.workers, transport)?;
+    let builder = Session::builder()
+        .problem(&problem)
+        .config(spec.admm_config())
+        .residual_stopping(true);
+    let mut session = if spec.alt {
+        builder.policy(AltScheme { tau: spec.tau }).build_typed(source)?
+    } else {
+        builder.policy(PartialBarrier { tau: spec.tau }).build_typed(source)?
+    };
+    run_session_to_done(&mut session, spec.ckpt_every)?;
+    let (outcome, source) = session.finish();
+    let stats: TransportStats = source.finish();
+    Ok(JobReport {
+        job_id: spec.job_id.clone(),
+        iterations: outcome.iterations,
+        stop: format!("{:?}", outcome.stop),
+        digest: format!("{:016x}", x0_digest(&outcome.state.x0)),
+        wall_clock_s: stats.wall_clock_s,
+        master_wait_s: stats.master_wait_s,
+        bytes_in: stats.bytes_in,
+        bytes_out: stats.bytes_out,
+        outages: stats.outages.iter().map(|o| (o.worker, o.from_iter, o.until_iter)).collect(),
+    })
+}
+
+fn control_err(stream: &TcpStream, message: String) {
+    let mut sink = stream;
+    let _ = write_frame(&mut sink, &WireMsg::Error { message }.encode());
+}
+
+/// The `admm-serve` accept loop: each control connection submits one job;
+/// jobs run concurrently (thread per job, rendezvous port per job) and the
+/// report is sent back on the submitting connection. With `oneshot`, the
+/// service exits after the first job completes — the CI e2e mode.
+pub fn serve(listen: &str, oneshot: bool) -> Result<(), EngineError> {
+    let control = TcpListener::bind(listen)
+        .map_err(|e| EngineError::Transport(format!("cannot bind control {listen}: {e}")))?;
+    let addr = control
+        .local_addr()
+        .map_err(|e| EngineError::Transport(format!("control addr: {e}")))?;
+    println!("admm-serve listening on {addr}");
+    let mut jobs: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    for conn in control.incoming() {
+        let stream = match conn {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        let mut reader = FrameReader::new();
+        let payload = {
+            let mut src = &stream;
+            match reader.next_frame(&mut src) {
+                Ok(Some(p)) => p,
+                _ => continue,
+            }
+        };
+        let spec = match WireMsg::decode(&payload) {
+            Ok(WireMsg::Submit { spec }) => match JobSpec::from_json(&spec) {
+                Ok(s) => s,
+                Err(e) => {
+                    control_err(&stream, format!("bad job spec: {e}"));
+                    continue;
+                }
+            },
+            Ok(other) => {
+                control_err(&stream, format!("expected submit, got {other:?}"));
+                continue;
+            }
+            Err(e) => {
+                control_err(&stream, format!("bad frame: {e}"));
+                continue;
+            }
+        };
+        let rendezvous = match TcpListener::bind("127.0.0.1:0") {
+            Ok(l) => l,
+            Err(e) => {
+                control_err(&stream, format!("cannot bind job port: {e}"));
+                continue;
+            }
+        };
+        let port = rendezvous.local_addr().map(|a| a.port()).unwrap_or(0);
+        {
+            let accepted = WireMsg::Accepted { job: spec.job_id.clone(), port };
+            let mut sink = &stream;
+            if write_frame(&mut sink, &accepted.encode()).is_err() {
+                continue;
+            }
+        }
+        println!("job {} accepted: workers connect on 127.0.0.1:{port}", spec.job_id);
+        let job = move || match run_job(rendezvous, &spec) {
+            Ok(report) => {
+                println!(
+                    "job {} done: {} iterations, stop={}, {} outage(s), \
+                     {} bytes in / {} bytes out",
+                    report.job_id,
+                    report.iterations,
+                    report.stop,
+                    report.outages.len(),
+                    report.bytes_in,
+                    report.bytes_out
+                );
+                println!("final x0 digest {}", report.digest);
+                let msg =
+                    WireMsg::Report { job: report.job_id.clone(), report: report.to_json() };
+                let mut sink = &stream;
+                let _ = write_frame(&mut sink, &msg.encode());
+            }
+            Err(e) => {
+                eprintln!("job failed: {e}");
+                control_err(&stream, format!("job failed: {e}"));
+            }
+        };
+        if oneshot {
+            job();
+            return Ok(());
+        }
+        jobs.push(
+            std::thread::Builder::new()
+                .name("admm-serve-job".to_string())
+                .spawn(job)
+                .map_err(|e| EngineError::Transport(format!("cannot spawn job thread: {e}")))?,
+        );
+        jobs.retain(|h| !h.is_finished());
+    }
+    Ok(())
+}
+
+/// Submit `spec` to a running `admm-serve` and block for the report.
+/// Prints the rendezvous port as soon as the job is accepted (scripts
+/// parse it to launch workers) and the digest line when the job finishes.
+pub fn submit(addr: &str, spec: &JobSpec) -> Result<JobReport, EngineError> {
+    let stream = TcpStream::connect(addr)
+        .map_err(|e| EngineError::Transport(format!("cannot connect to {addr}: {e}")))?;
+    {
+        let mut sink = &stream;
+        write_frame(&mut sink, &WireMsg::Submit { spec: spec.to_json() }.encode())
+            .map_err(|e| EngineError::Transport(format!("submit write failed: {e}")))?;
+    }
+    let mut reader = FrameReader::new();
+    let mut src = &stream;
+    let next = |reader: &mut FrameReader, src: &mut &TcpStream| -> Result<WireMsg, EngineError> {
+        let payload = reader
+            .next_frame(src)
+            .map_err(|e| EngineError::Transport(format!("control read failed: {e}")))?
+            .ok_or_else(|| EngineError::Transport("serve closed the control link".to_string()))?;
+        WireMsg::decode(&payload).map_err(EngineError::Transport)
+    };
+    match next(&mut reader, &mut src)? {
+        WireMsg::Accepted { job, port } => {
+            println!("job {job} accepted: workers connect on 127.0.0.1:{port}");
+        }
+        WireMsg::Error { message } => {
+            return Err(EngineError::Transport(format!("submit rejected: {message}")))
+        }
+        other => {
+            return Err(EngineError::Transport(format!("expected accepted, got {other:?}")))
+        }
+    }
+    match next(&mut reader, &mut src)? {
+        WireMsg::Report { job, report } => {
+            let field = |key: &str| report.get(key).cloned().unwrap_or(JsonValue::Null);
+            let digest = field("digest").as_str().unwrap_or("").to_string();
+            let out = JobReport {
+                job_id: job,
+                iterations: field("iterations").as_f64().unwrap_or(0.0) as usize,
+                stop: field("stop").as_str().unwrap_or("").to_string(),
+                digest: digest.clone(),
+                wall_clock_s: field("wall_clock_s").as_f64().unwrap_or(0.0),
+                master_wait_s: field("master_wait_s").as_f64().unwrap_or(0.0),
+                bytes_in: field("bytes_in").as_f64().unwrap_or(0.0) as u64,
+                bytes_out: field("bytes_out").as_f64().unwrap_or(0.0) as u64,
+                outages: field("outages")
+                    .items()
+                    .iter()
+                    .filter_map(|o| {
+                        Some((
+                            json_usize(o.get("worker")?).ok()?,
+                            json_usize(o.get("from")?).ok()?,
+                            json_usize(o.get("until")?).ok()?,
+                        ))
+                    })
+                    .collect(),
+            };
+            println!(
+                "job {} done: {} iterations, stop={}, {} outage(s)",
+                out.job_id,
+                out.iterations,
+                out.stop,
+                out.outages.len()
+            );
+            println!("final x0 digest {digest}");
+            Ok(out)
+        }
+        WireMsg::Error { message } => {
+            Err(EngineError::Transport(format!("job failed: {message}")))
+        }
+        other => Err(EngineError::Transport(format!("expected report, got {other:?}"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_spec_round_trips_through_json() {
+        let spec = JobSpec {
+            job_id: "j-42".to_string(),
+            seed: u64::MAX - 3, // > 2^53: must survive via the string path
+            shard_blocks: 5,
+            alt: true,
+            ..JobSpec::default()
+        };
+        let back = JobSpec::from_json(&spec.to_json()).expect("round trip");
+        assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn roundrobin_trace_alternates_and_bounds_staleness() {
+        let t = roundrobin_trace(4, 10);
+        assert_eq!(t.sets.len(), 10);
+        assert_eq!(t.sets[0], vec![0, 2]);
+        assert_eq!(t.sets[1], vec![1, 3]);
+        // Every worker arrives every other iteration: delay ≤ 2 ⇒ the
+        // trace satisfies Assumption 1 for any τ ≥ 3.
+        assert!(t.satisfies_bounded_delay(4, 3));
+        // Degenerate single-worker case never produces an empty set.
+        let one = roundrobin_trace(1, 5);
+        assert!(one.sets.iter().all(|s| s == &vec![0]));
+    }
+
+    #[test]
+    fn reference_run_is_reproducible() {
+        let spec = JobSpec { iters: 12, ..JobSpec::default() };
+        let (a, da) = run_reference(&spec).expect("run");
+        let (b, db) = run_reference(&spec).expect("run");
+        assert_eq!(da, db);
+        let bits = |v: &[f64]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a.state.x0), bits(&b.state.x0));
+    }
+}

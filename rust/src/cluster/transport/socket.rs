@@ -1,0 +1,784 @@
+//! [`SocketSource`] — the real-network [`WorkerSource`]: the
+//! `ThreadedSource` star protocol spoken over TCP.
+//!
+//! One acceptor thread owns the listener; each accepted connection
+//! handshakes (`hello` → `assign`), then gets a dedicated reader thread
+//! that decodes [`WireMsg::Up`] frames into the same shared event channel
+//! the in-process source uses, so the master's gather/pending logic is
+//! identical across transports. The master writes `go`/`shutdown` frames
+//! directly on its per-worker stream handles.
+//!
+//! ## Disconnects are Assumption-1 outages
+//!
+//! The paper's bounded-delay Assumption 1 says every worker's update is at
+//! most τ master iterations stale. A worker process that drops its TCP
+//! connection is exactly the `FaultPlan` outage model realized by a real
+//! network: its slot is treated as down at the gate — it neither counts
+//! toward `|A_k| ≥ A` nor blocks the forced-τ wait — and the iteration
+//! window of the disconnect is recorded as a realized
+//! [`Outage`](crate::admm::engine::Outage) (see
+//! [`SocketSource::realized_outages`]). On reconnect the master re-delivers
+//! the worker's last broadcast together with its worker-held dual λ_i
+//! (`go.reseed`), so the restarted process recomputes the in-flight round
+//! from exactly the state the dead one held — the re-entry-with-stale-
+//! iterate semantics of the threaded mode's held-`pending` outages, and
+//! the reason lockstep runs stay bit-identical across a kill + restart.
+//! An outage outlasting τ iterations violates Assumption 1, as it would
+//! under any source; the τ gate simply stops forcing waits on a worker
+//! that cannot answer.
+//!
+//! Under a `lockstep_trace` the master instead *waits* for every
+//! prescribed worker — through disconnects, until a replacement process
+//! rejoins — which keeps loopback runs deterministic and bit-comparable
+//! to [`TraceSource`](crate::admm::engine::TraceSource) replay.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::admm::arrivals::ArrivalTrace;
+use crate::admm::engine::{ActiveSet, Gate, MasterView, Outage, UpdatePolicy, WorkerSource};
+use crate::admm::session::EngineError;
+use crate::admm::AdmmState;
+use crate::bench::json::{hex_vec, json_usize, vec_from_hex, JsonValue};
+use crate::problems::BlockPattern;
+use crate::util::timer::{Clock, Stopwatch};
+
+use super::super::messages::WorkerMsg;
+use super::frame::{write_frame, FrameEvent, FrameReader, MAX_FRAME_LEN};
+use super::wire::WireMsg;
+
+/// Transport knobs for a [`SocketSource`] (and the per-connection
+/// timeouts it applies to every accepted stream).
+#[derive(Clone, Debug)]
+pub struct TransportConfig {
+    /// Job identifier workers must present in their `hello`.
+    pub job_id: String,
+    /// Opaque job object sent to each worker in `assign` — everything a
+    /// worker needs to rebuild its local problem deterministically.
+    pub assign_spec: JsonValue,
+    /// Replay exactly these arrival sets (deterministic loopback runs,
+    /// bit-comparable to trace replay). `None` gathers at the live gate.
+    pub lockstep: Option<ArrivalTrace>,
+    /// Block-sharding pattern (from the problem; `None` = dense):
+    /// broadcasts carry owned slices, like the other sources.
+    pub shard: Option<Arc<BlockPattern>>,
+    /// Reader-thread poll interval: how long a blocking read waits before
+    /// re-checking the shutdown flag. Not a liveness bound on workers.
+    pub read_timeout: Duration,
+    /// Per-connection write timeout for master → worker frames; an
+    /// expired write marks the worker disconnected (outage) rather than
+    /// wedging the master.
+    pub write_timeout: Duration,
+    /// Handshake deadline: a connection that sends no valid `hello`
+    /// within this window is dropped.
+    pub hello_timeout: Duration,
+    /// Frame-payload bound for every connection (see
+    /// [`MAX_FRAME_LEN`]).
+    pub max_frame: usize,
+}
+
+impl Default for TransportConfig {
+    fn default() -> Self {
+        TransportConfig {
+            job_id: "default".to_string(),
+            assign_spec: JsonValue::Null,
+            lockstep: None,
+            shard: None,
+            read_timeout: Duration::from_millis(200),
+            write_timeout: Duration::from_secs(30),
+            hello_timeout: Duration::from_secs(10),
+            max_frame: MAX_FRAME_LEN,
+        }
+    }
+}
+
+/// What [`SocketSource::finish`] returns: realized disconnect windows and
+/// wire accounting for the per-job report.
+#[derive(Clone, Debug, Default)]
+pub struct TransportStats {
+    /// Disconnect windows in master iterations, [`Outage`]-shaped (a
+    /// window still open at shutdown is closed at the final iteration).
+    pub outages: Vec<Outage>,
+    /// Worker→master bytes received (frames incl. headers).
+    pub bytes_in: u64,
+    /// Master→worker bytes sent (frames incl. headers).
+    pub bytes_out: u64,
+    /// Wall-clock seconds from bind to finish.
+    pub wall_clock_s: f64,
+    /// Seconds the master spent blocked in gather.
+    pub master_wait_s: f64,
+}
+
+/// The last broadcast a worker received — re-delivered (with the
+/// worker-held dual) when that worker reconnects.
+#[derive(Clone, Debug)]
+struct LastGo {
+    x0: Vec<f64>,
+    /// Master-supplied dual (Algorithm 4 broadcasts).
+    lam: Option<Vec<f64>>,
+    /// The worker-held dual λ_i at broadcast time (= the value the worker
+    /// computes this round against) — the `go.reseed` payload.
+    lam_state: Vec<f64>,
+}
+
+enum Event {
+    Up(WorkerMsg),
+    Joined { worker: usize, gen: u64, stream: TcpStream },
+    Left { worker: usize, gen: u64 },
+}
+
+/// Worker-slot claims shared with the acceptor thread.
+struct ClaimTable {
+    claimed: Vec<bool>,
+    gens: Vec<u64>,
+}
+
+/// The socket-backed [`WorkerSource`]. See the module docs for the
+/// protocol and the disconnect/Assumption-1 semantics.
+pub struct SocketSource {
+    n_workers: usize,
+    cfg: TransportConfig,
+    listen_addr: SocketAddr,
+    events: Receiver<Event>,
+    writers: Vec<Option<TcpStream>>,
+    gen: Vec<u64>,
+    connected: Vec<bool>,
+    /// One held message per worker (arrived but not yet absorbed).
+    pending: Vec<Option<WorkerMsg>>,
+    /// Prescribed arrival sets (lockstep replay) and the replay cursor.
+    lockstep: Option<(Vec<Vec<usize>>, usize)>,
+    shard: Option<Arc<BlockPattern>>,
+    last_go: Vec<Option<LastGo>>,
+    realized: Vec<Outage>,
+    open_outage: Vec<Option<usize>>,
+    iter: usize,
+    started: bool,
+    stop: Arc<AtomicBool>,
+    acceptor: Option<JoinHandle<()>>,
+    bytes_in: Arc<AtomicU64>,
+    bytes_out: u64,
+    wall: Stopwatch,
+    master_wait_s: f64,
+}
+
+impl SocketSource {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral loopback port)
+    /// and start accepting worker connections for `n_workers` slots.
+    pub fn bind(addr: &str, n_workers: usize, cfg: TransportConfig) -> Result<Self, EngineError> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| EngineError::Transport(format!("cannot bind {addr}: {e}")))?;
+        Self::from_listener(listener, n_workers, cfg)
+    }
+
+    /// Start accepting on an already-bound listener (the solver service
+    /// binds per-job rendezvous ports itself).
+    pub fn from_listener(
+        listener: TcpListener,
+        n_workers: usize,
+        cfg: TransportConfig,
+    ) -> Result<Self, EngineError> {
+        if n_workers == 0 {
+            return Err(EngineError::Transport("n_workers must be >= 1".to_string()));
+        }
+        let listen_addr = listener
+            .local_addr()
+            .map_err(|e| EngineError::Transport(format!("listener has no local addr: {e}")))?;
+        let (tx, events) = std::sync::mpsc::channel::<Event>();
+        let stop = Arc::new(AtomicBool::new(false));
+        let bytes_in = Arc::new(AtomicU64::new(0));
+        let claims = Arc::new(Mutex::new(ClaimTable {
+            claimed: vec![false; n_workers],
+            gens: vec![0; n_workers],
+        }));
+        let acceptor = {
+            let cfg = cfg.clone();
+            let stop = Arc::clone(&stop);
+            let bytes_in = Arc::clone(&bytes_in);
+            std::thread::Builder::new()
+                .name("socket-acceptor".to_string())
+                .spawn(move || accept_loop(listener, n_workers, cfg, claims, tx, stop, bytes_in))
+                .map_err(|e| EngineError::Transport(format!("cannot spawn acceptor: {e}")))?
+        };
+        Ok(SocketSource {
+            n_workers,
+            listen_addr,
+            events,
+            writers: (0..n_workers).map(|_| None).collect(),
+            gen: vec![0; n_workers],
+            connected: vec![false; n_workers],
+            pending: (0..n_workers).map(|_| None).collect(),
+            lockstep: cfg.lockstep.as_ref().map(|t| (t.sets.clone(), 0)),
+            shard: cfg.shard.clone(),
+            last_go: (0..n_workers).map(|_| None).collect(),
+            realized: Vec::new(),
+            open_outage: vec![None; n_workers],
+            iter: 0,
+            started: false,
+            stop,
+            acceptor: Some(acceptor),
+            bytes_in,
+            bytes_out: 0,
+            wall: Stopwatch::start(),
+            master_wait_s: 0.0,
+            cfg,
+        })
+    }
+
+    /// The bound address workers connect to (query this after binding
+    /// port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.listen_addr
+    }
+
+    /// Disconnect windows realized so far (closed windows only; an
+    /// in-progress outage is closed by [`SocketSource::finish`]).
+    pub fn realized_outages(&self) -> &[Outage] {
+        &self.realized
+    }
+
+    /// Block until every worker slot has connected and handshaked (used
+    /// by callers that want a full roster before building the session;
+    /// [`WorkerSource::start`] also waits on its own).
+    pub fn wait_for_workers(&mut self) {
+        while !self.connected.iter().all(|&c| c) {
+            let ev = self.events.recv().expect("acceptor alive while waiting for workers");
+            self.handle_event(ev);
+        }
+    }
+
+    /// Shutdown: `shutdown` frames to every live worker, stop the
+    /// acceptor, return the realized-outage and wire accounting.
+    pub fn finish(mut self) -> TransportStats {
+        self.shutdown_internal();
+        let mut outages = std::mem::take(&mut self.realized);
+        for (worker, open) in self.open_outage.iter_mut().enumerate() {
+            if let Some(from) = open.take() {
+                outages.push(Outage { worker, from_iter: from, until_iter: self.iter + 1 });
+            }
+        }
+        TransportStats {
+            outages,
+            bytes_in: self.bytes_in.load(Ordering::Relaxed),
+            bytes_out: self.bytes_out,
+            wall_clock_s: self.wall.now_s(),
+            master_wait_s: self.master_wait_s,
+        }
+    }
+
+    fn shutdown_internal(&mut self) {
+        if self.stop.swap(true, Ordering::SeqCst) {
+            return; // already shut down
+        }
+        let payload = WireMsg::Shutdown.encode();
+        for w in self.writers.iter_mut() {
+            if let Some(stream) = w.take() {
+                let mut sink = &stream;
+                let _ = write_frame(&mut sink, &payload);
+                self.bytes_out += payload.len() as u64 + 4;
+            }
+        }
+        // Wake the acceptor out of accept() so it can observe the flag.
+        let _ = TcpStream::connect(self.listen_addr);
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+        // Reader threads exit on peer close / poll timeout + stop flag.
+    }
+
+    fn handle_event(&mut self, ev: Event) {
+        match ev {
+            Event::Up(msg) => {
+                if msg.id < self.n_workers {
+                    self.pending[msg.id] = Some(msg);
+                }
+            }
+            Event::Joined { worker, gen, stream } => {
+                self.gen[worker] = gen;
+                let was_connected = self.connected[worker];
+                self.writers[worker] = Some(stream);
+                self.connected[worker] = true;
+                if !was_connected {
+                    if let Some(from) = self.open_outage[worker].take() {
+                        let until = self.iter.max(from + 1);
+                        self.realized.push(Outage { worker, from_iter: from, until_iter: until });
+                    }
+                }
+                // Mid-run (re)join: re-deliver the last broadcast with the
+                // worker-held dual so the process recomputes the in-flight
+                // round bit-identically. Safe even when a replacement races
+                // a not-yet-detected dead connection: the recomputation is
+                // deterministic, so a duplicate `up` carries identical bits.
+                if self.started {
+                    if let Some(lg) = self.last_go[worker].clone() {
+                        self.send_go(worker, &lg, true);
+                    }
+                }
+            }
+            Event::Left { worker, gen } => {
+                // Stale Left events from a replaced connection are ignored.
+                if gen == self.gen[worker] && self.connected[worker] {
+                    self.mark_disconnected(worker);
+                }
+            }
+        }
+    }
+
+    fn mark_disconnected(&mut self, worker: usize) {
+        self.connected[worker] = false;
+        self.writers[worker] = None;
+        if self.open_outage[worker].is_none() {
+            self.open_outage[worker] = Some(self.iter);
+        }
+    }
+
+    fn send_go(&mut self, worker: usize, lg: &LastGo, reseed: bool) {
+        let msg = WireMsg::Go {
+            x0: lg.x0.clone(),
+            lam: lg.lam.clone(),
+            reseed: reseed.then(|| lg.lam_state.clone()),
+        };
+        let payload = msg.encode();
+        let ok = match &self.writers[worker] {
+            Some(stream) => {
+                let mut sink = stream;
+                write_frame(&mut sink, &payload).is_ok()
+            }
+            None => false,
+        };
+        if ok {
+            self.bytes_out += payload.len() as u64 + 4;
+        } else if self.connected[worker] {
+            // A failed/timed-out write is a disconnect: the worker gets
+            // this broadcast re-delivered (with reseed) when it rejoins.
+            self.mark_disconnected(worker);
+        }
+    }
+
+    fn drain_events(&mut self) {
+        while let Ok(ev) = self.events.try_recv() {
+            self.handle_event(ev);
+        }
+    }
+
+    fn recv_blocking(&mut self) {
+        let ev = self.events.recv().expect("acceptor alive");
+        self.handle_event(ev);
+    }
+}
+
+impl Drop for SocketSource {
+    fn drop(&mut self) {
+        self.shutdown_internal();
+    }
+}
+
+impl WorkerSource for SocketSource {
+    fn n_workers(&self) -> usize {
+        self.n_workers
+    }
+
+    fn kind(&self) -> &'static str {
+        "socket"
+    }
+
+    fn supports_sharding(&self) -> bool {
+        self.shard.is_some()
+    }
+
+    fn start(&mut self, state: &AdmmState, policy: &dyn UpdatePolicy) {
+        // Full roster before the initial broadcast: everyone starts
+        // computing against x⁰ (owned slices when sharded).
+        self.wait_for_workers();
+        let with_dual = policy.broadcasts_dual();
+        for i in 0..self.n_workers {
+            let x0 = match &self.shard {
+                None => state.x0.clone(),
+                Some(p) => p.gather_vec(i, &state.x0),
+            };
+            let lg = LastGo {
+                x0,
+                lam: with_dual.then(|| state.lams[i].clone()),
+                lam_state: state.lams[i].clone(),
+            };
+            self.last_go[i] = Some(lg.clone());
+            self.send_go(i, &lg, false);
+        }
+        self.started = true;
+    }
+
+    fn gather(&mut self, k: usize, d: &[usize], gate: &Gate<'_>) -> ActiveSet {
+        self.iter = k;
+        let n = self.n_workers;
+        let wait_started = self.wall.now_s();
+        let set = if self.lockstep.is_some() {
+            // Lockstep replay: wait until every live prescribed worker has
+            // a message in — through disconnects, until a replacement
+            // rejoins and recomputes. Deterministic by design.
+            let prescribed = {
+                let (sets, pos) = self.lockstep.as_mut().expect("checked above");
+                let s = sets
+                    .get(*pos)
+                    .unwrap_or_else(|| {
+                        panic!("lockstep trace exhausted at iteration {pos}", pos = *pos)
+                    })
+                    .clone();
+                *pos += 1;
+                s
+            };
+            loop {
+                self.drain_events();
+                if prescribed.iter().all(|&i| gate.down[i] || self.pending[i].is_some()) {
+                    break;
+                }
+                self.recv_blocking();
+            }
+            let live: Vec<usize> = prescribed.into_iter().filter(|&i| !gate.down[i]).collect();
+            ActiveSet::new(live, n).expect("lockstep trace worker index out of range")
+        } else {
+            // Live gate: |A_k| ≥ min(A, #live) and every live connected
+            // worker with d_i ≥ τ−1 has arrived. Down workers (fault plan)
+            // and disconnected workers (realized outages) neither count
+            // nor block — the τ gate cannot force a wait on a worker that
+            // cannot answer.
+            loop {
+                self.drain_events();
+                let arrived = (0..n)
+                    .filter(|&i| self.pending[i].is_some() && !gate.down[i])
+                    .count();
+                let live = (0..n)
+                    .filter(|&i| !gate.down[i] && (self.connected[i] || self.pending[i].is_some()))
+                    .count();
+                let target = gate.min_arrivals.min(live.max(1));
+                let forced_ok = (0..n).all(|i| {
+                    gate.down[i]
+                        || !self.connected[i]
+                        || d[i] + 1 < gate.tau
+                        || self.pending[i].is_some()
+                });
+                if arrived >= target && forced_ok {
+                    break;
+                }
+                self.recv_blocking();
+            }
+            ActiveSet::from_sorted(
+                (0..n).filter(|&i| self.pending[i].is_some() && !gate.down[i]).collect(),
+            )
+        };
+        self.master_wait_s += self.wall.now_s() - wait_started;
+        set
+    }
+
+    fn absorb(&mut self, set: &ActiveSet, m: &mut MasterView<'_>, _policy: &dyn UpdatePolicy) {
+        // (9)/(10)/(44): identical to the threaded source — the transport
+        // changes, the protocol does not.
+        for &i in set {
+            let msg = self.pending[i].take().expect("arrived worker has a pending message");
+            m.state.xs[i] = msg.x;
+            if let Some(lam) = msg.lam {
+                m.state.lams[i] = lam;
+            }
+            m.f_cache[i] = m.problem.local(i).eval_with(&m.state.xs[i], &mut m.scratch.ws);
+        }
+    }
+
+    fn broadcast(&mut self, set: &ActiveSet, state: &AdmmState, policy: &dyn UpdatePolicy) {
+        // Step 6: broadcast to arrived workers only (owned slices when
+        // sharded). The broadcast is also snapshotted per worker for
+        // reconnect re-delivery.
+        let with_dual = policy.broadcasts_dual();
+        for &i in set {
+            let x0 = match &self.shard {
+                None => state.x0.clone(),
+                Some(p) => p.gather_vec(i, &state.x0),
+            };
+            let lg = LastGo {
+                x0,
+                lam: with_dual.then(|| state.lams[i].clone()),
+                lam_state: state.lams[i].clone(),
+            };
+            self.last_go[i] = Some(lg.clone());
+            self.send_go(i, &lg, false);
+        }
+    }
+
+    fn save_checkpoint(&self) -> Result<JsonValue, EngineError> {
+        // Master-side protocol state only: held messages, the lockstep
+        // cursor, per-worker broadcast snapshots and realized outages.
+        // Worker processes are external — on resume they reconnect and are
+        // re-sent their snapshot (`go.reseed`), recomputing any in-flight
+        // round. Messages still in flight at save time are therefore
+        // recovered, not lost.
+        let opt_vec = |v: &Option<Vec<f64>>| match v {
+            Some(v) => hex_vec(v),
+            None => JsonValue::Null,
+        };
+        let pending = JsonValue::Arr(
+            self.pending
+                .iter()
+                .map(|p| match p {
+                    None => JsonValue::Null,
+                    Some(msg) => JsonValue::Obj(vec![
+                        ("x".to_string(), hex_vec(&msg.x)),
+                        ("lam".to_string(), opt_vec(&msg.lam)),
+                    ]),
+                })
+                .collect(),
+        );
+        let last_go = JsonValue::Arr(
+            self.last_go
+                .iter()
+                .map(|lg| match lg {
+                    None => JsonValue::Null,
+                    Some(lg) => JsonValue::Obj(vec![
+                        ("x0".to_string(), hex_vec(&lg.x0)),
+                        ("lam".to_string(), opt_vec(&lg.lam)),
+                        ("lam_state".to_string(), hex_vec(&lg.lam_state)),
+                    ]),
+                })
+                .collect(),
+        );
+        let outages = JsonValue::Arr(
+            self.realized
+                .iter()
+                .map(|o| {
+                    JsonValue::Obj(vec![
+                        ("worker".to_string(), o.worker.into()),
+                        ("from".to_string(), o.from_iter.into()),
+                        ("until".to_string(), o.until_iter.into()),
+                    ])
+                })
+                .collect(),
+        );
+        Ok(JsonValue::Obj(vec![
+            ("iter".to_string(), self.iter.into()),
+            (
+                "cursor".to_string(),
+                self.lockstep.as_ref().map_or(JsonValue::Null, |(_, pos)| (*pos).into()),
+            ),
+            ("pending".to_string(), pending),
+            ("last_go".to_string(), last_go),
+            ("outages".to_string(), outages),
+        ]))
+    }
+
+    fn load_checkpoint(&mut self, doc: &JsonValue) -> Result<(), EngineError> {
+        let bad = |msg: String| EngineError::Checkpoint(format!("socket source: {msg}"));
+        let field = |key: &str| doc.get(key).ok_or_else(|| bad(format!("missing {key:?}")));
+        self.iter = json_usize(field("iter")?).map_err(bad)?;
+        match (field("cursor")?, &mut self.lockstep) {
+            (JsonValue::Null, None) => {}
+            (v, Some((_, pos))) => *pos = json_usize(v).map_err(bad)?,
+            _ => return Err(bad("lockstep cursor does not match the configured trace".into())),
+        }
+        let opt_vec = |v: Option<&JsonValue>| -> Result<Option<Vec<f64>>, String> {
+            match v {
+                None | Some(JsonValue::Null) => Ok(None),
+                Some(v) => Ok(Some(vec_from_hex(v)?)),
+            }
+        };
+        let pending = field("pending")?.items();
+        if pending.len() != self.n_workers {
+            return Err(bad(format!("pending has {} slots", pending.len())));
+        }
+        for (i, p) in pending.iter().enumerate() {
+            self.pending[i] = match p {
+                JsonValue::Null => None,
+                obj => Some(WorkerMsg {
+                    id: i,
+                    x: vec_from_hex(
+                        obj.get("x").ok_or_else(|| bad("pending entry missing x".into()))?,
+                    )
+                    .map_err(bad)?,
+                    lam: opt_vec(obj.get("lam")).map_err(bad)?,
+                }),
+            };
+        }
+        let last_go = field("last_go")?.items();
+        if last_go.len() != self.n_workers {
+            return Err(bad(format!("last_go has {} slots", last_go.len())));
+        }
+        for (i, lg) in last_go.iter().enumerate() {
+            self.last_go[i] = match lg {
+                JsonValue::Null => None,
+                obj => Some(LastGo {
+                    x0: vec_from_hex(
+                        obj.get("x0").ok_or_else(|| bad("last_go entry missing x0".into()))?,
+                    )
+                    .map_err(bad)?,
+                    lam: opt_vec(obj.get("lam")).map_err(bad)?,
+                    lam_state: vec_from_hex(
+                        obj.get("lam_state")
+                            .ok_or_else(|| bad("last_go entry missing lam_state".into()))?,
+                    )
+                    .map_err(bad)?,
+                }),
+            };
+        }
+        for o in field("outages")?.items() {
+            let get = |key: &str| {
+                o.get(key)
+                    .ok_or_else(|| bad(format!("outage missing {key:?}")))
+                    .and_then(|v| json_usize(v).map_err(bad))
+            };
+            self.realized.push(Outage {
+                worker: get("worker")?,
+                from_iter: get("from")?,
+                until_iter: get("until")?,
+            });
+        }
+        // Resumed runs skip `start`: mark started so the workers that
+        // reconnect are re-sent their snapshot and recompute in-flight
+        // rounds.
+        self.started = true;
+        Ok(())
+    }
+}
+
+/// The acceptor thread: handshake every incoming connection, claim a
+/// worker slot, spawn its reader.
+fn accept_loop(
+    listener: TcpListener,
+    n_workers: usize,
+    cfg: TransportConfig,
+    claims: Arc<Mutex<ClaimTable>>,
+    events: Sender<Event>,
+    stop: Arc<AtomicBool>,
+    bytes_in: Arc<AtomicU64>,
+) {
+    loop {
+        let (stream, _) = match listener.accept() {
+            Ok(s) => s,
+            Err(_) => return,
+        };
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let _ = stream.set_nodelay(true);
+        match handshake(&stream, n_workers, &cfg, &claims, &bytes_in) {
+            Ok((worker, gen)) => {
+                let _ = stream.set_read_timeout(Some(cfg.read_timeout));
+                let _ = stream.set_write_timeout(Some(cfg.write_timeout));
+                let writer = match stream.try_clone() {
+                    Ok(w) => w,
+                    Err(_) => continue,
+                };
+                if events.send(Event::Joined { worker, gen, stream: writer }).is_err() {
+                    return; // master gone
+                }
+                let events = events.clone();
+                let stop = Arc::clone(&stop);
+                let bytes_in = Arc::clone(&bytes_in);
+                let max_frame = cfg.max_frame;
+                let _ = std::thread::Builder::new()
+                    .name(format!("socket-reader-{worker}"))
+                    .spawn(move || {
+                        reader_loop(stream, worker, gen, max_frame, events, stop, bytes_in)
+                    });
+            }
+            Err(reply) => {
+                // Bad handshake: best-effort error frame, then drop.
+                if let Some(message) = reply {
+                    let mut sink = &stream;
+                    let _ = write_frame(&mut sink, &WireMsg::Error { message }.encode());
+                }
+            }
+        }
+    }
+}
+
+/// `hello` → slot claim → `assign`. Returns the claimed (worker, gen), or
+/// an optional error message for the peer.
+fn handshake(
+    stream: &TcpStream,
+    n_workers: usize,
+    cfg: &TransportConfig,
+    claims: &Mutex<ClaimTable>,
+    bytes_in: &AtomicU64,
+) -> Result<(usize, u64), Option<String>> {
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
+    let deadline = Instant::now() + cfg.hello_timeout;
+    let mut reader = FrameReader::with_max_len(cfg.max_frame);
+    let mut src = stream;
+    let payload = loop {
+        match reader.poll(&mut src) {
+            Ok(FrameEvent::Frame(p)) => break p,
+            Ok(FrameEvent::WouldBlock) => {
+                if Instant::now() >= deadline {
+                    return Err(Some("hello timeout".to_string()));
+                }
+            }
+            Ok(FrameEvent::Closed) | Err(_) => return Err(None),
+        }
+    };
+    bytes_in.fetch_add(payload.len() as u64 + 4, Ordering::Relaxed);
+    let (job, hint) = match WireMsg::decode(&payload) {
+        Ok(WireMsg::Hello { job, worker }) => (job, worker),
+        Ok(_) => return Err(Some("expected hello".to_string())),
+        Err(e) => return Err(Some(format!("bad hello: {e}"))),
+    };
+    if job != cfg.job_id {
+        return Err(Some(format!("unknown job {job:?} (serving {:?})", cfg.job_id)));
+    }
+    let (worker, gen) = {
+        let mut t = claims.lock().expect("claim table");
+        let worker = match hint {
+            Some(i) if i < n_workers => i,
+            Some(i) => return Err(Some(format!("worker slot {i} out of range 0..{n_workers}"))),
+            None => match t.claimed.iter().position(|&c| !c) {
+                Some(i) => i,
+                None => return Err(Some("no free worker slots".to_string())),
+            },
+        };
+        t.claimed[worker] = true;
+        t.gens[worker] += 1;
+        (worker, t.gens[worker])
+    };
+    let assign = WireMsg::Assign { worker, spec: cfg.assign_spec.clone() };
+    let mut sink = stream;
+    write_frame(&mut sink, &assign.encode()).map_err(|_| None)?;
+    Ok((worker, gen))
+}
+
+/// Per-connection reader: frames → decoded `up` messages → the shared
+/// event channel. Exit (with a `Left` event) on close, protocol error, or
+/// the stop flag.
+fn reader_loop(
+    stream: TcpStream,
+    worker: usize,
+    gen: u64,
+    max_frame: usize,
+    events: Sender<Event>,
+    stop: Arc<AtomicBool>,
+    bytes_in: Arc<AtomicU64>,
+) {
+    let mut reader = FrameReader::with_max_len(max_frame);
+    let mut src = &stream;
+    loop {
+        match reader.poll(&mut src) {
+            Ok(FrameEvent::Frame(payload)) => {
+                bytes_in.fetch_add(payload.len() as u64 + 4, Ordering::Relaxed);
+                match WireMsg::decode(&payload) {
+                    Ok(WireMsg::Up { worker: id, x, lam }) if id == worker => {
+                        if events.send(Event::Up(WorkerMsg { id, x, lam })).is_err() {
+                            return;
+                        }
+                    }
+                    // Anything else on an assigned connection is a
+                    // protocol violation: drop the peer.
+                    _ => break,
+                }
+            }
+            Ok(FrameEvent::WouldBlock) => {
+                if stop.load(Ordering::SeqCst) {
+                    return;
+                }
+            }
+            Ok(FrameEvent::Closed) | Err(_) => break,
+        }
+    }
+    let _ = events.send(Event::Left { worker, gen });
+}

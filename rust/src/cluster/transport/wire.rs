@@ -1,0 +1,261 @@
+//! Wire messages: the [`super::frame`] payloads, serialized with the
+//! in-repo JSON codec using bit-exact hex f64 encodings (`hex_vec`), so
+//! NaN/Inf state and every rounding-sensitive coordinate survive the wire
+//! unchanged — the transport's bit-identity guarantees reduce to the
+//! checkpoint codec's.
+//!
+//! | type       | direction        | fields                                        |
+//! |------------|------------------|-----------------------------------------------|
+//! | `hello`    | worker → master  | `job`, `worker` (slot hint or null)           |
+//! | `assign`   | master → worker  | `worker` (assigned slot), `spec` (job object) |
+//! | `go`       | master → worker  | `x0`, `lam?` (Alg 4), `reseed?` (λ_i rewind)  |
+//! | `up`       | worker → master  | `worker`, `x`, `lam?` (Alg 2)                 |
+//! | `shutdown` | master → worker  | —                                             |
+//! | `submit`   | client → serve   | `spec` (job object incl. `job_id`)            |
+//! | `accepted` | serve → client   | `job`, `port` (worker rendezvous port)        |
+//! | `report`   | serve → client   | `job`, `report` (per-job result object)       |
+//! | `error`    | serve → client   | `message`                                     |
+//!
+//! `go.reseed` carries the worker-held dual λ_i to restore after a
+//! reconnect (Algorithm 2 keeps λ_i worker-side; a restarted worker
+//! process would otherwise restart it at zero and silently break protocol
+//! equivalence — see [`super::socket::SocketSource`]).
+
+use crate::bench::json::{self, hex_vec, vec_from_hex, JsonValue};
+
+use super::super::messages::{MasterMsg, WorkerMsg};
+
+/// Every message the transport exchanges, across both planes (the solve
+/// protocol master↔worker and the service control plane client↔serve).
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireMsg {
+    /// Worker connects: which job it serves and (optionally) which worker
+    /// slot it wants — a reconnecting worker names its old slot.
+    Hello { job: String, worker: Option<usize> },
+    /// Master's handshake reply: the assigned slot and the job spec the
+    /// worker needs to rebuild its local problem deterministically.
+    Assign { worker: usize, spec: JsonValue },
+    /// One round's broadcast (Step 6): the (owned slice of) x₀, the
+    /// master-updated dual for Algorithm 4, and — after a reconnect — the
+    /// worker-held dual to restore before computing.
+    Go { x0: Vec<f64>, lam: Option<Vec<f64>>, reseed: Option<Vec<f64>> },
+    /// One round's upload (Step 4): the arrived variables `(x̂_i, λ̂_i)`.
+    Up { worker: usize, x: Vec<f64>, lam: Option<Vec<f64>> },
+    /// Stop the worker loop.
+    Shutdown,
+    /// Control plane: submit a solve job to `admm-serve`.
+    Submit { spec: JsonValue },
+    /// Control plane: job accepted; workers rendezvous on this port.
+    Accepted { job: String, port: u16 },
+    /// Control plane: the finished job's report.
+    Report { job: String, report: JsonValue },
+    /// Control plane: the request failed.
+    Error { message: String },
+}
+
+impl WireMsg {
+    /// The engine-side view of a `go` frame (reseed handled by the client
+    /// before the round starts, so it is not part of [`MasterMsg`]).
+    pub fn from_master(msg: &MasterMsg, reseed: Option<Vec<f64>>) -> WireMsg {
+        match msg {
+            MasterMsg::Shutdown => WireMsg::Shutdown,
+            MasterMsg::Go { x0, lam } => {
+                WireMsg::Go { x0: x0.clone(), lam: lam.clone(), reseed }
+            }
+        }
+    }
+
+    /// The engine-side view of an `up` frame.
+    pub fn from_worker(msg: &WorkerMsg) -> WireMsg {
+        WireMsg::Up { worker: msg.id, x: msg.x.clone(), lam: msg.lam.clone() }
+    }
+
+    /// Serialize to a frame payload (UTF-8 JSON bytes).
+    pub fn encode(&self) -> Vec<u8> {
+        let obj = |t: &str, mut fields: Vec<(String, JsonValue)>| {
+            let mut all = vec![("type".to_string(), JsonValue::Str(t.to_string()))];
+            all.append(&mut fields);
+            JsonValue::Obj(all)
+        };
+        let opt_vec = |v: &Option<Vec<f64>>| match v {
+            Some(v) => hex_vec(v),
+            None => JsonValue::Null,
+        };
+        let doc = match self {
+            WireMsg::Hello { job, worker } => obj(
+                "hello",
+                vec![
+                    ("job".to_string(), JsonValue::Str(job.clone())),
+                    (
+                        "worker".to_string(),
+                        worker.map_or(JsonValue::Null, JsonValue::from),
+                    ),
+                ],
+            ),
+            WireMsg::Assign { worker, spec } => obj(
+                "assign",
+                vec![
+                    ("worker".to_string(), (*worker).into()),
+                    ("spec".to_string(), spec.clone()),
+                ],
+            ),
+            WireMsg::Go { x0, lam, reseed } => obj(
+                "go",
+                vec![
+                    ("x0".to_string(), hex_vec(x0)),
+                    ("lam".to_string(), opt_vec(lam)),
+                    ("reseed".to_string(), opt_vec(reseed)),
+                ],
+            ),
+            WireMsg::Up { worker, x, lam } => obj(
+                "up",
+                vec![
+                    ("worker".to_string(), (*worker).into()),
+                    ("x".to_string(), hex_vec(x)),
+                    ("lam".to_string(), opt_vec(lam)),
+                ],
+            ),
+            WireMsg::Shutdown => obj("shutdown", Vec::new()),
+            WireMsg::Submit { spec } => obj("submit", vec![("spec".to_string(), spec.clone())]),
+            WireMsg::Accepted { job, port } => obj(
+                "accepted",
+                vec![
+                    ("job".to_string(), JsonValue::Str(job.clone())),
+                    ("port".to_string(), (*port as usize).into()),
+                ],
+            ),
+            WireMsg::Report { job, report } => obj(
+                "report",
+                vec![
+                    ("job".to_string(), JsonValue::Str(job.clone())),
+                    ("report".to_string(), report.clone()),
+                ],
+            ),
+            WireMsg::Error { message } => obj(
+                "error",
+                vec![("message".to_string(), JsonValue::Str(message.clone()))],
+            ),
+        };
+        doc.to_string().into_bytes()
+    }
+
+    /// Parse a frame payload. Unknown `type` tags and malformed fields are
+    /// errors — the protocol is versionless-strict, like the checkpoint
+    /// schema.
+    pub fn decode(payload: &[u8]) -> Result<WireMsg, String> {
+        let text = std::str::from_utf8(payload).map_err(|e| format!("non-UTF-8 payload: {e}"))?;
+        let doc = json::parse(text)?;
+        let tag = doc
+            .get("type")
+            .and_then(JsonValue::as_str)
+            .ok_or_else(|| "missing \"type\" tag".to_string())?
+            .to_string();
+        let get = |key: &str| doc.get(key).ok_or_else(|| format!("{tag}: missing {key:?}"));
+        let opt_vec = |key: &str| -> Result<Option<Vec<f64>>, String> {
+            match doc.get(key) {
+                None | Some(JsonValue::Null) => Ok(None),
+                Some(v) => Ok(Some(vec_from_hex(v)?)),
+            }
+        };
+        let get_str = |key: &str| -> Result<String, String> {
+            get(key)?
+                .as_str()
+                .map(str::to_string)
+                .ok_or_else(|| format!("{tag}: {key:?} is not a string"))
+        };
+        let get_usize =
+            |key: &str| -> Result<usize, String> { json::json_usize(get(key)?) };
+        Ok(match tag.as_str() {
+            "hello" => WireMsg::Hello {
+                job: get_str("job")?,
+                worker: match doc.get("worker") {
+                    None | Some(JsonValue::Null) => None,
+                    Some(v) => Some(json::json_usize(v)?),
+                },
+            },
+            "assign" => WireMsg::Assign { worker: get_usize("worker")?, spec: get("spec")?.clone() },
+            "go" => WireMsg::Go {
+                x0: vec_from_hex(get("x0")?)?,
+                lam: opt_vec("lam")?,
+                reseed: opt_vec("reseed")?,
+            },
+            "up" => WireMsg::Up {
+                worker: get_usize("worker")?,
+                x: vec_from_hex(get("x")?)?,
+                lam: opt_vec("lam")?,
+            },
+            "shutdown" => WireMsg::Shutdown,
+            "submit" => WireMsg::Submit { spec: get("spec")?.clone() },
+            "accepted" => WireMsg::Accepted {
+                job: get_str("job")?,
+                port: u16::try_from(get_usize("port")?)
+                    .map_err(|_| "accepted: port out of range".to_string())?,
+            },
+            "report" => WireMsg::Report { job: get_str("job")?, report: get("report")?.clone() },
+            "error" => WireMsg::Error { message: get_str("message")? },
+            other => return Err(format!("unknown message type {other:?}")),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip(msg: WireMsg) {
+        let decoded = WireMsg::decode(&msg.encode()).expect("decodes");
+        assert_eq!(decoded, msg);
+    }
+
+    #[test]
+    fn every_variant_round_trips() {
+        round_trip(WireMsg::Hello { job: "j1".to_string(), worker: Some(3) });
+        round_trip(WireMsg::Hello { job: "j1".to_string(), worker: None });
+        round_trip(WireMsg::Assign {
+            worker: 2,
+            spec: JsonValue::Obj(vec![("m".to_string(), 40usize.into())]),
+        });
+        round_trip(WireMsg::Go { x0: vec![1.0, -2.5], lam: None, reseed: Some(vec![0.125]) });
+        round_trip(WireMsg::Up { worker: 1, x: vec![3.5], lam: Some(vec![-0.0]) });
+        round_trip(WireMsg::Shutdown);
+        round_trip(WireMsg::Submit { spec: JsonValue::Null });
+        round_trip(WireMsg::Accepted { job: "j".to_string(), port: 65535 });
+        round_trip(WireMsg::Report { job: "j".to_string(), report: JsonValue::Obj(Vec::new()) });
+        round_trip(WireMsg::Error { message: "boom \"quoted\"\n".to_string() });
+    }
+
+    /// Non-finite and signed-zero f64 bit patterns survive the wire
+    /// exactly (the plain-number JSON path would collapse them to null).
+    #[test]
+    fn nan_inf_bit_patterns_round_trip_exactly() {
+        let weird = vec![
+            f64::NAN,
+            f64::from_bits(0x7ff8_0000_0000_0001), // NaN with a payload
+            f64::from_bits(0xfff0_0000_0000_0000), // -inf
+            f64::INFINITY,
+            -0.0,
+            f64::MIN_POSITIVE / 2.0, // subnormal
+        ];
+        let msg = WireMsg::Go { x0: weird.clone(), lam: Some(weird.clone()), reseed: None };
+        match WireMsg::decode(&msg.encode()).unwrap() {
+            WireMsg::Go { x0, lam, reseed } => {
+                let bits = |v: &[f64]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&x0), bits(&weird));
+                assert_eq!(bits(&lam.unwrap()), bits(&weird));
+                assert!(reseed.is_none());
+            }
+            other => panic!("expected Go, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_payloads_are_rejected() {
+        assert!(WireMsg::decode(b"not json").is_err());
+        assert!(WireMsg::decode(b"{\"no\": \"type\"}").is_err());
+        assert!(WireMsg::decode(b"{\"type\": \"warp\"}").is_err());
+        assert!(WireMsg::decode(&[0xff, 0xfe]).is_err()); // invalid UTF-8
+        // `up` with a non-hex coordinate
+        assert!(WireMsg::decode(b"{\"type\":\"up\",\"worker\":0,\"x\":[1.5],\"lam\":null}")
+            .is_err());
+    }
+}

@@ -1,5 +1,21 @@
 //! The worker loop: Algorithm 2 / Algorithm 4, "Algorithm of the i-th
 //! Worker" boxes.
+//!
+//! The per-round protocol is split into two shared pieces so every real
+//! transport (in-process channels here, TCP frames in
+//! [`super::transport::client`]) degrades identically under injected
+//! faults:
+//!
+//! - [`worker_round`] — the arithmetic of one round: subproblem solve and
+//!   (Algorithm 2) the worker-side dual update;
+//! - [`comm_leg_ms`] — the communication-leg latency: one comm-model draw
+//!   plus any fault retransmissions, with an active
+//!   [`FaultPlan`](crate::admm::engine::FaultPlan) delay spike stretching
+//!   the **whole** leg. This mirrors the virtual-time source, which
+//!   applies the spike factor to the full transit (sample + accumulated
+//!   retransmissions); historically the threaded loop stretched only the
+//!   comm-model draw and slept retransmissions unstretched, so a comm-leg
+//!   spike was invisible whenever latency came from retransmissions alone.
 
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
@@ -16,15 +32,90 @@ use crate::rng::Pcg64;
 /// replace the native closed-form subproblem solve per worker.
 pub type WorkerSolveFn = Box<dyn FnMut(&[f64], &[f64], f64, &mut [f64]) + Send>;
 
+/// One protocol round of worker `i` (the arithmetic only — no sleeps, no
+/// I/O): Algorithm 2 solves (13) against the worker-held dual and applies
+/// the dual ascent (14); Algorithm 4 solves (47) against the
+/// master-supplied dual and leaves `lam` untouched. Returns the dual to
+/// ship with the result (`Some` for Algorithm 2, `None` for Algorithm 4).
+///
+/// Shared verbatim by the threaded worker loop and the socket worker
+/// client so that both transports compute bit-identical messages from the
+/// same `(λ_i, x̂₀)` inputs.
+pub(crate) fn worker_round(
+    protocol: Protocol,
+    local: &dyn LocalCost,
+    rho: f64,
+    lam: &mut [f64],
+    x: &mut [f64],
+    x0: &[f64],
+    master_lam: Option<&[f64]>,
+    solve_override: Option<&mut WorkerSolveFn>,
+    scratch: &mut WorkerScratch,
+) -> Option<Vec<f64>> {
+    match protocol {
+        Protocol::AdAdmm => {
+            // (13): x_i ← argmin f_i + xᵀλ_i + ρ/2‖x − x̂₀‖²
+            match solve_override {
+                Some(f) => f(lam, x0, rho, x),
+                None => local.solve_subproblem(lam, x0, rho, x, scratch),
+            }
+            // (14): λ_i ← λ_i + ρ(x_i − x̂₀)
+            for j in 0..x.len() {
+                lam[j] += rho * (x[j] - x0[j]);
+            }
+            Some(lam.to_vec())
+        }
+        Protocol::AltScheme => {
+            // (47): x_i ← argmin f_i + xᵀλ̂_i + ρ/2‖x − x̂₀‖²
+            let master_lam = master_lam.expect("Algorithm 4 must send λ̂_i");
+            match solve_override {
+                Some(f) => f(master_lam, x0, rho, x),
+                None => local.solve_subproblem(master_lam, x0, rho, x, scratch),
+            }
+            None
+        }
+    }
+}
+
+/// The communication-leg latency of one round, in milliseconds: one draw
+/// from the comm delay model (if any) plus one retransmission delay per
+/// emulated message drop, the **whole sum** stretched by `spike_factor`
+/// (the active delay-spike factor; `1.0` when none). This is exactly the
+/// virtual-time source's transit formula, so a comm-leg spike slows a
+/// retransmitting worker identically in threaded, socket and virtual
+/// modes.
+pub(crate) fn comm_leg_ms(
+    comm: Option<&mut DelaySampler>,
+    faults: Option<&FaultModel>,
+    fault_rng: Option<&mut Pcg64>,
+    stats: &mut WorkerStats,
+    spike_factor: f64,
+) -> f64 {
+    let mut ms = comm.map_or(0.0, DelaySampler::sample_ms);
+    // Communication-failure emulation: each drop costs one retransmission
+    // delay before the message reaches the master (the link itself is
+    // reliable; losses manifest purely as extra latency, which is exactly
+    // the partially-asynchronous model's view of them).
+    if let (Some(f), Some(rng)) = (faults, fault_rng) {
+        while rng.bernoulli(f.drop_prob) {
+            ms += f.retrans_ms;
+            stats.retransmissions += 1;
+        }
+    }
+    ms * spike_factor
+}
+
 /// One worker thread. Returns its accumulated stats at shutdown.
 ///
 /// `delay` models the per-round compute time, `comm` (optional) the
 /// outbound link latency; both are realized as real sleeps in this mode
 /// (the virtual-time mode turns the same samplers into scheduler events).
-/// `spikes` stretches both sleeps by the active
+/// `spikes` stretches both legs by the active
 /// [`FaultPlan`](crate::admm::engine::FaultPlan) delay-spike factor, keyed
 /// on wall seconds since this worker started (outages are enforced at the
-/// master's gate, not here — a down worker's message is simply held).
+/// master's gate, not here — a down worker's message is simply held). The
+/// comm leg — model draw *plus* retransmissions — is stretched as one unit
+/// via [`comm_leg_ms`], matching the virtual-time transit formula.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn worker_loop(
     id: usize,
@@ -49,19 +140,6 @@ pub(crate) fn worker_loop(
         .map(|f| Pcg64::seed_from_u64(f.seed.wrapping_add(id as u64 * 0x5bd1)));
     let loop_started = Instant::now();
 
-    // Communication-failure emulation: each drop costs one retransmission
-    // delay before the message reaches the master (the channel itself is
-    // reliable; losses manifest purely as extra latency, which is exactly
-    // the partially-asynchronous model's view of them).
-    let mut comm_faults = |stats: &mut WorkerStats| {
-        if let (Some(f), Some(rng)) = (faults.as_ref(), fault_rng.as_mut()) {
-            while rng.bernoulli(f.drop_prob) {
-                std::thread::sleep(Duration::from_secs_f64(f.retrans_ms * 1e-3));
-                stats.retransmissions += 1;
-            }
-        }
-    };
-
     while let Ok(msg) = inbox.recv() {
         let (x0, master_lam) = match msg {
             MasterMsg::Shutdown => break,
@@ -69,50 +147,44 @@ pub(crate) fn worker_loop(
         };
         let t0 = Instant::now();
 
-        // Injected heterogeneous compute delay (plus communication, when no
-        // separate comm model is configured), stretched by any active
-        // delay spike.
         let spike = |t: &Instant| match &spikes {
             Some(plan) => plan.delay_factor(id, t.elapsed().as_secs_f64()),
             None => 1.0,
         };
+        // Injected heterogeneous compute delay (plus communication, when no
+        // separate comm model is configured), stretched by any active
+        // delay spike.
         let ms = delay.sample_ms() * spike(&loop_started);
         if ms > 0.0 {
             std::thread::sleep(Duration::from_secs_f64(ms * 1e-3));
         }
-        // Separate outbound-link latency, slept just like the compute part.
-        if let Some(c) = comm.as_mut() {
-            let cms = c.sample_ms() * spike(&loop_started);
-            if cms > 0.0 {
-                std::thread::sleep(Duration::from_secs_f64(cms * 1e-3));
-            }
-        }
 
-        match protocol {
-            Protocol::AdAdmm => {
-                // (13): x_i ← argmin f_i + xᵀλ_i + ρ/2‖x − x̂₀‖²
-                match solve_override.as_mut() {
-                    Some(f) => f(&lam, &x0, rho, &mut x),
-                    None => local.solve_subproblem(&lam, &x0, rho, &mut x, &mut scratch),
-                }
-                // (14): λ_i ← λ_i + ρ(x_i − x̂₀)
-                for j in 0..n {
-                    lam[j] += rho * (x[j] - x0[j]);
-                }
-                comm_faults(&mut stats);
-                let _ = outbox.send(WorkerMsg { id, x: x.clone(), lam: Some(lam.clone()) });
-            }
-            Protocol::AltScheme => {
-                // (47): x_i ← argmin f_i + xᵀλ̂_i + ρ/2‖x − x̂₀‖²
-                let master_lam = master_lam.expect("Algorithm 4 must send λ̂_i");
-                match solve_override.as_mut() {
-                    Some(f) => f(&master_lam, &x0, rho, &mut x),
-                    None => local.solve_subproblem(&master_lam, &x0, rho, &mut x, &mut scratch),
-                }
-                comm_faults(&mut stats);
-                let _ = outbox.send(WorkerMsg { id, x: x.clone(), lam: None });
-            }
+        let lam_out = worker_round(
+            protocol,
+            &*local,
+            rho,
+            &mut lam,
+            &mut x,
+            &x0,
+            master_lam.as_deref(),
+            solve_override.as_mut(),
+            &mut scratch,
+        );
+
+        // Outbound leg: comm draw + retransmissions, slept as one stretched
+        // unit (the spike factor is sampled at leg start, like the
+        // virtual-time scheduler stamps transit at compute-done time).
+        let cms = comm_leg_ms(
+            comm.as_mut(),
+            faults.as_ref(),
+            fault_rng.as_mut(),
+            &mut stats,
+            spike(&loop_started),
+        );
+        if cms > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(cms * 1e-3));
         }
+        let _ = outbox.send(WorkerMsg { id, x: x.clone(), lam: lam_out });
 
         stats.updates += 1;
         stats.busy_s += t0.elapsed().as_secs_f64();
@@ -120,4 +192,57 @@ pub(crate) fn worker_loop(
 
     stats.lifetime_s = loop_started.elapsed().as_secs_f64();
     stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The comm-leg formula matches the virtual-time transit rule: the
+    /// spike factor multiplies the model draw AND every retransmission.
+    /// (The historical bug stretched only the model draw, so a spiked
+    /// worker whose latency came from retransmissions was not slowed at
+    /// all — threaded and virtual runs degraded differently.)
+    #[test]
+    fn comm_leg_spike_stretches_retransmissions() {
+        let faults = FaultModel { drop_prob: 0.9, retrans_ms: 2.0, seed: 42 };
+        let mut stats = WorkerStats::new(0);
+        // Count the retransmissions this seed realizes, unspiked...
+        let mut rng = Pcg64::seed_from_u64(faults.seed.wrapping_add(0));
+        let base = comm_leg_ms(
+            Some(&mut DelaySampler::Fixed(3.0)),
+            Some(&faults),
+            Some(&mut rng),
+            &mut stats,
+            1.0,
+        );
+        let k = stats.retransmissions;
+        assert!(k > 0, "drop_prob=0.9 must realize at least one retransmission");
+        assert_eq!(base, 3.0 + 2.0 * k as f64);
+        // ...then the identical stream under a 10x spike: the whole leg
+        // scales, bit-exactly (same draws — the rng restarts at the seed).
+        let mut stats2 = WorkerStats::new(0);
+        let mut rng2 = Pcg64::seed_from_u64(faults.seed.wrapping_add(0));
+        let spiked = comm_leg_ms(
+            Some(&mut DelaySampler::Fixed(3.0)),
+            Some(&faults),
+            Some(&mut rng2),
+            &mut stats2,
+            10.0,
+        );
+        assert_eq!(stats2.retransmissions, k);
+        assert_eq!(spiked, 10.0 * base);
+    }
+
+    /// Without a comm model, latency comes from retransmissions alone —
+    /// the case the historical code left entirely unstretched.
+    #[test]
+    fn comm_leg_spike_applies_with_no_comm_model() {
+        let faults = FaultModel { drop_prob: 0.9, retrans_ms: 1.0, seed: 7 };
+        let mut stats = WorkerStats::new(3);
+        let mut rng = Pcg64::seed_from_u64(faults.seed.wrapping_add(3 * 0x5bd1));
+        let leg = comm_leg_ms(None, Some(&faults), Some(&mut rng), &mut stats, 50.0);
+        assert_eq!(leg, 50.0 * stats.retransmissions as f64);
+        assert!(stats.retransmissions > 0);
+    }
 }

@@ -4,6 +4,7 @@
 //!   solve    run a solver on a synthetic workload (problem/algorithm/params via flags)
 //!   cluster  run the threaded star cluster (async vs sync wall-clock comparison)
 //!   resume   continue a checkpointed virtual-time cluster run bit-identically
+//!   transport-digest  replay a transport job spec in-process and print its x₀ digest
 //!   params   print the Theorem-1 parameter rules for given L, τ, N, S
 //!   artifacts  list the AOT artifacts visible to the runtime
 //!
@@ -30,18 +31,21 @@ use ad_admm::cluster::{
     ClusterConfig, ClusterReport, DelayModel, ExecutionMode, FaultPlan, Protocol, StarCluster,
 };
 use ad_admm::data::{LassoInstance, LogisticInstance, SparsePcaInstance};
+use ad_admm::cluster::transport::{run_reference, JobSpec};
 use ad_admm::prelude::{AltScheme, FullBarrier, PartialBarrier};
 use ad_admm::problems::BlockPattern;
 use ad_admm::rng::Pcg64;
 use ad_admm::util::cli::ArgParser;
+use ad_admm::util::digest::x0_digest;
 
 fn main() {
-    let args = ArgParser::from_env(&["help", "sync", "alt", "virtual"]);
+    let args = ArgParser::from_env(&["help", "sync", "alt", "virtual", "free-running"]);
     let cmd = args.positional().first().map(String::as_str).unwrap_or("help");
     match cmd {
         "solve" => cmd_solve(&args),
         "cluster" => cmd_cluster(&args),
         "resume" => cmd_resume(&args),
+        "transport-digest" => cmd_transport_digest(&args),
         "params" => cmd_params(&args),
         "artifacts" => cmd_artifacts(),
         _ => print_help(),
@@ -51,7 +55,7 @@ fn main() {
 fn print_help() {
     println!(
         "ad-admm — Asynchronous Distributed ADMM (Chang et al., Part I)\n\n\
-         USAGE: ad-admm <solve|cluster|resume|params|artifacts> [--flags]\n\n\
+         USAGE: ad-admm <solve|cluster|resume|transport-digest|params|artifacts> [--flags]\n\n\
          solve   --problem lasso|spca|logistic --workers N --m M --n N --rho R --tau T\n\
                  --gamma G --min-arrivals A --iters K --theta TH --seed S [--sync] [--alt]\n\
                  [--shard-blocks B --shard-owners C]  (lasso only: block-sharded general-form\n\
@@ -64,6 +68,10 @@ fn print_help() {
                  [--checkpoint-every N --checkpoint-path P]  (virtual mode only: periodic\n\
                  session checkpoints; continue bit-identically with `ad-admm resume P`)\n\
          resume  <checkpoint-path>  (continue a checkpointed virtual cluster run)\n\
+         transport-digest  --workers N --m M --n N --tau T --iters K [--alt]\n\
+                 [--shard-blocks B --shard-owners C]  (in-process replay of an\n\
+                 `admm_serve submit` job spec; prints the reference `final x0 digest`\n\
+                 the socket loopback run must match bit-exactly)\n\
          params  --lipschitz L --tau T --workers N --s S --rho R\n\
          artifacts"
     );
@@ -366,17 +374,22 @@ impl ClusterParams {
     }
 }
 
-/// FNV-1a over the exact bit patterns of x₀ — a stable fingerprint for
-/// the bit-identity claims of checkpoint/resume.
-fn x0_digest(x0: &[f64]) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for v in x0 {
-        for byte in v.to_bits().to_le_bytes() {
-            h ^= byte as u64;
-            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+/// Replay a transport job spec through the in-process trace source and
+/// print the digest line the socket run must reproduce bit-exactly — the
+/// reference side of the CI loopback e2e (flags shared with
+/// `admm_serve submit`).
+fn cmd_transport_digest(args: &ArgParser) {
+    let spec = JobSpec::from_args(args);
+    match run_reference(&spec) {
+        Ok((outcome, digest)) => {
+            println!(
+                "reference replay: {} iterations  stop={:?}",
+                outcome.iterations, outcome.stop
+            );
+            println!("final x0 digest {digest:016x}");
         }
+        Err(e) => exit_config_error(&e),
     }
-    h
 }
 
 fn print_virtual_summary(report: &ClusterReport, last: Option<&IterRecord>) {

@@ -1,0 +1,44 @@
+//! Bit-exact fingerprints for the reproducibility claims.
+//!
+//! The CLI, the solver service and the transport e2e suite all compare
+//! runs across process boundaries by printing/grepping one 64-bit FNV-1a
+//! digest over the exact bit patterns of x₀ — moving the digest here (from
+//! a private helper in `main.rs`) makes "same digest" mean the same thing
+//! everywhere.
+
+/// FNV-1a over the little-endian `to_bits()` bytes of each coordinate — a
+/// stable fingerprint for bit-identity claims (checkpoint/resume, lockstep
+/// transport replay). Two digests are equal iff every f64 is bit-equal.
+pub fn x0_digest(x0: &[f64]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for v in x0 {
+        for byte in v.to_bits().to_le_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn digest_distinguishes_bit_patterns() {
+        // 0.0 and -0.0 are == but not bit-equal: the digest must differ.
+        assert_ne!(x0_digest(&[0.0]), x0_digest(&[-0.0]));
+        assert_eq!(x0_digest(&[1.5, 2.5]), x0_digest(&[1.5, 2.5]));
+        assert_ne!(x0_digest(&[1.5, 2.5]), x0_digest(&[2.5, 1.5]));
+        // NaN payloads are preserved verbatim.
+        let q = f64::from_bits(0x7ff8_0000_0000_0001);
+        let r = f64::from_bits(0x7ff8_0000_0000_0002);
+        assert_ne!(x0_digest(&[q]), x0_digest(&[r]));
+    }
+
+    #[test]
+    fn digest_matches_known_fnv_vector() {
+        // Empty input = FNV-1a offset basis.
+        assert_eq!(x0_digest(&[]), 0xcbf2_9ce4_8422_2325);
+    }
+}

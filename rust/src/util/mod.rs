@@ -5,10 +5,12 @@
 pub mod cli;
 pub mod configfile;
 pub mod csv;
+pub mod digest;
 pub mod plot;
 pub mod timer;
 
 pub use cli::ArgParser;
+pub use digest::x0_digest;
 pub use configfile::ConfigFile;
 pub use csv::CsvWriter;
 pub use timer::{Clock, Stopwatch};

@@ -240,3 +240,53 @@ fn fault_injection_still_converges_and_counts_retransmissions() {
     let r = kkt_residual(&problem, &report.state);
     assert!(r.max() < 1e-4, "{r:?}");
 }
+
+/// Comm-leg delay spikes now stretch the whole outbound leg — the comm
+/// draw *and* every retransmission sleep — matching the virtual-time
+/// transit rule (historically only the draw was stretched, so a spiked
+/// worker whose latency came from retransmissions was not slowed at all).
+/// Under a lockstep trace the stretched timing must not perturb the
+/// protocol: the realized sets stay exactly the prescribed ones and the
+/// iterates stay bit-equal to the serial trace replay.
+#[test]
+fn comm_leg_spikes_with_retransmissions_preserve_lockstep_bit_identity() {
+    use ad_admm::cluster::{DelaySpike, FaultModel, FaultPlan};
+    let n_workers = 3;
+    let inst = lasso(408, n_workers);
+    let problem = inst.problem();
+    let admm = AdmmConfig {
+        rho: 50.0,
+        tau: 3,
+        min_arrivals: 1,
+        max_iters: 20,
+        ..Default::default()
+    };
+    // Worker 1 arrives every other iteration, the rest every iteration.
+    let sets: Vec<Vec<usize>> = (0..admm.max_iters)
+        .map(|k| {
+            (0..n_workers).filter(|&i| i != 1 || k % 2 == 0).collect()
+        })
+        .collect();
+    let trace = ad_admm::admm::arrivals::ArrivalTrace { sets };
+    let spikes = FaultPlan {
+        outages: Vec::new(),
+        // Whole-run 25x comm-leg spike on worker 1: with drop_prob = 0.5
+        // much of its latency is retransmissions — the leg the old code
+        // left unstretched.
+        spikes: vec![DelaySpike { worker: 1, from_s: 0.0, until_s: 1e9, factor: 25.0 }],
+    };
+    let cfg = ClusterConfig::builder()
+        .admm(admm.clone())
+        .protocol(Protocol::AdAdmm)
+        .delays(DelayModel::None)
+        .comm_delays(DelayModel::Fixed { per_worker_ms: vec![0.1, 0.1, 0.1] })
+        .faults(FaultModel { drop_prob: 0.5, retrans_ms: 0.2, seed: 11 })
+        .fault_plan(spikes)
+        .lockstep_trace(trace.clone())
+        .build()
+        .expect("valid cluster config");
+    let report = StarCluster::new(problem.clone()).run(&cfg);
+    assert_eq!(report.trace, trace, "lockstep did not realize the prescribed sets");
+    let replay = run_partial_barrier(&problem, &cfg.admm, &ArrivalModel::Trace(trace));
+    assert_eq!(replay.state.x0, report.state.x0, "spiked retransmissions broke bit-identity");
+}

@@ -1,0 +1,133 @@
+//! Loopback end-to-end for the TCP transport: a real `SocketSource`
+//! master and real worker clients over 127.0.0.1, asserted bit-identical
+//! to the in-process trace replay — including across a worker-process
+//! crash and reconnect.
+
+use std::net::TcpListener;
+use std::time::Duration;
+
+use ad_admm::cluster::transport::{
+    run_job, run_reference, run_worker, JobSpec, WorkerClientConfig,
+};
+
+fn spawn_worker(
+    addr: String,
+    job: &str,
+    slot: usize,
+    max_rounds: Option<usize>,
+) -> std::thread::JoinHandle<()> {
+    let cfg = WorkerClientConfig {
+        addr,
+        job_id: job.to_string(),
+        worker: Some(slot),
+        max_rounds,
+        ..WorkerClientConfig::default()
+    };
+    std::thread::Builder::new()
+        .name(format!("e2e-worker-{slot}"))
+        .spawn(move || {
+            run_worker(&cfg).expect("worker client");
+        })
+        .expect("spawn")
+}
+
+/// The tentpole claim: a sharded LASSO job solved by four worker
+/// processes over real TCP under the lockstep schedule produces the
+/// bit-identical final x₀ (same FNV digest) as the in-process
+/// trace-driven replay of the same spec — and the master can checkpoint
+/// mid-run while sockets are live.
+#[test]
+fn socket_lockstep_run_matches_trace_replay_bitwise() {
+    let spec = JobSpec {
+        job_id: "e2e-bitid".to_string(),
+        workers: 4,
+        m: 40,
+        n: 24,
+        iters: 30,
+        tau: 3,
+        shard_blocks: 6,
+        shard_owners: 2,
+        ckpt_every: 7, // exercise live save_checkpoint mid-run
+        ..JobSpec::default()
+    };
+    let (reference, ref_digest) = run_reference(&spec).expect("reference replay");
+
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().expect("addr").to_string();
+    let clients: Vec<_> = (0..spec.workers)
+        .map(|i| spawn_worker(addr.clone(), &spec.job_id, i, None))
+        .collect();
+    let report = run_job(listener, &spec).expect("socket job");
+    for c in clients {
+        c.join().expect("client thread");
+    }
+
+    assert_eq!(report.digest, format!("{ref_digest:016x}"), "socket x0 != trace-replay x0");
+    assert_eq!(report.iterations, reference.iterations);
+    assert!(report.outages.is_empty(), "clean run realized outages: {:?}", report.outages);
+    assert!(report.bytes_in > 0 && report.bytes_out > 0);
+}
+
+/// Disconnect/reconnect: worker 2 crashes (drops its connection cold)
+/// after 4 rounds; a replacement process joins later, naming the same
+/// slot. The master records the outage, re-delivers the in-flight
+/// broadcast with the worker-held dual (`go.reseed`), and the job
+/// completes with the bit-identical digest — a disconnect is a realized
+/// Assumption-1 outage, not corruption.
+#[test]
+fn worker_crash_and_reconnect_preserves_bit_identity() {
+    let spec = JobSpec {
+        job_id: "e2e-crash".to_string(),
+        workers: 3,
+        m: 30,
+        n: 20,
+        iters: 24,
+        tau: 3,
+        ..JobSpec::default()
+    };
+    let (reference, ref_digest) = run_reference(&spec).expect("reference replay");
+
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().expect("addr").to_string();
+    let mut clients = vec![
+        spawn_worker(addr.clone(), &spec.job_id, 0, None),
+        spawn_worker(addr.clone(), &spec.job_id, 1, None),
+        // Crashes after 4 completed rounds — connection dropped cold.
+        spawn_worker(addr.clone(), &spec.job_id, 2, Some(4)),
+    ];
+    // The replacement joins well after the crash (the master's lockstep
+    // gather holds the run until it does) and reclaims slot 2.
+    clients.push({
+        let addr = addr.clone();
+        let job = spec.job_id.clone();
+        std::thread::Builder::new()
+            .name("e2e-replacement".to_string())
+            .spawn(move || {
+                std::thread::sleep(Duration::from_millis(400));
+                let cfg = WorkerClientConfig {
+                    addr,
+                    job_id: job,
+                    worker: Some(2),
+                    ..WorkerClientConfig::default()
+                };
+                run_worker(&cfg).expect("replacement client");
+            })
+            .expect("spawn")
+    });
+    let report = run_job(listener, &spec).expect("socket job");
+    for c in clients {
+        c.join().expect("client thread");
+    }
+
+    assert_eq!(
+        report.digest,
+        format!("{ref_digest:016x}"),
+        "crash+reconnect changed the iterates"
+    );
+    assert_eq!(report.iterations, reference.iterations);
+    assert!(
+        report.outages.iter().any(|&(w, _, _)| w == 2),
+        "worker 2's disconnect was not realized as an outage: {:?}",
+        report.outages
+    );
+}
