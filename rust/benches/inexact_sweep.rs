@@ -1,0 +1,237 @@
+//! Inexact warm-started worker solves: exact Newton subproblems vs k-step
+//! gradient inner loops ([`InexactPolicy`]), on the logistic consensus
+//! problem where the exact solve is genuinely expensive (damped Newton
+//! with a fresh Hessian per inner iteration).
+//!
+//! Two sections:
+//!
+//! 1. **Speedup sweep** — the same virtual-time cluster run under
+//!    `exact` and `grad:k` for k ∈ {1, 5, 20}. The simulated schedule is
+//!    identical across policies (delays do not depend on iterate values),
+//!    so the *real* seconds the simulation takes are a direct measure of
+//!    worker-solve cost. Emits the headline `inexact_speedup` metric
+//!    (exact real-time / `grad:5` real-time, asserted > 1 in-bench and
+//!    grepped by the CI bench-smoke job) plus the accuracy each policy
+//!    reached on the same iteration budget.
+//!
+//! 2. **Divergence row** — the pinned "k too small" failure: one
+//!    gradient step per round on the nonconvex sparse-PCA subproblem with
+//!    ρ far below the paper's `ρ ≥ 2λmax(AᵀA)` convexification bound
+//!    (Section V-B). The exact solve of the same indefinite stationary
+//!    system stays bounded over the budget while the warm-started
+//!    single-step iterate grows along the negative-curvature direction
+//!    until the divergence guard fires — asserted via [`StopReason`].
+//!
+//! Run: `cargo bench --bench inexact_sweep` (AD_ADMM_BENCH_QUICK=1
+//! shrinks). Emits `BENCH_inexact_sweep.json` next to the text output.
+
+use std::time::Instant;
+
+use ad_admm::bench::json::{BenchReport, JsonValue};
+use ad_admm::cluster::ExecutionMode;
+use ad_admm::prelude::*;
+use ad_admm::solvers::fista::fista;
+use ad_admm::util::CsvWriter;
+
+fn main() {
+    let quick = ad_admm::bench::quick_mode();
+    let mut json = BenchReport::new("inexact_sweep");
+
+    // --- Section 1: wall-clock speedup on logistic regression ------------
+    let n_workers = if quick { 4 } else { 8 };
+    let m = if quick { 60 } else { 150 };
+    let n = if quick { 32 } else { 64 };
+    let iters = if quick { 25 } else { 100 };
+    let fista_iters = if quick { 5_000 } else { 30_000 };
+    json.config("n_workers", n_workers as f64);
+    json.config("m_per_worker", m as f64);
+    json.config("dim", n as f64);
+    json.config("iters", iters as f64);
+
+    let mut rng = Pcg64::seed_from_u64(4242);
+    let inst = LogisticInstance::synthetic(&mut rng, n_workers, m, n, 0.02);
+    let problem = inst.problem();
+    let rho = problem.lipschitz().max(1.0);
+    let f_star = fista(&problem, fista_iters, 1e-12).objective;
+    let delays = DelayModel::linear_spread(n_workers, 0.5, 4.0, 0.3, 11);
+
+    // One deterministic virtual-time run per policy; real (host) seconds
+    // measure the solve cost, best-of-3 to damp scheduler noise. The runs
+    // are bit-identical across repeats, so min() is sound.
+    let run = |policy: InexactPolicy| -> (ClusterReport, f64) {
+        let mut best = f64::INFINITY;
+        let mut report = None;
+        for _ in 0..3 {
+            let cfg = ClusterConfig::builder()
+                .admm(AdmmConfig {
+                    rho,
+                    tau: 8,
+                    min_arrivals: 1,
+                    max_iters: iters,
+                    inexact: policy,
+                    ..Default::default()
+                })
+                .delays(delays.clone())
+                .mode(ExecutionMode::VirtualTime)
+                .build()
+                .expect("valid cluster config");
+            let t = Instant::now();
+            let r = StarCluster::new(problem.clone()).run(&cfg);
+            best = best.min(t.elapsed().as_secs_f64());
+            report = Some(r);
+        }
+        (report.expect("at least one run"), best)
+    };
+
+    println!("=== inexact worker solves: logistic, N={n_workers}, m={m}, n={n}, {iters} iters ===");
+    println!(
+        "{:>10} {:>12} {:>9} {:>14} {:>12}",
+        "policy", "real time", "speedup", "objective", "gap to F*"
+    );
+
+    let csv_path = ad_admm::bench::results_dir().join("inexact_sweep.csv");
+    let mut csv =
+        CsvWriter::create(&csv_path, &["k", "real_s", "speedup", "objective", "gap"]).expect("csv");
+
+    let policies = [
+        InexactPolicy::Exact,
+        InexactPolicy::GradSteps { k: 1 },
+        InexactPolicy::GradSteps { k: 5 },
+        InexactPolicy::GradSteps { k: 20 },
+    ];
+    // Exact runs first, so its time is available as every later row's
+    // denominator.
+    let mut exact_s = f64::NAN;
+    let mut exact_gap = f64::NAN;
+    let mut grad5_s = f64::NAN;
+    for &policy in &policies {
+        let (r, real_s) = run(policy);
+        assert!(
+            r.stop != StopReason::Diverged,
+            "policy {policy} diverged on the convex logistic problem"
+        );
+        let obj = r.history.last().unwrap().objective;
+        let gap = obj - f_star;
+        if policy.is_exact() {
+            exact_s = real_s;
+            exact_gap = gap;
+        }
+        let speedup = exact_s / real_s.max(1e-12);
+        if policy == (InexactPolicy::GradSteps { k: 5 }) {
+            grad5_s = real_s;
+        }
+        // A local String: `{:>10}` needs Display-with-padding, and the
+        // policy's Display impl writes through unpadded.
+        let label = policy.to_string();
+        println!(
+            "{:>10} {:>12} {:>8.2}x {:>14.6} {:>12.3e}",
+            label,
+            ad_admm::bench::BenchStats::human(real_s),
+            speedup,
+            obj,
+            gap,
+        );
+        let k = match policy {
+            InexactPolicy::GradSteps { k } => k as f64,
+            _ => 0.0,
+        };
+        csv.row(&[k, real_s, speedup, obj, gap]).unwrap();
+        json.series(vec![
+            ("section", JsonValue::Str("speedup".to_string())),
+            ("policy", JsonValue::Str(policy.to_string())),
+            ("real_s", JsonValue::Num(real_s)),
+            ("speedup_vs_exact", JsonValue::Num(speedup)),
+            ("objective", JsonValue::Num(obj)),
+            ("gap", JsonValue::Num(gap)),
+            ("iters", JsonValue::Num(r.history.len() as f64)),
+        ]);
+    }
+    csv.flush().unwrap();
+
+    // Headline metric: the CI bench-smoke job asserts this is > 1 from the
+    // JSON. grad:5 (not the fastest grad:1) is the pinned numerator so the
+    // claim is "a *useful* inexact setting beats exact", not a degenerate
+    // one.
+    let inexact_speedup = exact_s / grad5_s.max(1e-12);
+    json.metric("inexact_speedup", inexact_speedup);
+    json.metric("exact_run_s", exact_s);
+    json.metric("grad5_run_s", grad5_s);
+    println!("\ninexact_speedup (exact / grad:5 real time) = {inexact_speedup:.2}x");
+    assert!(
+        inexact_speedup > 1.0,
+        "5-step gradient inner loop must beat exact Newton solves: {inexact_speedup}"
+    );
+    println!("exact gap after {iters} iters: {exact_gap:.3e} (inexact gaps above)");
+
+    // --- Section 2: pinned divergence when k is too small -----------------
+    // Sparse PCA with ρ = 0.1·max_i λmax(B_iᵀB_i): every worker subproblem
+    // Hessian ρI − 2B_iᵀB_i is indefinite (ρ is far below the 2λmax
+    // convexification bound), so a warm-started single gradient step
+    // amplifies the top-eigenvector component by ≈ 1 + (2λmax−ρ)/(2λmax+ρ)
+    // per absorption — geometric blow-up. The exact path solves the same
+    // indefinite stationary system directly (bounded LU solve), and its
+    // dual recursion grows only like 1 + ρ/(2λmax−ρ) ≈ 1.05 — far from the
+    // 1e12 guard within this budget.
+    let div_iters = if quick { 120 } else { 250 };
+    let mut rng2 = Pcg64::seed_from_u64(77);
+    let spca = SparsePcaInstance::synthetic(&mut rng2, 4, 30, 16, 8, 0.1);
+    let spca_problem = spca.problem();
+    let rho_low = 0.1 * spca.max_lambda_max();
+    let div_delays = DelayModel::linear_spread(4, 0.5, 3.0, 0.3, 5);
+    let run_spca = |policy: InexactPolicy| {
+        let cfg = ClusterConfig::builder()
+            .admm(AdmmConfig {
+                rho: rho_low,
+                tau: 4,
+                min_arrivals: 1,
+                max_iters: div_iters,
+                // x = 0 is a stationary point of the PCA objective; the
+                // paper's runs start from a nonzero x₀ for the same reason.
+                init_x0: Some(vec![0.3; spca.dim()]),
+                inexact: policy,
+                ..Default::default()
+            })
+            .delays(div_delays.clone())
+            .mode(ExecutionMode::VirtualTime)
+            .build()
+            .expect("valid cluster config");
+        StarCluster::new(spca_problem.clone()).run(&cfg)
+    };
+
+    println!("\n=== divergence when k is too small: sparse PCA, rho = 0.1 lambda_max ===");
+    let diverged = run_spca(InexactPolicy::GradSteps { k: 1 });
+    let bounded = run_spca(InexactPolicy::Exact);
+    println!(
+        "grad:1  stop = {:?} after {} iters (guard at |L| > 1e12)",
+        diverged.stop,
+        diverged.history.len()
+    );
+    println!("exact   stop = {:?} after {} iters", bounded.stop, bounded.history.len());
+    assert_eq!(
+        diverged.stop,
+        StopReason::Diverged,
+        "one gradient step per round must diverge on the indefinite subproblem"
+    );
+    assert!(
+        bounded.stop != StopReason::Diverged,
+        "the exact solve must stay bounded over the same budget"
+    );
+    json.series(vec![
+        ("section", JsonValue::Str("divergence".to_string())),
+        ("policy", JsonValue::Str("grad:1".to_string())),
+        ("stop", JsonValue::Str(format!("{:?}", diverged.stop))),
+        ("diverged_at_iter", JsonValue::Num(diverged.history.len() as f64)),
+    ]);
+    json.series(vec![
+        ("section", JsonValue::Str("divergence".to_string())),
+        ("policy", JsonValue::Str("exact".to_string())),
+        ("stop", JsonValue::Str(format!("{:?}", bounded.stop))),
+        ("diverged_at_iter", JsonValue::Num(f64::NAN)),
+    ]);
+
+    let json_path = json.write().expect("write BENCH json");
+    println!("\nmachine-readable report → {}", json_path.display());
+    println!("series → {}", csv_path.display());
+    println!("note: same master schedule per policy — the win is pure worker-solve cost;");
+    println!("accuracy after the fixed budget is the price (gap column), per arXiv:1412.6058.");
+}

@@ -137,6 +137,7 @@ fn main() {
     }
 
     let mut total_real_s = 0.0;
+    let mut total_net_bytes = 0u64;
     for (tau, min_arrivals) in settings {
         let cfg = ClusterConfig::builder()
             .admm(AdmmConfig {
@@ -191,10 +192,16 @@ fn main() {
             ("max_set", JsonValue::Num(max_set as f64)),
             ("objective", JsonValue::Num(objective)),
             ("real_s", JsonValue::Num(real_s)),
+            // Simulated payload volume (8 bytes/f64, deterministic in
+            // virtual time) — the comm-cost axis next to the time axes.
+            ("net_bytes_down", JsonValue::Num(r.net_bytes_down as f64)),
+            ("net_bytes_up", JsonValue::Num(r.net_bytes_up as f64)),
         ]);
+        total_net_bytes += r.net_bytes_down + r.net_bytes_up;
     }
     csv.flush().unwrap();
     json.metric("sweep_total_real_s", total_real_s);
+    json.metric("sweep_net_bytes_total", total_net_bytes as f64);
     println!("\nseries → {}", path.display());
 
     // ---- pooled execution: the multicore win on CPU-heavy worker solves ----

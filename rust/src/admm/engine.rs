@@ -53,6 +53,8 @@ use crate::bench::json::{hex_mat, mat_from_hex, JsonValue};
 use crate::problems::{BlockPattern, ConsensusProblem};
 use crate::rng::Pcg64;
 
+use crate::solvers::inexact::InexactPolicy;
+
 use super::arrivals::{ArrivalModel, ArrivalSampler, ArrivalTrace};
 use super::master_pov::{NativeSolver, SubproblemSolver};
 use super::session::{BufferingObserver, EngineError, Session};
@@ -873,11 +875,22 @@ impl<'a> TraceSource<'a> {
     /// Native closed-form subproblem solves backed by the problem itself
     /// (block-sharded when the problem is).
     pub fn new(problem: &'a ConsensusProblem, arrivals: &ArrivalModel) -> Self {
+        Self::with_policy(problem, arrivals, InexactPolicy::Exact)
+    }
+
+    /// Native solves under an [`InexactPolicy`]: every arrived worker's
+    /// subproblem runs the policy's k-step inner loop with that worker's
+    /// warm-start state persisting across rounds (and into checkpoints).
+    pub fn with_policy(
+        problem: &'a ConsensusProblem,
+        arrivals: &ArrivalModel,
+        policy: InexactPolicy,
+    ) -> Self {
         let n_workers = problem.num_workers();
         TraceSource {
             n_workers,
             sampler: arrivals.sampler(n_workers),
-            solver: SolverSlot::Native(NativeSolver::new(problem)),
+            solver: SolverSlot::Native(NativeSolver::with_policy(problem, policy)),
             shard: problem.pattern().cloned(),
             x0_snap: Vec::new(),
             lam_snap: Vec::new(),
@@ -921,10 +934,17 @@ impl<'a> WorkerSource for TraceSource<'a> {
     }
 
     fn save_checkpoint(&self) -> Result<JsonValue, EngineError> {
+        // "warm" (checkpoint v3+) carries the per-worker inexact-policy
+        // warm-start states; Null for external solvers (always exact).
+        let warm = match &self.solver {
+            SolverSlot::Native(s) => s.warm_to_json(),
+            SolverSlot::Borrowed(_) => JsonValue::Null,
+        };
         Ok(JsonValue::Obj(vec![
             ("sampler".to_string(), self.sampler.save()),
             ("x0_snap".to_string(), hex_mat(&self.x0_snap)),
             ("lam_snap".to_string(), hex_mat(&self.lam_snap)),
+            ("warm".to_string(), warm),
         ]))
     }
 
@@ -940,6 +960,12 @@ impl<'a> WorkerSource for TraceSource<'a> {
             return Err(EngineError::Checkpoint(
                 "snapshot worker count does not match the source".to_string(),
             ));
+        }
+        // Absent in v1/v2 checkpoints (exact-only by construction).
+        if let Some(warm) = doc.get("warm") {
+            if let (SolverSlot::Native(s), JsonValue::Arr(_)) = (&mut self.solver, warm) {
+                s.load_warm(warm).map_err(EngineError::Checkpoint)?;
+            }
         }
         Ok(())
     }

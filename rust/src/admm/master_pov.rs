@@ -8,7 +8,9 @@
 //! fast. The threaded implementation lives in [`crate::cluster`] and is
 //! trace-equivalent (tested).
 
+use crate::bench::json::JsonValue;
 use crate::problems::{ConsensusProblem, WorkerScratch};
+use crate::solvers::inexact::{solve_inexact, InexactPolicy, WarmState};
 
 use super::arrivals::{ArrivalModel, ArrivalTrace};
 use super::engine::{run_engine, EngineOptions, PartialBarrier, TraceSource};
@@ -22,21 +24,69 @@ pub trait SubproblemSolver {
 }
 
 /// Closed-form/native solver backed by the problem's own local costs. Owns
-/// the [`WorkerScratch`] its solves reuse across iterations.
+/// the [`WorkerScratch`] its solves reuse across iterations, the
+/// [`InexactPolicy`] governing every worker's solve, and one [`WarmState`]
+/// per worker (the inner-loop warm starts the inexact policies persist
+/// across rounds; untouched — and empty — under
+/// [`InexactPolicy::Exact`]).
 pub struct NativeSolver<'a> {
     problem: &'a ConsensusProblem,
     scratch: WorkerScratch,
+    policy: InexactPolicy,
+    warm: Vec<WarmState>,
 }
 
 impl<'a> NativeSolver<'a> {
     pub fn new(problem: &'a ConsensusProblem) -> Self {
-        NativeSolver { problem, scratch: WorkerScratch::new() }
+        Self::with_policy(problem, InexactPolicy::Exact)
+    }
+
+    /// A solver whose per-worker solves run under `policy`.
+    pub fn with_policy(problem: &'a ConsensusProblem, policy: InexactPolicy) -> Self {
+        let warm = vec![WarmState::default(); problem.num_workers()];
+        NativeSolver { problem, scratch: WorkerScratch::new(), policy, warm }
+    }
+
+    /// The policy this solver runs under.
+    pub fn policy(&self) -> &InexactPolicy {
+        &self.policy
+    }
+
+    /// Serialize the per-worker warm-start states (checkpoint v3).
+    pub fn warm_to_json(&self) -> JsonValue {
+        JsonValue::Arr(self.warm.iter().map(WarmState::to_json).collect())
+    }
+
+    /// Restore the per-worker warm-start states from
+    /// [`NativeSolver::warm_to_json`] output.
+    pub fn load_warm(&mut self, doc: &JsonValue) -> Result<(), String> {
+        let items = doc.items();
+        if items.len() != self.warm.len() {
+            return Err(format!(
+                "warm-state count mismatch: checkpoint has {}, problem has {} workers",
+                items.len(),
+                self.warm.len()
+            ));
+        }
+        for (slot, item) in self.warm.iter_mut().zip(items) {
+            *slot = WarmState::from_json(item)?;
+        }
+        Ok(())
     }
 }
 
 impl<'a> SubproblemSolver for NativeSolver<'a> {
     fn solve(&mut self, worker: usize, lam: &[f64], x0: &[f64], rho: f64, out: &mut [f64]) {
-        self.problem.local(worker).solve_subproblem(lam, x0, rho, out, &mut self.scratch);
+        solve_inexact(
+            &**self.problem.local(worker),
+            &self.policy,
+            lam,
+            x0,
+            rho,
+            out,
+            &mut self.scratch,
+            &mut self.warm[worker],
+        );
     }
 }
 

@@ -34,6 +34,7 @@ pub mod sync;
 use crate::linalg::vecops;
 use crate::problems::{BlockPattern, ConsensusProblem, WorkerScratch};
 use crate::prox::Regularizer;
+use crate::solvers::inexact::InexactPolicy;
 
 /// Master-side reusable buffers for the per-iteration hot path — the
 /// counterpart of [`WorkerScratch`]. One instance is owned by each
@@ -101,6 +102,11 @@ pub struct AdmmConfig {
     /// the arrived workers' cached `f_i` values, and the `x0_tol` /
     /// residual stopping rules are not evaluated (their inputs are NaN).
     pub metrics_every: usize,
+    /// How workers solve the subproblem (13):
+    /// [`InexactPolicy::Exact`] (the default, bit-identical to the
+    /// historical exact-solve path) or one of the warm-started k-step
+    /// inner-loop policies of [`crate::solvers::inexact`].
+    pub inexact: InexactPolicy,
 }
 
 impl Default for AdmmConfig {
@@ -117,6 +123,7 @@ impl Default for AdmmConfig {
             stopping: None,
             objective_every: 1,
             metrics_every: 1,
+            inexact: InexactPolicy::Exact,
         }
     }
 }
@@ -136,6 +143,7 @@ impl AdmmConfig {
                 self.min_arrivals
             ));
         }
+        self.inexact.validate()?;
         Ok(())
     }
 

@@ -64,6 +64,7 @@ use crate::bench::json::{
     self, hex_mat, hex_vec, json_usize, mat_from_hex, vec_from_hex, JsonValue,
 };
 use crate::problems::{BlockError, BlockPattern, ConsensusProblem};
+use crate::solvers::inexact::InexactPolicy;
 
 use super::arrivals::{ArrivalModel, ArrivalTrace};
 use super::engine::{
@@ -124,6 +125,10 @@ pub enum EngineError {
     /// protocol violations, malformed wire payloads. Mid-run worker
     /// disconnects are *not* errors — they surface as realized outages.
     Transport(String),
+    /// An invalid [`crate::solvers::inexact::InexactPolicy`] (k = 0 inner
+    /// steps, non-positive adaptive tolerance, …) on the config or the
+    /// builder; the message says which knob.
+    InvalidInexact(String),
 }
 
 impl From<BlockError> for EngineError {
@@ -183,6 +188,7 @@ impl fmt::Display for EngineError {
             }
             EngineError::Cluster(msg) => write!(f, "cluster config error: {msg}"),
             EngineError::Transport(msg) => write!(f, "transport error: {msg}"),
+            EngineError::InvalidInexact(msg) => write!(f, "inexact policy error: {msg}"),
         }
     }
 }
@@ -412,14 +418,19 @@ pub struct Checkpoint {
 impl Checkpoint {
     /// The `schema` marker every checkpoint document carries.
     pub const SCHEMA: &'static str = "ad-admm-checkpoint";
-    /// Current checkpoint format version: v2 adds the block-sharding
-    /// section (`blocks`: the [`BlockPattern`] plus per-block
-    /// arrival/staleness counters; `null` for dense runs).
-    pub const VERSION: usize = 2;
+    /// Current checkpoint format version: v3 adds the inexact-solve
+    /// section (`inexact_policy`: the session's
+    /// [`crate::solvers::inexact::InexactPolicy`] string, plus per-worker
+    /// warm-start states inside the source document).
+    pub const VERSION: usize = 3;
     /// The pre-sharding format. Still readable: a v1 document is exactly
     /// a v2 document with no `blocks` section, so v1 checkpoints resume
     /// into dense sessions unchanged.
     pub const V1: usize = 1;
+    /// The block-sharding format (adds the `blocks` section; `null` for
+    /// dense runs). Still readable: v2 predates inexact policies, so v2
+    /// checkpoints resume into exact-policy sessions unchanged.
+    pub const V2: usize = 2;
 
     fn validate(doc: &JsonValue) -> Result<(), EngineError> {
         match doc.get("schema").and_then(JsonValue::as_str) {
@@ -431,10 +442,12 @@ impl Checkpoint {
             }
         }
         let version = get_usize(doc, "version")?;
-        if version != Self::VERSION && version != Self::V1 {
+        if version != Self::VERSION && version != Self::V2 && version != Self::V1 {
             return Err(EngineError::Checkpoint(format!(
-                "unsupported checkpoint version {version} (this build reads versions {} and {})",
+                "unsupported checkpoint version {version} (this build reads versions {}, {} \
+                 and {})",
                 Self::V1,
+                Self::V2,
                 Self::VERSION
             )));
         }
@@ -566,6 +579,7 @@ pub struct SessionBuilder<'a> {
     residual_stopping: bool,
     blocks: Option<BlockPattern>,
     sparse_master: bool,
+    inexact: Option<InexactPolicy>,
 }
 
 impl<'a> Default for SessionBuilder<'a> {
@@ -586,6 +600,7 @@ impl<'a> SessionBuilder<'a> {
             residual_stopping: true,
             blocks: None,
             sparse_master: true,
+            inexact: None,
         }
     }
 
@@ -661,6 +676,18 @@ impl<'a> SessionBuilder<'a> {
         self
     }
 
+    /// Run the worker subproblem solves under this
+    /// [`InexactPolicy`] — the k-step inner loops of the inexact
+    /// consensus-ADMM line (arXiv:1412.6058) with per-worker warm starts.
+    /// Overrides the config's `inexact` field; validated at `build()` into
+    /// [`EngineError::InvalidInexact`]. The default
+    /// ([`InexactPolicy::Exact`]) is bit-identical to the historical exact
+    /// solve path.
+    pub fn inexact(mut self, policy: InexactPolicy) -> Self {
+        self.inexact = Some(policy);
+        self
+    }
+
     /// Run the master update through the O(active) lazy sparse path
     /// ([`SparseMaster`]) when the session is eligible: block-sharded,
     /// workers-first step order, and the policy does not rewrite all duals
@@ -676,10 +703,13 @@ impl<'a> SessionBuilder<'a> {
 
     fn take_source(&mut self) -> Result<Box<dyn WorkerSource + 'a>, EngineError> {
         let problem = self.problem.ok_or(EngineError::MissingProblem)?;
+        let policy = self.inexact.unwrap_or(self.cfg.inexact);
         Ok(match self.source.take() {
             Some(SourceSpec::Boxed(b)) => b,
-            Some(SourceSpec::Arrivals(model)) => Box::new(TraceSource::new(problem, &model)),
-            None => Box::new(TraceSource::new(problem, &ArrivalModel::Full)),
+            Some(SourceSpec::Arrivals(model)) => {
+                Box::new(TraceSource::with_policy(problem, &model, policy))
+            }
+            None => Box::new(TraceSource::with_policy(problem, &ArrivalModel::Full, policy)),
         })
     }
 
@@ -723,7 +753,11 @@ impl<'a> SessionBuilder<'a> {
         checkpoint: Option<&Checkpoint>,
     ) -> Result<Session<'a, S>, EngineError> {
         let problem = self.problem.ok_or(EngineError::MissingProblem)?;
-        let cfg = self.cfg;
+        let mut cfg = self.cfg;
+        if let Some(p) = self.inexact {
+            cfg.inexact = p;
+        }
+        cfg.inexact.validate().map_err(EngineError::InvalidInexact)?;
         let n_workers = problem.num_workers();
         let dim = problem.dim();
 
@@ -1392,6 +1426,10 @@ impl<'a, S: WorkerSource + 'a> Session<'a, S> {
             ("schema".to_string(), Checkpoint::SCHEMA.into()),
             ("version".to_string(), JsonValue::Num(Checkpoint::VERSION as f64)),
             ("blocks".to_string(), blocks_doc),
+            // v3: the session's inexact policy; resume validates it so a
+            // mid-inner-schedule warm state never continues under a
+            // different policy.
+            ("inexact_policy".to_string(), self.cfg.inexact.to_json()),
             ("k".to_string(), JsonValue::Num(self.k as f64)),
             ("n_workers".to_string(), JsonValue::Num(n_workers as f64)),
             ("dim".to_string(), JsonValue::Num(self.state.x0.len() as f64)),
@@ -1456,16 +1494,39 @@ impl<'a, S: WorkerSource + 'a> Session<'a, S> {
             )));
         }
 
-        // Block-sharding compatibility: a v2 checkpoint records the
+        // Block-sharding compatibility: a v2+ checkpoint records the
         // pattern it was taken under (null = dense); a v1 checkpoint
         // predates sharding and is dense by definition. Either way the
         // session being resumed into must match.
         let version = get_usize(doc, "version")?;
-        let blocks_doc = if version >= Checkpoint::VERSION {
+        let blocks_doc = if version >= Checkpoint::V2 {
             Some(jget(doc, "blocks")?)
         } else {
             None // v1: no section, dense
         };
+
+        // Inexact-policy compatibility: a v3 checkpoint records the policy
+        // its warm-start states were produced under; resuming under a
+        // different policy would silently desynchronize the inner-loop
+        // schedule. v1/v2 documents predate inexact solves and only resume
+        // into exact-policy sessions.
+        if version >= Checkpoint::VERSION {
+            let stored = InexactPolicy::from_json(jget(doc, "inexact_policy")?)
+                .map_err(EngineError::Checkpoint)?;
+            if stored != self.cfg.inexact {
+                return Err(EngineError::Checkpoint(format!(
+                    "checkpoint was taken under inexact policy {stored}, the session is \
+                     configured with {}",
+                    self.cfg.inexact
+                )));
+            }
+        } else if !self.cfg.inexact.is_exact() {
+            return Err(EngineError::Checkpoint(format!(
+                "checkpoint version {version} predates inexact policies (exact-only), the \
+                 session is configured with {}",
+                self.cfg.inexact
+            )));
+        }
         match (blocks_doc, &self.shard) {
             (None | Some(JsonValue::Null), None) => {}
             (None | Some(JsonValue::Null), Some(_)) => {
@@ -1764,6 +1825,7 @@ mod tests {
             EngineError::ShardingUnsupported { source: "custom" },
             EngineError::ActiveSetOutOfRange { index: 7, n_workers: 4 },
             EngineError::Cluster("drop_prob must be in [0, 1)".to_string()),
+            EngineError::InvalidInexact("inner step count must be >= 1".to_string()),
         ];
         for e in errs {
             let text = e.to_string();

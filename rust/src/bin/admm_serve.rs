@@ -55,7 +55,8 @@ fn print_help() {
          \x20 admm_serve submit --connect HOST:PORT --job ID --workers N --m M --n N\n\
          \x20            --rho R --gamma G --tau T --min-arrivals A --iters K --tol E\n\
          \x20            [--alt] [--shard-blocks B --shard-owners C] [--free-running]\n\
-         \x20            [--fast-ms F --slow-ms S] [--checkpoint-every N] [--seed S]\n\n\
+         \x20            [--fast-ms F --slow-ms S] [--checkpoint-every N] [--seed S]\n\
+         \x20            [--inexact exact|grad:K|proxgrad:K|newton:K|adaptive:TOL0:MAX]\n\n\
          serve accepts jobs until killed (--oneshot: exit after the first job);\n\
          submit prints the per-job worker rendezvous port, then blocks for the report."
     );

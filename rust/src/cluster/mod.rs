@@ -418,6 +418,14 @@ pub struct ClusterReport {
     /// as `wall_clock_s`).
     pub master_wait_s: f64,
     pub workers: Vec<WorkerStats>,
+    /// Simulated master→worker payload bytes (8 bytes per f64 shipped).
+    /// Deterministic in [`ExecutionMode::VirtualTime`]; `0` in
+    /// [`ExecutionMode::RealThreads`], which does not meter its channels
+    /// (real-socket runs report measured bytes via
+    /// [`TransportStats`] instead).
+    pub net_bytes_down: u64,
+    /// Simulated worker→master payload bytes (see `net_bytes_down`).
+    pub net_bytes_up: u64,
 }
 
 impl ClusterReport {
@@ -436,6 +444,7 @@ impl ClusterReport {
         history: Vec<IterRecord>,
         source: VirtualSource,
     ) -> ClusterReport {
+        let (net_bytes_down, net_bytes_up) = source.network_bytes();
         let (workers, wall_clock_s, master_wait_s) = source.finish();
         ClusterReport {
             state: outcome.state,
@@ -445,6 +454,8 @@ impl ClusterReport {
             wall_clock_s,
             master_wait_s,
             workers,
+            net_bytes_down,
+            net_bytes_up,
         }
     }
 }
@@ -497,6 +508,8 @@ impl StarCluster {
             wall_clock_s,
             master_wait_s,
             workers,
+            net_bytes_down: 0,
+            net_bytes_up: 0,
         }
     }
 

@@ -42,6 +42,7 @@ use crate::bench::json::{
 };
 use crate::problems::{BlockPattern, ConsensusProblem, WorkerScratch};
 use crate::rng::Pcg64;
+use crate::solvers::inexact::{solve_inexact, InexactPolicy, WarmState};
 use crate::util::timer::Clock;
 
 use super::clock::{Event, EventKind, EventQueue, VirtualClock};
@@ -59,6 +60,9 @@ struct VirtualWorker {
     /// Reusable subproblem/eval buffers, reused across this worker's rounds
     /// (zero allocation in the compute hot path).
     scratch: WorkerScratch,
+    /// Inexact-policy warm start: previous iterate + cached step size,
+    /// persisting across this worker's rounds (and into checkpoints).
+    warm: WarmState,
 }
 
 /// One arrived worker's deferred round of arithmetic, fanned across the
@@ -73,6 +77,7 @@ struct SolveTask<'a> {
     x: &'a mut Vec<f64>,
     lam: &'a mut Vec<f64>,
     f: &'a mut f64,
+    warm: &'a mut WarmState,
 }
 
 /// The discrete-event [`WorkerSource`]: mirrors the threaded star cluster
@@ -127,6 +132,16 @@ pub struct VirtualSource {
     faults: Option<FaultModel>,
     fault_plan: Option<crate::admm::engine::FaultPlan>,
     master_wait_s: f64,
+    /// The session's inexactness policy, applied to every native worker
+    /// solve (`Exact` = the historical closed-form path, bit-identical).
+    policy: InexactPolicy,
+    /// Simulated payload bytes shipped master → workers (x₀ slices, plus
+    /// λ̂ under Algorithm 4), at 8 bytes per f64. Deterministic, so it
+    /// doubles as a cheap cross-run network-volume metric.
+    bytes_down: u64,
+    /// Simulated payload bytes shipped workers → master (x̂ slices, plus
+    /// the worker-updated dual under Algorithm 2), counted at absorption.
+    bytes_up: u64,
 }
 
 impl VirtualSource {
@@ -153,6 +168,7 @@ impl VirtualSource {
                     .map(|f| Pcg64::seed_from_u64(f.seed.wrapping_add(i as u64 * 0x5bd1))),
                 solve: solver_list[i].take(),
                 scratch: WorkerScratch::new(),
+                warm: WarmState::default(),
             })
             .collect();
         let comm_scale = match &shard {
@@ -180,7 +196,19 @@ impl VirtualSource {
             faults: cfg.faults.clone(),
             fault_plan: cfg.fault_plan.clone(),
             master_wait_s: 0.0,
+            policy: cfg.admm.inexact,
+            bytes_down: 0,
+            bytes_up: 0,
         }
+    }
+
+    /// Simulated network volume so far as `(bytes_down, bytes_up)`:
+    /// master→worker payloads (x₀ slices + λ̂ under Algorithm 4) and
+    /// worker→master payloads (x̂ slices + λ under Algorithm 2), at 8
+    /// bytes per f64. Deterministic for a given config, so sweeps can use
+    /// it as a comm-volume metric without a real transport.
+    pub fn network_bytes(&self) -> (u64, u64) {
+        (self.bytes_down, self.bytes_up)
     }
 
     /// Start worker `i`'s next round at the current virtual instant:
@@ -345,6 +373,7 @@ impl WorkerSource for VirtualSource {
                             "retransmissions".to_string(),
                             JsonValue::Num(self.stat_retransmissions[i] as f64),
                         ),
+                        ("warm".to_string(), w.warm.to_json()),
                     ])
                 })
                 .collect(),
@@ -360,6 +389,8 @@ impl WorkerSource for VirtualSource {
             ),
             ("x0_snap".to_string(), hex_mat(&self.x0_snap)),
             ("lam_snap".to_string(), hex_mat(&self.lam_snap)),
+            ("bytes_down".to_string(), hex_u128(self.bytes_down as u128)),
+            ("bytes_up".to_string(), hex_u128(self.bytes_up as u128)),
             ("workers".to_string(), workers_json),
         ]))
     }
@@ -442,7 +473,22 @@ impl WorkerSource for VirtualSource {
             self.stat_busy_s[i] = f64_from_hex(jget(wdoc, "busy_s")?).map_err(bad)?;
             self.stat_retransmissions[i] =
                 json_usize(jget(wdoc, "retransmissions")?).map_err(bad)?;
+            // Warm-start state is absent in pre-v3 checkpoints (which the
+            // session layer only accepts under the Exact policy, where a
+            // cold warm state is semantically identical).
+            w.warm = match wdoc.get("warm") {
+                Some(wj) => WarmState::from_json(wj).map_err(bad)?,
+                None => WarmState::default(),
+            };
         }
+        self.bytes_down = match doc.get("bytes_down") {
+            Some(v) => u128_from_hex(v).map_err(bad)? as u64,
+            None => 0,
+        };
+        self.bytes_up = match doc.get("bytes_up") {
+            Some(v) => u128_from_hex(v).map_err(bad)? as u64,
+            None => 0,
+        };
 
         self.vclock = VirtualClock::new();
         self.vclock.advance_to(now_s);
@@ -454,7 +500,7 @@ impl WorkerSource for VirtualSource {
         Ok(())
     }
 
-    fn start(&mut self, state: &AdmmState, _policy: &dyn UpdatePolicy) {
+    fn start(&mut self, state: &AdmmState, policy: &dyn UpdatePolicy) {
         let n_workers = self.pending.len();
         // x₀^{k̄_i+1} as each worker last received it — same bookkeeping
         // as the serial simulator; Algorithm 4 additionally broadcasts the
@@ -466,7 +512,11 @@ impl WorkerSource for VirtualSource {
         self.lam_snap = state.lams.clone();
         // Initial broadcast at t = 0: every worker starts computing
         // against x⁰.
+        let with_dual = policy.broadcasts_dual();
         for i in 0..n_workers {
+            self.bytes_down += 8 * (self.x0_snap[i].len()
+                + if with_dual { self.lam_snap[i].len() } else { 0 })
+                as u64;
             self.dispatch(i);
         }
     }
@@ -537,11 +587,19 @@ impl WorkerSource for VirtualSource {
                     x,
                     lam,
                     f,
+                    warm: &mut w.warm,
                 });
             }
         }
+        // Uplink accounting: each absorbed message carried the worker's x̂
+        // slice, plus its updated dual under Algorithm 2 (8 bytes/f64).
+        self.bytes_up += tasks
+            .iter()
+            .map(|t| 8 * (t.x.len() + if worker_dual { t.x.len() } else { 0 }) as u64)
+            .sum::<u64>();
         let x0_snaps = &self.x0_snap;
         let lam_snaps = &self.lam_snap;
+        let inexact = self.policy;
         self.pool.run(&mut tasks, |t| {
             let i = t.worker;
             // Worker i's slice length (owned-slice length when sharded).
@@ -552,7 +610,16 @@ impl WorkerSource for VirtualSource {
                 let snap = &x0_snaps[i];
                 match &mut t.solve {
                     Some(f) => (**f)(t.lam, snap, rho, t.x),
-                    None => problem.local(i).solve_subproblem(t.lam, snap, rho, t.x, t.scratch),
+                    None => solve_inexact(
+                        &**problem.local(i),
+                        &inexact,
+                        t.lam,
+                        snap,
+                        rho,
+                        t.x,
+                        t.scratch,
+                        t.warm,
+                    ),
                 }
                 for j in 0..ni {
                     t.lam[j] += rho * (t.x[j] - snap[j]);
@@ -562,7 +629,16 @@ impl WorkerSource for VirtualSource {
                 let (snap, lsnap) = (&x0_snaps[i], &lam_snaps[i]);
                 match &mut t.solve {
                     Some(f) => (**f)(lsnap, snap, rho, t.x),
-                    None => problem.local(i).solve_subproblem(lsnap, snap, rho, t.x, t.scratch),
+                    None => solve_inexact(
+                        &**problem.local(i),
+                        &inexact,
+                        lsnap,
+                        snap,
+                        rho,
+                        t.x,
+                        t.scratch,
+                        t.warm,
+                    ),
                 }
             }
             *t.f = problem.local(i).eval_with(t.x, t.scratch);
@@ -583,6 +659,9 @@ impl WorkerSource for VirtualSource {
             if with_dual {
                 self.lam_snap[i].copy_from_slice(&state.lams[i]);
             }
+            self.bytes_down += 8 * (self.x0_snap[i].len()
+                + if with_dual { self.lam_snap[i].len() } else { 0 })
+                as u64;
             self.dispatch(i);
         }
     }
@@ -600,6 +679,7 @@ pub(crate) fn run_virtual(
     let mut source =
         VirtualSource::new(problem.num_workers(), cfg, solvers, problem.pattern().cloned());
     let run = super::run_cluster_engine(problem, cfg, &mut source);
+    let (net_bytes_down, net_bytes_up) = source.network_bytes();
     let (workers, wall_clock_s, master_wait_s) = source.finish();
     ClusterReport {
         state: run.state,
@@ -609,6 +689,8 @@ pub(crate) fn run_virtual(
         wall_clock_s,
         master_wait_s,
         workers,
+        net_bytes_down,
+        net_bytes_up,
     }
 }
 

@@ -65,6 +65,7 @@ impl ThreadedSource {
         let n_workers = problem.num_workers();
         let rho = cfg.admm.rho;
         let protocol = cfg.protocol;
+        let policy = cfg.admm.inexact;
 
         // Star links: one channel to each worker, one shared channel back.
         let (to_master, from_workers) = std::sync::mpsc::channel::<WorkerMsg>();
@@ -93,6 +94,7 @@ impl ThreadedSource {
                 .spawn(move || {
                     worker::worker_loop(
                         i, local, rho, protocol, rx, back, delay, comm, solve, faults, spikes,
+                        policy,
                     )
                 })
                 .expect("spawn worker");

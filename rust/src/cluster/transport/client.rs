@@ -15,6 +15,7 @@ use std::time::{Duration, Instant};
 use crate::admm::session::EngineError;
 use crate::problems::WorkerScratch;
 use crate::rng::Pcg64;
+use crate::solvers::inexact::WarmState;
 use crate::util::timer::{Clock, Stopwatch};
 
 use super::super::timeline::WorkerStats;
@@ -137,6 +138,13 @@ pub fn run_worker(cfg: &WorkerClientConfig) -> Result<WorkerStats, EngineError> 
     let mut lam = vec![0.0; n]; // λ⁰ = 0 (reseed frames overwrite on reconnect)
     let mut x = vec![0.0; n];
     let mut scratch = WorkerScratch::new();
+    // The spec's inexactness policy, honoured through this process-local
+    // warm state — same per-arrival solve cadence as the in-process
+    // sources, so lockstep digests still match under inexact policies.
+    // (A reconnecting worker restarts cold; under `lockstep` the e2e
+    // digest jobs run fault-free, so the schedule stays aligned.)
+    let policy = spec.inexact;
+    let mut warm = WarmState::default();
     let mut stats = WorkerStats::new(worker);
     let mut rounds = 0usize;
     let wall = Stopwatch::start();
@@ -181,6 +189,8 @@ pub fn run_worker(cfg: &WorkerClientConfig) -> Result<WorkerStats, EngineError> 
             master_lam.as_deref(),
             None,
             &mut scratch,
+            &policy,
+            &mut warm,
         );
 
         let cms = comm_leg_ms(None, faults.as_ref(), fault_rng.as_mut(), &mut stats, 1.0);

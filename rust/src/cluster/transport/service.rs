@@ -28,6 +28,7 @@ use crate::bench::json::{json_usize, JsonValue};
 use crate::data::LassoInstance;
 use crate::problems::{BlockPattern, ConsensusProblem};
 use crate::rng::Pcg64;
+use crate::solvers::inexact::InexactPolicy;
 use crate::util::cli::ArgParser;
 use crate::util::digest::x0_digest;
 
@@ -63,6 +64,11 @@ pub struct JobSpec {
     pub slow_ms: f64,
     /// Master-side checkpoint cadence in iterations (0 = never).
     pub ckpt_every: usize,
+    /// Worker subproblem inexactness (`exact`, `grad:K`, `proxgrad:K`,
+    /// `newton:K`, `adaptive:TOL0:MAX`). Shipped in the assign frame, so
+    /// every worker process honours the same policy as the master's
+    /// reference replay — the loopback digest comparison stays exact.
+    pub inexact: InexactPolicy,
 }
 
 impl Default for JobSpec {
@@ -86,6 +92,7 @@ impl Default for JobSpec {
             fast_ms: 0.0,
             slow_ms: 0.0,
             ckpt_every: 0,
+            inexact: InexactPolicy::Exact,
         }
     }
 }
@@ -115,6 +122,11 @@ impl JobSpec {
             fast_ms: args.get_parse_or("fast-ms", d.fast_ms),
             slow_ms: args.get_parse_or("slow-ms", d.slow_ms),
             ckpt_every: args.get_parse_or("checkpoint-every", d.ckpt_every),
+            inexact: match args.get("inexact") {
+                None => d.inexact,
+                Some(s) => InexactPolicy::parse(s)
+                    .unwrap_or_else(|e| panic!("--inexact: {e}")),
+            },
         }
     }
 
@@ -139,6 +151,7 @@ impl JobSpec {
             ("fast_ms".to_string(), self.fast_ms.into()),
             ("slow_ms".to_string(), self.slow_ms.into()),
             ("ckpt_every".to_string(), self.ckpt_every.into()),
+            ("inexact".to_string(), self.inexact.to_json()),
         ])
     }
 
@@ -178,6 +191,12 @@ impl JobSpec {
             fast_ms: f64_of("fast_ms")?,
             slow_ms: f64_of("slow_ms")?,
             ckpt_every: usize_of("ckpt_every")?,
+            // Absent in specs from pre-inexact peers: default to the exact
+            // (historical) solve so mixed-version fleets stay coherent.
+            inexact: match doc.get("inexact") {
+                None => InexactPolicy::Exact,
+                Some(v) => InexactPolicy::from_json(v)?,
+            },
         })
     }
 
@@ -205,6 +224,7 @@ impl JobSpec {
             min_arrivals: self.min_arrivals,
             max_iters: self.iters,
             x0_tol: self.tol,
+            inexact: self.inexact,
             ..Default::default()
         }
     }
@@ -550,9 +570,25 @@ mod tests {
             seed: u64::MAX - 3, // > 2^53: must survive via the string path
             shard_blocks: 5,
             alt: true,
+            inexact: InexactPolicy::GradSteps { k: 5 },
             ..JobSpec::default()
         };
         let back = JobSpec::from_json(&spec.to_json()).expect("round trip");
+        assert_eq!(back, spec);
+    }
+
+    /// Specs serialized before the inexact field existed (no "inexact"
+    /// key) deserialize to the exact policy — mixed-version fleets keep
+    /// solving the historical subproblem.
+    #[test]
+    fn job_spec_without_inexact_field_defaults_to_exact() {
+        let spec = JobSpec::default();
+        let json = spec.to_json();
+        let JsonValue::Obj(fields) = json else { panic!("spec json is an object") };
+        let stripped =
+            JsonValue::Obj(fields.into_iter().filter(|(k, _)| k != "inexact").collect());
+        let back = JobSpec::from_json(&stripped).expect("legacy spec parses");
+        assert_eq!(back.inexact, InexactPolicy::Exact);
         assert_eq!(back, spec);
     }
 

@@ -22,6 +22,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::problems::{LocalCost, WorkerScratch};
+use crate::solvers::inexact::{solve_inexact, InexactPolicy, WarmState};
 
 use super::messages::{MasterMsg, WorkerMsg};
 use super::timeline::WorkerStats;
@@ -40,7 +41,11 @@ pub type WorkerSolveFn = Box<dyn FnMut(&[f64], &[f64], f64, &mut [f64]) + Send>;
 ///
 /// Shared verbatim by the threaded worker loop and the socket worker
 /// client so that both transports compute bit-identical messages from the
-/// same `(λ_i, x̂₀)` inputs.
+/// same `(λ_i, x̂₀)` inputs. The solve honours the session's
+/// [`InexactPolicy`] through this worker's persistent [`WarmState`]
+/// (untouched under `Exact`; a solve override is always exact — the PJRT
+/// artifacts bake in the full solve).
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn worker_round(
     protocol: Protocol,
     local: &dyn LocalCost,
@@ -51,13 +56,15 @@ pub(crate) fn worker_round(
     master_lam: Option<&[f64]>,
     solve_override: Option<&mut WorkerSolveFn>,
     scratch: &mut WorkerScratch,
+    policy: &InexactPolicy,
+    warm: &mut WarmState,
 ) -> Option<Vec<f64>> {
     match protocol {
         Protocol::AdAdmm => {
             // (13): x_i ← argmin f_i + xᵀλ_i + ρ/2‖x − x̂₀‖²
             match solve_override {
                 Some(f) => f(lam, x0, rho, x),
-                None => local.solve_subproblem(lam, x0, rho, x, scratch),
+                None => solve_inexact(local, policy, lam, x0, rho, x, scratch, warm),
             }
             // (14): λ_i ← λ_i + ρ(x_i − x̂₀)
             for j in 0..x.len() {
@@ -70,7 +77,7 @@ pub(crate) fn worker_round(
             let master_lam = master_lam.expect("Algorithm 4 must send λ̂_i");
             match solve_override {
                 Some(f) => f(master_lam, x0, rho, x),
-                None => local.solve_subproblem(master_lam, x0, rho, x, scratch),
+                None => solve_inexact(local, policy, master_lam, x0, rho, x, scratch, warm),
             }
             None
         }
@@ -129,11 +136,13 @@ pub(crate) fn worker_loop(
     mut solve_override: Option<WorkerSolveFn>,
     faults: Option<FaultModel>,
     spikes: Option<crate::admm::engine::FaultPlan>,
+    policy: InexactPolicy,
 ) -> WorkerStats {
     let n = local.dim();
     let mut lam = vec![0.0; n]; // λ⁰ = 0 (Algorithm 2 keeps it worker-side)
     let mut x = vec![0.0; n];
     let mut scratch = WorkerScratch::new(); // reused across rounds
+    let mut warm = WarmState::default(); // inexact-policy warm start
     let mut stats = WorkerStats::new(id);
     let mut fault_rng = faults
         .as_ref()
@@ -169,6 +178,8 @@ pub(crate) fn worker_loop(
             master_lam.as_deref(),
             solve_override.as_mut(),
             &mut scratch,
+            &policy,
+            &mut warm,
         );
 
         // Outbound leg: comm draw + retransmissions, slept as one stretched

@@ -113,4 +113,5 @@ pub mod prelude {
     pub use crate::rng::Pcg64;
     pub use crate::runtime::{ArtifactRegistry, PjrtEngine};
     pub use crate::solvers::fista::fista_lasso;
+    pub use crate::solvers::inexact::{InexactPolicy, WarmState};
 }

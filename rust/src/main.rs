@@ -69,6 +69,7 @@ fn print_help() {
                  session checkpoints; continue bit-identically with `ad-admm resume P`)\n\
          resume  <checkpoint-path>  (continue a checkpointed virtual cluster run)\n\
          transport-digest  --workers N --m M --n N --tau T --iters K [--alt]\n\
+                 [--inexact exact|grad:K|proxgrad:K|newton:K|adaptive:TOL0:MAX]\n\
                  [--shard-blocks B --shard-owners C]  (in-process replay of an\n\
                  `admm_serve submit` job spec; prints the reference `final x0 digest`\n\
                  the socket loopback run must match bit-exactly)\n\

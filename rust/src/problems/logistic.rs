@@ -59,79 +59,33 @@ impl LogisticLocal {
         self.margins_into(x, m);
         m.iter().map(|&mj| log1p_exp_neg(mj)).sum()
     }
-}
 
-/// Numerically-stable `log(1 + e^{-m})`.
-#[inline]
-fn log1p_exp_neg(m: f64) -> f64 {
-    if m > 0.0 {
-        (-m).exp().ln_1p()
-    } else {
-        -m + m.exp().ln_1p()
-    }
-}
-
-/// Stable logistic sigmoid σ(−m) = 1/(1+e^{m}).
-#[inline]
-fn sigma_neg(m: f64) -> f64 {
-    if m >= 0.0 {
-        let e = (-m).exp();
-        e / (1.0 + e)
-    } else {
-        1.0 / (1.0 + m.exp())
-    }
-}
-
-impl LocalCost for LogisticLocal {
-    fn dim(&self) -> usize {
-        self.a.cols()
-    }
-
-    fn eval(&self, x: &[f64]) -> f64 {
-        self.margins(x).iter().map(|&m| log1p_exp_neg(m)).sum()
-    }
-
-    fn eval_with(&self, x: &[f64], scratch: &mut WorkerScratch) -> f64 {
-        self.loss_with(x, &mut scratch.rows)
-    }
-
-    fn grad_into(&self, x: &[f64], out: &mut [f64]) {
-        // ∇f = −Σ_j σ(−m_j) y_j a_j
-        let m = self.margins(x);
-        let mut w = vec![0.0; m.len()];
-        for j in 0..m.len() {
-            w[j] = -sigma_neg(m[j]) * self.y[j];
-        }
-        self.a.matvec_t_into(&w, out);
-    }
-
-    fn lipschitz(&self) -> f64 {
-        0.25 * self.lam_max
-    }
-
-    fn solve_subproblem(
+    /// `iters` damped-Newton steps on
+    /// `g(x) = f(x) + xᵀλ + ρ/2‖x − x0‖²` from the *current* `out`
+    /// (callers choose the start: `x0` for the exact solve, the previous
+    /// iterate for the capped warm-started path). Vector temporaries live
+    /// in `scratch` (`rows` = margins, `rows2` = Newton weights / Hessian
+    /// diagonal, `grad`/`step`/`trial` as named); only the n×n Hessian and
+    /// its factorization still allocate per Newton step — they are
+    /// factor-sized, not iteration-hot-loop-sized.
+    fn newton(
         &self,
+        iters: usize,
         lam: &[f64],
         x0: &[f64],
         rho: f64,
         out: &mut [f64],
         scratch: &mut WorkerScratch,
     ) {
-        // Damped Newton on g(x) = f(x) + xᵀλ + ρ/2 ||x − x0||². Vector
-        // temporaries live in `scratch` (`rows` = margins, `rows2` = Newton
-        // weights / Hessian diagonal, `grad`/`step`/`trial` as named); only
-        // the n×n Hessian and its factorization still allocate per Newton
-        // step — they are factor-sized, not iteration-hot-loop-sized.
         let n = self.dim();
         let mrows = self.a.rows();
-        out.copy_from_slice(x0); // warm start at the consensus point
-        let WorkerScratch { rows, rows2, grad, step, trial } = scratch;
+        let WorkerScratch { rows, rows2, grad, step, trial, .. } = scratch;
         grad.resize(n, 0.0);
         step.resize(n, 0.0);
         trial.resize(n, 0.0);
         rows2.resize(mrows, 0.0);
 
-        for _ in 0..self.newton_iters {
+        for _ in 0..iters {
             // gradient of g: ∇f = Aᵀw with w_j = −σ(−m_j) y_j
             self.margins_into(out, rows);
             for j in 0..mrows {
@@ -196,6 +150,81 @@ impl LocalCost for LogisticLocal {
                 out[i] -= t * step[i];
             }
         }
+    }
+}
+
+/// Numerically-stable `log(1 + e^{-m})`.
+#[inline]
+fn log1p_exp_neg(m: f64) -> f64 {
+    if m > 0.0 {
+        (-m).exp().ln_1p()
+    } else {
+        -m + m.exp().ln_1p()
+    }
+}
+
+/// Stable logistic sigmoid σ(−m) = 1/(1+e^{m}).
+#[inline]
+fn sigma_neg(m: f64) -> f64 {
+    if m >= 0.0 {
+        let e = (-m).exp();
+        e / (1.0 + e)
+    } else {
+        1.0 / (1.0 + m.exp())
+    }
+}
+
+impl LocalCost for LogisticLocal {
+    fn dim(&self) -> usize {
+        self.a.cols()
+    }
+
+    fn eval(&self, x: &[f64]) -> f64 {
+        self.margins(x).iter().map(|&m| log1p_exp_neg(m)).sum()
+    }
+
+    fn eval_with(&self, x: &[f64], scratch: &mut WorkerScratch) -> f64 {
+        self.loss_with(x, &mut scratch.rows)
+    }
+
+    fn grad_into(&self, x: &[f64], out: &mut [f64]) {
+        // ∇f = −Σ_j σ(−m_j) y_j a_j
+        let m = self.margins(x);
+        let mut w = vec![0.0; m.len()];
+        for j in 0..m.len() {
+            w[j] = -sigma_neg(m[j]) * self.y[j];
+        }
+        self.a.matvec_t_into(&w, out);
+    }
+
+    fn lipschitz(&self) -> f64 {
+        0.25 * self.lam_max
+    }
+
+    fn solve_subproblem(
+        &self,
+        lam: &[f64],
+        x0: &[f64],
+        rho: f64,
+        out: &mut [f64],
+        scratch: &mut WorkerScratch,
+    ) {
+        out.copy_from_slice(x0); // warm start at the consensus point
+        self.newton(self.newton_iters, lam, x0, rho, out, scratch);
+    }
+
+    fn solve_subproblem_capped(
+        &self,
+        steps: usize,
+        lam: &[f64],
+        x0: &[f64],
+        rho: f64,
+        out: &mut [f64],
+        scratch: &mut WorkerScratch,
+    ) -> bool {
+        // `out` arrives pre-initialized (the inexact-policy warm start).
+        self.newton(steps, lam, x0, rho, out, scratch);
+        true
     }
 
     fn kind(&self) -> &'static str {

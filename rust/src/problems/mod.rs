@@ -108,6 +108,28 @@ pub trait LocalCost: Send + Sync {
         scratch: &mut WorkerScratch,
     );
 
+    /// Run at most `steps` iterations of the implementation's *own*
+    /// iterative subproblem solver, starting from the caller-initialized
+    /// `out` (the warm start of
+    /// [`crate::solvers::inexact::InexactPolicy::NewtonSteps`]) instead of
+    /// iterating to the internal tolerance. Returns `true` when handled;
+    /// the default `false` marks costs with no iterative solver — their
+    /// closed-form solve is exact at any budget, and
+    /// [`crate::solvers::inexact::solve_inexact`] falls back to
+    /// [`LocalCost::solve_subproblem`].
+    #[allow(unused_variables)]
+    fn solve_subproblem_capped(
+        &self,
+        steps: usize,
+        lam: &[f64],
+        x0: &[f64],
+        rho: f64,
+        out: &mut [f64],
+        scratch: &mut WorkerScratch,
+    ) -> bool {
+        false
+    }
+
     /// Human-readable kind tag (artifact lookup + logs).
     fn kind(&self) -> &'static str;
 }

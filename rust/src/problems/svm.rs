@@ -62,65 +62,31 @@ impl SvmLocal {
             })
             .sum()
     }
-}
 
-impl LocalCost for SvmLocal {
-    fn dim(&self) -> usize {
-        self.a.cols()
-    }
-
-    fn eval(&self, x: &[f64]) -> f64 {
-        self.margins(x)
-            .iter()
-            .map(|&m| {
-                let v = (1.0 - m).max(0.0);
-                v * v
-            })
-            .sum()
-    }
-
-    fn eval_with(&self, x: &[f64], scratch: &mut WorkerScratch) -> f64 {
-        self.loss_with(x, &mut scratch.rows)
-    }
-
-    fn grad_into(&self, x: &[f64], out: &mut [f64]) {
-        // ∇f = −2 Σ_{j active} (1 − m_j) y_j a_j
-        let m = self.margins(x);
-        let mut w = vec![0.0; m.len()];
-        for j in 0..m.len() {
-            let slack = 1.0 - m[j];
-            if slack > 0.0 {
-                w[j] = -2.0 * slack * self.y[j];
-            }
-        }
-        self.a.matvec_t_into(&w, out);
-    }
-
-    fn lipschitz(&self) -> f64 {
-        2.0 * self.lam_max
-    }
-
-    fn solve_subproblem(
+    /// `iters` semismooth-Newton steps on
+    /// `g(x) = f(x) + xᵀλ + ρ/2‖x − x0‖²` from the *current* `out`
+    /// (callers choose the start: `x0` for the exact solve, the previous
+    /// iterate for the capped warm-started path). Vector temporaries live
+    /// in `scratch` (`rows` = margins, `rows2` = active weights,
+    /// `grad`/`step`/`trial` as named); only the n×n generalized Hessian
+    /// and its factorization still allocate per Newton step.
+    fn newton(
         &self,
+        iters: usize,
         lam: &[f64],
         x0: &[f64],
         rho: f64,
         out: &mut [f64],
         scratch: &mut WorkerScratch,
     ) {
-        // Semismooth Newton on g(x) = f(x) + xᵀλ + ρ/2‖x − x0‖². Vector
-        // temporaries live in `scratch` (`rows` = margins, `rows2` = active
-        // weights, `grad`/`step`/`trial` as named); only the n×n generalized
-        // Hessian and its factorization still allocate per Newton step.
         let n = self.dim();
         let mrows = self.a.rows();
-        out.copy_from_slice(x0);
-        let WorkerScratch { rows, rows2, grad, step, trial } = scratch;
+        let WorkerScratch { rows, rows2, grad, step, trial, .. } = scratch;
         grad.resize(n, 0.0);
         step.resize(n, 0.0);
         trial.resize(n, 0.0);
         rows2.resize(mrows, 0.0);
-        for _ in 0..self.newton_iters {
+        for _ in 0..iters {
             // gradient of g: ∇f = Aᵀw with w_j = −2(1 − m_j)y_j on the
             // active set, 0 elsewhere
             self.margins_into(out, rows);
@@ -182,6 +148,69 @@ impl LocalCost for SvmLocal {
                 out[i] -= t * step[i];
             }
         }
+    }
+}
+
+impl LocalCost for SvmLocal {
+    fn dim(&self) -> usize {
+        self.a.cols()
+    }
+
+    fn eval(&self, x: &[f64]) -> f64 {
+        self.margins(x)
+            .iter()
+            .map(|&m| {
+                let v = (1.0 - m).max(0.0);
+                v * v
+            })
+            .sum()
+    }
+
+    fn eval_with(&self, x: &[f64], scratch: &mut WorkerScratch) -> f64 {
+        self.loss_with(x, &mut scratch.rows)
+    }
+
+    fn grad_into(&self, x: &[f64], out: &mut [f64]) {
+        // ∇f = −2 Σ_{j active} (1 − m_j) y_j a_j
+        let m = self.margins(x);
+        let mut w = vec![0.0; m.len()];
+        for j in 0..m.len() {
+            let slack = 1.0 - m[j];
+            if slack > 0.0 {
+                w[j] = -2.0 * slack * self.y[j];
+            }
+        }
+        self.a.matvec_t_into(&w, out);
+    }
+
+    fn lipschitz(&self) -> f64 {
+        2.0 * self.lam_max
+    }
+
+    fn solve_subproblem(
+        &self,
+        lam: &[f64],
+        x0: &[f64],
+        rho: f64,
+        out: &mut [f64],
+        scratch: &mut WorkerScratch,
+    ) {
+        out.copy_from_slice(x0);
+        self.newton(self.newton_iters, lam, x0, rho, out, scratch);
+    }
+
+    fn solve_subproblem_capped(
+        &self,
+        steps: usize,
+        lam: &[f64],
+        x0: &[f64],
+        rho: f64,
+        out: &mut [f64],
+        scratch: &mut WorkerScratch,
+    ) -> bool {
+        // `out` arrives pre-initialized (the inexact-policy warm start).
+        self.newton(steps, lam, x0, rho, out, scratch);
+        true
     }
 
     fn kind(&self) -> &'static str {

@@ -24,6 +24,9 @@ pub fn fista(problem: &ConsensusProblem, max_iters: usize, tol: f64) -> FistaOut
 
     let mut x = vec![0.0; n];
     let mut y = x.clone();
+    // The iterate double-buffer is hoisted out of the loop and recycled by
+    // swapping — the inner loop is allocation-free.
+    let mut x_new = vec![0.0; n];
     let mut grad = vec![0.0; n];
     let mut t: f64 = 1.0;
     let mut iters = 0;
@@ -31,7 +34,7 @@ pub fn fista(problem: &ConsensusProblem, max_iters: usize, tol: f64) -> FistaOut
     for k in 0..max_iters {
         iters = k + 1;
         problem.full_grad_into(&y, &mut grad);
-        let mut x_new = y.clone();
+        x_new.copy_from_slice(&y);
         vecops::axpy(-step, &grad, &mut x_new);
         reg.prox_in_place(&mut x_new, step);
 
@@ -42,7 +45,7 @@ pub fn fista(problem: &ConsensusProblem, max_iters: usize, tol: f64) -> FistaOut
             y[j] = x_new[j] + beta * (x_new[j] - x[j]);
         }
         let change = vecops::dist2(&x_new, &x);
-        x = x_new;
+        std::mem::swap(&mut x, &mut x_new);
         t = t_new;
         if change <= tol * (1.0 + vecops::nrm2(&x)) && k > 2 {
             break;

@@ -1,0 +1,484 @@
+//! Inexact worker subproblem solves: the k-step inner-loop policies of
+//! Hong's incremental nonconvex ADMM (arXiv:1412.6058) grafted onto the
+//! source paper's worker update (13).
+//!
+//! Every worker historically solved
+//! `argmin_x f_i(x) + xᵀλ + ρ/2‖x − x₀‖²` *exactly* each round — a full
+//! Newton/factorized solve whose cost dominates the outer AD-ADMM
+//! iteration on large local problems, even though the outer loop only
+//! needs a crude descent direction. [`InexactPolicy`] replaces the exact
+//! solve with a fixed number of cheap warm-started inner steps:
+//!
+//! | variant | inner update | arXiv:1412.6058 analogue |
+//! |---|---|---|
+//! | [`InexactPolicy::Exact`] | the legacy exact solve, **bit-identical** to today's path | the "classic ADMM" baseline (their Alg. 1) |
+//! | [`InexactPolicy::GradSteps`] | `k` gradient steps on the full subproblem with step `1/(L+ρ)` | the proximal first-order approximation, Alg. 2 "async-PADMM" |
+//! | [`InexactPolicy::ProxGradSteps`] | `k` forward-backward steps: gradient on `f_i + λᵀx`, exact prox of the quadratic penalty | the split prox-linear update (their eq. (2.7)) |
+//! | [`InexactPolicy::NewtonSteps`] | at most `k` iterations of the cost's own (semismooth) Newton loop | inexact second-order inner solves, §IV remark |
+//! | [`InexactPolicy::Adaptive`] | gradient steps to a tolerance that **halves** every round | the diminishing-error condition Σ εₖ < ∞ |
+//!
+//! Warm starts are what make one-step policies viable: each worker keeps a
+//! [`WarmState`] — its previous iterate `x_i` as the next inner-loop
+//! initializer plus the cached step size `1/(L+ρ)` — which persists across
+//! rounds and serializes into checkpoint v3, so a resumed run continues
+//! the inner schedule bit-identically. Too few inner steps under large
+//! delay bounds replays the paper's "asynchrony must be handled with
+//! care" warning on the inner-loop axis: the `inexact_sweep` bench and
+//! the pinned divergence test show GradSteps{1} blowing up on the
+//! indefinite sparse-PCA subproblem (ρ < 2λmax) that the exact
+//! factorized solve keeps bounded.
+
+use std::fmt;
+
+use crate::bench::json::{f64_from_hex, hex_f64, hex_vec, json_usize, vec_from_hex, JsonValue};
+use crate::problems::{LocalCost, WorkerScratch};
+
+/// How a worker treats its subproblem (13) each round. `Exact` is the
+/// default everywhere and is **bit-identical** to the historical path
+/// (it delegates straight to [`LocalCost::solve_subproblem`] and never
+/// touches the warm state), so every existing pin test keeps its teeth.
+///
+/// String form (CLI flags, job specs, checkpoints): `exact`, `grad:K`,
+/// `proxgrad:K`, `newton:K`, `adaptive:TOL0:MAX` — parsed by
+/// [`InexactPolicy::parse`], emitted by `Display`. The float in
+/// `adaptive` round-trips exactly (Rust's shortest-round-trip `Display`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum InexactPolicy {
+    /// The legacy exact solve ([`LocalCost::solve_subproblem`]).
+    Exact,
+    /// `k` warm-started gradient steps on the whole subproblem objective
+    /// `g(x) = f(x) + xᵀλ + ρ/2‖x−x₀‖²`, step size `1/(L+ρ)` (the
+    /// subproblem gradient is `(L+ρ)`-Lipschitz under Assumption 2).
+    GradSteps { k: usize },
+    /// `k` warm-started forward-backward steps: gradient step on the
+    /// smooth `f(x) + xᵀλ` with step `1/L`, then the *exact* prox of the
+    /// penalty `ρ/2‖x−x₀‖²`, i.e. `x⁺ = (v + αρx₀)/(1+αρ)`.
+    ProxGradSteps { k: usize },
+    /// At most `k` iterations of the cost's own second-order solver
+    /// ([`LocalCost::solve_subproblem_capped`]), warm-started from the
+    /// previous iterate. Closed-form costs have no iterative solver and
+    /// fall back to the exact solve (already one "Newton step").
+    NewtonSteps { k: usize },
+    /// Gradient steps (at most `max_steps` per round) until the inner
+    /// step norm drops below a per-worker tolerance that starts at
+    /// `tol0` and halves every round — a summable inner-error schedule.
+    Adaptive { tol0: f64, max_steps: usize },
+}
+
+impl Default for InexactPolicy {
+    fn default() -> Self {
+        InexactPolicy::Exact
+    }
+}
+
+impl fmt::Display for InexactPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            InexactPolicy::Exact => write!(f, "exact"),
+            InexactPolicy::GradSteps { k } => write!(f, "grad:{k}"),
+            InexactPolicy::ProxGradSteps { k } => write!(f, "proxgrad:{k}"),
+            InexactPolicy::NewtonSteps { k } => write!(f, "newton:{k}"),
+            InexactPolicy::Adaptive { tol0, max_steps } => {
+                write!(f, "adaptive:{tol0}:{max_steps}")
+            }
+        }
+    }
+}
+
+impl InexactPolicy {
+    /// Whether this is the exact (legacy, bit-identical) path.
+    pub fn is_exact(&self) -> bool {
+        matches!(self, InexactPolicy::Exact)
+    }
+
+    /// Parse the string form (see type docs). Inverse of `Display`.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let k_of = |v: &str| {
+            v.parse::<usize>().map_err(|_| format!("bad inexact step count {v:?} in {s:?}"))
+        };
+        match parts.as_slice() {
+            ["exact"] => Ok(InexactPolicy::Exact),
+            ["grad", k] => Ok(InexactPolicy::GradSteps { k: k_of(k)? }),
+            ["proxgrad", k] => Ok(InexactPolicy::ProxGradSteps { k: k_of(k)? }),
+            ["newton", k] => Ok(InexactPolicy::NewtonSteps { k: k_of(k)? }),
+            ["adaptive", tol, max] => Ok(InexactPolicy::Adaptive {
+                tol0: tol
+                    .parse::<f64>()
+                    .map_err(|_| format!("bad adaptive tolerance {tol:?} in {s:?}"))?,
+                max_steps: k_of(max)?,
+            }),
+            _ => Err(format!(
+                "bad inexact policy {s:?} (expected exact | grad:K | proxgrad:K | newton:K | \
+                 adaptive:TOL0:MAX)"
+            )),
+        }
+    }
+
+    /// Reject nonsensical parameterizations (zero inner steps, bad
+    /// adaptive tolerance).
+    pub fn validate(&self) -> Result<(), String> {
+        match *self {
+            InexactPolicy::Exact => Ok(()),
+            InexactPolicy::GradSteps { k }
+            | InexactPolicy::ProxGradSteps { k }
+            | InexactPolicy::NewtonSteps { k } => {
+                if k < 1 {
+                    Err(format!("inexact policy {self} needs at least 1 inner step"))
+                } else {
+                    Ok(())
+                }
+            }
+            InexactPolicy::Adaptive { tol0, max_steps } => {
+                if !(tol0 > 0.0 && tol0.is_finite()) {
+                    Err(format!("adaptive inexact tolerance must be positive and finite, got {tol0}"))
+                } else if max_steps < 1 {
+                    Err("adaptive inexact policy needs max_steps >= 1".to_string())
+                } else {
+                    Ok(())
+                }
+            }
+        }
+    }
+
+    /// Checkpoint / wire form (the canonical string).
+    pub fn to_json(&self) -> JsonValue {
+        JsonValue::Str(self.to_string())
+    }
+
+    /// Inverse of [`InexactPolicy::to_json`].
+    pub fn from_json(v: &JsonValue) -> Result<Self, String> {
+        let s = v.as_str().ok_or_else(|| format!("expected inexact policy string, got {v}"))?;
+        Self::parse(s)
+    }
+}
+
+/// One worker's persistent inner-loop state: the previous local iterate
+/// (the next round's warm start), the cached step size, the current
+/// adaptive tolerance, and the number of inexact rounds performed.
+///
+/// Lives wherever the worker's solve runs — [`NativeSolver`] for the
+/// trace source, a `VirtualWorker` in the discrete-event simulator, a
+/// thread / remote process local for the threaded and socket paths — and
+/// serializes into checkpoint v3 through [`WarmState::to_json`] so a
+/// resume continues the inner schedule bit-identically. An empty `x`
+/// means cold start (initialize from the broadcast `x₀`), which is also
+/// what a v1/v2 checkpoint restores to.
+///
+/// [`NativeSolver`]: crate::admm::master_pov::NativeSolver
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WarmState {
+    /// Previous inner iterate (empty = cold start from `x₀`).
+    pub x: Vec<f64>,
+    /// Cached inner step size (`1/(L+ρ)` or `1/L`; `0` = not yet set).
+    pub step: f64,
+    /// Current adaptive tolerance (`0` = not yet seeded from `tol0`).
+    pub tol: f64,
+    /// Inexact rounds performed (diagnostics; drives nothing).
+    pub rounds: u64,
+}
+
+impl WarmState {
+    /// Exact-bit serialization for checkpoint v3.
+    pub fn to_json(&self) -> JsonValue {
+        JsonValue::Obj(vec![
+            ("x".to_string(), hex_vec(&self.x)),
+            ("step".to_string(), hex_f64(self.step)),
+            ("tol".to_string(), hex_f64(self.tol)),
+            ("rounds".to_string(), (self.rounds as usize).into()),
+        ])
+    }
+
+    /// Inverse of [`WarmState::to_json`].
+    pub fn from_json(doc: &JsonValue) -> Result<Self, String> {
+        let get = |key: &str| doc.get(key).ok_or_else(|| format!("warm state missing {key:?}"));
+        Ok(WarmState {
+            x: vec_from_hex(get("x")?)?,
+            step: f64_from_hex(get("step")?)?,
+            tol: f64_from_hex(get("tol")?)?,
+            rounds: json_usize(get("rounds")?)? as u64,
+        })
+    }
+}
+
+/// Initialize the inner iterate: the previous round's `x_i` when the warm
+/// state has one of matching dimension, else the broadcast `x₀` (cold
+/// start — first round, or right after a v1/v2 checkpoint restore).
+fn init_from_warm(warm: &WarmState, x0: &[f64], out: &mut [f64]) {
+    if warm.x.len() == out.len() {
+        out.copy_from_slice(&warm.x);
+    } else {
+        out.copy_from_slice(x0);
+    }
+}
+
+/// Fetch (or compute once and cache) the inner step size.
+fn cached_step(warm: &mut WarmState, compute: impl FnOnce() -> f64) -> f64 {
+    if !(warm.step > 0.0) {
+        warm.step = compute();
+    }
+    warm.step
+}
+
+/// Store the produced iterate as the next round's warm start.
+fn remember(warm: &mut WarmState, out: &[f64]) {
+    warm.x.resize(out.len(), 0.0);
+    warm.x.copy_from_slice(out);
+    warm.rounds += 1;
+}
+
+/// `k` gradient steps on `g(x) = f(x) + xᵀλ + ρ/2‖x−x₀‖²` from the
+/// current `out`, step `alpha`. Allocation-free: the only buffer is
+/// `scratch.grad`.
+fn grad_steps(
+    local: &dyn LocalCost,
+    k: usize,
+    alpha: f64,
+    lam: &[f64],
+    x0: &[f64],
+    rho: f64,
+    out: &mut [f64],
+    scratch: &mut WorkerScratch,
+) {
+    let n = out.len();
+    scratch.grad.resize(n, 0.0);
+    for _ in 0..k {
+        local.grad_into(out, &mut scratch.grad);
+        for i in 0..n {
+            out[i] -= alpha * (scratch.grad[i] + lam[i] + rho * (out[i] - x0[i]));
+        }
+    }
+}
+
+/// Perform one round of the worker solve under `policy`.
+///
+/// `Exact` delegates verbatim to [`LocalCost::solve_subproblem`] and does
+/// not read or write `warm` — the bit-identity contract. Every inexact
+/// variant initializes from `warm.x` (or `x₀` on cold start), runs its
+/// inner schedule, and stores the result back as the next warm start.
+#[allow(clippy::too_many_arguments)]
+pub fn solve_inexact(
+    local: &dyn LocalCost,
+    policy: &InexactPolicy,
+    lam: &[f64],
+    x0: &[f64],
+    rho: f64,
+    out: &mut [f64],
+    scratch: &mut WorkerScratch,
+    warm: &mut WarmState,
+) {
+    match *policy {
+        InexactPolicy::Exact => {
+            local.solve_subproblem(lam, x0, rho, out, scratch);
+        }
+        InexactPolicy::GradSteps { k } => {
+            init_from_warm(warm, x0, out);
+            let alpha = cached_step(warm, || 1.0 / (local.lipschitz() + rho));
+            grad_steps(local, k, alpha, lam, x0, rho, out, scratch);
+            remember(warm, out);
+        }
+        InexactPolicy::ProxGradSteps { k } => {
+            init_from_warm(warm, x0, out);
+            // Forward step on f + λᵀ· with 1/L (1/ρ when L = 0: the smooth
+            // part is then affine and any finite step is exact), backward
+            // (exact prox) step on the penalty.
+            let alpha = cached_step(warm, || {
+                let l = local.lipschitz();
+                if l > 0.0 {
+                    1.0 / l
+                } else {
+                    1.0 / rho
+                }
+            });
+            let n = out.len();
+            scratch.grad.resize(n, 0.0);
+            let denom = 1.0 + alpha * rho;
+            for _ in 0..k {
+                local.grad_into(out, &mut scratch.grad);
+                for i in 0..n {
+                    let v = out[i] - alpha * (scratch.grad[i] + lam[i]);
+                    out[i] = (v + alpha * rho * x0[i]) / denom;
+                }
+            }
+            remember(warm, out);
+        }
+        InexactPolicy::NewtonSteps { k } => {
+            init_from_warm(warm, x0, out);
+            if !local.solve_subproblem_capped(k, lam, x0, rho, out, scratch) {
+                // No iterative solver (closed-form cost): the exact solve
+                // *is* one Newton step.
+                local.solve_subproblem(lam, x0, rho, out, scratch);
+            }
+            remember(warm, out);
+        }
+        InexactPolicy::Adaptive { tol0, max_steps } => {
+            init_from_warm(warm, x0, out);
+            if !(warm.tol > 0.0) {
+                warm.tol = tol0;
+            }
+            let alpha = cached_step(warm, || 1.0 / (local.lipschitz() + rho));
+            let n = out.len();
+            scratch.grad.resize(n, 0.0);
+            for _ in 0..max_steps {
+                local.grad_into(out, &mut scratch.grad);
+                let mut sq = 0.0;
+                for i in 0..n {
+                    let d = alpha * (scratch.grad[i] + lam[i] + rho * (out[i] - x0[i]));
+                    out[i] -= d;
+                    sq += d * d;
+                }
+                if sq.sqrt() <= warm.tol {
+                    break;
+                }
+            }
+            warm.tol *= 0.5;
+            remember(warm, out);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::QuadraticLocal;
+
+    fn policies() -> Vec<InexactPolicy> {
+        vec![
+            InexactPolicy::Exact,
+            InexactPolicy::GradSteps { k: 5 },
+            InexactPolicy::ProxGradSteps { k: 12 },
+            InexactPolicy::NewtonSteps { k: 3 },
+            InexactPolicy::Adaptive { tol0: 1e-3, max_steps: 50 },
+        ]
+    }
+
+    #[test]
+    fn policy_string_round_trips() {
+        for p in policies() {
+            let back = InexactPolicy::parse(&p.to_string()).expect("parse");
+            assert_eq!(back, p, "{p}");
+            let back2 = InexactPolicy::from_json(&p.to_json()).expect("json");
+            assert_eq!(back2, p);
+        }
+        // An awkward float must survive the decimal round trip exactly.
+        let odd =
+            InexactPolicy::Adaptive { tol0: f64::from_bits(0.1f64.to_bits() + 1), max_steps: 7 };
+        let back = InexactPolicy::parse(&odd.to_string()).unwrap();
+        assert_eq!(back, odd);
+        assert!(InexactPolicy::parse("grad").is_err());
+        assert!(InexactPolicy::parse("grad:x").is_err());
+        assert!(InexactPolicy::parse("frobnicate:3").is_err());
+    }
+
+    #[test]
+    fn policy_validation() {
+        assert!(InexactPolicy::Exact.validate().is_ok());
+        assert!(InexactPolicy::GradSteps { k: 1 }.validate().is_ok());
+        assert!(InexactPolicy::GradSteps { k: 0 }.validate().is_err());
+        assert!(InexactPolicy::NewtonSteps { k: 0 }.validate().is_err());
+        assert!(InexactPolicy::Adaptive { tol0: 0.0, max_steps: 5 }.validate().is_err());
+        assert!(InexactPolicy::Adaptive { tol0: 1e-4, max_steps: 0 }.validate().is_err());
+        assert!(InexactPolicy::Adaptive { tol0: 1e-4, max_steps: 5 }.validate().is_ok());
+    }
+
+    #[test]
+    fn warm_state_json_round_trips_bits() {
+        let w = WarmState {
+            x: vec![0.1 + 0.2, -3.5e-300, f64::MAX],
+            step: 1.0 / 3.0,
+            tol: 1e-7,
+            rounds: 42,
+        };
+        let back = WarmState::from_json(&w.to_json()).expect("round trip");
+        assert_eq!(back.rounds, 42);
+        assert_eq!(back.step.to_bits(), w.step.to_bits());
+        assert_eq!(back.tol.to_bits(), w.tol.to_bits());
+        let bits = |v: &[f64]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&back.x), bits(&w.x));
+    }
+
+    #[test]
+    fn exact_policy_is_bit_identical_and_leaves_warm_alone() {
+        let local = QuadraticLocal::diagonal(&[2.0, 5.0], vec![-1.0, 0.7]);
+        let lam = [0.3, -0.2];
+        let x0 = [0.5, 1.5];
+        let mut scratch = WorkerScratch::new();
+        let mut direct = vec![0.0; 2];
+        local.solve_subproblem(&lam, &x0, 2.0, &mut direct, &mut scratch);
+        let mut warm = WarmState::default();
+        let mut via = vec![0.0; 2];
+        solve_inexact(
+            &local,
+            &InexactPolicy::Exact,
+            &lam,
+            &x0,
+            2.0,
+            &mut via,
+            &mut scratch,
+            &mut warm,
+        );
+        assert_eq!(direct[0].to_bits(), via[0].to_bits());
+        assert_eq!(direct[1].to_bits(), via[1].to_bits());
+        assert_eq!(warm, WarmState::default());
+    }
+
+    /// Warm-started inner steps approach the exact minimizer over rounds
+    /// even with k = 1 (the convex regime where inexactness is safe).
+    #[test]
+    fn warm_started_steps_converge_to_exact_solution() {
+        let local = QuadraticLocal::diagonal(&[2.0, 5.0], vec![-1.0, 0.7]);
+        let lam = [0.3, -0.2];
+        let x0 = [0.5, 1.5];
+        let rho = 2.0;
+        let mut scratch = WorkerScratch::new();
+        let mut exact = vec![0.0; 2];
+        local.solve_subproblem(&lam, &x0, rho, &mut exact, &mut scratch);
+        for policy in [
+            InexactPolicy::GradSteps { k: 1 },
+            InexactPolicy::ProxGradSteps { k: 1 },
+            InexactPolicy::Adaptive { tol0: 1e-2, max_steps: 4 },
+        ] {
+            let mut warm = WarmState::default();
+            let mut x = vec![0.0; 2];
+            for _ in 0..400 {
+                solve_inexact(&local, &policy, &lam, &x0, rho, &mut x, &mut scratch, &mut warm);
+            }
+            for i in 0..2 {
+                assert!(
+                    (x[i] - exact[i]).abs() < 1e-6,
+                    "{policy}: x[{i}]={} exact={}",
+                    x[i],
+                    exact[i]
+                );
+            }
+            assert!(warm.rounds >= 400);
+            assert!(warm.step > 0.0);
+        }
+    }
+
+    /// Closed-form costs fall back to the exact solve under NewtonSteps.
+    #[test]
+    fn newton_policy_on_closed_form_cost_is_exact() {
+        let local = QuadraticLocal::diagonal(&[2.0, 5.0], vec![-1.0, 0.7]);
+        let lam = [0.3, -0.2];
+        let x0 = [0.5, 1.5];
+        let mut scratch = WorkerScratch::new();
+        let mut exact = vec![0.0; 2];
+        local.solve_subproblem(&lam, &x0, 2.0, &mut exact, &mut scratch);
+        let mut warm = WarmState::default();
+        let mut x = vec![0.0; 2];
+        solve_inexact(
+            &local,
+            &InexactPolicy::NewtonSteps { k: 2 },
+            &lam,
+            &x0,
+            2.0,
+            &mut x,
+            &mut scratch,
+            &mut warm,
+        );
+        assert_eq!(x[0].to_bits(), exact[0].to_bits());
+        assert_eq!(x[1].to_bits(), exact[1].to_bits());
+        assert_eq!(warm.rounds, 1);
+    }
+}

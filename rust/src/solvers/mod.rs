@@ -2,4 +2,5 @@
 //! of the accuracy definition (53) and as sanity cross-checks.
 
 pub mod fista;
+pub mod inexact;
 pub mod prox_grad;

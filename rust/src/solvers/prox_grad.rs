@@ -18,16 +18,19 @@ pub fn prox_grad(problem: &ConsensusProblem, max_iters: usize, tol: f64) -> Prox
     let reg = problem.regularizer();
 
     let mut x = vec![0.0; n];
+    // The iterate double-buffer is hoisted out of the loop and recycled by
+    // swapping — the inner loop is allocation-free.
+    let mut x_new = vec![0.0; n];
     let mut grad = vec![0.0; n];
     let mut iters = 0;
     for k in 0..max_iters {
         iters = k + 1;
         problem.full_grad_into(&x, &mut grad);
-        let mut x_new = x.clone();
+        x_new.copy_from_slice(&x);
         vecops::axpy(-step, &grad, &mut x_new);
         reg.prox_in_place(&mut x_new, step);
         let change = vecops::dist2(&x_new, &x);
-        x = x_new;
+        std::mem::swap(&mut x, &mut x_new);
         if change <= tol * (1.0 + vecops::nrm2(&x)) && k > 2 {
             break;
         }

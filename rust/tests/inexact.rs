@@ -1,0 +1,332 @@
+//! Inexact worker-solve acceptance suite.
+//!
+//! Pins the four contracts of the [`InexactPolicy`] plumbing:
+//!
+//! 1. **Exact is the historical path** — `InexactPolicy::Exact` produces
+//!    bit-identical runs across the trace-driven session, the virtual-time
+//!    cluster and the threaded cluster (lockstep replay), exactly like the
+//!    pre-policy code did.
+//! 2. **Inexact runs stay source-independent** — the per-arrival solve
+//!    cadence is the same in every source, so the per-worker warm-start
+//!    chains line up and `grad:k` runs are *also* bit-identical across
+//!    sources. (This is the invariant the transport-e2e CI digest check
+//!    relies on.)
+//! 3. **Checkpoint v3 round trip** — a run split mid-inner-schedule and
+//!    resumed from its serialized checkpoint reproduces the uninterrupted
+//!    run bit-for-bit, warm states, adaptive tolerances and simulated
+//!    byte counters included; resume rejects policy mismatches and
+//!    pre-v3 documents resume exact-only.
+//! 4. **Pinned divergence** — one gradient step per round on the
+//!    indefinite sparse-PCA subproblem (ρ far below the 2λmax bound)
+//!    diverges, while the exact solve of the same system stays bounded
+//!    over the same budget.
+
+use ad_admm::admm::arrivals::ArrivalModel;
+use ad_admm::admm::engine::WorkerSource;
+use ad_admm::admm::session::{Checkpoint, Session, StepStatus};
+use ad_admm::admm::{AdmmConfig, AdmmState, IterRecord, StopReason};
+use ad_admm::cluster::{
+    ClusterConfig, ClusterReport, DelayModel, ExecutionMode, FaultModel, StarCluster,
+};
+use ad_admm::data::{LassoInstance, SparsePcaInstance};
+use ad_admm::prelude::PartialBarrier;
+use ad_admm::problems::ConsensusProblem;
+use ad_admm::rng::Pcg64;
+use ad_admm::solvers::inexact::InexactPolicy;
+
+fn lasso(seed: u64, n_workers: usize) -> ConsensusProblem {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    LassoInstance::synthetic(&mut rng, n_workers, 20, 10, 0.2, 0.1).problem()
+}
+
+fn assert_history_bit_equal(a: &[IterRecord], b: &[IterRecord]) {
+    assert_eq!(a.len(), b.len(), "history lengths differ");
+    for (ra, rb) in a.iter().zip(b) {
+        assert_eq!(ra.k, rb.k);
+        assert_eq!(ra.arrivals, rb.arrivals, "arrivals differ at k={}", ra.k);
+        assert_eq!(ra.objective.to_bits(), rb.objective.to_bits(), "objective at k={}", ra.k);
+        assert_eq!(
+            ra.aug_lagrangian.to_bits(),
+            rb.aug_lagrangian.to_bits(),
+            "aug_lagrangian at k={}",
+            ra.k
+        );
+        assert_eq!(ra.consensus.to_bits(), rb.consensus.to_bits(), "consensus at k={}", ra.k);
+        assert_eq!(ra.x0_change.to_bits(), rb.x0_change.to_bits(), "x0_change at k={}", ra.k);
+    }
+}
+
+fn assert_state_bit_equal(a: &AdmmState, b: &AdmmState) {
+    assert_eq!(a.x0, b.x0, "x0 differs");
+    assert_eq!(a.xs, b.xs, "worker primals differ");
+    assert_eq!(a.lams, b.lams, "duals differ");
+}
+
+/// Step a session, collecting records; `upto = None` runs to completion.
+fn drive<S: WorkerSource>(session: &mut Session<'_, S>, upto: Option<usize>) -> Vec<IterRecord> {
+    let mut recs = Vec::new();
+    loop {
+        if let Some(n) = upto {
+            if recs.len() >= n {
+                return recs;
+            }
+        }
+        match session.step().expect("step") {
+            StepStatus::Iterated(rec) => recs.push(rec),
+            StepStatus::Done(_) => return recs,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 1 + 2. Source-independence, exact and inexact
+// ---------------------------------------------------------------------------
+
+/// Run one policy through all three sources — virtual-time as the
+/// reference, threaded in lockstep on the realized trace, and the
+/// trace-driven session replaying the same sets — and assert the final
+/// state and histories are bit-identical.
+fn assert_three_source_bit_identity(policy: InexactPolicy) {
+    let n_workers = 4;
+    let problem = lasso(811, n_workers);
+    let admm = AdmmConfig {
+        rho: 50.0,
+        tau: 3,
+        min_arrivals: 1,
+        max_iters: 60,
+        inexact: policy,
+        ..Default::default()
+    };
+
+    let vcfg = ClusterConfig::builder()
+        .admm(admm.clone())
+        .delays(DelayModel::Fixed { per_worker_ms: vec![0.5, 1.0, 2.0, 4.0] })
+        .mode(ExecutionMode::VirtualTime)
+        .build()
+        .expect("valid cluster config");
+    let virt = StarCluster::new(problem.clone()).run(&vcfg);
+    assert_eq!(virt.stop, StopReason::MaxIters);
+
+    // Threaded, lockstep on the virtual run's realized sets.
+    let tcfg = ClusterConfig::builder()
+        .admm(admm.clone())
+        .delays(DelayModel::None)
+        .lockstep_trace(virt.trace.clone())
+        .build()
+        .expect("valid cluster config");
+    let thr = StarCluster::new(problem.clone()).run(&tcfg);
+    assert_eq!(thr.trace, virt.trace, "lockstep did not realize the prescribed sets");
+    assert_state_bit_equal(&thr.state, &virt.state);
+    for (a, b) in thr.history.iter().zip(&virt.history) {
+        assert_eq!(a.aug_lagrangian.to_bits(), b.aug_lagrangian.to_bits(), "k={}", a.k);
+        assert_eq!(a.arrivals, b.arrivals, "k={}", a.k);
+    }
+
+    // Trace-driven session replaying the same sets in-process.
+    let arrivals = ArrivalModel::Trace(virt.trace.clone());
+    let mut session = Session::builder()
+        .problem(&problem)
+        .config(admm.clone())
+        .policy(PartialBarrier { tau: admm.tau })
+        .arrivals(&arrivals)
+        .build()
+        .expect("valid session");
+    let recs = drive(&mut session, None);
+    assert_history_bit_equal(&recs, &virt.history);
+    assert_state_bit_equal(session.state(), &virt.state);
+}
+
+#[test]
+fn exact_policy_is_bit_identical_across_all_three_sources() {
+    assert_three_source_bit_identity(InexactPolicy::Exact);
+}
+
+/// The warm-start chains advance once per arrival in every source, so even
+/// stateful inexact policies replay bit-identically — the invariant behind
+/// the transport-e2e digest assertion with `--inexact grad:5`.
+#[test]
+fn grad_steps_policy_is_bit_identical_across_all_three_sources() {
+    assert_three_source_bit_identity(InexactPolicy::GradSteps { k: 3 });
+}
+
+#[test]
+fn prox_grad_policy_is_bit_identical_across_all_three_sources() {
+    assert_three_source_bit_identity(InexactPolicy::ProxGradSteps { k: 2 });
+}
+
+// ---------------------------------------------------------------------------
+// 3. Checkpoint v3 round trip with live warm state
+// ---------------------------------------------------------------------------
+
+#[test]
+fn virtual_checkpoint_resumes_warm_state_bit_identically() {
+    // Mid-run splits land mid-inner-schedule: every worker's warm iterate,
+    // cached step size and round counter must survive serialization for
+    // the continuation to be bit-identical. Faults + comm delays exercise
+    // the full event-queue checkpoint around the new fields.
+    let n_workers = 5;
+    let problem = lasso(812, n_workers);
+    let cfg = ClusterConfig::builder()
+        .admm(AdmmConfig {
+            rho: 40.0,
+            tau: 4,
+            min_arrivals: 2,
+            max_iters: 70,
+            inexact: InexactPolicy::GradSteps { k: 2 },
+            ..Default::default()
+        })
+        .delays(DelayModel::linear_spread(n_workers, 0.5, 4.0, 0.4, 17))
+        .comm_delays(DelayModel::linear_spread(n_workers, 0.1, 1.0, 0.3, 23))
+        .faults(FaultModel { drop_prob: 0.2, retrans_ms: 0.5, seed: 31 })
+        .mode(ExecutionMode::VirtualTime)
+        .build()
+        .expect("valid cluster config");
+    let cluster = StarCluster::new(problem);
+    let report = cluster.run(&cfg);
+    assert_eq!(report.history.len(), 70);
+
+    for split in [0usize, 35, 70] {
+        let mut first = cluster.virtual_session(&cfg).unwrap();
+        let mut recs = drive(&mut first, Some(split));
+        let text = first.checkpoint().unwrap().to_json_string();
+        assert!(text.contains("inexact_policy"), "v3 checkpoint must store the policy");
+        let cp = Checkpoint::from_json_str(&text).unwrap();
+        assert_eq!(cp.iteration(), split);
+        drop(first);
+
+        let mut second = cluster.resume_virtual_session(&cfg, &cp).unwrap();
+        recs.extend(drive(&mut second, None));
+        let (outcome, source) = second.finish();
+
+        assert_history_bit_equal(&report.history, &recs);
+        assert_state_bit_equal(&report.state, &outcome.state);
+        assert_eq!(report.trace, outcome.trace);
+
+        // The simulated payload-byte counters are part of the checkpoint
+        // too — the stitched run meters exactly the one-shot volume.
+        let stitched = ClusterReport::from_virtual_parts(outcome, recs, source);
+        assert_eq!(stitched.net_bytes_down, report.net_bytes_down);
+        assert_eq!(stitched.net_bytes_up, report.net_bytes_up);
+        assert!(stitched.net_bytes_down > 0 && stitched.net_bytes_up > 0);
+    }
+}
+
+#[test]
+fn trace_checkpoint_resumes_adaptive_schedule_bit_identically() {
+    // Adaptive halves its per-worker tolerance every round — the resumed
+    // session must pick the schedule up mid-flight, not restart it.
+    let problem = lasso(813, 4);
+    let cfg = AdmmConfig {
+        rho: 40.0,
+        tau: 3,
+        min_arrivals: 1,
+        max_iters: 60,
+        ..Default::default()
+    };
+    let arrivals = ArrivalModel::probabilistic(vec![0.3, 0.7, 0.5, 0.9], 29);
+    let policy = InexactPolicy::Adaptive { tol0: 1e-2, max_steps: 6 };
+    let build = || {
+        Session::builder()
+            .problem(&problem)
+            .config(cfg.clone())
+            .inexact(policy)
+            .policy(PartialBarrier { tau: cfg.tau })
+            .arrivals(&arrivals)
+    };
+
+    let mut full = build().build().unwrap();
+    let full_recs = drive(&mut full, None);
+    assert_eq!(full_recs.len(), 60);
+
+    for split in [0usize, 30, 60] {
+        let mut first = build().build().unwrap();
+        let mut recs = drive(&mut first, Some(split));
+        let cp =
+            Checkpoint::from_json_str(&first.checkpoint().unwrap().to_json_string()).unwrap();
+        let mut second = build().resume(&cp).unwrap();
+        assert_eq!(second.iteration(), split);
+        recs.extend(drive(&mut second, None));
+        assert_history_bit_equal(&full_recs, &recs);
+        assert_state_bit_equal(full.state(), second.state());
+    }
+}
+
+#[test]
+fn resume_rejects_policy_mismatch_and_pre_v3_resumes_exact_only() {
+    let problem = lasso(814, 3);
+    let cfg = AdmmConfig { rho: 40.0, tau: 2, max_iters: 20, ..Default::default() };
+    let arrivals = ArrivalModel::probabilistic(vec![0.5; 3], 7);
+    let build = |policy: InexactPolicy| {
+        Session::builder()
+            .problem(&problem)
+            .config(cfg.clone())
+            .inexact(policy)
+            .policy(PartialBarrier { tau: cfg.tau })
+            .arrivals(&arrivals)
+    };
+
+    // A checkpoint taken under grad:2 must not resume into an exact
+    // session (the warm schedules would silently desynchronize).
+    let mut session = build(InexactPolicy::GradSteps { k: 2 }).build().unwrap();
+    drive(&mut session, Some(10));
+    let cp = Checkpoint::from_json_str(&session.checkpoint().unwrap().to_json_string()).unwrap();
+    assert!(build(InexactPolicy::Exact).resume(&cp).is_err(), "policy mismatch must be rejected");
+    assert!(build(InexactPolicy::GradSteps { k: 2 }).resume(&cp).is_ok());
+
+    // A pre-v3 document (no inexact section) resumes exact-only. The
+    // doctored downgrade relies on the deterministic serializer layout.
+    let mut exact_session = build(InexactPolicy::Exact).build().unwrap();
+    drive(&mut exact_session, Some(10));
+    let v3_text = exact_session.checkpoint().unwrap().to_json_string();
+    let v2_text = v3_text
+        .replace("\"version\": 3", "\"version\": 2")
+        .replace("\"inexact_policy\": \"exact\",", "");
+    assert_ne!(v2_text, v3_text, "downgrade substitution failed to apply");
+    let v2 = Checkpoint::from_json_str(&v2_text).unwrap();
+    assert!(build(InexactPolicy::Exact).resume(&v2).is_ok(), "v2 must still resume exact");
+    assert!(
+        build(InexactPolicy::GradSteps { k: 2 }).resume(&v2).is_err(),
+        "v2 predates inexact policies — non-exact resume must be rejected"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 4. Pinned divergence: k too small on an indefinite subproblem
+// ---------------------------------------------------------------------------
+
+#[test]
+fn one_grad_step_diverges_on_indefinite_spca_while_exact_stays_bounded() {
+    // ρ = 0.1·λmax keeps every worker's subproblem Hessian ρI − 2BᵀB
+    // indefinite. The warm-started single gradient step amplifies the
+    // top-eigenvector component geometrically until the |L| > 1e12 guard
+    // fires; the exact stationary solve of the same system grows far more
+    // slowly and must not trip the guard within the budget.
+    let mut rng = Pcg64::seed_from_u64(77);
+    let inst = SparsePcaInstance::synthetic(&mut rng, 4, 30, 16, 8, 0.1);
+    let problem = inst.problem();
+    let rho = 0.1 * inst.max_lambda_max();
+    let run = |policy: InexactPolicy| {
+        let cfg = ClusterConfig::builder()
+            .admm(AdmmConfig {
+                rho,
+                tau: 4,
+                min_arrivals: 1,
+                max_iters: 150,
+                init_x0: Some(vec![0.3; inst.dim()]),
+                inexact: policy,
+                ..Default::default()
+            })
+            .delays(DelayModel::linear_spread(4, 0.5, 3.0, 0.3, 5))
+            .mode(ExecutionMode::VirtualTime)
+            .build()
+            .expect("valid cluster config");
+        StarCluster::new(problem.clone()).run(&cfg)
+    };
+
+    let diverged = run(InexactPolicy::GradSteps { k: 1 });
+    assert_eq!(diverged.stop, StopReason::Diverged, "grad:1 must trip the divergence guard");
+    assert!(diverged.history.len() < 150, "divergence must stop the run early");
+
+    let bounded = run(InexactPolicy::Exact);
+    assert_ne!(bounded.stop, StopReason::Diverged, "the exact path must stay bounded");
+}
