@@ -5,7 +5,10 @@
 //! multicore execution study (serial vs `pool_threads = 0` on a
 //! CPU-heavy worker fleet, asserted bit-identical), a 10⁵-worker
 //! (quick) / 10⁶-worker (full) fleet sweep over the O(active) sparse
-//! master, and a sparse-vs-eager master A/B asserted bit-identical.
+//! master, an M ∈ {1, 2, 4, 8} multi-master sweep over the same fleet
+//! (per-master busy/byte meters; `multimaster_speedup` ratios the single
+//! coordinator against the bottleneck master at M = 4), and a
+//! sparse-vs-eager master A/B asserted bit-identical.
 //!
 //! Reported per setting: simulated wall-clock, simulated master wait,
 //! simulated iterations/second, realized max |A_k|, final objective, and
@@ -22,7 +25,7 @@ use ad_admm::admm::session::Session;
 use ad_admm::admm::StopReason;
 use ad_admm::bench::json::{BenchReport, JsonValue};
 use ad_admm::bench::quick_mode;
-use ad_admm::cluster::{ClusterConfig, ClusterReport, ExecutionMode};
+use ad_admm::cluster::{ClusterConfig, ClusterReport, ExecutionMode, MasterGroup};
 use ad_admm::prelude::*;
 use ad_admm::problems::{LocalCost, QuadraticLocal};
 use ad_admm::prox::Regularizer;
@@ -505,6 +508,95 @@ fn main() {
     json.config("fleet_n_workers", wn)
         .config("fleet_iters", witers)
         .metric(&format!("sweep_{wscale}_total_real_s"), sweep_real_s);
+
+    // ---- multi-master sweep: shard the coordinator itself, M ∈ {1,2,4,8} ----
+    // The same fleet and config as the sweep above; only the number of
+    // coordinators changes. Each master absorbs just the slice parts of
+    // the blocks it owns, so its simulated busy seconds (MASTER_PER_F64_S
+    // per folded f64) shrink by ~1/M while the byte meters split the same
+    // payload volume across masters (rows sum to the globals — asserted).
+    // The headline metric ratios the single coordinator's busy time
+    // against the *bottleneck* (max) master at M = 4: the quantity that
+    // bounds coordinator throughput once the fleet outgrows one machine.
+    println!(
+        "\n=== multi-master sweep: N={wn} ({wscale}) workers, {witers} iterations, \
+         M coordinators own ~n/M blocks each ==="
+    );
+    println!(
+        "{:>3} {:>6} {:>10} {:>12} {:>12} {:>14} {:>10}",
+        "M", "iters", "sim[s]", "busy max[s]", "busy sum[s]", "up[B]/master", "real[s]"
+    );
+    let mut busy_single = 0.0_f64;
+    let mut busy_max_m4 = 0.0_f64;
+    let mut mm_total_real_s = 0.0;
+    for m in [1usize, 2, 4, 8] {
+        let t = Instant::now();
+        let mut session = if m == 1 {
+            wcluster.virtual_session(&wcfg)
+        } else {
+            let group = MasterGroup::contiguous(wn, m).expect("fleet has >= M blocks");
+            wcluster.virtual_multimaster_session(&wcfg, group)
+        }
+        .expect("valid multi-master sweep session");
+        session.run_to_completion().expect("multi-master sweep completes");
+        let (outcome, source) = session.finish();
+        let real_s = t.elapsed().as_secs_f64();
+        mm_total_real_s += real_s;
+        let busy = source.master_busy_s().to_vec();
+        assert_eq!(busy.len(), m, "one busy meter per master");
+        let split = source.master_split();
+        let (down, up) = source.network_bytes();
+        let split_down: u64 = split.iter().map(|&(d, _)| d).sum();
+        let split_up: u64 = split.iter().map(|&(_, u)| u).sum();
+        assert_eq!(
+            (split_down, split_up),
+            (down, up),
+            "per-master byte split must sum to the global counters at M={m}"
+        );
+        let iterations = outcome.iterations;
+        let report = ClusterReport::from_virtual_parts(outcome, Vec::new(), source);
+        let busy_max = busy.iter().cloned().fold(0.0_f64, f64::max);
+        let busy_sum: f64 = busy.iter().sum();
+        if m == 1 {
+            busy_single = busy_max;
+        }
+        if m == 4 {
+            busy_max_m4 = busy_max;
+        }
+        println!(
+            "{m:>3} {iterations:>6} {:>10.3} {:>12.6} {:>12.6} {:>14} {real_s:>10.3}",
+            report.wall_clock_s,
+            busy_max,
+            busy_sum,
+            split_up / m as u64,
+        );
+        json.series(vec![
+            ("section", JsonValue::Str("multimaster".into())),
+            ("masters", JsonValue::Num(m as f64)),
+            ("iterations", JsonValue::Num(iterations as f64)),
+            ("sim_s", JsonValue::Num(report.wall_clock_s)),
+            ("master_busy_max_s", JsonValue::Num(busy_max)),
+            ("master_busy_total_s", JsonValue::Num(busy_sum)),
+            (
+                "net_bytes_down_per_master",
+                JsonValue::Arr(split.iter().map(|&(d, _)| JsonValue::Num(d as f64)).collect()),
+            ),
+            (
+                "net_bytes_up_per_master",
+                JsonValue::Arr(split.iter().map(|&(_, u)| JsonValue::Num(u as f64)).collect()),
+            ),
+            ("real_s", JsonValue::Num(real_s)),
+        ]);
+    }
+    let multimaster_speedup = busy_single / busy_max_m4.max(1e-12);
+    assert!(
+        multimaster_speedup > 1.0,
+        "splitting the coordinator four ways must shrink the bottleneck master's busy \
+         time: M=1 busy {busy_single:.6}s vs max-per-master at M=4 {busy_max_m4:.6}s"
+    );
+    println!("multimaster_speedup = {multimaster_speedup:.3}");
+    json.metric("multimaster_speedup", multimaster_speedup)
+        .metric("multimaster_total_real_s", mm_total_real_s);
 
     // ---- sparse vs eager master A/B: the O(active) win, bit-for-bit ----
     // Same sharded problem, same prescribed sparse arrival trace (A of N

@@ -897,6 +897,25 @@ impl<'a> TraceSource<'a> {
         }
     }
 
+    /// Native solves under heterogeneous per-worker policies: worker `i`
+    /// runs `policies[i]`'s inner loop. The session builder validates the
+    /// vector length before the source ever solves.
+    pub fn with_policies(
+        problem: &'a ConsensusProblem,
+        arrivals: &ArrivalModel,
+        policies: Vec<InexactPolicy>,
+    ) -> Self {
+        let n_workers = problem.num_workers();
+        TraceSource {
+            n_workers,
+            sampler: arrivals.sampler(n_workers),
+            solver: SolverSlot::Native(NativeSolver::with_policies(problem, policies)),
+            shard: problem.pattern().cloned(),
+            x0_snap: Vec::new(),
+            lam_snap: Vec::new(),
+        }
+    }
+
     /// Caller-supplied solver (e.g. the PJRT engine executing AOT
     /// JAX/Pallas artifacts). Dense-only: the external-solver protocol
     /// exchanges full-dimension vectors.

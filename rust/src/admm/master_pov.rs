@@ -24,15 +24,16 @@ pub trait SubproblemSolver {
 }
 
 /// Closed-form/native solver backed by the problem's own local costs. Owns
-/// the [`WorkerScratch`] its solves reuse across iterations, the
-/// [`InexactPolicy`] governing every worker's solve, and one [`WarmState`]
-/// per worker (the inner-loop warm starts the inexact policies persist
-/// across rounds; untouched — and empty — under
+/// the [`WorkerScratch`] its solves reuse across iterations, one
+/// [`InexactPolicy`] per worker (uniform under the default spelling;
+/// heterogeneous via [`NativeSolver::with_policies`]), and one
+/// [`WarmState`] per worker (the inner-loop warm starts the inexact
+/// policies persist across rounds; untouched — and empty — under
 /// [`InexactPolicy::Exact`]).
 pub struct NativeSolver<'a> {
     problem: &'a ConsensusProblem,
     scratch: WorkerScratch,
-    policy: InexactPolicy,
+    policies: Vec<InexactPolicy>,
     warm: Vec<WarmState>,
 }
 
@@ -41,15 +42,22 @@ impl<'a> NativeSolver<'a> {
         Self::with_policy(problem, InexactPolicy::Exact)
     }
 
-    /// A solver whose per-worker solves run under `policy`.
+    /// A solver whose per-worker solves all run under `policy`.
     pub fn with_policy(problem: &'a ConsensusProblem, policy: InexactPolicy) -> Self {
-        let warm = vec![WarmState::default(); problem.num_workers()];
-        NativeSolver { problem, scratch: WorkerScratch::new(), policy, warm }
+        Self::with_policies(problem, vec![policy; problem.num_workers()])
     }
 
-    /// The policy this solver runs under.
-    pub fn policy(&self) -> &InexactPolicy {
-        &self.policy
+    /// A solver with heterogeneous per-worker policies: worker `i` solves
+    /// under `policies[i]` — a fast machine can run `newton:2` while a
+    /// straggler runs `grad:3`.
+    pub fn with_policies(problem: &'a ConsensusProblem, policies: Vec<InexactPolicy>) -> Self {
+        let warm = vec![WarmState::default(); problem.num_workers()];
+        NativeSolver { problem, scratch: WorkerScratch::new(), policies, warm }
+    }
+
+    /// The per-worker policies this solver runs under.
+    pub fn policies(&self) -> &[InexactPolicy] {
+        &self.policies
     }
 
     /// Serialize the per-worker warm-start states (checkpoint v3).
@@ -79,7 +87,7 @@ impl<'a> SubproblemSolver for NativeSolver<'a> {
     fn solve(&mut self, worker: usize, lam: &[f64], x0: &[f64], rho: f64, out: &mut [f64]) {
         solve_inexact(
             &**self.problem.local(worker),
-            &self.policy,
+            &self.policies[worker],
             lam,
             x0,
             rho,

@@ -416,6 +416,14 @@ pub struct SparseMaster {
     touched: Vec<usize>,
     /// Scratch: per-block dedup mask for `touched` (cleared after use).
     touched_mask: Vec<bool>,
+    /// Block-ownership filter for multi-master partitioned coordination
+    /// ([`crate::cluster::MasterGroup`]): `Some(mask)` restricts every
+    /// update/materialize to blocks with `mask[b]` — this master's shard
+    /// of the global variable. `None` (single master) coordinates all
+    /// blocks. Because per-coordinate updates never read across blocks
+    /// and `updates` still counts every global round, a masked master is
+    /// bit-identical to the same-mask restriction of an unmasked one.
+    mask: Option<Vec<bool>>,
 }
 
 impl SparseMaster {
@@ -430,9 +438,33 @@ impl SparseMaster {
             updates: 0,
             touched: Vec::new(),
             touched_mask: vec![false; pattern.num_blocks()],
+            mask: None,
         };
         s.rebuild(pattern, state, rho);
         s
+    }
+
+    /// A masked sparse master coordinating only the blocks with
+    /// `mask[b]` — one shard of a multi-master group. The accumulators
+    /// are rebuilt globally (same values as the unmasked state; the
+    /// unowned entries are simply never read), while updates and
+    /// materialization touch owned blocks only.
+    pub(crate) fn new_masked(
+        pattern: &BlockPattern,
+        state: &AdmmState,
+        rho: f64,
+        mask: Vec<bool>,
+    ) -> Self {
+        debug_assert_eq!(mask.len(), pattern.num_blocks());
+        let mut s = Self::new(pattern, state, rho);
+        s.mask = Some(mask);
+        s
+    }
+
+    /// `true` when this master coordinates block `b`.
+    #[inline]
+    fn owns(&self, b: usize) -> bool {
+        self.mask.as_ref().map_or(true, |m| m[b])
     }
 
     /// Recompute the accumulators from `state` and reset all stamps
@@ -538,10 +570,16 @@ impl SparseMaster {
         self.touched.clear();
         for &i in set {
             for &b in pattern.owned(i) {
-                if !self.touched_mask[b] {
-                    self.touched_mask[b] = true;
-                    self.touched.push(b);
+                if self.touched_mask[b] {
+                    continue;
                 }
+                if let Some(m) = &self.mask {
+                    if !m[b] {
+                        continue;
+                    }
+                }
+                self.touched_mask[b] = true;
+                self.touched.push(b);
             }
         }
         let target = self.updates;
@@ -591,6 +629,9 @@ impl SparseMaster {
         let reg = problem.regularizer();
         let target = self.updates;
         for b in 0..pattern.num_blocks() {
+            if !self.owns(b) {
+                continue;
+            }
             self.stamp[b] =
                 Self::catch_up(&self.acc, reg, pattern, x0, rho, gamma, b, self.stamp[b], target);
         }

@@ -63,6 +63,7 @@ use std::sync::Arc;
 use crate::bench::json::{
     self, hex_mat, hex_vec, json_usize, mat_from_hex, vec_from_hex, JsonValue,
 };
+use crate::cluster::multimaster::MasterGroup;
 use crate::problems::{BlockError, BlockPattern, ConsensusProblem};
 use crate::solvers::inexact::InexactPolicy;
 
@@ -129,6 +130,13 @@ pub enum EngineError {
     /// steps, non-positive adaptive tolerance, …) on the config or the
     /// builder; the message says which knob.
     InvalidInexact(String),
+    /// An invalid multi-master configuration
+    /// ([`crate::cluster::MasterGroup`] /
+    /// [`SessionBuilder::masters`]): malformed block→master assignment,
+    /// group/pattern mismatch, or a session shape the partitioned
+    /// coordinators cannot drive (dense, master-first, Algorithm-4
+    /// master-owned duals). The message says which.
+    Masters(String),
 }
 
 impl From<BlockError> for EngineError {
@@ -189,6 +197,7 @@ impl fmt::Display for EngineError {
             EngineError::Cluster(msg) => write!(f, "cluster config error: {msg}"),
             EngineError::Transport(msg) => write!(f, "transport error: {msg}"),
             EngineError::InvalidInexact(msg) => write!(f, "inexact policy error: {msg}"),
+            EngineError::Masters(msg) => write!(f, "multi-master error: {msg}"),
         }
     }
 }
@@ -418,11 +427,12 @@ pub struct Checkpoint {
 impl Checkpoint {
     /// The `schema` marker every checkpoint document carries.
     pub const SCHEMA: &'static str = "ad-admm-checkpoint";
-    /// Current checkpoint format version: v3 adds the inexact-solve
-    /// section (`inexact_policy`: the session's
-    /// [`crate::solvers::inexact::InexactPolicy`] string, plus per-worker
-    /// warm-start states inside the source document).
-    pub const VERSION: usize = 3;
+    /// Current checkpoint format version: v4 adds the multi-master
+    /// section (`masters`: the block→master group map plus per-master
+    /// update counters; `null` for single-master runs) and the
+    /// per-worker heterogeneous policy list (`inexact_workers`; `null`
+    /// when the uniform policy applies).
+    pub const VERSION: usize = 4;
     /// The pre-sharding format. Still readable: a v1 document is exactly
     /// a v2 document with no `blocks` section, so v1 checkpoints resume
     /// into dense sessions unchanged.
@@ -431,6 +441,11 @@ impl Checkpoint {
     /// dense runs). Still readable: v2 predates inexact policies, so v2
     /// checkpoints resume into exact-policy sessions unchanged.
     pub const V2: usize = 2;
+    /// The inexact-solve format (adds `inexact_policy` plus per-worker
+    /// warm-start states inside the source document). Still readable: v3
+    /// predates multi-master coordination, so v3 checkpoints resume into
+    /// single-master (M = 1), uniform-policy sessions unchanged.
+    pub const V3: usize = 3;
 
     fn validate(doc: &JsonValue) -> Result<(), EngineError> {
         match doc.get("schema").and_then(JsonValue::as_str) {
@@ -442,12 +457,11 @@ impl Checkpoint {
             }
         }
         let version = get_usize(doc, "version")?;
-        if version != Self::VERSION && version != Self::V2 && version != Self::V1 {
+        if !(Self::V1..=Self::VERSION).contains(&version) {
             return Err(EngineError::Checkpoint(format!(
-                "unsupported checkpoint version {version} (this build reads versions {}, {} \
-                 and {})",
+                "unsupported checkpoint version {version} (this build reads versions {} \
+                 through {})",
                 Self::V1,
-                Self::V2,
                 Self::VERSION
             )));
         }
@@ -580,6 +594,8 @@ pub struct SessionBuilder<'a> {
     blocks: Option<BlockPattern>,
     sparse_master: bool,
     inexact: Option<InexactPolicy>,
+    inexact_workers: Option<Vec<InexactPolicy>>,
+    masters: Option<MasterGroup>,
 }
 
 impl<'a> Default for SessionBuilder<'a> {
@@ -601,6 +617,8 @@ impl<'a> SessionBuilder<'a> {
             blocks: None,
             sparse_master: true,
             inexact: None,
+            inexact_workers: None,
+            masters: None,
         }
     }
 
@@ -688,6 +706,33 @@ impl<'a> SessionBuilder<'a> {
         self
     }
 
+    /// Per-worker heterogeneous [`InexactPolicy`] vector (one entry per
+    /// worker), overriding the uniform policy worker-by-worker — a fast
+    /// machine can run `newton:2` while a straggler runs `grad:3`. The
+    /// uniform [`SessionBuilder::inexact`] spelling remains the default.
+    /// Validated at `build()` (length = worker count, each policy sane)
+    /// into [`EngineError::InvalidInexact`]; serialized into v4
+    /// checkpoints so a resume never continues under different per-worker
+    /// inner-loop schedules.
+    pub fn inexact_per_worker(mut self, policies: Vec<InexactPolicy>) -> Self {
+        self.inexact_workers = Some(policies);
+        self
+    }
+
+    /// Partition the coordinator itself across the masters of `group`
+    /// ([`MasterGroup`]: a validated block→master map): each master runs
+    /// its own masked [`SparseMaster`] over only its owned blocks, and a
+    /// round completes when every master's gate is satisfied. Requires a
+    /// block-sharded, workers-first session whose policy leaves duals
+    /// with the workers (the sparse-eligible shape); anything else is
+    /// rejected as [`EngineError::Masters`] at `build()`. An M-master run
+    /// is bit-identical to the single-master sparse engine on the same
+    /// realized arrival trace (pinned by the `multimaster` suite).
+    pub fn masters(mut self, group: MasterGroup) -> Self {
+        self.masters = Some(group);
+        self
+    }
+
     /// Run the master update through the O(active) lazy sparse path
     /// ([`SparseMaster`]) when the session is eligible: block-sharded,
     /// workers-first step order, and the policy does not rewrite all duals
@@ -704,12 +749,17 @@ impl<'a> SessionBuilder<'a> {
     fn take_source(&mut self) -> Result<Box<dyn WorkerSource + 'a>, EngineError> {
         let problem = self.problem.ok_or(EngineError::MissingProblem)?;
         let policy = self.inexact.unwrap_or(self.cfg.inexact);
+        // Heterogeneous per-worker policies, validated later in
+        // `into_session` (which runs before the source ever solves).
+        let per_worker = self.inexact_workers.clone();
+        let trace_source = |model: &ArrivalModel| match per_worker {
+            Some(policies) => TraceSource::with_policies(problem, model, policies),
+            None => TraceSource::with_policy(problem, model, policy),
+        };
         Ok(match self.source.take() {
             Some(SourceSpec::Boxed(b)) => b,
-            Some(SourceSpec::Arrivals(model)) => {
-                Box::new(TraceSource::with_policy(problem, &model, policy))
-            }
-            None => Box::new(TraceSource::with_policy(problem, &ArrivalModel::Full, policy)),
+            Some(SourceSpec::Arrivals(model)) => Box::new(trace_source(&model)),
+            None => Box::new(trace_source(&ArrivalModel::Full)),
         })
     }
 
@@ -760,6 +810,18 @@ impl<'a> SessionBuilder<'a> {
         cfg.inexact.validate().map_err(EngineError::InvalidInexact)?;
         let n_workers = problem.num_workers();
         let dim = problem.dim();
+        if let Some(policies) = &self.inexact_workers {
+            if policies.len() != n_workers {
+                return Err(EngineError::InvalidInexact(format!(
+                    "inexact_per_worker has {} entries, the problem has {n_workers} workers",
+                    policies.len()
+                )));
+            }
+            for (i, p) in policies.iter().enumerate() {
+                p.validate()
+                    .map_err(|e| EngineError::InvalidInexact(format!("worker {i}: {e}")))?;
+            }
+        }
 
         // Resolve the block-sharding pattern: the builder's override or
         // the problem's own ([`ConsensusProblem::sharded`]). A
@@ -863,7 +925,49 @@ impl<'a> SessionBuilder<'a> {
         // does not rewrite every dual against the fresh x₀ (Algorithm 4
         // invalidates the cached accumulators wholesale). Bit-identical to
         // the eager sweep, so on by default.
-        let sparse = if self.sparse_master
+        // Multi-master partitioned coordination: one masked sparse master
+        // per coordinator. Requires the sparse-eligible session shape —
+        // the per-master masters *are* masked [`SparseMaster`]s, and a
+        // master-first or Algorithm-4 policy has no per-block arrival
+        // structure to partition.
+        let masters = match self.masters {
+            None => None,
+            Some(group) => {
+                let p = shard.as_ref().ok_or_else(|| {
+                    EngineError::Masters(
+                        "multi-master coordination requires a block-sharded session \
+                         (SessionBuilder::blocks or ConsensusProblem::sharded)"
+                            .to_string(),
+                    )
+                })?;
+                if policy.order() != StepOrder::WorkersFirst {
+                    return Err(EngineError::Masters(
+                        "multi-master coordination requires a workers-first policy".to_string(),
+                    ));
+                }
+                if policy.master_updates_all_duals() {
+                    return Err(EngineError::Masters(
+                        "multi-master coordination cannot drive Algorithm 4 \
+                         (master-owned duals rewrite every block each round)"
+                            .to_string(),
+                    ));
+                }
+                if !self.sparse_master {
+                    return Err(EngineError::Masters(
+                        "multi-master coordination requires the sparse master \
+                         (sparse_master(false) conflicts with masters(..))"
+                            .to_string(),
+                    ));
+                }
+                group.validate_against(p)?;
+                let per = (0..group.num_masters())
+                    .map(|m| SparseMaster::new_masked(p, &state, cfg.rho, group.block_mask(m)))
+                    .collect();
+                Some(MultiMasterState { group: Arc::new(group), per })
+            }
+        };
+        let sparse = if masters.is_none()
+            && self.sparse_master
             && policy.order() == StepOrder::WorkersFirst
             && !policy.master_updates_all_duals()
         {
@@ -907,6 +1011,8 @@ impl<'a> SessionBuilder<'a> {
             observers_started: false,
             shard,
             sparse,
+            masters,
+            inexact_workers: self.inexact_workers,
             block_updates: vec![0; num_blocks],
             block_last_arrival: vec![-1; num_blocks],
         };
@@ -920,6 +1026,17 @@ impl<'a> SessionBuilder<'a> {
 // ---------------------------------------------------------------------------
 // Session
 // ---------------------------------------------------------------------------
+
+/// The partitioned-coordinator state of a multi-master session: the
+/// block→master [`MasterGroup`] and one masked [`SparseMaster`] per
+/// coordinator. Every master performs its (possibly empty) update on
+/// every global round, so the per-master update counters march in step —
+/// the invariant that makes the union of the M masked updates
+/// bit-identical to the single global sparse update.
+pub(crate) struct MultiMasterState {
+    pub(crate) group: Arc<MasterGroup>,
+    pub(crate) per: Vec<SparseMaster>,
+}
 
 /// An incremental run of the unified iteration engine: one (problem,
 /// config, policy, source) tuple with its full mid-run state, advanced one
@@ -962,9 +1079,19 @@ pub struct Session<'a, S: WorkerSource + 'a = Box<dyn WorkerSource + 'a>> {
     /// Block-sharding pattern (None = the historical dense protocol).
     shard: Option<Arc<BlockPattern>>,
     /// The O(active) lazy sparse master (None = eager path: dense
-    /// sessions, master-first or Algorithm-4 policies, or an explicit
-    /// [`SessionBuilder::sparse_master`]`(false)`).
+    /// sessions, master-first or Algorithm-4 policies, an explicit
+    /// [`SessionBuilder::sparse_master`]`(false)`, or a multi-master
+    /// session — whose masked per-master states live in `masters`).
     sparse: Option<SparseMaster>,
+    /// Multi-master partitioned coordination
+    /// ([`SessionBuilder::masters`]): the group map plus one masked
+    /// sparse master per coordinator. `None` = the single-master star.
+    masters: Option<MultiMasterState>,
+    /// Per-worker heterogeneous inexact policies declared on the builder
+    /// (`None` = uniform `cfg.inexact`). Carried for checkpoint
+    /// serialization/validation; the solving itself happens inside the
+    /// worker source.
+    inexact_workers: Option<Vec<InexactPolicy>>,
     /// Per-block arrival counters: total arrivals of owners of each block.
     block_updates: Vec<u64>,
     /// Per-block last-arrival stamps: the iteration at which any owner of
@@ -1054,9 +1181,21 @@ impl<'a, S: WorkerSource + 'a> Session<'a, S> {
     }
 
     /// Whether this session's master update runs the O(active) sparse
-    /// path.
+    /// path (single-master; a multi-master session runs M masked sparse
+    /// paths instead — see [`Session::master_group`]).
     pub fn sparse_active(&self) -> bool {
         self.sparse.is_some()
+    }
+
+    /// The multi-master partition this session coordinates under
+    /// (`None` = the single-master star topology).
+    pub fn master_group(&self) -> Option<&MasterGroup> {
+        self.masters.as_ref().map(|mm| mm.group.as_ref())
+    }
+
+    /// Number of coordinators (1 for the single-master star).
+    pub fn num_masters(&self) -> usize {
+        self.masters.as_ref().map_or(1, |mm| mm.group.num_masters())
     }
 
     fn ensure_started(&mut self) {
@@ -1165,10 +1304,19 @@ impl<'a, S: WorkerSource + 'a> Session<'a, S> {
                 // diagnostics read x₀ densely) reproduces the eager
                 // per-iteration x₀ bit-for-bit. Eager path: the historical
                 // dense or per-coordinate owner-count sweep.
-                match &mut self.sparse {
-                    Some(sp) => {
-                        let p = self.shard.clone().expect("sparse implies sharded");
-                        if metrics_on {
+                if let Some(mm) = &mut self.masters {
+                    // Multi-master: every coordinator performs its masked
+                    // update on every global round (the block masks
+                    // partition the touched set, the update counters march
+                    // in step), so looping the masters in id order is
+                    // bit-identical to the single global sparse update —
+                    // each block sees exactly the same block-local
+                    // operations in the same order. The stitched global
+                    // view for diagnostics is the same materialize/copy
+                    // sandwich, looped per master.
+                    let p = self.shard.clone().expect("masters implies sharded");
+                    if metrics_on {
+                        for sp in &mut mm.per {
                             sp.materialize(
                                 self.problem,
                                 &mut self.state.x0,
@@ -1176,8 +1324,10 @@ impl<'a, S: WorkerSource + 'a> Session<'a, S> {
                                 self.cfg.gamma,
                                 &p,
                             );
-                            self.prev_x0.copy_from_slice(&self.state.x0);
                         }
+                        self.prev_x0.copy_from_slice(&self.state.x0);
+                    }
+                    for sp in &mut mm.per {
                         sp.update(
                             self.problem,
                             &mut self.state,
@@ -1186,7 +1336,9 @@ impl<'a, S: WorkerSource + 'a> Session<'a, S> {
                             &p,
                             &set,
                         );
-                        if metrics_on {
+                    }
+                    if metrics_on {
+                        for sp in &mut mm.per {
                             sp.materialize(
                                 self.problem,
                                 &mut self.state.x0,
@@ -1196,7 +1348,40 @@ impl<'a, S: WorkerSource + 'a> Session<'a, S> {
                             );
                         }
                     }
-                    None => self.master_update(),
+                } else {
+                    match &mut self.sparse {
+                        Some(sp) => {
+                            let p = self.shard.clone().expect("sparse implies sharded");
+                            if metrics_on {
+                                sp.materialize(
+                                    self.problem,
+                                    &mut self.state.x0,
+                                    self.cfg.rho,
+                                    self.cfg.gamma,
+                                    &p,
+                                );
+                                self.prev_x0.copy_from_slice(&self.state.x0);
+                            }
+                            sp.update(
+                                self.problem,
+                                &mut self.state,
+                                self.cfg.rho,
+                                self.cfg.gamma,
+                                &p,
+                                &set,
+                            );
+                            if metrics_on {
+                                sp.materialize(
+                                    self.problem,
+                                    &mut self.state.x0,
+                                    self.cfg.rho,
+                                    self.cfg.gamma,
+                                    &p,
+                                );
+                            }
+                        }
+                        None => self.master_update(),
+                    }
                 }
 
                 // Algorithm 4 (46): master refreshes ALL duals against the
@@ -1430,6 +1615,42 @@ impl<'a, S: WorkerSource + 'a> Session<'a, S> {
             // mid-inner-schedule warm state never continues under a
             // different policy.
             ("inexact_policy".to_string(), self.cfg.inexact.to_json()),
+            // v4: the per-worker heterogeneous policy list (null =
+            // uniform) and the multi-master section (null = the
+            // single-master star). The per-master sparse states are
+            // derived (rebuilt on resume from the materialized iterates);
+            // the group map is the contract a resume must match, and the
+            // update counters make the document auditable.
+            (
+                "inexact_workers".to_string(),
+                match &self.inexact_workers {
+                    None => JsonValue::Null,
+                    Some(ws) => JsonValue::Arr(ws.iter().map(|p| p.to_json()).collect()),
+                },
+            ),
+            (
+                "masters".to_string(),
+                match &self.masters {
+                    None => JsonValue::Null,
+                    Some(mm) => JsonValue::Obj(vec![
+                        ("group".to_string(), mm.group.to_json()),
+                        (
+                            "per".to_string(),
+                            JsonValue::Arr(
+                                mm.per
+                                    .iter()
+                                    .map(|sp| {
+                                        JsonValue::Obj(vec![(
+                                            "updates".to_string(),
+                                            JsonValue::Num(sp.view().updates as f64),
+                                        )])
+                                    })
+                                    .collect(),
+                            ),
+                        ),
+                    ]),
+                },
+            ),
             ("k".to_string(), JsonValue::Num(self.k as f64)),
             ("n_workers".to_string(), JsonValue::Num(n_workers as f64)),
             ("dim".to_string(), JsonValue::Num(self.state.x0.len() as f64)),
@@ -1505,12 +1726,12 @@ impl<'a, S: WorkerSource + 'a> Session<'a, S> {
             None // v1: no section, dense
         };
 
-        // Inexact-policy compatibility: a v3 checkpoint records the policy
-        // its warm-start states were produced under; resuming under a
-        // different policy would silently desynchronize the inner-loop
-        // schedule. v1/v2 documents predate inexact solves and only resume
-        // into exact-policy sessions.
-        if version >= Checkpoint::VERSION {
+        // Inexact-policy compatibility: a v3+ checkpoint records the
+        // policy its warm-start states were produced under; resuming
+        // under a different policy would silently desynchronize the
+        // inner-loop schedule. v1/v2 documents predate inexact solves and
+        // only resume into exact-policy sessions.
+        if version >= Checkpoint::V3 {
             let stored = InexactPolicy::from_json(jget(doc, "inexact_policy")?)
                 .map_err(EngineError::Checkpoint)?;
             if stored != self.cfg.inexact {
@@ -1525,6 +1746,74 @@ impl<'a, S: WorkerSource + 'a> Session<'a, S> {
                 "checkpoint version {version} predates inexact policies (exact-only), the \
                  session is configured with {}",
                 self.cfg.inexact
+            )));
+        }
+
+        // Per-worker heterogeneous policy compatibility (v4): same rule
+        // as the uniform policy, entry by entry. Pre-v4 documents are
+        // uniform by definition and only resume into uniform sessions.
+        if version >= Checkpoint::VERSION {
+            let stored = match jget(doc, "inexact_workers")? {
+                JsonValue::Null => None,
+                list => {
+                    let mut ws = Vec::new();
+                    for v in list.items() {
+                        ws.push(
+                            InexactPolicy::from_json(v).map_err(EngineError::Checkpoint)?,
+                        );
+                    }
+                    Some(ws)
+                }
+            };
+            if stored != self.inexact_workers {
+                return Err(EngineError::Checkpoint(
+                    "checkpoint per-worker inexact policies do not match the session's"
+                        .to_string(),
+                ));
+            }
+        } else if self.inexact_workers.is_some() {
+            return Err(EngineError::Checkpoint(format!(
+                "checkpoint version {version} predates per-worker inexact policies, the \
+                 session is configured with a heterogeneous policy vector"
+            )));
+        }
+
+        // Multi-master compatibility (v4): the group map recorded in the
+        // document must equal the session's. Pre-v4 documents are
+        // single-master (M = 1) by definition and load into (and only
+        // into) sessions without a master group — the per-master sparse
+        // states are derived and rebuilt below either way.
+        if version >= Checkpoint::VERSION {
+            match (jget(doc, "masters")?, &self.masters) {
+                (JsonValue::Null, None) => {}
+                (JsonValue::Null, Some(_)) => {
+                    return Err(EngineError::Checkpoint(
+                        "checkpoint was taken from a single-master run, resuming into a \
+                         multi-master session"
+                            .to_string(),
+                    ));
+                }
+                (_, None) => {
+                    return Err(EngineError::Checkpoint(
+                        "checkpoint was taken from a multi-master run, resuming into a \
+                         single-master session"
+                            .to_string(),
+                    ));
+                }
+                (md, Some(mm)) => {
+                    let stored = MasterGroup::from_json(jget(md, "group")?)
+                        .map_err(EngineError::Checkpoint)?;
+                    if stored != *mm.group {
+                        return Err(EngineError::Checkpoint(
+                            "checkpoint master group does not match the session's".to_string(),
+                        ));
+                    }
+                }
+            }
+        } else if self.masters.is_some() {
+            return Err(EngineError::Checkpoint(format!(
+                "checkpoint version {version} predates multi-master coordination (M = 1 \
+                 only), the session is configured with a master group"
             )));
         }
         match (blocks_doc, &self.shard) {
@@ -1651,6 +1940,17 @@ impl<'a, S: WorkerSource + 'a> Session<'a, S> {
             let p = self.shard.clone().expect("sparse implies sharded");
             sp.rebuild(&p, &self.state, self.cfg.rho);
         }
+        // Multi-master: every masked master rebuilds from the same
+        // restored iterates. All update counters reset to 0 *together*,
+        // and catch-up work is a function of counter differences only, so
+        // the common shift preserves bit-identity (same argument as the
+        // single-master rebuild, per master).
+        if let Some(mm) = &mut self.masters {
+            let p = self.shard.clone().expect("masters implies sharded");
+            for sp in &mut mm.per {
+                sp.rebuild(&p, &self.state, self.cfg.rho);
+            }
+        }
         Ok(())
     }
 
@@ -1663,6 +1963,18 @@ impl<'a, S: WorkerSource + 'a> Session<'a, S> {
         if let Some(sp) = &mut self.sparse {
             let p = self.shard.clone().expect("sparse implies sharded");
             sp.materialize(self.problem, &mut self.state.x0, self.cfg.rho, self.cfg.gamma, &p);
+        }
+        if let Some(mm) = &mut self.masters {
+            let p = self.shard.clone().expect("masters implies sharded");
+            for sp in &mut mm.per {
+                sp.materialize(
+                    self.problem,
+                    &mut self.state.x0,
+                    self.cfg.rho,
+                    self.cfg.gamma,
+                    &p,
+                );
+            }
         }
     }
 
@@ -1826,6 +2138,7 @@ mod tests {
             EngineError::ActiveSetOutOfRange { index: 7, n_workers: 4 },
             EngineError::Cluster("drop_prob must be in [0, 1)".to_string()),
             EngineError::InvalidInexact("inner step count must be >= 1".to_string()),
+            EngineError::Masters("master 1 owns no blocks".to_string()),
         ];
         for e in errs {
             let text = e.to_string();

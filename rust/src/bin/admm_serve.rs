@@ -13,12 +13,14 @@
 //!
 //!   admm_serve submit --connect 127.0.0.1:7401 --job ci-e2e \
 //!       --workers 4 --m 60 --n 40 --tau 3 --iters 60 [--alt] \
-//!       [--shard-blocks B --shard-owners C] [--free-running]
+//!       [--shard-blocks B --shard-owners C] [--free-running] [--masters M]
 //!
 //! Workers are separate `admm_worker` processes pointed at the printed
-//! port. Job flags are shared with `ad-admm transport-digest`, which
-//! replays the identical spec through the in-process trace source — under
-//! the default lockstep schedule both print the same digest, bit-exact.
+//! port (`--masters M` jobs print M comma-joined rendezvous ports; give
+//! workers the whole list). Job flags are shared with `ad-admm
+//! transport-digest`, which replays the identical spec through the
+//! in-process trace source — under the default lockstep schedule both
+//! print the same digest, bit-exact, for any M.
 
 use ad_admm::cluster::transport::{serve, submit, JobSpec};
 use ad_admm::util::cli::ArgParser;
@@ -56,8 +58,12 @@ fn print_help() {
          \x20            --rho R --gamma G --tau T --min-arrivals A --iters K --tol E\n\
          \x20            [--alt] [--shard-blocks B --shard-owners C] [--free-running]\n\
          \x20            [--fast-ms F --slow-ms S] [--checkpoint-every N] [--seed S]\n\
-         \x20            [--inexact exact|grad:K|proxgrad:K|newton:K|adaptive:TOL0:MAX]\n\n\
+         \x20            [--inexact exact|grad:K|proxgrad:K|newton:K|adaptive:TOL0:MAX]\n\
+         \x20            [--inexact-workers P0,P1,...] [--masters M]\n\n\
          serve accepts jobs until killed (--oneshot: exit after the first job);\n\
-         submit prints the per-job worker rendezvous port, then blocks for the report."
+         submit prints the per-job worker rendezvous port(s), then blocks for\n\
+         the report. --masters M shards the coordinator itself over M sparse\n\
+         masters (requires --shard-blocks, lockstep, non-alt); workers connect\n\
+         to all M printed ports. --inexact-workers gives worker i policy Pi."
     );
 }

@@ -7,14 +7,17 @@
 //! threaded workers run, so a process fleet computes bit-identical
 //! messages.
 //!
-//!   admm_worker --connect 127.0.0.1:PORT --job ID [--worker I]
+//!   admm_worker --connect 127.0.0.1:PORT[,HOST:PORT...] --job ID [--worker I]
 //!               [--retries N --retry-ms MS] [--max-rounds R]
 //!
 //! `--worker` pins a slot — a restarted worker names its old slot so the
 //! master re-delivers the in-flight broadcast (with its dual reseed) and
 //! the run continues bit-identically. `--max-rounds` makes the process
 //! exit by dropping its connection cold after R rounds: the emulated
-//! crash the disconnect/reconnect e2e uses.
+//! crash the disconnect/reconnect e2e uses. A comma-joined `--connect`
+//! list (the ports a multi-master `admm_serve` job prints, in master
+//! order) runs the multi-master loop: one socket per master, the owned
+//! slice multiplexed across the masters owning this worker's blocks.
 
 use std::time::Duration;
 
@@ -26,8 +29,10 @@ fn main() {
     if args.has_flag("help") {
         println!(
             "admm_worker — one AD-ADMM worker process\n\n\
-             USAGE: admm_worker --connect HOST:PORT --job ID [--worker I]\n\
-             \x20      [--retries N --retry-ms MS] [--max-rounds R]"
+             USAGE: admm_worker --connect HOST:PORT[,HOST:PORT...] --job ID\n\
+             \x20      [--worker I] [--retries N --retry-ms MS] [--max-rounds R]\n\n\
+             a comma-joined --connect list (one address per master, in master\n\
+             order) joins a multi-master job on every listed coordinator."
         );
         return;
     }

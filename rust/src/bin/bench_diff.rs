@@ -9,6 +9,11 @@
 //!   better) or contains `per_sec`/`speedup` (rates, higher is better);
 //! - `stats/<label>/median_s` for every timed section (lower is better).
 //!
+//! Every compared report additionally gets a one-line
+//! `report <file>: N metric(s) compared, worst ±X% (<key>)` verdict even
+//! when everything is within threshold, so CI logs always show each
+//! baseline was actually exercised.
+//!
 //! Changes worse than the threshold (default 20%) print a GitHub
 //! `::warning::` annotation; with `--strict` (the CI bench-smoke gate)
 //! they also fail the run — EXCEPT when the baseline file carries
@@ -178,7 +183,8 @@ fn main() -> ExitCode {
             .get("provisional")
             .and_then(JsonValue::as_bool)
             .unwrap_or(false);
-        for c in compare(&base, &cand) {
+        let comparisons = compare(&base, &cand);
+        for c in &comparisons {
             let pct = c.regression * 100.0;
             if c.regression > threshold {
                 if provisional {
@@ -199,6 +205,22 @@ fn main() -> ExitCode {
             } else {
                 println!("= {file} {} within ±{:.0}% ({:+.1}%)", c.key, threshold * 100.0, pct);
             }
+        }
+        // One-line per-report verdict, printed unconditionally — a report
+        // whose every leaf is within threshold still leaves a greppable
+        // trace that it WAS compared (an empty diff is indistinguishable
+        // from a skipped one otherwise).
+        match comparisons
+            .iter()
+            .max_by(|a, b| a.regression.total_cmp(&b.regression))
+        {
+            Some(worst) => println!(
+                "report {file}: {} metric(s) compared, worst {:+.1}% ({})",
+                comparisons.len(),
+                worst.regression * 100.0,
+                worst.key
+            ),
+            None => println!("report {file}: 0 metrics compared"),
         }
     }
 

@@ -28,6 +28,7 @@
 
 pub mod clock;
 pub mod messages;
+pub mod multimaster;
 pub mod pool;
 pub mod sim;
 pub mod threaded;
@@ -42,8 +43,10 @@ use crate::admm::{AdmmConfig, AdmmState, IterRecord, StopReason};
 use crate::bench::json::{hex_u128, u128_from_hex, JsonValue};
 use crate::problems::ConsensusProblem;
 use crate::rng::Pcg64;
+use crate::solvers::inexact::InexactPolicy;
 
 pub use crate::admm::engine::{DelaySpike, FaultPlan, Outage};
+pub use multimaster::{MasterGroup, MultiMasterSource};
 pub use sim::VirtualSource;
 pub use clock::VirtualClock;
 pub use messages::{MasterMsg, WorkerMsg};
@@ -235,6 +238,13 @@ pub struct ClusterConfig {
     /// already deterministic; replay traces there via
     /// [`crate::admm::arrivals::ArrivalModel::Trace`]).
     pub lockstep_trace: Option<ArrivalTrace>,
+    /// Per-worker heterogeneous inexact subproblem policies. `None`
+    /// (the default spelling) applies [`AdmmConfig::inexact`] uniformly;
+    /// `Some(v)` must have one entry per worker and overrides the uniform
+    /// policy worker-by-worker — a fast machine can run `newton:2` while a
+    /// stragglers runs `grad:3`. Honoured identically by every execution
+    /// mode (pinned by the three-source heterogeneous bit-identity test).
+    pub inexact_per_worker: Option<Vec<InexactPolicy>>,
 }
 
 impl Default for ClusterConfig {
@@ -249,6 +259,7 @@ impl Default for ClusterConfig {
             pool_threads: 1,
             fault_plan: None,
             lockstep_trace: None,
+            inexact_per_worker: None,
         }
     }
 }
@@ -257,6 +268,16 @@ impl ClusterConfig {
     /// Start a validated [`ClusterConfigBuilder`] from the defaults.
     pub fn builder() -> ClusterConfigBuilder {
         ClusterConfigBuilder { cfg: ClusterConfig::default() }
+    }
+
+    /// The inexact policy worker `i` solves under: its
+    /// [`ClusterConfig::inexact_per_worker`] entry when set, the uniform
+    /// [`AdmmConfig::inexact`] otherwise.
+    pub fn inexact_policy_for(&self, worker: usize) -> InexactPolicy {
+        match &self.inexact_per_worker {
+            Some(v) => v[worker],
+            None => self.admm.inexact,
+        }
     }
 }
 
@@ -327,6 +348,13 @@ impl ClusterConfigBuilder {
         self
     }
 
+    /// Per-worker heterogeneous inexact policies (one entry per worker;
+    /// overrides the uniform [`AdmmConfig::inexact`]).
+    pub fn inexact_per_worker(mut self, policies: Vec<InexactPolicy>) -> Self {
+        self.cfg.inexact_per_worker = Some(policies);
+        self
+    }
+
     /// Validate and produce the [`ClusterConfig`].
     pub fn build(self) -> Result<ClusterConfig, EngineError> {
         let bad = |msg: String| Err(EngineError::Cluster(msg));
@@ -373,6 +401,16 @@ impl ClusterConfigBuilder {
             }
             if !(f.retrans_ms.is_finite() && f.retrans_ms >= 0.0) {
                 return bad(format!("fault retrans_ms {} is not finite and >= 0", f.retrans_ms));
+            }
+        }
+        if let Some(policies) = &cfg.inexact_per_worker {
+            if policies.is_empty() {
+                return bad("inexact_per_worker has no workers".to_string());
+            }
+            for (i, p) in policies.iter().enumerate() {
+                if let Err(e) = p.validate() {
+                    return bad(format!("inexact_per_worker[{i}]: {e}"));
+                }
             }
         }
         if let Some(plan) = &cfg.fault_plan {
@@ -426,6 +464,12 @@ pub struct ClusterReport {
     pub net_bytes_down: u64,
     /// Simulated worker→master payload bytes (see `net_bytes_down`).
     pub net_bytes_up: u64,
+    /// Per-master `(down, up)` split of the simulated payload bytes. One
+    /// entry per coordinator — single-master runs report one pair equal to
+    /// the global counters; multi-master virtual-time runs split by slice
+    /// ownership. Invariant (unit-tested): the element-wise sum over
+    /// masters equals `(net_bytes_down, net_bytes_up)` exactly.
+    pub net_bytes_per_master: Vec<(u64, u64)>,
 }
 
 impl ClusterReport {
@@ -445,6 +489,7 @@ impl ClusterReport {
         source: VirtualSource,
     ) -> ClusterReport {
         let (net_bytes_down, net_bytes_up) = source.network_bytes();
+        let net_bytes_per_master = source.master_split();
         let (workers, wall_clock_s, master_wait_s) = source.finish();
         ClusterReport {
             state: outcome.state,
@@ -456,6 +501,7 @@ impl ClusterReport {
             workers,
             net_bytes_down,
             net_bytes_up,
+            net_bytes_per_master,
         }
     }
 }
@@ -510,6 +556,7 @@ impl StarCluster {
             workers,
             net_bytes_down: 0,
             net_bytes_up: 0,
+            net_bytes_per_master: vec![(0, 0)],
         }
     }
 
@@ -528,6 +575,9 @@ impl StarCluster {
         };
         if let Some(plan) = &cfg.fault_plan {
             builder = builder.faults(plan.clone());
+        }
+        if let Some(policies) = &cfg.inexact_per_worker {
+            builder = builder.inexact_per_worker(policies.clone());
         }
         builder
     }
@@ -573,6 +623,48 @@ impl StarCluster {
             self.problem.pattern().cloned(),
         );
         self.session_builder(cfg).resume_typed(source, checkpoint)
+    }
+
+    /// A virtual-time session whose coordinator is partitioned across
+    /// `group.num_masters()` masters (see [`MasterGroup`]): each master
+    /// runs its own masked sparse update over the blocks it owns and its
+    /// own arrival gate over its own fleet, under one shared virtual-time
+    /// event queue. Requires a block-sharded problem whose pattern has
+    /// exactly `group.num_blocks()` blocks. With `MasterGroup::single` the
+    /// session is bit-identical to [`StarCluster::virtual_session`].
+    pub fn virtual_multimaster_session(
+        &self,
+        cfg: &ClusterConfig,
+        group: MasterGroup,
+    ) -> Result<Session<'_, VirtualSource>, EngineError> {
+        let pattern = self.problem.pattern().cloned().ok_or_else(|| {
+            EngineError::Masters(
+                "multi-master coordination requires a block-sharded problem".to_string(),
+            )
+        })?;
+        let source =
+            MultiMasterSource::build(self.problem.num_workers(), cfg, pattern, &group)?;
+        self.session_builder(cfg).masters(group).build_typed(source)
+    }
+
+    /// Resume a multi-master virtual-time session from a v4 [`Checkpoint`]
+    /// taken by [`StarCluster::virtual_multimaster_session`]. `cfg` and
+    /// `group` must match the checkpointed run; the resumed run continues
+    /// bit-identically (pinned by the `multimaster` suite).
+    pub fn resume_virtual_multimaster_session(
+        &self,
+        cfg: &ClusterConfig,
+        group: MasterGroup,
+        checkpoint: &Checkpoint,
+    ) -> Result<Session<'_, VirtualSource>, EngineError> {
+        let pattern = self.problem.pattern().cloned().ok_or_else(|| {
+            EngineError::Masters(
+                "multi-master coordination requires a block-sharded problem".to_string(),
+            )
+        })?;
+        let source =
+            MultiMasterSource::build(self.problem.num_workers(), cfg, pattern, &group)?;
+        self.session_builder(cfg).masters(group).resume_typed(source, checkpoint)
     }
 }
 

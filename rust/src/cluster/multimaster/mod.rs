@@ -1,0 +1,336 @@
+//! Multi-master partitioned coordination: the coordinator itself shards.
+//!
+//! The AD-ADMM of the paper is star-topology — one master absorbs every
+//! worker's update — which leaves a single-coordinator bandwidth/compute
+//! ceiling that neither the O(active) sparse master (PR 6) nor the real
+//! transport (PR 7) removes. Following the block-wise general-form
+//! consensus architecture of Zhu, Niu & Li (arXiv:1802.08882), the global
+//! variable partitions cleanly along [`BlockPattern`] block ownership:
+//! a [`MasterGroup`] assigns every block id to one of `M` masters, each
+//! master runs its own [`crate::admm::SparseMaster`] over only its owned
+//! blocks, and workers ship each owned slice only to the master owning
+//! that block.
+//!
+//! **M = 1 equivalence.** Per-coordinate master updates never read across
+//! blocks, owners fold in ascending worker order per block, and in the
+//! lockstep composition every master performs its (possibly empty) update
+//! on every global round — so each per-master update counter marches in
+//! step with the single-master counter and the lazy-prox catch-up replay
+//! counts align exactly. An M-master run over disjoint block groups is
+//! therefore **bit-identical** to the single-master sparse engine
+//! consuming the same realized arrival trace (pinned by the
+//! `multimaster` integration suite for M ∈ {1, 2, 4} across random
+//! patterns, fault plans and inexact policies).
+//!
+//! The subsystem threads through every layer:
+//!
+//! - engine composition: [`crate::admm::session::SessionBuilder::masters`]
+//!   drives M per-master sparse states inside one session;
+//! - virtual time: [`MultiMasterSource`] wraps the discrete-event
+//!   [`VirtualSource`] with per-master gate counters (per-master
+//!   Assumption-1 τ-forcing and `|A_k ∩ W_m| ≥ min(A, live_m)` batching),
+//!   per-master byte meters and simulated busy time;
+//! - transport: per-master rendezvous listeners and slice-multiplexed
+//!   workers ([`crate::cluster::transport::MultiSocketSource`]);
+//! - checkpoints: format v4 records the group map + per-master counters
+//!   and still loads v1–v3 documents as M = 1.
+
+use std::sync::Arc;
+
+use crate::admm::session::EngineError;
+use crate::bench::json::{json_usize, JsonValue};
+use crate::problems::BlockPattern;
+
+use super::sim::VirtualSource;
+use super::ClusterConfig;
+
+/// A validated assignment of [`BlockPattern`] block ids to master ids:
+/// `assignment[b] = m` means coordinate block `b` is coordinated by
+/// master `m`. Every master must own at least one block and master ids
+/// must be dense in `[0, num_masters)` — rejected as typed
+/// [`EngineError::Masters`] otherwise.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MasterGroup {
+    /// Block id → master id.
+    assignment: Vec<usize>,
+    num_masters: usize,
+    /// Per-master owned block ids, ascending (derived).
+    owned_blocks: Vec<Vec<usize>>,
+}
+
+impl MasterGroup {
+    /// Validate an explicit block → master assignment.
+    pub fn new(assignment: Vec<usize>, num_masters: usize) -> Result<Self, EngineError> {
+        if num_masters == 0 {
+            return Err(EngineError::Masters("num_masters must be >= 1".to_string()));
+        }
+        if assignment.is_empty() {
+            return Err(EngineError::Masters(
+                "master assignment must cover at least one block".to_string(),
+            ));
+        }
+        let mut owned_blocks = vec![Vec::new(); num_masters];
+        for (b, &m) in assignment.iter().enumerate() {
+            if m >= num_masters {
+                return Err(EngineError::Masters(format!(
+                    "block {b} assigned to master {m}, but there are only {num_masters} masters"
+                )));
+            }
+            owned_blocks[m].push(b);
+        }
+        if let Some(empty) = owned_blocks.iter().position(Vec::is_empty) {
+            return Err(EngineError::Masters(format!("master {empty} owns no blocks")));
+        }
+        Ok(MasterGroup { assignment, num_masters, owned_blocks })
+    }
+
+    /// The trivial single-master group over `num_blocks` blocks — the
+    /// star topology of the paper, and the M = 1 baseline every
+    /// equivalence claim is pinned against.
+    pub fn single(num_blocks: usize) -> Self {
+        Self::new(vec![0; num_blocks.max(1)], 1).expect("single-master group is always valid")
+    }
+
+    /// Contiguous even split: the first `num_blocks % num_masters` masters
+    /// own one extra block. Errors when `num_masters` is 0 or exceeds
+    /// `num_blocks` (a master would own nothing).
+    pub fn contiguous(num_blocks: usize, num_masters: usize) -> Result<Self, EngineError> {
+        if num_masters == 0 || num_masters > num_blocks {
+            return Err(EngineError::Masters(format!(
+                "num_masters must be in [1, {num_blocks}], got {num_masters}"
+            )));
+        }
+        let base = num_blocks / num_masters;
+        let extra = num_blocks % num_masters;
+        let mut assignment = Vec::with_capacity(num_blocks);
+        for m in 0..num_masters {
+            let len = base + usize::from(m < extra);
+            assignment.extend(std::iter::repeat(m).take(len));
+        }
+        Self::new(assignment, num_masters)
+    }
+
+    /// Number of coordinators.
+    pub fn num_masters(&self) -> usize {
+        self.num_masters
+    }
+
+    /// Number of blocks this group assigns.
+    pub fn num_blocks(&self) -> usize {
+        self.assignment.len()
+    }
+
+    /// The master owning block `b`.
+    pub fn master_of(&self, b: usize) -> usize {
+        self.assignment[b]
+    }
+
+    /// The full block → master map.
+    pub fn assignment(&self) -> &[usize] {
+        &self.assignment
+    }
+
+    /// Master `m`'s owned block ids, ascending.
+    pub fn owned_blocks(&self, m: usize) -> &[usize] {
+        &self.owned_blocks[m]
+    }
+
+    /// Per-block ownership mask for master `m` (the filter a per-master
+    /// [`crate::admm::SparseMaster`] runs under).
+    pub fn block_mask(&self, m: usize) -> Vec<bool> {
+        self.assignment.iter().map(|&owner| owner == m).collect()
+    }
+
+    /// The masters worker `i` talks to under `pattern`: owners of at
+    /// least one of its blocks, ascending and unique.
+    pub fn masters_of_worker(&self, pattern: &BlockPattern, worker: usize) -> Vec<usize> {
+        let mut seen = vec![false; self.num_masters];
+        let mut out = Vec::new();
+        for &b in pattern.owned(worker) {
+            let m = self.assignment[b];
+            if !seen[m] {
+                seen[m] = true;
+                out.push(m);
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+
+    /// Per-master sorted worker lists under `pattern`: worker `i` belongs
+    /// to master `m`'s fleet iff it owns at least one of `m`'s blocks.
+    pub fn workers_of(&self, pattern: &BlockPattern) -> Vec<Vec<usize>> {
+        let mut out = vec![Vec::new(); self.num_masters];
+        for i in 0..pattern.num_workers() {
+            for m in self.masters_of_worker(pattern, i) {
+                out[m].push(i);
+            }
+        }
+        out
+    }
+
+    /// The `(local_offset, len)` runs of worker `i`'s owned slice that
+    /// belong to master `m`, in ascending local order — the slice-split
+    /// primitive both transport endpoints derive identically from
+    /// `(pattern, group)`, so no layout metadata rides the wire.
+    pub fn worker_ranges(
+        &self,
+        pattern: &BlockPattern,
+        worker: usize,
+        master: usize,
+    ) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        let mut local = 0usize;
+        for &b in pattern.owned(worker) {
+            let (_, len) = pattern.block_range(b);
+            if self.assignment[b] == master {
+                out.push((local, len));
+            }
+            local += len;
+        }
+        out
+    }
+
+    /// Total length of worker `i`'s slice destined for master `m` (the
+    /// per-link payload size in f64s).
+    pub fn worker_part_len(&self, pattern: &BlockPattern, worker: usize, master: usize) -> usize {
+        self.worker_ranges(pattern, worker, master).iter().map(|&(_, len)| len).sum()
+    }
+
+    /// Cross-check against a pattern: the group must assign exactly the
+    /// pattern's blocks.
+    pub fn validate_against(&self, pattern: &BlockPattern) -> Result<(), EngineError> {
+        if self.num_blocks() != pattern.num_blocks() {
+            return Err(EngineError::Masters(format!(
+                "group assigns {} blocks, the pattern has {}",
+                self.num_blocks(),
+                pattern.num_blocks()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Checkpoint-v4 / wire form.
+    pub fn to_json(&self) -> JsonValue {
+        JsonValue::Obj(vec![
+            ("num_masters".to_string(), JsonValue::Num(self.num_masters as f64)),
+            (
+                "assignment".to_string(),
+                JsonValue::Arr(
+                    self.assignment.iter().map(|&m| JsonValue::Num(m as f64)).collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Inverse of [`MasterGroup::to_json`] (re-validated on load).
+    pub fn from_json(doc: &JsonValue) -> Result<Self, String> {
+        let num_masters =
+            json_usize(doc.get("num_masters").ok_or("group missing field \"num_masters\"")?)?;
+        let mut assignment = Vec::new();
+        for v in doc.get("assignment").ok_or("group missing field \"assignment\"")?.items() {
+            assignment.push(json_usize(v)?);
+        }
+        Self::new(assignment, num_masters).map_err(|e| format!("invalid master group: {e}"))
+    }
+}
+
+/// The virtual-time multi-master [`WorkerSource`]: a
+/// [`VirtualSource`] with a [`MasterGroup`] installed, so one
+/// discrete-event queue drives M coordinators — each with its own gate
+/// counters (per-master Assumption-1 τ-forcing over its own fleet,
+/// per-master `min(A, live_m)` batching), byte meters and simulated busy
+/// time. A round completes only when *every* master's gate is satisfied
+/// (the lockstep-global-rounds composition the bit-identity pin rests
+/// on); with M = 1 the gate, the meters and every event timing collapse
+/// to the plain [`VirtualSource`].
+///
+/// [`WorkerSource`]: crate::admm::engine::WorkerSource
+pub struct MultiMasterSource;
+
+impl MultiMasterSource {
+    /// Build a [`VirtualSource`] with `group` installed. Returned as the
+    /// underlying source type so [`crate::admm::session::Session`]s stay
+    /// `Session<'_, VirtualSource>` and the cluster's report plumbing
+    /// ([`super::ClusterReport::from_virtual_parts`]) applies unchanged.
+    pub fn build(
+        n_workers: usize,
+        cfg: &ClusterConfig,
+        pattern: Arc<BlockPattern>,
+        group: &MasterGroup,
+    ) -> Result<VirtualSource, EngineError> {
+        group.validate_against(&pattern)?;
+        let mut source = VirtualSource::new(n_workers, cfg, None, Some(Arc::clone(&pattern)));
+        source.set_master_group(Arc::new(group.clone()));
+        Ok(source)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contiguous_split_covers_all_blocks() {
+        let g = MasterGroup::contiguous(10, 4).unwrap();
+        assert_eq!(g.num_masters(), 4);
+        assert_eq!(g.num_blocks(), 10);
+        // 10 = 3 + 3 + 2 + 2
+        assert_eq!(g.owned_blocks(0), &[0, 1, 2]);
+        assert_eq!(g.owned_blocks(1), &[3, 4, 5]);
+        assert_eq!(g.owned_blocks(2), &[6, 7]);
+        assert_eq!(g.owned_blocks(3), &[8, 9]);
+        let mask = g.block_mask(2);
+        assert_eq!(mask.iter().filter(|&&b| b).count(), 2);
+        assert!(mask[6] && mask[7]);
+    }
+
+    #[test]
+    fn single_group_is_the_star_topology() {
+        let g = MasterGroup::single(5);
+        assert_eq!(g.num_masters(), 1);
+        assert!(g.assignment().iter().all(|&m| m == 0));
+    }
+
+    #[test]
+    fn invalid_groups_are_typed_errors() {
+        assert!(MasterGroup::new(vec![0, 2], 2).is_err(), "master id out of range");
+        assert!(MasterGroup::new(vec![0, 0], 2).is_err(), "master 1 owns nothing");
+        assert!(MasterGroup::new(Vec::new(), 1).is_err(), "no blocks");
+        assert!(MasterGroup::contiguous(2, 3).is_err(), "more masters than blocks");
+        assert!(MasterGroup::contiguous(2, 0).is_err(), "zero masters");
+    }
+
+    #[test]
+    fn worker_ranges_split_the_local_layout() {
+        // 8 coords, 4 blocks of 2, 4 workers, 2 copies: worker i owns
+        // blocks {i, (i+3) % 4} sorted ascending.
+        let p = BlockPattern::round_robin(8, 4, 4, 2).unwrap();
+        let g = MasterGroup::contiguous(4, 2).unwrap(); // blocks {0,1} | {2,3}
+        // Worker 0 owns blocks [0, 3]: local layout = block0 (len 2) then
+        // block3 (len 2). Master 0 gets (0, 2), master 1 gets (2, 2).
+        assert_eq!(g.worker_ranges(&p, 0, 0), vec![(0, 2)]);
+        assert_eq!(g.worker_ranges(&p, 0, 1), vec![(2, 2)]);
+        assert_eq!(g.worker_part_len(&p, 0, 0) + g.worker_part_len(&p, 0, 1), p.owned_len(0));
+        assert_eq!(g.masters_of_worker(&p, 0), vec![0, 1]);
+        // Worker 2 owns blocks [1, 2]: one block per master group.
+        assert_eq!(g.worker_ranges(&p, 2, 0), vec![(0, 2)]);
+        assert_eq!(g.worker_ranges(&p, 2, 1), vec![(2, 2)]);
+        let fleets = g.workers_of(&p);
+        assert_eq!(fleets.len(), 2);
+        assert_eq!(fleets[0], vec![0, 1, 2, 3]);
+        assert_eq!(fleets[1], vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn group_json_roundtrips_and_revalidates() {
+        let g = MasterGroup::contiguous(6, 3).unwrap();
+        let back = MasterGroup::from_json(&g.to_json()).unwrap();
+        assert_eq!(back, g);
+        assert!(MasterGroup::from_json(&JsonValue::Obj(vec![
+            ("num_masters".to_string(), JsonValue::Num(2.0)),
+            ("assignment".to_string(), JsonValue::Arr(vec![JsonValue::Num(0.0)])),
+        ]))
+        .is_err());
+    }
+}

@@ -46,10 +46,18 @@ use crate::solvers::inexact::{solve_inexact, InexactPolicy, WarmState};
 use crate::util::timer::Clock;
 
 use super::clock::{Event, EventKind, EventQueue, VirtualClock};
+use super::multimaster::MasterGroup;
 use super::pool::WorkerPool;
 use super::timeline::WorkerStats;
 use super::worker::WorkerSolveFn;
 use super::{ClusterConfig, ClusterReport, DelaySampler, FaultModel};
+
+/// Simulated master-side processing cost per absorbed f64 coordinate
+/// (folding one accumulator entry ≈ 10 ns). Pure *metering* — it never
+/// enters the event timings, so enabling the meter leaves every run
+/// bit-identical; the `virtual_scale` bench uses the resulting per-master
+/// busy split to report `multimaster_speedup`.
+const MASTER_PER_F64_S: f64 = 1e-8;
 
 /// Per-worker simulation state (delay streams + optional solve override).
 struct VirtualWorker {
@@ -132,9 +140,31 @@ pub struct VirtualSource {
     faults: Option<FaultModel>,
     fault_plan: Option<crate::admm::engine::FaultPlan>,
     master_wait_s: f64,
-    /// The session's inexactness policy, applied to every native worker
-    /// solve (`Exact` = the historical closed-form path, bit-identical).
-    policy: InexactPolicy,
+    /// Per-worker inexactness policies, applied to the native worker
+    /// solves (`Exact` = the historical closed-form path, bit-identical).
+    /// Uniform — one copy of `cfg.admm.inexact` per worker — unless the
+    /// config carries per-worker overrides.
+    policies: Vec<InexactPolicy>,
+    /// Coordinator partition (None = the classic single master). With a
+    /// group installed every master runs its own `|A_k| ≥ A` + τ-forcing
+    /// gate over *its own fleet* (the workers owning at least one of its
+    /// blocks), and the byte/busy meters split per master. Installed via
+    /// [`VirtualSource::set_master_group`] before the run starts.
+    group: Option<Arc<MasterGroup>>,
+    /// Per worker: `(master, part f64 length)` rows of its owned slice,
+    /// ascending in master id. Empty vecs when single-master.
+    worker_parts: Vec<Vec<(usize, usize)>>,
+    /// Per-master downlink byte meters (len = M; a single unused slot when
+    /// no group is installed — [`VirtualSource::master_split`] then
+    /// mirrors the globals). Invariant: rows sum to the global counters.
+    m_bytes_down: Vec<u64>,
+    /// Per-master uplink byte meters (see `m_bytes_down`).
+    m_bytes_up: Vec<u64>,
+    /// Per-master simulated busy seconds — [`MASTER_PER_F64_S`] per
+    /// absorbed f64 coordinate. Metered in *both* modes so the
+    /// `virtual_scale` bench can ratio an M-way split against the
+    /// single-master baseline (`multimaster_speedup`).
+    m_busy_s: Vec<f64>,
     /// Simulated payload bytes shipped master → workers (x₀ slices, plus
     /// λ̂ under Algorithm 4), at 8 bytes per f64. Deterministic, so it
     /// doubles as a cheap cross-run network-volume metric.
@@ -196,10 +226,44 @@ impl VirtualSource {
             faults: cfg.faults.clone(),
             fault_plan: cfg.fault_plan.clone(),
             master_wait_s: 0.0,
-            policy: cfg.admm.inexact,
+            policies: match &cfg.inexact_per_worker {
+                Some(v) => {
+                    assert_eq!(v.len(), n_workers, "one inexact policy per worker");
+                    v.clone()
+                }
+                None => vec![cfg.admm.inexact; n_workers],
+            },
+            group: None,
+            worker_parts: Vec::new(),
+            m_bytes_down: vec![0],
+            m_bytes_up: vec![0],
+            m_busy_s: vec![0.0],
             bytes_down: 0,
             bytes_up: 0,
         }
+    }
+
+    /// Install the coordinator partition: precompute each worker's
+    /// per-master slice parts and size the per-master meters. Must be
+    /// called on a block-sharded source before the run starts (the
+    /// session/cluster layers do this during construction).
+    pub(crate) fn set_master_group(&mut self, group: Arc<MasterGroup>) {
+        let p = self.shard.as_ref().expect("multi-master requires a block-sharded source");
+        let n = self.pending.len();
+        self.worker_parts = (0..n)
+            .map(|i| {
+                group
+                    .masters_of_worker(p, i)
+                    .into_iter()
+                    .map(|m| (m, group.worker_part_len(p, i, m)))
+                    .collect()
+            })
+            .collect();
+        let mm = group.num_masters();
+        self.m_bytes_down = vec![0; mm];
+        self.m_bytes_up = vec![0; mm];
+        self.m_busy_s = vec![0.0; mm];
+        self.group = Some(group);
     }
 
     /// Simulated network volume so far as `(bytes_down, bytes_up)`:
@@ -209,6 +273,32 @@ impl VirtualSource {
     /// it as a comm-volume metric without a real transport.
     pub fn network_bytes(&self) -> (u64, u64) {
         (self.bytes_down, self.bytes_up)
+    }
+
+    /// Per-master network split, one `(bytes_down, bytes_up)` row per
+    /// coordinator — a single row mirroring [`VirtualSource::network_bytes`]
+    /// when no master group is installed. Invariant (unit-tested): the rows
+    /// sum to the global counters, because every worker's owned slice is
+    /// partitioned exactly once across its owning masters.
+    pub fn master_split(&self) -> Vec<(u64, u64)> {
+        match &self.group {
+            None => vec![(self.bytes_down, self.bytes_up)],
+            Some(_) => {
+                self.m_bytes_down.iter().zip(&self.m_bytes_up).map(|(&d, &u)| (d, u)).collect()
+            }
+        }
+    }
+
+    /// Per-master simulated busy seconds ([`MASTER_PER_F64_S`] per folded
+    /// f64 at absorption); a single entry when single-master. Pure meter —
+    /// never feeds back into event timings.
+    pub fn master_busy_s(&self) -> &[f64] {
+        &self.m_busy_s
+    }
+
+    /// The installed coordinator partition, if any.
+    pub fn master_group(&self) -> Option<&MasterGroup> {
+        self.group.as_deref()
     }
 
     /// Start worker `i`'s next round at the current virtual instant:
@@ -228,7 +318,10 @@ impl VirtualSource {
     /// any fault retransmissions, mirroring the threaded worker's
     /// `comm_faults`); Arrive lands the message at the master and updates
     /// the gate counters — unless the worker is down, in which case the
-    /// message is held (`pending`) without counting.
+    /// message is held (`pending`) without counting. Under a master group
+    /// the same arrival also counts once at every owning master
+    /// (`m_arrived` / `m_forced`, empty slices when single-master).
+    #[allow(clippy::too_many_arguments)]
     fn absorb_event(
         &mut self,
         ev: Event,
@@ -236,6 +329,8 @@ impl VirtualSource {
         gate: &Gate<'_>,
         arrived_count: &mut usize,
         forced_missing: &mut usize,
+        m_arrived: &mut [usize],
+        m_forced: &mut [usize],
     ) {
         match ev.kind {
             EventKind::ComputeDone => {
@@ -273,8 +368,17 @@ impl VirtualSource {
                 self.stat_updates[ev.worker] += 1;
                 if !gate.down[ev.worker] {
                     *arrived_count += 1;
-                    if d[ev.worker] + 1 >= gate.tau {
+                    let forced = d[ev.worker] + 1 >= gate.tau;
+                    if forced {
                         *forced_missing -= 1;
+                    }
+                    if self.group.is_some() {
+                        for &(m, _) in &self.worker_parts[ev.worker] {
+                            m_arrived[m] += 1;
+                            if forced {
+                                m_forced[m] -= 1;
+                            }
+                        }
                     }
                 }
             }
@@ -391,6 +495,20 @@ impl WorkerSource for VirtualSource {
             ("lam_snap".to_string(), hex_mat(&self.lam_snap)),
             ("bytes_down".to_string(), hex_u128(self.bytes_down as u128)),
             ("bytes_up".to_string(), hex_u128(self.bytes_up as u128)),
+            (
+                "m_bytes_down".to_string(),
+                JsonValue::Arr(
+                    self.m_bytes_down.iter().map(|&b| hex_u128(b as u128)).collect(),
+                ),
+            ),
+            (
+                "m_bytes_up".to_string(),
+                JsonValue::Arr(self.m_bytes_up.iter().map(|&b| hex_u128(b as u128)).collect()),
+            ),
+            (
+                "m_busy_s".to_string(),
+                JsonValue::Arr(self.m_busy_s.iter().map(|&s| hex_f64(s)).collect()),
+            ),
             ("workers".to_string(), workers_json),
         ]))
     }
@@ -489,6 +607,36 @@ impl WorkerSource for VirtualSource {
             Some(v) => u128_from_hex(v).map_err(bad)? as u64,
             None => 0,
         };
+        // Per-master meters: absent in pre-v4 documents, which the session
+        // layer only accepts into single-master sessions — there the
+        // single row mirrors the globals, so zeros are never observed.
+        if let Some(v) = doc.get("m_bytes_down") {
+            let items = v.items();
+            if items.len() != self.m_bytes_down.len() {
+                return Err(bad("per-master downlink meter count mismatch".to_string()));
+            }
+            for (slot, item) in self.m_bytes_down.iter_mut().zip(items) {
+                *slot = u128_from_hex(item).map_err(bad)? as u64;
+            }
+        }
+        if let Some(v) = doc.get("m_bytes_up") {
+            let items = v.items();
+            if items.len() != self.m_bytes_up.len() {
+                return Err(bad("per-master uplink meter count mismatch".to_string()));
+            }
+            for (slot, item) in self.m_bytes_up.iter_mut().zip(items) {
+                *slot = u128_from_hex(item).map_err(bad)? as u64;
+            }
+        }
+        if let Some(v) = doc.get("m_busy_s") {
+            let items = v.items();
+            if items.len() != self.m_busy_s.len() {
+                return Err(bad("per-master busy meter count mismatch".to_string()));
+            }
+            for (slot, item) in self.m_busy_s.iter_mut().zip(items) {
+                *slot = f64_from_hex(item).map_err(bad)?;
+            }
+        }
 
         self.vclock = VirtualClock::new();
         self.vclock.advance_to(now_s);
@@ -513,10 +661,18 @@ impl WorkerSource for VirtualSource {
         // Initial broadcast at t = 0: every worker starts computing
         // against x⁰.
         let with_dual = policy.broadcasts_dual();
+        let down_mult = if with_dual { 2 } else { 1 };
         for i in 0..n_workers {
             self.bytes_down += 8 * (self.x0_snap[i].len()
                 + if with_dual { self.lam_snap[i].len() } else { 0 })
                 as u64;
+            if self.group.is_some() {
+                // λ̂ slices share the owned-slice layout, so the dual
+                // payload splits by the same per-master part lengths.
+                for &(m, len) in &self.worker_parts[i] {
+                    self.m_bytes_down[m] += 8 * (len * down_mult) as u64;
+                }
+            }
             self.dispatch(i);
         }
     }
@@ -533,20 +689,70 @@ impl WorkerSource for VirtualSource {
         let mut forced_missing = (0..n)
             .filter(|&i| !gate.down[i] && d[i] + 1 >= gate.tau && !self.pending[i])
             .count();
+        // Per-master gate counters (empty when single-master): each
+        // coordinator enforces `|A_k ∩ fleet_m| ≥ min(A, live_m)` plus
+        // τ-forcing over its own fleet. The round fires when *every*
+        // master's gate is satisfied — with M = 1 the conjunction is
+        // exactly the global gate, so the classic event sequence is
+        // untouched.
+        let (mut m_arrived, mut m_forced, m_target) = match &self.group {
+            None => (Vec::new(), Vec::new(), Vec::new()),
+            Some(g) => {
+                let mm = g.num_masters();
+                let (mut live, mut arr, mut forc) =
+                    (vec![0usize; mm], vec![0usize; mm], vec![0usize; mm]);
+                for i in 0..n {
+                    if gate.down[i] {
+                        continue;
+                    }
+                    for &(m, _) in &self.worker_parts[i] {
+                        live[m] += 1;
+                        if self.pending[i] {
+                            arr[m] += 1;
+                        } else if d[i] + 1 >= gate.tau {
+                            forc[m] += 1;
+                        }
+                    }
+                }
+                let tgt: Vec<usize> =
+                    live.iter().map(|&l| gate.min_arrivals.min(l)).collect();
+                (arr, forc, tgt)
+            }
+        };
         loop {
-            if arrived_count >= target && forced_missing == 0 {
+            let masters_ok = m_target
+                .iter()
+                .enumerate()
+                .all(|(m, &t)| m_arrived[m] >= t && m_forced[m] == 0);
+            if arrived_count >= target && forced_missing == 0 && masters_ok {
                 // Absorb everything that has arrived by this instant — the
                 // threaded master's try_recv drain.
                 while self.queue.peek_time().is_some_and(|t| t <= self.vclock.now_s()) {
                     let ev = self.queue.pop().expect("peeked event");
-                    self.absorb_event(ev, d, gate, &mut arrived_count, &mut forced_missing);
+                    self.absorb_event(
+                        ev,
+                        d,
+                        gate,
+                        &mut arrived_count,
+                        &mut forced_missing,
+                        &mut m_arrived,
+                        &mut m_forced,
+                    );
                 }
                 break;
             }
             match self.queue.pop() {
                 Some(ev) => {
                     self.vclock.advance_to(ev.time_s);
-                    self.absorb_event(ev, d, gate, &mut arrived_count, &mut forced_missing);
+                    self.absorb_event(
+                        ev,
+                        d,
+                        gate,
+                        &mut arrived_count,
+                        &mut forced_missing,
+                        &mut m_arrived,
+                        &mut m_forced,
+                    );
                 }
                 // Unreachable with ≥1 live worker (every worker always has
                 // an in-flight event), but mirror the threaded recv-Err
@@ -597,9 +803,25 @@ impl WorkerSource for VirtualSource {
             .iter()
             .map(|t| 8 * (t.x.len() + if worker_dual { t.x.len() } else { 0 }) as u64)
             .sum::<u64>();
+        // Per-master meters: the same uplink bytes split by owning master,
+        // plus the simulated folding cost each coordinator pays for the
+        // coordinates it absorbed. Metering only — event timings are
+        // untouched, so runs stay bit-identical with the meters on.
+        let up_mult = if worker_dual { 2 } else { 1 };
+        for t in &tasks {
+            match &self.group {
+                None => self.m_busy_s[0] += MASTER_PER_F64_S * t.x.len() as f64,
+                Some(_) => {
+                    for &(m, len) in &self.worker_parts[t.worker] {
+                        self.m_bytes_up[m] += 8 * (len * up_mult) as u64;
+                        self.m_busy_s[m] += MASTER_PER_F64_S * len as f64;
+                    }
+                }
+            }
+        }
         let x0_snaps = &self.x0_snap;
         let lam_snaps = &self.lam_snap;
-        let inexact = self.policy;
+        let policies = &self.policies;
         self.pool.run(&mut tasks, |t| {
             let i = t.worker;
             // Worker i's slice length (owned-slice length when sharded).
@@ -612,7 +834,7 @@ impl WorkerSource for VirtualSource {
                     Some(f) => (**f)(t.lam, snap, rho, t.x),
                     None => solve_inexact(
                         &**problem.local(i),
-                        &inexact,
+                        &policies[i],
                         t.lam,
                         snap,
                         rho,
@@ -631,7 +853,7 @@ impl WorkerSource for VirtualSource {
                     Some(f) => (**f)(lsnap, snap, rho, t.x),
                     None => solve_inexact(
                         &**problem.local(i),
-                        &inexact,
+                        &policies[i],
                         lsnap,
                         snap,
                         rho,
@@ -662,6 +884,12 @@ impl WorkerSource for VirtualSource {
             self.bytes_down += 8 * (self.x0_snap[i].len()
                 + if with_dual { self.lam_snap[i].len() } else { 0 })
                 as u64;
+            if self.group.is_some() {
+                let down_mult = if with_dual { 2 } else { 1 };
+                for &(m, len) in &self.worker_parts[i] {
+                    self.m_bytes_down[m] += 8 * (len * down_mult) as u64;
+                }
+            }
             self.dispatch(i);
         }
     }
@@ -680,6 +908,7 @@ pub(crate) fn run_virtual(
         VirtualSource::new(problem.num_workers(), cfg, solvers, problem.pattern().cloned());
     let run = super::run_cluster_engine(problem, cfg, &mut source);
     let (net_bytes_down, net_bytes_up) = source.network_bytes();
+    let net_bytes_per_master = source.master_split();
     let (workers, wall_clock_s, master_wait_s) = source.finish();
     ClusterReport {
         state: run.state,
@@ -691,6 +920,7 @@ pub(crate) fn run_virtual(
         workers,
         net_bytes_down,
         net_bytes_up,
+        net_bytes_per_master,
     }
 }
 

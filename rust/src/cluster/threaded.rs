@@ -65,7 +65,6 @@ impl ThreadedSource {
         let n_workers = problem.num_workers();
         let rho = cfg.admm.rho;
         let protocol = cfg.protocol;
-        let policy = cfg.admm.inexact;
 
         // Star links: one channel to each worker, one shared channel back.
         let (to_master, from_workers) = std::sync::mpsc::channel::<WorkerMsg>();
@@ -89,6 +88,9 @@ impl ThreadedSource {
             let solve = solver_list[i].take();
             let faults = cfg.faults.clone();
             let spikes = cfg.fault_plan.clone();
+            // Each spawned worker solves under its own policy (uniform
+            // unless the config carries per-worker overrides).
+            let policy = cfg.inexact_policy_for(i);
             let handle = std::thread::Builder::new()
                 .name(format!("worker-{i}"))
                 .spawn(move || {

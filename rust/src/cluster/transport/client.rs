@@ -22,13 +22,17 @@ use super::super::timeline::WorkerStats;
 use super::super::worker::{comm_leg_ms, worker_round};
 use super::super::{DelayModel, FaultModel, Protocol};
 use super::frame::{write_frame, FrameReader};
+use super::multisocket::{extract, scatter};
 use super::service::JobSpec;
 use super::wire::WireMsg;
 
 /// How a worker process finds and identifies itself to a master.
 #[derive(Clone, Debug)]
 pub struct WorkerClientConfig {
-    /// Master address, e.g. `"127.0.0.1:7401"`.
+    /// Master address, e.g. `"127.0.0.1:7401"` — or a comma-joined list
+    /// (`"127.0.0.1:7401,127.0.0.1:7402"`), one address per master of a
+    /// multi-master job, in master order (the `accepted` log line prints
+    /// exactly this list).
     pub addr: String,
     /// Job id to present in `hello` (must match the master's).
     pub job_id: String,
@@ -64,22 +68,55 @@ fn transport_err(msg: String) -> EngineError {
     EngineError::Transport(msg)
 }
 
-fn connect(cfg: &WorkerClientConfig) -> Result<TcpStream, EngineError> {
+fn connect_addr(
+    addr: &str,
+    retries: u32,
+    retry_delay: Duration,
+) -> Result<TcpStream, EngineError> {
     let mut attempt = 0;
     loop {
-        match TcpStream::connect(&cfg.addr) {
+        match TcpStream::connect(addr) {
             Ok(s) => return Ok(s),
             Err(e) => {
                 attempt += 1;
-                if attempt > cfg.retries {
+                if attempt > retries {
                     return Err(transport_err(format!(
-                        "cannot connect to {} after {} attempts: {e}",
-                        cfg.addr, attempt
+                        "cannot connect to {addr} after {attempt} attempts: {e}"
                     )));
                 }
-                std::thread::sleep(cfg.retry_delay);
+                std::thread::sleep(retry_delay);
             }
         }
+    }
+}
+
+fn connect(cfg: &WorkerClientConfig) -> Result<TcpStream, EngineError> {
+    connect_addr(&cfg.addr, cfg.retries, cfg.retry_delay)
+}
+
+/// `hello`/`assign` exchange on one connection: present the job id (and a
+/// slot hint, if any), return the assigned slot and the job spec.
+fn handshake(
+    mut sink: &TcpStream,
+    reader: &mut FrameReader,
+    job_id: &str,
+    slot: Option<usize>,
+) -> Result<(usize, JobSpec), EngineError> {
+    let hello = WireMsg::Hello { job: job_id.to_string(), worker: slot };
+    write_frame(&mut sink, &hello.encode())
+        .map_err(|e| transport_err(format!("hello write failed: {e}")))?;
+    let payload = reader
+        .next_frame(&mut sink)
+        .map_err(|e| transport_err(format!("handshake read failed: {e}")))?
+        .ok_or_else(|| transport_err("master closed during handshake".to_string()))?;
+    match WireMsg::decode(&payload).map_err(transport_err)? {
+        WireMsg::Assign { worker, spec } => {
+            Ok((worker, JobSpec::from_json(&spec).map_err(transport_err)?))
+        }
+        WireMsg::Error { message } => {
+            Err(transport_err(format!("master rejected hello: {message}")))
+        }
+        other => Err(transport_err(format!("expected assign, got {other:?}"))),
     }
 }
 
@@ -88,29 +125,16 @@ fn connect(cfg: &WorkerClientConfig) -> Result<TcpStream, EngineError> {
 /// then answer `go` frames until `shutdown` (or `max_rounds`). Returns the
 /// worker's accumulated stats, exactly like the threaded loop does.
 pub fn run_worker(cfg: &WorkerClientConfig) -> Result<WorkerStats, EngineError> {
+    if cfg.addr.contains(',') {
+        return run_worker_multi(cfg);
+    }
     let stream = connect(cfg)?;
     let _ = stream.set_nodelay(true);
     let mut sink = &stream;
     let mut src = &stream;
     let mut reader = FrameReader::new();
 
-    let hello = WireMsg::Hello { job: cfg.job_id.clone(), worker: cfg.worker };
-    write_frame(&mut sink, &hello.encode())
-        .map_err(|e| transport_err(format!("hello write failed: {e}")))?;
-
-    let payload = reader
-        .next_frame(&mut src)
-        .map_err(|e| transport_err(format!("handshake read failed: {e}")))?
-        .ok_or_else(|| transport_err("master closed during handshake".to_string()))?;
-    let (worker, spec) = match WireMsg::decode(&payload).map_err(transport_err)? {
-        WireMsg::Assign { worker, spec } => {
-            (worker, JobSpec::from_json(&spec).map_err(transport_err)?)
-        }
-        WireMsg::Error { message } => {
-            return Err(transport_err(format!("master rejected hello: {message}")))
-        }
-        other => return Err(transport_err(format!("expected assign, got {other:?}"))),
-    };
+    let (worker, spec) = handshake(&stream, &mut reader, &cfg.job_id, cfg.worker)?;
 
     // Rebuild the local problem deterministically from the spec — every
     // process derives the identical instance from the shared seed.
@@ -143,7 +167,7 @@ pub fn run_worker(cfg: &WorkerClientConfig) -> Result<WorkerStats, EngineError> 
     // sources, so lockstep digests still match under inexact policies.
     // (A reconnecting worker restarts cold; under `lockstep` the e2e
     // digest jobs run fault-free, so the schedule stays aligned.)
-    let policy = spec.inexact;
+    let policy = spec.inexact_workers.as_ref().map_or(spec.inexact, |v| v[worker]);
     let mut warm = WarmState::default();
     let mut stats = WorkerStats::new(worker);
     let mut rounds = 0usize;
@@ -207,6 +231,175 @@ pub fn run_worker(cfg: &WorkerClientConfig) -> Result<WorkerStats, EngineError> 
         rounds += 1;
         if cfg.max_rounds == Some(rounds) {
             break; // drop the connection cold — emulated process crash
+        }
+    }
+
+    stats.lifetime_s = wall.now_s();
+    Ok(stats)
+}
+
+/// The multi-master worker loop behind a comma-joined `addr` list: one
+/// socket per master, the owned slice multiplexed across the masters
+/// owning this worker's blocks.
+///
+/// Master 0's claim table is the global slot allocator — the worker
+/// handshakes `addrs[0]` first (with its hint, if any), then claims the
+/// assigned slot explicitly on every other master so all endpoints agree
+/// on the worker id. Ownership is derivable only once the spec arrives,
+/// so the worker dials *every* master; connections to non-owning masters
+/// stay idle after the handshake. Per round it reads one `go` part from
+/// each owning master (ascending master order), stitches them into the
+/// full owned `x̂₀` by the same derived ranges the master split by
+/// ([`crate::cluster::multimaster::MasterGroup::worker_ranges`] via
+/// [`super::multisocket`]), runs the
+/// one shared [`worker_round`], and ships each owning master exactly its
+/// part of `(x_i, λ_i)` back.
+fn run_worker_multi(cfg: &WorkerClientConfig) -> Result<WorkerStats, EngineError> {
+    let addrs: Vec<&str> = cfg.addr.split(',').map(str::trim).collect();
+    let mut streams = Vec::with_capacity(addrs.len());
+    for addr in &addrs {
+        let s = connect_addr(addr, cfg.retries, cfg.retry_delay)?;
+        let _ = s.set_nodelay(true);
+        streams.push(s);
+    }
+    let mut readers: Vec<FrameReader> =
+        (0..streams.len()).map(|_| FrameReader::new()).collect();
+
+    let (worker, spec) = handshake(&streams[0], &mut readers[0], &cfg.job_id, cfg.worker)?;
+    for m in 1..streams.len() {
+        let (w, _) = handshake(&streams[m], &mut readers[m], &cfg.job_id, Some(worker))?;
+        if w != worker {
+            return Err(transport_err(format!(
+                "master {m} assigned slot {w}, master 0 assigned {worker}"
+            )));
+        }
+    }
+    if addrs.len() != spec.masters {
+        return Err(transport_err(format!(
+            "{} addresses for a {}-master job",
+            addrs.len(),
+            spec.masters
+        )));
+    }
+    let group = spec.master_group()?.ok_or_else(|| {
+        transport_err("multi-address connect to a single-master job".to_string())
+    })?;
+
+    let problem = spec.build_problem()?;
+    if worker >= problem.num_workers() {
+        return Err(transport_err(format!("assigned slot {worker} out of range")));
+    }
+    let pattern = std::sync::Arc::clone(
+        problem.pattern().expect("master_group requires a block-sharded spec"),
+    );
+    let local = std::sync::Arc::clone(problem.local(worker));
+    // `(master, slice runs)` per owning master, ascending — the wire
+    // layout both sides derive; no layout metadata rides the frames.
+    let parts: Vec<(usize, Vec<(usize, usize)>)> = group
+        .masters_of_worker(&pattern, worker)
+        .into_iter()
+        .map(|m| (m, group.worker_ranges(&pattern, worker, m)))
+        .collect();
+    // `master_group` rejects the alternative (dual-broadcasting) scheme.
+    let protocol = Protocol::AdAdmm;
+    let rho = spec.rho;
+
+    let mut delay = DelayModel::linear_spread(
+        spec.workers,
+        spec.fast_ms,
+        spec.slow_ms,
+        0.3,
+        spec.seed,
+    )
+    .sampler(worker);
+    let faults: Option<FaultModel> = None;
+    let mut fault_rng: Option<Pcg64> = None;
+
+    let n = local.dim();
+    let mut lam = vec![0.0; n]; // λ⁰ = 0 (reseed parts overwrite on reconnect)
+    let mut x = vec![0.0; n];
+    let mut x0 = vec![0.0; n];
+    let mut scratch = WorkerScratch::new();
+    let policy = spec.inexact_workers.as_ref().map_or(spec.inexact, |v| v[worker]);
+    let mut warm = WarmState::default();
+    let mut stats = WorkerStats::new(worker);
+    let mut rounds = 0usize;
+    let wall = Stopwatch::start();
+
+    'rounds: loop {
+        // Collect this round's `go` parts from every owning master,
+        // stitching each into the full owned slice. A shutdown or closed
+        // connection from any owning master ends the job.
+        for (m, ranges) in &parts {
+            let mut src = &streams[*m];
+            let payload = match readers[*m]
+                .next_frame(&mut src)
+                .map_err(|e| transport_err(format!("read from master {m} failed: {e}")))?
+            {
+                Some(p) => p,
+                None => break 'rounds,
+            };
+            let (px0, plam, reseed) = match WireMsg::decode(&payload).map_err(transport_err)? {
+                WireMsg::Go { x0, lam, reseed } => (x0, lam, reseed),
+                WireMsg::Shutdown => break 'rounds,
+                other => {
+                    return Err(transport_err(format!("expected go/shutdown, got {other:?}")))
+                }
+            };
+            if plam.is_some() {
+                // Only the rejected dual-broadcasting scheme ships duals
+                // down; a dual part here means the ends disagree.
+                return Err(transport_err(
+                    "unexpected dual broadcast on a multi-master job".to_string(),
+                ));
+            }
+            if let Some(r) = reseed {
+                scatter(&mut lam, ranges, &r);
+            }
+            scatter(&mut x0, ranges, &px0);
+        }
+        let t0 = Instant::now();
+
+        let ms = delay.sample_ms();
+        if ms > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(ms * 1e-3));
+        }
+
+        let lam_out = worker_round(
+            protocol,
+            &*local,
+            rho,
+            &mut lam,
+            &mut x,
+            &x0,
+            None,
+            None,
+            &mut scratch,
+            &policy,
+            &mut warm,
+        );
+
+        let cms = comm_leg_ms(None, faults.as_ref(), fault_rng.as_mut(), &mut stats, 1.0);
+        if cms > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(cms * 1e-3));
+        }
+
+        for (m, ranges) in &parts {
+            let up = WireMsg::Up {
+                worker,
+                x: extract(&x, ranges),
+                lam: lam_out.as_ref().map(|l| extract(l, ranges)),
+            };
+            let mut sink = &streams[*m];
+            write_frame(&mut sink, &up.encode())
+                .map_err(|e| transport_err(format!("up write to master {m} failed: {e}")))?;
+        }
+
+        stats.updates += 1;
+        stats.busy_s += t0.elapsed().as_secs_f64();
+        rounds += 1;
+        if cfg.max_rounds == Some(rounds) {
+            break; // drop every connection cold — emulated process crash
         }
     }
 

@@ -12,6 +12,10 @@
 //!   Assumption-1 outages, reconnects re-deliver the in-flight broadcast
 //!   with the worker-held dual, lockstep runs are bit-comparable to trace
 //!   replay;
+//! - [`multisocket`] — [`MultiSocketSource`], M per-master rendezvous
+//!   endpoints multiplexing each worker's owned slice across the masters
+//!   owning its blocks (multi-master partitioned coordination,
+//!   [`crate::cluster::multimaster`]);
 //! - [`client`] — the worker-side process loop, sharing the round
 //!   arithmetic with the threaded worker so both transports compute
 //!   bit-identical messages;
@@ -24,13 +28,15 @@
 pub mod frame;
 pub mod wire;
 pub mod socket;
+pub mod multisocket;
 pub mod client;
 pub mod service;
 
 pub use frame::{write_frame, FrameError, FrameEvent, FrameReader, MAX_FRAME_LEN};
 pub use wire::WireMsg;
 pub use socket::{SocketSource, TransportConfig, TransportStats};
+pub use multisocket::MultiSocketSource;
 pub use client::{run_worker, WorkerClientConfig};
 pub use service::{
-    roundrobin_trace, run_job, run_reference, serve, submit, JobReport, JobSpec,
+    roundrobin_trace, run_job, run_job_multi, run_reference, serve, submit, JobReport, JobSpec,
 };

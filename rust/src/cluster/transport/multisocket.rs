@@ -1,0 +1,270 @@
+//! [`MultiSocketSource`] — per-master rendezvous listeners and
+//! slice-multiplexed workers: the TCP realization of multi-master
+//! partitioned coordination ([`crate::cluster::multimaster`]).
+//!
+//! Each of the `M` coordinators binds its own listener and runs a full
+//! [`SocketSource`] endpoint — acceptor, claim table, per-connection
+//! reader threads, reconnect re-delivery — restricted to its *fleet*:
+//! the workers owning at least one of its blocks. A worker process opens
+//! one socket per owning master (claiming the same global slot id on
+//! every endpoint) and, per round, receives that master's part of its
+//! owned slice and ships back exactly the part the master coordinates.
+//!
+//! **No layout metadata rides the wire.** Both endpoints derive the
+//! slice split identically from `(pattern, group)` via
+//! [`MasterGroup::worker_ranges`]; a `go`/`up` part payload is just the
+//! concatenation of those runs, stitched back into the full owned slice
+//! on arrival. Payload bytes therefore partition exactly across masters:
+//! the per-master byte meters sum to the single-master totals.
+//!
+//! Multi-master transport runs are lockstep-only: the prescribed global
+//! arrival sets project onto each endpoint (`S_k ∩ fleet_m`), every
+//! endpoint waits for its projection each round, and the session above
+//! runs one masked sparse master per coordinator
+//! ([`crate::admm::session::SessionBuilder::masters`]) — which is
+//! bit-identical to the single-master sparse engine on the same trace,
+//! so an M = 2 loopback digest must equal the M = 1 in-process
+//! reference. Disconnects remain per-endpoint Assumption-1 outages with
+//! `go.reseed` re-delivery of the in-flight part.
+
+use std::net::{SocketAddr, TcpListener};
+use std::sync::Arc;
+
+use crate::admm::arrivals::ArrivalTrace;
+use crate::admm::engine::{ActiveSet, Gate, MasterView, UpdatePolicy, WorkerSource};
+use crate::admm::session::EngineError;
+use crate::admm::AdmmState;
+use crate::problems::BlockPattern;
+use crate::util::timer::{Clock, Stopwatch};
+
+use super::super::multimaster::MasterGroup;
+use super::socket::{SocketSource, TransportConfig, TransportStats};
+
+/// Concatenate the `(offset, len)` runs of `src` (a worker's part payload
+/// for one master). Shared with the worker-side client: both ends split
+/// and stitch by the same derived ranges.
+pub(crate) fn extract(src: &[f64], ranges: &[(usize, usize)]) -> Vec<f64> {
+    let total = ranges.iter().map(|&(_, len)| len).sum();
+    let mut out = Vec::with_capacity(total);
+    for &(off, len) in ranges {
+        out.extend_from_slice(&src[off..off + len]);
+    }
+    out
+}
+
+/// Stitch a part payload back into the full owned slice at its runs.
+pub(crate) fn scatter(dst: &mut [f64], ranges: &[(usize, usize)], part: &[f64]) {
+    let total: usize = ranges.iter().map(|&(_, len)| len).sum();
+    assert_eq!(part.len(), total, "part payload does not match the derived slice split");
+    let mut cur = 0;
+    for &(off, len) in ranges {
+        dst[off..off + len].copy_from_slice(&part[cur..cur + len]);
+        cur += len;
+    }
+}
+
+/// The multi-master TCP [`WorkerSource`]: one [`SocketSource`] endpoint
+/// per coordinator, slice parts multiplexed across them. See the module
+/// docs for the protocol.
+pub struct MultiSocketSource {
+    n_workers: usize,
+    pattern: Arc<BlockPattern>,
+    endpoints: Vec<SocketSource>,
+    /// Per worker: `(master, slice runs)` for every owning master,
+    /// ascending in master id — the wire layout both sides derive.
+    parts: Vec<Vec<(usize, Vec<(usize, usize)>)>>,
+    /// The *global* prescribed arrival sets and the replay cursor (each
+    /// endpoint replays its own projection in step).
+    lockstep: (Vec<Vec<usize>>, usize),
+    wall: Stopwatch,
+}
+
+impl MultiSocketSource {
+    /// Start accepting on `listeners` — one already-bound listener per
+    /// master of `group`. Requires a lockstep trace in `cfg` (free-running
+    /// multi-master gathers are a virtual-time-only feature) and a
+    /// block-sharded `pattern` the group validates against.
+    pub fn from_listeners(
+        listeners: Vec<TcpListener>,
+        n_workers: usize,
+        cfg: TransportConfig,
+        pattern: Arc<BlockPattern>,
+        group: &MasterGroup,
+    ) -> Result<Self, EngineError> {
+        if listeners.len() != group.num_masters() {
+            return Err(EngineError::Masters(format!(
+                "{} listeners for {} masters",
+                listeners.len(),
+                group.num_masters()
+            )));
+        }
+        if pattern.num_workers() != n_workers {
+            return Err(EngineError::Masters(format!(
+                "pattern has {} workers, transport expects {n_workers}",
+                pattern.num_workers()
+            )));
+        }
+        group.validate_against(&pattern)?;
+        let trace = cfg.lockstep.clone().ok_or_else(|| {
+            EngineError::Masters(
+                "multi-master transport requires a lockstep trace".to_string(),
+            )
+        })?;
+        let fleets = group.workers_of(&pattern);
+        let parts: Vec<Vec<(usize, Vec<(usize, usize)>)>> = (0..n_workers)
+            .map(|i| {
+                group
+                    .masters_of_worker(&pattern, i)
+                    .into_iter()
+                    .map(|m| (m, group.worker_ranges(&pattern, i, m)))
+                    .collect()
+            })
+            .collect();
+        let mut endpoints = Vec::with_capacity(listeners.len());
+        for (m, listener) in listeners.into_iter().enumerate() {
+            let mut mask = vec![false; n_workers];
+            for &i in &fleets[m] {
+                mask[i] = true;
+            }
+            let projected = ArrivalTrace {
+                sets: trace
+                    .sets
+                    .iter()
+                    .map(|s| s.iter().copied().filter(|&i| mask[i]).collect())
+                    .collect(),
+            };
+            let ep_cfg = TransportConfig {
+                lockstep: Some(projected),
+                // Parts are pre-sliced here; the endpoint must not re-derive
+                // owned slices from a pattern it does not have.
+                shard: None,
+                expected: Some(mask),
+                ..cfg.clone()
+            };
+            endpoints.push(SocketSource::from_listener(listener, n_workers, ep_cfg)?);
+        }
+        Ok(MultiSocketSource {
+            n_workers,
+            pattern,
+            endpoints,
+            parts,
+            lockstep: (trace.sets, 0),
+            wall: Stopwatch::start(),
+        })
+    }
+
+    /// The bound per-master rendezvous addresses, in master order (query
+    /// after binding port 0).
+    pub fn local_addrs(&self) -> Vec<SocketAddr> {
+        self.endpoints.iter().map(SocketSource::local_addr).collect()
+    }
+
+    /// Ship worker `i` its per-master `go` parts: each owning endpoint
+    /// gets the runs of `x₀` it coordinates plus the matching dual runs
+    /// (snapshotted endpoint-side for reconnect re-delivery).
+    fn send_parts(&mut self, i: usize, state: &AdmmState, with_dual: bool) {
+        let x0_owned = self.pattern.gather_vec(i, &state.x0);
+        for (m, ranges) in &self.parts[i] {
+            let px0 = extract(&x0_owned, ranges);
+            let plam = with_dual.then(|| extract(&state.lams[i], ranges));
+            let pstate = extract(&state.lams[i], ranges);
+            self.endpoints[*m].send_part(i, px0, plam, pstate);
+        }
+    }
+
+    /// Shutdown every endpoint; returns the aggregate stats plus the
+    /// per-master split (payloads partition across masters, so the
+    /// per-master byte meters sum to the aggregate).
+    pub fn finish(self) -> (TransportStats, Vec<TransportStats>) {
+        let wall_clock_s = self.wall.now_s();
+        let per: Vec<TransportStats> =
+            self.endpoints.into_iter().map(SocketSource::finish).collect();
+        let agg = TransportStats {
+            outages: per.iter().flat_map(|s| s.outages.iter().cloned()).collect(),
+            bytes_in: per.iter().map(|s| s.bytes_in).sum(),
+            bytes_out: per.iter().map(|s| s.bytes_out).sum(),
+            wall_clock_s,
+            master_wait_s: per.iter().map(|s| s.master_wait_s).sum(),
+        };
+        (agg, per)
+    }
+}
+
+impl WorkerSource for MultiSocketSource {
+    fn n_workers(&self) -> usize {
+        self.n_workers
+    }
+
+    fn kind(&self) -> &'static str {
+        "multisocket"
+    }
+
+    fn supports_sharding(&self) -> bool {
+        true
+    }
+
+    fn start(&mut self, state: &AdmmState, policy: &dyn UpdatePolicy) {
+        // Every endpoint assembles its fleet before the initial parts go
+        // out (workers dial every owning master, so no roster can starve
+        // another's).
+        for ep in &mut self.endpoints {
+            ep.wait_for_workers();
+            ep.mark_started();
+        }
+        let with_dual = policy.broadcasts_dual();
+        for i in 0..self.n_workers {
+            self.send_parts(i, state, with_dual);
+        }
+    }
+
+    fn gather(&mut self, k: usize, d: &[usize], gate: &Gate<'_>) -> ActiveSet {
+        // One global round = every master's projected gather: endpoint m
+        // blocks until S_k ∩ fleet_m is fully pending (through
+        // disconnects, as in the single-master lockstep path). The
+        // per-endpoint cursors advance in step with the global one.
+        let prescribed = {
+            let (sets, pos) = &mut self.lockstep;
+            let s = sets
+                .get(*pos)
+                .unwrap_or_else(|| {
+                    panic!("lockstep trace exhausted at iteration {pos}", pos = *pos)
+                })
+                .clone();
+            *pos += 1;
+            s
+        };
+        for ep in &mut self.endpoints {
+            let _ = ep.gather(k, d, gate);
+        }
+        let live: Vec<usize> = prescribed.into_iter().filter(|&i| !gate.down[i]).collect();
+        ActiveSet::new(live, self.n_workers).expect("lockstep trace worker index out of range")
+    }
+
+    fn absorb(&mut self, set: &ActiveSet, view: &mut MasterView<'_>, _policy: &dyn UpdatePolicy) {
+        // Stitch each arrived worker's part payloads — ascending master
+        // order, the same derived layout the worker split by — back into
+        // the full owned slice, then refresh f_i once per worker.
+        let parts = &self.parts;
+        let endpoints = &mut self.endpoints;
+        for &i in set {
+            for (m, ranges) in &parts[i] {
+                let msg = endpoints[*m]
+                    .take_pending(i)
+                    .expect("every owning master holds the arrived worker's part");
+                scatter(&mut view.state.xs[i], ranges, &msg.x);
+                if let Some(lam) = msg.lam {
+                    scatter(&mut view.state.lams[i], ranges, &lam);
+                }
+            }
+            view.f_cache[i] =
+                view.problem.local(i).eval_with(&view.state.xs[i], &mut view.scratch.ws);
+        }
+    }
+
+    fn broadcast(&mut self, set: &ActiveSet, state: &AdmmState, policy: &dyn UpdatePolicy) {
+        let with_dual = policy.broadcasts_dual();
+        for &i in set {
+            self.send_parts(i, state, with_dual);
+        }
+    }
+}

@@ -32,7 +32,9 @@ use crate::solvers::inexact::InexactPolicy;
 use crate::util::cli::ArgParser;
 use crate::util::digest::x0_digest;
 
+use super::super::multimaster::MasterGroup;
 use super::frame::{write_frame, FrameReader};
+use super::multisocket::MultiSocketSource;
 use super::socket::{SocketSource, TransportConfig, TransportStats};
 use super::wire::WireMsg;
 
@@ -69,6 +71,18 @@ pub struct JobSpec {
     /// every worker process honours the same policy as the master's
     /// reference replay — the loopback digest comparison stays exact.
     pub inexact: InexactPolicy,
+    /// Heterogeneous per-worker policies overriding `inexact` (one entry
+    /// per worker). Shipped in the assign frame like the uniform policy;
+    /// worker `i` solves under entry `i` everywhere — trace replay,
+    /// threads, virtual time, sockets — so mixed fleets stay
+    /// bit-comparable across sources.
+    pub inexact_workers: Option<Vec<InexactPolicy>>,
+    /// Partition the coordinator across this many masters
+    /// ([`MasterGroup::contiguous`] over `shard_blocks`; both sides
+    /// derive the same group, so only the count rides the wire).
+    /// Requires `shard_blocks > 0`, `lockstep` and the default
+    /// (non-`alt`) algorithm; 1 = the classic star topology.
+    pub masters: usize,
 }
 
 impl Default for JobSpec {
@@ -93,6 +107,8 @@ impl Default for JobSpec {
             slow_ms: 0.0,
             ckpt_every: 0,
             inexact: InexactPolicy::Exact,
+            inexact_workers: None,
+            masters: 1,
         }
     }
 }
@@ -127,6 +143,17 @@ impl JobSpec {
                 Some(s) => InexactPolicy::parse(s)
                     .unwrap_or_else(|e| panic!("--inexact: {e}")),
             },
+            // Comma-joined per-worker spellings, e.g.
+            // `--inexact-workers exact,grad:3,newton:2,exact`.
+            inexact_workers: args.get("inexact-workers").map(|list| {
+                list.split(',')
+                    .map(|s| {
+                        InexactPolicy::parse(s.trim())
+                            .unwrap_or_else(|e| panic!("--inexact-workers: {e}"))
+                    })
+                    .collect()
+            }),
+            masters: args.get_parse_or("masters", d.masters),
         }
     }
 
@@ -152,6 +179,16 @@ impl JobSpec {
             ("slow_ms".to_string(), self.slow_ms.into()),
             ("ckpt_every".to_string(), self.ckpt_every.into()),
             ("inexact".to_string(), self.inexact.to_json()),
+            (
+                "inexact_workers".to_string(),
+                match &self.inexact_workers {
+                    None => JsonValue::Null,
+                    Some(v) => {
+                        JsonValue::Arr(v.iter().map(InexactPolicy::to_json).collect())
+                    }
+                },
+            ),
+            ("masters".to_string(), self.masters.into()),
         ])
     }
 
@@ -170,7 +207,7 @@ impl JobSpec {
                 .map(str::to_string)
                 .ok_or_else(|| format!("job spec field {key:?} is not a string"))
         };
-        Ok(JobSpec {
+        let spec = JobSpec {
             job_id: str_of("job_id")?,
             workers: usize_of("workers")?,
             m: usize_of("m")?,
@@ -197,7 +234,32 @@ impl JobSpec {
                 None => InexactPolicy::Exact,
                 Some(v) => InexactPolicy::from_json(v)?,
             },
-        })
+            inexact_workers: match doc.get("inexact_workers") {
+                None | Some(JsonValue::Null) => None,
+                Some(arr) => Some(
+                    arr.items()
+                        .iter()
+                        .map(InexactPolicy::from_json)
+                        .collect::<Result<Vec<_>, String>>()?,
+                ),
+            },
+            // Absent in specs from pre-multimaster peers: the classic
+            // single-coordinator star.
+            masters: match doc.get("masters") {
+                None => 1,
+                Some(v) => json_usize(v)?,
+            },
+        };
+        if let Some(v) = &spec.inexact_workers {
+            if v.len() != spec.workers {
+                return Err(format!(
+                    "inexact_workers has {} entries for {} workers",
+                    v.len(),
+                    spec.workers
+                ));
+            }
+        }
+        Ok(spec)
     }
 
     /// Rebuild the job's consensus problem — identical in every process
@@ -233,6 +295,24 @@ impl JobSpec {
     /// alternation below, long enough for `iters` iterations.
     pub fn trace(&self) -> Option<ArrivalTrace> {
         self.lockstep.then(|| roundrobin_trace(self.workers, self.iters))
+    }
+
+    /// The derived block→master split for multi-master jobs (`None` when
+    /// `masters <= 1`). Only the master *count* rides the wire — every
+    /// process derives the same contiguous group from `(shard_blocks,
+    /// masters)`, like the problem itself is derived from the seed.
+    pub fn master_group(&self) -> Result<Option<MasterGroup>, EngineError> {
+        if self.masters <= 1 {
+            return Ok(None);
+        }
+        if self.shard_blocks == 0 || !self.lockstep || self.alt {
+            return Err(EngineError::Masters(
+                "multi-master jobs require shard-blocks > 0, lockstep and the default \
+                 (non-alt) algorithm"
+                    .to_string(),
+            ));
+        }
+        MasterGroup::contiguous(self.shard_blocks, self.masters).map(Some)
     }
 }
 
@@ -279,18 +359,23 @@ fn run_session_to_done<S: crate::admm::engine::WorkerSource>(
 
 /// Replay `spec` through the in-process trace-driven source. This is the
 /// digest oracle for the loopback e2e: a socket run of the same lockstep
-/// spec must produce a bit-identical x₀.
+/// spec must produce a bit-identical x₀. Deliberately single-master
+/// whatever `spec.masters` says — the M = 1 equivalence claim is that a
+/// multi-master run matches exactly this replay.
 pub fn run_reference(spec: &JobSpec) -> Result<(SessionOutcome, u64), EngineError> {
     let problem = spec.build_problem()?;
     let arrivals = match spec.trace() {
         Some(t) => ArrivalModel::Trace(t),
         None => ArrivalModel::Full,
     };
-    let builder = Session::builder()
+    let mut builder = Session::builder()
         .problem(&problem)
         .config(spec.admm_config())
         .arrivals(&arrivals)
         .residual_stopping(true);
+    if let Some(policies) = &spec.inexact_workers {
+        builder = builder.inexact_per_worker(policies.clone());
+    }
     let mut session = if spec.alt {
         builder.policy(AltScheme { tau: spec.tau }).build()?
     } else {
@@ -314,6 +399,10 @@ pub struct JobReport {
     pub master_wait_s: f64,
     pub bytes_in: u64,
     pub bytes_out: u64,
+    /// Per-master `(bytes_in, bytes_out)` split — one entry per
+    /// coordinator, summing to the global counters (payloads partition
+    /// exactly across masters; single-master runs report one entry).
+    pub bytes_per_master: Vec<(u64, u64)>,
     /// Realized worker-disconnect windows `(worker, from, until)`.
     pub outages: Vec<(usize, usize, usize)>,
 }
@@ -329,6 +418,20 @@ impl JobReport {
             ("master_wait_s".to_string(), self.master_wait_s.into()),
             ("bytes_in".to_string(), (self.bytes_in as usize).into()),
             ("bytes_out".to_string(), (self.bytes_out as usize).into()),
+            (
+                "bytes_per_master".to_string(),
+                JsonValue::Arr(
+                    self.bytes_per_master
+                        .iter()
+                        .map(|&(i, o)| {
+                            JsonValue::Obj(vec![
+                                ("in".to_string(), (i as usize).into()),
+                                ("out".to_string(), (o as usize).into()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
             (
                 "outages".to_string(),
                 JsonValue::Arr(
@@ -351,28 +454,40 @@ impl JobReport {
 /// Run one job as the master side of a [`SocketSource`] session on an
 /// already-bound rendezvous listener. Blocks until the run stops.
 pub fn run_job(listener: TcpListener, spec: &JobSpec) -> Result<JobReport, EngineError> {
+    run_job_multi(vec![listener], spec)
+}
+
+/// Run one job across per-master rendezvous listeners — one per master of
+/// the spec's derived [`MasterGroup`] (a single listener is the classic
+/// single-coordinator path, byte-for-byte the old `run_job`). A
+/// multi-master job runs a [`MultiSocketSource`] under one session with M
+/// masked sparse masters; the digest is bit-identical to the
+/// [`run_reference`] replay of the same spec. Blocks until the run stops.
+pub fn run_job_multi(
+    listeners: Vec<TcpListener>,
+    spec: &JobSpec,
+) -> Result<JobReport, EngineError> {
     let problem = spec.build_problem()?;
+    let group = spec.master_group()?;
     let transport = TransportConfig {
         job_id: spec.job_id.clone(),
         assign_spec: spec.to_json(),
         lockstep: spec.trace(),
-        shard: problem.pattern().cloned(),
+        // Multi-master endpoints ship pre-sliced parts; only the
+        // single-master source derives owned slices from the pattern.
+        shard: if group.is_some() { None } else { problem.pattern().cloned() },
         ..TransportConfig::default()
     };
-    let source = SocketSource::from_listener(listener, spec.workers, transport)?;
-    let builder = Session::builder()
+    let mut builder = Session::builder()
         .problem(&problem)
         .config(spec.admm_config())
         .residual_stopping(true);
-    let mut session = if spec.alt {
-        builder.policy(AltScheme { tau: spec.tau }).build_typed(source)?
-    } else {
-        builder.policy(PartialBarrier { tau: spec.tau }).build_typed(source)?
-    };
-    run_session_to_done(&mut session, spec.ckpt_every)?;
-    let (outcome, source) = session.finish();
-    let stats: TransportStats = source.finish();
-    Ok(JobReport {
+    if let Some(policies) = &spec.inexact_workers {
+        builder = builder.inexact_per_worker(policies.clone());
+    }
+    let report = |outcome: &SessionOutcome,
+                  stats: &TransportStats,
+                  bytes_per_master: Vec<(u64, u64)>| JobReport {
         job_id: spec.job_id.clone(),
         iterations: outcome.iterations,
         stop: format!("{:?}", outcome.stop),
@@ -381,13 +496,69 @@ pub fn run_job(listener: TcpListener, spec: &JobSpec) -> Result<JobReport, Engin
         master_wait_s: stats.master_wait_s,
         bytes_in: stats.bytes_in,
         bytes_out: stats.bytes_out,
+        bytes_per_master,
         outages: stats.outages.iter().map(|o| (o.worker, o.from_iter, o.until_iter)).collect(),
-    })
+    };
+    match group {
+        Some(group) => {
+            let pattern = problem
+                .pattern()
+                .cloned()
+                .expect("master_group requires shard_blocks > 0");
+            let source = MultiSocketSource::from_listeners(
+                listeners,
+                spec.workers,
+                transport,
+                pattern,
+                &group,
+            )?;
+            let mut session = builder
+                .policy(PartialBarrier { tau: spec.tau })
+                .masters(group)
+                .build_typed(source)?;
+            // Per-master endpoint state does not checkpoint; multi-master
+            // jobs run straight through (ckpt_every is ignored).
+            run_session_to_done(&mut session, 0)?;
+            let (outcome, source) = session.finish();
+            let (stats, per) = source.finish();
+            Ok(report(
+                &outcome,
+                &stats,
+                per.iter().map(|s| (s.bytes_in, s.bytes_out)).collect(),
+            ))
+        }
+        None => {
+            if listeners.len() != 1 {
+                return Err(EngineError::Masters(format!(
+                    "{} listeners for a single-master job",
+                    listeners.len()
+                )));
+            }
+            let listener = listeners.into_iter().next().expect("checked above");
+            let source = SocketSource::from_listener(listener, spec.workers, transport)?;
+            let mut session = if spec.alt {
+                builder.policy(AltScheme { tau: spec.tau }).build_typed(source)?
+            } else {
+                builder.policy(PartialBarrier { tau: spec.tau }).build_typed(source)?
+            };
+            run_session_to_done(&mut session, spec.ckpt_every)?;
+            let (outcome, source) = session.finish();
+            let stats: TransportStats = source.finish();
+            let split = vec![(stats.bytes_in, stats.bytes_out)];
+            Ok(report(&outcome, &stats, split))
+        }
+    }
 }
 
 fn control_err(stream: &TcpStream, message: String) {
     let mut sink = stream;
     let _ = write_frame(&mut sink, &WireMsg::Error { message }.encode());
+}
+
+/// Comma-joined port list for the `accepted` log lines (a single port
+/// prints exactly as before, so existing scripts keep parsing).
+fn join_ports(ports: &[u16]) -> String {
+    ports.iter().map(u16::to_string).collect::<Vec<_>>().join(",")
 }
 
 /// The `admm-serve` accept loop: each control connection submits one job;
@@ -432,23 +603,45 @@ pub fn serve(listen: &str, oneshot: bool) -> Result<(), EngineError> {
                 continue;
             }
         };
-        let rendezvous = match TcpListener::bind("127.0.0.1:0") {
-            Ok(l) => l,
-            Err(e) => {
-                control_err(&stream, format!("cannot bind job port: {e}"));
-                continue;
+        // One rendezvous listener per master (1 for the classic star).
+        let rendezvous = {
+            let mut listeners = Vec::with_capacity(spec.masters.max(1));
+            let mut failed = None;
+            for _ in 0..spec.masters.max(1) {
+                match TcpListener::bind("127.0.0.1:0") {
+                    Ok(l) => listeners.push(l),
+                    Err(e) => {
+                        failed = Some(e);
+                        break;
+                    }
+                }
+            }
+            match failed {
+                None => listeners,
+                Some(e) => {
+                    control_err(&stream, format!("cannot bind job port: {e}"));
+                    continue;
+                }
             }
         };
-        let port = rendezvous.local_addr().map(|a| a.port()).unwrap_or(0);
+        let ports: Vec<u16> = rendezvous
+            .iter()
+            .map(|l| l.local_addr().map(|a| a.port()).unwrap_or(0))
+            .collect();
         {
-            let accepted = WireMsg::Accepted { job: spec.job_id.clone(), port };
+            let accepted =
+                WireMsg::Accepted { job: spec.job_id.clone(), ports: ports.clone() };
             let mut sink = &stream;
             if write_frame(&mut sink, &accepted.encode()).is_err() {
                 continue;
             }
         }
-        println!("job {} accepted: workers connect on 127.0.0.1:{port}", spec.job_id);
-        let job = move || match run_job(rendezvous, &spec) {
+        println!(
+            "job {} accepted: workers connect on 127.0.0.1:{}",
+            spec.job_id,
+            join_ports(&ports)
+        );
+        let job = move || match run_job_multi(rendezvous, &spec) {
             Ok(report) => {
                 println!(
                     "job {} done: {} iterations, stop={}, {} outage(s), \
@@ -507,8 +700,8 @@ pub fn submit(addr: &str, spec: &JobSpec) -> Result<JobReport, EngineError> {
         WireMsg::decode(&payload).map_err(EngineError::Transport)
     };
     match next(&mut reader, &mut src)? {
-        WireMsg::Accepted { job, port } => {
-            println!("job {job} accepted: workers connect on 127.0.0.1:{port}");
+        WireMsg::Accepted { job, ports } => {
+            println!("job {job} accepted: workers connect on 127.0.0.1:{}", join_ports(&ports));
         }
         WireMsg::Error { message } => {
             return Err(EngineError::Transport(format!("submit rejected: {message}")))
@@ -530,6 +723,13 @@ pub fn submit(addr: &str, spec: &JobSpec) -> Result<JobReport, EngineError> {
                 master_wait_s: field("master_wait_s").as_f64().unwrap_or(0.0),
                 bytes_in: field("bytes_in").as_f64().unwrap_or(0.0) as u64,
                 bytes_out: field("bytes_out").as_f64().unwrap_or(0.0) as u64,
+                bytes_per_master: field("bytes_per_master")
+                    .items()
+                    .iter()
+                    .filter_map(|e| {
+                        Some((e.get("in")?.as_f64()? as u64, e.get("out")?.as_f64()? as u64))
+                    })
+                    .collect(),
                 outages: field("outages")
                     .items()
                     .iter()
@@ -575,6 +775,61 @@ mod tests {
         };
         let back = JobSpec::from_json(&spec.to_json()).expect("round trip");
         assert_eq!(back, spec);
+        // Multi-master + heterogeneous per-worker policies survive too.
+        let multi = JobSpec {
+            shard_blocks: 8,
+            masters: 2,
+            inexact_workers: Some(vec![
+                InexactPolicy::Exact,
+                InexactPolicy::GradSteps { k: 3 },
+                InexactPolicy::NewtonSteps { k: 2 },
+                InexactPolicy::Exact,
+            ]),
+            ..JobSpec::default()
+        };
+        let back = JobSpec::from_json(&multi.to_json()).expect("round trip");
+        assert_eq!(back, multi);
+        assert_eq!(back.master_group().unwrap().unwrap().num_masters(), 2);
+    }
+
+    /// Specs serialized before multi-master existed (no "masters" key)
+    /// deserialize as the single-coordinator star, and a mis-sized
+    /// per-worker policy list is rejected at parse time.
+    #[test]
+    fn job_spec_without_masters_field_defaults_to_single() {
+        let spec = JobSpec::default();
+        let JsonValue::Obj(fields) = spec.to_json() else { panic!("spec json is an object") };
+        let stripped = JsonValue::Obj(
+            fields
+                .into_iter()
+                .filter(|(k, _)| k != "masters" && k != "inexact_workers")
+                .collect(),
+        );
+        let back = JobSpec::from_json(&stripped).expect("legacy spec parses");
+        assert_eq!(back.masters, 1);
+        assert_eq!(back.inexact_workers, None);
+        assert_eq!(back, spec);
+        let short = JobSpec {
+            inexact_workers: Some(vec![InexactPolicy::Exact]), // 1 entry, 4 workers
+            ..JobSpec::default()
+        };
+        assert!(JobSpec::from_json(&short.to_json()).is_err());
+    }
+
+    /// Multi-master jobs refuse the shapes the partitioned coordinator
+    /// cannot drive (dense, free-running, Algorithm 4).
+    #[test]
+    fn multimaster_job_spec_validation() {
+        let ok = JobSpec { shard_blocks: 6, masters: 3, ..JobSpec::default() };
+        assert_eq!(ok.master_group().unwrap().unwrap().num_masters(), 3);
+        let single = JobSpec::default();
+        assert!(single.master_group().unwrap().is_none());
+        let dense = JobSpec { masters: 2, ..JobSpec::default() };
+        assert!(dense.master_group().is_err());
+        let free = JobSpec { shard_blocks: 6, masters: 2, lockstep: false, ..JobSpec::default() };
+        assert!(free.master_group().is_err());
+        let alt = JobSpec { shard_blocks: 6, masters: 2, alt: true, ..JobSpec::default() };
+        assert!(alt.master_group().is_err());
     }
 
     /// Specs serialized before the inexact field existed (no "inexact"

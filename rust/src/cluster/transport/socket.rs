@@ -79,6 +79,11 @@ pub struct TransportConfig {
     /// Frame-payload bound for every connection (see
     /// [`MAX_FRAME_LEN`]).
     pub max_frame: usize,
+    /// Which worker slots this endpoint actually expects to connect
+    /// (`None` = all of them). A multi-master endpoint serves only its
+    /// own fleet — the workers owning at least one of its blocks — so
+    /// its roster wait must not block on slots that will never dial in.
+    pub expected: Option<Vec<bool>>,
 }
 
 impl Default for TransportConfig {
@@ -92,6 +97,7 @@ impl Default for TransportConfig {
             write_timeout: Duration::from_secs(30),
             hello_timeout: Duration::from_secs(10),
             max_frame: MAX_FRAME_LEN,
+            expected: None,
         }
     }
 }
@@ -116,13 +122,13 @@ pub struct TransportStats {
 /// The last broadcast a worker received — re-delivered (with the
 /// worker-held dual) when that worker reconnects.
 #[derive(Clone, Debug)]
-struct LastGo {
-    x0: Vec<f64>,
+pub(crate) struct LastGo {
+    pub(crate) x0: Vec<f64>,
     /// Master-supplied dual (Algorithm 4 broadcasts).
-    lam: Option<Vec<f64>>,
+    pub(crate) lam: Option<Vec<f64>>,
     /// The worker-held dual λ_i at broadcast time (= the value the worker
     /// computes this round against) — the `go.reseed` payload.
-    lam_state: Vec<f64>,
+    pub(crate) lam_state: Vec<f64>,
 }
 
 enum Event {
@@ -240,14 +246,51 @@ impl SocketSource {
         &self.realized
     }
 
-    /// Block until every worker slot has connected and handshaked (used
-    /// by callers that want a full roster before building the session;
-    /// [`WorkerSource::start`] also waits on its own).
+    /// Block until every expected worker slot has connected and handshaked
+    /// (used by callers that want a full roster before building the
+    /// session; [`WorkerSource::start`] also waits on its own). With a
+    /// [`TransportConfig::expected`] mask, only the masked slots — this
+    /// endpoint's fleet — are waited for.
     pub fn wait_for_workers(&mut self) {
-        while !self.connected.iter().all(|&c| c) {
+        let missing = |src: &Self| {
+            src.connected.iter().enumerate().any(|(i, &c)| {
+                !c && src.cfg.expected.as_ref().map_or(true, |e| e[i])
+            })
+        };
+        while missing(self) {
             let ev = self.events.recv().expect("acceptor alive while waiting for workers");
             self.handle_event(ev);
         }
+    }
+
+    /// Take worker `i`'s held (arrived, unabsorbed) message, if any. The
+    /// multi-master wrapper stitches per-endpoint part payloads itself
+    /// instead of going through [`WorkerSource::absorb`].
+    pub(crate) fn take_pending(&mut self, worker: usize) -> Option<WorkerMsg> {
+        self.pending[worker].take()
+    }
+
+    /// Send worker `i` an explicit part payload (a multi-master endpoint
+    /// ships only the slice runs of the blocks it owns, so the broadcast
+    /// cannot be derived from the full state here). The payload is
+    /// snapshotted for reconnect re-delivery exactly like a full `go`.
+    pub(crate) fn send_part(
+        &mut self,
+        worker: usize,
+        x0: Vec<f64>,
+        lam: Option<Vec<f64>>,
+        lam_state: Vec<f64>,
+    ) {
+        let lg = LastGo { x0, lam, lam_state };
+        self.last_go[worker] = Some(lg.clone());
+        self.send_go(worker, &lg, false);
+    }
+
+    /// Arm reconnect re-delivery without going through
+    /// [`WorkerSource::start`] (whose broadcast layout a multi-master
+    /// wrapper replaces with per-endpoint parts).
+    pub(crate) fn mark_started(&mut self) {
+        self.started = true;
     }
 
     /// Shutdown: `shutdown` frames to every live worker, stop the

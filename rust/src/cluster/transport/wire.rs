@@ -12,7 +12,7 @@
 //! | `up`       | worker → master  | `worker`, `x`, `lam?` (Alg 2)                 |
 //! | `shutdown` | master → worker  | —                                             |
 //! | `submit`   | client → serve   | `spec` (job object incl. `job_id`)            |
-//! | `accepted` | serve → client   | `job`, `port` (worker rendezvous port)        |
+//! | `accepted` | serve → client   | `job`, `port`, `ports?` (rendezvous ports)    |
 //! | `report`   | serve → client   | `job`, `report` (per-job result object)       |
 //! | `error`    | serve → client   | `message`                                     |
 //!
@@ -45,8 +45,13 @@ pub enum WireMsg {
     Shutdown,
     /// Control plane: submit a solve job to `admm-serve`.
     Submit { spec: JsonValue },
-    /// Control plane: job accepted; workers rendezvous on this port.
-    Accepted { job: String, port: u16 },
+    /// Control plane: job accepted; workers rendezvous on these ports —
+    /// one per master (multi-master jobs bind one listener per
+    /// coordinator). The wire form keeps the legacy scalar `port` field
+    /// (= `ports[0]`) so pre-multimaster peers still parse single-master
+    /// accepts, and decoding a legacy frame without `ports` yields
+    /// `vec![port]`.
+    Accepted { job: String, ports: Vec<u16> },
     /// Control plane: the finished job's report.
     Report { job: String, report: JsonValue },
     /// Control plane: the request failed.
@@ -117,11 +122,20 @@ impl WireMsg {
             ),
             WireMsg::Shutdown => obj("shutdown", Vec::new()),
             WireMsg::Submit { spec } => obj("submit", vec![("spec".to_string(), spec.clone())]),
-            WireMsg::Accepted { job, port } => obj(
+            WireMsg::Accepted { job, ports } => obj(
                 "accepted",
                 vec![
                     ("job".to_string(), JsonValue::Str(job.clone())),
-                    ("port".to_string(), (*port as usize).into()),
+                    (
+                        "port".to_string(),
+                        (ports.first().copied().unwrap_or(0) as usize).into(),
+                    ),
+                    (
+                        "ports".to_string(),
+                        JsonValue::Arr(
+                            ports.iter().map(|&p| JsonValue::from(p as usize)).collect(),
+                        ),
+                    ),
                 ],
             ),
             WireMsg::Report { job, report } => obj(
@@ -186,11 +200,29 @@ impl WireMsg {
             },
             "shutdown" => WireMsg::Shutdown,
             "submit" => WireMsg::Submit { spec: get("spec")?.clone() },
-            "accepted" => WireMsg::Accepted {
-                job: get_str("job")?,
-                port: u16::try_from(get_usize("port")?)
-                    .map_err(|_| "accepted: port out of range".to_string())?,
-            },
+            "accepted" => {
+                let port_of = |v: &JsonValue| -> Result<u16, String> {
+                    u16::try_from(json::json_usize(v)?)
+                        .map_err(|_| "accepted: port out of range".to_string())
+                };
+                let ports = match doc.get("ports") {
+                    // Legacy single-master frame: the scalar field is the
+                    // whole rendezvous story.
+                    None | Some(JsonValue::Null) => vec![port_of(get("port")?)?],
+                    Some(arr) => {
+                        let ports = arr
+                            .items()
+                            .iter()
+                            .map(port_of)
+                            .collect::<Result<Vec<u16>, String>>()?;
+                        if ports.is_empty() {
+                            return Err("accepted: empty ports list".to_string());
+                        }
+                        ports
+                    }
+                };
+                WireMsg::Accepted { job: get_str("job")?, ports }
+            }
             "report" => WireMsg::Report { job: get_str("job")?, report: get("report")?.clone() },
             "error" => WireMsg::Error { message: get_str("message")? },
             other => return Err(format!("unknown message type {other:?}")),
@@ -219,7 +251,8 @@ mod tests {
         round_trip(WireMsg::Up { worker: 1, x: vec![3.5], lam: Some(vec![-0.0]) });
         round_trip(WireMsg::Shutdown);
         round_trip(WireMsg::Submit { spec: JsonValue::Null });
-        round_trip(WireMsg::Accepted { job: "j".to_string(), port: 65535 });
+        round_trip(WireMsg::Accepted { job: "j".to_string(), ports: vec![65535] });
+        round_trip(WireMsg::Accepted { job: "j".to_string(), ports: vec![7401, 7402, 7403] });
         round_trip(WireMsg::Report { job: "j".to_string(), report: JsonValue::Obj(Vec::new()) });
         round_trip(WireMsg::Error { message: "boom \"quoted\"\n".to_string() });
     }
@@ -246,6 +279,19 @@ mod tests {
             }
             other => panic!("expected Go, got {other:?}"),
         }
+    }
+
+    /// `accepted` frames from pre-multimaster serves carry only the scalar
+    /// `port`; they decode as a single-entry ports list.
+    #[test]
+    fn legacy_accepted_frame_decodes_as_single_port() {
+        let legacy = b"{\"type\":\"accepted\",\"job\":\"j9\",\"port\":7401}";
+        assert_eq!(
+            WireMsg::decode(legacy).unwrap(),
+            WireMsg::Accepted { job: "j9".to_string(), ports: vec![7401] }
+        );
+        let empty = b"{\"type\":\"accepted\",\"job\":\"j9\",\"port\":1,\"ports\":[]}";
+        assert!(WireMsg::decode(empty).is_err());
     }
 
     #[test]

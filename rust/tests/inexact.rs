@@ -154,6 +154,86 @@ fn prox_grad_policy_is_bit_identical_across_all_three_sources() {
     assert_three_source_bit_identity(InexactPolicy::ProxGradSteps { k: 2 });
 }
 
+/// Heterogeneous per-worker policies — `exact`, `grad:3` and `newton:2`
+/// mixed across one fleet — replay bit-identically across all three
+/// sources, exactly like the uniform spellings do; and a vector of
+/// identical entries is the same run as the uniform default spelling.
+#[test]
+fn heterogeneous_policies_are_bit_identical_across_all_three_sources() {
+    let n_workers = 4;
+    let problem = lasso(815, n_workers);
+    let policies = vec![
+        InexactPolicy::Exact,
+        InexactPolicy::GradSteps { k: 3 },
+        InexactPolicy::NewtonSteps { k: 2 },
+        InexactPolicy::GradSteps { k: 3 },
+    ];
+    let admm = AdmmConfig {
+        rho: 50.0,
+        tau: 3,
+        min_arrivals: 1,
+        max_iters: 60,
+        ..Default::default()
+    };
+
+    let vcfg = ClusterConfig::builder()
+        .admm(admm.clone())
+        .delays(DelayModel::Fixed { per_worker_ms: vec![0.5, 1.0, 2.0, 4.0] })
+        .mode(ExecutionMode::VirtualTime)
+        .inexact_per_worker(policies.clone())
+        .build()
+        .expect("valid cluster config");
+    let virt = StarCluster::new(problem.clone()).run(&vcfg);
+    assert_eq!(virt.stop, StopReason::MaxIters);
+
+    // Threaded, lockstep on the virtual run's realized sets.
+    let tcfg = ClusterConfig::builder()
+        .admm(admm.clone())
+        .delays(DelayModel::None)
+        .lockstep_trace(virt.trace.clone())
+        .inexact_per_worker(policies.clone())
+        .build()
+        .expect("valid cluster config");
+    let thr = StarCluster::new(problem.clone()).run(&tcfg);
+    assert_eq!(thr.trace, virt.trace, "lockstep did not realize the prescribed sets");
+    assert_state_bit_equal(&thr.state, &virt.state);
+
+    // Trace-driven session replaying the same sets in-process.
+    let arrivals = ArrivalModel::Trace(virt.trace.clone());
+    let mut session = Session::builder()
+        .problem(&problem)
+        .config(admm.clone())
+        .inexact_per_worker(policies.clone())
+        .policy(PartialBarrier { tau: admm.tau })
+        .arrivals(&arrivals)
+        .build()
+        .expect("valid session");
+    let recs = drive(&mut session, None);
+    assert_history_bit_equal(&recs, &virt.history);
+    assert_state_bit_equal(session.state(), &virt.state);
+
+    // Uniform default spelling: vec![p; N] is the same run as inexact(p).
+    let mut uniform = Session::builder()
+        .problem(&problem)
+        .config(admm.clone())
+        .inexact(InexactPolicy::GradSteps { k: 3 })
+        .policy(PartialBarrier { tau: admm.tau })
+        .arrivals(&arrivals)
+        .build()
+        .expect("valid session");
+    drive(&mut uniform, None);
+    let mut spelled = Session::builder()
+        .problem(&problem)
+        .config(admm.clone())
+        .inexact_per_worker(vec![InexactPolicy::GradSteps { k: 3 }; n_workers])
+        .policy(PartialBarrier { tau: admm.tau })
+        .arrivals(&arrivals)
+        .build()
+        .expect("valid session");
+    drive(&mut spelled, None);
+    assert_state_bit_equal(uniform.state(), spelled.state());
+}
+
 // ---------------------------------------------------------------------------
 // 3. Checkpoint v3 round trip with live warm state
 // ---------------------------------------------------------------------------

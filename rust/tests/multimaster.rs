@@ -1,0 +1,368 @@
+//! Multi-master partitioned coordination: the acceptance suite.
+//!
+//! Pins the tentpole guarantees of sharding the coordinator itself:
+//!
+//! 1. **Bit-identity** — an M-master virtual-time run over disjoint block
+//!    groups produces bit-identical iterates (`x₀`, every `x_i`, every
+//!    `λ_i`), stop reason and realized trace to the single-master sparse
+//!    engine consuming the same per-block arrival trace, for M ∈ {1, 2, 4},
+//!    across patterns, fault plans and heterogeneous inexact policies.
+//! 2. **Checkpoint v4** — a mid-run multi-master checkpoint (group map +
+//!    per-master counters) resumes bit-identically; pre-v4 documents load
+//!    as single-master only, and every group/topology mismatch is a typed
+//!    error, never silent divergence.
+//! 3. **Transport equivalence** — an M = 2 loopback TCP run (two
+//!    rendezvous listeners, workers multiplexing their owned slices
+//!    across the owning masters) reproduces the in-process single-master
+//!    reference digest bit-for-bit, with per-master byte meters that sum
+//!    exactly to the global counters.
+
+use std::net::TcpListener;
+
+use ad_admm::admm::arrivals::ArrivalModel;
+use ad_admm::admm::session::{Checkpoint, EngineError, Session};
+use ad_admm::admm::{AdmmConfig, AdmmState};
+use ad_admm::cluster::transport::{
+    run_job_multi, run_reference, run_worker, JobSpec, WorkerClientConfig,
+};
+use ad_admm::cluster::{
+    ClusterConfig, ClusterReport, DelayModel, ExecutionMode, FaultPlan, MasterGroup, StarCluster,
+};
+use ad_admm::data::LassoInstance;
+use ad_admm::prelude::PartialBarrier;
+use ad_admm::problems::{BlockPattern, ConsensusProblem};
+use ad_admm::rng::Pcg64;
+use ad_admm::solvers::inexact::InexactPolicy;
+
+fn sharded_lasso(
+    seed: u64,
+    n_workers: usize,
+    m: usize,
+    n: usize,
+    blocks: usize,
+    owners: usize,
+) -> ConsensusProblem {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let inst = LassoInstance::synthetic(&mut rng, n_workers, m, n, 0.2, 0.1);
+    let pattern = BlockPattern::round_robin(n, blocks, n_workers, owners).unwrap();
+    inst.sharded_problem(&pattern).unwrap()
+}
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn assert_state_bits(a: &AdmmState, b: &AdmmState) {
+    assert_eq!(bits(&a.x0), bits(&b.x0), "x0 differs");
+    assert_eq!(a.xs.len(), b.xs.len());
+    for i in 0..a.xs.len() {
+        assert_eq!(bits(&a.xs[i]), bits(&b.xs[i]), "x_{i} differs");
+        assert_eq!(bits(&a.lams[i]), bits(&b.lams[i]), "lam_{i} differs");
+    }
+}
+
+fn hetero_policies(n_workers: usize) -> Vec<InexactPolicy> {
+    (0..n_workers)
+        .map(|i| match i % 3 {
+            0 => InexactPolicy::Exact,
+            1 => InexactPolicy::GradSteps { k: 3 },
+            _ => InexactPolicy::NewtonSteps { k: 2 },
+        })
+        .collect()
+}
+
+fn virtual_cfg(
+    n_workers: usize,
+    seed: u64,
+    faulted: bool,
+    hetero: bool,
+) -> ClusterConfig {
+    let mut builder = ClusterConfig::builder()
+        .admm(AdmmConfig {
+            rho: 30.0,
+            tau: 3,
+            min_arrivals: 1,
+            max_iters: 60,
+            ..Default::default()
+        })
+        .delays(DelayModel::linear_spread(n_workers, 0.5, 4.0, 0.3, seed))
+        .comm_delays(DelayModel::Fixed { per_worker_ms: vec![0.6; n_workers] })
+        .mode(ExecutionMode::VirtualTime);
+    if faulted {
+        builder = builder.fault_plan(FaultPlan::single_outage(1, 8, 20));
+    }
+    if hetero {
+        builder = builder.inexact_per_worker(hetero_policies(n_workers));
+    }
+    builder.build().expect("valid cluster config")
+}
+
+/// Tentpole pin: for M ∈ {1, 2, 4} — across block patterns, a worker
+/// outage, and heterogeneous per-worker inexact policies — the M-master
+/// virtual-time run is bit-identical to the single-master sparse engine
+/// replaying the same realized per-block arrival trace.
+#[test]
+fn multimaster_is_bit_identical_to_single_master_sparse_replay() {
+    let cases: &[(u64, usize, usize, usize, usize, bool, bool)] = &[
+        // (seed, workers, blocks, owners, masters, faulted, hetero)
+        (901, 3, 6, 2, 1, false, false),
+        (902, 4, 8, 2, 2, false, false),
+        (903, 5, 12, 3, 4, true, false),
+        (904, 4, 9, 2, 4, false, true),
+        (905, 4, 8, 2, 2, true, true),
+    ];
+    for &(seed, n_workers, blocks, owners, masters, faulted, hetero) in cases {
+        let problem = sharded_lasso(seed, n_workers, 30, 24, blocks, owners);
+        let cfg = virtual_cfg(n_workers, seed, faulted, hetero);
+        let group = MasterGroup::contiguous(blocks, masters).expect("valid group");
+        let cluster = StarCluster::new(problem.clone());
+
+        let mut sess = cluster
+            .virtual_multimaster_session(&cfg, group)
+            .expect("multimaster session builds");
+        sess.run_to_completion().unwrap();
+        let (out, _src) = sess.finish();
+
+        // The oracle: the single-master sparse engine consuming the
+        // realized trace (authoritative replay — no τ-forcing on top).
+        let mut builder = Session::builder()
+            .problem(&problem)
+            .config(cfg.admm.clone())
+            .residual_stopping(true)
+            .policy(PartialBarrier { tau: cfg.admm.tau })
+            .arrivals(&ArrivalModel::Trace(out.trace.clone()));
+        if let Some(policies) = &cfg.inexact_per_worker {
+            builder = builder.inexact_per_worker(policies.clone());
+        }
+        let mut reference = builder.build().expect("reference session builds");
+        reference.run_to_completion().unwrap();
+        let (ref_out, _) = reference.finish();
+
+        let tag = format!("seed {seed}, M = {masters}, faulted {faulted}, hetero {hetero}");
+        assert_eq!(out.trace, ref_out.trace, "replay realized a different trace ({tag})");
+        assert_state_bits(&out.state, &ref_out.state);
+        assert_eq!(out.stop, ref_out.stop, "stop reason differs ({tag})");
+        assert_eq!(out.iterations, ref_out.iterations, "iteration count differs ({tag})");
+    }
+}
+
+/// Checkpoint v4: a mid-run multi-master checkpoint — group map,
+/// per-master counters, heterogeneous policy list and all — JSON
+/// round-trips and resumes bit-identically to the uninterrupted run,
+/// virtual clock included.
+#[test]
+fn v4_checkpoint_mid_run_resume_is_bit_identical() {
+    let n_workers = 4;
+    let blocks = 8;
+    let problem = sharded_lasso(906, n_workers, 30, 24, blocks, 2);
+    let cfg = virtual_cfg(n_workers, 906, false, true);
+    let group = MasterGroup::contiguous(blocks, 2).unwrap();
+    let cluster = StarCluster::new(problem);
+
+    let mut full = cluster.virtual_multimaster_session(&cfg, group.clone()).unwrap();
+    full.run_to_completion().unwrap();
+    let (full_out, full_src) = full.finish();
+    let (_, full_clock, _) = full_src.finish();
+
+    let mut first = cluster.virtual_multimaster_session(&cfg, group.clone()).unwrap();
+    first.run_for(30).unwrap();
+    let cp = Checkpoint::from_json_str(&first.checkpoint().unwrap().to_json_string())
+        .expect("v4 document round-trips");
+    let mut resumed = cluster
+        .resume_virtual_multimaster_session(&cfg, group, &cp)
+        .expect("v4 checkpoint resumes");
+    resumed.run_to_completion().unwrap();
+    let (res_out, res_src) = resumed.finish();
+    let (_, res_clock, _) = res_src.finish();
+
+    assert_state_bits(&res_out.state, &full_out.state);
+    assert_eq!(res_out.trace, full_out.trace);
+    assert_eq!(res_out.stop, full_out.stop);
+    assert_eq!(res_clock.to_bits(), full_clock.to_bits(), "virtual clocks differ");
+}
+
+/// Every checkpoint/topology mismatch is a typed error: single-master
+/// documents refuse multi-master sessions (and vice versa), a wrong
+/// group map is rejected, and pre-v4 documents — which predate the
+/// multi-master section — load as M = 1 only.
+#[test]
+fn checkpoint_topology_mismatches_are_typed_errors() {
+    let n_workers = 4;
+    let blocks = 8;
+    let problem = sharded_lasso(907, n_workers, 30, 24, blocks, 2);
+    let cfg = virtual_cfg(n_workers, 907, false, false);
+    let group2 = MasterGroup::contiguous(blocks, 2).unwrap();
+    let group4 = MasterGroup::contiguous(blocks, 4).unwrap();
+    let cluster = StarCluster::new(problem);
+
+    // Single-master checkpoint into a multi-master resume.
+    let mut single = cluster.virtual_session(&cfg).unwrap();
+    single.run_for(5).unwrap();
+    let cp_single = single.checkpoint().unwrap();
+    let err = cluster
+        .resume_virtual_multimaster_session(&cfg, group2.clone(), &cp_single)
+        .err()
+        .expect("single-master checkpoint into multi-master session must fail");
+    assert!(matches!(err, EngineError::Checkpoint(_)), "got {err:?}");
+
+    // Multi-master checkpoint into a single-master resume.
+    let mut multi = cluster.virtual_multimaster_session(&cfg, group2.clone()).unwrap();
+    multi.run_for(5).unwrap();
+    let cp_multi = multi.checkpoint().unwrap();
+    let err = cluster
+        .resume_virtual_session(&cfg, &cp_multi)
+        .err()
+        .expect("multi-master checkpoint into single-master session must fail");
+    assert!(matches!(err, EngineError::Checkpoint(_)), "got {err:?}");
+
+    // Same document, different group map.
+    let err = cluster
+        .resume_virtual_multimaster_session(&cfg, group4, &cp_multi)
+        .err()
+        .expect("group mismatch must fail");
+    assert!(matches!(err, EngineError::Checkpoint(_)), "got {err:?}");
+
+    // Matching group resumes cleanly (the control).
+    assert!(cluster.resume_virtual_multimaster_session(&cfg, group2, &cp_multi).is_ok());
+}
+
+/// Pre-v4 documents are single-master by definition: resuming the
+/// committed v3 fixture into a session configured with a master group is
+/// a typed error naming the version gap.
+#[test]
+fn v3_fixture_refuses_multimaster_resume() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/checkpoint_v3.json");
+    let cp = Checkpoint::read_from_file(path).expect("fixture loads");
+
+    // A dim-4, 2-worker sharded problem matching the fixture's envelope,
+    // under the fixture's recorded grad:3 policy — so the resume clears
+    // every earlier check and fails precisely on the version gap.
+    let mut rng = Pcg64::seed_from_u64(908);
+    let inst = LassoInstance::synthetic(&mut rng, 2, 10, 4, 0.2, 0.1);
+    let pattern = BlockPattern::round_robin(4, 2, 2, 1).unwrap();
+    let sharded = inst.sharded_problem(&pattern).unwrap();
+    let group = MasterGroup::contiguous(2, 2).unwrap();
+
+    let err = Session::builder()
+        .problem(&sharded)
+        .config(AdmmConfig {
+            rho: 30.0,
+            inexact: InexactPolicy::GradSteps { k: 3 },
+            ..Default::default()
+        })
+        .policy(PartialBarrier { tau: 1 })
+        .arrivals(&ArrivalModel::Full)
+        .masters(group)
+        .resume(&cp)
+        .err()
+        .expect("v3 document into a multi-master session must fail");
+    match err {
+        EngineError::Checkpoint(msg) => {
+            assert!(msg.contains("predates multi-master"), "unexpected message: {msg}")
+        }
+        other => panic!("expected a checkpoint error, got {other:?}"),
+    }
+}
+
+/// The per-master byte split is exact: one `(down, up)` pair per
+/// coordinator, every pair busy, element-wise sum equal to the global
+/// meters — and a single-master run reports one pair equal to the
+/// globals.
+#[test]
+fn per_master_byte_split_sums_to_global() {
+    let n_workers = 5;
+    let blocks = 12;
+    let problem = sharded_lasso(909, n_workers, 30, 24, blocks, 3);
+    let cfg = virtual_cfg(n_workers, 909, false, false);
+    let cluster = StarCluster::new(problem);
+
+    let group = MasterGroup::contiguous(blocks, 4).unwrap();
+    let mut sess = cluster.virtual_multimaster_session(&cfg, group).unwrap();
+    sess.run_to_completion().unwrap();
+    let (out, src) = sess.finish();
+    let report = ClusterReport::from_virtual_parts(out, Vec::new(), src);
+    assert_eq!(report.net_bytes_per_master.len(), 4);
+    let (down, up) = report
+        .net_bytes_per_master
+        .iter()
+        .fold((0u64, 0u64), |(d, u), &(md, mu)| (d + md, u + mu));
+    assert_eq!((down, up), (report.net_bytes_down, report.net_bytes_up));
+    assert!(report.net_bytes_per_master.iter().all(|&(d, u)| d > 0 && u > 0));
+
+    let mut single = cluster.virtual_session(&cfg).unwrap();
+    single.run_to_completion().unwrap();
+    let (out, src) = single.finish();
+    let report = ClusterReport::from_virtual_parts(out, Vec::new(), src);
+    assert_eq!(
+        report.net_bytes_per_master,
+        vec![(report.net_bytes_down, report.net_bytes_up)]
+    );
+}
+
+fn spawn_worker(addr: String, job: &str, slot: usize) -> std::thread::JoinHandle<()> {
+    let cfg = WorkerClientConfig {
+        addr,
+        job_id: job.to_string(),
+        worker: Some(slot),
+        ..WorkerClientConfig::default()
+    };
+    std::thread::Builder::new()
+        .name(format!("mm-e2e-worker-{slot}"))
+        .spawn(move || {
+            run_worker(&cfg).expect("worker client");
+        })
+        .expect("spawn")
+}
+
+/// Transport pin: a two-master loopback job — two rendezvous listeners,
+/// four worker processes each multiplexing its owned slice across the
+/// owning masters, heterogeneous inexact policies in the assign frame —
+/// reproduces the in-process single-master reference digest bit-for-bit,
+/// and the per-master byte meters partition the global counters exactly.
+#[test]
+fn two_master_loopback_matches_single_master_reference_digest() {
+    let spec = JobSpec {
+        job_id: "mm-e2e".to_string(),
+        workers: 4,
+        m: 40,
+        n: 24,
+        iters: 30,
+        tau: 3,
+        shard_blocks: 6,
+        shard_owners: 2,
+        masters: 2,
+        inexact_workers: Some(vec![
+            InexactPolicy::Exact,
+            InexactPolicy::GradSteps { k: 3 },
+            InexactPolicy::NewtonSteps { k: 2 },
+            InexactPolicy::Exact,
+        ]),
+        ..JobSpec::default()
+    };
+    let (reference, ref_digest) = run_reference(&spec).expect("reference replay");
+
+    let l0 = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let l1 = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = format!("{},{}", l0.local_addr().unwrap(), l1.local_addr().unwrap());
+    let clients: Vec<_> =
+        (0..spec.workers).map(|i| spawn_worker(addr.clone(), &spec.job_id, i)).collect();
+    let report = run_job_multi(vec![l0, l1], &spec).expect("multi-master socket job");
+    for c in clients {
+        c.join().expect("client thread");
+    }
+
+    assert_eq!(
+        report.digest,
+        format!("{ref_digest:016x}"),
+        "two-master x0 != single-master reference x0"
+    );
+    assert_eq!(report.iterations, reference.iterations);
+    assert!(report.outages.is_empty(), "clean run realized outages: {:?}", report.outages);
+    assert_eq!(report.bytes_per_master.len(), 2);
+    let (bin, bout) = report
+        .bytes_per_master
+        .iter()
+        .fold((0u64, 0u64), |(i, o), &(mi, mo)| (i + mi, o + mo));
+    assert_eq!((bin, bout), (report.bytes_in, report.bytes_out));
+    assert!(report.bytes_per_master.iter().all(|&(i, o)| i > 0 && o > 0));
+}

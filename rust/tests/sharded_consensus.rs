@@ -29,6 +29,7 @@ use ad_admm::linalg::vecops;
 use ad_admm::prelude::PartialBarrier;
 use ad_admm::problems::{BlockError, BlockPattern, ConsensusProblem};
 use ad_admm::rng::Pcg64;
+use ad_admm::solvers::inexact::InexactPolicy;
 
 fn assert_history_bit_equal(a: &[IterRecord], b: &[IterRecord]) {
     assert_eq!(a.len(), b.len(), "history lengths differ");
@@ -578,6 +579,58 @@ fn v1_checkpoint_fixture_loads_into_the_v2_loader() {
         .resume(&cp)
         .err()
         .expect("dense checkpoint into sharded session must fail");
+    assert!(matches!(err, EngineError::Checkpoint(_)), "got {err:?}");
+}
+
+#[test]
+fn v3_checkpoint_fixture_loads_into_the_current_loader() {
+    // The committed fixture is a version-3 (inexact-policy) checkpoint of
+    // a 2-worker, dim-4 trace-driven session at k = 0 under `grad:3`,
+    // with cold per-worker warm states. The current (v4) loader must
+    // accept it and resume bit-identically to a fresh run of the same
+    // configuration — and must reject a session under a different policy.
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/checkpoint_v3.json");
+    let cp = Checkpoint::read_from_file(path).expect("fixture loads");
+    assert_eq!(cp.iteration(), 0);
+    assert_eq!(cp.n_workers(), 2);
+    assert_eq!(cp.source_kind(), "trace");
+
+    let inst = lasso_instance(911, 2, 10, 4);
+    let problem = inst.problem();
+    let cfg = AdmmConfig {
+        rho: 30.0,
+        max_iters: 25,
+        inexact: InexactPolicy::GradSteps { k: 3 },
+        ..Default::default()
+    };
+    let build = || {
+        Session::builder()
+            .problem(&problem)
+            .config(cfg.clone())
+            .policy(PartialBarrier { tau: 1 })
+            .arrivals(&ArrivalModel::Full)
+    };
+    let mut fresh = build().build().unwrap();
+    fresh.run_to_completion().unwrap();
+    let (fresh_out, _) = fresh.finish();
+
+    let mut resumed = build().resume(&cp).expect("v3 resumes into the current engine");
+    resumed.run_to_completion().unwrap();
+    let (res_out, _) = resumed.finish();
+    assert_eq!(res_out.state.x0, fresh_out.state.x0, "v3 resume diverged from fresh run");
+    assert_eq!(res_out.trace, fresh_out.trace);
+
+    // The recorded policy is a contract: an exact-policy session must
+    // refuse a grad:3 document rather than desynchronize the inner loop.
+    let exact = AdmmConfig { rho: 30.0, max_iters: 25, ..Default::default() };
+    let err = Session::builder()
+        .problem(&problem)
+        .config(exact)
+        .policy(PartialBarrier { tau: 1 })
+        .arrivals(&ArrivalModel::Full)
+        .resume(&cp)
+        .err()
+        .expect("policy mismatch must fail");
     assert!(matches!(err, EngineError::Checkpoint(_)), "got {err:?}");
 }
 
