@@ -57,6 +57,7 @@ pub fn run_alt_scheme_with_solver(
     arrivals: &ArrivalModel,
     solver: &mut dyn SubproblemSolver,
 ) -> AltSchemeOutput {
+    // ad-lint: allow(panic-free-lib): deprecated wrapper keeps its documented panic-on-invalid contract; Session::builder is the typed path
     cfg.validate(problem.num_workers()).expect("invalid AdmmConfig");
     let mut source = TraceSource::with_solver(problem.num_workers(), arrivals, solver);
     let policy = AltScheme { tau: cfg.tau };

@@ -711,6 +711,7 @@ impl<S: LegacyWorkerSource> WorkerSource for LegacySourceAdapter<S> {
         let raw = self.0.gather(k, d, gate);
         let n = self.0.n_workers();
         ActiveSet::new(raw, n)
+            // ad-lint: allow(panic-free-lib): LegacySourceAdapter's documented contract: an invalid legacy arrival set is a caller bug
             .unwrap_or_else(|e| panic!("legacy source produced an invalid arrival set: {e}"))
     }
 
@@ -791,9 +792,11 @@ pub fn run_engine(
     }
     let mut session = builder
         .build_typed(source)
+        // ad-lint: allow(panic-free-lib): deprecated run_trace_driven keeps its panic-on-invalid contract; Session::builder is the typed path
         .unwrap_or_else(|e| panic!("invalid engine configuration: {e}"));
     let stop = session
         .run_to_completion()
+        // ad-lint: allow(panic-free-lib): deprecated run_trace_driven has no error channel; Session::run_to_completion is the typed path
         .unwrap_or_else(|e| panic!("engine run failed: {e}"));
     let (outcome, _) = session.finish();
     EngineRun {
@@ -832,6 +835,7 @@ pub fn run_trace_driven(
     policy: &dyn UpdatePolicy,
     opts: &EngineOptions,
 ) -> EngineRun {
+    // ad-lint: allow(panic-free-lib): deprecated wrapper keeps its documented panic-on-invalid contract; Session::builder is the typed path
     cfg.validate(problem.num_workers()).expect("invalid AdmmConfig");
     let mut source = TraceSource::new(problem, arrivals);
     run_engine(problem, cfg, policy, &mut source, opts)

@@ -143,6 +143,7 @@ pub fn run_master_pov_with_solver(
     arrivals: &ArrivalModel,
     solver: &mut dyn SubproblemSolver,
 ) -> MasterPovOutput {
+    // ad-lint: allow(panic-free-lib): deprecated wrapper keeps its documented panic-on-invalid contract; Session::builder is the typed path
     cfg.validate(problem.num_workers()).expect("invalid AdmmConfig");
     let mut source = TraceSource::with_solver(problem.num_workers(), arrivals, solver);
     let policy = PartialBarrier { tau: cfg.tau };

@@ -1237,9 +1237,10 @@ impl<'a, S: WorkerSource + 'a> Session<'a, S> {
 
     fn set_stop(&mut self, reason: StopReason) {
         self.stop = Some(reason);
-        let reason = self.stop.as_ref().expect("just set");
-        for obs in self.observers.iter_mut() {
-            obs.on_stop(reason, &self.state);
+        if let Some(reason) = self.stop.as_ref() {
+            for obs in self.observers.iter_mut() {
+                obs.on_stop(reason, &self.state);
+            }
         }
     }
 
@@ -1314,6 +1315,7 @@ impl<'a, S: WorkerSource + 'a> Session<'a, S> {
                     // operations in the same order. The stitched global
                     // view for diagnostics is the same materialize/copy
                     // sandwich, looped per master.
+                    // ad-lint: allow(panic-free-lib): builder invariant: multi-master state is only constructed with a shard pattern
                     let p = self.shard.clone().expect("masters implies sharded");
                     if metrics_on {
                         for sp in &mut mm.per {
@@ -1351,6 +1353,7 @@ impl<'a, S: WorkerSource + 'a> Session<'a, S> {
                 } else {
                     match &mut self.sparse {
                         Some(sp) => {
+                            // ad-lint: allow(panic-free-lib): builder invariant: the sparse master is only constructed with a shard pattern
                             let p = self.shard.clone().expect("sparse implies sharded");
                             if metrics_on {
                                 sp.materialize(
@@ -1937,6 +1940,7 @@ impl<'a, S: WorkerSource + 'a> Session<'a, S> {
         // dense-path checkpoint onto the sparse path (and vice versa) is
         // bit-identical.
         if let Some(sp) = &mut self.sparse {
+            // ad-lint: allow(panic-free-lib): builder invariant: the sparse master is only constructed with a shard pattern
             let p = self.shard.clone().expect("sparse implies sharded");
             sp.rebuild(&p, &self.state, self.cfg.rho);
         }
@@ -1946,6 +1950,7 @@ impl<'a, S: WorkerSource + 'a> Session<'a, S> {
         // the common shift preserves bit-identity (same argument as the
         // single-master rebuild, per master).
         if let Some(mm) = &mut self.masters {
+            // ad-lint: allow(panic-free-lib): builder invariant: multi-master state is only constructed with a shard pattern
             let p = self.shard.clone().expect("masters implies sharded");
             for sp in &mut mm.per {
                 sp.rebuild(&p, &self.state, self.cfg.rho);
@@ -1961,10 +1966,12 @@ impl<'a, S: WorkerSource + 'a> Session<'a, S> {
     /// `metrics_every: 0`.
     fn materialize_x0(&mut self) {
         if let Some(sp) = &mut self.sparse {
+            // ad-lint: allow(panic-free-lib): builder invariant: the sparse master is only constructed with a shard pattern
             let p = self.shard.clone().expect("sparse implies sharded");
             sp.materialize(self.problem, &mut self.state.x0, self.cfg.rho, self.cfg.gamma, &p);
         }
         if let Some(mm) = &mut self.masters {
+            // ad-lint: allow(panic-free-lib): builder invariant: multi-master state is only constructed with a shard pattern
             let p = self.shard.clone().expect("masters implies sharded");
             for sp in &mut mm.per {
                 sp.materialize(

@@ -1,0 +1,74 @@
+//! Typed diagnostics for the `ad-lint` pass.
+
+use std::fmt;
+
+/// How bad a finding is. Every shipped rule currently emits [`Severity::Error`];
+/// `Warning` exists so future advisory rules don't need a schema change.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    Error,
+    Warning,
+}
+
+impl Severity {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Warning => "warning",
+        }
+    }
+}
+
+/// One finding, anchored to a `file:line:col` position.
+///
+/// A diagnostic starts unsuppressed; the suppression scanner flips
+/// [`Diagnostic::suppressed`] (and records the justification) when a
+/// `// ad-lint: allow(rule-id): <reason>` comment covers the position.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    /// Repo-relative path with forward slashes (e.g. `rust/src/admm/engine.rs`).
+    pub file: String,
+    /// 1-based line.
+    pub line: u32,
+    /// 1-based column (characters).
+    pub col: u32,
+    /// Stable rule id (e.g. `wallclock`); `parse` and `suppression` are
+    /// reserved ids for lexer failures and malformed allow-comments.
+    pub rule: &'static str,
+    pub severity: Severity,
+    pub message: String,
+    /// True once an allow-comment with a reason covers this finding.
+    pub suppressed: bool,
+    /// The reason text from the covering allow-comment, if suppressed.
+    pub reason: Option<String>,
+}
+
+impl Diagnostic {
+    pub fn error(file: &str, line: u32, col: u32, rule: &'static str, message: String) -> Self {
+        Diagnostic {
+            file: file.to_string(),
+            line,
+            col,
+            rule,
+            severity: Severity::Error,
+            message,
+            suppressed: false,
+            reason: None,
+        }
+    }
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}:{}: {} [{}] {}",
+            self.file,
+            self.line,
+            self.col,
+            self.severity.as_str(),
+            self.rule,
+            self.message
+        )
+    }
+}

@@ -1,0 +1,427 @@
+//! A token-level Rust lexer for the `ad-lint` static-analysis pass.
+//!
+//! This is deliberately **not** a parser: the rules in [`crate::analysis::rules`]
+//! operate on a flat token stream plus a little bracket/attribute context, which
+//! is enough to enforce the repo's determinism and panic-freedom conventions
+//! without pulling in `syn` (the crate is dependency-free by policy).
+//!
+//! The lexer understands the lexical structure that matters for *not lying*
+//! about code: line comments, nested block comments, string / raw-string /
+//! byte-string / char literals, lifetimes, numeric literals (with float
+//! classification), and multi-character operators (`==`, `!=`, `::`, …).
+//! Comment and string contents are preserved verbatim in the token text so the
+//! suppression scanner can read `// ad-lint: allow(...)` comments, but rules
+//! that look for identifiers never match inside them.
+
+/// Lexical class of a [`Token`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokenKind {
+    /// Identifier or keyword (including raw identifiers like `r#match`).
+    Ident,
+    /// A lifetime such as `'a` (including `'static`).
+    Lifetime,
+    /// Integer literal (`42`, `0xFF_u8`, `1_000`).
+    Int,
+    /// Float literal (`1.0`, `1.`, `1e-3`, `2f64`).
+    Float,
+    /// String-like literal: `"…"`, `r"…"`, `r#"…"#`, `b"…"`, `br#"…"#`.
+    Str,
+    /// Character or byte literal: `'x'`, `'\n'`, `b'x'`.
+    Char,
+    /// Punctuation / operator, possibly multi-character (`==`, `->`, `::`).
+    Punct,
+    /// `// …` comment (text includes the slashes, excludes the newline).
+    LineComment,
+    /// `/* … */` comment, nesting handled (text includes the delimiters).
+    BlockComment,
+}
+
+/// One lexed token with its 1-based source position.
+#[derive(Debug, Clone, Copy)]
+pub struct Token<'a> {
+    pub kind: TokenKind,
+    /// Verbatim source slice, including delimiters for strings and comments.
+    pub text: &'a str,
+    /// 1-based line of the token's first character.
+    pub line: u32,
+    /// 1-based column (in characters) of the token's first character.
+    pub col: u32,
+}
+
+impl<'a> Token<'a> {
+    /// True for comment tokens, which most rules skip.
+    pub fn is_comment(&self) -> bool {
+        matches!(self.kind, TokenKind::LineComment | TokenKind::BlockComment)
+    }
+}
+
+/// A lexing failure (unterminated literal or comment). The analyzer surfaces
+/// this as a `parse` diagnostic rather than aborting the whole run.
+#[derive(Debug, Clone)]
+pub struct LexError {
+    pub line: u32,
+    pub col: u32,
+    pub message: String,
+}
+
+struct Cursor<'a> {
+    src: &'a str,
+    /// Byte offset into `src`.
+    pos: usize,
+    line: u32,
+    col: u32,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(src: &'a str) -> Self {
+        Cursor { src, pos: 0, line: 1, col: 1 }
+    }
+
+    fn peek(&self) -> Option<char> {
+        self.src[self.pos..].chars().next()
+    }
+
+    fn peek2(&self) -> Option<char> {
+        let mut it = self.src[self.pos..].chars();
+        it.next();
+        it.next()
+    }
+
+    fn peek_at(&self, n: usize) -> Option<char> {
+        self.src[self.pos..].chars().nth(n)
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.peek()?;
+        self.pos += c.len_utf8();
+        if c == '\n' {
+            self.line += 1;
+            self.col = 1;
+        } else {
+            self.col += 1;
+        }
+        Some(c)
+    }
+
+    fn starts_with(&self, s: &str) -> bool {
+        self.src[self.pos..].starts_with(s)
+    }
+
+    fn err(&self, message: &str) -> LexError {
+        LexError { line: self.line, col: self.col, message: message.to_string() }
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c == '_' || c.is_alphabetic()
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c == '_' || c.is_alphanumeric()
+}
+
+/// Lex `src` into a flat token stream. Whitespace is dropped; comments are
+/// kept as tokens so the suppression scanner can see them.
+pub fn lex(src: &str) -> Result<Vec<Token<'_>>, LexError> {
+    let mut cur = Cursor::new(src);
+    let mut out = Vec::new();
+    while let Some(c) = cur.peek() {
+        if c.is_whitespace() {
+            cur.bump();
+            continue;
+        }
+        let (start, line, col) = (cur.pos, cur.line, cur.col);
+        let kind = if cur.starts_with("//") {
+            lex_line_comment(&mut cur)
+        } else if cur.starts_with("/*") {
+            lex_block_comment(&mut cur)?
+        } else if c == '"' {
+            lex_string(&mut cur)?
+        } else if c == '\'' {
+            lex_quote(&mut cur)?
+        } else if (c == 'r' || c == 'b') && starts_raw_or_byte_literal(&cur) {
+            lex_prefixed_literal(&mut cur)?
+        } else if is_ident_start(c) {
+            lex_ident(&mut cur)
+        } else if c.is_ascii_digit() {
+            lex_number(&mut cur)
+        } else {
+            lex_punct(&mut cur)
+        };
+        out.push(Token { kind, text: &src[start..cur.pos], line, col });
+    }
+    Ok(out)
+}
+
+fn lex_line_comment(cur: &mut Cursor) -> TokenKind {
+    while let Some(c) = cur.peek() {
+        if c == '\n' {
+            break;
+        }
+        cur.bump();
+    }
+    TokenKind::LineComment
+}
+
+fn lex_block_comment(cur: &mut Cursor) -> Result<TokenKind, LexError> {
+    let open = cur.err("unterminated block comment");
+    cur.bump(); // '/'
+    cur.bump(); // '*'
+    let mut depth = 1usize;
+    while depth > 0 {
+        if cur.starts_with("/*") {
+            cur.bump();
+            cur.bump();
+            depth += 1;
+        } else if cur.starts_with("*/") {
+            cur.bump();
+            cur.bump();
+            depth -= 1;
+        } else if cur.bump().is_none() {
+            return Err(open);
+        }
+    }
+    Ok(TokenKind::BlockComment)
+}
+
+/// Consume a `"…"` string body (cursor on the opening quote).
+fn lex_string(cur: &mut Cursor) -> Result<TokenKind, LexError> {
+    let open = cur.err("unterminated string literal");
+    cur.bump(); // opening '"'
+    loop {
+        match cur.bump() {
+            None => return Err(open),
+            Some('\\') => {
+                // Escape: consume the next char blindly (covers \" and \\).
+                cur.bump();
+            }
+            Some('"') => return Ok(TokenKind::Str),
+            Some(_) => {}
+        }
+    }
+}
+
+/// Does the cursor sit on `r"`, `r#"`, `r#ident`, `b"`, `b'`, `br"`, `br#"`?
+/// (Plain idents like `radius` or `bytes` must fall through to `lex_ident`.)
+fn starts_raw_or_byte_literal(cur: &Cursor) -> bool {
+    let rest = &cur.src[cur.pos..];
+    for prefix in ["r\"", "r#", "b\"", "b'", "br\"", "br#"] {
+        if rest.starts_with(prefix) {
+            return true;
+        }
+    }
+    false
+}
+
+/// Lex a literal starting with `r`/`b`/`br`: raw strings, byte strings, byte
+/// chars, and raw identifiers (`r#match`).
+fn lex_prefixed_literal(cur: &mut Cursor) -> Result<TokenKind, LexError> {
+    if cur.peek() == Some('b') {
+        cur.bump();
+        match cur.peek() {
+            Some('\'') => return lex_quote_char_only(cur),
+            Some('"') => return lex_string(cur),
+            Some('r') => {
+                cur.bump();
+                return lex_raw_string(cur);
+            }
+            _ => return Ok(lex_ident_rest(cur)),
+        }
+    }
+    // 'r' prefix: raw string or raw identifier.
+    cur.bump(); // 'r'
+    match cur.peek() {
+        Some('"') | Some('#') => {
+            // `r#ident` (raw identifier) vs `r#"…"#` (raw string): look past
+            // the hashes for a quote.
+            let mut n = 0usize;
+            while cur.peek_at(n) == Some('#') {
+                n += 1;
+            }
+            if cur.peek_at(n) == Some('"') {
+                lex_raw_string(cur)
+            } else {
+                // Raw identifier: consume '#' then the ident body.
+                cur.bump();
+                Ok(lex_ident_rest(cur))
+            }
+        }
+        _ => Ok(lex_ident_rest(cur)),
+    }
+}
+
+/// Consume `#…#"…"#…#` with the cursor on the first `#` or the quote.
+fn lex_raw_string(cur: &mut Cursor) -> Result<TokenKind, LexError> {
+    let open = cur.err("unterminated raw string literal");
+    let mut hashes = 0usize;
+    while cur.peek() == Some('#') {
+        cur.bump();
+        hashes += 1;
+    }
+    if cur.peek() != Some('"') {
+        return Err(open);
+    }
+    cur.bump(); // opening quote
+    let closer: String = std::iter::once('"').chain(std::iter::repeat('#').take(hashes)).collect();
+    loop {
+        if cur.starts_with(&closer) {
+            for _ in 0..closer.len() {
+                cur.bump();
+            }
+            return Ok(TokenKind::Str);
+        }
+        if cur.bump().is_none() {
+            return Err(open);
+        }
+    }
+}
+
+/// Disambiguate `'a` (lifetime) from `'x'` (char literal); cursor on `'`.
+fn lex_quote(cur: &mut Cursor) -> Result<TokenKind, LexError> {
+    // Escaped char (`'\n'`) is always a char literal.
+    if cur.peek2() == Some('\\') {
+        return lex_quote_char_only(cur);
+    }
+    // `'ident` followed by another `'` is a char ('a'); otherwise a lifetime.
+    if cur.peek2().map(is_ident_start).unwrap_or(false) {
+        let mut n = 2usize;
+        while cur.peek_at(n).map(is_ident_continue).unwrap_or(false) {
+            n += 1;
+        }
+        if cur.peek_at(n) == Some('\'') {
+            return lex_quote_char_only(cur);
+        }
+        // Lifetime: consume the quote + ident run.
+        for _ in 0..n {
+            cur.bump();
+        }
+        return Ok(TokenKind::Lifetime);
+    }
+    // Anything else (`'('`, `'"'`, `' '`) is a char literal.
+    lex_quote_char_only(cur)
+}
+
+/// Consume a char/byte literal unconditionally; cursor on the opening `'`.
+fn lex_quote_char_only(cur: &mut Cursor) -> Result<TokenKind, LexError> {
+    let open = cur.err("unterminated char literal");
+    cur.bump(); // opening '\''
+    loop {
+        match cur.bump() {
+            None => return Err(open),
+            Some('\\') => {
+                cur.bump();
+            }
+            Some('\'') => return Ok(TokenKind::Char),
+            Some(_) => {}
+        }
+    }
+}
+
+fn lex_ident(cur: &mut Cursor) -> TokenKind {
+    lex_ident_rest(cur)
+}
+
+fn lex_ident_rest(cur: &mut Cursor) -> TokenKind {
+    while cur.peek().map(is_ident_continue).unwrap_or(false) {
+        cur.bump();
+    }
+    TokenKind::Ident
+}
+
+fn lex_number(cur: &mut Cursor) -> TokenKind {
+    // Hex / octal / binary: integers only.
+    if cur.peek() == Some('0') && matches!(cur.peek2(), Some('x') | Some('o') | Some('b')) {
+        cur.bump();
+        cur.bump();
+        while cur.peek().map(|c| c.is_ascii_hexdigit() || c == '_').unwrap_or(false) {
+            cur.bump();
+        }
+        consume_suffix(cur);
+        return TokenKind::Int;
+    }
+    let mut is_float = false;
+    digits(cur);
+    // Fractional part: `1.5`, `1.` — but not `1..2` (range) or `1.max()`.
+    if cur.peek() == Some('.') {
+        match cur.peek2() {
+            Some(c) if c.is_ascii_digit() => {
+                cur.bump();
+                digits(cur);
+                is_float = true;
+            }
+            Some('.') => {}                              // range `1..`
+            Some(c) if is_ident_start(c) => {}           // method call `1.max(2)`
+            _ => {
+                // Trailing-dot float: `1.` then `)`/`,`/whitespace/EOF.
+                cur.bump();
+                is_float = true;
+            }
+        }
+    }
+    // Exponent: `1e9`, `1.5e-3`.
+    if matches!(cur.peek(), Some('e') | Some('E')) {
+        let sign = matches!(cur.peek2(), Some('+') | Some('-'));
+        let digit_at = if sign { 2 } else { 1 };
+        if cur.peek_at(digit_at).map(|c| c.is_ascii_digit()).unwrap_or(false) {
+            cur.bump(); // e
+            if sign {
+                cur.bump();
+            }
+            digits(cur);
+            is_float = true;
+        }
+    }
+    // Type suffix (`f64`, `u32`, `usize`): a float suffix makes it a float.
+    let suffix = consume_suffix(cur);
+    if suffix == "f32" || suffix == "f64" {
+        is_float = true;
+    }
+    if is_float {
+        TokenKind::Float
+    } else {
+        TokenKind::Int
+    }
+}
+
+fn digits(cur: &mut Cursor) {
+    while cur.peek().map(|c| c.is_ascii_digit() || c == '_').unwrap_or(false) {
+        cur.bump();
+    }
+}
+
+fn consume_suffix<'a>(cur: &mut Cursor<'a>) -> &'a str {
+    let start = cur.pos;
+    while cur.peek().map(is_ident_continue).unwrap_or(false) {
+        cur.bump();
+    }
+    &cur.src[start..cur.pos]
+}
+
+/// Multi-character operators, longest first. Only the ones that change how a
+/// rule reads the stream matter (`==` vs `=` `=`); the rest ride along so the
+/// token text stays faithful to the source.
+const PUNCT3: [&str; 4] = ["..=", "<<=", ">>=", "..."];
+const PUNCT2: [&str; 19] = [
+    "::", "->", "=>", "==", "!=", "<=", ">=", "&&", "||", "<<", ">>", "+=", "-=", "*=", "/=",
+    "%=", "^=", "&=", "|=",
+];
+
+fn lex_punct(cur: &mut Cursor) -> TokenKind {
+    for p in PUNCT3 {
+        if cur.starts_with(p) {
+            for _ in 0..p.len() {
+                cur.bump();
+            }
+            return TokenKind::Punct;
+        }
+    }
+    for p in PUNCT2 {
+        if cur.starts_with(p) {
+            cur.bump();
+            cur.bump();
+            return TokenKind::Punct;
+        }
+    }
+    cur.bump();
+    TokenKind::Punct
+}

@@ -1,0 +1,347 @@
+//! `ad-lint`: the repo's dependency-free static-analysis pass.
+//!
+//! The paper's caveat — "slightly modifying the implementation … can
+//! jeopardize the algorithm convergence" — is encoded here as mechanical
+//! rules over a token-level lex of the tree (no `syn`, no external crates):
+//! no wall-clock in virtual-time paths, no unordered-map iteration in
+//! bit-identical layers, no float `==` against non-zero literals, no
+//! panics in library code, the deprecated driver surface quarantined, and
+//! the README's wire/checkpoint claims checked against the code they
+//! describe. See [`rules`] for the registry and the README "Static
+//! analysis" section for the narrative.
+//!
+//! Findings can be suppressed inline with a justified allow-comment, e.g.
+//! `// ad-lint: allow(wallclock): OS-thread worker is real time by design`
+//! on the offending line or the line above; an allow without a reason, with
+//! an unknown rule id, or matching no finding is itself an error, so the
+//! suppression inventory stays auditable (`ad_admm_lint --json` lists every
+//! suppressed finding with its reason).
+//!
+//! Entry points: [`load_tree`] + [`analyze`] (library), the `ad_admm_lint`
+//! binary (CLI, human and `--json` output), and the `analysis_tree_clean`
+//! tier-1 test that gates the repo itself.
+
+pub mod diag;
+pub mod lexer;
+pub mod rules;
+pub mod suppress;
+
+use std::fs;
+use std::io;
+use std::path::Path;
+
+use crate::bench::json::JsonValue;
+use diag::{Diagnostic, Severity};
+use lexer::{lex, Token, TokenKind};
+use rules::{registry, FileCtx, Rule};
+
+/// One file handed to the analyzer: repo-relative forward-slash path plus
+/// full text. Non-Rust inputs (README.md) only participate in cross-file
+/// rules.
+#[derive(Debug, Clone)]
+pub struct SourceFile {
+    pub path: String,
+    pub text: String,
+}
+
+impl SourceFile {
+    pub fn new(path: &str, text: &str) -> Self {
+        SourceFile { path: path.to_string(), text: text.to_string() }
+    }
+}
+
+/// The result of one analyzer run.
+pub struct AnalysisReport {
+    pub files_scanned: usize,
+    /// `(rule id, one-line summary)` for every registered rule.
+    pub rules: Vec<(&'static str, &'static str)>,
+    /// All findings, suppressed ones included, sorted by position.
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl AnalysisReport {
+    /// Unsuppressed errors — the count that gates CI.
+    pub fn errors(&self) -> usize {
+        self.diagnostics
+            .iter()
+            .filter(|d| !d.suppressed && d.severity == Severity::Error)
+            .count()
+    }
+
+    pub fn suppressed(&self) -> usize {
+        self.diagnostics.iter().filter(|d| d.suppressed).count()
+    }
+
+    /// `bench_diff`-style one-liner for job logs.
+    pub fn summary_line(&self) -> String {
+        format!(
+            "ad-lint: {} files scanned, {} rules, {} errors ({} suppressed)",
+            self.files_scanned,
+            self.rules.len(),
+            self.errors(),
+            self.suppressed()
+        )
+    }
+
+    /// Machine-readable report (schema 1), serialized with the in-repo JSON
+    /// writer so CI artifacts round-trip through `bench::json::parse`.
+    pub fn to_json(&self) -> JsonValue {
+        let rules = self
+            .rules
+            .iter()
+            .map(|(id, summary)| {
+                JsonValue::Obj(vec![
+                    ("id".to_string(), JsonValue::Str(id.to_string())),
+                    ("summary".to_string(), JsonValue::Str(summary.to_string())),
+                ])
+            })
+            .collect();
+        let diags = self
+            .diagnostics
+            .iter()
+            .map(|d| {
+                let mut fields = vec![
+                    ("file".to_string(), JsonValue::Str(d.file.clone())),
+                    ("line".to_string(), JsonValue::Num(d.line as f64)),
+                    ("col".to_string(), JsonValue::Num(d.col as f64)),
+                    ("rule".to_string(), JsonValue::Str(d.rule.to_string())),
+                    (
+                        "severity".to_string(),
+                        JsonValue::Str(d.severity.as_str().to_string()),
+                    ),
+                    ("suppressed".to_string(), JsonValue::Bool(d.suppressed)),
+                    ("message".to_string(), JsonValue::Str(d.message.clone())),
+                ];
+                if let Some(reason) = &d.reason {
+                    fields.push(("reason".to_string(), JsonValue::Str(reason.clone())));
+                }
+                JsonValue::Obj(fields)
+            })
+            .collect();
+        JsonValue::Obj(vec![
+            ("schema".to_string(), JsonValue::Num(1.0)),
+            ("tool".to_string(), JsonValue::Str("ad-lint".to_string())),
+            ("files_scanned".to_string(), JsonValue::Num(self.files_scanned as f64)),
+            ("rules".to_string(), JsonValue::Arr(rules)),
+            ("errors".to_string(), JsonValue::Num(self.errors() as f64)),
+            ("suppressed".to_string(), JsonValue::Num(self.suppressed() as f64)),
+            ("diagnostics".to_string(), JsonValue::Arr(diags)),
+        ])
+    }
+}
+
+/// Run every registered rule over `files` (paths must be repo-relative with
+/// forward slashes). Pure function of its input — the CLI and tests both call
+/// this; [`load_tree`] builds the standard input set.
+pub fn analyze(files: &[SourceFile]) -> AnalysisReport {
+    let rules = registry();
+    let known_ids: Vec<&'static str> = rules.iter().map(|r| r.id()).collect();
+    let mut diagnostics = Vec::new();
+
+    for file in files {
+        if !file.path.ends_with(".rs") {
+            continue; // non-Rust inputs participate only in check_tree
+        }
+        let tokens = match lex(&file.text) {
+            Ok(t) => t,
+            Err(e) => {
+                diagnostics.push(Diagnostic::error(
+                    &file.path,
+                    e.line,
+                    e.col,
+                    "parse",
+                    format!("lexer failure: {}", e.message),
+                ));
+                continue;
+            }
+        };
+        let mut file_diags = Vec::new();
+        let allows = suppress::scan_allows(&file.path, &tokens, &mut file_diags);
+        let regions = test_regions(&tokens);
+        let ctx = FileCtx { path: &file.path, tokens: &tokens, test_regions: &regions };
+        for rule in &rules {
+            if rule.applies_to(&file.path) {
+                rule.check_file(&ctx, &mut file_diags);
+            }
+        }
+        for a in &allows {
+            if !known_ids.contains(&a.rule.as_str()) {
+                file_diags.push(Diagnostic::error(
+                    &file.path,
+                    a.line,
+                    a.col,
+                    "suppression",
+                    format!("ad-lint: allow({}) names a rule this build does not know", a.rule),
+                ));
+            }
+        }
+        let used = suppress::apply_allows(&allows, &mut file_diags);
+        for (a, was_used) in allows.iter().zip(used) {
+            let known = known_ids.contains(&a.rule.as_str());
+            if known && !was_used && !a.reason.is_empty() {
+                file_diags.push(Diagnostic::error(
+                    &file.path,
+                    a.line,
+                    a.col,
+                    "suppression",
+                    format!(
+                        "stale ad-lint: allow({}) — no matching finding on this or \
+                         the next line; delete it",
+                        a.rule
+                    ),
+                ));
+            }
+        }
+        diagnostics.extend(file_diags);
+    }
+
+    for rule in &rules {
+        rule.check_tree(files, &mut diagnostics);
+    }
+
+    diagnostics.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.col, a.rule).cmp(&(b.file.as_str(), b.line, b.col, b.rule))
+    });
+
+    AnalysisReport {
+        files_scanned: files.len(),
+        rules: rules.iter().map(|r| (r.id(), r.summary())).collect(),
+        diagnostics,
+    }
+}
+
+/// Load the standard scan set relative to the repo root: `rust/src/**`
+/// (recursive), `rust/tests/*.rs`, `rust/benches/*.rs`, `examples/*.rs`
+/// (one level each — fixture subdirectories are deliberately not scanned),
+/// and `README.md` for the cross-file rules. Deterministically sorted.
+pub fn load_tree(root: &Path) -> io::Result<Vec<SourceFile>> {
+    let mut files = Vec::new();
+    collect_rs(root, Path::new("rust/src"), true, &mut files)?;
+    collect_rs(root, Path::new("rust/tests"), false, &mut files)?;
+    collect_rs(root, Path::new("rust/benches"), false, &mut files)?;
+    collect_rs(root, Path::new("examples"), false, &mut files)?;
+    let readme = root.join("README.md");
+    if readme.is_file() {
+        files.push(SourceFile { path: "README.md".to_string(), text: fs::read_to_string(readme)? });
+    }
+    files.sort_by(|a, b| a.path.cmp(&b.path));
+    Ok(files)
+}
+
+fn collect_rs(
+    root: &Path,
+    rel: &Path,
+    recursive: bool,
+    out: &mut Vec<SourceFile>,
+) -> io::Result<()> {
+    let dir = root.join(rel);
+    if !dir.is_dir() {
+        return Ok(());
+    }
+    let mut entries: Vec<_> = fs::read_dir(&dir)?.collect::<Result<_, _>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for entry in entries {
+        let path = entry.path();
+        let name = entry.file_name();
+        let rel_child = rel.join(&name);
+        if path.is_dir() {
+            if recursive {
+                collect_rs(root, &rel_child, true, out)?;
+            }
+        } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+            let rel_str = rel_child.to_string_lossy().replace('\\', "/");
+            out.push(SourceFile { path: rel_str, text: fs::read_to_string(&path)? });
+        }
+    }
+    Ok(())
+}
+
+/// 1-based inclusive line ranges covered by `#[cfg(test)]` items and
+/// `#[test]` functions, computed by bracket/brace matching on the token
+/// stream. Rules that only bind library code (`panic-free-lib`, `wallclock`)
+/// skip findings inside these ranges.
+pub fn test_regions(tokens: &[Token<'_>]) -> Vec<(u32, u32)> {
+    let toks: Vec<_> = tokens.iter().filter(|t| !t.is_comment()).collect();
+    let mut regions = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if !(toks[i].kind == TokenKind::Punct
+            && toks[i].text == "#"
+            && toks.get(i + 1).is_some_and(|t| t.text == "["))
+        {
+            i += 1;
+            continue;
+        }
+        let attr_start_line = toks[i].line;
+        let (attr_idents, after_attr) = read_attr(&toks, i + 1);
+        // `#[test]` or `#[cfg(test)]` / `#[cfg(all(test, …))]` — but not
+        // `#[cfg(not(test))]` (which guards *non*-test builds) and not
+        // `#[cfg_attr(test, …)]` (a conditional attribute, not a region).
+        let is_test_attr = match attr_idents.first() {
+            Some(&"test") => true,
+            Some(&"cfg") => {
+                attr_idents.iter().any(|s| *s == "test")
+                    && !attr_idents.iter().any(|s| *s == "not")
+            }
+            _ => false,
+        };
+        if !is_test_attr {
+            i = after_attr;
+            continue;
+        }
+        // Skip any further attributes between this one and the item.
+        let mut j = after_attr;
+        while j < toks.len()
+            && toks[j].text == "#"
+            && toks.get(j + 1).is_some_and(|t| t.text == "[")
+        {
+            j = read_attr(&toks, j + 1).1;
+        }
+        // Item body: either `… ;` (no body) or `… { … }` (brace-matched).
+        let mut depth = 0usize;
+        let mut end_line = toks.get(j).map(|t| t.line).unwrap_or(attr_start_line);
+        while j < toks.len() {
+            let t = toks[j];
+            end_line = t.line;
+            match t.text {
+                "{" if t.kind == TokenKind::Punct => depth += 1,
+                "}" if t.kind == TokenKind::Punct => {
+                    depth = depth.saturating_sub(1);
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                ";" if depth == 0 && t.kind == TokenKind::Punct => break,
+                _ => {}
+            }
+            j += 1;
+        }
+        regions.push((attr_start_line, end_line));
+        i = j + 1;
+    }
+    regions
+}
+
+/// Read an attribute starting at the `[` token index; returns the ident texts
+/// inside it and the index just past the closing `]`.
+fn read_attr<'a>(toks: &[&Token<'a>], open: usize) -> (Vec<&'a str>, usize) {
+    let mut idents = Vec::new();
+    let mut depth = 0usize;
+    let mut k = open;
+    while k < toks.len() {
+        let t = toks[k];
+        match (t.kind, t.text) {
+            (TokenKind::Punct, "[") => depth += 1,
+            (TokenKind::Punct, "]") => {
+                depth -= 1;
+                if depth == 0 {
+                    return (idents, k + 1);
+                }
+            }
+            (TokenKind::Ident, s) => idents.push(s),
+            _ => {}
+        }
+        k += 1;
+    }
+    (idents, k)
+}

@@ -1,0 +1,74 @@
+//! `deprecated-surface`: the legacy free-function drivers stay quarantined.
+//!
+//! PR 5 migrated every in-tree caller off the deprecated pre-`Session` entry
+//! points by hand; this rule mechanizes that sweep so the surface cannot grow
+//! back. The deprecated names may appear only in their defining modules, the
+//! prelude re-export, and the allowlisted pin-test modules that exist
+//! precisely to keep the legacy paths bit-identical
+//! (`testkit/drivers.rs`, `tests/engine_equivalence.rs`,
+//! `tests/session_api.rs`). Everything else goes through
+//! `Session::builder()`.
+
+use super::{under, FileCtx, Rule};
+use crate::analysis::diag::Diagnostic;
+use crate::analysis::lexer::TokenKind;
+
+pub struct DeprecatedSurface;
+
+/// The `#[deprecated]` items as of PR 10 (`LegacySourceAdapter` is *not*
+/// deprecated — it is the sanctioned migration shim).
+const DEPRECATED: [&str; 8] = [
+    "run_sync_admm",
+    "run_sync_admm_with_solver",
+    "run_master_pov",
+    "run_master_pov_with_solver",
+    "run_alt_scheme",
+    "run_alt_scheme_with_solver",
+    "run_trace_driven",
+    "LegacyWorkerSource",
+];
+
+const ALLOWED: [&str; 8] = [
+    "rust/src/admm/sync.rs",
+    "rust/src/admm/master_pov.rs",
+    "rust/src/admm/alt_scheme.rs",
+    "rust/src/admm/engine.rs",
+    "rust/src/lib.rs",
+    "rust/src/testkit/drivers.rs",
+    "rust/tests/engine_equivalence.rs",
+    "rust/tests/session_api.rs",
+];
+
+impl Rule for DeprecatedSurface {
+    fn id(&self) -> &'static str {
+        "deprecated-surface"
+    }
+
+    fn summary(&self) -> &'static str {
+        "deprecated free-function drivers only in defining modules and \
+         allowlisted pin tests (use Session::builder())"
+    }
+
+    fn applies_to(&self, path: &str) -> bool {
+        path.ends_with(".rs") && !ALLOWED.iter().any(|a| under(path, a))
+    }
+
+    fn check_file(&self, ctx: &FileCtx<'_>, out: &mut Vec<Diagnostic>) {
+        for t in ctx.tokens {
+            if t.kind == TokenKind::Ident && DEPRECATED.contains(&t.text) {
+                out.push(Diagnostic::error(
+                    ctx.path,
+                    t.line,
+                    t.col,
+                    self.id(),
+                    format!(
+                        "`{}` is a deprecated pre-Session driver; use \
+                         Session::builder() (pin tests live in the allowlisted \
+                         modules only)",
+                        t.text
+                    ),
+                ));
+            }
+        }
+    }
+}

@@ -1,0 +1,238 @@
+//! `doc-drift`: structural cross-file checks keeping the docs honest.
+//!
+//! Two claims in the docs are load-bearing enough to verify mechanically:
+//!
+//! 1. **Wire table** — the message-type tables in `README.md` and in the
+//!    `transport/wire.rs` module doc must list exactly the tags the decoder's
+//!    match arms accept (the decode `match` is ground truth; every `"tag" =>`
+//!    arm must appear in both tables and vice versa).
+//! 2. **Checkpoint version** — every backticked `` `version: N` `` claim in
+//!    the README must equal `Checkpoint::VERSION` in `admm/session.rs`.
+//!    Prose about *older* formats writes "format v2" / "v1–v3" instead, so a
+//!    backticked `version: N` always describes what the current writer emits.
+//!
+//! Unlike the token rules this one is cross-file, so it implements
+//! [`Rule::check_tree`] and anchors diagnostics in whichever file is stale.
+
+use super::Rule;
+use crate::analysis::diag::Diagnostic;
+use crate::analysis::lexer::{lex, TokenKind};
+use crate::analysis::SourceFile;
+
+pub struct DocDrift;
+
+const README: &str = "README.md";
+const WIRE: &str = "rust/src/cluster/transport/wire.rs";
+const SESSION: &str = "rust/src/admm/session.rs";
+
+impl Rule for DocDrift {
+    fn id(&self) -> &'static str {
+        "doc-drift"
+    }
+
+    fn summary(&self) -> &'static str {
+        "README/wire-doc tables match the decoder's tags; README checkpoint \
+         version claims match Checkpoint::VERSION"
+    }
+
+    fn check_tree(&self, files: &[SourceFile], out: &mut Vec<Diagnostic>) {
+        let Some(readme) = find(files, README) else {
+            // Scanning a partial set (unit tests feed synthetic trees); the
+            // rule only judges what it can see.
+            return;
+        };
+        if let Some(wire) = find(files, WIRE) {
+            self.check_wire_tables(readme, wire, out);
+        }
+        if let Some(session) = find(files, SESSION) {
+            self.check_checkpoint_version(readme, session, out);
+        }
+    }
+}
+
+impl DocDrift {
+    fn check_wire_tables(&self, readme: &SourceFile, wire: &SourceFile, out: &mut Vec<Diagnostic>) {
+        let tags = match decode_tags(&wire.text) {
+            Ok(tags) => tags,
+            Err(msg) => {
+                out.push(Diagnostic::error(&wire.path, 1, 1, self.id(), msg));
+                return;
+            }
+        };
+        for (doc, table) in [
+            (readme, wire_table(&readme.text, "")),
+            (wire, wire_table(&wire.text, "//!")),
+        ] {
+            let Some((header_line, rows)) = table else {
+                out.push(Diagnostic::error(
+                    &doc.path,
+                    1,
+                    1,
+                    self.id(),
+                    "no wire-message table (header `| type | direction | ... |`) found"
+                        .to_string(),
+                ));
+                continue;
+            };
+            for tag in &tags {
+                if !rows.iter().any(|(_, t)| t == tag) {
+                    out.push(Diagnostic::error(
+                        &doc.path,
+                        header_line,
+                        1,
+                        self.id(),
+                        format!(
+                            "wire table is missing the `{tag}` message that \
+                             transport/wire.rs decodes"
+                        ),
+                    ));
+                }
+            }
+            for (line, t) in &rows {
+                if !tags.iter().any(|tag| tag == t) {
+                    out.push(Diagnostic::error(
+                        &doc.path,
+                        *line,
+                        1,
+                        self.id(),
+                        format!(
+                            "wire table lists `{t}`, which transport/wire.rs does \
+                             not decode"
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+
+    fn check_checkpoint_version(
+        &self,
+        readme: &SourceFile,
+        session: &SourceFile,
+        out: &mut Vec<Diagnostic>,
+    ) {
+        let version = match checkpoint_version(&session.text) {
+            Ok(v) => v,
+            Err(msg) => {
+                out.push(Diagnostic::error(&session.path, 1, 1, self.id(), msg));
+                return;
+            }
+        };
+        for (line, claimed) in version_claims(&readme.text) {
+            if claimed != version {
+                out.push(Diagnostic::error(
+                    &readme.path,
+                    line,
+                    1,
+                    self.id(),
+                    format!(
+                        "README claims `version: {claimed}` but Checkpoint::VERSION \
+                         is {version} (describe old formats as \"format v{claimed}\" \
+                         prose instead)"
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+fn find<'a>(files: &'a [SourceFile], path: &str) -> Option<&'a SourceFile> {
+    files.iter().find(|f| f.path == path)
+}
+
+/// The tags the decoder accepts: every string literal immediately followed by
+/// `=>` in `wire.rs` (i.e. the decode match arms).
+fn decode_tags(wire_src: &str) -> Result<Vec<String>, String> {
+    let tokens =
+        lex(wire_src).map_err(|e| format!("could not lex wire.rs: {}", e.message))?;
+    let code: Vec<_> = tokens.iter().filter(|t| !t.is_comment()).collect();
+    let mut tags = Vec::new();
+    for pair in code.windows(2) {
+        if pair[0].kind == TokenKind::Str
+            && pair[1].kind == TokenKind::Punct
+            && pair[1].text == "=>"
+        {
+            let tag = pair[0].text.trim_matches('"').to_string();
+            if !tags.contains(&tag) {
+                tags.push(tag);
+            }
+        }
+    }
+    if tags.is_empty() {
+        return Err("found no `\"tag\" =>` decode arms in wire.rs".to_string());
+    }
+    Ok(tags)
+}
+
+/// Parse the wire-message markdown table out of `text`. `strip` is a line
+/// prefix to remove first (`"//!"` for the module doc, `""` for the README).
+/// Returns the 1-based header line and `(line, tag)` for each body row.
+#[allow(clippy::type_complexity)]
+fn wire_table(text: &str, strip: &str) -> Option<(u32, Vec<(u32, String)>)> {
+    let unprefix = |raw: &str| -> String {
+        let t = raw.trim_start();
+        let t = if strip.is_empty() { t } else { t.strip_prefix(strip).unwrap_or(t) };
+        t.trim().to_string()
+    };
+    let mut lines = text.lines().enumerate();
+    let header_line = loop {
+        let (i, raw) = lines.next()?;
+        let line = unprefix(raw);
+        if line.starts_with('|') && line.contains("type") && line.contains("direction") {
+            break i as u32 + 1;
+        }
+    };
+    let mut rows = Vec::new();
+    for (i, raw) in lines {
+        let line = unprefix(raw);
+        if !line.starts_with('|') {
+            break;
+        }
+        let cell = line.trim_start_matches('|').split('|').next().unwrap_or("").trim();
+        if cell.chars().all(|c| c == '-' || c == ' ') {
+            continue; // separator row
+        }
+        let tag = cell.trim_matches('`').to_string();
+        rows.push((i as u32 + 1, tag));
+    }
+    Some((header_line, rows))
+}
+
+/// Extract `pub const VERSION: usize = N` from `session.rs` tokens.
+fn checkpoint_version(session_src: &str) -> Result<u64, String> {
+    let tokens =
+        lex(session_src).map_err(|e| format!("could not lex session.rs: {}", e.message))?;
+    let code: Vec<_> = tokens.iter().filter(|t| !t.is_comment()).collect();
+    for w in code.windows(5) {
+        if w[0].text == "VERSION"
+            && w[1].text == ":"
+            && w[2].text == "usize"
+            && w[3].text == "="
+            && w[4].kind == TokenKind::Int
+        {
+            return w[4]
+                .text
+                .parse::<u64>()
+                .map_err(|_| format!("unparseable Checkpoint::VERSION `{}`", w[4].text));
+        }
+    }
+    Err("no `VERSION: usize = N` constant found in session.rs".to_string())
+}
+
+/// Every `` `version: N` `` claim in the README, with its 1-based line.
+fn version_claims(readme: &str) -> Vec<(u32, u64)> {
+    let mut out = Vec::new();
+    for (i, line) in readme.lines().enumerate() {
+        let mut rest = line;
+        while let Some(pos) = rest.find("`version: ") {
+            rest = &rest[pos + "`version: ".len()..];
+            let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+            if !digits.is_empty() && rest[digits.len()..].starts_with('`') {
+                if let Ok(n) = digits.parse::<u64>() {
+                    out.push((i as u32 + 1, n));
+                }
+            }
+        }
+    }
+    out
+}

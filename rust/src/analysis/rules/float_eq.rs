@@ -1,0 +1,87 @@
+//! `float-eq`: no `==`/`!=` against non-zero float literals.
+//!
+//! Exact equality on computed floats is rounding-fragile; the repo's
+//! convention is `f64::to_bits` comparison (`testkit::assert_bits_eq` and the
+//! checkpoint hex codec) for bit-identity claims and explicit tolerances for
+//! numeric ones. Token-level analysis cannot see types, so this rule flags
+//! comparisons where either operand *is a float literal* — which covers the
+//! dangerous idiom (`if x == 0.1`) without false-firing on integer code.
+//!
+//! Comparisons against **zero** (`0.0`, `-0.0`) are exempt: IEEE-754 zero
+//! checks are exact by construction and idiomatic in the sparse-numerics
+//! paths (structural-zero skipping), and the engine's own λ/residual code
+//! relies on them. The `testkit/` helpers are out of scope — they are the
+//! sanctioned home of bit comparison.
+
+use super::{under, FileCtx, Rule};
+use crate::analysis::diag::Diagnostic;
+use crate::analysis::lexer::{Token, TokenKind};
+
+pub struct FloatEq;
+
+impl Rule for FloatEq {
+    fn id(&self) -> &'static str {
+        "float-eq"
+    }
+
+    fn summary(&self) -> &'static str {
+        "no ==/!= against non-zero float literals (compare to_bits or use a \
+         tolerance)"
+    }
+
+    fn applies_to(&self, path: &str) -> bool {
+        path.ends_with(".rs") && !under(path, "rust/src/testkit")
+    }
+
+    fn check_file(&self, ctx: &FileCtx<'_>, out: &mut Vec<Diagnostic>) {
+        let toks: Vec<_> = ctx.tokens.iter().filter(|t| !t.is_comment()).collect();
+        for (i, t) in toks.iter().enumerate() {
+            if t.kind != TokenKind::Punct || (t.text != "==" && t.text != "!=") {
+                continue;
+            }
+            let lhs_float = i > 0 && is_nonzero_float(toks[i - 1]);
+            // Right operand: `1.5`, or `- 1.5` (unary minus is its own token).
+            let rhs_float = match toks.get(i + 1) {
+                Some(n) if n.kind == TokenKind::Punct && n.text == "-" => {
+                    toks.get(i + 2).is_some_and(|n2| is_nonzero_float(n2))
+                }
+                Some(n) => is_nonzero_float(n),
+                None => false,
+            };
+            if lhs_float || rhs_float {
+                out.push(Diagnostic::error(
+                    ctx.path,
+                    t.line,
+                    t.col,
+                    self.id(),
+                    format!(
+                        "`{}` against a non-zero float literal is rounding-fragile; \
+                         compare `to_bits()` (testkit::assert_bits_eq) or use an \
+                         explicit tolerance",
+                        t.text
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+/// Is this token a float literal with value != 0? Unparseable floats are
+/// treated as non-zero (flag rather than silently pass).
+fn is_nonzero_float(t: &Token<'_>) -> bool {
+    if t.kind != TokenKind::Float {
+        return false;
+    }
+    let cleaned: String = t
+        .text
+        .trim_end_matches("f64")
+        .trim_end_matches("f32")
+        .trim_end_matches('_')
+        .chars()
+        .filter(|&c| c != '_')
+        .collect();
+    match cleaned.parse::<f64>() {
+        Ok(v) => v != 0.0,
+        Err(_) => true,
+    }
+}

@@ -1,0 +1,83 @@
+//! The `ad-lint` rule registry.
+//!
+//! Each rule encodes one of the repo's standing invariants (see the README
+//! "Static analysis" section for the one-line rationale of each). Rules are
+//! token-level: they receive the lexed stream of one file via [`FileCtx`]
+//! (comments and string literals already separated out by the lexer, so a
+//! mention of `HashMap` in a doc comment never fires) plus `#[cfg(test)]` /
+//! `#[test]` region information. The cross-file `doc-drift` rule instead
+//! implements [`Rule::check_tree`] over the whole scanned file set.
+
+use super::diag::Diagnostic;
+use super::lexer::Token;
+use super::SourceFile;
+
+mod deprecated_surface;
+mod doc_drift;
+mod float_eq;
+mod panic_free;
+mod unordered_iter;
+mod wallclock;
+
+pub use deprecated_surface::DeprecatedSurface;
+pub use doc_drift::DocDrift;
+pub use float_eq::FloatEq;
+pub use panic_free::PanicFreeLib;
+pub use unordered_iter::UnorderedIter;
+pub use wallclock::Wallclock;
+
+/// Per-file context handed to [`Rule::check_file`].
+pub struct FileCtx<'a> {
+    /// Repo-relative path with forward slashes.
+    pub path: &'a str,
+    /// Lexed token stream (comments included; rules usually skip them).
+    pub tokens: &'a [Token<'a>],
+    /// 1-based inclusive line ranges covered by `#[cfg(test)]` items or
+    /// `#[test]` functions.
+    pub test_regions: &'a [(u32, u32)],
+}
+
+impl FileCtx<'_> {
+    /// Is `line` inside a test-only region?
+    pub fn in_test(&self, line: u32) -> bool {
+        self.test_regions.iter().any(|&(lo, hi)| line >= lo && line <= hi)
+    }
+}
+
+/// One static-analysis rule. Implementations are stateless; scoping decisions
+/// (`applies_to`) live with the rule so the registry stays declarative.
+pub trait Rule {
+    /// Stable kebab-case id, used in diagnostics and `ad-lint: allow(...)`.
+    fn id(&self) -> &'static str;
+    /// One-line description for `--json` output and the README rule table.
+    fn summary(&self) -> &'static str;
+    /// Should `check_file` run on this repo-relative path at all?
+    fn applies_to(&self, _path: &str) -> bool {
+        false
+    }
+    /// Token-level per-file check. Only called when `applies_to` is true.
+    fn check_file(&self, _ctx: &FileCtx<'_>, _out: &mut Vec<Diagnostic>) {}
+    /// Cross-file structural check over the whole scanned set.
+    fn check_tree(&self, _files: &[SourceFile], _out: &mut Vec<Diagnostic>) {}
+}
+
+/// All shipped rules, in diagnostic-output order.
+pub fn registry() -> Vec<Box<dyn Rule>> {
+    vec![
+        Box::new(Wallclock),
+        Box::new(UnorderedIter),
+        Box::new(FloatEq),
+        Box::new(PanicFreeLib),
+        Box::new(DeprecatedSurface),
+        Box::new(DocDrift),
+    ]
+}
+
+/// Path prefix test on repo-relative forward-slash paths: `path` is `prefix`
+/// itself or a file beneath it.
+pub(crate) fn under(path: &str, prefix: &str) -> bool {
+    match path.strip_prefix(prefix) {
+        Some(rest) => rest.is_empty() || rest.starts_with('/'),
+        None => false,
+    }
+}

@@ -1,0 +1,64 @@
+//! `panic-free-lib`: no `unwrap`/`expect`/`panic!` in non-test library code.
+//!
+//! PR 4 made every input-validation failure a typed [`crate::EngineError`]; a
+//! panic in library code aborts the long-lived `admm_serve` loop (or a whole
+//! multi-job service) where a typed error would fail one job. Binaries and
+//! `main.rs` may panic at the top level (they own the process), `testkit/` and
+//! `#[cfg(test)]`/`#[test]` regions assert freely, and genuinely unreachable
+//! invariant `expect`s carry an inline `ad-lint: allow(panic-free-lib)` with
+//! the invariant spelled out — the allow reason is the documentation.
+
+use super::{under, FileCtx, Rule};
+use crate::analysis::diag::Diagnostic;
+use crate::analysis::lexer::TokenKind;
+
+pub struct PanicFreeLib;
+
+const EXEMPT: [&str; 3] = ["rust/src/main.rs", "rust/src/bin", "rust/src/testkit"];
+
+impl Rule for PanicFreeLib {
+    fn id(&self) -> &'static str {
+        "panic-free-lib"
+    }
+
+    fn summary(&self) -> &'static str {
+        "no unwrap/expect/panic! in non-test library code (typed EngineError \
+         policy)"
+    }
+
+    fn applies_to(&self, path: &str) -> bool {
+        under(path, "rust/src") && !EXEMPT.iter().any(|e| under(path, e))
+    }
+
+    fn check_file(&self, ctx: &FileCtx<'_>, out: &mut Vec<Diagnostic>) {
+        let toks: Vec<_> = ctx.tokens.iter().filter(|t| !t.is_comment()).collect();
+        for (i, t) in toks.iter().enumerate() {
+            if t.kind != TokenKind::Ident || ctx.in_test(t.line) {
+                continue;
+            }
+            let next_is = |s: &str| {
+                toks.get(i + 1).is_some_and(|n| n.kind == TokenKind::Punct && n.text == s)
+            };
+            let prev_is_dot =
+                i > 0 && toks[i - 1].kind == TokenKind::Punct && toks[i - 1].text == ".";
+            let hit = match t.text {
+                "panic" => next_is("!"),
+                "unwrap" | "expect" => prev_is_dot && next_is("("),
+                _ => false,
+            };
+            if hit {
+                out.push(Diagnostic::error(
+                    ctx.path,
+                    t.line,
+                    t.col,
+                    self.id(),
+                    format!(
+                        "`{}` can abort a long-lived service; return a typed \
+                         EngineError (or justify the invariant with an inline allow)",
+                        t.text
+                    ),
+                ));
+            }
+        }
+    }
+}

@@ -1,0 +1,58 @@
+//! `unordered-iter`: no `HashMap`/`HashSet` in bit-identical layers.
+//!
+//! `std::collections::HashMap` iteration order is unspecified (and seeded per
+//! process), so any use inside the ADMM engine, the virtual-time simulator,
+//! the multi-master group, or the checkpoint/wire codecs risks iteration-order
+//! nondeterminism leaking into iterate histories or serialized bytes. Those
+//! layers must use `Vec`, `BTreeMap`, or index-keyed arrays. This rule is a
+//! conservative over-approximation: it flags the *type names* appearing at all
+//! in the scoped files, because even an "unordered but never iterated" map is
+//! one refactor away from a byte-instability bug.
+
+use super::{under, FileCtx, Rule};
+use crate::analysis::diag::Diagnostic;
+use crate::analysis::lexer::TokenKind;
+
+pub struct UnorderedIter;
+
+const SCOPED: [&str; 6] = [
+    "rust/src/admm",
+    "rust/src/cluster/sim.rs",
+    "rust/src/cluster/multimaster",
+    "rust/src/cluster/transport/wire.rs",
+    "rust/src/cluster/transport/frame.rs",
+    "rust/src/bench/json.rs",
+];
+
+impl Rule for UnorderedIter {
+    fn id(&self) -> &'static str {
+        "unordered-iter"
+    }
+
+    fn summary(&self) -> &'static str {
+        "no HashMap/HashSet in the engine, simulator, multi-master, or codec \
+         layers (iteration order breaks bit-identity)"
+    }
+
+    fn applies_to(&self, path: &str) -> bool {
+        SCOPED.iter().any(|s| under(path, s))
+    }
+
+    fn check_file(&self, ctx: &FileCtx<'_>, out: &mut Vec<Diagnostic>) {
+        for t in ctx.tokens {
+            if t.kind == TokenKind::Ident && (t.text == "HashMap" || t.text == "HashSet") {
+                out.push(Diagnostic::error(
+                    ctx.path,
+                    t.line,
+                    t.col,
+                    self.id(),
+                    format!(
+                        "`{}` has unspecified iteration order; bit-identical layers \
+                         must use Vec/BTreeMap/index-keyed state",
+                        t.text
+                    ),
+                ));
+            }
+        }
+    }
+}

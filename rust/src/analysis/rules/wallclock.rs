@@ -1,0 +1,82 @@
+//! `wallclock`: no wall-clock time in virtual-time code paths.
+//!
+//! The deterministic cluster replays arrivals on a virtual clock; any
+//! `Instant::now()`, `SystemTime`, or `thread::sleep` in those paths makes
+//! runs irreproducible. Real-time modules are allowlisted:
+//! `cluster/threaded.rs` (the OS-thread source is real time by definition),
+//! `cluster/transport/**` (sockets block on real deadlines), `bench/` (timing
+//! harness), and binaries. `use` declarations are skipped — the call or
+//! construction site is the violation, not the import.
+
+use super::{under, FileCtx, Rule};
+use crate::analysis::diag::Diagnostic;
+use crate::analysis::lexer::TokenKind;
+
+pub struct Wallclock;
+
+const ALLOWED: [&str; 6] = [
+    "rust/src/main.rs",
+    "rust/src/bin",
+    "rust/src/bench",
+    "rust/src/cluster/threaded.rs",
+    "rust/src/cluster/transport",
+    "rust/src/testkit",
+];
+
+impl Rule for Wallclock {
+    fn id(&self) -> &'static str {
+        "wallclock"
+    }
+
+    fn summary(&self) -> &'static str {
+        "no Instant::now/SystemTime/thread::sleep outside real-time modules \
+         (virtual-time determinism)"
+    }
+
+    fn applies_to(&self, path: &str) -> bool {
+        under(path, "rust/src") && !ALLOWED.iter().any(|a| under(path, a))
+    }
+
+    fn check_file(&self, ctx: &FileCtx<'_>, out: &mut Vec<Diagnostic>) {
+        let toks: Vec<_> = ctx.tokens.iter().filter(|t| !t.is_comment()).collect();
+        let mut in_use = false;
+        for (i, t) in toks.iter().enumerate() {
+            if t.kind == TokenKind::Ident && t.text == "use" {
+                in_use = true;
+            } else if in_use {
+                if t.kind == TokenKind::Punct && t.text == ";" {
+                    in_use = false;
+                }
+                continue;
+            }
+            if t.kind != TokenKind::Ident || ctx.in_test(t.line) {
+                continue;
+            }
+            let flagged = match t.text {
+                "Instant" | "SystemTime" => true,
+                // `thread::sleep` / `std::thread::sleep`, not a local `sleep`.
+                "sleep" => {
+                    i >= 2
+                        && toks[i - 1].text == "::"
+                        && toks[i - 2].kind == TokenKind::Ident
+                        && toks[i - 2].text == "thread"
+                }
+                _ => false,
+            };
+            if flagged {
+                out.push(Diagnostic::error(
+                    ctx.path,
+                    t.line,
+                    t.col,
+                    self.id(),
+                    format!(
+                        "`{}` is wall-clock; virtual-time paths must go through the \
+                         scheduler (real time is allowlisted only in cluster/threaded.rs, \
+                         cluster/transport/, bench/, and binaries)",
+                        t.text
+                    ),
+                ));
+            }
+        }
+    }
+}

@@ -1,0 +1,132 @@
+//! Inline suppression comments: `// ad-lint: allow(rule-id): <reason>`.
+//!
+//! An allow-comment covers diagnostics of the named rule on **its own line and
+//! the next line**, so both trailing (`stmt // ad-lint: allow(...)`) and
+//! preceding-line placements work. A missing or empty reason is itself a
+//! diagnostic (`suppression` rule), as is naming a rule id the registry does
+//! not know — suppressions must stay auditable.
+
+use super::diag::Diagnostic;
+use super::lexer::{Token, TokenKind};
+
+/// One parsed allow-comment.
+#[derive(Debug, Clone)]
+pub struct Allow {
+    pub line: u32,
+    pub col: u32,
+    /// The rule id named inside `allow(...)` (may be unknown; checked later).
+    pub rule: String,
+    /// Justification text after the trailing `: `; empty string if missing.
+    pub reason: String,
+}
+
+/// Scan comment tokens for `ad-lint:` directives. Malformed directives
+/// (anything after `ad-lint:` that is not `allow(id): reason`) are reported
+/// immediately as `suppression` diagnostics.
+pub fn scan_allows(file: &str, tokens: &[Token<'_>], diags: &mut Vec<Diagnostic>) -> Vec<Allow> {
+    let mut allows = Vec::new();
+    for tok in tokens {
+        if !tok.is_comment() {
+            continue;
+        }
+        let body = comment_body(tok);
+        let Some(rest) = strip_directive_prefix(body) else { continue };
+        match parse_allow(rest) {
+            Ok((rule, reason)) => {
+                if reason.is_empty() {
+                    diags.push(Diagnostic::error(
+                        file,
+                        tok.line,
+                        tok.col,
+                        "suppression",
+                        format!(
+                            "ad-lint: allow({rule}) has no reason; write \
+                             `// ad-lint: allow({rule}): <why this is safe>`"
+                        ),
+                    ));
+                }
+                allows.push(Allow {
+                    line: tok.line,
+                    col: tok.col,
+                    rule: rule.to_string(),
+                    reason: reason.to_string(),
+                });
+            }
+            Err(msg) => diags.push(Diagnostic::error(
+                file,
+                tok.line,
+                tok.col,
+                "suppression",
+                msg,
+            )),
+        }
+    }
+    allows
+}
+
+/// Apply `allows` to `diags` in place: a diagnostic whose rule matches an
+/// allow on the same or preceding line is marked suppressed. Returns, for each
+/// allow, whether it matched anything (unused allows are stale and reported by
+/// the caller).
+pub fn apply_allows(allows: &[Allow], diags: &mut [Diagnostic]) -> Vec<bool> {
+    let mut used = vec![false; allows.len()];
+    for d in diags.iter_mut() {
+        if d.rule == "suppression" {
+            continue; // allow-comments cannot excuse their own malformation
+        }
+        for (i, a) in allows.iter().enumerate() {
+            if a.rule == d.rule && !a.reason.is_empty() && covers(a.line, d.line) {
+                d.suppressed = true;
+                d.reason = Some(a.reason.clone());
+                used[i] = true;
+                break;
+            }
+        }
+    }
+    used
+}
+
+/// An allow on line L covers findings on L (trailing comment) and L+1
+/// (comment on the line above the flagged statement).
+fn covers(allow_line: u32, diag_line: u32) -> bool {
+    diag_line == allow_line || diag_line == allow_line + 1
+}
+
+/// Strip comment delimiters: `// x`, `/// x`, `//! x`, `/* x */`.
+fn comment_body<'a>(tok: &Token<'a>) -> &'a str {
+    let t = tok.text;
+    if tok.kind == TokenKind::LineComment {
+        t.trim_start_matches('/').trim_start_matches('!').trim()
+    } else {
+        t.trim_start_matches("/*")
+            .trim_end_matches("*/")
+            .trim_start_matches(['*', '!'])
+            .trim()
+    }
+}
+
+/// Return the text after a leading `ad-lint:` marker, or None if this comment
+/// is not a directive at all.
+fn strip_directive_prefix(body: &str) -> Option<&str> {
+    body.strip_prefix("ad-lint:").map(str::trim)
+}
+
+/// Parse `allow(rule-id): reason` → `(rule-id, reason)`.
+fn parse_allow(rest: &str) -> Result<(&str, &str), String> {
+    let Some(inner) = rest.strip_prefix("allow(") else {
+        return Err(format!(
+            "unrecognized ad-lint directive `{rest}`; only \
+             `allow(rule-id): <reason>` is supported"
+        ));
+    };
+    let Some(close) = inner.find(')') else {
+        return Err("ad-lint: allow(... is missing its closing `)`".to_string());
+    };
+    let rule = inner[..close].trim();
+    if rule.is_empty() || !rule.chars().all(|c| c.is_ascii_alphanumeric() || c == '-') {
+        return Err(format!("ad-lint: allow(...) names an invalid rule id `{rule}`"));
+    }
+    let after = inner[close + 1..].trim();
+    let reason = after.strip_prefix(':').map(str::trim).unwrap_or("");
+    Ok((rule, reason))
+}

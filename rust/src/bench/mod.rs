@@ -55,7 +55,7 @@ pub struct BenchStats {
 impl BenchStats {
     pub fn from_samples(mut xs: Vec<f64>) -> Self {
         assert!(!xs.is_empty());
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs.sort_by(|a, b| a.total_cmp(b));
         let n = xs.len();
         let mean = xs.iter().sum::<f64>() / n as f64;
         let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;

@@ -1,0 +1,118 @@
+//! `ad_admm_lint` — run the repo's static-analysis pass (`ad-lint`).
+//!
+//! Usage: `ad_admm_lint [--root <dir>] [--json <path>] [--quiet]`
+//!
+//! Scans `rust/src/**`, `rust/tests/*.rs`, `rust/benches/*.rs`,
+//! `examples/*.rs`, and `README.md` under the repo root (auto-detected by
+//! walking up from the current directory until `rust/src` exists, or given
+//! explicitly with `--root`), runs every rule in
+//! [`ad_admm::analysis::rules::registry`], and prints one
+//! `file:line:col: error [rule-id] message` line per unsuppressed finding
+//! plus a `bench_diff`-style summary
+//! (`ad-lint: N files scanned, M rules, K errors (S suppressed)`).
+//!
+//! `--json <path>` additionally writes the full machine-readable report
+//! (schema 1, suppressed findings included with their reasons) for the CI
+//! artifact; `-` writes it to stdout. `--quiet` drops the per-finding lines
+//! (the summary always prints).
+//!
+//! Exit status: 0 = clean (no unsuppressed errors), 1 = findings,
+//! 2 = usage or I/O failure. The CI `analysis` job gates on this.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use ad_admm::analysis::{analyze, load_tree};
+
+fn main() -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut json_out: Option<String> = None;
+    let mut quiet = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--root" => match args.next() {
+                Some(v) => root = Some(PathBuf::from(v)),
+                None => return usage("--root needs a directory"),
+            },
+            "--json" => match args.next() {
+                Some(v) => json_out = Some(v),
+                None => return usage("--json needs a path (or `-` for stdout)"),
+            },
+            "--quiet" => quiet = true,
+            other => return usage(&format!("unknown argument {other:?}")),
+        }
+    }
+
+    let root = match root.map(Ok).unwrap_or_else(detect_root) {
+        Ok(r) => r,
+        Err(msg) => {
+            eprintln!("ad-lint: {msg}");
+            return ExitCode::from(2);
+        }
+    };
+    let files = match load_tree(&root) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("ad-lint: failed to read tree under {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+    if files.is_empty() {
+        eprintln!("ad-lint: nothing to scan under {}", root.display());
+        return ExitCode::from(2);
+    }
+
+    let report = analyze(&files);
+    if !quiet {
+        for d in &report.diagnostics {
+            if !d.suppressed {
+                println!("{d}");
+            }
+        }
+    }
+    println!("{}", report.summary_line());
+
+    if let Some(path) = json_out {
+        let doc = format!("{}\n", report.to_json());
+        if path == "-" {
+            print!("{doc}");
+        } else if let Err(e) = std::fs::write(&path, doc) {
+            eprintln!("ad-lint: failed to write {path}: {e}");
+            return ExitCode::from(2);
+        }
+    }
+
+    if report.errors() == 0 {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}
+
+/// Walk up from the current directory to the first ancestor containing
+/// `rust/src` (so the bin works from the repo root and from `rust/`).
+fn detect_root() -> Result<PathBuf, String> {
+    let start = std::env::current_dir().map_err(|e| format!("cannot read cwd: {e}"))?;
+    let mut dir = start.as_path();
+    loop {
+        if dir.join("rust/src").is_dir() {
+            return Ok(dir.to_path_buf());
+        }
+        match dir.parent() {
+            Some(p) => dir = p,
+            None => {
+                return Err(format!(
+                    "no `rust/src` found walking up from {} (pass --root)",
+                    start.display()
+                ))
+            }
+        }
+    }
+}
+
+fn usage(msg: &str) -> ExitCode {
+    eprintln!("ad-lint: {msg}");
+    eprintln!("usage: ad_admm_lint [--root <dir>] [--json <path|->] [--quiet]");
+    ExitCode::from(2)
+}

@@ -34,10 +34,8 @@ fn main() {
     let cmd = args.positional().first().map(String::as_str).unwrap_or("serve");
     let result = match cmd {
         "serve" => serve(&args.get_or("listen", "127.0.0.1:7401"), args.has_flag("oneshot")),
-        "submit" => {
-            let spec = JobSpec::from_args(&args);
-            submit(&args.get_or("connect", "127.0.0.1:7401"), &spec).map(|_| ())
-        }
+        "submit" => JobSpec::from_args(&args)
+            .and_then(|spec| submit(&args.get_or("connect", "127.0.0.1:7401"), &spec).map(|_| ())),
         _ => {
             print_help();
             return;

@@ -529,6 +529,7 @@ impl StarCluster {
         cfg: &ClusterConfig,
         solvers: Option<Vec<WorkerSolveFn>>,
     ) -> ClusterReport {
+        // ad-lint: allow(panic-free-lib): legacy cluster entry keeps its panic-on-invalid contract; Session::builder is the typed path
         cfg.admm.validate(self.problem.num_workers()).expect("invalid AdmmConfig");
         match cfg.mode {
             ExecutionMode::RealThreads => self.run_threaded(cfg, solvers),

@@ -248,6 +248,7 @@ impl VirtualSource {
     /// called on a block-sharded source before the run starts (the
     /// session/cluster layers do this during construction).
     pub(crate) fn set_master_group(&mut self, group: Arc<MasterGroup>) {
+        // ad-lint: allow(panic-free-lib): construction-order invariant: the session/cluster layers shard the source before installing the group
         let p = self.shard.as_ref().expect("multi-master requires a block-sharded source");
         let n = self.pending.len();
         self.worker_parts = (0..n)
@@ -728,6 +729,7 @@ impl WorkerSource for VirtualSource {
                 // Absorb everything that has arrived by this instant — the
                 // threaded master's try_recv drain.
                 while self.queue.peek_time().is_some_and(|t| t <= self.vclock.now_s()) {
+                    // ad-lint: allow(panic-free-lib): guarded by peek_time() in the loop condition
                     let ev = self.queue.pop().expect("peeked event");
                     self.absorb_event(
                         ev,

@@ -99,6 +99,7 @@ impl ThreadedSource {
                         policy,
                     )
                 })
+                // ad-lint: allow(panic-free-lib): thread-spawn failure is unrecoverable for the real-thread cluster
                 .expect("spawn worker");
             handles.push(handle);
         }
@@ -134,6 +135,7 @@ impl ThreadedSource {
         while self.from_workers.try_recv().is_ok() {}
         let mut workers = Vec::with_capacity(self.handles.len());
         for h in self.handles.drain(..) {
+            // ad-lint: allow(panic-free-lib): join propagates a worker-thread panic to the driving test or bench
             workers.push(h.join().expect("worker panicked"));
         }
         // Any message sent between drain and join is dropped with the channel.
@@ -170,6 +172,7 @@ impl WorkerSource for ThreadedSource {
                 None => state.x0.clone(),
                 Some(p) => p.gather_vec(i, &state.x0),
             };
+            // ad-lint: allow(panic-free-lib): workers outlive the master loop by construction; a closed channel means a worker panicked
             tx.send(MasterMsg::Go { x0, lam }).expect("worker alive");
         }
     }
@@ -182,10 +185,12 @@ impl WorkerSource for ThreadedSource {
             // prescribed set has a message in, absorb exactly that set and
             // leave everything else pending. Deterministic by design.
             let prescribed = {
+                // ad-lint: allow(panic-free-lib): guarded by the lockstep.is_some() branch above
                 let (sets, pos) = self.lockstep.as_mut().expect("checked above");
                 let s = sets
                     .get(*pos)
                     .unwrap_or_else(|| {
+                        // ad-lint: allow(panic-free-lib): documented contract: lockstep callers supply one set per iteration
                         panic!("lockstep trace exhausted at iteration {pos}", pos = *pos)
                     })
                     .clone();
@@ -208,6 +213,7 @@ impl WorkerSource for ThreadedSource {
             // Lockstep traces are caller-supplied: validate (sort, dedup,
             // bounds-check) rather than trust ascending order.
             let live: Vec<usize> = prescribed.into_iter().filter(|&i| !gate.down[i]).collect();
+            // ad-lint: allow(panic-free-lib): documented panic contract on malformed caller-supplied lockstep traces
             ActiveSet::new(live, n).expect("lockstep trace worker index out of range")
         } else {
             // Gather until the gate is met: |A_k| ≥ min(A, #live) and every
@@ -248,6 +254,7 @@ impl WorkerSource for ThreadedSource {
         // carry the worker-computed dual; Algorithm 4 messages carry none
         // (the master owns the duals).
         for &i in set {
+            // ad-lint: allow(panic-free-lib): gather() only returns workers whose message is pending
             let msg = self.pending[i].take().expect("arrived worker has a pending message");
             m.state.xs[i] = msg.x;
             if let Some(lam) = msg.lam {
@@ -269,6 +276,7 @@ impl WorkerSource for ThreadedSource {
             };
             // A worker may have exited only after shutdown; sends cannot
             // fail before that.
+            // ad-lint: allow(panic-free-lib): sends cannot fail before shutdown; a closed channel means a worker panicked
             self.to_workers[i].send(MasterMsg::Go { x0, lam }).expect("worker alive");
         }
     }

@@ -167,7 +167,17 @@ pub fn run_worker(cfg: &WorkerClientConfig) -> Result<WorkerStats, EngineError> 
     // sources, so lockstep digests still match under inexact policies.
     // (A reconnecting worker restarts cold; under `lockstep` the e2e
     // digest jobs run fault-free, so the schedule stays aligned.)
-    let policy = spec.inexact_workers.as_ref().map_or(spec.inexact, |v| v[worker]);
+    // A short per-worker policy list from a malformed spec must fail this
+    // worker's job, not panic the connection thread.
+    let policy = match spec.inexact_workers.as_ref() {
+        None => spec.inexact,
+        Some(v) => *v.get(worker).ok_or_else(|| {
+            transport_err(format!(
+                "inexact_workers has {} entries but this worker was assigned slot {worker}",
+                v.len()
+            ))
+        })?,
+    };
     let mut warm = WarmState::default();
     let mut stats = WorkerStats::new(worker);
     let mut rounds = 0usize;
@@ -289,9 +299,9 @@ fn run_worker_multi(cfg: &WorkerClientConfig) -> Result<WorkerStats, EngineError
     if worker >= problem.num_workers() {
         return Err(transport_err(format!("assigned slot {worker} out of range")));
     }
-    let pattern = std::sync::Arc::clone(
-        problem.pattern().expect("master_group requires a block-sharded spec"),
-    );
+    let pattern = std::sync::Arc::clone(problem.pattern().ok_or_else(|| {
+        transport_err("master_group requires a block-sharded spec".to_string())
+    })?);
     let local = std::sync::Arc::clone(problem.local(worker));
     // `(master, slice runs)` per owning master, ascending — the wire
     // layout both sides derive; no layout metadata rides the frames.
@@ -320,7 +330,17 @@ fn run_worker_multi(cfg: &WorkerClientConfig) -> Result<WorkerStats, EngineError
     let mut x = vec![0.0; n];
     let mut x0 = vec![0.0; n];
     let mut scratch = WorkerScratch::new();
-    let policy = spec.inexact_workers.as_ref().map_or(spec.inexact, |v| v[worker]);
+    // A short per-worker policy list from a malformed spec must fail this
+    // worker's job, not panic the connection thread.
+    let policy = match spec.inexact_workers.as_ref() {
+        None => spec.inexact,
+        Some(v) => *v.get(worker).ok_or_else(|| {
+            transport_err(format!(
+                "inexact_workers has {} entries but this worker was assigned slot {worker}",
+                v.len()
+            ))
+        })?,
+    };
     let mut warm = WarmState::default();
     let mut stats = WorkerStats::new(worker);
     let mut rounds = 0usize;

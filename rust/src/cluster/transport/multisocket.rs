@@ -227,6 +227,7 @@ impl WorkerSource for MultiSocketSource {
             let s = sets
                 .get(*pos)
                 .unwrap_or_else(|| {
+                    // ad-lint: allow(panic-free-lib): documented contract: lockstep callers supply one set per iteration
                     panic!("lockstep trace exhausted at iteration {pos}", pos = *pos)
                 })
                 .clone();
@@ -237,6 +238,7 @@ impl WorkerSource for MultiSocketSource {
             let _ = ep.gather(k, d, gate);
         }
         let live: Vec<usize> = prescribed.into_iter().filter(|&i| !gate.down[i]).collect();
+        // ad-lint: allow(panic-free-lib): documented panic contract on malformed caller-supplied lockstep traces
         ActiveSet::new(live, self.n_workers).expect("lockstep trace worker index out of range")
     }
 
@@ -250,6 +252,7 @@ impl WorkerSource for MultiSocketSource {
             for (m, ranges) in &parts[i] {
                 let msg = endpoints[*m]
                     .take_pending(i)
+                    // ad-lint: allow(panic-free-lib): gather() only returns workers fully arrived at every owning master
                     .expect("every owning master holds the arrived worker's part");
                 scatter(&mut view.state.xs[i], ranges, &msg.x);
                 if let Some(lam) = msg.lam {

@@ -116,10 +116,13 @@ impl Default for JobSpec {
 impl JobSpec {
     /// Build a spec from CLI flags (shared by `admm-serve submit` and the
     /// `ad-admm transport-digest` reference subcommand, so both sides of
-    /// the CI digest comparison parse identically).
-    pub fn from_args(args: &ArgParser) -> Self {
+    /// the CI digest comparison parse identically). A malformed policy
+    /// spelling is a typed [`EngineError::Transport`] — specs also arrive
+    /// over the wire from `submit` clients, and a bad one must fail that
+    /// job, not abort the serve loop.
+    pub fn from_args(args: &ArgParser) -> Result<Self, EngineError> {
         let d = JobSpec::default();
-        JobSpec {
+        Ok(JobSpec {
             job_id: args.get_or("job", &d.job_id),
             workers: args.get_parse_or("workers", d.workers),
             m: args.get_parse_or("m", d.m),
@@ -141,20 +144,24 @@ impl JobSpec {
             inexact: match args.get("inexact") {
                 None => d.inexact,
                 Some(s) => InexactPolicy::parse(s)
-                    .unwrap_or_else(|e| panic!("--inexact: {e}")),
+                    .map_err(|e| EngineError::Transport(format!("--inexact: {e}")))?,
             },
             // Comma-joined per-worker spellings, e.g.
             // `--inexact-workers exact,grad:3,newton:2,exact`.
-            inexact_workers: args.get("inexact-workers").map(|list| {
-                list.split(',')
-                    .map(|s| {
-                        InexactPolicy::parse(s.trim())
-                            .unwrap_or_else(|e| panic!("--inexact-workers: {e}"))
-                    })
-                    .collect()
-            }),
+            inexact_workers: match args.get("inexact-workers") {
+                None => None,
+                Some(list) => Some(
+                    list.split(',')
+                        .map(|s| {
+                            InexactPolicy::parse(s.trim()).map_err(|e| {
+                                EngineError::Transport(format!("--inexact-workers: {e}"))
+                            })
+                        })
+                        .collect::<Result<Vec<_>, EngineError>>()?,
+                ),
+            },
             masters: args.get_parse_or("masters", d.masters),
-        }
+        })
     }
 
     pub fn to_json(&self) -> JsonValue {
@@ -501,10 +508,9 @@ pub fn run_job_multi(
     };
     match group {
         Some(group) => {
-            let pattern = problem
-                .pattern()
-                .cloned()
-                .expect("master_group requires shard_blocks > 0");
+            let pattern = problem.pattern().cloned().ok_or_else(|| {
+                EngineError::Masters("master_group requires shard_blocks > 0".to_string())
+            })?;
             let source = MultiSocketSource::from_listeners(
                 listeners,
                 spec.workers,
@@ -534,7 +540,9 @@ pub fn run_job_multi(
                     listeners.len()
                 )));
             }
-            let listener = listeners.into_iter().next().expect("checked above");
+            let listener = listeners.into_iter().next().ok_or_else(|| {
+                EngineError::Transport("no rendezvous listener for single-master job".to_string())
+            })?;
             let source = SocketSource::from_listener(listener, spec.workers, transport)?;
             let mut session = if spec.alt {
                 builder.policy(AltScheme { tau: spec.tau }).build_typed(source)?

@@ -258,6 +258,7 @@ impl SocketSource {
             })
         };
         while missing(self) {
+            // ad-lint: allow(panic-free-lib): the acceptor thread lives for the source's lifetime; a closed channel means it panicked
             let ev = self.events.recv().expect("acceptor alive while waiting for workers");
             self.handle_event(ev);
         }
@@ -408,6 +409,7 @@ impl SocketSource {
     }
 
     fn recv_blocking(&mut self) {
+        // ad-lint: allow(panic-free-lib): the acceptor thread lives for the source's lifetime; a closed channel means it panicked
         let ev = self.events.recv().expect("acceptor alive");
         self.handle_event(ev);
     }
@@ -462,10 +464,12 @@ impl WorkerSource for SocketSource {
             // a message in — through disconnects, until a replacement
             // rejoins and recomputes. Deterministic by design.
             let prescribed = {
+                // ad-lint: allow(panic-free-lib): guarded by the lockstep.is_some() branch above
                 let (sets, pos) = self.lockstep.as_mut().expect("checked above");
                 let s = sets
                     .get(*pos)
                     .unwrap_or_else(|| {
+                        // ad-lint: allow(panic-free-lib): documented contract: lockstep callers supply one set per iteration
                         panic!("lockstep trace exhausted at iteration {pos}", pos = *pos)
                     })
                     .clone();
@@ -480,6 +484,7 @@ impl WorkerSource for SocketSource {
                 self.recv_blocking();
             }
             let live: Vec<usize> = prescribed.into_iter().filter(|&i| !gate.down[i]).collect();
+            // ad-lint: allow(panic-free-lib): documented panic contract on malformed caller-supplied lockstep traces
             ActiveSet::new(live, n).expect("lockstep trace worker index out of range")
         } else {
             // Live gate: |A_k| ≥ min(A, #live) and every live connected
@@ -519,6 +524,7 @@ impl WorkerSource for SocketSource {
         // (9)/(10)/(44): identical to the threaded source — the transport
         // changes, the protocol does not.
         for &i in set {
+            // ad-lint: allow(panic-free-lib): gather() only returns workers whose message is pending
             let msg = self.pending[i].take().expect("arrived worker has a pending message");
             m.state.xs[i] = msg.x;
             if let Some(lam) = msg.lam {
@@ -767,6 +773,7 @@ fn handshake(
         return Err(Some(format!("unknown job {job:?} (serving {:?})", cfg.job_id)));
     }
     let (worker, gen) = {
+        // ad-lint: allow(panic-free-lib): mutex poisoning only follows a panic in another connection thread; propagating it is the lock idiom
         let mut t = claims.lock().expect("claim table");
         let worker = match hint {
             Some(i) if i < n_workers => i,

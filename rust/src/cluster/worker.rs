@@ -74,6 +74,7 @@ pub(crate) fn worker_round(
         }
         Protocol::AltScheme => {
             // (47): x_i ← argmin f_i + xᵀλ̂_i + ρ/2‖x − x̂₀‖²
+            // ad-lint: allow(panic-free-lib): protocol invariant: the master always attaches λ̂ under Algorithm 4
             let master_lam = master_lam.expect("Algorithm 4 must send λ̂_i");
             match solve_override {
                 Some(f) => f(master_lam, x0, rho, x),
@@ -147,16 +148,16 @@ pub(crate) fn worker_loop(
     let mut fault_rng = faults
         .as_ref()
         .map(|f| Pcg64::seed_from_u64(f.seed.wrapping_add(id as u64 * 0x5bd1)));
-    let loop_started = Instant::now();
+    let loop_started = Instant::now(); // ad-lint: allow(wallclock): OS-thread worker: delay spikes are keyed to real elapsed time
 
     while let Ok(msg) = inbox.recv() {
         let (x0, master_lam) = match msg {
             MasterMsg::Shutdown => break,
             MasterMsg::Go { x0, lam } => (x0, lam),
         };
-        let t0 = Instant::now();
+        let t0 = Instant::now(); // ad-lint: allow(wallclock): OS-thread worker meters real busy time
 
-        let spike = |t: &Instant| match &spikes {
+        let spike = |t: &Instant| match &spikes { // ad-lint: allow(wallclock): real-time spike window lookup in the OS-thread worker
             Some(plan) => plan.delay_factor(id, t.elapsed().as_secs_f64()),
             None => 1.0,
         };
@@ -165,7 +166,7 @@ pub(crate) fn worker_loop(
         // delay spike.
         let ms = delay.sample_ms() * spike(&loop_started);
         if ms > 0.0 {
-            std::thread::sleep(Duration::from_secs_f64(ms * 1e-3));
+            std::thread::sleep(Duration::from_secs_f64(ms * 1e-3)); // ad-lint: allow(wallclock): injected compute delay in the real-thread cluster is a real sleep
         }
 
         let lam_out = worker_round(
@@ -193,7 +194,7 @@ pub(crate) fn worker_loop(
             spike(&loop_started),
         );
         if cms > 0.0 {
-            std::thread::sleep(Duration::from_secs_f64(cms * 1e-3));
+            std::thread::sleep(Duration::from_secs_f64(cms * 1e-3)); // ad-lint: allow(wallclock): injected comm delay in the real-thread cluster is a real sleep
         }
         let _ = outbox.send(WorkerMsg { id, x: x.clone(), lam: lam_out });
 

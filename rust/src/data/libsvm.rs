@@ -31,9 +31,11 @@ impl LibsvmDataset {
                 continue;
             }
             let mut toks = line.split_whitespace();
+            // A whitespace-only line has no tokens even though it is
+            // non-empty; treat it like a bad label, not a panic.
             let label: f64 = toks
                 .next()
-                .unwrap()
+                .ok_or_else(|| format!("line {}: missing label", lineno + 1))?
                 .parse()
                 .map_err(|_| format!("line {}: bad label", lineno + 1))?;
             let mut feats = Vec::new();

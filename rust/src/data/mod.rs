@@ -365,6 +365,7 @@ mod tests {
         let mut rng = Pcg64::seed_from_u64(64);
         let inst = LogisticInstance::synthetic(&mut rng, 2, 25, 8, 0.05);
         for y in &inst.labels {
+            // ad-lint: allow(float-eq): labels are exact ±1.0 sentinels assigned by the generator
             assert!(y.iter().all(|&v| v == 1.0 || v == -1.0));
         }
         let p = inst.problem();

@@ -56,6 +56,7 @@
 #![allow(clippy::manual_range_contains)]
 
 pub mod admm;
+pub mod analysis;
 pub mod bench;
 pub mod cluster;
 pub mod data;

@@ -40,7 +40,7 @@ impl CsrMatrix {
                 cur_row += 1;
             }
             // duplicate within this row?
-            if indices.len() > indptr[r] && *indices.last().unwrap() == c {
+            if indices.len() > indptr[r] && *indices.last().unwrap() == c { // ad-lint: allow(panic-free-lib): guarded by the indices.len() check on this line
                 *values.last_mut().unwrap() += v;
             } else {
                 indices.push(c);

@@ -380,7 +380,10 @@ impl ClusterParams {
 /// reference side of the CI loopback e2e (flags shared with
 /// `admm_serve submit`).
 fn cmd_transport_digest(args: &ArgParser) {
-    let spec = JobSpec::from_args(args);
+    let spec = match JobSpec::from_args(args) {
+        Ok(spec) => spec,
+        Err(e) => exit_config_error(&e),
+    };
     match run_reference(&spec) {
         Ok((outcome, digest)) => {
             println!(

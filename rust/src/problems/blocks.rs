@@ -244,6 +244,7 @@ impl BlockPattern {
     /// bit-identical to the unsharded engine.
     pub fn dense(n: usize, n_workers: usize) -> Self {
         BlockPattern::new(n, &[(0, n)], vec![vec![0]; n_workers])
+            // ad-lint: allow(panic-free-lib): one full-range block owned by every worker always passes validation
             .expect("the dense pattern is always valid for n, n_workers >= 1")
     }
 

@@ -24,6 +24,7 @@ impl Factor {
     pub fn of(m: &DenseMatrix) -> Factor {
         match Cholesky::factor(m) {
             Ok(c) => Factor::Chol(c),
+            // ad-lint: allow(panic-free-lib): AᵀA + ρI is positive definite for ρ > 0; singularity here is unrecoverable numeric corruption
             Err(_) => Factor::Lu(Lu::factor(m).expect("subproblem matrix singular")),
         }
     }
@@ -52,12 +53,14 @@ impl RhoCache {
     /// Get the factor for `rho`, building it with `build` on miss.
     pub fn get_or_build<F: FnOnce() -> Factor>(&self, rho: f64, build: F) -> Arc<Factor> {
         let key = rho.to_bits();
+        // ad-lint: allow(panic-free-lib): RwLock poisoning only follows a panic elsewhere; propagating it is the lock idiom
         if let Some((k, f)) = self.slot.read().unwrap().as_ref() {
             if *k == key {
                 return f.clone();
             }
         }
         let f = Arc::new(build());
+        // ad-lint: allow(panic-free-lib): RwLock poisoning only follows a panic elsewhere; propagating it is the lock idiom
         *self.slot.write().unwrap() = Some((key, f.clone()));
         f
     }

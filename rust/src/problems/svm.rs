@@ -25,6 +25,7 @@ pub struct SvmLocal {
 impl SvmLocal {
     pub fn new(a: DenseMatrix, y: Vec<f64>) -> Self {
         assert_eq!(a.rows(), y.len());
+        // ad-lint: allow(float-eq): labels are exact ±1.0 sentinels assigned by the generator, never computed
         assert!(y.iter().all(|&v| v == 1.0 || v == -1.0), "labels must be ±1");
         let gram = a.gram();
         let n = a.cols();

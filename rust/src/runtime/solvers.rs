@@ -85,6 +85,7 @@ impl SubproblemSolver for PjrtLassoSolver {
     fn solve(&mut self, worker: usize, lam: &[f64], x0: &[f64], rho: f64, out: &mut [f64]) {
         let x = self
             .solve_for(worker, lam, x0, rho)
+            // ad-lint: allow(panic-free-lib): SubproblemSolver::solve is infallible by signature; a PJRT failure is unrecoverable mid-run
             .expect("PJRT lasso worker solve failed");
         out.copy_from_slice(&x);
     }
@@ -138,6 +139,7 @@ impl SubproblemSolver for PjrtSpcaSolver {
     fn solve(&mut self, worker: usize, lam: &[f64], x0: &[f64], rho: f64, out: &mut [f64]) {
         let x = self
             .solve_for(worker, lam, x0, rho)
+            // ad-lint: allow(panic-free-lib): SubproblemSolver::solve is infallible by signature; a PJRT failure is unrecoverable mid-run
             .expect("PJRT spca worker solve failed");
         out.copy_from_slice(&x);
     }

@@ -27,6 +27,7 @@ impl ArgParser {
                     if next.starts_with("--") {
                         out.flags.push(body.to_string());
                     } else {
+                        // ad-lint: allow(panic-free-lib): guarded by the it.peek() arm above
                         out.opts.insert(body.to_string(), it.next().unwrap());
                     }
                 } else {
@@ -59,6 +60,7 @@ impl ArgParser {
             None => default,
             Some(s) => s
                 .parse()
+                // ad-lint: allow(panic-free-lib): CLI parse failure aborts by design; the binaries own their argv
                 .unwrap_or_else(|_| panic!("--{key}: cannot parse {s:?}")),
         }
     }

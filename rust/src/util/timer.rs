@@ -18,13 +18,13 @@ pub trait Clock {
 /// A simple stopwatch with lap support.
 #[derive(Clone, Debug)]
 pub struct Stopwatch {
-    start: Instant,
+    start: Instant, // ad-lint: allow(wallclock): Stopwatch IS the real-time measurement utility; consumed by bench/bins
     last_lap: Instant,
 }
 
 impl Stopwatch {
     pub fn start() -> Self {
-        let now = Instant::now();
+        let now = Instant::now(); // ad-lint: allow(wallclock): Stopwatch measures real elapsed time by definition
         Stopwatch { start: now, last_lap: now }
     }
 
@@ -39,7 +39,7 @@ impl Stopwatch {
 
     /// Seconds since the previous `lap()` (or start), and reset the lap.
     pub fn lap_s(&mut self) -> f64 {
-        let now = Instant::now();
+        let now = Instant::now(); // ad-lint: allow(wallclock): Stopwatch measures real elapsed time by definition
         let dt = now.duration_since(self.last_lap).as_secs_f64();
         self.last_lap = now;
         dt

@@ -1,0 +1,361 @@
+//! ad-lint self-checks.
+//!
+//! Four layers: (1) the analyzer run over the repo's own tree must come
+//! back clean — the tier-1 twin of the CI `analysis` job; (2) the golden
+//! `fixtures/bad_example.rs` pins every rule's id, line and column
+//! exactly, including the suppression semantics (a reasonless allow is an
+//! error and suppresses nothing); (3) the cross-file `doc-drift` rule is
+//! exercised on synthetic README/wire/session trees for each drift mode;
+//! (4) the lexer holds up on the adversarial corners (raw strings, nested
+//! block comments, `//` inside strings, lifetimes vs char literals) and
+//! on seeded Pcg64 token soup with exact position accounting.
+
+use std::path::PathBuf;
+
+use ad_admm::analysis::lexer::{lex, TokenKind};
+use ad_admm::analysis::{analyze, load_tree, SourceFile};
+use ad_admm::rng::Pcg64;
+
+fn repo_root() -> PathBuf {
+    // CARGO_MANIFEST_DIR is <repo>/rust; the scan set is repo-rooted.
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate lives in <repo>/rust")
+        .to_path_buf()
+}
+
+// ------------------------------------------------------------- tree gate
+
+#[test]
+fn analysis_tree_clean() {
+    let files = load_tree(&repo_root()).expect("scan repo tree");
+    assert!(
+        files.iter().any(|f| f.path == "README.md"),
+        "load_tree must pick up README.md for the doc-drift rule"
+    );
+    assert!(
+        files.iter().any(|f| f.path == "rust/src/admm/session.rs"),
+        "load_tree must recurse into rust/src"
+    );
+    let report = analyze(&files);
+    let mut listing = String::new();
+    for d in report.diagnostics.iter().filter(|d| !d.suppressed) {
+        listing.push_str(&format!("  {d}\n"));
+    }
+    assert_eq!(
+        report.errors(),
+        0,
+        "ad-lint found unsuppressed diagnostics in the tree:\n{listing}"
+    );
+    // Every suppressed finding must carry its justification end to end
+    // (reasonless allows are errors and suppress nothing, so this holds
+    // by construction — pin it against regressions in apply_allows).
+    for d in report.diagnostics.iter().filter(|d| d.suppressed) {
+        assert!(
+            d.reason.as_deref().is_some_and(|r| !r.is_empty()),
+            "suppressed finding without a reason: {d}"
+        );
+    }
+}
+
+// --------------------------------------------------------- golden fixture
+
+const BAD_EXAMPLE: &str = include_str!("fixtures/bad_example.rs");
+
+/// The committed bad example, fed to the analyzer under a pretend path
+/// every per-file rule scopes to. Rule ids, lines and columns are pinned
+/// exactly; editing the fixture means re-deriving this table.
+#[test]
+fn golden_bad_example_pins_every_rule() {
+    let files = vec![SourceFile::new("rust/src/cluster/sim.rs", BAD_EXAMPLE)];
+    let report = analyze(&files);
+    let got: Vec<(u32, u32, &str, bool)> = report
+        .diagnostics
+        .iter()
+        .map(|d| (d.line, d.col, d.rule, d.suppressed))
+        .collect();
+    let want: Vec<(u32, u32, &str, bool)> = vec![
+        (8, 23, "unordered-iter", false),  // use …::HashMap
+        (11, 28, "unordered-iter", false), // &HashMap<usize, f64> param
+        (12, 14, "wallclock", false),      // Instant::now()
+        (13, 26, "panic-free-lib", false), // .unwrap()
+        (14, 10, "float-eq", false),       // x == 1.5
+        (15, 9, "panic-free-lib", false),  // panic!
+        (17, 18, "deprecated-surface", false), // run_sync_admm
+        (18, 5, "suppression", false),     // allow(float-eq) without a reason
+        (19, 30, "float-eq", false),       // NOT suppressed by the reasonless allow
+        (21, 46, "panic-free-lib", true),  // justified allow suppresses
+    ];
+    assert_eq!(got, want, "golden diagnostics drifted");
+    assert_eq!(report.errors(), 9);
+    let suppressed: Vec<_> = report.diagnostics.iter().filter(|d| d.suppressed).collect();
+    assert_eq!(suppressed.len(), 1);
+    assert_eq!(
+        suppressed[0].reason.as_deref(),
+        Some("golden example of a justified allow"),
+        "the justified allow must carry its reason into the report"
+    );
+}
+
+#[test]
+fn stale_and_unknown_allows_are_errors() {
+    let src = "// ad-lint: allow(wallclock): nothing here uses a clock\n\
+               // ad-lint: allow(no-such-rule): misspelled id\n\
+               pub fn quiet() {}\n";
+    let report = analyze(&[SourceFile::new("rust/src/admm/quiet.rs", src)]);
+    assert_eq!(report.errors(), 2, "{:?}", report.diagnostics);
+    assert!(report.diagnostics.iter().all(|d| d.rule == "suppression"));
+    assert!(
+        report.diagnostics[0].message.contains("stale"),
+        "{}",
+        report.diagnostics[0]
+    );
+    assert!(
+        report.diagnostics[1].message.contains("does not know"),
+        "{}",
+        report.diagnostics[1]
+    );
+}
+
+#[test]
+fn lex_failure_is_a_parse_diagnostic() {
+    let report =
+        analyze(&[SourceFile::new("rust/src/admm/broken.rs", "fn f() { \"unterminated }")]);
+    assert_eq!(report.errors(), 1);
+    let d = &report.diagnostics[0];
+    assert_eq!((d.rule, d.line, d.col), ("parse", 1, 10));
+    assert!(d.message.contains("unterminated string literal"), "{d}");
+}
+
+// ------------------------------------------------------ doc-drift (synthetic)
+
+const FAKE_WIRE: &str = "//! Fake wire codec for the doc-drift unit test.\n\
+                         //!\n\
+                         //! | type | direction | payload |\n\
+                         //! |--------|-----------|---------|\n\
+                         //! | `hello` | worker to master | worker id |\n\
+                         //! | `go` | master to worker | iterate |\n\
+                         pub fn decode(tag: &str) -> u32 {\n\
+                             match tag {\n\
+                                 \"hello\" => 1,\n\
+                                 \"go\" => 2,\n\
+                                 _ => 0,\n\
+                             }\n\
+                         }\n";
+
+const FAKE_SESSION: &str = "pub struct Checkpoint;\n\
+                            impl Checkpoint {\n\
+                                pub const VERSION: usize = 4;\n\
+                            }\n";
+
+const FAKE_README_GOOD: &str = "# Fake\n\
+                                | type | direction | payload |\n\
+                                |---|---|---|\n\
+                                | `hello` | worker to master | worker id |\n\
+                                | `go` | master to worker | iterate |\n\
+                                \n\
+                                Checkpoints write `version: 4`.\n";
+
+fn doc_drift_tree(readme: &str) -> Vec<SourceFile> {
+    vec![
+        SourceFile::new("README.md", readme),
+        SourceFile::new("rust/src/cluster/transport/wire.rs", FAKE_WIRE),
+        SourceFile::new("rust/src/admm/session.rs", FAKE_SESSION),
+    ]
+}
+
+#[test]
+fn doc_drift_clean_on_matching_tree() {
+    let report = analyze(&doc_drift_tree(FAKE_README_GOOD));
+    assert_eq!(report.errors(), 0, "{:?}", report.diagnostics);
+}
+
+#[test]
+fn doc_drift_flags_missing_wire_row() {
+    let readme =
+        FAKE_README_GOOD.replace("| `go` | master to worker | iterate |\n", "");
+    let report = analyze(&doc_drift_tree(&readme));
+    assert_eq!(report.errors(), 1, "{:?}", report.diagnostics);
+    let d = &report.diagnostics[0];
+    assert_eq!((d.rule, d.file.as_str(), d.line), ("doc-drift", "README.md", 2));
+    assert!(d.message.contains("missing the `go` message"), "{d}");
+}
+
+#[test]
+fn doc_drift_flags_undecoded_wire_row() {
+    let readme = FAKE_README_GOOD.replace(
+        "| `go` | master to worker | iterate |",
+        "| `go` | master to worker | iterate |\n| `legacy` | nowhere | nothing |",
+    );
+    let report = analyze(&doc_drift_tree(&readme));
+    assert_eq!(report.errors(), 1, "{:?}", report.diagnostics);
+    let d = &report.diagnostics[0];
+    assert_eq!((d.rule, d.file.as_str(), d.line), ("doc-drift", "README.md", 6));
+    assert!(d.message.contains("lists `legacy`"), "{d}");
+}
+
+#[test]
+fn doc_drift_flags_stale_version_claim() {
+    let readme = FAKE_README_GOOD.replace("`version: 4`", "`version: 2`");
+    let report = analyze(&doc_drift_tree(&readme));
+    assert_eq!(report.errors(), 1, "{:?}", report.diagnostics);
+    let d = &report.diagnostics[0];
+    assert_eq!((d.rule, d.file.as_str(), d.line), ("doc-drift", "README.md", 7));
+    assert!(d.message.contains("Checkpoint::VERSION"), "{d}");
+}
+
+#[test]
+fn doc_drift_silent_without_readme() {
+    // Unit-style partial trees (no README) must not fabricate findings.
+    let report = analyze(&[SourceFile::new(
+        "rust/src/cluster/transport/wire.rs",
+        FAKE_WIRE,
+    )]);
+    assert_eq!(report.errors(), 0, "{:?}", report.diagnostics);
+}
+
+// --------------------------------------------------------------- lexer units
+
+fn kinds(src: &str) -> Vec<(TokenKind, &str)> {
+    lex(src)
+        .expect("lexes")
+        .into_iter()
+        .map(|t| (t.kind, t.text))
+        .collect()
+}
+
+#[test]
+fn lexer_adversarial_corners() {
+    use TokenKind::*;
+    assert_eq!(
+        kinds(r##"r#"raw "quoted" // not a comment"#"##),
+        vec![(Str, r##"r#"raw "quoted" // not a comment"#"##)]
+    );
+    assert_eq!(
+        kinds("/* outer /* nested */ still outer */"),
+        vec![(BlockComment, "/* outer /* nested */ still outer */")]
+    );
+    assert_eq!(
+        kinds("\"// inside a string\""),
+        vec![(Str, "\"// inside a string\"")]
+    );
+    assert_eq!(kinds("'a'"), vec![(Char, "'a'")]);
+    assert_eq!(kinds("'\\n'"), vec![(Char, "'\\n'")]);
+    assert_eq!(kinds("&'a str"), vec![(Punct, "&"), (Lifetime, "'a"), (Ident, "str")]);
+    // `1.max` is an integer method call, not a float literal.
+    assert_eq!(kinds("1.max"), vec![(Int, "1"), (Punct, "."), (Ident, "max")]);
+    assert_eq!(kinds("1.5f64"), vec![(Float, "1.5f64")]);
+    assert_eq!(kinds("1f64"), vec![(Float, "1f64")]);
+    assert_eq!(kinds("1e-3"), vec![(Float, "1e-3")]);
+    assert_eq!(kinds("0xff_u32"), vec![(Int, "0xff_u32")]);
+    assert_eq!(kinds("b\"bytes\""), vec![(Str, "b\"bytes\"")]);
+    assert_eq!(kinds("r\"plain raw\""), vec![(Str, "r\"plain raw\"")]);
+    assert_eq!(
+        kinds("x ..= y"),
+        vec![(Ident, "x"), (Punct, "..="), (Ident, "y")]
+    );
+    assert_eq!(
+        kinds("a <<= b"),
+        vec![(Ident, "a"), (Punct, "<<="), (Ident, "b")]
+    );
+    assert_eq!(
+        kinds("// trailing comment\nnext"),
+        vec![(LineComment, "// trailing comment"), (Ident, "next")]
+    );
+    assert!(kinds("").is_empty());
+    assert!(kinds("   \n\t \n").is_empty());
+    assert!(lex("\"unterminated").is_err());
+    assert!(lex("/* unterminated").is_err());
+    assert!(lex("r#\"unterminated\"").is_err());
+}
+
+// ----------------------------------------------------------- lexer property
+
+/// Seeded token soup: join random vocabulary snippets with random
+/// whitespace and assert the lexer reproduces the expected (kind, text)
+/// sequence AND the exact (line, col) of every snippet's first token.
+#[test]
+fn lexer_token_soup_roundtrip() {
+    use TokenKind::*;
+    #[allow(clippy::type_complexity)]
+    let vocab: Vec<(&str, Vec<(TokenKind, &str)>)> = vec![
+        ("foo_bar", vec![(Ident, "foo_bar")]),
+        ("'lt", vec![(Lifetime, "'lt")]),
+        ("'x'", vec![(Char, "'x'")]),
+        ("42", vec![(Int, "42")]),
+        ("3.25", vec![(Float, "3.25")]),
+        ("1e-3", vec![(Float, "1e-3")]),
+        ("0xff", vec![(Int, "0xff")]),
+        ("\"s // not a comment\"", vec![(Str, "\"s // not a comment\"")]),
+        (
+            "r#\"raw \"q\" body\"#",
+            vec![(Str, "r#\"raw \"q\" body\"#")],
+        ),
+        ("b\"bytes\"", vec![(Str, "b\"bytes\"")]),
+        (
+            "/* nested /* deeper */ out */",
+            vec![(BlockComment, "/* nested /* deeper */ out */")],
+        ),
+        ("// eol comment", vec![(LineComment, "// eol comment")]),
+        ("==", vec![(Punct, "==")]),
+        ("..=", vec![(Punct, "..=")]),
+        ("=>", vec![(Punct, "=>")]),
+        ("::", vec![(Punct, "::")]),
+        ("<<=", vec![(Punct, "<<=")]),
+        ("#", vec![(Punct, "#")]),
+        ("{", vec![(Punct, "{")]),
+        ("}", vec![(Punct, "}")]),
+        ("1.max", vec![(Int, "1"), (Punct, "."), (Ident, "max")]),
+        ("1f64", vec![(Float, "1f64")]),
+    ];
+    for seed in 0..8u64 {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let mut src = String::new();
+        let mut expected: Vec<(TokenKind, &str)> = Vec::new();
+        // (expected-token index, line, col) of each snippet's first token
+        let mut anchors: Vec<(usize, u32, u32)> = Vec::new();
+        let (mut line, mut col) = (1u32, 1u32);
+        fn advance(s: &str, line: &mut u32, col: &mut u32) {
+            for ch in s.chars() {
+                if ch == '\n' {
+                    *line += 1;
+                    *col = 1;
+                } else {
+                    *col += 1;
+                }
+            }
+        }
+        for _ in 0..300 {
+            let (snip, toks) = &vocab[(rng.next_u64() % vocab.len() as u64) as usize];
+            anchors.push((expected.len(), line, col));
+            expected.extend(toks.iter().cloned());
+            src.push_str(snip);
+            advance(snip, &mut line, &mut col);
+            // A line comment swallows the rest of its line; force a newline.
+            let sep = if snip.starts_with("//") {
+                "\n"
+            } else {
+                match rng.next_u64() % 3 {
+                    0 => " ",
+                    1 => "\n",
+                    _ => "\t",
+                }
+            };
+            src.push_str(sep);
+            advance(sep, &mut line, &mut col);
+        }
+        let toks = lex(&src).unwrap_or_else(|e| {
+            panic!("seed {seed}: soup failed to lex at {}:{}: {}", e.line, e.col, e.message)
+        });
+        let got: Vec<(TokenKind, &str)> = toks.iter().map(|t| (t.kind, t.text)).collect();
+        assert_eq!(got, expected, "seed {seed}: token stream drifted");
+        for (idx, l, c) in anchors {
+            assert_eq!(
+                (toks[idx].line, toks[idx].col),
+                (l, c),
+                "seed {seed}: position of token {idx} ({:?})",
+                toks[idx].text
+            );
+        }
+    }
+}

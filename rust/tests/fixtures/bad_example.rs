@@ -1,0 +1,23 @@
+//! Deliberately-bad example pinned by the ad-lint golden test.
+//!
+//! This file is never compiled. `rust/tests/analysis.rs` feeds it to the
+//! analyzer under the pretend path `rust/src/cluster/sim.rs` (a path every
+//! per-file rule scopes to) and asserts the exact rule ids, lines and
+//! columns below — keep edits in sync with those golden expectations.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+pub fn badly_measure(map: &HashMap<usize, f64>) -> f64 {
+    let t0 = Instant::now();
+    let x = *map.get(&0).unwrap();
+    if x == 1.5 {
+        panic!("float compared at {:?}", t0.elapsed());
+    }
+    crate::admm::run_sync_admm();
+    // ad-lint: allow(float-eq):
+    let badly_suppressed = x == 2.5;
+    // ad-lint: allow(panic-free-lib): golden example of a justified allow
+    let well_suppressed: f64 = "3.0".parse().unwrap();
+    x + well_suppressed + f64::from(u8::from(badly_suppressed))
+}
